@@ -1,0 +1,105 @@
+//! Figure 2: synthetic-data experiments (§7.1; ρ=0.5, γ₁=10, γ₂=4, τ=0.2).
+//!
+//! - `--panel a` — active-feature proportion vs (λ_t, K)   → fig2a.csv
+//! - `--panel b` — active-group proportion vs (λ_t, K)     → fig2b.csv
+//! - `--panel c` — time-to-convergence per screening rule  → fig2c.csv
+//! - `--panel all` (default) — everything.
+//!
+//! `--scale paper` uses the paper's n=100, p=10000 instance (minutes);
+//! `--scale small` a 10x smaller one (seconds).
+//!
+//! ```bash
+//! cargo run --release --example fig2_synthetic -- --scale paper --panel c
+//! ```
+
+use sgl::coordinator::jobs::RuleComparisonJob;
+use sgl::coordinator::report::{render_rule_timings, write_rule_timings};
+use sgl::data::csvio::write_csv;
+use sgl::data::synthetic::SyntheticConfig;
+use sgl::experiments::fig2;
+use sgl::util::cli::{Args, OptSpec};
+use sgl::util::pool::default_threads;
+use std::path::Path;
+
+fn main() {
+    let args = Args::parse_or_exit(&[
+        OptSpec { name: "panel", help: "a|b|c|all", takes_value: true, default: Some("all") },
+        OptSpec { name: "scale", help: "small|paper", takes_value: true, default: Some("small") },
+        OptSpec { name: "tau", help: "mixing parameter", takes_value: true, default: Some("0.2") },
+        OptSpec { name: "t-count", help: "lambdas on the path", takes_value: true, default: None },
+        OptSpec { name: "out-dir", help: "output directory", takes_value: true, default: Some("out") },
+        OptSpec { name: "seed", help: "dataset seed", takes_value: true, default: Some("42") },
+    ]);
+    let paper = args.get_or("scale", "small") == "paper";
+    let cfg = if paper {
+        SyntheticConfig { seed: args.get_u64("seed", 42), ..Default::default() }
+    } else {
+        SyntheticConfig::small(args.get_u64("seed", 42))
+    };
+    let tau = args.get_f64("tau", 0.2);
+    let t_count = args.get_usize("t-count", if paper { 100 } else { 30 });
+    let out_dir = args.get_or("out-dir", "out");
+    let panel = args.get_or("panel", "all");
+    println!(
+        "Fig 2 — synthetic n={} p={} (rho={}, gamma1={}, gamma2={}, tau={tau})",
+        cfg.n,
+        cfg.p(),
+        cfg.rho,
+        cfg.gamma1,
+        cfg.gamma2
+    );
+
+    if panel == "a" || panel == "b" || panel == "all" {
+        // K axis of the paper's heat maps.
+        let k_values: Vec<usize> = if paper {
+            vec![10, 30, 100, 300, 1000]
+        } else {
+            vec![10, 30, 100, 300]
+        };
+        let surf = fig2::active_surfaces(&cfg, tau, 3.0, t_count, &k_values, 10);
+        for (name, fractions) in
+            [("fig2a", &surf.feature_fractions), ("fig2b", &surf.group_fractions)]
+        {
+            if panel != "all" && !name.ends_with(panel.chars().next().unwrap()) {
+                continue;
+            }
+            let mut rows = Vec::new();
+            for (ki, &k) in surf.k_values.iter().enumerate() {
+                for (li, &lambda) in surf.lambdas.iter().enumerate() {
+                    rows.push(vec![li as f64, lambda, k as f64, fractions[ki][li]]);
+                }
+            }
+            let path_s = format!("{out_dir}/{name}.csv");
+            write_csv(
+                Path::new(&path_s),
+                &["lambda_idx", "lambda", "k_epochs", "active_fraction"],
+                &rows,
+            )
+            .expect("write csv");
+            println!("wrote {path_s}");
+        }
+        // Terminal summary: final-K active fractions across the path.
+        let last = surf.feature_fractions.last().unwrap();
+        println!(
+            "  active-feature fraction at K={}: first lambda {:.3}, mid {:.3}, last {:.3}",
+            surf.k_values.last().unwrap(),
+            last[0],
+            last[last.len() / 2],
+            last[last.len() - 1]
+        );
+    }
+
+    if panel == "c" || panel == "all" {
+        let job = RuleComparisonJob {
+            tolerances: vec![1e-2, 1e-4, 1e-6, 1e-8],
+            delta: 3.0,
+            t_count,
+            ..Default::default()
+        };
+        let timings = fig2::rule_timings(&cfg, tau, &job, default_threads());
+        let path_s = format!("{out_dir}/fig2c.csv");
+        write_rule_timings(Path::new(&path_s), &timings).expect("write csv");
+        println!("wrote {path_s}");
+        println!("{}", render_rule_timings(&timings));
+    }
+}

@@ -1,0 +1,83 @@
+//! Figure 3: climate experiments on the simulated NCEP/NCAR dataset
+//! (DESIGN.md §Substitutions).
+//!
+//! - `--panel a` — held-out prediction error over (λ, τ) → fig3a.csv
+//! - `--panel b` — path time vs accuracy per rule at τ★  → fig3b.csv
+//!
+//! ```bash
+//! cargo run --release --example fig3_climate -- --scale paper
+//! ```
+
+use sgl::coordinator::jobs::RuleComparisonJob;
+use sgl::coordinator::report::{render_rule_timings, write_rule_timings};
+use sgl::data::climate::ClimateConfig;
+use sgl::data::csvio::write_csv;
+use sgl::experiments::fig3;
+use sgl::util::cli::{Args, OptSpec};
+use sgl::util::pool::default_threads;
+use std::path::Path;
+
+fn main() {
+    let args = Args::parse_or_exit(&[
+        OptSpec { name: "panel", help: "a|b|all", takes_value: true, default: Some("all") },
+        OptSpec { name: "scale", help: "small|paper", takes_value: true, default: Some("small") },
+        OptSpec { name: "t-count", help: "lambdas on the path", takes_value: true, default: None },
+        OptSpec { name: "tol", help: "gap tolerance for panel a", takes_value: true, default: None },
+        OptSpec { name: "out-dir", help: "output directory", takes_value: true, default: Some("out") },
+        OptSpec { name: "seed", help: "dataset seed", takes_value: true, default: Some("7") },
+    ]);
+    let paper = args.get_or("scale", "small") == "paper";
+    let cfg = if paper {
+        ClimateConfig { seed: args.get_u64("seed", 7), ..Default::default() }
+    } else {
+        ClimateConfig::small(args.get_u64("seed", 7))
+    };
+    let t_count = args.get_usize("t-count", if paper { 100 } else { 20 });
+    let tol = args.get_f64("tol", if paper { 1e-8 } else { 1e-6 });
+    let out_dir = args.get_or("out-dir", "out");
+    let panel = args.get_or("panel", "all");
+    let threads = default_threads();
+
+    println!("Fig 3 — simulated climate {}x{} grid, n={} months, p={}",
+        cfg.grid_lon, cfg.grid_lat, cfg.n_months, cfg.p());
+    let data = fig3::prepared_data(&cfg);
+
+    let mut tau_star = 0.4;
+    if panel == "a" || panel == "all" {
+        let taus = fig3::paper_tau_grid();
+        // delta=2.5 per the paper's choice for the climate path.
+        let cv = fig3::validation_grid(&data, &taus, 2.5, t_count, tol, threads, 99);
+        tau_star = cv.best_tau;
+        let mut rows = Vec::new();
+        for curve in &cv.curves {
+            for (li, (&lambda, &mse)) in
+                curve.lambdas.iter().zip(&curve.test_mse).enumerate()
+            {
+                rows.push(vec![curve.tau, li as f64, lambda, mse]);
+            }
+        }
+        let path_s = format!("{out_dir}/fig3a.csv");
+        write_csv(Path::new(&path_s), &["tau", "lambda_idx", "lambda", "test_mse"], &rows)
+            .expect("write csv");
+        println!("wrote {path_s}");
+        println!(
+            "  best model: tau*={} lambda*={:.4e} test mse={:.5e}",
+            cv.best_tau, cv.best_lambda, cv.best_mse
+        );
+    }
+
+    if panel == "b" || panel == "all" {
+        let job = RuleComparisonJob {
+            tolerances: vec![1e-2, 1e-4, 1e-6, 1e-8],
+            delta: 2.5,
+            t_count,
+            ..Default::default()
+        };
+        println!("  timing rules at tau*={tau_star} (delta=2.5)...");
+        let timings = fig3::rule_timings(&data, tau_star, &job, threads);
+        let path_s = format!("{out_dir}/fig3b.csv");
+        write_rule_timings(Path::new(&path_s), &timings).expect("write csv");
+        println!("wrote {path_s}");
+        println!("{}", render_rule_timings(&timings));
+    }
+}

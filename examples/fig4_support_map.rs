@@ -1,0 +1,63 @@
+//! Figure 4: support map — active groups for air-temperature prediction
+//! near the target ("Dakar") cell, max |coefficient| per location.
+//!
+//! Runs the Fig. 3a validation to pick (τ★, λ★), refits, and renders the
+//! map as ASCII + CSV.
+//!
+//! ```bash
+//! cargo run --release --example fig4_support_map -- --scale paper
+//! ```
+
+use sgl::coordinator::report::{render_support_map, write_support_map};
+use sgl::data::climate::ClimateConfig;
+use sgl::experiments::{fig3, fig4};
+use sgl::util::cli::{Args, OptSpec};
+use sgl::util::pool::default_threads;
+use std::path::Path;
+
+fn main() {
+    let args = Args::parse_or_exit(&[
+        OptSpec { name: "scale", help: "small|paper", takes_value: true, default: Some("small") },
+        OptSpec { name: "t-count", help: "lambdas on the path", takes_value: true, default: None },
+        OptSpec { name: "out-dir", help: "output directory", takes_value: true, default: Some("out") },
+        OptSpec { name: "seed", help: "dataset seed", takes_value: true, default: Some("7") },
+    ]);
+    let paper = args.get_or("scale", "small") == "paper";
+    let cfg = if paper {
+        ClimateConfig { seed: args.get_u64("seed", 7), ..Default::default() }
+    } else {
+        ClimateConfig::small(args.get_u64("seed", 7))
+    };
+    let t_count = args.get_usize("t-count", if paper { 100 } else { 20 });
+    let out_dir = args.get_or("out-dir", "out");
+
+    let data = fig3::prepared_data(&cfg);
+    println!("validating (lambda, tau) grid to pick the model...");
+    let cv = fig3::validation_grid(
+        &data,
+        &fig3::paper_tau_grid(),
+        2.5,
+        t_count,
+        if paper { 1e-8 } else { 1e-6 },
+        default_threads(),
+        99,
+    );
+    println!("  tau*={} lambda*={:.4e} mse={:.4e}", cv.best_tau, cv.best_lambda, cv.best_mse);
+
+    let map = fig4::support_map(&data, &cv.best_beta);
+    println!(
+        "support: {} active groups of {}; coefficient-weighted mean distance to target \
+         {:.2} cells (grid average {:.2})",
+        map.active_groups,
+        data.dataset.groups.n_groups(),
+        map.weighted_mean_distance,
+        map.baseline_mean_distance
+    );
+    println!("\nmax |coefficient| per grid cell (X = target):\n");
+    println!("{}", render_support_map(&map.values, map.grid_lon, map.grid_lat, map.target));
+
+    let path_s = format!("{out_dir}/fig4_support.csv");
+    write_support_map(Path::new(&path_s), &map.values, map.grid_lon, map.grid_lat, map.target)
+        .expect("write csv");
+    println!("wrote {path_s}");
+}

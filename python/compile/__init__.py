@@ -1,0 +1,10 @@
+"""Build-time compile package (Layer 1 + Layer 2).
+
+Never imported at runtime: `make artifacts` runs `aot.py` once, the rust
+binary consumes `artifacts/*.hlo.txt` afterwards.
+"""
+
+import jax
+
+# The solver targets duality gaps down to 1e-8: f64 end to end.
+jax.config.update("jax_enable_x64", True)

@@ -1,0 +1,124 @@
+"""AOT lowering: jit → StableHLO → XlaComputation → **HLO text**.
+
+HLO *text* (never ``HloModuleProto.serialize()``): jax ≥ 0.5 emits protos
+with 64-bit instruction ids that the rust side's xla_extension 0.5.1
+rejects (``proto.id() <= INT_MAX``); the text parser reassigns ids and
+round-trips cleanly (see /opt/xla-example/README.md).
+
+Usage::
+
+    python -m compile.aot --out-dir ../artifacts --n 100 --p 1000 \
+        --group-size 10 --n-inner 10
+
+Emits ``ista_epoch.hlo.txt``, ``screen.hlo.txt``, ``primal_dual.hlo.txt``,
+``smoke.hlo.txt`` and ``meta.toml`` (the shape contract consumed by
+``rust/src/runtime/engine.rs``).
+"""
+
+from __future__ import annotations
+
+import argparse
+import functools
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XLA computation → HLO text (the interchange format)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float64)
+
+
+def lower_ista_epoch(n, p, g, n_inner):
+    fn = functools.partial(model.ista_epoch, n_inner=n_inner)
+    return jax.jit(fn).lower(
+        _spec(n, p),  # x
+        _spec(n),  # y
+        _spec(p),  # beta
+        _spec(p),  # feat_mask
+        _spec(g),  # w
+        _spec(),  # lam
+        _spec(),  # tau
+        _spec(),  # inv_l
+    )
+
+
+def lower_screen(n, p, g):
+    return jax.jit(model.screen_gap).lower(
+        _spec(n, p),  # x
+        _spec(n),  # y
+        _spec(p),  # beta
+        _spec(p),  # feat_mask
+        _spec(g),  # group_mask
+        _spec(g),  # w
+        _spec(p),  # xj_norms
+        _spec(g),  # xg_norms
+        _spec(),  # lam
+        _spec(),  # tau
+    )
+
+
+def lower_primal_dual(n, p, g):
+    return jax.jit(model.primal_dual).lower(
+        _spec(n, p), _spec(n), _spec(p), _spec(g), _spec(), _spec()
+    )
+
+
+def lower_smoke():
+    """Trivial artifact used by the runtime smoke test: f(x) = (2x + 1,)."""
+    return jax.jit(lambda v: (2.0 * v + 1.0,)).lower(_spec(4))
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--n", type=int, default=100)
+    ap.add_argument("--p", type=int, default=1000)
+    ap.add_argument("--group-size", type=int, default=10)
+    ap.add_argument("--n-inner", type=int, default=10)
+    args = ap.parse_args()
+
+    n, p, d = args.n, args.p, args.group_size
+    if p % d != 0:
+        raise SystemExit(f"p={p} must be divisible by group size {d}")
+    g = p // d
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    artifacts = {
+        "ista_epoch": lower_ista_epoch(n, p, g, args.n_inner),
+        "screen": lower_screen(n, p, g),
+        "primal_dual": lower_primal_dual(n, p, g),
+        "smoke": lower_smoke(),
+    }
+    for name, lowered in artifacts.items():
+        text = to_hlo_text(lowered)
+        path = os.path.join(args.out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        print(f"wrote {path} ({len(text)} chars)")
+
+    meta = (
+        "# Shape contract for the AOT artifacts (see runtime/engine.rs).\n"
+        "[shape]\n"
+        f"n = {n}\np = {p}\nn_groups = {g}\ngroup_size = {d}\n"
+        f"n_inner = {args.n_inner}\n"
+    )
+    with open(os.path.join(args.out_dir, "meta.toml"), "w") as f:
+        f.write(meta)
+    print(f"wrote {args.out_dir}/meta.toml")
+
+
+if __name__ == "__main__":
+    main()

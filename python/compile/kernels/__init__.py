@@ -1,0 +1,14 @@
+"""Layer-1 Pallas kernels (interpret mode; see DESIGN.md §Hardware-Adaptation).
+
+- ``sgl_prox``     — fused two-level proximal operator over group tiles;
+- ``group_screen`` — Theorem-1 screening tests over group tiles;
+- ``matvec``       — tiled ``Xᵀρ`` (the dominant FLOPs of one pass);
+- ``dual_norm``    — vectorized Algorithm 1 (per-group ε-norm root Λ).
+
+``ref.py`` holds the pure-jnp oracles each kernel is tested against.
+"""
+
+from .dual_norm import lambda_rows_pallas  # noqa: F401
+from .group_screen import group_screen_pallas  # noqa: F401
+from .matvec import matvec_xt_pallas  # noqa: F401
+from .sgl_prox import sgl_prox_pallas  # noqa: F401

@@ -1,0 +1,80 @@
+"""Pallas kernel: Theorem-1 screening tests over group tiles.
+
+Given the sphere ``B(θ_c, r)`` in correlation space (``ξ = Xᵀθ_c``
+reshaped ``(G, d)``), computes per group tile:
+
+- the group bound ``T_g`` (paper Eq. 14):
+  ``‖S_τ(ξ_g)‖ + r‖X_g‖₂``            if ``‖ξ_g‖∞ > τ``,
+  ``(‖ξ_g‖∞ + r‖X_g‖₂ − τ)₊``          otherwise;
+- ``group_keep_g = [T_g ≥ (1−τ)w_g]`` (group survives);
+- ``feat_keep_{gj} = [|ξ_{gj}| + r‖X_j‖ ≥ τ]`` (feature survives).
+
+Outputs are 0/1 floats so the masks multiply straight into the solver
+state. One tile = one VMEM-resident block of ``block_g`` groups; all three
+outputs are produced in a single pass over the tile (VPU reductions along
+the lane/``d`` axis).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _screen_kernel(xi_ref, xjn_ref, xgn_ref, w_ref, tau_ref, r_ref, gk_ref, fk_ref):
+    xi = xi_ref[...]  # (block_g, d)
+    xjn = xjn_ref[...]  # (block_g, d)
+    xgn = xgn_ref[...]  # (block_g,)
+    w = w_ref[...]  # (block_g,)
+    tau = tau_ref[0]
+    r = r_ref[0]
+    ax = jnp.abs(xi)
+    st = jnp.maximum(ax - tau, 0.0)  # |S_tau(xi)| elementwise
+    st_norm = jnp.sqrt(jnp.sum(st * st, axis=1))
+    xi_inf = jnp.max(ax, axis=1)
+    t_g = jnp.where(
+        xi_inf > tau,
+        st_norm + r * xgn,
+        jnp.maximum(xi_inf + r * xgn - tau, 0.0),
+    )
+    gk_ref[...] = (t_g >= (1.0 - tau) * w).astype(xi.dtype)
+    fk_ref[...] = (ax + r * xjn >= tau).astype(xi.dtype)
+
+
+def _pick_block(g: int, target: int = 128) -> int:
+    best = 1
+    for cand in range(1, min(g, target) + 1):
+        if g % cand == 0:
+            best = cand
+    return best
+
+
+def group_screen_pallas(xi2d, xj_norms2d, xg_norms, w, tau, radius, *, block_g=None):
+    """Run the Theorem-1 tests. Returns ``(group_keep (G,), feat_keep (G, d))``."""
+    g, d = xi2d.shape
+    bg = block_g or _pick_block(g)
+    assert g % bg == 0, f"block_g={bg} must divide G={g}"
+    tau_arr = jnp.reshape(jnp.asarray(tau, xi2d.dtype), (1,))
+    r_arr = jnp.reshape(jnp.asarray(radius, xi2d.dtype), (1,))
+    return pl.pallas_call(
+        _screen_kernel,
+        grid=(g // bg,),
+        in_specs=[
+            pl.BlockSpec((bg, d), lambda i: (i, 0)),
+            pl.BlockSpec((bg, d), lambda i: (i, 0)),
+            pl.BlockSpec((bg,), lambda i: (i,)),
+            pl.BlockSpec((bg,), lambda i: (i,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bg,), lambda i: (i,)),
+            pl.BlockSpec((bg, d), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((g,), xi2d.dtype),
+            jax.ShapeDtypeStruct((g, d), xi2d.dtype),
+        ],
+        interpret=True,
+    )(xi2d, xj_norms2d, xg_norms, w, tau_arr, r_arr)

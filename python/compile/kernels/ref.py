@@ -1,0 +1,139 @@
+"""Pure-jnp reference oracles for the Pallas kernels and the model math.
+
+Everything here is straight-line jax.numpy — the "obviously correct"
+implementations that the kernels and the lowered artifacts are tested
+against (pytest + hypothesis). All functions are f64 (jax_enable_x64 is
+set in compile/__init__.py).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+_TINY = 1e-300
+
+
+def soft_threshold(x, t):
+    """S_t(x) = sign(x) (|x| - t)_+ — paper Notation."""
+    return jnp.sign(x) * jnp.maximum(jnp.abs(x) - t, 0.0)
+
+
+def group_soft_threshold(u, t):
+    """S^gp_t per row of u (G, d): (1 - t/||u_g||)_+ u_g.
+
+    ``t`` is scalar or shape (G,).
+    """
+    t = jnp.asarray(t)
+    norms = jnp.linalg.norm(u, axis=-1)
+    tb = jnp.broadcast_to(t, norms.shape)
+    shrink = jnp.where(norms > tb, 1.0 - tb / jnp.maximum(norms, _TINY), 0.0)
+    return u * shrink[..., None]
+
+
+def sgl_prox(u, a, b):
+    """Fused two-level SGL prox per row: S^gp_b(S_a(u)).
+
+    u: (G, d); a: scalar; b: scalar or (G,).
+    """
+    return group_soft_threshold(soft_threshold(u, a), b)
+
+
+def lambda_rows(x, alpha, r):
+    """Vectorized Algorithm 1: per-row Lambda(x_g, alpha_g, R_g).
+
+    x: (G, d); alpha, r: scalar or (G,) in [0, 1] x [0, inf).
+    Solves sum_i S_{nu*alpha}(|x_i|)^2 = (nu*R)^2 per row.
+
+    Fixed-shape formulation (no data-dependent early exit): sort the row,
+    build prefix sums, locate the active-count j0 by a mask-argmax, then
+    apply the closed-form root (paper Eq. 33/36). The special cases
+    alpha=0 / R=0 / zero rows are resolved with jnp.where selects so the
+    whole computation stays jittable with traced tau.
+    """
+    x = jnp.abs(jnp.asarray(x))
+    g, d = x.shape
+    alpha = jnp.broadcast_to(jnp.asarray(alpha, x.dtype), (g,))
+    r = jnp.broadcast_to(jnp.asarray(r, x.dtype), (g,))
+
+    s = jnp.sort(x, axis=1)[:, ::-1]  # descending
+    cs = jnp.cumsum(s, axis=1)  # S_k
+    cs2 = jnp.cumsum(s * s, axis=1)  # S2_k
+    k = jnp.arange(1, d + 1, dtype=x.dtype)[None, :]  # (1, d)
+
+    # b_{k+1} = S2_k/x_(k+1)^2 - 2 S_k/x_(k+1) + k, with x_(d+1) := 0 -> inf.
+    x_next = jnp.concatenate([s[:, 1:], jnp.zeros((g, 1), x.dtype)], axis=1)
+    safe_next = jnp.maximum(x_next, _TINY)
+    b_next = jnp.where(
+        x_next > 0.0,
+        cs2 / (safe_next * safe_next) - 2.0 * cs / safe_next + k,
+        jnp.inf,
+    )
+
+    alpha_safe = jnp.maximum(alpha, _TINY)[:, None]
+    ratio = (r[:, None] / alpha_safe) ** 2
+    hit = ratio < b_next  # first True column gives j0 (active count j0+1)
+    j0 = jnp.argmax(hit, axis=1)  # 0-based
+    j0f = (j0 + 1).astype(x.dtype)
+    sj = jnp.take_along_axis(cs, j0[:, None], axis=1)[:, 0]
+    s2j = jnp.take_along_axis(cs2, j0[:, None], axis=1)[:, 0]
+
+    a1 = alpha_safe[:, 0]
+    denom = a1 * a1 * j0f - r * r
+    disc = jnp.maximum(a1 * a1 * sj * sj - s2j * denom, 0.0)
+    denom_safe = jnp.where(jnp.abs(denom) > 1e-14, denom, 1.0)
+    nu_quad = (a1 * sj - jnp.sqrt(disc)) / denom_safe
+    nu_lin = s2j / jnp.maximum(2.0 * a1 * sj, _TINY)
+    nu_generic = jnp.where(jnp.abs(denom) > 1e-14, nu_quad, nu_lin)
+
+    # Special cases.
+    l2 = jnp.linalg.norm(x, axis=1)
+    linf = jnp.max(x, axis=1)
+    nu_alpha0 = l2 / jnp.maximum(r, _TINY)  # alpha = 0
+    nu_r0 = linf / jnp.maximum(alpha, _TINY)  # R = 0
+    nu = jnp.where(alpha == 0.0, nu_alpha0, jnp.where(r == 0.0, nu_r0, nu_generic))
+    return jnp.where(linf > 0.0, nu, 0.0)
+
+
+def epsilon_norm_rows(x, eps):
+    """Per-row epsilon-norm ||x_g||_eps = Lambda(x_g, 1-eps, eps)."""
+    eps = jnp.asarray(eps)
+    return lambda_rows(x, 1.0 - eps, eps)
+
+
+def omega(beta2d, tau, w):
+    """Omega_{tau,w}(beta) on group-reshaped beta (G, d)."""
+    l1 = jnp.sum(jnp.abs(beta2d))
+    gl = jnp.sum(w * jnp.linalg.norm(beta2d, axis=1))
+    return tau * l1 + (1.0 - tau) * gl
+
+
+def omega_dual(xi2d, tau, w):
+    """Omega^D via Eq. (20)/(23): max_g ||xi_g||_{eps_g} / (tau+(1-tau)w_g)."""
+    scale = tau + (1.0 - tau) * w
+    eps = (1.0 - tau) * w / scale
+    return jnp.max(lambda_rows(xi2d, 1.0 - eps, eps) / scale)
+
+
+def group_screen_tests(xi2d, tau, radius, xj_norms2d, xg_norms, w):
+    """Theorem 1 tests against the sphere B(theta_c, radius).
+
+    xi2d: X^T theta_c reshaped (G, d); xj_norms2d: ||X_j|| reshaped (G, d);
+    xg_norms: ||X_g||_2 (G,). Returns (group_keep (G,), feat_keep (G, d))
+    as 0/1 floats: keep = NOT screened.
+    """
+    st = soft_threshold(xi2d, tau)
+    st_norm = jnp.linalg.norm(st, axis=1)
+    xi_inf = jnp.max(jnp.abs(xi2d), axis=1)
+    t_g = jnp.where(
+        xi_inf > tau,
+        st_norm + radius * xg_norms,
+        jnp.maximum(xi_inf + radius * xg_norms - tau, 0.0),
+    )
+    group_keep = (t_g >= (1.0 - tau) * w).astype(xi2d.dtype)
+    feat_keep = (jnp.abs(xi2d) + radius * xj_norms2d >= tau).astype(xi2d.dtype)
+    return group_keep, feat_keep
+
+
+def matvec_xt(x, rho):
+    """X^T rho (the matvec kernel's oracle)."""
+    return x.T @ rho

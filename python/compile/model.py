@@ -1,0 +1,115 @@
+"""Layer-2 JAX model: the two computations that are AOT-lowered to HLO and
+executed from rust via PJRT.
+
+- :func:`ista_epoch` — ``n_inner`` masked proximal-gradient steps (the
+  artifact the rust engine calls between screenings). Calls the Pallas
+  matvec + fused-prox kernels inside a ``lax.fori_loop`` so one host call
+  amortizes ``n_inner`` passes.
+- :func:`screen_gap` — dual-scaled feasible point (Eq. 15), duality gap,
+  GAP safe radius (Thm. 2) and the Theorem-1 masks, using the vectorized
+  Algorithm 1 (``ref.lambda_rows``) for the dual norm and the Pallas
+  screening kernel for the tests.
+
+Signatures must stay in sync with ``rust/src/runtime/engine.rs``
+(input order is part of the artifact ABI; see aot.py).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import (
+    group_screen_pallas,
+    lambda_rows_pallas,
+    matvec_xt_pallas,
+    sgl_prox_pallas,
+)
+from .kernels import ref
+
+
+def ista_epoch(x, y, beta, feat_mask, w, lam, tau, inv_l, *, n_inner: int = 10):
+    """``n_inner`` masked ISTA steps with global step size ``inv_l = 1/‖X‖₂²``.
+
+    Inputs: x (n, p), y (n,), beta (p,), feat_mask (p,) in {0,1}, w (G,),
+    lam/tau/inv_l scalars. Group structure: p = G*d with d = p // len(w).
+    Returns the updated beta (p,).
+    """
+    n, p = x.shape
+    g = w.shape[0]
+    d = p // g
+    assert g * d == p, "p must equal n_groups * group_size"
+
+    a = tau * lam * inv_l  # l1 threshold
+    b = (1.0 - tau) * w * lam * inv_l  # (G,) group thresholds
+
+    def step(_, beta_k):
+        rho = y - x @ (beta_k * feat_mask)
+        xt = matvec_xt_pallas(x, rho)
+        u = (beta_k + xt * inv_l) * feat_mask
+        prox = sgl_prox_pallas(u.reshape(g, d), a, b)
+        return prox.reshape(p) * feat_mask
+
+    return (jax.lax.fori_loop(0, n_inner, step, beta * feat_mask),)
+
+
+def screen_gap(x, y, beta, feat_mask, group_mask, w, xj_norms, xg_norms, lam, tau):
+    """Gap evaluation + GAP safe screening (Eq. 15, Thm. 2, Thm. 1).
+
+    Returns ``(gap, radius, new_feat_mask (p,), new_group_mask (G,))``.
+    """
+    n, p = x.shape
+    g = w.shape[0]
+    d = p // g
+    assert g * d == p
+
+    beta = beta * feat_mask
+    rho = y - x @ beta
+    xt_rho = matvec_xt_pallas(x, rho)
+
+    # Dual norm Omega^D(X^T rho) via vectorized Algorithm 1 (Eq. 23).
+    scale_g = tau + (1.0 - tau) * w
+    eps_g = (1.0 - tau) * w / scale_g
+    dual_norm = jnp.max(
+        lambda_rows_pallas(xt_rho.reshape(g, d), 1.0 - eps_g, eps_g) / scale_g
+    )
+
+    # Dual scaling (Eq. 15).
+    s = jnp.maximum(lam, dual_norm)
+    xt_theta = xt_rho / s
+
+    # Primal/dual objectives and the GAP radius (Thm. 2).
+    primal = 0.5 * jnp.sum(rho * rho) + lam * ref.omega(beta.reshape(g, d), tau, w)
+    diff = rho / s - y / lam
+    dual = 0.5 * jnp.sum(y * y) - 0.5 * lam * lam * jnp.sum(diff * diff)
+    gap = jnp.maximum(primal - dual, 0.0)
+    radius = jnp.sqrt(2.0 * gap) / lam
+
+    # Theorem-1 tests (Pallas kernel).
+    group_keep, feat_keep = group_screen_pallas(
+        xt_theta.reshape(g, d), xj_norms.reshape(g, d), xg_norms, w, tau, radius
+    )
+    new_feat = feat_mask * (group_keep[:, None] * feat_keep).reshape(p)
+    # A group with every feature screened is inactive.
+    any_feat = jnp.max(new_feat.reshape(g, d), axis=1)
+    new_group = group_mask * group_keep * any_feat
+    return gap, radius, new_feat, new_group
+
+
+def primal_dual(x, y, beta, w, lam, tau):
+    """Monitoring artifact: (primal, dual, gap) without screening."""
+    n, p = x.shape
+    g = w.shape[0]
+    d = p // g
+    rho = y - x @ beta
+    xt_rho = matvec_xt_pallas(x, rho)
+    scale_g = tau + (1.0 - tau) * w
+    eps_g = (1.0 - tau) * w / scale_g
+    dual_norm = jnp.max(
+        ref.lambda_rows(xt_rho.reshape(g, d), 1.0 - eps_g, eps_g) / scale_g
+    )
+    s = jnp.maximum(lam, dual_norm)
+    primal = 0.5 * jnp.sum(rho * rho) + lam * ref.omega(beta.reshape(g, d), tau, w)
+    diff = rho / s - y / lam
+    dual = 0.5 * jnp.sum(y * y) - 0.5 * lam * lam * jnp.sum(diff * diff)
+    return primal, dual, jnp.maximum(primal - dual, 0.0)

@@ -1,0 +1,10 @@
+"""Shared pytest setup: put python/ on the path, enable x64."""
+
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+import jax  # noqa: E402
+
+jax.config.update("jax_enable_x64", True)

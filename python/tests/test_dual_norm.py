@@ -1,0 +1,102 @@
+"""Vectorized Algorithm 1 (`ref.lambda_rows`) against an independent
+bisection root-finder, plus the paper's closed-form identities.
+"""
+
+import hypothesis.strategies as st
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+
+from compile.kernels import ref
+
+
+def lambda_bisect(row, alpha, r, iters=200):
+    """Independent scalar oracle: bisection on phi(nu) - (nu R)^2."""
+    row = np.abs(np.asarray(row, dtype=np.float64))
+    if row.max() == 0.0:
+        return 0.0
+    if alpha == 0.0:
+        return float(np.linalg.norm(row) / r) if r > 0 else float("inf")
+    if r == 0.0:
+        return float(row.max() / alpha)
+
+    def f(nu):
+        t = np.maximum(row - nu * alpha, 0.0)
+        return float(np.sum(t * t) - (nu * r) ** 2)
+
+    lo, hi = 0.0, float(row.max() / alpha)
+    for _ in range(iters):
+        mid = 0.5 * (lo + hi)
+        if f(mid) > 0:
+            lo = mid
+        else:
+            hi = mid
+    return 0.5 * (lo + hi)
+
+
+@given(
+    g=st.integers(1, 8),
+    d=st.integers(1, 16),
+    alpha=st.floats(0.01, 1.0),
+    r=st.floats(0.01, 2.0),
+    seed=st.integers(0, 2**31 - 1),
+)
+@settings(deadline=None, max_examples=25, derandomize=True)
+def test_lambda_rows_matches_bisection(g, d, alpha, r, seed):
+    rng = np.random.default_rng(seed)
+    x = rng.normal(size=(g, d)) * 3.0
+    got = np.asarray(ref.lambda_rows(jnp.asarray(x), alpha, r))
+    for gi in range(g):
+        want = lambda_bisect(x[gi], alpha, r)
+        np.testing.assert_allclose(got[gi], want, rtol=1e-8, atol=1e-10)
+
+
+def test_lambda_rows_special_cases():
+    x = jnp.asarray([[3.0, -4.0, 0.0]])
+    # alpha=0: ||x||/R
+    np.testing.assert_allclose(ref.lambda_rows(x, 0.0, 2.0)[0], 2.5)
+    # R=0: ||x||_inf/alpha
+    np.testing.assert_allclose(ref.lambda_rows(x, 0.5, 0.0)[0], 8.0)
+    # zero row -> 0
+    np.testing.assert_allclose(ref.lambda_rows(jnp.zeros((1, 4)), 0.3, 0.7)[0], 0.0)
+
+
+def test_epsilon_norm_interpolates():
+    x = jnp.asarray([[1.0, -2.0, 3.0]])
+    np.testing.assert_allclose(ref.epsilon_norm_rows(x, 0.0)[0], 3.0)  # inf
+    np.testing.assert_allclose(
+        ref.epsilon_norm_rows(x, 1.0)[0], np.sqrt(14.0)
+    )  # l2
+    mid = float(ref.epsilon_norm_rows(x, 0.5)[0])
+    assert 3.0 < mid < 2.0 * np.sqrt(14.0)
+
+
+def test_defining_equation_holds():
+    rng = np.random.default_rng(0)
+    x = rng.normal(size=(12, 10)) * 2.0
+    alpha, r = 0.7, 0.45
+    nu = np.asarray(ref.lambda_rows(jnp.asarray(x), alpha, r))
+    for gi in range(12):
+        t = np.maximum(np.abs(x[gi]) - nu[gi] * alpha, 0.0)
+        resid = np.sum(t * t) - (nu[gi] * r) ** 2
+        assert abs(resid) < 1e-9 * max(1.0, np.sum(x[gi] ** 2)), resid
+
+
+def test_omega_dual_per_group_scaling():
+    """Scaling xi by Omega^D(xi) lands on the unit sphere of the dual."""
+    rng = np.random.default_rng(1)
+    x = jnp.asarray(rng.normal(size=(5, 7)))
+    w = jnp.asarray(np.sqrt(np.full(5, 7.0)))
+    tau = 0.35
+    dn = float(ref.omega_dual(x, tau, w))
+    assert dn > 0
+    dn2 = float(ref.omega_dual(x / dn, tau, w))
+    np.testing.assert_allclose(dn2, 1.0, rtol=1e-10)
+
+
+def test_omega_matches_manual():
+    beta = jnp.asarray([[1.0, -2.0], [0.0, 3.0]])
+    w = jnp.asarray([1.5, 2.0])
+    tau = 0.4
+    want = 0.4 * 6.0 + 0.6 * (1.5 * np.sqrt(5.0) + 2.0 * 3.0)
+    np.testing.assert_allclose(float(ref.omega(beta, tau, w)), want, rtol=1e-12)

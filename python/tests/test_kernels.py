@@ -1,0 +1,140 @@
+"""L1 correctness: Pallas kernels vs the pure-jnp oracles in ref.py.
+
+Hypothesis sweeps shapes and values; fixed cases probe the edges
+(tau in {0, 1}, zero blocks, single-group / single-feature tiles).
+"""
+
+import hypothesis
+import hypothesis.strategies as st
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+
+from compile.kernels import group_screen_pallas, matvec_xt_pallas, sgl_prox_pallas
+from compile.kernels import ref
+
+hypothesis.settings.register_profile(
+    "sgl", deadline=None, max_examples=20, derandomize=True
+)
+hypothesis.settings.load_profile("sgl")
+
+
+def rng_arrays(seed, *shapes, scale=3.0):
+    rng = np.random.default_rng(seed)
+    return [jnp.asarray(rng.normal(size=s) * scale) for s in shapes]
+
+
+# ---------------------------------------------------------------- sgl_prox
+@given(
+    g=st.integers(1, 24),
+    d=st.integers(1, 12),
+    a=st.floats(0.0, 4.0),
+    bscale=st.floats(0.0, 4.0),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_sgl_prox_matches_ref(g, d, a, bscale, seed):
+    (u,) = rng_arrays(seed, (g, d))
+    rng = np.random.default_rng(seed + 1)
+    b = jnp.asarray(rng.uniform(0.0, bscale + 1e-9, size=g))
+    got = sgl_prox_pallas(u, a, b)
+    want = ref.sgl_prox(u, a, b)
+    np.testing.assert_allclose(got, want, rtol=1e-12, atol=1e-12)
+
+
+def test_sgl_prox_zero_thresholds_is_identity():
+    (u,) = rng_arrays(0, (8, 5))
+    got = sgl_prox_pallas(u, 0.0, jnp.zeros(8))
+    np.testing.assert_allclose(got, u, rtol=0, atol=0)
+
+
+def test_sgl_prox_large_group_threshold_zeroes_blocks():
+    (u,) = rng_arrays(1, (4, 3))
+    got = sgl_prox_pallas(u, 0.0, jnp.full(4, 1e9))
+    assert np.all(np.asarray(got) == 0.0)
+
+
+def test_sgl_prox_respects_block_sizes():
+    (u,) = rng_arrays(2, (12, 4))
+    b = jnp.abs(rng_arrays(3, (12,))[0])
+    full = sgl_prox_pallas(u, 0.7, b, block_g=12)
+    tiled = sgl_prox_pallas(u, 0.7, b, block_g=4)
+    np.testing.assert_allclose(full, tiled, rtol=0, atol=0)
+
+
+# ----------------------------------------------------------------- matvec
+@given(
+    n=st.integers(1, 40),
+    p=st.integers(1, 64),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_matvec_matches_ref(n, p, seed):
+    x, rho = rng_arrays(seed, (n, p), (n,))
+    got = matvec_xt_pallas(x, rho)
+    want = ref.matvec_xt(x, rho)
+    np.testing.assert_allclose(got, want, rtol=1e-10, atol=1e-10)
+
+
+def test_matvec_blocked_equals_unblocked():
+    x, rho = rng_arrays(5, (30, 48), (30,))
+    a = matvec_xt_pallas(x, rho, block_p=48)
+    b = matvec_xt_pallas(x, rho, block_p=8)
+    np.testing.assert_allclose(a, b, rtol=1e-14, atol=1e-14)
+
+
+# ------------------------------------------------------------ group_screen
+@given(
+    g=st.integers(1, 16),
+    d=st.integers(1, 10),
+    tau=st.floats(0.0, 1.0),
+    radius=st.floats(0.0, 2.0),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_group_screen_matches_ref(g, d, tau, radius, seed):
+    xi, = rng_arrays(seed, (g, d), scale=1.0)
+    rng = np.random.default_rng(seed + 2)
+    xjn = jnp.asarray(rng.uniform(0.1, 2.0, size=(g, d)))
+    xgn = jnp.asarray(rng.uniform(0.1, 3.0, size=g))
+    w = jnp.asarray(np.sqrt(np.full(g, float(d))))
+    gk, fk = group_screen_pallas(xi, xjn, xgn, w, tau, radius)
+    gk_ref, fk_ref = ref.group_screen_tests(xi, tau, radius, xjn, xgn, w)
+    np.testing.assert_array_equal(np.asarray(gk), np.asarray(gk_ref))
+    np.testing.assert_array_equal(np.asarray(fk), np.asarray(fk_ref))
+
+
+def test_group_screen_zero_radius_zero_center_screens_all():
+    g, d = 6, 4
+    xi = jnp.zeros((g, d))
+    xjn = jnp.ones((g, d))
+    xgn = jnp.ones(g)
+    w = jnp.full(g, 2.0)
+    gk, fk = group_screen_pallas(xi, xjn, xgn, w, 0.5, 0.0)
+    assert np.all(np.asarray(gk) == 0.0)
+    assert np.all(np.asarray(fk) == 0.0)
+
+
+def test_group_screen_huge_radius_keeps_all():
+    g, d = 3, 5
+    xi = jnp.zeros((g, d))
+    xjn = jnp.ones((g, d))
+    xgn = jnp.ones(g)
+    w = jnp.full(g, 2.0)
+    gk, fk = group_screen_pallas(xi, xjn, xgn, w, 0.5, 100.0)
+    assert np.all(np.asarray(gk) == 1.0)
+    assert np.all(np.asarray(fk) == 1.0)
+
+
+@pytest.mark.parametrize("tau", [0.0, 1.0])
+def test_group_screen_tau_extremes(tau):
+    g, d = 4, 3
+    xi, = rng_arrays(7, (g, d), scale=0.5)
+    xjn = jnp.ones((g, d))
+    xgn = jnp.ones(g)
+    w = jnp.full(g, float(np.sqrt(d)))
+    gk, fk = group_screen_pallas(xi, xjn, xgn, w, tau, 0.01)
+    gk_ref, fk_ref = ref.group_screen_tests(xi, tau, 0.01, xjn, xgn, w)
+    np.testing.assert_array_equal(np.asarray(gk), np.asarray(gk_ref))
+    np.testing.assert_array_equal(np.asarray(fk), np.asarray(fk_ref))
+    if tau == 0.0:
+        # Feature test can never screen at tau=0.
+        assert np.all(np.asarray(fk) == 1.0)

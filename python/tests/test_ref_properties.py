@@ -1,0 +1,151 @@
+"""Property tests of the pure-jnp reference layer (norm axioms, paper
+lemmas) — these guard the oracles every kernel is checked against."""
+
+import hypothesis.strategies as st
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+
+from compile.kernels import ref
+
+SET = settings(deadline=None, max_examples=30, derandomize=True)
+
+
+def arr(seed, *shape, scale=2.0):
+    return jnp.asarray(np.random.default_rng(seed).normal(size=shape) * scale)
+
+
+# ------------------------------------------------------------ norm axioms
+@given(
+    g=st.integers(1, 6),
+    d=st.integers(1, 10),
+    eps=st.floats(0.0, 1.0),
+    seed=st.integers(0, 2**31 - 1),
+)
+@SET
+def test_epsilon_norm_triangle_inequality(g, d, eps, seed):
+    x = arr(seed, g, d)
+    y = arr(seed + 1, g, d)
+    nx = np.asarray(ref.epsilon_norm_rows(x, eps))
+    ny = np.asarray(ref.epsilon_norm_rows(y, eps))
+    nxy = np.asarray(ref.epsilon_norm_rows(x + y, eps))
+    assert np.all(nxy <= nx + ny + 1e-9 * (1 + nx + ny))
+
+
+@given(
+    g=st.integers(1, 6),
+    d=st.integers(1, 10),
+    eps=st.floats(0.0, 1.0),
+    c=st.floats(0.1, 10.0),
+    seed=st.integers(0, 2**31 - 1),
+)
+@SET
+def test_epsilon_norm_homogeneity(g, d, eps, c, seed):
+    x = arr(seed, g, d)
+    nx = np.asarray(ref.epsilon_norm_rows(x, eps))
+    ncx = np.asarray(ref.epsilon_norm_rows(c * x, eps))
+    np.testing.assert_allclose(ncx, c * nx, rtol=1e-8, atol=1e-12)
+
+
+@given(
+    g=st.integers(1, 5),
+    d=st.integers(1, 8),
+    tau=st.floats(0.0, 1.0),
+    seed=st.integers(0, 2**31 - 1),
+)
+@SET
+def test_omega_duality_inequality(g, d, tau, seed):
+    """|<beta, xi>| <= Omega(beta) * Omega^D(xi)."""
+    beta = arr(seed, g, d)
+    xi = arr(seed + 7, g, d)
+    w = jnp.asarray(np.sqrt(np.full(g, float(d))))
+    ip = float(jnp.sum(beta * xi))
+    bound = float(ref.omega(beta, tau, w)) * float(ref.omega_dual(xi, tau, w))
+    assert abs(ip) <= bound * (1 + 1e-9) + 1e-9
+
+
+# ------------------------------------------------------------ paper lemmas
+@given(
+    d=st.integers(1, 12),
+    eps=st.floats(0.05, 0.95),
+    seed=st.integers(0, 2**31 - 1),
+)
+@SET
+def test_lemma1_decomposition(d, eps, seed):
+    """x = x^eps + x^{1-eps}; ||x^eps|| = eps*nu; ||x^{1-eps}||_inf = (1-eps)nu."""
+    x = arr(seed, 1, d)
+    if float(jnp.max(jnp.abs(x))) == 0.0:
+        return
+    nu = float(ref.epsilon_norm_rows(x, eps)[0])
+    x_eps = ref.soft_threshold(x, (1 - eps) * nu)
+    x_rest = x - x_eps
+    np.testing.assert_allclose(float(jnp.linalg.norm(x_eps)), eps * nu, rtol=1e-8)
+    np.testing.assert_allclose(
+        float(jnp.max(jnp.abs(x_rest))), (1 - eps) * nu, rtol=1e-8
+    )
+
+
+@given(
+    g=st.integers(1, 5),
+    d=st.integers(1, 8),
+    tau=st.floats(0.01, 0.99),
+    seed=st.integers(0, 2**31 - 1),
+)
+@SET
+def test_dual_ball_characterization(g, d, tau, seed):
+    """Eq. 21 <=> Eq. 20: ||S_tau(xi_g)|| <= (1-tau)w_g for all g iff
+    Omega^D(xi) <= 1 (away from the boundary)."""
+    xi = arr(seed, g, d, scale=0.8)
+    w = jnp.asarray(np.sqrt(np.full(g, float(d))))
+    dn = float(ref.omega_dual(xi, tau, w))
+    if abs(dn - 1.0) < 1e-6:
+        return  # knife edge
+    st_norms = jnp.linalg.norm(ref.soft_threshold(xi, tau), axis=1)
+    inside_21 = bool(jnp.all(st_norms <= (1 - tau) * w + 1e-12))
+    assert inside_21 == (dn <= 1.0), (dn, inside_21)
+
+
+@given(
+    g=st.integers(1, 4),
+    d=st.integers(1, 6),
+    tau=st.floats(0.0, 1.0),
+    a=st.floats(0.0, 2.0),
+    seed=st.integers(0, 2**31 - 1),
+)
+@SET
+def test_prox_decreases_objective(g, d, tau, a, seed):
+    """prox minimizes 0.5||b-u||^2 + a*tau*||b||_1 + a*(1-tau)w||b||:
+    its objective value is <= that of u itself and of 0."""
+    u = arr(seed, g, d)
+    w = jnp.asarray(np.sqrt(np.full(g, float(d))))
+    p = ref.sgl_prox(u, a * tau, a * (1 - tau) * w)
+
+    def obj(b):
+        return (
+            0.5 * float(jnp.sum((b - u) ** 2))
+            + a * tau * float(jnp.sum(jnp.abs(b)))
+            + a * float(jnp.sum((1 - tau) * w * jnp.linalg.norm(b, axis=1)))
+        )
+
+    assert obj(p) <= obj(u) + 1e-9
+    assert obj(p) <= obj(jnp.zeros_like(u)) + 1e-9
+
+
+@given(
+    g=st.integers(1, 5),
+    d=st.integers(1, 8),
+    tau=st.floats(0.0, 1.0),
+    seed=st.integers(0, 2**31 - 1),
+)
+@SET
+def test_screen_tests_monotone_in_radius(g, d, tau, seed):
+    """Larger safe spheres can only keep MORE variables."""
+    xi = arr(seed, g, d, scale=0.5)
+    rng = np.random.default_rng(seed + 3)
+    xjn = jnp.asarray(rng.uniform(0.1, 2.0, size=(g, d)))
+    xgn = jnp.asarray(rng.uniform(0.1, 2.0, size=g))
+    w = jnp.asarray(np.sqrt(np.full(g, float(d))))
+    gk_small, fk_small = ref.group_screen_tests(xi, tau, 0.01, xjn, xgn, w)
+    gk_big, fk_big = ref.group_screen_tests(xi, tau, 1.0, xjn, xgn, w)
+    assert np.all(np.asarray(gk_big) >= np.asarray(gk_small))
+    assert np.all(np.asarray(fk_big) >= np.asarray(fk_small))

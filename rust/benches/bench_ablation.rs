@@ -1,0 +1,164 @@
+//! Ablation benches for the design choices DESIGN.md calls out:
+//!
+//! 1. **f_ce** (gap-evaluation frequency, paper §6 uses 10): trade-off
+//!    between screening opportunity and `O(np)` gap-eval overhead;
+//! 2. **warm starts** along the λ-path vs cold solves;
+//! 3. **strong rules (unsafe, KKT-checked) vs GAP safe vs both combined**
+//!    — the working-set-style comparison the paper discusses in §1;
+//! 4. **dual-norm evaluation** inside the solve: Algorithm 1 vs the naive
+//!    quadratic scan (end-to-end impact, complementing bench_dual_norm);
+//! 5. **inner solvers**: cyclic BCD (Alg. 2) vs masked ISTA vs FISTA at a
+//!    single λ — CD is the paper's choice and wins on epochs.
+
+use sgl::data::synthetic::{generate, SyntheticConfig};
+use sgl::screening::RuleKind;
+use sgl::solver::cd::SolveOptions;
+use sgl::solver::path::{solve_path_on_grid, PathOptions};
+use sgl::solver::problem::SglProblem;
+use sgl::solver::strong::solve_path_strong;
+use sgl::util::timer::Stopwatch;
+
+fn problem() -> SglProblem {
+    let cfg = SyntheticConfig {
+        n: 100,
+        n_groups: 300,
+        group_size: 10,
+        gamma1: 8,
+        gamma2: 4,
+        seed: 42,
+        ..Default::default()
+    };
+    let d = generate(&cfg);
+    SglProblem::new(d.dataset.x, d.dataset.y, d.dataset.groups, 0.2)
+}
+
+fn main() {
+    let pb = problem();
+    let lambdas = SglProblem::lambda_grid(pb.lambda_max(), 3.0, 40);
+    println!("== bench_ablation (n=100, p=3000, T=40, tol=1e-8) ==\n");
+
+    // ---- 1. f_ce sweep
+    println!("f_ce sweep (gap_safe):");
+    for fce in [1usize, 5, 10, 20, 50] {
+        let opts = PathOptions {
+            delta: 3.0,
+            t_count: lambdas.len(),
+            solve: SolveOptions {
+                tol: 1e-8,
+                fce,
+                rule: RuleKind::GapSafe,
+                record_history: false,
+                ..Default::default()
+            },
+        };
+        let path = solve_path_on_grid(&pb, &lambdas, &opts);
+        println!(
+            "  fce={fce:>3}: {:>8.3}s  epochs={:>7}  gap_evals={:>6}  converged={}",
+            path.total_s,
+            path.total_epochs(),
+            path.results.iter().map(|r| r.gap_evals).sum::<usize>(),
+            path.all_converged()
+        );
+    }
+
+    // ---- 2. warm vs cold
+    println!("\nwarm starts vs cold solves (gap_safe, fce=10):");
+    let opts = PathOptions {
+        delta: 3.0,
+        t_count: lambdas.len(),
+        solve: SolveOptions { tol: 1e-8, record_history: false, ..Default::default() },
+    };
+    let warm = solve_path_on_grid(&pb, &lambdas, &opts);
+    let sw = Stopwatch::start();
+    let mut cold_epochs = 0usize;
+    for &l in &lambdas {
+        let res = sgl::solver::cd::solve(&pb, l, None, &opts.solve);
+        cold_epochs += res.epochs;
+    }
+    println!("  warm: {:>8.3}s  epochs={}", warm.total_s, warm.total_epochs());
+    println!("  cold: {:>8.3}s  epochs={}", sw.elapsed_s(), cold_epochs);
+
+    // ---- 3. strong rules vs gap safe vs both
+    println!("\nworking sets (strong rules, unsafe + KKT recovery) vs GAP safe:");
+    for (name, rule, use_strong) in [
+        ("gap_safe only", RuleKind::GapSafe, false),
+        ("strong only (none inside)", RuleKind::None, true),
+        ("strong + gap_safe inside", RuleKind::GapSafe, true),
+    ] {
+        let solve_opts =
+            SolveOptions { tol: 1e-8, rule, record_history: false, ..Default::default() };
+        if use_strong {
+            let (results, stats, secs) = solve_path_strong(&pb, &lambdas, &solve_opts);
+            println!(
+                "  {name:<28}: {secs:>8.3}s  subsolves={} violations={} kept_avg={:.1}",
+                stats.subsolves,
+                stats.violations,
+                stats.kept_groups_initial as f64 / results.len() as f64
+            );
+        } else {
+            let path = solve_path_on_grid(
+                &pb,
+                &lambdas,
+                &PathOptions { delta: 3.0, t_count: lambdas.len(), solve: solve_opts },
+            );
+            println!(
+                "  {name:<28}: {:>8.3}s  epochs={}",
+                path.total_s,
+                path.total_epochs()
+            );
+        }
+    }
+
+    // ---- 5. inner solvers at a single lambda
+    println!("\ninner solvers at lambda = lambda_max/10 (tol 1e-8, rule gap_safe):");
+    {
+        let lambda = 0.1 * pb.lambda_max();
+        let opts = SolveOptions {
+            tol: 1e-8,
+            max_epochs: 500_000,
+            record_history: false,
+            ..Default::default()
+        };
+        let sw = Stopwatch::start();
+        let a = sgl::solver::cd::solve(&pb, lambda, None, &opts);
+        let ta = sw.elapsed_s();
+        let sw = Stopwatch::start();
+        let b = sgl::solver::ista::solve_ista(&pb, lambda, None, &opts);
+        let tb = sw.elapsed_s();
+        let sw = Stopwatch::start();
+        let c = sgl::solver::fista::solve_fista(&pb, lambda, None, &opts);
+        let tc = sw.elapsed_s();
+        println!("  cd (Alg. 2): {ta:>8.3}s epochs={:>7} converged={}", a.epochs, a.converged);
+        println!("  ista       : {tb:>8.3}s epochs={:>7} converged={}", b.epochs, b.converged);
+        println!("  fista      : {tc:>8.3}s epochs={:>7} converged={}", c.epochs, c.converged);
+    }
+
+    // ---- 4. dual norm inside the gap eval: Algorithm 1 vs naive
+    println!("\ndual-norm evaluation inside one gap check (p=3000):");
+    let beta = vec![0.01; pb.p()];
+    let xb = pb.x.matvec(&beta);
+    let rho: Vec<f64> = pb.y.iter().zip(&xb).map(|(y, v)| y - v).collect();
+    let xt = pb.x.tmatvec(&rho);
+    let sw = Stopwatch::start();
+    for _ in 0..200 {
+        std::hint::black_box(sgl::norms::sgl::omega_dual(
+            &xt,
+            &pb.groups,
+            pb.tau,
+            &pb.weights,
+        ));
+    }
+    let alg1 = sw.elapsed_s() / 200.0;
+    let sw = Stopwatch::start();
+    for _ in 0..200 {
+        std::hint::black_box(sgl::norms::sgl::omega_dual_naive(
+            &xt,
+            &pb.groups,
+            pb.tau,
+            &pb.weights,
+        ));
+    }
+    let naive = sw.elapsed_s() / 200.0;
+    println!("  alg1 : {:>10.2} us", alg1 * 1e6);
+    println!("  naive: {:>10.2} us ({:.1}x slower)", naive * 1e6, naive / alg1);
+}

@@ -1,0 +1,72 @@
+//! Bench: dual-norm evaluation — Algorithm 1 (O(n_I log n_I) with
+//! Remark-9 pruning) vs the naive O(d²) scan vs bisection.
+//!
+//! Regenerates the paper's complexity claim (Prop. 9 / Rmk. 9): the
+//! pruned sorted algorithm wins by orders of magnitude at large d, and
+//! `n_I` is typically a small fraction of d.
+
+use sgl::norms::epsilon::{lambda, lambda_bisect, pruned_count};
+use sgl::norms::sgl::epsilon_norm_naive;
+use sgl::util::rng::Pcg;
+use sgl::util::timer::{bench, black_box, BenchConfig};
+
+fn main() {
+    println!("== bench_dual_norm: Lambda(x, alpha, R) evaluation ==");
+    println!("(alpha, R) from eps_g at tau=0.2, w=sqrt(d)\n");
+    let cfg = BenchConfig { warmup_iters: 2, iters: 15, max_seconds: 20.0 };
+
+    println!(
+        "{:>8} {:>14} {:>14} {:>14} {:>8} {:>10}",
+        "d", "alg1 (us)", "naive (us)", "bisect (us)", "n_I", "speedup"
+    );
+    for &d in &[10usize, 100, 1_000, 10_000, 100_000] {
+        let mut rng = Pcg::seeded(d as u64);
+        let x: Vec<f64> = (0..d).map(|_| rng.normal()).collect();
+        let tau = 0.2;
+        let w = (d as f64).sqrt();
+        let eps = (1.0 - tau) * w / (tau + (1.0 - tau) * w);
+        let (alpha, r) = (1.0 - eps, eps);
+
+        let fast = bench(&format!("alg1 d={d}"), cfg, |_| {
+            black_box(lambda(black_box(&x), alpha, r));
+        });
+        // The naive quadratic scan becomes prohibitive at large d: cap it.
+        let naive = if d <= 10_000 {
+            Some(bench(&format!("naive d={d}"), cfg, |_| {
+                black_box(epsilon_norm_naive(black_box(&x), eps));
+            }))
+        } else {
+            None
+        };
+        let bisect = bench(&format!("bisect d={d}"), cfg, |_| {
+            black_box(lambda_bisect(black_box(&x), alpha, r, 1e-12));
+        });
+        let n_i = pruned_count(&x, alpha, r);
+        let naive_us = naive.as_ref().map(|b| b.times.median * 1e6);
+        println!(
+            "{:>8} {:>14.2} {:>14} {:>14.2} {:>8} {:>9.1}x",
+            d,
+            fast.times.median * 1e6,
+            naive_us.map(|v| format!("{v:.2}")).unwrap_or_else(|| "-".into()),
+            bisect.times.median * 1e6,
+            n_i,
+            naive_us.unwrap_or(bisect.times.median * 1e6) / (fast.times.median * 1e6)
+        );
+    }
+
+    // Adversarial case: near-uniform magnitudes defeat pruning (n_I ~ d).
+    println!("\nadversarial (all-equal coordinates, pruning inert):");
+    for &d in &[1_000usize, 100_000] {
+        let x: Vec<f64> = vec![1.0; d];
+        let eps = 0.9;
+        let (alpha, r) = (1.0 - eps, eps);
+        let fast = bench(&format!("alg1 flat d={d}"), cfg, |_| {
+            black_box(lambda(black_box(&x), alpha, r));
+        });
+        println!(
+            "  d={d:>7}: {:>10.2} us/eval, n_I={}",
+            fast.times.median * 1e6,
+            pruned_count(&x, alpha, r)
+        );
+    }
+}

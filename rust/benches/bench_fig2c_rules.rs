@@ -1,0 +1,63 @@
+//! Bench: Figure 2c — time to solve the synthetic λ-path to a prescribed
+//! duality gap, for every screening rule.
+//!
+//! Default scale is half the paper's feature count (p = 5000, T = 50) so
+//! `cargo bench` finishes in minutes; set `SGL_BENCH_SCALE=paper` for the
+//! full n=100, p=10000, T=100 instance of §7.1.
+//!
+//! Expected *shape* (paper Fig. 2c): at loose tolerances the rules tie;
+//! as the tolerance tightens, GAP safe pulls ahead of DST3/dynamic/static,
+//! with a multi-x gap over no-screening at 1e-8.
+
+use sgl::coordinator::jobs::RuleComparisonJob;
+use sgl::coordinator::report::render_rule_timings;
+use sgl::data::synthetic::SyntheticConfig;
+use sgl::experiments::fig2;
+
+fn main() {
+    let paper = std::env::var("SGL_BENCH_SCALE").as_deref() == Ok("paper");
+    let cfg = if paper {
+        SyntheticConfig::default() // n=100, p=10000, rho=0.5, g1=10, g2=4
+    } else {
+        SyntheticConfig {
+            n: 100,
+            n_groups: 500,
+            group_size: 10,
+            gamma1: 10,
+            gamma2: 4,
+            seed: 42,
+            ..Default::default()
+        }
+    };
+    let t_count = if paper { 100 } else { 50 };
+    let tau = 0.2;
+    println!(
+        "== bench_fig2c: synthetic path (n={}, p={}, T={t_count}, tau={tau}) ==",
+        cfg.n,
+        cfg.p()
+    );
+    println!("rules x tolerances, each = one full warm-started path\n");
+
+    let job = RuleComparisonJob {
+        tolerances: vec![1e-2, 1e-4, 1e-6, 1e-8],
+        delta: 3.0,
+        t_count,
+        ..Default::default()
+    };
+    // Serial (threads=1): timing-grade, no core contention.
+    let timings = fig2::rule_timings(&cfg, tau, &job, 1);
+    println!("{}", render_rule_timings(&timings));
+
+    // Machine-readable rows for EXPERIMENTS.md.
+    println!("rule,tol,seconds,epochs,converged");
+    for t in &timings {
+        println!(
+            "{},{:.0e},{:.4},{},{}",
+            t.rule.name(),
+            t.tol,
+            t.seconds,
+            t.total_epochs,
+            t.converged
+        );
+    }
+}

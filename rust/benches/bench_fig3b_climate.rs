@@ -1,0 +1,50 @@
+//! Bench: Figure 3b — time to solve the climate λ-path (δ = 2.5, τ★ = 0.4)
+//! to a prescribed duality gap, per screening rule, on the simulated
+//! NCEP/NCAR dataset (DESIGN.md §Substitutions).
+//!
+//! Default grid is 24x12 (p = 2016); `SGL_BENCH_SCALE=paper` uses the
+//! 37x18 default (p = 4662, n = 814) — the full simulated instance.
+
+use sgl::coordinator::jobs::RuleComparisonJob;
+use sgl::coordinator::report::render_rule_timings;
+use sgl::data::climate::ClimateConfig;
+use sgl::experiments::fig3;
+
+fn main() {
+    let paper = std::env::var("SGL_BENCH_SCALE").as_deref() == Ok("paper");
+    let cfg = if paper {
+        ClimateConfig::default()
+    } else {
+        ClimateConfig { grid_lon: 24, grid_lat: 12, n_months: 400, ..Default::default() }
+    };
+    let t_count = if paper { 100 } else { 50 };
+    println!(
+        "== bench_fig3b: simulated climate {}x{} grid, n={}, p={}, T={t_count} ==",
+        cfg.grid_lon,
+        cfg.grid_lat,
+        cfg.n_months,
+        cfg.p()
+    );
+    let data = fig3::prepared_data(&cfg);
+    let job = RuleComparisonJob {
+        tolerances: vec![1e-2, 1e-4, 1e-6, 1e-8],
+        delta: 2.5, // the paper's climate-path choice
+        t_count,
+        ..Default::default()
+    };
+    // Serial (threads=1): timing-grade, no core contention.
+    let timings = fig3::rule_timings(&data, 0.4, &job, 1);
+    println!("{}", render_rule_timings(&timings));
+
+    println!("rule,tol,seconds,epochs,converged");
+    for t in &timings {
+        println!(
+            "{},{:.0e},{:.4},{},{}",
+            t.rule.name(),
+            t.tol,
+            t.seconds,
+            t.total_epochs,
+            t.converged
+        );
+    }
+}

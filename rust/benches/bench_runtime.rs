@@ -1,0 +1,88 @@
+//! Bench: the PJRT runtime path — per-call latency of the two AOT
+//! artifacts and an end-to-end XLA-engine solve vs the native solver on
+//! the same problem. Skips (with a message) if `make artifacts` has not
+//! been run.
+
+use sgl::data::synthetic::{generate, SyntheticConfig};
+use sgl::runtime::engine::XlaEngine;
+use sgl::screening::RuleKind;
+use sgl::solver::cd::{solve, SolveOptions};
+use sgl::solver::problem::SglProblem;
+use sgl::util::timer::{bench, black_box, BenchConfig, Stopwatch};
+use std::path::PathBuf;
+
+fn main() {
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !dir.join("meta.toml").exists() {
+        println!("bench_runtime: artifacts not built (run `make artifacts`); skipping");
+        return;
+    }
+    println!("== bench_runtime: PJRT artifact execution ==\n");
+    let engine = XlaEngine::load(&dir).expect("load artifacts");
+    let meta = engine.meta.clone();
+    println!(
+        "artifact shape: n={} p={} ({} groups x {}), {} inner steps/call",
+        meta.n, meta.p, meta.n_groups, meta.group_size, meta.n_inner
+    );
+
+    let cfg = SyntheticConfig {
+        n: meta.n,
+        n_groups: meta.n_groups,
+        group_size: meta.group_size,
+        gamma1: 5.min(meta.n_groups),
+        gamma2: 4.min(meta.group_size),
+        seed: 42,
+        ..Default::default()
+    };
+    let d = generate(&cfg);
+    let pb = SglProblem::new(d.dataset.x, d.dataset.y, d.dataset.groups, 0.2);
+    let session = engine.session(&pb).expect("session");
+    let lambda = 0.2 * pb.lambda_max();
+    let bcfg = BenchConfig { warmup_iters: 2, iters: 15, max_seconds: 30.0 };
+
+    // Single-round latency: 1 screen + 1 epoch call (max_rounds=1 forces
+    // exactly one of each without convergence).
+    let r = bench("xla 1 round (screen + epoch call)", bcfg, |_| {
+        black_box(session.solve(lambda, 0.0, 1, None, true).unwrap());
+    });
+    println!("{r}");
+
+    // Full solve latency, screening on/off.
+    for (name, screening) in
+        [("xla solve 1e-8 (screen on)", true), ("xla solve 1e-8 (screen off)", false)]
+    {
+        let r = bench(name, bcfg, |_| {
+            black_box(session.solve(lambda, 1e-8, 5000, None, screening).unwrap());
+        });
+        println!("{r}");
+    }
+
+    // Native comparison on the identical problem.
+    let r = bench("native cd solve 1e-8 (gap_safe)", bcfg, |_| {
+        black_box(solve(
+            &pb,
+            lambda,
+            None,
+            &SolveOptions {
+                rule: RuleKind::GapSafe,
+                tol: 1e-8,
+                record_history: false,
+                ..Default::default()
+            },
+        ));
+    });
+    println!("{r}");
+
+    // Warm-started path through the engine (the e2e serving pattern).
+    let sw = Stopwatch::start();
+    let lambdas = SglProblem::lambda_grid(pb.lambda_max(), 2.0, 10);
+    let mut warm: Option<Vec<f64>> = None;
+    for &l in &lambdas {
+        let res = session.solve(l, 1e-8, 5000, warm.as_deref(), true).unwrap();
+        warm = Some(res.beta);
+    }
+    println!(
+        "xla warm path (10 lambdas to 1e-8):             {:>12.1} ms total",
+        sw.elapsed_ms()
+    );
+}

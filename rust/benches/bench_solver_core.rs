@@ -1,0 +1,95 @@
+//! Bench: solver hot paths in isolation — CD epoch cost vs active-set
+//! size, gap-evaluation (dual norm) cost, prox throughput, and the
+//! screening-application overhead. These are the quantities the §Perf
+//! iteration log in EXPERIMENTS.md tracks.
+
+use sgl::data::synthetic::{generate, SyntheticConfig};
+use sgl::norms::prox::sgl_prox_inplace;
+use sgl::screening::{apply_sphere, ActiveSet, RuleKind, Sphere};
+use sgl::solver::cd::{solve, SolveOptions};
+use sgl::solver::duality::DualSnapshot;
+use sgl::solver::problem::SglProblem;
+use sgl::util::rng::Pcg;
+use sgl::util::timer::{bench, black_box, BenchConfig};
+
+fn problem() -> SglProblem {
+    let cfg = SyntheticConfig {
+        n: 100,
+        n_groups: 500,
+        group_size: 10,
+        gamma1: 10,
+        gamma2: 4,
+        seed: 42,
+        ..Default::default()
+    };
+    let d = generate(&cfg);
+    SglProblem::new(d.dataset.x, d.dataset.y, d.dataset.groups, 0.2)
+}
+
+fn main() {
+    println!("== bench_solver_core (n=100, p=5000, 500 groups) ==\n");
+    let pb = problem();
+    let lambda = 0.1 * pb.lambda_max();
+    let cfg = BenchConfig { warmup_iters: 2, iters: 12, max_seconds: 30.0 };
+
+    // ---- full solves at two tolerances, with/without screening
+    for (name, rule, tol) in [
+        ("solve gap_safe 1e-6", RuleKind::GapSafe, 1e-6),
+        ("solve none     1e-6", RuleKind::None, 1e-6),
+        ("solve gap_safe 1e-8", RuleKind::GapSafe, 1e-8),
+        ("solve none     1e-8", RuleKind::None, 1e-8),
+    ] {
+        let opts = SolveOptions { rule, tol, record_history: false, ..Default::default() };
+        let r = bench(name, cfg, |_| {
+            black_box(solve(&pb, lambda, None, &opts));
+        });
+        println!("{r}");
+    }
+
+    // ---- gap evaluation (X^T rho + dual norm) on the full problem
+    let beta = vec![0.01; pb.p()];
+    let xb = pb.x.matvec(&beta);
+    let rho: Vec<f64> = pb.y.iter().zip(&xb).map(|(y, v)| y - v).collect();
+    let r = bench("dual snapshot (gap eval)", cfg, |_| {
+        black_box(DualSnapshot::compute(&pb, &beta, &rho, lambda));
+    });
+    println!("{r}");
+
+    // ---- screening application given a snapshot
+    let snap = DualSnapshot::compute(&pb, &beta, &rho, lambda);
+    let sphere = Sphere { xt_center: snap.xt_theta.clone(), radius: snap.radius };
+    let r = bench("apply_sphere (all groups)", cfg, |_| {
+        let mut active = ActiveSet::full(&pb.groups);
+        let mut b = beta.clone();
+        let mut rr = rho.clone();
+        black_box(apply_sphere(&pb, &sphere, &mut active, &mut b, &mut rr));
+    });
+    println!("{r}");
+
+    // ---- prox throughput
+    let mut rng = Pcg::seeded(1);
+    let mut blocks: Vec<Vec<f64>> = (0..500).map(|_| rng.normal_vec(10)).collect();
+    let r = bench("sgl_prox x500 groups of 10", cfg, |_| {
+        for b in blocks.iter_mut() {
+            sgl_prox_inplace(b, 0.1, 0.2);
+        }
+        black_box(&blocks);
+    });
+    println!("{r}");
+
+    // ---- matvec kernels
+    let v = rng.normal_vec(pb.p());
+    let mut out_n = vec![0.0; pb.n()];
+    let r = bench("X*v (dense matvec)", cfg, |_| {
+        pb.x.matvec_into(black_box(&v), &mut out_n);
+        black_box(&out_n);
+    });
+    println!("{r}");
+    let u = rng.normal_vec(pb.n());
+    let mut out_p = vec![0.0; pb.p()];
+    let r = bench("X^T*u (correlation)", cfg, |_| {
+        pb.x.tmatvec_into(black_box(&u), &mut out_p);
+        black_box(&out_p);
+    });
+    println!("{r}");
+}

@@ -1,0 +1,241 @@
+//! Run configuration: a TOML-subset parser (serde/toml are unavailable
+//! offline) plus typed experiment configs with validation.
+//!
+//! Supported TOML subset: `[section]` headers, `key = value` with string,
+//! float, integer, boolean and flat-array values, `#` comments. That covers
+//! every config this project ships (`configs/*.toml`).
+
+pub mod toml;
+
+use crate::screening::RuleKind;
+use anyhow::{bail, Context, Result};
+use std::path::Path;
+use toml::TomlDoc;
+
+/// Which dataset a run uses.
+#[derive(Clone, Debug, PartialEq)]
+pub enum DatasetChoice {
+    Synthetic,
+    Climate,
+    /// Load `X`/`y` from CSV files with a uniform group size.
+    Csv { x_path: String, y_path: String, group_size: usize },
+}
+
+/// A full solve/experiment configuration.
+#[derive(Clone, Debug)]
+pub struct RunConfig {
+    pub dataset: DatasetChoice,
+    pub tau: f64,
+    pub tol: f64,
+    pub fce: usize,
+    pub max_epochs: usize,
+    pub rule: RuleKind,
+    /// λ-path: `λ_t = λ_max 10^{-δt/(T-1)}`.
+    pub delta: f64,
+    pub t_count: usize,
+    pub seed: u64,
+    pub threads: usize,
+    /// Synthetic-dataset overrides.
+    pub synth_n: usize,
+    pub synth_groups: usize,
+    pub synth_group_size: usize,
+    pub synth_rho: f64,
+    pub synth_gamma1: usize,
+    pub synth_gamma2: usize,
+    /// Climate-dataset overrides.
+    pub climate_lon: usize,
+    pub climate_lat: usize,
+    pub climate_months: usize,
+}
+
+impl Default for RunConfig {
+    fn default() -> Self {
+        RunConfig {
+            dataset: DatasetChoice::Synthetic,
+            tau: 0.2,
+            tol: 1e-8,
+            fce: 10,
+            max_epochs: 20_000,
+            rule: RuleKind::GapSafe,
+            delta: 3.0,
+            t_count: 100,
+            seed: 42,
+            threads: 0, // 0 = auto
+            synth_n: 100,
+            synth_groups: 1000,
+            synth_group_size: 10,
+            synth_rho: 0.5,
+            synth_gamma1: 10,
+            synth_gamma2: 4,
+            climate_lon: 37,
+            climate_lat: 18,
+            climate_months: 814,
+        }
+    }
+}
+
+impl RunConfig {
+    /// Parse from TOML text.
+    pub fn from_toml_str(text: &str) -> Result<Self> {
+        let doc = TomlDoc::parse(text)?;
+        let mut cfg = RunConfig::default();
+        if let Some(name) = doc.get_str("dataset", "kind") {
+            cfg.dataset = match name.as_str() {
+                "synthetic" => DatasetChoice::Synthetic,
+                "climate" => DatasetChoice::Climate,
+                "csv" => DatasetChoice::Csv {
+                    x_path: doc
+                        .get_str("dataset", "x_path")
+                        .context("csv dataset requires dataset.x_path")?,
+                    y_path: doc
+                        .get_str("dataset", "y_path")
+                        .context("csv dataset requires dataset.y_path")?,
+                    group_size: doc.get_int("dataset", "group_size").unwrap_or(1) as usize,
+                },
+                other => bail!("unknown dataset kind {other:?}"),
+            };
+        }
+        macro_rules! take {
+            ($field:ident, $sect:expr, $key:expr, f64) => {
+                if let Some(v) = doc.get_f64($sect, $key) {
+                    cfg.$field = v;
+                }
+            };
+            ($field:ident, $sect:expr, $key:expr, usize) => {
+                if let Some(v) = doc.get_int($sect, $key) {
+                    cfg.$field = v as usize;
+                }
+            };
+            ($field:ident, $sect:expr, $key:expr, u64) => {
+                if let Some(v) = doc.get_int($sect, $key) {
+                    cfg.$field = v as u64;
+                }
+            };
+        }
+        take!(tau, "solver", "tau", f64);
+        take!(tol, "solver", "tol", f64);
+        take!(fce, "solver", "fce", usize);
+        take!(max_epochs, "solver", "max_epochs", usize);
+        take!(delta, "path", "delta", f64);
+        take!(t_count, "path", "t_count", usize);
+        take!(seed, "run", "seed", u64);
+        take!(threads, "run", "threads", usize);
+        take!(synth_n, "synthetic", "n", usize);
+        take!(synth_groups, "synthetic", "n_groups", usize);
+        take!(synth_group_size, "synthetic", "group_size", usize);
+        take!(synth_rho, "synthetic", "rho", f64);
+        take!(synth_gamma1, "synthetic", "gamma1", usize);
+        take!(synth_gamma2, "synthetic", "gamma2", usize);
+        take!(climate_lon, "climate", "grid_lon", usize);
+        take!(climate_lat, "climate", "grid_lat", usize);
+        take!(climate_months, "climate", "n_months", usize);
+        if let Some(rule) = doc.get_str("solver", "rule") {
+            cfg.rule = RuleKind::from_name(&rule)
+                .with_context(|| format!("unknown screening rule {rule:?}"))?;
+        }
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    pub fn from_file(path: &Path) -> Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading config {}", path.display()))?;
+        Self::from_toml_str(&text)
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if !(0.0..=1.0).contains(&self.tau) {
+            bail!("tau must be in [0, 1], got {}", self.tau);
+        }
+        if self.tol <= 0.0 {
+            bail!("tol must be positive");
+        }
+        if self.fce == 0 {
+            bail!("fce must be >= 1");
+        }
+        if self.t_count == 0 {
+            bail!("t_count must be >= 1");
+        }
+        if self.delta < 0.0 {
+            bail!("delta must be nonnegative");
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_are_paper_defaults() {
+        let c = RunConfig::default();
+        assert_eq!(c.fce, 10);
+        assert_eq!(c.t_count, 100);
+        assert_eq!(c.delta, 3.0);
+        assert_eq!(c.rule, RuleKind::GapSafe);
+        c.validate().unwrap();
+    }
+
+    #[test]
+    fn parses_full_config() {
+        let text = r#"
+# experiment config
+[dataset]
+kind = "synthetic"
+
+[solver]
+tau = 0.4
+tol = 1e-6
+rule = "dst3"
+fce = 5
+
+[path]
+delta = 2.5
+t_count = 50
+
+[run]
+seed = 7
+threads = 4
+
+[synthetic]
+n = 50
+n_groups = 20
+group_size = 5
+rho = 0.9
+"#;
+        let c = RunConfig::from_toml_str(text).unwrap();
+        assert_eq!(c.tau, 0.4);
+        assert_eq!(c.tol, 1e-6);
+        assert_eq!(c.rule, RuleKind::Dst3);
+        assert_eq!(c.fce, 5);
+        assert_eq!(c.delta, 2.5);
+        assert_eq!(c.t_count, 50);
+        assert_eq!(c.seed, 7);
+        assert_eq!(c.synth_n, 50);
+        assert_eq!(c.synth_rho, 0.9);
+    }
+
+    #[test]
+    fn csv_dataset_requires_paths() {
+        let text = "[dataset]\nkind = \"csv\"\n";
+        assert!(RunConfig::from_toml_str(text).is_err());
+        let ok = "[dataset]\nkind = \"csv\"\nx_path = \"x.csv\"\ny_path = \"y.csv\"\ngroup_size = 3\n";
+        let c = RunConfig::from_toml_str(ok).unwrap();
+        assert_eq!(
+            c.dataset,
+            DatasetChoice::Csv {
+                x_path: "x.csv".into(),
+                y_path: "y.csv".into(),
+                group_size: 3
+            }
+        );
+    }
+
+    #[test]
+    fn invalid_values_rejected() {
+        assert!(RunConfig::from_toml_str("[solver]\ntau = 1.5\n").is_err());
+        assert!(RunConfig::from_toml_str("[solver]\nrule = \"magic\"\n").is_err());
+        assert!(RunConfig::from_toml_str("[solver]\ntol = -1.0\n").is_err());
+    }
+}

@@ -1,0 +1,213 @@
+//! TOML-subset parser: `[section]`, `key = value` (string / float / int /
+//! bool / flat array), `#` comments. Enough for `configs/*.toml`; anything
+//! fancier is a parse error, never a silent misread.
+
+use anyhow::{bail, Result};
+use std::collections::BTreeMap;
+
+/// A parsed scalar value.
+#[derive(Clone, Debug, PartialEq)]
+pub enum TomlValue {
+    Str(String),
+    Float(f64),
+    Int(i64),
+    Bool(bool),
+    Array(Vec<TomlValue>),
+}
+
+/// A parsed document: `(section, key) -> value`. Keys before any section
+/// header live in section `""`.
+#[derive(Clone, Debug, Default)]
+pub struct TomlDoc {
+    entries: BTreeMap<(String, String), TomlValue>,
+}
+
+impl TomlDoc {
+    pub fn parse(text: &str) -> Result<TomlDoc> {
+        let mut doc = TomlDoc::default();
+        let mut section = String::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = strip_comment(raw).trim().to_string();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(inner) = line.strip_prefix('[') {
+                let Some(name) = inner.strip_suffix(']') else {
+                    bail!("line {}: malformed section header {raw:?}", lineno + 1);
+                };
+                section = name.trim().to_string();
+                continue;
+            }
+            let Some((key, val)) = line.split_once('=') else {
+                bail!("line {}: expected key = value, got {raw:?}", lineno + 1);
+            };
+            let key = key.trim().to_string();
+            if key.is_empty() {
+                bail!("line {}: empty key", lineno + 1);
+            }
+            let value = parse_value(val.trim())
+                .map_err(|e| anyhow::anyhow!("line {}: {e}", lineno + 1))?;
+            doc.entries.insert((section.clone(), key), value);
+        }
+        Ok(doc)
+    }
+
+    pub fn get(&self, section: &str, key: &str) -> Option<&TomlValue> {
+        self.entries.get(&(section.to_string(), key.to_string()))
+    }
+
+    pub fn get_str(&self, section: &str, key: &str) -> Option<String> {
+        match self.get(section, key) {
+            Some(TomlValue::Str(s)) => Some(s.clone()),
+            _ => None,
+        }
+    }
+
+    pub fn get_f64(&self, section: &str, key: &str) -> Option<f64> {
+        match self.get(section, key) {
+            Some(TomlValue::Float(v)) => Some(*v),
+            Some(TomlValue::Int(v)) => Some(*v as f64),
+            _ => None,
+        }
+    }
+
+    pub fn get_int(&self, section: &str, key: &str) -> Option<i64> {
+        match self.get(section, key) {
+            Some(TomlValue::Int(v)) => Some(*v),
+            _ => None,
+        }
+    }
+
+    pub fn get_bool(&self, section: &str, key: &str) -> Option<bool> {
+        match self.get(section, key) {
+            Some(TomlValue::Bool(v)) => Some(*v),
+            _ => None,
+        }
+    }
+
+    pub fn get_f64_array(&self, section: &str, key: &str) -> Option<Vec<f64>> {
+        match self.get(section, key) {
+            Some(TomlValue::Array(items)) => items
+                .iter()
+                .map(|v| match v {
+                    TomlValue::Float(f) => Some(*f),
+                    TomlValue::Int(i) => Some(*i as f64),
+                    _ => None,
+                })
+                .collect(),
+            _ => None,
+        }
+    }
+}
+
+fn strip_comment(line: &str) -> &str {
+    // '#' starts a comment unless inside a quoted string.
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(tok: &str) -> Result<TomlValue> {
+    if tok.is_empty() {
+        bail!("empty value");
+    }
+    if let Some(inner) = tok.strip_prefix('"') {
+        let Some(s) = inner.strip_suffix('"') else {
+            bail!("unterminated string {tok:?}");
+        };
+        return Ok(TomlValue::Str(s.to_string()));
+    }
+    if tok == "true" {
+        return Ok(TomlValue::Bool(true));
+    }
+    if tok == "false" {
+        return Ok(TomlValue::Bool(false));
+    }
+    if let Some(inner) = tok.strip_prefix('[') {
+        let Some(body) = inner.strip_suffix(']') else {
+            bail!("unterminated array {tok:?}");
+        };
+        let body = body.trim();
+        if body.is_empty() {
+            return Ok(TomlValue::Array(vec![]));
+        }
+        let items: Result<Vec<TomlValue>> =
+            body.split(',').map(|t| parse_value(t.trim())).collect();
+        return Ok(TomlValue::Array(items?));
+    }
+    // Integer first (no '.', 'e', 'E'), then float.
+    if !tok.contains(['.', 'e', 'E']) {
+        if let Ok(i) = tok.parse::<i64>() {
+            return Ok(TomlValue::Int(i));
+        }
+    }
+    if let Ok(f) = tok.parse::<f64>() {
+        return Ok(TomlValue::Float(f));
+    }
+    bail!("cannot parse value {tok:?}")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_sections_and_types() {
+        let doc = TomlDoc::parse(
+            r#"
+top = 1
+[a]
+s = "hello"   # trailing comment
+f = 2.5
+i = -3
+b = true
+arr = [1, 2.5, 3]
+[b]
+e = 1e-8
+"#,
+        )
+        .unwrap();
+        assert_eq!(doc.get_int("", "top"), Some(1));
+        assert_eq!(doc.get_str("a", "s"), Some("hello".into()));
+        assert_eq!(doc.get_f64("a", "f"), Some(2.5));
+        assert_eq!(doc.get_int("a", "i"), Some(-3));
+        assert_eq!(doc.get_bool("a", "b"), Some(true));
+        assert_eq!(doc.get_f64_array("a", "arr"), Some(vec![1.0, 2.5, 3.0]));
+        assert_eq!(doc.get_f64("b", "e"), Some(1e-8));
+    }
+
+    #[test]
+    fn int_coerces_to_f64_not_reverse() {
+        let doc = TomlDoc::parse("x = 2\ny = 2.0\n").unwrap();
+        assert_eq!(doc.get_f64("", "x"), Some(2.0));
+        assert_eq!(doc.get_int("", "y"), None);
+    }
+
+    #[test]
+    fn hash_inside_string_is_kept() {
+        let doc = TomlDoc::parse("s = \"a#b\"\n").unwrap();
+        assert_eq!(doc.get_str("", "s"), Some("a#b".into()));
+    }
+
+    #[test]
+    fn malformed_lines_error() {
+        assert!(TomlDoc::parse("[oops\n").is_err());
+        assert!(TomlDoc::parse("just words\n").is_err());
+        assert!(TomlDoc::parse("k = \"unterminated\n").is_err());
+        assert!(TomlDoc::parse("k = [1, 2\n").is_err());
+        assert!(TomlDoc::parse("k = zzz\n").is_err());
+    }
+
+    #[test]
+    fn missing_keys_are_none() {
+        let doc = TomlDoc::parse("[a]\nx = 1\n").unwrap();
+        assert!(doc.get("b", "x").is_none());
+        assert!(doc.get_str("a", "x").is_none()); // wrong type
+    }
+}

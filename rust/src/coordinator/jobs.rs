@@ -1,0 +1,184 @@
+//! Solve-job orchestration: fan path solves and screening-rule comparisons
+//! across worker threads. This is the L3 "service" surface the experiment
+//! drivers and the CLI sit on.
+
+use super::metrics::Metrics;
+use crate::screening::RuleKind;
+use crate::solver::cd::SolveOptions;
+use crate::solver::path::{solve_path_on_grid, PathOptions, PathResult};
+use crate::solver::problem::SglProblem;
+use crate::util::pool::parallel_map_slice;
+use std::sync::Arc;
+
+/// A rule-comparison job: one full λ-path per screening rule at a given
+/// target accuracy (the unit of work behind Fig. 2c / 3b).
+#[derive(Clone, Debug)]
+pub struct RuleComparisonJob {
+    pub rules: Vec<RuleKind>,
+    pub tolerances: Vec<f64>,
+    pub delta: f64,
+    pub t_count: usize,
+    pub fce: usize,
+    pub max_epochs: usize,
+}
+
+impl Default for RuleComparisonJob {
+    fn default() -> Self {
+        RuleComparisonJob {
+            rules: RuleKind::all().to_vec(),
+            tolerances: vec![1e-2, 1e-4, 1e-6, 1e-8],
+            delta: 3.0,
+            t_count: 100,
+            fce: 10,
+            max_epochs: 20_000,
+        }
+    }
+}
+
+/// One (rule, tolerance) measurement.
+#[derive(Clone, Debug)]
+pub struct RuleTiming {
+    pub rule: RuleKind,
+    pub tol: f64,
+    pub seconds: f64,
+    pub total_epochs: usize,
+    pub converged: bool,
+}
+
+/// Run the comparison: each (rule, tol) pair solves the whole warm-started
+/// path on its own worker. Returns results in (tol-major, rule-minor) order.
+pub fn run_rule_comparison(
+    pb: &SglProblem,
+    job: &RuleComparisonJob,
+    threads: usize,
+    metrics: Option<Arc<Metrics>>,
+) -> Vec<RuleTiming> {
+    let lambda_max = pb.lambda_max();
+    let lambdas = SglProblem::lambda_grid(lambda_max, job.delta, job.t_count);
+    let mut cases: Vec<(RuleKind, f64)> = Vec::new();
+    for &tol in &job.tolerances {
+        for &rule in &job.rules {
+            cases.push((rule, tol));
+        }
+    }
+    parallel_map_slice(&cases, threads, |&(rule, tol)| {
+        let opts = PathOptions {
+            delta: job.delta,
+            t_count: job.t_count,
+            solve: SolveOptions {
+                tol,
+                fce: job.fce,
+                max_epochs: job.max_epochs,
+                rule,
+                record_history: false,
+            },
+        };
+        let path: PathResult = solve_path_on_grid(pb, &lambdas, &opts);
+        if let Some(m) = &metrics {
+            m.incr("paths_solved", 1);
+            m.incr("epochs_total", path.total_epochs() as u64);
+        }
+        RuleTiming {
+            rule,
+            tol,
+            seconds: path.total_s,
+            total_epochs: path.total_epochs(),
+            converged: path.all_converged(),
+        }
+    })
+}
+
+/// A whole-path job with per-check history (Fig. 2a/2b data).
+#[derive(Clone, Debug)]
+pub struct PathJob {
+    pub rule: RuleKind,
+    pub delta: f64,
+    pub t_count: usize,
+    pub tol: f64,
+    pub fce: usize,
+    pub max_epochs: usize,
+}
+
+impl Default for PathJob {
+    fn default() -> Self {
+        PathJob {
+            rule: RuleKind::GapSafe,
+            delta: 3.0,
+            t_count: 100,
+            tol: 1e-8,
+            fce: 10,
+            max_epochs: 20_000,
+        }
+    }
+}
+
+pub fn run_path(pb: &SglProblem, job: &PathJob) -> PathResult {
+    let opts = PathOptions {
+        delta: job.delta,
+        t_count: job.t_count,
+        solve: SolveOptions {
+            tol: job.tol,
+            fce: job.fce,
+            max_epochs: job.max_epochs,
+            rule: job.rule,
+            record_history: true,
+        },
+    };
+    crate::solver::path::solve_path(pb, &opts)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::{generate, SyntheticConfig};
+
+    fn small_problem() -> SglProblem {
+        let cfg = SyntheticConfig {
+            n: 40,
+            n_groups: 12,
+            group_size: 4,
+            gamma1: 3,
+            gamma2: 2,
+            seed: 5,
+            ..Default::default()
+        };
+        let d = generate(&cfg);
+        SglProblem::new(d.dataset.x, d.dataset.y, d.dataset.groups, 0.3)
+    }
+
+    #[test]
+    fn comparison_runs_all_cases() {
+        let pb = small_problem();
+        let job = RuleComparisonJob {
+            rules: vec![RuleKind::None, RuleKind::GapSafe],
+            tolerances: vec![1e-4, 1e-6],
+            t_count: 8,
+            delta: 2.0,
+            ..Default::default()
+        };
+        let metrics = Arc::new(Metrics::new());
+        let out = run_rule_comparison(&pb, &job, 2, Some(metrics.clone()));
+        assert_eq!(out.len(), 4);
+        assert!(out.iter().all(|t| t.converged));
+        assert_eq!(metrics.counter("paths_solved"), 4);
+        // GAP safe should use no more epochs than no-screening at 1e-6.
+        let gap = out
+            .iter()
+            .find(|t| t.rule == RuleKind::GapSafe && t.tol == 1e-6)
+            .unwrap();
+        let none = out
+            .iter()
+            .find(|t| t.rule == RuleKind::None && t.tol == 1e-6)
+            .unwrap();
+        assert!(gap.total_epochs <= none.total_epochs);
+    }
+
+    #[test]
+    fn path_job_records_history() {
+        let pb = small_problem();
+        let job = PathJob { t_count: 5, delta: 2.0, ..Default::default() };
+        let res = run_path(&pb, &job);
+        assert_eq!(res.results.len(), 5);
+        assert!(res.results.iter().all(|r| !r.history.is_empty()));
+    }
+}

@@ -1,0 +1,119 @@
+//! Lightweight metrics registry for the solver service: thread-safe
+//! counters and gauges, rendered to text or JSON for run reports.
+
+use crate::util::json::Json;
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+/// Process-wide metrics for a coordinator run.
+#[derive(Default)]
+pub struct Metrics {
+    counters: Mutex<BTreeMap<String, AtomicU64>>,
+    gauges: Mutex<BTreeMap<String, f64>>,
+}
+
+impl Metrics {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Increment a named counter by `delta`.
+    pub fn incr(&self, name: &str, delta: u64) {
+        let mut map = self.counters.lock().unwrap();
+        map.entry(name.to_string())
+            .or_insert_with(|| AtomicU64::new(0))
+            .fetch_add(delta, Ordering::Relaxed);
+    }
+
+    /// Set a named gauge.
+    pub fn set(&self, name: &str, value: f64) {
+        self.gauges.lock().unwrap().insert(name.to_string(), value);
+    }
+
+    pub fn counter(&self, name: &str) -> u64 {
+        self.counters
+            .lock()
+            .unwrap()
+            .get(name)
+            .map(|c| c.load(Ordering::Relaxed))
+            .unwrap_or(0)
+    }
+
+    pub fn gauge(&self, name: &str) -> Option<f64> {
+        self.gauges.lock().unwrap().get(name).copied()
+    }
+
+    /// Render all metrics as JSON.
+    pub fn to_json(&self) -> Json {
+        let mut obj = Json::obj();
+        for (k, v) in self.counters.lock().unwrap().iter() {
+            obj = obj.with(k, v.load(Ordering::Relaxed) as f64);
+        }
+        for (k, v) in self.gauges.lock().unwrap().iter() {
+            obj = obj.with(k, *v);
+        }
+        obj
+    }
+
+    /// Render as `key value` lines (sorted).
+    pub fn render_text(&self) -> String {
+        let mut out = String::new();
+        for (k, v) in self.counters.lock().unwrap().iter() {
+            out.push_str(&format!("{k} {}\n", v.load(Ordering::Relaxed)));
+        }
+        for (k, v) in self.gauges.lock().unwrap().iter() {
+            out.push_str(&format!("{k} {v}\n"));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_accumulate() {
+        let m = Metrics::new();
+        m.incr("solves", 1);
+        m.incr("solves", 2);
+        assert_eq!(m.counter("solves"), 3);
+        assert_eq!(m.counter("missing"), 0);
+    }
+
+    #[test]
+    fn gauges_overwrite() {
+        let m = Metrics::new();
+        m.set("gap", 1e-3);
+        m.set("gap", 1e-8);
+        assert_eq!(m.gauge("gap"), Some(1e-8));
+    }
+
+    #[test]
+    fn renders() {
+        let m = Metrics::new();
+        m.incr("a", 1);
+        m.set("b", 2.5);
+        let text = m.render_text();
+        assert!(text.contains("a 1"));
+        assert!(text.contains("b 2.5"));
+        assert!(m.to_json().dump().contains("\"a\":1"));
+    }
+
+    #[test]
+    fn thread_safe() {
+        let m = std::sync::Arc::new(Metrics::new());
+        std::thread::scope(|s| {
+            for _ in 0..4 {
+                let m = m.clone();
+                s.spawn(move || {
+                    for _ in 0..1000 {
+                        m.incr("n", 1);
+                    }
+                });
+            }
+        });
+        assert_eq!(m.counter("n"), 4000);
+    }
+}

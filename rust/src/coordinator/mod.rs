@@ -1,0 +1,6 @@
+//! L3 coordination: job scheduling across worker threads, metrics, and
+//! figure-series reporting.
+
+pub mod jobs;
+pub mod metrics;
+pub mod report;

@@ -1,0 +1,163 @@
+//! Figure-series reporting: CSV emitters and terminal-friendly markdown /
+//! ASCII renderings of the paper's figures.
+
+use super::jobs::RuleTiming;
+use crate::data::csvio::write_csv;
+use anyhow::Result;
+use std::path::Path;
+
+/// Write the Fig. 2c / 3b series: `rule, tol, seconds, epochs`.
+pub fn write_rule_timings(path: &Path, timings: &[RuleTiming]) -> Result<()> {
+    let rows: Vec<Vec<f64>> = timings
+        .iter()
+        .map(|t| {
+            vec![
+                rule_index(t) as f64,
+                t.tol,
+                t.seconds,
+                t.total_epochs as f64,
+                if t.converged { 1.0 } else { 0.0 },
+            ]
+        })
+        .collect();
+    write_csv(path, &["rule_id", "tol", "seconds", "epochs", "converged"], &rows)
+}
+
+fn rule_index(t: &RuleTiming) -> usize {
+    crate::screening::RuleKind::all().iter().position(|&r| r == t.rule).unwrap_or(99)
+}
+
+/// Markdown table of rule timings grouped by tolerance, with the speed-up
+/// of GAP safe over each baseline (the paper's headline numbers).
+pub fn render_rule_timings(timings: &[RuleTiming]) -> String {
+    use crate::screening::RuleKind;
+    let mut out = String::new();
+    let mut tols: Vec<f64> = timings.iter().map(|t| t.tol).collect();
+    tols.sort_by(|a, b| b.partial_cmp(a).unwrap());
+    tols.dedup();
+    out.push_str("| tol | ");
+    for r in RuleKind::all() {
+        out.push_str(&format!("{} (s) | ", r.name()));
+    }
+    out.push_str("speedup vs none |\n|---|");
+    for _ in RuleKind::all() {
+        out.push_str("---|");
+    }
+    out.push_str("---|\n");
+    for &tol in &tols {
+        out.push_str(&format!("| {tol:.0e} | "));
+        let mut none_s = None;
+        let mut gap_s = None;
+        for r in RuleKind::all() {
+            if let Some(t) = timings.iter().find(|t| t.tol == tol && t.rule == r) {
+                out.push_str(&format!("{:.3} | ", t.seconds));
+                if r == RuleKind::None {
+                    none_s = Some(t.seconds);
+                }
+                if r == RuleKind::GapSafe {
+                    gap_s = Some(t.seconds);
+                }
+            } else {
+                out.push_str("- | ");
+            }
+        }
+        match (none_s, gap_s) {
+            (Some(n), Some(g)) if g > 0.0 => out.push_str(&format!("{:.2}x |\n", n / g)),
+            _ => out.push_str("- |\n"),
+        }
+    }
+    out
+}
+
+/// ASCII heat map for Fig. 4: per-location values rendered on the grid.
+/// `values` is indexed by location (lat-major like `data::climate`), and
+/// `target` marks the prediction cell.
+pub fn render_support_map(
+    values: &[f64],
+    grid_lon: usize,
+    grid_lat: usize,
+    target: usize,
+) -> String {
+    let vmax = values.iter().cloned().fold(0.0_f64, f64::max).max(1e-300);
+    let shades = [' ', '.', ':', '-', '=', '+', '*', '#', '%', '@'];
+    let mut out = String::new();
+    for lat in 0..grid_lat {
+        for lon in 0..grid_lon {
+            let loc = lat * grid_lon + lon;
+            if loc == target {
+                out.push('X');
+                continue;
+            }
+            let v = values[loc] / vmax;
+            let idx = ((v * (shades.len() - 1) as f64).round() as usize).min(shades.len() - 1);
+            out.push(shades[idx]);
+        }
+        out.push('\n');
+    }
+    out
+}
+
+/// CSV for Fig. 4: `lon, lat, value, is_target`.
+pub fn write_support_map(
+    path: &Path,
+    values: &[f64],
+    grid_lon: usize,
+    grid_lat: usize,
+    target: usize,
+) -> Result<()> {
+    let mut rows = Vec::with_capacity(values.len());
+    for lat in 0..grid_lat {
+        for lon in 0..grid_lon {
+            let loc = lat * grid_lon + lon;
+            rows.push(vec![
+                lon as f64,
+                lat as f64,
+                values[loc],
+                if loc == target { 1.0 } else { 0.0 },
+            ]);
+        }
+    }
+    write_csv(path, &["lon", "lat", "value", "is_target"], &rows)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::screening::RuleKind;
+
+    fn timing(rule: RuleKind, tol: f64, s: f64) -> RuleTiming {
+        RuleTiming { rule, tol, seconds: s, total_epochs: 100, converged: true }
+    }
+
+    #[test]
+    fn markdown_table_has_speedup() {
+        let timings = vec![
+            timing(RuleKind::None, 1e-8, 2.0),
+            timing(RuleKind::GapSafe, 1e-8, 0.5),
+        ];
+        let md = render_rule_timings(&timings);
+        assert!(md.contains("4.00x"), "{md}");
+        assert!(md.contains("1e-8"));
+    }
+
+    #[test]
+    fn support_map_marks_target_and_peaks() {
+        let mut values = vec![0.0; 12];
+        values[5] = 1.0;
+        let map = render_support_map(&values, 4, 3, 0);
+        let lines: Vec<&str> = map.lines().collect();
+        assert_eq!(lines.len(), 3);
+        assert_eq!(&lines[0][0..1], "X");
+        assert_eq!(&lines[1][1..2], "@"); // loc 5 = lat1,lon1
+    }
+
+    #[test]
+    fn csv_writers_work() {
+        let dir = std::env::temp_dir().join(format!("sgl-report-{}", std::process::id()));
+        let timings = vec![timing(RuleKind::Static, 1e-4, 1.0)];
+        write_rule_timings(&dir.join("t.csv"), &timings).unwrap();
+        write_support_map(&dir.join("m.csv"), &[0.0, 1.0], 2, 1, 0).unwrap();
+        assert!(dir.join("t.csv").exists());
+        assert!(std::fs::read_to_string(dir.join("m.csv")).unwrap().contains("is_target"));
+    }
+}

@@ -1,0 +1,134 @@
+//! Minimal CSV I/O for experiment outputs (figure series) and dataset
+//! round-trips.
+
+use crate::linalg::Matrix;
+use anyhow::{bail, Context, Result};
+use std::io::Write;
+use std::path::Path;
+
+/// Write a table: header + rows, comma-separated.
+pub fn write_csv(path: &Path, header: &[&str], rows: &[Vec<f64>]) -> Result<()> {
+    if let Some(parent) = path.parent() {
+        std::fs::create_dir_all(parent).ok();
+    }
+    let mut f = std::fs::File::create(path)
+        .with_context(|| format!("creating {}", path.display()))?;
+    writeln!(f, "{}", header.join(","))?;
+    for row in rows {
+        if row.len() != header.len() {
+            bail!("row width {} != header width {}", row.len(), header.len());
+        }
+        let line: Vec<String> = row.iter().map(|v| format!("{v}")).collect();
+        writeln!(f, "{}", line.join(","))?;
+    }
+    Ok(())
+}
+
+/// Write a matrix (row-major) with no header.
+pub fn write_matrix_csv(path: &Path, m: &Matrix) -> Result<()> {
+    if let Some(parent) = path.parent() {
+        std::fs::create_dir_all(parent).ok();
+    }
+    let mut f = std::fs::File::create(path)?;
+    for i in 0..m.n_rows() {
+        let row: Vec<String> = (0..m.n_cols()).map(|j| format!("{}", m.get(i, j))).collect();
+        writeln!(f, "{}", row.join(","))?;
+    }
+    Ok(())
+}
+
+/// Read a headerless numeric CSV into a matrix.
+pub fn read_matrix_csv(path: &Path) -> Result<Matrix> {
+    let text = std::fs::read_to_string(path)
+        .with_context(|| format!("reading {}", path.display()))?;
+    let mut rows: Vec<Vec<f64>> = Vec::new();
+    for (lineno, line) in text.lines().enumerate() {
+        let line = line.trim();
+        if line.is_empty() {
+            continue;
+        }
+        let row: Result<Vec<f64>, _> =
+            line.split(',').map(|tok| tok.trim().parse::<f64>()).collect();
+        let row = row.with_context(|| format!("line {}", lineno + 1))?;
+        if let Some(first) = rows.first() {
+            if row.len() != first.len() {
+                bail!("ragged CSV at line {}", lineno + 1);
+            }
+        }
+        rows.push(row);
+    }
+    if rows.is_empty() {
+        bail!("empty CSV {}", path.display());
+    }
+    let n_rows = rows.len();
+    let n_cols = rows[0].len();
+    let flat: Vec<f64> = rows.into_iter().flatten().collect();
+    Ok(Matrix::from_row_major(&flat, n_rows, n_cols))
+}
+
+/// Write a single numeric vector, one value per line.
+pub fn write_vector(path: &Path, v: &[f64]) -> Result<()> {
+    if let Some(parent) = path.parent() {
+        std::fs::create_dir_all(parent).ok();
+    }
+    let mut f = std::fs::File::create(path)?;
+    for x in v {
+        writeln!(f, "{x}")?;
+    }
+    Ok(())
+}
+
+/// Read a single numeric vector.
+pub fn read_vector(path: &Path) -> Result<Vec<f64>> {
+    let text = std::fs::read_to_string(path)?;
+    text.lines()
+        .map(str::trim)
+        .filter(|l| !l.is_empty())
+        .map(|l| l.parse::<f64>().map_err(|e| anyhow::anyhow!("{e}: {l:?}")))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmpdir() -> std::path::PathBuf {
+        let d = std::env::temp_dir().join(format!("sgl-csv-test-{}", std::process::id()));
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    #[test]
+    fn matrix_round_trip() {
+        let path = tmpdir().join("m.csv");
+        let m = Matrix::from_row_major(&[1.0, 2.5, -3.0, 4.0], 2, 2);
+        write_matrix_csv(&path, &m).unwrap();
+        let back = read_matrix_csv(&path).unwrap();
+        assert_eq!(m, back);
+    }
+
+    #[test]
+    fn vector_round_trip() {
+        let path = tmpdir().join("v.csv");
+        let v = vec![1.0, -2.0, 3.5];
+        write_vector(&path, &v).unwrap();
+        assert_eq!(read_vector(&path).unwrap(), v);
+    }
+
+    #[test]
+    fn table_header_checked() {
+        let path = tmpdir().join("t.csv");
+        let err = write_csv(&path, &["a", "b"], &[vec![1.0]]);
+        assert!(err.is_err());
+        write_csv(&path, &["a", "b"], &[vec![1.0, 2.0]]).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert!(text.starts_with("a,b\n"));
+    }
+
+    #[test]
+    fn ragged_csv_rejected() {
+        let path = tmpdir().join("ragged.csv");
+        std::fs::write(&path, "1,2\n3\n").unwrap();
+        assert!(read_matrix_csv(&path).is_err());
+    }
+}

@@ -1,0 +1,150 @@
+//! Dataset substrate: generation (synthetic §7.1 and simulated-climate),
+//! standardization, and CSV I/O.
+
+pub mod climate;
+pub mod csvio;
+pub mod synthetic;
+
+use crate::linalg::Matrix;
+use crate::solver::groups::Groups;
+
+/// A regression dataset with group structure.
+#[derive(Clone, Debug)]
+pub struct Dataset {
+    pub name: String,
+    pub x: Matrix,
+    pub y: Vec<f64>,
+    pub groups: Groups,
+}
+
+impl Dataset {
+    pub fn n(&self) -> usize {
+        self.x.n_rows()
+    }
+
+    pub fn p(&self) -> usize {
+        self.x.n_cols()
+    }
+
+    /// Center y and center + unit-norm-scale every column of X (columns
+    /// with zero variance are left at zero). Standard preprocessing for
+    /// penalized regression: makes `‖X_j‖ = 1` so feature-level screening
+    /// tests are scale-free.
+    pub fn standardize(&mut self) {
+        let n = self.n();
+        if n == 0 {
+            return;
+        }
+        let y_mean = self.y.iter().sum::<f64>() / n as f64;
+        for v in self.y.iter_mut() {
+            *v -= y_mean;
+        }
+        for j in 0..self.p() {
+            let col = self.x.col_mut(j);
+            let mean = col.iter().sum::<f64>() / n as f64;
+            for v in col.iter_mut() {
+                *v -= mean;
+            }
+            let norm = col.iter().map(|v| v * v).sum::<f64>().sqrt();
+            if norm > 0.0 {
+                for v in col.iter_mut() {
+                    *v /= norm;
+                }
+            }
+        }
+    }
+
+    /// Regress out a set of deterministic covariates (columns of `z`) from
+    /// both `X` and `y` — used by the climate pipeline to remove
+    /// seasonality and trend, as the paper's preprocessing does.
+    pub fn remove_covariates(&mut self, z: &Matrix) {
+        assert_eq!(z.n_rows(), self.n());
+        // Orthonormalize z by modified Gram-Schmidt.
+        let mut basis: Vec<Vec<f64>> = Vec::new();
+        for k in 0..z.n_cols() {
+            let mut v = z.col(k).to_vec();
+            for b in &basis {
+                let c = crate::linalg::ops::dot(&v, b);
+                for (vi, bi) in v.iter_mut().zip(b) {
+                    *vi -= c * bi;
+                }
+            }
+            let nv = crate::linalg::ops::l2_norm(&v);
+            if nv > 1e-12 {
+                for vi in v.iter_mut() {
+                    *vi /= nv;
+                }
+                basis.push(v);
+            }
+        }
+        let project_out = |target: &mut [f64]| {
+            for b in &basis {
+                let c = crate::linalg::ops::dot(target, b);
+                for (ti, bi) in target.iter_mut().zip(b) {
+                    *ti -= c * bi;
+                }
+            }
+        };
+        project_out(&mut self.y);
+        for j in 0..self.p() {
+            project_out(self.x.col_mut(j));
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toy() -> Dataset {
+        let x = Matrix::from_row_major(&[1.0, 10.0, 2.0, 20.0, 3.0, 60.0], 3, 2);
+        Dataset {
+            name: "toy".into(),
+            x,
+            y: vec![1.0, 2.0, 3.0],
+            groups: Groups::uniform(1, 2),
+        }
+    }
+
+    #[test]
+    fn standardize_centers_and_scales() {
+        let mut d = toy();
+        d.standardize();
+        assert!(d.y.iter().sum::<f64>().abs() < 1e-12);
+        for j in 0..d.p() {
+            let col = d.x.col(j);
+            assert!(col.iter().sum::<f64>().abs() < 1e-12);
+            let norm: f64 = col.iter().map(|v| v * v).sum::<f64>().sqrt();
+            assert!((norm - 1.0).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn standardize_handles_constant_column() {
+        let x = Matrix::from_row_major(&[5.0, 1.0, 5.0, 2.0], 2, 2);
+        let mut d = Dataset {
+            name: "c".into(),
+            x,
+            y: vec![0.0, 1.0],
+            groups: Groups::uniform(2, 1),
+        };
+        d.standardize();
+        assert!(d.x.col(0).iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn remove_covariates_orthogonalizes() {
+        let mut d = toy();
+        // Remove an intercept and a linear trend.
+        let z = Matrix::from_fn(3, 2, |i, j| if j == 0 { 1.0 } else { i as f64 });
+        d.remove_covariates(&z);
+        // y = [1,2,3] is exactly intercept+trend: must vanish.
+        assert!(d.y.iter().all(|v| v.abs() < 1e-10), "{:?}", d.y);
+        // X columns are now orthogonal to the trend space.
+        for j in 0..d.p() {
+            let col = d.x.col(j);
+            let s: f64 = col.iter().sum();
+            assert!(s.abs() < 1e-10);
+        }
+    }
+}

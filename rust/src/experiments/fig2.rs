@@ -1,0 +1,135 @@
+//! Figure 2: the synthetic-data experiments (§7.1, ρ=0.5, γ₁=10, γ₂=4,
+//! τ=0.2).
+//!
+//! - **2a** — proportion of active *features* as a function of `λ_t` and
+//!   the epoch budget `K`;
+//! - **2b** — same at the *group* level;
+//! - **2c** — wall-clock to solve the whole path vs target duality gap,
+//!   for every screening rule.
+
+use crate::coordinator::jobs::{run_rule_comparison, RuleComparisonJob, RuleTiming};
+use crate::data::synthetic::{generate, SyntheticConfig};
+use crate::screening::RuleKind;
+use crate::solver::cd::{solve_with_rule, SolveOptions};
+use crate::solver::problem::SglProblem;
+use crate::screening::make_rule;
+
+/// Active-proportion surfaces for Fig. 2a/2b.
+#[derive(Clone, Debug)]
+pub struct ActiveSurface {
+    pub lambdas: Vec<f64>,
+    /// Epoch budgets (the K axis).
+    pub k_values: Vec<usize>,
+    /// `fractions[k_idx][lambda_idx]` — active fraction after at most K
+    /// epochs.
+    pub feature_fractions: Vec<Vec<f64>>,
+    pub group_fractions: Vec<Vec<f64>>,
+}
+
+/// Fig. 2a/2b: solve the path once per epoch budget K and record the
+/// final active proportions per λ.
+pub fn active_surfaces(
+    cfg: &SyntheticConfig,
+    tau: f64,
+    delta: f64,
+    t_count: usize,
+    k_values: &[usize],
+    fce: usize,
+) -> ActiveSurface {
+    let data = generate(cfg);
+    let pb = SglProblem::new(data.dataset.x, data.dataset.y, data.dataset.groups, tau);
+    let lambda_max = pb.lambda_max();
+    let lambdas = SglProblem::lambda_grid(lambda_max, delta, t_count);
+    let p = pb.p() as f64;
+    let n_g = pb.n_groups() as f64;
+
+    let mut feature_fractions = Vec::with_capacity(k_values.len());
+    let mut group_fractions = Vec::with_capacity(k_values.len());
+    for &k in k_values {
+        let mut rule = make_rule(RuleKind::GapSafe, &pb);
+        let opts = SolveOptions {
+            tol: 0.0, // never stop early: K is the budget under study
+            max_epochs: k,
+            fce,
+            rule: RuleKind::GapSafe,
+            record_history: false,
+        };
+        let mut warm: Option<Vec<f64>> = None;
+        let mut feats = Vec::with_capacity(lambdas.len());
+        let mut groups = Vec::with_capacity(lambdas.len());
+        for &lambda in &lambdas {
+            let res = solve_with_rule(&pb, lambda, warm.as_deref(), &opts, rule.as_mut());
+            warm = Some(res.beta.clone());
+            feats.push(res.active.n_active_features() as f64 / p);
+            groups.push(res.active.n_active_groups() as f64 / n_g);
+        }
+        feature_fractions.push(feats);
+        group_fractions.push(groups);
+    }
+    ActiveSurface { lambdas, k_values: k_values.to_vec(), feature_fractions, group_fractions }
+}
+
+/// Fig. 2c: time-to-converge per rule per tolerance on the synthetic path.
+pub fn rule_timings(
+    cfg: &SyntheticConfig,
+    tau: f64,
+    job: &RuleComparisonJob,
+    threads: usize,
+) -> Vec<RuleTiming> {
+    let data = generate(cfg);
+    let pb = SglProblem::new(data.dataset.x, data.dataset.y, data.dataset.groups, tau);
+    run_rule_comparison(&pb, job, threads, None)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_cfg() -> SyntheticConfig {
+        SyntheticConfig {
+            n: 40,
+            n_groups: 15,
+            group_size: 4,
+            gamma1: 3,
+            gamma2: 2,
+            seed: 3,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn surfaces_have_expected_shape_properties() {
+        let surf = active_surfaces(&tiny_cfg(), 0.2, 2.0, 8, &[10, 100], 10);
+        assert_eq!(surf.feature_fractions.len(), 2);
+        assert_eq!(surf.feature_fractions[0].len(), 8);
+        // More epochs => weakly fewer active variables at every lambda
+        // (smaller gap => smaller safe sphere).
+        for li in 0..8 {
+            assert!(
+                surf.feature_fractions[1][li] <= surf.feature_fractions[0][li] + 1e-12,
+                "lambda {li}: K=100 {} vs K=10 {}",
+                surf.feature_fractions[1][li],
+                surf.feature_fractions[0][li]
+            );
+            assert!(surf.group_fractions[1][li] <= surf.group_fractions[0][li] + 1e-12);
+        }
+        // Fractions are valid proportions.
+        for row in surf.feature_fractions.iter().chain(&surf.group_fractions) {
+            assert!(row.iter().all(|&f| (0.0..=1.0).contains(&f)));
+        }
+    }
+
+    #[test]
+    fn timings_cover_rules_and_tols() {
+        let job = RuleComparisonJob {
+            rules: vec![RuleKind::None, RuleKind::Static, RuleKind::GapSafe],
+            tolerances: vec![1e-4],
+            t_count: 6,
+            delta: 2.0,
+            ..Default::default()
+        };
+        let out = rule_timings(&tiny_cfg(), 0.2, &job, 3);
+        assert_eq!(out.len(), 3);
+        assert!(out.iter().all(|t| t.converged && t.seconds >= 0.0));
+    }
+}

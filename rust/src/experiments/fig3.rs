@@ -1,0 +1,113 @@
+//! Figure 3: the climate experiments (simulated NCEP/NCAR — see DESIGN.md
+//! §Substitutions).
+//!
+//! - **3a** — held-out prediction error over the `(λ, τ)` grid with a
+//!   50/50 train/test split (paper: best at τ★ = 0.4);
+//! - **3b** — path wall-clock vs target accuracy at τ★, δ = 2.5, per rule.
+
+use crate::coordinator::jobs::{run_rule_comparison, RuleComparisonJob, RuleTiming};
+use crate::data::climate::{generate, preprocess, ClimateConfig, ClimateData};
+use crate::solver::cd::SolveOptions;
+use crate::solver::cv::{split_rows, validate_tau_grid, CvResult};
+use crate::solver::path::PathOptions;
+use crate::solver::problem::SglProblem;
+
+/// Load + preprocess the simulated climate data.
+pub fn prepared_data(cfg: &ClimateConfig) -> ClimateData {
+    let mut data = generate(cfg);
+    preprocess(&mut data);
+    data
+}
+
+/// Fig. 3a: the validation grid.
+pub fn validation_grid(
+    data: &ClimateData,
+    taus: &[f64],
+    delta: f64,
+    t_count: usize,
+    tol: f64,
+    threads: usize,
+    split_seed: u64,
+) -> CvResult {
+    let split = split_rows(data.dataset.n(), 0.5, split_seed);
+    let path_opts = PathOptions {
+        delta,
+        t_count,
+        solve: SolveOptions { tol, record_history: false, ..Default::default() },
+    };
+    validate_tau_grid(
+        &data.dataset.x,
+        &data.dataset.y,
+        &data.dataset.groups,
+        taus,
+        &path_opts,
+        &split,
+        threads,
+    )
+}
+
+/// Fig. 3b: rule timings on the climate problem at the chosen τ★.
+pub fn rule_timings(
+    data: &ClimateData,
+    tau_star: f64,
+    job: &RuleComparisonJob,
+    threads: usize,
+) -> Vec<RuleTiming> {
+    let pb = SglProblem::new(
+        data.dataset.x.clone(),
+        data.dataset.y.clone(),
+        data.dataset.groups.clone(),
+        tau_star,
+    );
+    run_rule_comparison(&pb, job, threads, None)
+}
+
+/// The paper's τ grid: {0, 0.1, …, 1}.
+pub fn paper_tau_grid() -> Vec<f64> {
+    (0..=10).map(|i| i as f64 / 10.0).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::screening::RuleKind;
+
+    #[test]
+    fn tau_grid_matches_paper() {
+        let g = paper_tau_grid();
+        assert_eq!(g.len(), 11);
+        assert_eq!(g[0], 0.0);
+        assert_eq!(g[10], 1.0);
+        assert!((g[4] - 0.4).abs() < 1e-15);
+    }
+
+    #[test]
+    fn validation_beats_null_model_on_small_grid() {
+        let data = prepared_data(&ClimateConfig::small(21));
+        let cv = validation_grid(&data, &[0.2, 0.6], 2.0, 8, 1e-5, 2, 7);
+        assert_eq!(cv.curves.len(), 2);
+        // Null model on centered data: mse ~ var(y_test). Best must improve.
+        assert!(cv.best_mse.is_finite() && cv.best_mse > 0.0);
+        let worst_first: f64 = cv
+            .curves
+            .iter()
+            .map(|c| c.test_mse[0])
+            .fold(f64::INFINITY, f64::min);
+        assert!(cv.best_mse < worst_first, "{} vs {worst_first}", cv.best_mse);
+    }
+
+    #[test]
+    fn timings_run_on_climate() {
+        let data = prepared_data(&ClimateConfig::small(22));
+        let job = RuleComparisonJob {
+            rules: vec![RuleKind::None, RuleKind::GapSafe],
+            tolerances: vec![1e-4],
+            t_count: 5,
+            delta: 2.0,
+            ..Default::default()
+        };
+        let out = rule_timings(&data, 0.4, &job, 2);
+        assert_eq!(out.len(), 2);
+        assert!(out.iter().all(|t| t.converged));
+    }
+}

@@ -1,0 +1,7 @@
+//! Experiment drivers regenerating every figure of the paper
+//! (DESIGN.md §4 maps figure → module → bench target).
+
+pub mod fig1;
+pub mod fig2;
+pub mod fig3;
+pub mod fig4;

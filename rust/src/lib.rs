@@ -1,0 +1,39 @@
+//! # sgl-screening — GAP Safe Screening Rules for the Sparse-Group Lasso
+//!
+//! A production-oriented reproduction of *GAP Safe Screening Rules for
+//! Sparse-Group Lasso* (Ndiaye, Fercoq, Gramfort, Salmon — NIPS 2016) as a
+//! three-layer Rust + JAX + Pallas stack:
+//!
+//! - **Layer 3 (this crate)** — the solver framework: problem/dataset
+//!   abstractions, the ISTA-BC coordinate-descent solver (Algorithm 2),
+//!   the ε-norm dual-norm machinery (Algorithm 1), all five screening
+//!   rules (GAP safe + the App. C baselines), path/CV runners, and the
+//!   experiment drivers that regenerate every figure of the paper.
+//! - **Layer 2/1 (build time, `python/compile/`)** — the masked ISTA epoch
+//!   and screening computations expressed in JAX + Pallas, AOT-lowered to
+//!   HLO text; [`runtime`] loads and executes those artifacts via PJRT so
+//!   Python never runs on the solve path.
+//!
+//! Quick start (see `examples/quickstart.rs`):
+//!
+//! ```no_run
+//! use sgl::data::synthetic::{generate, SyntheticConfig};
+//! use sgl::solver::{cd, problem::SglProblem};
+//!
+//! let data = generate(&SyntheticConfig::small(42));
+//! let pb = SglProblem::new(data.dataset.x, data.dataset.y, data.dataset.groups, 0.2);
+//! let lambda = 0.1 * pb.lambda_max();
+//! let res = cd::solve(&pb, lambda, None, &cd::SolveOptions::default());
+//! assert!(res.converged);
+//! ```
+
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod experiments;
+pub mod linalg;
+pub mod norms;
+pub mod runtime;
+pub mod screening;
+pub mod solver;
+pub mod util;

@@ -1,0 +1,294 @@
+//! Column-major dense matrix.
+//!
+//! Column-major storage is the natural layout for coordinate-descent
+//! solvers: the inner loop repeatedly reads whole feature columns `X_j` and
+//! group sub-matrices `X_g` (contiguous column ranges).
+
+use super::ops::{dot, l2_norm};
+
+/// Column-major `n_rows x n_cols` matrix of `f64`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Matrix {
+    data: Vec<f64>,
+    n_rows: usize,
+    n_cols: usize,
+}
+
+impl Matrix {
+    /// Zero-filled matrix.
+    pub fn zeros(n_rows: usize, n_cols: usize) -> Self {
+        Matrix { data: vec![0.0; n_rows * n_cols], n_rows, n_cols }
+    }
+
+    /// Build from a column-major buffer.
+    pub fn from_col_major(data: Vec<f64>, n_rows: usize, n_cols: usize) -> Self {
+        assert_eq!(data.len(), n_rows * n_cols, "buffer size mismatch");
+        Matrix { data, n_rows, n_cols }
+    }
+
+    /// Build from a row-major buffer (transposing into column-major).
+    pub fn from_row_major(data: &[f64], n_rows: usize, n_cols: usize) -> Self {
+        assert_eq!(data.len(), n_rows * n_cols, "buffer size mismatch");
+        let mut m = Matrix::zeros(n_rows, n_cols);
+        for i in 0..n_rows {
+            for j in 0..n_cols {
+                m.set(i, j, data[i * n_cols + j]);
+            }
+        }
+        m
+    }
+
+    /// Build column by column from a closure.
+    pub fn from_fn(n_rows: usize, n_cols: usize, mut f: impl FnMut(usize, usize) -> f64) -> Self {
+        let mut m = Matrix::zeros(n_rows, n_cols);
+        for j in 0..n_cols {
+            for i in 0..n_rows {
+                m.set(i, j, f(i, j));
+            }
+        }
+        m
+    }
+
+    #[inline]
+    pub fn n_rows(&self) -> usize {
+        self.n_rows
+    }
+
+    #[inline]
+    pub fn n_cols(&self) -> usize {
+        self.n_cols
+    }
+
+    #[inline]
+    pub fn get(&self, i: usize, j: usize) -> f64 {
+        debug_assert!(i < self.n_rows && j < self.n_cols);
+        self.data[j * self.n_rows + i]
+    }
+
+    #[inline]
+    pub fn set(&mut self, i: usize, j: usize, v: f64) {
+        debug_assert!(i < self.n_rows && j < self.n_cols);
+        self.data[j * self.n_rows + i] = v;
+    }
+
+    /// Contiguous view of column `j`.
+    #[inline]
+    pub fn col(&self, j: usize) -> &[f64] {
+        debug_assert!(j < self.n_cols);
+        &self.data[j * self.n_rows..(j + 1) * self.n_rows]
+    }
+
+    /// Mutable view of column `j`.
+    #[inline]
+    pub fn col_mut(&mut self, j: usize) -> &mut [f64] {
+        debug_assert!(j < self.n_cols);
+        &mut self.data[j * self.n_rows..(j + 1) * self.n_rows]
+    }
+
+    /// Contiguous view of columns `j0..j1` (e.g. a group block `X_g`).
+    #[inline]
+    pub fn cols(&self, j0: usize, j1: usize) -> &[f64] {
+        debug_assert!(j0 <= j1 && j1 <= self.n_cols);
+        &self.data[j0 * self.n_rows..j1 * self.n_rows]
+    }
+
+    /// Full column-major buffer.
+    pub fn as_slice(&self) -> &[f64] {
+        &self.data
+    }
+
+    /// Row-major copy of the data (for the XLA runtime, which takes
+    /// row-major literals).
+    pub fn to_row_major(&self) -> Vec<f64> {
+        let mut out = vec![0.0; self.n_rows * self.n_cols];
+        for j in 0..self.n_cols {
+            let col = self.col(j);
+            for i in 0..self.n_rows {
+                out[i * self.n_cols + j] = col[i];
+            }
+        }
+        out
+    }
+
+    /// `y = A v` (dense GEMV). `v.len() == n_cols`, result length `n_rows`.
+    pub fn matvec(&self, v: &[f64]) -> Vec<f64> {
+        assert_eq!(v.len(), self.n_cols);
+        let mut y = vec![0.0; self.n_rows];
+        self.matvec_into(v, &mut y);
+        y
+    }
+
+    /// `y = A v`, writing into a caller-provided buffer (hot path: avoids
+    /// allocation).
+    pub fn matvec_into(&self, v: &[f64], y: &mut [f64]) {
+        assert_eq!(v.len(), self.n_cols);
+        assert_eq!(y.len(), self.n_rows);
+        y.fill(0.0);
+        for j in 0..self.n_cols {
+            let vj = v[j];
+            if vj == 0.0 {
+                continue; // sparse beta: skip zero coefficients entirely
+            }
+            let col = self.col(j);
+            for i in 0..self.n_rows {
+                y[i] += col[i] * vj;
+            }
+        }
+    }
+
+    /// `z = Aᵀ u`. `u.len() == n_rows`, result length `n_cols`.
+    pub fn tmatvec(&self, u: &[f64]) -> Vec<f64> {
+        assert_eq!(u.len(), self.n_rows);
+        let mut z = vec![0.0; self.n_cols];
+        self.tmatvec_into(u, &mut z);
+        z
+    }
+
+    /// `z = Aᵀ u`, into a caller-provided buffer.
+    pub fn tmatvec_into(&self, u: &[f64], z: &mut [f64]) {
+        assert_eq!(u.len(), self.n_rows);
+        assert_eq!(z.len(), self.n_cols);
+        for j in 0..self.n_cols {
+            z[j] = dot(self.col(j), u);
+        }
+    }
+
+    /// `Xᵀu` restricted to columns `j0..j1` (a group block).
+    pub fn tmatvec_block(&self, j0: usize, j1: usize, u: &[f64], out: &mut [f64]) {
+        debug_assert_eq!(out.len(), j1 - j0);
+        for (k, j) in (j0..j1).enumerate() {
+            out[k] = dot(self.col(j), u);
+        }
+    }
+
+    /// Euclidean norm of each column.
+    pub fn col_norms(&self) -> Vec<f64> {
+        (0..self.n_cols).map(|j| l2_norm(self.col(j))).collect()
+    }
+
+    /// Frobenius norm of the column block `j0..j1`.
+    pub fn block_frobenius(&self, j0: usize, j1: usize) -> f64 {
+        l2_norm(self.cols(j0, j1))
+    }
+
+    /// Vertical stack: `[self; other]` (used by the elastic-net
+    /// reformulation `X̃ = [X; sqrt(λ₂) I]`).
+    pub fn vstack(&self, other: &Matrix) -> Matrix {
+        assert_eq!(self.n_cols, other.n_cols);
+        let n = self.n_rows + other.n_rows;
+        let mut m = Matrix::zeros(n, self.n_cols);
+        for j in 0..self.n_cols {
+            let dst = m.col_mut(j);
+            dst[..self.n_rows].copy_from_slice(self.col(j));
+            dst[self.n_rows..].copy_from_slice(other.col(j));
+        }
+        m
+    }
+
+    /// Select a subset of rows (used for train/test splits).
+    pub fn select_rows(&self, rows: &[usize]) -> Matrix {
+        let mut m = Matrix::zeros(rows.len(), self.n_cols);
+        for j in 0..self.n_cols {
+            let src = self.col(j);
+            let dst = m.col_mut(j);
+            for (k, &i) in rows.iter().enumerate() {
+                dst[k] = src[i];
+            }
+        }
+        m
+    }
+
+    /// Identity scaled by `s`.
+    pub fn scaled_identity(n: usize, s: f64) -> Matrix {
+        let mut m = Matrix::zeros(n, n);
+        for i in 0..n {
+            m.set(i, i, s);
+        }
+        m
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Matrix {
+        // [[1, 2, 3],
+        //  [4, 5, 6]]
+        Matrix::from_row_major(&[1.0, 2.0, 3.0, 4.0, 5.0, 6.0], 2, 3)
+    }
+
+    #[test]
+    fn indexing_and_columns() {
+        let m = sample();
+        assert_eq!(m.get(0, 0), 1.0);
+        assert_eq!(m.get(1, 2), 6.0);
+        assert_eq!(m.col(1), &[2.0, 5.0]);
+        assert_eq!(m.cols(1, 3), &[2.0, 5.0, 3.0, 6.0]);
+    }
+
+    #[test]
+    fn row_major_round_trip() {
+        let m = sample();
+        assert_eq!(m.to_row_major(), vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+    }
+
+    #[test]
+    fn matvec_matches_hand_computation() {
+        let m = sample();
+        assert_eq!(m.matvec(&[1.0, 0.0, -1.0]), vec![-2.0, -2.0]);
+        assert_eq!(m.tmatvec(&[1.0, 1.0]), vec![5.0, 7.0, 9.0]);
+    }
+
+    #[test]
+    fn matvec_skips_zeros() {
+        let m = sample();
+        // same result with and without the sparsity fast path
+        let dense = m.matvec(&[0.5, 0.25, 0.125]);
+        let sparse = m.matvec(&[0.5, 0.0, 0.125]);
+        assert!(dense[0] != sparse[0]);
+        assert_eq!(sparse, vec![0.5 + 3.0 * 0.125, 2.0 + 6.0 * 0.125]);
+    }
+
+    #[test]
+    fn block_tmatvec() {
+        let m = sample();
+        let mut out = vec![0.0; 2];
+        m.tmatvec_block(1, 3, &[1.0, 1.0], &mut out);
+        assert_eq!(out, vec![7.0, 9.0]);
+    }
+
+    #[test]
+    fn col_norms_correct() {
+        let m = sample();
+        let norms = m.col_norms();
+        assert!((norms[0] - (17.0f64).sqrt()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn vstack_shapes() {
+        let m = sample();
+        let id = Matrix::scaled_identity(3, 2.0);
+        let s = m.vstack(&id);
+        assert_eq!(s.n_rows(), 5);
+        assert_eq!(s.get(0, 0), 1.0);
+        assert_eq!(s.get(2, 0), 2.0);
+        assert_eq!(s.get(3, 1), 2.0);
+        assert_eq!(s.get(4, 2), 2.0);
+        assert_eq!(s.get(4, 0), 0.0);
+    }
+
+    #[test]
+    fn select_rows_subset() {
+        let m = sample();
+        let s = m.select_rows(&[1]);
+        assert_eq!(s.n_rows(), 1);
+        assert_eq!(s.col(2), &[6.0]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn size_mismatch_panics() {
+        Matrix::from_col_major(vec![1.0, 2.0, 3.0], 2, 2);
+    }
+}

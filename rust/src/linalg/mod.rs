@@ -1,0 +1,15 @@
+//! Dense linear algebra substrate.
+//!
+//! The Sparse-Group Lasso solver needs column-major dense matrices (feature
+//! columns are accessed constantly), matrix-vector products, vector norms,
+//! power iteration for block spectral norms `‖X_g‖₂`, and a Cholesky-based
+//! multivariate normal sampler for the synthetic designs. All of it lives
+//! here, implemented from scratch for this offline environment.
+
+pub mod dense;
+pub mod ops;
+pub mod spectral;
+
+pub use dense::Matrix;
+pub use ops::{axpy, dot, inf_norm, l1_norm, l2_norm, l2_norm_sq, scale, sub};
+pub use spectral::{power_iteration, spectral_norm};

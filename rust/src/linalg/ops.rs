@@ -1,0 +1,134 @@
+//! Vector kernels shared by the solver hot loops.
+
+/// Dot product with 4-way unrolling (the compiler auto-vectorizes this
+/// pattern reliably; see EXPERIMENTS.md §Perf).
+#[inline]
+pub fn dot(a: &[f64], b: &[f64]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    let n = a.len();
+    let chunks = n / 4 * 4;
+    let (mut s0, mut s1, mut s2, mut s3) = (0.0, 0.0, 0.0, 0.0);
+    let mut i = 0;
+    while i < chunks {
+        s0 += a[i] * b[i];
+        s1 += a[i + 1] * b[i + 1];
+        s2 += a[i + 2] * b[i + 2];
+        s3 += a[i + 3] * b[i + 3];
+        i += 4;
+    }
+    let mut s = (s0 + s1) + (s2 + s3);
+    while i < n {
+        s += a[i] * b[i];
+        i += 1;
+    }
+    s
+}
+
+/// `y += alpha * x`.
+#[inline]
+pub fn axpy(alpha: f64, x: &[f64], y: &mut [f64]) {
+    debug_assert_eq!(x.len(), y.len());
+    if alpha == 0.0 {
+        return;
+    }
+    for (yi, xi) in y.iter_mut().zip(x) {
+        *yi += alpha * xi;
+    }
+}
+
+/// `x *= alpha`.
+#[inline]
+pub fn scale(alpha: f64, x: &mut [f64]) {
+    for xi in x.iter_mut() {
+        *xi *= alpha;
+    }
+}
+
+/// Elementwise `a - b` into a new vector.
+pub fn sub(a: &[f64], b: &[f64]) -> Vec<f64> {
+    debug_assert_eq!(a.len(), b.len());
+    a.iter().zip(b).map(|(x, y)| x - y).collect()
+}
+
+/// Euclidean norm.
+#[inline]
+pub fn l2_norm(x: &[f64]) -> f64 {
+    l2_norm_sq(x).sqrt()
+}
+
+/// Squared Euclidean norm.
+#[inline]
+pub fn l2_norm_sq(x: &[f64]) -> f64 {
+    dot(x, x)
+}
+
+/// `ℓ₁` norm.
+#[inline]
+pub fn l1_norm(x: &[f64]) -> f64 {
+    x.iter().map(|v| v.abs()).sum()
+}
+
+/// `ℓ∞` norm.
+#[inline]
+pub fn inf_norm(x: &[f64]) -> f64 {
+    x.iter().fold(0.0, |m, v| m.max(v.abs()))
+}
+
+/// Euclidean distance between two vectors.
+#[inline]
+pub fn l2_dist(a: &[f64], b: &[f64]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    a.iter().zip(b).map(|(x, y)| (x - y) * (x - y)).sum::<f64>().sqrt()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dot_matches_naive() {
+        let a: Vec<f64> = (0..37).map(|i| i as f64 * 0.5).collect();
+        let b: Vec<f64> = (0..37).map(|i| (i as f64).sin()).collect();
+        let naive: f64 = a.iter().zip(&b).map(|(x, y)| x * y).sum();
+        assert!((dot(&a, &b) - naive).abs() < 1e-10);
+    }
+
+    #[test]
+    fn axpy_updates() {
+        let x = vec![1.0, 2.0];
+        let mut y = vec![10.0, 20.0];
+        axpy(0.5, &x, &mut y);
+        assert_eq!(y, vec![10.5, 21.0]);
+        axpy(0.0, &x, &mut y);
+        assert_eq!(y, vec![10.5, 21.0]);
+    }
+
+    #[test]
+    fn norms() {
+        let x = [3.0, -4.0];
+        assert_eq!(l2_norm(&x), 5.0);
+        assert_eq!(l1_norm(&x), 7.0);
+        assert_eq!(inf_norm(&x), 4.0);
+        assert_eq!(l2_norm_sq(&x), 25.0);
+    }
+
+    #[test]
+    fn sub_and_dist() {
+        assert_eq!(sub(&[3.0, 1.0], &[1.0, 1.0]), vec![2.0, 0.0]);
+        assert_eq!(l2_dist(&[0.0, 0.0], &[3.0, 4.0]), 5.0);
+    }
+
+    #[test]
+    fn scale_in_place() {
+        let mut x = vec![1.0, -2.0];
+        scale(-2.0, &mut x);
+        assert_eq!(x, vec![-2.0, 4.0]);
+    }
+
+    #[test]
+    fn empty_vectors() {
+        assert_eq!(dot(&[], &[]), 0.0);
+        assert_eq!(l2_norm(&[]), 0.0);
+        assert_eq!(inf_norm(&[]), 0.0);
+    }
+}

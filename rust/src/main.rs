@@ -1,0 +1,310 @@
+//! `sgl` — the Sparse-Group Lasso solver CLI (Layer-3 entrypoint).
+//!
+//! Subcommands:
+//!
+//! - `solve`       one λ on a dataset (native ISTA-BC, Algorithm 2)
+//! - `path`        warm-started λ-path (§7.1)
+//! - `cv`          (λ, τ)-grid validation (Fig. 3a protocol)
+//! - `lambda-max`  critical parameter via Algorithm 1 (Eq. 22)
+//! - `compare`     screening-rule timing comparison (Fig. 2c / 3b)
+//! - `xla`         solve through the AOT artifacts via PJRT (three-layer path)
+//!
+//! Datasets come from a config file (`--config run.toml`) or the built-in
+//! synthetic/climate generators.
+
+use anyhow::{bail, Context, Result};
+use sgl::config::{DatasetChoice, RunConfig};
+use sgl::coordinator::jobs::{run_rule_comparison, RuleComparisonJob};
+use sgl::coordinator::report::render_rule_timings;
+use sgl::data::climate::{self, ClimateConfig};
+use sgl::data::synthetic::{self, SyntheticConfig};
+use sgl::data::{csvio, Dataset};
+use sgl::screening::RuleKind;
+use sgl::solver::cd::{solve, SolveOptions};
+use sgl::solver::cv::{split_rows, validate_tau_grid};
+use sgl::solver::groups::Groups;
+use sgl::solver::path::{solve_path, PathOptions};
+use sgl::solver::problem::SglProblem;
+use sgl::util::cli::{Args, OptSpec};
+use sgl::util::pool::default_threads;
+
+fn specs() -> Vec<OptSpec> {
+    vec![
+        OptSpec { name: "config", help: "TOML config file", takes_value: true, default: None },
+        OptSpec { name: "dataset", help: "synthetic|climate", takes_value: true, default: Some("synthetic") },
+        OptSpec { name: "tau", help: "l1/group mixing in [0,1]", takes_value: true, default: None },
+        OptSpec { name: "lambda-frac", help: "lambda as a fraction of lambda_max", takes_value: true, default: Some("0.1") },
+        OptSpec { name: "tol", help: "target duality gap", takes_value: true, default: None },
+        OptSpec { name: "rule", help: "none|static|dynamic|dst3|gap_safe", takes_value: true, default: None },
+        OptSpec { name: "delta", help: "path grid exponent", takes_value: true, default: None },
+        OptSpec { name: "t-count", help: "path grid size", takes_value: true, default: None },
+        OptSpec { name: "seed", help: "dataset seed", takes_value: true, default: None },
+        OptSpec { name: "threads", help: "worker threads (0 = auto)", takes_value: true, default: None },
+        OptSpec { name: "scale", help: "small|paper dataset scale", takes_value: true, default: Some("small") },
+        OptSpec { name: "out", help: "output CSV path", takes_value: true, default: None },
+        OptSpec { name: "artifacts", help: "artifacts dir for `xla`", takes_value: true, default: Some("artifacts") },
+    ]
+}
+
+fn main() {
+    let args = Args::parse_or_exit(&specs());
+    if let Err(e) = run(&args) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn load_config(args: &Args) -> Result<RunConfig> {
+    let mut cfg = match args.get("config") {
+        Some(path) => RunConfig::from_file(std::path::Path::new(&path))?,
+        None => RunConfig::default(),
+    };
+    // CLI overrides.
+    if let Some(v) = args.get("tau") {
+        cfg.tau = v.parse().context("--tau")?;
+    }
+    if let Some(v) = args.get("tol") {
+        cfg.tol = v.parse().context("--tol")?;
+    }
+    if let Some(v) = args.get("rule") {
+        cfg.rule = RuleKind::from_name(&v).with_context(|| format!("unknown rule {v}"))?;
+    }
+    if let Some(v) = args.get("delta") {
+        cfg.delta = v.parse().context("--delta")?;
+    }
+    if let Some(v) = args.get("t-count") {
+        cfg.t_count = v.parse().context("--t-count")?;
+    }
+    if let Some(v) = args.get("seed") {
+        cfg.seed = v.parse().context("--seed")?;
+    }
+    if let Some(v) = args.get("threads") {
+        cfg.threads = v.parse().context("--threads")?;
+    }
+    if args.get("config").is_none() {
+        cfg.dataset = match args.get_or("dataset", "synthetic").as_str() {
+            "synthetic" => DatasetChoice::Synthetic,
+            "climate" => DatasetChoice::Climate,
+            other => bail!("unknown dataset {other} (use a config file for csv)"),
+        };
+    }
+    cfg.validate()?;
+    Ok(cfg)
+}
+
+fn build_dataset(cfg: &RunConfig, scale: &str) -> Result<Dataset> {
+    Ok(match &cfg.dataset {
+        DatasetChoice::Synthetic => {
+            let sc = if scale == "paper" {
+                SyntheticConfig {
+                    n: cfg.synth_n,
+                    n_groups: cfg.synth_groups,
+                    group_size: cfg.synth_group_size,
+                    rho: cfg.synth_rho,
+                    gamma1: cfg.synth_gamma1,
+                    gamma2: cfg.synth_gamma2,
+                    seed: cfg.seed,
+                    ..Default::default()
+                }
+            } else {
+                SyntheticConfig::small(cfg.seed)
+            };
+            synthetic::generate(&sc).dataset
+        }
+        DatasetChoice::Climate => {
+            let cc = if scale == "paper" {
+                ClimateConfig {
+                    grid_lon: cfg.climate_lon,
+                    grid_lat: cfg.climate_lat,
+                    n_months: cfg.climate_months,
+                    seed: cfg.seed,
+                    ..Default::default()
+                }
+            } else {
+                ClimateConfig::small(cfg.seed)
+            };
+            let mut data = climate::generate(&cc);
+            climate::preprocess(&mut data);
+            data.dataset
+        }
+        DatasetChoice::Csv { x_path, y_path, group_size } => {
+            let x = csvio::read_matrix_csv(std::path::Path::new(x_path))?;
+            let y = csvio::read_vector(std::path::Path::new(y_path))?;
+            anyhow::ensure!(x.n_cols() % group_size == 0, "p not divisible by group size");
+            let groups = Groups::uniform(x.n_cols() / group_size, *group_size);
+            Dataset { name: format!("csv({x_path})"), x, y, groups }
+        }
+    })
+}
+
+fn run(args: &Args) -> Result<()> {
+    let cmd = args.positional().first().map(String::as_str).unwrap_or("help");
+    let cfg = load_config(args)?;
+    let scale = args.get_or("scale", "small");
+    let threads = if cfg.threads == 0 { default_threads() } else { cfg.threads };
+
+    match cmd {
+        "solve" => {
+            let data = build_dataset(&cfg, &scale)?;
+            let pb = SglProblem::new(data.x, data.y, data.groups, cfg.tau);
+            let lambda = args.get_f64("lambda-frac", 0.1) * pb.lambda_max();
+            let opts = SolveOptions {
+                tol: cfg.tol,
+                fce: cfg.fce,
+                max_epochs: cfg.max_epochs,
+                rule: cfg.rule,
+                record_history: true,
+            };
+            let res = solve(&pb, lambda, None, &opts);
+            let y2: f64 = pb.y.iter().map(|v| v * v).sum();
+            println!(
+                "dataset={} n={} p={} lambda={lambda:.5e}",
+                data_name(&cfg),
+                pb.n(),
+                pb.p()
+            );
+            println!(
+                "converged={} gap={:.3e} (rel {:.2e}) epochs={} time={:.3}s \
+                 active_features={} active_groups={}",
+                res.converged,
+                res.gap,
+                res.gap / y2,
+                res.epochs,
+                res.elapsed_s,
+                res.active.n_active_features(),
+                res.active.n_active_groups()
+            );
+        }
+        "path" => {
+            let data = build_dataset(&cfg, &scale)?;
+            let pb = SglProblem::new(data.x, data.y, data.groups, cfg.tau);
+            let opts = PathOptions {
+                delta: cfg.delta,
+                t_count: cfg.t_count,
+                solve: SolveOptions {
+                    tol: cfg.tol,
+                    fce: cfg.fce,
+                    max_epochs: cfg.max_epochs,
+                    rule: cfg.rule,
+                    record_history: false,
+                },
+            };
+            let path = solve_path(&pb, &opts);
+            println!(
+                "path: {} lambdas, rule={}, total {:.3}s, epochs={}, all converged={}",
+                path.lambdas.len(),
+                cfg.rule.name(),
+                path.total_s,
+                path.total_epochs(),
+                path.all_converged()
+            );
+            if let Some(out) = args.get("out") {
+                let rows: Vec<Vec<f64>> = path
+                    .lambdas
+                    .iter()
+                    .zip(&path.results)
+                    .map(|(l, r)| {
+                        vec![
+                            *l,
+                            r.gap,
+                            r.epochs as f64,
+                            r.active.n_active_features() as f64,
+                            r.active.n_active_groups() as f64,
+                        ]
+                    })
+                    .collect();
+                csvio::write_csv(
+                    std::path::Path::new(&out),
+                    &["lambda", "gap", "epochs", "active_features", "active_groups"],
+                    &rows,
+                )?;
+                println!("wrote {out}");
+            }
+        }
+        "cv" => {
+            let data = build_dataset(&cfg, &scale)?;
+            let taus: Vec<f64> = (0..=10).map(|i| i as f64 / 10.0).collect();
+            let split = split_rows(data.x.n_rows(), 0.5, cfg.seed);
+            let opts = PathOptions {
+                delta: cfg.delta,
+                t_count: cfg.t_count,
+                solve: SolveOptions { tol: cfg.tol, record_history: false, ..Default::default() },
+            };
+            let cv =
+                validate_tau_grid(&data.x, &data.y, &data.groups, &taus, &opts, &split, threads);
+            println!(
+                "best tau={} lambda={:.4e} test mse={:.5e}",
+                cv.best_tau, cv.best_lambda, cv.best_mse
+            );
+        }
+        "lambda-max" => {
+            let data = build_dataset(&cfg, &scale)?;
+            let pb = SglProblem::new(data.x, data.y, data.groups, cfg.tau);
+            let (g_star, lmax) = pb.lambda_max_argmax();
+            println!("lambda_max = {lmax:.8e} (attained by group {g_star})");
+        }
+        "compare" => {
+            let data = build_dataset(&cfg, &scale)?;
+            let pb = SglProblem::new(data.x, data.y, data.groups, cfg.tau);
+            let job = RuleComparisonJob {
+                tolerances: vec![1e-2, 1e-4, 1e-6, 1e-8],
+                delta: cfg.delta,
+                t_count: cfg.t_count,
+                fce: cfg.fce,
+                max_epochs: cfg.max_epochs,
+                ..Default::default()
+            };
+            let timings = run_rule_comparison(&pb, &job, threads, None);
+            println!("{}", render_rule_timings(&timings));
+        }
+        "xla" => {
+            let dir = std::path::PathBuf::from(args.get_or("artifacts", "artifacts"));
+            let engine = sgl::runtime::engine::XlaEngine::load(&dir)?;
+            let meta = engine.meta.clone();
+            println!(
+                "artifacts: n={} p={} groups={}x{} n_inner={}",
+                meta.n, meta.p, meta.n_groups, meta.group_size, meta.n_inner
+            );
+            let sc = SyntheticConfig {
+                n: meta.n,
+                n_groups: meta.n_groups,
+                group_size: meta.group_size,
+                gamma1: 5.min(meta.n_groups),
+                gamma2: 4.min(meta.group_size),
+                seed: cfg.seed,
+                ..Default::default()
+            };
+            let d = synthetic::generate(&sc);
+            let pb = SglProblem::new(d.dataset.x, d.dataset.y, d.dataset.groups, cfg.tau);
+            let session = engine.session(&pb)?;
+            let lambda = args.get_f64("lambda-frac", 0.1) * pb.lambda_max();
+            let sw = sgl::util::timer::Stopwatch::start();
+            let res = session.solve(lambda, cfg.tol, cfg.max_epochs, None, true)?;
+            println!(
+                "xla solve: converged={} gap={:.3e} rounds={} time={:.3}s active={}/{}",
+                res.converged,
+                res.gap,
+                res.rounds,
+                sw.elapsed_s(),
+                res.active_features,
+                pb.p()
+            );
+        }
+        other => {
+            if other != "help" {
+                eprintln!("unknown subcommand {other:?}");
+            }
+            eprintln!("subcommands: solve | path | cv | lambda-max | compare | xla");
+            eprintln!("{}", args.usage());
+        }
+    }
+    Ok(())
+}
+
+fn data_name(cfg: &RunConfig) -> &'static str {
+    match cfg.dataset {
+        DatasetChoice::Synthetic => "synthetic",
+        DatasetChoice::Climate => "climate",
+        DatasetChoice::Csv { .. } => "csv",
+    }
+}

@@ -1,0 +1,358 @@
+//! The ε-norm of Burdakov (1988) and the paper's Algorithm 1.
+//!
+//! For `ε ∈ [0, 1]`, `‖x‖_ε` is the unique nonnegative root `ν` of
+//!
+//! ```text
+//!   Σ_i ( |x_i| − (1−ε)ν )₊²  =  (εν)²          (paper Eq. 16)
+//! ```
+//!
+//! interpolating between `‖x‖_∞` (ε = 0) and `‖x‖₂` (ε = 1). The paper's
+//! key computational tool (Prop. 9 / Algorithm 1) evaluates the generalized
+//! root `Λ(x, α, R)` of `Σ_i S_{να}(x_i)² = (νR)²` in `O(n_I log n_I)`
+//! after pruning to the `n_I` coordinates that can be active (Remark 9).
+//! The Sparse-Group Lasso dual norm is a max of per-group `Λ`s (Eq. 23).
+
+use crate::linalg::ops::{inf_norm, l1_norm, l2_norm};
+
+/// Exact evaluation of `Λ(x, α, R)` — paper Algorithm 1.
+///
+/// Returns the unique `ν ≥ 0` with `Σ_i S_{να}(|x_i|)² = (νR)²`
+/// (`+∞` in the degenerate case `α = R = 0` with `x ≠ 0`, by convention,
+/// and `0` for `x = 0` with `R > 0`).
+pub fn lambda(x: &[f64], alpha: f64, r: f64) -> f64 {
+    debug_assert!((0.0..=1.0).contains(&alpha), "alpha={alpha} outside [0,1]");
+    debug_assert!(r >= 0.0);
+    let norm_inf = inf_norm(x);
+    if alpha == 0.0 && r == 0.0 {
+        return if norm_inf == 0.0 { 0.0 } else { f64::INFINITY };
+    }
+    if norm_inf == 0.0 {
+        return 0.0;
+    }
+    if alpha == 0.0 {
+        return l2_norm(x) / r;
+    }
+    if r == 0.0 {
+        return norm_inf / alpha;
+    }
+    // Remark 9 pruning: a coordinate with |x_i| <= alpha*||x||_inf/(alpha+R)
+    // is below the solution's threshold nu*alpha and contributes nothing.
+    let prune = alpha * norm_inf / (alpha + r);
+    let mut kept: Vec<f64> = x.iter().map(|v| v.abs()).filter(|&v| v > prune).collect();
+    // Sort descending.
+    kept.sort_unstable_by(|a, b| b.partial_cmp(a).unwrap());
+    lambda_sorted_desc(&kept, alpha, r)
+}
+
+/// `Λ` on an already |·|-valued, descending-sorted slice (no pruning).
+/// Exposed for callers that maintain sorted buffers (hot path reuse).
+pub fn lambda_sorted_desc(sorted_abs_desc: &[f64], alpha: f64, r: f64) -> f64 {
+    let n = sorted_abs_desc.len();
+    debug_assert!(n > 0 && alpha > 0.0 && r > 0.0);
+    let ratio = (r * r) / (alpha * alpha);
+    // Find j0 with b_{j0} <= R^2/alpha^2 < b_{j0+1}, where
+    //   b_k = S2_{k-1}/x_(k)^2 - 2 S_{k-1}/x_(k) + (k-1)
+    // is phi(x_(k)/alpha)/alpha^2 for phi(nu) = sum S_alpha(x_j/nu)^2.
+    // b_1 = 0 <= ratio always; b_{n+1} = +inf (next value treated as 0).
+    let (mut s, mut s2) = (0.0_f64, 0.0_f64);
+    let mut j0 = n;
+    for k in 1..=n {
+        let xk = sorted_abs_desc[k - 1];
+        s += xk;
+        s2 += xk * xk;
+        let b_next = if k < n {
+            let xn = sorted_abs_desc[k];
+            if xn == 0.0 {
+                f64::INFINITY
+            } else {
+                s2 / (xn * xn) - 2.0 * s / xn + k as f64
+            }
+        } else {
+            f64::INFINITY
+        };
+        if ratio < b_next {
+            j0 = k;
+            break;
+        }
+    }
+    // Solve (alpha^2 j0 - R^2) nu^2 - 2 alpha S nu + S2 = 0 on R+, taking the
+    // root in (x_(j0+1)/alpha, x_(j0)/alpha] (paper Eq. 33/36: always nu_1).
+    let denom = alpha * alpha * (j0 as f64) - r * r;
+    if denom.abs() <= 1e-14 * (r * r).max(1.0) {
+        return s2 / (2.0 * alpha * s);
+    }
+    let disc = (alpha * alpha * s * s - s2 * denom).max(0.0);
+    (alpha * s - disc.sqrt()) / denom
+}
+
+/// Reference implementation of `Λ` by bisection on
+/// `phi(nu) = Σ S_{να}(x)² − (νR)²` (independent of Algorithm 1; used by
+/// unit and property tests, and as the "naive" baseline in benches).
+pub fn lambda_bisect(x: &[f64], alpha: f64, r: f64, tol: f64) -> f64 {
+    let norm_inf = inf_norm(x);
+    if alpha == 0.0 && r == 0.0 {
+        return if norm_inf == 0.0 { 0.0 } else { f64::INFINITY };
+    }
+    if norm_inf == 0.0 {
+        return 0.0;
+    }
+    if alpha == 0.0 {
+        return l2_norm(x) / r;
+    }
+    if r == 0.0 {
+        return norm_inf / alpha;
+    }
+    let f = |nu: f64| -> f64 {
+        let mut lhs = 0.0;
+        for &v in x {
+            let t = v.abs() - nu * alpha;
+            if t > 0.0 {
+                lhs += t * t;
+            }
+        }
+        lhs - (nu * r) * (nu * r)
+    };
+    // Solution lies in (0, ||x||_inf / alpha).
+    let mut lo = 0.0;
+    let mut hi = norm_inf / alpha;
+    debug_assert!(f(hi) <= 0.0);
+    for _ in 0..200 {
+        let mid = 0.5 * (lo + hi);
+        if f(mid) > 0.0 {
+            lo = mid;
+        } else {
+            hi = mid;
+        }
+        if hi - lo <= tol * hi.max(1e-300) {
+            break;
+        }
+    }
+    0.5 * (lo + hi)
+}
+
+/// The ε-norm `‖x‖_ε` (Eq. 16): `Λ(x, 1−ε, ε)`.
+pub fn epsilon_norm(x: &[f64], eps: f64) -> f64 {
+    debug_assert!((0.0..=1.0).contains(&eps));
+    lambda(x, 1.0 - eps, eps)
+}
+
+/// Dual of the ε-norm (Lemma 4): `ε‖x‖₂ + (1−ε)‖x‖₁`.
+pub fn epsilon_dual_norm(x: &[f64], eps: f64) -> f64 {
+    eps * l2_norm(x) + (1.0 - eps) * l1_norm(x)
+}
+
+/// The ε-decomposition `x = x^ε + x^{1−ε}` of Lemma 1:
+/// `x^ε = S_{(1−ε)‖x‖_ε}(x)` with `‖x^ε‖ = ε‖x‖_ε` and
+/// `‖x^{1−ε}‖_∞ = (1−ε)‖x‖_ε`. Returns `(x_eps, x_one_minus_eps)`.
+pub fn epsilon_decomposition(x: &[f64], eps: f64) -> (Vec<f64>, Vec<f64>) {
+    let nu = epsilon_norm(x, eps);
+    let t = (1.0 - eps) * nu;
+    let x_eps: Vec<f64> = x.iter().map(|&v| v.signum() * (v.abs() - t).max(0.0)).collect();
+    let x_rest: Vec<f64> = x.iter().zip(&x_eps).map(|(v, e)| v - e).collect();
+    (x_eps, x_rest)
+}
+
+/// (Sub)gradient of the ε-norm at `x != 0` (Lemma 5): `x^ε / ‖x^ε‖_ε^D`.
+///
+/// At `ε = 0` the ε-norm is `‖·‖_∞`, whose ε-part `x^ε` vanishes; we return
+/// the standard `ℓ∞` subgradient `sign(x_{j*}) e_{j*}` instead (any
+/// supporting-hyperplane normal is valid for the DST3 construction).
+pub fn epsilon_norm_gradient(x: &[f64], eps: f64) -> Vec<f64> {
+    assert!(x.iter().any(|&v| v != 0.0), "epsilon-norm gradient undefined at 0");
+    let (x_eps, _) = epsilon_decomposition(x, eps);
+    let d = epsilon_dual_norm(&x_eps, eps);
+    if d <= 0.0 {
+        // eps = 0 (pure sup-norm) or total tie degeneracy.
+        let j_star = x
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.abs().partial_cmp(&b.1.abs()).unwrap())
+            .map(|(j, _)| j)
+            .unwrap();
+        let mut g = vec![0.0; x.len()];
+        g[j_star] = x[j_star].signum();
+        return g;
+    }
+    x_eps.iter().map(|v| v / d).collect()
+}
+
+/// Number of coordinates surviving the Remark-9 pruning (exposed for the
+/// complexity experiment in `benches/bench_dual_norm.rs`).
+pub fn pruned_count(x: &[f64], alpha: f64, r: f64) -> usize {
+    let norm_inf = inf_norm(x);
+    if norm_inf == 0.0 || alpha + r == 0.0 {
+        return 0;
+    }
+    let prune = alpha * norm_inf / (alpha + r);
+    x.iter().filter(|v| v.abs() > prune).count()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::{check, check_close, forall};
+
+    /// Residual of the defining equation (17) at nu.
+    fn defining_residual(x: &[f64], alpha: f64, r: f64, nu: f64) -> f64 {
+        let lhs: f64 = x
+            .iter()
+            .map(|&v| {
+                let t = v.abs() - nu * alpha;
+                if t > 0.0 {
+                    t * t
+                } else {
+                    0.0
+                }
+            })
+            .sum();
+        lhs - (nu * r) * (nu * r)
+    }
+
+    #[test]
+    fn special_cases() {
+        let x = [3.0, -4.0];
+        assert_eq!(lambda(&x, 0.0, 2.0), 2.5); // ||x||/R
+        assert_eq!(lambda(&x, 0.5, 0.0), 8.0); // ||x||_inf/alpha
+        assert_eq!(lambda(&[0.0, 0.0], 0.3, 0.7), 0.0);
+        assert!(lambda(&x, 0.0, 0.0).is_infinite());
+        assert_eq!(lambda(&[0.0], 0.0, 0.0), 0.0);
+    }
+
+    #[test]
+    fn epsilon_norm_interpolates() {
+        let x = [1.0, -2.0, 3.0];
+        assert!((epsilon_norm(&x, 0.0) - 3.0).abs() < 1e-12); // inf-norm
+        assert!((epsilon_norm(&x, 1.0) - (14.0f64).sqrt()).abs() < 1e-12); // l2
+        let mid = epsilon_norm(&x, 0.5);
+        assert!(mid > 3.0 && mid < 2.0 * (14.0f64).sqrt());
+    }
+
+    #[test]
+    fn single_active_coordinate_closed_form() {
+        // x_(2) far below x_(1): nu = x_(1)/(alpha+R).
+        let x = [10.0, 0.1, 0.05];
+        let (alpha, r) = (0.6, 0.3);
+        let nu = lambda(&x, alpha, r);
+        assert!((nu - 10.0 / 0.9).abs() < 1e-10, "nu={nu}");
+    }
+
+    #[test]
+    fn matches_bisection_reference() {
+        let xs: Vec<Vec<f64>> = vec![
+            vec![1.0, 2.0, 3.0, 4.0, 5.0],
+            vec![5.0, 5.0, 5.0],
+            vec![1.0, 1.0, 1.0, 10.0],
+            vec![0.3, -0.2, 0.1, 0.9, -0.5, 0.0],
+        ];
+        for x in &xs {
+            for &alpha in &[0.1, 0.5, 0.9, 1.0] {
+                for &r in &[0.05, 0.3, 1.0, 2.0] {
+                    let fast = lambda(x, alpha, r);
+                    let slow = lambda_bisect(x, alpha, r, 1e-13);
+                    assert!(
+                        (fast - slow).abs() < 1e-8 * fast.max(1.0),
+                        "x={x:?} alpha={alpha} r={r}: {fast} vs {slow}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn property_solves_defining_equation() {
+        forall("lambda solves its equation", 300, |g| {
+            let x = g.vec_f64(1..40, -10.0..10.0);
+            if x.iter().all(|&v| v == 0.0) {
+                return Ok(());
+            }
+            let alpha = g.f64_in(0.01..1.0);
+            let r = g.f64_in(0.01..3.0);
+            let nu = lambda(&x, alpha, r);
+            check(nu.is_finite() && nu > 0.0, "nu positive finite")?;
+            let res = defining_residual(&x, alpha, r, nu);
+            let scale: f64 = x.iter().map(|v| v * v).sum();
+            check(res.abs() <= 1e-9 * scale.max(1.0), &format!("residual {res:.3e}"))
+        });
+    }
+
+    #[test]
+    fn property_matches_bisection() {
+        forall("lambda == bisection", 200, |g| {
+            let x = g.vec_normal(1..60);
+            if x.iter().all(|&v| v == 0.0) {
+                return Ok(());
+            }
+            let alpha = g.f64_in(0.05..1.0);
+            let r = g.f64_in(0.05..2.0);
+            check_close(lambda(&x, alpha, r), lambda_bisect(&x, alpha, r, 1e-13), 1e-7, "Λ")
+        });
+    }
+
+    #[test]
+    fn property_duality_inequality() {
+        // |<x,y>| <= ||x||_eps * ||y||_eps^D (generalized Cauchy-Schwarz)
+        forall("epsilon-norm duality", 200, |g| {
+            let n = g.usize_in(1..30);
+            let x: Vec<f64> = (0..n).map(|_| g.normal()).collect();
+            let y: Vec<f64> = (0..n).map(|_| g.normal()).collect();
+            let eps = g.f64_in(0.01..1.0);
+            let ip: f64 = x.iter().zip(&y).map(|(a, b)| a * b).sum();
+            let bound = epsilon_norm(&x, eps) * epsilon_dual_norm(&y, eps);
+            check(ip.abs() <= bound * (1.0 + 1e-9) + 1e-12, &format!("{ip} vs {bound}"))
+        });
+    }
+
+    #[test]
+    fn decomposition_lemma1() {
+        forall("epsilon decomposition", 150, |g| {
+            let x = g.vec_normal(1..25);
+            if inf_norm(&x) == 0.0 {
+                return Ok(());
+            }
+            let eps = g.f64_in(0.05..0.95);
+            let nu = epsilon_norm(&x, eps);
+            let (xe, xr) = epsilon_decomposition(&x, eps);
+            check_close(l2_norm(&xe), eps * nu, 1e-8, "||x^eps|| = eps*nu")?;
+            check_close(inf_norm(&xr), (1.0 - eps) * nu, 1e-8, "||x^{1-eps}||_inf")?;
+            for i in 0..x.len() {
+                check_close(xe[i] + xr[i], x[i], 1e-10, "decomposition sums")?;
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn gradient_lemma5_is_unit_dual_norm() {
+        // The gradient of a norm has dual norm 1 and <grad, x> = ||x||_eps.
+        forall("epsilon-norm gradient", 100, |g| {
+            let x = g.vec_normal(2..20);
+            if inf_norm(&x) == 0.0 {
+                return Ok(());
+            }
+            let eps = g.f64_in(0.1..0.9);
+            let grad = epsilon_norm_gradient(&x, eps);
+            let ip: f64 = grad.iter().zip(&x).map(|(a, b)| a * b).sum();
+            check_close(ip, epsilon_norm(&x, eps), 1e-7, "<grad,x> = ||x||_eps")
+        });
+    }
+
+    #[test]
+    fn pruning_counts() {
+        let x = [10.0, 0.01, 0.02, 9.5];
+        // prune threshold = 0.9*10/(0.9+0.1) = 9.0: keeps 10.0 and 9.5.
+        let n_i = pruned_count(&x, 0.9, 0.1);
+        assert_eq!(n_i, 2);
+        assert_eq!(pruned_count(&[0.0; 4], 0.5, 0.5), 0);
+    }
+
+    #[test]
+    fn homogeneity() {
+        forall("positive homogeneity", 100, |g| {
+            let x = g.vec_normal(1..20);
+            let eps = g.f64_in(0.05..0.95);
+            let c = g.f64_in(0.1..10.0);
+            let cx: Vec<f64> = x.iter().map(|v| c * v).collect();
+            check_close(epsilon_norm(&cx, eps), c * epsilon_norm(&x, eps), 1e-8, "homog")
+        });
+    }
+}

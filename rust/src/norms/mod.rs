@@ -1,0 +1,12 @@
+//! Norms and proximal operators for the Sparse-Group Lasso:
+//!
+//! - [`epsilon`] — the ε-norm of Burdakov (1988) and the paper's
+//!   Algorithm 1 for `Λ(x, α, R)` (Prop. 9);
+//! - [`sgl`] — `Ω_{τ,w}`, its dual (Eq. 20/23), and the dual-ball
+//!   characterization (Eq. 21);
+//! - [`prox`] — soft-thresholding, group soft-thresholding, and the fused
+//!   two-level SGL prox (§6).
+
+pub mod epsilon;
+pub mod prox;
+pub mod sgl;

@@ -1,0 +1,169 @@
+//! Proximal operators: soft-thresholding `S_τ`, group soft-thresholding
+//! `S^gp_τ`, and the fused two-level Sparse-Group Lasso prox
+//! `S^gp_b ∘ S_a` used by the ISTA-BC update (paper §6).
+
+use crate::linalg::ops::l2_norm;
+
+/// Scalar soft-thresholding `S_t(v) = sign(v)(|v| − t)₊`.
+#[inline]
+pub fn soft_threshold(v: f64, t: f64) -> f64 {
+    debug_assert!(t >= 0.0);
+    let a = v.abs() - t;
+    if a > 0.0 {
+        a * v.signum()
+    } else {
+        0.0
+    }
+}
+
+/// Vector soft-thresholding into a new vector.
+pub fn soft_threshold_vec(x: &[f64], t: f64) -> Vec<f64> {
+    x.iter().map(|&v| soft_threshold(v, t)).collect()
+}
+
+/// In-place vector soft-thresholding.
+pub fn soft_threshold_inplace(x: &mut [f64], t: f64) {
+    for v in x.iter_mut() {
+        *v = soft_threshold(*v, t);
+    }
+}
+
+/// Group soft-thresholding `S^gp_t(x) = (1 − t/‖x‖)₊ x` (block shrinkage).
+pub fn group_soft_threshold(x: &[f64], t: f64) -> Vec<f64> {
+    let mut out = x.to_vec();
+    group_soft_threshold_inplace(&mut out, t);
+    out
+}
+
+/// In-place group soft-thresholding. Returns the shrink factor applied
+/// (0.0 means the whole block was zeroed).
+pub fn group_soft_threshold_inplace(x: &mut [f64], t: f64) -> f64 {
+    debug_assert!(t >= 0.0);
+    let n = l2_norm(x);
+    if n <= t {
+        x.fill(0.0);
+        return 0.0;
+    }
+    let shrink = 1.0 - t / n;
+    for v in x.iter_mut() {
+        *v *= shrink;
+    }
+    shrink
+}
+
+/// The fused SGL block prox (paper §6):
+///
+/// ```text
+///   prox(u) = S^gp_{(1−τ) w_g α_g}( S_{τ α_g}(u) )
+/// ```
+///
+/// which is the exact proximal operator of `α_g (τ‖·‖₁ + (1−τ)w_g‖·‖)`.
+/// `a = τ α_g`, `b = (1−τ) w_g α_g`. Works in place on the block.
+pub fn sgl_prox_inplace(u: &mut [f64], a: f64, b: f64) {
+    soft_threshold_inplace(u, a);
+    group_soft_threshold_inplace(u, b);
+}
+
+/// Out-of-place fused SGL block prox.
+pub fn sgl_prox(u: &[f64], a: f64, b: f64) -> Vec<f64> {
+    let mut out = u.to_vec();
+    sgl_prox_inplace(&mut out, a, b);
+    out
+}
+
+/// Projection onto the scaled `ℓ∞` ball `τ B_∞` (used by screening-rule
+/// geometry; `S_τ = Id − Π_{τB_∞}`, paper Notation).
+pub fn project_inf_ball(x: &[f64], t: f64) -> Vec<f64> {
+    x.iter().map(|&v| v.clamp(-t, t)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::{check, check_close, forall};
+
+    #[test]
+    fn scalar_soft_threshold() {
+        assert_eq!(soft_threshold(3.0, 1.0), 2.0);
+        assert_eq!(soft_threshold(-3.0, 1.0), -2.0);
+        assert_eq!(soft_threshold(0.5, 1.0), 0.0);
+        assert_eq!(soft_threshold(-0.5, 1.0), 0.0);
+        assert_eq!(soft_threshold(2.0, 0.0), 2.0);
+    }
+
+    #[test]
+    fn group_soft_threshold_shrinks_or_zeroes() {
+        let x = [3.0, 4.0]; // norm 5
+        assert_eq!(group_soft_threshold(&x, 5.0), vec![0.0, 0.0]);
+        assert_eq!(group_soft_threshold(&x, 10.0), vec![0.0, 0.0]);
+        let y = group_soft_threshold(&x, 2.5);
+        assert_eq!(y, vec![1.5, 2.0]); // factor 0.5
+    }
+
+    #[test]
+    fn identity_decomposition() {
+        // S_t = Id - proj onto tB_inf
+        forall("soft-threshold = Id - projection", 100, |g| {
+            let x = g.vec_f64(1..20, -5.0..5.0);
+            let t = g.f64_in(0.0..3.0);
+            let st = soft_threshold_vec(&x, t);
+            let pj = project_inf_ball(&x, t);
+            for i in 0..x.len() {
+                check_close(st[i] + pj[i], x[i], 1e-12, "S_t + proj = Id")?;
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prox_optimality_condition() {
+        // p = prox(u) of a*||.||_1 + b*||.|| iff
+        // u - p in a*sub||.||_1(p) + b*sub||.||(p).
+        forall("sgl prox optimality", 200, |g| {
+            let u = g.vec_f64(1..15, -5.0..5.0);
+            let a = g.f64_in(0.0..2.0);
+            let b = g.f64_in(0.0..2.0);
+            let p = sgl_prox(&u, a, b);
+            let r: Vec<f64> = u.iter().zip(&p).map(|(x, y)| x - y).collect();
+            let pn = l2_norm(&p);
+            if pn > 0.0 {
+                for i in 0..p.len() {
+                    let grad_l2 = b * p[i] / pn;
+                    let rest = r[i] - grad_l2;
+                    if p[i] != 0.0 {
+                        check_close(rest, a * p[i].signum(), 1e-8, "active coord subgrad")?;
+                    } else {
+                        check(rest.abs() <= a + 1e-10, "inactive coord in [-a,a]")?;
+                    }
+                }
+            } else {
+                // 0 optimal iff residual in a*B_inf + b*B, i.e. ||S_a(u)|| <= b.
+                let s = soft_threshold_vec(&u, a);
+                check(l2_norm(&s) <= b + 1e-10, "zero block optimality")?;
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prox_is_nonexpansive() {
+        forall("prox nonexpansive", 200, |g| {
+            let n = g.usize_in(1..12);
+            let u: Vec<f64> = (0..n).map(|_| g.normal() * 3.0).collect();
+            let v: Vec<f64> = (0..n).map(|_| g.normal() * 3.0).collect();
+            let a = g.f64_in(0.0..2.0);
+            let b = g.f64_in(0.0..2.0);
+            let pu = sgl_prox(&u, a, b);
+            let pv = sgl_prox(&v, a, b);
+            let d_in: f64 = u.iter().zip(&v).map(|(x, y)| (x - y) * (x - y)).sum();
+            let d_out: f64 = pu.iter().zip(&pv).map(|(x, y)| (x - y) * (x - y)).sum();
+            check(d_out <= d_in * (1.0 + 1e-9) + 1e-12, "nonexpansive")
+        });
+    }
+
+    #[test]
+    fn zero_thresholds_are_identity() {
+        let u = [1.0, -2.0, 0.5];
+        assert_eq!(sgl_prox(&u, 0.0, 0.0), u.to_vec());
+    }
+}

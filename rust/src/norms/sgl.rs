@@ -1,0 +1,277 @@
+//! The Sparse-Group Lasso norm `Ω_{τ,w}` (paper Eq. 10), its dual norm
+//! (Eq. 20/23 via the ε-norm), and the dual-ball characterization (Eq. 21).
+
+use super::epsilon::{epsilon_dual_norm, lambda};
+use super::prox::soft_threshold_vec;
+use crate::linalg::ops::{l1_norm, l2_norm};
+use crate::solver::groups::Groups;
+
+/// `ε_g = (1−τ) w_g / (τ + (1−τ) w_g)` — paper Eq. (18).
+#[inline]
+pub fn epsilon_g(tau: f64, w_g: f64) -> f64 {
+    let denom = tau + (1.0 - tau) * w_g;
+    debug_assert!(denom > 0.0, "tau=0 with w_g=0 is excluded (not a norm)");
+    (1.0 - tau) * w_g / denom
+}
+
+/// The SGL norm `Ω_{τ,w}(β) = τ‖β‖₁ + (1−τ) Σ_g w_g ‖β_g‖` (Eq. 10).
+pub fn omega(beta: &[f64], groups: &Groups, tau: f64, w: &[f64]) -> f64 {
+    debug_assert_eq!(beta.len(), groups.p());
+    debug_assert_eq!(w.len(), groups.n_groups());
+    let mut group_part = 0.0;
+    for (g, a, b) in groups.iter() {
+        group_part += w[g] * l2_norm(&beta[a..b]);
+    }
+    tau * l1_norm(beta) + (1.0 - tau) * group_part
+}
+
+/// `Ω` via the ε-dual-norm identity (Eq. 19) — used in tests to cross-check
+/// `omega`.
+pub fn omega_via_epsilon(beta: &[f64], groups: &Groups, tau: f64, w: &[f64]) -> f64 {
+    let mut total = 0.0;
+    for (g, a, b) in groups.iter() {
+        let scale = tau + (1.0 - tau) * w[g];
+        if scale == 0.0 {
+            continue;
+        }
+        let eps = epsilon_g(tau, w[g]);
+        total += scale * epsilon_dual_norm(&beta[a..b], eps);
+    }
+    total
+}
+
+/// The dual norm `Ω^D_{τ,w}(ξ) = max_g ‖ξ_g‖_{ε_g} / (τ + (1−τ)w_g)`
+/// (Eq. 20), evaluated per group with Algorithm 1 (Eq. 23).
+pub fn omega_dual(xi: &[f64], groups: &Groups, tau: f64, w: &[f64]) -> f64 {
+    debug_assert_eq!(xi.len(), groups.p());
+    let mut best = 0.0_f64;
+    for (g, a, b) in groups.iter() {
+        best = best.max(omega_dual_group(&xi[a..b], tau, w[g]));
+    }
+    best
+}
+
+/// Single-group contribution `‖ξ_g‖_{ε_g} / (τ + (1−τ)w_g)`.
+#[inline]
+pub fn omega_dual_group(xi_g: &[f64], tau: f64, w_g: f64) -> f64 {
+    let scale = tau + (1.0 - tau) * w_g;
+    debug_assert!(scale > 0.0);
+    let eps = epsilon_g(tau, w_g);
+    // ||xi_g||_{eps} = Lambda(xi_g, 1-eps, eps)
+    lambda(xi_g, 1.0 - eps, eps) / scale
+}
+
+/// Argmax group of the dual norm (needed by the DST3 rule, App. C) together
+/// with the attained value.
+pub fn omega_dual_argmax(xi: &[f64], groups: &Groups, tau: f64, w: &[f64]) -> (usize, f64) {
+    let mut best = (0, f64::NEG_INFINITY);
+    for (g, a, b) in groups.iter() {
+        let v = omega_dual_group(&xi[a..b], tau, w[g]);
+        if v > best.1 {
+            best = (g, v);
+        }
+    }
+    best
+}
+
+/// Membership test for the dual unit ball via the geometric
+/// characterization (Eq. 21): `∀g, ‖S_τ(ξ_g)‖ ≤ (1−τ) w_g` (within `tol`).
+///
+/// This is an `O(p)` feasibility check — much cheaper than evaluating the
+/// dual norm — and is the paper's "easier way to characterize a dual
+/// feasible point".
+pub fn in_dual_unit_ball(xi: &[f64], groups: &Groups, tau: f64, w: &[f64], tol: f64) -> bool {
+    for (g, a, b) in groups.iter() {
+        let st = soft_threshold_vec(&xi[a..b], tau);
+        if l2_norm(&st) > (1.0 - tau) * w[g] + tol {
+            return false;
+        }
+    }
+    true
+}
+
+/// Naive `O(n_g²)` dual-norm evaluation per group (direct scan over all
+/// candidate active-set sizes without pruning or incremental sums). This is
+/// the baseline that Algorithm 1 improves on; kept for the complexity
+/// benchmark (`benches/bench_dual_norm.rs`) and as another oracle in tests.
+pub fn omega_dual_naive(xi: &[f64], groups: &Groups, tau: f64, w: &[f64]) -> f64 {
+    let mut best = 0.0_f64;
+    for (g, a, b) in groups.iter() {
+        let scale = tau + (1.0 - tau) * w[g];
+        let eps = epsilon_g(tau, w[g]);
+        best = best.max(epsilon_norm_naive(&xi[a..b], eps) / scale);
+    }
+    best
+}
+
+/// Quadratic-time ε-norm: for each candidate active count k, recompute the
+/// sums from scratch and test the root against the interval.
+pub fn epsilon_norm_naive(x: &[f64], eps: f64) -> f64 {
+    let alpha = 1.0 - eps;
+    let r = eps;
+    let mut abs: Vec<f64> = x.iter().map(|v| v.abs()).collect();
+    abs.sort_unstable_by(|a, b| b.partial_cmp(a).unwrap());
+    let norm_inf = abs.first().copied().unwrap_or(0.0);
+    if norm_inf == 0.0 {
+        return 0.0;
+    }
+    if alpha == 0.0 {
+        return l2_norm(x) / r;
+    }
+    if r == 0.0 {
+        return norm_inf / alpha;
+    }
+    let d = abs.len();
+    for k in 1..=d {
+        // O(k) recomputation each time => O(d^2) total.
+        let s: f64 = abs[..k].iter().sum();
+        let s2: f64 = abs[..k].iter().map(|v| v * v).sum();
+        let denom = alpha * alpha * (k as f64) - r * r;
+        let nu = if denom.abs() <= 1e-14 {
+            s2 / (2.0 * alpha * s)
+        } else {
+            let disc = (alpha * alpha * s * s - s2 * denom).max(0.0);
+            (alpha * s - disc.sqrt()) / denom
+        };
+        // Check interval (x_(k+1)/alpha, x_(k)/alpha].
+        let hi = abs[k - 1] / alpha;
+        let lo = if k < d { abs[k] / alpha } else { 0.0 };
+        if nu > lo - 1e-12 * hi.max(1.0) && nu <= hi + 1e-12 * hi.max(1.0) && nu > 0.0 {
+            return nu;
+        }
+    }
+    // Fall back (should not happen): all coordinates active.
+    let s: f64 = abs.iter().sum();
+    let s2: f64 = abs.iter().map(|v| v * v).sum();
+    let denom = alpha * alpha * (d as f64) - r * r;
+    let disc = (alpha * alpha * s * s - s2 * denom).max(0.0);
+    (alpha * s - disc.sqrt()) / denom
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::norms::epsilon::epsilon_norm;
+    use crate::util::proptest::{check, check_close, forall};
+    use crate::util::rng::Pcg;
+
+    fn toy_groups() -> (Groups, Vec<f64>) {
+        let g = Groups::from_sizes(&[2, 3, 1]);
+        let w = g.sqrt_size_weights();
+        (g, w)
+    }
+
+    #[test]
+    fn omega_lasso_and_group_lasso_limits() {
+        let (g, w) = toy_groups();
+        let beta = [1.0, -2.0, 0.0, 3.0, -1.0, 0.5];
+        // tau = 1: pure l1.
+        assert!((omega(&beta, &g, 1.0, &w) - l1_norm(&beta)).abs() < 1e-12);
+        // tau = 0: pure weighted group norm.
+        let gl: f64 = w[0] * l2_norm(&beta[0..2]) + w[1] * l2_norm(&beta[2..5]) + w[2] * 0.5;
+        assert!((omega(&beta, &g, 0.0, &w) - gl).abs() < 1e-12);
+    }
+
+    #[test]
+    fn omega_matches_epsilon_identity() {
+        forall("omega = sum of eps dual norms (Eq 19)", 100, |gen| {
+            let sizes = [2usize, 3, 4, 1];
+            let g = Groups::from_sizes(&sizes);
+            let w = g.sqrt_size_weights();
+            let tau = gen.f64_in(0.01..0.99);
+            let beta: Vec<f64> = (0..g.p()).map(|_| gen.normal()).collect();
+            check_close(
+                omega(&beta, &g, tau, &w),
+                omega_via_epsilon(&beta, &g, tau, &w),
+                1e-9,
+                "Eq 19",
+            )
+        });
+    }
+
+    #[test]
+    fn dual_norm_duality_holds() {
+        // <beta, xi> <= Omega(beta) * Omega^D(xi), with near-tightness over
+        // random search directions.
+        forall("generalized Cauchy-Schwarz", 150, |gen| {
+            let g = Groups::from_sizes(&[3, 2, 4]);
+            let w = g.sqrt_size_weights();
+            let tau = gen.f64_in(0.0..1.0);
+            let beta: Vec<f64> = (0..g.p()).map(|_| gen.normal()).collect();
+            let xi: Vec<f64> = (0..g.p()).map(|_| gen.normal()).collect();
+            let ip: f64 = beta.iter().zip(&xi).map(|(a, b)| a * b).sum();
+            let bound = omega(&beta, &g, tau, &w) * omega_dual(&xi, &g, tau, &w);
+            check(ip.abs() <= bound * (1.0 + 1e-9) + 1e-12, &format!("{ip} vs {bound}"))
+        });
+    }
+
+    #[test]
+    fn dual_ball_characterization_matches_dual_norm() {
+        // Eq (21) <=> Omega^D(xi) <= 1 (Eq 20).
+        forall("dual ball Eq 21 <=> Eq 20", 300, |gen| {
+            let g = Groups::from_sizes(&[2, 3]);
+            let w = g.sqrt_size_weights();
+            let tau = gen.f64_in(0.0..1.0);
+            let xi: Vec<f64> = (0..g.p()).map(|_| gen.normal() * 1.2).collect();
+            let dn = omega_dual(&xi, &g, tau, &w);
+            let inside_ball = in_dual_unit_ball(&xi, &g, tau, &w, 1e-10);
+            // Skip knife-edge cases where the two tests can disagree by
+            // floating-point tolerance.
+            if (dn - 1.0).abs() < 1e-6 {
+                return Ok(());
+            }
+            check(inside_ball == (dn <= 1.0), &format!("dn={dn} inside={inside_ball}"))
+        });
+    }
+
+    #[test]
+    fn dual_norm_scaling_normalizes() {
+        // xi / Omega^D(xi) lies on the dual unit sphere.
+        let (g, w) = toy_groups();
+        let mut rng = Pcg::seeded(3);
+        for _ in 0..20 {
+            let xi: Vec<f64> = (0..g.p()).map(|_| rng.normal()).collect();
+            let tau = rng.uniform();
+            let dn = omega_dual(&xi, &g, tau, &w);
+            if dn == 0.0 {
+                continue;
+            }
+            let scaled: Vec<f64> = xi.iter().map(|v| v / dn).collect();
+            let dn2 = omega_dual(&scaled, &g, tau, &w);
+            assert!((dn2 - 1.0).abs() < 1e-9, "dn2={dn2}");
+        }
+    }
+
+    #[test]
+    fn naive_matches_fast() {
+        forall("naive dual norm == Algorithm 1", 150, |gen| {
+            let g = Groups::from_sizes(&[4, 2, 6]);
+            let w = g.sqrt_size_weights();
+            let tau = gen.f64_in(0.01..0.99);
+            let xi: Vec<f64> = (0..g.p()).map(|_| gen.normal()).collect();
+            check_close(
+                omega_dual(&xi, &g, tau, &w),
+                omega_dual_naive(&xi, &g, tau, &w),
+                1e-8,
+                "naive vs fast",
+            )
+        });
+    }
+
+    #[test]
+    fn epsilon_norm_naive_matches_fast() {
+        forall("naive eps norm", 150, |gen| {
+            let x = gen.vec_normal(1..30);
+            let eps = gen.f64_in(0.01..0.99);
+            check_close(epsilon_norm_naive(&x, eps), epsilon_norm(&x, eps), 1e-8, "eps norm")
+        });
+    }
+
+    #[test]
+    fn epsilon_g_limits() {
+        assert_eq!(epsilon_g(1.0, 3.0), 0.0); // lasso: pure l1
+        assert_eq!(epsilon_g(0.0, 3.0), 1.0); // group lasso: pure l2
+        let e = epsilon_g(0.5, 1.0);
+        assert!((e - 0.5).abs() < 1e-12);
+    }
+}

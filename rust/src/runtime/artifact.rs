@@ -1,0 +1,74 @@
+//! Load-and-execute wrapper for one AOT artifact (`*.hlo.txt`).
+
+use super::client::Runtime;
+use anyhow::{Context, Result};
+use std::path::Path;
+
+/// A compiled XLA executable loaded from an HLO text file.
+pub struct Artifact {
+    pub name: String,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl Artifact {
+    /// Load HLO text and compile it on the runtime's client.
+    pub fn load(rt: &Runtime, path: &Path) -> Result<Artifact> {
+        let name = path
+            .file_stem()
+            .map(|s| s.to_string_lossy().to_string())
+            .unwrap_or_else(|| "artifact".to_string());
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("non-utf8 artifact path")?,
+        )
+        .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = rt
+            .client()
+            .compile(&comp)
+            .with_context(|| format!("compiling artifact {}", path.display()))?;
+        Ok(Artifact { name, exe })
+    }
+
+    /// Execute with the given input literals. The artifacts are lowered
+    /// with `return_tuple=True`, so the single output literal is a tuple;
+    /// this unpacks it into its elements.
+    pub fn execute(&self, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let result = self
+            .exe
+            .execute::<xla::Literal>(inputs)
+            .with_context(|| format!("executing artifact {}", self.name))?;
+        let lit = result[0][0]
+            .to_literal_sync()
+            .with_context(|| format!("fetching result of {}", self.name))?;
+        Ok(lit.to_tuple()?)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::client::{lit_vec, to_vec_f64};
+
+    /// Build a tiny HLO module by hand (via XlaBuilder -> proto text is not
+    /// exposed, so instead test against a generated artifact when present).
+    #[test]
+    fn loads_generated_artifact_if_present() {
+        let path = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts/smoke.hlo.txt");
+        if !path.exists() {
+            eprintln!("skipping: {} not built (run `make artifacts`)", path.display());
+            return;
+        }
+        let rt = Runtime::cpu().unwrap();
+        let art = Artifact::load(&rt, &path).unwrap();
+        // smoke artifact: f(x) = (2*x + 1,) for x of shape (4,)
+        let out = art.execute(&[lit_vec(&[1.0, 2.0, 3.0, 4.0])]).unwrap();
+        assert_eq!(out.len(), 1);
+        assert_eq!(to_vec_f64(&out[0]).unwrap(), vec![3.0, 5.0, 7.0, 9.0]);
+    }
+
+    #[test]
+    fn missing_artifact_is_an_error() {
+        let rt = Runtime::cpu().unwrap();
+        assert!(Artifact::load(&rt, Path::new("/nonexistent/foo.hlo.txt")).is_err());
+    }
+}

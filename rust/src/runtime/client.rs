@@ -1,0 +1,87 @@
+//! PJRT CPU client wrapper plus f64 literal helpers.
+
+use crate::linalg::Matrix;
+use anyhow::{Context, Result};
+
+/// Owns the PJRT client. One per process; artifacts borrow it to compile.
+pub struct Runtime {
+    client: xla::PjRtClient,
+}
+
+impl Runtime {
+    /// Create a CPU PJRT client.
+    pub fn cpu() -> Result<Self> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Runtime { client })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    pub fn device_count(&self) -> usize {
+        self.client.device_count()
+    }
+
+    pub(crate) fn client(&self) -> &xla::PjRtClient {
+        &self.client
+    }
+}
+
+/// 1-D f64 literal.
+pub fn lit_vec(v: &[f64]) -> xla::Literal {
+    xla::Literal::vec1(v)
+}
+
+/// 2-D f64 literal from a row-major buffer.
+pub fn lit_mat_row_major(data: &[f64], rows: usize, cols: usize) -> Result<xla::Literal> {
+    anyhow::ensure!(data.len() == rows * cols, "shape mismatch");
+    Ok(xla::Literal::vec1(data).reshape(&[rows as i64, cols as i64])?)
+}
+
+/// 2-D f64 literal from a [`Matrix`] (converts to row-major).
+pub fn lit_matrix(m: &Matrix) -> Result<xla::Literal> {
+    lit_mat_row_major(&m.to_row_major(), m.n_rows(), m.n_cols())
+}
+
+/// Scalar f64 literal.
+pub fn lit_scalar(v: f64) -> xla::Literal {
+    xla::Literal::scalar(v)
+}
+
+/// Extract a Vec<f64> from a literal (any shape; row-major order).
+pub fn to_vec_f64(lit: &xla::Literal) -> Result<Vec<f64>> {
+    Ok(lit.to_vec::<f64>()?)
+}
+
+/// Extract a scalar f64.
+pub fn to_scalar_f64(lit: &xla::Literal) -> Result<f64> {
+    Ok(lit.get_first_element::<f64>()?)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_round_trips() {
+        let v = vec![1.0, -2.5, 3.0];
+        let lit = lit_vec(&v);
+        assert_eq!(to_vec_f64(&lit).unwrap(), v);
+        assert_eq!(to_scalar_f64(&lit_scalar(4.5)).unwrap(), 4.5);
+    }
+
+    #[test]
+    fn matrix_literal_shape() {
+        let m = Matrix::from_row_major(&[1.0, 2.0, 3.0, 4.0, 5.0, 6.0], 2, 3);
+        let lit = lit_matrix(&m).unwrap();
+        assert_eq!(to_vec_f64(&lit).unwrap(), m.to_row_major());
+    }
+
+    #[test]
+    fn client_comes_up() {
+        let rt = Runtime::cpu().unwrap();
+        assert!(rt.device_count() >= 1);
+        assert!(rt.platform().to_lowercase().contains("cpu") || !rt.platform().is_empty());
+    }
+}

@@ -1,0 +1,233 @@
+//! XLA-backed SGL solver: drives the two AOT artifacts
+//! (`ista_epoch.hlo.txt`, `screen.hlo.txt`) in the masked-ISTA scheme.
+//!
+//! The division of labour mirrors the paper's Algorithm 2 at artifact
+//! granularity: the **epoch artifact** runs `n_inner` proximal-gradient
+//! steps over the masked active set; the **screen artifact** computes the
+//! dual-scaled feasible point (Eq. 15), the duality gap, the GAP safe
+//! radius (Thm. 2) and the Theorem-1 tests, returning updated masks. Rust
+//! owns the outer loop, convergence policy, and all state; Python never
+//! runs here.
+
+use super::artifact::Artifact;
+use super::client::{lit_matrix, lit_scalar, lit_vec, to_scalar_f64, to_vec_f64, Runtime};
+use crate::config::toml::TomlDoc;
+use crate::solver::ista::global_lipschitz;
+use crate::solver::problem::SglProblem;
+use anyhow::{ensure, Context, Result};
+use std::path::Path;
+
+/// Shape metadata baked into a set of artifacts (written by `aot.py`).
+#[derive(Clone, Debug, PartialEq)]
+pub struct ArtifactMeta {
+    pub n: usize,
+    pub p: usize,
+    pub n_groups: usize,
+    pub group_size: usize,
+    /// Inner proximal-gradient steps per epoch-artifact call.
+    pub n_inner: usize,
+}
+
+impl ArtifactMeta {
+    /// Parse `meta.toml` from the artifacts directory.
+    pub fn load(dir: &Path) -> Result<Self> {
+        let text = std::fs::read_to_string(dir.join("meta.toml"))
+            .with_context(|| format!("reading {}/meta.toml", dir.display()))?;
+        let doc = TomlDoc::parse(&text)?;
+        let get = |k: &str| -> Result<usize> {
+            doc.get_int("shape", k)
+                .map(|v| v as usize)
+                .with_context(|| format!("meta.toml missing shape.{k}"))
+        };
+        Ok(ArtifactMeta {
+            n: get("n")?,
+            p: get("p")?,
+            n_groups: get("n_groups")?,
+            group_size: get("group_size")?,
+            n_inner: get("n_inner")?,
+        })
+    }
+}
+
+/// Compiled artifact pair + metadata.
+pub struct XlaEngine {
+    pub rt: Runtime,
+    pub meta: ArtifactMeta,
+    ista: Artifact,
+    screen: Artifact,
+}
+
+impl XlaEngine {
+    /// Load and compile the artifacts in `dir` (default `artifacts/`).
+    pub fn load(dir: &Path) -> Result<Self> {
+        let rt = Runtime::cpu()?;
+        let meta = ArtifactMeta::load(dir)?;
+        let ista = Artifact::load(&rt, &dir.join("ista_epoch.hlo.txt"))?;
+        let screen = Artifact::load(&rt, &dir.join("screen.hlo.txt"))?;
+        Ok(XlaEngine { rt, meta, ista, screen })
+    }
+
+    /// Bind a problem to the engine (checks shapes, uploads constants).
+    pub fn session<'e>(&'e self, pb: &SglProblem) -> Result<XlaSession<'e>> {
+        let m = &self.meta;
+        ensure!(pb.n() == m.n, "problem n={} but artifact n={}", pb.n(), m.n);
+        ensure!(pb.p() == m.p, "problem p={} but artifact p={}", pb.p(), m.p);
+        ensure!(
+            pb.groups.is_uniform() == Some(m.group_size),
+            "artifacts require uniform groups of {}",
+            m.group_size
+        );
+        ensure!(pb.n_groups() == m.n_groups, "group count mismatch");
+        let x_lit = lit_matrix(&pb.x)?;
+        let y_lit = lit_vec(&pb.y);
+        let w_lit = lit_vec(&pb.weights);
+        let xjn_lit = lit_vec(&pb.col_norms);
+        let xgn_lit = lit_vec(&pb.group_spectral_norms);
+        let inv_l = 1.0 / global_lipschitz(pb).max(1e-300);
+        let y_norm_sq = crate::linalg::ops::l2_norm_sq(&pb.y);
+        Ok(XlaSession {
+            engine: self,
+            x_lit,
+            y_lit,
+            w_lit,
+            xjn_lit,
+            xgn_lit,
+            inv_l,
+            tau: pb.tau,
+            y_norm_sq,
+        })
+    }
+}
+
+/// Per-problem state: constant literals uploaded once.
+pub struct XlaSession<'e> {
+    engine: &'e XlaEngine,
+    x_lit: xla::Literal,
+    y_lit: xla::Literal,
+    w_lit: xla::Literal,
+    xjn_lit: xla::Literal,
+    xgn_lit: xla::Literal,
+    inv_l: f64,
+    tau: f64,
+    y_norm_sq: f64,
+}
+
+/// Result of an engine solve.
+#[derive(Clone, Debug)]
+pub struct EngineSolveResult {
+    pub beta: Vec<f64>,
+    pub gap: f64,
+    pub converged: bool,
+    /// Outer rounds executed (each = 1 screen + 1 epoch artifact call).
+    pub rounds: usize,
+    pub active_features: usize,
+    pub active_groups: usize,
+}
+
+impl<'e> XlaSession<'e> {
+    /// Run the masked-ISTA solve at one `λ`. `tol` is relative to `‖y‖²`
+    /// (same convention as `solver::cd::SolveOptions::tol`).
+    pub fn solve(
+        &self,
+        lambda: f64,
+        tol: f64,
+        max_rounds: usize,
+        beta0: Option<&[f64]>,
+        screening: bool,
+    ) -> Result<EngineSolveResult> {
+        let m = &self.engine.meta;
+        let tol_abs = tol * self.y_norm_sq.max(f64::MIN_POSITIVE);
+        let mut beta = beta0.map(|b| b.to_vec()).unwrap_or_else(|| vec![0.0; m.p]);
+        ensure!(beta.len() == m.p, "beta0 length mismatch");
+        let mut feat_mask = vec![1.0_f64; m.p];
+        let mut group_mask = vec![1.0_f64; m.n_groups];
+        let lam_lit = lit_scalar(lambda);
+        let tau_lit = lit_scalar(self.tau);
+        let invl_lit = lit_scalar(self.inv_l);
+        let mut gap = f64::INFINITY;
+        let mut rounds = 0usize;
+        let mut converged = false;
+
+        for round in 0..max_rounds {
+            rounds = round + 1;
+            // ---- screen + gap
+            let outs = self.engine.screen.execute(&[
+                self.x_lit.clone(),
+                self.y_lit.clone(),
+                lit_vec(&beta),
+                lit_vec(&feat_mask),
+                lit_vec(&group_mask),
+                self.w_lit.clone(),
+                self.xjn_lit.clone(),
+                self.xgn_lit.clone(),
+                lam_lit.clone(),
+                tau_lit.clone(),
+            ])?;
+            ensure!(outs.len() == 4, "screen artifact must return 4 outputs");
+            gap = to_scalar_f64(&outs[0])?;
+            let _radius = to_scalar_f64(&outs[1])?;
+            if screening {
+                feat_mask = to_vec_f64(&outs[2])?;
+                group_mask = to_vec_f64(&outs[3])?;
+                // Enforce mask-consistency on beta (screened coords -> 0).
+                for (b, &fm) in beta.iter_mut().zip(&feat_mask) {
+                    if fm == 0.0 {
+                        *b = 0.0;
+                    }
+                }
+            }
+            if gap <= tol_abs {
+                converged = true;
+                break;
+            }
+            // ---- one epoch artifact call (n_inner prox-gradient steps)
+            let outs = self.engine.ista.execute(&[
+                self.x_lit.clone(),
+                self.y_lit.clone(),
+                lit_vec(&beta),
+                lit_vec(&feat_mask),
+                self.w_lit.clone(),
+                lam_lit.clone(),
+                tau_lit.clone(),
+                invl_lit.clone(),
+            ])?;
+            ensure!(outs.len() == 1, "ista artifact must return 1 output");
+            beta = to_vec_f64(&outs[0])?;
+        }
+
+        Ok(EngineSolveResult {
+            gap,
+            converged,
+            rounds,
+            active_features: feat_mask.iter().filter(|&&v| v != 0.0).count(),
+            active_groups: group_mask.iter().filter(|&&v| v != 0.0).count(),
+            beta,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn meta_parses() {
+        let dir = std::env::temp_dir().join(format!("sgl-meta-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(
+            dir.join("meta.toml"),
+            "[shape]\nn = 100\np = 1000\nn_groups = 100\ngroup_size = 10\nn_inner = 10\n",
+        )
+        .unwrap();
+        let m = ArtifactMeta::load(&dir).unwrap();
+        assert_eq!(
+            m,
+            ArtifactMeta { n: 100, p: 1000, n_groups: 100, group_size: 10, n_inner: 10 }
+        );
+    }
+
+    #[test]
+    fn missing_meta_is_error() {
+        assert!(ArtifactMeta::load(Path::new("/nonexistent")).is_err());
+    }
+}

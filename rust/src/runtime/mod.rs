@@ -1,0 +1,14 @@
+//! PJRT runtime: loads the AOT-compiled HLO artifacts produced by
+//! `python/compile/aot.py` and executes them from the Rust solve path.
+//!
+//! Interchange is **HLO text** (`artifacts/*.hlo.txt`): jax ≥ 0.5 emits
+//! `HloModuleProto`s with 64-bit instruction ids that the crate's
+//! xla_extension 0.5.1 rejects, while the text parser reassigns ids and
+//! round-trips cleanly (see /opt/xla-example/README.md).
+
+pub mod artifact;
+pub mod client;
+pub mod engine;
+
+pub use artifact::Artifact;
+pub use client::Runtime;

@@ -1,0 +1,87 @@
+//! The dynamic safe sphere, the App. C extension of Bonnefoy et al. (2014)
+//! to the Sparse-Group Lasso: `B(y/λ, ‖θ_k − y/λ‖)`.
+//!
+//! Validity: `θ̂` is the projection of `y/λ` onto the dual feasible set
+//! (Rmk. 1), so for *any* feasible `θ_k`, `‖θ̂ − y/λ‖ ≤ ‖θ_k − y/λ‖`. The
+//! center stays at `y/λ` but the radius improves as the dual-scaled
+//! iterates `θ_k` approach `θ̂`; it converges to `‖θ̂ − y/λ‖ > 0`, not to
+//! zero — the structural gap to the GAP safe sphere.
+
+use super::{RuleKind, ScreeningRule, Sphere};
+use crate::solver::duality::DualSnapshot;
+use crate::solver::problem::SglProblem;
+
+pub struct DynamicRule {
+    xty: Vec<f64>,
+}
+
+impl DynamicRule {
+    pub fn new(pb: &SglProblem) -> Self {
+        DynamicRule { xty: pb.x.tmatvec(&pb.y) }
+    }
+}
+
+impl ScreeningRule for DynamicRule {
+    fn kind(&self) -> RuleKind {
+        RuleKind::Dynamic
+    }
+
+    fn sphere(&mut self, pb: &SglProblem, lambda: f64, snap: &DualSnapshot) -> Option<Sphere> {
+        let radius = snap.dist_to_y_over_lambda(&pb.y, lambda);
+        let xt_center: Vec<f64> = self.xty.iter().map(|v| v / lambda).collect();
+        Some(Sphere { xt_center, radius })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::Matrix;
+    use crate::solver::groups::Groups;
+    use crate::util::rng::Pcg;
+
+    fn problem(seed: u64) -> SglProblem {
+        let groups = Groups::from_sizes(&[3, 2]);
+        let mut rng = Pcg::seeded(seed);
+        let x = Matrix::from_fn(7, groups.p(), |_, _| rng.normal());
+        let y: Vec<f64> = (0..7).map(|_| rng.normal()).collect();
+        SglProblem::new(x, y, groups, 0.5)
+    }
+
+    #[test]
+    fn radius_matches_distance_to_center() {
+        let pb = problem(1);
+        let lambda = 0.6 * pb.lambda_max();
+        let beta = vec![0.0; pb.p()];
+        let snap = DualSnapshot::compute(&pb, &beta, &pb.y, lambda);
+        let mut rule = DynamicRule::new(&pb);
+        let s = rule.sphere(&pb, lambda, &snap).unwrap();
+        let dist: f64 = snap
+            .theta
+            .iter()
+            .zip(&pb.y)
+            .map(|(t, y)| {
+                let d = t - y / lambda;
+                d * d
+            })
+            .sum::<f64>()
+            .sqrt();
+        assert!((s.radius - dist).abs() < 1e-12);
+    }
+
+    #[test]
+    fn tighter_than_static_at_start() {
+        // With beta = 0, theta_k = y/max(lambda, Omega^D(X^T y)) =
+        // lambda_max scaling: ||theta_k - y/lambda|| = ||y||(1/lambda - 1/lmax),
+        // i.e. exactly the static radius; dynamic is never worse.
+        let pb = problem(2);
+        let lambda = 0.4 * pb.lambda_max();
+        let snap = DualSnapshot::compute(&pb, &vec![0.0; pb.p()], &pb.y, lambda);
+        let mut dynr = DynamicRule::new(&pb);
+        let mut statr = super::super::static_rule::StaticRule::new(&pb);
+        let rd = dynr.sphere(&pb, lambda, &snap).unwrap().radius;
+        let rs = statr.sphere(&pb, lambda, &snap).unwrap().radius;
+        assert!(rd <= rs + 1e-12);
+        assert!((rd - rs).abs() < 1e-9, "equal at beta=0: {rd} vs {rs}");
+    }
+}

@@ -1,0 +1,35 @@
+//! No-screening baseline: the plain solver, used as the reference point for
+//! the speed-up factors in Fig. 2c / 3b.
+
+use super::{RuleKind, ScreeningRule, Sphere};
+use crate::solver::duality::DualSnapshot;
+use crate::solver::problem::SglProblem;
+
+pub struct NoRule;
+
+impl ScreeningRule for NoRule {
+    fn kind(&self) -> RuleKind {
+        RuleKind::None
+    }
+
+    fn sphere(&mut self, _pb: &SglProblem, _lambda: f64, _snap: &DualSnapshot) -> Option<Sphere> {
+        None
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::Matrix;
+    use crate::solver::groups::Groups;
+
+    #[test]
+    fn produces_no_sphere() {
+        let groups = Groups::from_sizes(&[2]);
+        let x = Matrix::from_row_major(&[1.0, 0.0, 0.0, 1.0], 2, 2);
+        let pb = SglProblem::new(x, vec![1.0, 2.0], groups, 0.5);
+        let snap = DualSnapshot::compute(&pb, &[0.0, 0.0], &pb.y.clone(), 1.0);
+        assert!(NoRule.sphere(&pb, 1.0, &snap).is_none());
+        assert_eq!(NoRule.kind(), RuleKind::None);
+    }
+}

@@ -1,0 +1,91 @@
+//! The static safe sphere, the App. C extension of El Ghaoui et al. (2012)
+//! to the Sparse-Group Lasso: `B(y/λ, ‖y/λ_max − y/λ‖)`.
+//!
+//! Validity: `y/λ_max` is dual feasible and `θ̂ = Π_Δ(y/λ)` (Rmk. 1), so
+//! the distance from `y/λ` to `θ̂` is at most the distance to any feasible
+//! point. The sphere never changes during the solve — hence "static" — and
+//! its radius does not vanish, which caps how much it can ever screen.
+
+use super::{RuleKind, ScreeningRule, Sphere};
+use crate::linalg::ops::l2_norm;
+use crate::solver::duality::DualSnapshot;
+use crate::solver::problem::SglProblem;
+
+pub struct StaticRule {
+    /// `Xᵀy`, reused as the sphere center correlation `Xᵀ(y/λ) = Xᵀy/λ`.
+    xty: Vec<f64>,
+    y_norm: f64,
+    lambda_max: f64,
+}
+
+impl StaticRule {
+    pub fn new(pb: &SglProblem) -> Self {
+        let xty = pb.x.tmatvec(&pb.y);
+        let y_norm = l2_norm(&pb.y);
+        let lambda_max = pb.lambda_max();
+        StaticRule { xty, y_norm, lambda_max }
+    }
+}
+
+impl ScreeningRule for StaticRule {
+    fn kind(&self) -> RuleKind {
+        RuleKind::Static
+    }
+
+    fn sphere(&mut self, _pb: &SglProblem, lambda: f64, _snap: &DualSnapshot) -> Option<Sphere> {
+        // ||y/lmax - y/lambda|| = ||y|| * |1/lambda - 1/lmax|.
+        let radius = self.y_norm * (1.0 / lambda - 1.0 / self.lambda_max).abs();
+        let xt_center: Vec<f64> = self.xty.iter().map(|v| v / lambda).collect();
+        Some(Sphere { xt_center, radius })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::Matrix;
+    use crate::solver::groups::Groups;
+    use crate::util::rng::Pcg;
+
+    fn problem(seed: u64) -> SglProblem {
+        let groups = Groups::from_sizes(&[2, 3]);
+        let mut rng = Pcg::seeded(seed);
+        let x = Matrix::from_fn(6, groups.p(), |_, _| rng.normal());
+        let y: Vec<f64> = (0..6).map(|_| rng.normal()).collect();
+        SglProblem::new(x, y, groups, 0.3)
+    }
+
+    #[test]
+    fn radius_zero_at_lambda_max() {
+        let pb = problem(1);
+        let mut rule = StaticRule::new(&pb);
+        let snap = DualSnapshot::compute(&pb, &vec![0.0; pb.p()], &pb.y, pb.lambda_max());
+        let s = rule.sphere(&pb, pb.lambda_max(), &snap).unwrap();
+        assert!(s.radius < 1e-12);
+    }
+
+    #[test]
+    fn radius_grows_as_lambda_shrinks() {
+        let pb = problem(2);
+        let mut rule = StaticRule::new(&pb);
+        let lmax = pb.lambda_max();
+        let snap = DualSnapshot::compute(&pb, &vec![0.0; pb.p()], &pb.y, lmax);
+        let r1 = rule.sphere(&pb, 0.5 * lmax, &snap).unwrap().radius;
+        let r2 = rule.sphere(&pb, 0.1 * lmax, &snap).unwrap().radius;
+        assert!(r2 > r1 && r1 > 0.0);
+    }
+
+    #[test]
+    fn center_is_scaled_xty() {
+        let pb = problem(3);
+        let mut rule = StaticRule::new(&pb);
+        let lambda = 0.7 * pb.lambda_max();
+        let snap = DualSnapshot::compute(&pb, &vec![0.0; pb.p()], &pb.y, lambda);
+        let s = rule.sphere(&pb, lambda, &snap).unwrap();
+        let explicit: Vec<f64> =
+            pb.x.tmatvec(&pb.y).iter().map(|v| v / lambda).collect();
+        for (a, b) in s.xt_center.iter().zip(&explicit) {
+            assert!((a - b).abs() < 1e-12);
+        }
+    }
+}

@@ -1,0 +1,422 @@
+//! ISTA-BC: block coordinate descent with dynamic GAP safe screening —
+//! paper Algorithm 2.
+//!
+//! Each epoch sweeps the active groups cyclically. For group `g` the update
+//! is the Majorization-Minimization step of §6:
+//!
+//! ```text
+//!   β_g ← S^gp_{(1−τ) w_g α_g} ( S_{τ α_g} ( β_g + X_gᵀρ / L_g ) ),
+//!   α_g = λ / L_g,   L_g = ‖X_g‖₂²,
+//! ```
+//!
+//! with the residual `ρ = y − Xβ` maintained incrementally (`O(n)` per
+//! touched coordinate). Every `f_ce` epochs (paper default: 10) the duality
+//! gap is evaluated: it provides both the stopping test and — through the
+//! configured [`ScreeningRule`] — a safe sphere used to eliminate variables.
+
+use super::duality::DualSnapshot;
+use super::problem::SglProblem;
+use crate::norms::prox::sgl_prox_inplace;
+use crate::screening::{apply_sphere, make_rule, ActiveSet, RuleKind, ScreeningRule};
+use crate::util::timer::Stopwatch;
+
+/// Solver options (paper defaults).
+#[derive(Clone, Debug)]
+pub struct SolveOptions {
+    /// Target duality gap, **relative to `‖y‖²`** (the paper sweeps
+    /// 1e-2 .. 1e-8). The solver stops when `P(β) − D(θ) ≤ tol·‖y‖²`,
+    /// matching the authors' implementation (and scikit-learn's
+    /// convention) — an absolute gap would not be scale-free across
+    /// datasets.
+    pub tol: f64,
+    /// Maximum number of epochs (full passes over active variables).
+    pub max_epochs: usize,
+    /// Gap-evaluation / screening frequency in epochs (`f_ce`, paper: 10).
+    pub fce: usize,
+    /// Screening rule to apply at every gap evaluation.
+    pub rule: RuleKind,
+    /// Record per-check active-set statistics (Fig. 2a/2b need them;
+    /// benches turn this off).
+    pub record_history: bool,
+}
+
+impl Default for SolveOptions {
+    fn default() -> Self {
+        SolveOptions {
+            tol: 1e-8,
+            max_epochs: 20_000,
+            fce: 10,
+            rule: RuleKind::GapSafe,
+            record_history: true,
+        }
+    }
+}
+
+/// One gap-evaluation checkpoint.
+#[derive(Clone, Debug)]
+pub struct CheckEvent {
+    pub epoch: usize,
+    pub gap: f64,
+    pub radius: f64,
+    pub active_features: usize,
+    pub active_groups: usize,
+    /// Seconds since solve start.
+    pub elapsed_s: f64,
+}
+
+/// Result of a single-λ solve.
+#[derive(Clone, Debug)]
+pub struct SolveResult {
+    pub beta: Vec<f64>,
+    pub gap: f64,
+    pub epochs: usize,
+    pub converged: bool,
+    pub elapsed_s: f64,
+    pub active: ActiveSet,
+    pub history: Vec<CheckEvent>,
+    /// Total number of gap evaluations (each costs one `Xᵀρ`).
+    pub gap_evals: usize,
+}
+
+/// Solve one SGL problem at a single `λ` with warm start `beta0`.
+pub fn solve(
+    pb: &SglProblem,
+    lambda: f64,
+    beta0: Option<&[f64]>,
+    opts: &SolveOptions,
+) -> SolveResult {
+    let mut rule = make_rule(opts.rule, pb);
+    solve_with_rule(pb, lambda, beta0, opts, rule.as_mut())
+}
+
+/// Solve with a caller-provided rule instance (path solves construct the
+/// rule once and reuse its precomputations across the grid).
+pub fn solve_with_rule(
+    pb: &SglProblem,
+    lambda: f64,
+    beta0: Option<&[f64]>,
+    opts: &SolveOptions,
+    rule: &mut dyn ScreeningRule,
+) -> SolveResult {
+    assert!(lambda > 0.0, "lambda must be positive");
+    let p = pb.p();
+    let sw = Stopwatch::start();
+    // Relative-to-||y||^2 stopping threshold (see SolveOptions::tol).
+    let tol_abs = opts.tol * crate::linalg::ops::l2_norm_sq(&pb.y).max(f64::MIN_POSITIVE);
+
+    let mut beta = match beta0 {
+        Some(b) => {
+            assert_eq!(b.len(), p);
+            b.to_vec()
+        }
+        None => vec![0.0; p],
+    };
+    // rho = y - X beta.
+    let mut rho = pb.y.clone();
+    if beta.iter().any(|&b| b != 0.0) {
+        let xb = pb.x.matvec(&beta);
+        for (r, v) in rho.iter_mut().zip(&xb) {
+            *r -= v;
+        }
+    }
+
+    let mut active = ActiveSet::full(&pb.groups);
+    // Compact iteration structures, rebuilt whenever screening fires.
+    let mut active_groups: Vec<usize> = (0..pb.n_groups()).collect();
+    let mut group_feats: Vec<Vec<usize>> =
+        pb.groups.iter().map(|(_, a, b)| (a..b).collect()).collect();
+
+    let mut history = Vec::new();
+    let mut gap = f64::INFINITY;
+    let mut gap_evals = 0usize;
+    let mut converged = false;
+    let mut epochs_done = 0usize;
+    // Scratch block buffer sized to the largest group.
+    let max_group = (0..pb.n_groups()).map(|g| pb.groups.size(g)).max().unwrap_or(0);
+    let mut block = vec![0.0; max_group];
+
+    for epoch in 0..opts.max_epochs {
+        // ---- gap evaluation + screening every fce epochs (incl. epoch 0)
+        if epoch % opts.fce == 0 {
+            // Refresh the residual from scratch every 10th check: the
+            // incremental updates accumulate drift over thousands of
+            // epochs, which would make the gap (and hence the safe radius)
+            // dishonest. Every check would cost one extra matvec (§Perf);
+            // the radius floor in DualSnapshot covers the short horizon.
+            if gap_evals % 10 == 0 {
+                pb.x.matvec_into(&beta, &mut rho);
+                for (r, y) in rho.iter_mut().zip(&pb.y) {
+                    *r = y - *r;
+                }
+            }
+            let snap = DualSnapshot::compute(pb, &beta, &rho, lambda);
+            gap = snap.gap;
+            gap_evals += 1;
+            // Screen first (even on the converging check: the final active
+            // sets reported for Fig. 2a/2b use the tightest sphere).
+            if let Some(sphere) = rule.sphere(pb, lambda, &snap) {
+                let out = apply_sphere(pb, &sphere, &mut active, &mut beta, &mut rho);
+                if out.features_screened > 0 {
+                    // Rebuild the compact active structures.
+                    active_groups =
+                        (0..pb.n_groups()).filter(|&g| active.group[g]).collect();
+                    for g in 0..pb.n_groups() {
+                        group_feats[g] = active.active_in_group(&pb.groups, g);
+                    }
+                }
+                if out.beta_changed && gap <= tol_abs {
+                    // Screening zeroed nonzero coords on a converging check:
+                    // the cached gap is stale, recompute before deciding.
+                    let snap2 = DualSnapshot::compute(pb, &beta, &rho, lambda);
+                    gap = snap2.gap;
+                    gap_evals += 1;
+                }
+            }
+            if opts.record_history {
+                history.push(CheckEvent {
+                    epoch,
+                    gap,
+                    radius: snap.radius,
+                    active_features: active.n_active_features(),
+                    active_groups: active.n_active_groups(),
+                    elapsed_s: sw.elapsed_s(),
+                });
+            }
+            if gap <= tol_abs {
+                converged = true;
+                epochs_done = epoch;
+                break;
+            }
+        }
+
+        // ---- one cyclic pass over the active groups
+        for &g in &active_groups {
+            let feats = &group_feats[g];
+            if feats.is_empty() {
+                continue;
+            }
+            let lg = pb.lipschitz[g];
+            if lg == 0.0 {
+                continue;
+            }
+            let alpha_g = lambda / lg;
+            let d = feats.len();
+            // u = beta_g + X_g^T rho / L_g  (restricted to active features)
+            for (k, &j) in feats.iter().enumerate() {
+                let xj = pb.x.col(j);
+                block[k] = beta[j] + crate::linalg::ops::dot(xj, &rho) / lg;
+            }
+            sgl_prox_inplace(
+                &mut block[..d],
+                pb.tau * alpha_g,
+                (1.0 - pb.tau) * pb.weights[g] * alpha_g,
+            );
+            // Apply deltas and maintain rho.
+            for (k, &j) in feats.iter().enumerate() {
+                let delta = block[k] - beta[j];
+                if delta != 0.0 {
+                    beta[j] = block[k];
+                    let xj = pb.x.col(j);
+                    for (ri, xi) in rho.iter_mut().zip(xj) {
+                        *ri -= delta * xi;
+                    }
+                }
+            }
+        }
+        epochs_done = epoch + 1;
+    }
+
+    if !converged {
+        // Final gap evaluation so the caller sees the true terminal gap.
+        let snap = DualSnapshot::compute(pb, &beta, &rho, lambda);
+        gap = snap.gap;
+        gap_evals += 1;
+        converged = gap <= tol_abs;
+    }
+
+    SolveResult {
+        beta,
+        gap,
+        epochs: epochs_done,
+        converged,
+        elapsed_s: sw.elapsed_s(),
+        active,
+        history,
+        gap_evals,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::Matrix;
+    use crate::norms::sgl::omega;
+    use crate::solver::duality::duality_gap;
+    use crate::solver::groups::Groups;
+    use crate::util::rng::Pcg;
+
+    pub fn random_problem(n: usize, sizes: &[usize], tau: f64, seed: u64) -> SglProblem {
+        let groups = Groups::from_sizes(sizes);
+        let p = groups.p();
+        let mut rng = Pcg::seeded(seed);
+        let x = Matrix::from_fn(n, p, |_, _| rng.normal());
+        // Planted sparse model.
+        let mut beta_true = vec![0.0; p];
+        beta_true[0] = 2.0;
+        beta_true[1] = -1.5;
+        if p > 4 {
+            beta_true[4] = 1.0;
+        }
+        let xb = x.matvec(&beta_true);
+        let y: Vec<f64> = xb.iter().map(|v| v + 0.01 * rng.normal()).collect();
+        SglProblem::new(x, y, groups, tau)
+    }
+
+    #[test]
+    fn converges_to_tolerance() {
+        let pb = random_problem(30, &[3, 3, 3, 3], 0.3, 1);
+        let lambda = 0.1 * pb.lambda_max();
+        let res = solve(&pb, lambda, None, &SolveOptions::default());
+        assert!(res.converged, "gap={}", res.gap);
+        let tol_abs = 1e-8 * pb.y.iter().map(|v| v * v).sum::<f64>();
+        assert!(res.gap <= tol_abs);
+        // Verify gap independently.
+        let g = duality_gap(&pb, &res.beta, lambda);
+        assert!(g <= 1.01 * tol_abs, "true gap {g}");
+    }
+
+    #[test]
+    fn all_rules_reach_same_objective() {
+        let pb = random_problem(25, &[4, 4, 4], 0.4, 2);
+        let lambda = 0.15 * pb.lambda_max();
+        let mut objectives = Vec::new();
+        for rule in RuleKind::all() {
+            let opts = SolveOptions { rule, tol: 1e-10, ..Default::default() };
+            let res = solve(&pb, lambda, None, &opts);
+            assert!(res.converged, "{:?} gap={}", rule, res.gap);
+            let xb = pb.x.matvec(&res.beta);
+            let rho: Vec<f64> = pb.y.iter().zip(&xb).map(|(y, v)| y - v).collect();
+            let obj = 0.5 * rho.iter().map(|r| r * r).sum::<f64>()
+                + lambda * omega(&res.beta, &pb.groups, pb.tau, &pb.weights);
+            objectives.push(obj);
+        }
+        for o in &objectives[1..] {
+            assert!((o - objectives[0]).abs() < 1e-7, "{objectives:?}");
+        }
+    }
+
+    #[test]
+    fn screening_is_safe_against_reference() {
+        // Any variable screened along the way must be zero in a
+        // high-precision no-screening reference solution.
+        let pb = random_problem(20, &[2, 2, 2, 2, 2], 0.5, 3);
+        let lambda = 0.3 * pb.lambda_max();
+        let reference = solve(
+            &pb,
+            lambda,
+            None,
+            &SolveOptions { rule: RuleKind::None, tol: 1e-12, ..Default::default() },
+        );
+        for rule in [RuleKind::Static, RuleKind::Dynamic, RuleKind::Dst3, RuleKind::GapSafe] {
+            let res = solve(
+                &pb,
+                lambda,
+                None,
+                &SolveOptions { rule, tol: 1e-10, ..Default::default() },
+            );
+            for j in 0..pb.p() {
+                if !res.active.feature[j] {
+                    assert!(
+                        reference.beta[j].abs() < 1e-6,
+                        "{rule:?} screened feature {j} with ref beta {}",
+                        reference.beta[j]
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn warm_start_converges_faster() {
+        let pb = random_problem(30, &[3, 3, 3, 3], 0.3, 4);
+        let lmax = pb.lambda_max();
+        let opts = SolveOptions { tol: 1e-10, ..Default::default() };
+        let first = solve(&pb, 0.5 * lmax, None, &opts);
+        let cold = solve(&pb, 0.4 * lmax, None, &opts);
+        let warm = solve(&pb, 0.4 * lmax, Some(&first.beta), &opts);
+        assert!(warm.epochs <= cold.epochs, "warm {} vs cold {}", warm.epochs, cold.epochs);
+        assert!(warm.converged && cold.converged);
+    }
+
+    #[test]
+    fn lambda_above_max_yields_zero() {
+        let pb = random_problem(15, &[3, 3], 0.6, 5);
+        let res = solve(&pb, 1.1 * pb.lambda_max(), None, &SolveOptions::default());
+        assert!(res.converged);
+        assert!(res.beta.iter().all(|&b| b == 0.0));
+        assert_eq!(res.epochs, 0);
+    }
+
+    #[test]
+    fn gap_safe_screens_most() {
+        // At moderately large lambda, GAP safe should end with no more
+        // active features than the static rule.
+        let pb = random_problem(40, &[5; 8], 0.2, 6);
+        let lambda = 0.5 * pb.lambda_max();
+        let opts = |rule| SolveOptions { rule, tol: 1e-8, ..Default::default() };
+        let gap = solve(&pb, lambda, None, &opts(RuleKind::GapSafe));
+        let stat = solve(&pb, lambda, None, &opts(RuleKind::Static));
+        assert!(
+            gap.active.n_active_features() <= stat.active.n_active_features(),
+            "gap {} vs static {}",
+            gap.active.n_active_features(),
+            stat.active.n_active_features()
+        );
+    }
+
+    #[test]
+    fn history_is_recorded_and_monotone_active() {
+        let pb = random_problem(25, &[4, 4, 4], 0.3, 7);
+        let res = solve(&pb, 0.2 * pb.lambda_max(), None, &SolveOptions::default());
+        assert!(!res.history.is_empty());
+        for w in res.history.windows(2) {
+            assert!(w[1].active_features <= w[0].active_features);
+            assert!(w[1].epoch > w[0].epoch);
+        }
+    }
+
+    #[test]
+    fn lasso_special_case_matches_soft_threshold_on_orthogonal_design() {
+        // Orthonormal X (identity): lasso solution = S_lambda(y).
+        let n = 6;
+        let x = Matrix::scaled_identity(n, 1.0);
+        let y = vec![3.0, -2.0, 0.5, 0.0, 1.5, -4.0];
+        let groups = Groups::uniform(n, 1);
+        // weights sqrt(1) = 1; tau=1 => pure lasso.
+        let pb = SglProblem::new(x, y.clone(), groups, 1.0);
+        let lambda = 1.0;
+        let res = solve(&pb, lambda, None, &SolveOptions { tol: 1e-12, ..Default::default() });
+        for j in 0..n {
+            let expect = crate::norms::prox::soft_threshold(y[j], lambda);
+            assert!((res.beta[j] - expect).abs() < 1e-9, "j={j}");
+        }
+    }
+
+    #[test]
+    fn group_lasso_special_case_on_orthogonal_design() {
+        // X = I, groups of 2, tau=0, w_g=1: solution = block-soft(y).
+        let n = 6;
+        let x = Matrix::scaled_identity(n, 1.0);
+        let y = vec![3.0, 4.0, 0.1, 0.1, -1.0, 0.0];
+        let groups = Groups::uniform(3, 2);
+        let pb = SglProblem::with_weights(x, y.clone(), groups, 0.0, vec![1.0; 3]);
+        let lambda = 1.0;
+        let res = solve(&pb, lambda, None, &SolveOptions { tol: 1e-12, ..Default::default() });
+        for (g, a, b) in pb.groups.iter() {
+            let expect = crate::norms::prox::group_soft_threshold(&y[a..b], lambda);
+            for (k, j) in (a..b).enumerate() {
+                assert!((res.beta[j] - expect[k]).abs() < 1e-9, "g={g} j={j}");
+            }
+        }
+    }
+}

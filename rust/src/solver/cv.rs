@@ -1,0 +1,172 @@
+//! Training/test validation over the `(λ, τ)` grid — the protocol behind
+//! Fig. 3a: split observations 50/50, solve the path to gap `1e-8` on the
+//! training half for each `τ ∈ {0, 0.1, …, 1}`, and report held-out
+//! prediction error; pick the best `(τ★, λ★)`.
+
+use super::path::{solve_path, PathOptions};
+use super::problem::SglProblem;
+use crate::linalg::Matrix;
+use crate::solver::groups::Groups;
+use crate::util::pool::parallel_map;
+use crate::util::rng::Pcg;
+
+/// A train/test row split.
+#[derive(Clone, Debug)]
+pub struct Split {
+    pub train: Vec<usize>,
+    pub test: Vec<usize>,
+}
+
+/// Random split with the given training fraction.
+pub fn split_rows(n: usize, train_frac: f64, seed: u64) -> Split {
+    let mut idx: Vec<usize> = (0..n).collect();
+    let mut rng = Pcg::seeded(seed);
+    rng.shuffle(&mut idx);
+    let n_train = ((n as f64) * train_frac).round() as usize;
+    let n_train = n_train.clamp(1, n - 1);
+    let mut train = idx[..n_train].to_vec();
+    let mut test = idx[n_train..].to_vec();
+    train.sort_unstable();
+    test.sort_unstable();
+    Split { train, test }
+}
+
+/// Validation-curve output for one `τ`.
+#[derive(Clone, Debug)]
+pub struct TauCurve {
+    pub tau: f64,
+    pub lambdas: Vec<f64>,
+    /// Held-out mean squared prediction error per λ.
+    pub test_mse: Vec<f64>,
+}
+
+/// Full grid result (Fig. 3a data) plus the selected model.
+#[derive(Clone, Debug)]
+pub struct CvResult {
+    pub curves: Vec<TauCurve>,
+    pub best_tau: f64,
+    pub best_lambda: f64,
+    pub best_mse: f64,
+    /// Coefficients refit on the training half at `(τ★, λ★)`.
+    pub best_beta: Vec<f64>,
+}
+
+/// Mean squared error of predictions `X β` against `y`.
+pub fn prediction_mse(x: &Matrix, y: &[f64], beta: &[f64]) -> f64 {
+    let pred = x.matvec(beta);
+    let n = y.len().max(1);
+    y.iter().zip(&pred).map(|(a, b)| (a - b) * (a - b)).sum::<f64>() / n as f64
+}
+
+/// Run the τ-grid validation. `threads` parallelizes across τ values (each
+/// path is solved independently on the training half).
+pub fn validate_tau_grid(
+    x: &Matrix,
+    y: &[f64],
+    groups: &Groups,
+    taus: &[f64],
+    path_opts: &PathOptions,
+    split: &Split,
+    threads: usize,
+) -> CvResult {
+    let x_train = x.select_rows(&split.train);
+    let y_train: Vec<f64> = split.train.iter().map(|&i| y[i]).collect();
+    let x_test = x.select_rows(&split.test);
+    let y_test: Vec<f64> = split.test.iter().map(|&i| y[i]).collect();
+
+    let outputs = parallel_map(taus.len(), threads, |ti| {
+        let tau = taus[ti];
+        let pb = SglProblem::new(x_train.clone(), y_train.clone(), groups.clone(), tau);
+        let path = solve_path(&pb, path_opts);
+        let mse: Vec<f64> =
+            path.results.iter().map(|r| prediction_mse(&x_test, &y_test, &r.beta)).collect();
+        let betas: Vec<Vec<f64>> = path.results.iter().map(|r| r.beta.clone()).collect();
+        (TauCurve { tau, lambdas: path.lambdas.clone(), test_mse: mse }, betas)
+    });
+
+    let mut best = (0usize, 0usize, f64::INFINITY);
+    for (ti, (curve, _)) in outputs.iter().enumerate() {
+        for (li, &mse) in curve.test_mse.iter().enumerate() {
+            if mse < best.2 {
+                best = (ti, li, mse);
+            }
+        }
+    }
+    let (bt, bl, bmse) = best;
+    CvResult {
+        best_tau: outputs[bt].0.tau,
+        best_lambda: outputs[bt].0.lambdas[bl],
+        best_mse: bmse,
+        best_beta: outputs[bt].1[bl].clone(),
+        curves: outputs.into_iter().map(|(c, _)| c).collect(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::solver::cd::SolveOptions;
+
+    fn planted_data(seed: u64) -> (Matrix, Vec<f64>, Groups) {
+        let groups = Groups::uniform(5, 3);
+        let p = groups.p();
+        let n = 60;
+        let mut rng = Pcg::seeded(seed);
+        let x = Matrix::from_fn(n, p, |_, _| rng.normal());
+        let mut beta = vec![0.0; p];
+        beta[0] = 2.0;
+        beta[1] = 1.0;
+        beta[6] = -1.5;
+        let xb = x.matvec(&beta);
+        let y: Vec<f64> = xb.iter().map(|v| v + 0.05 * rng.normal()).collect();
+        (x, y, groups)
+    }
+
+    #[test]
+    fn split_partitions_rows() {
+        let s = split_rows(20, 0.5, 1);
+        assert_eq!(s.train.len(), 10);
+        assert_eq!(s.test.len(), 10);
+        let mut all: Vec<usize> = s.train.iter().chain(&s.test).copied().collect();
+        all.sort_unstable();
+        assert_eq!(all, (0..20).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn split_extremes_clamped() {
+        let s = split_rows(5, 0.0, 2);
+        assert_eq!(s.train.len(), 1);
+        let s = split_rows(5, 1.0, 3);
+        assert_eq!(s.test.len(), 1);
+    }
+
+    #[test]
+    fn validation_finds_interior_model() {
+        let (x, y, groups) = planted_data(4);
+        let split = split_rows(x.n_rows(), 0.5, 7);
+        let opts = PathOptions {
+            delta: 2.0,
+            t_count: 12,
+            solve: SolveOptions { tol: 1e-6, record_history: false, ..Default::default() },
+        };
+        let cv = validate_tau_grid(&x, &y, &groups, &[0.2, 0.5, 0.8], &opts, &split, 2);
+        assert_eq!(cv.curves.len(), 3);
+        // Best MSE should beat the null model (predicting 0).
+        let y_test: Vec<f64> = split.test.iter().map(|&i| y[i]).collect();
+        let null_mse: f64 =
+            y_test.iter().map(|v| v * v).sum::<f64>() / y_test.len() as f64;
+        assert!(cv.best_mse < null_mse, "{} vs {null_mse}", cv.best_mse);
+        assert!(cv.best_lambda > 0.0);
+        // Error curve is U-ish: best not at the very first lambda.
+        let best_curve = cv.curves.iter().find(|c| c.tau == cv.best_tau).unwrap();
+        assert!(cv.best_mse <= best_curve.test_mse[0]);
+    }
+
+    #[test]
+    fn prediction_mse_zero_for_exact_fit() {
+        let (x, _, _) = planted_data(5);
+        let beta = vec![0.5; x.n_cols()];
+        let y = x.matvec(&beta);
+        assert!(prediction_mse(&x, &y, &beta) < 1e-20);
+    }
+}

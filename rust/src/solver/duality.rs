@@ -1,0 +1,257 @@
+//! Primal/dual objectives, dual-point construction by residual scaling
+//! (paper Eq. 15), duality gap, and the GAP safe radius (Theorem 2).
+
+use super::problem::SglProblem;
+use crate::linalg::ops::{l2_norm_sq, l2_norm};
+use crate::norms::sgl::{omega, omega_dual};
+
+/// Primal objective `P_{λ,τ,w}(β) = ½‖ρ‖² + λΩ(β)` given the residual
+/// `ρ = y − Xβ` (kept up to date by the solvers; never recomputed here).
+pub fn primal_value(pb: &SglProblem, beta: &[f64], residual: &[f64], lambda: f64) -> f64 {
+    0.5 * l2_norm_sq(residual) + lambda * omega(beta, &pb.groups, pb.tau, &pb.weights)
+}
+
+/// Dual objective `D_λ(θ) = ½‖y‖² − λ²/2 ‖θ − y/λ‖²` (Eq. 6).
+pub fn dual_value(y: &[f64], theta: &[f64], lambda: f64) -> f64 {
+    debug_assert_eq!(y.len(), theta.len());
+    let dist_sq: f64 = y
+        .iter()
+        .zip(theta)
+        .map(|(yi, ti)| {
+            let d = ti - yi / lambda;
+            d * d
+        })
+        .sum();
+    0.5 * l2_norm_sq(y) - 0.5 * lambda * lambda * dist_sq
+}
+
+/// A dual-feasible point built from the current residual plus everything
+/// the screening rules need alongside it.
+#[derive(Clone, Debug)]
+pub struct DualSnapshot {
+    /// Dual feasible `θ = ρ / max(λ, Ω^D(Xᵀρ))` (Eq. 15).
+    pub theta: Vec<f64>,
+    /// `Xᵀθ` (reused by every screening test; computing it dominates the
+    /// screening cost so it is built once from `Xᵀρ`).
+    pub xt_theta: Vec<f64>,
+    /// `Ω^D(Xᵀρ)` — the dual norm of the unscaled correlation vector.
+    pub dual_norm_xt_rho: f64,
+    /// Primal objective at the current `β`.
+    pub primal: f64,
+    /// Dual objective at `θ`.
+    pub dual: f64,
+    /// Duality gap `P(β) − D(θ)` (clamped at 0 against round-off).
+    pub gap: f64,
+    /// GAP safe radius `sqrt(2·gap/λ²)` (Theorem 2).
+    pub radius: f64,
+}
+
+impl DualSnapshot {
+    /// Build the snapshot from the current iterate.
+    ///
+    /// `residual` must equal `y − Xβ`. Cost: one `Xᵀρ` product (`O(np)`)
+    /// plus `O(p)` dual-norm work.
+    pub fn compute(pb: &SglProblem, beta: &[f64], residual: &[f64], lambda: f64) -> Self {
+        let xt_rho = pb.x.tmatvec(residual);
+        Self::compute_with_xt_rho(pb, beta, residual, &xt_rho, lambda)
+    }
+
+    /// Variant for callers that already hold `Xᵀρ` (the XLA engine and the
+    /// perf-tuned CD loop reuse buffers).
+    pub fn compute_with_xt_rho(
+        pb: &SglProblem,
+        beta: &[f64],
+        residual: &[f64],
+        xt_rho: &[f64],
+        lambda: f64,
+    ) -> Self {
+        let dual_norm = omega_dual(xt_rho, &pb.groups, pb.tau, &pb.weights);
+        let scale = lambda.max(dual_norm);
+        let theta: Vec<f64> = residual.iter().map(|r| r / scale).collect();
+        let xt_theta: Vec<f64> = xt_rho.iter().map(|v| v / scale).collect();
+        let primal = primal_value(pb, beta, residual, lambda);
+        let dual = dual_value(&pb.y, &theta, lambda);
+        let gap = (primal - dual).max(0.0);
+        // The radius uses a *floored* gap: near convergence the computed
+        // P - D can round to (or below) zero while the true gap is at the
+        // rounding scale of the objectives; a radius-0 sphere would then
+        // unsafely screen boundary-active groups (where Thm. 1 holds with
+        // equality). The floor is the cancellation error scale of P - D.
+        let float_floor = 16.0 * f64::EPSILON * (primal.abs() + dual.abs());
+        let radius = (2.0 * gap.max(float_floor)).sqrt() / lambda;
+        DualSnapshot { theta, xt_theta, dual_norm_xt_rho: dual_norm, primal, dual, gap, radius }
+    }
+
+    /// `‖θ − y/λ‖` — needed by the static/dynamic/DST3 sphere radii.
+    pub fn dist_to_y_over_lambda(&self, y: &[f64], lambda: f64) -> f64 {
+        let d: f64 = self
+            .theta
+            .iter()
+            .zip(y)
+            .map(|(t, yi)| {
+                let d = t - yi / lambda;
+                d * d
+            })
+            .sum();
+        d.sqrt()
+    }
+}
+
+/// Convenience: duality gap for given `β` (recomputes the residual).
+pub fn duality_gap(pb: &SglProblem, beta: &[f64], lambda: f64) -> f64 {
+    let xb = pb.x.matvec(beta);
+    let residual: Vec<f64> = pb.y.iter().zip(&xb).map(|(y, v)| y - v).collect();
+    DualSnapshot::compute(pb, beta, &residual, lambda).gap
+}
+
+/// Sanity helper used across tests: `‖y − Xβ‖` from scratch.
+pub fn residual_norm(pb: &SglProblem, beta: &[f64]) -> f64 {
+    let xb = pb.x.matvec(beta);
+    let r: Vec<f64> = pb.y.iter().zip(&xb).map(|(y, v)| y - v).collect();
+    l2_norm(&r)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::Matrix;
+    use crate::norms::sgl::in_dual_unit_ball;
+    use crate::solver::groups::Groups;
+    use crate::util::rng::Pcg;
+
+    fn random_problem(seed: u64) -> SglProblem {
+        let groups = Groups::from_sizes(&[3, 2, 3]);
+        let mut rng = Pcg::seeded(seed);
+        let x = Matrix::from_fn(12, groups.p(), |_, _| rng.normal());
+        let y: Vec<f64> = (0..12).map(|_| rng.normal()).collect();
+        SglProblem::new(x, y, groups, 0.4)
+    }
+
+    #[test]
+    fn dual_point_is_feasible() {
+        let pb = random_problem(5);
+        let mut rng = Pcg::seeded(99);
+        for _ in 0..20 {
+            let beta: Vec<f64> = (0..pb.p()).map(|_| rng.normal() * 0.1).collect();
+            let xb = pb.x.matvec(&beta);
+            let rho: Vec<f64> = pb.y.iter().zip(&xb).map(|(y, v)| y - v).collect();
+            let lambda = rng.uniform_in(0.1, 2.0) * pb.lambda_max();
+            let snap = DualSnapshot::compute(&pb, &beta, &rho, lambda);
+            let xt_theta = pb.x.tmatvec(&snap.theta);
+            assert!(
+                in_dual_unit_ball(&xt_theta, &pb.groups, pb.tau, &pb.weights, 1e-9),
+                "theta must be dual feasible"
+            );
+            assert!(
+                omega_dual(&xt_theta, &pb.groups, pb.tau, &pb.weights) <= 1.0 + 1e-9
+            );
+        }
+    }
+
+    #[test]
+    fn xt_theta_is_consistent() {
+        let pb = random_problem(6);
+        let beta = vec![0.05; pb.p()];
+        let xb = pb.x.matvec(&beta);
+        let rho: Vec<f64> = pb.y.iter().zip(&xb).map(|(y, v)| y - v).collect();
+        let snap = DualSnapshot::compute(&pb, &beta, &rho, 0.7 * pb.lambda_max());
+        let explicit = pb.x.tmatvec(&snap.theta);
+        for (a, b) in snap.xt_theta.iter().zip(&explicit) {
+            assert!((a - b).abs() < 1e-10);
+        }
+    }
+
+    #[test]
+    fn weak_duality_nonneg_gap() {
+        let pb = random_problem(7);
+        let mut rng = Pcg::seeded(123);
+        for _ in 0..30 {
+            let beta: Vec<f64> = (0..pb.p()).map(|_| rng.normal()).collect();
+            let lambda = rng.uniform_in(0.05, 1.5) * pb.lambda_max();
+            let gap = duality_gap(&pb, &beta, lambda);
+            assert!(gap >= 0.0);
+        }
+    }
+
+    #[test]
+    fn gap_zero_at_trivial_optimum() {
+        // For lambda >= lambda_max, beta = 0 is optimal and theta = y/lmax
+        // ... more precisely theta = y / max(lambda, Omega^D(X^T y)).
+        let pb = random_problem(8);
+        let lmax = pb.lambda_max();
+        let beta = vec![0.0; pb.p()];
+        let gap = duality_gap(&pb, &beta, 1.5 * lmax);
+        assert!(gap < 1e-10, "gap={gap}");
+        // Exactly at lambda_max the same holds.
+        let gap_at = duality_gap(&pb, &beta, lmax);
+        assert!(gap_at < 1e-10, "gap={gap_at}");
+    }
+
+    #[test]
+    fn radius_formula() {
+        let pb = random_problem(9);
+        let beta = vec![0.01; pb.p()];
+        let xb = pb.x.matvec(&beta);
+        let rho: Vec<f64> = pb.y.iter().zip(&xb).map(|(y, v)| y - v).collect();
+        let lambda = 0.5 * pb.lambda_max();
+        let snap = DualSnapshot::compute(&pb, &beta, &rho, lambda);
+        assert!((snap.radius - (2.0 * snap.gap).sqrt() / lambda).abs() < 1e-14);
+        assert!((snap.gap - (snap.primal - snap.dual)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn safe_ball_contains_dual_optimum() {
+        // Theorem 2 smoke test: solve crudely by many ISTA steps, then check
+        // the GAP ball built from an *early* iterate contains the late theta.
+        let pb = random_problem(10);
+        let lambda = 0.3 * pb.lambda_max();
+        // crude proximal gradient with global step 1/L, L = sum Lg
+        let l_total: f64 = pb.lipschitz.iter().sum::<f64>();
+        let mut beta = vec![0.0; pb.p()];
+        let mut snap_early = None;
+        let mut last_snap = None;
+        for it in 0..4000 {
+            let xb = pb.x.matvec(&beta);
+            let rho: Vec<f64> = pb.y.iter().zip(&xb).map(|(y, v)| y - v).collect();
+            let grad = pb.x.tmatvec(&rho); // = -nabla f
+            for j in 0..pb.p() {
+                beta[j] += grad[j] / l_total;
+            }
+            // prox per group
+            for (g, a, b) in pb.groups.iter() {
+                let block = &mut beta[a..b];
+                crate::norms::prox::sgl_prox_inplace(
+                    block,
+                    pb.tau * lambda / l_total,
+                    (1.0 - pb.tau) * pb.weights[g] * lambda / l_total,
+                );
+            }
+            if it == 10 {
+                let xb = pb.x.matvec(&beta);
+                let rho: Vec<f64> = pb.y.iter().zip(&xb).map(|(y, v)| y - v).collect();
+                snap_early = Some(DualSnapshot::compute(&pb, &beta, &rho, lambda));
+            }
+            if it == 3999 {
+                let xb = pb.x.matvec(&beta);
+                let rho: Vec<f64> = pb.y.iter().zip(&xb).map(|(y, v)| y - v).collect();
+                last_snap = Some(DualSnapshot::compute(&pb, &beta, &rho, lambda));
+            }
+        }
+        let early = snap_early.unwrap();
+        let late = last_snap.unwrap();
+        assert!(late.gap < 1e-8, "late gap {}", late.gap);
+        // theta_hat ~ late.theta; must lie in the early safe ball.
+        let dist: f64 = early
+            .theta
+            .iter()
+            .zip(&late.theta)
+            .map(|(a, b)| (a - b) * (a - b))
+            .sum::<f64>()
+            .sqrt();
+        assert!(
+            dist <= early.radius + 1e-6,
+            "dist {dist} > radius {}",
+            early.radius
+        );
+    }
+}

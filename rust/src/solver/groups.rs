@@ -1,0 +1,157 @@
+//! Non-overlapping group partitions of the feature set `[p]` (paper §1,
+//! Notation). Groups are contiguous column ranges; datasets with scattered
+//! group memberships are expected to permute their columns at load time
+//! (`data::Dataset` does this), which also gives the solver cache-friendly
+//! group blocks.
+
+/// A partition of `0..p` into contiguous, non-overlapping groups.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Groups {
+    /// Half-open `(start, end)` column ranges, in order, covering `0..p`.
+    bounds: Vec<(usize, usize)>,
+    /// Map feature index -> group index.
+    group_of: Vec<usize>,
+}
+
+impl Groups {
+    /// `n_groups` groups of identical `size` (the paper's synthetic setup:
+    /// 1000 groups of 10).
+    pub fn uniform(n_groups: usize, size: usize) -> Self {
+        assert!(size > 0, "group size must be positive");
+        Self::from_sizes(&vec![size; n_groups])
+    }
+
+    /// Build from per-group sizes.
+    pub fn from_sizes(sizes: &[usize]) -> Self {
+        assert!(!sizes.is_empty(), "at least one group required");
+        let mut bounds = Vec::with_capacity(sizes.len());
+        let mut group_of = Vec::new();
+        let mut start = 0;
+        for (g, &s) in sizes.iter().enumerate() {
+            assert!(s > 0, "group {g} is empty");
+            bounds.push((start, start + s));
+            group_of.extend(std::iter::repeat(g).take(s));
+            start += s;
+        }
+        Groups { bounds, group_of }
+    }
+
+    /// Total number of features `p`.
+    #[inline]
+    pub fn p(&self) -> usize {
+        self.group_of.len()
+    }
+
+    #[inline]
+    pub fn n_groups(&self) -> usize {
+        self.bounds.len()
+    }
+
+    /// Half-open column range of group `g`.
+    #[inline]
+    pub fn bounds(&self, g: usize) -> (usize, usize) {
+        self.bounds[g]
+    }
+
+    /// Cardinality `n_g`.
+    #[inline]
+    pub fn size(&self, g: usize) -> usize {
+        let (a, b) = self.bounds[g];
+        b - a
+    }
+
+    /// Group index containing feature `j`.
+    #[inline]
+    pub fn group_of(&self, j: usize) -> usize {
+        self.group_of[j]
+    }
+
+    /// Iterate `(g, start, end)`.
+    pub fn iter(&self) -> impl Iterator<Item = (usize, usize, usize)> + '_ {
+        self.bounds.iter().enumerate().map(|(g, &(a, b))| (g, a, b))
+    }
+
+    /// The paper's default weights `w_g = sqrt(n_g)` (Simon et al. 2013).
+    pub fn sqrt_size_weights(&self) -> Vec<f64> {
+        (0..self.n_groups()).map(|g| (self.size(g) as f64).sqrt()).collect()
+    }
+
+    /// True if every group has the same size (required by the fixed-shape
+    /// XLA artifacts; the native solver handles ragged groups).
+    pub fn is_uniform(&self) -> Option<usize> {
+        let s = self.size(0);
+        if (0..self.n_groups()).all(|g| self.size(g) == s) {
+            Some(s)
+        } else {
+            None
+        }
+    }
+
+    /// Restriction of a length-`p` vector to group `g`.
+    #[inline]
+    pub fn slice<'a>(&self, g: usize, x: &'a [f64]) -> &'a [f64] {
+        let (a, b) = self.bounds[g];
+        &x[a..b]
+    }
+
+    /// Mutable restriction of a length-`p` vector to group `g`.
+    #[inline]
+    pub fn slice_mut<'a>(&self, g: usize, x: &'a mut [f64]) -> &'a mut [f64] {
+        let (a, b) = self.bounds[g];
+        &mut x[a..b]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn uniform_partition() {
+        let g = Groups::uniform(3, 4);
+        assert_eq!(g.p(), 12);
+        assert_eq!(g.n_groups(), 3);
+        assert_eq!(g.bounds(1), (4, 8));
+        assert_eq!(g.size(2), 4);
+        assert_eq!(g.is_uniform(), Some(4));
+    }
+
+    #[test]
+    fn ragged_partition() {
+        let g = Groups::from_sizes(&[2, 5, 1]);
+        assert_eq!(g.p(), 8);
+        assert_eq!(g.bounds(0), (0, 2));
+        assert_eq!(g.bounds(1), (2, 7));
+        assert_eq!(g.bounds(2), (7, 8));
+        assert_eq!(g.is_uniform(), None);
+        assert_eq!(g.group_of(0), 0);
+        assert_eq!(g.group_of(6), 1);
+        assert_eq!(g.group_of(7), 2);
+    }
+
+    #[test]
+    fn weights_sqrt_size() {
+        let g = Groups::from_sizes(&[4, 9]);
+        assert_eq!(g.sqrt_size_weights(), vec![2.0, 3.0]);
+    }
+
+    #[test]
+    fn slicing() {
+        let g = Groups::from_sizes(&[2, 3]);
+        let x = [1.0, 2.0, 3.0, 4.0, 5.0];
+        assert_eq!(g.slice(1, &x), &[3.0, 4.0, 5.0]);
+    }
+
+    #[test]
+    fn iter_covers_partition() {
+        let g = Groups::from_sizes(&[1, 2, 3]);
+        let triples: Vec<_> = g.iter().collect();
+        assert_eq!(triples, vec![(0, 0, 1), (1, 1, 3), (2, 3, 6)]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn empty_group_rejected() {
+        Groups::from_sizes(&[2, 0, 1]);
+    }
+}

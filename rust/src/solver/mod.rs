@@ -1,0 +1,25 @@
+//! The Sparse-Group Lasso solver stack:
+//!
+//! - [`groups`] — feature partitions;
+//! - [`problem`] — problem instances + precomputations + `λ_max` (Eq. 22);
+//! - [`duality`] — primal/dual objectives, dual scaling (Eq. 15), GAP
+//!   radius (Thm. 2);
+//! - [`cd`] — ISTA-BC block coordinate descent (Algorithm 2);
+//! - [`ista`] — masked full proximal-gradient (mirrors the XLA artifact);
+//! - [`fista`] — accelerated variant with screening/function restarts;
+//! - [`path`] — warm-started λ-path (§7.1);
+//! - [`cv`] — `(λ, τ)` grid validation (Fig. 3a);
+//! - [`elastic_net`] — App. D reformulation;
+//! - [`strong`] — the *unsafe* sequential strong rules baseline with KKT
+//!   recovery (the contrast the paper draws in §1/§7).
+
+pub mod cd;
+pub mod cv;
+pub mod duality;
+pub mod elastic_net;
+pub mod fista;
+pub mod groups;
+pub mod ista;
+pub mod path;
+pub mod problem;
+pub mod strong;

@@ -1,0 +1,166 @@
+//! λ-path solver with warm starts (paper §7.1).
+//!
+//! The experiments run Algorithm 2 over a non-increasing grid
+//! `λ_t = λ_max · 10^{−δ t/(T−1)}`, warm-starting each solve from the
+//! previous solution ("previous ε-solution" in Algorithm 2). The screening
+//! rule's per-problem precomputations (`Xᵀy`, `λ_max`, DST3 hyperplane) are
+//! shared across the whole path.
+
+use super::cd::{solve_with_rule, SolveOptions, SolveResult};
+use super::problem::SglProblem;
+use crate::screening::make_rule;
+use crate::util::timer::Stopwatch;
+
+/// Path configuration (paper defaults: `δ = 3`, `T = 100`).
+#[derive(Clone, Debug)]
+pub struct PathOptions {
+    pub delta: f64,
+    pub t_count: usize,
+    pub solve: SolveOptions,
+}
+
+impl Default for PathOptions {
+    fn default() -> Self {
+        PathOptions { delta: 3.0, t_count: 100, solve: SolveOptions::default() }
+    }
+}
+
+/// Result of a whole-path solve.
+#[derive(Clone, Debug)]
+pub struct PathResult {
+    pub lambdas: Vec<f64>,
+    pub results: Vec<SolveResult>,
+    /// Total wall-clock for the path (the Fig. 2c / 3b measurement).
+    pub total_s: f64,
+}
+
+impl PathResult {
+    /// Fraction of features active (not screened) per λ at the final check.
+    pub fn active_feature_fractions(&self, p: usize) -> Vec<f64> {
+        self.results.iter().map(|r| r.active.n_active_features() as f64 / p as f64).collect()
+    }
+
+    /// Fraction of groups active per λ.
+    pub fn active_group_fractions(&self, n_groups: usize) -> Vec<f64> {
+        self.results
+            .iter()
+            .map(|r| r.active.n_active_groups() as f64 / n_groups as f64)
+            .collect()
+    }
+
+    /// Total epochs across the path.
+    pub fn total_epochs(&self) -> usize {
+        self.results.iter().map(|r| r.epochs).sum()
+    }
+
+    pub fn all_converged(&self) -> bool {
+        self.results.iter().all(|r| r.converged)
+    }
+}
+
+/// Solve the full path with warm starts.
+pub fn solve_path(pb: &SglProblem, opts: &PathOptions) -> PathResult {
+    let lambda_max = pb.lambda_max();
+    let lambdas = SglProblem::lambda_grid(lambda_max, opts.delta, opts.t_count);
+    solve_path_on_grid(pb, &lambdas, opts)
+}
+
+/// Solve on an explicit λ grid (must be non-increasing for warm starts to
+/// make sense; this is asserted).
+pub fn solve_path_on_grid(pb: &SglProblem, lambdas: &[f64], opts: &PathOptions) -> PathResult {
+    for w in lambdas.windows(2) {
+        assert!(w[1] <= w[0] * (1.0 + 1e-12), "lambda grid must be non-increasing");
+    }
+    let sw = Stopwatch::start();
+    let mut rule = make_rule(opts.solve.rule, pb);
+    let mut results = Vec::with_capacity(lambdas.len());
+    let mut warm: Option<Vec<f64>> = None;
+    for &lambda in lambdas {
+        let res = solve_with_rule(pb, lambda, warm.as_deref(), &opts.solve, rule.as_mut());
+        warm = Some(res.beta.clone());
+        results.push(res);
+    }
+    PathResult { lambdas: lambdas.to_vec(), results, total_s: sw.elapsed_s() }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::Matrix;
+    use crate::screening::RuleKind;
+    use crate::solver::groups::Groups;
+    use crate::util::rng::Pcg;
+
+    fn random_problem(seed: u64) -> SglProblem {
+        let groups = Groups::uniform(6, 3);
+        let p = groups.p();
+        let mut rng = Pcg::seeded(seed);
+        let x = Matrix::from_fn(30, p, |_, _| rng.normal());
+        let mut beta_true = vec![0.0; p];
+        beta_true[0] = 2.0;
+        beta_true[7] = -1.0;
+        let xb = x.matvec(&beta_true);
+        let y: Vec<f64> = xb.iter().map(|v| v + 0.01 * rng.normal()).collect();
+        SglProblem::new(x, y, groups, 0.3)
+    }
+
+    #[test]
+    fn path_solves_all_lambdas() {
+        let pb = random_problem(1);
+        let opts = PathOptions {
+            delta: 2.0,
+            t_count: 10,
+            solve: SolveOptions { tol: 1e-8, ..Default::default() },
+        };
+        let path = solve_path(&pb, &opts);
+        assert_eq!(path.lambdas.len(), 10);
+        assert!(path.all_converged());
+        // First lambda is lambda_max: zero solution.
+        assert!(path.results[0].beta.iter().all(|&b| b == 0.0));
+        // Active fractions increase (weakly) as lambda decreases.
+        let fr = path.active_feature_fractions(pb.p());
+        assert!(fr[0] <= fr[fr.len() - 1] + 1e-12);
+    }
+
+    #[test]
+    fn path_matches_single_solves() {
+        let pb = random_problem(2);
+        let opts = PathOptions {
+            delta: 1.5,
+            t_count: 5,
+            solve: SolveOptions { tol: 1e-10, ..Default::default() },
+        };
+        let path = solve_path(&pb, &opts);
+        for (i, &lambda) in path.lambdas.iter().enumerate() {
+            let single = crate::solver::cd::solve(&pb, lambda, None, &opts.solve);
+            for j in 0..pb.p() {
+                assert!(
+                    (path.results[i].beta[j] - single.beta[j]).abs() < 1e-5,
+                    "lambda {i} feature {j}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn rules_produce_same_path_objectives() {
+        let pb = random_problem(3);
+        for rule in [RuleKind::None, RuleKind::GapSafe] {
+            let opts = PathOptions {
+                delta: 2.0,
+                t_count: 6,
+                solve: SolveOptions { rule, tol: 1e-9, ..Default::default() },
+            };
+            let path = solve_path(&pb, &opts);
+            assert!(path.all_converged(), "{rule:?}");
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "non-increasing")]
+    fn increasing_grid_rejected() {
+        let pb = random_problem(4);
+        let opts = PathOptions::default();
+        solve_path_on_grid(&pb, &[1.0, 2.0], &opts);
+    }
+}

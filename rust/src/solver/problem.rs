@@ -1,0 +1,193 @@
+//! The Sparse-Group Lasso problem instance (paper Eq. 5 with `Ω_{τ,w}`,
+//! Eq. 10) together with the precomputed quantities every solver and
+//! screening rule needs: column norms `‖X_j‖`, block spectral norms
+//! `‖X_g‖₂`, block Lipschitz constants `L_g = ‖X_g‖₂²`, and `λ_max`
+//! (Eq. 22).
+
+use super::groups::Groups;
+use crate::linalg::spectral::spectral_norm;
+use crate::linalg::Matrix;
+use crate::norms::sgl::{omega_dual, omega_dual_argmax};
+
+/// An SGL problem `min_β ½‖y − Xβ‖² + λ Ω_{τ,w}(β)` minus the choice of
+/// `λ` (solvers take `λ` per call so one instance serves a whole path).
+#[derive(Clone, Debug)]
+pub struct SglProblem {
+    pub x: Matrix,
+    pub y: Vec<f64>,
+    pub groups: Groups,
+    /// Mixing parameter `τ ∈ [0, 1]`: 1 = Lasso, 0 = Group-Lasso (Rmk. 3).
+    pub tau: f64,
+    /// Group weights `w_g ≥ 0` (default `sqrt(n_g)`).
+    pub weights: Vec<f64>,
+    /// `‖X_j‖` for every feature (feature-level screening, Eq. 13).
+    pub col_norms: Vec<f64>,
+    /// `‖X_g‖₂` (spectral) for every group (group-level screening, Eq. 14).
+    pub group_spectral_norms: Vec<f64>,
+    /// Block Lipschitz constants `L_g = ‖X_g‖₂²` (§6).
+    pub lipschitz: Vec<f64>,
+}
+
+impl SglProblem {
+    /// Build a problem with the paper's default weights `w_g = sqrt(n_g)`.
+    pub fn new(x: Matrix, y: Vec<f64>, groups: Groups, tau: f64) -> Self {
+        let w = groups.sqrt_size_weights();
+        Self::with_weights(x, y, groups, tau, w)
+    }
+
+    /// Build with explicit weights.
+    pub fn with_weights(
+        x: Matrix,
+        y: Vec<f64>,
+        groups: Groups,
+        tau: f64,
+        weights: Vec<f64>,
+    ) -> Self {
+        assert_eq!(x.n_rows(), y.len(), "X/y row mismatch");
+        assert_eq!(x.n_cols(), groups.p(), "X/groups column mismatch");
+        assert_eq!(weights.len(), groups.n_groups(), "weights/groups mismatch");
+        assert!((0.0..=1.0).contains(&tau), "tau must lie in [0, 1]");
+        assert!(
+            tau > 0.0 || weights.iter().all(|&w| w > 0.0),
+            "tau = 0 with a zero weight is excluded (Omega not a norm)"
+        );
+        let col_norms = x.col_norms();
+        let group_spectral_norms: Vec<f64> = groups
+            .iter()
+            .map(|(_, a, b)| spectral_norm(&x, a, b, 1e-12, 1000))
+            .collect();
+        let lipschitz: Vec<f64> = group_spectral_norms.iter().map(|s| s * s).collect();
+        SglProblem { x, y, groups, tau, weights, col_norms, group_spectral_norms, lipschitz }
+    }
+
+    #[inline]
+    pub fn n(&self) -> usize {
+        self.x.n_rows()
+    }
+
+    #[inline]
+    pub fn p(&self) -> usize {
+        self.x.n_cols()
+    }
+
+    #[inline]
+    pub fn n_groups(&self) -> usize {
+        self.groups.n_groups()
+    }
+
+    /// Critical parameter `λ_max = Ω^D(Xᵀy)` (Eq. 9 / 22): the smallest `λ`
+    /// for which `β̂ = 0`.
+    pub fn lambda_max(&self) -> f64 {
+        let xty = self.x.tmatvec(&self.y);
+        omega_dual(&xty, &self.groups, self.tau, &self.weights)
+    }
+
+    /// `λ_max` together with the argmax group `g★` (used by DST3, App. C).
+    pub fn lambda_max_argmax(&self) -> (usize, f64) {
+        let xty = self.x.tmatvec(&self.y);
+        omega_dual_argmax(&xty, &self.groups, self.tau, &self.weights)
+    }
+
+    /// Re-parameterize the same design for a different `τ` (CV over τ grid
+    /// reuses the precomputations, which do not depend on τ).
+    pub fn with_tau(&self, tau: f64) -> Self {
+        let mut p = self.clone();
+        assert!((0.0..=1.0).contains(&tau));
+        p.tau = tau;
+        p
+    }
+
+    /// The geometric λ grid of §7.1: `λ_t = λ_max · 10^{−δ t / (T−1)}`,
+    /// `t = 0..T-1`.
+    pub fn lambda_grid(lambda_max: f64, delta: f64, t_count: usize) -> Vec<f64> {
+        assert!(t_count >= 1);
+        if t_count == 1 {
+            return vec![lambda_max];
+        }
+        (0..t_count)
+            .map(|t| lambda_max * 10f64.powf(-delta * t as f64 / (t_count - 1) as f64))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::norms::sgl::omega;
+    use crate::util::rng::Pcg;
+
+    fn random_problem(n: usize, sizes: &[usize], tau: f64, seed: u64) -> SglProblem {
+        let groups = Groups::from_sizes(sizes);
+        let p = groups.p();
+        let mut rng = Pcg::seeded(seed);
+        let x = Matrix::from_fn(n, p, |_, _| rng.normal());
+        let y: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+        SglProblem::new(x, y, groups, tau)
+    }
+
+    #[test]
+    fn shapes_and_precomputations() {
+        let pb = random_problem(10, &[3, 2, 4], 0.5, 1);
+        assert_eq!(pb.n(), 10);
+        assert_eq!(pb.p(), 9);
+        assert_eq!(pb.col_norms.len(), 9);
+        assert_eq!(pb.lipschitz.len(), 3);
+        // Lipschitz >= max column norm^2 within the group.
+        for (g, a, b) in pb.groups.iter() {
+            let max_col: f64 =
+                pb.col_norms[a..b].iter().fold(0.0_f64, |m, &c| m.max(c * c));
+            assert!(pb.lipschitz[g] >= max_col - 1e-9);
+        }
+    }
+
+    #[test]
+    fn lambda_max_zeroes_the_solution() {
+        // At lambda >= lambda_max the zero vector satisfies the optimality
+        // condition Omega^D(X^T y) <= lambda (Remark 2): check the dual
+        // norm identity directly.
+        let pb = random_problem(12, &[2, 2, 2], 0.3, 2);
+        let lmax = pb.lambda_max();
+        assert!(lmax > 0.0);
+        // beta = 0 is optimal iff lambda >= lmax: primal at 0 <= primal at
+        // small perturbations along any feature direction.
+        let p0 = 0.5 * pb.y.iter().map(|v| v * v).sum::<f64>();
+        for j in 0..pb.p() {
+            for s in [1e-5, -1e-5] {
+                let mut beta = vec![0.0; pb.p()];
+                beta[j] = s;
+                let r: Vec<f64> =
+                    pb.y.iter().enumerate().map(|(i, yi)| yi - pb.x.get(i, j) * s).collect();
+                let pv = 0.5 * r.iter().map(|v| v * v).sum::<f64>()
+                    + lmax * omega(&beta, &pb.groups, pb.tau, &pb.weights);
+                assert!(pv >= p0 - 1e-9, "direction {j} improves at lambda_max");
+            }
+        }
+    }
+
+    #[test]
+    fn lambda_grid_endpoints() {
+        let grid = SglProblem::lambda_grid(10.0, 3.0, 100);
+        assert_eq!(grid.len(), 100);
+        assert!((grid[0] - 10.0).abs() < 1e-12);
+        assert!((grid[99] - 10.0 * 1e-3).abs() < 1e-9);
+        for w in grid.windows(2) {
+            assert!(w[1] < w[0]);
+        }
+        assert_eq!(SglProblem::lambda_grid(5.0, 3.0, 1), vec![5.0]);
+    }
+
+    #[test]
+    fn argmax_group_attains_lambda_max() {
+        let pb = random_problem(8, &[3, 3, 3], 0.4, 3);
+        let (_g, val) = pb.lambda_max_argmax();
+        assert!((val - pb.lambda_max()).abs() < 1e-12);
+    }
+
+    #[test]
+    #[should_panic]
+    fn tau_zero_with_zero_weight_rejected() {
+        let groups = Groups::from_sizes(&[2]);
+        let x = Matrix::zeros(3, 2);
+        SglProblem::with_weights(x, vec![0.0; 3], groups, 0.0, vec![0.0]);
+    }
+}

@@ -1,0 +1,302 @@
+//! Sequential **strong rules** (Tibshirani et al., 2012) extended to the
+//! Sparse-Group Lasso — the *unsafe* screening baseline the paper contrasts
+//! with (§1, §7: unsafe rules may discard active variables, so they need a
+//! KKT post-check/re-solve loop; TLFre-style sequential rules without one
+//! can fail to converge).
+//!
+//! Heuristic (group level). Along a path `λ_prev → λ`, assuming the group
+//! correlations are 1-Lipschitz in λ ("unit slope"), a group is *probably*
+//! inactive at `λ` if
+//!
+//! ```text
+//!   ‖S_{τ(2λ−λ_prev)}(X_gᵀρ_prev)‖ < (1−τ) w_g (2λ − λ_prev),
+//! ```
+//!
+//! the SGL analogue of the lasso strong bound `|X_jᵀρ_prev| < 2λ − λ_prev`.
+//! This can be wrong, so after solving the restricted subproblem we check
+//! the discarded groups against the exact zero-block KKT condition
+//! `‖S_{τλ}(X_gᵀρ)‖ ≤ λ(1−τ)w_g` and re-solve with any violators added
+//! back, repeating until clean. The result is exact; only the *route* is
+//! heuristic.
+
+use super::cd::{solve, SolveOptions};
+use super::groups::Groups;
+use super::problem::SglProblem;
+use crate::linalg::ops::l2_norm;
+use crate::linalg::Matrix;
+use crate::norms::prox::soft_threshold_vec;
+use crate::util::timer::Stopwatch;
+
+/// Statistics of a strong-rule path solve.
+#[derive(Clone, Debug, Default)]
+pub struct StrongStats {
+    /// Total KKT violations encountered (groups wrongly discarded).
+    pub violations: usize,
+    /// Total subproblem solves (≥ number of λ values; > if violations).
+    pub subsolves: usize,
+    /// Sum over λ of the initially-kept group counts.
+    pub kept_groups_initial: usize,
+}
+
+/// Result per λ of the strong-rule path.
+#[derive(Clone, Debug)]
+pub struct StrongResult {
+    pub lambda: f64,
+    pub beta: Vec<f64>,
+    pub gap: f64,
+    pub converged: bool,
+    /// Groups in the final working set.
+    pub working_groups: usize,
+}
+
+/// Which groups the strong rule keeps for `λ` given the previous residual
+/// correlations `xt_rho_prev = Xᵀρ(λ_prev)`.
+pub fn strong_keep_groups(
+    pb: &SglProblem,
+    xt_rho_prev: &[f64],
+    lambda_prev: f64,
+    lambda: f64,
+) -> Vec<bool> {
+    debug_assert!(lambda <= lambda_prev);
+    let thr = 2.0 * lambda - lambda_prev;
+    let tau = pb.tau;
+    pb.groups
+        .iter()
+        .map(|(g, a, b)| {
+            if thr <= 0.0 {
+                return true; // bound vacuous: keep everything
+            }
+            let st = soft_threshold_vec(&xt_rho_prev[a..b], tau * thr);
+            l2_norm(&st) >= (1.0 - tau) * pb.weights[g] * thr
+        })
+        .collect()
+}
+
+/// Build the restricted subproblem over the kept groups. Returns the
+/// subproblem and the kept group indices (for embedding solutions back).
+fn subproblem(pb: &SglProblem, keep: &[bool]) -> (SglProblem, Vec<usize>) {
+    let kept: Vec<usize> = (0..pb.n_groups()).filter(|&g| keep[g]).collect();
+    let sizes: Vec<usize> = kept.iter().map(|&g| pb.groups.size(g)).collect();
+    let sub_p: usize = sizes.iter().sum();
+    let mut x = Matrix::zeros(pb.n(), sub_p);
+    let mut col = 0;
+    for &g in &kept {
+        let (a, b) = pb.groups.bounds(g);
+        for j in a..b {
+            x.col_mut(col).copy_from_slice(pb.x.col(j));
+            col += 1;
+        }
+    }
+    let weights: Vec<f64> = kept.iter().map(|&g| pb.weights[g]).collect();
+    let sub = SglProblem::with_weights(
+        x,
+        pb.y.clone(),
+        Groups::from_sizes(&sizes),
+        pb.tau,
+        weights,
+    );
+    (sub, kept)
+}
+
+/// Embed a subproblem solution into the full coefficient vector.
+fn embed(pb: &SglProblem, kept: &[usize], sub_beta: &[f64]) -> Vec<f64> {
+    let mut beta = vec![0.0; pb.p()];
+    let mut col = 0;
+    for &g in kept {
+        let (a, b) = pb.groups.bounds(g);
+        for j in a..b {
+            beta[j] = sub_beta[col];
+            col += 1;
+        }
+    }
+    beta
+}
+
+/// Zero-block KKT check for the discarded groups; returns violators.
+fn kkt_violations(pb: &SglProblem, keep: &[bool], beta: &[f64], lambda: f64) -> Vec<usize> {
+    let xb = pb.x.matvec(beta);
+    let rho: Vec<f64> = pb.y.iter().zip(&xb).map(|(y, v)| y - v).collect();
+    let mut out = Vec::new();
+    for (g, a, b) in pb.groups.iter() {
+        if keep[g] {
+            continue;
+        }
+        let mut corr = vec![0.0; b - a];
+        pb.x.tmatvec_block(a, b, &rho, &mut corr);
+        let st = soft_threshold_vec(&corr, pb.tau * lambda);
+        // Small slack: the subproblem is solved to finite tolerance.
+        if l2_norm(&st) > lambda * (1.0 - pb.tau) * pb.weights[g] * (1.0 + 1e-8) + 1e-10 {
+            out.push(g);
+        }
+    }
+    out
+}
+
+/// Solve a non-increasing λ grid with sequential strong rules + KKT
+/// recovery. Returns per-λ results, stats, and the total wall time.
+pub fn solve_path_strong(
+    pb: &SglProblem,
+    lambdas: &[f64],
+    opts: &SolveOptions,
+) -> (Vec<StrongResult>, StrongStats, f64) {
+    let sw = Stopwatch::start();
+    let mut stats = StrongStats::default();
+    let mut results = Vec::with_capacity(lambdas.len());
+    let mut beta_prev = vec![0.0; pb.p()];
+    let mut lambda_prev = pb.lambda_max();
+    for &lambda in lambdas {
+        // Correlations at the previous solution.
+        let xb = pb.x.matvec(&beta_prev);
+        let rho_prev: Vec<f64> = pb.y.iter().zip(&xb).map(|(y, v)| y - v).collect();
+        let xt_prev = pb.x.tmatvec(&rho_prev);
+        let mut keep = strong_keep_groups(pb, &xt_prev, lambda_prev, lambda);
+        // Never discard groups carrying warm-start signal.
+        for (g, a, b) in pb.groups.iter() {
+            if beta_prev[a..b].iter().any(|&v| v != 0.0) {
+                keep[g] = true;
+            }
+        }
+        stats.kept_groups_initial += keep.iter().filter(|&&k| k).count();
+
+        let (beta, gap, converged) = loop {
+            if keep.iter().all(|&k| !k) {
+                // Empty working set: candidate solution is beta = 0.
+                let beta_full = vec![0.0; pb.p()];
+                let violators = kkt_violations(pb, &keep, &beta_full, lambda);
+                if violators.is_empty() {
+                    let gap = crate::solver::duality::duality_gap(pb, &beta_full, lambda);
+                    break (beta_full, gap, true);
+                }
+                stats.violations += violators.len();
+                for g in violators {
+                    keep[g] = true;
+                }
+                continue;
+            }
+            let (sub, kept) = subproblem(pb, &keep);
+            let warm: Vec<f64> = {
+                let mut w = Vec::with_capacity(sub.p());
+                for &g in &kept {
+                    let (a, b) = pb.groups.bounds(g);
+                    w.extend_from_slice(&beta_prev[a..b]);
+                }
+                w
+            };
+            let res = solve(&sub, lambda, Some(&warm), opts);
+            stats.subsolves += 1;
+            let beta_full = embed(pb, &kept, &res.beta);
+            let violators = kkt_violations(pb, &keep, &beta_full, lambda);
+            if violators.is_empty() {
+                break (beta_full, res.gap, res.converged);
+            }
+            stats.violations += violators.len();
+            for g in violators {
+                keep[g] = true;
+            }
+        };
+        results.push(StrongResult {
+            lambda,
+            beta: beta.clone(),
+            gap,
+            converged,
+            working_groups: keep.iter().filter(|&&k| k).count(),
+        });
+        beta_prev = beta;
+        lambda_prev = lambda;
+    }
+    (results, stats, sw.elapsed_s())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::{generate, SyntheticConfig};
+    use crate::screening::RuleKind;
+    use crate::solver::path::{solve_path_on_grid, PathOptions};
+
+    fn problem(seed: u64) -> SglProblem {
+        let cfg = SyntheticConfig {
+            n: 50,
+            n_groups: 30,
+            group_size: 4,
+            gamma1: 4,
+            gamma2: 2,
+            seed,
+            ..Default::default()
+        };
+        let d = generate(&cfg);
+        SglProblem::new(d.dataset.x, d.dataset.y, d.dataset.groups, 0.3)
+    }
+
+    #[test]
+    fn strong_path_matches_exact_path() {
+        let pb = problem(1);
+        let lambdas = SglProblem::lambda_grid(pb.lambda_max(), 2.0, 8);
+        let opts = SolveOptions { tol: 1e-9, record_history: false, ..Default::default() };
+        let (strong, stats, _) = solve_path_strong(&pb, &lambdas, &opts);
+        let exact = solve_path_on_grid(
+            &pb,
+            &lambdas,
+            &PathOptions { delta: 2.0, t_count: 8, solve: opts.clone() },
+        );
+        assert!(stats.subsolves >= lambdas.len());
+        for (s, e) in strong.iter().zip(&exact.results) {
+            assert!(s.converged);
+            for j in 0..pb.p() {
+                assert!(
+                    (s.beta[j] - e.beta[j]).abs() < 5e-4,
+                    "lambda={} j={j}: {} vs {}",
+                    s.lambda,
+                    s.beta[j],
+                    e.beta[j]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn strong_rule_discards_aggressively() {
+        // The point of strong rules: the working set is much smaller than
+        // the full group count near lambda_max.
+        let pb = problem(2);
+        let lambdas = SglProblem::lambda_grid(pb.lambda_max(), 1.0, 5);
+        let opts = SolveOptions { tol: 1e-8, record_history: false, ..Default::default() };
+        let (strong, stats, _) = solve_path_strong(&pb, &lambdas, &opts);
+        let avg_kept = stats.kept_groups_initial as f64 / lambdas.len() as f64;
+        assert!(
+            avg_kept < pb.n_groups() as f64 * 0.8,
+            "strong rule kept {avg_kept:.1} of {} groups on average",
+            pb.n_groups()
+        );
+        assert!(strong.iter().all(|r| r.converged));
+    }
+
+    #[test]
+    fn keep_mask_vacuous_when_threshold_nonpositive() {
+        let pb = problem(3);
+        let xt = pb.x.tmatvec(&pb.y);
+        // lambda < lambda_prev/2 makes 2*lambda - lambda_prev <= 0.
+        let keep = strong_keep_groups(&pb, &xt, 1.0, 0.4);
+        assert!(keep.iter().all(|&k| k));
+    }
+
+    #[test]
+    fn gap_safe_restricted_inside_strong_still_exact() {
+        // Run the strong driver with GAP safe *inside* the subsolves — the
+        // combination used in practice (working sets + safe rules).
+        let pb = problem(4);
+        let lambdas = SglProblem::lambda_grid(pb.lambda_max(), 2.0, 6);
+        let opts = SolveOptions {
+            tol: 1e-9,
+            rule: RuleKind::GapSafe,
+            record_history: false,
+            ..Default::default()
+        };
+        let (strong, _, _) = solve_path_strong(&pb, &lambdas, &opts);
+        // Spot-check KKT at the last lambda.
+        let last = strong.last().unwrap();
+        let g = crate::solver::duality::duality_gap(&pb, &last.beta, last.lambda);
+        let tol_abs = 1e-9 * pb.y.iter().map(|v| v * v).sum::<f64>();
+        assert!(g <= 2.0 * tol_abs, "gap {g}");
+    }
+}

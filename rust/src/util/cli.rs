@@ -1,0 +1,201 @@
+//! Minimal command-line argument parser (clap is unavailable offline).
+//!
+//! Supports `--key value`, `--key=value`, boolean `--flag`, and positional
+//! arguments. Each binary declares its options up front so `--help` output
+//! can be generated.
+
+use std::collections::BTreeMap;
+
+/// Declared option for help output and validation.
+#[derive(Clone, Debug)]
+pub struct OptSpec {
+    pub name: &'static str,
+    pub help: &'static str,
+    pub takes_value: bool,
+    pub default: Option<&'static str>,
+}
+
+/// Parsed command line.
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    program: String,
+    values: BTreeMap<String, String>,
+    flags: Vec<String>,
+    positional: Vec<String>,
+    specs: Vec<OptSpec>,
+}
+
+impl Args {
+    /// Parse from an iterator of raw arguments (excluding program name
+    /// handling: the first item *is* the program name).
+    pub fn parse_from<I: IntoIterator<Item = String>>(
+        raw: I,
+        specs: &[OptSpec],
+    ) -> Result<Self, String> {
+        let mut it = raw.into_iter();
+        let program = it.next().unwrap_or_else(|| "prog".to_string());
+        let mut args = Args { program, specs: specs.to_vec(), ..Default::default() };
+        let take_value = |name: &str, specs: &[OptSpec]| -> Option<bool> {
+            specs.iter().find(|s| s.name == name).map(|s| s.takes_value)
+        };
+        let mut rest = it.peekable();
+        while let Some(tok) = rest.next() {
+            if let Some(stripped) = tok.strip_prefix("--") {
+                let (name, inline_val) = match stripped.split_once('=') {
+                    Some((n, v)) => (n.to_string(), Some(v.to_string())),
+                    None => (stripped.to_string(), None),
+                };
+                if name == "help" {
+                    args.flags.push("help".to_string());
+                    continue;
+                }
+                match take_value(&name, &args.specs) {
+                    Some(true) => {
+                        let v = match inline_val {
+                            Some(v) => v,
+                            None => rest
+                                .next()
+                                .ok_or_else(|| format!("--{name} expects a value"))?,
+                        };
+                        args.values.insert(name, v);
+                    }
+                    Some(false) => {
+                        if inline_val.is_some() {
+                            return Err(format!("--{name} does not take a value"));
+                        }
+                        args.flags.push(name);
+                    }
+                    None => return Err(format!("unknown option --{name}")),
+                }
+            } else {
+                args.positional.push(tok);
+            }
+        }
+        Ok(args)
+    }
+
+    /// Parse the real process arguments; print help and exit on `--help` or
+    /// parse error.
+    pub fn parse_or_exit(specs: &[OptSpec]) -> Self {
+        match Self::parse_from(std::env::args(), specs) {
+            Ok(args) => {
+                if args.flag("help") {
+                    eprintln!("{}", args.usage());
+                    std::process::exit(0);
+                }
+                args
+            }
+            Err(e) => {
+                eprintln!("error: {e}");
+                std::process::exit(2);
+            }
+        }
+    }
+
+    /// Human-readable usage text.
+    pub fn usage(&self) -> String {
+        let mut s = format!("usage: {} [options] [args...]\n\noptions:\n", self.program);
+        for spec in &self.specs {
+            let arg = if spec.takes_value { format!("--{} <v>", spec.name) } else { format!("--{}", spec.name) };
+            let def = spec.default.map(|d| format!(" (default {d})")).unwrap_or_default();
+            s.push_str(&format!("  {:<24} {}{}\n", arg, spec.help, def));
+        }
+        s
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    /// String value with declared default fallback.
+    pub fn get(&self, name: &str) -> Option<String> {
+        self.values.get(name).cloned().or_else(|| {
+            self.specs
+                .iter()
+                .find(|s| s.name == name)
+                .and_then(|s| s.default.map(str::to_string))
+        })
+    }
+
+    pub fn get_or(&self, name: &str, fallback: &str) -> String {
+        self.get(name).unwrap_or_else(|| fallback.to_string())
+    }
+
+    pub fn get_usize(&self, name: &str, fallback: usize) -> usize {
+        self.get(name).and_then(|v| v.parse().ok()).unwrap_or(fallback)
+    }
+
+    pub fn get_u64(&self, name: &str, fallback: u64) -> u64 {
+        self.get(name).and_then(|v| v.parse().ok()).unwrap_or(fallback)
+    }
+
+    pub fn get_f64(&self, name: &str, fallback: f64) -> f64 {
+        self.get(name).and_then(|v| v.parse().ok()).unwrap_or(fallback)
+    }
+
+    pub fn positional(&self) -> &[String] {
+        &self.positional
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn specs() -> Vec<OptSpec> {
+        vec![
+            OptSpec { name: "n", help: "samples", takes_value: true, default: Some("100") },
+            OptSpec { name: "verbose", help: "chatty", takes_value: false, default: None },
+            OptSpec { name: "out", help: "output file", takes_value: true, default: None },
+        ]
+    }
+
+    fn parse(toks: &[&str]) -> Result<Args, String> {
+        let raw = std::iter::once("prog".to_string()).chain(toks.iter().map(|s| s.to_string()));
+        Args::parse_from(raw, &specs())
+    }
+
+    #[test]
+    fn parses_key_value_both_styles() {
+        let a = parse(&["--n", "5", "--out=x.csv"]).unwrap();
+        assert_eq!(a.get_usize("n", 0), 5);
+        assert_eq!(a.get("out").unwrap(), "x.csv");
+    }
+
+    #[test]
+    fn default_applies() {
+        let a = parse(&[]).unwrap();
+        assert_eq!(a.get_usize("n", 0), 100);
+        assert!(a.get("out").is_none());
+    }
+
+    #[test]
+    fn flags_and_positionals() {
+        let a = parse(&["--verbose", "cmd", "file.txt"]).unwrap();
+        assert!(a.flag("verbose"));
+        assert_eq!(a.positional(), &["cmd".to_string(), "file.txt".to_string()]);
+    }
+
+    #[test]
+    fn unknown_option_rejected() {
+        assert!(parse(&["--bogus"]).is_err());
+    }
+
+    #[test]
+    fn missing_value_rejected() {
+        assert!(parse(&["--n"]).is_err());
+    }
+
+    #[test]
+    fn flag_with_value_rejected() {
+        assert!(parse(&["--verbose=1"]).is_err());
+    }
+
+    #[test]
+    fn usage_mentions_options() {
+        let a = parse(&[]).unwrap();
+        let u = a.usage();
+        assert!(u.contains("--n"));
+        assert!(u.contains("samples"));
+    }
+}

@@ -1,0 +1,220 @@
+//! Tiny JSON emitter used by the report/metrics code (serde is unavailable
+//! offline). Write-only: experiment outputs are JSON/CSV for downstream
+//! plotting; configs are parsed by `config::toml` instead.
+
+/// A JSON value that can be built programmatically and serialized.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Json {
+    Null,
+    Bool(bool),
+    Num(f64),
+    Str(String),
+    Arr(Vec<Json>),
+    Obj(Vec<(String, Json)>),
+}
+
+impl Json {
+    pub fn obj() -> Json {
+        Json::Obj(Vec::new())
+    }
+
+    /// Insert/overwrite a field (builder style).
+    pub fn with(mut self, key: &str, val: impl Into<Json>) -> Json {
+        if let Json::Obj(ref mut fields) = self {
+            if let Some(slot) = fields.iter_mut().find(|(k, _)| k == key) {
+                slot.1 = val.into();
+            } else {
+                fields.push((key.to_string(), val.into()));
+            }
+        }
+        self
+    }
+
+    pub fn array<T: Into<Json>>(items: Vec<T>) -> Json {
+        Json::Arr(items.into_iter().map(Into::into).collect())
+    }
+
+    /// Serialize compactly.
+    pub fn dump(&self) -> String {
+        let mut s = String::new();
+        self.write(&mut s);
+        s
+    }
+
+    /// Serialize with two-space indentation.
+    pub fn pretty(&self) -> String {
+        let mut s = String::new();
+        self.write_pretty(&mut s, 0);
+        s
+    }
+
+    fn write(&self, out: &mut String) {
+        match self {
+            Json::Null => out.push_str("null"),
+            Json::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
+            Json::Num(x) => out.push_str(&fmt_num(*x)),
+            Json::Str(s) => write_escaped(s, out),
+            Json::Arr(items) => {
+                out.push('[');
+                for (i, v) in items.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    v.write(out);
+                }
+                out.push(']');
+            }
+            Json::Obj(fields) => {
+                out.push('{');
+                for (i, (k, v)) in fields.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    write_escaped(k, out);
+                    out.push(':');
+                    v.write(out);
+                }
+                out.push('}');
+            }
+        }
+    }
+
+    fn write_pretty(&self, out: &mut String, depth: usize) {
+        let pad = "  ".repeat(depth + 1);
+        let close_pad = "  ".repeat(depth);
+        match self {
+            Json::Arr(items) if !items.is_empty() => {
+                out.push_str("[\n");
+                for (i, v) in items.iter().enumerate() {
+                    if i > 0 {
+                        out.push_str(",\n");
+                    }
+                    out.push_str(&pad);
+                    v.write_pretty(out, depth + 1);
+                }
+                out.push('\n');
+                out.push_str(&close_pad);
+                out.push(']');
+            }
+            Json::Obj(fields) if !fields.is_empty() => {
+                out.push_str("{\n");
+                for (i, (k, v)) in fields.iter().enumerate() {
+                    if i > 0 {
+                        out.push_str(",\n");
+                    }
+                    out.push_str(&pad);
+                    write_escaped(k, out);
+                    out.push_str(": ");
+                    v.write_pretty(out, depth + 1);
+                }
+                out.push('\n');
+                out.push_str(&close_pad);
+                out.push('}');
+            }
+            _ => self.write(out),
+        }
+    }
+}
+
+fn fmt_num(x: f64) -> String {
+    if !x.is_finite() {
+        // JSON has no inf/nan; emit null like most encoders.
+        return "null".to_string();
+    }
+    if x == x.trunc() && x.abs() < 1e15 {
+        format!("{}", x as i64)
+    } else {
+        format!("{x}")
+    }
+}
+
+fn write_escaped(s: &str, out: &mut String) {
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+}
+
+impl From<f64> for Json {
+    fn from(x: f64) -> Json {
+        Json::Num(x)
+    }
+}
+impl From<usize> for Json {
+    fn from(x: usize) -> Json {
+        Json::Num(x as f64)
+    }
+}
+impl From<i64> for Json {
+    fn from(x: i64) -> Json {
+        Json::Num(x as f64)
+    }
+}
+impl From<bool> for Json {
+    fn from(x: bool) -> Json {
+        Json::Bool(x)
+    }
+}
+impl From<&str> for Json {
+    fn from(x: &str) -> Json {
+        Json::Str(x.to_string())
+    }
+}
+impl From<String> for Json {
+    fn from(x: String) -> Json {
+        Json::Str(x)
+    }
+}
+impl From<Vec<f64>> for Json {
+    fn from(xs: Vec<f64>) -> Json {
+        Json::Arr(xs.into_iter().map(Json::Num).collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scalar_round_trips() {
+        assert_eq!(Json::Num(3.0).dump(), "3");
+        assert_eq!(Json::Num(3.5).dump(), "3.5");
+        assert_eq!(Json::Bool(true).dump(), "true");
+        assert_eq!(Json::Null.dump(), "null");
+        assert_eq!(Json::Num(f64::NAN).dump(), "null");
+    }
+
+    #[test]
+    fn escaping() {
+        assert_eq!(Json::Str("a\"b\nc".to_string()).dump(), "\"a\\\"b\\nc\"");
+    }
+
+    #[test]
+    fn object_builder() {
+        let j = Json::obj().with("name", "sgl").with("n", 100usize).with("ok", true);
+        assert_eq!(j.dump(), "{\"name\":\"sgl\",\"n\":100,\"ok\":true}");
+    }
+
+    #[test]
+    fn with_overwrites() {
+        let j = Json::obj().with("a", 1.0).with("a", 2.0);
+        assert_eq!(j.dump(), "{\"a\":2}");
+    }
+
+    #[test]
+    fn arrays_and_pretty() {
+        let j = Json::obj().with("xs", vec![1.0, 2.5]);
+        assert_eq!(j.dump(), "{\"xs\":[1,2.5]}");
+        let p = j.pretty();
+        assert!(p.contains("\"xs\": [\n"));
+    }
+}

@@ -1,0 +1,15 @@
+//! Dependency-free substrates: RNG, CLI parsing, thread pool, timing,
+//! statistics, JSON emission, and a property-testing harness.
+//!
+//! This build environment is fully offline with only the `xla` and `anyhow`
+//! crates available, so the roles normally played by `rand`, `clap`,
+//! `rayon`, `criterion`, `serde` and `proptest` are implemented here from
+//! scratch (see DESIGN.md §3).
+
+pub mod cli;
+pub mod json;
+pub mod pool;
+pub mod proptest;
+pub mod rng;
+pub mod stats;
+pub mod timer;

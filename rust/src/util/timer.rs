@@ -1,0 +1,131 @@
+//! Wall-clock timing and a minimal benchmark runner.
+//!
+//! `criterion` is not available offline, so `benches/` binaries use this
+//! module (with `harness = false` in `Cargo.toml`). The runner does warmup
+//! iterations followed by timed iterations and reports a [`Summary`].
+
+use super::stats::Summary;
+use std::time::Instant;
+
+/// A simple stopwatch.
+pub struct Stopwatch {
+    start: Instant,
+}
+
+impl Stopwatch {
+    pub fn start() -> Self {
+        Stopwatch { start: Instant::now() }
+    }
+
+    /// Elapsed seconds since start.
+    pub fn elapsed_s(&self) -> f64 {
+        self.start.elapsed().as_secs_f64()
+    }
+
+    /// Elapsed milliseconds since start.
+    pub fn elapsed_ms(&self) -> f64 {
+        self.elapsed_s() * 1e3
+    }
+
+    /// Restart the stopwatch and return the elapsed seconds.
+    pub fn lap_s(&mut self) -> f64 {
+        let dt = self.elapsed_s();
+        self.start = Instant::now();
+        dt
+    }
+}
+
+/// Result of one benchmark case.
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    /// Per-iteration wall time in seconds.
+    pub times: Summary,
+}
+
+impl std::fmt::Display for BenchResult {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "{:<44} {:>12.3} us/iter (median {:>12.3}, sd {:>10.3}) x{}",
+            self.name,
+            self.times.mean * 1e6,
+            self.times.median * 1e6,
+            self.times.stddev * 1e6,
+            self.times.n
+        )
+    }
+}
+
+/// Benchmark runner configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct BenchConfig {
+    pub warmup_iters: usize,
+    pub iters: usize,
+    /// Hard cap on total measurement time (seconds); the runner stops adding
+    /// iterations once exceeded (at least one timed iteration always runs).
+    pub max_seconds: f64,
+}
+
+impl Default for BenchConfig {
+    fn default() -> Self {
+        BenchConfig { warmup_iters: 3, iters: 20, max_seconds: 30.0 }
+    }
+}
+
+/// Run `f` repeatedly and collect per-iteration timings.
+///
+/// `f` receives the iteration index; use [`black_box`] on inputs/outputs to
+/// prevent the optimizer from deleting the work.
+pub fn bench<F: FnMut(usize)>(name: &str, cfg: BenchConfig, mut f: F) -> BenchResult {
+    for i in 0..cfg.warmup_iters {
+        f(i);
+    }
+    let mut times = Vec::with_capacity(cfg.iters);
+    let total = Stopwatch::start();
+    for i in 0..cfg.iters {
+        let sw = Stopwatch::start();
+        f(i);
+        times.push(sw.elapsed_s());
+        if total.elapsed_s() > cfg.max_seconds && !times.is_empty() {
+            break;
+        }
+    }
+    BenchResult { name: name.to_string(), times: Summary::of(&times) }
+}
+
+/// Identity function the optimizer cannot see through.
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stopwatch_monotone() {
+        let sw = Stopwatch::start();
+        let a = sw.elapsed_s();
+        let b = sw.elapsed_s();
+        assert!(b >= a);
+        assert!(a >= 0.0);
+    }
+
+    #[test]
+    fn bench_runs_requested_iterations() {
+        let mut count = 0usize;
+        let cfg = BenchConfig { warmup_iters: 2, iters: 5, max_seconds: 60.0 };
+        let res = bench("noop", cfg, |_| count += 1);
+        assert_eq!(count, 7);
+        assert_eq!(res.times.n, 5);
+    }
+
+    #[test]
+    fn bench_respects_time_cap() {
+        let cfg = BenchConfig { warmup_iters: 0, iters: 1_000_000, max_seconds: 0.05 };
+        let res = bench("sleepy", cfg, |_| std::thread::sleep(std::time::Duration::from_millis(5)));
+        assert!(res.times.n < 1000);
+    }
+}

@@ -1,0 +1,182 @@
+//! Integration: the XLA engine (AOT artifacts via PJRT) against the native
+//! solvers. Requires `make artifacts` (the default `n=100, p=1000, d=10`
+//! shape); tests self-skip when the artifacts are absent so `cargo test`
+//! stays runnable before the first build.
+
+use sgl::data::synthetic::{generate, SyntheticConfig};
+use sgl::runtime::engine::XlaEngine;
+use sgl::screening::RuleKind;
+use sgl::solver::cd::{solve, SolveOptions};
+use sgl::solver::problem::SglProblem;
+use std::path::PathBuf;
+
+fn artifact_dir() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+fn load_engine() -> Option<XlaEngine> {
+    let dir = artifact_dir();
+    if !dir.join("meta.toml").exists() {
+        eprintln!("skipping: artifacts not built (run `make artifacts`)");
+        return None;
+    }
+    Some(XlaEngine::load(&dir).expect("artifacts present but failed to load"))
+}
+
+/// A problem matching the default artifact shape (n=100, p=1000, d=10).
+fn artifact_problem(tau: f64, seed: u64) -> SglProblem {
+    let cfg = SyntheticConfig {
+        n: 100,
+        n_groups: 100,
+        group_size: 10,
+        gamma1: 5,
+        gamma2: 4,
+        seed,
+        ..Default::default()
+    };
+    let d = generate(&cfg);
+    SglProblem::new(d.dataset.x, d.dataset.y, d.dataset.groups, tau)
+}
+
+#[test]
+fn engine_matches_native_solver() {
+    let Some(engine) = load_engine() else { return };
+    let pb = artifact_problem(0.3, 11);
+    let session = engine.session(&pb).unwrap();
+    let lambda = 0.3 * pb.lambda_max();
+
+    let xla = session.solve(lambda, 1e-8, 5000, None, true).unwrap();
+    assert!(xla.converged, "xla gap={}", xla.gap);
+
+    let native = solve(
+        &pb,
+        lambda,
+        None,
+        &SolveOptions { tol: 1e-10, rule: RuleKind::GapSafe, ..Default::default() },
+    );
+    assert!(native.converged);
+
+    let mut max_diff = 0.0_f64;
+    for j in 0..pb.p() {
+        max_diff = max_diff.max((xla.beta[j] - native.beta[j]).abs());
+    }
+    assert!(max_diff < 5e-4, "max coefficient diff {max_diff}");
+}
+
+#[test]
+fn engine_screens_and_reports_active_sets() {
+    let Some(engine) = load_engine() else { return };
+    let pb = artifact_problem(0.3, 12);
+    let session = engine.session(&pb).unwrap();
+    let lambda = 0.5 * pb.lambda_max();
+    let res = session.solve(lambda, 1e-8, 5000, None, true).unwrap();
+    assert!(res.converged);
+    assert!(
+        res.active_features < pb.p(),
+        "screening must eliminate features at lambda = lmax/2 ({} of {})",
+        res.active_features,
+        pb.p()
+    );
+    assert!(res.active_groups < pb.n_groups());
+}
+
+#[test]
+fn engine_screening_accelerates_or_matches() {
+    let Some(engine) = load_engine() else { return };
+    let pb = artifact_problem(0.3, 13);
+    let session = engine.session(&pb).unwrap();
+    let lambda = 0.4 * pb.lambda_max();
+    let with = session.solve(lambda, 1e-8, 5000, None, true).unwrap();
+    let without = session.solve(lambda, 1e-8, 5000, None, false).unwrap();
+    assert!(with.converged && without.converged);
+    // Same solution either way.
+    let mut max_diff = 0.0_f64;
+    for j in 0..pb.p() {
+        max_diff = max_diff.max((with.beta[j] - without.beta[j]).abs());
+    }
+    assert!(max_diff < 1e-5, "screening changed the solution: {max_diff}");
+    assert!(with.rounds <= without.rounds + 1);
+}
+
+#[test]
+fn engine_zero_solution_above_lambda_max() {
+    let Some(engine) = load_engine() else { return };
+    let pb = artifact_problem(0.4, 14);
+    let session = engine.session(&pb).unwrap();
+    let res = session.solve(1.2 * pb.lambda_max(), 1e-10, 50, None, true).unwrap();
+    assert!(res.converged);
+    assert_eq!(res.rounds, 1, "must converge at the first gap check");
+    assert!(res.beta.iter().all(|&b| b == 0.0));
+}
+
+#[test]
+fn engine_warm_start_reduces_rounds() {
+    let Some(engine) = load_engine() else { return };
+    let pb = artifact_problem(0.3, 15);
+    let session = engine.session(&pb).unwrap();
+    let lmax = pb.lambda_max();
+    let first = session.solve(0.5 * lmax, 1e-8, 5000, None, true).unwrap();
+    let cold = session.solve(0.4 * lmax, 1e-8, 5000, None, true).unwrap();
+    let warm = session.solve(0.4 * lmax, 1e-8, 5000, Some(&first.beta), true).unwrap();
+    assert!(warm.converged && cold.converged);
+    assert!(warm.rounds <= cold.rounds, "warm {} vs cold {}", warm.rounds, cold.rounds);
+}
+
+#[test]
+fn engine_shape_mismatch_rejected() {
+    let Some(engine) = load_engine() else { return };
+    let cfg = SyntheticConfig {
+        n: 50,
+        n_groups: 10,
+        group_size: 10,
+        gamma1: 2,
+        gamma2: 2,
+        seed: 1,
+        ..Default::default()
+    };
+    let d = generate(&cfg);
+    let pb = SglProblem::new(d.dataset.x, d.dataset.y, d.dataset.groups, 0.3);
+    assert!(engine.session(&pb).is_err());
+}
+
+#[test]
+fn engine_warm_path_matches_native_path() {
+    // The serving pattern: a warm-started path through PJRT must land on
+    // the same solutions as the native warm-started path.
+    let Some(engine) = load_engine() else { return };
+    let pb = artifact_problem(0.25, 16);
+    let session = engine.session(&pb).unwrap();
+    let lambdas = SglProblem::lambda_grid(pb.lambda_max(), 1.5, 6);
+    let native = sgl::solver::path::solve_path_on_grid(
+        &pb,
+        &lambdas,
+        &sgl::solver::path::PathOptions {
+            delta: 1.5,
+            t_count: 6,
+            solve: SolveOptions { tol: 1e-9, record_history: false, ..Default::default() },
+        },
+    );
+    let mut warm: Option<Vec<f64>> = None;
+    for (i, &lambda) in lambdas.iter().enumerate() {
+        let res = session.solve(lambda, 1e-9, 20_000, warm.as_deref(), true).unwrap();
+        assert!(res.converged, "lambda {i}");
+        let mut max_diff = 0.0_f64;
+        for j in 0..pb.p() {
+            max_diff = max_diff.max((res.beta[j] - native.results[i].beta[j]).abs());
+        }
+        assert!(max_diff < 1e-3, "lambda {i}: max diff {max_diff}");
+        warm = Some(res.beta);
+    }
+}
+
+#[test]
+fn engine_results_deterministic() {
+    let Some(engine) = load_engine() else { return };
+    let pb = artifact_problem(0.3, 17);
+    let session = engine.session(&pb).unwrap();
+    let lambda = 0.4 * pb.lambda_max();
+    let a = session.solve(lambda, 1e-8, 5000, None, true).unwrap();
+    let b = session.solve(lambda, 1e-8, 5000, None, true).unwrap();
+    assert_eq!(a.rounds, b.rounds);
+    assert_eq!(a.beta, b.beta, "PJRT execution must be bit-deterministic");
+}

@@ -1,0 +1,201 @@
+//! Screening-rule integration: safety of every rule along whole paths,
+//! ordering of sphere quality, convergence of active sets (Prop. 6), and
+//! failure-injection (screening must be a no-op when given garbage-free
+//! but useless spheres, never an unsound one).
+
+use sgl::data::synthetic::{generate, SyntheticConfig};
+use sgl::screening::{make_rule, ActiveSet, RuleKind};
+use sgl::solver::cd::{solve, SolveOptions};
+use sgl::solver::duality::DualSnapshot;
+use sgl::solver::path::{solve_path, PathOptions};
+use sgl::solver::problem::SglProblem;
+use sgl::util::proptest::{check, forall};
+
+fn problem(tau: f64, seed: u64) -> SglProblem {
+    let cfg = SyntheticConfig {
+        n: 50,
+        n_groups: 25,
+        group_size: 4,
+        gamma1: 4,
+        gamma2: 2,
+        seed,
+        ..Default::default()
+    };
+    let d = generate(&cfg);
+    SglProblem::new(d.dataset.x, d.dataset.y, d.dataset.groups, tau)
+}
+
+/// The master safety test: along full paths, every variable any rule ever
+/// screens is zero in an independent high-precision solution.
+#[test]
+fn all_rules_safe_along_path() {
+    let pb = problem(0.3, 1);
+    let lambdas = SglProblem::lambda_grid(pb.lambda_max(), 2.0, 6);
+    for rule in [RuleKind::Static, RuleKind::Dynamic, RuleKind::Dst3, RuleKind::GapSafe] {
+        for &lambda in &lambdas {
+            let screened = solve(
+                &pb,
+                lambda,
+                None,
+                &SolveOptions { rule, tol: 1e-9, ..Default::default() },
+            );
+            let reference = solve(
+                &pb,
+                lambda,
+                None,
+                &SolveOptions { rule: RuleKind::None, tol: 1e-12, ..Default::default() },
+            );
+            for j in 0..pb.p() {
+                if !screened.active.feature[j] {
+                    assert!(
+                        reference.beta[j].abs() < 1e-7,
+                        "{rule:?} lambda={lambda:.3e} screened live feature {j} ({})",
+                        reference.beta[j]
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// Sphere-quality ordering at matched iterates: GAP radius -> 0 while the
+/// baselines stay bounded away (the paper's Fig. 2 mechanism).
+#[test]
+fn gap_radius_vanishes_baselines_do_not() {
+    let pb = problem(0.3, 2);
+    let lambda = 0.2 * pb.lambda_max();
+    // Converge well, then ask each rule for its sphere.
+    let res = solve(&pb, lambda, None, &SolveOptions { tol: 1e-12, ..Default::default() });
+    let xb = pb.x.matvec(&res.beta);
+    let rho: Vec<f64> = pb.y.iter().zip(&xb).map(|(y, v)| y - v).collect();
+    let snap = DualSnapshot::compute(&pb, &res.beta, &rho, lambda);
+    let radius_of = |kind: RuleKind| {
+        make_rule(kind, &pb).sphere(&pb, lambda, &snap).map(|s| s.radius)
+    };
+    let gap_r = radius_of(RuleKind::GapSafe).unwrap();
+    let static_r = radius_of(RuleKind::Static).unwrap();
+    let dyn_r = radius_of(RuleKind::Dynamic).unwrap();
+    let dst3_r = radius_of(RuleKind::Dst3).unwrap();
+    assert!(gap_r < 1e-5, "GAP radius must vanish at convergence: {gap_r}");
+    assert!(static_r > 1e-2, "static radius stays macroscopic: {static_r}");
+    assert!(dyn_r > 1e-3, "dynamic radius converges to dist(y/lambda, theta_hat) > 0");
+    assert!(dst3_r <= dyn_r + 1e-12, "DST3 refines dynamic");
+}
+
+/// Prop. 6: with the converging GAP spheres, the final active set contains
+/// the true support and (at reasonable lambda) little else.
+#[test]
+fn active_set_converges_to_support() {
+    let pb = problem(0.3, 3);
+    let lambda = 0.15 * pb.lambda_max();
+    let res = solve(
+        &pb,
+        lambda,
+        None,
+        &SolveOptions { rule: RuleKind::GapSafe, tol: 1e-12, ..Default::default() },
+    );
+    assert!(res.converged);
+    let support: Vec<usize> =
+        (0..pb.p()).filter(|&j| res.beta[j].abs() > 1e-10).collect();
+    // (i) support is contained in the active set;
+    for &j in &support {
+        assert!(res.active.feature[j], "support feature {j} was screened");
+    }
+    // (ii) the active set is not vacuous nor everything.
+    let n_active = res.active.n_active_features();
+    assert!(n_active >= support.len());
+    assert!(n_active < pb.p(), "screening should remove something");
+}
+
+/// Property test: random spheres that *contain* the true dual optimum never
+/// screen support variables (Theorem 1 exercised directly).
+#[test]
+fn property_valid_spheres_are_safe() {
+    let pb = problem(0.35, 4);
+    let lambda = 0.25 * pb.lambda_max();
+    let reference = solve(
+        &pb,
+        lambda,
+        None,
+        &SolveOptions { rule: RuleKind::None, tol: 1e-12, ..Default::default() },
+    );
+    let xb = pb.x.matvec(&reference.beta);
+    let rho: Vec<f64> = pb.y.iter().zip(&xb).map(|(y, v)| y - v).collect();
+    let snap = DualSnapshot::compute(&pb, &reference.beta, &rho, lambda);
+    // theta_hat ~ snap.theta at tol 1e-12.
+    forall("random valid spheres are safe", 60, |g| {
+        // Random center near theta_hat, radius >= distance to theta_hat.
+        let jitter: Vec<f64> = (0..pb.n()).map(|_| 0.01 * g.normal()).collect();
+        let center: Vec<f64> =
+            snap.theta.iter().zip(&jitter).map(|(t, j)| t + j).collect();
+        let dist: f64 = jitter.iter().map(|v| v * v).sum::<f64>().sqrt();
+        let radius = dist * g.f64_in(1.0..3.0) + 1e-12;
+        let xt_center = pb.x.tmatvec(&center);
+        let sphere = sgl::screening::Sphere { xt_center, radius };
+        let mut active = ActiveSet::full(&pb.groups);
+        let mut beta = reference.beta.clone();
+        let mut rho2 = rho.clone();
+        sgl::screening::apply_sphere(&pb, &sphere, &mut active, &mut beta, &mut rho2);
+        for j in 0..pb.p() {
+            if reference.beta[j].abs() > 1e-8 {
+                check(active.feature[j], &format!("screened support feature {j}"))?;
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Paths with screening return identical objective values as without.
+#[test]
+fn screening_never_changes_the_answer() {
+    let pb = problem(0.2, 5);
+    let opts = |rule| PathOptions {
+        delta: 2.0,
+        t_count: 6,
+        solve: SolveOptions { rule, tol: 1e-10, record_history: false, ..Default::default() },
+    };
+    let base = solve_path(&pb, &opts(RuleKind::None));
+    for rule in [RuleKind::Static, RuleKind::Dynamic, RuleKind::Dst3, RuleKind::GapSafe] {
+        let path = solve_path(&pb, &opts(rule));
+        for (i, (a, b)) in base.results.iter().zip(&path.results).enumerate() {
+            for j in 0..pb.p() {
+                assert!(
+                    (a.beta[j] - b.beta[j]).abs() < 1e-4,
+                    "{rule:?} lambda {i} feature {j}: {} vs {}",
+                    a.beta[j],
+                    b.beta[j]
+                );
+            }
+        }
+    }
+}
+
+/// GAP safe screens at least as much as every baseline at the end of each
+/// solve (converging spheres dominate).
+#[test]
+fn gap_safe_dominates_at_convergence() {
+    let pb = problem(0.3, 6);
+    for frac in [0.6, 0.3, 0.1] {
+        let lambda = frac * pb.lambda_max();
+        let actives: Vec<usize> = [
+            RuleKind::Static,
+            RuleKind::Dynamic,
+            RuleKind::Dst3,
+            RuleKind::GapSafe,
+        ]
+        .iter()
+        .map(|&rule| {
+            solve(&pb, lambda, None, &SolveOptions { rule, tol: 1e-10, ..Default::default() })
+                .active
+                .n_active_features()
+        })
+        .collect();
+        let gap_active = actives[3];
+        for (i, &a) in actives[..3].iter().enumerate() {
+            assert!(
+                gap_active <= a,
+                "frac={frac}: GAP {gap_active} vs baseline#{i} {a}"
+            );
+        }
+    }
+}

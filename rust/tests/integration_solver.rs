@@ -1,0 +1,216 @@
+//! Cross-module solver integration: CD vs ISTA vs paths vs special cases,
+//! on realistically-sized problems built by the data generators.
+
+use sgl::data::climate::{self, ClimateConfig};
+use sgl::data::synthetic::{generate, SyntheticConfig};
+use sgl::norms::sgl::omega;
+use sgl::solver::cd::{solve, SolveOptions};
+use sgl::solver::duality::duality_gap;
+use sgl::solver::ista::solve_ista;
+use sgl::solver::path::{solve_path, PathOptions};
+use sgl::solver::problem::SglProblem;
+
+fn synthetic_problem(tau: f64, seed: u64) -> SglProblem {
+    let cfg = SyntheticConfig {
+        n: 60,
+        n_groups: 40,
+        group_size: 5,
+        gamma1: 6,
+        gamma2: 3,
+        seed,
+        ..Default::default()
+    };
+    let d = generate(&cfg);
+    SglProblem::new(d.dataset.x, d.dataset.y, d.dataset.groups, tau)
+}
+
+#[test]
+fn cd_and_ista_agree_on_synthetic() {
+    let pb = synthetic_problem(0.25, 1);
+    let lambda = 0.15 * pb.lambda_max();
+    let opts = SolveOptions { tol: 1e-10, max_epochs: 500_000, ..Default::default() };
+    let a = solve(&pb, lambda, None, &opts);
+    let b = solve_ista(&pb, lambda, None, &opts);
+    assert!(a.converged && b.converged);
+    for j in 0..pb.p() {
+        assert!((a.beta[j] - b.beta[j]).abs() < 5e-4, "feature {j}");
+    }
+}
+
+#[test]
+fn kkt_conditions_hold_at_solution() {
+    // Subdifferential inclusion (Eq. 8): for beta_g != 0,
+    // X_g^T rho = lambda (tau * sign + (1-tau) w_g beta_g/||beta_g||).
+    let pb = synthetic_problem(0.4, 2);
+    let lambda = 0.2 * pb.lambda_max();
+    let res = solve(&pb, lambda, None, &SolveOptions { tol: 1e-12, ..Default::default() });
+    assert!(res.converged);
+    let xb = pb.x.matvec(&res.beta);
+    let rho: Vec<f64> = pb.y.iter().zip(&xb).map(|(y, v)| y - v).collect();
+    let corr = pb.x.tmatvec(&rho);
+    for (g, a, b) in pb.groups.iter() {
+        let bg = &res.beta[a..b];
+        let ng = bg.iter().map(|v| v * v).sum::<f64>().sqrt();
+        if ng == 0.0 {
+            // Zero group: ||S_{tau*lambda}(X_g^T rho)|| <= lambda(1-tau)w_g.
+            let st: Vec<f64> = corr[a..b]
+                .iter()
+                .map(|&c| {
+                    let t = c.abs() - pb.tau * lambda;
+                    if t > 0.0 {
+                        t * c.signum()
+                    } else {
+                        0.0
+                    }
+                })
+                .collect();
+            let stn = st.iter().map(|v| v * v).sum::<f64>().sqrt();
+            assert!(
+                stn <= lambda * (1.0 - pb.tau) * pb.weights[g] + 1e-6,
+                "group {g} violates zero-block KKT: {stn}"
+            );
+            continue;
+        }
+        for (k, j) in (a..b).enumerate() {
+            if bg[k] != 0.0 {
+                let rhs = lambda
+                    * (pb.tau * bg[k].signum()
+                        + (1.0 - pb.tau) * pb.weights[g] * bg[k] / ng);
+                assert!(
+                    (corr[j] - rhs).abs() < 1e-5,
+                    "feature {j}: corr {} vs rhs {rhs}",
+                    corr[j]
+                );
+            } else {
+                // Inactive coord of an active group: the l2 part is 0 here,
+                // so |X_j^T rho| <= lambda * tau.
+                assert!(corr[j].abs() <= lambda * pb.tau + 1e-6);
+            }
+        }
+    }
+}
+
+#[test]
+fn warm_path_equals_cold_solves_on_climate() {
+    let mut data = climate::generate(&ClimateConfig::small(3));
+    climate::preprocess(&mut data);
+    let pb = SglProblem::new(data.dataset.x, data.dataset.y, data.dataset.groups, 0.4);
+    let opts = PathOptions {
+        delta: 1.5,
+        t_count: 6,
+        solve: SolveOptions { tol: 1e-9, record_history: false, ..Default::default() },
+    };
+    let path = solve_path(&pb, &opts);
+    assert!(path.all_converged());
+    for (i, &lambda) in path.lambdas.iter().enumerate() {
+        let single = solve(&pb, lambda, None, &opts.solve);
+        let obj = |beta: &[f64]| {
+            let xb = pb.x.matvec(beta);
+            let r2: f64 = pb.y.iter().zip(&xb).map(|(y, v)| (y - v) * (y - v)).sum();
+            0.5 * r2 + lambda * omega(beta, &pb.groups, pb.tau, &pb.weights)
+        };
+        let obj_path = obj(&path.results[i].beta);
+        let obj_single = obj(&single.beta);
+        assert!(
+            (obj_path - obj_single).abs() < 1e-6 * obj_single.abs().max(1.0),
+            "lambda {i}: {obj_path} vs {obj_single}"
+        );
+    }
+}
+
+#[test]
+fn tau_limits_match_dedicated_problems() {
+    // tau=1 (lasso) and tau=0 (group lasso) run through the same machinery
+    // and reach their own optima.
+    for (tau, seed) in [(1.0, 4), (0.0, 5)] {
+        let pb = synthetic_problem(tau, seed);
+        let lambda = 0.3 * pb.lambda_max();
+        let res = solve(&pb, lambda, None, &SolveOptions { tol: 1e-11, ..Default::default() });
+        assert!(res.converged, "tau={tau}");
+        let g = duality_gap(&pb, &res.beta, lambda);
+        let tol_abs = 1e-11 * pb.y.iter().map(|v| v * v).sum::<f64>();
+        assert!(g <= 2.0 * tol_abs, "tau={tau}: gap {g}");
+    }
+}
+
+#[test]
+fn solutions_get_denser_as_lambda_decreases() {
+    let pb = synthetic_problem(0.2, 6);
+    let opts = PathOptions {
+        delta: 2.5,
+        t_count: 10,
+        solve: SolveOptions { tol: 1e-8, record_history: false, ..Default::default() },
+    };
+    let path = solve_path(&pb, &opts);
+    let nnz: Vec<usize> = path
+        .results
+        .iter()
+        .map(|r| r.beta.iter().filter(|&&b| b != 0.0).count())
+        .collect();
+    assert_eq!(nnz[0], 0, "zero solution at lambda_max");
+    assert!(nnz[9] > nnz[1], "sparsity must decrease along the path: {nnz:?}");
+}
+
+#[test]
+fn recovers_planted_groups_at_moderate_lambda() {
+    let cfg = SyntheticConfig {
+        n: 80,
+        n_groups: 30,
+        group_size: 5,
+        gamma1: 3,
+        gamma2: 3,
+        noise: 0.01,
+        seed: 7,
+        ..Default::default()
+    };
+    let d = generate(&cfg);
+    let truth = d.active_groups_true.clone();
+    let pb = SglProblem::new(d.dataset.x, d.dataset.y, d.dataset.groups, 0.3);
+    let lambda = 0.05 * pb.lambda_max();
+    let res = solve(&pb, lambda, None, &SolveOptions { tol: 1e-9, ..Default::default() });
+    assert!(res.converged);
+    for &g in &truth {
+        let (a, b) = pb.groups.bounds(g);
+        let norm: f64 = res.beta[a..b].iter().map(|v| v * v).sum::<f64>().sqrt();
+        assert!(norm > 0.1, "planted group {g} missing (norm {norm})");
+    }
+}
+
+#[test]
+fn solution_is_independent_of_fce() {
+    // The gap-check frequency affects cost, never the answer.
+    let pb = synthetic_problem(0.3, 8);
+    let lambda = 0.2 * pb.lambda_max();
+    let solve_at = |fce: usize| {
+        solve(
+            &pb,
+            lambda,
+            None,
+            &SolveOptions { tol: 1e-10, fce, record_history: false, ..Default::default() },
+        )
+    };
+    let base = solve_at(10);
+    for fce in [1usize, 3, 25] {
+        let res = solve_at(fce);
+        assert!(res.converged, "fce={fce}");
+        for j in 0..pb.p() {
+            assert!(
+                (res.beta[j] - base.beta[j]).abs() < 1e-5,
+                "fce={fce} feature {j}"
+            );
+        }
+    }
+}
+
+#[test]
+fn fista_agrees_with_cd_on_larger_instance() {
+    let pb = synthetic_problem(0.25, 9);
+    let lambda = 0.12 * pb.lambda_max();
+    let opts = SolveOptions { tol: 1e-10, max_epochs: 500_000, ..Default::default() };
+    let a = solve(&pb, lambda, None, &opts);
+    let f = sgl::solver::fista::solve_fista(&pb, lambda, None, &opts);
+    assert!(a.converged && f.converged);
+    for j in 0..pb.p() {
+        assert!((a.beta[j] - f.beta[j]).abs() < 5e-4, "feature {j}");
+    }
+}

@@ -1,0 +1,201 @@
+//! Cross-cutting property tests of the mathematical invariants the paper
+//! relies on, at integration level (random group structures, not the
+//! per-module fixtures).
+
+use sgl::norms::epsilon::{epsilon_dual_norm, epsilon_norm, lambda};
+use sgl::norms::prox::{group_soft_threshold, soft_threshold_vec};
+use sgl::norms::sgl::{epsilon_g, in_dual_unit_ball, omega, omega_dual};
+use sgl::solver::groups::Groups;
+use sgl::util::proptest::{check, check_close, forall, Gen};
+
+fn random_groups(g: &mut Gen) -> Groups {
+    let n_groups = g.usize_in(1..6);
+    let sizes: Vec<usize> = (0..n_groups).map(|_| g.usize_in(1..7)).collect();
+    Groups::from_sizes(&sizes)
+}
+
+#[test]
+fn omega_is_a_norm() {
+    forall("omega: norm axioms", 150, |g| {
+        let groups = random_groups(g);
+        let w = groups.sqrt_size_weights();
+        let tau = g.f64_in(0.0..1.0);
+        let p = groups.p();
+        let x: Vec<f64> = (0..p).map(|_| g.normal()).collect();
+        let y: Vec<f64> = (0..p).map(|_| g.normal()).collect();
+        let c = g.f64_in(0.1..5.0);
+        // homogeneity
+        let cx: Vec<f64> = x.iter().map(|v| c * v).collect();
+        check_close(
+            omega(&cx, &groups, tau, &w),
+            c * omega(&x, &groups, tau, &w),
+            1e-9,
+            "homogeneity",
+        )?;
+        // triangle inequality
+        let xy: Vec<f64> = x.iter().zip(&y).map(|(a, b)| a + b).collect();
+        check(
+            omega(&xy, &groups, tau, &w)
+                <= omega(&x, &groups, tau, &w) + omega(&y, &groups, tau, &w) + 1e-9,
+            "triangle",
+        )?;
+        // positivity
+        check(omega(&x, &groups, tau, &w) >= 0.0, "nonneg")
+    });
+}
+
+#[test]
+fn dual_norm_is_dual() {
+    // Omega^D(xi) = max over the omega-unit ball of <beta, xi>: verify the
+    // sup is attained within tolerance by projected-gradient search and
+    // never exceeded by random candidates.
+    forall("dual norm dominates random candidates", 120, |g| {
+        let groups = random_groups(g);
+        let w = groups.sqrt_size_weights();
+        let tau = g.f64_in(0.05..0.95);
+        let p = groups.p();
+        let xi: Vec<f64> = (0..p).map(|_| g.normal()).collect();
+        let dn = omega_dual(&xi, &groups, tau, &w);
+        for _ in 0..10 {
+            let cand: Vec<f64> = (0..p).map(|_| g.normal()).collect();
+            let norm = omega(&cand, &groups, tau, &w);
+            if norm == 0.0 {
+                continue;
+            }
+            let ip: f64 =
+                cand.iter().zip(&xi).map(|(a, b)| a * b).sum::<f64>().abs() / norm;
+            check(ip <= dn * (1.0 + 1e-9) + 1e-12, &format!("{ip} > {dn}"))?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn lambda_is_monotone_in_alpha_and_r() {
+    // Lambda(x, alpha, R) decreases when alpha or R increase (thresholding
+    // harder / allowing a bigger rhs shrinks the root).
+    forall("Lambda monotonicity", 150, |g| {
+        let x = g.vec_normal(1..20);
+        if x.iter().all(|&v| v == 0.0) {
+            return Ok(());
+        }
+        let a1 = g.f64_in(0.05..0.9);
+        let a2 = a1 + g.f64_in(0.01..(1.0 - a1));
+        let r1 = g.f64_in(0.05..1.5);
+        let r2 = r1 + g.f64_in(0.01..1.0);
+        let base = lambda(&x, a1, r1);
+        check(lambda(&x, a2, r1) <= base * (1.0 + 1e-9), "monotone in alpha")?;
+        check(lambda(&x, a1, r2) <= base * (1.0 + 1e-9), "monotone in R")
+    });
+}
+
+#[test]
+fn epsilon_norm_sandwich() {
+    // max(||x||_inf, eps*||x||_2)-ish bounds: ||x||_eps >= ||x||_inf and
+    // ||x||_eps >= ||x||_2 ... actually ||x||_eps interpolates:
+    // ||x||_inf <= ||x||_eps (eps<1 side) and ||x||_2 <= d-dependent bound.
+    forall("epsilon-norm sandwich", 150, |g| {
+        let x = g.vec_normal(1..20);
+        if x.iter().all(|&v| v == 0.0) {
+            return Ok(());
+        }
+        let eps = g.f64_in(0.0..1.0);
+        let ne = epsilon_norm(&x, eps);
+        let inf = x.iter().fold(0.0_f64, |m, v| m.max(v.abs()));
+        let l2: f64 = x.iter().map(|v| v * v).sum::<f64>().sqrt();
+        check(ne >= inf - 1e-9, "||x||_eps >= ||x||_inf")?;
+        check(ne >= l2.min(inf) - 1e-9, "||x||_eps above the min")?;
+        check(ne <= inf + l2 + 1e-9, "||x||_eps <= ||x||_inf + ||x||_2")
+    });
+}
+
+#[test]
+fn dual_scaling_lands_on_ball_boundary_or_interior() {
+    forall("xi / Omega^D(xi) in the dual unit ball", 120, |g| {
+        let groups = random_groups(g);
+        let w = groups.sqrt_size_weights();
+        let tau = g.f64_in(0.0..1.0);
+        let p = groups.p();
+        let xi: Vec<f64> = (0..p).map(|_| g.normal() * 3.0).collect();
+        let dn = omega_dual(&xi, &groups, tau, &w);
+        if dn == 0.0 {
+            return Ok(());
+        }
+        let scaled: Vec<f64> = xi.iter().map(|v| v / dn).collect();
+        check(
+            in_dual_unit_ball(&scaled, &groups, tau, &w, 1e-9),
+            "scaled point must be feasible",
+        )
+    });
+}
+
+#[test]
+fn epsilon_dual_consistency_with_group_scaling() {
+    // The SGL dual norm of a vector supported on ONE group reduces to the
+    // per-group epsilon-norm formula (Eq. 20).
+    forall("single-group dual norm", 120, |g| {
+        let groups = random_groups(g);
+        let w = groups.sqrt_size_weights();
+        let tau = g.f64_in(0.05..0.95);
+        let p = groups.p();
+        let target = g.usize_in(0..groups.n_groups());
+        let mut xi = vec![0.0; p];
+        let (a, b) = groups.bounds(target);
+        for v in xi[a..b].iter_mut() {
+            *v = g.normal();
+        }
+        let eps = epsilon_g(tau, w[target]);
+        let expect = lambda(&xi[a..b], 1.0 - eps, eps) / (tau + (1.0 - tau) * w[target]);
+        check_close(omega_dual(&xi, &groups, tau, &w), expect, 1e-9, "Eq. 20")
+    });
+}
+
+#[test]
+fn soft_thresholds_shrink() {
+    forall("thresholding shrinks norms", 150, |g| {
+        let x = g.vec_normal(1..15);
+        let t = g.f64_in(0.0..2.0);
+        let st = soft_threshold_vec(&x, t);
+        let gt = group_soft_threshold(&x, t);
+        let n = |v: &[f64]| v.iter().map(|a| a * a).sum::<f64>().sqrt();
+        check(n(&st) <= n(&x) + 1e-12, "S_t shrinks l2")?;
+        check(n(&gt) <= n(&x) + 1e-12, "S^gp shrinks l2")?;
+        for i in 0..x.len() {
+            check(st[i].abs() <= x[i].abs() + 1e-12, "coordinatewise")?;
+            check(
+                st[i] * x[i] >= 0.0 && gt[i] * x[i] >= 0.0,
+                "signs preserved",
+            )?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn epsilon_dual_norm_is_dual_of_epsilon_norm() {
+    // <x, y> <= ||x||_eps ||y||_eps^D with near-tightness over random
+    // search (Lemma 4).
+    forall("epsilon duality", 120, |g| {
+        let n = g.usize_in(1..12);
+        let y: Vec<f64> = (0..n).map(|_| g.normal()).collect();
+        let eps = g.f64_in(0.05..0.95);
+        let dual = epsilon_dual_norm(&y, eps);
+        let mut best = 0.0_f64;
+        for _ in 0..30 {
+            let x: Vec<f64> = (0..n).map(|_| g.normal()).collect();
+            let ne = epsilon_norm(&x, eps);
+            if ne == 0.0 {
+                continue;
+            }
+            let ip: f64 = x.iter().zip(&y).map(|(a, b)| a * b).sum::<f64>().abs() / ne;
+            check(ip <= dual * (1.0 + 1e-9) + 1e-12, "duality bound")?;
+            best = best.max(ip);
+        }
+        // Random search should get within a factor ~3 of the sup (sanity
+        // that the bound is not vacuous).
+        if dual > 1e-9 {
+            check(best >= dual / 5.0, &format!("bound too loose: {best} vs {dual}"))?;
+        }
+        Ok(())
+    });
+}

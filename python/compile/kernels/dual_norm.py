@@ -31,7 +31,10 @@ def _lambda_kernel(x_ref, alpha_ref, r_ref, nu_ref):
     s = jnp.sort(x, axis=1)[:, ::-1]
     cs = jnp.cumsum(s, axis=1)
     cs2 = jnp.cumsum(s * s, axis=1)
-    k = jnp.arange(1, d + 1, dtype=x.dtype)[None, :]
+    # broadcasted_iota instead of jnp.arange: arange materializes a concrete
+    # (d,) array that pallas_call rejects as a captured constant (and 1-D
+    # iota would not lower on TPU); the 2-D iota is a primitive either way.
+    k = jax.lax.broadcasted_iota(x.dtype, (1, d), 1) + 1.0
 
     x_next = jnp.concatenate([s[:, 1:], jnp.zeros((bg, 1), x.dtype)], axis=1)
     safe_next = jnp.maximum(x_next, _TINY)

@@ -2,6 +2,10 @@
 bisection root-finder, plus the paper's closed-form identities.
 """
 
+import pytest
+
+pytest.importorskip("hypothesis")  # offline images may lack it; skip, never fail
+
 import hypothesis.strategies as st
 import jax.numpy as jnp
 import numpy as np

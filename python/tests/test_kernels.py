@@ -4,11 +4,14 @@ Hypothesis sweeps shapes and values; fixed cases probe the edges
 (tau in {0, 1}, zero blocks, single-group / single-feature tiles).
 """
 
+import pytest
+
+pytest.importorskip("hypothesis")  # offline images may lack it; skip, never fail
+
 import hypothesis
 import hypothesis.strategies as st
 import jax.numpy as jnp
 import numpy as np
-import pytest
 from hypothesis import given, settings
 
 from compile.kernels import group_screen_pallas, matvec_xt_pallas, sgl_prox_pallas

@@ -1,6 +1,10 @@
 """Property tests of the pure-jnp reference layer (norm axioms, paper
 lemmas) — these guard the oracles every kernel is checked against."""
 
+import pytest
+
+pytest.importorskip("hypothesis")  # offline images may lack it; skip, never fail
+
 import hypothesis.strategies as st
 import jax.numpy as jnp
 import numpy as np

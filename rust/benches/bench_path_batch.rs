@@ -1,0 +1,127 @@
+//! Bench: the batched path engine (`solver::path::PathBatch`) vs the plain
+//! sequential loop over the same jobs.
+//!
+//! Workload: the Fig. 2c comparison grid — every screening rule crossed
+//! with several target accuracies, each job one full warm-started λ-path
+//! on the synthetic design. `threads=1` is the sequential baseline;
+//! `SGL_THREADS` (or all cores) is the batched runner. Besides wall-clock,
+//! the bench verifies the two runs are *bit-identical* per job and that
+//! all rules agree on the path objectives to 1e-7 at the tightest
+//! tolerance (y is scaled to unit norm so that absolute objective budget
+//! is meaningful).
+//!
+//! Default scale: p = 2000, T = 40 (seconds); `SGL_BENCH_SCALE=paper`
+//! runs the full n=100, p=10000, T=100 instance.
+
+use sgl::data::synthetic::{generate, SyntheticConfig};
+use sgl::norms::sgl::omega;
+use sgl::screening::RuleKind;
+use sgl::solver::cd::SolveOptions;
+use sgl::solver::path::{PathBatch, PathBatchJob, PathOptions};
+use sgl::solver::problem::SglProblem;
+use sgl::util::pool::default_threads;
+use sgl::util::timer::Stopwatch;
+use std::sync::Arc;
+
+fn main() {
+    let paper = std::env::var("SGL_BENCH_SCALE").as_deref() == Ok("paper");
+    let cfg = SyntheticConfig {
+        n: 100,
+        n_groups: if paper { 1000 } else { 200 },
+        group_size: 10,
+        gamma1: 10,
+        gamma2: 4,
+        seed: 42,
+        ..Default::default()
+    };
+    let t_count = if paper { 100 } else { 40 };
+    let delta = 3.0;
+    let tau = 0.2;
+    let tolerances = [1e-4, 1e-6, 1e-8];
+
+    let d = generate(&cfg);
+    // Unit-norm y: objective differences then compare directly against the
+    // 1e-7 agreement budget, independent of the dataset's scale.
+    let y_norm = d.dataset.y.iter().map(|v| v * v).sum::<f64>().sqrt().max(1e-300);
+    let y: Vec<f64> = d.dataset.y.iter().map(|v| v / y_norm).collect();
+    let pb = Arc::new(SglProblem::new(d.dataset.x, y, d.dataset.groups, tau));
+    let lambdas = SglProblem::lambda_grid(pb.lambda_max(), delta, t_count);
+
+    let mut batch = PathBatch::new();
+    for &tol in &tolerances {
+        for rule in RuleKind::all() {
+            batch.push(PathBatchJob {
+                pb: pb.clone(),
+                lambdas: Some(lambdas.clone()),
+                opts: PathOptions {
+                    delta,
+                    t_count,
+                    solve: SolveOptions { rule, tol, record_history: false, ..Default::default() },
+                },
+                tau_override: None,
+                label: format!("{}@{tol:.0e}", rule.name()),
+            });
+        }
+    }
+    println!(
+        "== bench_path_batch: {} path jobs ({} rules x {} tols), n={}, p={}, T={t_count} ==\n",
+        batch.len(),
+        RuleKind::all().len(),
+        tolerances.len(),
+        cfg.n,
+        cfg.p()
+    );
+
+    let threads = default_threads().max(2);
+    let sw = Stopwatch::start();
+    let serial = batch.run(1);
+    let t_serial = sw.elapsed_s();
+    let sw = Stopwatch::start();
+    let threaded = batch.run(threads);
+    let t_threaded = sw.elapsed_s();
+    println!("sequential loop (threads=1):   {t_serial:>8.3}s");
+    println!(
+        "batched runner  (threads={threads}):   {t_threaded:>8.3}s  ({:.2}x speedup)",
+        t_serial / t_threaded.max(1e-12)
+    );
+
+    // Determinism: threading must not change a single coefficient.
+    let mut identical = true;
+    for (a, b) in serial.iter().zip(&threaded) {
+        for (ra, rb) in a.results.iter().zip(&b.results) {
+            identical &= ra.beta == rb.beta;
+        }
+    }
+    println!("serial vs threaded coefficients bit-identical: {identical}");
+    assert!(identical, "threading changed solver output");
+
+    // Objective agreement across all rules at the tightest tolerance.
+    let objective = |lambda: f64, beta: &[f64]| {
+        let xb = pb.x.matvec(beta);
+        let r2: f64 = pb.y.iter().zip(&xb).map(|(yi, v)| (yi - v) * (yi - v)).sum();
+        0.5 * r2 + lambda * omega(beta, &pb.groups, pb.tau, &pb.weights)
+    };
+    let n_rules = RuleKind::all().len();
+    let tight_base = (tolerances.len() - 1) * n_rules; // RuleKind::None @ 1e-8
+    let mut max_div = 0.0_f64;
+    for r in 1..n_rules {
+        for (i, &lambda) in lambdas.iter().enumerate() {
+            let a = objective(lambda, &serial[tight_base].results[i].beta);
+            let b = objective(lambda, &serial[tight_base + r].results[i].beta);
+            max_div = max_div.max((a - b).abs());
+        }
+    }
+    println!("max objective divergence across rules @1e-8: {max_div:.2e}");
+    assert!(max_div <= 1e-7, "rules disagree beyond budget: {max_div:.2e}");
+
+    println!("\nlabel,seconds,epochs,converged  (threaded run)");
+    for (job, path) in batch.jobs().iter().zip(&threaded) {
+        println!(
+            "{},{:.4},{},{}",
+            job.label,
+            path.total_s,
+            path.total_epochs(),
+            path.all_converged()
+        );
+    }
+}

@@ -233,6 +233,12 @@ rho = 0.9
     }
 
     #[test]
+    fn parses_sequential_rule() {
+        let c = RunConfig::from_toml_str("[solver]\nrule = \"gap_safe_seq\"\n").unwrap();
+        assert_eq!(c.rule, RuleKind::GapSafeSeq);
+    }
+
+    #[test]
     fn invalid_values_rejected() {
         assert!(RunConfig::from_toml_str("[solver]\ntau = 1.5\n").is_err());
         assert!(RunConfig::from_toml_str("[solver]\nrule = \"magic\"\n").is_err());

@@ -5,9 +5,8 @@
 use super::metrics::Metrics;
 use crate::screening::RuleKind;
 use crate::solver::cd::SolveOptions;
-use crate::solver::path::{solve_path_on_grid, PathOptions, PathResult};
+use crate::solver::path::{PathBatch, PathBatchJob, PathOptions, PathResult};
 use crate::solver::problem::SglProblem;
-use crate::util::pool::parallel_map_slice;
 use std::sync::Arc;
 
 /// A rule-comparison job: one full λ-path per screening rule at a given
@@ -45,10 +44,12 @@ pub struct RuleTiming {
     pub converged: bool,
 }
 
-/// Run the comparison: each (rule, tol) pair solves the whole warm-started
-/// path on its own worker. Returns results in (tol-major, rule-minor) order.
+/// Run the comparison through the batched path engine: each (rule, tol)
+/// pair is one [`PathBatchJob`] solving the whole warm-started path on its
+/// own worker, all jobs sharing the one `Arc`'d problem instance (no copy
+/// of `X` is ever made). Returns results in (tol-major, rule-minor) order.
 pub fn run_rule_comparison(
-    pb: &SglProblem,
+    pb: Arc<SglProblem>,
     job: &RuleComparisonJob,
     threads: usize,
     metrics: Option<Arc<Metrics>>,
@@ -56,36 +57,47 @@ pub fn run_rule_comparison(
     let lambda_max = pb.lambda_max();
     let lambdas = SglProblem::lambda_grid(lambda_max, job.delta, job.t_count);
     let mut cases: Vec<(RuleKind, f64)> = Vec::new();
+    let mut batch = PathBatch::new();
     for &tol in &job.tolerances {
         for &rule in &job.rules {
             cases.push((rule, tol));
+            batch.push(PathBatchJob {
+                pb: pb.clone(),
+                lambdas: Some(lambdas.clone()),
+                opts: PathOptions {
+                    delta: job.delta,
+                    t_count: job.t_count,
+                    solve: SolveOptions {
+                        tol,
+                        fce: job.fce,
+                        max_epochs: job.max_epochs,
+                        rule,
+                        record_history: false,
+                    },
+                },
+                tau_override: None,
+                label: format!("{}@{tol:.0e}", rule.name()),
+            });
         }
     }
-    parallel_map_slice(&cases, threads, |&(rule, tol)| {
-        let opts = PathOptions {
-            delta: job.delta,
-            t_count: job.t_count,
-            solve: SolveOptions {
-                tol,
-                fce: job.fce,
-                max_epochs: job.max_epochs,
+    let paths: Vec<PathResult> = batch.run(threads);
+    cases
+        .into_iter()
+        .zip(paths)
+        .map(|((rule, tol), path)| {
+            if let Some(m) = &metrics {
+                m.incr("paths_solved", 1);
+                m.incr("epochs_total", path.total_epochs() as u64);
+            }
+            RuleTiming {
                 rule,
-                record_history: false,
-            },
-        };
-        let path: PathResult = solve_path_on_grid(pb, &lambdas, &opts);
-        if let Some(m) = &metrics {
-            m.incr("paths_solved", 1);
-            m.incr("epochs_total", path.total_epochs() as u64);
-        }
-        RuleTiming {
-            rule,
-            tol,
-            seconds: path.total_s,
-            total_epochs: path.total_epochs(),
-            converged: path.all_converged(),
-        }
-    })
+                tol,
+                seconds: path.total_s,
+                total_epochs: path.total_epochs(),
+                converged: path.all_converged(),
+            }
+        })
+        .collect()
 }
 
 /// A whole-path job with per-check history (Fig. 2a/2b data).
@@ -157,7 +169,7 @@ mod tests {
             ..Default::default()
         };
         let metrics = Arc::new(Metrics::new());
-        let out = run_rule_comparison(&pb, &job, 2, Some(metrics.clone()));
+        let out = run_rule_comparison(Arc::new(pb), &job, 2, Some(metrics.clone()));
         assert_eq!(out.len(), 4);
         assert!(out.iter().all(|t| t.converged));
         assert_eq!(metrics.counter("paths_solved"), 4);

@@ -78,7 +78,7 @@ pub fn rule_timings(
 ) -> Vec<RuleTiming> {
     let data = generate(cfg);
     let pb = SglProblem::new(data.dataset.x, data.dataset.y, data.dataset.groups, tau);
-    run_rule_comparison(&pb, job, threads, None)
+    run_rule_comparison(std::sync::Arc::new(pb), job, threads, None)
 }
 
 #[cfg(test)]

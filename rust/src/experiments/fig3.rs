@@ -59,7 +59,7 @@ pub fn rule_timings(
         data.dataset.groups.clone(),
         tau_star,
     );
-    run_rule_comparison(&pb, job, threads, None)
+    run_rule_comparison(std::sync::Arc::new(pb), job, threads, None)
 }
 
 /// The paper's τ grid: {0, 0.1, …, 1}.

@@ -35,7 +35,7 @@ fn specs() -> Vec<OptSpec> {
         OptSpec { name: "tau", help: "l1/group mixing in [0,1]", takes_value: true, default: None },
         OptSpec { name: "lambda-frac", help: "lambda as a fraction of lambda_max", takes_value: true, default: Some("0.1") },
         OptSpec { name: "tol", help: "target duality gap", takes_value: true, default: None },
-        OptSpec { name: "rule", help: "none|static|dynamic|dst3|gap_safe", takes_value: true, default: None },
+        OptSpec { name: "rule", help: "none|static|dynamic|dst3|gap_safe|gap_safe_seq", takes_value: true, default: None },
         OptSpec { name: "delta", help: "path grid exponent", takes_value: true, default: None },
         OptSpec { name: "t-count", help: "path grid size", takes_value: true, default: None },
         OptSpec { name: "seed", help: "dataset seed", takes_value: true, default: None },
@@ -254,7 +254,7 @@ fn run(args: &Args) -> Result<()> {
                 max_epochs: cfg.max_epochs,
                 ..Default::default()
             };
-            let timings = run_rule_comparison(&pb, &job, threads, None);
+            let timings = run_rule_comparison(std::sync::Arc::new(pb), &job, threads, None);
             println!("{}", render_rule_timings(&timings));
         }
         "xla" => {

@@ -8,14 +8,28 @@
 //! radius (Thm. 2) and the Theorem-1 tests, returning updated masks. Rust
 //! owns the outer loop, convergence policy, and all state; Python never
 //! runs here.
+//!
+//! The PJRT execution path needs the `xla` bindings crate, which offline
+//! build images do not carry; it is compiled only under the `xla` feature.
+//! Without the feature, [`XlaEngine`]/[`XlaSession`] keep the exact same
+//! API but every entry point returns an explanatory error, so callers
+//! (CLI `xla` subcommand, `examples/xla_pipeline.rs`, `bench_runtime`)
+//! build and degrade gracefully. [`ArtifactMeta`] is pure TOML and is
+//! always available.
 
-use super::artifact::Artifact;
-use super::client::{lit_matrix, lit_scalar, lit_vec, to_scalar_f64, to_vec_f64, Runtime};
 use crate::config::toml::TomlDoc;
-use crate::solver::ista::global_lipschitz;
 use crate::solver::problem::SglProblem;
-use anyhow::{ensure, Context, Result};
+use anyhow::{Context, Result};
 use std::path::Path;
+
+#[cfg(feature = "xla")]
+use super::artifact::Artifact;
+#[cfg(feature = "xla")]
+use super::client::{lit_matrix, lit_scalar, lit_vec, to_scalar_f64, to_vec_f64, Runtime};
+#[cfg(feature = "xla")]
+use crate::solver::ista::global_lipschitz;
+#[cfg(feature = "xla")]
+use anyhow::ensure;
 
 /// Shape metadata baked into a set of artifacts (written by `aot.py`).
 #[derive(Clone, Debug, PartialEq)]
@@ -49,7 +63,20 @@ impl ArtifactMeta {
     }
 }
 
+/// Result of an engine solve.
+#[derive(Clone, Debug)]
+pub struct EngineSolveResult {
+    pub beta: Vec<f64>,
+    pub gap: f64,
+    pub converged: bool,
+    /// Outer rounds executed (each = 1 screen + 1 epoch artifact call).
+    pub rounds: usize,
+    pub active_features: usize,
+    pub active_groups: usize,
+}
+
 /// Compiled artifact pair + metadata.
+#[cfg(feature = "xla")]
 pub struct XlaEngine {
     pub rt: Runtime,
     pub meta: ArtifactMeta,
@@ -57,6 +84,7 @@ pub struct XlaEngine {
     screen: Artifact,
 }
 
+#[cfg(feature = "xla")]
 impl XlaEngine {
     /// Load and compile the artifacts in `dir` (default `artifacts/`).
     pub fn load(dir: &Path) -> Result<Self> {
@@ -100,6 +128,7 @@ impl XlaEngine {
 }
 
 /// Per-problem state: constant literals uploaded once.
+#[cfg(feature = "xla")]
 pub struct XlaSession<'e> {
     engine: &'e XlaEngine,
     x_lit: xla::Literal,
@@ -112,18 +141,7 @@ pub struct XlaSession<'e> {
     y_norm_sq: f64,
 }
 
-/// Result of an engine solve.
-#[derive(Clone, Debug)]
-pub struct EngineSolveResult {
-    pub beta: Vec<f64>,
-    pub gap: f64,
-    pub converged: bool,
-    /// Outer rounds executed (each = 1 screen + 1 epoch artifact call).
-    pub rounds: usize,
-    pub active_features: usize,
-    pub active_groups: usize,
-}
-
+#[cfg(feature = "xla")]
 impl<'e> XlaSession<'e> {
     /// Run the masked-ISTA solve at one `λ`. `tol` is relative to `‖y‖²`
     /// (same convention as `solver::cd::SolveOptions::tol`).
@@ -206,6 +224,73 @@ impl<'e> XlaSession<'e> {
     }
 }
 
+// ---------------------------------------------------------------------------
+// Featureless stub: identical surface, every entry point errors.
+// ---------------------------------------------------------------------------
+
+/// Placeholder for the PJRT client when the `xla` feature is off.
+#[cfg(not(feature = "xla"))]
+pub struct StubRuntime;
+
+#[cfg(not(feature = "xla"))]
+impl StubRuntime {
+    pub fn platform(&self) -> String {
+        "unavailable (crate built without the `xla` feature)".to_string()
+    }
+
+    pub fn device_count(&self) -> usize {
+        0
+    }
+}
+
+/// Engine stub compiled when the `xla` feature is off. [`XlaEngine::load`]
+/// always fails with an actionable message, so this struct is never
+/// actually constructed — it exists to keep every caller compiling.
+#[cfg(not(feature = "xla"))]
+pub struct XlaEngine {
+    pub rt: StubRuntime,
+    pub meta: ArtifactMeta,
+}
+
+#[cfg(not(feature = "xla"))]
+impl XlaEngine {
+    pub fn load(dir: &Path) -> Result<Self> {
+        // Surface meta.toml problems first (same failure order as the real
+        // engine), then report the missing backend.
+        let _meta = ArtifactMeta::load(dir)?;
+        anyhow::bail!(
+            "PJRT runtime unavailable: this build has no `xla` feature. \
+             Rebuild with `cargo build --features xla` in an environment that \
+             vendors the xla bindings, or use the native solver instead \
+             (`sgl solve` / `sgl path`)"
+        )
+    }
+
+    pub fn session<'e>(&'e self, _pb: &SglProblem) -> Result<XlaSession<'e>> {
+        anyhow::bail!("PJRT runtime unavailable: built without the `xla` feature")
+    }
+}
+
+/// Session stub compiled when the `xla` feature is off.
+#[cfg(not(feature = "xla"))]
+pub struct XlaSession<'e> {
+    _engine: std::marker::PhantomData<&'e XlaEngine>,
+}
+
+#[cfg(not(feature = "xla"))]
+impl<'e> XlaSession<'e> {
+    pub fn solve(
+        &self,
+        _lambda: f64,
+        _tol: f64,
+        _max_rounds: usize,
+        _beta0: Option<&[f64]>,
+        _screening: bool,
+    ) -> Result<EngineSolveResult> {
+        anyhow::bail!("PJRT runtime unavailable: built without the `xla` feature")
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -229,5 +314,19 @@ mod tests {
     #[test]
     fn missing_meta_is_error() {
         assert!(ArtifactMeta::load(Path::new("/nonexistent")).is_err());
+    }
+
+    #[cfg(not(feature = "xla"))]
+    #[test]
+    fn stub_load_reports_missing_feature() {
+        let dir = std::env::temp_dir().join(format!("sgl-stub-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(
+            dir.join("meta.toml"),
+            "[shape]\nn = 10\np = 20\nn_groups = 4\ngroup_size = 5\nn_inner = 2\n",
+        )
+        .unwrap();
+        let err = XlaEngine::load(&dir).unwrap_err();
+        assert!(format!("{err}").contains("xla"), "{err}");
     }
 }

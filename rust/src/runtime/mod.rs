@@ -6,9 +6,13 @@
 //! xla_extension 0.5.1 rejects, while the text parser reassigns ids and
 //! round-trips cleanly (see /opt/xla-example/README.md).
 
+#[cfg(feature = "xla")]
 pub mod artifact;
+#[cfg(feature = "xla")]
 pub mod client;
 pub mod engine;
 
+#[cfg(feature = "xla")]
 pub use artifact::Artifact;
+#[cfg(feature = "xla")]
 pub use client::Runtime;

@@ -11,7 +11,7 @@
 //! bounded away from zero, which is exactly why they plateau in Fig. 2.
 
 use super::{RuleKind, ScreeningRule, Sphere};
-use crate::solver::duality::DualSnapshot;
+use crate::solver::duality::{dual_value, DualSnapshot};
 use crate::solver::problem::SglProblem;
 
 /// GAP safe rule: entirely derived from the current dual snapshot, so the
@@ -25,6 +25,76 @@ impl ScreeningRule for GapSafeRule {
 
     fn sphere(&mut self, _pb: &SglProblem, _lambda: f64, snap: &DualSnapshot) -> Option<Sphere> {
         Some(Sphere { xt_center: snap.xt_theta.clone(), radius: snap.radius })
+    }
+}
+
+/// Dual point carried across grid points by the sequential rule.
+struct CarriedDual {
+    theta: Vec<f64>,
+    xt_theta: Vec<f64>,
+}
+
+/// Sequential GAP safe rule (`GAPSAFE_SEQ`, paper Alg. 2 "previous
+/// ε-solution"): screens exactly **once per λ**, at the first gap check,
+/// using the dual point inherited from the previous grid point of a
+/// warm-started path.
+///
+/// Validity: the dual feasible set `Δ_X = {θ : Ω^D(Xᵀθ) ≤ 1}` does not
+/// depend on λ, so the θ stored at `λ_{t−1}` is still feasible at `λ_t`
+/// and Theorem 2 applies verbatim to the pair `(β_warm, θ_prev)`:
+/// `‖θ̂(λ_t) − θ_prev‖ ≤ sqrt(2·(P_{λ_t}(β_warm) − D_{λ_t}(θ_prev)))/λ_t`.
+/// Because warm starts make that gap small for adjacent grid points,
+/// screening fires *at epoch 0*, before any new iterations — and since
+/// `Xᵀθ_prev` was saved alongside θ, the epoch-0 sphere costs **no extra
+/// matvec**. After that one application the rule stays silent until the
+/// next λ (the sequential/dynamic distinction of Ndiaye et al. 2017).
+pub struct GapSafeSeqRule {
+    prev: Option<CarriedDual>,
+    /// λ of the last emitted sphere — used to detect grid-point changes.
+    last_lambda: Option<f64>,
+}
+
+impl GapSafeSeqRule {
+    pub fn new() -> Self {
+        GapSafeSeqRule { prev: None, last_lambda: None }
+    }
+}
+
+impl Default for GapSafeSeqRule {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl ScreeningRule for GapSafeSeqRule {
+    fn kind(&self) -> RuleKind {
+        RuleKind::GapSafeSeq
+    }
+
+    fn sphere(&mut self, pb: &SglProblem, lambda: f64, snap: &DualSnapshot) -> Option<Sphere> {
+        if self.last_lambda == Some(lambda) {
+            return None; // sequential: a single screening pass per grid point
+        }
+        self.last_lambda = Some(lambda);
+        match &self.prev {
+            Some(carried) => {
+                let dual = dual_value(&pb.y, &carried.theta, lambda);
+                let gap = (snap.primal - dual).max(0.0);
+                // Same cancellation-error floor as DualSnapshot::compute:
+                // a radius-0 sphere must never arise from round-off alone.
+                let floor = 16.0 * f64::EPSILON * (snap.primal.abs() + dual.abs());
+                let radius = (2.0 * gap.max(floor)).sqrt() / lambda;
+                Some(Sphere { xt_center: carried.xt_theta.clone(), radius })
+            }
+            // First grid point: nothing carried yet; fall back to the
+            // current snapshot's sphere (= the dynamic rule at this check).
+            None => Some(Sphere { xt_center: snap.xt_theta.clone(), radius: snap.radius }),
+        }
+    }
+
+    fn on_solve_complete(&mut self, _pb: &SglProblem, _lambda: f64, snap: &DualSnapshot) {
+        self.prev =
+            Some(CarriedDual { theta: snap.theta.clone(), xt_theta: snap.xt_theta.clone() });
     }
 }
 
@@ -82,5 +152,40 @@ mod tests {
         let snap1 = DualSnapshot::compute(&pb, &beta1, &rho1, lambda);
         assert!(snap1.gap <= snap0.gap + 1e-12);
         assert!(snap1.radius <= snap0.radius + 1e-12);
+    }
+
+    #[test]
+    fn seq_rule_screens_once_per_lambda() {
+        let pb = problem(3);
+        let lambda = 0.5 * pb.lambda_max();
+        let snap = DualSnapshot::compute(&pb, &vec![0.0; pb.p()], &pb.y, lambda);
+        let mut rule = GapSafeSeqRule::new();
+        assert!(rule.sphere(&pb, lambda, &snap).is_some(), "first check must screen");
+        assert!(rule.sphere(&pb, lambda, &snap).is_none(), "second check must not");
+        // A new lambda re-arms the rule.
+        let lambda2 = 0.4 * pb.lambda_max();
+        assert!(rule.sphere(&pb, lambda2, &snap).is_some());
+    }
+
+    #[test]
+    fn seq_rule_uses_carried_dual_point() {
+        let pb = problem(4);
+        let l1 = 0.6 * pb.lambda_max();
+        let l2 = 0.5 * pb.lambda_max();
+        let beta = vec![0.0; pb.p()];
+        let snap1 = DualSnapshot::compute(&pb, &beta, &pb.y, l1);
+        let mut rule = GapSafeSeqRule::new();
+        rule.on_solve_complete(&pb, l1, &snap1);
+        let snap2 = DualSnapshot::compute(&pb, &beta, &pb.y, l2);
+        let s = rule.sphere(&pb, l2, &snap2).expect("first check at new lambda");
+        // Center is X^T theta_prev, not the fresh snapshot's center.
+        assert_eq!(s.xt_center, snap1.xt_theta);
+        // Radius follows Theorem 2 for the carried pair.
+        let dual = crate::solver::duality::dual_value(&pb.y, &snap1.theta, l2);
+        let gap = (snap2.primal - dual).max(0.0);
+        let expect = (2.0 * gap.max(16.0 * f64::EPSILON * (snap2.primal.abs() + dual.abs())))
+            .sqrt()
+            / l2;
+        assert!((s.radius - expect).abs() < 1e-12);
     }
 }

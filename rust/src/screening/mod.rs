@@ -35,8 +35,15 @@ pub enum RuleKind {
     Dynamic,
     /// DST3 sphere (Xiang et al. 2011 / Bonnefoy et al. 2014), App. C.
     Dst3,
-    /// GAP safe sphere (Theorem 2) — the paper's rule.
+    /// GAP safe sphere (Theorem 2) — the paper's rule, applied
+    /// *dynamically* at every gap evaluation.
     GapSafe,
+    /// Sequential GAP safe sphere (paper Alg. 2, "previous ε-solution"):
+    /// screens **once per λ**, at the first gap check, using the dual
+    /// point carried over from the previous grid point of a warm-started
+    /// path. This is the `GAPSAFE_SEQ` variant of the authors' reference
+    /// implementation.
+    GapSafeSeq,
 }
 
 impl RuleKind {
@@ -47,12 +54,21 @@ impl RuleKind {
             RuleKind::Dynamic => "dynamic",
             RuleKind::Dst3 => "dst3",
             RuleKind::GapSafe => "gap_safe",
+            RuleKind::GapSafeSeq => "gap_safe_seq",
         }
     }
 
-    /// All rules, in the order the paper's figures list them.
-    pub fn all() -> [RuleKind; 5] {
-        [RuleKind::None, RuleKind::Static, RuleKind::Dynamic, RuleKind::Dst3, RuleKind::GapSafe]
+    /// All rules, in the order the paper's figures list them (the
+    /// sequential GAP variant last, as in the authors' comparison).
+    pub fn all() -> [RuleKind; 6] {
+        [
+            RuleKind::None,
+            RuleKind::Static,
+            RuleKind::Dynamic,
+            RuleKind::Dst3,
+            RuleKind::GapSafe,
+            RuleKind::GapSafeSeq,
+        ]
     }
 
     pub fn from_name(s: &str) -> Option<RuleKind> {
@@ -78,6 +94,14 @@ pub trait ScreeningRule: Send {
     /// dual-scaled feasible point `θ_k` (Eq. 15), its `Xᵀθ_k`, and the
     /// duality gap.
     fn sphere(&mut self, pb: &SglProblem, lambda: f64, snap: &DualSnapshot) -> Option<Sphere>;
+
+    /// Hook invoked by the solver when the solve at `lambda` terminates,
+    /// with the final dual snapshot. Sequential rules
+    /// ([`RuleKind::GapSafeSeq`]) store the dual point here and reuse it to
+    /// screen at epoch 0 of the *next* grid point of a warm-started path
+    /// (the rule instance is constructed once per path and carried across
+    /// λ's). Stateless rules ignore it.
+    fn on_solve_complete(&mut self, _pb: &SglProblem, _lambda: f64, _snap: &DualSnapshot) {}
 }
 
 /// Construct the rule implementation for a [`RuleKind`].
@@ -91,6 +115,7 @@ pub fn make_rule(kind: RuleKind, pb: &SglProblem) -> Box<dyn ScreeningRule> {
         RuleKind::Dynamic => Box::new(dynamic_rule::DynamicRule::new(pb)),
         RuleKind::Dst3 => Box::new(dst3::Dst3Rule::new(pb)),
         RuleKind::GapSafe => Box::new(gap_safe::GapSafeRule),
+        RuleKind::GapSafeSeq => Box::new(gap_safe::GapSafeSeqRule::new()),
     }
 }
 

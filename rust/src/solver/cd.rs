@@ -13,6 +13,13 @@
 //! touched coordinate). Every `f_ce` epochs (paper default: 10) the duality
 //! gap is evaluated: it provides both the stopping test and — through the
 //! configured [`ScreeningRule`] — a safe sphere used to eliminate variables.
+//!
+//! **Column compaction.** After every screening event the surviving columns
+//! of `X` are packed into a contiguous scratch matrix ([`CompactCols`]),
+//! so the per-epoch correlation sweeps and residual updates stream dense
+//! memory instead of hopping across the screened-out gaps of `pb.x`. The
+//! packed copies are bit-identical to the originals, so solutions do not
+//! change — only cache behavior does.
 
 use super::duality::DualSnapshot;
 use super::problem::SglProblem;
@@ -78,6 +85,74 @@ pub struct SolveResult {
     pub gap_evals: usize,
 }
 
+/// Active-set column compaction: the surviving columns of `X`, packed
+/// contiguously in column-major order, plus the bookkeeping to map compact
+/// columns back to original features.
+///
+/// Packing is **lazy**: until the first screening event the active set is
+/// full and every column of `pb.x` is already contiguous, so the initial
+/// state is just the identity mapping over the original matrix — no copy.
+/// The scratch buffer is only materialized by [`CompactCols::rebuild`],
+/// i.e. once screening has actually punched holes worth closing. Rebuilds
+/// are monotone (the active set only shrinks along a solve).
+struct CompactCols {
+    n: usize,
+    /// Packed column-major `n × n_active` buffer (empty until packed).
+    cols: Vec<f64>,
+    /// Whether `cols` is materialized; false = read through `pb.x`.
+    packed: bool,
+    /// Original feature index of each compact column.
+    col_feat: Vec<usize>,
+    /// `(g, start, end)` compact-column ranges, one per surviving group
+    /// with at least one surviving feature.
+    groups: Vec<(usize, usize, usize)>,
+}
+
+impl CompactCols {
+    /// Identity mapping over the full active set; no data is copied.
+    fn build(pb: &SglProblem) -> Self {
+        let col_feat: Vec<usize> = (0..pb.p()).collect();
+        let groups: Vec<(usize, usize, usize)> = pb.groups.iter().collect();
+        CompactCols { n: pb.n(), cols: Vec::new(), packed: false, col_feat, groups }
+    }
+
+    /// Re-pack from the current active set, reusing the buffers.
+    fn rebuild(&mut self, pb: &SglProblem, active: &ActiveSet) {
+        self.col_feat.clear();
+        self.groups.clear();
+        for (g, a, b) in pb.groups.iter() {
+            if !active.group[g] {
+                continue;
+            }
+            let start = self.col_feat.len();
+            for j in a..b {
+                if active.feature[j] {
+                    self.col_feat.push(j);
+                }
+            }
+            let end = self.col_feat.len();
+            if end > start {
+                self.groups.push((g, start, end));
+            }
+        }
+        let n = self.n;
+        self.cols.resize(self.col_feat.len() * n, 0.0);
+        for (k, &j) in self.col_feat.iter().enumerate() {
+            self.cols[k * n..(k + 1) * n].copy_from_slice(pb.x.col(j));
+        }
+        self.packed = true;
+    }
+
+    #[inline]
+    fn col<'a>(&'a self, pb: &'a SglProblem, k: usize) -> &'a [f64] {
+        if self.packed {
+            &self.cols[k * self.n..(k + 1) * self.n]
+        } else {
+            pb.x.col(self.col_feat[k])
+        }
+    }
+}
+
 /// Solve one SGL problem at a single `λ` with warm start `beta0`.
 pub fn solve(
     pb: &SglProblem,
@@ -121,16 +196,17 @@ pub fn solve_with_rule(
     }
 
     let mut active = ActiveSet::full(&pb.groups);
-    // Compact iteration structures, rebuilt whenever screening fires.
-    let mut active_groups: Vec<usize> = (0..pb.n_groups()).collect();
-    let mut group_feats: Vec<Vec<usize>> =
-        pb.groups.iter().map(|(_, a, b)| (a..b).collect()).collect();
+    // Compacted views of the active columns: identity over `pb.x` until
+    // screening fires, packed scratch copies afterwards.
+    let mut compact = CompactCols::build(pb);
 
     let mut history = Vec::new();
     let mut gap = f64::INFINITY;
     let mut gap_evals = 0usize;
     let mut converged = false;
     let mut epochs_done = 0usize;
+    // Last computed dual snapshot, handed to sequential rules at the end.
+    let mut final_snap: Option<DualSnapshot> = None;
     // Scratch block buffer sized to the largest group.
     let max_group = (0..pb.n_groups()).map(|g| pb.groups.size(g)).max().unwrap_or(0);
     let mut block = vec![0.0; max_group];
@@ -149,7 +225,7 @@ pub fn solve_with_rule(
                     *r = y - *r;
                 }
             }
-            let snap = DualSnapshot::compute(pb, &beta, &rho, lambda);
+            let mut snap = DualSnapshot::compute(pb, &beta, &rho, lambda);
             gap = snap.gap;
             gap_evals += 1;
             // Screen first (even on the converging check: the final active
@@ -157,18 +233,13 @@ pub fn solve_with_rule(
             if let Some(sphere) = rule.sphere(pb, lambda, &snap) {
                 let out = apply_sphere(pb, &sphere, &mut active, &mut beta, &mut rho);
                 if out.features_screened > 0 {
-                    // Rebuild the compact active structures.
-                    active_groups =
-                        (0..pb.n_groups()).filter(|&g| active.group[g]).collect();
-                    for g in 0..pb.n_groups() {
-                        group_feats[g] = active.active_in_group(&pb.groups, g);
-                    }
+                    compact.rebuild(pb, &active);
                 }
                 if out.beta_changed && gap <= tol_abs {
                     // Screening zeroed nonzero coords on a converging check:
                     // the cached gap is stale, recompute before deciding.
-                    let snap2 = DualSnapshot::compute(pb, &beta, &rho, lambda);
-                    gap = snap2.gap;
+                    snap = DualSnapshot::compute(pb, &beta, &rho, lambda);
+                    gap = snap.gap;
                     gap_evals += 1;
                 }
             }
@@ -182,29 +253,28 @@ pub fn solve_with_rule(
                     elapsed_s: sw.elapsed_s(),
                 });
             }
-            if gap <= tol_abs {
+            let done = gap <= tol_abs;
+            final_snap = Some(snap);
+            if done {
                 converged = true;
                 epochs_done = epoch;
                 break;
             }
         }
 
-        // ---- one cyclic pass over the active groups
-        for &g in &active_groups {
-            let feats = &group_feats[g];
-            if feats.is_empty() {
-                continue;
-            }
+        // ---- one cyclic pass over the (compacted) active groups
+        for &(g, s, e) in &compact.groups {
             let lg = pb.lipschitz[g];
             if lg == 0.0 {
                 continue;
             }
             let alpha_g = lambda / lg;
-            let d = feats.len();
-            // u = beta_g + X_g^T rho / L_g  (restricted to active features)
-            for (k, &j) in feats.iter().enumerate() {
-                let xj = pb.x.col(j);
-                block[k] = beta[j] + crate::linalg::ops::dot(xj, &rho) / lg;
+            let d = e - s;
+            // u = beta_g + X_g^T rho / L_g (restricted to active features),
+            // streaming the packed columns.
+            for (k, idx) in (s..e).enumerate() {
+                let j = compact.col_feat[idx];
+                block[k] = beta[j] + crate::linalg::ops::dot(compact.col(pb, idx), &rho) / lg;
             }
             sgl_prox_inplace(
                 &mut block[..d],
@@ -212,12 +282,12 @@ pub fn solve_with_rule(
                 (1.0 - pb.tau) * pb.weights[g] * alpha_g,
             );
             // Apply deltas and maintain rho.
-            for (k, &j) in feats.iter().enumerate() {
+            for (k, idx) in (s..e).enumerate() {
+                let j = compact.col_feat[idx];
                 let delta = block[k] - beta[j];
                 if delta != 0.0 {
                     beta[j] = block[k];
-                    let xj = pb.x.col(j);
-                    for (ri, xi) in rho.iter_mut().zip(xj) {
+                    for (ri, xi) in rho.iter_mut().zip(compact.col(pb, idx)) {
                         *ri -= delta * xi;
                     }
                 }
@@ -232,6 +302,13 @@ pub fn solve_with_rule(
         gap = snap.gap;
         gap_evals += 1;
         converged = gap <= tol_abs;
+        final_snap = Some(snap);
+    }
+
+    // Hand the terminal dual point to the rule: sequential rules carry it
+    // to the next grid point of a warm-started path.
+    if let Some(snap) = &final_snap {
+        rule.on_solve_complete(pb, lambda, snap);
     }
 
     SolveResult {
@@ -317,7 +394,13 @@ mod tests {
             None,
             &SolveOptions { rule: RuleKind::None, tol: 1e-12, ..Default::default() },
         );
-        for rule in [RuleKind::Static, RuleKind::Dynamic, RuleKind::Dst3, RuleKind::GapSafe] {
+        for rule in [
+            RuleKind::Static,
+            RuleKind::Dynamic,
+            RuleKind::Dst3,
+            RuleKind::GapSafe,
+            RuleKind::GapSafeSeq,
+        ] {
             let res = solve(
                 &pb,
                 lambda,

@@ -3,12 +3,12 @@
 //! training half for each `τ ∈ {0, 0.1, …, 1}`, and report held-out
 //! prediction error; pick the best `(τ★, λ★)`.
 
-use super::path::{solve_path, PathOptions};
+use super::path::{PathBatch, PathBatchJob, PathOptions};
 use super::problem::SglProblem;
 use crate::linalg::Matrix;
 use crate::solver::groups::Groups;
-use crate::util::pool::parallel_map;
 use crate::util::rng::Pcg;
+use std::sync::Arc;
 
 /// A train/test row split.
 #[derive(Clone, Debug)]
@@ -58,8 +58,12 @@ pub fn prediction_mse(x: &Matrix, y: &[f64], beta: &[f64]) -> f64 {
     y.iter().zip(&pred).map(|(a, b)| (a - b) * (a - b)).sum::<f64>() / n as f64
 }
 
-/// Run the τ-grid validation. `threads` parallelizes across τ values (each
-/// path is solved independently on the training half).
+/// Run the τ-grid validation. `threads` parallelizes across τ values via
+/// the batched path engine (each τ is one [`PathBatchJob`] on the training
+/// half). The design-dependent precomputations (column norms, block
+/// spectral norms) are τ-independent, so they are done **once** and shared
+/// by every job through [`SglProblem::with_tau`] — previously each worker
+/// re-ran the power iterations.
 pub fn validate_tau_grid(
     x: &Matrix,
     y: &[f64],
@@ -69,20 +73,38 @@ pub fn validate_tau_grid(
     split: &Split,
     threads: usize,
 ) -> CvResult {
+    assert!(!taus.is_empty(), "at least one tau required");
     let x_train = x.select_rows(&split.train);
     let y_train: Vec<f64> = split.train.iter().map(|&i| y[i]).collect();
     let x_test = x.select_rows(&split.test);
     let y_test: Vec<f64> = split.test.iter().map(|&i| y[i]).collect();
 
-    let outputs = parallel_map(taus.len(), threads, |ti| {
-        let tau = taus[ti];
-        let pb = SglProblem::new(x_train.clone(), y_train.clone(), groups.clone(), tau);
-        let path = solve_path(&pb, path_opts);
-        let mse: Vec<f64> =
-            path.results.iter().map(|r| prediction_mse(&x_test, &y_test, &r.beta)).collect();
-        let betas: Vec<Vec<f64>> = path.results.iter().map(|r| r.beta.clone()).collect();
-        (TauCurve { tau, lambdas: path.lambdas.clone(), test_mse: mse }, betas)
-    });
+    let base = Arc::new(SglProblem::new(x_train, y_train, groups.clone(), taus[0]));
+    let mut batch = PathBatch::new();
+    for &tau in taus {
+        batch.push(PathBatchJob {
+            pb: base.clone(),
+            lambdas: None, // per-τ geometric grid from the job's λ_max
+            opts: path_opts.clone(),
+            tau_override: Some(tau),
+            label: format!("tau={tau}"),
+        });
+    }
+    let paths = batch.run(threads);
+
+    let outputs: Vec<(TauCurve, Vec<Vec<f64>>)> = taus
+        .iter()
+        .zip(paths)
+        .map(|(&tau, path)| {
+            let mse: Vec<f64> = path
+                .results
+                .iter()
+                .map(|r| prediction_mse(&x_test, &y_test, &r.beta))
+                .collect();
+            let betas: Vec<Vec<f64>> = path.results.iter().map(|r| r.beta.clone()).collect();
+            (TauCurve { tau, lambdas: path.lambdas, test_mse: mse }, betas)
+        })
+        .collect();
 
     let mut best = (0usize, 0usize, f64::INFINITY);
     for (ti, (curve, _)) in outputs.iter().enumerate() {

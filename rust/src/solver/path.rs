@@ -1,15 +1,26 @@
-//! λ-path solver with warm starts (paper §7.1).
+//! λ-path engine with warm starts (paper §7.1).
 //!
 //! The experiments run Algorithm 2 over a non-increasing grid
 //! `λ_t = λ_max · 10^{−δ t/(T−1)}`, warm-starting each solve from the
 //! previous solution ("previous ε-solution" in Algorithm 2). The screening
-//! rule's per-problem precomputations (`Xᵀy`, `λ_max`, DST3 hyperplane) are
-//! shared across the whole path.
+//! rule instance is constructed **once per path** and carried across grid
+//! points: per-problem precomputations (`Xᵀy`, `λ_max`, DST3 hyperplane)
+//! amortize, and the sequential rule ([`crate::screening::RuleKind::GapSafeSeq`])
+//! receives each solve's terminal dual point through
+//! `ScreeningRule::on_solve_complete` so it can screen at epoch 0 of the
+//! next grid point.
+//!
+//! [`PathBatch`] fans *independent* path solves (CV folds, rule/tolerance
+//! comparison sweeps, multi-τ sweeps) across worker threads — within a
+//! path the warm-started loop is inherently sequential, so parallelism
+//! lives at the between-paths level, where it is embarrassingly clean.
 
 use super::cd::{solve_with_rule, SolveOptions, SolveResult};
 use super::problem::SglProblem;
 use crate::screening::make_rule;
+use crate::util::pool::parallel_map;
 use crate::util::timer::Stopwatch;
+use std::sync::Arc;
 
 /// Path configuration (paper defaults: `δ = 3`, `T = 100`).
 #[derive(Clone, Debug)]
@@ -81,6 +92,78 @@ pub fn solve_path_on_grid(pb: &SglProblem, lambdas: &[f64], opts: &PathOptions) 
         results.push(res);
     }
     PathResult { lambdas: lambdas.to_vec(), results, total_s: sw.elapsed_s() }
+}
+
+/// One independent λ-path solve inside a [`PathBatch`].
+pub struct PathBatchJob {
+    /// Problem instance. Shared via `Arc` so fan-outs over the same design
+    /// (rule sweeps, tolerance sweeps) pay for a single copy of `X`.
+    pub pb: Arc<SglProblem>,
+    /// Explicit non-increasing grid; `None` derives the geometric grid of
+    /// `opts` from `pb.lambda_max()`.
+    pub lambdas: Option<Vec<f64>>,
+    pub opts: PathOptions,
+    /// Solve at this `τ` instead of `pb.tau`. The τ-specific clone (τ does
+    /// not affect any precomputation, see [`SglProblem::with_tau`]) is made
+    /// *inside the worker*, so a τ-sweep over one `Arc`'d problem holds at
+    /// most `threads` copies of the design at a time.
+    pub tau_override: Option<f64>,
+    /// Free-form tag for reports (e.g. `"gap_safe@1e-8"`, `"tau=0.4"`).
+    pub label: String,
+}
+
+/// Batched path engine: fans independent warm-started path solves across
+/// worker threads via [`parallel_map`]. Used by the CV grid (`solver::cv`),
+/// the rule-comparison jobs (`coordinator::jobs`), and
+/// `benches/bench_path_batch.rs`. Results are returned in job order, and
+/// are bit-identical to running the jobs one after another — threading
+/// never changes any solve's arithmetic, only the wall-clock.
+#[derive(Default)]
+pub struct PathBatch {
+    jobs: Vec<PathBatchJob>,
+}
+
+impl PathBatch {
+    pub fn new() -> Self {
+        PathBatch { jobs: Vec::new() }
+    }
+
+    pub fn push(&mut self, job: PathBatchJob) {
+        self.jobs.push(job);
+    }
+
+    pub fn len(&self) -> usize {
+        self.jobs.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.jobs.is_empty()
+    }
+
+    pub fn jobs(&self) -> &[PathBatchJob] {
+        &self.jobs
+    }
+
+    /// Run every job on up to `threads` workers (1 = plain sequential
+    /// loop). Work is handed out dynamically, so heterogeneous job costs
+    /// (tight vs loose tolerances, screening on vs off) balance well.
+    pub fn run(&self, threads: usize) -> Vec<PathResult> {
+        parallel_map(self.jobs.len(), threads, |i| {
+            let job = &self.jobs[i];
+            let tau_clone: Option<SglProblem> = job
+                .tau_override
+                .filter(|&tau| tau != job.pb.tau)
+                .map(|tau| job.pb.with_tau(tau));
+            let pb: &SglProblem = match &tau_clone {
+                Some(p) => p,
+                None => job.pb.as_ref(),
+            };
+            match &job.lambdas {
+                Some(grid) => solve_path_on_grid(pb, grid, &job.opts),
+                None => solve_path(pb, &job.opts),
+            }
+        })
+    }
 }
 
 #[cfg(test)]
@@ -162,5 +245,145 @@ mod tests {
         let pb = random_problem(4);
         let opts = PathOptions::default();
         solve_path_on_grid(&pb, &[1.0, 2.0], &opts);
+    }
+
+    fn planted_problem(seed: u64) -> SglProblem {
+        // A Fig. 2-style planted-sparse instance, scaled for test time.
+        let cfg = crate::data::synthetic::SyntheticConfig {
+            n: 60,
+            n_groups: 40,
+            group_size: 5,
+            gamma1: 5,
+            gamma2: 3,
+            seed,
+            ..Default::default()
+        };
+        let d = crate::data::synthetic::generate(&cfg);
+        // Unit-norm y: objective-agreement budgets below are then absolute.
+        let y_norm = d.dataset.y.iter().map(|v| v * v).sum::<f64>().sqrt();
+        let y: Vec<f64> = d.dataset.y.iter().map(|v| v / y_norm).collect();
+        SglProblem::new(d.dataset.x, y, d.dataset.groups, 0.2)
+    }
+
+    #[test]
+    fn gap_safe_seq_screens_at_epoch_zero_of_warm_grid_points() {
+        let pb = planted_problem(11);
+        let opts = PathOptions {
+            delta: 1.0,
+            t_count: 10,
+            solve: SolveOptions {
+                rule: RuleKind::GapSafeSeq,
+                tol: 1e-8,
+                record_history: true,
+                ..Default::default()
+            },
+        };
+        let path = solve_path(&pb, &opts);
+        assert!(path.all_converged());
+        // From the second grid point on, the carried dual point must
+        // eliminate a strictly positive number of features at the *first*
+        // gap check (epoch 0), before any new epochs run.
+        for (t, res) in path.results.iter().enumerate().skip(1) {
+            let first = res.history.first().expect("history recorded");
+            assert_eq!(first.epoch, 0, "t={t}");
+            assert!(
+                first.active_features < pb.p(),
+                "t={t}: no feature screened at the first check \
+                 ({} of {} active)",
+                first.active_features,
+                pb.p()
+            );
+        }
+    }
+
+    #[test]
+    fn gap_safe_seq_matches_other_rules_objectives() {
+        let pb = planted_problem(12);
+        let objective = |lambda: f64, beta: &[f64]| {
+            let xb = pb.x.matvec(beta);
+            let r2: f64 = pb.y.iter().zip(&xb).map(|(y, v)| (y - v) * (y - v)).sum();
+            0.5 * r2
+                + lambda
+                    * crate::norms::sgl::omega(beta, &pb.groups, pb.tau, &pb.weights)
+        };
+        let opts = |rule| PathOptions {
+            delta: 2.0,
+            t_count: 8,
+            solve: SolveOptions { rule, tol: 1e-12, record_history: false, ..Default::default() },
+        };
+        let base = solve_path(&pb, &opts(RuleKind::GapSafe));
+        let seq = solve_path(&pb, &opts(RuleKind::GapSafeSeq));
+        assert!(base.all_converged() && seq.all_converged());
+        for (i, &lambda) in base.lambdas.iter().enumerate() {
+            let a = objective(lambda, &base.results[i].beta);
+            let b = objective(lambda, &seq.results[i].beta);
+            assert!((a - b).abs() <= 1e-7, "lambda {i}: {a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn batch_matches_sequential_loop_across_thread_counts() {
+        let pb = Arc::new(random_problem(7));
+        let lambdas = SglProblem::lambda_grid(pb.lambda_max(), 2.0, 6);
+        let mut batch = PathBatch::new();
+        for rule in [RuleKind::None, RuleKind::GapSafe, RuleKind::GapSafeSeq] {
+            for tol in [1e-6, 1e-9] {
+                batch.push(PathBatchJob {
+                    pb: pb.clone(),
+                    lambdas: Some(lambdas.clone()),
+                    opts: PathOptions {
+                        delta: 2.0,
+                        t_count: lambdas.len(),
+                        solve: SolveOptions {
+                            rule,
+                            tol,
+                            record_history: false,
+                            ..Default::default()
+                        },
+                    },
+                    tau_override: None,
+                    label: format!("{}@{tol:.0e}", rule.name()),
+                });
+            }
+        }
+        assert_eq!(batch.len(), 6);
+        let serial = batch.run(1);
+        let parallel = batch.run(4);
+        // Threading must not change any solve: bit-identical coefficients.
+        for (a, b) in serial.iter().zip(&parallel) {
+            assert_eq!(a.lambdas, b.lambdas);
+            for (ra, rb) in a.results.iter().zip(&b.results) {
+                assert_eq!(ra.beta, rb.beta);
+                assert_eq!(ra.epochs, rb.epochs);
+            }
+        }
+        // And each job equals the plain sequential engine run directly.
+        for (job, got) in batch.jobs().iter().zip(&serial) {
+            let expect = solve_path_on_grid(&job.pb, &lambdas, &job.opts);
+            for (ra, rb) in expect.results.iter().zip(&got.results) {
+                assert_eq!(ra.beta, rb.beta, "{}", job.label);
+            }
+        }
+    }
+
+    #[test]
+    fn batch_derives_grid_when_absent() {
+        let pb = Arc::new(random_problem(8));
+        let mut batch = PathBatch::new();
+        batch.push(PathBatchJob {
+            pb: pb.clone(),
+            lambdas: None,
+            opts: PathOptions {
+                delta: 1.5,
+                t_count: 5,
+                solve: SolveOptions { tol: 1e-8, record_history: false, ..Default::default() },
+            },
+            tau_override: None,
+            label: "auto-grid".into(),
+        });
+        let out = batch.run(2);
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].lambdas.len(), 5);
+        assert!(out[0].all_converged());
     }
 }

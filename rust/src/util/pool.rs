@@ -2,7 +2,8 @@
 //! available offline). The coordinator uses these to fan path/CV solves and
 //! rule comparisons across cores.
 
-use std::sync::atomic::{AtomicUsize, Ordering};
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::Mutex;
 
 /// Number of worker threads to use: `SGL_THREADS` env override, else the
@@ -15,6 +16,10 @@ pub fn default_threads() -> usize {
     }
     std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
 }
+
+/// One result slot: the item's value or, if the worker closure panicked on
+/// it, the caught panic payload.
+type Slot<T> = Option<std::thread::Result<T>>;
 
 /// Apply `f` to every index in `0..n` on up to `threads` workers and collect
 /// the results in order. Work is distributed dynamically (atomic counter),
@@ -29,21 +34,52 @@ where
         return (0..n).map(f).collect();
     }
     let next = AtomicUsize::new(0);
-    let out: Vec<Mutex<Option<T>>> = (0..n).map(|_| Mutex::new(None)).collect();
+    // Catching worker panics (instead of letting the scoped thread die)
+    // keeps the per-slot mutexes unpoisoned and lets the join path re-raise
+    // the *original* panic rather than a misleading "worker panicked before
+    // producing a result" unwrap failure.
+    let out: Vec<Mutex<Slot<T>>> = (0..n).map(|_| Mutex::new(None)).collect();
+    let abort = AtomicBool::new(false);
     std::thread::scope(|scope| {
         for _ in 0..threads {
             scope.spawn(|| loop {
+                if abort.load(Ordering::Relaxed) {
+                    break; // a sibling already failed: stop taking work
+                }
                 let i = next.fetch_add(1, Ordering::Relaxed);
                 if i >= n {
                     break;
                 }
-                let val = f(i);
-                *out[i].lock().unwrap() = Some(val);
+                let val = catch_unwind(AssertUnwindSafe(|| f(i)));
+                if val.is_err() {
+                    abort.store(true, Ordering::Relaxed);
+                }
+                *out[i].lock().unwrap_or_else(|p| p.into_inner()) = Some(val);
             });
         }
     });
-    out.into_iter()
-        .map(|m| m.into_inner().unwrap().expect("worker panicked before producing a result"))
+    let mut values: Vec<Option<T>> = Vec::with_capacity(n);
+    let mut panic_payload: Option<Box<dyn std::any::Any + Send>> = None;
+    for m in out {
+        match m.into_inner().unwrap_or_else(|p| p.into_inner()) {
+            Some(Ok(v)) => values.push(Some(v)),
+            Some(Err(p)) => {
+                if panic_payload.is_none() {
+                    panic_payload = Some(p);
+                }
+                values.push(None);
+            }
+            // Unfilled slot: only possible when a sibling panicked and the
+            // pool aborted early.
+            None => values.push(None),
+        }
+    }
+    if let Some(p) = panic_payload {
+        resume_unwind(p);
+    }
+    values
+        .into_iter()
+        .map(|v| v.expect("no worker panicked, so every slot is filled"))
         .collect()
 }
 
@@ -102,5 +138,37 @@ mod tests {
     #[test]
     fn default_threads_positive() {
         assert!(default_threads() >= 1);
+    }
+
+    #[test]
+    fn worker_panic_propagates_original_payload() {
+        let caught = std::panic::catch_unwind(AssertUnwindSafe(|| {
+            parallel_map(16, 4, |i| {
+                if i == 5 {
+                    panic!("boom at item {i}");
+                }
+                i * 2
+            })
+        }));
+        let payload = caught.expect_err("panic must propagate");
+        let msg = payload
+            .downcast_ref::<String>()
+            .cloned()
+            .or_else(|| payload.downcast_ref::<&str>().map(|s| s.to_string()))
+            .unwrap_or_default();
+        assert!(msg.contains("boom at item 5"), "wrong payload: {msg:?}");
+    }
+
+    #[test]
+    fn single_thread_panic_also_propagates() {
+        let caught = std::panic::catch_unwind(AssertUnwindSafe(|| {
+            parallel_map(3, 1, |i| {
+                if i == 1 {
+                    panic!("serial boom");
+                }
+                i
+            })
+        }));
+        assert!(caught.is_err());
     }
 }

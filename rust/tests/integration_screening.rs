@@ -31,7 +31,13 @@ fn problem(tau: f64, seed: u64) -> SglProblem {
 fn all_rules_safe_along_path() {
     let pb = problem(0.3, 1);
     let lambdas = SglProblem::lambda_grid(pb.lambda_max(), 2.0, 6);
-    for rule in [RuleKind::Static, RuleKind::Dynamic, RuleKind::Dst3, RuleKind::GapSafe] {
+    for rule in [
+        RuleKind::Static,
+        RuleKind::Dynamic,
+        RuleKind::Dst3,
+        RuleKind::GapSafe,
+        RuleKind::GapSafeSeq,
+    ] {
         for &lambda in &lambdas {
             let screened = solve(
                 &pb,
@@ -155,7 +161,13 @@ fn screening_never_changes_the_answer() {
         solve: SolveOptions { rule, tol: 1e-10, record_history: false, ..Default::default() },
     };
     let base = solve_path(&pb, &opts(RuleKind::None));
-    for rule in [RuleKind::Static, RuleKind::Dynamic, RuleKind::Dst3, RuleKind::GapSafe] {
+    for rule in [
+        RuleKind::Static,
+        RuleKind::Dynamic,
+        RuleKind::Dst3,
+        RuleKind::GapSafe,
+        RuleKind::GapSafeSeq,
+    ] {
         let path = solve_path(&pb, &opts(rule));
         for (i, (a, b)) in base.results.iter().zip(&path.results).enumerate() {
             for j in 0..pb.p() {

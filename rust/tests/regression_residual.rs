@@ -1,0 +1,138 @@
+//! Regression tests for solver-state honesty:
+//!
+//! 1. **Residual drift** — the CD loop maintains `ρ = y − Xβ`
+//!    incrementally (`O(n)` per touched coordinate) and refreshes it from
+//!    scratch every 10th gap evaluation. After thousands of incremental
+//!    updates, the gap reported from the maintained residual must agree
+//!    with a from-scratch `y − Xβ` recomputation.
+//! 2. **Engine equivalence** — the sequential GAP rule and the
+//!    compacted-column sweep are pure optimizations: every rule must land
+//!    on the same path objectives to 1e-7.
+
+use sgl::data::synthetic::{generate, SyntheticConfig};
+use sgl::norms::sgl::omega;
+use sgl::screening::RuleKind;
+use sgl::solver::cd::{solve, SolveOptions};
+use sgl::solver::duality::duality_gap;
+use sgl::solver::path::{solve_path, PathOptions};
+use sgl::solver::problem::SglProblem;
+
+/// Strongly correlated design + small λ: the coordinate-descent loop needs
+/// thousands of coordinate updates, exercising the incremental-residual
+/// path hard.
+fn correlated_problem(seed: u64) -> SglProblem {
+    let cfg = SyntheticConfig {
+        n: 60,
+        n_groups: 30,
+        group_size: 5,
+        rho: 0.9,
+        gamma1: 6,
+        gamma2: 3,
+        seed,
+        ..Default::default()
+    };
+    let d = generate(&cfg);
+    SglProblem::new(d.dataset.x, d.dataset.y, d.dataset.groups, 0.3)
+}
+
+#[test]
+fn reported_gap_matches_from_scratch_residual_after_long_runs() {
+    for rule in [RuleKind::None, RuleKind::GapSafe] {
+        let pb = correlated_problem(1);
+        let lambda = 0.005 * pb.lambda_max();
+        let opts = SolveOptions {
+            tol: 1e-15,
+            fce: 1, // gap evaluation (+ screening) every epoch
+            max_epochs: 5000,
+            rule,
+            record_history: false,
+        };
+        let res = solve(&pb, lambda, None, &opts);
+        // Sanity: the scenario must actually run long enough to matter —
+        // each epoch touches up to p coordinates, each an incremental
+        // update of rho.
+        assert!(
+            res.epochs >= 300,
+            "{rule:?}: scenario converged too fast ({} epochs)",
+            res.epochs
+        );
+        let scratch = duality_gap(&pb, &res.beta, lambda);
+        let y2: f64 = pb.y.iter().map(|v| v * v).sum();
+        assert!(
+            (res.gap - scratch).abs() <= 1e-9 * y2,
+            "{rule:?}: incrementally-maintained gap {} vs from-scratch {} \
+             — residual drift beyond budget",
+            res.gap,
+            scratch
+        );
+    }
+}
+
+#[test]
+fn periodic_refresh_keeps_history_gaps_honest() {
+    // With record_history on, every 10th gap evaluation happens right
+    // after a from-scratch residual refresh; the whole gap sequence must
+    // be non-negative and end below where it started.
+    let pb = correlated_problem(2);
+    let lambda = 0.01 * pb.lambda_max();
+    let opts = SolveOptions {
+        tol: 1e-14,
+        fce: 1,
+        max_epochs: 3000,
+        rule: RuleKind::GapSafe,
+        record_history: true,
+    };
+    let res = solve(&pb, lambda, None, &opts);
+    assert!(res.history.len() >= 100, "history too short: {}", res.history.len());
+    assert!(res.history.iter().all(|c| c.gap >= 0.0));
+    let first = res.history.first().unwrap().gap;
+    let last = res.history.last().unwrap().gap;
+    assert!(last < first, "gap did not decrease: {first} -> {last}");
+}
+
+/// All six rules — including the sequential GAP rule, which screens from
+/// the carried dual point at epoch 0 — drive the same compacted-column CD
+/// engine and must reach identical path objectives to 1e-7. `y` is scaled
+/// to unit norm so the absolute 1e-7 budget is scale-free.
+#[test]
+fn every_rule_matches_reference_objectives_to_1e7() {
+    let d = generate(&SyntheticConfig {
+        n: 80,
+        n_groups: 40,
+        group_size: 5,
+        gamma1: 5,
+        gamma2: 3,
+        seed: 9,
+        ..Default::default()
+    });
+    let y_norm = d.dataset.y.iter().map(|v| v * v).sum::<f64>().sqrt();
+    let y: Vec<f64> = d.dataset.y.iter().map(|v| v / y_norm).collect();
+    let pb = SglProblem::new(d.dataset.x, y, d.dataset.groups, 0.2);
+    let objective = |lambda: f64, beta: &[f64]| {
+        let xb = pb.x.matvec(beta);
+        let r2: f64 = pb.y.iter().zip(&xb).map(|(yi, v)| (yi - v) * (yi - v)).sum();
+        0.5 * r2 + lambda * omega(beta, &pb.groups, pb.tau, &pb.weights)
+    };
+    let opts = |rule| PathOptions {
+        delta: 2.0,
+        t_count: 8,
+        solve: SolveOptions { rule, tol: 1e-10, record_history: false, ..Default::default() },
+    };
+    let base = solve_path(&pb, &opts(RuleKind::None));
+    assert!(base.all_converged());
+    for rule in RuleKind::all() {
+        if rule == RuleKind::None {
+            continue;
+        }
+        let path = solve_path(&pb, &opts(rule));
+        assert!(path.all_converged(), "{rule:?}");
+        for (i, &lambda) in base.lambdas.iter().enumerate() {
+            let a = objective(lambda, &base.results[i].beta);
+            let b = objective(lambda, &path.results[i].beta);
+            assert!(
+                (a - b).abs() <= 1e-7,
+                "{rule:?} lambda {i}: objective {a} vs reference {b}"
+            );
+        }
+    }
+}

@@ -1,0 +1,110 @@
+"""Minimal offline stand-in for the `hypothesis` property-testing API.
+
+The CI image for this repository has no package index, so the property
+suites used to self-skip via ``pytest.importorskip("hypothesis")``. This
+shim implements exactly the subset those suites use — ``@given`` with
+keyword strategies, ``settings(deadline=..., max_examples=...,
+derandomize=...)``, ``assume``, and the ``strategies.integers`` /
+``strategies.floats`` constructors — by drawing deterministic pseudo-
+random examples. There is no shrinking and no adaptive search; the point
+is that the *properties run* offline instead of silently skipping.
+
+``conftest.py`` only places this package on ``sys.path`` when the real
+hypothesis is absent, so environments that have it keep the genuine
+engine (shrinking included).
+"""
+
+import random
+
+from . import strategies  # noqa: F401  (re-exported like the real package)
+
+__version__ = "0.0-sgl-shim"
+
+
+class _Unsatisfied(Exception):
+    """Raised by assume(); the current example is discarded."""
+
+
+def assume(condition):
+    if not condition:
+        raise _Unsatisfied()
+    return True
+
+
+class settings:  # noqa: N801  (match hypothesis' lowercase class)
+    """Records the subset of settings the suites use; usable as a
+    decorator (``@settings(...)``), a plain object, or through the
+    ``register_profile`` / ``load_profile`` classmethods."""
+
+    _profiles = {}
+    _current = None
+
+    def __init__(self, deadline=None, max_examples=100, derandomize=True, **_ignored):
+        self.deadline = deadline
+        self.max_examples = max_examples
+        self.derandomize = derandomize
+
+    def __call__(self, fn):
+        fn._shim_settings = self
+        return fn
+
+    @classmethod
+    def register_profile(cls, name, parent=None, **kwargs):
+        cls._profiles[name] = cls(**kwargs)
+
+    @classmethod
+    def load_profile(cls, name):
+        cls._current = cls._profiles[name]
+
+
+def _stable_seed(*parts):
+    """FNV-1a over the test's identity: derandomized runs are repeatable
+    across processes (no PYTHONHASHSEED dependence)."""
+    h = 2166136261
+    for ch in ".".join(parts):
+        h = ((h ^ ord(ch)) * 16777619) % (1 << 32)
+    return h
+
+
+def given(**strategy_kwargs):
+    """Run the wrapped test once per drawn example.
+
+    Only the keyword-argument form is supported (the form every suite in
+    this repository uses). The wrapper deliberately exposes a bare
+    ``(*args, **kwargs)`` signature so pytest does not mistake the drawn
+    parameter names for fixtures.
+    """
+
+    for name, strat in strategy_kwargs.items():
+        if not hasattr(strat, "example"):
+            raise TypeError(f"@given received a non-strategy for {name!r}: {strat!r}")
+
+    def decorate(fn):
+        cfg = getattr(fn, "_shim_settings", None) or settings._current
+        max_examples = cfg.max_examples if cfg is not None else 50
+        derandomize = cfg.derandomize if cfg is not None else True
+
+        def wrapper(*args, **kwargs):
+            base = _stable_seed(fn.__module__, fn.__qualname__)
+            if not derandomize:
+                base ^= random.randrange(1 << 32)
+            ran = 0
+            for index in range(max_examples * 4):
+                if ran >= max_examples:
+                    break
+                rng = random.Random((base + index) & 0xFFFFFFFF)
+                drawn = {k: s.example(rng, index) for k, s in strategy_kwargs.items()}
+                try:
+                    fn(*args, **drawn, **kwargs)
+                except _Unsatisfied:
+                    continue  # discarded by assume(); draw another example
+                ran += 1
+
+        wrapper.__name__ = fn.__name__
+        wrapper.__doc__ = fn.__doc__
+        wrapper.__module__ = fn.__module__
+        wrapper.__qualname__ = fn.__qualname__
+        wrapper.hypothesis_shim = True
+        return wrapper
+
+    return decorate

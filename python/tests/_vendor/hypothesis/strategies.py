@@ -1,0 +1,89 @@
+"""Strategy constructors for the offline hypothesis shim.
+
+Each strategy is an object with ``example(rng, index)`` returning one
+drawn value. The first two examples of a bounded strategy are its
+endpoints — cheap boundary coverage in place of hypothesis' shrinking.
+"""
+
+
+class SearchStrategy:
+    def example(self, rng, index=0):  # pragma: no cover - interface stub
+        raise NotImplementedError
+
+
+class _Integers(SearchStrategy):
+    def __init__(self, min_value, max_value):
+        if min_value > max_value:
+            raise ValueError("integers(): min_value > max_value")
+        self.min_value = min_value
+        self.max_value = max_value
+
+    def example(self, rng, index=0):
+        if index == 0:
+            return self.min_value
+        if index == 1:
+            return self.max_value
+        return rng.randint(self.min_value, self.max_value)
+
+
+class _Floats(SearchStrategy):
+    def __init__(self, min_value, max_value):
+        if min_value > max_value:
+            raise ValueError("floats(): min_value > max_value")
+        self.min_value = float(min_value)
+        self.max_value = float(max_value)
+
+    def example(self, rng, index=0):
+        if index == 0:
+            return self.min_value
+        if index == 1:
+            return self.max_value
+        return rng.uniform(self.min_value, self.max_value)
+
+
+class _SampledFrom(SearchStrategy):
+    def __init__(self, elements):
+        self.elements = list(elements)
+        if not self.elements:
+            raise ValueError("sampled_from(): empty collection")
+
+    def example(self, rng, index=0):
+        if index < len(self.elements):
+            return self.elements[index]
+        return rng.choice(self.elements)
+
+
+class _Booleans(_SampledFrom):
+    def __init__(self):
+        super().__init__([False, True])
+
+
+class _Lists(SearchStrategy):
+    def __init__(self, elements, min_size=0, max_size=10):
+        self.elements = elements
+        self.min_size = min_size
+        self.max_size = max_size
+
+    def example(self, rng, index=0):
+        size = self.min_size if index == 0 else rng.randint(self.min_size, self.max_size)
+        return [self.elements.example(rng, 2) for _ in range(size)]
+
+
+def integers(min_value, max_value):
+    return _Integers(min_value, max_value)
+
+
+def floats(min_value, max_value, **_ignored):
+    return _Floats(min_value, max_value)
+
+
+def booleans():
+    return _Booleans()
+
+
+def sampled_from(elements):
+    return _SampledFrom(elements)
+
+
+def lists(elements, min_size=0, max_size=10):
+    return _Lists(elements, min_size=min_size, max_size=max_size)

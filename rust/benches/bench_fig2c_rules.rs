@@ -13,6 +13,7 @@ use sgl::coordinator::jobs::RuleComparisonJob;
 use sgl::coordinator::report::render_rule_timings;
 use sgl::data::synthetic::SyntheticConfig;
 use sgl::experiments::fig2;
+use sgl::util::pool::default_threads;
 
 fn main() {
     let paper = std::env::var("SGL_BENCH_SCALE").as_deref() == Ok("paper");
@@ -42,10 +43,11 @@ fn main() {
         tolerances: vec![1e-2, 1e-4, 1e-6, 1e-8],
         delta: 3.0,
         t_count,
+        // Timing-grade: one job at a time, no core contention.
+        serial_timing: true,
         ..Default::default()
     };
-    // Serial (threads=1): timing-grade, no core contention.
-    let timings = fig2::rule_timings(&cfg, tau, &job, 1);
+    let timings = fig2::rule_timings(&cfg, tau, &job, default_threads());
     println!("{}", render_rule_timings(&timings));
 
     // Machine-readable rows for EXPERIMENTS.md.

@@ -9,6 +9,7 @@ use sgl::coordinator::jobs::RuleComparisonJob;
 use sgl::coordinator::report::render_rule_timings;
 use sgl::data::climate::ClimateConfig;
 use sgl::experiments::fig3;
+use sgl::util::pool::default_threads;
 
 fn main() {
     let paper = std::env::var("SGL_BENCH_SCALE").as_deref() == Ok("paper");
@@ -30,10 +31,11 @@ fn main() {
         tolerances: vec![1e-2, 1e-4, 1e-6, 1e-8],
         delta: 2.5, // the paper's climate-path choice
         t_count,
+        // Timing-grade: one job at a time, no core contention.
+        serial_timing: true,
         ..Default::default()
     };
-    // Serial (threads=1): timing-grade, no core contention.
-    let timings = fig3::rule_timings(&data, 0.4, &job, 1);
+    let timings = fig3::rule_timings(&data, 0.4, &job, default_threads());
     println!("{}", render_rule_timings(&timings));
 
     println!("rule,tol,seconds,epochs,converged");

@@ -12,13 +12,21 @@
 //!
 //! Default scale: p = 2000, T = 40 (seconds); `SGL_BENCH_SCALE=paper`
 //! runs the full n=100, p=10000, T=100 instance.
+//!
+//! A second section benchmarks the **design backends**: the same
+//! ~1%-density sparse problem solved through the dense `Matrix` and the
+//! `CscMatrix` backend — identical λ-grid, identical rule — verifying the
+//! objectives agree to 1e-7 while the CSC sweeps, which touch only stored
+//! entries, win on wall-clock.
 
+use sgl::data::sparse::{self, SparseSyntheticConfig};
 use sgl::data::synthetic::{generate, SyntheticConfig};
+use sgl::linalg::Design;
 use sgl::norms::sgl::omega;
 use sgl::screening::RuleKind;
 use sgl::solver::cd::SolveOptions;
-use sgl::solver::path::{PathBatch, PathBatchJob, PathOptions};
-use sgl::solver::problem::SglProblem;
+use sgl::solver::path::{solve_path_on_grid, PathBatch, PathBatchJob, PathOptions};
+use sgl::solver::problem::{lambda_grid, SglProblem};
 use sgl::util::pool::default_threads;
 use sgl::util::timer::Stopwatch;
 use std::sync::Arc;
@@ -124,4 +132,85 @@ fn main() {
             path.all_converged()
         );
     }
+
+    bench_backends(paper);
+}
+
+/// Dense vs CSC on a ~1%-density design: same data, same λ-grid, same
+/// sequential GAP-safe rule; only the backend differs.
+fn bench_backends(paper: bool) {
+    let cfg = SparseSyntheticConfig {
+        n: 100,
+        n_groups: if paper { 2000 } else { 500 },
+        group_size: 10,
+        density: 0.01,
+        gamma1: 10,
+        gamma2: 4,
+        seed: 7,
+        ..Default::default()
+    };
+    let d = sparse::generate(&cfg);
+    // Unit-norm y so the 1e-7 agreement budget is absolute.
+    let y_norm = d.y.iter().map(|v| v * v).sum::<f64>().sqrt().max(1e-300);
+    let y: Vec<f64> = d.y.iter().map(|v| v / y_norm).collect();
+    let x_dense = d.x.to_dense();
+    let pb_csc = SglProblem::new(d.x.clone(), y.clone(), d.groups.clone(), 0.2);
+    let pb_dense = SglProblem::new(x_dense, y, d.groups.clone(), 0.2);
+    println!(
+        "\n== backend comparison: n={}, p={}, density {:.2}% (nnz={}) ==",
+        cfg.n,
+        cfg.p(),
+        100.0 * pb_csc.x.density(),
+        pb_csc.x.nnz()
+    );
+
+    // Identical grid for both backends (from the dense λ_max).
+    let t_count = if paper { 60 } else { 30 };
+    let lambdas = lambda_grid(pb_dense.lambda_max(), 2.0, t_count);
+    let opts = PathOptions {
+        delta: 2.0,
+        t_count,
+        solve: SolveOptions {
+            rule: RuleKind::GapSafeSeq,
+            tol: 1e-8,
+            record_history: false,
+            ..Default::default()
+        },
+    };
+
+    let sw = Stopwatch::start();
+    let dense_path = solve_path_on_grid(&pb_dense, &lambdas, &opts);
+    let t_dense = sw.elapsed_s();
+    let sw = Stopwatch::start();
+    let csc_path = solve_path_on_grid(&pb_csc, &lambdas, &opts);
+    let t_csc = sw.elapsed_s();
+
+    assert!(dense_path.all_converged(), "dense backend failed to converge");
+    assert!(csc_path.all_converged(), "csc backend failed to converge");
+
+    // Objective agreement across backends at every grid point.
+    let objective = |lambda: f64, beta: &[f64]| {
+        let xb = pb_dense.x.matvec(beta);
+        let r2: f64 =
+            pb_dense.y.iter().zip(&xb).map(|(yi, v)| (yi - v) * (yi - v)).sum();
+        0.5 * r2 + lambda * omega(beta, &pb_dense.groups, pb_dense.tau, &pb_dense.weights)
+    };
+    let mut max_div = 0.0_f64;
+    for (i, &lambda) in lambdas.iter().enumerate() {
+        let a = objective(lambda, &dense_path.results[i].beta);
+        let b = objective(lambda, &csc_path.results[i].beta);
+        max_div = max_div.max((a - b).abs());
+    }
+    println!("dense path (T={t_count}, gap_safe_seq @1e-8): {t_dense:>8.3}s");
+    println!(
+        "csc path   (T={t_count}, gap_safe_seq @1e-8): {t_csc:>8.3}s  ({:.2}x speedup)",
+        t_dense / t_csc.max(1e-12)
+    );
+    println!("max objective divergence dense vs csc: {max_div:.2e}");
+    assert!(max_div <= 1e-7, "backends disagree beyond budget: {max_div:.2e}");
+    assert!(
+        t_csc < t_dense,
+        "CSC backend should win on a {:.2}%-density design ({t_csc:.3}s vs {t_dense:.3}s)",
+        100.0 * pb_csc.x.density()
+    );
 }

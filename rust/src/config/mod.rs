@@ -8,9 +8,61 @@
 pub mod toml;
 
 use crate::screening::RuleKind;
-use anyhow::{bail, Context, Result};
+use crate::solver::SolverKind;
+use anyhow::{bail, ensure, Context, Result};
+use std::fmt;
 use std::path::Path;
 use toml::TomlDoc;
+
+/// Which design-matrix backend a run instantiates.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DesignBackend {
+    /// Column-major dense storage ([`crate::linalg::Matrix`]).
+    Dense,
+    /// Compressed sparse columns ([`crate::linalg::CscMatrix`]): per-epoch
+    /// cost scales with `nnz` instead of `n·p`.
+    Csc,
+}
+
+impl DesignBackend {
+    pub fn name(self) -> &'static str {
+        match self {
+            DesignBackend::Dense => "dense",
+            DesignBackend::Csc => "csc",
+        }
+    }
+
+    pub fn all() -> [DesignBackend; 2] {
+        [DesignBackend::Dense, DesignBackend::Csc]
+    }
+
+    pub fn from_name(s: &str) -> Option<DesignBackend> {
+        Self::all().into_iter().find(|b| b.name() == s)
+    }
+}
+
+/// Typed error for an unrecognized `design = "..."` selection. Carried as
+/// the payload of the `anyhow` chain so callers (the CLI) can
+/// `downcast_ref` it and print the valid backend names.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct UnknownBackendError {
+    pub given: String,
+}
+
+impl fmt::Display for UnknownBackendError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "unknown design backend {:?}", self.given)
+    }
+}
+
+impl std::error::Error for UnknownBackendError {}
+
+/// Parse a backend name, preserving the typed error for `downcast_ref`.
+pub fn parse_design_backend(name: &str) -> Result<DesignBackend> {
+    ensure!(!name.is_empty(), "design backend must not be empty");
+    DesignBackend::from_name(name)
+        .ok_or_else(|| anyhow::Error::new(UnknownBackendError { given: name.to_string() }))
+}
 
 /// Which dataset a run uses.
 #[derive(Clone, Debug, PartialEq)]
@@ -25,6 +77,10 @@ pub enum DatasetChoice {
 #[derive(Clone, Debug)]
 pub struct RunConfig {
     pub dataset: DatasetChoice,
+    /// Design-matrix backend (`[dataset] design = "dense" | "csc"`).
+    pub design: DesignBackend,
+    /// Inner solver (`[solver] algo = "cd" | "ista" | "fista"`).
+    pub algo: SolverKind,
     pub tau: f64,
     pub tol: f64,
     pub fce: usize,
@@ -52,6 +108,8 @@ impl Default for RunConfig {
     fn default() -> Self {
         RunConfig {
             dataset: DatasetChoice::Synthetic,
+            design: DesignBackend::Dense,
+            algo: SolverKind::Cd,
             tau: 0.2,
             tol: 1e-8,
             fce: 10,
@@ -94,6 +152,14 @@ impl RunConfig {
                 },
                 other => bail!("unknown dataset kind {other:?}"),
             };
+        }
+        if let Some(d) = doc.get_str("dataset", "design") {
+            cfg.design = parse_design_backend(&d)
+                .with_context(|| format!("parsing dataset.design = {d:?}"))?;
+        }
+        if let Some(a) = doc.get_str("solver", "algo") {
+            cfg.algo = SolverKind::from_name(&a)
+                .with_context(|| format!("unknown solver algo {a:?} (cd|ista|fista)"))?;
         }
         macro_rules! take {
             ($field:ident, $sect:expr, $key:expr, f64) => {
@@ -230,6 +296,32 @@ rho = 0.9
                 group_size: 3
             }
         );
+    }
+
+    #[test]
+    fn parses_design_backend_and_algo() {
+        let c = RunConfig::from_toml_str(
+            "[dataset]\nkind = \"synthetic\"\ndesign = \"csc\"\n[solver]\nalgo = \"fista\"\n",
+        )
+        .unwrap();
+        assert_eq!(c.design, DesignBackend::Csc);
+        assert_eq!(c.algo, SolverKind::Fista);
+        // Default stays dense/cd.
+        let d = RunConfig::default();
+        assert_eq!(d.design, DesignBackend::Dense);
+        assert_eq!(d.algo, SolverKind::Cd);
+    }
+
+    #[test]
+    fn unknown_backend_is_a_typed_downcastable_error() {
+        let err = RunConfig::from_toml_str("[dataset]\ndesign = \"coo\"\n").unwrap_err();
+        let ub = err
+            .downcast_ref::<UnknownBackendError>()
+            .expect("typed payload must survive the context chain");
+        assert_eq!(ub.given, "coo");
+        // And the human-readable chain still mentions the context.
+        assert!(format!("{err:#}").contains("dataset.design"));
+        assert!(RunConfig::from_toml_str("[solver]\nalgo = \"sgd\"\n").is_err());
     }
 
     #[test]

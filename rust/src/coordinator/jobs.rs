@@ -3,10 +3,11 @@
 //! drivers and the CLI sit on.
 
 use super::metrics::Metrics;
+use crate::linalg::Design;
 use crate::screening::RuleKind;
 use crate::solver::cd::SolveOptions;
 use crate::solver::path::{PathBatch, PathBatchJob, PathOptions, PathResult};
-use crate::solver::problem::SglProblem;
+use crate::solver::problem::{lambda_grid, SglProblem};
 use std::sync::Arc;
 
 /// A rule-comparison job: one full λ-path per screening rule at a given
@@ -19,6 +20,12 @@ pub struct RuleComparisonJob {
     pub t_count: usize,
     pub fce: usize,
     pub max_epochs: usize,
+    /// Timing mode: run the jobs one at a time on a single worker,
+    /// ignoring `threads`. Per-job `PathResult::total_s` under a
+    /// contended parallel run is not timing-grade (cores are shared), so
+    /// benches that publish per-rule seconds set this instead of
+    /// threading a `threads = 1` override through their plumbing.
+    pub serial_timing: bool,
 }
 
 impl Default for RuleComparisonJob {
@@ -30,6 +37,7 @@ impl Default for RuleComparisonJob {
             t_count: 100,
             fce: 10,
             max_epochs: 20_000,
+            serial_timing: false,
         }
     }
 }
@@ -48,14 +56,14 @@ pub struct RuleTiming {
 /// pair is one [`PathBatchJob`] solving the whole warm-started path on its
 /// own worker, all jobs sharing the one `Arc`'d problem instance (no copy
 /// of `X` is ever made). Returns results in (tol-major, rule-minor) order.
-pub fn run_rule_comparison(
-    pb: Arc<SglProblem>,
+pub fn run_rule_comparison<D: Design>(
+    pb: Arc<SglProblem<D>>,
     job: &RuleComparisonJob,
     threads: usize,
     metrics: Option<Arc<Metrics>>,
 ) -> Vec<RuleTiming> {
     let lambda_max = pb.lambda_max();
-    let lambdas = SglProblem::lambda_grid(lambda_max, job.delta, job.t_count);
+    let lambdas = lambda_grid(lambda_max, job.delta, job.t_count);
     let mut cases: Vec<(RuleKind, f64)> = Vec::new();
     let mut batch = PathBatch::new();
     for &tol in &job.tolerances {
@@ -80,7 +88,10 @@ pub fn run_rule_comparison(
             });
         }
     }
-    let paths: Vec<PathResult> = batch.run(threads);
+    // Timing mode solves each job uncontended (everything else about the
+    // engine is deterministic, so only the clocks depend on the choice).
+    let paths: Vec<PathResult> =
+        batch.run(if job.serial_timing { 1 } else { threads });
     cases
         .into_iter()
         .zip(paths)
@@ -124,7 +135,7 @@ impl Default for PathJob {
     }
 }
 
-pub fn run_path(pb: &SglProblem, job: &PathJob) -> PathResult {
+pub fn run_path<D: Design>(pb: &SglProblem<D>, job: &PathJob) -> PathResult {
     let opts = PathOptions {
         delta: job.delta,
         t_count: job.t_count,
@@ -183,6 +194,30 @@ mod tests {
             .find(|t| t.rule == RuleKind::None && t.tol == 1e-6)
             .unwrap();
         assert!(gap.total_epochs <= none.total_epochs);
+    }
+
+    #[test]
+    fn serial_timing_mode_reports_identical_results() {
+        let pb = Arc::new(small_problem());
+        let base = RuleComparisonJob {
+            rules: vec![RuleKind::None, RuleKind::GapSafeSeq],
+            tolerances: vec![1e-4],
+            t_count: 6,
+            delta: 2.0,
+            ..Default::default()
+        };
+        let timed = RuleComparisonJob { serial_timing: true, ..base.clone() };
+        let a = run_rule_comparison(pb.clone(), &base, 2, None);
+        let b = run_rule_comparison(pb, &timed, 2, None);
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.rule, y.rule);
+            assert_eq!(x.tol, y.tol);
+            // The timing mode only changes the clocks, not the arithmetic.
+            assert_eq!(x.total_epochs, y.total_epochs);
+            assert_eq!(x.converged, y.converged);
+            assert!(y.seconds >= 0.0);
+        }
     }
 
     #[test]

@@ -3,6 +3,7 @@
 
 pub mod climate;
 pub mod csvio;
+pub mod sparse;
 pub mod synthetic;
 
 use crate::linalg::Matrix;

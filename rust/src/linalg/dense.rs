@@ -185,6 +185,16 @@ impl Matrix {
         m
     }
 
+    /// Select a subset of columns, packed contiguously in the given order
+    /// (active-set compaction for the dense backend).
+    pub fn select_cols(&self, cols: &[usize]) -> Matrix {
+        let mut m = Matrix::zeros(self.n_rows, cols.len());
+        for (k, &j) in cols.iter().enumerate() {
+            m.col_mut(k).copy_from_slice(self.col(j));
+        }
+        m
+    }
+
     /// Select a subset of rows (used for train/test splits).
     pub fn select_rows(&self, rows: &[usize]) -> Matrix {
         let mut m = Matrix::zeros(rows.len(), self.n_cols);
@@ -205,6 +215,65 @@ impl Matrix {
             m.set(i, i, s);
         }
         m
+    }
+}
+
+impl super::design::Design for Matrix {
+    #[inline]
+    fn n_rows(&self) -> usize {
+        Matrix::n_rows(self)
+    }
+
+    #[inline]
+    fn n_cols(&self) -> usize {
+        Matrix::n_cols(self)
+    }
+
+    #[inline]
+    fn nnz(&self) -> usize {
+        self.data.len()
+    }
+
+    #[inline]
+    fn col_dot(&self, j: usize, v: &[f64]) -> f64 {
+        dot(self.col(j), v)
+    }
+
+    #[inline]
+    fn col_axpy(&self, j: usize, alpha: f64, out: &mut [f64]) {
+        super::ops::axpy(alpha, self.col(j), out);
+    }
+
+    #[inline]
+    fn col_norm(&self, j: usize) -> f64 {
+        l2_norm(self.col(j))
+    }
+
+    fn col_norms(&self) -> Vec<f64> {
+        Matrix::col_norms(self)
+    }
+
+    fn matvec_into(&self, v: &[f64], y: &mut [f64]) {
+        Matrix::matvec_into(self, v, y)
+    }
+
+    fn tmatvec_into(&self, u: &[f64], z: &mut [f64]) {
+        Matrix::tmatvec_into(self, u, z)
+    }
+
+    fn select_cols(&self, cols: &[usize]) -> Matrix {
+        Matrix::select_cols(self, cols)
+    }
+
+    fn select_rows(&self, rows: &[usize]) -> Matrix {
+        Matrix::select_rows(self, rows)
+    }
+
+    /// Dense override: the specialized power iteration in
+    /// [`super::spectral`] (bit-identical arithmetic to the generic path,
+    /// but streams the contiguous block directly).
+    fn block_spectral_norm(&self, j0: usize, j1: usize) -> f64 {
+        super::spectral::spectral_norm(self, j0, j1, 1e-12, 1000)
     }
 }
 

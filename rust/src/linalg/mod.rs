@@ -1,15 +1,23 @@
-//! Dense linear algebra substrate.
+//! Linear-algebra substrate.
 //!
-//! The Sparse-Group Lasso solver needs column-major dense matrices (feature
-//! columns are accessed constantly), matrix-vector products, vector norms,
-//! power iteration for block spectral norms `‖X_g‖₂`, and a Cholesky-based
-//! multivariate normal sampler for the synthetic designs. All of it lives
-//! here, implemented from scratch for this offline environment.
+//! The Sparse-Group Lasso solvers need column-oriented design matrices
+//! (feature columns are accessed constantly), matrix-vector products,
+//! vector norms, and power iteration for block spectral norms `‖X_g‖₂`.
+//! All of it lives here, implemented from scratch for this offline
+//! environment, behind the [`Design`] backend abstraction:
+//!
+//! - [`Matrix`] — column-major dense storage (the original backend);
+//! - [`CscMatrix`] — compressed sparse columns, whose sweeps only touch
+//!   stored entries (`O(nnz)` per epoch instead of `O(n·p)`).
 
 pub mod dense;
+pub mod design;
 pub mod ops;
+pub mod sparse;
 pub mod spectral;
 
 pub use dense::Matrix;
+pub use design::{block_spectral_norm_generic, Design};
 pub use ops::{axpy, dot, inf_norm, l1_norm, l2_norm, l2_norm_sq, scale, sub};
+pub use sparse::CscMatrix;
 pub use spectral::{power_iteration, spectral_norm};

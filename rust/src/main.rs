@@ -2,7 +2,7 @@
 //!
 //! Subcommands:
 //!
-//! - `solve`       one λ on a dataset (native ISTA-BC, Algorithm 2)
+//! - `solve`       one λ on a dataset (native solver, Algorithm 2)
 //! - `path`        warm-started λ-path (§7.1)
 //! - `cv`          (λ, τ)-grid validation (Fig. 3a protocol)
 //! - `lambda-max`  critical parameter via Algorithm 1 (Eq. 22)
@@ -10,21 +10,28 @@
 //! - `xla`         solve through the AOT artifacts via PJRT (three-layer path)
 //!
 //! Datasets come from a config file (`--config run.toml`) or the built-in
-//! synthetic/climate generators.
+//! synthetic/climate generators. `--design dense|csc` selects the design
+//! backend (CSC stores only the nonzero entries, so epochs cost `O(nnz)`),
+//! `--algo cd|ista|fista` the inner solver; both are also available as
+//! `[dataset] design` / `[solver] algo` TOML keys.
 
 use anyhow::{bail, Context, Result};
-use sgl::config::{DatasetChoice, RunConfig};
+use sgl::config::{
+    parse_design_backend, DatasetChoice, DesignBackend, RunConfig, UnknownBackendError,
+};
 use sgl::coordinator::jobs::{run_rule_comparison, RuleComparisonJob};
 use sgl::coordinator::report::render_rule_timings;
 use sgl::data::climate::{self, ClimateConfig};
 use sgl::data::synthetic::{self, SyntheticConfig};
 use sgl::data::{csvio, Dataset};
+use sgl::linalg::{CscMatrix, Design};
 use sgl::screening::RuleKind;
-use sgl::solver::cd::{solve, SolveOptions};
+use sgl::solver::cd::SolveOptions;
 use sgl::solver::cv::{split_rows, validate_tau_grid};
 use sgl::solver::groups::Groups;
-use sgl::solver::path::{solve_path, PathOptions};
-use sgl::solver::problem::SglProblem;
+use sgl::solver::path::{solve_path_with, PathOptions};
+use sgl::solver::problem::{lambda_grid, SglProblem};
+use sgl::solver::SolverKind;
 use sgl::util::cli::{Args, OptSpec};
 use sgl::util::pool::default_threads;
 
@@ -32,6 +39,8 @@ fn specs() -> Vec<OptSpec> {
     vec![
         OptSpec { name: "config", help: "TOML config file", takes_value: true, default: None },
         OptSpec { name: "dataset", help: "synthetic|climate", takes_value: true, default: Some("synthetic") },
+        OptSpec { name: "design", help: "dense|csc design backend", takes_value: true, default: None },
+        OptSpec { name: "algo", help: "cd|ista|fista inner solver", takes_value: true, default: None },
         OptSpec { name: "tau", help: "l1/group mixing in [0,1]", takes_value: true, default: None },
         OptSpec { name: "lambda-frac", help: "lambda as a fraction of lambda_max", takes_value: true, default: Some("0.1") },
         OptSpec { name: "tol", help: "target duality gap", takes_value: true, default: None },
@@ -50,6 +59,12 @@ fn main() {
     let args = Args::parse_or_exit(&specs());
     if let Err(e) = run(&args) {
         eprintln!("error: {e:#}");
+        if let Some(ub) = e.downcast_ref::<UnknownBackendError>() {
+            eprintln!(
+                "hint: {:?} is not a design backend; valid choices are: dense, csc",
+                ub.given
+            );
+        }
         std::process::exit(1);
     }
 }
@@ -60,6 +75,13 @@ fn load_config(args: &Args) -> Result<RunConfig> {
         None => RunConfig::default(),
     };
     // CLI overrides.
+    if let Some(v) = args.get("design") {
+        cfg.design = parse_design_backend(&v).context("--design")?;
+    }
+    if let Some(v) = args.get("algo") {
+        cfg.algo = SolverKind::from_name(&v)
+            .with_context(|| format!("unknown --algo {v} (cd|ista|fista)"))?;
+    }
     if let Some(v) = args.get("tau") {
         cfg.tau = v.parse().context("--tau")?;
     }
@@ -137,6 +159,131 @@ fn build_dataset(cfg: &RunConfig, scale: &str) -> Result<Dataset> {
     })
 }
 
+/// `solve` on any backend.
+fn cmd_solve<D: Design>(pb: &SglProblem<D>, cfg: &RunConfig, args: &Args, name: &str) {
+    let lambda = args.get_f64("lambda-frac", 0.1) * pb.lambda_max();
+    let opts = SolveOptions {
+        tol: cfg.tol,
+        fce: cfg.fce,
+        max_epochs: cfg.max_epochs,
+        rule: cfg.rule,
+        record_history: true,
+    };
+    let res = match cfg.algo {
+        SolverKind::Cd => sgl::solver::cd::solve(pb, lambda, None, &opts),
+        SolverKind::Ista => sgl::solver::ista::solve_ista(pb, lambda, None, &opts),
+        SolverKind::Fista => sgl::solver::fista::solve_fista(pb, lambda, None, &opts),
+    };
+    let y2: f64 = pb.y.iter().map(|v| v * v).sum();
+    println!(
+        "dataset={} design={} algo={} n={} p={} nnz={} lambda={lambda:.5e}",
+        name,
+        cfg.design.name(),
+        cfg.algo.name(),
+        pb.n(),
+        pb.p(),
+        pb.x.nnz()
+    );
+    println!(
+        "converged={} gap={:.3e} (rel {:.2e}) epochs={} time={:.3}s \
+         active_features={} active_groups={}",
+        res.converged,
+        res.gap,
+        res.gap / y2,
+        res.epochs,
+        res.elapsed_s,
+        res.active.n_active_features(),
+        res.active.n_active_groups()
+    );
+}
+
+/// `path` on any backend.
+fn cmd_path<D: Design>(pb: &SglProblem<D>, cfg: &RunConfig, args: &Args) -> Result<()> {
+    let opts = PathOptions {
+        delta: cfg.delta,
+        t_count: cfg.t_count,
+        solve: SolveOptions {
+            tol: cfg.tol,
+            fce: cfg.fce,
+            max_epochs: cfg.max_epochs,
+            rule: cfg.rule,
+            record_history: false,
+        },
+    };
+    let lambdas = lambda_grid(pb.lambda_max(), opts.delta, opts.t_count);
+    let path = solve_path_with(pb, &lambdas, &opts, cfg.algo);
+    println!(
+        "path: {} lambdas, design={}, algo={}, rule={}, total {:.3}s, epochs={}, \
+         all converged={}",
+        path.lambdas.len(),
+        cfg.design.name(),
+        cfg.algo.name(),
+        cfg.rule.name(),
+        path.total_s,
+        path.total_epochs(),
+        path.all_converged()
+    );
+    if let Some(out) = args.get("out") {
+        let rows: Vec<Vec<f64>> = path
+            .lambdas
+            .iter()
+            .zip(&path.results)
+            .map(|(l, r)| {
+                vec![
+                    *l,
+                    r.gap,
+                    r.epochs as f64,
+                    r.active.n_active_features() as f64,
+                    r.active.n_active_groups() as f64,
+                ]
+            })
+            .collect();
+        csvio::write_csv(
+            std::path::Path::new(&out),
+            &["lambda", "gap", "epochs", "active_features", "active_groups"],
+            &rows,
+        )?;
+        println!("wrote {out}");
+    }
+    Ok(())
+}
+
+/// `compare` on any backend.
+fn cmd_compare<D: Design>(pb: SglProblem<D>, cfg: &RunConfig, threads: usize) {
+    let job = RuleComparisonJob {
+        tolerances: vec![1e-2, 1e-4, 1e-6, 1e-8],
+        delta: cfg.delta,
+        t_count: cfg.t_count,
+        fce: cfg.fce,
+        max_epochs: cfg.max_epochs,
+        serial_timing: true,
+        ..Default::default()
+    };
+    let timings = run_rule_comparison(std::sync::Arc::new(pb), &job, threads, None);
+    println!("{}", render_rule_timings(&timings));
+}
+
+/// Build the problem on the configured backend and run `$body` with `$pb`
+/// bound to it — the one place the dense/CSC choice is expanded, so every
+/// subcommand stays backend-complete by construction. (`$body` is
+/// monomorphized once per backend through the generic `cmd_*` helpers.)
+macro_rules! with_design {
+    ($cfg:expr, $data:expr, |$pb:ident| $body:expr) => {{
+        let data = $data;
+        match $cfg.design {
+            DesignBackend::Dense => {
+                let $pb = SglProblem::new(data.x, data.y, data.groups, $cfg.tau);
+                $body
+            }
+            DesignBackend::Csc => {
+                let x = CscMatrix::from_dense(&data.x);
+                let $pb = SglProblem::new(x, data.y, data.groups, $cfg.tau);
+                $body
+            }
+        }
+    }};
+}
+
 fn run(args: &Args) -> Result<()> {
     let cmd = args.positional().first().map(String::as_str).unwrap_or("help");
     let cfg = load_config(args)?;
@@ -146,80 +293,12 @@ fn run(args: &Args) -> Result<()> {
     match cmd {
         "solve" => {
             let data = build_dataset(&cfg, &scale)?;
-            let pb = SglProblem::new(data.x, data.y, data.groups, cfg.tau);
-            let lambda = args.get_f64("lambda-frac", 0.1) * pb.lambda_max();
-            let opts = SolveOptions {
-                tol: cfg.tol,
-                fce: cfg.fce,
-                max_epochs: cfg.max_epochs,
-                rule: cfg.rule,
-                record_history: true,
-            };
-            let res = solve(&pb, lambda, None, &opts);
-            let y2: f64 = pb.y.iter().map(|v| v * v).sum();
-            println!(
-                "dataset={} n={} p={} lambda={lambda:.5e}",
-                data_name(&cfg),
-                pb.n(),
-                pb.p()
-            );
-            println!(
-                "converged={} gap={:.3e} (rel {:.2e}) epochs={} time={:.3}s \
-                 active_features={} active_groups={}",
-                res.converged,
-                res.gap,
-                res.gap / y2,
-                res.epochs,
-                res.elapsed_s,
-                res.active.n_active_features(),
-                res.active.n_active_groups()
-            );
+            let name = data_name(&cfg);
+            with_design!(cfg, data, |pb| cmd_solve(&pb, &cfg, args, name));
         }
         "path" => {
             let data = build_dataset(&cfg, &scale)?;
-            let pb = SglProblem::new(data.x, data.y, data.groups, cfg.tau);
-            let opts = PathOptions {
-                delta: cfg.delta,
-                t_count: cfg.t_count,
-                solve: SolveOptions {
-                    tol: cfg.tol,
-                    fce: cfg.fce,
-                    max_epochs: cfg.max_epochs,
-                    rule: cfg.rule,
-                    record_history: false,
-                },
-            };
-            let path = solve_path(&pb, &opts);
-            println!(
-                "path: {} lambdas, rule={}, total {:.3}s, epochs={}, all converged={}",
-                path.lambdas.len(),
-                cfg.rule.name(),
-                path.total_s,
-                path.total_epochs(),
-                path.all_converged()
-            );
-            if let Some(out) = args.get("out") {
-                let rows: Vec<Vec<f64>> = path
-                    .lambdas
-                    .iter()
-                    .zip(&path.results)
-                    .map(|(l, r)| {
-                        vec![
-                            *l,
-                            r.gap,
-                            r.epochs as f64,
-                            r.active.n_active_features() as f64,
-                            r.active.n_active_groups() as f64,
-                        ]
-                    })
-                    .collect();
-                csvio::write_csv(
-                    std::path::Path::new(&out),
-                    &["lambda", "gap", "epochs", "active_features", "active_groups"],
-                    &rows,
-                )?;
-                println!("wrote {out}");
-            }
+            with_design!(cfg, data, |pb| cmd_path(&pb, &cfg, args)?);
         }
         "cv" => {
             let data = build_dataset(&cfg, &scale)?;
@@ -230,8 +309,15 @@ fn run(args: &Args) -> Result<()> {
                 t_count: cfg.t_count,
                 solve: SolveOptions { tol: cfg.tol, record_history: false, ..Default::default() },
             };
-            let cv =
-                validate_tau_grid(&data.x, &data.y, &data.groups, &taus, &opts, &split, threads);
+            let cv = match cfg.design {
+                DesignBackend::Dense => {
+                    validate_tau_grid(&data.x, &data.y, &data.groups, &taus, &opts, &split, threads)
+                }
+                DesignBackend::Csc => {
+                    let x = CscMatrix::from_dense(&data.x);
+                    validate_tau_grid(&x, &data.y, &data.groups, &taus, &opts, &split, threads)
+                }
+            };
             println!(
                 "best tau={} lambda={:.4e} test mse={:.5e}",
                 cv.best_tau, cv.best_lambda, cv.best_mse
@@ -245,17 +331,7 @@ fn run(args: &Args) -> Result<()> {
         }
         "compare" => {
             let data = build_dataset(&cfg, &scale)?;
-            let pb = SglProblem::new(data.x, data.y, data.groups, cfg.tau);
-            let job = RuleComparisonJob {
-                tolerances: vec![1e-2, 1e-4, 1e-6, 1e-8],
-                delta: cfg.delta,
-                t_count: cfg.t_count,
-                fce: cfg.fce,
-                max_epochs: cfg.max_epochs,
-                ..Default::default()
-            };
-            let timings = run_rule_comparison(std::sync::Arc::new(pb), &job, threads, None);
-            println!("{}", render_rule_timings(&timings));
+            with_design!(cfg, data, |pb| cmd_compare(pb, &cfg, threads));
         }
         "xla" => {
             let dir = std::path::PathBuf::from(args.get_or("artifacts", "artifacts"));

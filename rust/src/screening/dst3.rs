@@ -12,6 +12,7 @@
 
 use super::{RuleKind, ScreeningRule, Sphere};
 use crate::linalg::ops::{dot, l2_norm_sq};
+use crate::linalg::Design;
 use crate::norms::epsilon::epsilon_norm_gradient;
 use crate::norms::sgl::epsilon_g;
 use crate::solver::duality::DualSnapshot;
@@ -31,7 +32,7 @@ pub struct Dst3Rule {
 }
 
 impl Dst3Rule {
-    pub fn new(pb: &SglProblem) -> Self {
+    pub fn new<D: Design>(pb: &SglProblem<D>) -> Self {
         let xty = pb.x.tmatvec(&pb.y);
         let (g_star, lambda_max) = pb.lambda_max_argmax();
         let (a, b) = pb.groups.bounds(g_star);
@@ -43,13 +44,7 @@ impl Dst3Rule {
         let n = pb.n();
         let mut eta = vec![0.0; n];
         for (k, j) in (a..b).enumerate() {
-            let col = pb.x.col(j);
-            let gk = grad[k];
-            if gk != 0.0 {
-                for i in 0..n {
-                    eta[i] += col[i] * gk;
-                }
-            }
+            pb.x.col_axpy(j, grad[k], &mut eta);
         }
         let xt_eta = pb.x.tmatvec(&eta);
         let eta_dot_y = dot(&eta, &pb.y);
@@ -59,12 +54,12 @@ impl Dst3Rule {
     }
 }
 
-impl ScreeningRule for Dst3Rule {
+impl<D: Design> ScreeningRule<D> for Dst3Rule {
     fn kind(&self) -> RuleKind {
         RuleKind::Dst3
     }
 
-    fn sphere(&mut self, pb: &SglProblem, lambda: f64, snap: &DualSnapshot) -> Option<Sphere> {
+    fn sphere(&mut self, pb: &SglProblem<D>, lambda: f64, snap: &DualSnapshot) -> Option<Sphere> {
         // Violation of the half-space by y/lambda (>= 0 for lambda <= lmax).
         let violation = (self.eta_dot_y / lambda - self.offset) / self.eta_norm_sq;
         let dyn_radius = snap.dist_to_y_over_lambda(&pb.y, lambda);

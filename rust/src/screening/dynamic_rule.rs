@@ -8,6 +8,7 @@
 //! zero — the structural gap to the GAP safe sphere.
 
 use super::{RuleKind, ScreeningRule, Sphere};
+use crate::linalg::Design;
 use crate::solver::duality::DualSnapshot;
 use crate::solver::problem::SglProblem;
 
@@ -16,17 +17,17 @@ pub struct DynamicRule {
 }
 
 impl DynamicRule {
-    pub fn new(pb: &SglProblem) -> Self {
+    pub fn new<D: Design>(pb: &SglProblem<D>) -> Self {
         DynamicRule { xty: pb.x.tmatvec(&pb.y) }
     }
 }
 
-impl ScreeningRule for DynamicRule {
+impl<D: Design> ScreeningRule<D> for DynamicRule {
     fn kind(&self) -> RuleKind {
         RuleKind::Dynamic
     }
 
-    fn sphere(&mut self, pb: &SglProblem, lambda: f64, snap: &DualSnapshot) -> Option<Sphere> {
+    fn sphere(&mut self, pb: &SglProblem<D>, lambda: f64, snap: &DualSnapshot) -> Option<Sphere> {
         let radius = snap.dist_to_y_over_lambda(&pb.y, lambda);
         let xt_center: Vec<f64> = self.xty.iter().map(|v| v / lambda).collect();
         Some(Sphere { xt_center, radius })

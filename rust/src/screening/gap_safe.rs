@@ -11,6 +11,7 @@
 //! bounded away from zero, which is exactly why they plateau in Fig. 2.
 
 use super::{RuleKind, ScreeningRule, Sphere};
+use crate::linalg::Design;
 use crate::solver::duality::{dual_value, DualSnapshot};
 use crate::solver::problem::SglProblem;
 
@@ -18,12 +19,12 @@ use crate::solver::problem::SglProblem;
 /// rule itself is stateless.
 pub struct GapSafeRule;
 
-impl ScreeningRule for GapSafeRule {
+impl<D: Design> ScreeningRule<D> for GapSafeRule {
     fn kind(&self) -> RuleKind {
         RuleKind::GapSafe
     }
 
-    fn sphere(&mut self, _pb: &SglProblem, _lambda: f64, snap: &DualSnapshot) -> Option<Sphere> {
+    fn sphere(&mut self, _pb: &SglProblem<D>, _lambda: f64, snap: &DualSnapshot) -> Option<Sphere> {
         Some(Sphere { xt_center: snap.xt_theta.clone(), radius: snap.radius })
     }
 }
@@ -66,12 +67,12 @@ impl Default for GapSafeSeqRule {
     }
 }
 
-impl ScreeningRule for GapSafeSeqRule {
+impl<D: Design> ScreeningRule<D> for GapSafeSeqRule {
     fn kind(&self) -> RuleKind {
         RuleKind::GapSafeSeq
     }
 
-    fn sphere(&mut self, pb: &SglProblem, lambda: f64, snap: &DualSnapshot) -> Option<Sphere> {
+    fn sphere(&mut self, pb: &SglProblem<D>, lambda: f64, snap: &DualSnapshot) -> Option<Sphere> {
         if self.last_lambda == Some(lambda) {
             return None; // sequential: a single screening pass per grid point
         }
@@ -92,7 +93,7 @@ impl ScreeningRule for GapSafeSeqRule {
         }
     }
 
-    fn on_solve_complete(&mut self, _pb: &SglProblem, _lambda: f64, snap: &DualSnapshot) {
+    fn on_solve_complete(&mut self, _pb: &SglProblem<D>, _lambda: f64, snap: &DualSnapshot) {
         self.prev =
             Some(CarriedDual { theta: snap.theta.clone(), xt_theta: snap.xt_theta.clone() });
     }

@@ -19,6 +19,7 @@ pub mod none;
 pub mod static_rule;
 
 use crate::linalg::ops::{inf_norm, l2_norm};
+use crate::linalg::Design;
 use crate::norms::prox::soft_threshold_vec;
 use crate::solver::duality::DualSnapshot;
 use crate::solver::groups::Groups;
@@ -87,13 +88,17 @@ pub struct Sphere {
 }
 
 /// A screening rule: builds a safe sphere from the current dual snapshot.
-pub trait ScreeningRule: Send {
+///
+/// Generic over the [`Design`] backend so one rule instance serves dense
+/// and sparse problems alike; rule state never depends on the backend.
+pub trait ScreeningRule<D: Design>: Send {
     fn kind(&self) -> RuleKind;
 
     /// Produce the safe sphere for the current iterate. `snap` carries the
     /// dual-scaled feasible point `θ_k` (Eq. 15), its `Xᵀθ_k`, and the
     /// duality gap.
-    fn sphere(&mut self, pb: &SglProblem, lambda: f64, snap: &DualSnapshot) -> Option<Sphere>;
+    fn sphere(&mut self, pb: &SglProblem<D>, lambda: f64, snap: &DualSnapshot)
+        -> Option<Sphere>;
 
     /// Hook invoked by the solver when the solve at `lambda` terminates,
     /// with the final dual snapshot. Sequential rules
@@ -101,14 +106,15 @@ pub trait ScreeningRule: Send {
     /// screen at epoch 0 of the *next* grid point of a warm-started path
     /// (the rule instance is constructed once per path and carried across
     /// λ's). Stateless rules ignore it.
-    fn on_solve_complete(&mut self, _pb: &SglProblem, _lambda: f64, _snap: &DualSnapshot) {}
+    fn on_solve_complete(&mut self, _pb: &SglProblem<D>, _lambda: f64, _snap: &DualSnapshot) {
+    }
 }
 
 /// Construct the rule implementation for a [`RuleKind`].
 ///
 /// Rules may precompute per-problem/per-λ quantities (`Xᵀy`, `λ_max`, the
 /// DST3 hyperplane); constructing once per path solve amortizes that.
-pub fn make_rule(kind: RuleKind, pb: &SglProblem) -> Box<dyn ScreeningRule> {
+pub fn make_rule<D: Design>(kind: RuleKind, pb: &SglProblem<D>) -> Box<dyn ScreeningRule<D>> {
     match kind {
         RuleKind::None => Box::new(none::NoRule),
         RuleKind::Static => Box::new(static_rule::StaticRule::new(pb)),
@@ -164,8 +170,8 @@ pub struct ScreenOutcome {
 /// eliminated coordinates of `beta`, and patch the residual `rho = y − Xβ`
 /// accordingly. Only currently-active variables are tested (screening is
 /// monotone along the solve).
-pub fn apply_sphere(
-    pb: &SglProblem,
+pub fn apply_sphere<D: Design>(
+    pb: &SglProblem<D>,
     sphere: &Sphere,
     active: &mut ActiveSet,
     beta: &mut [f64],
@@ -226,13 +232,10 @@ pub fn apply_sphere(
 /// Zero `beta[j]`, restoring the residual `rho += beta_j X_j`. Returns true
 /// if the coefficient was nonzero (i.e. the residual changed).
 #[inline]
-fn zero_coord(pb: &SglProblem, j: usize, beta: &mut [f64], rho: &mut [f64]) -> bool {
+fn zero_coord<D: Design>(pb: &SglProblem<D>, j: usize, beta: &mut [f64], rho: &mut [f64]) -> bool {
     let bj = beta[j];
     if bj != 0.0 {
-        let col = pb.x.col(j);
-        for i in 0..rho.len() {
-            rho[i] += bj * col[i];
-        }
+        pb.x.col_axpy(j, bj, rho);
         beta[j] = 0.0;
         true
     } else {

@@ -2,17 +2,23 @@
 //! the speed-up factors in Fig. 2c / 3b.
 
 use super::{RuleKind, ScreeningRule, Sphere};
+use crate::linalg::Design;
 use crate::solver::duality::DualSnapshot;
 use crate::solver::problem::SglProblem;
 
 pub struct NoRule;
 
-impl ScreeningRule for NoRule {
+impl<D: Design> ScreeningRule<D> for NoRule {
     fn kind(&self) -> RuleKind {
         RuleKind::None
     }
 
-    fn sphere(&mut self, _pb: &SglProblem, _lambda: f64, _snap: &DualSnapshot) -> Option<Sphere> {
+    fn sphere(
+        &mut self,
+        _pb: &SglProblem<D>,
+        _lambda: f64,
+        _snap: &DualSnapshot,
+    ) -> Option<Sphere> {
         None
     }
 }
@@ -29,7 +35,8 @@ mod tests {
         let x = Matrix::from_row_major(&[1.0, 0.0, 0.0, 1.0], 2, 2);
         let pb = SglProblem::new(x, vec![1.0, 2.0], groups, 0.5);
         let snap = DualSnapshot::compute(&pb, &[0.0, 0.0], &pb.y.clone(), 1.0);
-        assert!(NoRule.sphere(&pb, 1.0, &snap).is_none());
-        assert_eq!(NoRule.kind(), RuleKind::None);
+        let mut rule: Box<dyn ScreeningRule<Matrix>> = Box::new(NoRule);
+        assert!(rule.sphere(&pb, 1.0, &snap).is_none());
+        assert_eq!(rule.kind(), RuleKind::None);
     }
 }

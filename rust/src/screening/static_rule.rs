@@ -8,6 +8,7 @@
 
 use super::{RuleKind, ScreeningRule, Sphere};
 use crate::linalg::ops::l2_norm;
+use crate::linalg::Design;
 use crate::solver::duality::DualSnapshot;
 use crate::solver::problem::SglProblem;
 
@@ -19,7 +20,7 @@ pub struct StaticRule {
 }
 
 impl StaticRule {
-    pub fn new(pb: &SglProblem) -> Self {
+    pub fn new<D: Design>(pb: &SglProblem<D>) -> Self {
         let xty = pb.x.tmatvec(&pb.y);
         let y_norm = l2_norm(&pb.y);
         let lambda_max = pb.lambda_max();
@@ -27,12 +28,12 @@ impl StaticRule {
     }
 }
 
-impl ScreeningRule for StaticRule {
+impl<D: Design> ScreeningRule<D> for StaticRule {
     fn kind(&self) -> RuleKind {
         RuleKind::Static
     }
 
-    fn sphere(&mut self, _pb: &SglProblem, lambda: f64, _snap: &DualSnapshot) -> Option<Sphere> {
+    fn sphere(&mut self, _pb: &SglProblem<D>, lambda: f64, _snap: &DualSnapshot) -> Option<Sphere> {
         // ||y/lmax - y/lambda|| = ||y|| * |1/lambda - 1/lmax|.
         let radius = self.y_norm * (1.0 / lambda - 1.0 / self.lambda_max).abs();
         let xt_center: Vec<f64> = self.xty.iter().map(|v| v / lambda).collect();

@@ -1,0 +1,361 @@
+//! The shared active-set core every native solver drives.
+//!
+//! PR 1 gave the CD solver active-set column compaction and the
+//! `on_solve_complete` terminal-dual handoff; ISTA and FISTA were left
+//! behind. This module hoists that machinery out of `cd.rs` so all three
+//! solvers share it, generic over the [`Design`] backend:
+//!
+//! - [`ActiveCols`] — compaction bookkeeping. After a screening event the
+//!   surviving columns of `X` are packed into a fresh backend instance
+//!   ([`Design::select_cols`]: a contiguous dense scratch for `Matrix`, a
+//!   pruned CSC for `CscMatrix`) so the per-epoch sweeps stream packed
+//!   memory instead of hopping across screened-out gaps.
+//! - [`ScreenState`] — the gap-check/screening-event plumbing: applying
+//!   the rule's sphere, rebuilding the compaction, re-evaluating a stale
+//!   gap when screening zeroed nonzero coordinates, recording history,
+//!   and handing the terminal dual point to sequential rules through
+//!   [`ScreeningRule::on_solve_complete`].
+//!
+//! Packing is **lazy**: until the first screening event the active set is
+//! full and every column of `pb.x` is already addressable, so the initial
+//! state is just the identity mapping — no copy. Rebuilds are monotone
+//! (the active set only shrinks along a solve).
+
+use super::cd::{CheckEvent, SolveOptions, SolveResult};
+use super::duality::DualSnapshot;
+use super::problem::SglProblem;
+use crate::linalg::Design;
+use crate::screening::{apply_sphere, ActiveSet, ScreeningRule};
+use crate::util::timer::Stopwatch;
+
+/// Compacted view of the active columns: a packed backend instance plus
+/// the bookkeeping mapping compact columns back to original features.
+pub struct ActiveCols<D: Design> {
+    /// Packed design over the active columns; `None` until the first
+    /// screening event (read through `pb.x` with the identity mapping).
+    compact: Option<D>,
+    /// Original feature index of each compact column.
+    col_feat: Vec<usize>,
+    /// `(g, start, end)` compact-column ranges, one per surviving group
+    /// with at least one surviving feature.
+    groups: Vec<(usize, usize, usize)>,
+}
+
+impl<D: Design> ActiveCols<D> {
+    /// Identity mapping over the full active set; no data is copied.
+    pub fn full(pb: &SglProblem<D>) -> Self {
+        ActiveCols {
+            compact: None,
+            col_feat: (0..pb.p()).collect(),
+            groups: pb.groups.iter().collect(),
+        }
+    }
+
+    /// Re-pack from the current active set, reusing the index buffers.
+    pub fn rebuild(&mut self, pb: &SglProblem<D>, active: &ActiveSet) {
+        self.col_feat.clear();
+        self.groups.clear();
+        for (g, a, b) in pb.groups.iter() {
+            if !active.group[g] {
+                continue;
+            }
+            let start = self.col_feat.len();
+            for j in a..b {
+                if active.feature[j] {
+                    self.col_feat.push(j);
+                }
+            }
+            let end = self.col_feat.len();
+            if end > start {
+                self.groups.push((g, start, end));
+            }
+        }
+        self.compact = Some(pb.x.select_cols(&self.col_feat));
+    }
+
+    /// Compact `(group, start, end)` ranges of the surviving groups.
+    #[inline]
+    pub fn groups(&self) -> &[(usize, usize, usize)] {
+        &self.groups
+    }
+
+    /// Original feature index of compact column `k`.
+    #[inline]
+    pub fn feature(&self, k: usize) -> usize {
+        self.col_feat[k]
+    }
+
+    /// Number of active (compact) columns.
+    #[inline]
+    pub fn n_active(&self) -> usize {
+        self.col_feat.len()
+    }
+
+    /// `X_kᵀ v` for compact column `k`.
+    #[inline]
+    pub fn col_dot(&self, pb: &SglProblem<D>, k: usize, v: &[f64]) -> f64 {
+        match &self.compact {
+            Some(m) => m.col_dot(k, v),
+            None => pb.x.col_dot(self.col_feat[k], v),
+        }
+    }
+
+    /// `out += alpha · X_k` for compact column `k`.
+    #[inline]
+    pub fn col_axpy(&self, pb: &SglProblem<D>, k: usize, alpha: f64, out: &mut [f64]) {
+        match &self.compact {
+            Some(m) => m.col_axpy(k, alpha, out),
+            None => pb.x.col_axpy(self.col_feat[k], alpha, out),
+        }
+    }
+
+    /// `rho = y − Xβ`, touching only the active columns (screened
+    /// coordinates of `β` are zero by construction).
+    pub fn residual_into(&self, pb: &SglProblem<D>, beta: &[f64], rho: &mut [f64]) {
+        rho.copy_from_slice(&pb.y);
+        for k in 0..self.col_feat.len() {
+            let bj = beta[self.col_feat[k]];
+            if bj != 0.0 {
+                self.col_axpy(pb, k, -bj, rho);
+            }
+        }
+    }
+
+    /// `xt[j] = X_jᵀ v` for every active feature `j` (entries of screened
+    /// features are left untouched — callers must not read them).
+    pub fn xt_into(&self, pb: &SglProblem<D>, v: &[f64], xt: &mut [f64]) {
+        for k in 0..self.col_feat.len() {
+            xt[self.col_feat[k]] = self.col_dot(pb, k, v);
+        }
+    }
+}
+
+/// Outcome of one gap-evaluation checkpoint.
+#[derive(Clone, Copy, Debug)]
+pub struct GapCheckOutcome {
+    /// The (possibly re-evaluated) gap reached the tolerance.
+    pub converged: bool,
+    /// Features eliminated at this checkpoint.
+    pub features_screened: usize,
+}
+
+/// Per-solve screening/convergence state shared by CD, ISTA and FISTA.
+pub struct ScreenState<D: Design> {
+    pub active: ActiveSet,
+    pub cols: ActiveCols<D>,
+    pub history: Vec<CheckEvent>,
+    pub gap: f64,
+    pub gap_evals: usize,
+    pub converged: bool,
+    final_snap: Option<DualSnapshot>,
+    tol_abs: f64,
+    record_history: bool,
+}
+
+impl<D: Design> ScreenState<D> {
+    pub fn new(pb: &SglProblem<D>, opts: &SolveOptions) -> Self {
+        // Relative-to-||y||^2 stopping threshold (see SolveOptions::tol).
+        let tol_abs =
+            opts.tol * crate::linalg::ops::l2_norm_sq(&pb.y).max(f64::MIN_POSITIVE);
+        ScreenState {
+            active: ActiveSet::full(&pb.groups),
+            cols: ActiveCols::full(pb),
+            history: Vec::new(),
+            gap: f64::INFINITY,
+            gap_evals: 0,
+            converged: false,
+            final_snap: None,
+            tol_abs,
+            record_history: opts.record_history,
+        }
+    }
+
+    /// Absolute gap tolerance (`opts.tol · ‖y‖²`).
+    #[inline]
+    pub fn tol_abs(&self) -> f64 {
+        self.tol_abs
+    }
+
+    /// One gap-evaluation checkpoint: screen with the rule's sphere,
+    /// rebuild the compaction if features died, re-evaluate the gap if
+    /// screening zeroed nonzero coordinates on a converging check, record
+    /// history, and decide convergence. `snap` must be computed from the
+    /// *current* `beta`/`rho` by the caller (solvers differ in how they
+    /// obtain `Xᵀρ`).
+    #[allow(clippy::too_many_arguments)]
+    pub fn gap_check(
+        &mut self,
+        pb: &SglProblem<D>,
+        lambda: f64,
+        epoch: usize,
+        rule: &mut dyn ScreeningRule<D>,
+        beta: &mut [f64],
+        rho: &mut [f64],
+        snap: DualSnapshot,
+        sw: &Stopwatch,
+    ) -> GapCheckOutcome {
+        let mut snap = snap;
+        self.gap = snap.gap;
+        self.gap_evals += 1;
+        let mut features_screened = 0;
+        // Screen first (even on the converging check: the final active
+        // sets reported for Fig. 2a/2b use the tightest sphere).
+        if let Some(sphere) = rule.sphere(pb, lambda, &snap) {
+            let out = apply_sphere(pb, &sphere, &mut self.active, beta, rho);
+            features_screened = out.features_screened;
+            if out.features_screened > 0 {
+                self.cols.rebuild(pb, &self.active);
+            }
+            if out.beta_changed && self.gap <= self.tol_abs {
+                // Screening zeroed nonzero coords on a converging check:
+                // the cached gap is stale, recompute before deciding.
+                snap = DualSnapshot::compute(pb, beta, rho, lambda);
+                self.gap = snap.gap;
+                self.gap_evals += 1;
+            }
+        }
+        if self.record_history {
+            self.history.push(CheckEvent {
+                epoch,
+                gap: self.gap,
+                radius: snap.radius,
+                active_features: self.active.n_active_features(),
+                active_groups: self.active.n_active_groups(),
+                elapsed_s: sw.elapsed_s(),
+            });
+        }
+        self.final_snap = Some(snap);
+        if self.gap <= self.tol_abs {
+            self.converged = true;
+        }
+        GapCheckOutcome { converged: self.converged, features_screened }
+    }
+
+    /// Terminal bookkeeping shared by every solver: if the epoch budget
+    /// ran out before a converging check, evaluate the true terminal gap;
+    /// then hand the terminal dual point to the rule — sequential rules
+    /// ([`crate::screening::RuleKind::GapSafeSeq`]) carry it to the next
+    /// grid point of a warm-started path.
+    pub fn finalize(
+        &mut self,
+        pb: &SglProblem<D>,
+        lambda: f64,
+        rule: &mut dyn ScreeningRule<D>,
+        beta: &[f64],
+        rho: &[f64],
+    ) {
+        if !self.converged {
+            let snap = DualSnapshot::compute(pb, beta, rho, lambda);
+            self.gap = snap.gap;
+            self.gap_evals += 1;
+            self.converged = self.gap <= self.tol_abs;
+            self.final_snap = Some(snap);
+        }
+        if let Some(snap) = &self.final_snap {
+            rule.on_solve_complete(pb, lambda, snap);
+        }
+    }
+
+    /// Package the terminal state into a [`SolveResult`].
+    pub fn into_result(self, beta: Vec<f64>, epochs: usize, elapsed_s: f64) -> SolveResult {
+        SolveResult {
+            beta,
+            gap: self.gap,
+            epochs,
+            converged: self.converged,
+            elapsed_s,
+            active: self.active,
+            history: self.history,
+            gap_evals: self.gap_evals,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::{CscMatrix, Matrix};
+    use crate::solver::groups::Groups;
+    use crate::util::rng::Pcg;
+
+    fn dense_problem(seed: u64) -> SglProblem {
+        let groups = Groups::from_sizes(&[3, 3, 2]);
+        let mut rng = Pcg::seeded(seed);
+        let x = Matrix::from_fn(10, groups.p(), |_, _| rng.normal());
+        let y: Vec<f64> = (0..10).map(|_| rng.normal()).collect();
+        SglProblem::new(x, y, groups, 0.4)
+    }
+
+    #[test]
+    fn identity_mapping_before_rebuild() {
+        let pb = dense_problem(1);
+        let cols = ActiveCols::full(&pb);
+        assert_eq!(cols.n_active(), pb.p());
+        assert_eq!(cols.groups().len(), pb.n_groups());
+        let v: Vec<f64> = (0..pb.n()).map(|i| i as f64).collect();
+        for k in 0..pb.p() {
+            assert_eq!(cols.feature(k), k);
+            let direct = crate::linalg::ops::dot(pb.x.col(k), &v);
+            assert!((cols.col_dot(&pb, k, &v) - direct).abs() < 1e-14);
+        }
+    }
+
+    #[test]
+    fn rebuild_packs_surviving_columns() {
+        let pb = dense_problem(2);
+        let mut active = ActiveSet::full(&pb.groups);
+        // Screen group 1 entirely plus feature 2 of group 0.
+        active.group[1] = false;
+        for j in 3..6 {
+            active.feature[j] = false;
+        }
+        active.feature[2] = false;
+        let mut cols = ActiveCols::full(&pb);
+        cols.rebuild(&pb, &active);
+        assert_eq!(cols.n_active(), 4); // features 0, 1, 6, 7
+        assert_eq!(cols.groups(), &[(0, 0, 2), (2, 2, 4)]);
+        let v: Vec<f64> = (0..pb.n()).map(|i| (i as f64).sin()).collect();
+        for (k, &j) in [0usize, 1, 6, 7].iter().enumerate() {
+            assert_eq!(cols.feature(k), j);
+            let direct = crate::linalg::ops::dot(pb.x.col(j), &v);
+            assert!((cols.col_dot(&pb, k, &v) - direct).abs() < 1e-14);
+        }
+        // Residual over active columns only.
+        let mut beta = vec![0.0; pb.p()];
+        beta[0] = 0.5;
+        beta[6] = -1.0;
+        let mut rho = vec![0.0; pb.n()];
+        cols.residual_into(&pb, &beta, &mut rho);
+        let xb = pb.x.matvec(&beta);
+        for i in 0..pb.n() {
+            assert!((rho[i] - (pb.y[i] - xb[i])).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn csc_backend_compacts_identically() {
+        let pb = dense_problem(3);
+        let spb: SglProblem<CscMatrix> = SglProblem::new(
+            CscMatrix::from_dense(&pb.x),
+            pb.y.clone(),
+            pb.groups.clone(),
+            pb.tau,
+        );
+        let mut active = ActiveSet::full(&pb.groups);
+        active.feature[1] = false;
+        active.feature[4] = false;
+        let mut dc = ActiveCols::full(&pb);
+        dc.rebuild(&pb, &active);
+        let mut sc = ActiveCols::full(&spb);
+        sc.rebuild(&spb, &active);
+        assert_eq!(dc.n_active(), sc.n_active());
+        assert_eq!(dc.groups(), sc.groups());
+        let v: Vec<f64> = (0..pb.n()).map(|i| (i as f64 + 0.5).cos()).collect();
+        for k in 0..dc.n_active() {
+            assert_eq!(dc.feature(k), sc.feature(k));
+            let a = dc.col_dot(&pb, k, &v);
+            let b = sc.col_dot(&spb, k, &v);
+            assert!((a - b).abs() < 1e-12, "col {k}: {a} vs {b}");
+        }
+    }
+}

@@ -10,21 +10,23 @@
 //! ```
 //!
 //! with the residual `ρ = y − Xβ` maintained incrementally (`O(n)` per
-//! touched coordinate). Every `f_ce` epochs (paper default: 10) the duality
-//! gap is evaluated: it provides both the stopping test and — through the
-//! configured [`ScreeningRule`] — a safe sphere used to eliminate variables.
+//! touched coordinate on the dense backend, `O(nnz_j)` on CSC). Every
+//! `f_ce` epochs (paper default: 10) the duality gap is evaluated: it
+//! provides both the stopping test and — through the configured
+//! [`ScreeningRule`] — a safe sphere used to eliminate variables.
 //!
-//! **Column compaction.** After every screening event the surviving columns
-//! of `X` are packed into a contiguous scratch matrix ([`CompactCols`]),
-//! so the per-epoch correlation sweeps and residual updates stream dense
-//! memory instead of hopping across the screened-out gaps of `pb.x`. The
-//! packed copies are bit-identical to the originals, so solutions do not
-//! change — only cache behavior does.
+//! The solver is generic over the [`Design`] backend and drives the shared
+//! active-set core ([`crate::solver::active_set`]): column compaction
+//! after screening events, the gap-check plumbing, and the
+//! `on_solve_complete` terminal-dual handoff all live there, shared with
+//! ISTA and FISTA.
 
+use super::active_set::ScreenState;
 use super::duality::DualSnapshot;
 use super::problem::SglProblem;
+use crate::linalg::Design;
 use crate::norms::prox::sgl_prox_inplace;
-use crate::screening::{apply_sphere, make_rule, ActiveSet, RuleKind, ScreeningRule};
+use crate::screening::{make_rule, ActiveSet, RuleKind, ScreeningRule};
 use crate::util::timer::Stopwatch;
 
 /// Solver options (paper defaults).
@@ -85,77 +87,9 @@ pub struct SolveResult {
     pub gap_evals: usize,
 }
 
-/// Active-set column compaction: the surviving columns of `X`, packed
-/// contiguously in column-major order, plus the bookkeeping to map compact
-/// columns back to original features.
-///
-/// Packing is **lazy**: until the first screening event the active set is
-/// full and every column of `pb.x` is already contiguous, so the initial
-/// state is just the identity mapping over the original matrix — no copy.
-/// The scratch buffer is only materialized by [`CompactCols::rebuild`],
-/// i.e. once screening has actually punched holes worth closing. Rebuilds
-/// are monotone (the active set only shrinks along a solve).
-struct CompactCols {
-    n: usize,
-    /// Packed column-major `n × n_active` buffer (empty until packed).
-    cols: Vec<f64>,
-    /// Whether `cols` is materialized; false = read through `pb.x`.
-    packed: bool,
-    /// Original feature index of each compact column.
-    col_feat: Vec<usize>,
-    /// `(g, start, end)` compact-column ranges, one per surviving group
-    /// with at least one surviving feature.
-    groups: Vec<(usize, usize, usize)>,
-}
-
-impl CompactCols {
-    /// Identity mapping over the full active set; no data is copied.
-    fn build(pb: &SglProblem) -> Self {
-        let col_feat: Vec<usize> = (0..pb.p()).collect();
-        let groups: Vec<(usize, usize, usize)> = pb.groups.iter().collect();
-        CompactCols { n: pb.n(), cols: Vec::new(), packed: false, col_feat, groups }
-    }
-
-    /// Re-pack from the current active set, reusing the buffers.
-    fn rebuild(&mut self, pb: &SglProblem, active: &ActiveSet) {
-        self.col_feat.clear();
-        self.groups.clear();
-        for (g, a, b) in pb.groups.iter() {
-            if !active.group[g] {
-                continue;
-            }
-            let start = self.col_feat.len();
-            for j in a..b {
-                if active.feature[j] {
-                    self.col_feat.push(j);
-                }
-            }
-            let end = self.col_feat.len();
-            if end > start {
-                self.groups.push((g, start, end));
-            }
-        }
-        let n = self.n;
-        self.cols.resize(self.col_feat.len() * n, 0.0);
-        for (k, &j) in self.col_feat.iter().enumerate() {
-            self.cols[k * n..(k + 1) * n].copy_from_slice(pb.x.col(j));
-        }
-        self.packed = true;
-    }
-
-    #[inline]
-    fn col<'a>(&'a self, pb: &'a SglProblem, k: usize) -> &'a [f64] {
-        if self.packed {
-            &self.cols[k * self.n..(k + 1) * self.n]
-        } else {
-            pb.x.col(self.col_feat[k])
-        }
-    }
-}
-
 /// Solve one SGL problem at a single `λ` with warm start `beta0`.
-pub fn solve(
-    pb: &SglProblem,
+pub fn solve<D: Design>(
+    pb: &SglProblem<D>,
     lambda: f64,
     beta0: Option<&[f64]>,
     opts: &SolveOptions,
@@ -166,18 +100,17 @@ pub fn solve(
 
 /// Solve with a caller-provided rule instance (path solves construct the
 /// rule once and reuse its precomputations across the grid).
-pub fn solve_with_rule(
-    pb: &SglProblem,
+pub fn solve_with_rule<D: Design>(
+    pb: &SglProblem<D>,
     lambda: f64,
     beta0: Option<&[f64]>,
     opts: &SolveOptions,
-    rule: &mut dyn ScreeningRule,
+    rule: &mut dyn ScreeningRule<D>,
 ) -> SolveResult {
     assert!(lambda > 0.0, "lambda must be positive");
     let p = pb.p();
     let sw = Stopwatch::start();
-    // Relative-to-||y||^2 stopping threshold (see SolveOptions::tol).
-    let tol_abs = opts.tol * crate::linalg::ops::l2_norm_sq(&pb.y).max(f64::MIN_POSITIVE);
+    let mut state = ScreenState::new(pb, opts);
 
     let mut beta = match beta0 {
         Some(b) => {
@@ -195,18 +128,7 @@ pub fn solve_with_rule(
         }
     }
 
-    let mut active = ActiveSet::full(&pb.groups);
-    // Compacted views of the active columns: identity over `pb.x` until
-    // screening fires, packed scratch copies afterwards.
-    let mut compact = CompactCols::build(pb);
-
-    let mut history = Vec::new();
-    let mut gap = f64::INFINITY;
-    let mut gap_evals = 0usize;
-    let mut converged = false;
     let mut epochs_done = 0usize;
-    // Last computed dual snapshot, handed to sequential rules at the end.
-    let mut final_snap: Option<DualSnapshot> = None;
     // Scratch block buffer sized to the largest group.
     let max_group = (0..pb.n_groups()).map(|g| pb.groups.size(g)).max().unwrap_or(0);
     let mut block = vec![0.0; max_group];
@@ -219,51 +141,20 @@ pub fn solve_with_rule(
             // epochs, which would make the gap (and hence the safe radius)
             // dishonest. Every check would cost one extra matvec (§Perf);
             // the radius floor in DualSnapshot covers the short horizon.
-            if gap_evals % 10 == 0 {
-                pb.x.matvec_into(&beta, &mut rho);
-                for (r, y) in rho.iter_mut().zip(&pb.y) {
-                    *r = y - *r;
-                }
+            if state.gap_evals % 10 == 0 {
+                state.cols.residual_into(pb, &beta, &mut rho);
             }
-            let mut snap = DualSnapshot::compute(pb, &beta, &rho, lambda);
-            gap = snap.gap;
-            gap_evals += 1;
-            // Screen first (even on the converging check: the final active
-            // sets reported for Fig. 2a/2b use the tightest sphere).
-            if let Some(sphere) = rule.sphere(pb, lambda, &snap) {
-                let out = apply_sphere(pb, &sphere, &mut active, &mut beta, &mut rho);
-                if out.features_screened > 0 {
-                    compact.rebuild(pb, &active);
-                }
-                if out.beta_changed && gap <= tol_abs {
-                    // Screening zeroed nonzero coords on a converging check:
-                    // the cached gap is stale, recompute before deciding.
-                    snap = DualSnapshot::compute(pb, &beta, &rho, lambda);
-                    gap = snap.gap;
-                    gap_evals += 1;
-                }
-            }
-            if opts.record_history {
-                history.push(CheckEvent {
-                    epoch,
-                    gap,
-                    radius: snap.radius,
-                    active_features: active.n_active_features(),
-                    active_groups: active.n_active_groups(),
-                    elapsed_s: sw.elapsed_s(),
-                });
-            }
-            let done = gap <= tol_abs;
-            final_snap = Some(snap);
-            if done {
-                converged = true;
+            let snap = DualSnapshot::compute(pb, &beta, &rho, lambda);
+            let out =
+                state.gap_check(pb, lambda, epoch, rule, &mut beta, &mut rho, snap, &sw);
+            if out.converged {
                 epochs_done = epoch;
                 break;
             }
         }
 
         // ---- one cyclic pass over the (compacted) active groups
-        for &(g, s, e) in &compact.groups {
+        for &(g, s, e) in state.cols.groups() {
             let lg = pb.lipschitz[g];
             if lg == 0.0 {
                 continue;
@@ -273,8 +164,8 @@ pub fn solve_with_rule(
             // u = beta_g + X_g^T rho / L_g (restricted to active features),
             // streaming the packed columns.
             for (k, idx) in (s..e).enumerate() {
-                let j = compact.col_feat[idx];
-                block[k] = beta[j] + crate::linalg::ops::dot(compact.col(pb, idx), &rho) / lg;
+                let j = state.cols.feature(idx);
+                block[k] = beta[j] + state.cols.col_dot(pb, idx, &rho) / lg;
             }
             sgl_prox_inplace(
                 &mut block[..d],
@@ -283,44 +174,20 @@ pub fn solve_with_rule(
             );
             // Apply deltas and maintain rho.
             for (k, idx) in (s..e).enumerate() {
-                let j = compact.col_feat[idx];
+                let j = state.cols.feature(idx);
                 let delta = block[k] - beta[j];
                 if delta != 0.0 {
                     beta[j] = block[k];
-                    for (ri, xi) in rho.iter_mut().zip(compact.col(pb, idx)) {
-                        *ri -= delta * xi;
-                    }
+                    state.cols.col_axpy(pb, idx, -delta, &mut rho);
                 }
             }
         }
         epochs_done = epoch + 1;
     }
 
-    if !converged {
-        // Final gap evaluation so the caller sees the true terminal gap.
-        let snap = DualSnapshot::compute(pb, &beta, &rho, lambda);
-        gap = snap.gap;
-        gap_evals += 1;
-        converged = gap <= tol_abs;
-        final_snap = Some(snap);
-    }
-
-    // Hand the terminal dual point to the rule: sequential rules carry it
-    // to the next grid point of a warm-started path.
-    if let Some(snap) = &final_snap {
-        rule.on_solve_complete(pb, lambda, snap);
-    }
-
-    SolveResult {
-        beta,
-        gap,
-        epochs: epochs_done,
-        converged,
-        elapsed_s: sw.elapsed_s(),
-        active,
-        history,
-        gap_evals,
-    }
+    // Terminal gap (if the budget ran out) + the sequential-rule handoff.
+    state.finalize(pb, lambda, rule, &beta, &rho);
+    state.into_result(beta, epochs_done, sw.elapsed_s())
 }
 
 #[cfg(test)]

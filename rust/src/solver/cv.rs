@@ -5,7 +5,7 @@
 
 use super::path::{PathBatch, PathBatchJob, PathOptions};
 use super::problem::SglProblem;
-use crate::linalg::Matrix;
+use crate::linalg::Design;
 use crate::solver::groups::Groups;
 use crate::util::rng::Pcg;
 use std::sync::Arc;
@@ -52,7 +52,7 @@ pub struct CvResult {
 }
 
 /// Mean squared error of predictions `X β` against `y`.
-pub fn prediction_mse(x: &Matrix, y: &[f64], beta: &[f64]) -> f64 {
+pub fn prediction_mse<D: Design>(x: &D, y: &[f64], beta: &[f64]) -> f64 {
     let pred = x.matvec(beta);
     let n = y.len().max(1);
     y.iter().zip(&pred).map(|(a, b)| (a - b) * (a - b)).sum::<f64>() / n as f64
@@ -64,8 +64,8 @@ pub fn prediction_mse(x: &Matrix, y: &[f64], beta: &[f64]) -> f64 {
 /// spectral norms) are τ-independent, so they are done **once** and shared
 /// by every job through [`SglProblem::with_tau`] — previously each worker
 /// re-ran the power iterations.
-pub fn validate_tau_grid(
-    x: &Matrix,
+pub fn validate_tau_grid<D: Design>(
+    x: &D,
     y: &[f64],
     groups: &Groups,
     taus: &[f64],
@@ -127,6 +127,7 @@ pub fn validate_tau_grid(
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::linalg::Matrix;
     use crate::solver::cd::SolveOptions;
 
     fn planted_data(seed: u64) -> (Matrix, Vec<f64>, Groups) {

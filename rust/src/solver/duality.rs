@@ -2,12 +2,18 @@
 //! (paper Eq. 15), duality gap, and the GAP safe radius (Theorem 2).
 
 use super::problem::SglProblem;
-use crate::linalg::ops::{l2_norm_sq, l2_norm};
+use crate::linalg::ops::{l2_norm, l2_norm_sq};
+use crate::linalg::Design;
 use crate::norms::sgl::{omega, omega_dual};
 
 /// Primal objective `P_{λ,τ,w}(β) = ½‖ρ‖² + λΩ(β)` given the residual
 /// `ρ = y − Xβ` (kept up to date by the solvers; never recomputed here).
-pub fn primal_value(pb: &SglProblem, beta: &[f64], residual: &[f64], lambda: f64) -> f64 {
+pub fn primal_value<D: Design>(
+    pb: &SglProblem<D>,
+    beta: &[f64],
+    residual: &[f64],
+    lambda: f64,
+) -> f64 {
     0.5 * l2_norm_sq(residual) + lambda * omega(beta, &pb.groups, pb.tau, &pb.weights)
 }
 
@@ -51,15 +57,20 @@ impl DualSnapshot {
     ///
     /// `residual` must equal `y − Xβ`. Cost: one `Xᵀρ` product (`O(np)`)
     /// plus `O(p)` dual-norm work.
-    pub fn compute(pb: &SglProblem, beta: &[f64], residual: &[f64], lambda: f64) -> Self {
+    pub fn compute<D: Design>(
+        pb: &SglProblem<D>,
+        beta: &[f64],
+        residual: &[f64],
+        lambda: f64,
+    ) -> Self {
         let xt_rho = pb.x.tmatvec(residual);
         Self::compute_with_xt_rho(pb, beta, residual, &xt_rho, lambda)
     }
 
     /// Variant for callers that already hold `Xᵀρ` (the XLA engine and the
     /// perf-tuned CD loop reuse buffers).
-    pub fn compute_with_xt_rho(
-        pb: &SglProblem,
+    pub fn compute_with_xt_rho<D: Design>(
+        pb: &SglProblem<D>,
         beta: &[f64],
         residual: &[f64],
         xt_rho: &[f64],
@@ -98,14 +109,14 @@ impl DualSnapshot {
 }
 
 /// Convenience: duality gap for given `β` (recomputes the residual).
-pub fn duality_gap(pb: &SglProblem, beta: &[f64], lambda: f64) -> f64 {
+pub fn duality_gap<D: Design>(pb: &SglProblem<D>, beta: &[f64], lambda: f64) -> f64 {
     let xb = pb.x.matvec(beta);
     let residual: Vec<f64> = pb.y.iter().zip(&xb).map(|(y, v)| y - v).collect();
     DualSnapshot::compute(pb, beta, &residual, lambda).gap
 }
 
 /// Sanity helper used across tests: `‖y − Xβ‖` from scratch.
-pub fn residual_norm(pb: &SglProblem, beta: &[f64]) -> f64 {
+pub fn residual_norm<D: Design>(pb: &SglProblem<D>, beta: &[f64]) -> f64 {
     let xb = pb.x.matvec(beta);
     let r: Vec<f64> = pb.y.iter().zip(&xb).map(|(y, v)| y - v).collect();
     l2_norm(&r)

@@ -3,8 +3,10 @@
 //! The paper's Algorithm 2 is un-accelerated ISTA-BC; the GAP safe
 //! machinery is solver-agnostic (any primal sequence `β_k` gives a dual
 //! point by Eq. 15), so acceleration composes freely. This is the
-//! Beck–Teboulle momentum scheme on the masked full-gradient iteration of
-//! [`super::ista`], with two standard safeguards:
+//! Beck–Teboulle momentum scheme on the compacted full-gradient iteration
+//! of [`super::ista`] (same shared active-set core, same
+//! `on_solve_complete` handoff for sequential rules), with two standard
+//! safeguards:
 //!
 //! - **screening restart** — eliminating variables moves the iterate
 //!   discontinuously, so the momentum sequence restarts whenever the
@@ -12,112 +14,98 @@
 //! - **function-value restart** — if the primal objective increases
 //!   (possible under momentum), restart (O'Donoghue & Candès).
 
+use super::active_set::ScreenState;
 use super::duality::DualSnapshot;
 use super::ista::global_lipschitz;
 use super::problem::SglProblem;
+use crate::linalg::Design;
 use crate::norms::prox::sgl_prox_inplace;
-use crate::screening::{apply_sphere, make_rule, ActiveSet};
-use crate::solver::cd::{CheckEvent, SolveOptions, SolveResult};
+use crate::screening::{make_rule, ScreeningRule};
+use crate::solver::cd::{SolveOptions, SolveResult};
 use crate::util::timer::Stopwatch;
 
 /// FISTA solve at a single `λ`. Interface mirrors `cd::solve`.
-pub fn solve_fista(
-    pb: &SglProblem,
+pub fn solve_fista<D: Design>(
+    pb: &SglProblem<D>,
     lambda: f64,
     beta0: Option<&[f64]>,
     opts: &SolveOptions,
 ) -> SolveResult {
+    let mut rule = make_rule(opts.rule, pb);
+    solve_fista_with_rule(pb, lambda, beta0, opts, rule.as_mut())
+}
+
+/// FISTA with a caller-provided rule instance (path solves construct the
+/// rule once and carry it across the grid, exactly like `cd`).
+pub fn solve_fista_with_rule<D: Design>(
+    pb: &SglProblem<D>,
+    lambda: f64,
+    beta0: Option<&[f64]>,
+    opts: &SolveOptions,
+    rule: &mut dyn ScreeningRule<D>,
+) -> SolveResult {
+    assert!(lambda > 0.0, "lambda must be positive");
     let sw = Stopwatch::start();
     let p = pb.p();
-    let tol_abs = opts.tol * crate::linalg::ops::l2_norm_sq(&pb.y).max(f64::MIN_POSITIVE);
     let inv_l = 1.0 / global_lipschitz(pb).max(1e-300);
-    let mut rule = make_rule(opts.rule, pb);
+    let mut state = ScreenState::new(pb, opts);
 
     let mut beta = beta0.map(|b| b.to_vec()).unwrap_or_else(|| vec![0.0; p]);
     let mut z = beta.clone(); // extrapolated point
+    let mut beta_next = beta.clone();
     let mut t_k = 1.0_f64;
-    let mut active = ActiveSet::full(&pb.groups);
-    let mut history = Vec::new();
-    let mut gap = f64::INFINITY;
-    let mut gap_evals = 0usize;
-    let mut converged = false;
     let mut epochs_done = 0usize;
     let mut rho = vec![0.0; pb.n()];
     let mut xt_rho = vec![0.0; p];
     let mut prev_obj = f64::INFINITY;
-
-    let objective = |pbv: &SglProblem, b: &[f64], r: &[f64]| {
-        crate::solver::duality::primal_value(pbv, b, r, lambda)
-    };
-    let residual_of = |pbv: &SglProblem, b: &[f64], out: &mut Vec<f64>| {
-        pbv.x.matvec_into(b, out);
-        for (ri, yi) in out.iter_mut().zip(&pbv.y) {
-            *ri = yi - *ri;
-        }
-    };
+    // Scratch block reused across groups/epochs.
+    let max_group = (0..pb.n_groups()).map(|g| pb.groups.size(g)).max().unwrap_or(0);
+    let mut block = vec![0.0; max_group];
 
     for epoch in 0..opts.max_epochs {
         if epoch % opts.fce == 0 {
-            residual_of(pb, &beta, &mut rho);
+            state.cols.residual_into(pb, &beta, &mut rho);
             let snap = DualSnapshot::compute(pb, &beta, &rho, lambda);
-            gap = snap.gap;
-            gap_evals += 1;
-            if let Some(sphere) = rule.sphere(pb, lambda, &snap) {
-                let before = active.n_active_features();
-                let out = apply_sphere(pb, &sphere, &mut active, &mut beta, &mut rho);
-                if active.n_active_features() < before {
-                    // Screening restart: the extrapolation history is stale.
-                    z.copy_from_slice(&beta);
-                    t_k = 1.0;
-                }
-                if out.beta_changed && gap <= tol_abs {
-                    let snap2 = DualSnapshot::compute(pb, &beta, &rho, lambda);
-                    gap = snap2.gap;
-                    gap_evals += 1;
-                }
+            let out =
+                state.gap_check(pb, lambda, epoch, rule, &mut beta, &mut rho, snap, &sw);
+            if out.features_screened > 0 {
+                // Screening restart: the extrapolation history is stale,
+                // and the scratch iterates must drop the dead coordinates
+                // (apply_sphere zeroed them in `beta`).
+                z.copy_from_slice(&beta);
+                beta_next.copy_from_slice(&beta);
+                t_k = 1.0;
+                prev_obj = f64::INFINITY;
             }
-            if opts.record_history {
-                history.push(CheckEvent {
-                    epoch,
-                    gap,
-                    radius: snap.radius,
-                    active_features: active.n_active_features(),
-                    active_groups: active.n_active_groups(),
-                    elapsed_s: sw.elapsed_s(),
-                });
-            }
-            if gap <= tol_abs {
-                converged = true;
+            if out.converged {
                 epochs_done = epoch;
                 break;
             }
         }
 
-        // Gradient step at the extrapolated point z.
-        residual_of(pb, &z, &mut rho);
-        pb.x.tmatvec_into(&rho, &mut xt_rho);
-        let mut beta_next = vec![0.0; p];
-        for (g, a, b) in pb.groups.iter() {
-            if !active.group[g] {
-                continue;
+        // Gradient step at the extrapolated point z, over the compacted
+        // active columns only.
+        state.cols.residual_into(pb, &z, &mut rho);
+        state.cols.xt_into(pb, &rho, &mut xt_rho);
+        for &(g, s, e) in state.cols.groups() {
+            let d = e - s;
+            for (k, idx) in (s..e).enumerate() {
+                let j = state.cols.feature(idx);
+                block[k] = z[j] + xt_rho[j] * inv_l;
             }
-            let d = b - a;
-            let mut block: Vec<f64> = (a..b)
-                .map(|j| if active.feature[j] { z[j] + xt_rho[j] * inv_l } else { 0.0 })
-                .collect();
             sgl_prox_inplace(
                 &mut block[..d],
                 pb.tau * lambda * inv_l,
                 (1.0 - pb.tau) * pb.weights[g] * lambda * inv_l,
             );
-            for (k, j) in (a..b).enumerate() {
-                beta_next[j] = if active.feature[j] { block[k] } else { 0.0 };
+            for (k, idx) in (s..e).enumerate() {
+                beta_next[state.cols.feature(idx)] = block[k];
             }
         }
 
         // Function-value restart check.
-        residual_of(pb, &beta_next, &mut rho);
-        let obj = objective(pb, &beta_next, &rho);
+        state.cols.residual_into(pb, &beta_next, &mut rho);
+        let obj = crate::solver::duality::primal_value(pb, &beta_next, &rho, lambda);
         if obj > prev_obj {
             // Restart: fall back to a plain ISTA step from beta.
             t_k = 1.0;
@@ -128,35 +116,24 @@ pub fn solve_fista(
         }
         prev_obj = obj;
 
-        // Momentum update.
+        // Momentum update on the active coordinates (screened ones are
+        // zero in beta, beta_next and z alike).
         let t_next = 0.5 * (1.0 + (1.0 + 4.0 * t_k * t_k).sqrt());
         let coef = (t_k - 1.0) / t_next;
-        for j in 0..p {
+        for k in 0..state.cols.n_active() {
+            let j = state.cols.feature(k);
             z[j] = beta_next[j] + coef * (beta_next[j] - beta[j]);
+            beta[j] = beta_next[j];
         }
-        beta = beta_next;
         t_k = t_next;
         epochs_done = epoch + 1;
     }
 
-    if !converged {
-        residual_of(pb, &beta, &mut rho);
-        let snap = DualSnapshot::compute(pb, &beta, &rho, lambda);
-        gap = snap.gap;
-        gap_evals += 1;
-        converged = gap <= tol_abs;
-    }
-
-    SolveResult {
-        beta,
-        gap,
-        epochs: epochs_done,
-        converged,
-        elapsed_s: sw.elapsed_s(),
-        active,
-        history,
-        gap_evals,
-    }
+    // `rho` may hold the residual of z/beta_next; finalize() recomputes
+    // the terminal gap from `beta` only when convergence is still open.
+    state.cols.residual_into(pb, &beta, &mut rho);
+    state.finalize(pb, lambda, rule, &beta, &rho);
+    state.into_result(beta, epochs_done, sw.elapsed_s())
 }
 
 #[cfg(test)]

@@ -1,4 +1,4 @@
-//! Full proximal-gradient (ISTA) solver with masked active sets.
+//! Full proximal-gradient (ISTA) solver on the shared active-set core.
 //!
 //! This is the *parallel-friendly* variant of Algorithm 2: instead of a
 //! cyclic sweep with incremental residual updates, each iteration takes a
@@ -8,17 +8,28 @@
 //! AOT-compiled XLA artifact (`python/compile/model.py:ista_epoch`): fixed
 //! tensor shapes, masking instead of index lists. The native version here is
 //! the oracle the XLA engine is integration-tested against.
+//!
+//! Since PR 2 the native ISTA drives the same active-set core as CD
+//! ([`crate::solver::active_set`]): the gradient sweep and the residual
+//! recompute stream the *compacted* surviving columns (`O(n·p_active)`
+//! dense, `O(nnz_active)` CSC, vs. the former full `O(n·p)` per epoch),
+//! and the terminal dual point is handed to sequential rules through
+//! `on_solve_complete` — closing the solver-symmetry gap left by PR 1.
+//! Gap checks still evaluate the full `Xᵀρ`: the dual scaling `Ω^D(Xᵀρ)`
+//! of Eq. 15 needs every feature, screened or not.
 
+use super::active_set::ScreenState;
 use super::duality::DualSnapshot;
 use super::problem::SglProblem;
 use crate::linalg::spectral::power_iteration;
+use crate::linalg::Design;
 use crate::norms::prox::sgl_prox_inplace;
-use crate::screening::{apply_sphere, make_rule, ActiveSet};
-use crate::solver::cd::{CheckEvent, SolveOptions, SolveResult};
+use crate::screening::{make_rule, ScreeningRule};
+use crate::solver::cd::{SolveOptions, SolveResult};
 use crate::util::timer::Stopwatch;
 
 /// Global Lipschitz constant `‖X‖₂²` (top eigenvalue of `XᵀX`).
-pub fn global_lipschitz(pb: &SglProblem) -> f64 {
+pub fn global_lipschitz<D: Design>(pb: &SglProblem<D>) -> f64 {
     let x = &pb.x;
     power_iteration(
         pb.p(),
@@ -34,18 +45,30 @@ pub fn global_lipschitz(pb: &SglProblem) -> f64 {
 
 /// ISTA solve at a single `λ` with masked screening. Mirrors
 /// `solver::cd::solve`'s interface and result type.
-pub fn solve_ista(
-    pb: &SglProblem,
+pub fn solve_ista<D: Design>(
+    pb: &SglProblem<D>,
     lambda: f64,
     beta0: Option<&[f64]>,
     opts: &SolveOptions,
 ) -> SolveResult {
+    let mut rule = make_rule(opts.rule, pb);
+    solve_ista_with_rule(pb, lambda, beta0, opts, rule.as_mut())
+}
+
+/// ISTA with a caller-provided rule instance (path solves construct the
+/// rule once and carry it across the grid, exactly like `cd`).
+pub fn solve_ista_with_rule<D: Design>(
+    pb: &SglProblem<D>,
+    lambda: f64,
+    beta0: Option<&[f64]>,
+    opts: &SolveOptions,
+    rule: &mut dyn ScreeningRule<D>,
+) -> SolveResult {
+    assert!(lambda > 0.0, "lambda must be positive");
     let sw = Stopwatch::start();
     let p = pb.p();
-    // Relative-to-||y||^2 stopping threshold (see SolveOptions::tol).
-    let tol_abs = opts.tol * crate::linalg::ops::l2_norm_sq(&pb.y).max(f64::MIN_POSITIVE);
     let l_global = global_lipschitz(pb).max(1e-300);
-    let mut rule = make_rule(opts.rule, pb);
+    let mut state = ScreenState::new(pb, opts);
 
     let mut beta = beta0.map(|b| b.to_vec()).unwrap_or_else(|| vec![0.0; p]);
     let mut rho = pb.y.clone();
@@ -55,101 +78,59 @@ pub fn solve_ista(
             *r -= v;
         }
     }
-    let mut active = ActiveSet::full(&pb.groups);
-    let mut history = Vec::new();
-    let mut gap = f64::INFINITY;
-    let mut gap_evals = 0usize;
-    let mut converged = false;
     let mut epochs_done = 0usize;
     let mut xt_rho = vec![0.0; p];
-    // Scratch block reused across groups/epochs (was a per-group alloc).
+    // Scratch block reused across groups/epochs.
     let max_group = (0..pb.n_groups()).map(|g| pb.groups.size(g)).max().unwrap_or(0);
     let mut block = vec![0.0; max_group];
 
     for epoch in 0..opts.max_epochs {
         if epoch % opts.fce == 0 {
+            // Full correlation vector: the dual scaling needs every
+            // feature, so gap checks cost one full Xᵀρ by design.
             pb.x.tmatvec_into(&rho, &mut xt_rho);
             let snap = DualSnapshot::compute_with_xt_rho(pb, &beta, &rho, &xt_rho, lambda);
-            gap = snap.gap;
-            gap_evals += 1;
-            if let Some(sphere) = rule.sphere(pb, lambda, &snap) {
-                let out = apply_sphere(pb, &sphere, &mut active, &mut beta, &mut rho);
-                if out.beta_changed && gap <= tol_abs {
-                    let snap2 = DualSnapshot::compute(pb, &beta, &rho, lambda);
-                    gap = snap2.gap;
-                    gap_evals += 1;
-                }
-            }
-            if opts.record_history {
-                history.push(CheckEvent {
-                    epoch,
-                    gap,
-                    radius: snap.radius,
-                    active_features: active.n_active_features(),
-                    active_groups: active.n_active_groups(),
-                    elapsed_s: sw.elapsed_s(),
-                });
-            }
-            if gap <= tol_abs {
-                converged = true;
+            let out =
+                state.gap_check(pb, lambda, epoch, rule, &mut beta, &mut rho, snap, &sw);
+            if out.converged {
                 epochs_done = epoch;
                 break;
             }
         }
 
-        // u = beta + X^T rho / L on active features, then the separable prox.
-        pb.x.tmatvec_into(&rho, &mut xt_rho);
+        // u = beta + X^T rho / L on the compacted active columns, then the
+        // separable prox group by group.
+        state.cols.xt_into(pb, &rho, &mut xt_rho);
         let mut changed = false;
-        for (g, a, b) in pb.groups.iter() {
-            if !active.group[g] {
-                continue;
-            }
-            // Masked gradient step into the reusable scratch block.
-            let d = b - a;
-            for (k, j) in (a..b).enumerate() {
-                block[k] =
-                    if active.feature[j] { beta[j] + xt_rho[j] / l_global } else { 0.0 };
+        for &(g, s, e) in state.cols.groups() {
+            let d = e - s;
+            for (k, idx) in (s..e).enumerate() {
+                let j = state.cols.feature(idx);
+                block[k] = beta[j] + xt_rho[j] / l_global;
             }
             sgl_prox_inplace(
                 &mut block[..d],
                 pb.tau * lambda / l_global,
                 (1.0 - pb.tau) * pb.weights[g] * lambda / l_global,
             );
-            for (k, j) in (a..b).enumerate() {
-                let new = if active.feature[j] { block[k] } else { 0.0 };
-                if new != beta[j] {
-                    beta[j] = new;
+            for (k, idx) in (s..e).enumerate() {
+                let j = state.cols.feature(idx);
+                if block[k] != beta[j] {
+                    beta[j] = block[k];
                     changed = true;
                 }
             }
         }
-        // Full residual recompute (matches the artifact's dataflow).
+        // Full residual recompute over the active columns (matches the
+        // artifact's dataflow; screened coordinates are zero).
         if changed {
-            let xb = pb.x.matvec(&beta);
-            for (r, (y, v)) in rho.iter_mut().zip(pb.y.iter().zip(&xb)) {
-                *r = y - v;
-            }
+            state.cols.residual_into(pb, &beta, &mut rho);
         }
         epochs_done = epoch + 1;
     }
 
-    if !converged {
-        let snap = DualSnapshot::compute(pb, &beta, &rho, lambda);
-        gap = snap.gap;
-        gap_evals += 1;
-        converged = gap <= tol_abs;
-    }
-
-    SolveResult {
-        beta,
-        gap,
-        epochs: epochs_done,
-        converged,
-        elapsed_s: sw.elapsed_s(),
-        active,
-        history,
-        gap_evals,
-    }
+    state.finalize(pb, lambda, rule, &beta, &rho);
+    state.into_result(beta, epochs_done, sw.elapsed_s())
 }
 
 #[cfg(test)]

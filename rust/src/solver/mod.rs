@@ -1,18 +1,22 @@
 //! The Sparse-Group Lasso solver stack:
 //!
 //! - [`groups`] — feature partitions;
-//! - [`problem`] — problem instances + precomputations + `λ_max` (Eq. 22);
+//! - [`problem`] — problem instances + precomputations + `λ_max` (Eq. 22),
+//!   generic over the [`crate::linalg::Design`] backend (dense or CSC);
 //! - [`duality`] — primal/dual objectives, dual scaling (Eq. 15), GAP
 //!   radius (Thm. 2);
+//! - [`active_set`] — the shared active-set core: backend-generic column
+//!   compaction, gap-check/screening plumbing, terminal-dual handoff;
 //! - [`cd`] — ISTA-BC block coordinate descent (Algorithm 2);
-//! - [`ista`] — masked full proximal-gradient (mirrors the XLA artifact);
+//! - [`ista`] — full proximal-gradient (mirrors the XLA artifact);
 //! - [`fista`] — accelerated variant with screening/function restarts;
-//! - [`path`] — warm-started λ-path (§7.1);
+//! - [`path`] — warm-started λ-path (§7.1), solver-selectable;
 //! - [`cv`] — `(λ, τ)` grid validation (Fig. 3a);
 //! - [`elastic_net`] — App. D reformulation;
 //! - [`strong`] — the *unsafe* sequential strong rules baseline with KKT
 //!   recovery (the contrast the paper draws in §1/§7).
 
+pub mod active_set;
 pub mod cd;
 pub mod cv;
 pub mod duality;
@@ -23,3 +27,48 @@ pub mod ista;
 pub mod path;
 pub mod problem;
 pub mod strong;
+
+/// Which native solver runs a single-λ solve. All three are generic over
+/// the design backend and drive the shared [`active_set`] core, so the
+/// screening rules (including the sequential carry of `GapSafeSeq`)
+/// behave identically across them.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SolverKind {
+    /// Block coordinate descent (paper Algorithm 2) — the default.
+    Cd,
+    /// Full proximal gradient.
+    Ista,
+    /// Accelerated proximal gradient with restarts.
+    Fista,
+}
+
+impl SolverKind {
+    pub fn name(self) -> &'static str {
+        match self {
+            SolverKind::Cd => "cd",
+            SolverKind::Ista => "ista",
+            SolverKind::Fista => "fista",
+        }
+    }
+
+    pub fn all() -> [SolverKind; 3] {
+        [SolverKind::Cd, SolverKind::Ista, SolverKind::Fista]
+    }
+
+    pub fn from_name(s: &str) -> Option<SolverKind> {
+        Self::all().into_iter().find(|k| k.name() == s)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::SolverKind;
+
+    #[test]
+    fn solver_kind_round_trip() {
+        for k in SolverKind::all() {
+            assert_eq!(SolverKind::from_name(k.name()), Some(k));
+        }
+        assert_eq!(SolverKind::from_name("bogus"), None);
+    }
+}

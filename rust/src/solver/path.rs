@@ -8,7 +8,9 @@
 //! amortize, and the sequential rule ([`crate::screening::RuleKind::GapSafeSeq`])
 //! receives each solve's terminal dual point through
 //! `ScreeningRule::on_solve_complete` so it can screen at epoch 0 of the
-//! next grid point.
+//! next grid point. Since all three native solvers drive the shared
+//! active-set core, the path engine is solver-selectable
+//! ([`solve_path_with`] + [`SolverKind`]) and backend-generic.
 //!
 //! [`PathBatch`] fans *independent* path solves (CV folds, rule/tolerance
 //! comparison sweeps, multi-τ sweeps) across worker threads — within a
@@ -16,7 +18,9 @@
 //! lives at the between-paths level, where it is embarrassingly clean.
 
 use super::cd::{solve_with_rule, SolveOptions, SolveResult};
-use super::problem::SglProblem;
+use super::problem::{lambda_grid, SglProblem};
+use super::SolverKind;
+use crate::linalg::{Design, Matrix};
 use crate::screening::make_rule;
 use crate::util::pool::parallel_map;
 use crate::util::timer::Stopwatch;
@@ -69,16 +73,33 @@ impl PathResult {
     }
 }
 
-/// Solve the full path with warm starts.
-pub fn solve_path(pb: &SglProblem, opts: &PathOptions) -> PathResult {
+/// Solve the full path with warm starts (CD inner solver).
+pub fn solve_path<D: Design>(pb: &SglProblem<D>, opts: &PathOptions) -> PathResult {
     let lambda_max = pb.lambda_max();
-    let lambdas = SglProblem::lambda_grid(lambda_max, opts.delta, opts.t_count);
+    let lambdas = lambda_grid(lambda_max, opts.delta, opts.t_count);
     solve_path_on_grid(pb, &lambdas, opts)
 }
 
-/// Solve on an explicit λ grid (must be non-increasing for warm starts to
-/// make sense; this is asserted).
-pub fn solve_path_on_grid(pb: &SglProblem, lambdas: &[f64], opts: &PathOptions) -> PathResult {
+/// Solve on an explicit λ grid with the CD inner solver (must be
+/// non-increasing for warm starts to make sense; this is asserted).
+pub fn solve_path_on_grid<D: Design>(
+    pb: &SglProblem<D>,
+    lambdas: &[f64],
+    opts: &PathOptions,
+) -> PathResult {
+    solve_path_with(pb, lambdas, opts, SolverKind::Cd)
+}
+
+/// Solve an explicit non-increasing λ grid with the chosen inner solver.
+/// One rule instance is built per path and carried across grid points —
+/// with `GapSafeSeq` this is what makes epoch-0 screening fire for CD,
+/// ISTA and FISTA alike.
+pub fn solve_path_with<D: Design>(
+    pb: &SglProblem<D>,
+    lambdas: &[f64],
+    opts: &PathOptions,
+    solver: SolverKind,
+) -> PathResult {
     for w in lambdas.windows(2) {
         assert!(w[1] <= w[0] * (1.0 + 1e-12), "lambda grid must be non-increasing");
     }
@@ -87,7 +108,25 @@ pub fn solve_path_on_grid(pb: &SglProblem, lambdas: &[f64], opts: &PathOptions) 
     let mut results = Vec::with_capacity(lambdas.len());
     let mut warm: Option<Vec<f64>> = None;
     for &lambda in lambdas {
-        let res = solve_with_rule(pb, lambda, warm.as_deref(), &opts.solve, rule.as_mut());
+        let res = match solver {
+            SolverKind::Cd => {
+                solve_with_rule(pb, lambda, warm.as_deref(), &opts.solve, rule.as_mut())
+            }
+            SolverKind::Ista => super::ista::solve_ista_with_rule(
+                pb,
+                lambda,
+                warm.as_deref(),
+                &opts.solve,
+                rule.as_mut(),
+            ),
+            SolverKind::Fista => super::fista::solve_fista_with_rule(
+                pb,
+                lambda,
+                warm.as_deref(),
+                &opts.solve,
+                rule.as_mut(),
+            ),
+        };
         warm = Some(res.beta.clone());
         results.push(res);
     }
@@ -95,10 +134,10 @@ pub fn solve_path_on_grid(pb: &SglProblem, lambdas: &[f64], opts: &PathOptions) 
 }
 
 /// One independent λ-path solve inside a [`PathBatch`].
-pub struct PathBatchJob {
+pub struct PathBatchJob<D: Design = Matrix> {
     /// Problem instance. Shared via `Arc` so fan-outs over the same design
     /// (rule sweeps, tolerance sweeps) pay for a single copy of `X`.
-    pub pb: Arc<SglProblem>,
+    pub pb: Arc<SglProblem<D>>,
     /// Explicit non-increasing grid; `None` derives the geometric grid of
     /// `opts` from `pb.lambda_max()`.
     pub lambdas: Option<Vec<f64>>,
@@ -118,17 +157,22 @@ pub struct PathBatchJob {
 /// `benches/bench_path_batch.rs`. Results are returned in job order, and
 /// are bit-identical to running the jobs one after another — threading
 /// never changes any solve's arithmetic, only the wall-clock.
-#[derive(Default)]
-pub struct PathBatch {
-    jobs: Vec<PathBatchJob>,
+pub struct PathBatch<D: Design = Matrix> {
+    jobs: Vec<PathBatchJob<D>>,
 }
 
-impl PathBatch {
-    pub fn new() -> Self {
+impl<D: Design> Default for PathBatch<D> {
+    fn default() -> Self {
         PathBatch { jobs: Vec::new() }
     }
+}
 
-    pub fn push(&mut self, job: PathBatchJob) {
+impl<D: Design> PathBatch<D> {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn push(&mut self, job: PathBatchJob<D>) {
         self.jobs.push(job);
     }
 
@@ -140,7 +184,7 @@ impl PathBatch {
         self.jobs.is_empty()
     }
 
-    pub fn jobs(&self) -> &[PathBatchJob] {
+    pub fn jobs(&self) -> &[PathBatchJob<D>] {
         &self.jobs
     }
 
@@ -150,11 +194,11 @@ impl PathBatch {
     pub fn run(&self, threads: usize) -> Vec<PathResult> {
         parallel_map(self.jobs.len(), threads, |i| {
             let job = &self.jobs[i];
-            let tau_clone: Option<SglProblem> = job
+            let tau_clone: Option<SglProblem<D>> = job
                 .tau_override
                 .filter(|&tau| tau != job.pb.tau)
                 .map(|tau| job.pb.with_tau(tau));
-            let pb: &SglProblem = match &tau_clone {
+            let pb: &SglProblem<D> = match &tau_clone {
                 Some(p) => p,
                 None => job.pb.as_ref(),
             };
@@ -169,7 +213,6 @@ impl PathBatch {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::linalg::Matrix;
     use crate::screening::RuleKind;
     use crate::solver::groups::Groups;
     use crate::util::rng::Pcg;
@@ -322,6 +365,38 @@ mod tests {
     }
 
     #[test]
+    fn ista_and_fista_paths_follow_the_sequential_rule() {
+        // Solver symmetry: the carried dual point must produce the same
+        // screened-path behavior whichever inner solver runs the grid.
+        let pb = planted_problem(13);
+        let lambdas = lambda_grid(pb.lambda_max(), 1.0, 5);
+        let opts = PathOptions {
+            delta: 1.0,
+            t_count: lambdas.len(),
+            solve: SolveOptions {
+                rule: RuleKind::GapSafeSeq,
+                tol: 1e-8,
+                max_epochs: 500_000,
+                record_history: true,
+                ..Default::default()
+            },
+        };
+        for solver in [SolverKind::Ista, SolverKind::Fista] {
+            let path = solve_path_with(&pb, &lambdas, &opts, solver);
+            assert!(path.all_converged(), "{solver:?}");
+            // Epoch-0 screening from the carried dual point fires for the
+            // full-gradient solvers exactly as for CD.
+            let mut screened_at_zero = 0usize;
+            for res in path.results.iter().skip(1) {
+                let first = res.history.first().expect("history recorded");
+                assert_eq!(first.epoch, 0, "{solver:?}");
+                screened_at_zero += pb.p() - first.active_features;
+            }
+            assert!(screened_at_zero > 0, "{solver:?}: carried dual never screened");
+        }
+    }
+
+    #[test]
     fn batch_matches_sequential_loop_across_thread_counts() {
         let pb = Arc::new(random_problem(7));
         let lambdas = SglProblem::lambda_grid(pb.lambda_max(), 2.0, 6);
@@ -359,7 +434,7 @@ mod tests {
         }
         // And each job equals the plain sequential engine run directly.
         for (job, got) in batch.jobs().iter().zip(&serial) {
-            let expect = solve_path_on_grid(&job.pb, &lambdas, &job.opts);
+            let expect = solve_path_on_grid(job.pb.as_ref(), &lambdas, &job.opts);
             for (ra, rb) in expect.results.iter().zip(&got.results) {
                 assert_eq!(ra.beta, rb.beta, "{}", job.label);
             }

@@ -3,17 +3,22 @@
 //! screening rule needs: column norms `‖X_j‖`, block spectral norms
 //! `‖X_g‖₂`, block Lipschitz constants `L_g = ‖X_g‖₂²`, and `λ_max`
 //! (Eq. 22).
+//!
+//! The instance is generic over the [`Design`] backend: `SglProblem`
+//! (no parameter) is the dense default, `SglProblem<CscMatrix>` the
+//! sparse instantiation. Everything downstream — solvers, screening
+//! rules, the path engine — is generic over the same parameter, so the
+//! whole stack runs unchanged on either backend.
 
 use super::groups::Groups;
-use crate::linalg::spectral::spectral_norm;
-use crate::linalg::Matrix;
+use crate::linalg::{Design, Matrix};
 use crate::norms::sgl::{omega_dual, omega_dual_argmax};
 
 /// An SGL problem `min_β ½‖y − Xβ‖² + λ Ω_{τ,w}(β)` minus the choice of
 /// `λ` (solvers take `λ` per call so one instance serves a whole path).
 #[derive(Clone, Debug)]
-pub struct SglProblem {
-    pub x: Matrix,
+pub struct SglProblem<D: Design = Matrix> {
+    pub x: D,
     pub y: Vec<f64>,
     pub groups: Groups,
     /// Mixing parameter `τ ∈ [0, 1]`: 1 = Lasso, 0 = Group-Lasso (Rmk. 3).
@@ -28,16 +33,16 @@ pub struct SglProblem {
     pub lipschitz: Vec<f64>,
 }
 
-impl SglProblem {
+impl<D: Design> SglProblem<D> {
     /// Build a problem with the paper's default weights `w_g = sqrt(n_g)`.
-    pub fn new(x: Matrix, y: Vec<f64>, groups: Groups, tau: f64) -> Self {
+    pub fn new(x: D, y: Vec<f64>, groups: Groups, tau: f64) -> Self {
         let w = groups.sqrt_size_weights();
         Self::with_weights(x, y, groups, tau, w)
     }
 
     /// Build with explicit weights.
     pub fn with_weights(
-        x: Matrix,
+        x: D,
         y: Vec<f64>,
         groups: Groups,
         tau: f64,
@@ -52,10 +57,8 @@ impl SglProblem {
             "tau = 0 with a zero weight is excluded (Omega not a norm)"
         );
         let col_norms = x.col_norms();
-        let group_spectral_norms: Vec<f64> = groups
-            .iter()
-            .map(|(_, a, b)| spectral_norm(&x, a, b, 1e-12, 1000))
-            .collect();
+        let group_spectral_norms: Vec<f64> =
+            groups.iter().map(|(_, a, b)| x.block_spectral_norm(a, b)).collect();
         let lipschitz: Vec<f64> = group_spectral_norms.iter().map(|s| s * s).collect();
         SglProblem { x, y, groups, tau, weights, col_norms, group_spectral_norms, lipschitz }
     }
@@ -96,23 +99,33 @@ impl SglProblem {
         p.tau = tau;
         p
     }
+}
 
-    /// The geometric λ grid of §7.1: `λ_t = λ_max · 10^{−δ t / (T−1)}`,
-    /// `t = 0..T-1`.
+/// The geometric λ grid of §7.1: `λ_t = λ_max · 10^{−δ t / (T−1)}`,
+/// `t = 0..T-1`.
+pub fn lambda_grid(lambda_max: f64, delta: f64, t_count: usize) -> Vec<f64> {
+    assert!(t_count >= 1);
+    if t_count == 1 {
+        return vec![lambda_max];
+    }
+    (0..t_count)
+        .map(|t| lambda_max * 10f64.powf(-delta * t as f64 / (t_count - 1) as f64))
+        .collect()
+}
+
+impl SglProblem {
+    /// See [`lambda_grid`] (kept as an associated function for existing
+    /// call sites; the free function avoids pinning the backend parameter
+    /// in generic code).
     pub fn lambda_grid(lambda_max: f64, delta: f64, t_count: usize) -> Vec<f64> {
-        assert!(t_count >= 1);
-        if t_count == 1 {
-            return vec![lambda_max];
-        }
-        (0..t_count)
-            .map(|t| lambda_max * 10f64.powf(-delta * t as f64 / (t_count - 1) as f64))
-            .collect()
+        lambda_grid(lambda_max, delta, t_count)
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::linalg::CscMatrix;
     use crate::norms::sgl::omega;
     use crate::util::rng::Pcg;
 
@@ -138,6 +151,24 @@ mod tests {
                 pb.col_norms[a..b].iter().fold(0.0_f64, |m, &c| m.max(c * c));
             assert!(pb.lipschitz[g] >= max_col - 1e-9);
         }
+    }
+
+    #[test]
+    fn csc_instantiation_matches_dense_precomputations() {
+        let pb = random_problem(12, &[3, 3, 3], 0.4, 11);
+        let sparse = SglProblem::new(
+            CscMatrix::from_dense(&pb.x),
+            pb.y.clone(),
+            pb.groups.clone(),
+            pb.tau,
+        );
+        for (a, b) in pb.col_norms.iter().zip(&sparse.col_norms) {
+            assert!((a - b).abs() < 1e-10);
+        }
+        for (a, b) in pb.lipschitz.iter().zip(&sparse.lipschitz) {
+            assert!((a - b).abs() < 1e-8 * a.max(1.0));
+        }
+        assert!((pb.lambda_max() - sparse.lambda_max()).abs() < 1e-9);
     }
 
     #[test]

@@ -1,0 +1,177 @@
+//! Cross-backend and cross-solver equivalence properties.
+//!
+//! The `Design` abstraction promises that the dense and CSC backends are
+//! *the same solver* on the same data — identical screening decisions,
+//! objectives agreeing to rounding error — and that ISTA/FISTA driving
+//! the shared active-set core follow the sequential GAP-safe rule exactly
+//! like CD does. These tests pin both promises on planted random
+//! problems across several seeds.
+
+use sgl::data::sparse::{self, SparseSyntheticConfig};
+use sgl::data::synthetic::{generate, SyntheticConfig};
+use sgl::linalg::{CscMatrix, Design, Matrix};
+use sgl::norms::sgl::omega;
+use sgl::screening::RuleKind;
+use sgl::solver::cd::{solve, SolveOptions};
+use sgl::solver::path::{solve_path_on_grid, solve_path_with, PathOptions};
+use sgl::solver::problem::{lambda_grid, SglProblem};
+use sgl::solver::SolverKind;
+
+/// A sparse planted problem with unit-norm `y`, in both backends.
+fn backend_pair(seed: u64) -> (SglProblem<CscMatrix>, SglProblem<Matrix>) {
+    let cfg = SparseSyntheticConfig {
+        n: 40,
+        n_groups: 20,
+        group_size: 4,
+        density: 0.08,
+        gamma1: 4,
+        gamma2: 2,
+        seed,
+        ..Default::default()
+    };
+    let d = sparse::generate(&cfg);
+    let y_norm = d.y.iter().map(|v| v * v).sum::<f64>().sqrt().max(1e-300);
+    let y: Vec<f64> = d.y.iter().map(|v| v / y_norm).collect();
+    let dense = SglProblem::new(d.x.to_dense(), y.clone(), d.groups.clone(), 0.3);
+    let csc = SglProblem::new(d.x, y, d.groups, 0.3);
+    (csc, dense)
+}
+
+fn dense_objective(pb: &SglProblem, lambda: f64, beta: &[f64]) -> f64 {
+    let xb = pb.x.matvec(beta);
+    let r2: f64 = pb.y.iter().zip(&xb).map(|(yi, v)| (yi - v) * (yi - v)).sum();
+    0.5 * r2 + lambda * omega(beta, &pb.groups, pb.tau, &pb.weights)
+}
+
+#[test]
+fn backends_make_identical_screening_decisions() {
+    for seed in [101u64, 102, 103] {
+        let (csc, dense) = backend_pair(seed);
+        let lambda = 0.3 * dense.lambda_max();
+        for rule in [RuleKind::GapSafe, RuleKind::Dst3] {
+            let opts = SolveOptions { rule, tol: 1e-9, ..Default::default() };
+            let a = solve(&dense, lambda, None, &opts);
+            let b = solve(&csc, lambda, None, &opts);
+            assert!(a.converged && b.converged, "seed {seed} {rule:?}");
+            assert_eq!(
+                a.active.feature, b.active.feature,
+                "seed {seed} {rule:?}: feature masks diverge"
+            );
+            assert_eq!(
+                a.active.group, b.active.group,
+                "seed {seed} {rule:?}: group masks diverge"
+            );
+            let oa = dense_objective(&dense, lambda, &a.beta);
+            let ob = dense_objective(&dense, lambda, &b.beta);
+            assert!(
+                (oa - ob).abs() <= 1e-10,
+                "seed {seed} {rule:?}: objectives {oa} vs {ob}"
+            );
+        }
+    }
+}
+
+#[test]
+fn csc_screening_is_safe_against_dense_reference() {
+    let (csc, dense) = backend_pair(104);
+    let lambda = 0.25 * dense.lambda_max();
+    let reference = solve(
+        &dense,
+        lambda,
+        None,
+        &SolveOptions { rule: RuleKind::None, tol: 1e-12, ..Default::default() },
+    );
+    for rule in RuleKind::all() {
+        let opts = SolveOptions { rule, tol: 1e-10, ..Default::default() };
+        let res = solve(&csc, lambda, None, &opts);
+        assert!(res.converged, "{rule:?}");
+        for j in 0..csc.p() {
+            if !res.active.feature[j] {
+                assert!(
+                    reference.beta[j].abs() < 1e-6,
+                    "{rule:?} screened live feature {j} on the CSC backend"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn csc_path_matches_dense_path_with_sequential_rule() {
+    let (csc, dense) = backend_pair(105);
+    let lambdas = lambda_grid(dense.lambda_max(), 2.0, 8);
+    let opts = PathOptions {
+        delta: 2.0,
+        t_count: lambdas.len(),
+        solve: SolveOptions {
+            rule: RuleKind::GapSafeSeq,
+            tol: 1e-9,
+            record_history: false,
+            ..Default::default()
+        },
+    };
+    let pd = solve_path_on_grid(&dense, &lambdas, &opts);
+    let ps = solve_path_on_grid(&csc, &lambdas, &opts);
+    assert!(pd.all_converged() && ps.all_converged());
+    for (i, &lambda) in lambdas.iter().enumerate() {
+        let a = dense_objective(&dense, lambda, &pd.results[i].beta);
+        let b = dense_objective(&dense, lambda, &ps.results[i].beta);
+        assert!((a - b).abs() <= 1e-7, "grid point {i}: {a} vs {b}");
+    }
+}
+
+#[test]
+fn ista_and_fista_seq_paths_match_cd_objectives() {
+    // Unit-norm y planted dense problem: tol 1e-8 is then an absolute gap
+    // bound, so per-solver objectives sit within 1e-8 of the optimum and
+    // within 2e-8 of each other — comfortably inside the 1e-7 budget.
+    let cfg = SyntheticConfig {
+        n: 60,
+        n_groups: 30,
+        group_size: 4,
+        gamma1: 5,
+        gamma2: 2,
+        seed: 21,
+        ..Default::default()
+    };
+    let d = generate(&cfg);
+    let y_norm = d.dataset.y.iter().map(|v| v * v).sum::<f64>().sqrt();
+    let y: Vec<f64> = d.dataset.y.iter().map(|v| v / y_norm).collect();
+    let pb = SglProblem::new(d.dataset.x, y, d.dataset.groups, 0.25);
+    let lambdas = lambda_grid(pb.lambda_max(), 1.5, 6);
+    let opts = PathOptions {
+        delta: 1.5,
+        t_count: lambdas.len(),
+        solve: SolveOptions {
+            rule: RuleKind::GapSafeSeq,
+            tol: 1e-8,
+            max_epochs: 500_000,
+            record_history: false,
+            ..Default::default()
+        },
+    };
+    let cd_path = solve_path_with(&pb, &lambdas, &opts, SolverKind::Cd);
+    assert!(cd_path.all_converged());
+    for solver in [SolverKind::Ista, SolverKind::Fista] {
+        let path = solve_path_with(&pb, &lambdas, &opts, solver);
+        assert!(path.all_converged(), "{solver:?}");
+        for (i, &lambda) in lambdas.iter().enumerate() {
+            let a = dense_objective(&pb, lambda, &cd_path.results[i].beta);
+            let b = dense_objective(&pb, lambda, &path.results[i].beta);
+            assert!(
+                (a - b).abs() <= 1e-7,
+                "{solver:?} grid point {i}: {a} vs {b}"
+            );
+        }
+    }
+}
+
+#[test]
+fn csc_density_reporting_is_consistent() {
+    let (csc, dense) = backend_pair(106);
+    assert_eq!(csc.p(), dense.p());
+    assert_eq!(csc.n(), dense.n());
+    // from_dense(to_dense) round-trips the structure.
+    assert_eq!(CscMatrix::from_dense(&dense.x).nnz(), csc.x.nnz());
+    assert!(csc.x.density() < 0.2);
+}

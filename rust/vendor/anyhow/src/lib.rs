@@ -7,28 +7,78 @@
 //!
 //! Semantics mirror the subset of the real `anyhow` this project uses:
 //! `{}` displays the outermost message, `{:#}` the whole `a: b: c` chain,
-//! `{:?}` adds a "Caused by" listing, and `?` converts any
+//! `{:?}` adds a "Caused by" listing, `?` converts any
 //! `std::error::Error` via the blanket `From` impl (possible precisely
 //! because [`Error`] itself does *not* implement `std::error::Error` —
-//! the same coherence trick the real crate uses).
+//! the same coherence trick the real crate uses), and typed errors built
+//! with [`Error::new`] keep their concrete value as a payload so callers
+//! can recover it with [`Error::downcast_ref`] anywhere in the chain.
 
+use std::any::Any;
 use std::fmt;
 
-/// An error: a message plus an optional cause chain.
+/// An error: a message plus an optional cause chain, optionally carrying
+/// the original typed error value for downcasting.
 pub struct Error {
     msg: String,
     source: Option<Box<Error>>,
+    payload: Option<Box<dyn Any + Send + Sync>>,
 }
 
 impl Error {
     /// Build an error from a displayable message.
     pub fn msg(m: impl fmt::Display) -> Error {
-        Error { msg: m.to_string(), source: None }
+        Error { msg: m.to_string(), source: None, payload: None }
+    }
+
+    /// Build from a typed error, capturing its source chain as messages
+    /// and keeping the value itself for [`Error::downcast_ref`].
+    pub fn new<E>(e: E) -> Error
+    where
+        E: std::error::Error + Send + Sync + 'static,
+    {
+        let mut out = Error::from_std_chain(&e);
+        out.payload = Some(Box::new(e));
+        out
+    }
+
+    /// Message-chain skeleton of a std error (no payload attached).
+    fn from_std_chain(e: &(dyn std::error::Error + 'static)) -> Error {
+        let mut msgs = vec![e.to_string()];
+        let mut cur = e.source();
+        while let Some(c) = cur {
+            msgs.push(c.to_string());
+            cur = c.source();
+        }
+        let mut err: Option<Error> = None;
+        for m in msgs.into_iter().rev() {
+            err = Some(Error { msg: m, source: err.map(Box::new), payload: None });
+        }
+        err.expect("non-empty chain")
     }
 
     /// Wrap this error with an outer context message.
     pub fn context(self, c: impl fmt::Display) -> Error {
-        Error { msg: c.to_string(), source: Some(Box::new(self)) }
+        Error { msg: c.to_string(), source: Some(Box::new(self)), payload: None }
+    }
+
+    /// The first payload in the chain (outermost first) that is an `E`.
+    /// Context wrapping never loses the payload: `downcast_ref` walks the
+    /// whole cause chain.
+    pub fn downcast_ref<E: Any>(&self) -> Option<&E> {
+        let mut cur = Some(self);
+        while let Some(e) = cur {
+            if let Some(p) = e.payload.as_ref().and_then(|p| p.downcast_ref::<E>()) {
+                return Some(p);
+            }
+            cur = e.source.as_deref();
+        }
+        None
+    }
+
+    /// Whether any error in the chain carries an `E` payload.
+    pub fn is<E: Any>(&self) -> bool {
+        self.downcast_ref::<E>().is_some()
     }
 
     /// The outermost message.
@@ -76,21 +126,12 @@ impl fmt::Debug for Error {
     }
 }
 
-// Any std error converts into `Error`, capturing its source chain. Legal
-// only because `Error` does not implement `std::error::Error` itself.
+// Any std error converts into `Error`, capturing its source chain and the
+// typed value (for downcasting). Legal only because `Error` does not
+// implement `std::error::Error` itself.
 impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
     fn from(e: E) -> Error {
-        let mut msgs = vec![e.to_string()];
-        let mut cur: Option<&(dyn std::error::Error + 'static)> = e.source();
-        while let Some(c) = cur {
-            msgs.push(c.to_string());
-            cur = c.source();
-        }
-        let mut err: Option<Error> = None;
-        for m in msgs.into_iter().rev() {
-            err = Some(Error { msg: m, source: err.map(Box::new) });
-        }
-        err.expect("non-empty chain")
+        Error::new(e)
     }
 }
 
@@ -206,6 +247,38 @@ mod tests {
         assert_eq!(f(-1).unwrap_err().message(), "negative: -1");
         let e = anyhow!("code {}", 7);
         assert_eq!(e.message(), "code 7");
+    }
+
+    #[test]
+    fn downcast_ref_survives_context_wrapping() {
+        #[derive(Debug, PartialEq)]
+        struct Marker(u32);
+        impl std::fmt::Display for Marker {
+            fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+                write!(f, "marker {}", self.0)
+            }
+        }
+        impl std::error::Error for Marker {}
+
+        let e = Error::new(Marker(7)).context("outer").context("outermost");
+        assert_eq!(e.downcast_ref::<Marker>(), Some(&Marker(7)));
+        assert!(e.is::<Marker>());
+        assert!(!e.is::<std::io::Error>());
+        assert_eq!(format!("{e:#}"), "outermost: outer: marker 7");
+        // Message-only errors carry no payload.
+        assert!(Error::msg("plain").downcast_ref::<Marker>().is_none());
+    }
+
+    #[test]
+    fn question_mark_preserves_payload() {
+        fn inner() -> Result<()> {
+            let io = std::io::Error::new(std::io::ErrorKind::NotFound, "gone");
+            Err(io)?;
+            Ok(())
+        }
+        let e = inner().unwrap_err().context("while probing");
+        let io = e.downcast_ref::<std::io::Error>().expect("payload kept");
+        assert_eq!(io.kind(), std::io::ErrorKind::NotFound);
     }
 
     #[test]

@@ -1,0 +1,220 @@
+//! Bench: the L4 solve service — job throughput, duplicate-traffic cache
+//! hits, and λ-sharded vs monolithic single-path latency.
+//!
+//! Sections:
+//!
+//! 1. **Throughput** — a heterogeneous batch (every screening rule × three
+//!    tolerances) of CSC path jobs on a ~1%-density design, submitted at
+//!    once and drained through the completion stream; reports jobs/sec
+//!    plus the queue-wait and per-job latency histograms the service's
+//!    metrics timers record.
+//! 2. **Duplicate traffic** — the same batch resubmitted; every job must
+//!    be answered from the fingerprint cache without re-solving.
+//! 3. **Sharding** — one long path on a ≥ 5000-feature problem solved
+//!    monolithically vs as k=4 pipelined λ-shards with dual-point
+//!    handoff, both directly and through the service; asserts final
+//!    objectives agree to ≤ 1e-8 at every λ and reports the latency
+//!    comparison (the shard boundaries should cost ~nothing — that is
+//!    the property that lets one huge path spread across machines).
+//!
+//! Default scale runs in seconds; `SGL_BENCH_SCALE=paper` runs the full
+//! p=10000 instances.
+
+use sgl::coordinator::service::{
+    AnyProblem, ServiceConfig, SolveRequest, SolveService,
+};
+use sgl::coordinator::shard::solve_path_sharded;
+use sgl::data::sparse::{self, SparseSyntheticConfig};
+use sgl::linalg::{CscMatrix, Design};
+use sgl::norms::sgl::omega;
+use sgl::screening::RuleKind;
+use sgl::solver::cd::SolveOptions;
+use sgl::solver::path::{solve_path_on_grid, PathOptions};
+use sgl::solver::problem::{lambda_grid, SglProblem};
+use sgl::solver::SolverKind;
+use sgl::util::timer::Stopwatch;
+use std::sync::Arc;
+
+fn unit_norm_problem(cfg: &SparseSyntheticConfig, tau: f64) -> Arc<SglProblem<CscMatrix>> {
+    let d = sparse::generate(cfg);
+    let y_norm = d.y.iter().map(|v| v * v).sum::<f64>().sqrt().max(1e-300);
+    let y: Vec<f64> = d.y.iter().map(|v| v / y_norm).collect();
+    Arc::new(SglProblem::new(d.x, y, d.groups, tau))
+}
+
+fn main() {
+    let paper = std::env::var("SGL_BENCH_SCALE").as_deref() == Ok("paper");
+    throughput_and_cache(paper);
+    sharded_vs_monolithic(paper);
+}
+
+fn throughput_and_cache(paper: bool) {
+    let cfg = SparseSyntheticConfig {
+        n: 100,
+        n_groups: if paper { 1000 } else { 300 },
+        group_size: 10,
+        density: 0.01,
+        gamma1: 10,
+        gamma2: 4,
+        seed: 42,
+        ..Default::default()
+    };
+    let pb = unit_norm_problem(&cfg, 0.2);
+    let t_count = if paper { 60 } else { 25 };
+    let svc = SolveService::start(ServiceConfig::default());
+    println!(
+        "== bench_service: n={}, p={}, nnz={}, T={t_count}, {} workers ==\n",
+        pb.n(),
+        pb.p(),
+        pb.x.nnz(),
+        svc.workers()
+    );
+
+    let make_batch = || -> Vec<SolveRequest> {
+        let mut batch = Vec::new();
+        for rule in RuleKind::all() {
+            for tol in [1e-4, 1e-6, 1e-8] {
+                batch.push(SolveRequest {
+                    label: format!("{}@{tol:.0e}", rule.name()),
+                    ..SolveRequest::new(
+                        AnyProblem::Csc(pb.clone()),
+                        PathOptions {
+                            delta: 2.0,
+                            t_count,
+                            solve: SolveOptions {
+                                tol,
+                                rule,
+                                record_history: false,
+                                ..Default::default()
+                            },
+                        },
+                    )
+                });
+            }
+        }
+        batch
+    };
+
+    // -- throughput: submit everything, drain the completion stream.
+    let batch = make_batch();
+    let n_jobs = batch.len();
+    let sw = Stopwatch::start();
+    let ids: Vec<_> = batch.into_iter().map(|r| svc.submit(r).unwrap()).collect();
+    let mut completed = 0;
+    while svc.wait_next().is_some() {
+        completed += 1;
+    }
+    let secs = sw.elapsed_s();
+    assert_eq!(completed, n_jobs);
+    for id in &ids {
+        assert!(svc.result(*id).expect("done").all_converged());
+    }
+    println!(
+        "throughput: {n_jobs} heterogeneous path jobs in {secs:.3}s = {:.2} jobs/s",
+        n_jobs as f64 / secs.max(1e-12)
+    );
+    let m = svc.metrics();
+    let wait = m.timer("service_queue_wait_s").unwrap();
+    let lat = m.timer("service_job_latency_s").unwrap();
+    println!(
+        "queue wait  (s): min {:.4} / mean {:.4} / max {:.4}",
+        wait.min,
+        wait.mean(),
+        wait.max
+    );
+    println!(
+        "job latency (s): min {:.4} / mean {:.4} / max {:.4}",
+        lat.min,
+        lat.mean(),
+        lat.max
+    );
+
+    // -- duplicate traffic: all answered from the fingerprint cache.
+    let sw = Stopwatch::start();
+    let dup_ids: Vec<_> =
+        make_batch().into_iter().map(|r| svc.submit(r).unwrap()).collect();
+    while svc.wait_next().is_some() {}
+    let dup_secs = sw.elapsed_s();
+    assert!(dup_ids.iter().all(|&id| svc.was_cached(id)), "all duplicates cached");
+    assert_eq!(m.counter("service_cache_hits"), n_jobs as u64);
+    println!(
+        "\nduplicate traffic: {n_jobs} cache hits in {dup_secs:.4}s \
+         (vs {secs:.3}s solved, {:.0}x)",
+        secs / dup_secs.max(1e-12)
+    );
+}
+
+fn sharded_vs_monolithic(paper: bool) {
+    let cfg = SparseSyntheticConfig {
+        n: 100,
+        n_groups: if paper { 1000 } else { 550 },
+        group_size: 10,
+        density: 0.01,
+        gamma1: 10,
+        gamma2: 4,
+        seed: 7,
+        ..Default::default()
+    };
+    let pb = unit_norm_problem(&cfg, 0.2);
+    assert!(pb.p() >= 5000, "shard bench must run at >= 5000 features");
+    let t_count = if paper { 60 } else { 40 };
+    let lambdas = lambda_grid(pb.lambda_max(), 2.0, t_count);
+    let opts = PathOptions {
+        delta: 2.0,
+        t_count,
+        solve: SolveOptions {
+            rule: RuleKind::GapSafeSeq,
+            tol: 1e-8,
+            record_history: false,
+            ..Default::default()
+        },
+    };
+    println!(
+        "\n== sharded vs monolithic: n={}, p={}, T={t_count}, gap_safe_seq @1e-8 ==",
+        pb.n(),
+        pb.p()
+    );
+
+    let sw = Stopwatch::start();
+    let mono = solve_path_on_grid(pb.as_ref(), &lambdas, &opts);
+    let t_mono = sw.elapsed_s();
+    let sw = Stopwatch::start();
+    let sharded = solve_path_sharded(pb.as_ref(), &lambdas, &opts, SolverKind::Cd, 4);
+    let t_shard = sw.elapsed_s();
+    assert!(mono.all_converged() && sharded.all_converged());
+
+    let objective = |lambda: f64, beta: &[f64]| {
+        let xb = pb.x.matvec(beta);
+        let r2: f64 = pb.y.iter().zip(&xb).map(|(y, v)| (y - v) * (y - v)).sum();
+        0.5 * r2 + lambda * omega(beta, &pb.groups, pb.tau, &pb.weights)
+    };
+    let mut max_div = 0.0_f64;
+    for (i, &lambda) in lambdas.iter().enumerate() {
+        let a = objective(lambda, &mono.results[i].beta);
+        let b = objective(lambda, &sharded.results[i].beta);
+        max_div = max_div.max((a - b).abs());
+    }
+    println!("monolithic path:        {t_mono:>8.3}s");
+    println!(
+        "sharded path (k=4):     {t_shard:>8.3}s  (boundary overhead {:+.1}%)",
+        100.0 * (t_shard - t_mono) / t_mono.max(1e-12)
+    );
+    println!("max objective divergence: {max_div:.2e}");
+    assert!(max_div <= 1e-8, "sharded diverged beyond budget: {max_div:.2e}");
+
+    // End-to-end through the service: the k=4 pipeline as queued jobs.
+    let svc = SolveService::start(ServiceConfig::default());
+    let req = SolveRequest {
+        shards: 4,
+        label: "sharded-k4".into(),
+        ..SolveRequest::new(AnyProblem::Csc(pb.clone()), opts.clone())
+    };
+    let sw = Stopwatch::start();
+    let id = svc.submit(req).unwrap();
+    let via_service = svc.wait(id).unwrap();
+    let t_svc = sw.elapsed_s();
+    for (a, b) in mono.results.iter().zip(&via_service.results) {
+        assert_eq!(a.beta, b.beta, "service pipeline must match monolithic");
+    }
+    println!("sharded via service:    {t_svc:>8.3}s  (end-to-end, incl. queue)");
+}

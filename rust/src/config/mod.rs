@@ -71,6 +71,9 @@ pub enum DatasetChoice {
     Climate,
     /// Load `X`/`y` from CSV files with a uniform group size.
     Csv { x_path: String, y_path: String, group_size: usize },
+    /// Load a libsvm/svmlight text file straight into the CSC backend
+    /// (no dense detour); defaults `design` to `csc` unless overridden.
+    Libsvm { path: String, group_size: usize },
 }
 
 /// A full solve/experiment configuration.
@@ -102,6 +105,12 @@ pub struct RunConfig {
     pub climate_lon: usize,
     pub climate_lat: usize,
     pub climate_months: usize,
+    /// Solve-service sizing (`[service]`): worker threads (0 = auto).
+    pub service_workers: usize,
+    /// Max queued (unstarted) jobs before `submit` backpressures.
+    pub service_queue_depth: usize,
+    /// λ-range shards per path job submitted by the CLI (1 = monolithic).
+    pub service_shards: usize,
 }
 
 impl Default for RunConfig {
@@ -128,6 +137,9 @@ impl Default for RunConfig {
             climate_lon: 37,
             climate_lat: 18,
             climate_months: 814,
+            service_workers: 0, // 0 = auto
+            service_queue_depth: 64,
+            service_shards: 1,
         }
     }
 }
@@ -150,6 +162,18 @@ impl RunConfig {
                         .context("csv dataset requires dataset.y_path")?,
                     group_size: doc.get_int("dataset", "group_size").unwrap_or(1) as usize,
                 },
+                "libsvm" => {
+                    // Sparse loaders default to the CSC backend; an
+                    // explicit `design` key below still wins.
+                    cfg.design = DesignBackend::Csc;
+                    DatasetChoice::Libsvm {
+                        path: doc
+                            .get_str("dataset", "path")
+                            .context("libsvm dataset requires dataset.path")?,
+                        group_size: doc.get_int("dataset", "group_size").unwrap_or(1)
+                            as usize,
+                    }
+                }
                 other => bail!("unknown dataset kind {other:?}"),
             };
         }
@@ -195,6 +219,9 @@ impl RunConfig {
         take!(climate_lon, "climate", "grid_lon", usize);
         take!(climate_lat, "climate", "grid_lat", usize);
         take!(climate_months, "climate", "n_months", usize);
+        take!(service_workers, "service", "workers", usize);
+        take!(service_queue_depth, "service", "queue_depth", usize);
+        take!(service_shards, "service", "shards", usize);
         if let Some(rule) = doc.get_str("solver", "rule") {
             cfg.rule = RuleKind::from_name(&rule)
                 .with_context(|| format!("unknown screening rule {rule:?}"))?;
@@ -225,7 +252,24 @@ impl RunConfig {
         if self.delta < 0.0 {
             bail!("delta must be nonnegative");
         }
+        if self.service_queue_depth == 0 {
+            bail!("service queue_depth must be >= 1");
+        }
+        if self.service_shards == 0 {
+            bail!("service shards must be >= 1");
+        }
+        if let DatasetChoice::Libsvm { group_size, .. } = &self.dataset {
+            if *group_size == 0 {
+                bail!("libsvm group_size must be >= 1");
+            }
+        }
         Ok(())
+    }
+
+    /// `threads` with `0 = auto` resolved to the machine default, so no
+    /// caller can ever size a zero-worker pool from the raw field.
+    pub fn effective_threads(&self) -> usize {
+        crate::util::pool::resolve_threads(self.threads)
     }
 }
 
@@ -335,5 +379,49 @@ rho = 0.9
         assert!(RunConfig::from_toml_str("[solver]\ntau = 1.5\n").is_err());
         assert!(RunConfig::from_toml_str("[solver]\nrule = \"magic\"\n").is_err());
         assert!(RunConfig::from_toml_str("[solver]\ntol = -1.0\n").is_err());
+        assert!(RunConfig::from_toml_str("[service]\nqueue_depth = 0\n").is_err());
+        assert!(RunConfig::from_toml_str("[service]\nshards = 0\n").is_err());
+    }
+
+    #[test]
+    fn parses_service_section() {
+        let c = RunConfig::from_toml_str(
+            "[service]\nworkers = 3\nqueue_depth = 128\nshards = 4\n",
+        )
+        .unwrap();
+        assert_eq!(c.service_workers, 3);
+        assert_eq!(c.service_queue_depth, 128);
+        assert_eq!(c.service_shards, 4);
+        // Defaults: auto workers, depth 64, monolithic paths.
+        let d = RunConfig::default();
+        assert_eq!(d.service_workers, 0);
+        assert_eq!(d.service_queue_depth, 64);
+        assert_eq!(d.service_shards, 1);
+        assert!(d.effective_threads() >= 1);
+    }
+
+    #[test]
+    fn libsvm_dataset_defaults_to_csc() {
+        let c = RunConfig::from_toml_str(
+            "[dataset]\nkind = \"libsvm\"\npath = \"d.svm\"\ngroup_size = 5\n",
+        )
+        .unwrap();
+        assert_eq!(
+            c.dataset,
+            DatasetChoice::Libsvm { path: "d.svm".into(), group_size: 5 }
+        );
+        assert_eq!(c.design, DesignBackend::Csc);
+        // An explicit design key still wins.
+        let d = RunConfig::from_toml_str(
+            "[dataset]\nkind = \"libsvm\"\npath = \"d.svm\"\ndesign = \"dense\"\n",
+        )
+        .unwrap();
+        assert_eq!(d.design, DesignBackend::Dense);
+        // Missing path and zero group size are rejected.
+        assert!(RunConfig::from_toml_str("[dataset]\nkind = \"libsvm\"\n").is_err());
+        assert!(RunConfig::from_toml_str(
+            "[dataset]\nkind = \"libsvm\"\npath = \"d.svm\"\ngroup_size = 0\n"
+        )
+        .is_err());
     }
 }

@@ -1,16 +1,51 @@
 //! Lightweight metrics registry for the solver service: thread-safe
-//! counters and gauges, rendered to text or JSON for run reports.
+//! counters, gauges and monotonic timers (min/max/mean histograms),
+//! rendered to text or JSON for run reports.
 
 use crate::util::json::Json;
 use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
 
+/// Aggregated observations of one named timer: enough to report count,
+/// min, max and mean without storing individual samples (the service
+/// records one observation per job/shard, unbounded over its lifetime).
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct TimerStats {
+    pub count: u64,
+    pub sum: f64,
+    pub min: f64,
+    pub max: f64,
+}
+
+impl TimerStats {
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum / self.count as f64
+        }
+    }
+
+    fn observe(&mut self, v: f64) {
+        if self.count == 0 {
+            self.min = v;
+            self.max = v;
+        } else {
+            self.min = self.min.min(v);
+            self.max = self.max.max(v);
+        }
+        self.count += 1;
+        self.sum += v;
+    }
+}
+
 /// Process-wide metrics for a coordinator run.
 #[derive(Default)]
 pub struct Metrics {
     counters: Mutex<BTreeMap<String, AtomicU64>>,
     gauges: Mutex<BTreeMap<String, f64>>,
+    timers: Mutex<BTreeMap<String, TimerStats>>,
 }
 
 impl Metrics {
@@ -44,6 +79,19 @@ impl Metrics {
         self.gauges.lock().unwrap().get(name).copied()
     }
 
+    /// Record one observation (in seconds — the unit is a convention, not
+    /// enforced) into the named timer. The service uses this for job
+    /// latency and queue wait; min/max/mean aggregate monotonically.
+    pub fn observe_secs(&self, name: &str, secs: f64) {
+        let mut map = self.timers.lock().unwrap();
+        map.entry(name.to_string()).or_default().observe(secs);
+    }
+
+    /// Aggregated stats of a named timer, if it has any observations.
+    pub fn timer(&self, name: &str) -> Option<TimerStats> {
+        self.timers.lock().unwrap().get(name).copied()
+    }
+
     /// Render all metrics as JSON.
     pub fn to_json(&self) -> Json {
         let mut obj = Json::obj();
@@ -52,6 +100,14 @@ impl Metrics {
         }
         for (k, v) in self.gauges.lock().unwrap().iter() {
             obj = obj.with(k, *v);
+        }
+        for (k, t) in self.timers.lock().unwrap().iter() {
+            obj = obj
+                .with(&format!("{k}_count"), t.count as f64)
+                .with(&format!("{k}_sum"), t.sum)
+                .with(&format!("{k}_min"), t.min)
+                .with(&format!("{k}_max"), t.max)
+                .with(&format!("{k}_mean"), t.mean());
         }
         obj
     }
@@ -64,6 +120,16 @@ impl Metrics {
         }
         for (k, v) in self.gauges.lock().unwrap().iter() {
             out.push_str(&format!("{k} {v}\n"));
+        }
+        for (k, t) in self.timers.lock().unwrap().iter() {
+            out.push_str(&format!(
+                "{k}_count {}\n{k}_sum {}\n{k}_min {}\n{k}_max {}\n{k}_mean {}\n",
+                t.count,
+                t.sum,
+                t.min,
+                t.max,
+                t.mean()
+            ));
         }
         out
     }
@@ -99,6 +165,43 @@ mod tests {
         assert!(text.contains("a 1"));
         assert!(text.contains("b 2.5"));
         assert!(m.to_json().dump().contains("\"a\":1"));
+    }
+
+    #[test]
+    fn timers_aggregate_min_max_mean() {
+        let m = Metrics::new();
+        assert!(m.timer("lat").is_none());
+        for v in [0.2, 0.1, 0.4] {
+            m.observe_secs("lat", v);
+        }
+        let t = m.timer("lat").unwrap();
+        assert_eq!(t.count, 3);
+        assert!((t.min - 0.1).abs() < 1e-12);
+        assert!((t.max - 0.4).abs() < 1e-12);
+        assert!((t.sum - 0.7).abs() < 1e-12);
+        assert!((t.mean() - 0.7 / 3.0).abs() < 1e-12);
+        // A single observation pins min == max == mean.
+        m.observe_secs("once", 2.5);
+        let o = m.timer("once").unwrap();
+        assert_eq!(o.min, 2.5);
+        assert_eq!(o.max, 2.5);
+        assert_eq!(o.mean(), 2.5);
+        assert_eq!(TimerStats::default().mean(), 0.0);
+    }
+
+    #[test]
+    fn timers_render_in_text_and_json() {
+        let m = Metrics::new();
+        m.observe_secs("lat", 0.5);
+        m.observe_secs("lat", 1.5);
+        let text = m.render_text();
+        assert!(text.contains("lat_count 2"));
+        assert!(text.contains("lat_min 0.5"));
+        assert!(text.contains("lat_max 1.5"));
+        assert!(text.contains("lat_mean 1"));
+        let json = m.to_json().dump();
+        assert!(json.contains("\"lat_count\":2"));
+        assert!(json.contains("\"lat_mean\":1"));
     }
 
     #[test]

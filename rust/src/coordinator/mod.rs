@@ -1,6 +1,11 @@
-//! L3 coordination: job scheduling across worker threads, metrics, and
-//! figure-series reporting.
+//! L3/L4 coordination: batched job scheduling across worker threads
+//! ([`jobs`]), the async solve service with its queue, result store and
+//! fingerprint cache ([`service`]), λ-range sharding with dual-point
+//! handoff ([`shard`]), metrics ([`metrics`]), and figure-series
+//! reporting ([`report`]).
 
 pub mod jobs;
 pub mod metrics;
 pub mod report;
+pub mod service;
+pub mod shard;

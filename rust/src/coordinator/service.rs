@@ -1,0 +1,862 @@
+//! L4 solve service: a non-blocking job queue over the path engine.
+//!
+//! [`PathBatch`](crate::solver::path::PathBatch) is a *blocking* fan-out —
+//! the caller hands over a fixed batch and waits for all of it. A serving
+//! workload is the opposite shape: heterogeneous requests arrive over
+//! time, callers want a [`JobId`] back immediately and poll/wait/cancel
+//! independently, duplicate traffic should be answered from cache, and
+//! one huge path should be splittable into λ-range shards
+//! ([`crate::coordinator::shard`]) without changing its result. This
+//! module is that layer:
+//!
+//! - [`SolveService::submit`] enqueues a [`SolveRequest`] (priority-class
+//!   FIFO queue, bounded by [`ServiceConfig::queue_depth`] — a full queue
+//!   is a typed [`QueueFullError`], i.e. explicit backpressure, never an
+//!   unbounded buffer);
+//! - a persistent [`WorkerPool`] drains the queue; a sharded job is
+//!   executed as a pipeline of shard tasks, each re-enqueued with the
+//!   predecessor's [`DualHandoff`] so `GapSafeSeq` screening fires across
+//!   shard boundaries exactly as it does mid-path;
+//! - completed results land in a result store with
+//!   [`poll`](SolveService::poll) / [`wait`](SolveService::wait) /
+//!   [`cancel`](SolveService::cancel) semantics plus a completion stream
+//!   ([`wait_next`](SolveService::wait_next));
+//! - a fingerprint cache (hash of solve config + dataset identity →
+//!   completed [`PathResult`]) serves duplicate requests without
+//!   re-solving — the cache keeps the dataset `Arc` alive, so an identity
+//!   pointer can never be recycled by a different problem;
+//! - [`Metrics`] gains queue-depth gauges and per-job latency/queue-wait
+//!   timers ([`Metrics::observe_secs`]).
+//!
+//! Requests are backend-heterogeneous through [`AnyProblem`]: one service
+//! instance serves dense and CSC problems (and any mix of
+//! rule/tolerance/solver) side by side.
+
+use super::metrics::Metrics;
+use super::shard::{plan_shards, stitch};
+use crate::linalg::{CscMatrix, Matrix};
+use crate::solver::path::{
+    solve_path_with_handoff, DualHandoff, PathOptions, PathResult,
+};
+use crate::solver::problem::{lambda_grid, SglProblem};
+use crate::solver::SolverKind;
+use crate::util::pool::{resolve_threads, WorkerPool};
+use crate::util::timer::Stopwatch;
+use anyhow::{bail, Result};
+use std::cmp::Ordering as CmpOrdering;
+use std::collections::hash_map::DefaultHasher;
+use std::collections::{BTreeMap, BinaryHeap, HashMap, VecDeque};
+use std::fmt;
+use std::hash::{Hash, Hasher};
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::{Arc, Condvar, Mutex};
+
+/// Service sizing knobs (`[service]` in TOML / `--workers`,
+/// `--queue-depth` on the CLI).
+#[derive(Clone, Copy, Debug)]
+pub struct ServiceConfig {
+    /// Worker threads draining the queue (0 = auto: the
+    /// `SGL_THREADS` / available-parallelism default).
+    pub workers: usize,
+    /// Maximum number of *queued* (not yet started) jobs; submissions
+    /// beyond it fail with [`QueueFullError`].
+    pub queue_depth: usize,
+}
+
+impl Default for ServiceConfig {
+    fn default() -> Self {
+        ServiceConfig { workers: 0, queue_depth: 64 }
+    }
+}
+
+/// A problem instance on either design backend. The service is
+/// deliberately *not* generic over [`crate::linalg::Design`]: one
+/// instance serves mixed dense/CSC traffic, which is what a shared front
+/// end sees.
+#[derive(Clone, Debug)]
+pub enum AnyProblem {
+    Dense(Arc<SglProblem<Matrix>>),
+    Csc(Arc<SglProblem<CscMatrix>>),
+}
+
+impl AnyProblem {
+    pub fn backend_name(&self) -> &'static str {
+        match self {
+            AnyProblem::Dense(_) => "dense",
+            AnyProblem::Csc(_) => "csc",
+        }
+    }
+
+    pub fn n(&self) -> usize {
+        match self {
+            AnyProblem::Dense(p) => p.n(),
+            AnyProblem::Csc(p) => p.n(),
+        }
+    }
+
+    pub fn p(&self) -> usize {
+        match self {
+            AnyProblem::Dense(p) => p.p(),
+            AnyProblem::Csc(p) => p.p(),
+        }
+    }
+
+    /// `λ_max` of the underlying problem (one `Xᵀy` product — workers
+    /// call this off-lock when deriving a grid).
+    pub fn lambda_max(&self) -> f64 {
+        match self {
+            AnyProblem::Dense(p) => p.lambda_max(),
+            AnyProblem::Csc(p) => p.lambda_max(),
+        }
+    }
+
+    /// Dataset identity for the fingerprint cache: the backend tag plus
+    /// the `Arc` pointer. Two requests share an identity iff they share
+    /// the problem *instance* — the cache holds a clone of the `Arc`, so
+    /// the pointer stays pinned for the cache entry's lifetime.
+    fn identity(&self) -> (u8, usize) {
+        match self {
+            AnyProblem::Dense(p) => (0, Arc::as_ptr(p) as usize),
+            AnyProblem::Csc(p) => (1, Arc::as_ptr(p) as *const u8 as usize),
+        }
+    }
+}
+
+/// One solve-path request. Everything except `priority` and `label`
+/// participates in the cache fingerprint.
+#[derive(Clone, Debug)]
+pub struct SolveRequest {
+    pub pb: AnyProblem,
+    /// Explicit non-increasing λ grid; `None` derives the geometric grid
+    /// of `opts` from `λ_max` (computed on a worker, not at submit).
+    pub lambdas: Option<Vec<f64>>,
+    pub opts: PathOptions,
+    pub solver: SolverKind,
+    /// Larger drains first; equal priorities are FIFO.
+    pub priority: u8,
+    /// Split the path into this many contiguous λ-range shards, pipelined
+    /// through the queue with dual-point handoff (≤ 1 = monolithic).
+    pub shards: usize,
+    /// Free-form tag echoed in reports; not part of the fingerprint.
+    pub label: String,
+}
+
+impl SolveRequest {
+    /// A plain monolithic CD request with default priority.
+    pub fn new(pb: AnyProblem, opts: PathOptions) -> Self {
+        SolveRequest {
+            pb,
+            lambdas: None,
+            opts,
+            solver: SolverKind::Cd,
+            priority: 0,
+            shards: 1,
+            label: String::new(),
+        }
+    }
+
+    /// The exact cache key: dataset identity plus every solve-relevant
+    /// knob (floats by bit pattern). `label` and `priority` are excluded —
+    /// they cannot change the result. The cache map is keyed by this
+    /// (full equality, not just a hash), so a hash collision can never
+    /// serve the wrong result.
+    fn cache_key(&self) -> CacheKey {
+        CacheKey {
+            identity: self.pb.identity(),
+            solver: self.solver.name(),
+            rule: self.opts.solve.rule.name(),
+            tol: self.opts.solve.tol.to_bits(),
+            fce: self.opts.solve.fce,
+            max_epochs: self.opts.solve.max_epochs,
+            record_history: self.opts.solve.record_history,
+            delta: self.opts.delta.to_bits(),
+            t_count: self.opts.t_count,
+            shards: self.shards,
+            lambdas: self
+                .lambdas
+                .as_ref()
+                .map(|g| g.iter().map(|v| v.to_bits()).collect()),
+        }
+    }
+
+    /// 64-bit digest of the (private) exact cache key — a compact
+    /// identifier for logs and tests; the cache itself compares full keys.
+    pub fn fingerprint(&self) -> u64 {
+        let mut h = DefaultHasher::new();
+        self.cache_key().hash(&mut h);
+        h.finish()
+    }
+}
+
+/// See [`SolveRequest::cache_key`].
+#[derive(Clone, Debug, PartialEq, Eq, Hash)]
+struct CacheKey {
+    identity: (u8, usize),
+    solver: &'static str,
+    rule: &'static str,
+    tol: u64,
+    fce: usize,
+    max_epochs: usize,
+    record_history: bool,
+    delta: u64,
+    t_count: usize,
+    shards: usize,
+    lambdas: Option<Vec<u64>>,
+}
+
+/// Opaque handle returned by [`SolveService::submit`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct JobId(pub u64);
+
+impl fmt::Display for JobId {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "job#{}", self.0)
+    }
+}
+
+/// Externally visible lifecycle state of a job.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum JobStatus {
+    Queued,
+    Running,
+    Done,
+    Cancelled,
+    Failed,
+}
+
+/// Typed payload for a rejected submission (backpressure): the queue
+/// already holds `depth` unstarted jobs. Mirrors the
+/// `UnknownBackendError` pattern — callers `downcast_ref` to distinguish
+/// "retry later" from real errors.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct QueueFullError {
+    pub depth: usize,
+}
+
+impl fmt::Display for QueueFullError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "service queue is full ({} jobs queued)", self.depth)
+    }
+}
+
+impl std::error::Error for QueueFullError {}
+
+enum JobState {
+    Queued,
+    Running,
+    Done(Arc<PathResult>),
+    Cancelled,
+    Failed(String),
+}
+
+impl JobState {
+    fn status(&self) -> JobStatus {
+        match self {
+            JobState::Queued => JobStatus::Queued,
+            JobState::Running => JobStatus::Running,
+            JobState::Done(_) => JobStatus::Done,
+            JobState::Cancelled => JobStatus::Cancelled,
+            JobState::Failed(_) => JobStatus::Failed,
+        }
+    }
+
+    fn is_terminal(&self) -> bool {
+        !matches!(self, JobState::Queued | JobState::Running)
+    }
+}
+
+/// Execution state of a (possibly sharded) job once a worker planned it.
+struct ShardProgress {
+    /// One λ-range per shard, in path order.
+    grids: Vec<Vec<f64>>,
+    /// Completed shard results (always a prefix of `grids`).
+    parts: Vec<PathResult>,
+    /// Handoff out of the last completed shard, into the next.
+    carried: Option<DualHandoff>,
+}
+
+struct Job {
+    req: SolveRequest,
+    state: JobState,
+    progress: Option<ShardProgress>,
+    /// Started at submit: measures queue wait and end-to-end latency.
+    sw: Stopwatch,
+    /// First worker pickup recorded (queue-wait observed once).
+    started: bool,
+    /// Served from the fingerprint cache without solving.
+    cached: bool,
+}
+
+/// Queue entry: max-heap pops the highest priority first and, within a
+/// priority class, the lowest sequence number (FIFO).
+struct QueueItem {
+    priority: u8,
+    seq: u64,
+    id: JobId,
+}
+
+impl Ord for QueueItem {
+    fn cmp(&self, other: &Self) -> CmpOrdering {
+        self.priority
+            .cmp(&other.priority)
+            .then_with(|| other.seq.cmp(&self.seq))
+    }
+}
+
+impl PartialOrd for QueueItem {
+    fn partial_cmp(&self, other: &Self) -> Option<CmpOrdering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl PartialEq for QueueItem {
+    fn eq(&self, other: &Self) -> bool {
+        self.cmp(other) == CmpOrdering::Equal
+    }
+}
+
+impl Eq for QueueItem {}
+
+struct CacheEntry {
+    /// Keeps the dataset `Arc` alive so its identity pointer can never be
+    /// reused by a different problem while the entry exists.
+    _pb: AnyProblem,
+    result: Arc<PathResult>,
+}
+
+struct Shared {
+    queue: BinaryHeap<QueueItem>,
+    jobs: BTreeMap<JobId, Job>,
+    cache: HashMap<CacheKey, CacheEntry>,
+    depth: usize,
+    /// Jobs currently in state `Queued` (submitted, never started). The
+    /// admission bound compares against this, not `queue.len()`: shard
+    /// continuations of running jobs share the physical queue but must
+    /// not shrink the bound.
+    queued_new: usize,
+    next_id: u64,
+    next_seq: u64,
+    /// Jobs submitted but not yet terminal (Done/Cancelled/Failed).
+    outstanding: usize,
+    /// Newly terminal jobs, in completion order, for [`SolveService::wait_next`].
+    completions: VecDeque<JobId>,
+    shutdown: bool,
+}
+
+struct Inner {
+    state: Mutex<Shared>,
+    /// Wakes workers: queue push or shutdown.
+    work: Condvar,
+    /// Wakes waiters: job became terminal or shutdown.
+    done: Condvar,
+    metrics: Arc<Metrics>,
+}
+
+/// The async solve service. Dropping it signals shutdown and joins the
+/// workers (in-flight shards finish; still-queued jobs are abandoned).
+pub struct SolveService {
+    inner: Arc<Inner>,
+    pool: WorkerPool,
+}
+
+impl SolveService {
+    /// Start the service with its own metrics registry.
+    pub fn start(cfg: ServiceConfig) -> Self {
+        Self::with_metrics(cfg, Arc::new(Metrics::new()))
+    }
+
+    /// Start the service recording into a shared metrics registry.
+    pub fn with_metrics(cfg: ServiceConfig, metrics: Arc<Metrics>) -> Self {
+        let workers = resolve_threads(cfg.workers);
+        let inner = Arc::new(Inner {
+            state: Mutex::new(Shared {
+                queue: BinaryHeap::new(),
+                jobs: BTreeMap::new(),
+                cache: HashMap::new(),
+                depth: cfg.queue_depth.max(1),
+                queued_new: 0,
+                next_id: 0,
+                next_seq: 0,
+                outstanding: 0,
+                completions: VecDeque::new(),
+                shutdown: false,
+            }),
+            work: Condvar::new(),
+            done: Condvar::new(),
+            metrics,
+        });
+        let worker_inner = inner.clone();
+        let pool = WorkerPool::spawn(workers, move |_i| worker_loop(&worker_inner));
+        SolveService { inner, pool }
+    }
+
+    /// Number of worker threads draining the queue.
+    pub fn workers(&self) -> usize {
+        self.pool.len()
+    }
+
+    pub fn metrics(&self) -> Arc<Metrics> {
+        self.inner.metrics.clone()
+    }
+
+    /// Enqueue a request and return immediately. Duplicate traffic (same
+    /// fingerprint as a completed job) is answered from the cache: the
+    /// returned job is terminal at birth and shares the cached result
+    /// `Arc`. A full queue is a typed [`QueueFullError`].
+    pub fn submit(&self, req: SolveRequest) -> Result<JobId> {
+        let m = &self.inner.metrics;
+        let mut s = self.inner.state.lock().unwrap();
+        if s.shutdown {
+            bail!("service is shut down");
+        }
+        let id = JobId(s.next_id);
+        s.next_id += 1;
+        if let Some(hit) = s.cache.get(&req.cache_key()) {
+            let result = hit.result.clone();
+            s.jobs.insert(
+                id,
+                Job {
+                    req,
+                    state: JobState::Done(result),
+                    progress: None,
+                    sw: Stopwatch::start(),
+                    started: true,
+                    cached: true,
+                },
+            );
+            s.completions.push_back(id);
+            m.incr("service_submitted", 1);
+            m.incr("service_cache_hits", 1);
+            self.inner.done.notify_all();
+            return Ok(id);
+        }
+        if s.queued_new >= s.depth {
+            return Err(anyhow::Error::new(QueueFullError { depth: s.depth }));
+        }
+        let seq = s.next_seq;
+        s.next_seq += 1;
+        s.queue.push(QueueItem { priority: req.priority, seq, id });
+        s.queued_new += 1;
+        s.jobs.insert(
+            id,
+            Job {
+                req,
+                state: JobState::Queued,
+                progress: None,
+                sw: Stopwatch::start(),
+                started: false,
+                cached: false,
+            },
+        );
+        s.outstanding += 1;
+        m.incr("service_submitted", 1);
+        m.set("service_queue_depth", s.queue.len() as f64);
+        m.set("service_outstanding", s.outstanding as f64);
+        self.inner.work.notify_one();
+        Ok(id)
+    }
+
+    /// Current lifecycle state (`None` for an unknown id).
+    pub fn poll(&self, id: JobId) -> Option<JobStatus> {
+        let s = self.inner.state.lock().unwrap();
+        s.jobs.get(&id).map(|j| j.state.status())
+    }
+
+    /// The completed result, if the job is `Done`.
+    pub fn result(&self, id: JobId) -> Option<Arc<PathResult>> {
+        let s = self.inner.state.lock().unwrap();
+        match &s.jobs.get(&id)?.state {
+            JobState::Done(r) => Some(r.clone()),
+            _ => None,
+        }
+    }
+
+    /// Whether the job was served from the fingerprint cache.
+    pub fn was_cached(&self, id: JobId) -> bool {
+        let s = self.inner.state.lock().unwrap();
+        s.jobs.get(&id).is_some_and(|j| j.cached)
+    }
+
+    /// The request's label (empty for an unknown id).
+    pub fn label(&self, id: JobId) -> String {
+        let s = self.inner.state.lock().unwrap();
+        s.jobs.get(&id).map(|j| j.req.label.clone()).unwrap_or_default()
+    }
+
+    /// Block until the job is terminal; `Err` if it was cancelled,
+    /// failed, or the id is unknown.
+    pub fn wait(&self, id: JobId) -> Result<Arc<PathResult>> {
+        let mut s = self.inner.state.lock().unwrap();
+        loop {
+            match s.jobs.get(&id) {
+                None => bail!("unknown {id}"),
+                Some(j) => match &j.state {
+                    JobState::Done(r) => return Ok(r.clone()),
+                    JobState::Cancelled => bail!("{id} was cancelled"),
+                    JobState::Failed(e) => bail!("{id} failed: {e}"),
+                    _ => {}
+                },
+            }
+            s = self.inner.done.wait(s).unwrap();
+        }
+    }
+
+    /// Block until *any* job completes (in completion order) and return
+    /// its id; `None` once every submitted job is terminal and the
+    /// completion stream has been drained.
+    pub fn wait_next(&self) -> Option<JobId> {
+        let mut s = self.inner.state.lock().unwrap();
+        loop {
+            if let Some(id) = s.completions.pop_front() {
+                return Some(id);
+            }
+            if s.outstanding == 0 {
+                return None;
+            }
+            s = self.inner.done.wait(s).unwrap();
+        }
+    }
+
+    /// Cancel a job that has not completed. Queued jobs (and queued
+    /// continuations of a sharded job) never run; a shard already being
+    /// solved finishes on its worker and is discarded. Returns whether
+    /// the cancellation took effect (false once terminal).
+    pub fn cancel(&self, id: JobId) -> bool {
+        let mut s = self.inner.state.lock().unwrap();
+        let Some(job) = s.jobs.get_mut(&id) else {
+            return false;
+        };
+        if job.state.is_terminal() {
+            return false;
+        }
+        let was_queued = matches!(job.state, JobState::Queued);
+        job.state = JobState::Cancelled;
+        if was_queued {
+            s.queued_new -= 1;
+        }
+        // Drop the queue item eagerly so tombstones never count against
+        // `queue_depth` (a worker that already pulled the id discards it
+        // on seeing the terminal state).
+        s.queue.retain(|item| item.id != id);
+        s.outstanding -= 1;
+        s.completions.push_back(id);
+        self.inner.metrics.incr("service_cancelled", 1);
+        self.inner.metrics.set("service_queue_depth", s.queue.len() as f64);
+        self.inner.metrics.set("service_outstanding", s.outstanding as f64);
+        self.inner.done.notify_all();
+        true
+    }
+
+    fn signal_shutdown(&self) {
+        let mut s = self.inner.state.lock().unwrap();
+        s.shutdown = true;
+        drop(s);
+        self.inner.work.notify_all();
+        self.inner.done.notify_all();
+    }
+}
+
+impl Drop for SolveService {
+    fn drop(&mut self) {
+        self.signal_shutdown();
+        self.pool.join_all();
+    }
+}
+
+fn worker_loop(inner: &Inner) {
+    loop {
+        let id = {
+            let mut s = inner.state.lock().unwrap();
+            loop {
+                if s.shutdown {
+                    return;
+                }
+                if let Some(item) = s.queue.pop() {
+                    inner.metrics.set("service_queue_depth", s.queue.len() as f64);
+                    break item.id;
+                }
+                s = inner.work.wait(s).unwrap();
+            }
+        };
+        run_one(inner, id);
+    }
+}
+
+/// Advance a job by one shard (a monolithic job is a single shard).
+fn run_one(inner: &Inner, id: JobId) {
+    // -- claim the job; drop stale queue items of cancelled jobs.
+    let (req, pulled) = {
+        let mut s = inner.state.lock().unwrap();
+        let Some(job) = s.jobs.get_mut(&id) else { return };
+        if job.state.is_terminal() {
+            return;
+        }
+        let newly_started = matches!(job.state, JobState::Queued);
+        if newly_started {
+            job.state = JobState::Running;
+        }
+        if !job.started {
+            job.started = true;
+            inner.metrics.observe_secs("service_queue_wait_s", job.sw.elapsed_s());
+        }
+        let pulled = job.progress.as_ref().map(|p| {
+            let i = p.parts.len();
+            (p.grids[i].clone(), p.carried.clone())
+        });
+        let out = (job.req.clone(), pulled);
+        if newly_started {
+            s.queued_new -= 1;
+        }
+        out
+    };
+
+    let (grid, handoff) = match pulled {
+        Some(t) => t,
+        None => {
+            // First pickup: derive the grid and plan the shards. λ_max is
+            // a full `Xᵀy` product — never computed under the lock — and a
+            // panic here (e.g. a degenerate request asserting inside
+            // `lambda_grid`) must become a Failed job, not a dead worker.
+            let planned = catch_unwind(AssertUnwindSafe(|| {
+                let full = match &req.lambdas {
+                    Some(g) => g.clone(),
+                    None => lambda_max_grid(&req),
+                };
+                plan_shards(full.len(), req.shards.max(1))
+                    .into_iter()
+                    .map(|(a, b)| full[a..b].to_vec())
+                    .collect::<Vec<Vec<f64>>>()
+            }));
+            let mut s = inner.state.lock().unwrap();
+            let Some(job) = s.jobs.get_mut(&id) else { return };
+            if job.state.is_terminal() {
+                return; // cancelled while planning
+            }
+            let grids = match planned {
+                Ok(g) => g,
+                Err(payload) => {
+                    finish(inner, &mut s, id, Err(panic_message(payload)));
+                    return;
+                }
+            };
+            if grids.is_empty() {
+                // Degenerate empty grid: complete with an empty result.
+                let result =
+                    Arc::new(PathResult { lambdas: Vec::new(), results: Vec::new(), total_s: 0.0 });
+                finish(inner, &mut s, id, Ok(result));
+                return;
+            }
+            let first = grids[0].clone();
+            job.progress =
+                Some(ShardProgress { grids, parts: Vec::new(), carried: None });
+            (first, None)
+        }
+    };
+
+    // -- solve this shard outside the lock; a panic becomes a job failure
+    // instead of poisoning the service.
+    let sw = Stopwatch::start();
+    let solved = catch_unwind(AssertUnwindSafe(|| {
+        solve_any(&req.pb, &grid, &req.opts, req.solver, handoff.as_ref())
+    }));
+    let shard_secs = sw.elapsed_s();
+
+    // -- integrate the outcome.
+    let mut s = inner.state.lock().unwrap();
+    let Some(job) = s.jobs.get_mut(&id) else { return };
+    if job.state.is_terminal() {
+        return; // cancelled mid-solve: discard the work
+    }
+    match solved {
+        Err(payload) => {
+            finish(inner, &mut s, id, Err(panic_message(payload)));
+        }
+        Ok((part, carried)) => {
+            inner.metrics.incr("service_shards_solved", 1);
+            inner.metrics.observe_secs("service_shard_solve_s", shard_secs);
+            let progress = job.progress.as_mut().expect("job was planned");
+            progress.parts.push(part);
+            progress.carried = carried;
+            if progress.parts.len() == progress.grids.len() {
+                let parts = job.progress.take().expect("job was planned").parts;
+                finish(inner, &mut s, id, Ok(Arc::new(stitch(parts))));
+            } else {
+                // Pipeline the next shard: back of its priority class.
+                let priority = job.req.priority;
+                let seq = s.next_seq;
+                s.next_seq += 1;
+                s.queue.push(QueueItem { priority, seq, id });
+                inner.metrics.set("service_queue_depth", s.queue.len() as f64);
+                inner.work.notify_one();
+            }
+        }
+    }
+}
+
+/// Mark a non-terminal job terminal, publish its result (caching on
+/// success), and wake waiters. Caller holds the lock and has verified the
+/// job exists and is not terminal.
+fn finish(inner: &Inner, s: &mut Shared, id: JobId, outcome: Result<Arc<PathResult>, String>) {
+    let job = s.jobs.get_mut(&id).expect("caller verified the job exists");
+    let latency = job.sw.elapsed_s();
+    let cache_insert = match outcome {
+        Ok(result) => {
+            job.state = JobState::Done(result.clone());
+            inner.metrics.incr("service_completed", 1);
+            inner.metrics.observe_secs("service_job_latency_s", latency);
+            Some((job.req.cache_key(), job.req.pb.clone(), result))
+        }
+        Err(msg) => {
+            job.state = JobState::Failed(msg);
+            inner.metrics.incr("service_failed", 1);
+            None
+        }
+    };
+    if let Some((key, pb, result)) = cache_insert {
+        s.cache.insert(key, CacheEntry { _pb: pb, result });
+    }
+    s.outstanding -= 1;
+    s.completions.push_back(id);
+    inner.metrics.set("service_outstanding", s.outstanding as f64);
+    inner.done.notify_all();
+}
+
+/// Derive the geometric grid of a request (used when `lambdas` is `None`).
+fn lambda_max_grid(req: &SolveRequest) -> Vec<f64> {
+    lambda_grid(req.pb.lambda_max(), req.opts.delta, req.opts.t_count)
+}
+
+/// Dispatch one λ-range solve to the request's backend.
+fn solve_any(
+    pb: &AnyProblem,
+    grid: &[f64],
+    opts: &PathOptions,
+    solver: SolverKind,
+    handoff: Option<&DualHandoff>,
+) -> (PathResult, Option<DualHandoff>) {
+    match pb {
+        AnyProblem::Dense(p) => solve_path_with_handoff(p, grid, opts, solver, handoff),
+        AnyProblem::Csc(p) => solve_path_with_handoff(p, grid, opts, solver, handoff),
+    }
+}
+
+fn panic_message(p: Box<dyn std::any::Any + Send>) -> String {
+    p.downcast_ref::<String>()
+        .cloned()
+        .or_else(|| p.downcast_ref::<&str>().map(|s| s.to_string()))
+        .unwrap_or_else(|| "worker panicked".to_string())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::{generate, SyntheticConfig};
+    use crate::screening::RuleKind;
+    use crate::solver::cd::SolveOptions;
+
+    fn small_problem(seed: u64) -> Arc<SglProblem> {
+        let cfg = SyntheticConfig {
+            n: 30,
+            n_groups: 8,
+            group_size: 3,
+            gamma1: 3,
+            gamma2: 2,
+            seed,
+            ..Default::default()
+        };
+        let d = generate(&cfg);
+        Arc::new(SglProblem::new(d.dataset.x, d.dataset.y, d.dataset.groups, 0.3))
+    }
+
+    fn req(pb: &Arc<SglProblem>, tol: f64) -> SolveRequest {
+        SolveRequest {
+            label: format!("t{tol:.0e}"),
+            ..SolveRequest::new(
+                AnyProblem::Dense(pb.clone()),
+                PathOptions {
+                    delta: 1.5,
+                    t_count: 5,
+                    solve: SolveOptions { tol, record_history: false, ..Default::default() },
+                },
+            )
+        }
+    }
+
+    #[test]
+    fn submit_wait_poll_lifecycle() {
+        let pb = small_problem(1);
+        let svc = SolveService::start(ServiceConfig { workers: 2, queue_depth: 8 });
+        let id = svc.submit(req(&pb, 1e-6)).unwrap();
+        let res = svc.wait(id).unwrap();
+        assert!(res.all_converged());
+        assert_eq!(res.lambdas.len(), 5);
+        assert_eq!(svc.poll(id), Some(JobStatus::Done));
+        assert_eq!(svc.label(id), "t1e-6");
+        assert!(!svc.was_cached(id));
+        assert!(svc.result(id).is_some());
+        assert!(svc.poll(JobId(999)).is_none());
+        assert!(svc.wait(JobId(999)).is_err());
+    }
+
+    #[test]
+    fn fingerprints_separate_configs_and_instances() {
+        let pb = small_problem(2);
+        let a = req(&pb, 1e-6);
+        let b = req(&pb, 1e-6);
+        assert_eq!(a.fingerprint(), b.fingerprint());
+        assert_ne!(a.fingerprint(), req(&pb, 1e-8).fingerprint());
+        let mut c = req(&pb, 1e-6);
+        c.shards = 4;
+        assert_ne!(a.fingerprint(), c.fingerprint());
+        // Same data, different instance: different identity.
+        let pb2 = Arc::new(SglProblem::clone(&pb));
+        assert_ne!(a.fingerprint(), req(&pb2, 1e-6).fingerprint());
+        // Label and priority are not part of the fingerprint.
+        let mut d = req(&pb, 1e-6);
+        d.label = "other".into();
+        d.priority = 9;
+        assert_eq!(a.fingerprint(), d.fingerprint());
+    }
+
+    #[test]
+    fn wait_next_drains_to_none() {
+        let pb = small_problem(3);
+        let svc = SolveService::start(ServiceConfig { workers: 2, queue_depth: 8 });
+        let ids: Vec<JobId> =
+            (0..3).map(|k| svc.submit(req(&pb, 10f64.powi(-4 - k))).unwrap()).collect();
+        let mut seen = Vec::new();
+        while let Some(id) = svc.wait_next() {
+            seen.push(id);
+        }
+        seen.sort();
+        assert_eq!(seen, ids);
+        // Drained: an immediate second call returns None, not a hang.
+        assert_eq!(svc.wait_next(), None);
+    }
+
+    #[test]
+    fn failed_solve_is_reported_not_propagated() {
+        let pb = small_problem(4);
+        let svc = SolveService::start(ServiceConfig { workers: 1, queue_depth: 4 });
+        // An increasing grid trips the path engine's assertion: the panic
+        // must surface as a Failed job, and the worker must survive it.
+        let mut bad = req(&pb, 1e-6);
+        bad.lambdas = Some(vec![1.0, 2.0]);
+        let bad_id = svc.submit(bad).unwrap();
+        let err = svc.wait(bad_id).unwrap_err();
+        assert!(format!("{err}").contains("failed"), "{err}");
+        assert_eq!(svc.poll(bad_id), Some(JobStatus::Failed));
+        // The worker is still alive and serves the next job.
+        let ok_id = svc.submit(req(&pb, 1e-6)).unwrap();
+        assert!(svc.wait(ok_id).unwrap().all_converged());
+        assert_eq!(svc.metrics().counter("service_failed"), 1);
+    }
+
+    #[test]
+    fn shutdown_rejects_new_submissions() {
+        let pb = small_problem(5);
+        let svc = SolveService::start(ServiceConfig { workers: 1, queue_depth: 4 });
+        svc.signal_shutdown();
+        assert!(svc.submit(req(&pb, 1e-6)).is_err());
+    }
+}

@@ -1,0 +1,151 @@
+//! λ-range sharding: split one long warm-started path into `k` contiguous
+//! λ-ranges solved as pipelined jobs, each shard resuming from its
+//! predecessor's terminal β and dual point ([`DualHandoff`]).
+//!
+//! The sequential GAP-safe rule (paper Alg. 2 and the journal follow-up,
+//! arXiv:1611.05780) screens each λ_t from the dual point carried out of
+//! λ_{t−1}; warm starts make that gap small, which is what makes path
+//! solving cheap. A shard boundary must preserve exactly that contract,
+//! and [`crate::solver::path::solve_path_with_handoff`] does: the carried
+//! dual point is replayed into the next shard's rule via
+//! `on_solve_complete`, so screening fires across the boundary exactly as
+//! it does mid-path and the sharded solve is bit-identical to the
+//! monolithic one. Within one machine the shards of a single path run
+//! sequentially (each needs its predecessor's handoff) — the point of the
+//! split is that a boundary costs nothing, so a huge path can be spread
+//! across workers or machines with only the small `DualHandoff` (β plus a
+//! dual snapshot, `O(n + p)` floats) on the wire.
+
+use crate::linalg::Design;
+use crate::solver::path::{
+    solve_path_with_handoff, DualHandoff, PathOptions, PathResult,
+};
+use crate::solver::problem::SglProblem;
+use crate::solver::SolverKind;
+
+/// Split `0..n` into `min(k, n)` contiguous half-open ranges whose sizes
+/// differ by at most one (earlier shards take the extra grid points —
+/// they also carry the cheap high-λ end of the path).
+pub fn plan_shards(n: usize, k: usize) -> Vec<(usize, usize)> {
+    if n == 0 {
+        return Vec::new();
+    }
+    let k = k.max(1).min(n);
+    let base = n / k;
+    let extra = n % k;
+    let mut out = Vec::with_capacity(k);
+    let mut start = 0;
+    for i in 0..k {
+        let len = base + usize::from(i < extra);
+        out.push((start, start + len));
+        start += len;
+    }
+    out
+}
+
+/// Concatenate shard results (already in λ order) back into one path
+/// result. `total_s` sums the shards' solver wall-clock — queue time
+/// between pipelined shards is deliberately excluded (the service reports
+/// end-to-end latency separately).
+pub fn stitch(parts: Vec<PathResult>) -> PathResult {
+    let mut lambdas = Vec::new();
+    let mut results = Vec::new();
+    let mut total_s = 0.0;
+    for p in parts {
+        lambdas.extend(p.lambdas);
+        results.extend(p.results);
+        total_s += p.total_s;
+    }
+    PathResult { lambdas, results, total_s }
+}
+
+/// Single-machine reference for the sharded pipeline: plan the ranges,
+/// solve each shard with the dual-point handoff, stitch. Produces the
+/// same coefficient path as the monolithic engine (the equivalence the
+/// service's pipelined execution relies on).
+pub fn solve_path_sharded<D: Design>(
+    pb: &SglProblem<D>,
+    lambdas: &[f64],
+    opts: &PathOptions,
+    solver: SolverKind,
+    k: usize,
+) -> PathResult {
+    let mut parts = Vec::new();
+    let mut carried: Option<DualHandoff> = None;
+    for (a, b) in plan_shards(lambdas.len(), k) {
+        let (part, h) =
+            solve_path_with_handoff(pb, &lambdas[a..b], opts, solver, carried.as_ref());
+        carried = h;
+        parts.push(part);
+    }
+    stitch(parts)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::{generate, SyntheticConfig};
+    use crate::screening::RuleKind;
+    use crate::solver::cd::SolveOptions;
+    use crate::solver::path::solve_path_on_grid;
+    use crate::solver::problem::lambda_grid;
+
+    #[test]
+    fn plan_covers_everything_exactly_once() {
+        for (n, k) in [(10, 3), (7, 7), (100, 4), (5, 1), (6, 2)] {
+            let plan = plan_shards(n, k);
+            assert_eq!(plan.len(), k.min(n));
+            assert_eq!(plan[0].0, 0);
+            assert_eq!(plan.last().unwrap().1, n);
+            for w in plan.windows(2) {
+                assert_eq!(w[0].1, w[1].0, "ranges must be contiguous");
+            }
+            let sizes: Vec<usize> = plan.iter().map(|(a, b)| b - a).collect();
+            let min = *sizes.iter().min().unwrap();
+            let max = *sizes.iter().max().unwrap();
+            assert!(max - min <= 1, "near-equal sizes: {sizes:?}");
+            assert!(min >= 1);
+        }
+    }
+
+    #[test]
+    fn plan_edge_cases() {
+        assert!(plan_shards(0, 4).is_empty());
+        assert_eq!(plan_shards(3, 0), vec![(0, 3)]);
+        assert_eq!(plan_shards(2, 5), vec![(0, 1), (1, 2)]);
+    }
+
+    #[test]
+    fn sharded_small_path_matches_monolithic() {
+        let cfg = SyntheticConfig {
+            n: 30,
+            n_groups: 10,
+            group_size: 3,
+            gamma1: 3,
+            gamma2: 2,
+            seed: 9,
+            ..Default::default()
+        };
+        let d = generate(&cfg);
+        let pb = SglProblem::new(d.dataset.x, d.dataset.y, d.dataset.groups, 0.3);
+        let lambdas = lambda_grid(pb.lambda_max(), 1.5, 7);
+        let opts = PathOptions {
+            delta: 1.5,
+            t_count: 7,
+            solve: SolveOptions {
+                rule: RuleKind::GapSafeSeq,
+                tol: 1e-8,
+                record_history: false,
+                ..Default::default()
+            },
+        };
+        let mono = solve_path_on_grid(&pb, &lambdas, &opts);
+        let sharded = solve_path_sharded(&pb, &lambdas, &opts, SolverKind::Cd, 3);
+        assert_eq!(sharded.lambdas, mono.lambdas);
+        assert_eq!(sharded.results.len(), mono.results.len());
+        for (a, b) in mono.results.iter().zip(&sharded.results) {
+            assert_eq!(a.beta, b.beta);
+            assert_eq!(a.epochs, b.epochs);
+        }
+    }
+}

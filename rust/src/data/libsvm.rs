@@ -1,0 +1,231 @@
+//! libsvm/svmlight text loader — parses `label idx:val idx:val …` lines
+//! straight into [`CscMatrix`] arrays, never materializing a dense
+//! design. The ROADMAP's sparse-loader item: real bag-of-words datasets
+//! reach the CLI and the solve service at `O(nnz)` memory.
+//!
+//! Format notes:
+//! - one sample per line: a numeric label followed by `index:value`
+//!   pairs with strictly increasing indices (the libsvm convention;
+//!   violations are parse errors, never silent misreads);
+//! - `#` starts a comment (whole-line or trailing); blank lines are
+//!   skipped; `qid:…` ranking tags are ignored;
+//! - indices are 1-based (standard); any explicit index `0` switches the
+//!   whole file to 0-based;
+//! - explicit zero values are dropped from the stored structure;
+//! - the feature count is padded up to a multiple of `group_size` with
+//!   all-zero tail columns so a uniform [`Groups`] partition always fits
+//!   (zero columns have zero norms and are never selected).
+
+use super::SparseDataset;
+use crate::linalg::CscMatrix;
+use crate::solver::groups::Groups;
+use anyhow::{anyhow, bail, ensure, Context, Result};
+use std::path::Path;
+
+/// Read a libsvm/svmlight file into a CSC-backed dataset with uniform
+/// groups of `group_size` features.
+pub fn read_libsvm(path: &Path, group_size: usize) -> Result<SparseDataset> {
+    let text = std::fs::read_to_string(path)
+        .with_context(|| format!("reading libsvm file {}", path.display()))?;
+    let mut d = parse_libsvm(&text, group_size)
+        .with_context(|| format!("parsing {}", path.display()))?;
+    d.name = format!("libsvm({})", path.display());
+    Ok(d)
+}
+
+/// Parse libsvm/svmlight text. See the module docs for format rules.
+pub fn parse_libsvm(text: &str, group_size: usize) -> Result<SparseDataset> {
+    ensure!(group_size >= 1, "group size must be >= 1");
+    let mut y: Vec<f64> = Vec::new();
+    // Per-sample raw (index, value) entries, indices as written.
+    let mut rows: Vec<Vec<(usize, f64)>> = Vec::new();
+    let mut max_index = 0usize;
+    let mut any_feature = false;
+    let mut saw_zero = false;
+    for (lineno, raw) in text.lines().enumerate() {
+        let line = raw.split('#').next().unwrap_or("").trim();
+        if line.is_empty() {
+            continue;
+        }
+        let mut toks = line.split_whitespace();
+        let label_tok = toks.next().expect("non-empty line has a first token");
+        let label: f64 = label_tok
+            .parse()
+            .map_err(|_| anyhow!("line {}: bad label {label_tok:?}", lineno + 1))?;
+        let mut feats: Vec<(usize, f64)> = Vec::new();
+        let mut prev: Option<usize> = None;
+        for tok in toks {
+            if tok.starts_with("qid:") {
+                continue; // ranking tag: irrelevant to regression
+            }
+            let Some((i, v)) = tok.split_once(':') else {
+                bail!("line {}: expected index:value, got {tok:?}", lineno + 1);
+            };
+            let idx: usize = i
+                .parse()
+                .map_err(|_| anyhow!("line {}: bad feature index {i:?}", lineno + 1))?;
+            let val: f64 = v
+                .parse()
+                .map_err(|_| anyhow!("line {}: bad feature value {v:?}", lineno + 1))?;
+            if let Some(p) = prev {
+                ensure!(
+                    idx > p,
+                    "line {}: feature indices must be strictly increasing ({p} then {idx})",
+                    lineno + 1
+                );
+            }
+            prev = Some(idx);
+            any_feature = true;
+            saw_zero |= idx == 0;
+            max_index = max_index.max(idx);
+            if val != 0.0 {
+                feats.push((idx, val));
+            }
+        }
+        y.push(label);
+        rows.push(feats);
+    }
+    ensure!(!y.is_empty(), "no samples found");
+    ensure!(any_feature, "no feature entries found");
+
+    // 1-based unless the file proves otherwise with an explicit index 0.
+    let offset = usize::from(!saw_zero);
+    let n_feats = max_index + 1 - offset;
+    ensure!(n_feats >= 1, "no feature columns found");
+    // Pad p to a multiple of the group size with all-zero tail columns.
+    let p = n_feats.div_ceil(group_size) * group_size;
+    let n = y.len();
+
+    // Counting sort into CSC: per-column counts, prefix-sum, then fill in
+    // sample order — so row indices are strictly increasing within every
+    // column (each sample contributes at most one entry per column).
+    let mut counts = vec![0usize; p];
+    for r in &rows {
+        for &(idx, _) in r {
+            counts[idx - offset] += 1;
+        }
+    }
+    let mut indptr = vec![0usize; p + 1];
+    for j in 0..p {
+        indptr[j + 1] = indptr[j] + counts[j];
+    }
+    let nnz = indptr[p];
+    let mut indices = vec![0usize; nnz];
+    let mut values = vec![0.0f64; nnz];
+    let mut cursor = indptr.clone();
+    for (i, r) in rows.iter().enumerate() {
+        for &(idx, v) in r {
+            let j = idx - offset;
+            indices[cursor[j]] = i;
+            values[cursor[j]] = v;
+            cursor[j] += 1;
+        }
+    }
+    let x = CscMatrix::from_raw(n, p, indptr, indices, values);
+    let groups = Groups::uniform(p / group_size, group_size);
+    Ok(SparseDataset { name: "libsvm".into(), x, y, groups })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::Design;
+
+    #[test]
+    fn parses_one_based_text_and_pads_to_group_size() {
+        let text = "1 1:0.5 3:2.0\n-1 2:1.0\n";
+        let d = parse_libsvm(text, 2).unwrap();
+        assert_eq!(d.y, vec![1.0, -1.0]);
+        // 3 features padded to 4 columns = 2 groups of 2.
+        assert_eq!(d.x.n_rows(), 2);
+        assert_eq!(d.x.n_cols(), 4);
+        assert_eq!(d.groups.n_groups(), 2);
+        assert_eq!(d.x.nnz(), 3);
+        let dense = d.x.to_dense();
+        assert_eq!(dense.get(0, 0), 0.5);
+        assert_eq!(dense.get(0, 2), 2.0);
+        assert_eq!(dense.get(1, 1), 1.0);
+        assert_eq!(dense.get(0, 3), 0.0);
+        assert_eq!(dense.get(1, 3), 0.0);
+    }
+
+    #[test]
+    fn zero_index_switches_to_zero_based() {
+        let d = parse_libsvm("0.5 0:1.0 2:3.0\n1.5 1:2.0\n", 3).unwrap();
+        assert_eq!(d.x.n_cols(), 3);
+        let dense = d.x.to_dense();
+        assert_eq!(dense.get(0, 0), 1.0);
+        assert_eq!(dense.get(0, 2), 3.0);
+        assert_eq!(dense.get(1, 1), 2.0);
+    }
+
+    #[test]
+    fn comments_blanks_qid_and_explicit_zeros() {
+        let text = "# header comment\n\n2.0 qid:7 1:1.0 2:0.0 3:4.0  # trailing\n";
+        let d = parse_libsvm(text, 1).unwrap();
+        assert_eq!(d.y, vec![2.0]);
+        assert_eq!(d.x.n_cols(), 3);
+        // The explicit zero at 2 is dropped from storage.
+        assert_eq!(d.x.nnz(), 2);
+    }
+
+    #[test]
+    fn csc_columns_are_row_sorted() {
+        let text = "1 1:1.0 2:2.0\n2 1:3.0\n3 2:4.0 3:5.0\n";
+        let d = parse_libsvm(text, 1).unwrap();
+        for j in 0..d.x.n_cols() {
+            let (rows, _) = d.x.col(j);
+            for w in rows.windows(2) {
+                assert!(w[0] < w[1], "col {j}: {rows:?}");
+            }
+        }
+        // Column 0 holds samples 0 and 1; column 1 samples 0 and 2.
+        assert_eq!(d.x.col(0).0, &[0, 1]);
+        assert_eq!(d.x.col(1).0, &[0, 2]);
+        assert_eq!(d.x.col(2).0, &[2]);
+    }
+
+    #[test]
+    fn loaded_problem_solves_end_to_end() {
+        // A tiny regression y ≈ x_1 - x_2 with sparse one-based rows.
+        let text = "1.0 1:1.0\n-1.0 2:1.0\n0.0 1:1.0 2:1.0\n2.0 1:2.0\n";
+        let d = parse_libsvm(text, 1).unwrap();
+        let pb = crate::solver::problem::SglProblem::new(d.x, d.y, d.groups, 0.5);
+        let res = crate::solver::cd::solve(
+            &pb,
+            0.1 * pb.lambda_max(),
+            None,
+            &crate::solver::cd::SolveOptions::default(),
+        );
+        assert!(res.converged);
+    }
+
+    #[test]
+    fn malformed_inputs_are_errors() {
+        assert!(parse_libsvm("", 1).is_err(), "empty file");
+        assert!(parse_libsvm("# only comments\n", 1).is_err());
+        assert!(parse_libsvm("abc 1:1.0\n", 1).is_err(), "bad label");
+        assert!(parse_libsvm("1 5\n", 1).is_err(), "missing colon");
+        assert!(parse_libsvm("1 x:1.0\n", 1).is_err(), "bad index");
+        assert!(parse_libsvm("1 1:zz\n", 1).is_err(), "bad value");
+        assert!(parse_libsvm("1 3:1.0 2:1.0\n", 1).is_err(), "decreasing indices");
+        assert!(parse_libsvm("1 2:1.0 2:3.0\n", 1).is_err(), "duplicate index");
+        assert!(parse_libsvm("1\n2\n", 1).is_err(), "labels but no features");
+        assert!(parse_libsvm("1 1:1.0\n", 0).is_err(), "zero group size");
+    }
+
+    #[test]
+    fn read_libsvm_reports_path_in_errors_and_name() {
+        let dir = std::env::temp_dir();
+        let path = dir.join("sgl_libsvm_test_input.txt");
+        std::fs::write(&path, "1 1:1.0 2:-2.0\n-1 2:0.5\n").unwrap();
+        let d = read_libsvm(&path, 2).unwrap();
+        assert!(d.name.contains("sgl_libsvm_test_input.txt"));
+        assert_eq!(d.n(), 2);
+        assert_eq!(d.p(), 2);
+        std::fs::remove_file(&path).ok();
+        let missing = dir.join("sgl_libsvm_does_not_exist.txt");
+        let err = read_libsvm(&missing, 1).unwrap_err();
+        assert!(format!("{err:#}").contains("sgl_libsvm_does_not_exist"));
+    }
+}

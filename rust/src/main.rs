@@ -7,23 +7,33 @@
 //! - `cv`          (λ, τ)-grid validation (Fig. 3a protocol)
 //! - `lambda-max`  critical parameter via Algorithm 1 (Eq. 22)
 //! - `compare`     screening-rule timing comparison (Fig. 2c / 3b)
+//! - `serve`       async solve service: submit a heterogeneous batch and
+//!   stream completions (queue + result store + fingerprint cache +
+//!   λ-sharded paths with dual-point handoff)
 //! - `xla`         solve through the AOT artifacts via PJRT (three-layer path)
 //!
 //! Datasets come from a config file (`--config run.toml`) or the built-in
-//! synthetic/climate generators. `--design dense|csc` selects the design
-//! backend (CSC stores only the nonzero entries, so epochs cost `O(nnz)`),
-//! `--algo cd|ista|fista` the inner solver; both are also available as
-//! `[dataset] design` / `[solver] algo` TOML keys.
+//! synthetic/climate generators; `--dataset libsvm --libsvm-path f.svm`
+//! loads svmlight text straight into the CSC backend (no dense detour).
+//! `--design dense|csc` selects the design backend (CSC stores only the
+//! nonzero entries, so epochs cost `O(nnz)`), `--algo cd|ista|fista` the
+//! inner solver; both are also available as `[dataset] design` /
+//! `[solver] algo` TOML keys, and the service knobs as `[service]
+//! workers/queue_depth/shards`.
 
 use anyhow::{bail, Context, Result};
 use sgl::config::{
     parse_design_backend, DatasetChoice, DesignBackend, RunConfig, UnknownBackendError,
 };
 use sgl::coordinator::jobs::{run_rule_comparison, RuleComparisonJob};
+use sgl::coordinator::metrics::Metrics;
 use sgl::coordinator::report::render_rule_timings;
+use sgl::coordinator::service::{
+    AnyProblem, JobId, QueueFullError, ServiceConfig, SolveRequest, SolveService,
+};
 use sgl::data::climate::{self, ClimateConfig};
 use sgl::data::synthetic::{self, SyntheticConfig};
-use sgl::data::{csvio, Dataset};
+use sgl::data::{csvio, libsvm, Dataset, SparseDataset};
 use sgl::linalg::{CscMatrix, Design};
 use sgl::screening::RuleKind;
 use sgl::solver::cd::SolveOptions;
@@ -33,12 +43,15 @@ use sgl::solver::path::{solve_path_with, PathOptions};
 use sgl::solver::problem::{lambda_grid, SglProblem};
 use sgl::solver::SolverKind;
 use sgl::util::cli::{Args, OptSpec};
-use sgl::util::pool::default_threads;
+use std::collections::HashMap;
+use std::sync::Arc;
 
 fn specs() -> Vec<OptSpec> {
     vec![
         OptSpec { name: "config", help: "TOML config file", takes_value: true, default: None },
-        OptSpec { name: "dataset", help: "synthetic|climate", takes_value: true, default: Some("synthetic") },
+        OptSpec { name: "dataset", help: "synthetic|climate|libsvm", takes_value: true, default: Some("synthetic") },
+        OptSpec { name: "libsvm-path", help: "libsvm/svmlight file for --dataset libsvm", takes_value: true, default: None },
+        OptSpec { name: "group-size", help: "uniform group size for libsvm datasets", takes_value: true, default: None },
         OptSpec { name: "design", help: "dense|csc design backend", takes_value: true, default: None },
         OptSpec { name: "algo", help: "cd|ista|fista inner solver", takes_value: true, default: None },
         OptSpec { name: "tau", help: "l1/group mixing in [0,1]", takes_value: true, default: None },
@@ -49,6 +62,9 @@ fn specs() -> Vec<OptSpec> {
         OptSpec { name: "t-count", help: "path grid size", takes_value: true, default: None },
         OptSpec { name: "seed", help: "dataset seed", takes_value: true, default: None },
         OptSpec { name: "threads", help: "worker threads (0 = auto)", takes_value: true, default: None },
+        OptSpec { name: "workers", help: "serve: worker threads (0 = auto)", takes_value: true, default: None },
+        OptSpec { name: "queue-depth", help: "serve: max queued jobs", takes_value: true, default: None },
+        OptSpec { name: "shards", help: "serve: lambda-range shards per path", takes_value: true, default: None },
         OptSpec { name: "scale", help: "small|paper dataset scale", takes_value: true, default: Some("small") },
         OptSpec { name: "out", help: "output CSV path", takes_value: true, default: None },
         OptSpec { name: "artifacts", help: "artifacts dir for `xla`", takes_value: true, default: Some("artifacts") },
@@ -103,15 +119,58 @@ fn load_config(args: &Args) -> Result<RunConfig> {
     if let Some(v) = args.get("threads") {
         cfg.threads = v.parse().context("--threads")?;
     }
+    if let Some(v) = args.get("workers") {
+        cfg.service_workers = v.parse().context("--workers")?;
+    }
+    if let Some(v) = args.get("queue-depth") {
+        cfg.service_queue_depth = v.parse().context("--queue-depth")?;
+    }
+    if let Some(v) = args.get("shards") {
+        cfg.service_shards = v.parse().context("--shards")?;
+    }
     if args.get("config").is_none() {
         cfg.dataset = match args.get_or("dataset", "synthetic").as_str() {
             "synthetic" => DatasetChoice::Synthetic,
             "climate" => DatasetChoice::Climate,
+            "libsvm" => {
+                // Sparse loaders default to the CSC backend; an explicit
+                // --design still wins (it was applied above).
+                if args.get("design").is_none() {
+                    cfg.design = DesignBackend::Csc;
+                }
+                DatasetChoice::Libsvm {
+                    path: args
+                        .get("libsvm-path")
+                        .context("--dataset libsvm requires --libsvm-path")?,
+                    group_size: match args.get("group-size") {
+                        Some(v) => v.parse().context("--group-size")?,
+                        None => 1,
+                    },
+                }
+            }
             other => bail!("unknown dataset {other} (use a config file for csv)"),
         };
     }
     cfg.validate()?;
     Ok(cfg)
+}
+
+/// What a loader produced: a dense dataset or a CSC one (libsvm). The
+/// backend the solve runs on is still `cfg.design` — `with_backend!`
+/// converts only when the two disagree, so libsvm → CSC never touches a
+/// dense matrix.
+enum LoadedData {
+    Dense(Dataset),
+    Sparse(SparseDataset),
+}
+
+fn build_data(cfg: &RunConfig, scale: &str) -> Result<LoadedData> {
+    Ok(match &cfg.dataset {
+        DatasetChoice::Libsvm { path, group_size } => LoadedData::Sparse(
+            libsvm::read_libsvm(std::path::Path::new(path), *group_size)?,
+        ),
+        _ => LoadedData::Dense(build_dataset(cfg, scale)?),
+    })
 }
 
 fn build_dataset(cfg: &RunConfig, scale: &str) -> Result<Dataset> {
@@ -155,6 +214,9 @@ fn build_dataset(cfg: &RunConfig, scale: &str) -> Result<Dataset> {
             anyhow::ensure!(x.n_cols() % group_size == 0, "p not divisible by group size");
             let groups = Groups::uniform(x.n_cols() / group_size, *group_size);
             Dataset { name: format!("csv({x_path})"), x, y, groups }
+        }
+        DatasetChoice::Libsvm { .. } => {
+            bail!("libsvm datasets are sparse-loaded; route through build_data")
         }
     })
 }
@@ -248,6 +310,171 @@ fn cmd_path<D: Design>(pb: &SglProblem<D>, cfg: &RunConfig, args: &Args) -> Resu
     Ok(())
 }
 
+/// `serve`: spin up the async solve service, submit a heterogeneous batch
+/// (mixed rule × tolerance × solver × backend, one λ-sharded path, one
+/// duplicate to exercise the fingerprint cache) and stream completions as
+/// they land, then dump the service metrics.
+fn cmd_serve(data: LoadedData, cfg: &RunConfig) -> Result<()> {
+    // A dense-loaded dataset serves both backends side by side; a
+    // sparse-loaded one (libsvm) stays CSC end to end unless the user
+    // explicitly asked for the dense backend (same contract as
+    // `with_backend!`), in which case dense jobs join the batch too.
+    let (dense_pb, csc_pb): (Option<Arc<SglProblem>>, Arc<SglProblem<CscMatrix>>) = match data
+    {
+        LoadedData::Dense(d) => {
+            let csc = CscMatrix::from_dense(&d.x);
+            (
+                Some(Arc::new(SglProblem::new(d.x, d.y.clone(), d.groups.clone(), cfg.tau))),
+                Arc::new(SglProblem::new(csc, d.y, d.groups, cfg.tau)),
+            )
+        }
+        LoadedData::Sparse(s) => {
+            let dense = match cfg.design {
+                DesignBackend::Dense => Some(Arc::new(SglProblem::new(
+                    s.x.to_dense(),
+                    s.y.clone(),
+                    s.groups.clone(),
+                    cfg.tau,
+                ))),
+                DesignBackend::Csc => None,
+            };
+            (dense, Arc::new(SglProblem::new(s.x, s.y, s.groups, cfg.tau)))
+        }
+    };
+    let metrics = Arc::new(Metrics::new());
+    let svc = SolveService::with_metrics(
+        ServiceConfig { workers: cfg.service_workers, queue_depth: cfg.service_queue_depth },
+        metrics.clone(),
+    );
+    println!(
+        "service up: {} workers, queue depth {}, n={}, p={}",
+        svc.workers(),
+        cfg.service_queue_depth,
+        csc_pb.n(),
+        csc_pb.p()
+    );
+
+    let make = |pb: AnyProblem, rule: RuleKind, tol: f64, solver: SolverKind, shards: usize| {
+        SolveRequest {
+            solver,
+            shards,
+            label: format!(
+                "{}/{}/{}@{tol:.0e}{}",
+                pb.backend_name(),
+                solver.name(),
+                rule.name(),
+                if shards > 1 { format!("/k{shards}") } else { String::new() }
+            ),
+            ..SolveRequest::new(
+                pb,
+                PathOptions {
+                    delta: cfg.delta,
+                    t_count: cfg.t_count,
+                    solve: SolveOptions {
+                        tol,
+                        fce: cfg.fce,
+                        max_epochs: cfg.max_epochs,
+                        rule,
+                        record_history: false,
+                    },
+                },
+            )
+        }
+    };
+
+    // Heterogeneous batch: rules × tolerances × solvers × backends.
+    let mut batch: Vec<SolveRequest> = Vec::new();
+    for rule in [RuleKind::GapSafe, RuleKind::GapSafeSeq] {
+        for tol in [1e-4, 1e-6] {
+            for solver in [SolverKind::Cd, SolverKind::Fista] {
+                batch.push(make(AnyProblem::Csc(csc_pb.clone()), rule, tol, solver, 1));
+                if let Some(dp) = &dense_pb {
+                    batch.push(make(AnyProblem::Dense(dp.clone()), rule, tol, solver, 1));
+                }
+            }
+        }
+    }
+    // One λ-sharded path: the dual-point handoff pipeline.
+    if cfg.service_shards > 1 {
+        batch.push(make(
+            AnyProblem::Csc(csc_pb.clone()),
+            RuleKind::GapSafeSeq,
+            cfg.tol,
+            SolverKind::Cd,
+            cfg.service_shards,
+        ));
+    }
+    // A duplicate of the first request: once its twin completes, this is
+    // answered from the fingerprint cache without re-solving.
+    let dup = batch[0].clone();
+
+    let mut labels: HashMap<JobId, String> = HashMap::new();
+    for req in batch {
+        let id = submit_draining(&svc, &mut labels, req)?;
+        println!("submitted {id}: {}", labels[&id]);
+    }
+    // Stream completions in the order they land.
+    stream_completions(&svc, &mut labels);
+
+    let mut dup = dup;
+    dup.label = format!("{} (duplicate)", dup.label);
+    let dup_id = submit_draining(&svc, &mut labels, dup)?;
+    stream_completions(&svc, &mut labels);
+    println!(
+        "cache hits: {} (duplicate {} served without re-solving: {})",
+        metrics.counter("service_cache_hits"),
+        dup_id,
+        svc.was_cached(dup_id),
+    );
+    println!("\nservice metrics:\n{}", metrics.render_text());
+    Ok(())
+}
+
+/// Submit with backpressure: a full queue ([`QueueFullError`]) drains one
+/// completion (printing it) and retries instead of aborting the demo.
+fn submit_draining(
+    svc: &SolveService,
+    labels: &mut HashMap<JobId, String>,
+    req: SolveRequest,
+) -> Result<JobId> {
+    let label = req.label.clone();
+    loop {
+        match svc.submit(req.clone()) {
+            Ok(id) => {
+                labels.insert(id, label);
+                return Ok(id);
+            }
+            Err(e) if e.is::<QueueFullError>() => match svc.wait_next() {
+                Some(done) => print_completion(svc, labels, done),
+                None => std::thread::sleep(std::time::Duration::from_millis(20)),
+            },
+            Err(e) => return Err(e).with_context(|| format!("submitting {label}")),
+        }
+    }
+}
+
+/// Print each completed job as [`SolveService::wait_next`] yields it.
+fn stream_completions(svc: &SolveService, labels: &mut HashMap<JobId, String>) {
+    while let Some(id) = svc.wait_next() {
+        print_completion(svc, labels, id);
+    }
+}
+
+fn print_completion(svc: &SolveService, labels: &mut HashMap<JobId, String>, id: JobId) {
+    let label = labels.remove(&id).unwrap_or_else(|| "?".into());
+    match svc.result(id) {
+        Some(r) => println!(
+            "completed {id} {label}: {} lambdas, {:.3}s solve, {} epochs, converged={}{}",
+            r.lambdas.len(),
+            r.total_s,
+            r.total_epochs(),
+            r.all_converged(),
+            if svc.was_cached(id) { " [cache]" } else { "" }
+        ),
+        None => println!("finished {id} {label}: {:?}", svc.poll(id)),
+    }
+}
+
 /// `compare` on any backend.
 fn cmd_compare<D: Design>(pb: SglProblem<D>, cfg: &RunConfig, threads: usize) {
     let job = RuleComparisonJob {
@@ -263,21 +490,33 @@ fn cmd_compare<D: Design>(pb: SglProblem<D>, cfg: &RunConfig, threads: usize) {
     println!("{}", render_rule_timings(&timings));
 }
 
-/// Build the problem on the configured backend and run `$body` with `$pb`
-/// bound to it — the one place the dense/CSC choice is expanded, so every
-/// subcommand stays backend-complete by construction. (`$body` is
-/// monomorphized once per backend through the generic `cmd_*` helpers.)
-macro_rules! with_design {
-    ($cfg:expr, $data:expr, |$pb:ident| $body:expr) => {{
-        let data = $data;
-        match $cfg.design {
-            DesignBackend::Dense => {
-                let $pb = SglProblem::new(data.x, data.y, data.groups, $cfg.tau);
+/// Bind `$x`/`$y`/`$groups` to the configured backend's design and run
+/// `$body` — the one place the (loader output × backend choice) product
+/// is expanded, so every subcommand stays backend- and loader-complete by
+/// construction. A CSC-loaded dataset on the CSC backend passes through
+/// untouched (no dense detour); conversion happens only when the two
+/// disagree. (`$body` is monomorphized once per backend through the
+/// generic `cmd_*` helpers.)
+macro_rules! with_backend {
+    ($cfg:expr, $data:expr, |$x:ident, $y:ident, $groups:ident| $body:expr) => {{
+        match ($cfg.design, $data) {
+            (DesignBackend::Dense, LoadedData::Dense(d)) => {
+                let ($x, $y, $groups) = (d.x, d.y, d.groups);
                 $body
             }
-            DesignBackend::Csc => {
-                let x = CscMatrix::from_dense(&data.x);
-                let $pb = SglProblem::new(x, data.y, data.groups, $cfg.tau);
+            (DesignBackend::Csc, LoadedData::Dense(d)) => {
+                let $x = CscMatrix::from_dense(&d.x);
+                let ($y, $groups) = (d.y, d.groups);
+                $body
+            }
+            (DesignBackend::Csc, LoadedData::Sparse(s)) => {
+                let ($x, $y, $groups) = (s.x, s.y, s.groups);
+                $body
+            }
+            (DesignBackend::Dense, LoadedData::Sparse(s)) => {
+                // Explicitly requested dense on a sparse-loaded dataset.
+                let $x = s.x.to_dense();
+                let ($y, $groups) = (s.y, s.groups);
                 $body
             }
         }
@@ -288,50 +527,59 @@ fn run(args: &Args) -> Result<()> {
     let cmd = args.positional().first().map(String::as_str).unwrap_or("help");
     let cfg = load_config(args)?;
     let scale = args.get_or("scale", "small");
-    let threads = if cfg.threads == 0 { default_threads() } else { cfg.threads };
+    let threads = cfg.effective_threads();
 
     match cmd {
         "solve" => {
-            let data = build_dataset(&cfg, &scale)?;
+            let data = build_data(&cfg, &scale)?;
             let name = data_name(&cfg);
-            with_design!(cfg, data, |pb| cmd_solve(&pb, &cfg, args, name));
+            with_backend!(cfg, data, |x, y, groups| {
+                let pb = SglProblem::new(x, y, groups, cfg.tau);
+                cmd_solve(&pb, &cfg, args, name)
+            });
         }
         "path" => {
-            let data = build_dataset(&cfg, &scale)?;
-            with_design!(cfg, data, |pb| cmd_path(&pb, &cfg, args)?);
+            let data = build_data(&cfg, &scale)?;
+            with_backend!(cfg, data, |x, y, groups| {
+                let pb = SglProblem::new(x, y, groups, cfg.tau);
+                cmd_path(&pb, &cfg, args)?
+            });
         }
         "cv" => {
-            let data = build_dataset(&cfg, &scale)?;
+            let data = build_data(&cfg, &scale)?;
             let taus: Vec<f64> = (0..=10).map(|i| i as f64 / 10.0).collect();
-            let split = split_rows(data.x.n_rows(), 0.5, cfg.seed);
             let opts = PathOptions {
                 delta: cfg.delta,
                 t_count: cfg.t_count,
                 solve: SolveOptions { tol: cfg.tol, record_history: false, ..Default::default() },
             };
-            let cv = match cfg.design {
-                DesignBackend::Dense => {
-                    validate_tau_grid(&data.x, &data.y, &data.groups, &taus, &opts, &split, threads)
-                }
-                DesignBackend::Csc => {
-                    let x = CscMatrix::from_dense(&data.x);
-                    validate_tau_grid(&x, &data.y, &data.groups, &taus, &opts, &split, threads)
-                }
-            };
+            let cv = with_backend!(cfg, data, |x, y, groups| {
+                let split = split_rows(x.n_rows(), 0.5, cfg.seed);
+                validate_tau_grid(&x, &y, &groups, &taus, &opts, &split, threads)
+            });
             println!(
                 "best tau={} lambda={:.4e} test mse={:.5e}",
                 cv.best_tau, cv.best_lambda, cv.best_mse
             );
         }
         "lambda-max" => {
-            let data = build_dataset(&cfg, &scale)?;
-            let pb = SglProblem::new(data.x, data.y, data.groups, cfg.tau);
-            let (g_star, lmax) = pb.lambda_max_argmax();
-            println!("lambda_max = {lmax:.8e} (attained by group {g_star})");
+            let data = build_data(&cfg, &scale)?;
+            with_backend!(cfg, data, |x, y, groups| {
+                let pb = SglProblem::new(x, y, groups, cfg.tau);
+                let (g_star, lmax) = pb.lambda_max_argmax();
+                println!("lambda_max = {lmax:.8e} (attained by group {g_star})");
+            });
         }
         "compare" => {
-            let data = build_dataset(&cfg, &scale)?;
-            with_design!(cfg, data, |pb| cmd_compare(pb, &cfg, threads));
+            let data = build_data(&cfg, &scale)?;
+            with_backend!(cfg, data, |x, y, groups| {
+                let pb = SglProblem::new(x, y, groups, cfg.tau);
+                cmd_compare(pb, &cfg, threads)
+            });
+        }
+        "serve" => {
+            let data = build_data(&cfg, &scale)?;
+            cmd_serve(data, &cfg)?;
         }
         "xla" => {
             let dir = std::path::PathBuf::from(args.get_or("artifacts", "artifacts"));
@@ -370,7 +618,7 @@ fn run(args: &Args) -> Result<()> {
             if other != "help" {
                 eprintln!("unknown subcommand {other:?}");
             }
-            eprintln!("subcommands: solve | path | cv | lambda-max | compare | xla");
+            eprintln!("subcommands: solve | path | cv | lambda-max | compare | serve | xla");
             eprintln!("{}", args.usage());
         }
     }
@@ -382,5 +630,6 @@ fn data_name(cfg: &RunConfig) -> &'static str {
         DatasetChoice::Synthetic => "synthetic",
         DatasetChoice::Climate => "climate",
         DatasetChoice::Csv { .. } => "csv",
+        DatasetChoice::Libsvm { .. } => "libsvm",
     }
 }

@@ -18,11 +18,12 @@
 //! lives at the between-paths level, where it is embarrassingly clean.
 
 use super::cd::{solve_with_rule, SolveOptions, SolveResult};
+use super::duality::DualSnapshot;
 use super::problem::{lambda_grid, SglProblem};
 use super::SolverKind;
 use crate::linalg::{Design, Matrix};
-use crate::screening::make_rule;
-use crate::util::pool::parallel_map;
+use crate::screening::{make_rule, RuleKind, ScreeningRule, Sphere};
+use crate::util::pool::{parallel_map, resolve_threads};
 use crate::util::timer::Stopwatch;
 use std::sync::Arc;
 
@@ -100,37 +101,116 @@ pub fn solve_path_with<D: Design>(
     opts: &PathOptions,
     solver: SolverKind,
 ) -> PathResult {
+    solve_path_with_handoff(pb, lambdas, opts, solver, None).0
+}
+
+/// Terminal state carried across a λ-range boundary: the warm-start
+/// coefficients plus the dual point the sequential rule screens from.
+/// Produced by [`solve_path_with_handoff`] for the λ-range *before* a
+/// boundary and consumed by the range after it, so a path split into
+/// contiguous shards ([`crate::coordinator::shard`]) behaves exactly like
+/// the uninterrupted engine: the warm start and the `GapSafeSeq` epoch-0
+/// screening both survive the cut.
+#[derive(Clone, Debug)]
+pub struct DualHandoff {
+    /// λ at which the carried point was produced (must be ≥ the first λ
+    /// of the resumed grid).
+    pub lambda: f64,
+    /// Terminal primal iterate — the next range's warm start.
+    pub beta: Vec<f64>,
+    /// Terminal dual snapshot — replayed into the next range's rule via
+    /// [`ScreeningRule::on_solve_complete`].
+    pub snap: DualSnapshot,
+}
+
+/// Wraps the real rule to record the latest terminal dual point flowing
+/// through `on_solve_complete`, so the path engine can export it as a
+/// [`DualHandoff`] without changing any solver signature.
+struct CaptureRule<D: Design> {
+    inner: Box<dyn ScreeningRule<D>>,
+    last: Option<(f64, DualSnapshot)>,
+}
+
+impl<D: Design> ScreeningRule<D> for CaptureRule<D> {
+    fn kind(&self) -> RuleKind {
+        self.inner.kind()
+    }
+
+    fn sphere(
+        &mut self,
+        pb: &SglProblem<D>,
+        lambda: f64,
+        snap: &DualSnapshot,
+    ) -> Option<Sphere> {
+        self.inner.sphere(pb, lambda, snap)
+    }
+
+    fn on_solve_complete(&mut self, pb: &SglProblem<D>, lambda: f64, snap: &DualSnapshot) {
+        self.last = Some((lambda, snap.clone()));
+        self.inner.on_solve_complete(pb, lambda, snap);
+    }
+}
+
+/// [`solve_path_with`] plus resumption: an incoming [`DualHandoff`] seeds
+/// the warm start and is replayed into the freshly built rule through
+/// `on_solve_complete` — for `GapSafeSeq` that is its entire cross-λ state,
+/// and every other rule derives its state from `pb` alone, so resuming is
+/// bit-identical to never having stopped. Returns the path result together
+/// with this range's outgoing handoff (`None` only for an empty grid with
+/// no incoming handoff).
+pub fn solve_path_with_handoff<D: Design>(
+    pb: &SglProblem<D>,
+    lambdas: &[f64],
+    opts: &PathOptions,
+    solver: SolverKind,
+    handoff: Option<&DualHandoff>,
+) -> (PathResult, Option<DualHandoff>) {
     for w in lambdas.windows(2) {
         assert!(w[1] <= w[0] * (1.0 + 1e-12), "lambda grid must be non-increasing");
     }
     let sw = Stopwatch::start();
-    let mut rule = make_rule(opts.solve.rule, pb);
-    let mut results = Vec::with_capacity(lambdas.len());
+    let mut rule = CaptureRule { inner: make_rule(opts.solve.rule, pb), last: None };
     let mut warm: Option<Vec<f64>> = None;
+    if let Some(h) = handoff {
+        assert_eq!(h.beta.len(), pb.p(), "handoff beta length mismatch");
+        if let Some(&first) = lambdas.first() {
+            assert!(
+                first <= h.lambda * (1.0 + 1e-12),
+                "handoff must come from a lambda preceding the grid"
+            );
+        }
+        rule.on_solve_complete(pb, h.lambda, &h.snap);
+        warm = Some(h.beta.clone());
+    }
+    let mut results = Vec::with_capacity(lambdas.len());
     for &lambda in lambdas {
         let res = match solver {
             SolverKind::Cd => {
-                solve_with_rule(pb, lambda, warm.as_deref(), &opts.solve, rule.as_mut())
+                solve_with_rule(pb, lambda, warm.as_deref(), &opts.solve, &mut rule)
             }
             SolverKind::Ista => super::ista::solve_ista_with_rule(
                 pb,
                 lambda,
                 warm.as_deref(),
                 &opts.solve,
-                rule.as_mut(),
+                &mut rule,
             ),
             SolverKind::Fista => super::fista::solve_fista_with_rule(
                 pb,
                 lambda,
                 warm.as_deref(),
                 &opts.solve,
-                rule.as_mut(),
+                &mut rule,
             ),
         };
         warm = Some(res.beta.clone());
         results.push(res);
     }
-    PathResult { lambdas: lambdas.to_vec(), results, total_s: sw.elapsed_s() }
+    let out = match (rule.last, warm) {
+        (Some((lambda, snap)), Some(beta)) => Some(DualHandoff { lambda, beta, snap }),
+        _ => None,
+    };
+    (PathResult { lambdas: lambdas.to_vec(), results, total_s: sw.elapsed_s() }, out)
 }
 
 /// One independent λ-path solve inside a [`PathBatch`].
@@ -189,9 +269,11 @@ impl<D: Design> PathBatch<D> {
     }
 
     /// Run every job on up to `threads` workers (1 = plain sequential
-    /// loop). Work is handed out dynamically, so heterogeneous job costs
-    /// (tight vs loose tolerances, screening on vs off) balance well.
+    /// loop, 0 = auto: the `SGL_THREADS`/available-parallelism default).
+    /// Work is handed out dynamically, so heterogeneous job costs (tight
+    /// vs loose tolerances, screening on vs off) balance well.
     pub fn run(&self, threads: usize) -> Vec<PathResult> {
+        let threads = resolve_threads(threads);
         parallel_map(self.jobs.len(), threads, |i| {
             let job = &self.jobs[i];
             let tau_clone: Option<SglProblem<D>> = job
@@ -439,6 +521,56 @@ mod tests {
                 assert_eq!(ra.beta, rb.beta, "{}", job.label);
             }
         }
+    }
+
+    #[test]
+    fn handoff_resume_matches_uninterrupted_path() {
+        // Same grid shape as gap_safe_seq_screens_at_epoch_zero…: adjacent
+        // λ's are close enough that the carried dual always screens.
+        let pb = planted_problem(11);
+        let lambdas = lambda_grid(pb.lambda_max(), 1.0, 10);
+        let opts = PathOptions {
+            delta: 1.0,
+            t_count: 10,
+            solve: SolveOptions {
+                rule: RuleKind::GapSafeSeq,
+                tol: 1e-8,
+                record_history: true,
+                ..Default::default()
+            },
+        };
+        let full = solve_path_with(&pb, &lambdas, &opts, SolverKind::Cd);
+        let (head, h) =
+            solve_path_with_handoff(&pb, &lambdas[..4], &opts, SolverKind::Cd, None);
+        let h = h.expect("non-empty grid must yield a handoff");
+        assert_eq!(h.lambda, lambdas[3]);
+        assert_eq!(h.beta, head.results[3].beta);
+        let (tail, tail_h) =
+            solve_path_with_handoff(&pb, &lambdas[4..], &opts, SolverKind::Cd, Some(&h));
+        assert!(tail_h.is_some());
+        // Resuming from the handoff is bit-identical to never stopping.
+        for (i, res) in head.results.iter().chain(tail.results.iter()).enumerate() {
+            assert_eq!(res.beta, full.results[i].beta, "t={i}");
+            assert_eq!(res.epochs, full.results[i].epochs, "t={i}");
+        }
+        // The carried dual point screens at epoch 0 of the first resumed
+        // grid point, exactly as it would mid-path.
+        let first = tail.results[0].history.first().expect("history recorded");
+        assert_eq!(first.epoch, 0);
+        assert!(first.active_features < pb.p());
+    }
+
+    #[test]
+    #[should_panic(expected = "preceding the grid")]
+    fn handoff_from_a_smaller_lambda_rejected() {
+        let pb = planted_problem(15);
+        let lambdas = lambda_grid(pb.lambda_max(), 1.0, 4);
+        let opts = PathOptions { delta: 1.0, t_count: 4, ..Default::default() };
+        let (_, h) =
+            solve_path_with_handoff(&pb, &lambdas, &opts, SolverKind::Cd, None);
+        // Re-running the same grid from its *terminal* handoff would hand
+        // a dual point forward in λ: the engine must refuse.
+        solve_path_with_handoff(&pb, &lambdas, &opts, SolverKind::Cd, h.as_ref());
     }
 
     #[test]

@@ -17,6 +17,72 @@ pub fn default_threads() -> usize {
     std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
 }
 
+/// Normalize a thread-count setting: `0` means "auto" (the
+/// `SGL_THREADS` / available-parallelism default of [`default_threads`]),
+/// anything else is taken literally. Shared by the CLI, `PathBatch::run`
+/// and the solve service so a `threads = 0` config can never produce a
+/// zero-worker pool.
+pub fn resolve_threads(threads: usize) -> usize {
+    if threads == 0 {
+        default_threads()
+    } else {
+        threads
+    }
+}
+
+/// A persistent worker pool: `n` named OS threads all running the same
+/// drain loop until it returns. Unlike [`parallel_map`] (scoped, one
+/// batch, joins before returning) the pool outlives any single work item —
+/// the solve service keeps one alive for its whole lifetime and feeds it
+/// through a shared queue.
+pub struct WorkerPool {
+    handles: Vec<std::thread::JoinHandle<()>>,
+}
+
+impl WorkerPool {
+    /// Spawn `threads` workers (at least one), each running
+    /// `f(worker_index)` to completion. `f` is expected to loop over a
+    /// shared queue and return when its owner signals shutdown.
+    pub fn spawn<F>(threads: usize, f: F) -> Self
+    where
+        F: Fn(usize) + Send + Sync + 'static,
+    {
+        let f = std::sync::Arc::new(f);
+        let handles = (0..threads.max(1))
+            .map(|i| {
+                let f = f.clone();
+                std::thread::Builder::new()
+                    .name(format!("sgl-worker-{i}"))
+                    .spawn(move || f(i))
+                    .expect("spawning worker thread")
+            })
+            .collect();
+        WorkerPool { handles }
+    }
+
+    pub fn len(&self) -> usize {
+        self.handles.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.handles.is_empty()
+    }
+
+    /// Join every worker. The owner must already have signalled its drain
+    /// loops to return, or this blocks forever. A worker that died to an
+    /// *uncaught* panic is reported on stderr rather than re-raised (the
+    /// service catches per-job panics itself, and join_all runs from Drop
+    /// where unwinding again would abort).
+    pub fn join_all(&mut self) {
+        for h in self.handles.drain(..) {
+            let name = h.thread().name().unwrap_or("sgl-worker").to_string();
+            if h.join().is_err() {
+                eprintln!("warning: worker thread {name} panicked outside a job");
+            }
+        }
+    }
+}
+
 /// One result slot: the item's value or, if the worker closure panicked on
 /// it, the caught panic payload.
 type Slot<T> = Option<std::thread::Result<T>>;
@@ -138,6 +204,37 @@ mod tests {
     #[test]
     fn default_threads_positive() {
         assert!(default_threads() >= 1);
+    }
+
+    #[test]
+    fn resolve_threads_zero_means_auto() {
+        assert_eq!(resolve_threads(3), 3);
+        assert_eq!(resolve_threads(1), 1);
+        assert!(resolve_threads(0) >= 1);
+        assert_eq!(resolve_threads(0), default_threads());
+    }
+
+    #[test]
+    fn worker_pool_runs_every_worker_and_joins() {
+        use std::sync::atomic::AtomicUsize;
+        use std::sync::Arc;
+        let count = Arc::new(AtomicUsize::new(0));
+        let c = count.clone();
+        let mut pool = WorkerPool::spawn(4, move |_i| {
+            c.fetch_add(1, Ordering::SeqCst);
+        });
+        assert_eq!(pool.len(), 4);
+        assert!(!pool.is_empty());
+        pool.join_all();
+        assert!(pool.is_empty());
+        assert_eq!(count.load(Ordering::SeqCst), 4);
+    }
+
+    #[test]
+    fn worker_pool_spawns_at_least_one() {
+        let mut pool = WorkerPool::spawn(0, |_| {});
+        assert_eq!(pool.len(), 1);
+        pool.join_all();
     }
 
     #[test]

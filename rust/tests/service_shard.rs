@@ -1,0 +1,328 @@
+//! Integration tests for the L4 layer: λ-shard equivalence against the
+//! monolithic path engine (across backends, solvers and shard counts)
+//! and the solve service's queue / result-store / cache semantics.
+
+use sgl::coordinator::service::{
+    AnyProblem, JobStatus, QueueFullError, ServiceConfig, SolveRequest, SolveService,
+};
+use sgl::coordinator::shard::solve_path_sharded;
+use sgl::data::synthetic::{generate, SyntheticConfig};
+use sgl::linalg::{CscMatrix, Design, Matrix};
+use sgl::norms::sgl::omega;
+use sgl::screening::RuleKind;
+use sgl::solver::cd::SolveOptions;
+use sgl::solver::path::{solve_path, solve_path_with, PathOptions};
+use sgl::solver::problem::{lambda_grid, SglProblem};
+use sgl::solver::SolverKind;
+use std::sync::Arc;
+
+/// Planted-sparse instance with unit-norm `y` (absolute objective budgets).
+fn planted(seed: u64) -> SglProblem {
+    let cfg = SyntheticConfig {
+        n: 60,
+        n_groups: 30,
+        group_size: 4,
+        gamma1: 5,
+        gamma2: 2,
+        seed,
+        ..Default::default()
+    };
+    let d = generate(&cfg);
+    let y_norm = d.dataset.y.iter().map(|v| v * v).sum::<f64>().sqrt().max(1e-300);
+    let y: Vec<f64> = d.dataset.y.iter().map(|v| v / y_norm).collect();
+    SglProblem::new(d.dataset.x, y, d.dataset.groups, 0.2)
+}
+
+fn objective<D: Design>(pb: &SglProblem<D>, lambda: f64, beta: &[f64]) -> f64 {
+    let xb = pb.x.matvec(beta);
+    let r2: f64 = pb.y.iter().zip(&xb).map(|(y, v)| (y - v) * (y - v)).sum();
+    0.5 * r2 + lambda * omega(beta, &pb.groups, pb.tau, &pb.weights)
+}
+
+/// Sharded (k ∈ {2, 4}) must match monolithic: objectives to ≤ 1e-8 and
+/// identical screening decisions at every λ.
+fn check_shard_equivalence<D: Design>(
+    pb: &SglProblem<D>,
+    lambdas: &[f64],
+    opts: &PathOptions,
+    solver: SolverKind,
+    tag: &str,
+) {
+    let mono = solve_path_with(pb, lambdas, opts, solver);
+    for k in [2usize, 4] {
+        let sharded = solve_path_sharded(pb, lambdas, opts, solver, k);
+        assert_eq!(sharded.lambdas, mono.lambdas, "{tag} k={k}");
+        assert_eq!(sharded.results.len(), mono.results.len(), "{tag} k={k}");
+        for (t, (a, b)) in mono.results.iter().zip(&sharded.results).enumerate() {
+            // Screening decisions are identical across the shard boundary.
+            assert_eq!(a.active.feature, b.active.feature, "{tag} k={k} t={t}");
+            assert_eq!(a.active.group, b.active.group, "{tag} k={k} t={t}");
+            assert_eq!(a.epochs, b.epochs, "{tag} k={k} t={t}");
+            for (x, y) in a.beta.iter().zip(&b.beta) {
+                assert!((x - y).abs() <= 1e-10, "{tag} k={k} t={t}");
+            }
+            let oa = objective(pb, mono.lambdas[t], &a.beta);
+            let ob = objective(pb, mono.lambdas[t], &b.beta);
+            assert!(
+                (oa - ob).abs() <= 1e-8,
+                "{tag} k={k} t={t}: objectives {oa} vs {ob}"
+            );
+        }
+    }
+}
+
+#[test]
+fn sharded_paths_match_monolithic_dense_and_csc_across_solvers() {
+    let pb_dense = planted(1);
+    let pb_csc: SglProblem<CscMatrix> = SglProblem::new(
+        CscMatrix::from_dense(&pb_dense.x),
+        pb_dense.y.clone(),
+        pb_dense.groups.clone(),
+        pb_dense.tau,
+    );
+    for solver in SolverKind::all() {
+        // The equivalence is bit-level whatever the tolerance (both sides
+        // run the same arithmetic), so the slow full-gradient solvers get
+        // a shallower, looser path to keep debug-profile test time sane.
+        let (delta, t_count, tol) = match solver {
+            SolverKind::Cd => (1.0, 8, 1e-8),
+            _ => (0.8, 5, 1e-7),
+        };
+        let lambdas = lambda_grid(pb_dense.lambda_max(), delta, t_count);
+        let opts = PathOptions {
+            delta,
+            t_count,
+            solve: SolveOptions {
+                rule: RuleKind::GapSafeSeq,
+                tol,
+                max_epochs: 500_000,
+                record_history: false,
+                ..Default::default()
+            },
+        };
+        check_shard_equivalence(
+            &pb_dense,
+            &lambdas,
+            &opts,
+            solver,
+            &format!("dense/{}", solver.name()),
+        );
+        check_shard_equivalence(
+            &pb_csc,
+            &lambdas,
+            &opts,
+            solver,
+            &format!("csc/{}", solver.name()),
+        );
+    }
+}
+
+#[test]
+fn sharding_is_rule_agnostic() {
+    // Every rule's cross-λ state factors through `on_solve_complete`
+    // (GapSafeSeq) or is derived from the problem alone (the rest), so
+    // the boundary is invisible whichever rule runs the path.
+    let pb = planted(2);
+    let lambdas = lambda_grid(pb.lambda_max(), 1.5, 9);
+    for rule in [
+        RuleKind::None,
+        RuleKind::Static,
+        RuleKind::Dynamic,
+        RuleKind::Dst3,
+        RuleKind::GapSafe,
+    ] {
+        let opts = PathOptions {
+            delta: 1.5,
+            t_count: lambdas.len(),
+            solve: SolveOptions { rule, tol: 1e-8, record_history: false, ..Default::default() },
+        };
+        check_shard_equivalence(&pb, &lambdas, &opts, SolverKind::Cd, rule.name());
+    }
+}
+
+fn dense_req(pb: &Arc<SglProblem<Matrix>>, rule: RuleKind, tol: f64) -> SolveRequest {
+    SolveRequest {
+        label: format!("{}@{tol:.0e}", rule.name()),
+        ..SolveRequest::new(
+            AnyProblem::Dense(pb.clone()),
+            PathOptions {
+                delta: 1.5,
+                t_count: 8,
+                solve: SolveOptions { tol, rule, record_history: false, ..Default::default() },
+            },
+        )
+    }
+}
+
+#[test]
+fn concurrent_submissions_all_complete_and_match_direct_solves() {
+    let pb = Arc::new(planted(3));
+    let svc = SolveService::start(ServiceConfig { workers: 4, queue_depth: 64 });
+    let rules = [RuleKind::None, RuleKind::GapSafe, RuleKind::GapSafeSeq];
+    let tols = [1e-4, 1e-6, 1e-8];
+    let mut ids = Vec::new();
+    for &rule in &rules {
+        for &tol in &tols {
+            ids.push((svc.submit(dense_req(&pb, rule, tol)).unwrap(), rule, tol));
+        }
+    }
+    for &(id, rule, tol) in &ids {
+        let res = svc.wait(id).unwrap();
+        assert!(res.all_converged(), "{rule:?}@{tol:.0e}");
+        assert_eq!(res.lambdas.len(), 8);
+        // The service answer is bit-identical to the direct engine.
+        let direct = solve_path(
+            &pb,
+            &PathOptions {
+                delta: 1.5,
+                t_count: 8,
+                solve: SolveOptions { tol, rule, record_history: false, ..Default::default() },
+            },
+        );
+        for (a, b) in res.results.iter().zip(&direct.results) {
+            assert_eq!(a.beta, b.beta, "{rule:?}@{tol:.0e}");
+        }
+    }
+    let m = svc.metrics();
+    assert_eq!(m.counter("service_submitted"), 9);
+    assert_eq!(m.counter("service_completed"), 9);
+    assert_eq!(m.counter("service_cache_hits"), 0);
+    // Latency/queue-wait timers recorded one observation per job.
+    assert_eq!(m.timer("service_job_latency_s").unwrap().count, 9);
+    assert_eq!(m.timer("service_queue_wait_s").unwrap().count, 9);
+    assert!(m.timer("service_shard_solve_s").unwrap().count >= 9);
+}
+
+#[test]
+fn duplicate_traffic_hits_the_fingerprint_cache_without_resolving() {
+    let pb = Arc::new(planted(4));
+    let svc = SolveService::start(ServiceConfig { workers: 2, queue_depth: 16 });
+    let first = svc.submit(dense_req(&pb, RuleKind::GapSafe, 1e-6)).unwrap();
+    let r1 = svc.wait(first).unwrap();
+    let m = svc.metrics();
+    let shards_before = m.counter("service_shards_solved");
+    // Same fingerprint: answered from cache, sharing the result Arc.
+    let dup = svc.submit(dense_req(&pb, RuleKind::GapSafe, 1e-6)).unwrap();
+    let r2 = svc.wait(dup).unwrap();
+    assert!(Arc::ptr_eq(&r1, &r2), "cache must return the identical result");
+    assert!(svc.was_cached(dup));
+    assert!(!svc.was_cached(first));
+    assert_eq!(m.counter("service_cache_hits"), 1);
+    assert_eq!(m.counter("service_shards_solved"), shards_before, "no re-solve");
+    // A different tolerance is a different fingerprint: real solve.
+    let other = svc.submit(dense_req(&pb, RuleKind::GapSafe, 1e-4)).unwrap();
+    svc.wait(other).unwrap();
+    assert!(!svc.was_cached(other));
+}
+
+#[test]
+fn sharded_service_job_matches_monolithic_service_job() {
+    let pb = Arc::new(planted(5));
+    let svc = SolveService::start(ServiceConfig { workers: 2, queue_depth: 16 });
+    let mut mono = dense_req(&pb, RuleKind::GapSafeSeq, 1e-8);
+    mono.opts.t_count = 12;
+    let mut sharded = mono.clone();
+    sharded.shards = 4;
+    sharded.label = "sharded".into();
+    let a = svc.wait(svc.submit(mono).unwrap()).unwrap();
+    let b = svc.wait(svc.submit(sharded).unwrap()).unwrap();
+    assert_eq!(a.lambdas, b.lambdas);
+    assert_eq!(b.lambdas.len(), 12);
+    for (ra, rb) in a.results.iter().zip(&b.results) {
+        assert_eq!(ra.beta, rb.beta);
+        assert_eq!(ra.active.feature, rb.active.feature);
+        assert_eq!(ra.epochs, rb.epochs);
+    }
+    // 1 monolithic shard + 4 pipeline shards.
+    assert_eq!(svc.metrics().counter("service_shards_solved"), 5);
+}
+
+/// A request whose duration is dominated by a fixed epoch budget (the
+/// gap is only ever checked at epoch 0, and the tolerance is
+/// unreachable), so tests can hold a worker busy for a predictable,
+/// profile-appropriate stretch without flakiness.
+fn blocker_req(pb: &Arc<SglProblem<Matrix>>) -> SolveRequest {
+    let epochs = if cfg!(debug_assertions) { 4_000 } else { 80_000 };
+    SolveRequest {
+        label: "blocker".into(),
+        lambdas: Some(vec![0.5 * pb.lambda_max()]),
+        ..SolveRequest::new(
+            AnyProblem::Dense(pb.clone()),
+            PathOptions {
+                delta: 1.0,
+                t_count: 1,
+                solve: SolveOptions {
+                    tol: 1e-300,
+                    fce: usize::MAX,
+                    max_epochs: epochs,
+                    rule: RuleKind::None,
+                    record_history: false,
+                },
+            },
+        )
+    }
+}
+
+#[test]
+fn cancel_prevents_queued_jobs_from_running() {
+    let pb = Arc::new(planted(6));
+    let svc = SolveService::start(ServiceConfig { workers: 1, queue_depth: 16 });
+    // Highest priority first: the single worker is pinned on the blocker
+    // while the victim waits in the queue.
+    let mut blocker = blocker_req(&pb);
+    blocker.priority = 9;
+    let b = svc.submit(blocker).unwrap();
+    let victim = svc.submit(dense_req(&pb, RuleKind::GapSafe, 1e-6)).unwrap();
+    assert!(svc.cancel(victim), "victim was queued, cancel must land");
+    assert!(!svc.cancel(victim), "second cancel is a no-op");
+    assert_eq!(svc.poll(victim), Some(JobStatus::Cancelled));
+    let err = svc.wait(victim).unwrap_err();
+    assert!(format!("{err}").contains("cancelled"), "{err}");
+    // The blocker is unaffected (it never converges — that's its job).
+    let res = svc.wait(b).unwrap();
+    assert!(!res.all_converged());
+    let m = svc.metrics();
+    assert_eq!(m.counter("service_cancelled"), 1);
+    assert_eq!(m.counter("service_completed"), 1);
+    assert!(!svc.cancel(b), "completed jobs cannot be cancelled");
+}
+
+#[test]
+fn priority_classes_jump_the_fifo_queue() {
+    let pb = Arc::new(planted(7));
+    let svc = SolveService::start(ServiceConfig { workers: 1, queue_depth: 16 });
+    let mut blocker = blocker_req(&pb);
+    blocker.priority = 9;
+    let b = svc.submit(blocker).unwrap();
+    // Submitted low before high: the high-priority job must still
+    // complete first once the worker frees up.
+    let lo = svc.submit(dense_req(&pb, RuleKind::GapSafe, 1e-4)).unwrap();
+    let mut hi_req = dense_req(&pb, RuleKind::GapSafeSeq, 1e-4);
+    hi_req.priority = 5;
+    let hi = svc.submit(hi_req).unwrap();
+    let order: Vec<_> = std::iter::from_fn(|| svc.wait_next()).collect();
+    assert_eq!(order, vec![b, hi, lo]);
+}
+
+#[test]
+fn full_queue_backpressures_with_a_typed_error() {
+    let pb = Arc::new(planted(8));
+    let svc = SolveService::start(ServiceConfig { workers: 1, queue_depth: 1 });
+    let b = svc.submit(blocker_req(&pb)).unwrap();
+    // Wait until the worker has demonstrably popped the blocker off the
+    // queue (it then runs far longer than the submits below take).
+    let deadline = std::time::Instant::now() + std::time::Duration::from_secs(30);
+    while svc.poll(b) != Some(JobStatus::Running) {
+        assert!(
+            std::time::Instant::now() < deadline,
+            "worker never picked up the blocker"
+        );
+        std::thread::sleep(std::time::Duration::from_millis(2));
+    }
+    let queued = svc.submit(dense_req(&pb, RuleKind::GapSafe, 1e-4)).unwrap();
+    let err = svc.submit(dense_req(&pb, RuleKind::GapSafe, 1e-6)).unwrap_err();
+    let qf = err.downcast_ref::<QueueFullError>().expect("typed backpressure");
+    assert_eq!(qf.depth, 1);
+    svc.wait(b).unwrap();
+    svc.wait(queued).unwrap();
+}

@@ -18,6 +18,13 @@
 //! `CscMatrix` backend — identical λ-grid, identical rule — verifying the
 //! objectives agree to 1e-7 while the CSC sweeps, which touch only stored
 //! entries, win on wall-clock.
+//!
+//! A third section measures **single-path latency**: one active-heavy
+//! p ≥ 5000 path solved with the serial cyclic sweep vs the intra-path
+//! parallel sweep layer (`sweep = "parallel"`, `solver::sweep`). This is
+//! the one axis `PathBatch` cannot touch (a single warm-started path has
+//! no between-path parallelism). Objectives must agree to ≤ 1e-8 and,
+//! on a multi-core host, the parallel sweep must win wall-clock.
 
 use sgl::data::sparse::{self, SparseSyntheticConfig};
 use sgl::data::synthetic::{generate, SyntheticConfig};
@@ -27,7 +34,8 @@ use sgl::screening::RuleKind;
 use sgl::solver::cd::SolveOptions;
 use sgl::solver::path::{solve_path_on_grid, PathBatch, PathBatchJob, PathOptions};
 use sgl::solver::problem::{lambda_grid, SglProblem};
-use sgl::util::pool::default_threads;
+use sgl::solver::sweep::SweepMode;
+use sgl::util::pool::{default_threads, resolve_threads};
 use sgl::util::timer::Stopwatch;
 use std::sync::Arc;
 
@@ -134,6 +142,7 @@ fn main() {
     }
 
     bench_backends(paper);
+    bench_single_path_latency(paper);
 }
 
 /// Dense vs CSC on a ~1%-density design: same data, same λ-grid, same
@@ -213,4 +222,93 @@ fn bench_backends(paper: bool) {
         "CSC backend should win on a {:.2}%-density design ({t_csc:.3}s vs {t_dense:.3}s)",
         100.0 * pb_csc.x.density()
     );
+}
+
+/// Single-path latency: serial cyclic sweep vs the intra-path parallel
+/// sweep layer on one active-heavy p ≥ 5000 path.
+fn bench_single_path_latency(paper: bool) {
+    let cfg = SyntheticConfig {
+        n: if paper { 200 } else { 150 },
+        n_groups: if paper { 1000 } else { 550 },
+        group_size: 10,
+        // Many planted groups + a deep grid: the λ tail keeps most of the
+        // design active, so the per-epoch group sweep dominates — the
+        // regime the parallel sweep targets.
+        gamma1: 40,
+        gamma2: 6,
+        seed: 1234,
+        ..Default::default()
+    };
+    let d = generate(&cfg);
+    // Unit-norm y: with tol = 5e-9 both runs end within 5e-9 of the
+    // optimum, so the ≤ 1e-8 objective-agreement budget below is implied
+    // by convergence — and still asserted directly.
+    let y_norm = d.dataset.y.iter().map(|v| v * v).sum::<f64>().sqrt().max(1e-300);
+    let y: Vec<f64> = d.dataset.y.iter().map(|v| v / y_norm).collect();
+    let pb = SglProblem::new(d.dataset.x, y, d.dataset.groups, 0.2);
+    let t_count = if paper { 10 } else { 8 };
+    let lambdas = lambda_grid(pb.lambda_max(), 2.0, t_count);
+    let opts = |sweep| PathOptions {
+        delta: 2.0,
+        t_count,
+        solve: SolveOptions {
+            rule: RuleKind::GapSafeSeq,
+            tol: 5e-9,
+            record_history: false,
+            sweep,
+            sweep_threads: 0, // auto
+            ..Default::default()
+        },
+    };
+    let threads = resolve_threads(0);
+    println!(
+        "\n== single-path latency: n={}, p={}, T={t_count}, gap_safe_seq @5e-9, \
+         sweep_threads={threads} ==",
+        pb.n(),
+        pb.p()
+    );
+
+    let sw = Stopwatch::start();
+    let serial = solve_path_on_grid(&pb, &lambdas, &opts(SweepMode::Serial));
+    let t_serial = sw.elapsed_s();
+    let sw = Stopwatch::start();
+    let parallel = solve_path_on_grid(&pb, &lambdas, &opts(SweepMode::Parallel));
+    let t_parallel = sw.elapsed_s();
+    assert!(serial.all_converged(), "serial sweep failed to converge");
+    assert!(parallel.all_converged(), "parallel sweep failed to converge");
+
+    let objective = |lambda: f64, beta: &[f64]| {
+        let xb = pb.x.matvec(beta);
+        let r2: f64 = pb.y.iter().zip(&xb).map(|(yi, v)| (yi - v) * (yi - v)).sum();
+        0.5 * r2 + lambda * omega(beta, &pb.groups, pb.tau, &pb.weights)
+    };
+    let mut max_div = 0.0_f64;
+    for (i, &lambda) in lambdas.iter().enumerate() {
+        let a = objective(lambda, &serial.results[i].beta);
+        let b = objective(lambda, &parallel.results[i].beta);
+        max_div = max_div.max((a - b).abs());
+    }
+    println!(
+        "serial sweep:   {t_serial:>8.3}s  ({} epochs)",
+        serial.total_epochs()
+    );
+    println!(
+        "parallel sweep: {t_parallel:>8.3}s  ({} epochs, {:.2}x speedup)",
+        parallel.total_epochs(),
+        t_serial / t_parallel.max(1e-12)
+    );
+    println!("max objective divergence serial vs parallel: {max_div:.2e}");
+    assert!(
+        max_div <= 1e-8,
+        "sweep modes disagree beyond budget: {max_div:.2e}"
+    );
+    if threads >= 2 {
+        assert!(
+            t_parallel < t_serial,
+            "parallel sweep should win single-path latency on {threads} threads \
+             ({t_parallel:.3}s vs {t_serial:.3}s)"
+        );
+    } else {
+        println!("single hardware thread: skipping the wall-clock assertion");
+    }
 }

@@ -8,6 +8,7 @@
 pub mod toml;
 
 use crate::screening::RuleKind;
+use crate::solver::sweep::SweepMode;
 use crate::solver::SolverKind;
 use anyhow::{bail, ensure, Context, Result};
 use std::fmt;
@@ -89,6 +90,13 @@ pub struct RunConfig {
     pub fce: usize,
     pub max_epochs: usize,
     pub rule: RuleKind,
+    /// Intra-solve epoch mode (`[solver] sweep = "serial" | "parallel"`):
+    /// parallel runs work-stealing sweeps over the active-set group
+    /// ranges inside every single solve.
+    pub sweep: SweepMode,
+    /// Worker threads per parallel sweep (`[solver] sweep_threads`,
+    /// 0 = auto). Independent of `run.threads` (across-path fan-out).
+    pub sweep_threads: usize,
     /// λ-path: `λ_t = λ_max 10^{-δt/(T-1)}`.
     pub delta: f64,
     pub t_count: usize,
@@ -111,6 +119,12 @@ pub struct RunConfig {
     pub service_queue_depth: usize,
     /// λ-range shards per path job submitted by the CLI (1 = monolithic).
     pub service_shards: usize,
+    /// Max terminal jobs retained by the service's result store before
+    /// the oldest retrieved ones are reaped (`[service] result_capacity`).
+    pub service_result_capacity: usize,
+    /// Max entries in the service's fingerprint cache before LRU
+    /// eviction (`[service] cache_capacity`).
+    pub service_cache_capacity: usize,
 }
 
 impl Default for RunConfig {
@@ -124,6 +138,8 @@ impl Default for RunConfig {
             fce: 10,
             max_epochs: 20_000,
             rule: RuleKind::GapSafe,
+            sweep: SweepMode::Serial,
+            sweep_threads: 0, // 0 = auto
             delta: 3.0,
             t_count: 100,
             seed: 42,
@@ -140,6 +156,8 @@ impl Default for RunConfig {
             service_workers: 0, // 0 = auto
             service_queue_depth: 64,
             service_shards: 1,
+            service_result_capacity: 1024,
+            service_cache_capacity: 256,
         }
     }
 }
@@ -219,12 +237,19 @@ impl RunConfig {
         take!(climate_lon, "climate", "grid_lon", usize);
         take!(climate_lat, "climate", "grid_lat", usize);
         take!(climate_months, "climate", "n_months", usize);
+        take!(sweep_threads, "solver", "sweep_threads", usize);
         take!(service_workers, "service", "workers", usize);
         take!(service_queue_depth, "service", "queue_depth", usize);
         take!(service_shards, "service", "shards", usize);
+        take!(service_result_capacity, "service", "result_capacity", usize);
+        take!(service_cache_capacity, "service", "cache_capacity", usize);
         if let Some(rule) = doc.get_str("solver", "rule") {
             cfg.rule = RuleKind::from_name(&rule)
                 .with_context(|| format!("unknown screening rule {rule:?}"))?;
+        }
+        if let Some(sweep) = doc.get_str("solver", "sweep") {
+            cfg.sweep = SweepMode::from_name(&sweep)
+                .with_context(|| format!("unknown sweep mode {sweep:?} (serial|parallel)"))?;
         }
         cfg.validate()?;
         Ok(cfg)
@@ -257,6 +282,12 @@ impl RunConfig {
         }
         if self.service_shards == 0 {
             bail!("service shards must be >= 1");
+        }
+        if self.service_result_capacity == 0 {
+            bail!("service result_capacity must be >= 1");
+        }
+        if self.service_cache_capacity == 0 {
+            bail!("service cache_capacity must be >= 1");
         }
         if let DatasetChoice::Libsvm { group_size, .. } = &self.dataset {
             if *group_size == 0 {
@@ -372,6 +403,38 @@ rho = 0.9
     fn parses_sequential_rule() {
         let c = RunConfig::from_toml_str("[solver]\nrule = \"gap_safe_seq\"\n").unwrap();
         assert_eq!(c.rule, RuleKind::GapSafeSeq);
+    }
+
+    #[test]
+    fn parses_sweep_mode_and_threads() {
+        let c = RunConfig::from_toml_str(
+            "[solver]\nsweep = \"parallel\"\nsweep_threads = 3\n",
+        )
+        .unwrap();
+        assert_eq!(c.sweep, SweepMode::Parallel);
+        assert_eq!(c.sweep_threads, 3);
+        // Defaults: serial sweeps, auto threads.
+        let d = RunConfig::default();
+        assert_eq!(d.sweep, SweepMode::Serial);
+        assert_eq!(d.sweep_threads, 0);
+        // Unknown modes are rejected with the valid choices named.
+        let err = RunConfig::from_toml_str("[solver]\nsweep = \"jacobi\"\n").unwrap_err();
+        assert!(format!("{err:#}").contains("serial|parallel"));
+    }
+
+    #[test]
+    fn parses_service_capacities() {
+        let c = RunConfig::from_toml_str(
+            "[service]\nresult_capacity = 16\ncache_capacity = 8\n",
+        )
+        .unwrap();
+        assert_eq!(c.service_result_capacity, 16);
+        assert_eq!(c.service_cache_capacity, 8);
+        let d = RunConfig::default();
+        assert_eq!(d.service_result_capacity, 1024);
+        assert_eq!(d.service_cache_capacity, 256);
+        assert!(RunConfig::from_toml_str("[service]\nresult_capacity = 0\n").is_err());
+        assert!(RunConfig::from_toml_str("[service]\ncache_capacity = 0\n").is_err());
     }
 
     #[test]

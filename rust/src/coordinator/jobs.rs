@@ -81,6 +81,7 @@ pub fn run_rule_comparison<D: Design>(
                         max_epochs: job.max_epochs,
                         rule,
                         record_history: false,
+                        ..Default::default()
                     },
                 },
                 tau_override: None,
@@ -145,6 +146,7 @@ pub fn run_path<D: Design>(pb: &SglProblem<D>, job: &PathJob) -> PathResult {
             max_epochs: job.max_epochs,
             rule: job.rule,
             record_history: true,
+            ..Default::default()
         },
     };
     crate::solver::path::solve_path(pb, &opts)

@@ -61,11 +61,22 @@ pub struct ServiceConfig {
     /// Maximum number of *queued* (not yet started) jobs; submissions
     /// beyond it fail with [`QueueFullError`].
     pub queue_depth: usize,
+    /// Maximum number of *terminal* jobs the result store retains. Beyond
+    /// it the oldest already-retrieved jobs are reaped (undelivered
+    /// results are never evicted — the store only exceeds the bound while
+    /// callers sit on unconsumed completions, and every retrieval
+    /// re-trims); a reaped id polls as unknown. Keeps a long-lived
+    /// service at O(capacity) memory instead of growing for the process
+    /// lifetime.
+    pub result_capacity: usize,
+    /// Maximum number of fingerprint-cache entries; least-recently-used
+    /// entries are evicted past it (`service_cache_evictions` counts).
+    pub cache_capacity: usize,
 }
 
 impl Default for ServiceConfig {
     fn default() -> Self {
-        ServiceConfig { workers: 0, queue_depth: 64 }
+        ServiceConfig { workers: 0, queue_depth: 64, result_capacity: 1024, cache_capacity: 256 }
     }
 }
 
@@ -169,6 +180,11 @@ impl SolveRequest {
             fce: self.opts.solve.fce,
             max_epochs: self.opts.solve.max_epochs,
             record_history: self.opts.solve.record_history,
+            // The parallel CD sweep reaches the same objective on a
+            // different trajectory, so the sweep mode (and its thread
+            // count, which fixes the round shape) must key the cache.
+            sweep: self.opts.solve.sweep.name(),
+            sweep_threads: self.opts.solve.sweep_threads,
             delta: self.opts.delta.to_bits(),
             t_count: self.opts.t_count,
             shards: self.shards,
@@ -198,6 +214,8 @@ struct CacheKey {
     fce: usize,
     max_epochs: usize,
     record_history: bool,
+    sweep: &'static str,
+    sweep_threads: usize,
     delta: u64,
     t_count: usize,
     shards: usize,
@@ -285,6 +303,10 @@ struct Job {
     started: bool,
     /// Served from the fingerprint cache without solving.
     cached: bool,
+    /// The caller consumed the terminal outcome (`result`/`wait` returned
+    /// it, or `wait_next` yielded the id): the job is first in line when
+    /// the result store exceeds its capacity.
+    retrieved: bool,
 }
 
 /// Queue entry: max-heap pops the highest priority first and, within a
@@ -322,6 +344,8 @@ struct CacheEntry {
     /// reused by a different problem while the entry exists.
     _pb: AnyProblem,
     result: Arc<PathResult>,
+    /// Recency tick (from `Shared::cache_tick`) for LRU eviction.
+    last_used: u64,
 }
 
 struct Shared {
@@ -329,6 +353,14 @@ struct Shared {
     jobs: BTreeMap<JobId, Job>,
     cache: HashMap<CacheKey, CacheEntry>,
     depth: usize,
+    /// Bound on retained terminal jobs (see [`ServiceConfig::result_capacity`]).
+    result_capacity: usize,
+    /// Bound on fingerprint-cache entries (LRU beyond it).
+    cache_capacity: usize,
+    /// Monotone recency clock for the cache's LRU order.
+    cache_tick: u64,
+    /// Terminal jobs in completion order — the reaping scan order.
+    terminal: VecDeque<JobId>,
     /// Jobs currently in state `Queued` (submitted, never started). The
     /// admission bound compares against this, not `queue.len()`: shard
     /// continuations of running jobs share the physical queue but must
@@ -374,6 +406,10 @@ impl SolveService {
                 jobs: BTreeMap::new(),
                 cache: HashMap::new(),
                 depth: cfg.queue_depth.max(1),
+                result_capacity: cfg.result_capacity.max(1),
+                cache_capacity: cfg.cache_capacity.max(1),
+                cache_tick: 0,
+                terminal: VecDeque::new(),
                 queued_new: 0,
                 next_id: 0,
                 next_seq: 0,
@@ -411,8 +447,13 @@ impl SolveService {
         }
         let id = JobId(s.next_id);
         s.next_id += 1;
-        if let Some(hit) = s.cache.get(&req.cache_key()) {
-            let result = hit.result.clone();
+        s.cache_tick += 1;
+        let tick = s.cache_tick;
+        let hit = s.cache.get_mut(&req.cache_key()).map(|e| {
+            e.last_used = tick; // LRU bump: duplicates keep entries warm
+            e.result.clone()
+        });
+        if let Some(result) = hit {
             s.jobs.insert(
                 id,
                 Job {
@@ -422,9 +463,12 @@ impl SolveService {
                     sw: Stopwatch::start(),
                     started: true,
                     cached: true,
+                    retrieved: false,
                 },
             );
             s.completions.push_back(id);
+            s.terminal.push_back(id);
+            reap_excess(&self.inner, &mut s);
             m.incr("service_submitted", 1);
             m.incr("service_cache_hits", 1);
             self.inner.done.notify_all();
@@ -446,6 +490,7 @@ impl SolveService {
                 sw: Stopwatch::start(),
                 started: false,
                 cached: false,
+                retrieved: false,
             },
         );
         s.outstanding += 1;
@@ -456,19 +501,53 @@ impl SolveService {
         Ok(id)
     }
 
-    /// Current lifecycle state (`None` for an unknown id).
+    /// Current lifecycle state (`None` for an unknown id). Observing a
+    /// *failure-terminal* state (Failed/Cancelled — there is no result
+    /// left to deliver) counts as retrieval for result-store reaping,
+    /// so jobs whose owners only ever poll can't be pinned forever. A
+    /// `Done` job is never marked here: its result still awaits delivery
+    /// through [`result`](Self::result)/[`wait`](Self::wait), and
+    /// reaping it early would lose the result the poll just reported.
     pub fn poll(&self, id: JobId) -> Option<JobStatus> {
-        let s = self.inner.state.lock().unwrap();
-        s.jobs.get(&id).map(|j| j.state.status())
+        let mut s = self.inner.state.lock().unwrap();
+        let job = s.jobs.get_mut(&id)?;
+        let status = job.state.status();
+        if matches!(job.state, JobState::Failed(_) | JobState::Cancelled) {
+            job.retrieved = true;
+            reap_excess(&self.inner, &mut s);
+        }
+        Some(status)
     }
 
-    /// The completed result, if the job is `Done`.
+    /// The completed result, if the job is `Done`. Retrieval marks the
+    /// job reapable once the result store is over capacity.
     pub fn result(&self, id: JobId) -> Option<Arc<PathResult>> {
-        let s = self.inner.state.lock().unwrap();
-        match &s.jobs.get(&id)?.state {
-            JobState::Done(r) => Some(r.clone()),
+        let mut s = self.inner.state.lock().unwrap();
+        let job = s.jobs.get_mut(&id)?;
+        let out = match &job.state {
+            JobState::Done(r) => {
+                let r = r.clone();
+                job.retrieved = true;
+                Some(r)
+            }
             _ => None,
+        };
+        if out.is_some() {
+            reap_excess(&self.inner, &mut s);
         }
+        out
+    }
+
+    /// Number of jobs (any state) currently held by the result store.
+    /// Bounded by in-flight work plus [`ServiceConfig::result_capacity`].
+    pub fn job_count(&self) -> usize {
+        self.inner.state.lock().unwrap().jobs.len()
+    }
+
+    /// Number of entries in the fingerprint cache (≤
+    /// [`ServiceConfig::cache_capacity`]).
+    pub fn cache_len(&self) -> usize {
+        self.inner.state.lock().unwrap().cache.len()
     }
 
     /// Whether the job was served from the fingerprint cache.
@@ -484,18 +563,34 @@ impl SolveService {
     }
 
     /// Block until the job is terminal; `Err` if it was cancelled,
-    /// failed, or the id is unknown.
+    /// failed, or the id is unknown. Observing the terminal state marks
+    /// the job reapable once the result store is over capacity.
     pub fn wait(&self, id: JobId) -> Result<Arc<PathResult>> {
         let mut s = self.inner.state.lock().unwrap();
         loop {
-            match s.jobs.get(&id) {
+            let outcome = match s.jobs.get_mut(&id) {
                 None => bail!("unknown {id}"),
                 Some(j) => match &j.state {
-                    JobState::Done(r) => return Ok(r.clone()),
-                    JobState::Cancelled => bail!("{id} was cancelled"),
-                    JobState::Failed(e) => bail!("{id} failed: {e}"),
-                    _ => {}
+                    JobState::Done(r) => {
+                        let r = r.clone();
+                        j.retrieved = true;
+                        Some(Ok(r))
+                    }
+                    JobState::Cancelled => {
+                        j.retrieved = true;
+                        Some(Err(anyhow::anyhow!("{id} was cancelled")))
+                    }
+                    JobState::Failed(e) => {
+                        let e = e.clone();
+                        j.retrieved = true;
+                        Some(Err(anyhow::anyhow!("{id} failed: {e}")))
+                    }
+                    _ => None,
                 },
+            };
+            if let Some(outcome) = outcome {
+                reap_excess(&self.inner, &mut s);
+                return outcome;
             }
             s = self.inner.done.wait(s).unwrap();
         }
@@ -503,11 +598,21 @@ impl SolveService {
 
     /// Block until *any* job completes (in completion order) and return
     /// its id; `None` once every submitted job is terminal and the
-    /// completion stream has been drained.
+    /// completion stream has been drained. A yielded Failed/Cancelled id
+    /// counts as retrieved for result-store reaping; a `Done` id does
+    /// not — its result is still undelivered until the caller fetches it
+    /// ([`result`](Self::result) marks it then), so it cannot be reaped
+    /// out from under the `wait_next` → `result` pattern.
     pub fn wait_next(&self) -> Option<JobId> {
         let mut s = self.inner.state.lock().unwrap();
         loop {
             if let Some(id) = s.completions.pop_front() {
+                if let Some(job) = s.jobs.get_mut(&id) {
+                    if matches!(job.state, JobState::Failed(_) | JobState::Cancelled) {
+                        job.retrieved = true;
+                        reap_excess(&self.inner, &mut s);
+                    }
+                }
                 return Some(id);
             }
             if s.outstanding == 0 {
@@ -531,6 +636,9 @@ impl SolveService {
         }
         let was_queued = matches!(job.state, JobState::Queued);
         job.state = JobState::Cancelled;
+        // The canceller owns this outcome: the job is immediately
+        // reapable, so abandoned cancellations can't pin the store.
+        job.retrieved = true;
         if was_queued {
             s.queued_new -= 1;
         }
@@ -540,6 +648,8 @@ impl SolveService {
         s.queue.retain(|item| item.id != id);
         s.outstanding -= 1;
         s.completions.push_back(id);
+        s.terminal.push_back(id);
+        reap_excess(&self.inner, &mut s);
         self.inner.metrics.incr("service_cancelled", 1);
         self.inner.metrics.set("service_queue_depth", s.queue.len() as f64);
         self.inner.metrics.set("service_outstanding", s.outstanding as f64);
@@ -713,12 +823,53 @@ fn finish(inner: &Inner, s: &mut Shared, id: JobId, outcome: Result<Arc<PathResu
         }
     };
     if let Some((key, pb, result)) = cache_insert {
-        s.cache.insert(key, CacheEntry { _pb: pb, result });
+        s.cache_tick += 1;
+        let last_used = s.cache_tick;
+        s.cache.insert(key, CacheEntry { _pb: pb, result, last_used });
+        // LRU eviction past capacity (linear scan: capacities are small
+        // and inserts happen once per completed solve, not per epoch).
+        while s.cache.len() > s.cache_capacity {
+            let victim = s
+                .cache
+                .iter()
+                .min_by_key(|(_, e)| e.last_used)
+                .map(|(k, _)| k.clone())
+                .expect("cache is non-empty above capacity");
+            s.cache.remove(&victim);
+            inner.metrics.incr("service_cache_evictions", 1);
+        }
     }
     s.outstanding -= 1;
     s.completions.push_back(id);
+    s.terminal.push_back(id);
+    reap_excess(inner, s);
     inner.metrics.set("service_outstanding", s.outstanding as f64);
     inner.done.notify_all();
+}
+
+/// Trim the result store to `result_capacity` terminal jobs, oldest
+/// *retrieved* jobs first. Undelivered results are never evicted — a
+/// caller holding a `JobId` it has not consumed keeps that result alive,
+/// so the store can transiently exceed the capacity until the caller
+/// drains its completions; every retrieval re-runs this trim, so with
+/// any consumer at all the store settles at the bound. A reaped id polls
+/// as unknown and is dropped from the completion stream rather than
+/// handed out dangling.
+fn reap_excess(inner: &Inner, s: &mut Shared) {
+    while s.terminal.len() > s.result_capacity {
+        let Some(idx) = s
+            .terminal
+            .iter()
+            .position(|id| s.jobs.get(id).is_none_or(|j| j.retrieved))
+        else {
+            break; // everything over capacity is still undelivered
+        };
+        let id = s.terminal.remove(idx).expect("index from a live scan");
+        if s.jobs.remove(&id).is_some() {
+            inner.metrics.incr("service_jobs_reaped", 1);
+        }
+        s.completions.retain(|c| *c != id);
+    }
 }
 
 /// Derive the geometric grid of a request (used when `lambdas` is `None`).
@@ -768,6 +919,14 @@ mod tests {
         Arc::new(SglProblem::new(d.dataset.x, d.dataset.y, d.dataset.groups, 0.3))
     }
 
+    fn cfg2x8() -> ServiceConfig {
+        ServiceConfig { workers: 2, queue_depth: 8, ..Default::default() }
+    }
+
+    fn cfg1x4() -> ServiceConfig {
+        ServiceConfig { workers: 1, queue_depth: 4, ..Default::default() }
+    }
+
     fn req(pb: &Arc<SglProblem>, tol: f64) -> SolveRequest {
         SolveRequest {
             label: format!("t{tol:.0e}"),
@@ -785,7 +944,7 @@ mod tests {
     #[test]
     fn submit_wait_poll_lifecycle() {
         let pb = small_problem(1);
-        let svc = SolveService::start(ServiceConfig { workers: 2, queue_depth: 8 });
+        let svc = SolveService::start(cfg2x8());
         let id = svc.submit(req(&pb, 1e-6)).unwrap();
         let res = svc.wait(id).unwrap();
         assert!(res.all_converged());
@@ -821,7 +980,7 @@ mod tests {
     #[test]
     fn wait_next_drains_to_none() {
         let pb = small_problem(3);
-        let svc = SolveService::start(ServiceConfig { workers: 2, queue_depth: 8 });
+        let svc = SolveService::start(cfg2x8());
         let ids: Vec<JobId> =
             (0..3).map(|k| svc.submit(req(&pb, 10f64.powi(-4 - k))).unwrap()).collect();
         let mut seen = Vec::new();
@@ -837,7 +996,7 @@ mod tests {
     #[test]
     fn failed_solve_is_reported_not_propagated() {
         let pb = small_problem(4);
-        let svc = SolveService::start(ServiceConfig { workers: 1, queue_depth: 4 });
+        let svc = SolveService::start(cfg1x4());
         // An increasing grid trips the path engine's assertion: the panic
         // must surface as a Failed job, and the worker must survive it.
         let mut bad = req(&pb, 1e-6);
@@ -853,9 +1012,46 @@ mod tests {
     }
 
     #[test]
+    fn caches_are_bounded_with_lru_eviction_and_reaping() {
+        let pb = small_problem(6);
+        let svc = SolveService::start(ServiceConfig {
+            workers: 2,
+            queue_depth: 16,
+            result_capacity: 4,
+            cache_capacity: 3,
+        });
+        // Six distinct configs: more than either capacity.
+        let tols: Vec<f64> = (0..6).map(|k| 10f64.powi(-(3 + k))).collect();
+        let mut ids = Vec::new();
+        for &tol in &tols {
+            let id = svc.submit(req(&pb, tol)).unwrap();
+            svc.wait(id).unwrap(); // retrieval marks the job reapable
+            ids.push(id);
+        }
+        // Result store trimmed to capacity; the oldest retrieved jobs
+        // were reaped and now poll as unknown.
+        assert_eq!(svc.job_count(), 4);
+        assert!(svc.poll(ids[0]).is_none());
+        assert_eq!(svc.poll(ids[5]), Some(JobStatus::Done));
+        assert!(svc.metrics().counter("service_jobs_reaped") >= 2);
+        // Fingerprint cache trimmed with LRU order: the newest config
+        // still hits, the oldest was evicted and must re-solve.
+        assert_eq!(svc.cache_len(), 3);
+        assert!(svc.metrics().counter("service_cache_evictions") >= 3);
+        let hit = svc.submit(req(&pb, tols[5])).unwrap();
+        assert!(svc.was_cached(hit));
+        let miss = svc.submit(req(&pb, tols[0])).unwrap();
+        assert!(!svc.was_cached(miss));
+        assert!(svc.wait(miss).unwrap().all_converged());
+        // The duplicate kept its entry warm; the store stays bounded.
+        assert!(svc.cache_len() <= 3);
+        assert!(svc.job_count() <= 4 + 1);
+    }
+
+    #[test]
     fn shutdown_rejects_new_submissions() {
         let pb = small_problem(5);
-        let svc = SolveService::start(ServiceConfig { workers: 1, queue_depth: 4 });
+        let svc = SolveService::start(cfg1x4());
         svc.signal_shutdown();
         assert!(svc.submit(req(&pb, 1e-6)).is_err());
     }

@@ -1,7 +1,9 @@
 //! libsvm/svmlight text loader — parses `label idx:val idx:val …` lines
 //! straight into [`CscMatrix`] arrays, never materializing a dense
 //! design. The ROADMAP's sparse-loader item: real bag-of-words datasets
-//! reach the CLI and the solve service at `O(nnz)` memory.
+//! reach the CLI and the solve service at `O(nnz)` memory — files are
+//! streamed line by line through a buffered reader (the whole text is
+//! never resident), so peak memory is the parsed entries, not the file.
 //!
 //! Format notes:
 //! - one sample per line: a numeric label followed by `index:value`
@@ -20,21 +22,37 @@ use super::SparseDataset;
 use crate::linalg::CscMatrix;
 use crate::solver::groups::Groups;
 use anyhow::{anyhow, bail, ensure, Context, Result};
+use std::io::BufRead;
 use std::path::Path;
 
 /// Read a libsvm/svmlight file into a CSC-backed dataset with uniform
-/// groups of `group_size` features.
+/// groups of `group_size` features. The file is streamed through a
+/// buffered line reader — peak memory is `O(nnz)` (the parsed entries),
+/// never the file size.
 pub fn read_libsvm(path: &Path, group_size: usize) -> Result<SparseDataset> {
-    let text = std::fs::read_to_string(path)
+    let file = std::fs::File::open(path)
         .with_context(|| format!("reading libsvm file {}", path.display()))?;
-    let mut d = parse_libsvm(&text, group_size)
+    let lines = std::io::BufReader::new(file).lines();
+    let mut d = parse_libsvm_lines(lines, group_size)
         .with_context(|| format!("parsing {}", path.display()))?;
     d.name = format!("libsvm({})", path.display());
     Ok(d)
 }
 
-/// Parse libsvm/svmlight text. See the module docs for format rules.
+/// Parse libsvm/svmlight text already in memory. See the module docs for
+/// format rules.
 pub fn parse_libsvm(text: &str, group_size: usize) -> Result<SparseDataset> {
+    parse_libsvm_lines(text.lines().map(Ok::<&str, std::io::Error>), group_size)
+}
+
+/// Streaming parser core: consumes lines one at a time (from
+/// [`BufRead::lines`] or an in-memory split), reporting I/O and parse
+/// errors with their 1-based line number.
+pub fn parse_libsvm_lines<I, L>(lines: I, group_size: usize) -> Result<SparseDataset>
+where
+    I: IntoIterator<Item = std::io::Result<L>>,
+    L: AsRef<str>,
+{
     ensure!(group_size >= 1, "group size must be >= 1");
     let mut y: Vec<f64> = Vec::new();
     // Per-sample raw (index, value) entries, indices as written.
@@ -42,8 +60,9 @@ pub fn parse_libsvm(text: &str, group_size: usize) -> Result<SparseDataset> {
     let mut max_index = 0usize;
     let mut any_feature = false;
     let mut saw_zero = false;
-    for (lineno, raw) in text.lines().enumerate() {
-        let line = raw.split('#').next().unwrap_or("").trim();
+    for (lineno, raw) in lines.into_iter().enumerate() {
+        let raw = raw.with_context(|| format!("reading line {}", lineno + 1))?;
+        let line = raw.as_ref().split('#').next().unwrap_or("").trim();
         if line.is_empty() {
             continue;
         }
@@ -212,6 +231,32 @@ mod tests {
         assert!(parse_libsvm("1 2:1.0 2:3.0\n", 1).is_err(), "duplicate index");
         assert!(parse_libsvm("1\n2\n", 1).is_err(), "labels but no features");
         assert!(parse_libsvm("1 1:1.0\n", 0).is_err(), "zero group size");
+    }
+
+    #[test]
+    fn streaming_parser_reports_line_numbers_and_io_errors() {
+        // An I/O failure mid-stream carries its 1-based line number.
+        let lines: Vec<std::io::Result<String>> = vec![
+            Ok("1 1:1.0".into()),
+            Err(std::io::Error::other("disk gone")),
+        ];
+        let err = parse_libsvm_lines(lines, 1).unwrap_err();
+        let chain = format!("{err:#}");
+        assert!(chain.contains("line 2"), "{chain}");
+        assert!(chain.contains("disk gone"), "{chain}");
+        // Parse errors keep their line numbers through the streaming core.
+        let err = parse_libsvm("1 1:1.0\n2 zz\n", 1).unwrap_err();
+        assert!(format!("{err}").contains("line 2"));
+        // The streaming and in-memory parsers agree.
+        let text = "1 1:0.5 3:2.0\n-1 2:1.0\n";
+        let a = parse_libsvm(text, 2).unwrap();
+        let b = parse_libsvm_lines(
+            text.lines().map(|l| Ok::<String, std::io::Error>(l.to_string())),
+            2,
+        )
+        .unwrap();
+        assert_eq!(a.y, b.y);
+        assert_eq!(a.x, b.x);
     }
 
     #[test]

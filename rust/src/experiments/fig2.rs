@@ -53,6 +53,7 @@ pub fn active_surfaces(
             fce,
             rule: RuleKind::GapSafe,
             record_history: false,
+            ..Default::default()
         };
         let mut warm: Option<Vec<f64>> = None;
         let mut feats = Vec::with_capacity(lambdas.len());

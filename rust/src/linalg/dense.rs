@@ -245,6 +245,11 @@ impl super::design::Design for Matrix {
     }
 
     #[inline]
+    fn col_axpy_rows(&self, j: usize, alpha: f64, row0: usize, row1: usize, out: &mut [f64]) {
+        super::ops::axpy(alpha, &self.col(j)[row0..row1], out);
+    }
+
+    #[inline]
     fn col_norm(&self, j: usize) -> f64 {
         l2_norm(self.col(j))
     }

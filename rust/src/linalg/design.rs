@@ -38,6 +38,29 @@ pub trait Design: Clone + Send + Sync + std::fmt::Debug {
     /// `out += alpha · X_j` (`out.len() == n_rows`).
     fn col_axpy(&self, j: usize, alpha: f64, out: &mut [f64]);
 
+    /// `out += alpha · X_j[row0..row1]` — the row-windowed axpy behind the
+    /// row-partitioned parallel residual kernels
+    /// ([`crate::solver::sweep`]): each worker owns a disjoint row range
+    /// of `ρ` and accumulates every column's contribution to it, which
+    /// keeps the per-row addition order identical to the serial sweep
+    /// (bit-identical results). `out.len() == row1 - row0`.
+    ///
+    /// The default routes through a full-height scratch column — correct
+    /// for any backend but allocating; both shipped backends override it
+    /// with a windowed kernel.
+    fn col_axpy_rows(&self, j: usize, alpha: f64, row0: usize, row1: usize, out: &mut [f64]) {
+        debug_assert!(row0 <= row1 && row1 <= self.n_rows());
+        debug_assert_eq!(out.len(), row1 - row0);
+        if alpha == 0.0 {
+            return;
+        }
+        let mut full = vec![0.0; self.n_rows()];
+        self.col_axpy(j, alpha, &mut full);
+        for (o, v) in out.iter_mut().zip(&full[row0..row1]) {
+            *o += v;
+        }
+    }
+
     /// Euclidean norm of column `j`.
     fn col_norm(&self, j: usize) -> f64;
 

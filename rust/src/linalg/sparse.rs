@@ -155,6 +155,21 @@ impl Design for CscMatrix {
         }
     }
 
+    fn col_axpy_rows(&self, j: usize, alpha: f64, row0: usize, row1: usize, out: &mut [f64]) {
+        debug_assert!(row0 <= row1 && row1 <= self.n_rows);
+        debug_assert_eq!(out.len(), row1 - row0);
+        if alpha == 0.0 {
+            return;
+        }
+        // Row indices are sorted within a column: binary-search the window.
+        let (rows, vals) = self.col(j);
+        let lo = rows.partition_point(|&i| i < row0);
+        let hi = lo + rows[lo..].partition_point(|&i| i < row1);
+        for (&i, &x) in rows[lo..hi].iter().zip(&vals[lo..hi]) {
+            out[i - row0] += alpha * x;
+        }
+    }
+
     #[inline]
     fn col_norm(&self, j: usize) -> f64 {
         let (_, vals) = self.col(j);
@@ -278,6 +293,80 @@ mod tests {
                 assert!((x - y).abs() < 1e-12);
             }
         }
+    }
+
+    #[test]
+    fn col_axpy_rows_matches_full_axpy_on_every_window() {
+        let (s, d) = random_pair(11, 6, 0.35, 8);
+        for j in 0..6 {
+            let mut full = vec![0.0; 11];
+            s.col_axpy(j, -1.25, &mut full);
+            for (row0, row1) in [(0, 11), (0, 4), (4, 9), (9, 11), (5, 5)] {
+                // Sparse, dense override, and the trait default must all
+                // agree with the windowed slice of the full axpy.
+                let mut sp = vec![0.0; row1 - row0];
+                s.col_axpy_rows(j, -1.25, row0, row1, &mut sp);
+                let mut dn = vec![0.0; row1 - row0];
+                d.col_axpy_rows(j, -1.25, row0, row1, &mut dn);
+                let mut gen = vec![0.0; row1 - row0];
+                generic_axpy_rows(&s, j, -1.25, row0, row1, &mut gen);
+                for k in 0..(row1 - row0) {
+                    assert_eq!(sp[k], full[row0 + k], "csc j={j} rows {row0}..{row1}");
+                    assert_eq!(dn[k], full[row0 + k], "dense j={j} rows {row0}..{row1}");
+                    assert_eq!(gen[k], full[row0 + k], "default j={j} rows {row0}..{row1}");
+                }
+            }
+        }
+    }
+
+    /// Route through the trait's *default* `col_axpy_rows` (both backends
+    /// override it, so the default needs an explicit harness).
+    fn generic_axpy_rows<D: Design>(
+        x: &D,
+        j: usize,
+        alpha: f64,
+        row0: usize,
+        row1: usize,
+        out: &mut [f64],
+    ) {
+        struct Shim<D: Design>(D);
+        impl<D: Design> Design for Shim<D> {
+            fn n_rows(&self) -> usize {
+                self.0.n_rows()
+            }
+            fn n_cols(&self) -> usize {
+                self.0.n_cols()
+            }
+            fn nnz(&self) -> usize {
+                self.0.nnz()
+            }
+            fn col_dot(&self, j: usize, v: &[f64]) -> f64 {
+                self.0.col_dot(j, v)
+            }
+            fn col_axpy(&self, j: usize, alpha: f64, out: &mut [f64]) {
+                self.0.col_axpy(j, alpha, out)
+            }
+            fn col_norm(&self, j: usize) -> f64 {
+                self.0.col_norm(j)
+            }
+            fn select_cols(&self, cols: &[usize]) -> Self {
+                Shim(self.0.select_cols(cols))
+            }
+            fn select_rows(&self, rows: &[usize]) -> Self {
+                Shim(self.0.select_rows(rows))
+            }
+        }
+        impl<D: Design> Clone for Shim<D> {
+            fn clone(&self) -> Self {
+                Shim(self.0.clone())
+            }
+        }
+        impl<D: Design> std::fmt::Debug for Shim<D> {
+            fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+                write!(f, "Shim({:?})", self.0)
+            }
+        }
+        Shim(x.clone()).col_axpy_rows(j, alpha, row0, row1, out)
     }
 
     #[test]

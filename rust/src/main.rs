@@ -41,6 +41,7 @@ use sgl::solver::cv::{split_rows, validate_tau_grid};
 use sgl::solver::groups::Groups;
 use sgl::solver::path::{solve_path_with, PathOptions};
 use sgl::solver::problem::{lambda_grid, SglProblem};
+use sgl::solver::sweep::SweepMode;
 use sgl::solver::SolverKind;
 use sgl::util::cli::{Args, OptSpec};
 use std::collections::HashMap;
@@ -58,6 +59,8 @@ fn specs() -> Vec<OptSpec> {
         OptSpec { name: "lambda-frac", help: "lambda as a fraction of lambda_max", takes_value: true, default: Some("0.1") },
         OptSpec { name: "tol", help: "target duality gap", takes_value: true, default: None },
         OptSpec { name: "rule", help: "none|static|dynamic|dst3|gap_safe|gap_safe_seq", takes_value: true, default: None },
+        OptSpec { name: "sweep", help: "serial|parallel intra-solve epoch mode", takes_value: true, default: None },
+        OptSpec { name: "sweep-threads", help: "threads per parallel sweep (0 = auto)", takes_value: true, default: None },
         OptSpec { name: "delta", help: "path grid exponent", takes_value: true, default: None },
         OptSpec { name: "t-count", help: "path grid size", takes_value: true, default: None },
         OptSpec { name: "seed", help: "dataset seed", takes_value: true, default: None },
@@ -106,6 +109,13 @@ fn load_config(args: &Args) -> Result<RunConfig> {
     }
     if let Some(v) = args.get("rule") {
         cfg.rule = RuleKind::from_name(&v).with_context(|| format!("unknown rule {v}"))?;
+    }
+    if let Some(v) = args.get("sweep") {
+        cfg.sweep = SweepMode::from_name(&v)
+            .with_context(|| format!("unknown sweep mode {v} (serial|parallel)"))?;
+    }
+    if let Some(v) = args.get("sweep-threads") {
+        cfg.sweep_threads = v.parse().context("--sweep-threads")?;
     }
     if let Some(v) = args.get("delta") {
         cfg.delta = v.parse().context("--delta")?;
@@ -221,16 +231,24 @@ fn build_dataset(cfg: &RunConfig, scale: &str) -> Result<Dataset> {
     })
 }
 
-/// `solve` on any backend.
-fn cmd_solve<D: Design>(pb: &SglProblem<D>, cfg: &RunConfig, args: &Args, name: &str) {
-    let lambda = args.get_f64("lambda-frac", 0.1) * pb.lambda_max();
-    let opts = SolveOptions {
+/// The configured solver options (every subcommand routes through this,
+/// so `--sweep`/`--sweep-threads` reach each inner solve).
+fn solve_opts(cfg: &RunConfig, record_history: bool) -> SolveOptions {
+    SolveOptions {
         tol: cfg.tol,
         fce: cfg.fce,
         max_epochs: cfg.max_epochs,
         rule: cfg.rule,
-        record_history: true,
-    };
+        record_history,
+        sweep: cfg.sweep,
+        sweep_threads: cfg.sweep_threads,
+    }
+}
+
+/// `solve` on any backend.
+fn cmd_solve<D: Design>(pb: &SglProblem<D>, cfg: &RunConfig, args: &Args, name: &str) {
+    let lambda = args.get_f64("lambda-frac", 0.1) * pb.lambda_max();
+    let opts = solve_opts(cfg, true);
     let res = match cfg.algo {
         SolverKind::Cd => sgl::solver::cd::solve(pb, lambda, None, &opts),
         SolverKind::Ista => sgl::solver::ista::solve_ista(pb, lambda, None, &opts),
@@ -264,13 +282,7 @@ fn cmd_path<D: Design>(pb: &SglProblem<D>, cfg: &RunConfig, args: &Args) -> Resu
     let opts = PathOptions {
         delta: cfg.delta,
         t_count: cfg.t_count,
-        solve: SolveOptions {
-            tol: cfg.tol,
-            fce: cfg.fce,
-            max_epochs: cfg.max_epochs,
-            rule: cfg.rule,
-            record_history: false,
-        },
+        solve: solve_opts(cfg, false),
     };
     let lambdas = lambda_grid(pb.lambda_max(), opts.delta, opts.t_count);
     let path = solve_path_with(pb, &lambdas, &opts, cfg.algo);
@@ -343,7 +355,12 @@ fn cmd_serve(data: LoadedData, cfg: &RunConfig) -> Result<()> {
     };
     let metrics = Arc::new(Metrics::new());
     let svc = SolveService::with_metrics(
-        ServiceConfig { workers: cfg.service_workers, queue_depth: cfg.service_queue_depth },
+        ServiceConfig {
+            workers: cfg.service_workers,
+            queue_depth: cfg.service_queue_depth,
+            result_capacity: cfg.service_result_capacity,
+            cache_capacity: cfg.service_cache_capacity,
+        },
         metrics.clone(),
     );
     println!(
@@ -370,13 +387,7 @@ fn cmd_serve(data: LoadedData, cfg: &RunConfig) -> Result<()> {
                 PathOptions {
                     delta: cfg.delta,
                     t_count: cfg.t_count,
-                    solve: SolveOptions {
-                        tol,
-                        fce: cfg.fce,
-                        max_epochs: cfg.max_epochs,
-                        rule,
-                        record_history: false,
-                    },
+                    solve: SolveOptions { tol, rule, ..solve_opts(cfg, false) },
                 },
             )
         }
@@ -551,7 +562,13 @@ fn run(args: &Args) -> Result<()> {
             let opts = PathOptions {
                 delta: cfg.delta,
                 t_count: cfg.t_count,
-                solve: SolveOptions { tol: cfg.tol, record_history: false, ..Default::default() },
+                solve: SolveOptions {
+                    tol: cfg.tol,
+                    record_history: false,
+                    sweep: cfg.sweep,
+                    sweep_threads: cfg.sweep_threads,
+                    ..Default::default()
+                },
             };
             let cv = with_backend!(cfg, data, |x, y, groups| {
                 let split = split_rows(x.n_rows(), 0.5, cfg.seed);

@@ -24,6 +24,8 @@ use crate::norms::prox::soft_threshold_vec;
 use crate::solver::duality::DualSnapshot;
 use crate::solver::groups::Groups;
 use crate::solver::problem::SglProblem;
+use crate::solver::sweep::SweepCtx;
+use crate::util::pool::SharedSlice;
 
 /// Which screening rule to run (CLI/config selectable).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -177,27 +179,76 @@ pub fn apply_sphere<D: Design>(
     beta: &mut [f64],
     rho: &mut [f64],
 ) -> ScreenOutcome {
+    apply_sphere_ctx(pb, sphere, active, beta, rho, &SweepCtx::serial())
+}
+
+/// [`apply_sphere`] with the per-group Theorem-1 tests fanned over a
+/// [`SweepCtx`] crew. The tests read only the sphere and the problem
+/// precomputations — never `beta`/`rho` — so the decision pass
+/// parallelizes with disjoint writes and the decisions are bit-identical
+/// to the serial pass. The mutations (mask shrink, `beta` zeroing, `rho`
+/// patch) replay serially in the exact order of the serial loop, so the
+/// whole outcome is bit-for-bit the same.
+pub fn apply_sphere_ctx<D: Design>(
+    pb: &SglProblem<D>,
+    sphere: &Sphere,
+    active: &mut ActiveSet,
+    beta: &mut [f64],
+    rho: &mut [f64],
+    ctx: &SweepCtx,
+) -> ScreenOutcome {
     let tau = pb.tau;
     let r = sphere.radius;
-    let mut out = ScreenOutcome::default();
     // Relative slack guarding the strict inequalities of Theorem 1 against
     // round-off: boundary-active variables (equality in the tests) must
     // never be eliminated by floating-point noise.
     let slack = 1e-12;
+    let ng = pb.n_groups();
+    // -- decision pass: pure per-group tests (Eq. 13/14), parallelizable.
+    let mut kill_group = vec![false; ng];
+    let mut kill_feature = vec![false; pb.p()];
+    {
+        let kg = SharedSlice::new(&mut kill_group);
+        let kf = SharedSlice::new(&mut kill_feature);
+        let active_ref = &*active;
+        ctx.for_each(ng, 16, 32, |g| {
+            if !active_ref.group[g] {
+                return;
+            }
+            let (a, b) = pb.groups.bounds(g);
+            let xi_c = &sphere.xt_center[a..b];
+            // Group-level bound T_g (Eq. 14 / Theorem 1).
+            let xi_inf = inf_norm(xi_c);
+            let t_g = if xi_inf > tau {
+                l2_norm(&soft_threshold_vec(xi_c, tau)) + r * pb.group_spectral_norms[g]
+            } else {
+                (xi_inf + r * pb.group_spectral_norms[g] - tau).max(0.0)
+            };
+            let w_thresh = (1.0 - tau) * pb.weights[g];
+            if t_g < w_thresh - slack * w_thresh.max(1.0) {
+                // SAFETY: one group per worker; feature ranges disjoint.
+                unsafe { kg.set(g, true) };
+                return;
+            }
+            // Feature-level tests within the surviving group (Eq. 13).
+            for j in a..b {
+                if active_ref.feature[j]
+                    && sphere.xt_center[j].abs() + r * pb.col_norms[j]
+                        < tau - slack * tau.max(1.0)
+                {
+                    unsafe { kf.set(j, true) };
+                }
+            }
+        });
+    }
+    // -- apply pass: serial, same order and mutations as the historical
+    // single-threaded loop.
+    let mut out = ScreenOutcome::default();
     for (g, a, b) in pb.groups.iter() {
         if !active.group[g] {
             continue;
         }
-        let xi_c = &sphere.xt_center[a..b];
-        // Group-level bound T_g (Eq. 14 / Theorem 1).
-        let xi_inf = inf_norm(xi_c);
-        let t_g = if xi_inf > tau {
-            l2_norm(&soft_threshold_vec(xi_c, tau)) + r * pb.group_spectral_norms[g]
-        } else {
-            (xi_inf + r * pb.group_spectral_norms[g] - tau).max(0.0)
-        };
-        let w_thresh = (1.0 - tau) * pb.weights[g];
-        if t_g < w_thresh - slack * w_thresh.max(1.0) {
+        if kill_group[g] {
             // Entire group is eliminated.
             active.group[g] = false;
             out.groups_screened += 1;
@@ -210,12 +261,8 @@ pub fn apply_sphere<D: Design>(
             }
             continue;
         }
-        // Feature-level tests within the surviving group (Eq. 13).
         for j in a..b {
-            if !active.feature[j] {
-                continue;
-            }
-            if sphere.xt_center[j].abs() + r * pb.col_norms[j] < tau - slack * tau.max(1.0) {
+            if active.feature[j] && kill_feature[j] {
                 active.feature[j] = false;
                 out.features_screened += 1;
                 out.beta_changed |= zero_coord(pb, j, beta, rho);

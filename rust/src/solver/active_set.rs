@@ -24,8 +24,9 @@
 use super::cd::{CheckEvent, SolveOptions, SolveResult};
 use super::duality::DualSnapshot;
 use super::problem::SglProblem;
+use super::sweep::SweepCtx;
 use crate::linalg::Design;
-use crate::screening::{apply_sphere, ActiveSet, ScreeningRule};
+use crate::screening::{apply_sphere_ctx, ActiveSet, ScreeningRule};
 use crate::util::timer::Stopwatch;
 
 /// Compacted view of the active columns: a packed backend instance plus
@@ -109,6 +110,25 @@ impl<D: Design> ActiveCols<D> {
         }
     }
 
+    /// `out += alpha · X_k[row0..row1]` for compact column `k` — the
+    /// row-windowed axpy the row-partitioned parallel kernels
+    /// ([`crate::solver::sweep`]) are built on.
+    #[inline]
+    pub fn col_axpy_rows(
+        &self,
+        pb: &SglProblem<D>,
+        k: usize,
+        alpha: f64,
+        row0: usize,
+        row1: usize,
+        out: &mut [f64],
+    ) {
+        match &self.compact {
+            Some(m) => m.col_axpy_rows(k, alpha, row0, row1, out),
+            None => pb.x.col_axpy_rows(self.col_feat[k], alpha, row0, row1, out),
+        }
+    }
+
     /// `rho = y − Xβ`, touching only the active columns (screened
     /// coordinates of `β` are zero by construction).
     pub fn residual_into(&self, pb: &SglProblem<D>, beta: &[f64], rho: &mut [f64]) {
@@ -143,6 +163,11 @@ pub struct GapCheckOutcome {
 pub struct ScreenState<D: Design> {
     pub active: ActiveSet,
     pub cols: ActiveCols<D>,
+    /// Intra-solve sweep context ([`crate::solver::sweep`]): owns the
+    /// per-solve worker crew when `sweep = "parallel"`, serial otherwise.
+    /// Solvers route their epoch kernels through it; the gap-check and
+    /// screening plumbing below does the same.
+    pub sweep: SweepCtx,
     pub history: Vec<CheckEvent>,
     pub gap: f64,
     pub gap_evals: usize,
@@ -160,6 +185,7 @@ impl<D: Design> ScreenState<D> {
         ScreenState {
             active: ActiveSet::full(&pb.groups),
             cols: ActiveCols::full(pb),
+            sweep: SweepCtx::from_opts(opts),
             history: Vec::new(),
             gap: f64::INFINITY,
             gap_evals: 0,
@@ -201,7 +227,8 @@ impl<D: Design> ScreenState<D> {
         // Screen first (even on the converging check: the final active
         // sets reported for Fig. 2a/2b use the tightest sphere).
         if let Some(sphere) = rule.sphere(pb, lambda, &snap) {
-            let out = apply_sphere(pb, &sphere, &mut self.active, beta, rho);
+            let out =
+                apply_sphere_ctx(pb, &sphere, &mut self.active, beta, rho, &self.sweep);
             features_screened = out.features_screened;
             if out.features_screened > 0 {
                 self.cols.rebuild(pb, &self.active);
@@ -209,7 +236,7 @@ impl<D: Design> ScreenState<D> {
             if out.beta_changed && self.gap <= self.tol_abs {
                 // Screening zeroed nonzero coords on a converging check:
                 // the cached gap is stale, recompute before deciding.
-                snap = DualSnapshot::compute(pb, beta, rho, lambda);
+                snap = DualSnapshot::compute_ctx(pb, beta, rho, lambda, &self.sweep);
                 self.gap = snap.gap;
                 self.gap_evals += 1;
             }
@@ -245,7 +272,7 @@ impl<D: Design> ScreenState<D> {
         rho: &[f64],
     ) {
         if !self.converged {
-            let snap = DualSnapshot::compute(pb, beta, rho, lambda);
+            let snap = DualSnapshot::compute_ctx(pb, beta, rho, lambda, &self.sweep);
             self.gap = snap.gap;
             self.gap_evals += 1;
             self.converged = self.gap <= self.tol_abs;

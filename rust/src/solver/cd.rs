@@ -24,6 +24,7 @@
 use super::active_set::ScreenState;
 use super::duality::DualSnapshot;
 use super::problem::SglProblem;
+use super::sweep::{self, SweepMode};
 use crate::linalg::Design;
 use crate::norms::prox::sgl_prox_inplace;
 use crate::screening::{make_rule, ActiveSet, RuleKind, ScreeningRule};
@@ -47,6 +48,15 @@ pub struct SolveOptions {
     /// Record per-check active-set statistics (Fig. 2a/2b need them;
     /// benches turn this off).
     pub record_history: bool,
+    /// Epoch execution mode ([`crate::solver::sweep`]): the default
+    /// serial cyclic sweep, or work-stealing parallel sweeps over the
+    /// active-set group ranges (bit-identical for ISTA/FISTA,
+    /// bulk-synchronous rounds for CD).
+    pub sweep: SweepMode,
+    /// Worker threads for `sweep = "parallel"` (0 = auto: the
+    /// `SGL_THREADS` / available-parallelism default). Ignored in serial
+    /// mode.
+    pub sweep_threads: usize,
 }
 
 impl Default for SolveOptions {
@@ -57,6 +67,8 @@ impl Default for SolveOptions {
             fce: 10,
             rule: RuleKind::GapSafe,
             record_history: true,
+            sweep: SweepMode::Serial,
+            sweep_threads: 0,
         }
     }
 }
@@ -132,6 +144,11 @@ pub fn solve_with_rule<D: Design>(
     // Scratch block buffer sized to the largest group.
     let max_group = (0..pb.n_groups()).map(|g| pb.groups.size(g)).max().unwrap_or(0);
     let mut block = vec![0.0; max_group];
+    // Bulk-synchronous round buffers, only when `sweep = "parallel"`.
+    let mut par_scratch = state
+        .sweep
+        .is_parallel()
+        .then(|| sweep::CdParScratch::new(p, state.sweep.threads()));
 
     for epoch in 0..opts.max_epochs {
         // ---- gap evaluation + screening every fce epochs (incl. epoch 0)
@@ -142,9 +159,9 @@ pub fn solve_with_rule<D: Design>(
             // dishonest. Every check would cost one extra matvec (§Perf);
             // the radius floor in DualSnapshot covers the short horizon.
             if state.gap_evals % 10 == 0 {
-                state.cols.residual_into(pb, &beta, &mut rho);
+                sweep::residual(&state.sweep, &state.cols, pb, &beta, &mut rho);
             }
-            let snap = DualSnapshot::compute(pb, &beta, &rho, lambda);
+            let snap = DualSnapshot::compute_ctx(pb, &beta, &rho, lambda, &state.sweep);
             let out =
                 state.gap_check(pb, lambda, epoch, rule, &mut beta, &mut rho, snap, &sw);
             if out.converged {
@@ -153,32 +170,46 @@ pub fn solve_with_rule<D: Design>(
             }
         }
 
-        // ---- one cyclic pass over the (compacted) active groups
-        for &(g, s, e) in state.cols.groups() {
-            let lg = pb.lipschitz[g];
-            if lg == 0.0 {
-                continue;
-            }
-            let alpha_g = lambda / lg;
-            let d = e - s;
-            // u = beta_g + X_g^T rho / L_g (restricted to active features),
-            // streaming the packed columns.
-            for (k, idx) in (s..e).enumerate() {
-                let j = state.cols.feature(idx);
-                block[k] = beta[j] + state.cols.col_dot(pb, idx, &rho) / lg;
-            }
-            sgl_prox_inplace(
-                &mut block[..d],
-                pb.tau * alpha_g,
-                (1.0 - pb.tau) * pb.weights[g] * alpha_g,
+        // ---- one pass over the (compacted) active groups: parallel
+        // bulk-synchronous rounds when the mode is on and the active set
+        // is large enough to feed the crew, else the serial cyclic sweep.
+        if state.sweep.engage(state.cols.groups().len(), 8) {
+            sweep::cd_epoch_parallel(
+                &state.sweep,
+                par_scratch.as_mut().expect("engage implies parallel mode"),
+                pb,
+                &state.cols,
+                lambda,
+                &mut beta,
+                &mut rho,
             );
-            // Apply deltas and maintain rho.
-            for (k, idx) in (s..e).enumerate() {
-                let j = state.cols.feature(idx);
-                let delta = block[k] - beta[j];
-                if delta != 0.0 {
-                    beta[j] = block[k];
-                    state.cols.col_axpy(pb, idx, -delta, &mut rho);
+        } else {
+            for &(g, s, e) in state.cols.groups() {
+                let lg = pb.lipschitz[g];
+                if lg == 0.0 {
+                    continue;
+                }
+                let alpha_g = lambda / lg;
+                let d = e - s;
+                // u = beta_g + X_g^T rho / L_g (restricted to active
+                // features), streaming the packed columns.
+                for (k, idx) in (s..e).enumerate() {
+                    let j = state.cols.feature(idx);
+                    block[k] = beta[j] + state.cols.col_dot(pb, idx, &rho) / lg;
+                }
+                sgl_prox_inplace(
+                    &mut block[..d],
+                    pb.tau * alpha_g,
+                    (1.0 - pb.tau) * pb.weights[g] * alpha_g,
+                );
+                // Apply deltas and maintain rho.
+                for (k, idx) in (s..e).enumerate() {
+                    let j = state.cols.feature(idx);
+                    let delta = block[k] - beta[j];
+                    if delta != 0.0 {
+                        beta[j] = block[k];
+                        state.cols.col_axpy(pb, idx, -delta, &mut rho);
+                    }
                 }
             }
         }

@@ -2,9 +2,10 @@
 //! (paper Eq. 15), duality gap, and the GAP safe radius (Theorem 2).
 
 use super::problem::SglProblem;
+use super::sweep::{self, SweepCtx};
 use crate::linalg::ops::{l2_norm, l2_norm_sq};
 use crate::linalg::Design;
-use crate::norms::sgl::{omega, omega_dual};
+use crate::norms::sgl::omega;
 
 /// Primal objective `P_{λ,τ,w}(β) = ½‖ρ‖² + λΩ(β)` given the residual
 /// `ρ = y − Xβ` (kept up to date by the solvers; never recomputed here).
@@ -63,8 +64,23 @@ impl DualSnapshot {
         residual: &[f64],
         lambda: f64,
     ) -> Self {
-        let xt_rho = pb.x.tmatvec(residual);
-        Self::compute_with_xt_rho(pb, beta, residual, &xt_rho, lambda)
+        Self::compute_ctx(pb, beta, residual, lambda, &SweepCtx::serial())
+    }
+
+    /// [`compute`](Self::compute) with the `Xᵀρ` product and the per-group
+    /// dual norm fanned over a [`SweepCtx`] crew — per-column dots and
+    /// per-group ε-norms are independent, so the parallel snapshot is
+    /// bit-identical to the serial one.
+    pub fn compute_ctx<D: Design>(
+        pb: &SglProblem<D>,
+        beta: &[f64],
+        residual: &[f64],
+        lambda: f64,
+        ctx: &SweepCtx,
+    ) -> Self {
+        let mut xt_rho = vec![0.0; pb.p()];
+        sweep::xt_full(ctx, pb, residual, &mut xt_rho);
+        Self::compute_with_xt_rho_ctx(pb, beta, residual, &xt_rho, lambda, ctx)
     }
 
     /// Variant for callers that already hold `Xᵀρ` (the XLA engine and the
@@ -76,7 +92,20 @@ impl DualSnapshot {
         xt_rho: &[f64],
         lambda: f64,
     ) -> Self {
-        let dual_norm = omega_dual(xt_rho, &pb.groups, pb.tau, &pb.weights);
+        Self::compute_with_xt_rho_ctx(pb, beta, residual, xt_rho, lambda, &SweepCtx::serial())
+    }
+
+    /// [`compute_with_xt_rho`](Self::compute_with_xt_rho), dual norm on
+    /// the sweep crew.
+    pub fn compute_with_xt_rho_ctx<D: Design>(
+        pb: &SglProblem<D>,
+        beta: &[f64],
+        residual: &[f64],
+        xt_rho: &[f64],
+        lambda: f64,
+        ctx: &SweepCtx,
+    ) -> Self {
+        let dual_norm = sweep::omega_dual(ctx, xt_rho, &pb.groups, pb.tau, &pb.weights);
         let scale = lambda.max(dual_norm);
         let theta: Vec<f64> = residual.iter().map(|r| r / scale).collect();
         let xt_theta: Vec<f64> = xt_rho.iter().map(|v| v / scale).collect();
@@ -126,7 +155,7 @@ pub fn residual_norm<D: Design>(pb: &SglProblem<D>, beta: &[f64]) -> f64 {
 mod tests {
     use super::*;
     use crate::linalg::Matrix;
-    use crate::norms::sgl::in_dual_unit_ball;
+    use crate::norms::sgl::{in_dual_unit_ball, omega_dual};
     use crate::solver::groups::Groups;
     use crate::util::rng::Pcg;
 

@@ -18,8 +18,8 @@ use super::active_set::ScreenState;
 use super::duality::DualSnapshot;
 use super::ista::global_lipschitz;
 use super::problem::SglProblem;
+use super::sweep;
 use crate::linalg::Design;
-use crate::norms::prox::sgl_prox_inplace;
 use crate::screening::{make_rule, ScreeningRule};
 use crate::solver::cd::{SolveOptions, SolveResult};
 use crate::util::timer::Stopwatch;
@@ -58,14 +58,14 @@ pub fn solve_fista_with_rule<D: Design>(
     let mut rho = vec![0.0; pb.n()];
     let mut xt_rho = vec![0.0; p];
     let mut prev_obj = f64::INFINITY;
-    // Scratch block reused across groups/epochs.
+    // Per-worker prox blocks, allocated once for the whole solve.
     let max_group = (0..pb.n_groups()).map(|g| pb.groups.size(g)).max().unwrap_or(0);
-    let mut block = vec![0.0; max_group];
+    let mut prox_scratch = sweep::ProxScratch::new(max_group, state.sweep.threads());
 
     for epoch in 0..opts.max_epochs {
         if epoch % opts.fce == 0 {
-            state.cols.residual_into(pb, &beta, &mut rho);
-            let snap = DualSnapshot::compute(pb, &beta, &rho, lambda);
+            sweep::residual(&state.sweep, &state.cols, pb, &beta, &mut rho);
+            let snap = DualSnapshot::compute_ctx(pb, &beta, &rho, lambda, &state.sweep);
             let out =
                 state.gap_check(pb, lambda, epoch, rule, &mut beta, &mut rho, snap, &sw);
             if out.features_screened > 0 {
@@ -84,27 +84,26 @@ pub fn solve_fista_with_rule<D: Design>(
         }
 
         // Gradient step at the extrapolated point z, over the compacted
-        // active columns only.
-        state.cols.residual_into(pb, &z, &mut rho);
-        state.cols.xt_into(pb, &rho, &mut xt_rho);
-        for &(g, s, e) in state.cols.groups() {
-            let d = e - s;
-            for (k, idx) in (s..e).enumerate() {
-                let j = state.cols.feature(idx);
-                block[k] = z[j] + xt_rho[j] * inv_l;
-            }
-            sgl_prox_inplace(
-                &mut block[..d],
-                pb.tau * lambda * inv_l,
-                (1.0 - pb.tau) * pb.weights[g] * lambda * inv_l,
-            );
-            for (k, idx) in (s..e).enumerate() {
-                beta_next[state.cols.feature(idx)] = block[k];
-            }
-        }
+        // active columns only — all three sweeps through the sweep
+        // context (parallel branches are bit-identical to the serial
+        // loops: the prox reads a fixed Xᵀρ, the residual accumulates in
+        // serial column order per row).
+        sweep::residual(&state.sweep, &state.cols, pb, &z, &mut rho);
+        sweep::xt_active(&state.sweep, &state.cols, pb, &rho, &mut xt_rho);
+        sweep::fista_sweep(
+            &state.sweep,
+            &state.cols,
+            pb,
+            lambda,
+            inv_l,
+            &z,
+            &xt_rho,
+            &mut beta_next,
+            &mut prox_scratch,
+        );
 
         // Function-value restart check.
-        state.cols.residual_into(pb, &beta_next, &mut rho);
+        sweep::residual(&state.sweep, &state.cols, pb, &beta_next, &mut rho);
         let obj = crate::solver::duality::primal_value(pb, &beta_next, &rho, lambda);
         if obj > prev_obj {
             // Restart: fall back to a plain ISTA step from beta.
@@ -131,7 +130,7 @@ pub fn solve_fista_with_rule<D: Design>(
 
     // `rho` may hold the residual of z/beta_next; finalize() recomputes
     // the terminal gap from `beta` only when convergence is still open.
-    state.cols.residual_into(pb, &beta, &mut rho);
+    sweep::residual(&state.sweep, &state.cols, pb, &beta, &mut rho);
     state.finalize(pb, lambda, rule, &beta, &rho);
     state.into_result(beta, epochs_done, sw.elapsed_s())
 }

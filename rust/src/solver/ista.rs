@@ -21,9 +21,9 @@
 use super::active_set::ScreenState;
 use super::duality::DualSnapshot;
 use super::problem::SglProblem;
+use super::sweep;
 use crate::linalg::spectral::power_iteration;
 use crate::linalg::Design;
-use crate::norms::prox::sgl_prox_inplace;
 use crate::screening::{make_rule, ScreeningRule};
 use crate::solver::cd::{SolveOptions, SolveResult};
 use crate::util::timer::Stopwatch;
@@ -80,16 +80,23 @@ pub fn solve_ista_with_rule<D: Design>(
     }
     let mut epochs_done = 0usize;
     let mut xt_rho = vec![0.0; p];
-    // Scratch block reused across groups/epochs.
+    // Per-worker prox blocks, allocated once for the whole solve.
     let max_group = (0..pb.n_groups()).map(|g| pb.groups.size(g)).max().unwrap_or(0);
-    let mut block = vec![0.0; max_group];
+    let mut prox_scratch = sweep::ProxScratch::new(max_group, state.sweep.threads());
 
     for epoch in 0..opts.max_epochs {
         if epoch % opts.fce == 0 {
             // Full correlation vector: the dual scaling needs every
             // feature, so gap checks cost one full Xᵀρ by design.
-            pb.x.tmatvec_into(&rho, &mut xt_rho);
-            let snap = DualSnapshot::compute_with_xt_rho(pb, &beta, &rho, &xt_rho, lambda);
+            sweep::xt_full(&state.sweep, pb, &rho, &mut xt_rho);
+            let snap = DualSnapshot::compute_with_xt_rho_ctx(
+                pb,
+                &beta,
+                &rho,
+                &xt_rho,
+                lambda,
+                &state.sweep,
+            );
             let out =
                 state.gap_check(pb, lambda, epoch, rule, &mut beta, &mut rho, snap, &sw);
             if out.converged {
@@ -99,32 +106,24 @@ pub fn solve_ista_with_rule<D: Design>(
         }
 
         // u = beta + X^T rho / L on the compacted active columns, then the
-        // separable prox group by group.
-        state.cols.xt_into(pb, &rho, &mut xt_rho);
-        let mut changed = false;
-        for &(g, s, e) in state.cols.groups() {
-            let d = e - s;
-            for (k, idx) in (s..e).enumerate() {
-                let j = state.cols.feature(idx);
-                block[k] = beta[j] + xt_rho[j] / l_global;
-            }
-            sgl_prox_inplace(
-                &mut block[..d],
-                pb.tau * lambda / l_global,
-                (1.0 - pb.tau) * pb.weights[g] * lambda / l_global,
-            );
-            for (k, idx) in (s..e).enumerate() {
-                let j = state.cols.feature(idx);
-                if block[k] != beta[j] {
-                    beta[j] = block[k];
-                    changed = true;
-                }
-            }
-        }
+        // separable prox group by group. Both sweeps route through the
+        // sweep context: every group update reads the same Xᵀρ, so the
+        // parallel branches are bit-identical to the serial loops.
+        sweep::xt_active(&state.sweep, &state.cols, pb, &rho, &mut xt_rho);
+        let changed = sweep::ista_sweep(
+            &state.sweep,
+            &state.cols,
+            pb,
+            lambda,
+            l_global,
+            &mut beta,
+            &xt_rho,
+            &mut prox_scratch,
+        );
         // Full residual recompute over the active columns (matches the
         // artifact's dataflow; screened coordinates are zero).
         if changed {
-            state.cols.residual_into(pb, &beta, &mut rho);
+            sweep::residual(&state.sweep, &state.cols, pb, &beta, &mut rho);
         }
         epochs_done = epoch + 1;
     }

@@ -10,6 +10,9 @@
 //! - [`cd`] — ISTA-BC block coordinate descent (Algorithm 2);
 //! - [`ista`] — full proximal-gradient (mirrors the XLA artifact);
 //! - [`fista`] — accelerated variant with screening/function restarts;
+//! - [`sweep`] — the intra-path parallel execution layer: work-stealing
+//!   per-check kernels, bit-identical parallel ISTA/FISTA sweeps, and the
+//!   bulk-synchronous parallel CD epoch (`sweep = "parallel"`);
 //! - [`path`] — warm-started λ-path (§7.1), solver-selectable;
 //! - [`cv`] — `(λ, τ)` grid validation (Fig. 3a);
 //! - [`elastic_net`] — App. D reformulation;
@@ -27,6 +30,7 @@ pub mod ista;
 pub mod path;
 pub mod problem;
 pub mod strong;
+pub mod sweep;
 
 /// Which native solver runs a single-λ solve. All three are generic over
 /// the design backend and drive the shared [`active_set`] core, so the

@@ -14,8 +14,14 @@
 //!
 //! [`PathBatch`] fans *independent* path solves (CV folds, rule/tolerance
 //! comparison sweeps, multi-τ sweeps) across worker threads — within a
-//! path the warm-started loop is inherently sequential, so parallelism
-//! lives at the between-paths level, where it is embarrassingly clean.
+//! path the warm-started λ-loop is inherently sequential, so between-path
+//! parallelism is embarrassingly clean. *Inside* each single-λ solve a
+//! second, orthogonal axis exists since [`crate::solver::sweep`]: setting
+//! `SolveOptions::sweep = "parallel"` parallelizes the per-epoch group
+//! sweeps and per-check screening work over a per-solve worker crew —
+//! the lever for single-path latency, composable with (but usually an
+//! alternative to) the batch fan-out: a saturated `PathBatch` should keep
+//! solves serial, a latency-critical single path should not.
 
 use super::cd::{solve_with_rule, SolveOptions, SolveResult};
 use super::duality::DualSnapshot;

@@ -1,0 +1,1051 @@
+//! Intra-path parallel execution layer: work-stealing sweeps *inside* a
+//! single solve.
+//!
+//! `PathBatch` (PR 1) parallelizes across paths and the solve service
+//! (PR 3) across λ-shards; within one path every per-group sweep was
+//! still serial — the single-path latency axis. This module closes it,
+//! parallelizing over the compact `(g, start, end)` ranges of
+//! [`ActiveCols`] on a per-solve [`WorkCrew`]:
+//!
+//! - **per-check work** — the full `Xᵀρ` of a gap evaluation
+//!   ([`xt_full`]), the compacted correlation sweep ([`xt_active`]), the
+//!   per-group dual norm ([`omega_dual`]) and the screening decision pass
+//!   ([`crate::screening::apply_sphere_ctx`]) are embarrassingly parallel
+//!   per column/group with disjoint writes, so their parallel versions
+//!   are **bit-identical** to the serial ones;
+//! - **full-gradient sweeps** — ISTA/FISTA prox steps are Jacobi by
+//!   construction (every group update reads the same `Xᵀρ`), so
+//!   [`ista_sweep`]/[`fista_sweep`] parallelize them without changing a
+//!   single bit, and the row-partitioned [`residual`] keeps each row's
+//!   accumulation in serial column order (also bit-identical);
+//! - **parallel CD epochs** — coordinate descent is inherently
+//!   sequential, so [`cd_epoch_parallel`] switches the epoch to
+//!   bulk-synchronous rounds: each worker proposes block updates against
+//!   the round-start residual, a barrier, then the deltas are reduced
+//!   into `ρ` over row partitions. Rounds take *strided* group subsets
+//!   (adjacent groups are the correlated ones on banded designs), and
+//!   each round updates only `threads ·`[`GROUPS_PER_ROUND_PER_WORKER`]
+//!   groups simultaneously, keeping the Jacobi degree small enough that
+//!   the MM majorization still dominates the cross-block coupling. The
+//!   iterates differ from the cyclic sweep (same optimum, different
+//!   trajectory), which is why the CD mode is opt-in
+//!   (`sweep = "parallel"`) and falls back to the serial cyclic sweep
+//!   when the active set is small ([`SweepCtx::engage`]).
+//!
+//! Everything is gated on [`SolveOptions::sweep`]: the default
+//! `SweepMode::Serial` spawns no threads and leaves every solver
+//! bit-for-bit unchanged.
+
+use super::active_set::ActiveCols;
+use super::cd::SolveOptions;
+use super::problem::SglProblem;
+use crate::linalg::Design;
+use crate::norms::prox::sgl_prox_inplace;
+use crate::norms::sgl::{omega_dual as omega_dual_serial, omega_dual_group};
+use crate::solver::groups::Groups;
+use crate::util::pool::{
+    even_chunk, resolve_threads, SharedSlice, SpinBarrier, WorkCrew, WorkQueue,
+};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+
+/// How one epoch sweeps the active groups (`[solver] sweep` in TOML,
+/// `--sweep` on the CLI).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SweepMode {
+    /// The classic cyclic sweep (paper Algorithm 2); single-threaded
+    /// within a solve. The default.
+    Serial,
+    /// Work-stealing parallel sweeps over the active-set group ranges:
+    /// bit-identical for ISTA/FISTA, bulk-synchronous Jacobi rounds for
+    /// CD (same optimum, different trajectory).
+    Parallel,
+}
+
+impl SweepMode {
+    pub fn name(self) -> &'static str {
+        match self {
+            SweepMode::Serial => "serial",
+            SweepMode::Parallel => "parallel",
+        }
+    }
+
+    pub fn all() -> [SweepMode; 2] {
+        [SweepMode::Serial, SweepMode::Parallel]
+    }
+
+    pub fn from_name(s: &str) -> Option<SweepMode> {
+        Self::all().into_iter().find(|m| m.name() == s)
+    }
+}
+
+std::thread_local! {
+    /// Parked crew from the previous parallel solve on this OS thread. A
+    /// warm-started path runs hundreds of short solves back to back;
+    /// recycling the crew turns "spawn + join `threads−1` OS threads per
+    /// λ" into "once per owning thread" ([`SweepCtx::drop`] parks it,
+    /// [`SweepCtx::from_opts`] picks it back up when the size matches).
+    static PARKED_CREW: std::cell::RefCell<Option<WorkCrew>> =
+        const { std::cell::RefCell::new(None) };
+}
+
+/// Per-solve sweep context: `None` crew = serial. Holds the worker crew
+/// for the solve's lifetime (created by `ScreenState::new`, parked again
+/// when the solve ends), so per-epoch parallel regions pay a condvar
+/// broadcast, not a thread spawn.
+pub struct SweepCtx {
+    crew: Option<WorkCrew>,
+}
+
+impl SweepCtx {
+    /// Serial context: every kernel takes its single-threaded branch.
+    pub fn serial() -> SweepCtx {
+        SweepCtx { crew: None }
+    }
+
+    /// Build from the solve options: a crew only for
+    /// `sweep = "parallel"` with an effective thread count ≥ 2
+    /// (`sweep_threads = 0` means auto, like every other thread knob) —
+    /// recycled from this thread's parked crew when the size matches,
+    /// freshly spawned otherwise.
+    pub fn from_opts(opts: &SolveOptions) -> SweepCtx {
+        match opts.sweep {
+            SweepMode::Serial => SweepCtx::serial(),
+            SweepMode::Parallel => {
+                let threads = resolve_threads(opts.sweep_threads);
+                if threads >= 2 {
+                    let crew = PARKED_CREW.with(|slot| {
+                        match slot.borrow_mut().take() {
+                            Some(c) if c.threads() == threads => c,
+                            // A differently-sized leftover is dropped
+                            // (joins its helpers) and replaced.
+                            _ => WorkCrew::new(threads),
+                        }
+                    });
+                    SweepCtx { crew: Some(crew) }
+                } else {
+                    SweepCtx::serial()
+                }
+            }
+        }
+    }
+
+    #[inline]
+    pub fn is_parallel(&self) -> bool {
+        self.crew.is_some()
+    }
+
+    /// Worker count (1 when serial).
+    #[inline]
+    pub fn threads(&self) -> usize {
+        self.crew.as_ref().map_or(1, WorkCrew::threads)
+    }
+
+    /// Whether a parallel region over `units` work items is worth its
+    /// dispatch cost: parallel mode is on *and* every worker would get at
+    /// least `per_worker` items. Kernels below are bit-identical either
+    /// way; for the CD epoch this is also the "active set is small →
+    /// serial cyclic fallback" switch.
+    #[inline]
+    pub fn engage(&self, units: usize, per_worker: usize) -> bool {
+        match &self.crew {
+            Some(crew) => units >= per_worker * crew.threads(),
+            None => false,
+        }
+    }
+
+    fn crew_if(&self, units: usize, per_worker: usize) -> Option<&WorkCrew> {
+        if self.engage(units, per_worker) {
+            self.crew.as_ref()
+        } else {
+            None
+        }
+    }
+
+    /// `f(i)` for every `i in 0..n`, work-stealing `chunk`-sized ranges
+    /// when the region engages (`n ≥ per_worker · threads`), plain loop
+    /// otherwise. Callers whose `f` writes shared memory must write
+    /// disjoint locations per `i`.
+    pub fn for_each<F>(&self, n: usize, chunk: usize, per_worker: usize, f: F)
+    where
+        F: Fn(usize) + Sync,
+    {
+        match self.crew_if(n, per_worker) {
+            Some(crew) => {
+                let queue = WorkQueue::new(n, chunk);
+                crew.run(&|_w| {
+                    while let Some((a, b)) = queue.next() {
+                        for i in a..b {
+                            f(i);
+                        }
+                    }
+                });
+            }
+            None => {
+                for i in 0..n {
+                    f(i);
+                }
+            }
+        }
+    }
+}
+
+impl Drop for SweepCtx {
+    fn drop(&mut self) {
+        if let Some(crew) = self.crew.take() {
+            // Park for the next solve on this thread; a previously parked
+            // crew (if any) is dropped and joined here. `try_with` covers
+            // drops racing thread-local teardown — the crew then just
+            // drops (joining its helpers) instead of parking.
+            let _ = PARKED_CREW.try_with(|slot| *slot.borrow_mut() = Some(crew));
+        }
+    }
+}
+
+/// Full correlation vector `xt = Xᵀv` over **all** columns (gap checks
+/// need every feature, screened or not). Each column is an independent
+/// dot product with a disjoint write: bit-identical to the serial
+/// `tmatvec_into` under any schedule.
+pub fn xt_full<D: Design>(ctx: &SweepCtx, pb: &SglProblem<D>, v: &[f64], xt: &mut [f64]) {
+    let p = pb.p();
+    debug_assert_eq!(xt.len(), p);
+    if !ctx.engage(p, 64) {
+        pb.x.tmatvec_into(v, xt);
+        return;
+    }
+    let out = SharedSlice::new(xt);
+    ctx.for_each(p, 64, 64, |j| {
+        // SAFETY: each column index is claimed by exactly one worker.
+        unsafe { out.set(j, pb.x.col_dot(j, v)) };
+    });
+}
+
+/// `xt[j] = X_jᵀv` for the active features only, streaming the packed
+/// columns (screened entries left untouched, exactly like
+/// [`ActiveCols::xt_into`]). Bit-identical to the serial sweep.
+pub fn xt_active<D: Design>(
+    ctx: &SweepCtx,
+    cols: &ActiveCols<D>,
+    pb: &SglProblem<D>,
+    v: &[f64],
+    xt: &mut [f64],
+) {
+    let n_active = cols.n_active();
+    if !ctx.engage(n_active, 64) {
+        cols.xt_into(pb, v, xt);
+        return;
+    }
+    let out = SharedSlice::new(xt);
+    ctx.for_each(n_active, 64, 64, |k| {
+        // SAFETY: compact columns map to distinct original features.
+        unsafe { out.set(cols.feature(k), cols.col_dot(pb, k, v)) };
+    });
+}
+
+/// `ρ = y − Xβ` over the active columns, row-partitioned: worker `w` owns
+/// the row range [`even_chunk`]`(n, threads, w)` and accumulates every
+/// column's contribution to it in column order — the same per-row
+/// addition order as the serial [`ActiveCols::residual_into`], hence
+/// bit-identical results.
+pub fn residual<D: Design>(
+    ctx: &SweepCtx,
+    cols: &ActiveCols<D>,
+    pb: &SglProblem<D>,
+    beta: &[f64],
+    rho: &mut [f64],
+) {
+    let n_active = cols.n_active();
+    let crew = match ctx.crew_if(n_active, 64) {
+        Some(c) => c,
+        None => {
+            cols.residual_into(pb, beta, rho);
+            return;
+        }
+    };
+    let n = pb.n();
+    let threads = crew.threads();
+    let out = SharedSlice::new(rho);
+    crew.run(&|w| {
+        let (row0, row1) = even_chunk(n, threads, w);
+        if row0 >= row1 {
+            return;
+        }
+        // SAFETY: row ranges are disjoint across workers.
+        let mine = unsafe { out.range_mut(row0, row1) };
+        mine.copy_from_slice(&pb.y[row0..row1]);
+        for k in 0..n_active {
+            let bj = beta[cols.feature(k)];
+            if bj != 0.0 {
+                cols.col_axpy_rows(pb, k, -bj, row0, row1, mine);
+            }
+        }
+    });
+}
+
+/// The SGL dual norm `Ω^D(ξ)`, its per-group ε-norms evaluated in
+/// parallel. The combine is a `max` over the per-group values, so the
+/// result is bit-identical to [`crate::norms::sgl::omega_dual`].
+pub fn omega_dual(ctx: &SweepCtx, xi: &[f64], groups: &Groups, tau: f64, w: &[f64]) -> f64 {
+    let ng = groups.n_groups();
+    if !ctx.engage(ng, 32) {
+        return omega_dual_serial(xi, groups, tau, w);
+    }
+    let mut vals = vec![0.0f64; ng];
+    {
+        let out = SharedSlice::new(&mut vals);
+        ctx.for_each(ng, 16, 32, |g| {
+            let (a, b) = groups.bounds(g);
+            // SAFETY: one group per worker.
+            unsafe { out.set(g, omega_dual_group(&xi[a..b], tau, w[g])) };
+        });
+    }
+    vals.into_iter().fold(0.0f64, f64::max)
+}
+
+/// Per-solve scratch for the prox sweeps: one `max_group`-wide block per
+/// worker, allocated once (the serial branch uses worker 0's block), so
+/// per-epoch sweeps never touch the allocator.
+pub struct ProxScratch {
+    buf: Vec<f64>,
+    width: usize,
+}
+
+impl ProxScratch {
+    /// `threads` blocks of `max_group` coefficients.
+    pub fn new(max_group: usize, threads: usize) -> Self {
+        let threads = threads.max(1);
+        ProxScratch { buf: vec![0.0; max_group * threads], width: max_group }
+    }
+}
+
+/// One ISTA prox sweep over the active groups:
+/// `β_g ← prox(β_g + (Xᵀρ)_g / L)`. Every group reads the same `xt_rho`,
+/// so groups are independent and the parallel branch is bit-identical to
+/// the serial loop. Returns whether any coefficient changed.
+#[allow(clippy::too_many_arguments)]
+pub fn ista_sweep<D: Design>(
+    ctx: &SweepCtx,
+    cols: &ActiveCols<D>,
+    pb: &SglProblem<D>,
+    lambda: f64,
+    l_global: f64,
+    beta: &mut [f64],
+    xt_rho: &[f64],
+    scratch: &mut ProxScratch,
+) -> bool {
+    let groups = cols.groups();
+    let width = scratch.width;
+    if !ctx.engage(groups.len(), 16) {
+        let block = &mut scratch.buf[..width];
+        let mut changed = false;
+        for &(g, s, e) in groups {
+            let d = e - s;
+            for (k, idx) in (s..e).enumerate() {
+                let j = cols.feature(idx);
+                block[k] = beta[j] + xt_rho[j] / l_global;
+            }
+            sgl_prox_inplace(
+                &mut block[..d],
+                pb.tau * lambda / l_global,
+                (1.0 - pb.tau) * pb.weights[g] * lambda / l_global,
+            );
+            for (k, idx) in (s..e).enumerate() {
+                let j = cols.feature(idx);
+                if block[k] != beta[j] {
+                    beta[j] = block[k];
+                    changed = true;
+                }
+            }
+        }
+        return changed;
+    }
+    let crew = ctx.crew.as_ref().expect("engage implies a crew");
+    debug_assert!(scratch.buf.len() >= width * crew.threads());
+    let changed = AtomicBool::new(false);
+    let queue = WorkQueue::new(groups.len(), 4);
+    let beta_sh = SharedSlice::new(beta);
+    let blocks = SharedSlice::new(&mut scratch.buf);
+    crew.run(&|w| {
+        // SAFETY: per-worker block ranges are disjoint.
+        let local = unsafe { blocks.range_mut(w * width, (w + 1) * width) };
+        let mut any = false;
+        while let Some((ga, gb)) = queue.next() {
+            for &(g, s, e) in &groups[ga..gb] {
+                let d = e - s;
+                for (k, idx) in (s..e).enumerate() {
+                    let j = cols.feature(idx);
+                    // SAFETY: β reads/writes stay within this worker's
+                    // claimed groups (disjoint feature ranges).
+                    local[k] = unsafe { beta_sh.get(j) } + xt_rho[j] / l_global;
+                }
+                sgl_prox_inplace(
+                    &mut local[..d],
+                    pb.tau * lambda / l_global,
+                    (1.0 - pb.tau) * pb.weights[g] * lambda / l_global,
+                );
+                for (k, idx) in (s..e).enumerate() {
+                    let j = cols.feature(idx);
+                    let old = unsafe { beta_sh.get(j) };
+                    if local[k] != old {
+                        unsafe { beta_sh.set(j, local[k]) };
+                        any = true;
+                    }
+                }
+            }
+        }
+        if any {
+            changed.store(true, Ordering::Relaxed);
+        }
+    });
+    changed.load(Ordering::Relaxed)
+}
+
+/// One FISTA gradient/prox sweep at the extrapolated point `z`:
+/// `β⁺_g ← prox(z_g + (Xᵀρ)_g · L⁻¹)`, written into `beta_next`.
+/// Bit-identical to the serial loop for the same reason as
+/// [`ista_sweep`].
+#[allow(clippy::too_many_arguments)]
+pub fn fista_sweep<D: Design>(
+    ctx: &SweepCtx,
+    cols: &ActiveCols<D>,
+    pb: &SglProblem<D>,
+    lambda: f64,
+    inv_l: f64,
+    z: &[f64],
+    xt_rho: &[f64],
+    beta_next: &mut [f64],
+    scratch: &mut ProxScratch,
+) {
+    let groups = cols.groups();
+    let width = scratch.width;
+    if !ctx.engage(groups.len(), 16) {
+        let block = &mut scratch.buf[..width];
+        for &(g, s, e) in groups {
+            let d = e - s;
+            for (k, idx) in (s..e).enumerate() {
+                let j = cols.feature(idx);
+                block[k] = z[j] + xt_rho[j] * inv_l;
+            }
+            sgl_prox_inplace(
+                &mut block[..d],
+                pb.tau * lambda * inv_l,
+                (1.0 - pb.tau) * pb.weights[g] * lambda * inv_l,
+            );
+            for (k, idx) in (s..e).enumerate() {
+                beta_next[cols.feature(idx)] = block[k];
+            }
+        }
+        return;
+    }
+    let crew = ctx.crew.as_ref().expect("engage implies a crew");
+    debug_assert!(scratch.buf.len() >= width * crew.threads());
+    let queue = WorkQueue::new(groups.len(), 4);
+    let next_sh = SharedSlice::new(beta_next);
+    let blocks = SharedSlice::new(&mut scratch.buf);
+    crew.run(&|w| {
+        // SAFETY: per-worker block ranges are disjoint.
+        let local = unsafe { blocks.range_mut(w * width, (w + 1) * width) };
+        while let Some((ga, gb)) = queue.next() {
+            for &(g, s, e) in &groups[ga..gb] {
+                let d = e - s;
+                for (k, idx) in (s..e).enumerate() {
+                    let j = cols.feature(idx);
+                    local[k] = z[j] + xt_rho[j] * inv_l;
+                }
+                sgl_prox_inplace(
+                    &mut local[..d],
+                    pb.tau * lambda * inv_l,
+                    (1.0 - pb.tau) * pb.weights[g] * lambda * inv_l,
+                );
+                for (k, idx) in (s..e).enumerate() {
+                    // SAFETY: groups write disjoint feature ranges.
+                    unsafe { next_sh.set(cols.feature(idx), local[k]) };
+                }
+            }
+        }
+    });
+}
+
+/// Block updates proposed simultaneously per round, per worker. Small
+/// enough that the per-block MM majorization usually dominates the
+/// cross-block coupling (rounds are strided, so simultaneous blocks are
+/// far apart and near-uncorrelated on banded designs); large enough to
+/// amortize the barrier crossings per round. The monotonicity guard in
+/// [`cd_epoch_parallel`] makes the choice a performance knob, never a
+/// correctness one.
+pub const GROUPS_PER_ROUND_PER_WORKER: usize = 4;
+
+/// Reusable buffers for [`cd_epoch_parallel`], allocated once per solve.
+pub struct CdParScratch {
+    /// Proposed coefficient per compact column.
+    proposed: Vec<f64>,
+    /// Proposed − current coefficient per compact column.
+    delta: Vec<f64>,
+    /// Per-worker `Σ ρ_i²` over its row slice (acceptance test input).
+    rho_sq_partial: Vec<f64>,
+    barrier: SpinBarrier,
+}
+
+impl CdParScratch {
+    pub fn new(p: usize, threads: usize) -> Self {
+        CdParScratch {
+            proposed: vec![0.0; p],
+            delta: vec![0.0; p],
+            rho_sq_partial: vec![0.0; threads],
+            barrier: SpinBarrier::new(threads),
+        }
+    }
+}
+
+/// `τ‖β_g‖₁ + (1−τ)w_g‖β_g‖` summed over the round's groups, reading
+/// coefficients by compact column through an accessor (old β before the
+/// commit, proposals after).
+fn round_omega<D: Design>(
+    pb: &SglProblem<D>,
+    round_groups: impl Iterator<Item = (usize, usize, usize)>,
+    coef: impl Fn(usize) -> f64,
+) -> f64 {
+    let mut total = 0.0;
+    for (g, s, e) in round_groups {
+        let mut l1 = 0.0;
+        let mut l2_sq = 0.0;
+        for k in s..e {
+            let v = coef(k);
+            l1 += v.abs();
+            l2_sq += v * v;
+        }
+        total += pb.tau * l1 + (1.0 - pb.tau) * pb.weights[g] * l2_sq.sqrt();
+    }
+    total
+}
+
+/// One bulk-synchronous parallel CD epoch over the compacted active
+/// groups.
+///
+/// Groups are split into strided round subsets (round `r` takes group
+/// indices `r, r + n_rounds, …` — adjacent groups, the correlated ones on
+/// banded designs, land in *different* rounds). Each round:
+///
+/// 1. **propose** — workers steal groups and compute the MM block update
+///    `β_g ← prox(β_g + X_gᵀρ / L_g)` against the round-start residual,
+///    recording proposal and delta per compact column (disjoint writes);
+/// 2. barrier;
+/// 3. **apply** — the deltas are reduced into `ρ` over a static row
+///    partition (each worker owns a row range and also accumulates its
+///    slice's `Σρ²`; per-row addition order is the round's column order,
+///    so the reduction is deterministic), while worker 0 commits the
+///    coefficients and the round's penalty terms;
+/// 4. barrier; **accept test** — worker 0 evaluates the round's primal
+///    change `½Δ‖ρ‖² + λΔΩ`. Simultaneous block-MM steps are descent
+///    steps *unless* the cross-block coupling overwhelms the per-block
+///    curvature (the Shotgun divergence regime — possible when many
+///    correlated blocks move at once). An increasing round is **reverted
+///    and redone sequentially** by worker 0 (exact Gauss–Seidel, which
+///    always descends), so the epoch is monotone by construction: the
+///    round size is a performance knob, never a correctness one. On the
+///    strided subsets the coupling is zero-mean and `O(1/√n)` relative
+///    to the curvature, so reverts are rare;
+/// 5. barrier, next round.
+///
+/// Callers gate this on [`SweepCtx::engage`] so every round updates at
+/// most half the active groups.
+pub fn cd_epoch_parallel<D: Design>(
+    ctx: &SweepCtx,
+    scratch: &mut CdParScratch,
+    pb: &SglProblem<D>,
+    cols: &ActiveCols<D>,
+    lambda: f64,
+    beta: &mut [f64],
+    rho: &mut [f64],
+) {
+    let crew = ctx.crew.as_ref().expect("parallel epoch requires a crew");
+    let threads = crew.threads();
+    debug_assert_eq!(scratch.barrier.participants(), threads);
+    debug_assert_eq!(scratch.rho_sq_partial.len(), threads);
+    let groups = cols.groups();
+    let n = pb.n();
+    let round = threads * GROUPS_PER_ROUND_PER_WORKER;
+    let n_rounds = groups.len().div_ceil(round).max(1);
+    // Per-round stealing cursors: cursor `r` walks the round's strided
+    // member list `gi = r + t·n_rounds`.
+    let cursors: Vec<AtomicUsize> = (0..n_rounds).map(|_| AtomicUsize::new(0)).collect();
+    let members = |r: usize| (groups.len() - r).div_ceil(n_rounds);
+    let max_group = groups.iter().map(|&(_, s, e)| e - s).max().unwrap_or(0);
+    let proposed = SharedSlice::new(&mut scratch.proposed);
+    let delta = SharedSlice::new(&mut scratch.delta);
+    let partial = SharedSlice::new(&mut scratch.rho_sq_partial);
+    let beta_sh = SharedSlice::new(beta);
+    let rho_sh = SharedSlice::new(rho);
+    let barrier = &scratch.barrier;
+    let abort = crew.abort_flag();
+    // Worker 0's accept verdict, broadcast to the crew between barriers.
+    let accepted = AtomicBool::new(true);
+    crew.run(&|w| {
+        // Rolling `‖ρ‖²` — read and written by worker 0 only.
+        let mut rho_sq_old = if w == 0 {
+            // SAFETY: everyone only reads ρ until the first apply phase.
+            let r = unsafe { rho_sh.slice(0, n) };
+            r.iter().map(|v| v * v).sum::<f64>()
+        } else {
+            0.0
+        };
+        for (r, cursor) in cursors.iter().enumerate() {
+            let m = members(r);
+            let round_iter = || (0..m).map(move |t| groups[r + t * n_rounds]);
+            // --- propose against the round-start residual.
+            loop {
+                let t = cursor.fetch_add(1, Ordering::Relaxed);
+                if t >= m {
+                    break;
+                }
+                let (g, s, e) = groups[r + t * n_rounds];
+                // SAFETY: ρ is read-only during the propose phase; group
+                // column ranges are disjoint across workers; β is
+                // read-only here.
+                let rho_view = unsafe { rho_sh.slice(0, n) };
+                let prop = unsafe { proposed.range_mut(s, e) };
+                let lg = pb.lipschitz[g];
+                if lg == 0.0 {
+                    for (off, k) in (s..e).enumerate() {
+                        prop[off] = unsafe { beta_sh.get(cols.feature(k)) };
+                        unsafe { delta.set(k, 0.0) };
+                    }
+                    continue;
+                }
+                let alpha_g = lambda / lg;
+                for (off, k) in (s..e).enumerate() {
+                    let j = cols.feature(k);
+                    prop[off] =
+                        unsafe { beta_sh.get(j) } + cols.col_dot(pb, k, rho_view) / lg;
+                }
+                sgl_prox_inplace(
+                    prop,
+                    pb.tau * alpha_g,
+                    (1.0 - pb.tau) * pb.weights[g] * alpha_g,
+                );
+                for (off, k) in (s..e).enumerate() {
+                    let j = cols.feature(k);
+                    unsafe { delta.set(k, prop[off] - beta_sh.get(j)) };
+                }
+            }
+            if !barrier.wait_or(abort) {
+                return;
+            }
+            // --- apply: row-partitioned ρ reduction + per-slice Σρ²;
+            // worker 0 commits β (deltas are frozen, nothing reads β
+            // except worker 0, who reads before it writes).
+            let (row0, row1) = even_chunk(n, threads, w);
+            let mut omega_old = 0.0;
+            let mut omega_new = 0.0;
+            if w == 0 {
+                // SAFETY: β commits below happen on this same worker.
+                omega_old =
+                    round_omega(pb, round_iter(), |k| unsafe { beta_sh.get(cols.feature(k)) });
+            }
+            let mut slice_sq = 0.0;
+            if row0 < row1 {
+                // SAFETY: row ranges are disjoint across workers.
+                let my_rho = unsafe { rho_sh.range_mut(row0, row1) };
+                for (_, s, e) in round_iter() {
+                    for k in s..e {
+                        // SAFETY: deltas are frozen behind the barrier.
+                        let d = unsafe { delta.get(k) };
+                        if d != 0.0 {
+                            cols.col_axpy_rows(pb, k, -d, row0, row1, my_rho);
+                        }
+                    }
+                }
+                slice_sq = my_rho.iter().map(|v| v * v).sum();
+            }
+            // SAFETY: one slot per worker.
+            unsafe { partial.set(w, slice_sq) };
+            if w == 0 {
+                for (_, s, e) in round_iter() {
+                    for k in s..e {
+                        if unsafe { delta.get(k) } != 0.0 {
+                            // SAFETY: only worker 0 writes β in this phase.
+                            unsafe { beta_sh.set(cols.feature(k), proposed.get(k)) };
+                        }
+                    }
+                }
+                omega_new = round_omega(pb, round_iter(), |k| unsafe { proposed.get(k) });
+            }
+            if !barrier.wait_or(abort) {
+                return;
+            }
+            // --- accept test (worker 0), verdict broadcast to the crew.
+            if w == 0 {
+                // SAFETY: every slot was written before the barrier.
+                let rho_sq_new: f64 =
+                    (0..threads).map(|i| unsafe { partial.get(i) }).sum();
+                let delta_obj =
+                    0.5 * (rho_sq_new - rho_sq_old) + lambda * (omega_new - omega_old);
+                let slack = 1e-12
+                    * (1.0 + rho_sq_old + lambda * (omega_old.abs() + omega_new.abs()));
+                if delta_obj <= slack {
+                    accepted.store(true, Ordering::SeqCst);
+                    rho_sq_old = rho_sq_new;
+                } else {
+                    accepted.store(false, Ordering::SeqCst);
+                }
+            }
+            if !barrier.wait_or(abort) {
+                return;
+            }
+            if !accepted.load(Ordering::SeqCst) {
+                // --- revert the joint step (row-partitioned, like apply)…
+                if row0 < row1 {
+                    // SAFETY: row ranges are disjoint across workers.
+                    let my_rho = unsafe { rho_sh.range_mut(row0, row1) };
+                    for (_, s, e) in round_iter() {
+                        for k in s..e {
+                            let d = unsafe { delta.get(k) };
+                            if d != 0.0 {
+                                cols.col_axpy_rows(pb, k, d, row0, row1, my_rho);
+                            }
+                        }
+                    }
+                }
+                if !barrier.wait_or(abort) {
+                    return;
+                }
+                // --- …then redo the round sequentially on worker 0:
+                // exact Gauss–Seidel block steps, guaranteed descent.
+                if w == 0 {
+                    for (_, s, e) in round_iter() {
+                        for k in s..e {
+                            let d = unsafe { delta.get(k) };
+                            if d != 0.0 {
+                                // SAFETY: the crew is parked at the next
+                                // barrier; worker 0 owns β and ρ here.
+                                unsafe {
+                                    beta_sh.set(cols.feature(k), proposed.get(k) - d)
+                                };
+                            }
+                        }
+                    }
+                    let all_rho = unsafe { rho_sh.range_mut(0, n) };
+                    let mut block = vec![0.0; max_group];
+                    for (g, s, e) in round_iter() {
+                        let lg = pb.lipschitz[g];
+                        if lg == 0.0 {
+                            continue;
+                        }
+                        let alpha_g = lambda / lg;
+                        let width = e - s;
+                        for (off, k) in (s..e).enumerate() {
+                            let j = cols.feature(k);
+                            block[off] = unsafe { beta_sh.get(j) }
+                                + cols.col_dot(pb, k, all_rho) / lg;
+                        }
+                        sgl_prox_inplace(
+                            &mut block[..width],
+                            pb.tau * alpha_g,
+                            (1.0 - pb.tau) * pb.weights[g] * alpha_g,
+                        );
+                        for (off, k) in (s..e).enumerate() {
+                            let j = cols.feature(k);
+                            let dd = block[off] - unsafe { beta_sh.get(j) };
+                            if dd != 0.0 {
+                                unsafe { beta_sh.set(j, block[off]) };
+                                cols.col_axpy(pb, k, -dd, all_rho);
+                            }
+                        }
+                    }
+                    rho_sq_old = all_rho.iter().map(|v| v * v).sum();
+                }
+                if !barrier.wait_or(abort) {
+                    return;
+                }
+            }
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::{CscMatrix, Matrix};
+    use crate::screening::RuleKind;
+    use crate::solver::groups::Groups;
+    use crate::util::rng::Pcg;
+
+    fn parallel_opts(threads: usize) -> SolveOptions {
+        SolveOptions {
+            sweep: SweepMode::Parallel,
+            sweep_threads: threads,
+            ..Default::default()
+        }
+    }
+
+    fn random_problem(n: usize, n_groups: usize, size: usize, seed: u64) -> SglProblem {
+        let groups = Groups::uniform(n_groups, size);
+        let p = groups.p();
+        let mut rng = Pcg::seeded(seed);
+        let x = Matrix::from_fn(n, p, |_, _| rng.normal());
+        let mut beta_true = vec![0.0; p];
+        beta_true[0] = 2.0;
+        beta_true[p / 2] = -1.5;
+        let xb = x.matvec(&beta_true);
+        let y: Vec<f64> = xb.iter().map(|v| v + 0.01 * rng.normal()).collect();
+        SglProblem::new(x, y, groups, 0.3)
+    }
+
+    #[test]
+    fn sweep_mode_round_trip() {
+        for m in SweepMode::all() {
+            assert_eq!(SweepMode::from_name(m.name()), Some(m));
+        }
+        assert_eq!(SweepMode::from_name("jacobi"), None);
+    }
+
+    #[test]
+    fn serial_ctx_never_engages() {
+        let ctx = SweepCtx::serial();
+        assert!(!ctx.is_parallel());
+        assert_eq!(ctx.threads(), 1);
+        assert!(!ctx.engage(1 << 20, 1));
+        let serial_opts = SolveOptions::default();
+        assert!(!SweepCtx::from_opts(&serial_opts).is_parallel());
+        // sweep_threads = 1 is explicitly single-threaded: no crew.
+        assert!(!SweepCtx::from_opts(&parallel_opts(1)).is_parallel());
+    }
+
+    #[test]
+    fn parallel_ctx_engages_above_per_worker_floor() {
+        let ctx = SweepCtx::from_opts(&parallel_opts(2));
+        assert!(ctx.is_parallel());
+        assert_eq!(ctx.threads(), 2);
+        assert!(ctx.engage(128, 64));
+        assert!(!ctx.engage(127, 64));
+    }
+
+    #[test]
+    fn parallel_per_check_kernels_are_bit_identical() {
+        // Sized so every kernel actually crosses its engage() floor with
+        // two workers (p = 400 features, 80 groups, ~265 active columns).
+        let pb = random_problem(23, 80, 5, 1);
+        let spb: SglProblem<CscMatrix> = SglProblem::new(
+            CscMatrix::from_dense(&pb.x),
+            pb.y.clone(),
+            pb.groups.clone(),
+            pb.tau,
+        );
+        let ctx = SweepCtx::from_opts(&parallel_opts(2));
+        assert!(ctx.engage(pb.p(), 64), "xt_full must take the parallel branch");
+        assert!(ctx.engage(pb.n_groups(), 32), "omega_dual must take the parallel branch");
+        let mut rng = Pcg::seeded(9);
+        let v: Vec<f64> = (0..pb.n()).map(|_| rng.normal()).collect();
+        let beta: Vec<f64> = (0..pb.p()).map(|_| rng.normal() * 0.1).collect();
+
+        // Full Xᵀv.
+        let mut serial = vec![0.0; pb.p()];
+        pb.x.tmatvec_into(&v, &mut serial);
+        let mut par = vec![0.0; pb.p()];
+        xt_full(&ctx, &pb, &v, &mut par);
+        assert_eq!(serial, par);
+        let mut spar = vec![0.0; pb.p()];
+        xt_full(&ctx, &spb, &v, &mut spar);
+        for (a, b) in serial.iter().zip(&spar) {
+            assert!((a - b).abs() < 1e-12);
+        }
+
+        // Active-set Xᵀv and residual on a screened-down compaction.
+        let mut active = crate::screening::ActiveSet::full(&pb.groups);
+        for g in 0..pb.n_groups() {
+            if g % 3 == 0 {
+                active.group[g] = false;
+                let (a, b) = pb.groups.bounds(g);
+                for j in a..b {
+                    active.feature[j] = false;
+                }
+            }
+        }
+        let mut cols = ActiveCols::full(&pb);
+        cols.rebuild(&pb, &active);
+        assert!(
+            ctx.engage(cols.n_active(), 64),
+            "xt_active/residual must take the parallel branch"
+        );
+        let mut xs = vec![0.0; pb.p()];
+        cols.xt_into(&pb, &v, &mut xs);
+        let mut xp = vec![0.0; pb.p()];
+        xt_active(&ctx, &cols, &pb, &v, &mut xp);
+        for k in 0..cols.n_active() {
+            let j = cols.feature(k);
+            assert_eq!(xs[j], xp[j], "feature {j}");
+        }
+
+        let mut rs = vec![0.0; pb.n()];
+        cols.residual_into(&pb, &beta, &mut rs);
+        let mut rp = vec![0.0; pb.n()];
+        residual(&ctx, &cols, &pb, &beta, &mut rp);
+        assert_eq!(rs, rp);
+
+        // Dual norm.
+        let xi: Vec<f64> = (0..pb.p()).map(|_| rng.normal()).collect();
+        let a = omega_dual_serial(&xi, &pb.groups, pb.tau, &pb.weights);
+        let b = omega_dual(&ctx, &xi, &pb.groups, pb.tau, &pb.weights);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn parallel_ista_and_fista_sweeps_are_bit_identical() {
+        let pb = random_problem(20, 48, 3, 2);
+        let ctx = SweepCtx::from_opts(&parallel_opts(3));
+        let cols = ActiveCols::full(&pb);
+        let lambda = 0.2 * pb.lambda_max();
+        let l_global = crate::solver::ista::global_lipschitz(&pb).max(1e-300);
+        let mut rng = Pcg::seeded(11);
+        let beta0: Vec<f64> = (0..pb.p()).map(|_| rng.normal() * 0.05).collect();
+        let xt_rho: Vec<f64> = (0..pb.p()).map(|_| rng.normal()).collect();
+        let mut serial_scratch = ProxScratch::new(3, 1);
+        let mut par_scratch = ProxScratch::new(3, ctx.threads());
+
+        let mut bs = beta0.clone();
+        let cs = ista_sweep(
+            &SweepCtx::serial(),
+            &cols,
+            &pb,
+            lambda,
+            l_global,
+            &mut bs,
+            &xt_rho,
+            &mut serial_scratch,
+        );
+        let mut bp = beta0.clone();
+        let cp = ista_sweep(
+            &ctx,
+            &cols,
+            &pb,
+            lambda,
+            l_global,
+            &mut bp,
+            &xt_rho,
+            &mut par_scratch,
+        );
+        assert_eq!(bs, bp);
+        assert_eq!(cs, cp);
+
+        let inv_l = 1.0 / l_global;
+        let mut ns = vec![0.0; pb.p()];
+        fista_sweep(
+            &SweepCtx::serial(),
+            &cols,
+            &pb,
+            lambda,
+            inv_l,
+            &beta0,
+            &xt_rho,
+            &mut ns,
+            &mut serial_scratch,
+        );
+        let mut np = vec![0.0; pb.p()];
+        fista_sweep(
+            &ctx,
+            &cols,
+            &pb,
+            lambda,
+            inv_l,
+            &beta0,
+            &xt_rho,
+            &mut np,
+            &mut par_scratch,
+        );
+        assert_eq!(ns, np);
+    }
+
+    #[test]
+    fn parallel_cd_epoch_preserves_residual_invariant() {
+        // After any number of bulk-synchronous rounds, rho must equal
+        // y − Xβ to rounding error (the whole point of the delta
+        // reduction between rounds).
+        let pb = random_problem(25, 64, 3, 3);
+        let ctx = SweepCtx::from_opts(&parallel_opts(4));
+        assert!(ctx.engage(pb.n_groups(), 8));
+        let mut scratch = CdParScratch::new(pb.p(), ctx.threads());
+        let cols = ActiveCols::full(&pb);
+        let lambda = 0.15 * pb.lambda_max();
+        let mut beta = vec![0.0; pb.p()];
+        let mut rho = pb.y.clone();
+        for _ in 0..30 {
+            cd_epoch_parallel(&ctx, &mut scratch, &pb, &cols, lambda, &mut beta, &mut rho);
+        }
+        let xb = pb.x.matvec(&beta);
+        for i in 0..pb.n() {
+            assert!(
+                (rho[i] - (pb.y[i] - xb[i])).abs() < 1e-9,
+                "row {i}: {} vs {}",
+                rho[i],
+                pb.y[i] - xb[i]
+            );
+        }
+        // And the epochs actually made progress from the zero start.
+        assert!(beta.iter().any(|&b| b != 0.0));
+    }
+
+    #[test]
+    fn parallel_cd_solve_reaches_the_serial_objective() {
+        let pb = random_problem(30, 64, 3, 4);
+        let lambda = 0.1 * pb.lambda_max();
+        let tol = 1e-10;
+        let serial = crate::solver::cd::solve(
+            &pb,
+            lambda,
+            None,
+            &SolveOptions { tol, ..Default::default() },
+        );
+        let par = crate::solver::cd::solve(
+            &pb,
+            lambda,
+            None,
+            &SolveOptions { tol, ..parallel_opts(4) },
+        );
+        assert!(serial.converged && par.converged, "{} / {}", serial.gap, par.gap);
+        let objective = |beta: &[f64]| {
+            let xb = pb.x.matvec(beta);
+            let r2: f64 = pb.y.iter().zip(&xb).map(|(y, v)| (y - v) * (y - v)).sum();
+            0.5 * r2
+                + lambda * crate::norms::sgl::omega(beta, &pb.groups, pb.tau, &pb.weights)
+        };
+        let a = objective(&serial.beta);
+        let b = objective(&par.beta);
+        assert!((a - b).abs() <= 1e-8, "objectives diverged: {a} vs {b}");
+        assert_eq!(serial.active.feature, par.active.feature);
+        assert_eq!(serial.active.group, par.active.group);
+    }
+
+    #[test]
+    fn parallel_solvers_with_screening_match_serial_bits_for_ista_fista() {
+        // 192 features / 64 groups: with 2 sweep threads the prox sweeps,
+        // xt kernels and residual all cross their engage() floors, so the
+        // parallel branches really run.
+        let pb = random_problem(24, 64, 3, 5);
+        let lambda = 0.25 * pb.lambda_max();
+        for solver in [crate::solver::SolverKind::Ista, crate::solver::SolverKind::Fista] {
+            let mk = |sweep_threads| SolveOptions {
+                rule: RuleKind::GapSafe,
+                tol: 1e-8,
+                max_epochs: 300_000,
+                ..if sweep_threads == 0 {
+                    SolveOptions::default()
+                } else {
+                    parallel_opts(sweep_threads)
+                }
+            };
+            let run = |opts: &SolveOptions| match solver {
+                crate::solver::SolverKind::Ista => {
+                    crate::solver::ista::solve_ista(&pb, lambda, None, opts)
+                }
+                _ => crate::solver::fista::solve_fista(&pb, lambda, None, opts),
+            };
+            let serial = run(&mk(0));
+            let par = run(&mk(2));
+            assert!(serial.converged && par.converged, "{solver:?}");
+            // Full-gradient sweeps are Jacobi by construction: the
+            // parallel mode must reproduce the serial run bit for bit.
+            assert_eq!(serial.beta, par.beta, "{solver:?}");
+            assert_eq!(serial.epochs, par.epochs, "{solver:?}");
+            assert_eq!(serial.active.feature, par.active.feature, "{solver:?}");
+        }
+    }
+}

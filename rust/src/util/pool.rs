@@ -1,18 +1,31 @@
-//! Scoped data-parallel helpers built on `std::thread` (tokio/rayon are not
+//! Data-parallel helpers built on `std::thread` (tokio/rayon are not
 //! available offline). The coordinator uses these to fan path/CV solves and
-//! rule comparisons across cores.
+//! rule comparisons across cores; the intra-path sweep layer
+//! ([`crate::solver::sweep`]) uses the persistent [`WorkCrew`] plus the
+//! [`SpinBarrier`]/[`WorkQueue`]/[`SharedSlice`] primitives to parallelize
+//! *inside* a single solve.
 
+use std::marker::PhantomData;
 use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
-use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
-use std::sync::Mutex;
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+
+/// Parse a thread-count environment value. `Some(n)` for a positive
+/// integer, `None` for anything else — including `0`, which follows the
+/// same 0-means-auto convention as the `threads` config key (see
+/// [`resolve_threads`]), and malformed text, which falls back to auto
+/// rather than silently serializing the run.
+fn threads_from_env(value: Option<&str>) -> Option<usize> {
+    value.and_then(|v| v.trim().parse::<usize>().ok()).filter(|&n| n > 0)
+}
 
 /// Number of worker threads to use: `SGL_THREADS` env override, else the
-/// machine's available parallelism, else 1.
+/// machine's available parallelism, else 1. `SGL_THREADS=0` means "auto"
+/// (identical to an unset variable), matching the `threads = 0` config
+/// convention of [`resolve_threads`].
 pub fn default_threads() -> usize {
-    if let Ok(v) = std::env::var("SGL_THREADS") {
-        if let Ok(n) = v.parse::<usize>() {
-            return n.max(1);
-        }
+    if let Some(n) = threads_from_env(std::env::var("SGL_THREADS").ok().as_deref()) {
+        return n;
     }
     std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
 }
@@ -159,6 +172,359 @@ where
     parallel_map(items.len(), threads, |i| f(&items[i]))
 }
 
+// ---------------------------------------------------------------------------
+// Intra-solve parallel primitives
+// ---------------------------------------------------------------------------
+
+/// Erased pointer to the closure a [`WorkCrew`] run executes. The pointer
+/// is only dereferenced while the owning `run` call is blocked waiting for
+/// the helpers, which keeps the borrowed closure alive.
+#[derive(Clone, Copy)]
+struct JobPtr(*const (dyn Fn(usize) + Sync));
+
+// SAFETY: the pointee is `Sync` (shared calls from many threads are fine)
+// and `run` guarantees it outlives every dereference.
+unsafe impl Send for JobPtr {}
+
+struct CrewState {
+    /// Monotone run counter; each helper executes every run exactly once.
+    run_id: u64,
+    job: Option<JobPtr>,
+    /// Helpers still executing the current run.
+    running: usize,
+    /// First helper panic payload of the current run.
+    panic: Option<Box<dyn std::any::Any + Send>>,
+    shutdown: bool,
+}
+
+struct CrewShared {
+    state: Mutex<CrewState>,
+    /// Helpers wait here for a new run (or shutdown).
+    start: Condvar,
+    /// The owner waits here for the current run to drain.
+    done: Condvar,
+    /// Set when any worker (helper or caller) panics mid-run; cooperative
+    /// kernels poll it (e.g. through [`SpinBarrier::wait_or`]) so sibling
+    /// workers bail out instead of deadlocking on a barrier.
+    abort: AtomicBool,
+}
+
+/// A persistent crew of helper threads for *repeated* fine-grained
+/// parallel regions. [`parallel_map`] spawns scoped threads per batch —
+/// fine for second-long path jobs, ruinous for per-epoch solver kernels.
+/// The crew spawns its helpers once and re-broadcasts a borrowed closure
+/// per [`run`](WorkCrew::run): the caller participates as worker `0`,
+/// helpers are workers `1..threads`, and `run` returns only when every
+/// worker finished, so the closure may borrow from the caller's stack.
+pub struct WorkCrew {
+    shared: Arc<CrewShared>,
+    handles: Vec<std::thread::JoinHandle<()>>,
+}
+
+impl WorkCrew {
+    /// Crew with `threads` workers total (the caller plus
+    /// `threads − 1` spawned helpers). `threads <= 1` spawns nothing and
+    /// makes [`run`](WorkCrew::run) a plain call.
+    pub fn new(threads: usize) -> Self {
+        let shared = Arc::new(CrewShared {
+            state: Mutex::new(CrewState {
+                run_id: 0,
+                job: None,
+                running: 0,
+                panic: None,
+                shutdown: false,
+            }),
+            start: Condvar::new(),
+            done: Condvar::new(),
+            abort: AtomicBool::new(false),
+        });
+        let handles = (1..threads.max(1))
+            .map(|w| {
+                let shared = shared.clone();
+                std::thread::Builder::new()
+                    .name(format!("sgl-crew-{w}"))
+                    .spawn(move || crew_worker(&shared, w))
+                    .expect("spawning crew thread")
+            })
+            .collect();
+        WorkCrew { shared, handles }
+    }
+
+    /// Total worker count (caller + helpers).
+    #[inline]
+    pub fn threads(&self) -> usize {
+        self.handles.len() + 1
+    }
+
+    /// The cooperative abort flag of the *current* run: set as soon as any
+    /// worker panics, cleared at the start of the next run. Kernels that
+    /// synchronize workers mid-run must poll it (via
+    /// [`SpinBarrier::wait_or`]) so a panic on one worker cannot strand
+    /// its siblings.
+    #[inline]
+    pub fn abort_flag(&self) -> &AtomicBool {
+        &self.shared.abort
+    }
+
+    /// Execute `f(worker_index)` once on every worker (`0` = the calling
+    /// thread) and return when all are done. Panics on any worker are
+    /// re-raised here, after every worker has stopped touching `f`'s
+    /// borrows. Not reentrant: `f` must not call `run` on the same crew.
+    pub fn run<F>(&self, f: &F)
+    where
+        F: Fn(usize) + Sync,
+    {
+        if self.handles.is_empty() {
+            f(0);
+            return;
+        }
+        self.shared.abort.store(false, Ordering::SeqCst);
+        // Erase the closure's lifetime; sound because this function blocks
+        // until every helper finished running it.
+        let short: &(dyn Fn(usize) + Sync) = f;
+        let long: &'static (dyn Fn(usize) + Sync) = unsafe { std::mem::transmute(short) };
+        {
+            let mut s = self.shared.state.lock().unwrap();
+            debug_assert_eq!(s.running, 0, "WorkCrew::run is not reentrant");
+            s.job = Some(JobPtr(long as *const _));
+            s.running = self.handles.len();
+            s.panic = None;
+            s.run_id += 1;
+        }
+        self.shared.start.notify_all();
+        // The caller is worker 0.
+        let mine = catch_unwind(AssertUnwindSafe(|| f(0)));
+        if mine.is_err() {
+            self.shared.abort.store(true, Ordering::SeqCst);
+        }
+        let helper_panic = {
+            let mut s = self.shared.state.lock().unwrap();
+            while s.running > 0 {
+                s = self.shared.done.wait(s).unwrap();
+            }
+            s.job = None;
+            s.panic.take()
+        };
+        if let Err(p) = mine {
+            resume_unwind(p);
+        }
+        if let Some(p) = helper_panic {
+            resume_unwind(p);
+        }
+    }
+}
+
+impl Drop for WorkCrew {
+    fn drop(&mut self) {
+        {
+            let mut s = self.shared.state.lock().unwrap();
+            s.shutdown = true;
+        }
+        self.shared.start.notify_all();
+        for h in self.handles.drain(..) {
+            if h.join().is_err() {
+                eprintln!("warning: crew thread panicked outside a run");
+            }
+        }
+    }
+}
+
+fn crew_worker(shared: &CrewShared, w: usize) {
+    let mut seen = 0u64;
+    loop {
+        let job = {
+            let mut s = shared.state.lock().unwrap();
+            loop {
+                if s.shutdown {
+                    return;
+                }
+                if s.run_id > seen {
+                    seen = s.run_id;
+                    break s.job.expect("run_id bumped with a job installed");
+                }
+                s = shared.start.wait(s).unwrap();
+            }
+        };
+        // SAFETY: the owner's `run` call blocks until `running` drains,
+        // so the closure behind `job` is alive for this call.
+        let f = unsafe { &*job.0 };
+        let outcome = catch_unwind(AssertUnwindSafe(|| f(w)));
+        if outcome.is_err() {
+            shared.abort.store(true, Ordering::SeqCst);
+        }
+        let mut s = shared.state.lock().unwrap();
+        if let Err(p) = outcome {
+            if s.panic.is_none() {
+                s.panic = Some(p);
+            }
+        }
+        s.running -= 1;
+        if s.running == 0 {
+            shared.done.notify_all();
+        }
+    }
+}
+
+/// Reusable spin barrier for the bulk-synchronous rounds inside one
+/// [`WorkCrew::run`]. Condvar barriers cost microseconds per crossing;
+/// the parallel CD sweep crosses one every few microseconds of work, so
+/// waiting spins (with a yield once the wait stretches).
+pub struct SpinBarrier {
+    n: usize,
+    count: AtomicUsize,
+    generation: AtomicU64,
+}
+
+impl SpinBarrier {
+    pub fn new(n: usize) -> Self {
+        assert!(n >= 1, "barrier needs at least one participant");
+        SpinBarrier { n, count: AtomicUsize::new(0), generation: AtomicU64::new(0) }
+    }
+
+    #[inline]
+    pub fn participants(&self) -> usize {
+        self.n
+    }
+
+    /// Wait until all `n` participants arrive, or `abort` becomes true.
+    /// Returns `false` on abort — the caller must then unwind out of the
+    /// parallel region (the barrier is left unusable, which is fine:
+    /// aborts only happen when a sibling worker panicked and the whole
+    /// run is being torn down).
+    pub fn wait_or(&self, abort: &AtomicBool) -> bool {
+        let gen = self.generation.load(Ordering::SeqCst);
+        if self.count.fetch_add(1, Ordering::SeqCst) + 1 == self.n {
+            self.count.store(0, Ordering::SeqCst);
+            self.generation.store(gen.wrapping_add(1), Ordering::SeqCst);
+            return true;
+        }
+        let mut spins = 0u32;
+        while self.generation.load(Ordering::SeqCst) == gen {
+            if abort.load(Ordering::Relaxed) {
+                return false;
+            }
+            spins += 1;
+            if spins < 1 << 14 {
+                std::hint::spin_loop();
+            } else {
+                std::thread::yield_now();
+            }
+        }
+        true
+    }
+}
+
+/// Dynamic chunked index distribution (the work-stealing half of the
+/// sweep layer): workers pull disjoint `[start, end)` ranges of `0..n`
+/// until the queue is dry. Chunks keep the atomic traffic amortized while
+/// the dynamic hand-out balances ragged per-item costs (group sizes,
+/// CSC column densities).
+pub struct WorkQueue {
+    next: AtomicUsize,
+    n: usize,
+    chunk: usize,
+}
+
+impl WorkQueue {
+    pub fn new(n: usize, chunk: usize) -> Self {
+        WorkQueue { next: AtomicUsize::new(0), n, chunk: chunk.max(1) }
+    }
+
+    /// The next unclaimed range, or `None` when all work is handed out.
+    #[inline]
+    pub fn next(&self) -> Option<(usize, usize)> {
+        let start = self.next.fetch_add(self.chunk, Ordering::Relaxed);
+        if start >= self.n {
+            return None;
+        }
+        Some((start, (start + self.chunk).min(self.n)))
+    }
+}
+
+/// A mutably-shared slice for parallel kernels whose workers touch
+/// **disjoint** index sets (compacted feature columns, row ranges of the
+/// residual). The unsafe accessors encode the contract the sweep kernels
+/// uphold structurally: every index/range is owned by exactly one worker
+/// per synchronization phase.
+pub struct SharedSlice<'a, T> {
+    ptr: *mut T,
+    len: usize,
+    _borrow: PhantomData<&'a mut [T]>,
+}
+
+// SAFETY: access is coordinated by the caller per the disjointness
+// contract on the unsafe methods.
+unsafe impl<T: Send> Send for SharedSlice<'_, T> {}
+unsafe impl<T: Send> Sync for SharedSlice<'_, T> {}
+
+impl<'a, T: Copy> SharedSlice<'a, T> {
+    pub fn new(data: &'a mut [T]) -> Self {
+        SharedSlice { ptr: data.as_mut_ptr(), len: data.len(), _borrow: PhantomData }
+    }
+
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Write element `i`.
+    ///
+    /// # Safety
+    /// No other worker may read or write index `i` concurrently.
+    #[inline]
+    pub unsafe fn set(&self, i: usize, v: T) {
+        debug_assert!(i < self.len);
+        *self.ptr.add(i) = v;
+    }
+
+    /// Read element `i`.
+    ///
+    /// # Safety
+    /// No other worker may write index `i` concurrently.
+    #[inline]
+    pub unsafe fn get(&self, i: usize) -> T {
+        debug_assert!(i < self.len);
+        *self.ptr.add(i)
+    }
+
+    /// Shared view of `a..b`.
+    ///
+    /// # Safety
+    /// No worker may write inside `a..b` while the view is live.
+    #[inline]
+    pub unsafe fn slice(&self, a: usize, b: usize) -> &'a [T] {
+        debug_assert!(a <= b && b <= self.len);
+        std::slice::from_raw_parts(self.ptr.add(a), b - a)
+    }
+
+    /// Exclusive view of `a..b`.
+    ///
+    /// # Safety
+    /// Ranges handed to different workers must be disjoint, and no other
+    /// worker may read inside `a..b` while the view is live.
+    #[inline]
+    #[allow(clippy::mut_from_ref)]
+    pub unsafe fn range_mut(&self, a: usize, b: usize) -> &'a mut [T] {
+        debug_assert!(a <= b && b <= self.len);
+        std::slice::from_raw_parts_mut(self.ptr.add(a), b - a)
+    }
+}
+
+/// Even contiguous split of `0..n` into `parts` ranges: part `k` gets
+/// `[k·n/parts, (k+1)·n/parts)` — the static row partition of the
+/// residual kernels (deterministic for a fixed thread count).
+#[inline]
+pub fn even_chunk(n: usize, parts: usize, k: usize) -> (usize, usize) {
+    debug_assert!(k < parts.max(1));
+    let parts = parts.max(1);
+    (k * n / parts, (k + 1) * n / parts)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -204,6 +570,154 @@ mod tests {
     #[test]
     fn default_threads_positive() {
         assert!(default_threads() >= 1);
+    }
+
+    #[test]
+    fn env_thread_parsing_follows_zero_means_auto() {
+        assert_eq!(threads_from_env(Some("4")), Some(4));
+        assert_eq!(threads_from_env(Some(" 2 ")), Some(2));
+        // 0 means auto — same convention as `threads = 0` in config.
+        assert_eq!(threads_from_env(Some("0")), None);
+        // Malformed values fall back to auto instead of serializing.
+        assert_eq!(threads_from_env(Some("-3")), None);
+        assert_eq!(threads_from_env(Some("lots")), None);
+        assert_eq!(threads_from_env(Some("")), None);
+        assert_eq!(threads_from_env(None), None);
+    }
+
+    #[test]
+    fn crew_runs_every_worker_and_is_reusable() {
+        let crew = WorkCrew::new(4);
+        assert_eq!(crew.threads(), 4);
+        for _ in 0..50 {
+            let hits: Vec<AtomicUsize> = (0..4).map(|_| AtomicUsize::new(0)).collect();
+            crew.run(&|w| {
+                hits[w].fetch_add(1, Ordering::SeqCst);
+            });
+            for h in &hits {
+                assert_eq!(h.load(Ordering::SeqCst), 1);
+            }
+        }
+    }
+
+    #[test]
+    fn crew_single_thread_is_a_plain_call() {
+        let crew = WorkCrew::new(1);
+        assert_eq!(crew.threads(), 1);
+        let hit = AtomicUsize::new(0);
+        crew.run(&|w| {
+            assert_eq!(w, 0);
+            hit.fetch_add(1, Ordering::SeqCst);
+        });
+        assert_eq!(hit.load(Ordering::SeqCst), 1);
+    }
+
+    #[test]
+    fn crew_propagates_helper_panics_and_survives() {
+        let crew = WorkCrew::new(3);
+        let caught = std::panic::catch_unwind(AssertUnwindSafe(|| {
+            crew.run(&|w| {
+                if w == 2 {
+                    panic!("helper boom");
+                }
+            });
+        }));
+        assert!(caught.is_err());
+        // The crew is still usable after a panicked run.
+        let count = AtomicUsize::new(0);
+        crew.run(&|_| {
+            count.fetch_add(1, Ordering::SeqCst);
+        });
+        assert_eq!(count.load(Ordering::SeqCst), 3);
+    }
+
+    #[test]
+    fn crew_borrows_caller_stack_mutably_through_shared_slice() {
+        let crew = WorkCrew::new(4);
+        let n = 1000;
+        let mut out = vec![0.0f64; n];
+        {
+            let shared = SharedSlice::new(&mut out);
+            let queue = WorkQueue::new(n, 64);
+            crew.run(&|_w| {
+                while let Some((a, b)) = queue.next() {
+                    for i in a..b {
+                        // SAFETY: work-queue ranges are disjoint.
+                        unsafe { shared.set(i, (i * i) as f64) };
+                    }
+                }
+            });
+        }
+        for (i, v) in out.iter().enumerate() {
+            assert_eq!(*v, (i * i) as f64);
+        }
+    }
+
+    #[test]
+    fn spin_barrier_synchronizes_rounds() {
+        let crew = WorkCrew::new(4);
+        let barrier = SpinBarrier::new(4);
+        assert_eq!(barrier.participants(), 4);
+        let abort = AtomicBool::new(false);
+        let n_rounds = 20;
+        let mut log = vec![0usize; n_rounds];
+        let shared = SharedSlice::new(&mut log);
+        let counter = AtomicUsize::new(0);
+        crew.run(&|w| {
+            for r in 0..n_rounds {
+                counter.fetch_add(1, Ordering::SeqCst);
+                assert!(barrier.wait_or(&abort));
+                if w == 0 {
+                    // All 4 increments of round r landed before the barrier.
+                    // SAFETY: only worker 0 writes; phase separated by the
+                    // trailing barrier.
+                    unsafe { shared.set(r, counter.load(Ordering::SeqCst)) };
+                }
+                assert!(barrier.wait_or(&abort));
+            }
+        });
+        for (r, &v) in log.iter().enumerate() {
+            assert_eq!(v, 4 * (r + 1));
+        }
+    }
+
+    #[test]
+    fn spin_barrier_aborts_instead_of_hanging() {
+        let barrier = SpinBarrier::new(2);
+        let abort = AtomicBool::new(true);
+        // Only one participant ever arrives: without the abort flag this
+        // would spin forever.
+        assert!(!barrier.wait_or(&abort));
+    }
+
+    #[test]
+    fn work_queue_hands_out_disjoint_cover() {
+        let q = WorkQueue::new(103, 10);
+        let mut seen = vec![false; 103];
+        while let Some((a, b)) = q.next() {
+            for s in seen.iter_mut().take(b).skip(a) {
+                assert!(!*s);
+                *s = true;
+            }
+        }
+        assert!(seen.into_iter().all(|s| s));
+        // Empty queue yields nothing.
+        assert!(WorkQueue::new(0, 8).next().is_none());
+    }
+
+    #[test]
+    fn even_chunks_cover_without_overlap() {
+        for n in [0usize, 1, 7, 100] {
+            for parts in [1usize, 2, 3, 8] {
+                let mut covered = 0;
+                for k in 0..parts {
+                    let (a, b) = even_chunk(n, parts, k);
+                    assert_eq!(a, covered);
+                    covered = b;
+                }
+                assert_eq!(covered, n);
+            }
+        }
     }
 
     #[test]

@@ -46,6 +46,7 @@ fn reported_gap_matches_from_scratch_residual_after_long_runs() {
             max_epochs: 5000,
             rule,
             record_history: false,
+            ..Default::default()
         };
         let res = solve(&pb, lambda, None, &opts);
         // Sanity: the scenario must actually run long enough to matter —
@@ -81,6 +82,7 @@ fn periodic_refresh_keeps_history_gaps_honest() {
         max_epochs: 3000,
         rule: RuleKind::GapSafe,
         record_history: true,
+        ..Default::default()
     };
     let res = solve(&pb, lambda, None, &opts);
     assert!(res.history.len() >= 100, "history too short: {}", res.history.len());

@@ -16,6 +16,11 @@ use sgl::solver::problem::{lambda_grid, SglProblem};
 use sgl::solver::SolverKind;
 use std::sync::Arc;
 
+/// Sized service config with default capacities.
+fn svc_cfg(workers: usize, queue_depth: usize) -> ServiceConfig {
+    ServiceConfig { workers, queue_depth, ..Default::default() }
+}
+
 /// Planted-sparse instance with unit-norm `y` (absolute objective budgets).
 fn planted(seed: u64) -> SglProblem {
     let cfg = SyntheticConfig {
@@ -157,7 +162,7 @@ fn dense_req(pb: &Arc<SglProblem<Matrix>>, rule: RuleKind, tol: f64) -> SolveReq
 #[test]
 fn concurrent_submissions_all_complete_and_match_direct_solves() {
     let pb = Arc::new(planted(3));
-    let svc = SolveService::start(ServiceConfig { workers: 4, queue_depth: 64 });
+    let svc = SolveService::start(svc_cfg(4, 64));
     let rules = [RuleKind::None, RuleKind::GapSafe, RuleKind::GapSafeSeq];
     let tols = [1e-4, 1e-6, 1e-8];
     let mut ids = Vec::new();
@@ -196,7 +201,7 @@ fn concurrent_submissions_all_complete_and_match_direct_solves() {
 #[test]
 fn duplicate_traffic_hits_the_fingerprint_cache_without_resolving() {
     let pb = Arc::new(planted(4));
-    let svc = SolveService::start(ServiceConfig { workers: 2, queue_depth: 16 });
+    let svc = SolveService::start(svc_cfg(2, 16));
     let first = svc.submit(dense_req(&pb, RuleKind::GapSafe, 1e-6)).unwrap();
     let r1 = svc.wait(first).unwrap();
     let m = svc.metrics();
@@ -218,7 +223,7 @@ fn duplicate_traffic_hits_the_fingerprint_cache_without_resolving() {
 #[test]
 fn sharded_service_job_matches_monolithic_service_job() {
     let pb = Arc::new(planted(5));
-    let svc = SolveService::start(ServiceConfig { workers: 2, queue_depth: 16 });
+    let svc = SolveService::start(svc_cfg(2, 16));
     let mut mono = dense_req(&pb, RuleKind::GapSafeSeq, 1e-8);
     mono.opts.t_count = 12;
     let mut sharded = mono.clone();
@@ -257,6 +262,7 @@ fn blocker_req(pb: &Arc<SglProblem<Matrix>>) -> SolveRequest {
                     max_epochs: epochs,
                     rule: RuleKind::None,
                     record_history: false,
+                    ..Default::default()
                 },
             },
         )
@@ -266,7 +272,7 @@ fn blocker_req(pb: &Arc<SglProblem<Matrix>>) -> SolveRequest {
 #[test]
 fn cancel_prevents_queued_jobs_from_running() {
     let pb = Arc::new(planted(6));
-    let svc = SolveService::start(ServiceConfig { workers: 1, queue_depth: 16 });
+    let svc = SolveService::start(svc_cfg(1, 16));
     // Highest priority first: the single worker is pinned on the blocker
     // while the victim waits in the queue.
     let mut blocker = blocker_req(&pb);
@@ -290,7 +296,7 @@ fn cancel_prevents_queued_jobs_from_running() {
 #[test]
 fn priority_classes_jump_the_fifo_queue() {
     let pb = Arc::new(planted(7));
-    let svc = SolveService::start(ServiceConfig { workers: 1, queue_depth: 16 });
+    let svc = SolveService::start(svc_cfg(1, 16));
     let mut blocker = blocker_req(&pb);
     blocker.priority = 9;
     let b = svc.submit(blocker).unwrap();
@@ -305,9 +311,55 @@ fn priority_classes_jump_the_fifo_queue() {
 }
 
 #[test]
+fn bounded_caches_survive_a_duplicate_heavy_request_stream() {
+    let pb = Arc::new(planted(9));
+    let svc = SolveService::start(ServiceConfig {
+        workers: 2,
+        queue_depth: 32,
+        result_capacity: 6,
+        cache_capacity: 4,
+    });
+    // Duplicate-heavy traffic: 8 distinct configs, each submitted 4
+    // times across interleaved rounds. Without bounds the result store
+    // would hold 32 jobs and the cache 8 entries for the process
+    // lifetime; with them both stay within their configured capacities.
+    let tols = [1e-3, 1e-4, 1e-5, 1e-6];
+    let rules = [RuleKind::GapSafe, RuleKind::GapSafeSeq];
+    for _round in 0..4 {
+        let mut ids = Vec::new();
+        for &tol in &tols {
+            for &rule in &rules {
+                ids.push(svc.submit(dense_req(&pb, rule, tol)).unwrap());
+            }
+        }
+        for id in ids {
+            svc.wait(id).unwrap();
+        }
+    }
+    let m = svc.metrics();
+    assert!(
+        svc.cache_len() <= 4,
+        "cache over capacity: {} entries",
+        svc.cache_len()
+    );
+    assert!(
+        svc.job_count() <= 6,
+        "result store over capacity: {} jobs",
+        svc.job_count()
+    );
+    assert!(m.counter("service_cache_evictions") >= 4);
+    assert!(m.counter("service_jobs_reaped") >= 24);
+    // Every duplicate round after the first is served from cache for the
+    // entries that survived eviction; the traffic still all completed.
+    assert_eq!(m.counter("service_submitted"), 32);
+    assert!(m.counter("service_cache_hits") >= 1);
+    assert_eq!(m.counter("service_failed"), 0);
+}
+
+#[test]
 fn full_queue_backpressures_with_a_typed_error() {
     let pb = Arc::new(planted(8));
-    let svc = SolveService::start(ServiceConfig { workers: 1, queue_depth: 1 });
+    let svc = SolveService::start(svc_cfg(1, 1));
     let b = svc.submit(blocker_req(&pb)).unwrap();
     // Wait until the worker has demonstrably popped the blocker off the
     // queue (it then runs far longer than the submits below take).

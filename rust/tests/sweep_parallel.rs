@@ -1,0 +1,211 @@
+//! Parallel-vs-serial sweep equivalence (the `sweep = "parallel"` mode of
+//! `solver::sweep`):
+//!
+//! - CD's bulk-synchronous rounds take a different trajectory than the
+//!   cyclic sweep, so the contract is *outcome* equivalence: identical
+//!   terminal screening decisions and ≤ 1e-8 objective agreement, across
+//!   dense/csc backends and every screening rule;
+//! - ISTA/FISTA sweeps are Jacobi by construction, so their parallel mode
+//!   must reproduce the serial runs **bit for bit**;
+//! - safety: a parallel sweep must never screen a feature that is nonzero
+//!   in a high-precision no-screening reference (Theorem 1 holds for any
+//!   iterate, parallel or not).
+
+use sgl::data::synthetic::{generate, SyntheticConfig};
+use sgl::linalg::{CscMatrix, Design};
+use sgl::norms::sgl::omega;
+use sgl::screening::RuleKind;
+use sgl::solver::cd::SolveOptions;
+use sgl::solver::path::{solve_path_with, PathOptions};
+use sgl::solver::problem::{lambda_grid, SglProblem};
+use sgl::solver::sweep::SweepMode;
+use sgl::solver::SolverKind;
+
+/// Planted instance with unit-norm `y` (absolute objective budgets) and
+/// strongly separated signal groups. Sized so the parallel kernels cross
+/// their engage() floors with 2 sweep threads (p = 200, 40 groups).
+fn planted(seed: u64) -> SglProblem {
+    let cfg = SyntheticConfig {
+        n: 60,
+        n_groups: 40,
+        group_size: 5,
+        gamma1: 6,
+        gamma2: 3,
+        seed,
+        ..Default::default()
+    };
+    let d = generate(&cfg);
+    let y_norm = d.dataset.y.iter().map(|v| v * v).sum::<f64>().sqrt().max(1e-300);
+    let y: Vec<f64> = d.dataset.y.iter().map(|v| v / y_norm).collect();
+    SglProblem::new(d.dataset.x, y, d.dataset.groups, 0.2)
+}
+
+fn to_csc(pb: &SglProblem) -> SglProblem<CscMatrix> {
+    SglProblem::new(CscMatrix::from_dense(&pb.x), pb.y.clone(), pb.groups.clone(), pb.tau)
+}
+
+fn popts(rule: RuleKind, tol: f64, sweep: SweepMode, t_count: usize) -> PathOptions {
+    PathOptions {
+        delta: 1.0,
+        t_count,
+        solve: SolveOptions {
+            rule,
+            tol,
+            max_epochs: 500_000,
+            record_history: false,
+            sweep,
+            sweep_threads: 2,
+            ..Default::default()
+        },
+    }
+}
+
+fn objective<D: Design>(pb: &SglProblem<D>, lambda: f64, beta: &[f64]) -> f64 {
+    let xb = pb.x.matvec(beta);
+    let r2: f64 = pb.y.iter().zip(&xb).map(|(y, v)| (y - v) * (y - v)).sum();
+    0.5 * r2 + lambda * omega(beta, &pb.groups, pb.tau, &pb.weights)
+}
+
+/// CD: same terminal screening decisions, objectives within 1e-8 (tol is
+/// 5e-9 on a unit-norm `y`, so each run sits within 5e-9 of the optimum).
+fn assert_cd_outcome_equivalent<D: Design>(
+    pb: &SglProblem<D>,
+    lambdas: &[f64],
+    rule: RuleKind,
+    tag: &str,
+) {
+    let serial = solve_path_with(
+        pb,
+        lambdas,
+        &popts(rule, 5e-9, SweepMode::Serial, lambdas.len()),
+        SolverKind::Cd,
+    );
+    let par = solve_path_with(
+        pb,
+        lambdas,
+        &popts(rule, 5e-9, SweepMode::Parallel, lambdas.len()),
+        SolverKind::Cd,
+    );
+    assert!(serial.all_converged(), "{tag}: serial did not converge");
+    assert!(par.all_converged(), "{tag}: parallel did not converge");
+    for (i, &lambda) in lambdas.iter().enumerate() {
+        let a = &serial.results[i];
+        let b = &par.results[i];
+        assert_eq!(a.active.feature, b.active.feature, "{tag}: feature masks differ at t={i}");
+        assert_eq!(a.active.group, b.active.group, "{tag}: group masks differ at t={i}");
+        let oa = objective(pb, lambda, &a.beta);
+        let ob = objective(pb, lambda, &b.beta);
+        assert!(
+            (oa - ob).abs() <= 1e-8,
+            "{tag}: objectives diverged at t={i}: {oa} vs {ob}"
+        );
+    }
+}
+
+#[test]
+fn cd_parallel_matches_serial_across_backends_and_rules() {
+    let pb = planted(1);
+    let spb = to_csc(&pb);
+    let lambdas = lambda_grid(pb.lambda_max(), 1.0, 4);
+    for rule in RuleKind::all() {
+        assert_cd_outcome_equivalent(&pb, &lambdas, rule, &format!("dense/{}", rule.name()));
+        assert_cd_outcome_equivalent(&spb, &lambdas, rule, &format!("csc/{}", rule.name()));
+    }
+}
+
+/// ISTA/FISTA: the parallel sweeps must be bit-identical to serial.
+fn assert_full_gradient_bit_identical<D: Design>(
+    pb: &SglProblem<D>,
+    lambdas: &[f64],
+    rule: RuleKind,
+    solver: SolverKind,
+    tag: &str,
+) {
+    let serial = solve_path_with(
+        pb,
+        lambdas,
+        &popts(rule, 1e-7, SweepMode::Serial, lambdas.len()),
+        solver,
+    );
+    let par = solve_path_with(
+        pb,
+        lambdas,
+        &popts(rule, 1e-7, SweepMode::Parallel, lambdas.len()),
+        solver,
+    );
+    assert!(serial.all_converged() && par.all_converged(), "{tag}: convergence");
+    for (i, (a, b)) in serial.results.iter().zip(&par.results).enumerate() {
+        assert_eq!(a.beta, b.beta, "{tag}: coefficients differ at t={i}");
+        assert_eq!(a.epochs, b.epochs, "{tag}: epoch counts differ at t={i}");
+        assert_eq!(a.active.feature, b.active.feature, "{tag}: masks differ at t={i}");
+    }
+}
+
+#[test]
+fn ista_parallel_is_bit_identical_across_backends_and_rules() {
+    let pb = planted(2);
+    let spb = to_csc(&pb);
+    let lambdas = lambda_grid(pb.lambda_max(), 1.0, 3);
+    for rule in RuleKind::all() {
+        let tag = format!("ista/dense/{}", rule.name());
+        assert_full_gradient_bit_identical(&pb, &lambdas, rule, SolverKind::Ista, &tag);
+        let tag = format!("ista/csc/{}", rule.name());
+        assert_full_gradient_bit_identical(&spb, &lambdas, rule, SolverKind::Ista, &tag);
+    }
+}
+
+#[test]
+fn fista_parallel_is_bit_identical_across_backends_and_rules() {
+    let pb = planted(3);
+    let spb = to_csc(&pb);
+    let lambdas = lambda_grid(pb.lambda_max(), 1.0, 3);
+    for rule in RuleKind::all() {
+        let tag = format!("fista/dense/{}", rule.name());
+        assert_full_gradient_bit_identical(&pb, &lambdas, rule, SolverKind::Fista, &tag);
+        let tag = format!("fista/csc/{}", rule.name());
+        assert_full_gradient_bit_identical(&spb, &lambdas, rule, SolverKind::Fista, &tag);
+    }
+}
+
+#[test]
+fn parallel_sweeps_never_screen_live_features() {
+    let pb = planted(4);
+    let lambdas = lambda_grid(pb.lambda_max(), 1.0, 3);
+    // High-precision no-screening reference, serial.
+    let reference = solve_path_with(
+        &pb,
+        &lambdas,
+        &popts(RuleKind::None, 1e-12, SweepMode::Serial, lambdas.len()),
+        SolverKind::Cd,
+    );
+    assert!(reference.all_converged());
+    for solver in [SolverKind::Cd, SolverKind::Fista] {
+        for rule in [
+            RuleKind::Static,
+            RuleKind::Dynamic,
+            RuleKind::Dst3,
+            RuleKind::GapSafe,
+            RuleKind::GapSafeSeq,
+        ] {
+            let path = solve_path_with(
+                &pb,
+                &lambdas,
+                &popts(rule, 1e-8, SweepMode::Parallel, lambdas.len()),
+                solver,
+            );
+            assert!(path.all_converged(), "{solver:?}/{rule:?}");
+            for (i, res) in path.results.iter().enumerate() {
+                for j in 0..pb.p() {
+                    if !res.active.feature[j] {
+                        assert!(
+                            reference.results[i].beta[j].abs() < 1e-6,
+                            "{solver:?}/{rule:?} t={i}: screened feature {j} \
+                             with reference beta {}",
+                            reference.results[i].beta[j]
+                        );
+                    }
+                }
+            }
+        }
+    }
+}

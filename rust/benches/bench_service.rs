@@ -17,13 +17,24 @@
 //!    comparison (the shard boundaries should cost ~nothing — that is
 //!    the property that lets one huge path spread across machines).
 //!
+//! 4. **Fleet scheduling** — a ≥ 2-path sharded batch on an in-process
+//!    2-worker TCP fleet, scheduled two ways: *serialized* (one path at a
+//!    time, its shards in sequence — the fleet idles at 1 busy worker)
+//!    vs *cross-path interleaved* (`solve_batch_interleaved`: different
+//!    paths' shards overlap, only the intra-path handoff dependency
+//!    serializes). Asserts the interleaved schedule is faster on ≥ 2
+//!    cores and that both produce bit-identical results.
+//!
 //! Default scale runs in seconds; `SGL_BENCH_SCALE=paper` runs the full
 //! p=10000 instances.
 
+use sgl::coordinator::metrics::Metrics;
+use sgl::coordinator::remote::{FleetConfig, RemoteFleet, WorkerServer};
 use sgl::coordinator::service::{
     AnyProblem, ServiceConfig, SolveRequest, SolveService,
 };
-use sgl::coordinator::shard::solve_path_sharded;
+use sgl::coordinator::shard::{solve_batch_interleaved, solve_path_sharded, InterleavedJob};
+use sgl::solver::path::DualHandoff;
 use sgl::data::sparse::{self, SparseSyntheticConfig};
 use sgl::linalg::{CscMatrix, Design};
 use sgl::norms::sgl::omega;
@@ -46,6 +57,7 @@ fn main() {
     let paper = std::env::var("SGL_BENCH_SCALE").as_deref() == Ok("paper");
     throughput_and_cache(paper);
     sharded_vs_monolithic(paper);
+    fleet_interleaved_vs_serialized(paper);
 }
 
 fn throughput_and_cache(paper: bool) {
@@ -217,4 +229,112 @@ fn sharded_vs_monolithic(paper: bool) {
         assert_eq!(a.beta, b.beta, "service pipeline must match monolithic");
     }
     println!("sharded via service:    {t_svc:>8.3}s  (end-to-end, incl. queue)");
+}
+
+/// Cross-path interleaving on a loopback 2-worker fleet: a batch of
+/// k-sharded paths must beat the serialized-fleet schedule (one path's
+/// shards at a time), because the ready-queue scheduler keeps every
+/// worker busy with *other* paths' shards while a path waits on its own
+/// handoff chain.
+fn fleet_interleaved_vs_serialized(paper: bool) {
+    let cfg = SparseSyntheticConfig {
+        n: 100,
+        n_groups: if paper { 1000 } else { 250 },
+        group_size: 10,
+        density: 0.01,
+        gamma1: 10,
+        gamma2: 4,
+        seed: 11,
+        ..Default::default()
+    };
+    let pb = unit_norm_problem(&cfg, 0.2);
+    let t_count = if paper { 48 } else { 24 };
+    let shards = 4;
+
+    let metrics = Arc::new(Metrics::new());
+    let servers: Vec<WorkerServer> =
+        (0..2).map(|_| WorkerServer::bind("127.0.0.1:0").expect("bind worker")).collect();
+    let addrs: Vec<String> = servers.iter().map(|s| s.local_addr().to_string()).collect();
+    let fleet = RemoteFleet::connect(&addrs, FleetConfig::default(), metrics.clone())
+        .expect("connect fleet");
+    println!(
+        "\n== fleet scheduling: {} workers, {} paths x k={shards} shards, p={}, T={t_count} ==",
+        fleet.capacity(),
+        3,
+        pb.p()
+    );
+
+    let jobs: Vec<InterleavedJob> = [1e-5, 1e-6, 1e-7]
+        .iter()
+        .map(|&tol| InterleavedJob {
+            pb: AnyProblem::Csc(pb.clone()),
+            lambdas: lambda_grid(pb.lambda_max(), 2.0, t_count),
+            opts: PathOptions {
+                delta: 2.0,
+                t_count,
+                solve: SolveOptions {
+                    rule: RuleKind::GapSafeSeq,
+                    tol,
+                    record_history: false,
+                    ..Default::default()
+                },
+            },
+            solver: SolverKind::Cd,
+            shards,
+            label: format!("path@{tol:.0e}"),
+        })
+        .collect();
+    let exec = |job: &InterleavedJob, grid: &[f64], h: Option<&DualHandoff>| {
+        fleet.solve_shard(&job.pb, grid, &job.opts, job.solver, h)
+    };
+
+    // Warm every worker's dataset store deterministically so neither
+    // timed schedule pays the one-time ship.
+    let warmed = fleet.warm(&AnyProblem::Csc(pb.clone())).expect("warm the fleet");
+    assert_eq!(warmed, 2, "both workers must be pre-shipped");
+
+    // -- serialized-fleet schedule: paths one after another, shards in
+    // sequence; at most one worker is ever busy.
+    let sw = Stopwatch::start();
+    let mut serialized = Vec::new();
+    for job in &jobs {
+        let plan = sgl::coordinator::shard::plan_shards(job.lambdas.len(), job.shards);
+        let mut carried: Option<DualHandoff> = None;
+        let mut parts = Vec::new();
+        for (a, b) in plan {
+            let (part, h) = exec(job, &job.lambdas[a..b], carried.as_ref()).expect("shard");
+            carried = h;
+            parts.push(part);
+        }
+        serialized.push(sgl::coordinator::shard::stitch(parts));
+    }
+    let t_serial = sw.elapsed_s();
+
+    // -- cross-path interleaved schedule over the same fleet.
+    let sw = Stopwatch::start();
+    let interleaved = solve_batch_interleaved(&jobs, fleet.capacity(), exec);
+    let t_inter = sw.elapsed_s();
+
+    for ((job, ser), inter) in jobs.iter().zip(&serialized).zip(&interleaved) {
+        let inter = inter.as_ref().expect("interleaved job succeeds");
+        for (a, b) in ser.results.iter().zip(&inter.results) {
+            assert_eq!(a.beta, b.beta, "{}: schedules must not change results", job.label);
+        }
+    }
+    println!("serialized fleet schedule:   {t_serial:>8.3}s  (1 worker busy at a time)");
+    println!(
+        "interleaved fleet schedule:  {t_inter:>8.3}s  ({:.2}x)",
+        t_serial / t_inter.max(1e-12)
+    );
+    let cores = std::thread::available_parallelism().map_or(1, |n| n.get());
+    if cores >= 2 {
+        assert!(
+            t_inter < t_serial,
+            "cross-path interleaving must beat the serialized schedule \
+             ({t_inter:.3}s vs {t_serial:.3}s on {cores} cores)"
+        );
+    } else {
+        println!("(single core: skipping the wall-clock assertion)");
+    }
+    assert_eq!(metrics.counter("fleet_worker_disconnects"), 0);
 }

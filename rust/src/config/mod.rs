@@ -125,6 +125,13 @@ pub struct RunConfig {
     /// Max entries in the service's fingerprint cache before LRU
     /// eviction (`[service] cache_capacity`).
     pub service_cache_capacity: usize,
+    /// Remote worker addresses (`[service] fleet = "host:port,host:port"`
+    /// / `--fleet`). Empty = solve in-process; non-empty = the service
+    /// drains shards into a `coordinator::remote::RemoteFleet`.
+    pub service_fleet: Vec<String>,
+    /// Connections (= concurrent shards) opened per fleet worker
+    /// (`[service] fleet_conns`).
+    pub service_fleet_conns: usize,
 }
 
 impl Default for RunConfig {
@@ -158,8 +165,30 @@ impl Default for RunConfig {
             service_shards: 1,
             service_result_capacity: 1024,
             service_cache_capacity: 256,
+            service_fleet: Vec::new(),
+            service_fleet_conns: 1,
         }
     }
+}
+
+/// Parse a comma-separated `host:port` list (the `--fleet` / `[service]
+/// fleet` value). Whitespace around entries is ignored; every entry must
+/// name a port.
+pub fn parse_fleet_list(s: &str) -> Result<Vec<String>> {
+    let mut out = Vec::new();
+    for part in s.split(',') {
+        let part = part.trim();
+        if part.is_empty() {
+            continue;
+        }
+        ensure!(
+            part.contains(':'),
+            "fleet worker {part:?} is not a host:port address"
+        );
+        out.push(part.to_string());
+    }
+    ensure!(!out.is_empty(), "fleet list {s:?} names no workers");
+    Ok(out)
 }
 
 impl RunConfig {
@@ -243,6 +272,11 @@ impl RunConfig {
         take!(service_shards, "service", "shards", usize);
         take!(service_result_capacity, "service", "result_capacity", usize);
         take!(service_cache_capacity, "service", "cache_capacity", usize);
+        take!(service_fleet_conns, "service", "fleet_conns", usize);
+        if let Some(fleet) = doc.get_str("service", "fleet") {
+            cfg.service_fleet =
+                parse_fleet_list(&fleet).context("parsing service.fleet")?;
+        }
         if let Some(rule) = doc.get_str("solver", "rule") {
             cfg.rule = RuleKind::from_name(&rule)
                 .with_context(|| format!("unknown screening rule {rule:?}"))?;
@@ -288,6 +322,9 @@ impl RunConfig {
         }
         if self.service_cache_capacity == 0 {
             bail!("service cache_capacity must be >= 1");
+        }
+        if self.service_fleet_conns == 0 {
+            bail!("service fleet_conns must be >= 1");
         }
         if let DatasetChoice::Libsvm { group_size, .. } = &self.dataset {
             if *group_size == 0 {
@@ -461,6 +498,28 @@ rho = 0.9
         assert_eq!(d.service_queue_depth, 64);
         assert_eq!(d.service_shards, 1);
         assert!(d.effective_threads() >= 1);
+    }
+
+    #[test]
+    fn parses_fleet_addresses() {
+        let c = RunConfig::from_toml_str(
+            "[service]\nfleet = \"10.0.0.1:7171, 10.0.0.2:7171\"\nfleet_conns = 2\n",
+        )
+        .unwrap();
+        assert_eq!(
+            c.service_fleet,
+            vec!["10.0.0.1:7171".to_string(), "10.0.0.2:7171".to_string()]
+        );
+        assert_eq!(c.service_fleet_conns, 2);
+        // Defaults: no fleet (local execution), one connection per worker.
+        let d = RunConfig::default();
+        assert!(d.service_fleet.is_empty());
+        assert_eq!(d.service_fleet_conns, 1);
+        // Port-less entries and empty lists are rejected.
+        assert!(RunConfig::from_toml_str("[service]\nfleet = \"nohost\"\n").is_err());
+        assert!(RunConfig::from_toml_str("[service]\nfleet = \" , \"\n").is_err());
+        assert!(RunConfig::from_toml_str("[service]\nfleet_conns = 0\n").is_err());
+        assert!(parse_fleet_list("a:1,,b:2").unwrap().len() == 2);
     }
 
     #[test]

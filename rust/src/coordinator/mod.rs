@@ -1,11 +1,13 @@
-//! L3/L4 coordination: batched job scheduling across worker threads
+//! L3/L4/L5 coordination: batched job scheduling across worker threads
 //! ([`jobs`]), the async solve service with its queue, result store and
 //! fingerprint cache ([`service`]), λ-range sharding with dual-point
-//! handoff ([`shard`]), metrics ([`metrics`]), and figure-series
-//! reporting ([`report`]).
+//! handoff plus the cross-path fleet scheduler ([`shard`]), distributed
+//! serving over TCP workers ([`remote`]), metrics ([`metrics`]), and
+//! figure-series reporting ([`report`]).
 
 pub mod jobs;
 pub mod metrics;
+pub mod remote;
 pub mod report;
 pub mod service;
 pub mod shard;

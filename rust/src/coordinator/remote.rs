@@ -1,0 +1,937 @@
+//! L5: distributed λ-shard serving — TCP workers and the client fleet.
+//!
+//! PR 3 established that the *only* state crossing a λ-shard boundary is
+//! a [`DualHandoff`] (terminal β + dual snapshot, `O(n + p)` floats), and
+//! that replaying it through `on_solve_complete` makes a resumed shard
+//! bit-identical to an uninterrupted path. This module takes that
+//! boundary across machines:
+//!
+//! - [`WorkerServer`] — `sgl worker --listen host:port`: a
+//!   `std::net::TcpListener` accept loop, one thread per connection,
+//!   speaking the framed request/response protocol of
+//!   [`crate::util::wire`]. Datasets arrive once
+//!   ([`Message::ShipDataset`]), are held in an in-memory store keyed by
+//!   content fingerprint, and every subsequent
+//!   [`Message::SolveShard`] addresses them by hash. Solves run through
+//!   the same [`AnyProblem::solve_range`] entry point as local workers,
+//!   so a remote shard runs the identical arithmetic; a panicking solve
+//!   becomes a typed [`RemoteErrorKind::SolveFailed`] frame, never a dead
+//!   worker.
+//! - [`RemoteFleet`] — the coordinator-side client pool: one or more
+//!   persistent connections per worker, leased per shard with per-worker
+//!   in-flight accounting. A worker disconnect (socket error mid-exchange)
+//!   marks it dead and **requeues the shard onto the surviving workers**
+//!   — every shard input (grid, options, handoff) lives on the
+//!   coordinator, so nothing is ever lost with a worker; solves are
+//!   deterministic, so re-running one is harmless. Heartbeats
+//!   ([`RemoteFleet::heartbeat`]) probe liveness out of band.
+//!
+//! The solve service drains into a fleet via
+//! [`SolveService::with_fleet`](super::service::SolveService::with_fleet),
+//! and [`super::shard::solve_batch_interleaved`] schedules *different
+//! paths'* shards over one fleet so a k-shard path never serializes it.
+
+use super::metrics::Metrics;
+use super::service::{panic_message, AnyProblem};
+use crate::solver::path::{DualHandoff, PathOptions, PathResult};
+use crate::solver::sweep::SweepMode;
+use crate::solver::SolverKind;
+use crate::util::pool::resolve_threads;
+use crate::util::wire::{
+    Message, ProblemPayload, RemoteError, RemoteErrorKind, ShardRequest, WireDataset,
+    WireError,
+};
+use anyhow::{bail, ensure, Context, Result};
+use std::collections::{HashMap, HashSet};
+use std::io::Write;
+use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream};
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread;
+use std::time::Duration;
+
+// ---------------------------------------------------------------------------
+// Worker side
+// ---------------------------------------------------------------------------
+
+/// How many datasets a worker retains (LRU beyond it). Eviction is
+/// always safe: a coordinator referencing an evicted fingerprint gets a
+/// typed `UnknownDataset` and reships transparently — the same path that
+/// covers a restarted worker.
+const WORKER_DATASET_CAPACITY: usize = 64;
+
+/// Worker-side dataset store: fingerprint → problem, least-recently-used
+/// bounded so a long-lived worker (or a hostile peer shipping datasets
+/// in a loop) cannot grow it without limit.
+struct DatasetStore {
+    map: HashMap<u64, (AnyProblem, u64)>,
+    tick: u64,
+}
+
+impl DatasetStore {
+    fn new() -> Self {
+        DatasetStore { map: HashMap::new(), tick: 0 }
+    }
+
+    fn contains(&self, fp: u64) -> bool {
+        self.map.contains_key(&fp)
+    }
+
+    /// Fetch (and refresh the recency of) a dataset.
+    fn get(&mut self, fp: u64) -> Option<AnyProblem> {
+        self.tick += 1;
+        let tick = self.tick;
+        self.map.get_mut(&fp).map(|(pb, used)| {
+            *used = tick;
+            pb.clone()
+        })
+    }
+
+    fn insert(&mut self, fp: u64, pb: AnyProblem) {
+        self.tick += 1;
+        let tick = self.tick;
+        self.map.insert(fp, (pb, tick));
+        while self.map.len() > WORKER_DATASET_CAPACITY {
+            let victim = self
+                .map
+                .iter()
+                .min_by_key(|(_, (_, used))| *used)
+                .map(|(k, _)| *k)
+                .expect("store is non-empty above capacity");
+            self.map.remove(&victim);
+        }
+    }
+}
+
+/// A remote solve worker: accept loop + per-connection serve threads over
+/// a shared fingerprint-keyed, LRU-bounded dataset store. In-process
+/// instances back the loopback tests and benches; `sgl worker` wraps one
+/// for real deployments.
+pub struct WorkerServer {
+    addr: SocketAddr,
+    shutdown: Arc<AtomicBool>,
+    conns: Arc<Mutex<Vec<(u64, TcpStream)>>>,
+    accept: Option<thread::JoinHandle<()>>,
+}
+
+impl WorkerServer {
+    /// Bind and start accepting (`"host:0"` picks a free port — read it
+    /// back with [`local_addr`](Self::local_addr)).
+    pub fn bind(addr: &str) -> Result<WorkerServer> {
+        let listener = TcpListener::bind(addr)
+            .with_context(|| format!("binding worker listener on {addr}"))?;
+        let local = listener.local_addr().context("reading bound address")?;
+        let shutdown = Arc::new(AtomicBool::new(false));
+        let conns: Arc<Mutex<Vec<(u64, TcpStream)>>> = Arc::default();
+        let store = Arc::new(Mutex::new(DatasetStore::new()));
+        let accept = {
+            let shutdown = shutdown.clone();
+            let conns = conns.clone();
+            thread::spawn(move || {
+                let mut next_id: u64 = 0;
+                for stream in listener.incoming() {
+                    if shutdown.load(Ordering::SeqCst) {
+                        break;
+                    }
+                    let Ok(stream) = stream else {
+                        // Transient accept failure (e.g. EMFILE): back
+                        // off instead of spinning the accept loop hot.
+                        thread::sleep(Duration::from_millis(20));
+                        continue;
+                    };
+                    stream.set_nodelay(true).ok();
+                    let id = next_id;
+                    next_id += 1;
+                    // Track a dup of the fd so kill() can hard-close
+                    // live connections; the serve thread untracks it on
+                    // exit so a long-lived worker doesn't leak one fd
+                    // per connection it ever served.
+                    if let Ok(clone) = stream.try_clone() {
+                        conns.lock().unwrap().push((id, clone));
+                    }
+                    let store = store.clone();
+                    let conns = conns.clone();
+                    thread::spawn(move || {
+                        serve_conn(stream, &store);
+                        conns.lock().unwrap().retain(|(cid, _)| *cid != id);
+                    });
+                }
+            })
+        };
+        Ok(WorkerServer { addr: local, shutdown, conns, accept: Some(accept) })
+    }
+
+    /// The actually bound address (resolves a `:0` port request).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Abrupt stop: stop accepting and hard-close every live connection
+    /// (clients see an immediate socket error, mid-frame if one is in
+    /// flight). This is the fault-injection lever the requeue tests use —
+    /// equivalent to the worker process dying.
+    pub fn kill(&self) {
+        self.shutdown.store(true, Ordering::SeqCst);
+        // Unblock the accept loop (it re-checks the flag per connection).
+        let _ = TcpStream::connect(self.addr);
+        for (_, s) in self.conns.lock().unwrap().drain(..) {
+            let _ = s.shutdown(Shutdown::Both);
+        }
+    }
+
+    /// Block on the accept loop (the `sgl worker` foreground mode; runs
+    /// until the process is killed).
+    pub fn serve_forever(mut self) {
+        if let Some(t) = self.accept.take() {
+            let _ = t.join();
+        }
+    }
+}
+
+impl Drop for WorkerServer {
+    fn drop(&mut self) {
+        self.kill();
+        if let Some(t) = self.accept.take() {
+            let _ = t.join();
+        }
+    }
+}
+
+/// Blocking entry behind `sgl worker --listen addr`: bind, announce the
+/// bound address on stdout (supervisors and the process-spawning tests
+/// parse this line), serve until killed.
+pub fn run_worker(addr: &str) -> Result<()> {
+    let server = WorkerServer::bind(addr)?;
+    println!("worker listening on {}", server.local_addr());
+    std::io::stdout().flush().ok();
+    server.serve_forever();
+    Ok(())
+}
+
+fn serve_conn(mut stream: TcpStream, store: &Mutex<DatasetStore>) {
+    loop {
+        let (msg, body) = match Message::read_opt_with_body(&mut stream) {
+            Ok(Some(m)) => m,
+            // Clean close between frames, or the peer vanished: done.
+            Ok(None) | Err(WireError::Io(_)) => return,
+            // Undecodable bytes: answer with a typed error frame (the
+            // peer may log it), then drop the connection — framing can
+            // no longer be trusted.
+            Err(e) => {
+                let _ = Message::Error(RemoteError {
+                    kind: RemoteErrorKind::BadRequest,
+                    detail: format!("undecodable frame: {e}"),
+                })
+                .write_to(&mut stream);
+                return;
+            }
+        };
+        let reply = handle_request(msg, &body, store);
+        drop(body);
+        // An unframeable reply (e.g. a PathResult beyond the 2 GiB frame
+        // cap) must become a typed error, not a panicked serve thread —
+        // a closed socket would read as a worker death and make the
+        // coordinator requeue the identical shard onto the next worker,
+        // cascading the failure across the fleet.
+        let frame = reply.try_encode().unwrap_or_else(|e| {
+            Message::Error(RemoteError {
+                kind: RemoteErrorKind::SolveFailed,
+                detail: format!("result cannot be framed: {e}"),
+            })
+            .encode()
+        });
+        if stream.write_all(&frame).and_then(|()| stream.flush()).is_err() {
+            return;
+        }
+    }
+}
+
+/// One request frame → exactly one reply frame. `body` is the raw frame
+/// body the request was decoded from (`version ∥ tag ∥ payload`).
+fn handle_request(msg: Message, body: &[u8], store: &Mutex<DatasetStore>) -> Message {
+    match msg {
+        Message::Ping { seq } => Message::Pong { seq },
+        Message::HasDataset { fingerprint } => Message::DatasetKnown {
+            fingerprint,
+            known: store.lock().unwrap().contains(fingerprint),
+        },
+        Message::ShipDataset(ds) => {
+            // The payload bytes are the canonical encoding, so hashing
+            // them directly gives the sender's fingerprint without
+            // re-encoding the (potentially huge) dataset we just parsed
+            // (`wire::tests::dataset_fingerprint_is_content_addressed`
+            // pins this equality).
+            let fingerprint = crate::util::wire::fnv1a64(&body[2..]);
+            match ds.into_problem() {
+                Ok(payload) => {
+                    let pb = match payload {
+                        ProblemPayload::Dense(p) => AnyProblem::Dense(Arc::new(p)),
+                        ProblemPayload::Csc(p) => AnyProblem::Csc(Arc::new(p)),
+                    };
+                    store.lock().unwrap().insert(fingerprint, pb);
+                    Message::DatasetKnown { fingerprint, known: true }
+                }
+                Err(e) => Message::Error(RemoteError {
+                    kind: RemoteErrorKind::BadRequest,
+                    detail: format!("invalid dataset: {e}"),
+                }),
+            }
+        }
+        Message::SolveShard(req) => {
+            // Clone the `Arc` out and solve off-lock: connections solve
+            // concurrently against the shared read-only store.
+            let pb = store.lock().unwrap().get(req.dataset);
+            match pb {
+                None => Message::Error(RemoteError {
+                    kind: RemoteErrorKind::UnknownDataset,
+                    detail: format!(
+                        "dataset {:016x} has not been shipped to this worker",
+                        req.dataset
+                    ),
+                }),
+                Some(pb) => {
+                    let ShardRequest { lambdas, solver, opts, handoff, .. } = req;
+                    let solved = catch_unwind(AssertUnwindSafe(|| {
+                        pb.solve_range(&lambdas, &opts, solver, handoff.as_ref())
+                    }));
+                    match solved {
+                        Ok((result, handoff)) => Message::ShardDone { result, handoff },
+                        Err(p) => Message::Error(RemoteError {
+                            kind: RemoteErrorKind::SolveFailed,
+                            detail: panic_message(p),
+                        }),
+                    }
+                }
+            }
+        }
+        Message::Pong { .. }
+        | Message::DatasetKnown { .. }
+        | Message::ShardDone { .. }
+        | Message::Error(_) => Message::Error(RemoteError {
+            kind: RemoteErrorKind::BadRequest,
+            detail: "a reply frame arrived in a request position".to_string(),
+        }),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Coordinator side
+// ---------------------------------------------------------------------------
+
+/// Fleet sizing knobs.
+#[derive(Clone, Copy, Debug)]
+pub struct FleetConfig {
+    /// Persistent connections opened to each worker — the worker's
+    /// in-flight shard capacity from this coordinator's point of view.
+    pub conns_per_worker: usize,
+}
+
+impl Default for FleetConfig {
+    fn default() -> Self {
+        FleetConfig { conns_per_worker: 1 }
+    }
+}
+
+struct WorkerState {
+    alive: bool,
+    /// Channels currently leased to an in-flight exchange.
+    busy: usize,
+    /// Dataset fingerprints this worker has acknowledged.
+    shipped: HashSet<u64>,
+}
+
+struct FleetShared {
+    workers: Vec<WorkerState>,
+}
+
+fn total_busy(st: &FleetShared) -> usize {
+    st.workers.iter().map(|w| w.busy).sum()
+}
+
+/// Snapshot a problem into its transferable form on the matching backend.
+fn wire_dataset(pb: &AnyProblem) -> WireDataset {
+    match pb {
+        AnyProblem::Dense(p) => WireDataset::from_dense(p),
+        AnyProblem::Csc(p) => WireDataset::from_csc(p),
+    }
+}
+
+/// How many problem-instance fingerprints the fleet caches (LRU beyond
+/// it). Purely a cost cache — an evicted instance just re-fingerprints
+/// (one dataset encode) on its next shard — so the bound cannot affect
+/// correctness, and the coordinator no longer pins every dataset it ever
+/// served for the fleet's lifetime.
+const FLEET_FINGERPRINT_CAPACITY: usize = 256;
+
+struct FingerprintEntry {
+    fp: u64,
+    /// Pins the identity pointer for the entry's lifetime (an `Arc`
+    /// clone — evicting the entry drops the pin together with the key it
+    /// guards, so a recycled pointer can never alias a stale mapping).
+    _pb: AnyProblem,
+    last_used: u64,
+}
+
+#[derive(Default)]
+struct DatasetRegistry {
+    /// Problem-instance identity → content fingerprint.
+    by_identity: HashMap<(u8, usize), FingerprintEntry>,
+    tick: u64,
+}
+
+/// A leased exchange channel: exclusive use of one worker connection.
+struct Lease {
+    worker: usize,
+    chan: usize,
+    stream: TcpStream,
+}
+
+/// Client pool over a set of remote workers. See the module docs for the
+/// requeue-on-disconnect contract; all bookkeeping (slot accounting,
+/// shipped-dataset sets, liveness) lives behind one mutex, and streams
+/// are moved out of their parking slots while leased so an exchange
+/// never blocks another.
+pub struct RemoteFleet {
+    addrs: Vec<String>,
+    /// `channels[worker][conn]`: parked connections (`None` while leased
+    /// or after the worker died). Lock order: `state` first, then a
+    /// channel slot.
+    channels: Vec<Vec<Mutex<Option<TcpStream>>>>,
+    state: Mutex<FleetShared>,
+    /// Signals a released slot or a worker death.
+    slot_free: Condvar,
+    conns_per_worker: usize,
+    metrics: Arc<Metrics>,
+    datasets: Mutex<DatasetRegistry>,
+    ping_seq: AtomicU64,
+}
+
+impl RemoteFleet {
+    /// Connect to every worker (fails fast if any is unreachable — a
+    /// fleet that starts degraded is a config error, unlike one that
+    /// degrades later).
+    pub fn connect(addrs: &[String], cfg: FleetConfig, metrics: Arc<Metrics>) -> Result<Self> {
+        ensure!(!addrs.is_empty(), "fleet needs at least one worker address");
+        let conns_per_worker = cfg.conns_per_worker.max(1);
+        let mut channels = Vec::with_capacity(addrs.len());
+        for addr in addrs {
+            let mut row = Vec::with_capacity(conns_per_worker);
+            for _ in 0..conns_per_worker {
+                let stream = TcpStream::connect(addr)
+                    .with_context(|| format!("connecting to worker {addr}"))?;
+                stream.set_nodelay(true).ok();
+                row.push(Mutex::new(Some(stream)));
+            }
+            channels.push(row);
+        }
+        let workers = addrs
+            .iter()
+            .map(|_| WorkerState { alive: true, busy: 0, shipped: HashSet::new() })
+            .collect();
+        metrics.set("fleet_workers_alive", addrs.len() as f64);
+        metrics.set("fleet_in_flight", 0.0);
+        Ok(RemoteFleet {
+            addrs: addrs.to_vec(),
+            channels,
+            state: Mutex::new(FleetShared { workers }),
+            slot_free: Condvar::new(),
+            conns_per_worker,
+            metrics,
+            datasets: Mutex::new(DatasetRegistry::default()),
+            ping_seq: AtomicU64::new(0),
+        })
+    }
+
+    /// Concurrent-shard capacity across the *surviving* workers.
+    pub fn capacity(&self) -> usize {
+        let st = self.state.lock().unwrap();
+        st.workers.iter().filter(|w| w.alive).count() * self.conns_per_worker
+    }
+
+    /// Shards currently leased to workers (returns to 0 when idle — the
+    /// cancel-path tests pin this).
+    pub fn in_flight(&self) -> usize {
+        total_busy(&self.state.lock().unwrap())
+    }
+
+    pub fn workers_alive(&self) -> usize {
+        self.state.lock().unwrap().workers.iter().filter(|w| w.alive).count()
+    }
+
+    pub fn addrs(&self) -> &[String] {
+        &self.addrs
+    }
+
+    pub fn metrics(&self) -> Arc<Metrics> {
+        self.metrics.clone()
+    }
+
+    /// Solve one λ-range shard on the fleet: lease a channel from the
+    /// least-loaded surviving worker, ship the dataset if this worker has
+    /// not seen it, exchange the shard, release the slot. On a
+    /// disconnect the worker is marked dead, its parked connections are
+    /// dropped, and the shard is requeued onto the survivors; the call
+    /// fails only when no worker survives or the fleet answers with a
+    /// typed error (bad request / remote solve panic — retrying those
+    /// elsewhere would fail identically, since solves are deterministic).
+    pub fn solve_shard(
+        &self,
+        pb: &AnyProblem,
+        lambdas: &[f64],
+        opts: &PathOptions,
+        solver: SolverKind,
+        handoff: Option<&DualHandoff>,
+    ) -> Result<(PathResult, Option<DualHandoff>)> {
+        let fp = self.register(pb);
+        // Pin `sweep_threads = 0` (auto) to a concrete count *here*, on
+        // the coordinator: the parallel-CD round shape depends on the
+        // crew size, so letting each worker resolve "auto" against its
+        // own core count would make results machine-dependent — a
+        // requeued shard could re-solve with different arithmetic and
+        // the stitched path would mix two numerically different chains.
+        let mut opts = opts.clone();
+        if opts.solve.sweep == SweepMode::Parallel {
+            opts.solve.sweep_threads = resolve_threads(opts.solve.sweep_threads);
+        }
+        let req_frame = Message::SolveShard(ShardRequest {
+            dataset: fp,
+            lambdas: lambdas.to_vec(),
+            solver,
+            opts,
+            handoff: handoff.cloned(),
+        })
+        .encode();
+        loop {
+            let mut lease = self.acquire()?;
+            match self.exchange(&mut lease, fp, pb, &req_frame) {
+                Ok(Message::ShardDone { result, handoff }) => {
+                    self.release(lease);
+                    self.metrics.incr("fleet_shards_solved", 1);
+                    return Ok((result, handoff));
+                }
+                Ok(Message::Error(err)) => {
+                    let addr = self.addrs[lease.worker].clone();
+                    self.release(lease);
+                    bail!("worker {addr} rejected the shard: {err}");
+                }
+                // An intact frame that is out of protocol, or a
+                // disconnect mid-exchange: stop trusting this worker and
+                // requeue the shard onto the survivors (all shard inputs
+                // live here, so nothing was lost with the worker).
+                Ok(_) | Err(_) => {
+                    self.metrics.incr("fleet_shards_requeued", 1);
+                    self.release_dead(lease);
+                }
+            }
+        }
+    }
+
+    /// Probe every worker with a `Ping` (bounded by `timeout` per
+    /// worker). A worker whose channels are all mid-exchange counts as
+    /// alive without being probed; a failed probe marks the worker dead
+    /// exactly like a mid-shard disconnect.
+    pub fn heartbeat(&self, timeout: Duration) -> Vec<(String, bool)> {
+        (0..self.addrs.len())
+            .map(|wi| (self.addrs[wi].clone(), self.probe(wi, timeout)))
+            .collect()
+    }
+
+    /// Pre-ship a dataset to every surviving worker whose channels are
+    /// idle, returning how many workers were newly shipped. Useful
+    /// before a latency-sensitive batch (the bench warms the fleet this
+    /// way so neither timed schedule pays the one-time transfer);
+    /// workers that are busy or already hold the dataset are skipped —
+    /// `solve_shard`'s ship-on-first-use covers them.
+    pub fn warm(&self, pb: &AnyProblem) -> Result<usize> {
+        let fp = self.register(pb);
+        let mut newly = 0;
+        for wi in 0..self.addrs.len() {
+            let Some(mut lease) = self.try_lease_worker(wi) else { continue };
+            let need = self.state.lock().unwrap().workers[wi].shipped.insert(fp);
+            if !need {
+                self.release(lease);
+                continue;
+            }
+            match self.ship(&mut lease, fp, pb) {
+                Ok(None) => {
+                    newly += 1;
+                    self.release(lease);
+                }
+                Ok(Some(err)) => {
+                    let addr = self.addrs[wi].clone();
+                    self.release(lease);
+                    bail!("worker {addr} rejected the dataset: {err}");
+                }
+                Err(_) => self.release_dead(lease),
+            }
+        }
+        Ok(newly)
+    }
+
+    /// Fingerprint a problem instance, served from the bounded LRU cache
+    /// when the instance was seen before (a miss costs one dataset
+    /// encode).
+    fn register(&self, pb: &AnyProblem) -> u64 {
+        let key = pb.identity();
+        {
+            let mut reg = self.datasets.lock().unwrap();
+            reg.tick += 1;
+            let tick = reg.tick;
+            if let Some(e) = reg.by_identity.get_mut(&key) {
+                e.last_used = tick;
+                return e.fp;
+            }
+        }
+        // Fingerprinting encodes the dataset once; done off-lock so a
+        // huge registration doesn't stall concurrent exchanges.
+        let fp = wire_dataset(pb).fingerprint();
+        let mut reg = self.datasets.lock().unwrap();
+        reg.tick += 1;
+        let tick = reg.tick;
+        reg.by_identity
+            .insert(key, FingerprintEntry { fp, _pb: pb.clone(), last_used: tick });
+        while reg.by_identity.len() > FLEET_FINGERPRINT_CAPACITY {
+            let victim = reg
+                .by_identity
+                .iter()
+                .min_by_key(|(_, e)| e.last_used)
+                .map(|(k, _)| *k)
+                .expect("registry is non-empty above capacity");
+            reg.by_identity.remove(&victim);
+            self.metrics.incr("fleet_fingerprint_evictions", 1);
+        }
+        fp
+    }
+
+    fn acquire(&self) -> Result<Lease> {
+        let mut st = self.state.lock().unwrap();
+        loop {
+            // Least-loaded surviving worker with a free channel.
+            let mut best: Option<(usize, usize)> = None;
+            for (wi, w) in st.workers.iter().enumerate() {
+                if w.alive
+                    && w.busy < self.conns_per_worker
+                    && best.is_none_or(|(_, b)| w.busy < b)
+                {
+                    best = Some((wi, w.busy));
+                }
+            }
+            if let Some((wi, _)) = best {
+                let parked = (0..self.conns_per_worker)
+                    .find(|&ci| self.channels[wi][ci].lock().unwrap().is_some());
+                if let Some(ci) = parked {
+                    let stream =
+                        self.channels[wi][ci].lock().unwrap().take().expect("slot checked");
+                    st.workers[wi].busy += 1;
+                    self.metrics.set("fleet_in_flight", total_busy(&st) as f64);
+                    return Ok(Lease { worker: wi, chan: ci, stream });
+                }
+            }
+            if !st.workers.iter().any(|w| w.alive) {
+                bail!("remote fleet has no surviving workers");
+            }
+            st = self.slot_free.wait(st).unwrap();
+        }
+    }
+
+    /// Park the channel again after a successful exchange.
+    fn release(&self, lease: Lease) {
+        let mut st = self.state.lock().unwrap();
+        st.workers[lease.worker].busy -= 1;
+        *self.channels[lease.worker][lease.chan].lock().unwrap() = Some(lease.stream);
+        self.metrics.set("fleet_in_flight", total_busy(&st) as f64);
+        self.slot_free.notify_all();
+    }
+
+    /// The exchange failed at the transport level: mark the worker dead
+    /// and drop every connection to it (other in-flight exchanges on the
+    /// same worker will fail on their own sockets and land here too).
+    fn release_dead(&self, lease: Lease) {
+        let _ = lease.stream.shutdown(Shutdown::Both);
+        let mut st = self.state.lock().unwrap();
+        st.workers[lease.worker].busy -= 1;
+        if st.workers[lease.worker].alive {
+            st.workers[lease.worker].alive = false;
+            self.metrics.incr("fleet_worker_disconnects", 1);
+        }
+        for chan in &self.channels[lease.worker] {
+            if let Some(s) = chan.lock().unwrap().take() {
+                let _ = s.shutdown(Shutdown::Both);
+            }
+        }
+        self.metrics
+            .set("fleet_workers_alive", st.workers.iter().filter(|w| w.alive).count() as f64);
+        self.metrics.set("fleet_in_flight", total_busy(&st) as f64);
+        self.slot_free.notify_all();
+    }
+
+    /// One shard exchange on a leased channel (ship-on-first-use, one
+    /// transparent reship if the worker lost its store). `Err` means the
+    /// transport failed and the worker should be written off.
+    fn exchange(
+        &self,
+        lease: &mut Lease,
+        fp: u64,
+        pb: &AnyProblem,
+        req_frame: &[u8],
+    ) -> Result<Message, WireError> {
+        let io = |e: std::io::Error| WireError::Io(e.to_string());
+        // Reserve-then-ship: `insert` under the state lock elects one
+        // concurrent lease as the shipper. A racing sibling lease
+        // proceeds straight to its solve; if it outruns the in-flight
+        // ship it gets UnknownDataset and reships below — so with
+        // `conns_per_worker > 1` up to conns−1 redundant transfers are
+        // possible in that race window (bounded churn, not a
+        // correctness issue; the common 1-conn fleet never reships).
+        let need_ship =
+            self.state.lock().unwrap().workers[lease.worker].shipped.insert(fp);
+        if need_ship {
+            if let Some(err) = self.ship(lease, fp, pb)? {
+                return Ok(Message::Error(err));
+            }
+        }
+        lease.stream.write_all(req_frame).map_err(io)?;
+        let reply = Message::read_from(&mut lease.stream)?;
+        if let Message::Error(e) = &reply {
+            if e.kind == RemoteErrorKind::UnknownDataset {
+                // The worker lost its store (e.g. restarted behind the
+                // same address), or our ship is still in flight on a
+                // sibling channel: reship here and retry the same shard.
+                if let Some(err) = self.ship(lease, fp, pb)? {
+                    return Ok(Message::Error(err));
+                }
+                lease.stream.write_all(req_frame).map_err(io)?;
+                return Message::read_from(&mut lease.stream);
+            }
+        }
+        Ok(reply)
+    }
+
+    /// Ship a dataset on a leased channel. `Ok(Some(err))` is a typed
+    /// worker-side rejection (do not retry elsewhere); `Err` is
+    /// transport failure.
+    fn ship(
+        &self,
+        lease: &mut Lease,
+        fp: u64,
+        pb: &AnyProblem,
+    ) -> Result<Option<RemoteError>, WireError> {
+        let io = |e: std::io::Error| WireError::Io(e.to_string());
+        // Built per actual ship (rare) and dropped right after: the
+        // fleet never retains an encoded frame. An unframeable dataset
+        // is a typed rejection — panicking here would leak the held
+        // lease's busy slot (nothing unwinds the fleet accounting).
+        let frame = match Message::ShipDataset(wire_dataset(pb)).try_encode() {
+            Ok(f) => f,
+            Err(e) => {
+                self.state.lock().unwrap().workers[lease.worker].shipped.remove(&fp);
+                return Ok(Some(RemoteError {
+                    kind: RemoteErrorKind::BadRequest,
+                    detail: format!("dataset cannot be framed: {e}"),
+                }));
+            }
+        };
+        lease.stream.write_all(&frame).map_err(io)?;
+        drop(frame);
+        match Message::read_from(&mut lease.stream)? {
+            Message::DatasetKnown { .. } => {
+                self.state.lock().unwrap().workers[lease.worker].shipped.insert(fp);
+                self.metrics.incr("fleet_datasets_shipped", 1);
+                Ok(None)
+            }
+            Message::Error(e) => {
+                // Typed rejection: release the reservation so the error
+                // is reproducible rather than masked on the next call.
+                self.state.lock().unwrap().workers[lease.worker].shipped.remove(&fp);
+                Ok(Some(e))
+            }
+            _ => Err(WireError::Malformed("unexpected reply to ShipDataset")),
+        }
+    }
+
+    /// Non-blocking lease of a parked channel on one specific worker
+    /// (`None`: dead, or every channel is mid-exchange).
+    fn try_lease_worker(&self, wi: usize) -> Option<Lease> {
+        let mut st = self.state.lock().unwrap();
+        if !st.workers[wi].alive {
+            return None;
+        }
+        let ci = (0..self.conns_per_worker)
+            .find(|&ci| self.channels[wi][ci].lock().unwrap().is_some())?;
+        let stream = self.channels[wi][ci].lock().unwrap().take().expect("slot checked");
+        st.workers[wi].busy += 1;
+        self.metrics.set("fleet_in_flight", total_busy(&st) as f64);
+        Some(Lease { worker: wi, chan: ci, stream })
+    }
+
+    fn probe(&self, wi: usize, timeout: Duration) -> bool {
+        if !self.state.lock().unwrap().workers[wi].alive {
+            return false;
+        }
+        // Every channel mid-exchange: busy implies reachable.
+        let Some(mut lease) = self.try_lease_worker(wi) else { return true };
+        let seq = self.ping_seq.fetch_add(1, Ordering::Relaxed);
+        lease.stream.set_read_timeout(Some(timeout)).ok();
+        let ok = Message::Ping { seq }.write_to(&mut lease.stream).is_ok()
+            && matches!(
+                Message::read_from(&mut lease.stream),
+                Ok(Message::Pong { seq: got }) if got == seq
+            );
+        lease.stream.set_read_timeout(None).ok();
+        self.metrics.incr("fleet_heartbeats", 1);
+        if ok {
+            self.release(lease);
+        } else {
+            self.release_dead(lease);
+        }
+        ok
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::{generate, SyntheticConfig};
+    use crate::solver::cd::SolveOptions;
+    use crate::solver::path::solve_path_with_handoff;
+    use crate::solver::problem::{lambda_grid, SglProblem};
+
+    fn small_problem(seed: u64) -> Arc<SglProblem> {
+        let cfg = SyntheticConfig {
+            n: 24,
+            n_groups: 6,
+            group_size: 3,
+            gamma1: 3,
+            gamma2: 2,
+            seed,
+            ..Default::default()
+        };
+        let d = generate(&cfg);
+        Arc::new(SglProblem::new(d.dataset.x, d.dataset.y, d.dataset.groups, 0.3))
+    }
+
+    fn one_worker_fleet() -> (WorkerServer, RemoteFleet) {
+        let server = WorkerServer::bind("127.0.0.1:0").expect("bind");
+        let addrs = vec![server.local_addr().to_string()];
+        let fleet = RemoteFleet::connect(&addrs, FleetConfig::default(), Arc::new(Metrics::new()))
+            .expect("connect");
+        (server, fleet)
+    }
+
+    #[test]
+    fn remote_shard_matches_local_and_ships_dataset_once() {
+        let (_server, fleet) = one_worker_fleet();
+        let pb = small_problem(1);
+        let lambdas = lambda_grid(pb.lambda_max(), 1.5, 5);
+        let opts = PathOptions {
+            delta: 1.5,
+            t_count: 5,
+            solve: SolveOptions { tol: 1e-8, record_history: false, ..Default::default() },
+        };
+        let any = AnyProblem::Dense(pb.clone());
+        // Head shard remotely, tail shard remotely from the wire handoff.
+        let (head, rh) = fleet
+            .solve_shard(&any, &lambdas[..3], &opts, SolverKind::Cd, None)
+            .expect("remote head shard");
+        let rh = rh.expect("non-empty shard yields a handoff");
+        let (tail, _) = fleet
+            .solve_shard(&any, &lambdas[3..], &opts, SolverKind::Cd, Some(&rh))
+            .expect("remote tail shard");
+        // Bit-identical to the uninterrupted local path: the handoff made
+        // two TCP round trips in between.
+        let (local, lh) = solve_path_with_handoff(&pb, &lambdas, &opts, SolverKind::Cd, None);
+        for (t, (a, b)) in
+            head.results.iter().chain(tail.results.iter()).zip(&local.results).enumerate()
+        {
+            assert_eq!(a.beta, b.beta, "t={t}: remote must be bit-identical to local");
+            assert_eq!(a.epochs, b.epochs, "t={t}");
+        }
+        let lh = lh.expect("handoff");
+        assert_eq!(rh.lambda, lambdas[2]);
+        assert!(lh.lambda < rh.lambda);
+        assert_eq!(fleet.metrics().counter("fleet_datasets_shipped"), 1);
+        assert_eq!(fleet.metrics().counter("fleet_shards_solved"), 2);
+        assert_eq!(fleet.in_flight(), 0);
+    }
+
+    #[test]
+    fn remote_solve_panic_is_a_typed_failure_not_a_dead_worker() {
+        let (_server, fleet) = one_worker_fleet();
+        let pb = small_problem(2);
+        let any = AnyProblem::Dense(pb.clone());
+        let opts = PathOptions::default();
+        // An increasing grid trips the path engine's assertion remotely.
+        let err = fleet
+            .solve_shard(&any, &[1.0, 2.0], &opts, SolverKind::Cd, None)
+            .expect_err("increasing grid must fail");
+        assert!(format!("{err:#}").contains("non-increasing"), "{err:#}");
+        // The worker survived and still serves.
+        let lambdas = lambda_grid(pb.lambda_max(), 1.0, 3);
+        assert!(fleet.solve_shard(&any, &lambdas, &opts, SolverKind::Cd, None).is_ok());
+        assert_eq!(fleet.workers_alive(), 1);
+    }
+
+    #[test]
+    fn raw_protocol_unknown_dataset_and_undecodable_frames() {
+        let server = WorkerServer::bind("127.0.0.1:0").expect("bind");
+        // Unknown fingerprint → typed UnknownDataset error frame.
+        let mut s = TcpStream::connect(server.local_addr()).expect("connect");
+        Message::SolveShard(ShardRequest {
+            dataset: 0xdead_beef,
+            lambdas: vec![1.0],
+            solver: SolverKind::Cd,
+            opts: PathOptions::default(),
+            handoff: None,
+        })
+        .write_to(&mut s)
+        .expect("write");
+        let reply = Message::read_from(&mut s).expect("reply");
+        let Message::Error(e) = reply else { panic!("expected error frame, got {reply:?}") };
+        assert_eq!(e.kind, RemoteErrorKind::UnknownDataset);
+        // A bad version byte → BadRequest error frame, then close.
+        let mut s2 = TcpStream::connect(server.local_addr()).expect("connect");
+        let mut frame = Message::Ping { seq: 1 }.encode();
+        frame[4] = 99; // version byte
+        s2.write_all(&frame).expect("write");
+        let reply = Message::read_from(&mut s2).expect("reply");
+        let Message::Error(e) = reply else { panic!("expected error frame") };
+        assert_eq!(e.kind, RemoteErrorKind::BadRequest);
+        assert!(e.detail.contains("version"), "{}", e.detail);
+    }
+
+    #[test]
+    fn warm_preships_to_every_worker_exactly_once() {
+        let (_server, fleet) = one_worker_fleet();
+        let pb = small_problem(3);
+        let any = AnyProblem::Dense(pb.clone());
+        assert_eq!(fleet.warm(&any).expect("warm"), 1);
+        assert_eq!(fleet.warm(&any).expect("already warm"), 0);
+        assert_eq!(fleet.metrics().counter("fleet_datasets_shipped"), 1);
+        // The subsequent solve skips the ship entirely.
+        let lambdas = lambda_grid(pb.lambda_max(), 1.0, 3);
+        let opts = PathOptions {
+            delta: 1.0,
+            t_count: 3,
+            solve: SolveOptions { tol: 1e-6, record_history: false, ..Default::default() },
+        };
+        fleet.solve_shard(&any, &lambdas, &opts, SolverKind::Cd, None).expect("solve");
+        assert_eq!(fleet.metrics().counter("fleet_datasets_shipped"), 1);
+        assert_eq!(fleet.in_flight(), 0);
+    }
+
+    #[test]
+    fn heartbeat_tracks_liveness() {
+        let server = WorkerServer::bind("127.0.0.1:0").expect("bind");
+        let addrs = vec![server.local_addr().to_string()];
+        let fleet = RemoteFleet::connect(&addrs, FleetConfig::default(), Arc::new(Metrics::new()))
+            .expect("connect");
+        let up = fleet.heartbeat(Duration::from_secs(5));
+        assert!(up.iter().all(|(_, alive)| *alive), "{up:?}");
+        server.kill();
+        let down = fleet.heartbeat(Duration::from_secs(5));
+        assert!(down.iter().all(|(_, alive)| !*alive), "{down:?}");
+        assert_eq!(fleet.workers_alive(), 0);
+        assert_eq!(fleet.capacity(), 0);
+    }
+}

@@ -33,6 +33,7 @@
 //! rule/tolerance/solver) side by side.
 
 use super::metrics::Metrics;
+use super::remote::RemoteFleet;
 use super::shard::{plan_shards, stitch};
 use crate::linalg::{CscMatrix, Matrix};
 use crate::solver::path::{
@@ -124,11 +125,31 @@ impl AnyProblem {
     /// Dataset identity for the fingerprint cache: the backend tag plus
     /// the `Arc` pointer. Two requests share an identity iff they share
     /// the problem *instance* — the cache holds a clone of the `Arc`, so
-    /// the pointer stays pinned for the cache entry's lifetime.
-    fn identity(&self) -> (u8, usize) {
+    /// the pointer stays pinned for the cache entry's lifetime. (The
+    /// remote fleet keys its dataset registry the same way, and pins a
+    /// clone for the same reason.)
+    pub(crate) fn identity(&self) -> (u8, usize) {
         match self {
             AnyProblem::Dense(p) => (0, Arc::as_ptr(p) as usize),
             AnyProblem::Csc(p) => (1, Arc::as_ptr(p) as *const u8 as usize),
+        }
+    }
+
+    /// Solve one explicit λ-range on this problem's backend, resuming
+    /// from (and producing) a [`DualHandoff`]. The single dispatch point
+    /// every executor — the local worker pool, the remote worker's serve
+    /// loop, the cross-path scheduler — funnels through, so all of them
+    /// run the identical arithmetic.
+    pub fn solve_range(
+        &self,
+        lambdas: &[f64],
+        opts: &PathOptions,
+        solver: SolverKind,
+        handoff: Option<&DualHandoff>,
+    ) -> (PathResult, Option<DualHandoff>) {
+        match self {
+            AnyProblem::Dense(p) => solve_path_with_handoff(p, lambdas, opts, solver, handoff),
+            AnyProblem::Csc(p) => solve_path_with_handoff(p, lambdas, opts, solver, handoff),
         }
     }
 }
@@ -375,6 +396,19 @@ struct Shared {
     shutdown: bool,
 }
 
+/// Where a worker thread actually runs a claimed shard.
+enum ShardExec {
+    /// Solve in-process on the worker thread (the default).
+    Local,
+    /// Drain into a remote worker fleet: the thread leases a fleet slot,
+    /// ships the shard over TCP and blocks on the reply. Slot accounting
+    /// (and requeue onto survivors after a disconnect) lives in
+    /// [`RemoteFleet::solve_shard`], so the slot is released before the
+    /// outcome is integrated — a job cancelled mid-dispatch can never
+    /// leak its worker slot.
+    Fleet(Arc<RemoteFleet>),
+}
+
 struct Inner {
     state: Mutex<Shared>,
     /// Wakes workers: queue push or shutdown.
@@ -382,6 +416,7 @@ struct Inner {
     /// Wakes waiters: job became terminal or shutdown.
     done: Condvar,
     metrics: Arc<Metrics>,
+    exec: ShardExec,
 }
 
 /// The async solve service. Dropping it signals shutdown and joins the
@@ -400,6 +435,24 @@ impl SolveService {
     /// Start the service recording into a shared metrics registry.
     pub fn with_metrics(cfg: ServiceConfig, metrics: Arc<Metrics>) -> Self {
         let workers = resolve_threads(cfg.workers);
+        Self::spawn(cfg, metrics, workers, ShardExec::Local)
+    }
+
+    /// Start the service draining shards into a remote worker fleet
+    /// instead of solving in-process. `workers = 0` sizes the local
+    /// dispatch threads to the fleet's capacity, so every fleet slot can
+    /// be kept busy (each dispatch thread blocks on one remote shard at
+    /// a time).
+    pub fn with_fleet(
+        cfg: ServiceConfig,
+        metrics: Arc<Metrics>,
+        fleet: Arc<RemoteFleet>,
+    ) -> Self {
+        let workers = if cfg.workers == 0 { fleet.capacity().max(1) } else { cfg.workers };
+        Self::spawn(cfg, metrics, workers, ShardExec::Fleet(fleet))
+    }
+
+    fn spawn(cfg: ServiceConfig, metrics: Arc<Metrics>, workers: usize, exec: ShardExec) -> Self {
         let inner = Arc::new(Inner {
             state: Mutex::new(Shared {
                 queue: BinaryHeap::new(),
@@ -420,6 +473,7 @@ impl SolveService {
             work: Condvar::new(),
             done: Condvar::new(),
             metrics,
+            exec,
         });
         let worker_inner = inner.clone();
         let pool = WorkerPool::spawn(workers, move |_i| worker_loop(&worker_inner));
@@ -763,23 +817,33 @@ fn run_one(inner: &Inner, id: JobId) {
         }
     };
 
-    // -- solve this shard outside the lock; a panic becomes a job failure
-    // instead of poisoning the service.
+    // -- solve this shard outside the lock (locally or on the fleet); a
+    // panic becomes a job failure instead of poisoning the service, and a
+    // remote failure (all workers gone, typed worker error) likewise.
     let sw = Stopwatch::start();
-    let solved = catch_unwind(AssertUnwindSafe(|| {
-        solve_any(&req.pb, &grid, &req.opts, req.solver, handoff.as_ref())
+    let solved = catch_unwind(AssertUnwindSafe(|| match &inner.exec {
+        ShardExec::Local => Ok(req.pb.solve_range(&grid, &req.opts, req.solver, handoff.as_ref())),
+        ShardExec::Fleet(fleet) => fleet
+            .solve_shard(&req.pb, &grid, &req.opts, req.solver, handoff.as_ref())
+            .map_err(|e| format!("{e:#}")),
     }));
     let shard_secs = sw.elapsed_s();
+    let solved: Result<(PathResult, Option<DualHandoff>), String> = match solved {
+        Err(payload) => Err(panic_message(payload)),
+        Ok(outcome) => outcome,
+    };
 
-    // -- integrate the outcome.
+    // -- integrate the outcome. A job cancelled while its shard was
+    // dispatched is discarded here — the fleet slot (if any) was already
+    // released inside `solve_shard`, so cancellation never leaks it.
     let mut s = inner.state.lock().unwrap();
     let Some(job) = s.jobs.get_mut(&id) else { return };
     if job.state.is_terminal() {
         return; // cancelled mid-solve: discard the work
     }
     match solved {
-        Err(payload) => {
-            finish(inner, &mut s, id, Err(panic_message(payload)));
+        Err(msg) => {
+            finish(inner, &mut s, id, Err(msg));
         }
         Ok((part, carried)) => {
             inner.metrics.incr("service_shards_solved", 1);
@@ -877,21 +941,7 @@ fn lambda_max_grid(req: &SolveRequest) -> Vec<f64> {
     lambda_grid(req.pb.lambda_max(), req.opts.delta, req.opts.t_count)
 }
 
-/// Dispatch one λ-range solve to the request's backend.
-fn solve_any(
-    pb: &AnyProblem,
-    grid: &[f64],
-    opts: &PathOptions,
-    solver: SolverKind,
-    handoff: Option<&DualHandoff>,
-) -> (PathResult, Option<DualHandoff>) {
-    match pb {
-        AnyProblem::Dense(p) => solve_path_with_handoff(p, grid, opts, solver, handoff),
-        AnyProblem::Csc(p) => solve_path_with_handoff(p, grid, opts, solver, handoff),
-    }
-}
-
-fn panic_message(p: Box<dyn std::any::Any + Send>) -> String {
+pub(crate) fn panic_message(p: Box<dyn std::any::Any + Send>) -> String {
     p.downcast_ref::<String>()
         .cloned()
         .or_else(|| p.downcast_ref::<&str>().map(|s| s.to_string()))

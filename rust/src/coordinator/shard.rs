@@ -15,13 +15,26 @@
 //! split is that a boundary costs nothing, so a huge path can be spread
 //! across workers or machines with only the small `DualHandoff` (β plus a
 //! dual snapshot, `O(n + p)` floats) on the wire.
+//!
+//! [`solve_batch_interleaved`] is the cross-path scheduler on top: a
+//! batch of sharded paths shares one pool of executor slots (local
+//! threads, or a [`RemoteFleet`](super::remote::RemoteFleet) via a
+//! closure over `solve_shard`), with the handoff dependency expressed as
+//! a ready queue rather than a barrier, so *different* paths' shards
+//! interleave — a k-shard path no longer serializes the fleet while each
+//! of its shards runs.
 
+use super::service::AnyProblem;
 use crate::linalg::Design;
 use crate::solver::path::{
     solve_path_with_handoff, DualHandoff, PathOptions, PathResult,
 };
 use crate::solver::problem::SglProblem;
 use crate::solver::SolverKind;
+use anyhow::Result;
+use std::collections::VecDeque;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::{Condvar, Mutex};
 
 /// Split `0..n` into `min(k, n)` contiguous half-open ranges whose sizes
 /// differ by at most one (earlier shards take the extra grid points —
@@ -81,6 +94,162 @@ pub fn solve_path_sharded<D: Design>(
     stitch(parts)
 }
 
+/// One path job for the cross-path scheduler: backend-heterogeneous (the
+/// fleet serves dense and CSC problems side by side), split into
+/// `shards` contiguous λ-ranges.
+pub struct InterleavedJob {
+    pub pb: AnyProblem,
+    /// Explicit non-increasing λ grid for the whole path.
+    pub lambdas: Vec<f64>,
+    pub opts: PathOptions,
+    pub solver: SolverKind,
+    /// λ-range shard count (≤ 1 = monolithic).
+    pub shards: usize,
+    /// Free-form tag for reports.
+    pub label: String,
+}
+
+/// A shard executor: solve one λ-range of one job, resuming from the
+/// predecessor shard's handoff. [`local_exec`] is the in-process
+/// instantiation; `RemoteFleet::solve_shard` (wrapped in a closure) is
+/// the distributed one.
+pub type ShardOutcome = Result<(PathResult, Option<DualHandoff>)>;
+
+/// In-process executor for [`solve_batch_interleaved`]: the reference
+/// the fleet path is tested against.
+pub fn local_exec(
+    job: &InterleavedJob,
+    grid: &[f64],
+    handoff: Option<&DualHandoff>,
+) -> ShardOutcome {
+    Ok(job.pb.solve_range(grid, &job.opts, job.solver, handoff))
+}
+
+/// Cross-path shard scheduler: run a batch of sharded paths over `slots`
+/// executor slots (fleet capacity, or local threads), interleaving
+/// *different paths'* shards so a k-shard path never serializes the
+/// fleet.
+///
+/// The predecessor-handoff dependency is expressed as a **ready queue**,
+/// not a barrier: a job enters the queue when its next shard is
+/// dispatchable (path head, or predecessor just completed), and
+/// re-enters at the back after each shard — FIFO order round-robins the
+/// fleet across paths. Within one path the shards still run strictly in
+/// sequence with the handoff threaded through, so every path's result is
+/// bit-identical to [`solve_path_sharded`] run locally; only the
+/// *cross-path* schedule changes, and that was always embarrassingly
+/// parallel.
+///
+/// A failing (or panicking) shard fails only its own job — the other
+/// paths complete normally; `stitch` reassembles each path unchanged.
+pub fn solve_batch_interleaved<E>(
+    jobs: &[InterleavedJob],
+    slots: usize,
+    exec: E,
+) -> Vec<Result<PathResult>>
+where
+    E: Fn(&InterleavedJob, &[f64], Option<&DualHandoff>) -> ShardOutcome + Sync,
+{
+    struct PathState {
+        plan: Vec<(usize, usize)>,
+        /// Next shard index to dispatch (parts.len() once in sync).
+        parts: Vec<PathResult>,
+        carried: Option<DualHandoff>,
+        failed: Option<String>,
+    }
+    struct Sched {
+        states: Vec<PathState>,
+        /// Jobs whose next shard is dispatchable right now.
+        ready: VecDeque<usize>,
+        /// Jobs not yet fully solved (or failed).
+        pending: usize,
+    }
+
+    let states: Vec<PathState> = jobs
+        .iter()
+        .map(|j| PathState {
+            plan: plan_shards(j.lambdas.len(), j.shards.max(1)),
+            parts: Vec::new(),
+            carried: None,
+            failed: None,
+        })
+        .collect();
+    let ready: VecDeque<usize> =
+        (0..jobs.len()).filter(|&i| !states[i].plan.is_empty()).collect();
+    let pending = ready.len();
+    let shared = Mutex::new(Sched { states, ready, pending });
+    let work = Condvar::new();
+
+    std::thread::scope(|scope| {
+        for _ in 0..slots.max(1) {
+            scope.spawn(|| loop {
+                // -- claim the next ready shard (or retire this slot).
+                let (ji, range, carried) = {
+                    let mut sch = shared.lock().unwrap();
+                    loop {
+                        if sch.pending == 0 {
+                            return;
+                        }
+                        if let Some(ji) = sch.ready.pop_front() {
+                            let st = &mut sch.states[ji];
+                            let range = st.plan[st.parts.len()];
+                            // `take`, not `clone`: the handoff is
+                            // consumed by exactly this successor shard,
+                            // and an O(n+p) copy under the scheduler
+                            // mutex would serialize other slots' claims.
+                            break (ji, range, st.carried.take());
+                        }
+                        sch = work.wait(sch).unwrap();
+                    }
+                };
+                // -- solve it outside the lock; a panic fails one job,
+                // not the scheduler.
+                let job = &jobs[ji];
+                let grid = &job.lambdas[range.0..range.1];
+                let outcome = catch_unwind(AssertUnwindSafe(|| {
+                    exec(job, grid, carried.as_ref())
+                }));
+                // -- integrate and (maybe) make the successor ready.
+                let mut sch = shared.lock().unwrap();
+                match outcome {
+                    Err(payload) => {
+                        sch.states[ji].failed =
+                            Some(super::service::panic_message(payload));
+                        sch.pending -= 1;
+                    }
+                    Ok(Err(e)) => {
+                        sch.states[ji].failed = Some(format!("{e:#}"));
+                        sch.pending -= 1;
+                    }
+                    Ok(Ok((part, handoff))) => {
+                        let st = &mut sch.states[ji];
+                        st.parts.push(part);
+                        st.carried = handoff;
+                        if sch.states[ji].parts.len() == sch.states[ji].plan.len() {
+                            sch.pending -= 1;
+                        } else {
+                            // Back of the queue: round-robin across paths.
+                            sch.ready.push_back(ji);
+                        }
+                    }
+                }
+                work.notify_all();
+            });
+        }
+    });
+
+    shared
+        .into_inner()
+        .unwrap()
+        .states
+        .into_iter()
+        .map(|st| match st.failed {
+            Some(e) => Err(anyhow::anyhow!(e)),
+            None => Ok(stitch(st.parts)),
+        })
+        .collect()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -89,6 +258,8 @@ mod tests {
     use crate::solver::cd::SolveOptions;
     use crate::solver::path::solve_path_on_grid;
     use crate::solver::problem::lambda_grid;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+    use std::sync::Arc;
 
     #[test]
     fn plan_covers_everything_exactly_once() {
@@ -147,5 +318,158 @@ mod tests {
             assert_eq!(a.beta, b.beta);
             assert_eq!(a.epochs, b.epochs);
         }
+    }
+
+    fn planted_any(seed: u64) -> (Arc<SglProblem>, AnyProblem) {
+        let cfg = SyntheticConfig {
+            n: 30,
+            n_groups: 10,
+            group_size: 3,
+            gamma1: 3,
+            gamma2: 2,
+            seed,
+            ..Default::default()
+        };
+        let d = generate(&cfg);
+        let pb =
+            Arc::new(SglProblem::new(d.dataset.x, d.dataset.y, d.dataset.groups, 0.3));
+        let any = AnyProblem::Dense(pb.clone());
+        (pb, any)
+    }
+
+    fn seq_opts(t_count: usize) -> PathOptions {
+        PathOptions {
+            delta: 1.2,
+            t_count,
+            solve: SolveOptions {
+                rule: RuleKind::GapSafeSeq,
+                tol: 1e-8,
+                record_history: false,
+                ..Default::default()
+            },
+        }
+    }
+
+    #[test]
+    fn interleaved_batch_matches_solve_path_sharded_per_job() {
+        let jobs: Vec<InterleavedJob> = (0..3)
+            .map(|i| {
+                let (pb, any) = planted_any(20 + i as u64);
+                let lambdas = lambda_grid(pb.lambda_max(), 1.2, 7);
+                InterleavedJob {
+                    pb: any,
+                    lambdas,
+                    opts: seq_opts(7),
+                    solver: SolverKind::Cd,
+                    shards: 2 + i,
+                    label: format!("job{i}"),
+                }
+            })
+            .collect();
+        for slots in [1usize, 3] {
+            let out = solve_batch_interleaved(&jobs, slots, local_exec);
+            for (job, got) in jobs.iter().zip(&out) {
+                let got = got.as_ref().expect("job succeeds");
+                let AnyProblem::Dense(pb) = &job.pb else { unreachable!() };
+                let want = solve_path_sharded(
+                    pb.as_ref(),
+                    &job.lambdas,
+                    &job.opts,
+                    job.solver,
+                    job.shards,
+                );
+                assert_eq!(got.lambdas, want.lambdas, "{} slots={slots}", job.label);
+                for (a, b) in want.results.iter().zip(&got.results) {
+                    assert_eq!(a.beta, b.beta, "{} slots={slots}", job.label);
+                    assert_eq!(a.epochs, b.epochs, "{} slots={slots}", job.label);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn different_paths_interleave_but_one_path_stays_sequential() {
+        let (pb, _) = planted_any(30);
+        let lambdas = lambda_grid(pb.lambda_max(), 1.0, 4);
+        let make = |k: usize| InterleavedJob {
+            pb: AnyProblem::Dense(pb.clone()),
+            lambdas: lambdas.clone(),
+            opts: seq_opts(4),
+            solver: SolverKind::Cd,
+            shards: k,
+            label: String::new(),
+        };
+        // Fake executor that only tracks concurrency (results are
+        // dummies). When `rendezvous` is set, the *first* shard of each
+        // path (recognizable by its grid head) waits — bounded — for the
+        // sibling path's first shard, so the overlap assertion is
+        // deterministic rather than resting on sleep-length vs
+        // CI-scheduler luck.
+        let live = AtomicUsize::new(0);
+        let peak = AtomicUsize::new(0);
+        let rendezvous = std::sync::atomic::AtomicBool::new(false);
+        let exec = |job: &InterleavedJob, grid: &[f64], _: Option<&DualHandoff>| {
+            let now = live.fetch_add(1, Ordering::SeqCst) + 1;
+            peak.fetch_max(now, Ordering::SeqCst);
+            if rendezvous.load(Ordering::SeqCst) && grid[0] == job.lambdas[0] {
+                let t0 = std::time::Instant::now();
+                while live.load(Ordering::SeqCst) < 2
+                    && t0.elapsed() < std::time::Duration::from_secs(30)
+                {
+                    std::thread::sleep(std::time::Duration::from_millis(1));
+                }
+                peak.fetch_max(live.load(Ordering::SeqCst), Ordering::SeqCst);
+            }
+            live.fetch_sub(1, Ordering::SeqCst);
+            Ok((
+                PathResult { lambdas: grid.to_vec(), results: vec![], total_s: 0.0 },
+                None,
+            ))
+        };
+        // One 4-shard path on 2 slots: the handoff dependency serializes
+        // it, so concurrency can never exceed 1.
+        let out = solve_batch_interleaved(&[make(4)], 2, exec);
+        assert!(out[0].is_ok());
+        assert_eq!(peak.load(Ordering::SeqCst), 1, "one path must stay sequential");
+        // Two 4-shard paths on 2 slots: both head shards are ready at
+        // once, so both slots must claim them concurrently (the ready
+        // queue holds both before either exec returns).
+        peak.store(0, Ordering::SeqCst);
+        rendezvous.store(true, Ordering::SeqCst);
+        let out = solve_batch_interleaved(&[make(4), make(4)], 2, exec);
+        assert!(out.iter().all(|r| r.is_ok()));
+        assert_eq!(
+            peak.load(Ordering::SeqCst),
+            2,
+            "two paths must interleave on two slots"
+        );
+    }
+
+    #[test]
+    fn one_failing_job_does_not_poison_the_batch() {
+        let (pb, any) = planted_any(31);
+        let lambdas = lambda_grid(pb.lambda_max(), 1.0, 4);
+        let good = InterleavedJob {
+            pb: any.clone(),
+            lambdas: lambdas.clone(),
+            opts: seq_opts(4),
+            solver: SolverKind::Cd,
+            shards: 2,
+            label: "good".into(),
+        };
+        let bad = InterleavedJob {
+            pb: any,
+            // Increasing grid: the path engine panics on it; the
+            // scheduler must convert that into this job's error.
+            lambdas: vec![1.0, 2.0],
+            opts: seq_opts(2),
+            solver: SolverKind::Cd,
+            shards: 1,
+            label: "bad".into(),
+        };
+        let out = solve_batch_interleaved(&[good, bad], 2, local_exec);
+        assert!(out[0].is_ok());
+        let err = out[1].as_ref().expect_err("increasing grid must fail its job");
+        assert!(format!("{err:#}").contains("non-increasing"), "{err:#}");
     }
 }

@@ -107,6 +107,25 @@ impl CscMatrix {
         m
     }
 
+    /// Raw column pointers (`len == n_cols + 1`) — the triplet form the
+    /// wire codec ([`crate::util::wire`]) ships across machines.
+    #[inline]
+    pub fn indptr(&self) -> &[usize] {
+        &self.indptr
+    }
+
+    /// Raw row index of every stored entry (`len == nnz`).
+    #[inline]
+    pub fn row_indices(&self) -> &[usize] {
+        &self.indices
+    }
+
+    /// Raw value of every stored entry (`len == nnz`).
+    #[inline]
+    pub fn values(&self) -> &[f64] {
+        &self.values
+    }
+
     /// The stored entries of column `j` as `(row-indices, values)`.
     #[inline]
     pub fn col(&self, j: usize) -> (&[usize], &[f64]) {

@@ -9,7 +9,11 @@
 //! - `compare`     screening-rule timing comparison (Fig. 2c / 3b)
 //! - `serve`       async solve service: submit a heterogeneous batch and
 //!   stream completions (queue + result store + fingerprint cache +
-//!   λ-sharded paths with dual-point handoff)
+//!   λ-sharded paths with dual-point handoff); `--fleet host:port,...`
+//!   drains the shards into remote workers instead of solving in-process
+//! - `worker`      remote solve worker: `sgl worker --listen host:port`
+//!   serves the framed wire protocol (dataset shipping by fingerprint,
+//!   λ-shard solves with dual-point handoff, heartbeats) until killed
 //! - `xla`         solve through the AOT artifacts via PJRT (three-layer path)
 //!
 //! Datasets come from a config file (`--config run.toml`) or the built-in
@@ -23,10 +27,12 @@
 
 use anyhow::{bail, Context, Result};
 use sgl::config::{
-    parse_design_backend, DatasetChoice, DesignBackend, RunConfig, UnknownBackendError,
+    parse_design_backend, parse_fleet_list, DatasetChoice, DesignBackend, RunConfig,
+    UnknownBackendError,
 };
 use sgl::coordinator::jobs::{run_rule_comparison, RuleComparisonJob};
 use sgl::coordinator::metrics::Metrics;
+use sgl::coordinator::remote::{run_worker, FleetConfig, RemoteFleet};
 use sgl::coordinator::report::render_rule_timings;
 use sgl::coordinator::service::{
     AnyProblem, JobId, QueueFullError, ServiceConfig, SolveRequest, SolveService,
@@ -68,6 +74,9 @@ fn specs() -> Vec<OptSpec> {
         OptSpec { name: "workers", help: "serve: worker threads (0 = auto)", takes_value: true, default: None },
         OptSpec { name: "queue-depth", help: "serve: max queued jobs", takes_value: true, default: None },
         OptSpec { name: "shards", help: "serve: lambda-range shards per path", takes_value: true, default: None },
+        OptSpec { name: "fleet", help: "serve: remote workers host:port,host:port", takes_value: true, default: None },
+        OptSpec { name: "fleet-conns", help: "serve: connections per fleet worker", takes_value: true, default: None },
+        OptSpec { name: "listen", help: "worker: bind address (port 0 = auto)", takes_value: true, default: Some("127.0.0.1:7171") },
         OptSpec { name: "scale", help: "small|paper dataset scale", takes_value: true, default: Some("small") },
         OptSpec { name: "out", help: "output CSV path", takes_value: true, default: None },
         OptSpec { name: "artifacts", help: "artifacts dir for `xla`", takes_value: true, default: Some("artifacts") },
@@ -137,6 +146,12 @@ fn load_config(args: &Args) -> Result<RunConfig> {
     }
     if let Some(v) = args.get("shards") {
         cfg.service_shards = v.parse().context("--shards")?;
+    }
+    if let Some(v) = args.get("fleet") {
+        cfg.service_fleet = parse_fleet_list(&v).context("--fleet")?;
+    }
+    if let Some(v) = args.get("fleet-conns") {
+        cfg.service_fleet_conns = v.parse().context("--fleet-conns")?;
     }
     if args.get("config").is_none() {
         cfg.dataset = match args.get_or("dataset", "synthetic").as_str() {
@@ -354,22 +369,46 @@ fn cmd_serve(data: LoadedData, cfg: &RunConfig) -> Result<()> {
         }
     };
     let metrics = Arc::new(Metrics::new());
-    let svc = SolveService::with_metrics(
-        ServiceConfig {
-            workers: cfg.service_workers,
-            queue_depth: cfg.service_queue_depth,
-            result_capacity: cfg.service_result_capacity,
-            cache_capacity: cfg.service_cache_capacity,
-        },
-        metrics.clone(),
-    );
-    println!(
-        "service up: {} workers, queue depth {}, n={}, p={}",
-        svc.workers(),
-        cfg.service_queue_depth,
-        csc_pb.n(),
-        csc_pb.p()
-    );
+    let svc_cfg = ServiceConfig {
+        workers: cfg.service_workers,
+        queue_depth: cfg.service_queue_depth,
+        result_capacity: cfg.service_result_capacity,
+        cache_capacity: cfg.service_cache_capacity,
+    };
+    // With a fleet configured, shards leave the process: the "workers"
+    // become dispatch threads blocked on remote exchanges.
+    let fleet = if cfg.service_fleet.is_empty() {
+        None
+    } else {
+        Some(Arc::new(RemoteFleet::connect(
+            &cfg.service_fleet,
+            FleetConfig { conns_per_worker: cfg.service_fleet_conns },
+            metrics.clone(),
+        )?))
+    };
+    let svc = match &fleet {
+        None => SolveService::with_metrics(svc_cfg, metrics.clone()),
+        Some(f) => SolveService::with_fleet(svc_cfg, metrics.clone(), f.clone()),
+    };
+    match &fleet {
+        None => println!(
+            "service up: {} workers, queue depth {}, n={}, p={}",
+            svc.workers(),
+            cfg.service_queue_depth,
+            csc_pb.n(),
+            csc_pb.p()
+        ),
+        Some(f) => println!(
+            "service up: fleet of {} remote workers ({}), capacity {}, queue depth {}, \
+             n={}, p={}",
+            f.workers_alive(),
+            f.addrs().join(","),
+            f.capacity(),
+            cfg.service_queue_depth,
+            csc_pb.n(),
+            csc_pb.p()
+        ),
+    }
 
     let make = |pb: AnyProblem, rule: RuleKind, tol: f64, solver: SolverKind, shards: usize| {
         SolveRequest {
@@ -437,6 +476,11 @@ fn cmd_serve(data: LoadedData, cfg: &RunConfig) -> Result<()> {
         dup_id,
         svc.was_cached(dup_id),
     );
+    if let Some(f) = &fleet {
+        for (addr, alive) in f.heartbeat(std::time::Duration::from_secs(5)) {
+            println!("fleet worker {addr}: {}", if alive { "alive" } else { "dead" });
+        }
+    }
     println!("\nservice metrics:\n{}", metrics.render_text());
     Ok(())
 }
@@ -598,6 +642,11 @@ fn run(args: &Args) -> Result<()> {
             let data = build_data(&cfg, &scale)?;
             cmd_serve(data, &cfg)?;
         }
+        "worker" => {
+            // No dataset of its own: everything arrives over the wire,
+            // shipped once per dataset and addressed by fingerprint.
+            run_worker(&args.get_or("listen", "127.0.0.1:7171"))?;
+        }
         "xla" => {
             let dir = std::path::PathBuf::from(args.get_or("artifacts", "artifacts"));
             let engine = sgl::runtime::engine::XlaEngine::load(&dir)?;
@@ -635,7 +684,9 @@ fn run(args: &Args) -> Result<()> {
             if other != "help" {
                 eprintln!("unknown subcommand {other:?}");
             }
-            eprintln!("subcommands: solve | path | cv | lambda-max | compare | serve | xla");
+            eprintln!(
+                "subcommands: solve | path | cv | lambda-max | compare | serve | worker | xla"
+            );
             eprintln!("{}", args.usage());
         }
     }

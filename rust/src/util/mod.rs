@@ -1,10 +1,11 @@
 //! Dependency-free substrates: RNG, CLI parsing, thread pool, timing,
-//! statistics, JSON emission, and a property-testing harness.
+//! statistics, JSON emission, a property-testing harness, and the framed
+//! binary wire codec for the distributed serving layer.
 //!
 //! This build environment is fully offline with only the `xla` and `anyhow`
 //! crates available, so the roles normally played by `rand`, `clap`,
-//! `rayon`, `criterion`, `serde` and `proptest` are implemented here from
-//! scratch (see DESIGN.md §3).
+//! `rayon`, `criterion`, `serde`, `proptest` and a serialization framework
+//! are implemented here from scratch (see DESIGN.md §3).
 
 pub mod cli;
 pub mod json;
@@ -13,3 +14,4 @@ pub mod proptest;
 pub mod rng;
 pub mod stats;
 pub mod timer;
+pub mod wire;

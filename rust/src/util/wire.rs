@@ -1,0 +1,1217 @@
+//! Framed binary wire codec for the distributed λ-shard serving layer
+//! (L5, `coordinator::remote`).
+//!
+//! The GAP Safe structural fact that makes the solve pipeline
+//! distributable is that the *only* state crossing a λ-shard boundary is
+//! a [`DualHandoff`] — the terminal β plus a dual snapshot, `O(n + p)`
+//! floats. This module puts exactly that (plus the shard assignments
+//! around it) on the wire with zero dependencies:
+//!
+//! - **Framing** — every message is one length-prefixed frame:
+//!   `u32 LE length` followed by `[version byte][tag byte][body]`. A
+//!   decoder can never read past a frame, a truncated stream is a typed
+//!   [`WireError::Truncated`] (never a panic), and a peer speaking a
+//!   different protocol revision fails fast with
+//!   [`WireError::BadVersion`].
+//! - **Bit-exact floats** — every `f64` travels as its IEEE-754 bit
+//!   pattern in little-endian byte order (`to_bits`/`from_bits`), so a
+//!   replayed handoff is *bit-for-bit* the local one: NaN payloads,
+//!   signed zeros, infinities and subnormals all survive the trip, which
+//!   is what makes a remote shard's result identical to a local solve.
+//! - **Dataset shipping** — [`WireDataset`] carries a whole problem
+//!   instance (dense column-major or CSC triplets, `y`, group sizes, τ,
+//!   weights) and is addressed by a content [`fingerprint`]
+//!   (64-bit FNV-1a over the canonical encoding): a fleet ships each
+//!   dataset to each worker once and refers to it by hash thereafter.
+//! - **Typed error frames** — remote failures come back as
+//!   [`RemoteError`] frames ([`RemoteErrorKind::UnknownDataset`] /
+//!   `SolveFailed` / `BadRequest`), not closed sockets, so the client
+//!   can distinguish "reship the dataset" from "this request is bad".
+//!
+//! [`fingerprint`]: WireDataset::fingerprint
+
+use crate::linalg::{CscMatrix, Design, Matrix};
+use crate::screening::{ActiveSet, RuleKind};
+use crate::solver::cd::{CheckEvent, SolveOptions, SolveResult};
+use crate::solver::duality::DualSnapshot;
+use crate::solver::groups::Groups;
+use crate::solver::path::{DualHandoff, PathOptions, PathResult};
+use crate::solver::problem::SglProblem;
+use crate::solver::sweep::SweepMode;
+use crate::solver::SolverKind;
+use std::fmt;
+use std::io::{Read, Write};
+
+/// Protocol revision carried in every frame. Bump on any layout change:
+/// mismatched peers fail with [`WireError::BadVersion`] instead of
+/// misinterpreting bytes.
+pub const WIRE_VERSION: u8 = 1;
+
+/// Hard cap on one frame's body (2 GiB): a corrupt length prefix must
+/// not become a giant allocation.
+pub const MAX_FRAME: usize = 1 << 31;
+
+/// Typed decode/transport failure. Every malformed input maps to one of
+/// these — decoding never panics, whatever the bytes.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum WireError {
+    /// The input ends before the frame does.
+    Truncated { needed: usize, have: usize },
+    /// The frame's version byte is not [`WIRE_VERSION`].
+    BadVersion { got: u8 },
+    /// Unknown message tag.
+    BadTag { got: u8 },
+    /// Length prefix exceeds [`MAX_FRAME`].
+    Oversized { len: usize },
+    /// Structurally invalid payload (bad counts, invalid UTF-8, a
+    /// dataset that cannot form a problem, ...).
+    Malformed(&'static str),
+    /// Socket-level failure (or clean close mid-frame) while reading or
+    /// writing frames.
+    Io(String),
+}
+
+impl fmt::Display for WireError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            WireError::Truncated { needed, have } => {
+                write!(f, "truncated frame: need {needed} bytes, have {have}")
+            }
+            WireError::BadVersion { got } => {
+                write!(f, "bad wire version {got} (expected {WIRE_VERSION})")
+            }
+            WireError::BadTag { got } => write!(f, "unknown message tag {got}"),
+            WireError::Oversized { len } => {
+                write!(f, "frame length {len} exceeds the {MAX_FRAME}-byte cap")
+            }
+            WireError::Malformed(what) => write!(f, "malformed frame: {what}"),
+            WireError::Io(e) => write!(f, "wire i/o: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for WireError {}
+
+// ---------------------------------------------------------------------------
+// Primitive encoder / decoder
+// ---------------------------------------------------------------------------
+
+/// Append-only byte encoder (all integers little-endian, floats by bits).
+struct Enc {
+    buf: Vec<u8>,
+}
+
+impl Enc {
+    fn new() -> Self {
+        Enc { buf: Vec::new() }
+    }
+
+    fn u8(&mut self, v: u8) {
+        self.buf.push(v);
+    }
+
+    fn bool(&mut self, v: bool) {
+        self.u8(u8::from(v));
+    }
+
+    fn u64(&mut self, v: u64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    fn usize_(&mut self, v: usize) {
+        self.u64(v as u64);
+    }
+
+    /// Explicit little-endian IEEE-754 bits: NaN payloads, −0.0 and
+    /// subnormals replay exactly.
+    fn f64(&mut self, v: f64) {
+        self.u64(v.to_bits());
+    }
+
+    fn f64s(&mut self, v: &[f64]) {
+        self.usize_(v.len());
+        for &x in v {
+            self.f64(x);
+        }
+    }
+
+    fn u64s(&mut self, v: &[u64]) {
+        self.usize_(v.len());
+        for &x in v {
+            self.u64(x);
+        }
+    }
+
+    fn bools(&mut self, v: &[bool]) {
+        self.usize_(v.len());
+        for &x in v {
+            self.bool(x);
+        }
+    }
+
+    fn str_(&mut self, s: &str) {
+        self.usize_(s.len());
+        self.buf.extend_from_slice(s.as_bytes());
+    }
+}
+
+/// Cursor decoder over one frame body. Every read is bounds-checked
+/// ([`WireError::Truncated`]) and element counts are validated against
+/// the remaining bytes *before* any allocation.
+struct Dec<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Dec<'a> {
+    fn new(buf: &'a [u8]) -> Self {
+        Dec { buf, pos: 0 }
+    }
+
+    fn need(&self, n: usize) -> Result<(), WireError> {
+        let needed = self
+            .pos
+            .checked_add(n)
+            .ok_or(WireError::Malformed("length overflow"))?;
+        if needed > self.buf.len() {
+            Err(WireError::Truncated { needed, have: self.buf.len() })
+        } else {
+            Ok(())
+        }
+    }
+
+    fn u8(&mut self) -> Result<u8, WireError> {
+        self.need(1)?;
+        let v = self.buf[self.pos];
+        self.pos += 1;
+        Ok(v)
+    }
+
+    fn bool(&mut self) -> Result<bool, WireError> {
+        match self.u8()? {
+            0 => Ok(false),
+            1 => Ok(true),
+            _ => Err(WireError::Malformed("bool byte is neither 0 nor 1")),
+        }
+    }
+
+    fn u64(&mut self) -> Result<u64, WireError> {
+        self.need(8)?;
+        let mut b = [0u8; 8];
+        b.copy_from_slice(&self.buf[self.pos..self.pos + 8]);
+        self.pos += 8;
+        Ok(u64::from_le_bytes(b))
+    }
+
+    fn usize_(&mut self) -> Result<usize, WireError> {
+        usize::try_from(self.u64()?).map_err(|_| WireError::Malformed("usize overflow"))
+    }
+
+    fn f64(&mut self) -> Result<f64, WireError> {
+        Ok(f64::from_bits(self.u64()?))
+    }
+
+    /// Element count whose payload occupies `elem_size` bytes apiece:
+    /// checked against the remaining input before allocating.
+    fn count(&mut self, elem_size: usize) -> Result<usize, WireError> {
+        let n = self.usize_()?;
+        let bytes = n
+            .checked_mul(elem_size)
+            .ok_or(WireError::Malformed("length overflow"))?;
+        self.need(bytes)?;
+        Ok(n)
+    }
+
+    fn f64s(&mut self) -> Result<Vec<f64>, WireError> {
+        let n = self.count(8)?;
+        (0..n).map(|_| self.f64()).collect()
+    }
+
+    fn u64s(&mut self) -> Result<Vec<u64>, WireError> {
+        let n = self.count(8)?;
+        (0..n).map(|_| self.u64()).collect()
+    }
+
+    fn bools(&mut self) -> Result<Vec<bool>, WireError> {
+        let n = self.count(1)?;
+        (0..n).map(|_| self.bool()).collect()
+    }
+
+    fn str_(&mut self) -> Result<String, WireError> {
+        let n = self.count(1)?;
+        let bytes = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        String::from_utf8(bytes.to_vec())
+            .map_err(|_| WireError::Malformed("invalid utf-8 in string"))
+    }
+
+    /// A frame must be consumed exactly: trailing bytes are a framing bug
+    /// on the peer, not padding.
+    fn finish(&self) -> Result<(), WireError> {
+        if self.pos == self.buf.len() {
+            Ok(())
+        } else {
+            Err(WireError::Malformed("trailing bytes in frame"))
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Enum tags (stable: the `all()` orders are append-only by convention)
+// ---------------------------------------------------------------------------
+
+fn put_rule(e: &mut Enc, r: RuleKind) {
+    let tag = RuleKind::all().iter().position(|k| *k == r).expect("rule listed in all()");
+    e.u8(tag as u8);
+}
+
+fn get_rule(d: &mut Dec) -> Result<RuleKind, WireError> {
+    let tag = d.u8()?;
+    RuleKind::all()
+        .get(tag as usize)
+        .copied()
+        .ok_or(WireError::Malformed("unknown screening-rule tag"))
+}
+
+fn put_solver(e: &mut Enc, s: SolverKind) {
+    let tag = SolverKind::all().iter().position(|k| *k == s).expect("solver listed in all()");
+    e.u8(tag as u8);
+}
+
+fn get_solver(d: &mut Dec) -> Result<SolverKind, WireError> {
+    let tag = d.u8()?;
+    SolverKind::all()
+        .get(tag as usize)
+        .copied()
+        .ok_or(WireError::Malformed("unknown solver tag"))
+}
+
+fn put_sweep(e: &mut Enc, s: SweepMode) {
+    let tag = SweepMode::all().iter().position(|k| *k == s).expect("sweep listed in all()");
+    e.u8(tag as u8);
+}
+
+fn get_sweep(d: &mut Dec) -> Result<SweepMode, WireError> {
+    let tag = d.u8()?;
+    SweepMode::all()
+        .get(tag as usize)
+        .copied()
+        .ok_or(WireError::Malformed("unknown sweep-mode tag"))
+}
+
+// ---------------------------------------------------------------------------
+// Solver-type encodings
+// ---------------------------------------------------------------------------
+
+fn put_solve_options(e: &mut Enc, o: &SolveOptions) {
+    e.f64(o.tol);
+    e.usize_(o.max_epochs);
+    e.usize_(o.fce);
+    put_rule(e, o.rule);
+    e.bool(o.record_history);
+    put_sweep(e, o.sweep);
+    e.usize_(o.sweep_threads);
+}
+
+fn get_solve_options(d: &mut Dec) -> Result<SolveOptions, WireError> {
+    Ok(SolveOptions {
+        tol: d.f64()?,
+        max_epochs: d.usize_()?,
+        fce: d.usize_()?,
+        rule: get_rule(d)?,
+        record_history: d.bool()?,
+        sweep: get_sweep(d)?,
+        sweep_threads: d.usize_()?,
+    })
+}
+
+fn put_path_options(e: &mut Enc, o: &PathOptions) {
+    e.f64(o.delta);
+    e.usize_(o.t_count);
+    put_solve_options(e, &o.solve);
+}
+
+fn get_path_options(d: &mut Dec) -> Result<PathOptions, WireError> {
+    Ok(PathOptions { delta: d.f64()?, t_count: d.usize_()?, solve: get_solve_options(d)? })
+}
+
+fn put_snapshot(e: &mut Enc, s: &DualSnapshot) {
+    e.f64s(&s.theta);
+    e.f64s(&s.xt_theta);
+    e.f64(s.dual_norm_xt_rho);
+    e.f64(s.primal);
+    e.f64(s.dual);
+    e.f64(s.gap);
+    e.f64(s.radius);
+}
+
+fn get_snapshot(d: &mut Dec) -> Result<DualSnapshot, WireError> {
+    Ok(DualSnapshot {
+        theta: d.f64s()?,
+        xt_theta: d.f64s()?,
+        dual_norm_xt_rho: d.f64()?,
+        primal: d.f64()?,
+        dual: d.f64()?,
+        gap: d.f64()?,
+        radius: d.f64()?,
+    })
+}
+
+fn put_handoff(e: &mut Enc, h: &DualHandoff) {
+    e.f64(h.lambda);
+    e.f64s(&h.beta);
+    put_snapshot(e, &h.snap);
+}
+
+fn get_handoff(d: &mut Dec) -> Result<DualHandoff, WireError> {
+    Ok(DualHandoff { lambda: d.f64()?, beta: d.f64s()?, snap: get_snapshot(d)? })
+}
+
+fn put_opt_handoff(e: &mut Enc, h: Option<&DualHandoff>) {
+    match h {
+        None => e.u8(0),
+        Some(h) => {
+            e.u8(1);
+            put_handoff(e, h);
+        }
+    }
+}
+
+fn get_opt_handoff(d: &mut Dec) -> Result<Option<DualHandoff>, WireError> {
+    match d.u8()? {
+        0 => Ok(None),
+        1 => Ok(Some(get_handoff(d)?)),
+        _ => Err(WireError::Malformed("option tag is neither 0 nor 1")),
+    }
+}
+
+fn put_active(e: &mut Enc, a: &ActiveSet) {
+    e.bools(&a.feature);
+    e.bools(&a.group);
+}
+
+fn get_active(d: &mut Dec) -> Result<ActiveSet, WireError> {
+    Ok(ActiveSet { feature: d.bools()?, group: d.bools()? })
+}
+
+fn put_check(e: &mut Enc, c: &CheckEvent) {
+    e.usize_(c.epoch);
+    e.f64(c.gap);
+    e.f64(c.radius);
+    e.usize_(c.active_features);
+    e.usize_(c.active_groups);
+    e.f64(c.elapsed_s);
+}
+
+fn get_check(d: &mut Dec) -> Result<CheckEvent, WireError> {
+    Ok(CheckEvent {
+        epoch: d.usize_()?,
+        gap: d.f64()?,
+        radius: d.f64()?,
+        active_features: d.usize_()?,
+        active_groups: d.usize_()?,
+        elapsed_s: d.f64()?,
+    })
+}
+
+fn put_solve_result(e: &mut Enc, r: &SolveResult) {
+    e.f64s(&r.beta);
+    e.f64(r.gap);
+    e.usize_(r.epochs);
+    e.bool(r.converged);
+    e.f64(r.elapsed_s);
+    put_active(e, &r.active);
+    e.usize_(r.history.len());
+    for c in &r.history {
+        put_check(e, c);
+    }
+    e.usize_(r.gap_evals);
+}
+
+fn get_solve_result(d: &mut Dec) -> Result<SolveResult, WireError> {
+    Ok(SolveResult {
+        beta: d.f64s()?,
+        gap: d.f64()?,
+        epochs: d.usize_()?,
+        converged: d.bool()?,
+        elapsed_s: d.f64()?,
+        active: get_active(d)?,
+        history: {
+            // A CheckEvent is ≥ 48 bytes on the wire: bound the count
+            // against the remaining input before allocating.
+            let n = d.count(48)?;
+            (0..n).map(|_| get_check(d)).collect::<Result<Vec<_>, _>>()?
+        },
+        gap_evals: d.usize_()?,
+    })
+}
+
+fn put_path_result(e: &mut Enc, r: &PathResult) {
+    e.f64s(&r.lambdas);
+    e.usize_(r.results.len());
+    for res in &r.results {
+        put_solve_result(e, res);
+    }
+    e.f64(r.total_s);
+}
+
+fn get_path_result(d: &mut Dec) -> Result<PathResult, WireError> {
+    Ok(PathResult {
+        lambdas: d.f64s()?,
+        results: {
+            // A SolveResult is ≥ 50 bytes on the wire (conservative).
+            let n = d.count(50)?;
+            (0..n).map(|_| get_solve_result(d)).collect::<Result<Vec<_>, _>>()?
+        },
+        total_s: d.f64()?,
+    })
+}
+
+// ---------------------------------------------------------------------------
+// Dataset shipping
+// ---------------------------------------------------------------------------
+
+/// The design matrix in transferable form.
+#[derive(Clone, Debug)]
+pub enum WireDesign {
+    /// Column-major dense payload (`data.len() == n_rows · n_cols`).
+    Dense { n_rows: usize, n_cols: usize, data: Vec<f64> },
+    /// CSC triplets (`indptr.len() == n_cols + 1`, rows strictly
+    /// increasing within each column).
+    Csc {
+        n_rows: usize,
+        n_cols: usize,
+        indptr: Vec<u64>,
+        indices: Vec<u64>,
+        values: Vec<f64>,
+    },
+}
+
+/// A whole problem instance on the wire: design + `y` + group partition
+/// + `τ` + weights. Shipped once per worker and addressed by
+/// [`fingerprint`](Self::fingerprint) thereafter.
+#[derive(Clone, Debug)]
+pub struct WireDataset {
+    pub design: WireDesign,
+    pub y: Vec<f64>,
+    pub group_sizes: Vec<u64>,
+    pub tau: f64,
+    pub weights: Vec<f64>,
+}
+
+/// A problem decoded from a [`WireDataset`], preserving the backend.
+#[derive(Clone, Debug)]
+pub enum ProblemPayload {
+    Dense(SglProblem<Matrix>),
+    Csc(SglProblem<CscMatrix>),
+}
+
+impl WireDataset {
+    /// Snapshot a dense problem for shipping.
+    pub fn from_dense(pb: &SglProblem<Matrix>) -> Self {
+        WireDataset {
+            design: WireDesign::Dense {
+                n_rows: pb.x.n_rows(),
+                n_cols: pb.x.n_cols(),
+                data: pb.x.as_slice().to_vec(),
+            },
+            y: pb.y.clone(),
+            group_sizes: (0..pb.groups.n_groups()).map(|g| pb.groups.size(g) as u64).collect(),
+            tau: pb.tau,
+            weights: pb.weights.clone(),
+        }
+    }
+
+    /// Snapshot a CSC problem for shipping (triplet form, no dense
+    /// detour).
+    pub fn from_csc(pb: &SglProblem<CscMatrix>) -> Self {
+        WireDataset {
+            design: WireDesign::Csc {
+                n_rows: pb.x.n_rows(),
+                n_cols: pb.x.n_cols(),
+                indptr: pb.x.indptr().iter().map(|&v| v as u64).collect(),
+                indices: pb.x.row_indices().iter().map(|&v| v as u64).collect(),
+                values: pb.x.values().to_vec(),
+            },
+            y: pb.y.clone(),
+            group_sizes: (0..pb.groups.n_groups()).map(|g| pb.groups.size(g) as u64).collect(),
+            tau: pb.tau,
+            weights: pb.weights.clone(),
+        }
+    }
+
+    /// 64-bit FNV-1a digest of the canonical encoding. Floats hash by
+    /// bit pattern, so two datasets share a fingerprint iff they are
+    /// bit-identical — the address a fleet uses after shipping once.
+    pub fn fingerprint(&self) -> u64 {
+        let mut e = Enc::new();
+        put_dataset(&mut e, self);
+        fnv1a64(&e.buf)
+    }
+
+    pub fn backend_name(&self) -> &'static str {
+        match self.design {
+            WireDesign::Dense { .. } => "dense",
+            WireDesign::Csc { .. } => "csc",
+        }
+    }
+
+    /// Reconstruct the problem, re-running the deterministic
+    /// precomputations (column norms, spectral norms, `λ_max`) on the
+    /// receiving side — same input bits, same algorithm, same results.
+    /// Every structural invariant the problem constructors `assert!` is
+    /// validated here first, so malformed wire data is a typed
+    /// [`WireError::Malformed`], never a worker panic.
+    pub fn into_problem(self) -> Result<ProblemPayload, WireError> {
+        let WireDataset { design, y, group_sizes, tau, weights } = self;
+        if group_sizes.is_empty() {
+            return Err(WireError::Malformed("dataset has no groups"));
+        }
+        let mut sizes = Vec::with_capacity(group_sizes.len());
+        let mut p: usize = 0;
+        for &s in &group_sizes {
+            let s = usize::try_from(s).map_err(|_| WireError::Malformed("usize overflow"))?;
+            if s == 0 {
+                return Err(WireError::Malformed("empty group in dataset"));
+            }
+            p = p.checked_add(s).ok_or(WireError::Malformed("group sizes overflow"))?;
+            sizes.push(s);
+        }
+        if weights.len() != sizes.len() {
+            return Err(WireError::Malformed("weights/groups length mismatch"));
+        }
+        if !(0.0..=1.0).contains(&tau) {
+            return Err(WireError::Malformed("tau outside [0, 1]"));
+        }
+        if tau == 0.0 && !weights.iter().all(|&w| w > 0.0) {
+            return Err(WireError::Malformed("tau = 0 requires positive weights"));
+        }
+        match design {
+            WireDesign::Dense { n_rows, n_cols, data } => {
+                if n_cols != p {
+                    return Err(WireError::Malformed("groups do not cover the design columns"));
+                }
+                if y.len() != n_rows {
+                    return Err(WireError::Malformed("y/design row mismatch"));
+                }
+                let total = n_rows
+                    .checked_mul(n_cols)
+                    .ok_or(WireError::Malformed("dense design too large"))?;
+                if data.len() != total {
+                    return Err(WireError::Malformed("dense payload size mismatch"));
+                }
+                let x = Matrix::from_col_major(data, n_rows, n_cols);
+                Ok(ProblemPayload::Dense(SglProblem::with_weights(
+                    x,
+                    y,
+                    Groups::from_sizes(&sizes),
+                    tau,
+                    weights,
+                )))
+            }
+            WireDesign::Csc { n_rows, n_cols, indptr, indices, values } => {
+                if n_cols != p {
+                    return Err(WireError::Malformed("groups do not cover the design columns"));
+                }
+                if y.len() != n_rows {
+                    return Err(WireError::Malformed("y/design row mismatch"));
+                }
+                if indptr.len() != n_cols + 1 {
+                    return Err(WireError::Malformed("csc indptr length mismatch"));
+                }
+                if indices.len() != values.len() {
+                    return Err(WireError::Malformed("csc indices/values length mismatch"));
+                }
+                if indptr.first() != Some(&0)
+                    || *indptr.last().expect("indptr non-empty") != indices.len() as u64
+                {
+                    return Err(WireError::Malformed("csc indptr endpoints mismatch"));
+                }
+                let mut iptr = Vec::with_capacity(indptr.len());
+                for w in indptr.windows(2) {
+                    if w[1] < w[0] {
+                        return Err(WireError::Malformed("csc indptr must be non-decreasing"));
+                    }
+                }
+                for &v in &indptr {
+                    iptr.push(
+                        usize::try_from(v).map_err(|_| WireError::Malformed("usize overflow"))?,
+                    );
+                }
+                let mut rows = Vec::with_capacity(indices.len());
+                for &v in &indices {
+                    let i =
+                        usize::try_from(v).map_err(|_| WireError::Malformed("usize overflow"))?;
+                    if i >= n_rows {
+                        return Err(WireError::Malformed("csc row index out of bounds"));
+                    }
+                    rows.push(i);
+                }
+                // Strictly increasing rows within each column: the sparse
+                // kernels binary-search row windows, so this invariant
+                // must hold on arrival, not by trust.
+                for j in 0..n_cols {
+                    let col = &rows[iptr[j]..iptr[j + 1]];
+                    for w in col.windows(2) {
+                        if w[1] <= w[0] {
+                            return Err(WireError::Malformed(
+                                "csc rows must be strictly increasing within a column",
+                            ));
+                        }
+                    }
+                }
+                let x = CscMatrix::from_raw(n_rows, n_cols, iptr, rows, values);
+                Ok(ProblemPayload::Csc(SglProblem::with_weights(
+                    x,
+                    y,
+                    Groups::from_sizes(&sizes),
+                    tau,
+                    weights,
+                )))
+            }
+        }
+    }
+}
+
+fn put_dataset(e: &mut Enc, ds: &WireDataset) {
+    match &ds.design {
+        WireDesign::Dense { n_rows, n_cols, data } => {
+            e.u8(0);
+            e.usize_(*n_rows);
+            e.usize_(*n_cols);
+            e.f64s(data);
+        }
+        WireDesign::Csc { n_rows, n_cols, indptr, indices, values } => {
+            e.u8(1);
+            e.usize_(*n_rows);
+            e.usize_(*n_cols);
+            e.u64s(indptr);
+            e.u64s(indices);
+            e.f64s(values);
+        }
+    }
+    e.f64s(&ds.y);
+    e.u64s(&ds.group_sizes);
+    e.f64(ds.tau);
+    e.f64s(&ds.weights);
+}
+
+fn get_dataset(d: &mut Dec) -> Result<WireDataset, WireError> {
+    let design = match d.u8()? {
+        0 => WireDesign::Dense { n_rows: d.usize_()?, n_cols: d.usize_()?, data: d.f64s()? },
+        1 => WireDesign::Csc {
+            n_rows: d.usize_()?,
+            n_cols: d.usize_()?,
+            indptr: d.u64s()?,
+            indices: d.u64s()?,
+            values: d.f64s()?,
+        },
+        _ => return Err(WireError::Malformed("unknown design tag")),
+    };
+    Ok(WireDataset {
+        design,
+        y: d.f64s()?,
+        group_sizes: d.u64s()?,
+        tau: d.f64()?,
+        weights: d.f64s()?,
+    })
+}
+
+// ---------------------------------------------------------------------------
+// Messages
+// ---------------------------------------------------------------------------
+
+/// One λ-range shard assignment: a [`SolveRequest`] restricted to an
+/// explicit grid slice, addressing its dataset by fingerprint and
+/// carrying the predecessor shard's [`DualHandoff`] (if any) so the
+/// remote rule replays it at epoch 0, exactly like a local resume.
+///
+/// [`SolveRequest`]: crate::coordinator::service::SolveRequest
+#[derive(Clone, Debug)]
+pub struct ShardRequest {
+    /// [`WireDataset::fingerprint`] of a previously shipped dataset.
+    pub dataset: u64,
+    /// The shard's explicit non-increasing λ grid.
+    pub lambdas: Vec<f64>,
+    pub solver: SolverKind,
+    pub opts: PathOptions,
+    /// Terminal state of the predecessor shard, `None` for a path head.
+    pub handoff: Option<DualHandoff>,
+}
+
+/// Why a remote worker rejected or failed a request.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RemoteErrorKind {
+    /// The referenced dataset fingerprint has not been shipped to this
+    /// worker (e.g. it restarted): reship and retry.
+    UnknownDataset,
+    /// The solve itself panicked (degenerate grid, shape mismatch, ...).
+    SolveFailed,
+    /// The request was structurally invalid for this worker.
+    BadRequest,
+}
+
+impl RemoteErrorKind {
+    fn tag(self) -> u8 {
+        match self {
+            RemoteErrorKind::UnknownDataset => 0,
+            RemoteErrorKind::SolveFailed => 1,
+            RemoteErrorKind::BadRequest => 2,
+        }
+    }
+
+    fn from_tag(t: u8) -> Result<Self, WireError> {
+        Ok(match t {
+            0 => RemoteErrorKind::UnknownDataset,
+            1 => RemoteErrorKind::SolveFailed,
+            2 => RemoteErrorKind::BadRequest,
+            _ => return Err(WireError::Malformed("unknown error kind tag")),
+        })
+    }
+}
+
+/// Typed error frame a worker sends instead of closing the socket.
+#[derive(Clone, Debug)]
+pub struct RemoteError {
+    pub kind: RemoteErrorKind,
+    pub detail: String,
+}
+
+impl fmt::Display for RemoteError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{:?}: {}", self.kind, self.detail)
+    }
+}
+
+/// Every frame the λ-shard serving protocol speaks. The coordinator
+/// writes requests, the worker answers each with exactly one reply
+/// frame ([`Pong`](Message::Pong), [`DatasetKnown`](Message::DatasetKnown),
+/// [`ShardDone`](Message::ShardDone) or [`Error`](Message::Error)).
+//
+// The payload variants dwarf the heartbeat ones by design; messages are
+// built, encoded and dropped in one motion, so boxing them would only
+// add indirection on the hot shipping path.
+#[allow(clippy::large_enum_variant)]
+#[derive(Clone, Debug)]
+pub enum Message {
+    /// Heartbeat probe (echoed back as [`Pong`](Message::Pong)).
+    Ping { seq: u64 },
+    Pong { seq: u64 },
+    /// Does the worker hold this dataset?
+    HasDataset { fingerprint: u64 },
+    DatasetKnown { fingerprint: u64, known: bool },
+    /// Ship a dataset; acknowledged with `DatasetKnown { known: true }`.
+    ShipDataset(WireDataset),
+    /// Solve one λ-range shard (see [`ShardRequest`]).
+    SolveShard(ShardRequest),
+    /// Successful shard outcome plus the outgoing handoff.
+    ShardDone { result: PathResult, handoff: Option<DualHandoff> },
+    /// Typed failure reply.
+    Error(RemoteError),
+}
+
+const TAG_PING: u8 = 1;
+const TAG_PONG: u8 = 2;
+const TAG_HAS_DATASET: u8 = 3;
+const TAG_DATASET_KNOWN: u8 = 4;
+const TAG_SHIP_DATASET: u8 = 5;
+const TAG_SOLVE_SHARD: u8 = 6;
+const TAG_SHARD_DONE: u8 = 7;
+const TAG_ERROR: u8 = 8;
+
+impl Message {
+    fn tag(&self) -> u8 {
+        match self {
+            Message::Ping { .. } => TAG_PING,
+            Message::Pong { .. } => TAG_PONG,
+            Message::HasDataset { .. } => TAG_HAS_DATASET,
+            Message::DatasetKnown { .. } => TAG_DATASET_KNOWN,
+            Message::ShipDataset(_) => TAG_SHIP_DATASET,
+            Message::SolveShard(_) => TAG_SOLVE_SHARD,
+            Message::ShardDone { .. } => TAG_SHARD_DONE,
+            Message::Error(_) => TAG_ERROR,
+        }
+    }
+
+    fn put_body(&self, e: &mut Enc) {
+        match self {
+            Message::Ping { seq } | Message::Pong { seq } => e.u64(*seq),
+            Message::HasDataset { fingerprint } => e.u64(*fingerprint),
+            Message::DatasetKnown { fingerprint, known } => {
+                e.u64(*fingerprint);
+                e.bool(*known);
+            }
+            Message::ShipDataset(ds) => put_dataset(e, ds),
+            Message::SolveShard(req) => {
+                e.u64(req.dataset);
+                e.f64s(&req.lambdas);
+                put_solver(e, req.solver);
+                put_path_options(e, &req.opts);
+                put_opt_handoff(e, req.handoff.as_ref());
+            }
+            Message::ShardDone { result, handoff } => {
+                put_path_result(e, result);
+                put_opt_handoff(e, handoff.as_ref());
+            }
+            Message::Error(err) => {
+                e.u8(err.kind.tag());
+                e.str_(&err.detail);
+            }
+        }
+    }
+
+    fn get_body(tag: u8, d: &mut Dec) -> Result<Message, WireError> {
+        Ok(match tag {
+            TAG_PING => Message::Ping { seq: d.u64()? },
+            TAG_PONG => Message::Pong { seq: d.u64()? },
+            TAG_HAS_DATASET => Message::HasDataset { fingerprint: d.u64()? },
+            TAG_DATASET_KNOWN => {
+                Message::DatasetKnown { fingerprint: d.u64()?, known: d.bool()? }
+            }
+            TAG_SHIP_DATASET => Message::ShipDataset(get_dataset(d)?),
+            TAG_SOLVE_SHARD => Message::SolveShard(ShardRequest {
+                dataset: d.u64()?,
+                lambdas: d.f64s()?,
+                solver: get_solver(d)?,
+                opts: get_path_options(d)?,
+                handoff: get_opt_handoff(d)?,
+            }),
+            TAG_SHARD_DONE => Message::ShardDone {
+                result: get_path_result(d)?,
+                handoff: get_opt_handoff(d)?,
+            },
+            TAG_ERROR => Message::Error(RemoteError {
+                kind: RemoteErrorKind::from_tag(d.u8()?)?,
+                detail: d.str_()?,
+            }),
+            got => return Err(WireError::BadTag { got }),
+        })
+    }
+
+    /// Encode into one complete frame (length prefix included).
+    ///
+    /// Panics if the body exceeds [`MAX_FRAME`] — a silent `as u32` wrap
+    /// of the length prefix would desync the stream and read as a peer
+    /// failure. Paths that must stay alive across oversized payloads
+    /// (the fleet's ship path, the worker's reply path) use
+    /// [`try_encode`](Self::try_encode) and turn the failure into a
+    /// typed frame instead.
+    pub fn encode(&self) -> Vec<u8> {
+        self.try_encode().unwrap_or_else(|e| {
+            panic!("unframeable message (ship the dataset in a streamed form instead): {e}")
+        })
+    }
+
+    /// [`encode`](Self::encode) with the oversize case as a typed
+    /// [`WireError::Oversized`] instead of a panic.
+    pub fn try_encode(&self) -> Result<Vec<u8>, WireError> {
+        let mut e = Enc::new();
+        // Length placeholder, patched below: one buffer end to end, no
+        // second allocation-plus-memcpy of a potentially huge body.
+        e.buf.extend_from_slice(&[0u8; 4]);
+        e.u8(WIRE_VERSION);
+        e.u8(self.tag());
+        self.put_body(&mut e);
+        let mut out = e.buf;
+        let body_len = out.len() - 4;
+        if body_len > MAX_FRAME {
+            return Err(WireError::Oversized { len: body_len });
+        }
+        out[..4].copy_from_slice(&(body_len as u32).to_le_bytes());
+        Ok(out)
+    }
+
+    /// Decode one frame from the front of `bytes`; returns the message
+    /// and the number of bytes consumed. Never panics: every malformed
+    /// input is a typed [`WireError`].
+    pub fn decode(bytes: &[u8]) -> Result<(Message, usize), WireError> {
+        if bytes.len() < 4 {
+            return Err(WireError::Truncated { needed: 4, have: bytes.len() });
+        }
+        let len = u32::from_le_bytes(bytes[0..4].try_into().expect("4 bytes")) as usize;
+        if len > MAX_FRAME {
+            return Err(WireError::Oversized { len });
+        }
+        if len < 2 {
+            return Err(WireError::Malformed("frame shorter than its header"));
+        }
+        if bytes.len() < 4 + len {
+            return Err(WireError::Truncated { needed: 4 + len, have: bytes.len() });
+        }
+        let msg = Self::parse_body(&bytes[4..4 + len])?;
+        Ok((msg, 4 + len))
+    }
+
+    fn parse_body(body: &[u8]) -> Result<Message, WireError> {
+        let got = body[0];
+        if got != WIRE_VERSION {
+            return Err(WireError::BadVersion { got });
+        }
+        let tag = body[1];
+        let mut d = Dec::new(&body[2..]);
+        let msg = Self::get_body(tag, &mut d)?;
+        d.finish()?;
+        Ok(msg)
+    }
+
+    /// Write one frame (and flush — these are request/response sockets).
+    pub fn write_to<W: Write>(&self, w: &mut W) -> std::io::Result<()> {
+        w.write_all(&self.encode())?;
+        w.flush()
+    }
+
+    /// Blocking read of one frame; a connection closed *between* frames
+    /// is `Ok(None)`, mid-frame it is [`WireError::Io`].
+    pub fn read_opt<R: Read>(r: &mut R) -> Result<Option<Message>, WireError> {
+        Ok(Self::read_opt_with_body(r)?.map(|(msg, _)| msg))
+    }
+
+    /// [`read_opt`](Self::read_opt), also handing back the raw frame
+    /// body (`version ∥ tag ∥ payload`) that produced the message. The
+    /// payload bytes ARE the canonical encoding, so a receiver can hash
+    /// `body[2..]` for a dataset fingerprint without re-encoding
+    /// anything — the buffer was allocated for the read regardless.
+    pub fn read_opt_with_body<R: Read>(
+        r: &mut R,
+    ) -> Result<Option<(Message, Vec<u8>)>, WireError> {
+        let mut len4 = [0u8; 4];
+        let first = loop {
+            match r.read(&mut len4[..1]) {
+                Ok(n) => break n,
+                Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+                Err(e) => return Err(WireError::Io(e.to_string())),
+            }
+        };
+        if first == 0 {
+            return Ok(None);
+        }
+        let io = |e: std::io::Error| WireError::Io(e.to_string());
+        r.read_exact(&mut len4[1..]).map_err(io)?;
+        let len = u32::from_le_bytes(len4) as usize;
+        if len > MAX_FRAME {
+            return Err(WireError::Oversized { len });
+        }
+        if len < 2 {
+            return Err(WireError::Malformed("frame shorter than its header"));
+        }
+        // Validate the 2-byte header *before* committing any payload
+        // allocation: garbage from an arbitrary peer (the worker
+        // listener is unauthenticated) must be rejected for the cost of
+        // 6 bytes, not a length-prefix-sized buffer.
+        let mut hdr = [0u8; 2];
+        r.read_exact(&mut hdr).map_err(io)?;
+        if hdr[0] != WIRE_VERSION {
+            return Err(WireError::BadVersion { got: hdr[0] });
+        }
+        if !(TAG_PING..=TAG_ERROR).contains(&hdr[1]) {
+            return Err(WireError::BadTag { got: hdr[1] });
+        }
+        // Read the payload in bounded chunks: a peer that *claims* a
+        // huge frame only costs memory as it actually delivers bytes.
+        let mut body = Vec::with_capacity(len.min(1 << 24));
+        body.extend_from_slice(&hdr);
+        let mut remaining = len - 2;
+        let mut chunk = [0u8; 16 * 1024];
+        while remaining > 0 {
+            let n = remaining.min(chunk.len());
+            r.read_exact(&mut chunk[..n]).map_err(io)?;
+            body.extend_from_slice(&chunk[..n]);
+            remaining -= n;
+        }
+        let msg = Self::parse_body(&body)?;
+        Ok(Some((msg, body)))
+    }
+
+    /// Blocking read of one frame; any close is an [`WireError::Io`]
+    /// (use [`read_opt`](Self::read_opt) where clean close is expected).
+    pub fn read_from<R: Read>(r: &mut R) -> Result<Message, WireError> {
+        match Self::read_opt(r)? {
+            Some(m) => Ok(m),
+            None => Err(WireError::Io("connection closed".to_string())),
+        }
+    }
+}
+
+/// 64-bit FNV-1a over a byte slice (the dataset fingerprint hash).
+pub fn fnv1a64(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf29ce484222325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn roundtrip(msg: &Message) -> Message {
+        let frame = msg.encode();
+        let (decoded, used) = Message::decode(&frame).expect("roundtrip decode");
+        assert_eq!(used, frame.len(), "whole frame consumed");
+        // Canonical-bytes equality is the strongest equality we can ask
+        // for in the presence of NaNs.
+        assert_eq!(decoded.encode(), frame, "re-encode is byte-identical");
+        decoded
+    }
+
+    #[test]
+    fn ping_pong_roundtrip() {
+        match roundtrip(&Message::Ping { seq: 42 }) {
+            Message::Ping { seq } => assert_eq!(seq, 42),
+            other => panic!("wrong variant {other:?}"),
+        }
+        roundtrip(&Message::Pong { seq: u64::MAX });
+    }
+
+    #[test]
+    fn handoff_floats_survive_bit_exactly() {
+        let snap = DualSnapshot {
+            theta: vec![f64::NAN, -0.0, f64::INFINITY, f64::from_bits(1)],
+            xt_theta: vec![f64::NEG_INFINITY, f64::MIN_POSITIVE / 2.0],
+            dual_norm_xt_rho: f64::from_bits(0x7ff8_dead_beef_0001),
+            primal: 1.5,
+            dual: -2.5,
+            gap: 0.0,
+            radius: f64::MAX,
+        };
+        let h = DualHandoff { lambda: 0.25, beta: vec![0.0, -0.0, 3.5e-310], snap };
+        let msg = Message::SolveShard(ShardRequest {
+            dataset: 7,
+            lambdas: vec![1.0, 0.5],
+            solver: SolverKind::Fista,
+            opts: PathOptions::default(),
+            handoff: Some(h),
+        });
+        let back = roundtrip(&msg);
+        let Message::SolveShard(req) = back else { panic!("wrong variant") };
+        let h = req.handoff.expect("handoff survives");
+        assert_eq!(h.beta[1].to_bits(), (-0.0f64).to_bits());
+        assert!(h.snap.theta[0].is_nan());
+        assert_eq!(
+            h.snap.dual_norm_xt_rho.to_bits(),
+            0x7ff8_dead_beef_0001,
+            "NaN payload preserved"
+        );
+    }
+
+    #[test]
+    fn truncation_and_version_are_typed_errors() {
+        let frame = Message::Ping { seq: 9 }.encode();
+        for cut in 0..frame.len() {
+            match Message::decode(&frame[..cut]) {
+                Err(WireError::Truncated { .. }) => {}
+                other => panic!("cut {cut}: expected Truncated, got {other:?}"),
+            }
+        }
+        let mut bad = frame.clone();
+        bad[4] = WIRE_VERSION.wrapping_add(3);
+        assert!(matches!(
+            Message::decode(&bad),
+            Err(WireError::BadVersion { got }) if got == WIRE_VERSION.wrapping_add(3)
+        ));
+        let mut badtag = frame.clone();
+        badtag[5] = 250;
+        assert!(matches!(Message::decode(&badtag), Err(WireError::BadTag { got: 250 })));
+        // Trailing garbage inside the declared frame length.
+        let mut long = frame;
+        long[0] += 1; // lengthen the frame by one byte…
+        long.push(0); // …and supply it
+        assert!(matches!(Message::decode(&long), Err(WireError::Malformed(_))));
+    }
+
+    #[test]
+    fn dataset_fingerprint_is_content_addressed() {
+        let ds = WireDataset {
+            design: WireDesign::Dense { n_rows: 2, n_cols: 2, data: vec![1.0, 2.0, 3.0, 4.0] },
+            y: vec![0.5, -0.5],
+            group_sizes: vec![1, 1],
+            tau: 0.3,
+            weights: vec![1.0, 1.0],
+        };
+        assert_eq!(ds.fingerprint(), ds.clone().fingerprint());
+        // The contract the worker relies on to avoid re-encoding: the
+        // fingerprint equals FNV-1a over the frame's payload bytes
+        // (after the 4-byte length, version and tag).
+        let frame = Message::ShipDataset(ds.clone()).encode();
+        assert_eq!(ds.fingerprint(), fnv1a64(&frame[6..]));
+        let mut other = ds.clone();
+        other.tau = 0.30000000000000004; // one ulp away: different bits
+        assert_ne!(ds.fingerprint(), other.fingerprint());
+        let back = roundtrip(&Message::ShipDataset(ds.clone()));
+        let Message::ShipDataset(rt) = back else { panic!("wrong variant") };
+        assert_eq!(rt.fingerprint(), ds.fingerprint());
+        assert!(matches!(rt.into_problem(), Ok(ProblemPayload::Dense(_))));
+    }
+
+    #[test]
+    fn malformed_datasets_are_typed_not_panics() {
+        let base = WireDataset {
+            design: WireDesign::Csc {
+                n_rows: 3,
+                n_cols: 2,
+                indptr: vec![0, 1, 2],
+                indices: vec![0, 5], // out of bounds
+                values: vec![1.0, 2.0],
+            },
+            y: vec![0.0; 3],
+            group_sizes: vec![2],
+            tau: 0.5,
+            weights: vec![1.0],
+        };
+        assert!(matches!(base.clone().into_problem(), Err(WireError::Malformed(_))));
+        let mut no_groups = base.clone();
+        no_groups.group_sizes = vec![];
+        assert!(matches!(no_groups.into_problem(), Err(WireError::Malformed(_))));
+        let mut bad_tau = base;
+        bad_tau.tau = f64::NAN;
+        assert!(matches!(bad_tau.into_problem(), Err(WireError::Malformed(_))));
+    }
+
+    #[test]
+    fn zero_row_csc_dataset_roundtrips_and_builds() {
+        let ds = WireDataset {
+            design: WireDesign::Csc {
+                n_rows: 0,
+                n_cols: 3,
+                indptr: vec![0, 0, 0, 0],
+                indices: vec![],
+                values: vec![],
+            },
+            y: vec![],
+            group_sizes: vec![1, 2],
+            tau: 0.4,
+            weights: vec![1.0, 2.0f64.sqrt()],
+        };
+        let back = roundtrip(&Message::ShipDataset(ds));
+        let Message::ShipDataset(rt) = back else { panic!("wrong variant") };
+        let ProblemPayload::Csc(pb) = rt.into_problem().expect("valid zero-row dataset") else {
+            panic!("backend changed in transit")
+        };
+        assert_eq!(pb.n(), 0);
+        assert_eq!(pb.p(), 3);
+    }
+
+    #[test]
+    fn error_frames_roundtrip() {
+        let back = roundtrip(&Message::Error(RemoteError {
+            kind: RemoteErrorKind::UnknownDataset,
+            detail: "dataset 00deadbeef not shipped".to_string(),
+        }));
+        let Message::Error(e) = back else { panic!("wrong variant") };
+        assert_eq!(e.kind, RemoteErrorKind::UnknownDataset);
+        assert!(e.detail.contains("deadbeef"));
+    }
+
+    #[test]
+    fn reader_distinguishes_clean_close_from_mid_frame_close() {
+        let frame = Message::Ping { seq: 1 }.encode();
+        let mut whole: &[u8] = &frame;
+        assert!(matches!(Message::read_opt(&mut whole), Ok(Some(Message::Ping { seq: 1 }))));
+        let mut empty: &[u8] = &[];
+        assert!(matches!(Message::read_opt(&mut empty), Ok(None)));
+        let mut partial: &[u8] = &frame[..3];
+        assert!(matches!(Message::read_opt(&mut partial), Err(WireError::Io(_))));
+    }
+}

@@ -1,0 +1,392 @@
+//! Loopback integration tests for the distributed serving layer (L5):
+//! an in-process TCP worker fleet must produce results **bit-identical**
+//! to `solve_path_sharded` run locally — across backends, solvers and
+//! rules, under the cross-path interleaved schedule — and must never
+//! lose a shard to a killed worker (requeue onto survivors) or leak a
+//! fleet slot to a cancelled service job.
+
+use sgl::coordinator::metrics::Metrics;
+use sgl::coordinator::remote::{FleetConfig, RemoteFleet, WorkerServer};
+use sgl::coordinator::service::{
+    AnyProblem, JobStatus, ServiceConfig, SolveRequest, SolveService,
+};
+use sgl::coordinator::shard::{solve_batch_interleaved, solve_path_sharded, InterleavedJob};
+use sgl::data::synthetic::{generate, SyntheticConfig};
+use sgl::linalg::{CscMatrix, Design};
+use sgl::norms::sgl::omega;
+use sgl::screening::RuleKind;
+use sgl::solver::cd::SolveOptions;
+use sgl::solver::path::{DualHandoff, PathOptions, PathResult};
+use sgl::solver::problem::{lambda_grid, SglProblem};
+use sgl::solver::SolverKind;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+fn spawn_fleet(n: usize, metrics: Arc<Metrics>) -> (Vec<WorkerServer>, Arc<RemoteFleet>) {
+    let servers: Vec<WorkerServer> =
+        (0..n).map(|_| WorkerServer::bind("127.0.0.1:0").expect("bind worker")).collect();
+    let addrs: Vec<String> = servers.iter().map(|s| s.local_addr().to_string()).collect();
+    let fleet = Arc::new(
+        RemoteFleet::connect(&addrs, FleetConfig::default(), metrics).expect("connect fleet"),
+    );
+    (servers, fleet)
+}
+
+/// Planted-sparse instance with unit-norm `y` (absolute objective budgets).
+fn planted(seed: u64) -> Arc<SglProblem> {
+    let cfg = SyntheticConfig {
+        n: 60,
+        n_groups: 30,
+        group_size: 4,
+        gamma1: 5,
+        gamma2: 2,
+        seed,
+        ..Default::default()
+    };
+    let d = generate(&cfg);
+    let y_norm = d.dataset.y.iter().map(|v| v * v).sum::<f64>().sqrt().max(1e-300);
+    let y: Vec<f64> = d.dataset.y.iter().map(|v| v / y_norm).collect();
+    Arc::new(SglProblem::new(d.dataset.x, y, d.dataset.groups, 0.2))
+}
+
+fn csc_twin(pb: &SglProblem) -> Arc<SglProblem<CscMatrix>> {
+    Arc::new(SglProblem::new(
+        CscMatrix::from_dense(&pb.x),
+        pb.y.clone(),
+        pb.groups.clone(),
+        pb.tau,
+    ))
+}
+
+fn opts_for(rule: RuleKind, tol: f64, delta: f64, t_count: usize) -> PathOptions {
+    PathOptions {
+        delta,
+        t_count,
+        solve: SolveOptions {
+            rule,
+            tol,
+            max_epochs: 500_000,
+            record_history: false,
+            ..Default::default()
+        },
+    }
+}
+
+/// Local `solve_path_sharded` reference on the job's own backend.
+fn local_reference(job: &InterleavedJob) -> PathResult {
+    match &job.pb {
+        AnyProblem::Dense(p) => {
+            solve_path_sharded(p.as_ref(), &job.lambdas, &job.opts, job.solver, job.shards)
+        }
+        AnyProblem::Csc(p) => {
+            solve_path_sharded(p.as_ref(), &job.lambdas, &job.opts, job.solver, job.shards)
+        }
+    }
+}
+
+fn assert_bit_identical(tag: &str, got: &PathResult, want: &PathResult) {
+    assert_eq!(got.lambdas, want.lambdas, "{tag}: lambda grids");
+    assert_eq!(got.results.len(), want.results.len(), "{tag}: path length");
+    for (t, (a, b)) in want.results.iter().zip(&got.results).enumerate() {
+        assert_eq!(a.beta, b.beta, "{tag} t={t}: beta must be bit-identical");
+        assert_eq!(a.active.feature, b.active.feature, "{tag} t={t}: feature mask");
+        assert_eq!(a.active.group, b.active.group, "{tag} t={t}: group mask");
+        assert_eq!(a.epochs, b.epochs, "{tag} t={t}: epochs");
+        assert_eq!(a.converged, b.converged, "{tag} t={t}: convergence");
+    }
+}
+
+fn objective<D: Design>(pb: &SglProblem<D>, lambda: f64, beta: &[f64]) -> f64 {
+    let xb = pb.x.matvec(beta);
+    let r2: f64 = pb.y.iter().zip(&xb).map(|(y, v)| (y - v) * (y - v)).sum();
+    0.5 * r2 + lambda * omega(beta, &pb.groups, pb.tau, &pb.weights)
+}
+
+/// The tentpole equivalence: a mixed batch (dense+CSC × cd/ista/fista ×
+/// every rule) interleaved over a 2-worker loopback fleet is
+/// bit-identical to `solve_path_sharded` run locally, job by job.
+#[test]
+fn loopback_fleet_matches_local_sharded_across_backends_solvers_rules() {
+    let metrics = Arc::new(Metrics::new());
+    let (_servers, fleet) = spawn_fleet(2, metrics.clone());
+    let dense = planted(1);
+    let csc = csc_twin(&dense);
+
+    let mut jobs: Vec<InterleavedJob> = Vec::new();
+    // Every rule on the CD path, alternating backends, k=3 shards.
+    for (i, rule) in RuleKind::all().into_iter().enumerate() {
+        let (pb, lmax): (AnyProblem, f64) = if i % 2 == 0 {
+            (AnyProblem::Dense(dense.clone()), dense.lambda_max())
+        } else {
+            (AnyProblem::Csc(csc.clone()), csc.lambda_max())
+        };
+        jobs.push(InterleavedJob {
+            pb,
+            lambdas: lambda_grid(lmax, 1.2, 8),
+            opts: opts_for(rule, 1e-8, 1.2, 8),
+            solver: SolverKind::Cd,
+            shards: 3,
+            label: format!("cd/{}", rule.name()),
+        });
+    }
+    // The full-gradient solvers with the sequential rule on both
+    // backends (shallower, looser path: debug-profile time).
+    for solver in [SolverKind::Ista, SolverKind::Fista] {
+        for backend in 0..2 {
+            let (pb, lmax): (AnyProblem, f64) = if backend == 0 {
+                (AnyProblem::Dense(dense.clone()), dense.lambda_max())
+            } else {
+                (AnyProblem::Csc(csc.clone()), csc.lambda_max())
+            };
+            jobs.push(InterleavedJob {
+                pb,
+                lambdas: lambda_grid(lmax, 0.8, 5),
+                opts: opts_for(RuleKind::GapSafeSeq, 1e-7, 0.8, 5),
+                solver,
+                shards: 2,
+                label: format!("{}/{}", solver.name(), if backend == 0 { "dense" } else { "csc" }),
+            });
+        }
+    }
+
+    let slots = fleet.capacity();
+    assert_eq!(slots, 2);
+    let fleet_exec = |job: &InterleavedJob, grid: &[f64], h: Option<&DualHandoff>| {
+        fleet.solve_shard(&job.pb, grid, &job.opts, job.solver, h)
+    };
+    let out = solve_batch_interleaved(&jobs, slots, fleet_exec);
+    assert_eq!(out.len(), jobs.len());
+    for (job, got) in jobs.iter().zip(&out) {
+        let got = got.as_ref().unwrap_or_else(|e| panic!("{} failed: {e:#}", job.label));
+        assert_bit_identical(&job.label, got, &local_reference(job));
+    }
+
+    // Accounting: every shard solved exactly once, nothing in flight,
+    // each worker shipped each dataset at most once (2 datasets total).
+    let total_shards: u64 = jobs.iter().map(|j| j.shards as u64).sum();
+    assert_eq!(metrics.counter("fleet_shards_solved"), total_shards);
+    assert_eq!(metrics.counter("fleet_shards_requeued"), 0);
+    assert_eq!(metrics.counter("fleet_worker_disconnects"), 0);
+    assert!(metrics.counter("fleet_datasets_shipped") <= 4, "ship-once per worker");
+    assert!(metrics.counter("fleet_datasets_shipped") >= 2, "both datasets shipped");
+    assert_eq!(fleet.in_flight(), 0);
+}
+
+/// A path whose per-shard duration is a fixed epoch budget (the gap is
+/// checked only at epoch 0 and the tolerance is unreachable): remote
+/// shards run long enough to kill a worker mid-shard, deterministically,
+/// while staying bit-reproducible for the local comparison.
+fn slow_fixed_work_request(
+    pb: &Arc<SglProblem>,
+    fractions: &[f64],
+    shards: usize,
+    label: &str,
+) -> SolveRequest {
+    let epochs = if cfg!(debug_assertions) { 2_500 } else { 50_000 };
+    let lmax = pb.lambda_max();
+    SolveRequest {
+        label: label.to_string(),
+        lambdas: Some(fractions.iter().map(|f| f * lmax).collect()),
+        shards,
+        ..SolveRequest::new(
+            AnyProblem::Dense(pb.clone()),
+            PathOptions {
+                delta: 1.0,
+                t_count: fractions.len(),
+                solve: SolveOptions {
+                    tol: 1e-300,
+                    fce: usize::MAX,
+                    max_epochs: epochs,
+                    rule: RuleKind::None,
+                    record_history: false,
+                    ..Default::default()
+                },
+            },
+        )
+    }
+}
+
+fn wait_until(what: &str, deadline: Duration, mut cond: impl FnMut() -> bool) {
+    let t0 = Instant::now();
+    while !cond() {
+        assert!(t0.elapsed() < deadline, "timed out waiting for {what}");
+        std::thread::sleep(Duration::from_micros(500));
+    }
+}
+
+/// Fault injection: drop one worker's sockets while both workers hold an
+/// in-flight shard. The orphaned shard must be requeued onto the
+/// survivor, every path must complete with results matching local
+/// (objectives ≤ 1e-8 — in fact bit-identical, since re-solving a shard
+/// from its handoff is deterministic), and the retry must show up in the
+/// fleet metrics and the service's reaping counters.
+#[test]
+fn killed_worker_mid_shard_requeues_onto_survivor() {
+    let metrics = Arc::new(Metrics::new());
+    let (servers, fleet) = spawn_fleet(2, metrics.clone());
+    let svc = SolveService::with_fleet(
+        ServiceConfig { workers: 0, queue_depth: 16, result_capacity: 1, cache_capacity: 4 },
+        metrics.clone(),
+        fleet.clone(),
+    );
+    assert_eq!(svc.workers(), 2, "dispatch threads sized to fleet capacity");
+
+    let pb = planted(2);
+    // Two slow 4-shard paths pin both workers for the whole first shard;
+    // a fast real solve rides along behind them.
+    let j1 = svc.submit(slow_fixed_work_request(&pb, &[0.6, 0.5, 0.4, 0.3], 4, "slow-a")).unwrap();
+    let j2 = svc.submit(slow_fixed_work_request(&pb, &[0.55, 0.45, 0.35, 0.25], 4, "slow-b")).unwrap();
+    let real = SolveRequest {
+        label: "real".into(),
+        shards: 2,
+        ..SolveRequest::new(
+            AnyProblem::Dense(pb.clone()),
+            opts_for(RuleKind::GapSafeSeq, 1e-8, 1.2, 8),
+        )
+    };
+    let j3 = svc.submit(real).unwrap();
+
+    // Both workers demonstrably mid-shard → kill one of them.
+    wait_until("both workers mid-shard", Duration::from_secs(60), || fleet.in_flight() == 2);
+    servers[0].kill();
+
+    let r1 = svc.wait(j1).expect("slow-a completes on the survivor");
+    let r2 = svc.wait(j2).expect("slow-b completes on the survivor");
+    let r3 = svc.wait(j3).expect("real job completes on the survivor");
+
+    // Local references (bit-identical arithmetic, shard for shard).
+    let lmax = pb.lambda_max();
+    let slow_opts = |t: usize| PathOptions {
+        delta: 1.0,
+        t_count: t,
+        solve: SolveOptions {
+            tol: 1e-300,
+            fce: usize::MAX,
+            max_epochs: if cfg!(debug_assertions) { 2_500 } else { 50_000 },
+            rule: RuleKind::None,
+            record_history: false,
+            ..Default::default()
+        },
+    };
+    let g1: Vec<f64> = [0.6, 0.5, 0.4, 0.3].iter().map(|f| f * lmax).collect();
+    let g2: Vec<f64> = [0.55, 0.45, 0.35, 0.25].iter().map(|f| f * lmax).collect();
+    let w1 = solve_path_sharded(pb.as_ref(), &g1, &slow_opts(4), SolverKind::Cd, 4);
+    let w2 = solve_path_sharded(pb.as_ref(), &g2, &slow_opts(4), SolverKind::Cd, 4);
+    let g3 = lambda_grid(lmax, 1.2, 8);
+    let w3 = solve_path_sharded(
+        pb.as_ref(),
+        &g3,
+        &opts_for(RuleKind::GapSafeSeq, 1e-8, 1.2, 8),
+        SolverKind::Cd,
+        2,
+    );
+    assert_bit_identical("slow-a", &r1, &w1);
+    assert_bit_identical("slow-b", &r2, &w2);
+    assert_bit_identical("real", &r3, &w3);
+    for (res, want) in [(&r1, &w1), (&r2, &w2), (&r3, &w3)] {
+        for (t, (a, b)) in res.results.iter().zip(&want.results).enumerate() {
+            let lam = want.lambdas[t];
+            let d = (objective(pb.as_ref(), lam, &a.beta)
+                - objective(pb.as_ref(), lam, &b.beta))
+            .abs();
+            assert!(d <= 1e-8, "t={t}: objective diverged by {d:.2e}");
+        }
+    }
+
+    // The retry is visible end to end: one disconnect, at least one
+    // requeued shard, every shard solved exactly once overall, and the
+    // service reaped retrieved jobs past its capacity of 1.
+    assert_eq!(metrics.counter("fleet_worker_disconnects"), 1);
+    assert!(metrics.counter("fleet_shards_requeued") >= 1, "orphaned shard was requeued");
+    assert_eq!(metrics.counter("fleet_shards_solved"), 4 + 4 + 2);
+    assert_eq!(metrics.counter("service_completed"), 3);
+    assert_eq!(metrics.counter("service_failed"), 0);
+    assert!(metrics.counter("service_jobs_reaped") >= 1, "reaping accounts for retrieval");
+    assert_eq!(fleet.workers_alive(), 1);
+    assert_eq!(fleet.in_flight(), 0);
+}
+
+/// A worker that was dead before its first exchange: the shard planned
+/// for it must requeue onto the survivor — fully deterministic (the
+/// least-loaded pick tries worker 0 first).
+#[test]
+fn dead_on_arrival_worker_requeues_deterministically() {
+    let metrics = Arc::new(Metrics::new());
+    let (servers, fleet) = spawn_fleet(2, metrics.clone());
+    servers[0].kill();
+    let pb = planted(3);
+    let jobs: Vec<InterleavedJob> = (0..2)
+        .map(|i| InterleavedJob {
+            pb: AnyProblem::Dense(pb.clone()),
+            lambdas: lambda_grid(pb.lambda_max(), 1.0, 6),
+            opts: opts_for(RuleKind::GapSafeSeq, 1e-8, 1.0, 6),
+            solver: SolverKind::Cd,
+            shards: 3,
+            label: format!("job{i}"),
+        })
+        .collect();
+    let out = solve_batch_interleaved(&jobs, 2, |job, grid, h| {
+        fleet.solve_shard(&job.pb, grid, &job.opts, job.solver, h)
+    });
+    for (job, got) in jobs.iter().zip(&out) {
+        let got = got.as_ref().unwrap_or_else(|e| panic!("{} failed: {e:#}", job.label));
+        assert_bit_identical(&job.label, got, &local_reference(job));
+    }
+    assert_eq!(metrics.counter("fleet_worker_disconnects"), 1);
+    assert!(metrics.counter("fleet_shards_requeued") >= 1);
+    assert_eq!(metrics.counter("fleet_shards_solved"), 6);
+    // And with *no* survivors, the failure is a typed error, not a hang.
+    servers[1].kill();
+    let err = fleet
+        .solve_shard(
+            &AnyProblem::Dense(pb.clone()),
+            &lambda_grid(pb.lambda_max(), 1.0, 2),
+            &opts_for(RuleKind::GapSafe, 1e-6, 1.0, 2),
+            SolverKind::Cd,
+            None,
+        )
+        .expect_err("no survivors");
+    assert!(format!("{err:#}").contains("no surviving workers"), "{err:#}");
+}
+
+/// `Service::cancel` on a job whose shard is already dispatched to a
+/// remote worker must not leak the worker slot: the in-flight count
+/// returns to 0 once the discarded shard drains, and the slot serves the
+/// next job.
+#[test]
+fn cancel_of_dispatched_job_returns_the_fleet_slot() {
+    let metrics = Arc::new(Metrics::new());
+    let (_servers, fleet) = spawn_fleet(1, metrics.clone());
+    let svc = SolveService::with_fleet(
+        ServiceConfig { workers: 0, queue_depth: 8, ..Default::default() },
+        metrics.clone(),
+        fleet.clone(),
+    );
+    let pb = planted(4);
+    let victim = svc.submit(slow_fixed_work_request(&pb, &[0.5], 1, "victim")).unwrap();
+    wait_until("the shard to be dispatched", Duration::from_secs(60), || {
+        fleet.in_flight() == 1 && svc.poll(victim) == Some(JobStatus::Running)
+    });
+    assert!(svc.cancel(victim), "cancel must land while dispatched");
+    assert_eq!(svc.poll(victim), Some(JobStatus::Cancelled));
+    // The remote shard finishes and is discarded; the slot must drain.
+    wait_until("the fleet slot to drain", Duration::from_secs(60), || fleet.in_flight() == 0);
+    // The slot is reusable: a real job completes on it afterwards.
+    let next = svc
+        .submit(SolveRequest {
+            label: "after-cancel".into(),
+            ..SolveRequest::new(
+                AnyProblem::Dense(pb.clone()),
+                opts_for(RuleKind::GapSafe, 1e-6, 1.0, 4),
+            )
+        })
+        .unwrap();
+    let res = svc.wait(next).expect("slot serves the next job");
+    assert!(res.all_converged());
+    assert_eq!(fleet.in_flight(), 0);
+    assert_eq!(metrics.counter("service_cancelled"), 1);
+    // The cancelled job's only dispatched shard ran once; its
+    // continuation never entered the queue.
+    assert_eq!(metrics.counter("fleet_shards_solved"), 2);
+    assert_eq!(fleet.workers_alive(), 1, "cancel is not a worker failure");
+}

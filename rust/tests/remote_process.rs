@@ -1,0 +1,146 @@
+//! End-to-end over *real* worker processes: spawn two `sgl worker`
+//! children (the actual binary, talking over real loopback TCP), run a
+//! mixed sharded batch against them through the fleet, and require
+//! bit-identity with the local engine. CI runs this leg with
+//! `SGL_THREADS=2` to keep the runner honest about parallelism.
+
+use sgl::coordinator::metrics::Metrics;
+use sgl::coordinator::remote::{FleetConfig, RemoteFleet};
+use sgl::coordinator::service::AnyProblem;
+use sgl::coordinator::shard::{solve_batch_interleaved, solve_path_sharded, InterleavedJob};
+use sgl::data::synthetic::{generate, SyntheticConfig};
+use sgl::linalg::CscMatrix;
+use sgl::screening::RuleKind;
+use sgl::solver::cd::SolveOptions;
+use sgl::solver::path::PathOptions;
+use sgl::solver::problem::{lambda_grid, SglProblem};
+use sgl::solver::SolverKind;
+use std::io::{BufRead, BufReader};
+use std::process::{Child, Command, Stdio};
+use std::sync::Arc;
+use std::time::Duration;
+
+/// A spawned `sgl worker` child, killed on drop (panic-safe).
+struct WorkerProcess {
+    child: Child,
+    addr: String,
+}
+
+impl WorkerProcess {
+    fn spawn() -> WorkerProcess {
+        let exe = env!("CARGO_BIN_EXE_sgl");
+        let mut child = Command::new(exe)
+            .args(["worker", "--listen", "127.0.0.1:0"])
+            .stdout(Stdio::piped())
+            .stderr(Stdio::null())
+            .spawn()
+            .expect("spawn sgl worker");
+        // The worker announces its bound address as its first stdout
+        // line: `worker listening on 127.0.0.1:PORT`.
+        let stdout = child.stdout.take().expect("piped stdout");
+        let mut line = String::new();
+        BufReader::new(stdout).read_line(&mut line).expect("read announcement");
+        let addr = line
+            .trim()
+            .rsplit(' ')
+            .next()
+            .unwrap_or_else(|| panic!("unparsable worker announcement {line:?}"))
+            .to_string();
+        assert!(addr.contains(':'), "unparsable worker announcement {line:?}");
+        WorkerProcess { child, addr }
+    }
+}
+
+impl Drop for WorkerProcess {
+    fn drop(&mut self) {
+        let _ = self.child.kill();
+        let _ = self.child.wait();
+    }
+}
+
+#[test]
+fn two_worker_processes_serve_a_mixed_batch_bit_identically() {
+    let workers = [WorkerProcess::spawn(), WorkerProcess::spawn()];
+    let addrs: Vec<String> = workers.iter().map(|w| w.addr.clone()).collect();
+    let metrics = Arc::new(Metrics::new());
+    let fleet = RemoteFleet::connect(&addrs, FleetConfig::default(), metrics.clone())
+        .expect("connect to worker processes");
+    assert_eq!(fleet.capacity(), 2);
+    let alive = fleet.heartbeat(Duration::from_secs(10));
+    assert!(alive.iter().all(|(_, up)| *up), "{alive:?}");
+
+    let cfg = SyntheticConfig {
+        n: 50,
+        n_groups: 20,
+        group_size: 4,
+        gamma1: 4,
+        gamma2: 2,
+        seed: 17,
+        ..Default::default()
+    };
+    let d = generate(&cfg);
+    let dense =
+        Arc::new(SglProblem::new(d.dataset.x, d.dataset.y, d.dataset.groups, 0.25));
+    let csc = Arc::new(SglProblem::new(
+        CscMatrix::from_dense(&dense.x),
+        dense.y.clone(),
+        dense.groups.clone(),
+        dense.tau,
+    ));
+
+    let opts = |rule: RuleKind| PathOptions {
+        delta: 1.2,
+        t_count: 6,
+        solve: SolveOptions { rule, tol: 1e-8, record_history: false, ..Default::default() },
+    };
+    let jobs = vec![
+        InterleavedJob {
+            pb: AnyProblem::Dense(dense.clone()),
+            lambdas: lambda_grid(dense.lambda_max(), 1.2, 6),
+            opts: opts(RuleKind::GapSafeSeq),
+            solver: SolverKind::Cd,
+            shards: 3,
+            label: "dense/gap_safe_seq".into(),
+        },
+        InterleavedJob {
+            pb: AnyProblem::Csc(csc.clone()),
+            lambdas: lambda_grid(csc.lambda_max(), 1.2, 6),
+            opts: opts(RuleKind::GapSafe),
+            solver: SolverKind::Cd,
+            shards: 2,
+            label: "csc/gap_safe".into(),
+        },
+        InterleavedJob {
+            pb: AnyProblem::Csc(csc.clone()),
+            lambdas: lambda_grid(csc.lambda_max(), 1.2, 6),
+            opts: opts(RuleKind::GapSafeSeq),
+            solver: SolverKind::Cd,
+            shards: 3,
+            label: "csc/gap_safe_seq".into(),
+        },
+    ];
+
+    let out = solve_batch_interleaved(&jobs, fleet.capacity(), |job, grid, h| {
+        fleet.solve_shard(&job.pb, grid, &job.opts, job.solver, h)
+    });
+    for (job, got) in jobs.iter().zip(&out) {
+        let got = got.as_ref().unwrap_or_else(|e| panic!("{} failed: {e:#}", job.label));
+        let want = match &job.pb {
+            AnyProblem::Dense(p) => {
+                solve_path_sharded(p.as_ref(), &job.lambdas, &job.opts, job.solver, job.shards)
+            }
+            AnyProblem::Csc(p) => {
+                solve_path_sharded(p.as_ref(), &job.lambdas, &job.opts, job.solver, job.shards)
+            }
+        };
+        assert_eq!(got.lambdas, want.lambdas, "{}", job.label);
+        for (t, (a, b)) in want.results.iter().zip(&got.results).enumerate() {
+            assert_eq!(a.beta, b.beta, "{} t={t}: bit-identical over real TCP", job.label);
+            assert_eq!(a.active.feature, b.active.feature, "{} t={t}", job.label);
+            assert_eq!(a.epochs, b.epochs, "{} t={t}", job.label);
+        }
+    }
+    assert_eq!(metrics.counter("fleet_shards_solved"), 8);
+    assert_eq!(metrics.counter("fleet_worker_disconnects"), 0);
+    assert_eq!(fleet.in_flight(), 0);
+}

@@ -35,6 +35,7 @@ use sgl::solver::cd::SolveOptions;
 use sgl::solver::path::{solve_path_on_grid, PathBatch, PathBatchJob, PathOptions};
 use sgl::solver::problem::{lambda_grid, SglProblem};
 use sgl::solver::sweep::SweepMode;
+use sgl::util::json::Json;
 use sgl::util::pool::{default_threads, resolve_threads};
 use sgl::util::timer::Stopwatch;
 use std::sync::Arc;
@@ -131,6 +132,7 @@ fn main() {
     assert!(max_div <= 1e-7, "rules disagree beyond budget: {max_div:.2e}");
 
     println!("\nlabel,seconds,epochs,converged  (threaded run)");
+    let mut jobs_json = Vec::new();
     for (job, path) in batch.jobs().iter().zip(&threaded) {
         println!(
             "{},{:.4},{},{}",
@@ -139,15 +141,40 @@ fn main() {
             path.total_epochs(),
             path.all_converged()
         );
+        jobs_json.push(
+            Json::obj()
+                .with("label", job.label.clone())
+                .with("seconds", path.total_s)
+                .with("epochs", path.total_epochs())
+                .with("converged", path.all_converged()),
+        );
     }
 
-    bench_backends(paper);
-    bench_single_path_latency(paper);
+    let batch_json = Json::obj()
+        .with("jobs", batch.len())
+        .with("threads", threads)
+        .with("serial_s", t_serial)
+        .with("threaded_s", t_threaded)
+        .with("bit_identical", identical)
+        .with("max_objective_divergence", max_div)
+        .with("per_job", Json::Arr(jobs_json));
+    let backends_json = bench_backends(paper);
+    let latency_json = bench_single_path_latency(paper);
+
+    // Machine-readable summary next to the printed report, for tracking
+    // bench results across commits.
+    let out = Json::obj()
+        .with("scale", if paper { "paper" } else { "small" })
+        .with("path_batch", batch_json)
+        .with("backends", backends_json)
+        .with("single_path_latency", latency_json);
+    std::fs::write("BENCH_path_batch.json", out.pretty()).expect("write bench json");
+    println!("\nwrote BENCH_path_batch.json");
 }
 
 /// Dense vs CSC on a ~1%-density design: same data, same λ-grid, same
 /// sequential GAP-safe rule; only the backend differs.
-fn bench_backends(paper: bool) {
+fn bench_backends(paper: bool) -> Json {
     let cfg = SparseSyntheticConfig {
         n: 100,
         n_groups: if paper { 2000 } else { 500 },
@@ -222,11 +249,17 @@ fn bench_backends(paper: bool) {
         "CSC backend should win on a {:.2}%-density design ({t_csc:.3}s vs {t_dense:.3}s)",
         100.0 * pb_csc.x.density()
     );
+    Json::obj()
+        .with("p", pb_csc.p())
+        .with("density", pb_csc.x.density())
+        .with("dense_s", t_dense)
+        .with("csc_s", t_csc)
+        .with("max_objective_divergence", max_div)
 }
 
 /// Single-path latency: serial cyclic sweep vs the intra-path parallel
 /// sweep layer on one active-heavy p ≥ 5000 path.
-fn bench_single_path_latency(paper: bool) {
+fn bench_single_path_latency(paper: bool) -> Json {
     let cfg = SyntheticConfig {
         n: if paper { 200 } else { 150 },
         n_groups: if paper { 1000 } else { 550 },
@@ -311,4 +344,10 @@ fn bench_single_path_latency(paper: bool) {
     } else {
         println!("single hardware thread: skipping the wall-clock assertion");
     }
+    Json::obj()
+        .with("p", pb.p())
+        .with("sweep_threads", threads)
+        .with("serial_s", t_serial)
+        .with("parallel_s", t_parallel)
+        .with("max_objective_divergence", max_div)
 }

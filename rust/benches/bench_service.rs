@@ -43,6 +43,7 @@ use sgl::solver::cd::SolveOptions;
 use sgl::solver::path::{solve_path_on_grid, PathOptions};
 use sgl::solver::problem::{lambda_grid, SglProblem};
 use sgl::solver::SolverKind;
+use sgl::util::json::Json;
 use sgl::util::timer::Stopwatch;
 use std::sync::Arc;
 
@@ -55,12 +56,21 @@ fn unit_norm_problem(cfg: &SparseSyntheticConfig, tau: f64) -> Arc<SglProblem<Cs
 
 fn main() {
     let paper = std::env::var("SGL_BENCH_SCALE").as_deref() == Ok("paper");
-    throughput_and_cache(paper);
-    sharded_vs_monolithic(paper);
-    fleet_interleaved_vs_serialized(paper);
+    let throughput = throughput_and_cache(paper);
+    let sharding = sharded_vs_monolithic(paper);
+    let fleet = fleet_interleaved_vs_serialized(paper);
+    // Machine-readable summary next to the printed report, for tracking
+    // bench results across commits.
+    let out = Json::obj()
+        .with("scale", if paper { "paper" } else { "small" })
+        .with("throughput", throughput)
+        .with("sharding", sharding)
+        .with("fleet", fleet);
+    std::fs::write("BENCH_service.json", out.pretty()).expect("write bench json");
+    println!("\nwrote BENCH_service.json");
 }
 
-fn throughput_and_cache(paper: bool) {
+fn throughput_and_cache(paper: bool) -> Json {
     let cfg = SparseSyntheticConfig {
         n: 100,
         n_groups: if paper { 1000 } else { 300 },
@@ -154,9 +164,17 @@ fn throughput_and_cache(paper: bool) {
          (vs {secs:.3}s solved, {:.0}x)",
         secs / dup_secs.max(1e-12)
     );
+    Json::obj()
+        .with("jobs", n_jobs)
+        .with("workers", svc.workers())
+        .with("solve_s", secs)
+        .with("duplicate_s", dup_secs)
+        .with("queue_wait_mean_s", wait.mean())
+        .with("job_latency_mean_s", lat.mean())
+        .with("cache_hits", m.counter("service_cache_hits") as i64)
 }
 
-fn sharded_vs_monolithic(paper: bool) {
+fn sharded_vs_monolithic(paper: bool) -> Json {
     let cfg = SparseSyntheticConfig {
         n: 100,
         n_groups: if paper { 1000 } else { 550 },
@@ -229,6 +247,12 @@ fn sharded_vs_monolithic(paper: bool) {
         assert_eq!(a.beta, b.beta, "service pipeline must match monolithic");
     }
     println!("sharded via service:    {t_svc:>8.3}s  (end-to-end, incl. queue)");
+    Json::obj()
+        .with("p", pb.p())
+        .with("monolithic_s", t_mono)
+        .with("sharded_s", t_shard)
+        .with("via_service_s", t_svc)
+        .with("max_objective_divergence", max_div)
 }
 
 /// Cross-path interleaving on a loopback 2-worker fleet: a batch of
@@ -236,7 +260,7 @@ fn sharded_vs_monolithic(paper: bool) {
 /// shards at a time), because the ready-queue scheduler keeps every
 /// worker busy with *other* paths' shards while a path waits on its own
 /// handoff chain.
-fn fleet_interleaved_vs_serialized(paper: bool) {
+fn fleet_interleaved_vs_serialized(paper: bool) -> Json {
     let cfg = SparseSyntheticConfig {
         n: 100,
         n_groups: if paper { 1000 } else { 250 },
@@ -337,4 +361,10 @@ fn fleet_interleaved_vs_serialized(paper: bool) {
         println!("(single core: skipping the wall-clock assertion)");
     }
     assert_eq!(metrics.counter("fleet_worker_disconnects"), 0);
+    Json::obj()
+        .with("workers", 2usize)
+        .with("paths", jobs.len())
+        .with("shards", shards)
+        .with("serialized_s", t_serial)
+        .with("interleaved_s", t_inter)
 }

@@ -8,6 +8,7 @@
 pub mod toml;
 
 use crate::screening::RuleKind;
+use crate::solver::datafit::FitKind;
 use crate::solver::sweep::SweepMode;
 use crate::solver::SolverKind;
 use anyhow::{bail, ensure, Context, Result};
@@ -85,6 +86,9 @@ pub struct RunConfig {
     pub design: DesignBackend,
     /// Inner solver (`[solver] algo = "cd" | "ista" | "fista"`).
     pub algo: SolverKind,
+    /// Loss the path is fit under
+    /// (`[solver] datafit = "quadratic" | "logistic"`).
+    pub datafit: FitKind,
     pub tau: f64,
     pub tol: f64,
     pub fce: usize,
@@ -140,6 +144,7 @@ impl Default for RunConfig {
             dataset: DatasetChoice::Synthetic,
             design: DesignBackend::Dense,
             algo: SolverKind::Cd,
+            datafit: FitKind::Quadratic,
             tau: 0.2,
             tol: 1e-8,
             fce: 10,
@@ -281,6 +286,10 @@ impl RunConfig {
             cfg.rule = RuleKind::from_name(&rule)
                 .with_context(|| format!("unknown screening rule {rule:?}"))?;
         }
+        if let Some(df) = doc.get_str("solver", "datafit") {
+            cfg.datafit = FitKind::from_name(&df)
+                .with_context(|| format!("unknown datafit {df:?} (quadratic|logistic)"))?;
+        }
         if let Some(sweep) = doc.get_str("solver", "sweep") {
             cfg.sweep = SweepMode::from_name(&sweep)
                 .with_context(|| format!("unknown sweep mode {sweep:?} (serial|parallel)"))?;
@@ -310,6 +319,21 @@ impl RunConfig {
         }
         if self.delta < 0.0 {
             bail!("delta must be nonnegative");
+        }
+        // The static/dynamic/DST3 spheres hard-code the least-squares
+        // dual geometry (`make_rule` would panic mid-path): reject the
+        // combination at config time instead.
+        if self.datafit == FitKind::Logistic
+            && !matches!(
+                self.rule,
+                RuleKind::None | RuleKind::GapSafe | RuleKind::GapSafeSeq
+            )
+        {
+            bail!(
+                "screening rule {:?} is least-squares only; logistic runs take \
+                 none|gap_safe|gap_safe_seq",
+                self.rule.name()
+            );
         }
         if self.service_queue_depth == 0 {
             bail!("service queue_depth must be >= 1");
@@ -440,6 +464,26 @@ rho = 0.9
     fn parses_sequential_rule() {
         let c = RunConfig::from_toml_str("[solver]\nrule = \"gap_safe_seq\"\n").unwrap();
         assert_eq!(c.rule, RuleKind::GapSafeSeq);
+    }
+
+    #[test]
+    fn parses_datafit_and_gates_quadratic_only_rules() {
+        let c = RunConfig::from_toml_str("[solver]\ndatafit = \"logistic\"\n").unwrap();
+        assert_eq!(c.datafit, FitKind::Logistic);
+        // Default stays quadratic.
+        assert_eq!(RunConfig::default().datafit, FitKind::Quadratic);
+        // Logistic works with the gap rules and the no-screening baseline…
+        for rule in ["none", "gap_safe", "gap_safe_seq"] {
+            let text = format!("[solver]\ndatafit = \"logistic\"\nrule = \"{rule}\"\n");
+            assert!(RunConfig::from_toml_str(&text).is_ok(), "{rule}");
+        }
+        // …but the least-squares-only spheres are rejected at parse time.
+        for rule in ["static", "dynamic", "dst3"] {
+            let text = format!("[solver]\ndatafit = \"logistic\"\nrule = \"{rule}\"\n");
+            let err = RunConfig::from_toml_str(&text).unwrap_err();
+            assert!(format!("{err:#}").contains("least-squares only"), "{rule}: {err:#}");
+        }
+        assert!(RunConfig::from_toml_str("[solver]\ndatafit = \"poisson\"\n").is_err());
     }
 
     #[test]

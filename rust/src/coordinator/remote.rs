@@ -36,13 +36,14 @@ use super::service::{panic_message, AnyProblem};
 use crate::solver::path::{DualHandoff, PathOptions, PathResult};
 use crate::solver::sweep::SweepMode;
 use crate::solver::SolverKind;
+use crate::util::lru::LruCache;
 use crate::util::pool::resolve_threads;
 use crate::util::wire::{
-    Message, ProblemPayload, RemoteError, RemoteErrorKind, ShardRequest, WireDataset,
-    WireError,
+    Message, ProblemPayload, RemoteError, RemoteErrorKind, ShardRequest, WireDatafit,
+    WireDataset, WireError,
 };
 use anyhow::{bail, ensure, Context, Result};
-use std::collections::{HashMap, HashSet};
+use std::collections::HashSet;
 use std::io::Write;
 use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream};
 use std::panic::{catch_unwind, AssertUnwindSafe};
@@ -62,47 +63,9 @@ use std::time::Duration;
 const WORKER_DATASET_CAPACITY: usize = 64;
 
 /// Worker-side dataset store: fingerprint → problem, least-recently-used
-/// bounded so a long-lived worker (or a hostile peer shipping datasets
-/// in a loop) cannot grow it without limit.
-struct DatasetStore {
-    map: HashMap<u64, (AnyProblem, u64)>,
-    tick: u64,
-}
-
-impl DatasetStore {
-    fn new() -> Self {
-        DatasetStore { map: HashMap::new(), tick: 0 }
-    }
-
-    fn contains(&self, fp: u64) -> bool {
-        self.map.contains_key(&fp)
-    }
-
-    /// Fetch (and refresh the recency of) a dataset.
-    fn get(&mut self, fp: u64) -> Option<AnyProblem> {
-        self.tick += 1;
-        let tick = self.tick;
-        self.map.get_mut(&fp).map(|(pb, used)| {
-            *used = tick;
-            pb.clone()
-        })
-    }
-
-    fn insert(&mut self, fp: u64, pb: AnyProblem) {
-        self.tick += 1;
-        let tick = self.tick;
-        self.map.insert(fp, (pb, tick));
-        while self.map.len() > WORKER_DATASET_CAPACITY {
-            let victim = self
-                .map
-                .iter()
-                .min_by_key(|(_, (_, used))| *used)
-                .map(|(k, _)| *k)
-                .expect("store is non-empty above capacity");
-            self.map.remove(&victim);
-        }
-    }
-}
+/// bounded (the shared [`LruCache`]) so a long-lived worker (or a hostile
+/// peer shipping datasets in a loop) cannot grow it without limit.
+type DatasetStore = LruCache<u64, AnyProblem>;
 
 /// A remote solve worker: accept loop + per-connection serve threads over
 /// a shared fingerprint-keyed, LRU-bounded dataset store. In-process
@@ -124,7 +87,7 @@ impl WorkerServer {
         let local = listener.local_addr().context("reading bound address")?;
         let shutdown = Arc::new(AtomicBool::new(false));
         let conns: Arc<Mutex<Vec<(u64, TcpStream)>>> = Arc::default();
-        let store = Arc::new(Mutex::new(DatasetStore::new()));
+        let store = Arc::new(Mutex::new(DatasetStore::new(WORKER_DATASET_CAPACITY)));
         let accept = {
             let shutdown = shutdown.clone();
             let conns = conns.clone();
@@ -254,7 +217,7 @@ fn handle_request(msg: Message, body: &[u8], store: &Mutex<DatasetStore>) -> Mes
         Message::Ping { seq } => Message::Pong { seq },
         Message::HasDataset { fingerprint } => Message::DatasetKnown {
             fingerprint,
-            known: store.lock().unwrap().contains(fingerprint),
+            known: store.lock().unwrap().contains(&fingerprint),
         },
         Message::ShipDataset(ds) => {
             // The payload bytes are the canonical encoding, so hashing
@@ -268,6 +231,12 @@ fn handle_request(msg: Message, body: &[u8], store: &Mutex<DatasetStore>) -> Mes
                     let pb = match payload {
                         ProblemPayload::Dense(p) => AnyProblem::Dense(Arc::new(p)),
                         ProblemPayload::Csc(p) => AnyProblem::Csc(Arc::new(p)),
+                        ProblemPayload::DenseLogistic(p) => {
+                            AnyProblem::DenseLogistic(Arc::new(p))
+                        }
+                        ProblemPayload::CscLogistic(p) => {
+                            AnyProblem::CscLogistic(Arc::new(p))
+                        }
                     };
                     store.lock().unwrap().insert(fingerprint, pb);
                     Message::DatasetKnown { fingerprint, known: true }
@@ -281,7 +250,7 @@ fn handle_request(msg: Message, body: &[u8], store: &Mutex<DatasetStore>) -> Mes
         Message::SolveShard(req) => {
             // Clone the `Arc` out and solve off-lock: connections solve
             // concurrently against the shared read-only store.
-            let pb = store.lock().unwrap().get(req.dataset);
+            let pb = store.lock().unwrap().get(&req.dataset).cloned();
             match pb {
                 None => Message::Error(RemoteError {
                     kind: RemoteErrorKind::UnknownDataset,
@@ -290,6 +259,21 @@ fn handle_request(msg: Message, body: &[u8], store: &Mutex<DatasetStore>) -> Mes
                         req.dataset
                     ),
                 }),
+                // The request names the datafit it expects to solve
+                // under; a mismatch against the stored dataset means a
+                // stale store or a fingerprint collision — answer typed
+                // rather than silently solving the wrong loss.
+                Some(pb) if req.datafit != wire_datafit(&pb) => {
+                    Message::Error(RemoteError {
+                        kind: RemoteErrorKind::BadRequest,
+                        detail: format!(
+                            "datafit mismatch: request expects {}, dataset {:016x} holds {}",
+                            req.datafit.name(),
+                            req.dataset,
+                            wire_datafit(&pb).name()
+                        ),
+                    })
+                }
                 Some(pb) => {
                     let ShardRequest { lambdas, solver, opts, handoff, .. } = req;
                     let solved = catch_unwind(AssertUnwindSafe(|| {
@@ -349,11 +333,25 @@ fn total_busy(st: &FleetShared) -> usize {
     st.workers.iter().map(|w| w.busy).sum()
 }
 
-/// Snapshot a problem into its transferable form on the matching backend.
+/// Snapshot a problem into its transferable form on the matching backend
+/// (the datafit rides along inside the [`WireDataset`]).
 fn wire_dataset(pb: &AnyProblem) -> WireDataset {
     match pb {
         AnyProblem::Dense(p) => WireDataset::from_dense(p),
         AnyProblem::Csc(p) => WireDataset::from_csc(p),
+        AnyProblem::DenseLogistic(p) => WireDataset::from_dense(p),
+        AnyProblem::CscLogistic(p) => WireDataset::from_csc(p),
+    }
+}
+
+/// The problem's datafit in transferable form, for the request-side tag
+/// the worker cross-checks against its stored dataset.
+fn wire_datafit(pb: &AnyProblem) -> WireDatafit {
+    match pb {
+        AnyProblem::Dense(p) => WireDatafit::of(&p.datafit),
+        AnyProblem::Csc(p) => WireDatafit::of(&p.datafit),
+        AnyProblem::DenseLogistic(p) => WireDatafit::of(&p.datafit),
+        AnyProblem::CscLogistic(p) => WireDatafit::of(&p.datafit),
     }
 }
 
@@ -370,15 +368,11 @@ struct FingerprintEntry {
     /// clone — evicting the entry drops the pin together with the key it
     /// guards, so a recycled pointer can never alias a stale mapping).
     _pb: AnyProblem,
-    last_used: u64,
 }
 
-#[derive(Default)]
-struct DatasetRegistry {
-    /// Problem-instance identity → content fingerprint.
-    by_identity: HashMap<(u8, usize), FingerprintEntry>,
-    tick: u64,
-}
+/// Problem-instance identity → content fingerprint, LRU-bounded by
+/// [`FLEET_FINGERPRINT_CAPACITY`].
+type DatasetRegistry = LruCache<(u8, usize), FingerprintEntry>;
 
 /// A leased exchange channel: exclusive use of one worker connection.
 struct Lease {
@@ -438,7 +432,7 @@ impl RemoteFleet {
             slot_free: Condvar::new(),
             conns_per_worker,
             metrics,
-            datasets: Mutex::new(DatasetRegistry::default()),
+            datasets: Mutex::new(DatasetRegistry::new(FLEET_FINGERPRINT_CAPACITY)),
             ping_seq: AtomicU64::new(0),
         })
     }
@@ -496,6 +490,7 @@ impl RemoteFleet {
         }
         let req_frame = Message::SolveShard(ShardRequest {
             dataset: fp,
+            datafit: wire_datafit(pb),
             lambdas: lambdas.to_vec(),
             solver,
             opts,
@@ -574,32 +569,19 @@ impl RemoteFleet {
     /// encode).
     fn register(&self, pb: &AnyProblem) -> u64 {
         let key = pb.identity();
-        {
-            let mut reg = self.datasets.lock().unwrap();
-            reg.tick += 1;
-            let tick = reg.tick;
-            if let Some(e) = reg.by_identity.get_mut(&key) {
-                e.last_used = tick;
-                return e.fp;
-            }
+        if let Some(e) = self.datasets.lock().unwrap().get(&key) {
+            return e.fp;
         }
         // Fingerprinting encodes the dataset once; done off-lock so a
         // huge registration doesn't stall concurrent exchanges.
         let fp = wire_dataset(pb).fingerprint();
-        let mut reg = self.datasets.lock().unwrap();
-        reg.tick += 1;
-        let tick = reg.tick;
-        reg.by_identity
-            .insert(key, FingerprintEntry { fp, _pb: pb.clone(), last_used: tick });
-        while reg.by_identity.len() > FLEET_FINGERPRINT_CAPACITY {
-            let victim = reg
-                .by_identity
-                .iter()
-                .min_by_key(|(_, e)| e.last_used)
-                .map(|(k, _)| *k)
-                .expect("registry is non-empty above capacity");
-            reg.by_identity.remove(&victim);
-            self.metrics.incr("fleet_fingerprint_evictions", 1);
+        let evicted = self
+            .datasets
+            .lock()
+            .unwrap()
+            .insert(key, FingerprintEntry { fp, _pb: pb.clone() });
+        if evicted > 0 {
+            self.metrics.incr("fleet_fingerprint_evictions", evicted as u64);
         }
         fp
     }
@@ -879,6 +861,7 @@ mod tests {
         let mut s = TcpStream::connect(server.local_addr()).expect("connect");
         Message::SolveShard(ShardRequest {
             dataset: 0xdead_beef,
+            datafit: WireDatafit::Quadratic { ridge: 0.0 },
             lambdas: vec![1.0],
             solver: SolverKind::Cd,
             opts: PathOptions::default(),
@@ -898,6 +881,35 @@ mod tests {
         let Message::Error(e) = reply else { panic!("expected error frame") };
         assert_eq!(e.kind, RemoteErrorKind::BadRequest);
         assert!(e.detail.contains("version"), "{}", e.detail);
+    }
+
+    #[test]
+    fn datafit_mismatch_is_a_typed_bad_request() {
+        let server = WorkerServer::bind("127.0.0.1:0").expect("bind");
+        let pb = small_problem(9);
+        let any = AnyProblem::Dense(pb.clone());
+        let ds = wire_dataset(&any);
+        let fp = ds.fingerprint();
+        let mut s = TcpStream::connect(server.local_addr()).expect("connect");
+        Message::ShipDataset(ds).write_to(&mut s).expect("ship");
+        let ack = Message::read_from(&mut s).expect("ack");
+        assert!(matches!(ack, Message::DatasetKnown { known: true, .. }), "{ack:?}");
+        // The stored dataset is quadratic; a logistic-tagged request for
+        // the same fingerprint must be rejected, not silently solved.
+        Message::SolveShard(ShardRequest {
+            dataset: fp,
+            datafit: WireDatafit::Logistic,
+            lambdas: vec![pb.lambda_max() * 0.5],
+            solver: SolverKind::Cd,
+            opts: PathOptions::default(),
+            handoff: None,
+        })
+        .write_to(&mut s)
+        .expect("write");
+        let reply = Message::read_from(&mut s).expect("reply");
+        let Message::Error(e) = reply else { panic!("expected error frame, got {reply:?}") };
+        assert_eq!(e.kind, RemoteErrorKind::BadRequest);
+        assert!(e.detail.contains("datafit mismatch"), "{}", e.detail);
     }
 
     #[test]

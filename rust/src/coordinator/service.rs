@@ -28,25 +28,28 @@
 //! - [`Metrics`] gains queue-depth gauges and per-job latency/queue-wait
 //!   timers ([`Metrics::observe_secs`]).
 //!
-//! Requests are backend-heterogeneous through [`AnyProblem`]: one service
-//! instance serves dense and CSC problems (and any mix of
-//! rule/tolerance/solver) side by side.
+//! Requests are backend- and datafit-heterogeneous through
+//! [`AnyProblem`]: one service instance serves dense and CSC problems,
+//! least-squares and logistic fits (and any mix of rule/tolerance/solver)
+//! side by side.
 
 use super::metrics::Metrics;
 use super::remote::RemoteFleet;
 use super::shard::{plan_shards, stitch};
 use crate::linalg::{CscMatrix, Matrix};
+use crate::solver::datafit::{FitKind, Logistic};
 use crate::solver::path::{
     solve_path_with_handoff, DualHandoff, PathOptions, PathResult,
 };
 use crate::solver::problem::{lambda_grid, SglProblem};
 use crate::solver::SolverKind;
+use crate::util::lru::LruCache;
 use crate::util::pool::{resolve_threads, WorkerPool};
 use crate::util::timer::Stopwatch;
 use anyhow::{bail, Result};
 use std::cmp::Ordering as CmpOrdering;
 use std::collections::hash_map::DefaultHasher;
-use std::collections::{BTreeMap, BinaryHeap, HashMap, VecDeque};
+use std::collections::{BTreeMap, BinaryHeap, VecDeque};
 use std::fmt;
 use std::hash::{Hash, Hasher};
 use std::panic::{catch_unwind, AssertUnwindSafe};
@@ -81,21 +84,32 @@ impl Default for ServiceConfig {
     }
 }
 
-/// A problem instance on either design backend. The service is
-/// deliberately *not* generic over [`crate::linalg::Design`]: one
-/// instance serves mixed dense/CSC traffic, which is what a shared front
-/// end sees.
+/// A problem instance on either design backend under either datafit. The
+/// service is deliberately *not* generic over
+/// [`crate::linalg::Design`] / [`crate::solver::datafit::Datafit`]: one
+/// instance serves mixed dense/CSC, regression/classification traffic,
+/// which is what a shared front end sees.
 #[derive(Clone, Debug)]
 pub enum AnyProblem {
     Dense(Arc<SglProblem<Matrix>>),
     Csc(Arc<SglProblem<CscMatrix>>),
+    DenseLogistic(Arc<SglProblem<Matrix, Logistic>>),
+    CscLogistic(Arc<SglProblem<CscMatrix, Logistic>>),
 }
 
 impl AnyProblem {
     pub fn backend_name(&self) -> &'static str {
         match self {
-            AnyProblem::Dense(_) => "dense",
-            AnyProblem::Csc(_) => "csc",
+            AnyProblem::Dense(_) | AnyProblem::DenseLogistic(_) => "dense",
+            AnyProblem::Csc(_) | AnyProblem::CscLogistic(_) => "csc",
+        }
+    }
+
+    /// Which loss this problem is fit under (see [`FitKind::name`]).
+    pub fn datafit_kind(&self) -> FitKind {
+        match self {
+            AnyProblem::Dense(_) | AnyProblem::Csc(_) => FitKind::Quadratic,
+            AnyProblem::DenseLogistic(_) | AnyProblem::CscLogistic(_) => FitKind::Logistic,
         }
     }
 
@@ -103,6 +117,8 @@ impl AnyProblem {
         match self {
             AnyProblem::Dense(p) => p.n(),
             AnyProblem::Csc(p) => p.n(),
+            AnyProblem::DenseLogistic(p) => p.n(),
+            AnyProblem::CscLogistic(p) => p.n(),
         }
     }
 
@@ -110,36 +126,42 @@ impl AnyProblem {
         match self {
             AnyProblem::Dense(p) => p.p(),
             AnyProblem::Csc(p) => p.p(),
+            AnyProblem::DenseLogistic(p) => p.p(),
+            AnyProblem::CscLogistic(p) => p.p(),
         }
     }
 
-    /// `λ_max` of the underlying problem (one `Xᵀy` product — workers
-    /// call this off-lock when deriving a grid).
+    /// `λ_max` of the underlying problem (one `Xᵀ·zero_residual(y)`
+    /// product — workers call this off-lock when deriving a grid).
     pub fn lambda_max(&self) -> f64 {
         match self {
             AnyProblem::Dense(p) => p.lambda_max(),
             AnyProblem::Csc(p) => p.lambda_max(),
+            AnyProblem::DenseLogistic(p) => p.lambda_max(),
+            AnyProblem::CscLogistic(p) => p.lambda_max(),
         }
     }
 
-    /// Dataset identity for the fingerprint cache: the backend tag plus
-    /// the `Arc` pointer. Two requests share an identity iff they share
-    /// the problem *instance* — the cache holds a clone of the `Arc`, so
-    /// the pointer stays pinned for the cache entry's lifetime. (The
-    /// remote fleet keys its dataset registry the same way, and pins a
-    /// clone for the same reason.)
+    /// Dataset identity for the fingerprint cache: the backend+datafit
+    /// tag plus the `Arc` pointer. Two requests share an identity iff
+    /// they share the problem *instance* — the cache holds a clone of the
+    /// `Arc`, so the pointer stays pinned for the cache entry's lifetime.
+    /// (The remote fleet keys its dataset registry the same way, and pins
+    /// a clone for the same reason.)
     pub(crate) fn identity(&self) -> (u8, usize) {
         match self {
             AnyProblem::Dense(p) => (0, Arc::as_ptr(p) as usize),
             AnyProblem::Csc(p) => (1, Arc::as_ptr(p) as *const u8 as usize),
+            AnyProblem::DenseLogistic(p) => (2, Arc::as_ptr(p) as usize),
+            AnyProblem::CscLogistic(p) => (3, Arc::as_ptr(p) as *const u8 as usize),
         }
     }
 
-    /// Solve one explicit λ-range on this problem's backend, resuming
-    /// from (and producing) a [`DualHandoff`]. The single dispatch point
-    /// every executor — the local worker pool, the remote worker's serve
-    /// loop, the cross-path scheduler — funnels through, so all of them
-    /// run the identical arithmetic.
+    /// Solve one explicit λ-range on this problem's backend and datafit,
+    /// resuming from (and producing) a [`DualHandoff`]. The single
+    /// dispatch point every executor — the local worker pool, the remote
+    /// worker's serve loop, the cross-path scheduler — funnels through,
+    /// so all of them run the identical arithmetic.
     pub fn solve_range(
         &self,
         lambdas: &[f64],
@@ -150,6 +172,12 @@ impl AnyProblem {
         match self {
             AnyProblem::Dense(p) => solve_path_with_handoff(p, lambdas, opts, solver, handoff),
             AnyProblem::Csc(p) => solve_path_with_handoff(p, lambdas, opts, solver, handoff),
+            AnyProblem::DenseLogistic(p) => {
+                solve_path_with_handoff(p, lambdas, opts, solver, handoff)
+            }
+            AnyProblem::CscLogistic(p) => {
+                solve_path_with_handoff(p, lambdas, opts, solver, handoff)
+            }
         }
     }
 }
@@ -365,21 +393,18 @@ struct CacheEntry {
     /// reused by a different problem while the entry exists.
     _pb: AnyProblem,
     result: Arc<PathResult>,
-    /// Recency tick (from `Shared::cache_tick`) for LRU eviction.
-    last_used: u64,
 }
 
 struct Shared {
     queue: BinaryHeap<QueueItem>,
     jobs: BTreeMap<JobId, Job>,
-    cache: HashMap<CacheKey, CacheEntry>,
+    /// Solved-path fingerprint cache, bounded by
+    /// [`ServiceConfig::cache_capacity`] with LRU eviction (the shared
+    /// [`LruCache`] also backs the remote workers' dataset stores).
+    cache: LruCache<CacheKey, CacheEntry>,
     depth: usize,
     /// Bound on retained terminal jobs (see [`ServiceConfig::result_capacity`]).
     result_capacity: usize,
-    /// Bound on fingerprint-cache entries (LRU beyond it).
-    cache_capacity: usize,
-    /// Monotone recency clock for the cache's LRU order.
-    cache_tick: u64,
     /// Terminal jobs in completion order — the reaping scan order.
     terminal: VecDeque<JobId>,
     /// Jobs currently in state `Queued` (submitted, never started). The
@@ -457,11 +482,9 @@ impl SolveService {
             state: Mutex::new(Shared {
                 queue: BinaryHeap::new(),
                 jobs: BTreeMap::new(),
-                cache: HashMap::new(),
+                cache: LruCache::new(cfg.cache_capacity.max(1)),
                 depth: cfg.queue_depth.max(1),
                 result_capacity: cfg.result_capacity.max(1),
-                cache_capacity: cfg.cache_capacity.max(1),
-                cache_tick: 0,
                 terminal: VecDeque::new(),
                 queued_new: 0,
                 next_id: 0,
@@ -501,12 +524,8 @@ impl SolveService {
         }
         let id = JobId(s.next_id);
         s.next_id += 1;
-        s.cache_tick += 1;
-        let tick = s.cache_tick;
-        let hit = s.cache.get_mut(&req.cache_key()).map(|e| {
-            e.last_used = tick; // LRU bump: duplicates keep entries warm
-            e.result.clone()
-        });
+        // `get` bumps recency: duplicates keep entries warm.
+        let hit = s.cache.get(&req.cache_key()).map(|e| e.result.clone());
         if let Some(result) = hit {
             s.jobs.insert(
                 id,
@@ -887,20 +906,9 @@ fn finish(inner: &Inner, s: &mut Shared, id: JobId, outcome: Result<Arc<PathResu
         }
     };
     if let Some((key, pb, result)) = cache_insert {
-        s.cache_tick += 1;
-        let last_used = s.cache_tick;
-        s.cache.insert(key, CacheEntry { _pb: pb, result, last_used });
-        // LRU eviction past capacity (linear scan: capacities are small
-        // and inserts happen once per completed solve, not per epoch).
-        while s.cache.len() > s.cache_capacity {
-            let victim = s
-                .cache
-                .iter()
-                .min_by_key(|(_, e)| e.last_used)
-                .map(|(k, _)| k.clone())
-                .expect("cache is non-empty above capacity");
-            s.cache.remove(&victim);
-            inner.metrics.incr("service_cache_evictions", 1);
+        let evicted = s.cache.insert(key, CacheEntry { _pb: pb, result });
+        if evicted > 0 {
+            inner.metrics.incr("service_cache_evictions", evicted as u64);
         }
     }
     s.outstanding -= 1;

@@ -26,6 +26,7 @@
 
 use super::service::AnyProblem;
 use crate::linalg::Design;
+use crate::solver::datafit::Datafit;
 use crate::solver::path::{
     solve_path_with_handoff, DualHandoff, PathOptions, PathResult,
 };
@@ -76,8 +77,8 @@ pub fn stitch(parts: Vec<PathResult>) -> PathResult {
 /// solve each shard with the dual-point handoff, stitch. Produces the
 /// same coefficient path as the monolithic engine (the equivalence the
 /// service's pipelined execution relies on).
-pub fn solve_path_sharded<D: Design>(
-    pb: &SglProblem<D>,
+pub fn solve_path_sharded<D: Design, F: Datafit>(
+    pb: &SglProblem<D, F>,
     lambdas: &[f64],
     opts: &PathOptions,
     solver: SolverKind,

@@ -9,10 +9,12 @@
 
 use crate::coordinator::jobs::{run_rule_comparison, RuleComparisonJob, RuleTiming};
 use crate::data::synthetic::{generate, SyntheticConfig};
+use crate::linalg::Design;
+use crate::screening::make_rule;
 use crate::screening::RuleKind;
 use crate::solver::cd::{solve_with_rule, SolveOptions};
+use crate::solver::datafit::{Datafit, Logistic};
 use crate::solver::problem::SglProblem;
-use crate::screening::make_rule;
 
 /// Active-proportion surfaces for Fig. 2a/2b.
 #[derive(Clone, Debug)]
@@ -38,6 +40,45 @@ pub fn active_surfaces(
 ) -> ActiveSurface {
     let data = generate(cfg);
     let pb = SglProblem::new(data.dataset.x, data.dataset.y, data.dataset.groups, tau);
+    active_surfaces_on(&pb, delta, t_count, k_values, fce)
+}
+
+/// The Fig. 2a/2b protocol on a sparse-group *logistic* path: the same
+/// synthetic design with the target binarized at its mean. The GAP safe
+/// sphere is the only rule the logistic dual admits, so this is the
+/// rejection-rate figure for the classification datafit.
+pub fn logistic_active_surfaces(
+    cfg: &SyntheticConfig,
+    tau: f64,
+    delta: f64,
+    t_count: usize,
+    k_values: &[usize],
+    fce: usize,
+) -> ActiveSurface {
+    let data = generate(cfg);
+    let mean = data.dataset.y.iter().sum::<f64>() / data.dataset.y.len() as f64;
+    let labels: Vec<f64> = data.dataset.y.iter().map(|&v| f64::from(v > mean)).collect();
+    let weights = data.dataset.groups.sqrt_size_weights();
+    let pb = SglProblem::with_datafit(
+        data.dataset.x,
+        labels,
+        data.dataset.groups,
+        tau,
+        weights,
+        Logistic,
+    );
+    active_surfaces_on(&pb, delta, t_count, k_values, fce)
+}
+
+/// Shared surface protocol over an already-built problem (any backend,
+/// any datafit — the GAP safe sphere works for all of them).
+pub fn active_surfaces_on<D: Design, F: Datafit>(
+    pb: &SglProblem<D, F>,
+    delta: f64,
+    t_count: usize,
+    k_values: &[usize],
+    fce: usize,
+) -> ActiveSurface {
     let lambda_max = pb.lambda_max();
     let lambdas = SglProblem::lambda_grid(lambda_max, delta, t_count);
     let p = pb.p() as f64;
@@ -46,7 +87,7 @@ pub fn active_surfaces(
     let mut feature_fractions = Vec::with_capacity(k_values.len());
     let mut group_fractions = Vec::with_capacity(k_values.len());
     for &k in k_values {
-        let mut rule = make_rule(RuleKind::GapSafe, &pb);
+        let mut rule = make_rule(RuleKind::GapSafe, pb);
         let opts = SolveOptions {
             tol: 0.0, // never stop early: K is the budget under study
             max_epochs: k,
@@ -59,7 +100,7 @@ pub fn active_surfaces(
         let mut feats = Vec::with_capacity(lambdas.len());
         let mut groups = Vec::with_capacity(lambdas.len());
         for &lambda in &lambdas {
-            let res = solve_with_rule(&pb, lambda, warm.as_deref(), &opts, rule.as_mut());
+            let res = solve_with_rule(pb, lambda, warm.as_deref(), &opts, rule.as_mut());
             warm = Some(res.beta.clone());
             feats.push(res.active.n_active_features() as f64 / p);
             groups.push(res.active.n_active_groups() as f64 / n_g);
@@ -118,6 +159,34 @@ mod tests {
         for row in surf.feature_fractions.iter().chain(&surf.group_fractions) {
             assert!(row.iter().all(|&f| (0.0..=1.0).contains(&f)));
         }
+    }
+
+    #[test]
+    fn logistic_surfaces_screen_and_stay_valid() {
+        let surf = logistic_active_surfaces(&tiny_cfg(), 0.2, 2.0, 8, &[10, 100], 10);
+        assert_eq!(surf.feature_fractions.len(), 2);
+        assert_eq!(surf.feature_fractions[0].len(), 8);
+        for li in 0..8 {
+            // Tighter gaps (more epochs) never enlarge the safe sphere.
+            assert!(
+                surf.feature_fractions[1][li] <= surf.feature_fractions[0][li] + 1e-12,
+                "lambda {li}: K=100 {} vs K=10 {}",
+                surf.feature_fractions[1][li],
+                surf.feature_fractions[0][li]
+            );
+            assert!(surf.group_fractions[1][li] <= surf.group_fractions[0][li] + 1e-12);
+        }
+        for row in surf.feature_fractions.iter().chain(&surf.group_fractions) {
+            assert!(row.iter().all(|&f| (0.0..=1.0).contains(&f)));
+        }
+        // The GAP sphere must actually reject on the logistic path: at
+        // the tight end of the grid with a generous budget, some of the
+        // design is screened away.
+        assert!(
+            surf.feature_fractions[1].iter().any(|&f| f < 1.0),
+            "{:?}",
+            surf.feature_fractions[1]
+        );
     }
 
     #[test]

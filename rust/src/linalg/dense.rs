@@ -266,6 +266,10 @@ impl super::design::Design for Matrix {
         Matrix::tmatvec_into(self, u, z)
     }
 
+    fn tmatvec_block(&self, j0: usize, j1: usize, u: &[f64], out: &mut [f64]) {
+        Matrix::tmatvec_block(self, j0, j1, u, out)
+    }
+
     fn select_cols(&self, cols: &[usize]) -> Matrix {
         Matrix::select_cols(self, cols)
     }

@@ -109,6 +109,16 @@ pub trait Design: Clone + Send + Sync + std::fmt::Debug {
         }
     }
 
+    /// `out = X[:, j0..j1]ᵀ u` — the block correlation behind the strong
+    /// rules' KKT checks and the group-level tests. `out.len() == j1 - j0`.
+    fn tmatvec_block(&self, j0: usize, j1: usize, u: &[f64], out: &mut [f64]) {
+        debug_assert!(j0 <= j1 && j1 <= self.n_cols());
+        debug_assert_eq!(out.len(), j1 - j0);
+        for (k, j) in (j0..j1).enumerate() {
+            out[k] = self.col_dot(j, u);
+        }
+    }
+
     /// `X v` (allocating convenience).
     fn matvec(&self, v: &[f64]) -> Vec<f64> {
         let mut y = vec![0.0; self.n_rows()];

@@ -21,9 +21,10 @@
 //! loads svmlight text straight into the CSC backend (no dense detour).
 //! `--design dense|csc` selects the design backend (CSC stores only the
 //! nonzero entries, so epochs cost `O(nnz)`), `--algo cd|ista|fista` the
-//! inner solver; both are also available as `[dataset] design` /
-//! `[solver] algo` TOML keys, and the service knobs as `[service]
-//! workers/queue_depth/shards`.
+//! inner solver, and `--datafit quadratic|logistic` the loss (logistic
+//! binarizes a real-valued target at its mean); all are also available as
+//! `[dataset] design` / `[solver] algo` / `[solver] datafit` TOML keys,
+//! and the service knobs as `[service] workers/queue_depth/shards`.
 
 use anyhow::{bail, Context, Result};
 use sgl::config::{
@@ -44,6 +45,7 @@ use sgl::linalg::{CscMatrix, Design};
 use sgl::screening::RuleKind;
 use sgl::solver::cd::SolveOptions;
 use sgl::solver::cv::{split_rows, validate_tau_grid};
+use sgl::solver::datafit::{Datafit, FitKind, Logistic};
 use sgl::solver::groups::Groups;
 use sgl::solver::path::{solve_path_with, PathOptions};
 use sgl::solver::problem::{lambda_grid, SglProblem};
@@ -61,6 +63,7 @@ fn specs() -> Vec<OptSpec> {
         OptSpec { name: "group-size", help: "uniform group size for libsvm datasets", takes_value: true, default: None },
         OptSpec { name: "design", help: "dense|csc design backend", takes_value: true, default: None },
         OptSpec { name: "algo", help: "cd|ista|fista inner solver", takes_value: true, default: None },
+        OptSpec { name: "datafit", help: "quadratic|logistic loss", takes_value: true, default: None },
         OptSpec { name: "tau", help: "l1/group mixing in [0,1]", takes_value: true, default: None },
         OptSpec { name: "lambda-frac", help: "lambda as a fraction of lambda_max", takes_value: true, default: Some("0.1") },
         OptSpec { name: "tol", help: "target duality gap", takes_value: true, default: None },
@@ -109,6 +112,10 @@ fn load_config(args: &Args) -> Result<RunConfig> {
     if let Some(v) = args.get("algo") {
         cfg.algo = SolverKind::from_name(&v)
             .with_context(|| format!("unknown --algo {v} (cd|ista|fista)"))?;
+    }
+    if let Some(v) = args.get("datafit") {
+        cfg.datafit = FitKind::from_name(&v)
+            .with_context(|| format!("unknown --datafit {v} (quadratic|logistic)"))?;
     }
     if let Some(v) = args.get("tau") {
         cfg.tau = v.parse().context("--tau")?;
@@ -260,8 +267,35 @@ fn solve_opts(cfg: &RunConfig, record_history: bool) -> SolveOptions {
     }
 }
 
-/// `solve` on any backend.
-fn cmd_solve<D: Design>(pb: &SglProblem<D>, cfg: &RunConfig, args: &Args, name: &str) {
+/// Binary labels for the logistic datafit: a target already in `{0, 1}`
+/// passes through unchanged, a real-valued one is thresholded at its
+/// mean (deterministic, so reruns see the same classification problem).
+fn logistic_labels(y: &[f64]) -> Vec<f64> {
+    if y.iter().all(|&v| v == 0.0 || v == 1.0) {
+        return y.to_vec();
+    }
+    let mean = y.iter().sum::<f64>() / y.len() as f64;
+    y.iter().map(|&v| f64::from(v > mean)).collect()
+}
+
+/// A sparse-group logistic problem on any backend from a loaded target.
+fn logistic_problem<D: Design>(
+    x: D,
+    y: Vec<f64>,
+    groups: Groups,
+    tau: f64,
+) -> SglProblem<D, Logistic> {
+    let weights = groups.sqrt_size_weights();
+    SglProblem::with_datafit(x, logistic_labels(&y), groups, tau, weights, Logistic)
+}
+
+/// `solve` on any backend and datafit.
+fn cmd_solve<D: Design, F: Datafit>(
+    pb: &SglProblem<D, F>,
+    cfg: &RunConfig,
+    args: &Args,
+    name: &str,
+) {
     let lambda = args.get_f64("lambda-frac", 0.1) * pb.lambda_max();
     let opts = solve_opts(cfg, true);
     let res = match cfg.algo {
@@ -269,11 +303,14 @@ fn cmd_solve<D: Design>(pb: &SglProblem<D>, cfg: &RunConfig, args: &Args, name: 
         SolverKind::Ista => sgl::solver::ista::solve_ista(pb, lambda, None, &opts),
         SolverKind::Fista => sgl::solver::fista::solve_fista(pb, lambda, None, &opts),
     };
-    let y2: f64 = pb.y.iter().map(|v| v * v).sum();
+    // ‖y‖² for least squares, n·ln2 for logistic — the same normalizer
+    // the solvers use for their relative stopping rule.
+    let y2: f64 = pb.datafit.gap_scale(&pb.y);
     println!(
-        "dataset={} design={} algo={} n={} p={} nnz={} lambda={lambda:.5e}",
+        "dataset={} design={} datafit={} algo={} n={} p={} nnz={} lambda={lambda:.5e}",
         name,
         cfg.design.name(),
+        pb.datafit.kind().name(),
         cfg.algo.name(),
         pb.n(),
         pb.p(),
@@ -292,8 +329,12 @@ fn cmd_solve<D: Design>(pb: &SglProblem<D>, cfg: &RunConfig, args: &Args, name: 
     );
 }
 
-/// `path` on any backend.
-fn cmd_path<D: Design>(pb: &SglProblem<D>, cfg: &RunConfig, args: &Args) -> Result<()> {
+/// `path` on any backend and datafit.
+fn cmd_path<D: Design, F: Datafit>(
+    pb: &SglProblem<D, F>,
+    cfg: &RunConfig,
+    args: &Args,
+) -> Result<()> {
     let opts = PathOptions {
         delta: cfg.delta,
         t_count: cfg.t_count,
@@ -302,10 +343,11 @@ fn cmd_path<D: Design>(pb: &SglProblem<D>, cfg: &RunConfig, args: &Args) -> Resu
     let lambdas = lambda_grid(pb.lambda_max(), opts.delta, opts.t_count);
     let path = solve_path_with(pb, &lambdas, &opts, cfg.algo);
     println!(
-        "path: {} lambdas, design={}, algo={}, rule={}, total {:.3}s, epochs={}, \
-         all converged={}",
+        "path: {} lambdas, design={}, datafit={}, algo={}, rule={}, total {:.3}s, \
+         epochs={}, all converged={}",
         path.lambdas.len(),
         cfg.design.name(),
+        pb.datafit.kind().name(),
         cfg.algo.name(),
         cfg.rule.name(),
         path.total_s,
@@ -346,26 +388,57 @@ fn cmd_serve(data: LoadedData, cfg: &RunConfig) -> Result<()> {
     // sparse-loaded one (libsvm) stays CSC end to end unless the user
     // explicitly asked for the dense backend (same contract as
     // `with_backend!`), in which case dense jobs join the batch too.
-    let (dense_pb, csc_pb): (Option<Arc<SglProblem>>, Arc<SglProblem<CscMatrix>>) = match data
-    {
+    // Each backend also gets a logistic twin (labels binarized at the
+    // target's mean) so the batch mixes regression and classification.
+    type LogDense = Arc<SglProblem<sgl::linalg::Matrix, Logistic>>;
+    type LogCsc = Arc<SglProblem<CscMatrix, Logistic>>;
+    let (dense_pb, csc_pb, dense_log, csc_log): (
+        Option<Arc<SglProblem>>,
+        Arc<SglProblem<CscMatrix>>,
+        Option<LogDense>,
+        LogCsc,
+    ) = match data {
         LoadedData::Dense(d) => {
             let csc = CscMatrix::from_dense(&d.x);
             (
-                Some(Arc::new(SglProblem::new(d.x, d.y.clone(), d.groups.clone(), cfg.tau))),
-                Arc::new(SglProblem::new(csc, d.y, d.groups, cfg.tau)),
+                Some(Arc::new(SglProblem::new(
+                    d.x.clone(),
+                    d.y.clone(),
+                    d.groups.clone(),
+                    cfg.tau,
+                ))),
+                Arc::new(SglProblem::new(csc.clone(), d.y.clone(), d.groups.clone(), cfg.tau)),
+                Some(Arc::new(logistic_problem(d.x, d.y.clone(), d.groups.clone(), cfg.tau))),
+                Arc::new(logistic_problem(csc, d.y, d.groups, cfg.tau)),
             )
         }
         LoadedData::Sparse(s) => {
-            let dense = match cfg.design {
-                DesignBackend::Dense => Some(Arc::new(SglProblem::new(
-                    s.x.to_dense(),
-                    s.y.clone(),
-                    s.groups.clone(),
-                    cfg.tau,
-                ))),
-                DesignBackend::Csc => None,
+            let (dense, dense_log) = match cfg.design {
+                DesignBackend::Dense => {
+                    let x = s.x.to_dense();
+                    (
+                        Some(Arc::new(SglProblem::new(
+                            x.clone(),
+                            s.y.clone(),
+                            s.groups.clone(),
+                            cfg.tau,
+                        ))),
+                        Some(Arc::new(logistic_problem(
+                            x,
+                            s.y.clone(),
+                            s.groups.clone(),
+                            cfg.tau,
+                        ))),
+                    )
+                }
+                DesignBackend::Csc => (None, None),
             };
-            (dense, Arc::new(SglProblem::new(s.x, s.y, s.groups, cfg.tau)))
+            (
+                dense,
+                Arc::new(SglProblem::new(s.x.clone(), s.y.clone(), s.groups.clone(), cfg.tau)),
+                dense_log,
+                Arc::new(logistic_problem(s.x, s.y, s.groups, cfg.tau)),
+            )
         }
     };
     let metrics = Arc::new(Metrics::new());
@@ -415,8 +488,9 @@ fn cmd_serve(data: LoadedData, cfg: &RunConfig) -> Result<()> {
             solver,
             shards,
             label: format!(
-                "{}/{}/{}@{tol:.0e}{}",
+                "{}{}/{}/{}@{tol:.0e}{}",
                 pb.backend_name(),
+                if pb.datafit_kind() == FitKind::Logistic { "+logistic" } else { "" },
                 solver.name(),
                 rule.name(),
                 if shards > 1 { format!("/k{shards}") } else { String::new() }
@@ -444,10 +518,37 @@ fn cmd_serve(data: LoadedData, cfg: &RunConfig) -> Result<()> {
             }
         }
     }
-    // One λ-sharded path: the dual-point handoff pipeline.
+    // Classification rides the same queue: logistic paths under the GAP
+    // rules, mixed freely with the quadratic traffic above.
+    for solver in [SolverKind::Cd, SolverKind::Fista] {
+        batch.push(make(
+            AnyProblem::CscLogistic(csc_log.clone()),
+            RuleKind::GapSafeSeq,
+            1e-6,
+            solver,
+            1,
+        ));
+    }
+    if let Some(dl) = &dense_log {
+        batch.push(make(
+            AnyProblem::DenseLogistic(dl.clone()),
+            RuleKind::GapSafe,
+            1e-6,
+            SolverKind::Cd,
+            1,
+        ));
+    }
+    // One λ-sharded path per datafit: the dual-point handoff pipeline.
     if cfg.service_shards > 1 {
         batch.push(make(
             AnyProblem::Csc(csc_pb.clone()),
+            RuleKind::GapSafeSeq,
+            cfg.tol,
+            SolverKind::Cd,
+            cfg.service_shards,
+        ));
+        batch.push(make(
+            AnyProblem::CscLogistic(csc_log.clone()),
             RuleKind::GapSafeSeq,
             cfg.tol,
             SolverKind::Cd,
@@ -589,18 +690,37 @@ fn run(args: &Args) -> Result<()> {
             let data = build_data(&cfg, &scale)?;
             let name = data_name(&cfg);
             with_backend!(cfg, data, |x, y, groups| {
-                let pb = SglProblem::new(x, y, groups, cfg.tau);
-                cmd_solve(&pb, &cfg, args, name)
+                match cfg.datafit {
+                    FitKind::Quadratic => {
+                        let pb = SglProblem::new(x, y, groups, cfg.tau);
+                        cmd_solve(&pb, &cfg, args, name)
+                    }
+                    FitKind::Logistic => {
+                        let pb = logistic_problem(x, y, groups, cfg.tau);
+                        cmd_solve(&pb, &cfg, args, name)
+                    }
+                }
             });
         }
         "path" => {
             let data = build_data(&cfg, &scale)?;
             with_backend!(cfg, data, |x, y, groups| {
-                let pb = SglProblem::new(x, y, groups, cfg.tau);
-                cmd_path(&pb, &cfg, args)?
+                match cfg.datafit {
+                    FitKind::Quadratic => {
+                        let pb = SglProblem::new(x, y, groups, cfg.tau);
+                        cmd_path(&pb, &cfg, args)?
+                    }
+                    FitKind::Logistic => {
+                        let pb = logistic_problem(x, y, groups, cfg.tau);
+                        cmd_path(&pb, &cfg, args)?
+                    }
+                }
             });
         }
         "cv" => {
+            if cfg.datafit != FitKind::Quadratic {
+                bail!("cv scores test MSE and is least-squares only (drop --datafit)");
+            }
             let data = build_data(&cfg, &scale)?;
             let taus: Vec<f64> = (0..=10).map(|i| i as f64 / 10.0).collect();
             let opts = PathOptions {
@@ -626,12 +746,24 @@ fn run(args: &Args) -> Result<()> {
         "lambda-max" => {
             let data = build_data(&cfg, &scale)?;
             with_backend!(cfg, data, |x, y, groups| {
-                let pb = SglProblem::new(x, y, groups, cfg.tau);
-                let (g_star, lmax) = pb.lambda_max_argmax();
+                let (g_star, lmax) = match cfg.datafit {
+                    FitKind::Quadratic => {
+                        SglProblem::new(x, y, groups, cfg.tau).lambda_max_argmax()
+                    }
+                    FitKind::Logistic => {
+                        logistic_problem(x, y, groups, cfg.tau).lambda_max_argmax()
+                    }
+                };
                 println!("lambda_max = {lmax:.8e} (attained by group {g_star})");
             });
         }
         "compare" => {
+            if cfg.datafit != FitKind::Quadratic {
+                bail!(
+                    "compare times the least-squares-only spheres too; \
+                     run `path --datafit logistic --rule gap_safe_seq` instead"
+                );
+            }
             let data = build_data(&cfg, &scale)?;
             with_backend!(cfg, data, |x, y, groups| {
                 let pb = SglProblem::new(x, y, groups, cfg.tau);

@@ -15,6 +15,7 @@ use crate::linalg::ops::{dot, l2_norm_sq};
 use crate::linalg::Design;
 use crate::norms::epsilon::epsilon_norm_gradient;
 use crate::norms::sgl::epsilon_g;
+use crate::solver::datafit::Datafit;
 use crate::solver::duality::DualSnapshot;
 use crate::solver::problem::SglProblem;
 
@@ -32,7 +33,9 @@ pub struct Dst3Rule {
 }
 
 impl Dst3Rule {
-    pub fn new<D: Design>(pb: &SglProblem<D>) -> Self {
+    /// Derived for the plain least-squares dual; [`super::make_rule`]
+    /// rejects other datafits before constructing this.
+    pub fn new<D: Design, F: Datafit>(pb: &SglProblem<D, F>) -> Self {
         let xty = pb.x.tmatvec(&pb.y);
         let (g_star, lambda_max) = pb.lambda_max_argmax();
         let (a, b) = pb.groups.bounds(g_star);
@@ -54,12 +57,17 @@ impl Dst3Rule {
     }
 }
 
-impl<D: Design> ScreeningRule<D> for Dst3Rule {
+impl<D: Design, F: Datafit> ScreeningRule<D, F> for Dst3Rule {
     fn kind(&self) -> RuleKind {
         RuleKind::Dst3
     }
 
-    fn sphere(&mut self, pb: &SglProblem<D>, lambda: f64, snap: &DualSnapshot) -> Option<Sphere> {
+    fn sphere(
+        &mut self,
+        pb: &SglProblem<D, F>,
+        lambda: f64,
+        snap: &DualSnapshot,
+    ) -> Option<Sphere> {
         // Violation of the half-space by y/lambda (>= 0 for lambda <= lmax).
         let violation = (self.eta_dot_y / lambda - self.offset) / self.eta_norm_sq;
         let dyn_radius = snap.dist_to_y_over_lambda(&pb.y, lambda);

@@ -9,6 +9,7 @@
 
 use super::{RuleKind, ScreeningRule, Sphere};
 use crate::linalg::Design;
+use crate::solver::datafit::Datafit;
 use crate::solver::duality::DualSnapshot;
 use crate::solver::problem::SglProblem;
 
@@ -17,17 +18,24 @@ pub struct DynamicRule {
 }
 
 impl DynamicRule {
-    pub fn new<D: Design>(pb: &SglProblem<D>) -> Self {
+    /// Derived for the plain least-squares dual; [`super::make_rule`]
+    /// rejects other datafits before constructing this.
+    pub fn new<D: Design, F: Datafit>(pb: &SglProblem<D, F>) -> Self {
         DynamicRule { xty: pb.x.tmatvec(&pb.y) }
     }
 }
 
-impl<D: Design> ScreeningRule<D> for DynamicRule {
+impl<D: Design, F: Datafit> ScreeningRule<D, F> for DynamicRule {
     fn kind(&self) -> RuleKind {
         RuleKind::Dynamic
     }
 
-    fn sphere(&mut self, pb: &SglProblem<D>, lambda: f64, snap: &DualSnapshot) -> Option<Sphere> {
+    fn sphere(
+        &mut self,
+        pb: &SglProblem<D, F>,
+        lambda: f64,
+        snap: &DualSnapshot,
+    ) -> Option<Sphere> {
         let radius = snap.dist_to_y_over_lambda(&pb.y, lambda);
         let xt_center: Vec<f64> = self.xty.iter().map(|v| v / lambda).collect();
         Some(Sphere { xt_center, radius })

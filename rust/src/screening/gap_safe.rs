@@ -12,19 +12,26 @@
 
 use super::{RuleKind, ScreeningRule, Sphere};
 use crate::linalg::Design;
-use crate::solver::duality::{dual_value, DualSnapshot};
+use crate::solver::datafit::Datafit;
+use crate::solver::duality::DualSnapshot;
 use crate::solver::problem::SglProblem;
 
 /// GAP safe rule: entirely derived from the current dual snapshot, so the
-/// rule itself is stateless.
+/// rule itself is stateless (and datafit-generic for free — the snapshot
+/// already used the datafit's dual and curvature).
 pub struct GapSafeRule;
 
-impl<D: Design> ScreeningRule<D> for GapSafeRule {
+impl<D: Design, F: Datafit> ScreeningRule<D, F> for GapSafeRule {
     fn kind(&self) -> RuleKind {
         RuleKind::GapSafe
     }
 
-    fn sphere(&mut self, _pb: &SglProblem<D>, _lambda: f64, snap: &DualSnapshot) -> Option<Sphere> {
+    fn sphere(
+        &mut self,
+        _pb: &SglProblem<D, F>,
+        _lambda: f64,
+        snap: &DualSnapshot,
+    ) -> Option<Sphere> {
         Some(Sphere { xt_center: snap.xt_theta.clone(), radius: snap.radius })
     }
 }
@@ -33,6 +40,10 @@ impl<D: Design> ScreeningRule<D> for GapSafeRule {
 struct CarriedDual {
     theta: Vec<f64>,
     xt_theta: Vec<f64>,
+    /// Squared augmented-block norm of θ (ridge datafits; see
+    /// [`DualSnapshot::theta_aug_sq`]) — needed to re-evaluate the dual at
+    /// later λ without the β that built θ.
+    theta_aug_sq: f64,
 }
 
 /// Sequential GAP safe rule (`GAPSAFE_SEQ`, paper Alg. 2 "previous
@@ -43,7 +54,13 @@ struct CarriedDual {
 /// Validity: the dual feasible set `Δ_X = {θ : Ω^D(Xᵀθ) ≤ 1}` does not
 /// depend on λ, so the θ stored at `λ_{t−1}` is still feasible at `λ_t`
 /// and Theorem 2 applies verbatim to the pair `(β_warm, θ_prev)`:
-/// `‖θ̂(λ_t) − θ_prev‖ ≤ sqrt(2·(P_{λ_t}(β_warm) − D_{λ_t}(θ_prev)))/λ_t`.
+/// `‖θ̂(λ_t) − θ_prev‖ ≤ sqrt(2·c·(P_{λ_t}(β_warm) − D_{λ_t}(θ_prev)))/λ_t`
+/// with `c` the datafit curvature. For datafits whose conjugate also has a
+/// *domain* constraint (logistic: `y − λθ ∈ [0,1]`), feasibility at
+/// smaller λ follows from the scaling: θ was built as `r/s` with `s ≥ λ`,
+/// so `λ_t/s ≤ λ_{t−1}/s ≤ 1` keeps `y − λ_t θ` a convex combination of
+/// in-domain points (the dual-scaling contract of
+/// [`crate::solver::datafit`]).
 /// Because warm starts make that gap small for adjacent grid points,
 /// screening fires *at epoch 0*, before any new iterations — and since
 /// `Xᵀθ_prev` was saved alongside θ, the epoch-0 sphere costs **no extra
@@ -67,24 +84,30 @@ impl Default for GapSafeSeqRule {
     }
 }
 
-impl<D: Design> ScreeningRule<D> for GapSafeSeqRule {
+impl<D: Design, F: Datafit> ScreeningRule<D, F> for GapSafeSeqRule {
     fn kind(&self) -> RuleKind {
         RuleKind::GapSafeSeq
     }
 
-    fn sphere(&mut self, pb: &SglProblem<D>, lambda: f64, snap: &DualSnapshot) -> Option<Sphere> {
+    fn sphere(
+        &mut self,
+        pb: &SglProblem<D, F>,
+        lambda: f64,
+        snap: &DualSnapshot,
+    ) -> Option<Sphere> {
         if self.last_lambda == Some(lambda) {
             return None; // sequential: a single screening pass per grid point
         }
         self.last_lambda = Some(lambda);
         match &self.prev {
             Some(carried) => {
-                let dual = dual_value(&pb.y, &carried.theta, lambda);
+                let dual =
+                    pb.datafit.dual_at(&pb.y, &carried.theta, carried.theta_aug_sq, lambda);
                 let gap = (snap.primal - dual).max(0.0);
                 // Same cancellation-error floor as DualSnapshot::compute:
                 // a radius-0 sphere must never arise from round-off alone.
                 let floor = 16.0 * f64::EPSILON * (snap.primal.abs() + dual.abs());
-                let radius = (2.0 * gap.max(floor)).sqrt() / lambda;
+                let radius = (2.0 * pb.datafit.curvature() * gap.max(floor)).sqrt() / lambda;
                 Some(Sphere { xt_center: carried.xt_theta.clone(), radius })
             }
             // First grid point: nothing carried yet; fall back to the
@@ -93,9 +116,12 @@ impl<D: Design> ScreeningRule<D> for GapSafeSeqRule {
         }
     }
 
-    fn on_solve_complete(&mut self, _pb: &SglProblem<D>, _lambda: f64, snap: &DualSnapshot) {
-        self.prev =
-            Some(CarriedDual { theta: snap.theta.clone(), xt_theta: snap.xt_theta.clone() });
+    fn on_solve_complete(&mut self, _pb: &SglProblem<D, F>, _lambda: f64, snap: &DualSnapshot) {
+        self.prev = Some(CarriedDual {
+            theta: snap.theta.clone(),
+            xt_theta: snap.xt_theta.clone(),
+            theta_aug_sq: snap.theta_aug_sq,
+        });
     }
 }
 

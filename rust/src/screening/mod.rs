@@ -21,6 +21,7 @@ pub mod static_rule;
 use crate::linalg::ops::{inf_norm, l2_norm};
 use crate::linalg::Design;
 use crate::norms::prox::soft_threshold_vec;
+use crate::solver::datafit::{Datafit, FitState, Quadratic};
 use crate::solver::duality::DualSnapshot;
 use crate::solver::groups::Groups;
 use crate::solver::problem::SglProblem;
@@ -91,15 +92,18 @@ pub struct Sphere {
 
 /// A screening rule: builds a safe sphere from the current dual snapshot.
 ///
-/// Generic over the [`Design`] backend so one rule instance serves dense
-/// and sparse problems alike; rule state never depends on the backend.
-pub trait ScreeningRule<D: Design>: Send {
+/// Generic over the [`Design`] backend and the [`Datafit`] so one rule
+/// instance serves dense and sparse, regression and classification
+/// problems alike; rule state never depends on the backend. The datafit
+/// defaults to [`Quadratic`] so historical `ScreeningRule<D>` bounds keep
+/// compiling.
+pub trait ScreeningRule<D: Design, F: Datafit = Quadratic>: Send {
     fn kind(&self) -> RuleKind;
 
     /// Produce the safe sphere for the current iterate. `snap` carries the
     /// dual-scaled feasible point `θ_k` (Eq. 15), its `Xᵀθ_k`, and the
     /// duality gap.
-    fn sphere(&mut self, pb: &SglProblem<D>, lambda: f64, snap: &DualSnapshot)
+    fn sphere(&mut self, pb: &SglProblem<D, F>, lambda: f64, snap: &DualSnapshot)
         -> Option<Sphere>;
 
     /// Hook invoked by the solver when the solve at `lambda` terminates,
@@ -108,7 +112,7 @@ pub trait ScreeningRule<D: Design>: Send {
     /// screen at epoch 0 of the *next* grid point of a warm-started path
     /// (the rule instance is constructed once per path and carried across
     /// λ's). Stateless rules ignore it.
-    fn on_solve_complete(&mut self, _pb: &SglProblem<D>, _lambda: f64, _snap: &DualSnapshot) {
+    fn on_solve_complete(&mut self, _pb: &SglProblem<D, F>, _lambda: f64, _snap: &DualSnapshot) {
     }
 }
 
@@ -116,12 +120,38 @@ pub trait ScreeningRule<D: Design>: Send {
 ///
 /// Rules may precompute per-problem/per-λ quantities (`Xᵀy`, `λ_max`, the
 /// DST3 hyperplane); constructing once per path solve amortizes that.
-pub fn make_rule<D: Design>(kind: RuleKind, pb: &SglProblem<D>) -> Box<dyn ScreeningRule<D>> {
+///
+/// The static/dynamic/DST3 baselines are derived for the plain
+/// least-squares dual (their centers/radii hard-code `y/λ` geometry), so
+/// requesting them for any other datafit — logistic, or a ridge-carrying
+/// quadratic — is rejected here rather than silently screening unsafely.
+pub fn make_rule<D: Design, F: Datafit>(
+    kind: RuleKind,
+    pb: &SglProblem<D, F>,
+) -> Box<dyn ScreeningRule<D, F>> {
+    let quadratic_only = || {
+        assert!(
+            pb.datafit.state_is_residual() && pb.datafit.ridge() == 0.0,
+            "screening rule `{}` is only safe for the plain least-squares datafit; \
+             use none/gap_safe/gap_safe_seq with `{}`",
+            kind.name(),
+            pb.datafit.kind().name(),
+        );
+    };
     match kind {
         RuleKind::None => Box::new(none::NoRule),
-        RuleKind::Static => Box::new(static_rule::StaticRule::new(pb)),
-        RuleKind::Dynamic => Box::new(dynamic_rule::DynamicRule::new(pb)),
-        RuleKind::Dst3 => Box::new(dst3::Dst3Rule::new(pb)),
+        RuleKind::Static => {
+            quadratic_only();
+            Box::new(static_rule::StaticRule::new(pb))
+        }
+        RuleKind::Dynamic => {
+            quadratic_only();
+            Box::new(dynamic_rule::DynamicRule::new(pb))
+        }
+        RuleKind::Dst3 => {
+            quadratic_only();
+            Box::new(dst3::Dst3Rule::new(pb))
+        }
         RuleKind::GapSafe => Box::new(gap_safe::GapSafeRule),
         RuleKind::GapSafeSeq => Box::new(gap_safe::GapSafeSeqRule::new()),
     }
@@ -172,8 +202,11 @@ pub struct ScreenOutcome {
 /// eliminated coordinates of `beta`, and patch the residual `rho = y − Xβ`
 /// accordingly. Only currently-active variables are tested (screening is
 /// monotone along the solve).
-pub fn apply_sphere<D: Design>(
-    pb: &SglProblem<D>,
+///
+/// Legacy residual-slice entry point (residual-state datafits only);
+/// generic solvers use [`apply_sphere_state`].
+pub fn apply_sphere<D: Design, F: Datafit>(
+    pb: &SglProblem<D, F>,
     sphere: &Sphere,
     active: &mut ActiveSet,
     beta: &mut [f64],
@@ -183,14 +216,46 @@ pub fn apply_sphere<D: Design>(
 }
 
 /// [`apply_sphere`] with the per-group Theorem-1 tests fanned over a
-/// [`SweepCtx`] crew. The tests read only the sphere and the problem
-/// precomputations — never `beta`/`rho` — so the decision pass
+/// [`SweepCtx`] crew (legacy residual-slice form; asserts the datafit's
+/// state is the residual).
+pub fn apply_sphere_ctx<D: Design, F: Datafit>(
+    pb: &SglProblem<D, F>,
+    sphere: &Sphere,
+    active: &mut ActiveSet,
+    beta: &mut [f64],
+    rho: &mut [f64],
+    ctx: &SweepCtx,
+) -> ScreenOutcome {
+    assert!(pb.datafit.state_is_residual(), "residual-slice screening needs a residual-state datafit");
+    apply_sphere_core(pb, sphere, active, beta, rho, ctx)
+}
+
+/// [`apply_sphere`] on a full datafit state: patches
+/// [`FitState::main`] per eliminated coordinate and re-syncs the derived
+/// residual once at the end if anything changed.
+pub fn apply_sphere_state<D: Design, F: Datafit>(
+    pb: &SglProblem<D, F>,
+    sphere: &Sphere,
+    active: &mut ActiveSet,
+    beta: &mut [f64],
+    state: &mut FitState,
+    ctx: &SweepCtx,
+) -> ScreenOutcome {
+    let out = apply_sphere_core(pb, sphere, active, beta, &mut state.main, ctx);
+    if out.beta_changed {
+        pb.datafit.sync_residual(&pb.y, state);
+    }
+    out
+}
+
+/// The shared Theorem-1 engine. The decision pass reads only the sphere
+/// and the problem precomputations — never `beta`/`main` — so it
 /// parallelizes with disjoint writes and the decisions are bit-identical
-/// to the serial pass. The mutations (mask shrink, `beta` zeroing, `rho`
+/// to the serial pass. The mutations (mask shrink, `beta` zeroing, `main`
 /// patch) replay serially in the exact order of the serial loop, so the
 /// whole outcome is bit-for-bit the same.
-pub fn apply_sphere_ctx<D: Design>(
-    pb: &SglProblem<D>,
+fn apply_sphere_core<D: Design, F: Datafit>(
+    pb: &SglProblem<D, F>,
     sphere: &Sphere,
     active: &mut ActiveSet,
     beta: &mut [f64],
@@ -276,13 +341,20 @@ pub fn apply_sphere_ctx<D: Design>(
     out
 }
 
-/// Zero `beta[j]`, restoring the residual `rho += beta_j X_j`. Returns true
-/// if the coefficient was nonzero (i.e. the residual changed).
+/// Zero `beta[j]`, removing its contribution from the maintained state
+/// vector (`rho += β_j X_j` for the residual, `Xβ −= β_j X_j` for the
+/// linear predictor). Returns true if the coefficient was nonzero (i.e.
+/// the state changed).
 #[inline]
-fn zero_coord<D: Design>(pb: &SglProblem<D>, j: usize, beta: &mut [f64], rho: &mut [f64]) -> bool {
+fn zero_coord<D: Design, F: Datafit>(
+    pb: &SglProblem<D, F>,
+    j: usize,
+    beta: &mut [f64],
+    rho: &mut [f64],
+) -> bool {
     let bj = beta[j];
     if bj != 0.0 {
-        pb.x.col_axpy(j, bj, rho);
+        pb.x.col_axpy(j, -pb.datafit.delta_sign() * bj, rho);
         beta[j] = 0.0;
         true
     } else {

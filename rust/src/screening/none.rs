@@ -3,19 +3,20 @@
 
 use super::{RuleKind, ScreeningRule, Sphere};
 use crate::linalg::Design;
+use crate::solver::datafit::Datafit;
 use crate::solver::duality::DualSnapshot;
 use crate::solver::problem::SglProblem;
 
 pub struct NoRule;
 
-impl<D: Design> ScreeningRule<D> for NoRule {
+impl<D: Design, F: Datafit> ScreeningRule<D, F> for NoRule {
     fn kind(&self) -> RuleKind {
         RuleKind::None
     }
 
     fn sphere(
         &mut self,
-        _pb: &SglProblem<D>,
+        _pb: &SglProblem<D, F>,
         _lambda: f64,
         _snap: &DualSnapshot,
     ) -> Option<Sphere> {

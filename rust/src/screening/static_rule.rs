@@ -9,6 +9,7 @@
 use super::{RuleKind, ScreeningRule, Sphere};
 use crate::linalg::ops::l2_norm;
 use crate::linalg::Design;
+use crate::solver::datafit::Datafit;
 use crate::solver::duality::DualSnapshot;
 use crate::solver::problem::SglProblem;
 
@@ -20,7 +21,9 @@ pub struct StaticRule {
 }
 
 impl StaticRule {
-    pub fn new<D: Design>(pb: &SglProblem<D>) -> Self {
+    /// Derived for the plain least-squares dual; [`super::make_rule`]
+    /// rejects other datafits before constructing this.
+    pub fn new<D: Design, F: Datafit>(pb: &SglProblem<D, F>) -> Self {
         let xty = pb.x.tmatvec(&pb.y);
         let y_norm = l2_norm(&pb.y);
         let lambda_max = pb.lambda_max();
@@ -28,12 +31,17 @@ impl StaticRule {
     }
 }
 
-impl<D: Design> ScreeningRule<D> for StaticRule {
+impl<D: Design, F: Datafit> ScreeningRule<D, F> for StaticRule {
     fn kind(&self) -> RuleKind {
         RuleKind::Static
     }
 
-    fn sphere(&mut self, _pb: &SglProblem<D>, lambda: f64, _snap: &DualSnapshot) -> Option<Sphere> {
+    fn sphere(
+        &mut self,
+        _pb: &SglProblem<D, F>,
+        lambda: f64,
+        _snap: &DualSnapshot,
+    ) -> Option<Sphere> {
         // ||y/lmax - y/lambda|| = ||y|| * |1/lambda - 1/lmax|.
         let radius = self.y_norm * (1.0 / lambda - 1.0 / self.lambda_max).abs();
         let xt_center: Vec<f64> = self.xty.iter().map(|v| v / lambda).collect();

@@ -22,11 +22,12 @@
 //! (the active set only shrinks along a solve).
 
 use super::cd::{CheckEvent, SolveOptions, SolveResult};
+use super::datafit::{Datafit, FitState};
 use super::duality::DualSnapshot;
 use super::problem::SglProblem;
 use super::sweep::SweepCtx;
 use crate::linalg::Design;
-use crate::screening::{apply_sphere_ctx, ActiveSet, ScreeningRule};
+use crate::screening::{apply_sphere_state, ActiveSet, ScreeningRule};
 use crate::util::timer::Stopwatch;
 
 /// Compacted view of the active columns: a packed backend instance plus
@@ -44,7 +45,7 @@ pub struct ActiveCols<D: Design> {
 
 impl<D: Design> ActiveCols<D> {
     /// Identity mapping over the full active set; no data is copied.
-    pub fn full(pb: &SglProblem<D>) -> Self {
+    pub fn full<F: Datafit>(pb: &SglProblem<D, F>) -> Self {
         ActiveCols {
             compact: None,
             col_feat: (0..pb.p()).collect(),
@@ -53,7 +54,7 @@ impl<D: Design> ActiveCols<D> {
     }
 
     /// Re-pack from the current active set, reusing the index buffers.
-    pub fn rebuild(&mut self, pb: &SglProblem<D>, active: &ActiveSet) {
+    pub fn rebuild<F: Datafit>(&mut self, pb: &SglProblem<D, F>, active: &ActiveSet) {
         self.col_feat.clear();
         self.groups.clear();
         for (g, a, b) in pb.groups.iter() {
@@ -94,7 +95,7 @@ impl<D: Design> ActiveCols<D> {
 
     /// `X_kᵀ v` for compact column `k`.
     #[inline]
-    pub fn col_dot(&self, pb: &SglProblem<D>, k: usize, v: &[f64]) -> f64 {
+    pub fn col_dot<F: Datafit>(&self, pb: &SglProblem<D, F>, k: usize, v: &[f64]) -> f64 {
         match &self.compact {
             Some(m) => m.col_dot(k, v),
             None => pb.x.col_dot(self.col_feat[k], v),
@@ -103,7 +104,13 @@ impl<D: Design> ActiveCols<D> {
 
     /// `out += alpha · X_k` for compact column `k`.
     #[inline]
-    pub fn col_axpy(&self, pb: &SglProblem<D>, k: usize, alpha: f64, out: &mut [f64]) {
+    pub fn col_axpy<F: Datafit>(
+        &self,
+        pb: &SglProblem<D, F>,
+        k: usize,
+        alpha: f64,
+        out: &mut [f64],
+    ) {
         match &self.compact {
             Some(m) => m.col_axpy(k, alpha, out),
             None => pb.x.col_axpy(self.col_feat[k], alpha, out),
@@ -114,9 +121,9 @@ impl<D: Design> ActiveCols<D> {
     /// row-windowed axpy the row-partitioned parallel kernels
     /// ([`crate::solver::sweep`]) are built on.
     #[inline]
-    pub fn col_axpy_rows(
+    pub fn col_axpy_rows<F: Datafit>(
         &self,
-        pb: &SglProblem<D>,
+        pb: &SglProblem<D, F>,
         k: usize,
         alpha: f64,
         row0: usize,
@@ -131,7 +138,12 @@ impl<D: Design> ActiveCols<D> {
 
     /// `rho = y − Xβ`, touching only the active columns (screened
     /// coordinates of `β` are zero by construction).
-    pub fn residual_into(&self, pb: &SglProblem<D>, beta: &[f64], rho: &mut [f64]) {
+    pub fn residual_into<F: Datafit>(
+        &self,
+        pb: &SglProblem<D, F>,
+        beta: &[f64],
+        rho: &mut [f64],
+    ) {
         rho.copy_from_slice(&pb.y);
         for k in 0..self.col_feat.len() {
             let bj = beta[self.col_feat[k]];
@@ -141,9 +153,27 @@ impl<D: Design> ActiveCols<D> {
         }
     }
 
+    /// `xb = Xβ`, touching only the active columns — the linear-predictor
+    /// counterpart of [`residual_into`](Self::residual_into) for datafits
+    /// whose maintained state is `Xβ` (logistic).
+    pub fn linear_predictor_into<F: Datafit>(
+        &self,
+        pb: &SglProblem<D, F>,
+        beta: &[f64],
+        xb: &mut [f64],
+    ) {
+        xb.fill(0.0);
+        for k in 0..self.col_feat.len() {
+            let bj = beta[self.col_feat[k]];
+            if bj != 0.0 {
+                self.col_axpy(pb, k, bj, xb);
+            }
+        }
+    }
+
     /// `xt[j] = X_jᵀ v` for every active feature `j` (entries of screened
     /// features are left untouched — callers must not read them).
-    pub fn xt_into(&self, pb: &SglProblem<D>, v: &[f64], xt: &mut [f64]) {
+    pub fn xt_into<F: Datafit>(&self, pb: &SglProblem<D, F>, v: &[f64], xt: &mut [f64]) {
         for k in 0..self.col_feat.len() {
             xt[self.col_feat[k]] = self.col_dot(pb, k, v);
         }
@@ -178,10 +208,10 @@ pub struct ScreenState<D: Design> {
 }
 
 impl<D: Design> ScreenState<D> {
-    pub fn new(pb: &SglProblem<D>, opts: &SolveOptions) -> Self {
-        // Relative-to-||y||^2 stopping threshold (see SolveOptions::tol).
-        let tol_abs =
-            opts.tol * crate::linalg::ops::l2_norm_sq(&pb.y).max(f64::MIN_POSITIVE);
+    pub fn new<F: Datafit>(pb: &SglProblem<D, F>, opts: &SolveOptions) -> Self {
+        // Stopping threshold relative to the datafit's natural gap scale
+        // (`‖y‖²` quadratic, `n·ln 2` logistic; see SolveOptions::tol).
+        let tol_abs = opts.tol * pb.datafit.gap_scale(&pb.y).max(f64::MIN_POSITIVE);
         ScreenState {
             active: ActiveSet::full(&pb.groups),
             cols: ActiveCols::full(pb),
@@ -206,17 +236,17 @@ impl<D: Design> ScreenState<D> {
     /// rebuild the compaction if features died, re-evaluate the gap if
     /// screening zeroed nonzero coordinates on a converging check, record
     /// history, and decide convergence. `snap` must be computed from the
-    /// *current* `beta`/`rho` by the caller (solvers differ in how they
+    /// *current* `beta`/`state` by the caller (solvers differ in how they
     /// obtain `Xᵀρ`).
     #[allow(clippy::too_many_arguments)]
-    pub fn gap_check(
+    pub fn gap_check<F: Datafit>(
         &mut self,
-        pb: &SglProblem<D>,
+        pb: &SglProblem<D, F>,
         lambda: f64,
         epoch: usize,
-        rule: &mut dyn ScreeningRule<D>,
+        rule: &mut dyn ScreeningRule<D, F>,
         beta: &mut [f64],
-        rho: &mut [f64],
+        fit: &mut FitState,
         snap: DualSnapshot,
         sw: &Stopwatch,
     ) -> GapCheckOutcome {
@@ -228,7 +258,7 @@ impl<D: Design> ScreenState<D> {
         // sets reported for Fig. 2a/2b use the tightest sphere).
         if let Some(sphere) = rule.sphere(pb, lambda, &snap) {
             let out =
-                apply_sphere_ctx(pb, &sphere, &mut self.active, beta, rho, &self.sweep);
+                apply_sphere_state(pb, &sphere, &mut self.active, beta, fit, &self.sweep);
             features_screened = out.features_screened;
             if out.features_screened > 0 {
                 self.cols.rebuild(pb, &self.active);
@@ -236,7 +266,13 @@ impl<D: Design> ScreenState<D> {
             if out.beta_changed && self.gap <= self.tol_abs {
                 // Screening zeroed nonzero coords on a converging check:
                 // the cached gap is stale, recompute before deciding.
-                snap = DualSnapshot::compute_ctx(pb, beta, rho, lambda, &self.sweep);
+                snap = DualSnapshot::compute_state_ctx(
+                    pb,
+                    beta,
+                    fit.as_ref(),
+                    lambda,
+                    &self.sweep,
+                );
                 self.gap = snap.gap;
                 self.gap_evals += 1;
             }
@@ -263,16 +299,17 @@ impl<D: Design> ScreenState<D> {
     /// then hand the terminal dual point to the rule — sequential rules
     /// ([`crate::screening::RuleKind::GapSafeSeq`]) carry it to the next
     /// grid point of a warm-started path.
-    pub fn finalize(
+    pub fn finalize<F: Datafit>(
         &mut self,
-        pb: &SglProblem<D>,
+        pb: &SglProblem<D, F>,
         lambda: f64,
-        rule: &mut dyn ScreeningRule<D>,
+        rule: &mut dyn ScreeningRule<D, F>,
         beta: &[f64],
-        rho: &[f64],
+        fit: &FitState,
     ) {
         if !self.converged {
-            let snap = DualSnapshot::compute_ctx(pb, beta, rho, lambda, &self.sweep);
+            let snap =
+                DualSnapshot::compute_state_ctx(pb, beta, fit.as_ref(), lambda, &self.sweep);
             self.gap = snap.gap;
             self.gap_evals += 1;
             self.converged = self.gap <= self.tol_abs;

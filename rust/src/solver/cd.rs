@@ -22,6 +22,7 @@
 //! ISTA and FISTA.
 
 use super::active_set::ScreenState;
+use super::datafit::Datafit;
 use super::duality::DualSnapshot;
 use super::problem::SglProblem;
 use super::sweep::{self, SweepMode};
@@ -100,8 +101,8 @@ pub struct SolveResult {
 }
 
 /// Solve one SGL problem at a single `λ` with warm start `beta0`.
-pub fn solve<D: Design>(
-    pb: &SglProblem<D>,
+pub fn solve<D: Design, F: Datafit>(
+    pb: &SglProblem<D, F>,
     lambda: f64,
     beta0: Option<&[f64]>,
     opts: &SolveOptions,
@@ -112,12 +113,12 @@ pub fn solve<D: Design>(
 
 /// Solve with a caller-provided rule instance (path solves construct the
 /// rule once and reuse its precomputations across the grid).
-pub fn solve_with_rule<D: Design>(
-    pb: &SglProblem<D>,
+pub fn solve_with_rule<D: Design, F: Datafit>(
+    pb: &SglProblem<D, F>,
     lambda: f64,
     beta0: Option<&[f64]>,
     opts: &SolveOptions,
-    rule: &mut dyn ScreeningRule<D>,
+    rule: &mut dyn ScreeningRule<D, F>,
 ) -> SolveResult {
     assert!(lambda > 0.0, "lambda must be positive");
     let p = pb.p();
@@ -131,14 +132,9 @@ pub fn solve_with_rule<D: Design>(
         }
         None => vec![0.0; p],
     };
-    // rho = y - X beta.
-    let mut rho = pb.y.clone();
-    if beta.iter().any(|&b| b != 0.0) {
-        let xb = pb.x.matvec(&beta);
-        for (r, v) in rho.iter_mut().zip(&xb) {
-            *r -= v;
-        }
-    }
+    // The maintained datafit state: ρ = y − Xβ for quadratic, Xβ (plus
+    // the derived residual y − σ(Xβ)) for logistic.
+    let mut fit = pb.datafit.init_state(&pb.x, &pb.y, &beta);
 
     let mut epochs_done = 0usize;
     // Scratch block buffer sized to the largest group.
@@ -159,11 +155,12 @@ pub fn solve_with_rule<D: Design>(
             // dishonest. Every check would cost one extra matvec (§Perf);
             // the radius floor in DualSnapshot covers the short horizon.
             if state.gap_evals % 10 == 0 {
-                sweep::residual(&state.sweep, &state.cols, pb, &beta, &mut rho);
+                sweep::refresh_state(&state.sweep, &state.cols, pb, &beta, &mut fit);
             }
-            let snap = DualSnapshot::compute_ctx(pb, &beta, &rho, lambda, &state.sweep);
+            let snap =
+                DualSnapshot::compute_state_ctx(pb, &beta, fit.as_ref(), lambda, &state.sweep);
             let out =
-                state.gap_check(pb, lambda, epoch, rule, &mut beta, &mut rho, snap, &sw);
+                state.gap_check(pb, lambda, epoch, rule, &mut beta, &mut fit, snap, &sw);
             if out.converged {
                 epochs_done = epoch;
                 break;
@@ -171,9 +168,12 @@ pub fn solve_with_rule<D: Design>(
         }
 
         // ---- one pass over the (compacted) active groups: parallel
-        // bulk-synchronous rounds when the mode is on and the active set
-        // is large enough to feed the crew, else the serial cyclic sweep.
-        if state.sweep.engage(state.cols.groups().len(), 8) {
+        // bulk-synchronous rounds when the mode is on, the datafit admits
+        // the speculative accept test, and the active set is large enough
+        // to feed the crew, else the serial cyclic sweep.
+        if pb.datafit.supports_parallel_cd()
+            && state.sweep.engage(state.cols.groups().len(), 8)
+        {
             sweep::cd_epoch_parallel(
                 &state.sweep,
                 par_scratch.as_mut().expect("engage implies parallel mode"),
@@ -181,9 +181,10 @@ pub fn solve_with_rule<D: Design>(
                 &state.cols,
                 lambda,
                 &mut beta,
-                &mut rho,
+                &mut fit.main,
             );
         } else {
+            let sign = pb.datafit.delta_sign();
             for &(g, s, e) in state.cols.groups() {
                 let lg = pb.lipschitz[g];
                 if lg == 0.0 {
@@ -191,25 +192,39 @@ pub fn solve_with_rule<D: Design>(
                 }
                 let alpha_g = lambda / lg;
                 let d = e - s;
-                // u = beta_g + X_g^T rho / L_g (restricted to active
-                // features), streaming the packed columns.
-                for (k, idx) in (s..e).enumerate() {
-                    let j = state.cols.feature(idx);
-                    block[k] = beta[j] + state.cols.col_dot(pb, idx, &rho) / lg;
+                // u = beta_g + grad_g / L_g (restricted to active
+                // features), streaming the packed columns against the
+                // generalized residual. `L_g` already carries the
+                // datafit's gradient-Lipschitz scale (problem
+                // construction), so the MM majorization holds per block.
+                {
+                    let resid = fit.residual();
+                    for (k, idx) in (s..e).enumerate() {
+                        let j = state.cols.feature(idx);
+                        let corr = state.cols.col_dot(pb, idx, resid);
+                        block[k] = beta[j] + pb.datafit.grad_correction(corr, beta[j]) / lg;
+                    }
                 }
                 sgl_prox_inplace(
                     &mut block[..d],
                     pb.tau * alpha_g,
                     (1.0 - pb.tau) * pb.weights[g] * alpha_g,
                 );
-                // Apply deltas and maintain rho.
+                // Apply deltas, maintain the state vector, and re-sync the
+                // derived residual once per touched group (no-op for
+                // residual-state datafits).
+                let mut touched = false;
                 for (k, idx) in (s..e).enumerate() {
                     let j = state.cols.feature(idx);
                     let delta = block[k] - beta[j];
                     if delta != 0.0 {
                         beta[j] = block[k];
-                        state.cols.col_axpy(pb, idx, -delta, &mut rho);
+                        state.cols.col_axpy(pb, idx, sign * delta, &mut fit.main);
+                        touched = true;
                     }
+                }
+                if touched {
+                    pb.datafit.sync_residual(&pb.y, &mut fit);
                 }
             }
         }
@@ -217,7 +232,7 @@ pub fn solve_with_rule<D: Design>(
     }
 
     // Terminal gap (if the budget ran out) + the sequential-rule handoff.
-    state.finalize(pb, lambda, rule, &beta, &rho);
+    state.finalize(pb, lambda, rule, &beta, &fit);
     state.into_result(beta, epochs_done, sw.elapsed_s())
 }
 

@@ -1,0 +1,589 @@
+//! The `Datafit` abstraction: what the solver × screening × serving stack
+//! needs from the smooth loss `f` in `min_β f(β) + λ Ω(β)`.
+//!
+//! The GAP safe machinery of the source paper is not tied to the quadratic
+//! loss: the journal follow-up (Ndiaye et al., "Gap Safe screening rules
+//! for sparsity enforcing penalties", arXiv 1611.05780) derives the same
+//! dual-gap spheres for any smooth datafit with a Lipschitz gradient. This
+//! module is the seam that makes the crate generic over that choice, the
+//! way [`crate::linalg::design::Design`] made it generic over the matrix
+//! storage:
+//!
+//! - [`Quadratic`] — the extracted least-squares behavior the crate
+//!   started with, `f(β) = ½‖y − Xβ‖²` (+ an optional ridge term
+//!   `½μ‖β‖²` that realizes the elastic net *without* the historical
+//!   `[X; √μ I]` row-stacking trick);
+//! - [`Logistic`] — sparse-group logistic regression,
+//!   `f(β) = Σᵢ log(1 + exp(xᵢᵀβ)) − yᵢ xᵢᵀβ` with labels `yᵢ ∈ [0, 1]`.
+//!
+//! # The screening-safety contract
+//!
+//! Theorem 1 of the source paper discards a group/feature whenever a test
+//! over a *safe sphere* — a ball certified to contain the dual optimum
+//! `θ*` — passes. The sphere comes from two datafit-supplied ingredients,
+//! and both carry correctness obligations:
+//!
+//! 1. **Dual scaling.** The solver builds a dual point by rescaling the
+//!    generalized residual `r = −∇f(Xβ)` as `θ = r / s` with
+//!    `s = max(λ, Ω^D(Xᵀθ·s))`. For the resulting sphere to be *safe*, `θ`
+//!    must be **dual feasible**: `Ω^D` of the (datafit-adjusted, see
+//!    [`Datafit::adjust_xt`]) correlation vector must be ≤ λ after
+//!    scaling, and `θ` must lie in the domain of the conjugate loss
+//!    (`y − λθ ∈ [0, 1]` coordinatewise for [`Logistic`]). Moreover
+//!    [`crate::screening::gap_safe::GapSafeSeqRule`] *replays* a stored
+//!    `θ` at the **next, smaller** λ′ ≤ λ of a path — so feasibility must
+//!    survive shrinking λ. Both shipped datafits guarantee this because
+//!    `λ′/s ≤ λ/s ≤ 1` keeps the rescaled point a convex combination of
+//!    feasible points; a new datafit must uphold the same invariant or
+//!    sequential screening becomes unsafe (it would delete features that
+//!    are active at the optimum — silently wrong results, not slow ones).
+//! 2. **Curvature.** [`Datafit::curvature`] is the constant `c` in the
+//!    radius `r = √(2·c·gap) / λ`, valid iff the dual objective is
+//!    `λ²/c`-strongly concave over its domain. Quadratic: `c = 1`
+//!    (the dual is exactly `λ²`-strongly concave). Logistic: the conjugate
+//!    of the logit loss has second derivative `1/(v(1−v)) ≥ 4`, so the
+//!    dual is `4λ²`-strongly concave and `c = ¼`. Overstating `c` inflates
+//!    the sphere (slow but safe); *understating* it is unsafe.
+//!
+//! Everything else the trait exposes (per-column/per-group gradient
+//! Lipschitz scaling, the CD majorization hooks, the λ_max residual) only
+//! affects convergence speed, not safety.
+//!
+//! # Intercept handling
+//!
+//! Neither shipped datafit fits an intercept; callers center `y` (and
+//! columns) upstream, as in the source paper's experiments. The trait is
+//! deliberately intercept-free for now — an unpenalized intercept touches
+//! the dual feasibility set and is left to a future PR.
+
+use std::borrow::Cow;
+
+use crate::linalg::design::Design;
+use crate::linalg::ops::l2_norm_sq;
+
+/// Which datafit a problem uses — the config/CLI/wire-facing enumeration
+/// (mirrors `screening::RuleKind` and `config::DesignBackend`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FitKind {
+    /// Least squares `½‖y − Xβ‖²` (optionally ridge-augmented).
+    Quadratic,
+    /// Binary logistic regression with labels in `[0, 1]`.
+    Logistic,
+}
+
+impl FitKind {
+    /// Stable lowercase name used by configs, the CLI and the wire codec.
+    pub fn name(self) -> &'static str {
+        match self {
+            FitKind::Quadratic => "quadratic",
+            FitKind::Logistic => "logistic",
+        }
+    }
+
+    /// Every supported datafit, for help strings and validation messages.
+    pub fn all() -> &'static [FitKind] {
+        &[FitKind::Quadratic, FitKind::Logistic]
+    }
+
+    /// Parse a [`FitKind::name`] back (case-sensitive, like `RuleKind`).
+    pub fn from_name(s: &str) -> Option<FitKind> {
+        FitKind::all().iter().copied().find(|k| k.name() == s)
+    }
+}
+
+/// Per-solve iterate state a solver threads through its epochs.
+///
+/// The coordinate-descent hot loop maintains one n-vector incrementally
+/// (`main`), updating it by `±δ·X_j` as coefficients move. What that
+/// vector *is* depends on the datafit:
+///
+/// - [`Quadratic`]: `main = ρ = y − Xβ` (the residual itself; `aux` is
+///   `None` and [`FitState::residual`] borrows `main` directly — zero
+///   overhead versus the historical code);
+/// - [`Logistic`]: `main = Xβ` (the linear predictor, which *is* the
+///   quantity that moves linearly in β), with `aux = y − σ(Xβ)` — the
+///   negative gradient — refreshed via [`Datafit::sync_residual`]
+///   whenever `main` changed.
+#[derive(Clone, Debug, PartialEq)]
+pub struct FitState {
+    /// The incrementally-maintained vector (see type docs).
+    pub main: Vec<f64>,
+    /// The derived generalized residual when `main` is not already it.
+    pub aux: Option<Vec<f64>>,
+}
+
+impl FitState {
+    /// The generalized residual `r = −∇f(Xβ)` — the vector whose
+    /// correlations `Xᵀr` drive both the solver steps and the dual point.
+    #[inline]
+    pub fn residual(&self) -> &[f64] {
+        self.aux.as_deref().unwrap_or(&self.main)
+    }
+
+    /// Borrowed view for snapshot construction.
+    #[inline]
+    pub fn as_ref(&self) -> StateRef<'_> {
+        StateRef { main: &self.main, resid: self.residual() }
+    }
+}
+
+/// Borrowed view of a [`FitState`] (or of a bare residual slice, for the
+/// quadratic-only legacy entry points where `main` *is* the residual).
+#[derive(Clone, Copy)]
+pub struct StateRef<'a> {
+    /// See [`FitState::main`].
+    pub main: &'a [f64],
+    /// See [`FitState::residual`].
+    pub resid: &'a [f64],
+}
+
+/// A smooth datafit `f` with everything GAP safe screening needs: state
+/// maintenance for the solvers, loss/dual evaluation for the gap, and the
+/// scaling/curvature constants whose contract is documented at the
+/// [module level](self).
+///
+/// `Quadratic` behavior is the crate's historical behavior bit-for-bit:
+/// every method either reduces to the old arithmetic exactly or is gated
+/// behind `ridge != 0` / `grad_lip_scale != 1` guards.
+pub trait Datafit: Clone + Send + Sync + std::fmt::Debug + 'static {
+    /// The config/wire-facing tag for this datafit.
+    fn kind(&self) -> FitKind;
+
+    /// `true` iff [`FitState::main`] is itself the generalized residual
+    /// (no `aux`, no [`Datafit::sync_residual`] work). The legacy
+    /// residual-slice entry points in `duality`/`screening` assert this.
+    fn state_is_residual(&self) -> bool;
+
+    /// Factor applied to the quadratic-case Lipschitz constants
+    /// `‖X_g‖₂²`: `1` for least squares, `¼` for logistic (the logistic
+    /// Hessian satisfies `∇²f ⪯ ¼ XᵀX`). Folded into
+    /// `SglProblem::lipschitz` at construction so the CD hot loop is
+    /// untouched.
+    fn grad_lip_scale(&self) -> f64 {
+        1.0
+    }
+
+    /// The constant `c` in the safe radius `√(2·c·gap)/λ`; see the
+    /// [module docs](self) for the strong-concavity obligation.
+    fn curvature(&self) -> f64 {
+        1.0
+    }
+
+    /// The ℓ2 (elastic-net) coefficient `μ` in `f + ½μ‖β‖²`; `0` when
+    /// absent. Nonzero only for [`Quadratic`].
+    fn ridge(&self) -> f64 {
+        0.0
+    }
+
+    /// Validate the label vector at problem construction (logistic
+    /// requires `y ∈ [0, 1]`; quadratic accepts anything finite-ish).
+    fn validate_y(&self, _y: &[f64]) {}
+
+    /// The generalized residual at `β = 0` — the vector whose dual norm
+    /// of correlations defines `λ_max = Ω^D(Xᵀ·zero_residual(y))`.
+    /// Quadratic: `y` itself (borrowed). Logistic: `y − ½`.
+    fn zero_residual<'a>(&self, y: &'a [f64]) -> Cow<'a, [f64]>;
+
+    /// Scale of the objective at `β = 0`, used to turn the relative
+    /// tolerance into an absolute gap threshold. Quadratic: `‖y‖²`
+    /// (the historical choice, kept bit-identical). Logistic: `n·ln 2`
+    /// (= the primal value at `β = 0`).
+    fn gap_scale(&self, y: &[f64]) -> f64;
+
+    /// `f(β)` evaluated from the maintained state: `main` is
+    /// [`FitState::main`] for this datafit (the residual for quadratic,
+    /// the linear predictor for logistic).
+    fn loss(&self, y: &[f64], main: &[f64], beta: &[f64]) -> f64;
+
+    /// Dual objective at the (already-scaled) dual point `θ`.
+    /// `theta_aug_sq` is [`Datafit::theta_aug_sq`] for the same `β`/scale
+    /// — the squared norm of the implicit ridge-block coordinates of `θ`
+    /// (always `0` when `ridge() == 0`).
+    fn dual_at(&self, y: &[f64], theta: &[f64], theta_aug_sq: f64, lambda: f64) -> f64;
+
+    /// Squared norm of the implicit augmented-block dual coordinates
+    /// `θ_aug = −√μ·β / scale` (ridge quadratic only; `0` otherwise).
+    fn theta_aug_sq(&self, beta: &[f64], scale: f64) -> f64 {
+        let _ = (beta, scale);
+        0.0
+    }
+
+    /// Adjust a raw correlation vector `Xᵀr` into the full gradient-based
+    /// correlation the dual norm and sphere center must see. Identity
+    /// unless `ridge() != 0`, where it becomes `Xᵀr − μβ` (the implicit
+    /// `[X; √μI]ᵀ[ρ; −√μβ]` without materializing the stacked rows).
+    fn adjust_xt<'a>(&self, xt: &'a [f64], beta: &'a [f64]) -> Cow<'a, [f64]>;
+
+    /// Per-coordinate CD correction: map the raw correlation
+    /// `corr = X_jᵀr` to the negative partial derivative used by the
+    /// majorized CD step. Identity unless `ridge() != 0` (then
+    /// `corr − μ·β_j`).
+    fn grad_correction(&self, corr: f64, bj: f64) -> f64 {
+        let _ = bj;
+        corr
+    }
+
+    /// Sign with which a coefficient change `δ` enters `main`:
+    /// `main += delta_sign()·δ·X_j`. `−1` for the residual
+    /// (`ρ −= δX_j`), `+1` for the linear predictor (`Xβ += δX_j`).
+    fn delta_sign(&self) -> f64;
+
+    /// Recompute `aux` (the generalized residual) from `main`. No-op when
+    /// [`Datafit::state_is_residual`]. Solvers call this after every batch
+    /// of `main` updates and before the next read of
+    /// [`FitState::residual`].
+    fn sync_residual(&self, y: &[f64], state: &mut FitState);
+
+    /// Whether the speculative parallel CD epoch
+    /// (`sweep::cd_epoch_parallel`) is sound for this datafit. Its
+    /// accept/revert test measures `½Δ‖ρ‖²`, which is quadratic-specific,
+    /// so only the plain (`ridge == 0`) quadratic datafit opts in.
+    fn supports_parallel_cd(&self) -> bool;
+
+    /// Build the solver state for a (possibly warm) start `β`, exactly
+    /// replicating the historical residual initialization in the
+    /// quadratic case.
+    fn init_state<D: Design>(&self, x: &D, y: &[f64], beta: &[f64]) -> FitState;
+}
+
+/// Least squares `½‖y − Xβ‖²`, optionally with a ridge term `½μ‖β‖²`
+/// that realizes the elastic net through the datafit instead of the
+/// historical `[X; √μI]` row-stacking (see
+/// [`crate::solver::elastic_net`]).
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct Quadratic {
+    /// The ℓ2 coefficient `μ ≥ 0` (`0` = plain least squares).
+    pub ridge: f64,
+}
+
+impl Quadratic {
+    /// Ridge-augmented least squares (elastic net datafit).
+    pub fn with_ridge(lambda2: f64) -> Quadratic {
+        assert!(lambda2.is_finite() && lambda2 >= 0.0, "ridge must be finite and >= 0");
+        Quadratic { ridge: lambda2 }
+    }
+}
+
+impl Datafit for Quadratic {
+    fn kind(&self) -> FitKind {
+        FitKind::Quadratic
+    }
+
+    fn state_is_residual(&self) -> bool {
+        true
+    }
+
+    fn ridge(&self) -> f64 {
+        self.ridge
+    }
+
+    fn zero_residual<'a>(&self, y: &'a [f64]) -> Cow<'a, [f64]> {
+        Cow::Borrowed(y)
+    }
+
+    fn gap_scale(&self, y: &[f64]) -> f64 {
+        l2_norm_sq(y)
+    }
+
+    fn loss(&self, _y: &[f64], main: &[f64], beta: &[f64]) -> f64 {
+        let mut v = 0.5 * l2_norm_sq(main);
+        if self.ridge != 0.0 {
+            v += 0.5 * self.ridge * l2_norm_sq(beta);
+        }
+        v
+    }
+
+    fn dual_at(&self, y: &[f64], theta: &[f64], theta_aug_sq: f64, lambda: f64) -> f64 {
+        let d = crate::solver::duality::dual_value(y, theta, lambda);
+        if theta_aug_sq != 0.0 {
+            d - 0.5 * lambda * lambda * theta_aug_sq
+        } else {
+            d
+        }
+    }
+
+    fn theta_aug_sq(&self, beta: &[f64], scale: f64) -> f64 {
+        if self.ridge == 0.0 {
+            0.0
+        } else {
+            self.ridge * l2_norm_sq(beta) / (scale * scale)
+        }
+    }
+
+    fn adjust_xt<'a>(&self, xt: &'a [f64], beta: &'a [f64]) -> Cow<'a, [f64]> {
+        if self.ridge == 0.0 {
+            return Cow::Borrowed(xt);
+        }
+        Cow::Owned(xt.iter().zip(beta).map(|(x, b)| x - self.ridge * b).collect())
+    }
+
+    fn grad_correction(&self, corr: f64, bj: f64) -> f64 {
+        if self.ridge == 0.0 {
+            corr
+        } else {
+            corr - self.ridge * bj
+        }
+    }
+
+    fn delta_sign(&self) -> f64 {
+        -1.0
+    }
+
+    fn sync_residual(&self, _y: &[f64], _state: &mut FitState) {}
+
+    fn supports_parallel_cd(&self) -> bool {
+        self.ridge == 0.0
+    }
+
+    fn init_state<D: Design>(&self, x: &D, y: &[f64], beta: &[f64]) -> FitState {
+        // Exactly the historical warm-start residual: start from y, and
+        // only touch it when the start is actually warm.
+        let mut main = y.to_vec();
+        if beta.iter().any(|&b| b != 0.0) {
+            let xb = x.matvec(beta);
+            for (r, v) in main.iter_mut().zip(&xb) {
+                *r -= v;
+            }
+        }
+        FitState { main, aux: None }
+    }
+}
+
+/// Binary logistic regression,
+/// `f(β) = Σᵢ softplus(xᵢᵀβ) − yᵢ·xᵢᵀβ`, labels `yᵢ ∈ [0, 1]`.
+///
+/// The generalized residual is `r = y − σ(Xβ)`, so the solver sweeps keep
+/// the exact shape of the least-squares ones (`Xᵀr` correlations, `L_g`
+/// majorization with the folded `¼` Hessian bound); only the state
+/// refresh differs.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct Logistic;
+
+impl Datafit for Logistic {
+    fn kind(&self) -> FitKind {
+        FitKind::Logistic
+    }
+
+    fn state_is_residual(&self) -> bool {
+        false
+    }
+
+    fn grad_lip_scale(&self) -> f64 {
+        0.25
+    }
+
+    fn curvature(&self) -> f64 {
+        0.25
+    }
+
+    fn validate_y(&self, y: &[f64]) {
+        for (i, &v) in y.iter().enumerate() {
+            assert!(
+                v.is_finite() && (0.0..=1.0).contains(&v),
+                "logistic labels must lie in [0, 1]; y[{i}] = {v}"
+            );
+        }
+    }
+
+    fn zero_residual<'a>(&self, y: &'a [f64]) -> Cow<'a, [f64]> {
+        Cow::Owned(y.iter().map(|v| v - 0.5).collect())
+    }
+
+    fn gap_scale(&self, y: &[f64]) -> f64 {
+        y.len() as f64 * std::f64::consts::LN_2
+    }
+
+    fn loss(&self, y: &[f64], main: &[f64], _beta: &[f64]) -> f64 {
+        let mut acc = 0.0;
+        for (&yi, &xb) in y.iter().zip(main) {
+            acc += softplus(xb) - yi * xb;
+        }
+        acc
+    }
+
+    fn dual_at(&self, y: &[f64], theta: &[f64], _theta_aug_sq: f64, lambda: f64) -> f64 {
+        // D(θ) = −Σ negent(y − λθ); clamp guards rounding at the domain
+        // boundary (the scaling keeps y − λθ a convex combination of
+        // values in [0, 1], so any excursion is pure float noise).
+        let mut acc = 0.0;
+        for (&yi, &ti) in y.iter().zip(theta) {
+            acc += negent((yi - lambda * ti).clamp(0.0, 1.0));
+        }
+        -acc
+    }
+
+    fn adjust_xt<'a>(&self, xt: &'a [f64], _beta: &'a [f64]) -> Cow<'a, [f64]> {
+        Cow::Borrowed(xt)
+    }
+
+    fn delta_sign(&self) -> f64 {
+        1.0
+    }
+
+    fn sync_residual(&self, y: &[f64], state: &mut FitState) {
+        let aux = state.aux.as_mut().expect("logistic FitState carries aux");
+        for ((a, &yi), &xb) in aux.iter_mut().zip(y).zip(&state.main) {
+            *a = yi - sigmoid(xb);
+        }
+    }
+
+    fn supports_parallel_cd(&self) -> bool {
+        false
+    }
+
+    fn init_state<D: Design>(&self, x: &D, y: &[f64], beta: &[f64]) -> FitState {
+        let mut main = vec![0.0; y.len()];
+        if beta.iter().any(|&b| b != 0.0) {
+            x.matvec_into(beta, &mut main);
+        }
+        let mut state = FitState { main, aux: Some(vec![0.0; y.len()]) };
+        self.sync_residual(y, &mut state);
+        state
+    }
+}
+
+/// Numerically stable `σ(z) = 1/(1+e^{−z})` (no overflow for any finite
+/// `z`; exact 0/1 saturation only in the far tails where `e^{∓z}`
+/// underflows).
+#[inline]
+pub fn sigmoid(z: f64) -> f64 {
+    if z >= 0.0 {
+        let e = (-z).exp();
+        1.0 / (1.0 + e)
+    } else {
+        let e = z.exp();
+        e / (1.0 + e)
+    }
+}
+
+/// Numerically stable `log(1 + e^z)`.
+#[inline]
+pub fn softplus(z: f64) -> f64 {
+    if z > 0.0 {
+        z + (-z).exp().ln_1p()
+    } else {
+        z.exp().ln_1p()
+    }
+}
+
+/// Negative entropy `v·ln v + (1−v)·ln(1−v)` with the `0·ln 0 = 0`
+/// convention; the (negated) logistic conjugate term. `ln(1−v)` is
+/// evaluated as `ln_1p(−v)` for accuracy near `v = 0`.
+#[inline]
+pub fn negent(v: f64) -> f64 {
+    debug_assert!((0.0..=1.0).contains(&v));
+    let a = if v > 0.0 { v * v.ln() } else { 0.0 };
+    let b = if v < 1.0 { (1.0 - v) * (-v).ln_1p() } else { 0.0 };
+    a + b
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::Matrix;
+
+    #[test]
+    fn fit_kind_names_round_trip() {
+        for &k in FitKind::all() {
+            assert_eq!(FitKind::from_name(k.name()), Some(k));
+        }
+        assert_eq!(FitKind::from_name("huber"), None);
+    }
+
+    #[test]
+    fn sigmoid_and_softplus_are_stable_and_consistent() {
+        assert!((sigmoid(0.0) - 0.5).abs() < 1e-15);
+        assert!(sigmoid(800.0) <= 1.0 && sigmoid(800.0) > 1.0 - 1e-12);
+        assert!(sigmoid(-800.0) >= 0.0 && sigmoid(-800.0) < 1e-12);
+        assert!(softplus(-800.0) >= 0.0 && softplus(-800.0) < 1e-12);
+        assert!((softplus(800.0) - 800.0).abs() < 1e-9);
+        for &z in &[-30.0, -2.5, -1e-8, 0.0, 1e-8, 2.5, 30.0] {
+            // d/dz softplus = sigmoid (finite-difference check).
+            let h = 1e-6;
+            let fd = (softplus(z + h) - softplus(z - h)) / (2.0 * h);
+            assert!((fd - sigmoid(z)).abs() < 1e-6, "z={z}: {fd} vs {}", sigmoid(z));
+            // softplus(z) - z = softplus(-z) identity.
+            assert!((softplus(z) - z - softplus(-z)).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn negent_boundary_convention() {
+        assert_eq!(negent(0.0), 0.0);
+        assert_eq!(negent(1.0), 0.0);
+        assert!((negent(0.5) + std::f64::consts::LN_2).abs() < 1e-15);
+        // Symmetric, minimized at 1/2.
+        assert!((negent(0.2) - negent(0.8)).abs() < 1e-14);
+        assert!(negent(0.2) > negent(0.5));
+    }
+
+    #[test]
+    fn quadratic_init_state_is_warm_residual() {
+        let x = Matrix::from_row_major(&[1.0, 0.0, 0.0, 2.0], 2, 2);
+        let y = [1.0, 3.0];
+        let q = Quadratic::default();
+        let cold = q.init_state(&x, &y, &[0.0, 0.0]);
+        assert_eq!(cold.main, vec![1.0, 3.0]);
+        assert!(cold.aux.is_none());
+        assert_eq!(cold.residual(), &[1.0, 3.0]);
+        let warm = q.init_state(&x, &y, &[1.0, 0.5]);
+        assert_eq!(warm.main, vec![0.0, 2.0]);
+    }
+
+    #[test]
+    fn quadratic_ridge_adjustments_gate_cleanly() {
+        let plain = Quadratic::default();
+        let xt = [3.0, -1.0];
+        let beta = [2.0, 4.0];
+        assert!(matches!(plain.adjust_xt(&xt, &beta), Cow::Borrowed(_)));
+        assert_eq!(plain.grad_correction(3.0, 2.0), 3.0);
+        assert_eq!(plain.theta_aug_sq(&beta, 2.0), 0.0);
+        assert!(plain.supports_parallel_cd());
+
+        let en = Quadratic::with_ridge(0.5);
+        let adj = en.adjust_xt(&xt, &beta);
+        assert_eq!(adj.as_ref(), &[3.0 - 1.0, -1.0 - 2.0]);
+        assert_eq!(en.grad_correction(3.0, 2.0), 2.0);
+        // ‖−√μ β / s‖² = μ‖β‖²/s².
+        assert!((en.theta_aug_sq(&beta, 2.0) - 0.5 * 20.0 / 4.0).abs() < 1e-15);
+        assert!(!en.supports_parallel_cd());
+    }
+
+    #[test]
+    fn logistic_state_and_residual() {
+        let x = Matrix::from_row_major(&[1.0, 0.0, 0.0, -1.0], 2, 2);
+        let y = [1.0, 0.0];
+        let lg = Logistic;
+        let st = lg.init_state(&x, &y, &[0.0, 0.0]);
+        assert_eq!(st.main, vec![0.0, 0.0]);
+        let r = st.residual();
+        assert!((r[0] - 0.5).abs() < 1e-15 && (r[1] + 0.5).abs() < 1e-15);
+
+        let warm = lg.init_state(&x, &y, &[2.0, 0.0]);
+        assert_eq!(warm.main, vec![2.0, 0.0]);
+        assert!((warm.residual()[0] - (1.0 - sigmoid(2.0))).abs() < 1e-15);
+    }
+
+    #[test]
+    fn logistic_gap_closes_at_lambda_max_point() {
+        // At β = 0 the dual point θ = (y − ½)/λ_max satisfies
+        // y − λ_max·θ = ½ everywhere, so D(θ) = n·ln2 = P(0): zero gap.
+        let y = [1.0, 0.0, 1.0, 1.0];
+        let lg = Logistic;
+        let zero = lg.zero_residual(&y);
+        assert_eq!(zero.as_ref(), &[0.5, -0.5, 0.5, 0.5]);
+        let lambda_max = 2.0; // stand-in scale; any λ with θ = r/λ works
+        let theta: Vec<f64> = zero.iter().map(|v| v / lambda_max).collect();
+        let d = lg.dual_at(&y, &theta, 0.0, lambda_max);
+        let p0 = lg.loss(&y, &[0.0; 4], &[]);
+        assert!((p0 - 4.0 * std::f64::consts::LN_2).abs() < 1e-14);
+        assert!((d - p0).abs() < 1e-14, "dual {d} vs primal {p0}");
+        assert!((lg.gap_scale(&y) - p0).abs() < 1e-14);
+    }
+
+    #[test]
+    #[should_panic(expected = "logistic labels")]
+    fn logistic_rejects_out_of_range_labels() {
+        Logistic.validate_y(&[0.0, 1.5]);
+    }
+}

@@ -1,24 +1,49 @@
 //! Primal/dual objectives, dual-point construction by residual scaling
-//! (paper Eq. 15), duality gap, and the GAP safe radius (Theorem 2).
+//! (paper Eq. 15), duality gap, and the GAP safe radius (Theorem 2) —
+//! generic over the [`Datafit`]: the dual point is always the scaled
+//! generalized residual `r = −∇f(Xβ)`, the gap pairs the datafit's loss
+//! with its conjugate, and the radius uses the datafit's dual curvature
+//! (see the safety contract in [`crate::solver::datafit`]).
 
+use super::datafit::{Datafit, StateRef};
 use super::problem::SglProblem;
 use super::sweep::{self, SweepCtx};
 use crate::linalg::ops::{l2_norm, l2_norm_sq};
 use crate::linalg::Design;
 use crate::norms::sgl::omega;
 
-/// Primal objective `P_{λ,τ,w}(β) = ½‖ρ‖² + λΩ(β)` given the residual
+/// Primal objective `P_{λ,τ,w}(β) = f(β) + λΩ(β)` given the residual
 /// `ρ = y − Xβ` (kept up to date by the solvers; never recomputed here).
-pub fn primal_value<D: Design>(
-    pb: &SglProblem<D>,
+///
+/// Legacy residual-slice entry point: only valid for datafits whose
+/// maintained state *is* the residual (quadratic); use
+/// [`primal_value_state`] with the datafit's `main` vector otherwise.
+pub fn primal_value<D: Design, F: Datafit>(
+    pb: &SglProblem<D, F>,
     beta: &[f64],
     residual: &[f64],
     lambda: f64,
 ) -> f64 {
-    0.5 * l2_norm_sq(residual) + lambda * omega(beta, &pb.groups, pb.tau, &pb.weights)
+    assert!(pb.datafit.state_is_residual(), "residual-slice primal needs a residual-state datafit");
+    primal_value_state(pb, beta, residual, lambda)
 }
 
-/// Dual objective `D_λ(θ) = ½‖y‖² − λ²/2 ‖θ − y/λ‖²` (Eq. 6).
+/// Primal objective from the datafit's maintained state vector
+/// ([`crate::solver::datafit::FitState::main`]: the residual for
+/// quadratic, the linear predictor for logistic).
+pub fn primal_value_state<D: Design, F: Datafit>(
+    pb: &SglProblem<D, F>,
+    beta: &[f64],
+    main: &[f64],
+    lambda: f64,
+) -> f64 {
+    pb.datafit.loss(&pb.y, main, beta) + lambda * omega(beta, &pb.groups, pb.tau, &pb.weights)
+}
+
+/// Quadratic dual objective `D_λ(θ) = ½‖y‖² − λ²/2 ‖θ − y/λ‖²` (Eq. 6).
+/// Kept as a free function — it is the least-squares conjugate that
+/// [`crate::solver::datafit::Quadratic`] delegates to, and several tests
+/// pin its exact arithmetic.
 pub fn dual_value(y: &[f64], theta: &[f64], lambda: f64) -> f64 {
     debug_assert_eq!(y.len(), theta.len());
     let dist_sq: f64 = y
@@ -32,34 +57,45 @@ pub fn dual_value(y: &[f64], theta: &[f64], lambda: f64) -> f64 {
     0.5 * l2_norm_sq(y) - 0.5 * lambda * lambda * dist_sq
 }
 
-/// A dual-feasible point built from the current residual plus everything
-/// the screening rules need alongside it.
+/// A dual-feasible point built from the current generalized residual plus
+/// everything the screening rules need alongside it.
 #[derive(Clone, Debug)]
 pub struct DualSnapshot {
-    /// Dual feasible `θ = ρ / max(λ, Ω^D(Xᵀρ))` (Eq. 15).
+    /// Dual feasible `θ = r / max(λ, Ω^D(Xᵀr))` (Eq. 15), `r` the
+    /// generalized residual (`y − Xβ` quadratic, `y − σ(Xβ)` logistic).
     pub theta: Vec<f64>,
     /// `Xᵀθ` (reused by every screening test; computing it dominates the
-    /// screening cost so it is built once from `Xᵀρ`).
+    /// screening cost so it is built once from `Xᵀr`), including the
+    /// datafit's ridge adjustment when present.
     pub xt_theta: Vec<f64>,
-    /// `Ω^D(Xᵀρ)` — the dual norm of the unscaled correlation vector.
+    /// `Ω^D(Xᵀr)` — the dual norm of the unscaled (adjusted) correlation
+    /// vector.
     pub dual_norm_xt_rho: f64,
+    /// Squared norm of the implicit ridge-block coordinates of `θ`
+    /// (elastic-net quadratic only; `0` otherwise). Carried so sequential
+    /// screening can re-evaluate the dual at later, smaller λ without the
+    /// original `β`.
+    pub theta_aug_sq: f64,
     /// Primal objective at the current `β`.
     pub primal: f64,
     /// Dual objective at `θ`.
     pub dual: f64,
     /// Duality gap `P(β) − D(θ)` (clamped at 0 against round-off).
     pub gap: f64,
-    /// GAP safe radius `sqrt(2·gap/λ²)` (Theorem 2).
+    /// GAP safe radius `sqrt(2·c·gap)/λ` (Theorem 2; `c` the datafit
+    /// curvature — 1 for quadratic, ¼ for logistic).
     pub radius: f64,
 }
 
 impl DualSnapshot {
     /// Build the snapshot from the current iterate.
     ///
-    /// `residual` must equal `y − Xβ`. Cost: one `Xᵀρ` product (`O(np)`)
-    /// plus `O(p)` dual-norm work.
-    pub fn compute<D: Design>(
-        pb: &SglProblem<D>,
+    /// Legacy residual-slice entry point (`residual` must equal `y − Xβ`):
+    /// only valid for residual-state datafits; generic solvers use
+    /// [`compute_state_ctx`](Self::compute_state_ctx). Cost: one `Xᵀρ`
+    /// product (`O(np)`) plus `O(p)` dual-norm work.
+    pub fn compute<D: Design, F: Datafit>(
+        pb: &SglProblem<D, F>,
         beta: &[f64],
         residual: &[f64],
         lambda: f64,
@@ -71,22 +107,45 @@ impl DualSnapshot {
     /// dual norm fanned over a [`SweepCtx`] crew — per-column dots and
     /// per-group ε-norms are independent, so the parallel snapshot is
     /// bit-identical to the serial one.
-    pub fn compute_ctx<D: Design>(
-        pb: &SglProblem<D>,
+    pub fn compute_ctx<D: Design, F: Datafit>(
+        pb: &SglProblem<D, F>,
         beta: &[f64],
         residual: &[f64],
         lambda: f64,
         ctx: &SweepCtx,
     ) -> Self {
+        assert!(pb.datafit.state_is_residual(), "residual-slice snapshot needs a residual-state datafit");
+        Self::compute_state_ctx(pb, beta, StateRef { main: residual, resid: residual }, lambda, ctx)
+    }
+
+    /// Snapshot from a full datafit state (serial convenience).
+    pub fn compute_state<D: Design, F: Datafit>(
+        pb: &SglProblem<D, F>,
+        beta: &[f64],
+        state: StateRef<'_>,
+        lambda: f64,
+    ) -> Self {
+        Self::compute_state_ctx(pb, beta, state, lambda, &SweepCtx::serial())
+    }
+
+    /// Snapshot from a full datafit state: the datafit-generic engine
+    /// behind every other constructor.
+    pub fn compute_state_ctx<D: Design, F: Datafit>(
+        pb: &SglProblem<D, F>,
+        beta: &[f64],
+        state: StateRef<'_>,
+        lambda: f64,
+        ctx: &SweepCtx,
+    ) -> Self {
         let mut xt_rho = vec![0.0; pb.p()];
-        sweep::xt_full(ctx, pb, residual, &mut xt_rho);
-        Self::compute_with_xt_rho_ctx(pb, beta, residual, &xt_rho, lambda, ctx)
+        sweep::xt_full(ctx, pb, state.resid, &mut xt_rho);
+        Self::compute_state_with_xt_rho_ctx(pb, beta, state, &xt_rho, lambda, ctx)
     }
 
     /// Variant for callers that already hold `Xᵀρ` (the XLA engine and the
-    /// perf-tuned CD loop reuse buffers).
-    pub fn compute_with_xt_rho<D: Design>(
-        pb: &SglProblem<D>,
+    /// perf-tuned CD loop reuse buffers). Legacy residual-slice form.
+    pub fn compute_with_xt_rho<D: Design, F: Datafit>(
+        pb: &SglProblem<D, F>,
         beta: &[f64],
         residual: &[f64],
         xt_rho: &[f64],
@@ -97,20 +156,43 @@ impl DualSnapshot {
 
     /// [`compute_with_xt_rho`](Self::compute_with_xt_rho), dual norm on
     /// the sweep crew.
-    pub fn compute_with_xt_rho_ctx<D: Design>(
-        pb: &SglProblem<D>,
+    pub fn compute_with_xt_rho_ctx<D: Design, F: Datafit>(
+        pb: &SglProblem<D, F>,
         beta: &[f64],
         residual: &[f64],
         xt_rho: &[f64],
         lambda: f64,
         ctx: &SweepCtx,
     ) -> Self {
-        let dual_norm = sweep::omega_dual(ctx, xt_rho, &pb.groups, pb.tau, &pb.weights);
+        assert!(pb.datafit.state_is_residual(), "residual-slice snapshot needs a residual-state datafit");
+        Self::compute_state_with_xt_rho_ctx(
+            pb,
+            beta,
+            StateRef { main: residual, resid: residual },
+            xt_rho,
+            lambda,
+            ctx,
+        )
+    }
+
+    /// The datafit-generic snapshot core. `xt_rho` is the **raw**
+    /// correlation `Xᵀ·state.resid`; any ridge adjustment is applied here.
+    pub fn compute_state_with_xt_rho_ctx<D: Design, F: Datafit>(
+        pb: &SglProblem<D, F>,
+        beta: &[f64],
+        state: StateRef<'_>,
+        xt_rho: &[f64],
+        lambda: f64,
+        ctx: &SweepCtx,
+    ) -> Self {
+        let adjusted = pb.datafit.adjust_xt(xt_rho, beta);
+        let dual_norm = sweep::omega_dual(ctx, &adjusted, &pb.groups, pb.tau, &pb.weights);
         let scale = lambda.max(dual_norm);
-        let theta: Vec<f64> = residual.iter().map(|r| r / scale).collect();
-        let xt_theta: Vec<f64> = xt_rho.iter().map(|v| v / scale).collect();
-        let primal = primal_value(pb, beta, residual, lambda);
-        let dual = dual_value(&pb.y, &theta, lambda);
+        let theta: Vec<f64> = state.resid.iter().map(|r| r / scale).collect();
+        let xt_theta: Vec<f64> = adjusted.iter().map(|v| v / scale).collect();
+        let theta_aug_sq = pb.datafit.theta_aug_sq(beta, scale);
+        let primal = primal_value_state(pb, beta, state.main, lambda);
+        let dual = pb.datafit.dual_at(&pb.y, &theta, theta_aug_sq, lambda);
         let gap = (primal - dual).max(0.0);
         // The radius uses a *floored* gap: near convergence the computed
         // P - D can round to (or below) zero while the true gap is at the
@@ -118,11 +200,21 @@ impl DualSnapshot {
         // unsafely screen boundary-active groups (where Thm. 1 holds with
         // equality). The floor is the cancellation error scale of P - D.
         let float_floor = 16.0 * f64::EPSILON * (primal.abs() + dual.abs());
-        let radius = (2.0 * gap.max(float_floor)).sqrt() / lambda;
-        DualSnapshot { theta, xt_theta, dual_norm_xt_rho: dual_norm, primal, dual, gap, radius }
+        let radius = (2.0 * pb.datafit.curvature() * gap.max(float_floor)).sqrt() / lambda;
+        DualSnapshot {
+            theta,
+            xt_theta,
+            dual_norm_xt_rho: dual_norm,
+            theta_aug_sq,
+            primal,
+            dual,
+            gap,
+            radius,
+        }
     }
 
-    /// `‖θ − y/λ‖` — needed by the static/dynamic/DST3 sphere radii.
+    /// `‖θ − y/λ‖` — needed by the static/dynamic/DST3 sphere radii
+    /// (quadratic-only rules).
     pub fn dist_to_y_over_lambda(&self, y: &[f64], lambda: f64) -> f64 {
         let d: f64 = self
             .theta
@@ -137,15 +229,19 @@ impl DualSnapshot {
     }
 }
 
-/// Convenience: duality gap for given `β` (recomputes the residual).
-pub fn duality_gap<D: Design>(pb: &SglProblem<D>, beta: &[f64], lambda: f64) -> f64 {
-    let xb = pb.x.matvec(beta);
-    let residual: Vec<f64> = pb.y.iter().zip(&xb).map(|(y, v)| y - v).collect();
-    DualSnapshot::compute(pb, beta, &residual, lambda).gap
+/// Convenience: duality gap for given `β` (recomputes the state from
+/// scratch, any datafit).
+pub fn duality_gap<D: Design, F: Datafit>(
+    pb: &SglProblem<D, F>,
+    beta: &[f64],
+    lambda: f64,
+) -> f64 {
+    let state = pb.datafit.init_state(&pb.x, &pb.y, beta);
+    DualSnapshot::compute_state(pb, beta, state.as_ref(), lambda).gap
 }
 
 /// Sanity helper used across tests: `‖y − Xβ‖` from scratch.
-pub fn residual_norm<D: Design>(pb: &SglProblem<D>, beta: &[f64]) -> f64 {
+pub fn residual_norm<D: Design, F: Datafit>(pb: &SglProblem<D, F>, beta: &[f64]) -> f64 {
     let xb = pb.x.matvec(beta);
     let r: Vec<f64> = pb.y.iter().zip(&xb).map(|(y, v)| y - v).collect();
     l2_norm(&r)
@@ -156,6 +252,7 @@ mod tests {
     use super::*;
     use crate::linalg::Matrix;
     use crate::norms::sgl::{in_dual_unit_ball, omega_dual};
+    use crate::solver::datafit::{Logistic, Quadratic};
     use crate::solver::groups::Groups;
     use crate::util::rng::Pcg;
 
@@ -165,6 +262,15 @@ mod tests {
         let x = Matrix::from_fn(12, groups.p(), |_, _| rng.normal());
         let y: Vec<f64> = (0..12).map(|_| rng.normal()).collect();
         SglProblem::new(x, y, groups, 0.4)
+    }
+
+    fn random_logistic(seed: u64) -> SglProblem<Matrix, Logistic> {
+        let groups = Groups::from_sizes(&[3, 2, 3]);
+        let mut rng = Pcg::seeded(seed);
+        let x = Matrix::from_fn(12, groups.p(), |_, _| rng.normal());
+        let y: Vec<f64> = (0..12).map(|_| if rng.uniform() < 0.5 { 0.0 } else { 1.0 }).collect();
+        let w = groups.sqrt_size_weights();
+        SglProblem::with_datafit(x, y, groups, 0.4, w, Logistic)
     }
 
     #[test]
@@ -199,6 +305,7 @@ mod tests {
         for (a, b) in snap.xt_theta.iter().zip(&explicit) {
             assert!((a - b).abs() < 1e-10);
         }
+        assert_eq!(snap.theta_aug_sq, 0.0);
     }
 
     #[test]
@@ -293,5 +400,71 @@ mod tests {
             "dist {dist} > radius {}",
             early.radius
         );
+    }
+
+    #[test]
+    fn ridge_snapshot_matches_explicit_row_stacking() {
+        // The implicit elastic-net datafit must produce the same gap as
+        // the historical [X; sqrt(mu) I] augmentation to rounding error.
+        let pb = random_problem(14);
+        let mu = 0.3;
+        let en = SglProblem::with_datafit(
+            pb.x.clone(),
+            pb.y.clone(),
+            pb.groups.clone(),
+            pb.tau,
+            pb.weights.clone(),
+            Quadratic::with_ridge(mu),
+        );
+        let stacked_x = pb.x.vstack(&Matrix::scaled_identity(pb.p(), mu.sqrt()));
+        let mut stacked_y = pb.y.clone();
+        stacked_y.extend(std::iter::repeat(0.0).take(pb.p()));
+        let aug = SglProblem::with_weights(
+            stacked_x,
+            stacked_y,
+            pb.groups.clone(),
+            pb.tau,
+            pb.weights.clone(),
+        );
+        let mut rng = Pcg::seeded(321);
+        let lambda = 0.4 * en.lambda_max();
+        for _ in 0..5 {
+            let beta: Vec<f64> = (0..pb.p()).map(|_| rng.normal() * 0.2).collect();
+            let g_en = duality_gap(&en, &beta, lambda);
+            let g_aug = duality_gap(&aug, &beta, lambda);
+            assert!(
+                (g_en - g_aug).abs() < 1e-8 * (1.0 + g_aug.abs()),
+                "implicit {g_en} vs stacked {g_aug}"
+            );
+        }
+    }
+
+    #[test]
+    fn logistic_weak_duality_and_trivial_optimum() {
+        let pb = random_logistic(31);
+        let lmax = pb.lambda_max();
+        assert!(lmax > 0.0);
+        let zero = vec![0.0; pb.p()];
+        let g0 = duality_gap(&pb, &zero, lmax);
+        assert!(g0 < 1e-12, "gap at lambda_max should close exactly: {g0}");
+        assert!(duality_gap(&pb, &zero, 1.5 * lmax) < 1e-12);
+        let mut rng = Pcg::seeded(77);
+        for _ in 0..20 {
+            let beta: Vec<f64> = (0..pb.p()).map(|_| rng.normal() * 0.5).collect();
+            let lambda = rng.uniform_in(0.05, 1.2) * lmax;
+            let gap = duality_gap(&pb, &beta, lambda);
+            assert!(gap >= 0.0, "weak duality violated: {gap}");
+        }
+    }
+
+    #[test]
+    fn logistic_radius_uses_quarter_curvature() {
+        let pb = random_logistic(32);
+        let beta = vec![0.02; pb.p()];
+        let state = pb.datafit.init_state(&pb.x, &pb.y, &beta);
+        let lambda = 0.5 * pb.lambda_max();
+        let snap = DualSnapshot::compute_state(&pb, &beta, state.as_ref(), lambda);
+        assert!(snap.gap > 0.0);
+        assert!((snap.radius - (0.5 * snap.gap).sqrt() / lambda).abs() < 1e-14);
     }
 }

@@ -1,37 +1,56 @@
 //! Sparse-Group Lasso + Elastic-Net (paper App. D).
 //!
-//! The estimator `argmin ½‖y − Xβ‖² + λ₁Ω(β) + (λ₂/2)‖β‖²` reduces to a
-//! plain SGL problem on the augmented design
+//! The estimator `argmin ½‖y − Xβ‖² + λ₁Ω(β) + (λ₂/2)‖β‖²` is a plain SGL
+//! problem on the augmented design
 //!
 //! ```text
 //!   X̃ = [X; sqrt(λ₂) I_p] ∈ R^{(n+p)×p},   ỹ = [y; 0],
 //! ```
 //!
-//! so the whole GAP-safe machinery (screening included) applies unchanged.
+//! but the rows of `sqrt(λ₂) I_p` never need to exist: every quantity the
+//! solvers and the GAP-safe machinery read off `X̃` factors through the
+//! datafit ([`Quadratic::with_ridge`]) —
+//!
+//! - correlations: `X̃ᵀρ̃ = Xᵀρ − λ₂β` (the datafit's gradient correction),
+//! - column norms / Lipschitz: `‖X̃_j‖² = ‖X_j‖² + λ₂` (folded at
+//!   construction by [`SglProblem::with_datafit`]),
+//! - dual augmentation: `θ̃` carries `λ₂‖β‖²/scale²` into the gap
+//!   (`theta_aug_sq` on the snapshot).
+//!
+//! This keeps the design in its native backend — dense *or* CSC — instead
+//! of row-stacking a dense identity (which destroyed sparsity and forced
+//! the EN path dense-only).
 
+use super::datafit::Quadratic;
 use super::groups::Groups;
 use super::problem::SglProblem;
-use crate::linalg::Matrix;
+use crate::linalg::Design;
 
-/// Build the augmented SGL problem of Eq. (38).
-pub fn elastic_net_problem(
-    x: &Matrix,
+/// Build the SGL+EN problem of Eq. (38) with the ℓ2 term carried
+/// implicitly by the datafit (no row-stacking, any design backend).
+pub fn elastic_net_problem<D: Design>(
+    x: &D,
     y: &[f64],
     groups: Groups,
     tau: f64,
     lambda2: f64,
-) -> SglProblem {
-    assert!(lambda2 >= 0.0);
-    let p = x.n_cols();
-    let x_aug = x.vstack(&Matrix::scaled_identity(p, lambda2.sqrt()));
-    let mut y_aug = y.to_vec();
-    y_aug.extend(std::iter::repeat(0.0).take(p));
-    SglProblem::new(x_aug, y_aug, groups, tau)
+) -> SglProblem<D> {
+    assert!(lambda2 >= 0.0, "lambda2 must be non-negative");
+    let weights = groups.sqrt_size_weights();
+    SglProblem::with_datafit(
+        x.clone(),
+        y.to_vec(),
+        groups,
+        tau,
+        weights,
+        Quadratic::with_ridge(lambda2),
+    )
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::linalg::{CscMatrix, Matrix};
     use crate::screening::RuleKind;
     use crate::solver::cd::{solve, SolveOptions};
     use crate::util::rng::Pcg;
@@ -64,6 +83,51 @@ mod tests {
     }
 
     #[test]
+    fn implicit_ridge_matches_explicit_row_stacking() {
+        // The old formulation, built by hand: stack sqrt(lambda2)*I under X
+        // and zeros under y, then solve as plain SGL. The implicit-datafit
+        // problem must land on the same minimizer.
+        let (x, y, groups) = data(5);
+        let tau = 0.35;
+        let lambda2 = 3.0;
+        let p = x.n_cols();
+        let x_aug = x.vstack(&Matrix::scaled_identity(p, lambda2.sqrt()));
+        let mut y_aug = y.clone();
+        y_aug.extend(std::iter::repeat(0.0).take(p));
+        let pb_stacked = SglProblem::new(x_aug, y_aug, groups.clone(), tau);
+        let pb_en = elastic_net_problem(&x, &y, groups, tau, lambda2);
+        assert!((pb_stacked.lambda_max() - pb_en.lambda_max()).abs() < 1e-10);
+        let lambda = 0.15 * pb_en.lambda_max();
+        let opts = SolveOptions { tol: 1e-12, ..Default::default() };
+        let a = solve(&pb_stacked, lambda, None, &opts);
+        let b = solve(&pb_en, lambda, None, &opts);
+        for j in 0..p {
+            assert!(
+                (a.beta[j] - b.beta[j]).abs() < 1e-8,
+                "j={j}: {} vs {}",
+                a.beta[j],
+                b.beta[j]
+            );
+        }
+    }
+
+    #[test]
+    fn elastic_net_runs_on_csc() {
+        // The point of dropping the row-stacked identity: EN now works on
+        // sparse designs directly.
+        let (x, y, groups) = data(6);
+        let dense = elastic_net_problem(&x, &y, groups.clone(), 0.4, 1.5);
+        let sparse = elastic_net_problem(&CscMatrix::from_dense(&x), &y, groups, 0.4, 1.5);
+        let lambda = 0.2 * dense.lambda_max();
+        let opts = SolveOptions { tol: 1e-10, ..Default::default() };
+        let a = solve(&dense, lambda, None, &opts);
+        let b = solve(&sparse, lambda, None, &opts);
+        for j in 0..dense.p() {
+            assert!((a.beta[j] - b.beta[j]).abs() < 1e-7, "j={j}");
+        }
+    }
+
+    #[test]
     fn ridge_term_shrinks_solution() {
         let (x, y, groups) = data(2);
         let pb0 = elastic_net_problem(&x, &y, groups.clone(), 0.4, 0.0);
@@ -79,9 +143,9 @@ mod tests {
 
     #[test]
     fn en_optimality_condition() {
-        // Solve the augmented problem and verify the *original* EN
-        // optimality in terms of the fitted residual: for active coordinate
-        // j, X_j^T(y - X beta) - lambda2 beta_j must match the subgradient
+        // Solve the EN problem and verify the *original* EN optimality in
+        // terms of the fitted residual: for active coordinate j,
+        // X_j^T(y - X beta) - lambda2 beta_j must match the subgradient
         // lambda1*(tau*sign + (1-tau) w_g beta_j/||beta_g||).
         let (x, y, groups) = data(3);
         let tau = 0.5;

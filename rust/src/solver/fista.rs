@@ -15,8 +15,9 @@
 //!   (possible under momentum), restart (O'Donoghue & Candès).
 
 use super::active_set::ScreenState;
+use super::datafit::Datafit;
 use super::duality::DualSnapshot;
-use super::ista::global_lipschitz;
+use super::ista::global_step_lipschitz;
 use super::problem::SglProblem;
 use super::sweep;
 use crate::linalg::Design;
@@ -25,8 +26,8 @@ use crate::solver::cd::{SolveOptions, SolveResult};
 use crate::util::timer::Stopwatch;
 
 /// FISTA solve at a single `λ`. Interface mirrors `cd::solve`.
-pub fn solve_fista<D: Design>(
-    pb: &SglProblem<D>,
+pub fn solve_fista<D: Design, F: Datafit>(
+    pb: &SglProblem<D, F>,
     lambda: f64,
     beta0: Option<&[f64]>,
     opts: &SolveOptions,
@@ -37,17 +38,17 @@ pub fn solve_fista<D: Design>(
 
 /// FISTA with a caller-provided rule instance (path solves construct the
 /// rule once and carry it across the grid, exactly like `cd`).
-pub fn solve_fista_with_rule<D: Design>(
-    pb: &SglProblem<D>,
+pub fn solve_fista_with_rule<D: Design, F: Datafit>(
+    pb: &SglProblem<D, F>,
     lambda: f64,
     beta0: Option<&[f64]>,
     opts: &SolveOptions,
-    rule: &mut dyn ScreeningRule<D>,
+    rule: &mut dyn ScreeningRule<D, F>,
 ) -> SolveResult {
     assert!(lambda > 0.0, "lambda must be positive");
     let sw = Stopwatch::start();
     let p = pb.p();
-    let inv_l = 1.0 / global_lipschitz(pb).max(1e-300);
+    let inv_l = 1.0 / global_step_lipschitz(pb).max(1e-300);
     let mut state = ScreenState::new(pb, opts);
 
     let mut beta = beta0.map(|b| b.to_vec()).unwrap_or_else(|| vec![0.0; p]);
@@ -55,7 +56,9 @@ pub fn solve_fista_with_rule<D: Design>(
     let mut beta_next = beta.clone();
     let mut t_k = 1.0_f64;
     let mut epochs_done = 0usize;
-    let mut rho = vec![0.0; pb.n()];
+    // Scratch datafit state, refreshed for whichever iterate (β, z or
+    // β⁺) the next step reads.
+    let mut fit = pb.datafit.init_state(&pb.x, &pb.y, &beta);
     let mut xt_rho = vec![0.0; p];
     let mut prev_obj = f64::INFINITY;
     // Per-worker prox blocks, allocated once for the whole solve.
@@ -64,10 +67,11 @@ pub fn solve_fista_with_rule<D: Design>(
 
     for epoch in 0..opts.max_epochs {
         if epoch % opts.fce == 0 {
-            sweep::residual(&state.sweep, &state.cols, pb, &beta, &mut rho);
-            let snap = DualSnapshot::compute_ctx(pb, &beta, &rho, lambda, &state.sweep);
+            sweep::refresh_state(&state.sweep, &state.cols, pb, &beta, &mut fit);
+            let snap =
+                DualSnapshot::compute_state_ctx(pb, &beta, fit.as_ref(), lambda, &state.sweep);
             let out =
-                state.gap_check(pb, lambda, epoch, rule, &mut beta, &mut rho, snap, &sw);
+                state.gap_check(pb, lambda, epoch, rule, &mut beta, &mut fit, snap, &sw);
             if out.features_screened > 0 {
                 // Screening restart: the extrapolation history is stale,
                 // and the scratch iterates must drop the dead coordinates
@@ -88,8 +92,16 @@ pub fn solve_fista_with_rule<D: Design>(
         // context (parallel branches are bit-identical to the serial
         // loops: the prox reads a fixed Xᵀρ, the residual accumulates in
         // serial column order per row).
-        sweep::residual(&state.sweep, &state.cols, pb, &z, &mut rho);
-        sweep::xt_active(&state.sweep, &state.cols, pb, &rho, &mut xt_rho);
+        sweep::refresh_state(&state.sweep, &state.cols, pb, &z, &mut fit);
+        sweep::xt_active(&state.sweep, &state.cols, pb, fit.residual(), &mut xt_rho);
+        let mu = pb.datafit.ridge();
+        if mu != 0.0 {
+            // Ridge term of the gradient at the extrapolated point.
+            for k in 0..state.cols.n_active() {
+                let j = state.cols.feature(k);
+                xt_rho[j] -= mu * z[j];
+            }
+        }
         sweep::fista_sweep(
             &state.sweep,
             &state.cols,
@@ -103,8 +115,9 @@ pub fn solve_fista_with_rule<D: Design>(
         );
 
         // Function-value restart check.
-        sweep::residual(&state.sweep, &state.cols, pb, &beta_next, &mut rho);
-        let obj = crate::solver::duality::primal_value(pb, &beta_next, &rho, lambda);
+        sweep::refresh_state(&state.sweep, &state.cols, pb, &beta_next, &mut fit);
+        let obj =
+            crate::solver::duality::primal_value_state(pb, &beta_next, &fit.main, lambda);
         if obj > prev_obj {
             // Restart: fall back to a plain ISTA step from beta.
             t_k = 1.0;
@@ -128,10 +141,10 @@ pub fn solve_fista_with_rule<D: Design>(
         epochs_done = epoch + 1;
     }
 
-    // `rho` may hold the residual of z/beta_next; finalize() recomputes
+    // `fit` may hold the state of z/beta_next; finalize() recomputes
     // the terminal gap from `beta` only when convergence is still open.
-    sweep::residual(&state.sweep, &state.cols, pb, &beta, &mut rho);
-    state.finalize(pb, lambda, rule, &beta, &rho);
+    sweep::refresh_state(&state.sweep, &state.cols, pb, &beta, &mut fit);
+    state.finalize(pb, lambda, rule, &beta, &fit);
     state.into_result(beta, epochs_done, sw.elapsed_s())
 }
 

@@ -19,6 +19,7 @@
 //! of Eq. 15 needs every feature, screened or not.
 
 use super::active_set::ScreenState;
+use super::datafit::Datafit;
 use super::duality::DualSnapshot;
 use super::problem::SglProblem;
 use super::sweep;
@@ -28,8 +29,10 @@ use crate::screening::{make_rule, ScreeningRule};
 use crate::solver::cd::{SolveOptions, SolveResult};
 use crate::util::timer::Stopwatch;
 
-/// Global Lipschitz constant `‖X‖₂²` (top eigenvalue of `XᵀX`).
-pub fn global_lipschitz<D: Design>(pb: &SglProblem<D>) -> f64 {
+/// Global Lipschitz constant `‖X‖₂²` (top eigenvalue of `XᵀX`) of the
+/// design alone; see [`global_step_lipschitz`] for the full-gradient step
+/// constant of a given datafit.
+pub fn global_lipschitz<D: Design, F: Datafit>(pb: &SglProblem<D, F>) -> f64 {
     let x = &pb.x;
     power_iteration(
         pb.p(),
@@ -43,10 +46,27 @@ pub fn global_lipschitz<D: Design>(pb: &SglProblem<D>) -> f64 {
     )
 }
 
+/// Lipschitz constant of the full gradient `∇_β f(Xβ)`: `‖X‖₂²` scaled by
+/// the datafit's curvature bound (¼ for logistic) plus its ridge term.
+/// Plain least squares takes neither branch, so the value — and therefore
+/// every historical iterate — is bit-identical to [`global_lipschitz`].
+pub fn global_step_lipschitz<D: Design, F: Datafit>(pb: &SglProblem<D, F>) -> f64 {
+    let mut l = global_lipschitz(pb);
+    let gs = pb.datafit.grad_lip_scale();
+    if gs != 1.0 {
+        l *= gs;
+    }
+    let mu = pb.datafit.ridge();
+    if mu != 0.0 {
+        l += mu;
+    }
+    l
+}
+
 /// ISTA solve at a single `λ` with masked screening. Mirrors
 /// `solver::cd::solve`'s interface and result type.
-pub fn solve_ista<D: Design>(
-    pb: &SglProblem<D>,
+pub fn solve_ista<D: Design, F: Datafit>(
+    pb: &SglProblem<D, F>,
     lambda: f64,
     beta0: Option<&[f64]>,
     opts: &SolveOptions,
@@ -57,27 +77,21 @@ pub fn solve_ista<D: Design>(
 
 /// ISTA with a caller-provided rule instance (path solves construct the
 /// rule once and carry it across the grid, exactly like `cd`).
-pub fn solve_ista_with_rule<D: Design>(
-    pb: &SglProblem<D>,
+pub fn solve_ista_with_rule<D: Design, F: Datafit>(
+    pb: &SglProblem<D, F>,
     lambda: f64,
     beta0: Option<&[f64]>,
     opts: &SolveOptions,
-    rule: &mut dyn ScreeningRule<D>,
+    rule: &mut dyn ScreeningRule<D, F>,
 ) -> SolveResult {
     assert!(lambda > 0.0, "lambda must be positive");
     let sw = Stopwatch::start();
     let p = pb.p();
-    let l_global = global_lipschitz(pb).max(1e-300);
+    let l_global = global_step_lipschitz(pb).max(1e-300);
     let mut state = ScreenState::new(pb, opts);
 
     let mut beta = beta0.map(|b| b.to_vec()).unwrap_or_else(|| vec![0.0; p]);
-    let mut rho = pb.y.clone();
-    if beta.iter().any(|&b| b != 0.0) {
-        let xb = pb.x.matvec(&beta);
-        for (r, v) in rho.iter_mut().zip(&xb) {
-            *r -= v;
-        }
-    }
+    let mut fit = pb.datafit.init_state(&pb.x, &pb.y, &beta);
     let mut epochs_done = 0usize;
     let mut xt_rho = vec![0.0; p];
     // Per-worker prox blocks, allocated once for the whole solve.
@@ -88,17 +102,17 @@ pub fn solve_ista_with_rule<D: Design>(
         if epoch % opts.fce == 0 {
             // Full correlation vector: the dual scaling needs every
             // feature, so gap checks cost one full Xᵀρ by design.
-            sweep::xt_full(&state.sweep, pb, &rho, &mut xt_rho);
-            let snap = DualSnapshot::compute_with_xt_rho_ctx(
+            sweep::xt_full(&state.sweep, pb, fit.residual(), &mut xt_rho);
+            let snap = DualSnapshot::compute_state_with_xt_rho_ctx(
                 pb,
                 &beta,
-                &rho,
+                fit.as_ref(),
                 &xt_rho,
                 lambda,
                 &state.sweep,
             );
             let out =
-                state.gap_check(pb, lambda, epoch, rule, &mut beta, &mut rho, snap, &sw);
+                state.gap_check(pb, lambda, epoch, rule, &mut beta, &mut fit, snap, &sw);
             if out.converged {
                 epochs_done = epoch;
                 break;
@@ -109,7 +123,16 @@ pub fn solve_ista_with_rule<D: Design>(
         // separable prox group by group. Both sweeps route through the
         // sweep context: every group update reads the same Xᵀρ, so the
         // parallel branches are bit-identical to the serial loops.
-        sweep::xt_active(&state.sweep, &state.cols, pb, &rho, &mut xt_rho);
+        sweep::xt_active(&state.sweep, &state.cols, pb, fit.residual(), &mut xt_rho);
+        let mu = pb.datafit.ridge();
+        if mu != 0.0 {
+            // Ridge term of the gradient (implicit elastic net): the
+            // augmented rows contribute −μβ_j to each correlation.
+            for k in 0..state.cols.n_active() {
+                let j = state.cols.feature(k);
+                xt_rho[j] -= mu * beta[j];
+            }
+        }
         let changed = sweep::ista_sweep(
             &state.sweep,
             &state.cols,
@@ -120,15 +143,15 @@ pub fn solve_ista_with_rule<D: Design>(
             &xt_rho,
             &mut prox_scratch,
         );
-        // Full residual recompute over the active columns (matches the
+        // Full state recompute over the active columns (matches the
         // artifact's dataflow; screened coordinates are zero).
         if changed {
-            sweep::residual(&state.sweep, &state.cols, pb, &beta, &mut rho);
+            sweep::refresh_state(&state.sweep, &state.cols, pb, &beta, &mut fit);
         }
         epochs_done = epoch + 1;
     }
 
-    state.finalize(pb, lambda, rule, &beta, &rho);
+    state.finalize(pb, lambda, rule, &beta, &fit);
     state.into_result(beta, epochs_done, sw.elapsed_s())
 }
 

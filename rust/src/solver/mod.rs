@@ -2,7 +2,11 @@
 //!
 //! - [`groups`] — feature partitions;
 //! - [`problem`] — problem instances + precomputations + `λ_max` (Eq. 22),
-//!   generic over the [`crate::linalg::Design`] backend (dense or CSC);
+//!   generic over the [`crate::linalg::Design`] backend (dense or CSC)
+//!   and the [`datafit`] (least squares or logistic);
+//! - [`datafit`] — the smooth-loss abstraction: residual/state
+//!   maintenance, loss/dual evaluation, and the screening-safety
+//!   constants (dual scaling, curvature);
 //! - [`duality`] — primal/dual objectives, dual scaling (Eq. 15), GAP
 //!   radius (Thm. 2);
 //! - [`active_set`] — the shared active-set core: backend-generic column
@@ -22,6 +26,7 @@
 pub mod active_set;
 pub mod cd;
 pub mod cv;
+pub mod datafit;
 pub mod duality;
 pub mod elastic_net;
 pub mod fista;

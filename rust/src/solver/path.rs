@@ -24,6 +24,7 @@
 //! solves serial, a latency-critical single path should not.
 
 use super::cd::{solve_with_rule, SolveOptions, SolveResult};
+use super::datafit::{Datafit, Quadratic};
 use super::duality::DualSnapshot;
 use super::problem::{lambda_grid, SglProblem};
 use super::SolverKind;
@@ -81,7 +82,10 @@ impl PathResult {
 }
 
 /// Solve the full path with warm starts (CD inner solver).
-pub fn solve_path<D: Design>(pb: &SglProblem<D>, opts: &PathOptions) -> PathResult {
+pub fn solve_path<D: Design, F: Datafit>(
+    pb: &SglProblem<D, F>,
+    opts: &PathOptions,
+) -> PathResult {
     let lambda_max = pb.lambda_max();
     let lambdas = lambda_grid(lambda_max, opts.delta, opts.t_count);
     solve_path_on_grid(pb, &lambdas, opts)
@@ -89,8 +93,8 @@ pub fn solve_path<D: Design>(pb: &SglProblem<D>, opts: &PathOptions) -> PathResu
 
 /// Solve on an explicit λ grid with the CD inner solver (must be
 /// non-increasing for warm starts to make sense; this is asserted).
-pub fn solve_path_on_grid<D: Design>(
-    pb: &SglProblem<D>,
+pub fn solve_path_on_grid<D: Design, F: Datafit>(
+    pb: &SglProblem<D, F>,
     lambdas: &[f64],
     opts: &PathOptions,
 ) -> PathResult {
@@ -101,8 +105,8 @@ pub fn solve_path_on_grid<D: Design>(
 /// One rule instance is built per path and carried across grid points —
 /// with `GapSafeSeq` this is what makes epoch-0 screening fire for CD,
 /// ISTA and FISTA alike.
-pub fn solve_path_with<D: Design>(
-    pb: &SglProblem<D>,
+pub fn solve_path_with<D: Design, F: Datafit>(
+    pb: &SglProblem<D, F>,
     lambdas: &[f64],
     opts: &PathOptions,
     solver: SolverKind,
@@ -132,26 +136,26 @@ pub struct DualHandoff {
 /// Wraps the real rule to record the latest terminal dual point flowing
 /// through `on_solve_complete`, so the path engine can export it as a
 /// [`DualHandoff`] without changing any solver signature.
-struct CaptureRule<D: Design> {
-    inner: Box<dyn ScreeningRule<D>>,
+struct CaptureRule<D: Design, F: Datafit> {
+    inner: Box<dyn ScreeningRule<D, F>>,
     last: Option<(f64, DualSnapshot)>,
 }
 
-impl<D: Design> ScreeningRule<D> for CaptureRule<D> {
+impl<D: Design, F: Datafit> ScreeningRule<D, F> for CaptureRule<D, F> {
     fn kind(&self) -> RuleKind {
         self.inner.kind()
     }
 
     fn sphere(
         &mut self,
-        pb: &SglProblem<D>,
+        pb: &SglProblem<D, F>,
         lambda: f64,
         snap: &DualSnapshot,
     ) -> Option<Sphere> {
         self.inner.sphere(pb, lambda, snap)
     }
 
-    fn on_solve_complete(&mut self, pb: &SglProblem<D>, lambda: f64, snap: &DualSnapshot) {
+    fn on_solve_complete(&mut self, pb: &SglProblem<D, F>, lambda: f64, snap: &DualSnapshot) {
         self.last = Some((lambda, snap.clone()));
         self.inner.on_solve_complete(pb, lambda, snap);
     }
@@ -164,8 +168,8 @@ impl<D: Design> ScreeningRule<D> for CaptureRule<D> {
 /// bit-identical to never having stopped. Returns the path result together
 /// with this range's outgoing handoff (`None` only for an empty grid with
 /// no incoming handoff).
-pub fn solve_path_with_handoff<D: Design>(
-    pb: &SglProblem<D>,
+pub fn solve_path_with_handoff<D: Design, F: Datafit>(
+    pb: &SglProblem<D, F>,
     lambdas: &[f64],
     opts: &PathOptions,
     solver: SolverKind,
@@ -220,10 +224,10 @@ pub fn solve_path_with_handoff<D: Design>(
 }
 
 /// One independent λ-path solve inside a [`PathBatch`].
-pub struct PathBatchJob<D: Design = Matrix> {
+pub struct PathBatchJob<D: Design = Matrix, F: Datafit = Quadratic> {
     /// Problem instance. Shared via `Arc` so fan-outs over the same design
     /// (rule sweeps, tolerance sweeps) pay for a single copy of `X`.
-    pub pb: Arc<SglProblem<D>>,
+    pub pb: Arc<SglProblem<D, F>>,
     /// Explicit non-increasing grid; `None` derives the geometric grid of
     /// `opts` from `pb.lambda_max()`.
     pub lambdas: Option<Vec<f64>>,
@@ -243,22 +247,22 @@ pub struct PathBatchJob<D: Design = Matrix> {
 /// `benches/bench_path_batch.rs`. Results are returned in job order, and
 /// are bit-identical to running the jobs one after another — threading
 /// never changes any solve's arithmetic, only the wall-clock.
-pub struct PathBatch<D: Design = Matrix> {
-    jobs: Vec<PathBatchJob<D>>,
+pub struct PathBatch<D: Design = Matrix, F: Datafit = Quadratic> {
+    jobs: Vec<PathBatchJob<D, F>>,
 }
 
-impl<D: Design> Default for PathBatch<D> {
+impl<D: Design, F: Datafit> Default for PathBatch<D, F> {
     fn default() -> Self {
         PathBatch { jobs: Vec::new() }
     }
 }
 
-impl<D: Design> PathBatch<D> {
+impl<D: Design, F: Datafit> PathBatch<D, F> {
     pub fn new() -> Self {
         Self::default()
     }
 
-    pub fn push(&mut self, job: PathBatchJob<D>) {
+    pub fn push(&mut self, job: PathBatchJob<D, F>) {
         self.jobs.push(job);
     }
 
@@ -270,7 +274,7 @@ impl<D: Design> PathBatch<D> {
         self.jobs.is_empty()
     }
 
-    pub fn jobs(&self) -> &[PathBatchJob<D>] {
+    pub fn jobs(&self) -> &[PathBatchJob<D, F>] {
         &self.jobs
     }
 
@@ -282,11 +286,11 @@ impl<D: Design> PathBatch<D> {
         let threads = resolve_threads(threads);
         parallel_map(self.jobs.len(), threads, |i| {
             let job = &self.jobs[i];
-            let tau_clone: Option<SglProblem<D>> = job
+            let tau_clone: Option<SglProblem<D, F>> = job
                 .tau_override
                 .filter(|&tau| tau != job.pb.tau)
                 .map(|tau| job.pb.with_tau(tau));
-            let pb: &SglProblem<D> = match &tau_clone {
+            let pb: &SglProblem<D, F> = match &tau_clone {
                 Some(p) => p,
                 None => job.pb.as_ref(),
             };

@@ -4,20 +4,30 @@
 //! `‖X_g‖₂`, block Lipschitz constants `L_g = ‖X_g‖₂²`, and `λ_max`
 //! (Eq. 22).
 //!
-//! The instance is generic over the [`Design`] backend: `SglProblem`
-//! (no parameter) is the dense default, `SglProblem<CscMatrix>` the
-//! sparse instantiation. Everything downstream — solvers, screening
-//! rules, the path engine — is generic over the same parameter, so the
-//! whole stack runs unchanged on either backend.
+//! The instance is generic over the [`Design`] backend *and* the
+//! [`Datafit`]: `SglProblem` (no parameters) is the dense least-squares
+//! default, `SglProblem<CscMatrix>` the sparse instantiation, and
+//! `SglProblem<D, Logistic>` a sparse-group logistic problem. Everything
+//! downstream — solvers, screening rules, the path engine, the serving
+//! stack — is generic over the same pair, so the whole stack runs
+//! unchanged on any combination.
+//!
+//! Datafit-dependent constants are folded in **here, at construction**:
+//! a ridge term `μ` augments `‖X_j‖ → √(‖X_j‖²+μ)`, `‖X_g‖₂ →
+//! √(‖X_g‖₂²+μ)` and `L_g → L_g+μ` (the implicit `[X; √μI]` stacking),
+//! and the logistic Hessian bound scales `L_g → ¼L_g`. The folds are
+//! gated so the plain quadratic numbers stay bit-identical.
 
+use super::datafit::{Datafit, Quadratic};
 use super::groups::Groups;
 use crate::linalg::{Design, Matrix};
 use crate::norms::sgl::{omega_dual, omega_dual_argmax};
 
-/// An SGL problem `min_β ½‖y − Xβ‖² + λ Ω_{τ,w}(β)` minus the choice of
-/// `λ` (solvers take `λ` per call so one instance serves a whole path).
+/// An SGL problem `min_β f(β) + λ Ω_{τ,w}(β)` minus the choice of `λ`
+/// (solvers take `λ` per call so one instance serves a whole path). The
+/// smooth part `f` defaults to least squares `½‖y − Xβ‖²`.
 #[derive(Clone, Debug)]
-pub struct SglProblem<D: Design = Matrix> {
+pub struct SglProblem<D: Design = Matrix, F: Datafit = Quadratic> {
     pub x: D,
     pub y: Vec<f64>,
     pub groups: Groups,
@@ -25,28 +35,48 @@ pub struct SglProblem<D: Design = Matrix> {
     pub tau: f64,
     /// Group weights `w_g ≥ 0` (default `sqrt(n_g)`).
     pub weights: Vec<f64>,
-    /// `‖X_j‖` for every feature (feature-level screening, Eq. 13).
+    /// The smooth loss (see [`crate::solver::datafit`]).
+    pub datafit: F,
+    /// `‖X_j‖` for every feature (feature-level screening, Eq. 13),
+    /// ridge-folded when the datafit carries an ℓ2 term.
     pub col_norms: Vec<f64>,
-    /// `‖X_g‖₂` (spectral) for every group (group-level screening, Eq. 14).
+    /// `‖X_g‖₂` (spectral) for every group (group-level screening,
+    /// Eq. 14), ridge-folded likewise.
     pub group_spectral_norms: Vec<f64>,
-    /// Block Lipschitz constants `L_g = ‖X_g‖₂²` (§6).
+    /// Block majorization constants `L_g` (§6): `‖X_g‖₂²` scaled by the
+    /// datafit's gradient-Lipschitz factor (¼ for logistic).
     pub lipschitz: Vec<f64>,
 }
 
-impl<D: Design> SglProblem<D> {
-    /// Build a problem with the paper's default weights `w_g = sqrt(n_g)`.
+impl<D: Design> SglProblem<D, Quadratic> {
+    /// Build a least-squares problem with the paper's default weights
+    /// `w_g = sqrt(n_g)`.
     pub fn new(x: D, y: Vec<f64>, groups: Groups, tau: f64) -> Self {
         let w = groups.sqrt_size_weights();
         Self::with_weights(x, y, groups, tau, w)
     }
 
-    /// Build with explicit weights.
+    /// Build a least-squares problem with explicit weights.
     pub fn with_weights(
         x: D,
         y: Vec<f64>,
         groups: Groups,
         tau: f64,
         weights: Vec<f64>,
+    ) -> Self {
+        Self::with_datafit(x, y, groups, tau, weights, Quadratic::default())
+    }
+}
+
+impl<D: Design, F: Datafit> SglProblem<D, F> {
+    /// Build with an explicit datafit (and explicit weights).
+    pub fn with_datafit(
+        x: D,
+        y: Vec<f64>,
+        groups: Groups,
+        tau: f64,
+        weights: Vec<f64>,
+        datafit: F,
     ) -> Self {
         assert_eq!(x.n_rows(), y.len(), "X/y row mismatch");
         assert_eq!(x.n_cols(), groups.p(), "X/groups column mismatch");
@@ -56,11 +86,38 @@ impl<D: Design> SglProblem<D> {
             tau > 0.0 || weights.iter().all(|&w| w > 0.0),
             "tau = 0 with a zero weight is excluded (Omega not a norm)"
         );
-        let col_norms = x.col_norms();
-        let group_spectral_norms: Vec<f64> =
+        datafit.validate_y(&y);
+        let mut col_norms = x.col_norms();
+        let mut group_spectral_norms: Vec<f64> =
             groups.iter().map(|(_, a, b)| x.block_spectral_norm(a, b)).collect();
-        let lipschitz: Vec<f64> = group_spectral_norms.iter().map(|s| s * s).collect();
-        SglProblem { x, y, groups, tau, weights, col_norms, group_spectral_norms, lipschitz }
+        let mu = datafit.ridge();
+        if mu != 0.0 {
+            // Implicit [X; √μI] row-stacking: ‖·‖² picks up +μ.
+            for c in col_norms.iter_mut() {
+                *c = (*c * *c + mu).sqrt();
+            }
+            for s in group_spectral_norms.iter_mut() {
+                *s = (*s * *s + mu).sqrt();
+            }
+        }
+        let mut lipschitz: Vec<f64> = group_spectral_norms.iter().map(|s| s * s).collect();
+        let scale = datafit.grad_lip_scale();
+        if scale != 1.0 {
+            for l in lipschitz.iter_mut() {
+                *l *= scale;
+            }
+        }
+        SglProblem {
+            x,
+            y,
+            groups,
+            tau,
+            weights,
+            datafit,
+            col_norms,
+            group_spectral_norms,
+            lipschitz,
+        }
     }
 
     #[inline]
@@ -78,16 +135,19 @@ impl<D: Design> SglProblem<D> {
         self.groups.n_groups()
     }
 
-    /// Critical parameter `λ_max = Ω^D(Xᵀy)` (Eq. 9 / 22): the smallest `λ`
-    /// for which `β̂ = 0`.
+    /// Critical parameter `λ_max = Ω^D(Xᵀ r₀)` (Eq. 9 / 22) with `r₀` the
+    /// datafit's residual at `β = 0` (`y` for least squares, `y − ½` for
+    /// logistic): the smallest `λ` for which `β̂ = 0`.
     pub fn lambda_max(&self) -> f64 {
-        let xty = self.x.tmatvec(&self.y);
+        let r0 = self.datafit.zero_residual(&self.y);
+        let xty = self.x.tmatvec(&r0);
         omega_dual(&xty, &self.groups, self.tau, &self.weights)
     }
 
     /// `λ_max` together with the argmax group `g★` (used by DST3, App. C).
     pub fn lambda_max_argmax(&self) -> (usize, f64) {
-        let xty = self.x.tmatvec(&self.y);
+        let r0 = self.datafit.zero_residual(&self.y);
+        let xty = self.x.tmatvec(&r0);
         omega_dual_argmax(&xty, &self.groups, self.tau, &self.weights)
     }
 
@@ -127,6 +187,7 @@ mod tests {
     use super::*;
     use crate::linalg::CscMatrix;
     use crate::norms::sgl::omega;
+    use crate::solver::datafit::Logistic;
     use crate::util::rng::Pcg;
 
     fn random_problem(n: usize, sizes: &[usize], tau: f64, seed: u64) -> SglProblem {
@@ -212,6 +273,65 @@ mod tests {
         let pb = random_problem(8, &[3, 3, 3], 0.4, 3);
         let (_g, val) = pb.lambda_max_argmax();
         assert!((val - pb.lambda_max()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn ridge_datafit_folds_norms_and_lipschitz() {
+        let plain = random_problem(10, &[2, 3], 0.5, 21);
+        let mu = 0.7;
+        let en = SglProblem::with_datafit(
+            plain.x.clone(),
+            plain.y.clone(),
+            plain.groups.clone(),
+            plain.tau,
+            plain.weights.clone(),
+            Quadratic::with_ridge(mu),
+        );
+        for (c, ce) in plain.col_norms.iter().zip(&en.col_norms) {
+            assert!((ce - (c * c + mu).sqrt()).abs() < 1e-12);
+        }
+        for (l, le) in plain.lipschitz.iter().zip(&en.lipschitz) {
+            assert!((le - (l + mu)).abs() < 1e-9 * (l + mu));
+        }
+        // λ_max only sees the unstacked rows (the stacked ỹ block is 0).
+        assert!((plain.lambda_max() - en.lambda_max()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn logistic_datafit_scales_lipschitz_by_quarter() {
+        let plain = random_problem(10, &[2, 3], 0.5, 22);
+        let y01: Vec<f64> = (0..10).map(|i| (i % 2) as f64).collect();
+        let lg = SglProblem::with_datafit(
+            plain.x.clone(),
+            y01.clone(),
+            plain.groups.clone(),
+            plain.tau,
+            plain.weights.clone(),
+            Logistic,
+        );
+        for (l, ll) in plain.lipschitz.iter().zip(&lg.lipschitz) {
+            assert_eq!(*ll, 0.25 * l);
+        }
+        assert_eq!(plain.col_norms, lg.col_norms);
+        // λ_max = Ω^D(Xᵀ(y − ½)).
+        let r0: Vec<f64> = y01.iter().map(|v| v - 0.5).collect();
+        let expect = omega_dual(&lg.x.tmatvec(&r0), &lg.groups, lg.tau, &lg.weights);
+        assert_eq!(lg.lambda_max(), expect);
+    }
+
+    #[test]
+    #[should_panic(expected = "logistic labels")]
+    fn logistic_rejects_real_valued_targets() {
+        let groups = Groups::from_sizes(&[2]);
+        let x = Matrix::zeros(3, 2);
+        SglProblem::with_datafit(
+            x,
+            vec![0.0, 2.5, 1.0],
+            groups.clone(),
+            0.5,
+            groups.sqrt_size_weights(),
+            Logistic,
+        );
     }
 
     #[test]

@@ -23,7 +23,7 @@ use super::cd::{solve, SolveOptions};
 use super::groups::Groups;
 use super::problem::SglProblem;
 use crate::linalg::ops::l2_norm;
-use crate::linalg::Matrix;
+use crate::linalg::Design;
 use crate::norms::prox::soft_threshold_vec;
 use crate::util::timer::Stopwatch;
 
@@ -50,9 +50,11 @@ pub struct StrongResult {
 }
 
 /// Which groups the strong rule keeps for `λ` given the previous residual
-/// correlations `xt_rho_prev = Xᵀρ(λ_prev)`.
-pub fn strong_keep_groups(
-    pb: &SglProblem,
+/// correlations `xt_rho_prev = Xᵀρ(λ_prev)`. Derived for the plain
+/// least-squares dual, so the driver below is quadratic-only; the design
+/// backend is generic (dense and CSC alike).
+pub fn strong_keep_groups<D: Design>(
+    pb: &SglProblem<D>,
     xt_rho_prev: &[f64],
     lambda_prev: f64,
     lambda: f64,
@@ -74,19 +76,18 @@ pub fn strong_keep_groups(
 
 /// Build the restricted subproblem over the kept groups. Returns the
 /// subproblem and the kept group indices (for embedding solutions back).
-fn subproblem(pb: &SglProblem, keep: &[bool]) -> (SglProblem, Vec<usize>) {
+/// Column extraction goes through [`Design::select_cols`], so the
+/// restricted design stays in the backend's own format (packed dense,
+/// pruned CSC).
+fn subproblem<D: Design>(pb: &SglProblem<D>, keep: &[bool]) -> (SglProblem<D>, Vec<usize>) {
     let kept: Vec<usize> = (0..pb.n_groups()).filter(|&g| keep[g]).collect();
     let sizes: Vec<usize> = kept.iter().map(|&g| pb.groups.size(g)).collect();
-    let sub_p: usize = sizes.iter().sum();
-    let mut x = Matrix::zeros(pb.n(), sub_p);
-    let mut col = 0;
+    let mut cols = Vec::with_capacity(sizes.iter().sum());
     for &g in &kept {
         let (a, b) = pb.groups.bounds(g);
-        for j in a..b {
-            x.col_mut(col).copy_from_slice(pb.x.col(j));
-            col += 1;
-        }
+        cols.extend(a..b);
     }
+    let x = pb.x.select_cols(&cols);
     let weights: Vec<f64> = kept.iter().map(|&g| pb.weights[g]).collect();
     let sub = SglProblem::with_weights(
         x,
@@ -99,7 +100,7 @@ fn subproblem(pb: &SglProblem, keep: &[bool]) -> (SglProblem, Vec<usize>) {
 }
 
 /// Embed a subproblem solution into the full coefficient vector.
-fn embed(pb: &SglProblem, kept: &[usize], sub_beta: &[f64]) -> Vec<f64> {
+fn embed<D: Design>(pb: &SglProblem<D>, kept: &[usize], sub_beta: &[f64]) -> Vec<f64> {
     let mut beta = vec![0.0; pb.p()];
     let mut col = 0;
     for &g in kept {
@@ -113,7 +114,12 @@ fn embed(pb: &SglProblem, kept: &[usize], sub_beta: &[f64]) -> Vec<f64> {
 }
 
 /// Zero-block KKT check for the discarded groups; returns violators.
-fn kkt_violations(pb: &SglProblem, keep: &[bool], beta: &[f64], lambda: f64) -> Vec<usize> {
+fn kkt_violations<D: Design>(
+    pb: &SglProblem<D>,
+    keep: &[bool],
+    beta: &[f64],
+    lambda: f64,
+) -> Vec<usize> {
     let xb = pb.x.matvec(beta);
     let rho: Vec<f64> = pb.y.iter().zip(&xb).map(|(y, v)| y - v).collect();
     let mut out = Vec::new();
@@ -134,8 +140,8 @@ fn kkt_violations(pb: &SglProblem, keep: &[bool], beta: &[f64], lambda: f64) -> 
 
 /// Solve a non-increasing λ grid with sequential strong rules + KKT
 /// recovery. Returns per-λ results, stats, and the total wall time.
-pub fn solve_path_strong(
-    pb: &SglProblem,
+pub fn solve_path_strong<D: Design>(
+    pb: &SglProblem<D>,
     lambdas: &[f64],
     opts: &SolveOptions,
 ) -> (Vec<StrongResult>, StrongStats, f64) {
@@ -269,6 +275,34 @@ mod tests {
             pb.n_groups()
         );
         assert!(strong.iter().all(|r| r.converged));
+    }
+
+    #[test]
+    fn strong_path_on_csc_matches_dense() {
+        // The driver is generic over the design backend: the same data as
+        // CSC must walk the same keep/violation route and land on the same
+        // solutions (both solved to tight tolerance).
+        let pb = problem(5);
+        let pb_csc = SglProblem::new(
+            crate::linalg::CscMatrix::from_dense(&pb.x),
+            pb.y.clone(),
+            pb.groups.clone(),
+            pb.tau,
+        );
+        let lambdas = SglProblem::lambda_grid(pb.lambda_max(), 2.0, 6);
+        let opts = SolveOptions { tol: 1e-9, record_history: false, ..Default::default() };
+        let (dense, _, _) = solve_path_strong(&pb, &lambdas, &opts);
+        let (sparse, _, _) = solve_path_strong(&pb_csc, &lambdas, &opts);
+        for (a, b) in dense.iter().zip(&sparse) {
+            assert!(a.converged && b.converged);
+            for j in 0..pb.p() {
+                assert!(
+                    (a.beta[j] - b.beta[j]).abs() < 5e-6,
+                    "lambda={} j={j}",
+                    a.lambda
+                );
+            }
+        }
     }
 
     #[test]

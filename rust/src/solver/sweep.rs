@@ -38,6 +38,7 @@
 
 use super::active_set::ActiveCols;
 use super::cd::SolveOptions;
+use super::datafit::{Datafit, FitState};
 use super::problem::SglProblem;
 use crate::linalg::Design;
 use crate::norms::prox::sgl_prox_inplace;
@@ -205,7 +206,12 @@ impl Drop for SweepCtx {
 /// need every feature, screened or not). Each column is an independent
 /// dot product with a disjoint write: bit-identical to the serial
 /// `tmatvec_into` under any schedule.
-pub fn xt_full<D: Design>(ctx: &SweepCtx, pb: &SglProblem<D>, v: &[f64], xt: &mut [f64]) {
+pub fn xt_full<D: Design, F: Datafit>(
+    ctx: &SweepCtx,
+    pb: &SglProblem<D, F>,
+    v: &[f64],
+    xt: &mut [f64],
+) {
     let p = pb.p();
     debug_assert_eq!(xt.len(), p);
     if !ctx.engage(p, 64) {
@@ -222,10 +228,10 @@ pub fn xt_full<D: Design>(ctx: &SweepCtx, pb: &SglProblem<D>, v: &[f64], xt: &mu
 /// `xt[j] = X_jᵀv` for the active features only, streaming the packed
 /// columns (screened entries left untouched, exactly like
 /// [`ActiveCols::xt_into`]). Bit-identical to the serial sweep.
-pub fn xt_active<D: Design>(
+pub fn xt_active<D: Design, F: Datafit>(
     ctx: &SweepCtx,
     cols: &ActiveCols<D>,
-    pb: &SglProblem<D>,
+    pb: &SglProblem<D, F>,
     v: &[f64],
     xt: &mut [f64],
 ) {
@@ -246,10 +252,10 @@ pub fn xt_active<D: Design>(
 /// column's contribution to it in column order — the same per-row
 /// addition order as the serial [`ActiveCols::residual_into`], hence
 /// bit-identical results.
-pub fn residual<D: Design>(
+pub fn residual<D: Design, F: Datafit>(
     ctx: &SweepCtx,
     cols: &ActiveCols<D>,
-    pb: &SglProblem<D>,
+    pb: &SglProblem<D, F>,
     beta: &[f64],
     rho: &mut [f64],
 ) {
@@ -279,6 +285,63 @@ pub fn residual<D: Design>(
             }
         }
     });
+}
+
+/// `xb = Xβ` over the active columns, row-partitioned exactly like
+/// [`residual`] (same per-row accumulation order, hence bit-identical to
+/// [`ActiveCols::linear_predictor_into`]).
+pub fn linear_predictor<D: Design, F: Datafit>(
+    ctx: &SweepCtx,
+    cols: &ActiveCols<D>,
+    pb: &SglProblem<D, F>,
+    beta: &[f64],
+    xb: &mut [f64],
+) {
+    let n_active = cols.n_active();
+    let crew = match ctx.crew_if(n_active, 64) {
+        Some(c) => c,
+        None => {
+            cols.linear_predictor_into(pb, beta, xb);
+            return;
+        }
+    };
+    let n = pb.n();
+    let threads = crew.threads();
+    let out = SharedSlice::new(xb);
+    crew.run(&|w| {
+        let (row0, row1) = even_chunk(n, threads, w);
+        if row0 >= row1 {
+            return;
+        }
+        // SAFETY: row ranges are disjoint across workers.
+        let mine = unsafe { out.range_mut(row0, row1) };
+        mine.fill(0.0);
+        for k in 0..n_active {
+            let bj = beta[cols.feature(k)];
+            if bj != 0.0 {
+                cols.col_axpy_rows(pb, k, bj, row0, row1, mine);
+            }
+        }
+    });
+}
+
+/// Recompute the datafit state from scratch over the active columns: the
+/// periodic drift-correction refresh every solver runs. Rebuilds
+/// [`FitState::main`] with the kernel matching the datafit's state kind
+/// (residual vs linear predictor) and re-syncs the derived residual.
+pub fn refresh_state<D: Design, F: Datafit>(
+    ctx: &SweepCtx,
+    cols: &ActiveCols<D>,
+    pb: &SglProblem<D, F>,
+    beta: &[f64],
+    fit: &mut FitState,
+) {
+    if pb.datafit.state_is_residual() {
+        residual(ctx, cols, pb, beta, &mut fit.main);
+    } else {
+        linear_predictor(ctx, cols, pb, beta, &mut fit.main);
+    }
+    pb.datafit.sync_residual(&pb.y, fit);
 }
 
 /// The SGL dual norm `Ω^D(ξ)`, its per-group ε-norms evaluated in
@@ -322,10 +385,10 @@ impl ProxScratch {
 /// so groups are independent and the parallel branch is bit-identical to
 /// the serial loop. Returns whether any coefficient changed.
 #[allow(clippy::too_many_arguments)]
-pub fn ista_sweep<D: Design>(
+pub fn ista_sweep<D: Design, F: Datafit>(
     ctx: &SweepCtx,
     cols: &ActiveCols<D>,
-    pb: &SglProblem<D>,
+    pb: &SglProblem<D, F>,
     lambda: f64,
     l_global: f64,
     beta: &mut [f64],
@@ -404,10 +467,10 @@ pub fn ista_sweep<D: Design>(
 /// Bit-identical to the serial loop for the same reason as
 /// [`ista_sweep`].
 #[allow(clippy::too_many_arguments)]
-pub fn fista_sweep<D: Design>(
+pub fn fista_sweep<D: Design, F: Datafit>(
     ctx: &SweepCtx,
     cols: &ActiveCols<D>,
-    pb: &SglProblem<D>,
+    pb: &SglProblem<D, F>,
     lambda: f64,
     inv_l: f64,
     z: &[f64],
@@ -499,8 +562,8 @@ impl CdParScratch {
 /// `τ‖β_g‖₁ + (1−τ)w_g‖β_g‖` summed over the round's groups, reading
 /// coefficients by compact column through an accessor (old β before the
 /// commit, proposals after).
-fn round_omega<D: Design>(
-    pb: &SglProblem<D>,
+fn round_omega<D: Design, F: Datafit>(
+    pb: &SglProblem<D, F>,
     round_groups: impl Iterator<Item = (usize, usize, usize)>,
     coef: impl Fn(usize) -> f64,
 ) -> f64 {
@@ -548,15 +611,18 @@ fn round_omega<D: Design>(
 ///
 /// Callers gate this on [`SweepCtx::engage`] so every round updates at
 /// most half the active groups.
-pub fn cd_epoch_parallel<D: Design>(
+pub fn cd_epoch_parallel<D: Design, F: Datafit>(
     ctx: &SweepCtx,
     scratch: &mut CdParScratch,
-    pb: &SglProblem<D>,
+    pb: &SglProblem<D, F>,
     cols: &ActiveCols<D>,
     lambda: f64,
     beta: &mut [f64],
     rho: &mut [f64],
 ) {
+    // The bulk-synchronous accept test below prices a round by ½Δ‖ρ‖²,
+    // which is the loss change only for the plain quadratic datafit.
+    debug_assert!(pb.datafit.supports_parallel_cd());
     let crew = ctx.crew.as_ref().expect("parallel epoch requires a crew");
     let threads = crew.threads();
     debug_assert_eq!(scratch.barrier.participants(), threads);

@@ -1,0 +1,158 @@
+//! A small bounded map with least-recently-used eviction.
+//!
+//! Three serving-layer caches (the service's solved-path fingerprint
+//! cache, each remote worker's dataset store, and the fleet's dataset
+//! fingerprint registry) independently grew the same hand-rolled pattern:
+//! a `HashMap<K, (V, u64)>` stamped with a logical tick, evicted by a
+//! linear min-scan when past capacity. This module is that pattern, once,
+//! with the tick bookkeeping kept internal.
+//!
+//! Deliberately *not* a linked-list LRU: capacities here are small
+//! (tens to hundreds), eviction is rare, and the `O(len)` min-scan on
+//! insert keeps the structure index-free and trivially correct. Recency is
+//! a strict logical clock — `get`/`insert` bump it, `contains`/`peek` do
+//! not — so lookups that must not perturb eviction order have a
+//! side-effect-free spelling.
+
+use std::collections::HashMap;
+use std::hash::Hash;
+
+/// Bounded LRU map. Not thread-safe on its own; the serving layer wraps
+/// it in the same `Mutex`es that guarded the hand-rolled versions.
+#[derive(Clone, Debug)]
+pub struct LruCache<K: Eq + Hash + Clone, V> {
+    map: HashMap<K, (V, u64)>,
+    tick: u64,
+    cap: usize,
+}
+
+impl<K: Eq + Hash + Clone, V> LruCache<K, V> {
+    /// An empty cache evicting past `cap` entries (`cap >= 1`).
+    pub fn new(cap: usize) -> Self {
+        assert!(cap >= 1, "LruCache capacity must be at least 1");
+        LruCache { map: HashMap::new(), tick: 0, cap }
+    }
+
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.cap
+    }
+
+    /// Membership test. Does **not** refresh recency.
+    pub fn contains(&self, k: &K) -> bool {
+        self.map.contains_key(k)
+    }
+
+    /// Read without refreshing recency (metrics, assertions).
+    pub fn peek(&self, k: &K) -> Option<&V> {
+        self.map.get(k).map(|(v, _)| v)
+    }
+
+    /// Read and mark `k` most-recently-used.
+    pub fn get(&mut self, k: &K) -> Option<&V> {
+        self.tick += 1;
+        let tick = self.tick;
+        self.map.get_mut(k).map(|(v, t)| {
+            *t = tick;
+            &*v
+        })
+    }
+
+    /// Insert (or overwrite) and mark most-recently-used, then evict the
+    /// least-recently-used entries until back within capacity. Returns how
+    /// many entries were evicted (0 or 1 in steady state).
+    pub fn insert(&mut self, k: K, v: V) -> usize {
+        self.tick += 1;
+        self.map.insert(k, (v, self.tick));
+        let mut evicted = 0;
+        while self.map.len() > self.cap {
+            let oldest = self
+                .map
+                .iter()
+                .min_by_key(|(_, (_, t))| *t)
+                .map(|(k, _)| k.clone())
+                .expect("non-empty map over capacity");
+            self.map.remove(&oldest);
+            evicted += 1;
+        }
+        evicted
+    }
+
+    /// Remove an entry, returning its value if present.
+    pub fn remove(&mut self, k: &K) -> Option<V> {
+        self.map.remove(k).map(|(v, _)| v)
+    }
+
+    /// Iterate over entries in arbitrary order (no recency refresh).
+    pub fn iter(&self) -> impl Iterator<Item = (&K, &V)> {
+        self.map.iter().map(|(k, (v, _))| (k, v))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn insert_evicts_least_recently_used() {
+        let mut c = LruCache::new(2);
+        assert_eq!(c.insert(1, "a"), 0);
+        assert_eq!(c.insert(2, "b"), 0);
+        assert_eq!(c.insert(3, "c"), 1); // evicts 1
+        assert!(!c.contains(&1));
+        assert!(c.contains(&2) && c.contains(&3));
+        assert_eq!(c.len(), 2);
+    }
+
+    #[test]
+    fn get_refreshes_recency_but_contains_does_not() {
+        let mut c = LruCache::new(2);
+        c.insert(1, "a");
+        c.insert(2, "b");
+        assert_eq!(c.get(&1), Some(&"a")); // 1 now newest
+        c.insert(3, "c"); // evicts 2, not 1
+        assert!(c.contains(&1) && !c.contains(&2));
+
+        let mut d = LruCache::new(2);
+        d.insert(1, "a");
+        d.insert(2, "b");
+        assert!(d.contains(&1)); // no bump
+        assert!(d.peek(&1).is_some()); // no bump
+        d.insert(3, "c"); // evicts 1: contains/peek left it oldest
+        assert!(!d.contains(&1) && d.contains(&2));
+    }
+
+    #[test]
+    fn overwrite_does_not_evict() {
+        let mut c = LruCache::new(2);
+        c.insert(1, "a");
+        c.insert(2, "b");
+        assert_eq!(c.insert(1, "a2"), 0);
+        assert_eq!(c.len(), 2);
+        assert_eq!(c.peek(&1), Some(&"a2"));
+    }
+
+    #[test]
+    fn remove_and_iter() {
+        let mut c = LruCache::new(3);
+        c.insert(1, 10);
+        c.insert(2, 20);
+        assert_eq!(c.remove(&1), Some(10));
+        assert_eq!(c.remove(&1), None);
+        let all: Vec<_> = c.iter().map(|(k, v)| (*k, *v)).collect();
+        assert_eq!(all, vec![(2, 20)]);
+    }
+
+    #[test]
+    #[should_panic(expected = "capacity")]
+    fn zero_capacity_rejected() {
+        let _ = LruCache::<u32, u32>::new(0);
+    }
+}

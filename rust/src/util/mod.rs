@@ -9,6 +9,7 @@
 
 pub mod cli;
 pub mod json;
+pub mod lru;
 pub mod pool;
 pub mod proptest;
 pub mod rng;

@@ -20,9 +20,12 @@
 //!   is what makes a remote shard's result identical to a local solve.
 //! - **Dataset shipping** — [`WireDataset`] carries a whole problem
 //!   instance (dense column-major or CSC triplets, `y`, group sizes, τ,
-//!   weights) and is addressed by a content [`fingerprint`]
-//!   (64-bit FNV-1a over the canonical encoding): a fleet ships each
-//!   dataset to each worker once and refers to it by hash thereafter.
+//!   weights, and since v2 the [`WireDatafit`]) and is addressed by a
+//!   content [`fingerprint`] (64-bit FNV-1a over the canonical encoding):
+//!   a fleet ships each dataset to each worker once and refers to it by
+//!   hash thereafter. Two problems differing only in datafit hash
+//!   differently — a quadratic and a logistic fit of the same `(X, y)`
+//!   are different cache entries, never confused.
 //! - **Typed error frames** — remote failures come back as
 //!   [`RemoteError`] frames ([`RemoteErrorKind::UnknownDataset`] /
 //!   `SolveFailed` / `BadRequest`), not closed sockets, so the client
@@ -33,6 +36,7 @@
 use crate::linalg::{CscMatrix, Design, Matrix};
 use crate::screening::{ActiveSet, RuleKind};
 use crate::solver::cd::{CheckEvent, SolveOptions, SolveResult};
+use crate::solver::datafit::{Datafit, FitKind, Logistic, Quadratic};
 use crate::solver::duality::DualSnapshot;
 use crate::solver::groups::Groups;
 use crate::solver::path::{DualHandoff, PathOptions, PathResult};
@@ -45,7 +49,12 @@ use std::io::{Read, Write};
 /// Protocol revision carried in every frame. Bump on any layout change:
 /// mismatched peers fail with [`WireError::BadVersion`] instead of
 /// misinterpreting bytes.
-pub const WIRE_VERSION: u8 = 1;
+///
+/// **v2** (datafit layer): [`WireDataset`] and [`ShardRequest`] carry a
+/// [`WireDatafit`]; [`DualSnapshot`] frames carry `theta_aug_sq`. v1
+/// frames are rejected with [`WireError::BadVersion`] — a v1 peer's bytes
+/// would otherwise decode into a misaligned problem.
+pub const WIRE_VERSION: u8 = 2;
 
 /// Hard cap on one frame's body (2 GiB): a corrupt length prefix must
 /// not become a giant allocation.
@@ -339,6 +348,7 @@ fn put_snapshot(e: &mut Enc, s: &DualSnapshot) {
     e.f64s(&s.theta);
     e.f64s(&s.xt_theta);
     e.f64(s.dual_norm_xt_rho);
+    e.f64(s.theta_aug_sq);
     e.f64(s.primal);
     e.f64(s.dual);
     e.f64(s.gap);
@@ -350,6 +360,7 @@ fn get_snapshot(d: &mut Dec) -> Result<DualSnapshot, WireError> {
         theta: d.f64s()?,
         xt_theta: d.f64s()?,
         dual_norm_xt_rho: d.f64()?,
+        theta_aug_sq: d.f64()?,
         primal: d.f64()?,
         dual: d.f64()?,
         gap: d.f64()?,
@@ -487,8 +498,37 @@ pub enum WireDesign {
     },
 }
 
+/// The datafit in transferable form. Encodes which loss a problem is fit
+/// under plus the loss's own parameters (the quadratic ridge); decode
+/// validates the parameters before any problem constructor can `assert!`.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum WireDatafit {
+    /// Least squares, optionally ridge-augmented (`ridge = 0` is plain).
+    Quadratic { ridge: f64 },
+    /// Binary logistic regression (labels in `[0, 1]`).
+    Logistic,
+}
+
+impl WireDatafit {
+    /// Snapshot any solver datafit for shipping.
+    pub fn of<F: Datafit>(f: &F) -> Self {
+        match f.kind() {
+            FitKind::Quadratic => WireDatafit::Quadratic { ridge: f.ridge() },
+            FitKind::Logistic => WireDatafit::Logistic,
+        }
+    }
+
+    /// Stable lowercase name (matches [`FitKind::name`]).
+    pub fn name(&self) -> &'static str {
+        match self {
+            WireDatafit::Quadratic { .. } => FitKind::Quadratic.name(),
+            WireDatafit::Logistic => FitKind::Logistic.name(),
+        }
+    }
+}
+
 /// A whole problem instance on the wire: design + `y` + group partition
-/// + `τ` + weights. Shipped once per worker and addressed by
+/// + `τ` + weights + datafit. Shipped once per worker and addressed by
 /// [`fingerprint`](Self::fingerprint) thereafter.
 #[derive(Clone, Debug)]
 pub struct WireDataset {
@@ -497,18 +537,22 @@ pub struct WireDataset {
     pub group_sizes: Vec<u64>,
     pub tau: f64,
     pub weights: Vec<f64>,
+    pub datafit: WireDatafit,
 }
 
-/// A problem decoded from a [`WireDataset`], preserving the backend.
+/// A problem decoded from a [`WireDataset`], preserving backend and
+/// datafit.
 #[derive(Clone, Debug)]
 pub enum ProblemPayload {
     Dense(SglProblem<Matrix>),
     Csc(SglProblem<CscMatrix>),
+    DenseLogistic(SglProblem<Matrix, Logistic>),
+    CscLogistic(SglProblem<CscMatrix, Logistic>),
 }
 
 impl WireDataset {
-    /// Snapshot a dense problem for shipping.
-    pub fn from_dense(pb: &SglProblem<Matrix>) -> Self {
+    /// Snapshot a dense problem (any datafit) for shipping.
+    pub fn from_dense<F: Datafit>(pb: &SglProblem<Matrix, F>) -> Self {
         WireDataset {
             design: WireDesign::Dense {
                 n_rows: pb.x.n_rows(),
@@ -519,12 +563,13 @@ impl WireDataset {
             group_sizes: (0..pb.groups.n_groups()).map(|g| pb.groups.size(g) as u64).collect(),
             tau: pb.tau,
             weights: pb.weights.clone(),
+            datafit: WireDatafit::of(&pb.datafit),
         }
     }
 
-    /// Snapshot a CSC problem for shipping (triplet form, no dense
-    /// detour).
-    pub fn from_csc(pb: &SglProblem<CscMatrix>) -> Self {
+    /// Snapshot a CSC problem (any datafit) for shipping (triplet form,
+    /// no dense detour).
+    pub fn from_csc<F: Datafit>(pb: &SglProblem<CscMatrix, F>) -> Self {
         WireDataset {
             design: WireDesign::Csc {
                 n_rows: pb.x.n_rows(),
@@ -537,6 +582,7 @@ impl WireDataset {
             group_sizes: (0..pb.groups.n_groups()).map(|g| pb.groups.size(g) as u64).collect(),
             tau: pb.tau,
             weights: pb.weights.clone(),
+            datafit: WireDatafit::of(&pb.datafit),
         }
     }
 
@@ -563,9 +609,21 @@ impl WireDataset {
     /// validated here first, so malformed wire data is a typed
     /// [`WireError::Malformed`], never a worker panic.
     pub fn into_problem(self) -> Result<ProblemPayload, WireError> {
-        let WireDataset { design, y, group_sizes, tau, weights } = self;
+        let WireDataset { design, y, group_sizes, tau, weights, datafit } = self;
         if group_sizes.is_empty() {
             return Err(WireError::Malformed("dataset has no groups"));
+        }
+        match datafit {
+            WireDatafit::Quadratic { ridge } => {
+                if !(ridge.is_finite() && ridge >= 0.0) {
+                    return Err(WireError::Malformed("ridge must be finite and non-negative"));
+                }
+            }
+            WireDatafit::Logistic => {
+                if !y.iter().all(|v| v.is_finite() && (0.0..=1.0).contains(v)) {
+                    return Err(WireError::Malformed("logistic labels must lie in [0, 1]"));
+                }
+            }
         }
         let mut sizes = Vec::with_capacity(group_sizes.len());
         let mut p: usize = 0;
@@ -601,13 +659,22 @@ impl WireDataset {
                     return Err(WireError::Malformed("dense payload size mismatch"));
                 }
                 let x = Matrix::from_col_major(data, n_rows, n_cols);
-                Ok(ProblemPayload::Dense(SglProblem::with_weights(
-                    x,
-                    y,
-                    Groups::from_sizes(&sizes),
-                    tau,
-                    weights,
-                )))
+                let groups = Groups::from_sizes(&sizes);
+                Ok(match datafit {
+                    WireDatafit::Quadratic { ridge } => {
+                        ProblemPayload::Dense(SglProblem::with_datafit(
+                            x,
+                            y,
+                            groups,
+                            tau,
+                            weights,
+                            Quadratic::with_ridge(ridge),
+                        ))
+                    }
+                    WireDatafit::Logistic => ProblemPayload::DenseLogistic(
+                        SglProblem::with_datafit(x, y, groups, tau, weights, Logistic),
+                    ),
+                })
             }
             WireDesign::Csc { n_rows, n_cols, indptr, indices, values } => {
                 if n_cols != p {
@@ -661,16 +728,43 @@ impl WireDataset {
                     }
                 }
                 let x = CscMatrix::from_raw(n_rows, n_cols, iptr, rows, values);
-                Ok(ProblemPayload::Csc(SglProblem::with_weights(
-                    x,
-                    y,
-                    Groups::from_sizes(&sizes),
-                    tau,
-                    weights,
-                )))
+                let groups = Groups::from_sizes(&sizes);
+                Ok(match datafit {
+                    WireDatafit::Quadratic { ridge } => {
+                        ProblemPayload::Csc(SglProblem::with_datafit(
+                            x,
+                            y,
+                            groups,
+                            tau,
+                            weights,
+                            Quadratic::with_ridge(ridge),
+                        ))
+                    }
+                    WireDatafit::Logistic => ProblemPayload::CscLogistic(
+                        SglProblem::with_datafit(x, y, groups, tau, weights, Logistic),
+                    ),
+                })
             }
         }
     }
+}
+
+fn put_datafit(e: &mut Enc, f: &WireDatafit) {
+    match f {
+        WireDatafit::Quadratic { ridge } => {
+            e.u8(0);
+            e.f64(*ridge);
+        }
+        WireDatafit::Logistic => e.u8(1),
+    }
+}
+
+fn get_datafit(d: &mut Dec) -> Result<WireDatafit, WireError> {
+    Ok(match d.u8()? {
+        0 => WireDatafit::Quadratic { ridge: d.f64()? },
+        1 => WireDatafit::Logistic,
+        _ => return Err(WireError::Malformed("unknown datafit tag")),
+    })
 }
 
 fn put_dataset(e: &mut Enc, ds: &WireDataset) {
@@ -694,6 +788,7 @@ fn put_dataset(e: &mut Enc, ds: &WireDataset) {
     e.u64s(&ds.group_sizes);
     e.f64(ds.tau);
     e.f64s(&ds.weights);
+    put_datafit(e, &ds.datafit);
 }
 
 fn get_dataset(d: &mut Dec) -> Result<WireDataset, WireError> {
@@ -714,6 +809,7 @@ fn get_dataset(d: &mut Dec) -> Result<WireDataset, WireError> {
         group_sizes: d.u64s()?,
         tau: d.f64()?,
         weights: d.f64s()?,
+        datafit: get_datafit(d)?,
     })
 }
 
@@ -731,6 +827,12 @@ fn get_dataset(d: &mut Dec) -> Result<WireDataset, WireError> {
 pub struct ShardRequest {
     /// [`WireDataset::fingerprint`] of a previously shipped dataset.
     pub dataset: u64,
+    /// Datafit the shard must be solved under. Redundant with the
+    /// dataset's own datafit *by construction*, and verified against it
+    /// by the worker ([`RemoteErrorKind::BadRequest`] on mismatch): a
+    /// request can never silently solve a classification shard as a
+    /// regression because a fingerprint collided or a store was stale.
+    pub datafit: WireDatafit,
     /// The shard's explicit non-increasing λ grid.
     pub lambdas: Vec<f64>,
     pub solver: SolverKind,
@@ -844,6 +946,7 @@ impl Message {
             Message::ShipDataset(ds) => put_dataset(e, ds),
             Message::SolveShard(req) => {
                 e.u64(req.dataset);
+                put_datafit(e, &req.datafit);
                 e.f64s(&req.lambdas);
                 put_solver(e, req.solver);
                 put_path_options(e, &req.opts);
@@ -871,6 +974,7 @@ impl Message {
             TAG_SHIP_DATASET => Message::ShipDataset(get_dataset(d)?),
             TAG_SOLVE_SHARD => Message::SolveShard(ShardRequest {
                 dataset: d.u64()?,
+                datafit: get_datafit(d)?,
                 lambdas: d.f64s()?,
                 solver: get_solver(d)?,
                 opts: get_path_options(d)?,
@@ -1071,6 +1175,7 @@ mod tests {
             theta: vec![f64::NAN, -0.0, f64::INFINITY, f64::from_bits(1)],
             xt_theta: vec![f64::NEG_INFINITY, f64::MIN_POSITIVE / 2.0],
             dual_norm_xt_rho: f64::from_bits(0x7ff8_dead_beef_0001),
+            theta_aug_sq: f64::from_bits(0x0000_0000_0000_0003),
             primal: 1.5,
             dual: -2.5,
             gap: 0.0,
@@ -1079,6 +1184,7 @@ mod tests {
         let h = DualHandoff { lambda: 0.25, beta: vec![0.0, -0.0, 3.5e-310], snap };
         let msg = Message::SolveShard(ShardRequest {
             dataset: 7,
+            datafit: WireDatafit::Quadratic { ridge: 0.5 },
             lambdas: vec![1.0, 0.5],
             solver: SolverKind::Fista,
             opts: PathOptions::default(),
@@ -1086,6 +1192,7 @@ mod tests {
         });
         let back = roundtrip(&msg);
         let Message::SolveShard(req) = back else { panic!("wrong variant") };
+        assert_eq!(req.datafit, WireDatafit::Quadratic { ridge: 0.5 });
         let h = req.handoff.expect("handoff survives");
         assert_eq!(h.beta[1].to_bits(), (-0.0f64).to_bits());
         assert!(h.snap.theta[0].is_nan());
@@ -1094,6 +1201,7 @@ mod tests {
             0x7ff8_dead_beef_0001,
             "NaN payload preserved"
         );
+        assert_eq!(h.snap.theta_aug_sq.to_bits(), 3, "subnormal aug term preserved");
     }
 
     #[test]
@@ -1111,6 +1219,11 @@ mod tests {
             Message::decode(&bad),
             Err(WireError::BadVersion { got }) if got == WIRE_VERSION.wrapping_add(3)
         ));
+        // A v1 peer (pre-datafit layout) must be rejected outright, not
+        // have its body misread under the v2 field order.
+        let mut v1 = frame.clone();
+        v1[4] = 1;
+        assert!(matches!(Message::decode(&v1), Err(WireError::BadVersion { got: 1 })));
         let mut badtag = frame.clone();
         badtag[5] = 250;
         assert!(matches!(Message::decode(&badtag), Err(WireError::BadTag { got: 250 })));
@@ -1129,8 +1242,16 @@ mod tests {
             group_sizes: vec![1, 1],
             tau: 0.3,
             weights: vec![1.0, 1.0],
+            datafit: WireDatafit::Quadratic { ridge: 0.0 },
         };
         assert_eq!(ds.fingerprint(), ds.clone().fingerprint());
+        // Same (X, y), different datafit: different cache identity.
+        let mut logit = ds.clone();
+        logit.y = vec![0.5, 0.5]; // valid logistic labels
+        logit.datafit = WireDatafit::Logistic;
+        let mut quad = logit.clone();
+        quad.datafit = WireDatafit::Quadratic { ridge: 0.0 };
+        assert_ne!(logit.fingerprint(), quad.fingerprint());
         // The contract the worker relies on to avoid re-encoding: the
         // fingerprint equals FNV-1a over the frame's payload bytes
         // (after the 4-byte length, version and tag).
@@ -1159,14 +1280,51 @@ mod tests {
             group_sizes: vec![2],
             tau: 0.5,
             weights: vec![1.0],
+            datafit: WireDatafit::Quadratic { ridge: 0.0 },
         };
         assert!(matches!(base.clone().into_problem(), Err(WireError::Malformed(_))));
         let mut no_groups = base.clone();
         no_groups.group_sizes = vec![];
         assert!(matches!(no_groups.into_problem(), Err(WireError::Malformed(_))));
-        let mut bad_tau = base;
+        let mut bad_tau = base.clone();
         bad_tau.tau = f64::NAN;
         assert!(matches!(bad_tau.into_problem(), Err(WireError::Malformed(_))));
+        // Datafit parameters are validated before any constructor assert.
+        let mut bad_ridge = base.clone();
+        bad_ridge.datafit = WireDatafit::Quadratic { ridge: -1.0 };
+        assert!(matches!(bad_ridge.into_problem(), Err(WireError::Malformed(_))));
+        let mut nan_ridge = base.clone();
+        nan_ridge.datafit = WireDatafit::Quadratic { ridge: f64::NAN };
+        assert!(matches!(nan_ridge.into_problem(), Err(WireError::Malformed(_))));
+        let mut bad_labels = base;
+        bad_labels.datafit = WireDatafit::Logistic;
+        bad_labels.y = vec![0.0, 1.0, 2.0]; // 2.0 outside [0, 1]
+        assert!(matches!(bad_labels.into_problem(), Err(WireError::Malformed(_))));
+    }
+
+    #[test]
+    fn logistic_dataset_roundtrips_with_its_datafit() {
+        let ds = WireDataset {
+            design: WireDesign::Dense {
+                n_rows: 3,
+                n_cols: 2,
+                data: vec![1.0, -1.0, 0.5, 2.0, 0.0, -0.25],
+            },
+            y: vec![1.0, 0.0, 1.0],
+            group_sizes: vec![2],
+            tau: 0.4,
+            weights: vec![2.0f64.sqrt()],
+            datafit: WireDatafit::Logistic,
+        };
+        let back = roundtrip(&Message::ShipDataset(ds.clone()));
+        let Message::ShipDataset(rt) = back else { panic!("wrong variant") };
+        assert_eq!(rt.datafit, WireDatafit::Logistic);
+        let ProblemPayload::DenseLogistic(pb) = rt.into_problem().expect("valid dataset")
+        else {
+            panic!("datafit lost in transit")
+        };
+        assert_eq!(pb.n(), 3);
+        assert_eq!(pb.p(), 2);
     }
 
     #[test]
@@ -1183,6 +1341,7 @@ mod tests {
             group_sizes: vec![1, 2],
             tau: 0.4,
             weights: vec![1.0, 2.0f64.sqrt()],
+            datafit: WireDatafit::Quadratic { ridge: 0.0 },
         };
         let back = roundtrip(&Message::ShipDataset(ds));
         let Message::ShipDataset(rt) = back else { panic!("wrong variant") };

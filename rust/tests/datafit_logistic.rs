@@ -1,0 +1,298 @@
+//! Cross-module integration for the logistic datafit: every solver
+//! reaches the same sparse-group logistic optimum on both backends, the
+//! GAP safe rules are *safe* (never change the answer) on the logistic
+//! path, λ-sharding is bit-identical to the monolithic path, and a mixed
+//! regression+classification batch over a loopback fleet matches the
+//! local engine bit for bit.
+
+use sgl::coordinator::metrics::Metrics;
+use sgl::coordinator::remote::{FleetConfig, RemoteFleet, WorkerServer};
+use sgl::coordinator::service::AnyProblem;
+use sgl::coordinator::shard::{solve_batch_interleaved, solve_path_sharded, InterleavedJob};
+use sgl::data::synthetic::{generate, SyntheticConfig};
+use sgl::linalg::{CscMatrix, Design};
+use sgl::norms::sgl::omega;
+use sgl::screening::RuleKind;
+use sgl::solver::cd::{solve, SolveOptions};
+use sgl::solver::datafit::{Datafit, Logistic};
+use sgl::solver::fista::solve_fista;
+use sgl::solver::ista::solve_ista;
+use sgl::solver::path::{solve_path, solve_path_on_grid, DualHandoff, PathOptions};
+use sgl::solver::problem::{lambda_grid, SglProblem};
+use sgl::solver::SolverKind;
+use std::sync::Arc;
+
+/// Synthetic design with the response binarized at its mean — the same
+/// construction the CLI uses for `--datafit logistic`.
+fn logistic_problem(tau: f64, seed: u64) -> SglProblem<sgl::linalg::Matrix, Logistic> {
+    let cfg = SyntheticConfig {
+        n: 60,
+        n_groups: 30,
+        group_size: 4,
+        gamma1: 5,
+        gamma2: 2,
+        seed,
+        ..Default::default()
+    };
+    let d = generate(&cfg);
+    let mean = d.dataset.y.iter().sum::<f64>() / d.dataset.y.len() as f64;
+    let labels: Vec<f64> = d.dataset.y.iter().map(|&v| f64::from(v > mean)).collect();
+    let weights = d.dataset.groups.sqrt_size_weights();
+    SglProblem::with_datafit(d.dataset.x, labels, d.dataset.groups, tau, weights, Logistic)
+}
+
+fn csc_twin(pb: &SglProblem<sgl::linalg::Matrix, Logistic>) -> SglProblem<CscMatrix, Logistic> {
+    SglProblem::with_datafit(
+        CscMatrix::from_dense(&pb.x),
+        pb.y.clone(),
+        pb.groups.clone(),
+        pb.tau,
+        pb.weights.clone(),
+        Logistic,
+    )
+}
+
+/// Primal sparse-group logistic objective: Σ softplus(xᵢᵀβ) − yᵢ xᵢᵀβ
+/// plus the λΩ penalty, evaluated from scratch.
+fn objective<D: Design>(pb: &SglProblem<D, Logistic>, lambda: f64, beta: &[f64]) -> f64 {
+    let xb = pb.x.matvec(beta);
+    pb.datafit.loss(&pb.y, &xb, beta) + lambda * omega(beta, &pb.groups, pb.tau, &pb.weights)
+}
+
+#[test]
+fn logistic_cd_ista_fista_agree_on_dense_and_csc() {
+    let dense = logistic_problem(0.25, 1);
+    let csc = csc_twin(&dense);
+    let lambda = 0.2 * dense.lambda_max();
+    let opts = SolveOptions { tol: 1e-10, max_epochs: 500_000, ..Default::default() };
+
+    let mut objectives = Vec::new();
+    for res in [
+        solve(&dense, lambda, None, &opts),
+        solve_ista(&dense, lambda, None, &opts),
+        solve_fista(&dense, lambda, None, &opts),
+    ] {
+        assert!(res.converged);
+        objectives.push(objective(&dense, lambda, &res.beta));
+    }
+    for res in [
+        solve(&csc, lambda, None, &opts),
+        solve_ista(&csc, lambda, None, &opts),
+        solve_fista(&csc, lambda, None, &opts),
+    ] {
+        assert!(res.converged);
+        objectives.push(objective(&csc, lambda, &res.beta));
+    }
+    let lo = objectives.iter().cloned().fold(f64::INFINITY, f64::min);
+    let hi = objectives.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+    assert!(
+        hi - lo <= 1e-8,
+        "solver x backend objectives spread {:.2e}: {objectives:?}",
+        hi - lo
+    );
+}
+
+#[test]
+fn logistic_lambda_max_yields_the_zero_solution() {
+    let pb = logistic_problem(0.3, 2);
+    let lmax = pb.lambda_max();
+    for lambda in [lmax, 2.0 * lmax] {
+        let res = solve(&pb, lambda, None, &SolveOptions { tol: 1e-10, ..Default::default() });
+        assert!(res.converged);
+        assert!(
+            res.beta.iter().all(|&b| b == 0.0),
+            "lambda={lambda}: beta must be exactly zero at/above lambda_max"
+        );
+    }
+}
+
+#[test]
+fn logistic_gap_safe_seq_path_converges_with_decreasing_gaps() {
+    let pb = logistic_problem(0.2, 3);
+    let tol = 1e-8;
+    let opts = PathOptions {
+        delta: 1.5,
+        t_count: 8,
+        solve: SolveOptions {
+            rule: RuleKind::GapSafeSeq,
+            tol,
+            fce: 1,
+            max_epochs: 500_000,
+            record_history: true,
+            ..Default::default()
+        },
+    };
+    let path = solve_path(&pb, &opts);
+    assert!(path.all_converged());
+    let scale = pb.datafit.gap_scale(&pb.y);
+    for (t, res) in path.results.iter().enumerate() {
+        assert!(res.gap <= tol * scale, "t={t}: final gap {:.2e}", res.gap);
+        assert!(res.history.iter().all(|c| c.gap >= 0.0), "t={t}: negative gap");
+        if let (Some(first), Some(last)) = (res.history.first(), res.history.last()) {
+            assert!(
+                last.gap <= first.gap,
+                "t={t}: gap did not decrease: {} -> {}",
+                first.gap,
+                last.gap
+            );
+        }
+    }
+    // Past the first grid point the sphere must reject something: a
+    // logistic path on which screening never fires would make the GAP
+    // rule vacuous here.
+    assert!(
+        path.results[1..].iter().any(|r| r.active.n_active_features() < pb.p()),
+        "GAP safe screening never fired on the logistic path"
+    );
+}
+
+#[test]
+fn gap_safe_rules_never_change_the_logistic_answer() {
+    let pb = logistic_problem(0.2, 4);
+    let opts = |rule| PathOptions {
+        delta: 1.5,
+        t_count: 6,
+        solve: SolveOptions { rule, tol: 1e-10, record_history: false, ..Default::default() },
+    };
+    let base = solve_path(&pb, &opts(RuleKind::None));
+    assert!(base.all_converged());
+    for rule in [RuleKind::GapSafe, RuleKind::GapSafeSeq] {
+        let path = solve_path(&pb, &opts(rule));
+        assert!(path.all_converged(), "{rule:?}");
+        for (i, (a, b)) in base.results.iter().zip(&path.results).enumerate() {
+            for j in 0..pb.p() {
+                assert!(
+                    (a.beta[j] - b.beta[j]).abs() < 1e-4,
+                    "{rule:?} lambda {i} feature {j}: {} vs {}",
+                    a.beta[j],
+                    b.beta[j]
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn sharded_logistic_path_is_bit_identical_to_monolithic() {
+    let pb = csc_twin(&logistic_problem(0.2, 5));
+    let lambdas = lambda_grid(pb.lambda_max(), 1.5, 8);
+    let opts = PathOptions {
+        delta: 1.5,
+        t_count: 8,
+        solve: SolveOptions {
+            rule: RuleKind::GapSafeSeq,
+            tol: 1e-8,
+            max_epochs: 500_000,
+            record_history: false,
+            ..Default::default()
+        },
+    };
+    let mono = solve_path_on_grid(&pb, &lambdas, &opts);
+    assert!(mono.all_converged());
+    for k in [2usize, 3, 8] {
+        let sharded = solve_path_sharded(&pb, &lambdas, &opts, SolverKind::Cd, k);
+        assert_eq!(mono.lambdas, sharded.lambdas, "k={k}");
+        for (t, (a, b)) in mono.results.iter().zip(&sharded.results).enumerate() {
+            assert_eq!(a.beta, b.beta, "k={k} t={t}: beta must be bit-identical");
+            assert_eq!(a.active.feature, b.active.feature, "k={k} t={t}");
+            assert_eq!(a.epochs, b.epochs, "k={k} t={t}");
+            assert_eq!(a.converged, b.converged, "k={k} t={t}");
+        }
+    }
+}
+
+/// The tentpole serving claim: one fleet serves least-squares and
+/// logistic jobs side by side, and every result is bit-identical to the
+/// local sharded engine.
+#[test]
+fn mixed_datafit_batch_over_loopback_fleet_matches_local() {
+    let metrics = Arc::new(Metrics::new());
+    let servers: Vec<WorkerServer> =
+        (0..2).map(|_| WorkerServer::bind("127.0.0.1:0").expect("bind worker")).collect();
+    let addrs: Vec<String> = servers.iter().map(|s| s.local_addr().to_string()).collect();
+    let fleet = RemoteFleet::connect(&addrs, FleetConfig::default(), metrics.clone())
+        .expect("connect fleet");
+
+    let dense_log = Arc::new(logistic_problem(0.2, 6));
+    let csc_log = Arc::new(csc_twin(&dense_log));
+    let quad = {
+        let cfg = SyntheticConfig {
+            n: 60,
+            n_groups: 30,
+            group_size: 4,
+            gamma1: 5,
+            gamma2: 2,
+            seed: 6,
+            ..Default::default()
+        };
+        let d = generate(&cfg);
+        Arc::new(SglProblem::new(
+            CscMatrix::from_dense(&d.dataset.x),
+            d.dataset.y,
+            d.dataset.groups,
+            0.2,
+        ))
+    };
+
+    let opts = |rule: RuleKind| PathOptions {
+        delta: 1.2,
+        t_count: 6,
+        solve: SolveOptions { rule, tol: 1e-8, record_history: false, ..Default::default() },
+    };
+    let jobs = vec![
+        InterleavedJob {
+            pb: AnyProblem::Csc(quad.clone()),
+            lambdas: lambda_grid(quad.lambda_max(), 1.2, 6),
+            opts: opts(RuleKind::GapSafeSeq),
+            solver: SolverKind::Cd,
+            shards: 3,
+            label: "quadratic/csc".into(),
+        },
+        InterleavedJob {
+            pb: AnyProblem::CscLogistic(csc_log.clone()),
+            lambdas: lambda_grid(csc_log.lambda_max(), 1.2, 6),
+            opts: opts(RuleKind::GapSafeSeq),
+            solver: SolverKind::Cd,
+            shards: 3,
+            label: "logistic/csc".into(),
+        },
+        InterleavedJob {
+            pb: AnyProblem::DenseLogistic(dense_log.clone()),
+            lambdas: lambda_grid(dense_log.lambda_max(), 1.2, 6),
+            opts: opts(RuleKind::GapSafe),
+            solver: SolverKind::Cd,
+            shards: 2,
+            label: "logistic/dense".into(),
+        },
+    ];
+
+    let out = solve_batch_interleaved(&jobs, fleet.capacity(), |job, grid, h: Option<&DualHandoff>| {
+        fleet.solve_shard(&job.pb, grid, &job.opts, job.solver, h)
+    });
+    for (job, got) in jobs.iter().zip(&out) {
+        let got = got.as_ref().unwrap_or_else(|e| panic!("{} failed: {e:#}", job.label));
+        let want = match &job.pb {
+            AnyProblem::Dense(p) => {
+                solve_path_sharded(p.as_ref(), &job.lambdas, &job.opts, job.solver, job.shards)
+            }
+            AnyProblem::Csc(p) => {
+                solve_path_sharded(p.as_ref(), &job.lambdas, &job.opts, job.solver, job.shards)
+            }
+            AnyProblem::DenseLogistic(p) => {
+                solve_path_sharded(p.as_ref(), &job.lambdas, &job.opts, job.solver, job.shards)
+            }
+            AnyProblem::CscLogistic(p) => {
+                solve_path_sharded(p.as_ref(), &job.lambdas, &job.opts, job.solver, job.shards)
+            }
+        };
+        assert_eq!(got.lambdas, want.lambdas, "{}", job.label);
+        for (t, (a, b)) in want.results.iter().zip(&got.results).enumerate() {
+            assert_eq!(a.beta, b.beta, "{} t={t}: bit-identical over the fleet", job.label);
+            assert_eq!(a.active.feature, b.active.feature, "{} t={t}", job.label);
+            assert_eq!(a.epochs, b.epochs, "{} t={t}", job.label);
+        }
+    }
+    assert_eq!(metrics.counter("fleet_shards_solved"), 8);
+    assert_eq!(metrics.counter("fleet_worker_disconnects"), 0);
+    assert_eq!(fleet.in_flight(), 0);
+}

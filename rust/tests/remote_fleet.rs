@@ -81,6 +81,12 @@ fn local_reference(job: &InterleavedJob) -> PathResult {
         AnyProblem::Csc(p) => {
             solve_path_sharded(p.as_ref(), &job.lambdas, &job.opts, job.solver, job.shards)
         }
+        AnyProblem::DenseLogistic(p) => {
+            solve_path_sharded(p.as_ref(), &job.lambdas, &job.opts, job.solver, job.shards)
+        }
+        AnyProblem::CscLogistic(p) => {
+            solve_path_sharded(p.as_ref(), &job.lambdas, &job.opts, job.solver, job.shards)
+        }
     }
 }
 

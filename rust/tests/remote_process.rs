@@ -1,8 +1,10 @@
 //! End-to-end over *real* worker processes: spawn two `sgl worker`
 //! children (the actual binary, talking over real loopback TCP), run a
-//! mixed sharded batch against them through the fleet, and require
-//! bit-identity with the local engine. CI runs this leg with
-//! `SGL_THREADS=2` to keep the runner honest about parallelism.
+//! mixed sharded batch — both backends *and* both datafits (least-squares
+//! regression alongside logistic classification) — against them through
+//! the fleet, and require bit-identity with the local engine. CI runs
+//! this leg with `SGL_THREADS=2` to keep the runner honest about
+//! parallelism.
 
 use sgl::coordinator::metrics::Metrics;
 use sgl::coordinator::remote::{FleetConfig, RemoteFleet};
@@ -12,6 +14,7 @@ use sgl::data::synthetic::{generate, SyntheticConfig};
 use sgl::linalg::CscMatrix;
 use sgl::screening::RuleKind;
 use sgl::solver::cd::SolveOptions;
+use sgl::solver::datafit::Logistic;
 use sgl::solver::path::PathOptions;
 use sgl::solver::problem::{lambda_grid, SglProblem};
 use sgl::solver::SolverKind;
@@ -87,6 +90,18 @@ fn two_worker_processes_serve_a_mixed_batch_bit_identically() {
         dense.groups.clone(),
         dense.tau,
     ));
+    // Classification twin: the same design with labels binarized at the
+    // response mean — the batch below mixes both datafits over one fleet.
+    let mean = dense.y.iter().sum::<f64>() / dense.y.len() as f64;
+    let labels: Vec<f64> = dense.y.iter().map(|&v| f64::from(v > mean)).collect();
+    let logistic = Arc::new(SglProblem::with_datafit(
+        CscMatrix::from_dense(&dense.x),
+        labels,
+        dense.groups.clone(),
+        dense.tau,
+        dense.groups.sqrt_size_weights(),
+        Logistic,
+    ));
 
     let opts = |rule: RuleKind| PathOptions {
         delta: 1.2,
@@ -118,6 +133,14 @@ fn two_worker_processes_serve_a_mixed_batch_bit_identically() {
             shards: 3,
             label: "csc/gap_safe_seq".into(),
         },
+        InterleavedJob {
+            pb: AnyProblem::CscLogistic(logistic.clone()),
+            lambdas: lambda_grid(logistic.lambda_max(), 1.2, 6),
+            opts: opts(RuleKind::GapSafeSeq),
+            solver: SolverKind::Cd,
+            shards: 2,
+            label: "logistic/gap_safe_seq".into(),
+        },
     ];
 
     let out = solve_batch_interleaved(&jobs, fleet.capacity(), |job, grid, h| {
@@ -132,6 +155,12 @@ fn two_worker_processes_serve_a_mixed_batch_bit_identically() {
             AnyProblem::Csc(p) => {
                 solve_path_sharded(p.as_ref(), &job.lambdas, &job.opts, job.solver, job.shards)
             }
+            AnyProblem::DenseLogistic(p) => {
+                solve_path_sharded(p.as_ref(), &job.lambdas, &job.opts, job.solver, job.shards)
+            }
+            AnyProblem::CscLogistic(p) => {
+                solve_path_sharded(p.as_ref(), &job.lambdas, &job.opts, job.solver, job.shards)
+            }
         };
         assert_eq!(got.lambdas, want.lambdas, "{}", job.label);
         for (t, (a, b)) in want.results.iter().zip(&got.results).enumerate() {
@@ -140,7 +169,7 @@ fn two_worker_processes_serve_a_mixed_batch_bit_identically() {
             assert_eq!(a.epochs, b.epochs, "{} t={t}", job.label);
         }
     }
-    assert_eq!(metrics.counter("fleet_shards_solved"), 8);
+    assert_eq!(metrics.counter("fleet_shards_solved"), 10);
     assert_eq!(metrics.counter("fleet_worker_disconnects"), 0);
     assert_eq!(fleet.in_flight(), 0);
 }

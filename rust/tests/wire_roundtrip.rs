@@ -17,8 +17,8 @@ use sgl::solver::sweep::SweepMode;
 use sgl::solver::SolverKind;
 use sgl::util::proptest::{check, forall, Gen};
 use sgl::util::wire::{
-    Message, ProblemPayload, RemoteError, RemoteErrorKind, ShardRequest, WireDataset,
-    WireDesign, WireError,
+    Message, ProblemPayload, RemoteError, RemoteErrorKind, ShardRequest, WireDatafit,
+    WireDataset, WireDesign, WireError, WIRE_VERSION,
 };
 
 // ---------------------------------------------------------------------------
@@ -56,6 +56,7 @@ fn gen_snapshot(g: &mut Gen) -> DualSnapshot {
         theta: edgy_vec(g, 6),
         xt_theta: edgy_vec(g, 6),
         dual_norm_xt_rho: edgy_f64(g),
+        theta_aug_sq: edgy_f64(g),
         primal: edgy_f64(g),
         dual: edgy_f64(g),
         gap: edgy_f64(g),
@@ -122,13 +123,24 @@ fn gen_path_result(g: &mut Gen) -> PathResult {
     }
 }
 
+/// A datafit that survives `into_problem` validation: finite non-negative
+/// ridge, or logistic (whose labels `gen_dataset` then constrains).
+fn gen_valid_datafit(g: &mut Gen) -> WireDatafit {
+    match g.usize_in(0..3) {
+        0 => WireDatafit::Quadratic { ridge: 0.0 },
+        1 => WireDatafit::Quadratic { ridge: g.f64_in(0.0..2.0) },
+        _ => WireDatafit::Logistic,
+    }
+}
+
 /// Structurally valid dataset (the kind our own encoder emits), with
-/// zero-row CSC designs mixed in.
+/// zero-row CSC designs and both datafits mixed in.
 fn gen_dataset(g: &mut Gen) -> WireDataset {
     let n_groups = g.usize_in(1..4);
     let sizes: Vec<usize> = (0..n_groups).map(|_| g.usize_in(1..4)).collect();
     let p: usize = sizes.iter().sum();
     let n = if g.usize_in(0..5) == 0 { 0 } else { g.usize_in(1..6) };
+    let datafit = gen_valid_datafit(g);
     let design = if g.bool() {
         WireDesign::Dense {
             n_rows: n,
@@ -151,13 +163,21 @@ fn gen_dataset(g: &mut Gen) -> WireDataset {
         }
         WireDesign::Csc { n_rows: n, n_cols: p, indptr, indices, values }
     };
+    // Logistic labels must lie in [0, 1] for into_problem; the quadratic
+    // response keeps the full f64 pathology mix.
+    let y: Vec<f64> = if datafit == WireDatafit::Logistic {
+        (0..n).map(|_| [0.0, 1.0, 0.5][g.usize_in(0..3)]).collect()
+    } else {
+        (0..n).map(|_| edgy_f64(g)).collect()
+    };
     WireDataset {
         design,
-        y: (0..n).map(|_| edgy_f64(g)).collect(),
+        y,
         group_sizes: sizes.iter().map(|&s| s as u64).collect(),
         // τ valid (into_problem is also exercised) but off the lattice.
         tau: 0.1 + 0.8 * g.f64_in(0.0..1.0),
         weights: (0..n_groups).map(|_| 0.5 + g.f64_in(0.0..2.0)).collect(),
+        datafit,
     }
 }
 
@@ -170,6 +190,11 @@ fn gen_message(g: &mut Gen) -> Message {
         4 => Message::ShipDataset(gen_dataset(g)),
         5 => Message::SolveShard(ShardRequest {
             dataset: g.rng().next_u64(),
+            // Roundtrip (not into_problem): the ridge keeps edgy bits.
+            datafit: match g.usize_in(0..2) {
+                0 => WireDatafit::Quadratic { ridge: edgy_f64(g) },
+                _ => WireDatafit::Logistic,
+            },
             lambdas: edgy_vec(g, 6),
             solver: SolverKind::all()[g.usize_in(0..3)],
             opts: gen_path_options(g),
@@ -287,13 +312,13 @@ fn truncated_frames_are_typed_errors_never_panics() {
 fn bad_version_and_bad_tag_are_typed_errors() {
     forall("wire-bad-header", 100, |g| {
         let mut frame = gen_message(g).encode();
-        let v = (g.usize_in(2..250)) as u8; // never WIRE_VERSION (= 1) or 0+1 collision
+        let v = (g.usize_in(3..250)) as u8; // never WIRE_VERSION (= 2)
         frame[4] = v;
         match Message::decode(&frame) {
             Err(WireError::BadVersion { got }) => check(got == v, "version echoed")?,
             other => return Err(format!("expected BadVersion, got {other:?}")),
         }
-        frame[4] = 1; // restore the version…
+        frame[4] = WIRE_VERSION; // restore the version…
         frame[5] = 200 + (g.usize_in(0..50)) as u8; // …and break the tag
         match Message::decode(&frame) {
             Err(WireError::BadTag { .. }) => Ok(()),
@@ -333,19 +358,29 @@ fn datasets_roundtrip_rebuild_and_fingerprint_by_content() {
         };
         check(back.fingerprint() == fp, "fingerprint survives the trip")?;
         // The receiver can always rebuild a problem from what our encoder
-        // emits — including zero-row designs — on the matching backend.
+        // emits — including zero-row designs — on the matching backend
+        // *and* datafit.
         let is_csc = matches!(back.design, WireDesign::Csc { .. });
+        let is_logistic = back.datafit == WireDatafit::Logistic;
         let (n_expect, p_expect) = match &back.design {
             WireDesign::Dense { n_rows, n_cols, .. }
             | WireDesign::Csc { n_rows, n_cols, .. } => (*n_rows, *n_cols),
         };
         match back.into_problem() {
             Ok(ProblemPayload::Dense(pb)) => {
-                check(!is_csc, "backend preserved")?;
+                check(!is_csc && !is_logistic, "backend+datafit preserved")?;
                 check(pb.n() == n_expect && pb.p() == p_expect, "shape preserved")
             }
             Ok(ProblemPayload::Csc(pb)) => {
-                check(is_csc, "backend preserved")?;
+                check(is_csc && !is_logistic, "backend+datafit preserved")?;
+                check(pb.n() == n_expect && pb.p() == p_expect, "shape preserved")
+            }
+            Ok(ProblemPayload::DenseLogistic(pb)) => {
+                check(!is_csc && is_logistic, "backend+datafit preserved")?;
+                check(pb.n() == n_expect && pb.p() == p_expect, "shape preserved")
+            }
+            Ok(ProblemPayload::CscLogistic(pb)) => {
+                check(is_csc && is_logistic, "backend+datafit preserved")?;
                 check(pb.n() == n_expect && pb.p() == p_expect, "shape preserved")
             }
             Err(e) => Err(format!("valid dataset rejected: {e}")),
@@ -367,6 +402,7 @@ fn zero_row_csc_and_flipped_value_bits_change_the_fingerprint() {
         group_sizes: vec![2],
         tau: 0.5,
         weights: vec![2.0f64.sqrt()],
+        datafit: WireDatafit::Quadratic { ridge: 0.0 },
     };
     let fp = base.fingerprint();
     roundtrip_canonical(&Message::ShipDataset(base.clone())).expect("zero-row roundtrip");
@@ -382,10 +418,21 @@ fn invalid_datasets_fail_decoding_into_problems_with_typed_errors() {
     forall("wire-dataset-invalid", 60, |g| {
         let mut ds = gen_dataset(g);
         // Break it in one of several structural ways.
-        match g.usize_in(0..4) {
+        match g.usize_in(0..6) {
             0 => ds.group_sizes = vec![],
             1 => ds.weights.push(1.0),
             2 => ds.tau = 1.5,
+            3 => {
+                ds.datafit = WireDatafit::Quadratic {
+                    ridge: [-1.0, f64::NAN, f64::INFINITY][g.usize_in(0..3)],
+                }
+            }
+            4 => {
+                // A label outside [0, 1] under the logistic fit (checked
+                // before any shape validation).
+                ds.datafit = WireDatafit::Logistic;
+                ds.y.push([2.0, -0.5, f64::NAN][g.usize_in(0..3)]);
+            }
             _ => ds.y.push(0.0),
         }
         match ds.into_problem() {
@@ -394,4 +441,55 @@ fn invalid_datasets_fail_decoding_into_problems_with_typed_errors() {
             Ok(_) => Err("structurally broken dataset was accepted".to_string()),
         }
     });
+}
+
+/// A v1 peer (pre-datafit layout) must be rejected outright: its frames
+/// would otherwise decode into a misaligned problem.
+#[test]
+fn v1_frames_are_rejected_with_bad_version() {
+    forall("wire-v1-reject", 60, |g| {
+        let mut frame = gen_message(g).encode();
+        assert_eq!(frame[4], WIRE_VERSION, "version byte location");
+        frame[4] = 1;
+        match Message::decode(&frame) {
+            Err(WireError::BadVersion { got: 1 }) => Ok(()),
+            other => Err(format!("expected BadVersion{{got: 1}}, got {other:?}")),
+        }
+    });
+}
+
+/// An unknown datafit tag inside a shipped dataset is a typed
+/// [`WireError::Malformed`], never a panic or a misread. The datafit is
+/// the final field `put_dataset` emits, so its tag byte sits at a fixed
+/// offset from the frame's end.
+#[test]
+fn unknown_datafit_tags_are_typed_errors() {
+    let ds = WireDataset {
+        design: WireDesign::Dense { n_rows: 1, n_cols: 1, data: vec![1.0] },
+        y: vec![0.5],
+        group_sizes: vec![1],
+        tau: 0.5,
+        weights: vec![1.0],
+        datafit: WireDatafit::Quadratic { ridge: 0.25 },
+    };
+    let mut frame = Message::ShipDataset(ds.clone()).encode();
+    // Quadratic encodes as tag 0 + 8 ridge bytes at the very end.
+    let tag_at = frame.len() - 9;
+    assert_eq!(frame[tag_at], 0, "quadratic datafit tag byte");
+    for bad in [2u8, 7, 255] {
+        frame[tag_at] = bad;
+        match Message::decode(&frame) {
+            Err(WireError::Malformed(what)) => {
+                assert!(what.contains("datafit"), "tag {bad}: {what}")
+            }
+            other => panic!("tag {bad}: expected Malformed, got {other:?}"),
+        }
+    }
+    // Logistic is a bare trailing tag byte (1).
+    let mut frame =
+        Message::ShipDataset(WireDataset { datafit: WireDatafit::Logistic, ..ds }).encode();
+    let last = frame.len() - 1;
+    assert_eq!(frame[last], 1, "logistic datafit tag byte");
+    frame[last] = 9;
+    assert!(matches!(Message::decode(&frame), Err(WireError::Malformed(_))));
 }

@@ -11,11 +11,13 @@
 //!    single λ — CD is the paper's choice and wins on epochs.
 
 use sgl::data::synthetic::{generate, SyntheticConfig};
+use sgl::linalg::simd;
 use sgl::screening::RuleKind;
 use sgl::solver::cd::SolveOptions;
 use sgl::solver::path::{solve_path_on_grid, PathOptions};
 use sgl::solver::problem::SglProblem;
 use sgl::solver::strong::solve_path_strong;
+use sgl::util::json::Json;
 use sgl::util::timer::Stopwatch;
 
 fn problem() -> SglProblem {
@@ -39,6 +41,7 @@ fn main() {
 
     // ---- 1. f_ce sweep
     println!("f_ce sweep (gap_safe):");
+    let mut fce_rows: Vec<Json> = Vec::new();
     for fce in [1usize, 5, 10, 20, 50] {
         let opts = PathOptions {
             delta: 3.0,
@@ -59,6 +62,13 @@ fn main() {
             path.results.iter().map(|r| r.gap_evals).sum::<usize>(),
             path.all_converged()
         );
+        fce_rows.push(
+            Json::obj()
+                .with("fce", fce as f64)
+                .with("seconds", path.total_s)
+                .with("epochs", path.total_epochs() as f64)
+                .with("converged", path.all_converged()),
+        );
     }
 
     // ---- 2. warm vs cold
@@ -75,11 +85,18 @@ fn main() {
         let res = sgl::solver::cd::solve(&pb, l, None, &opts.solve);
         cold_epochs += res.epochs;
     }
+    let cold_s = sw.elapsed_s();
     println!("  warm: {:>8.3}s  epochs={}", warm.total_s, warm.total_epochs());
-    println!("  cold: {:>8.3}s  epochs={}", sw.elapsed_s(), cold_epochs);
+    println!("  cold: {:>8.3}s  epochs={}", cold_s, cold_epochs);
+    let warm_cold_json = Json::obj()
+        .with("warm_s", warm.total_s)
+        .with("warm_epochs", warm.total_epochs() as f64)
+        .with("cold_s", cold_s)
+        .with("cold_epochs", cold_epochs as f64);
 
     // ---- 3. strong rules vs gap safe vs both
     println!("\nworking sets (strong rules, unsafe + KKT recovery) vs GAP safe:");
+    let mut strong_rows: Vec<Json> = Vec::new();
     for (name, rule, use_strong) in [
         ("gap_safe only", RuleKind::GapSafe, false),
         ("strong only (none inside)", RuleKind::None, true),
@@ -95,6 +112,7 @@ fn main() {
                 stats.violations,
                 stats.kept_groups_initial as f64 / results.len() as f64
             );
+            strong_rows.push(Json::obj().with("variant", name).with("seconds", secs));
         } else {
             let path = solve_path_on_grid(
                 &pb,
@@ -106,11 +124,13 @@ fn main() {
                 path.total_s,
                 path.total_epochs()
             );
+            strong_rows.push(Json::obj().with("variant", name).with("seconds", path.total_s));
         }
     }
 
     // ---- 5. inner solvers at a single lambda
     println!("\ninner solvers at lambda = lambda_max/10 (tol 1e-8, rule gap_safe):");
+    let solvers_json;
     {
         let lambda = 0.1 * pb.lambda_max();
         let opts = SolveOptions {
@@ -131,6 +151,13 @@ fn main() {
         println!("  cd (Alg. 2): {ta:>8.3}s epochs={:>7} converged={}", a.epochs, a.converged);
         println!("  ista       : {tb:>8.3}s epochs={:>7} converged={}", b.epochs, b.converged);
         println!("  fista      : {tc:>8.3}s epochs={:>7} converged={}", c.epochs, c.converged);
+        solvers_json = Json::obj()
+            .with("cd_s", ta)
+            .with("ista_s", tb)
+            .with("fista_s", tc)
+            .with("cd_epochs", a.epochs as f64)
+            .with("ista_epochs", b.epochs as f64)
+            .with("fista_epochs", c.epochs as f64);
     }
 
     // ---- 4. dual norm inside the gap eval: Algorithm 1 vs naive
@@ -161,4 +188,17 @@ fn main() {
     let naive = sw.elapsed_s() / 200.0;
     println!("  alg1 : {:>10.2} us", alg1 * 1e6);
     println!("  naive: {:>10.2} us ({:.1}x slower)", naive * 1e6, naive / alg1);
+
+    let out = Json::obj()
+        .with("bench", "ablation")
+        .with("kernels", simd::effective().name())
+        .with("n", pb.n() as f64)
+        .with("p", pb.p() as f64)
+        .with("fce_sweep", Json::Arr(fce_rows))
+        .with("warm_vs_cold", warm_cold_json)
+        .with("working_sets", Json::Arr(strong_rows))
+        .with("inner_solvers", solvers_json)
+        .with("dual_norm", Json::obj().with("alg1_s", alg1).with("naive_s", naive));
+    std::fs::write("BENCH_ablation.json", out.pretty()).expect("write bench json");
+    println!("\nwrote BENCH_ablation.json");
 }

@@ -4,9 +4,13 @@
 //! Regenerates the paper's complexity claim (Prop. 9 / Rmk. 9): the
 //! pruned sorted algorithm wins by orders of magnitude at large d, and
 //! `n_I` is typically a small fraction of d.
+//!
+//! Writes `BENCH_dual_norm.json` for the cross-commit perf trajectory.
 
+use sgl::linalg::simd;
 use sgl::norms::epsilon::{lambda, lambda_bisect, pruned_count};
 use sgl::norms::sgl::epsilon_norm_naive;
+use sgl::util::json::Json;
 use sgl::util::rng::Pcg;
 use sgl::util::timer::{bench, black_box, BenchConfig};
 
@@ -14,6 +18,7 @@ fn main() {
     println!("== bench_dual_norm: Lambda(x, alpha, R) evaluation ==");
     println!("(alpha, R) from eps_g at tau=0.2, w=sqrt(d)\n");
     let cfg = BenchConfig { warmup_iters: 2, iters: 15, max_seconds: 20.0 };
+    let mut rows: Vec<Json> = Vec::new();
 
     println!(
         "{:>8} {:>14} {:>14} {:>14} {:>8} {:>10}",
@@ -52,10 +57,22 @@ fn main() {
             n_i,
             naive_us.unwrap_or(bisect.times.median * 1e6) / (fast.times.median * 1e6)
         );
+        rows.push(
+            Json::obj()
+                .with("d", d as f64)
+                .with("alg1_median_s", fast.times.median)
+                .with(
+                    "naive_median_s",
+                    naive.as_ref().map(|b| Json::Num(b.times.median)).unwrap_or(Json::Null),
+                )
+                .with("bisect_median_s", bisect.times.median)
+                .with("n_i", n_i as f64),
+        );
     }
 
     // Adversarial case: near-uniform magnitudes defeat pruning (n_I ~ d).
     println!("\nadversarial (all-equal coordinates, pruning inert):");
+    let mut adversarial: Vec<Json> = Vec::new();
     for &d in &[1_000usize, 100_000] {
         let x: Vec<f64> = vec![1.0; d];
         let eps = 0.9;
@@ -63,10 +80,21 @@ fn main() {
         let fast = bench(&format!("alg1 flat d={d}"), cfg, |_| {
             black_box(lambda(black_box(&x), alpha, r));
         });
-        println!(
-            "  d={d:>7}: {:>10.2} us/eval, n_I={}",
-            fast.times.median * 1e6,
-            pruned_count(&x, alpha, r)
+        let n_i = pruned_count(&x, alpha, r);
+        println!("  d={d:>7}: {:>10.2} us/eval, n_I={}", fast.times.median * 1e6, n_i);
+        adversarial.push(
+            Json::obj()
+                .with("d", d as f64)
+                .with("alg1_median_s", fast.times.median)
+                .with("n_i", n_i as f64),
         );
     }
+
+    let out = Json::obj()
+        .with("bench", "dual_norm")
+        .with("kernels", simd::effective().name())
+        .with("rows", Json::Arr(rows))
+        .with("adversarial", Json::Arr(adversarial));
+    std::fs::write("BENCH_dual_norm.json", out.pretty()).expect("write bench json");
+    println!("\nwrote BENCH_dual_norm.json");
 }

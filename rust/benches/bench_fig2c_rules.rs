@@ -13,6 +13,8 @@ use sgl::coordinator::jobs::RuleComparisonJob;
 use sgl::coordinator::report::render_rule_timings;
 use sgl::data::synthetic::SyntheticConfig;
 use sgl::experiments::fig2;
+use sgl::linalg::simd;
+use sgl::util::json::Json;
 use sgl::util::pool::default_threads;
 
 fn main() {
@@ -62,4 +64,26 @@ fn main() {
             t.converged
         );
     }
+
+    let rows: Vec<Json> = timings
+        .iter()
+        .map(|t| {
+            Json::obj()
+                .with("rule", t.rule.name())
+                .with("tol", t.tol)
+                .with("seconds", t.seconds)
+                .with("epochs", t.total_epochs as f64)
+                .with("converged", t.converged)
+        })
+        .collect();
+    let out = Json::obj()
+        .with("bench", "fig2c_rules")
+        .with("kernels", simd::effective().name())
+        .with("scale", if paper { "paper" } else { "small" })
+        .with("n", cfg.n as f64)
+        .with("p", cfg.p() as f64)
+        .with("t_count", t_count as f64)
+        .with("timings", Json::Arr(rows));
+    std::fs::write("BENCH_fig2c_rules.json", out.pretty()).expect("write bench json");
+    println!("\nwrote BENCH_fig2c_rules.json");
 }

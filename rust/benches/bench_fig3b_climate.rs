@@ -9,6 +9,8 @@ use sgl::coordinator::jobs::RuleComparisonJob;
 use sgl::coordinator::report::render_rule_timings;
 use sgl::data::climate::ClimateConfig;
 use sgl::experiments::fig3;
+use sgl::linalg::simd;
+use sgl::util::json::Json;
 use sgl::util::pool::default_threads;
 
 fn main() {
@@ -49,4 +51,26 @@ fn main() {
             t.converged
         );
     }
+
+    let rows: Vec<Json> = timings
+        .iter()
+        .map(|t| {
+            Json::obj()
+                .with("rule", t.rule.name())
+                .with("tol", t.tol)
+                .with("seconds", t.seconds)
+                .with("epochs", t.total_epochs as f64)
+                .with("converged", t.converged)
+        })
+        .collect();
+    let out = Json::obj()
+        .with("bench", "fig3b_climate")
+        .with("kernels", simd::effective().name())
+        .with("scale", if paper { "paper" } else { "small" })
+        .with("n", cfg.n_months as f64)
+        .with("p", cfg.p() as f64)
+        .with("t_count", t_count as f64)
+        .with("timings", Json::Arr(rows));
+    std::fs::write("BENCH_fig3b_climate.json", out.pretty()).expect("write bench json");
+    println!("\nwrote BENCH_fig3b_climate.json");
 }

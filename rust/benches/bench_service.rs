@@ -62,6 +62,7 @@ fn main() {
     // Machine-readable summary next to the printed report, for tracking
     // bench results across commits.
     let out = Json::obj()
+        .with("kernels", sgl::linalg::simd::effective().name())
         .with("scale", if paper { "paper" } else { "small" })
         .with("throughput", throughput)
         .with("sharding", sharding)

@@ -2,15 +2,22 @@
 //! size, gap-evaluation (dual norm) cost, prox throughput, and the
 //! screening-application overhead. These are the quantities the §Perf
 //! iteration log in EXPERIMENTS.md tracks.
+//!
+//! Writes `BENCH_solver_core.json` (median seconds per case, plus the
+//! kernel-policy shootout) so the perf trajectory persists across
+//! commits; the shootout times the p=5000 dense correlation `Xᵀu` under
+//! both kernel policies and asserts the SIMD path does not lose.
 
 use sgl::data::synthetic::{generate, SyntheticConfig};
+use sgl::linalg::simd;
 use sgl::norms::prox::sgl_prox_inplace;
 use sgl::screening::{apply_sphere, ActiveSet, RuleKind, Sphere};
 use sgl::solver::cd::{solve, SolveOptions};
 use sgl::solver::duality::DualSnapshot;
 use sgl::solver::problem::SglProblem;
+use sgl::util::json::Json;
 use sgl::util::rng::Pcg;
-use sgl::util::timer::{bench, black_box, BenchConfig};
+use sgl::util::timer::{bench, black_box, BenchConfig, BenchResult};
 
 fn problem() -> SglProblem {
     let cfg = SyntheticConfig {
@@ -26,11 +33,71 @@ fn problem() -> SglProblem {
     SglProblem::new(d.dataset.x, d.dataset.y, d.dataset.groups, 0.2)
 }
 
+fn record(cases: &mut Vec<Json>, r: &BenchResult) {
+    println!("{r}");
+    cases.push(
+        Json::obj()
+            .with("name", r.name.as_str())
+            .with("median_s", r.times.median)
+            .with("mean_s", r.times.mean)
+            .with("iters", r.times.n as f64),
+    );
+}
+
+/// Scalar vs SIMD on the dot-heavy dense path: the full-height
+/// correlation `Xᵀu` over all p=5000 columns, timed under each policy
+/// via the explicit `dot_with` kernels (no dependence on the process
+/// global, so the rest of the bench is unaffected).
+fn kernel_shootout(pb: &SglProblem, cfg: BenchConfig) -> Json {
+    let mut rng = Pcg::seeded(7);
+    let u = rng.normal_vec(pb.n());
+    let p = pb.p();
+    let mut out = vec![0.0; p];
+    let mut run = |simd_on: bool| {
+        bench(
+            &format!("X^T*u p={p} kernels={}", if simd_on { "simd" } else { "scalar" }),
+            cfg,
+            |_| {
+                for (j, o) in out.iter_mut().enumerate() {
+                    *o = simd::dot_with(pb.x.col(j), black_box(&u), simd_on);
+                }
+                black_box(&out);
+            },
+        )
+    };
+    let scalar = run(false);
+    let fast = run(true);
+    println!("{scalar}");
+    println!("{fast}");
+    let ratio = scalar.times.median / fast.times.median;
+    println!("  simd speedup over scalar: {ratio:.2}x (lanes={})", simd::lanes());
+    // The SIMD kernels must at least hold the line on a dot-heavy dense
+    // workload. 10% slack absorbs shared-runner timing noise; a real
+    // regression (reassociation gone wrong, panel sizing off) blows far
+    // past it.
+    if simd::lanes() >= 2 {
+        assert!(
+            fast.times.median <= scalar.times.median * 1.10,
+            "simd dot lost to scalar: {:.3}us vs {:.3}us",
+            fast.times.median * 1e6,
+            scalar.times.median * 1e6
+        );
+    }
+    Json::obj()
+        .with("p", p as f64)
+        .with("n", pb.n() as f64)
+        .with("lanes", simd::lanes() as f64)
+        .with("scalar_median_s", scalar.times.median)
+        .with("simd_median_s", fast.times.median)
+        .with("speedup", ratio)
+}
+
 fn main() {
     println!("== bench_solver_core (n=100, p=5000, 500 groups) ==\n");
     let pb = problem();
     let lambda = 0.1 * pb.lambda_max();
     let cfg = BenchConfig { warmup_iters: 2, iters: 12, max_seconds: 30.0 };
+    let mut cases: Vec<Json> = Vec::new();
 
     // ---- full solves at two tolerances, with/without screening
     for (name, rule, tol) in [
@@ -43,7 +110,7 @@ fn main() {
         let r = bench(name, cfg, |_| {
             black_box(solve(&pb, lambda, None, &opts));
         });
-        println!("{r}");
+        record(&mut cases, &r);
     }
 
     // ---- gap evaluation (X^T rho + dual norm) on the full problem
@@ -53,7 +120,7 @@ fn main() {
     let r = bench("dual snapshot (gap eval)", cfg, |_| {
         black_box(DualSnapshot::compute(&pb, &beta, &rho, lambda));
     });
-    println!("{r}");
+    record(&mut cases, &r);
 
     // ---- screening application given a snapshot
     let snap = DualSnapshot::compute(&pb, &beta, &rho, lambda);
@@ -64,7 +131,7 @@ fn main() {
         let mut rr = rho.clone();
         black_box(apply_sphere(&pb, &sphere, &mut active, &mut b, &mut rr));
     });
-    println!("{r}");
+    record(&mut cases, &r);
 
     // ---- prox throughput
     let mut rng = Pcg::seeded(1);
@@ -75,7 +142,7 @@ fn main() {
         }
         black_box(&blocks);
     });
-    println!("{r}");
+    record(&mut cases, &r);
 
     // ---- matvec kernels
     let v = rng.normal_vec(pb.p());
@@ -84,12 +151,26 @@ fn main() {
         pb.x.matvec_into(black_box(&v), &mut out_n);
         black_box(&out_n);
     });
-    println!("{r}");
+    record(&mut cases, &r);
     let u = rng.normal_vec(pb.n());
     let mut out_p = vec![0.0; pb.p()];
     let r = bench("X^T*u (correlation)", cfg, |_| {
         pb.x.tmatvec_into(black_box(&u), &mut out_p);
         black_box(&out_p);
     });
-    println!("{r}");
+    record(&mut cases, &r);
+
+    // ---- scalar-vs-SIMD shootout on the p=5000 dense correlation
+    println!("\n-- kernel policy shootout (explicit dot_with, both policies) --");
+    let shootout = kernel_shootout(&pb, cfg);
+
+    let out = Json::obj()
+        .with("bench", "solver_core")
+        .with("kernels", simd::effective().name())
+        .with("n", pb.n() as f64)
+        .with("p", pb.p() as f64)
+        .with("cases", Json::Arr(cases))
+        .with("kernel_shootout", shootout);
+    std::fs::write("BENCH_solver_core.json", out.pretty()).expect("write bench json");
+    println!("\nwrote BENCH_solver_core.json");
 }

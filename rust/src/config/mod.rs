@@ -7,9 +7,10 @@
 
 pub mod toml;
 
+use crate::linalg::simd::KernelPolicy;
 use crate::screening::RuleKind;
 use crate::solver::datafit::FitKind;
-use crate::solver::sweep::SweepMode;
+use crate::solver::sweep::{SweepMode, SweepTuning};
 use crate::solver::SolverKind;
 use anyhow::{bail, ensure, Context, Result};
 use std::fmt;
@@ -101,6 +102,30 @@ pub struct RunConfig {
     /// Worker threads per parallel sweep (`[solver] sweep_threads`,
     /// 0 = auto). Independent of `run.threads` (across-path fan-out).
     pub sweep_threads: usize,
+    /// Kernel implementation policy (`[solver] kernels = "auto" | "scalar"
+    /// | "simd"`, `--kernels`): `scalar` is bit-identical to the pre-SIMD
+    /// solver, `simd` agrees to ≤ 1e-12 relative per kernel, `auto`
+    /// resolves via `SGL_KERNELS` (default simd). Process-global, applied
+    /// by the CLI via [`crate::linalg::simd::set_policy`].
+    pub kernels: KernelPolicy,
+    /// Per-worker engage floor for the parallel `Xᵀv` sweeps
+    /// (`[solver] xt_floor`).
+    pub sweep_xt_floor: usize,
+    /// Per-worker engage floor for the row-partitioned residual kernels
+    /// (`[solver] residual_floor`).
+    pub sweep_residual_floor: usize,
+    /// Per-worker engage floor for the parallel dual-norm sweep
+    /// (`[solver] omega_dual_floor`).
+    pub sweep_omega_dual_floor: usize,
+    /// Per-worker engage floor for the ISTA/FISTA prox sweeps
+    /// (`[solver] prox_floor`).
+    pub sweep_prox_floor: usize,
+    /// Per-worker group floor below which parallel CD falls back to the
+    /// serial cyclic sweep (`[solver] cd_floor`).
+    pub sweep_cd_floor: usize,
+    /// Simultaneous block updates per round and worker in the parallel CD
+    /// epoch (`[solver] groups_per_round`).
+    pub sweep_groups_per_round: usize,
     /// λ-path: `λ_t = λ_max 10^{-δt/(T-1)}`.
     pub delta: f64,
     pub t_count: usize,
@@ -152,6 +177,13 @@ impl Default for RunConfig {
             rule: RuleKind::GapSafe,
             sweep: SweepMode::Serial,
             sweep_threads: 0, // 0 = auto
+            kernels: KernelPolicy::Auto,
+            sweep_xt_floor: SweepTuning::default().xt_floor,
+            sweep_residual_floor: SweepTuning::default().residual_floor,
+            sweep_omega_dual_floor: SweepTuning::default().omega_dual_floor,
+            sweep_prox_floor: SweepTuning::default().prox_floor,
+            sweep_cd_floor: SweepTuning::default().cd_floor,
+            sweep_groups_per_round: SweepTuning::default().groups_per_round,
             delta: 3.0,
             t_count: 100,
             seed: 42,
@@ -272,6 +304,12 @@ impl RunConfig {
         take!(climate_lat, "climate", "grid_lat", usize);
         take!(climate_months, "climate", "n_months", usize);
         take!(sweep_threads, "solver", "sweep_threads", usize);
+        take!(sweep_xt_floor, "solver", "xt_floor", usize);
+        take!(sweep_residual_floor, "solver", "residual_floor", usize);
+        take!(sweep_omega_dual_floor, "solver", "omega_dual_floor", usize);
+        take!(sweep_prox_floor, "solver", "prox_floor", usize);
+        take!(sweep_cd_floor, "solver", "cd_floor", usize);
+        take!(sweep_groups_per_round, "solver", "groups_per_round", usize);
         take!(service_workers, "service", "workers", usize);
         take!(service_queue_depth, "service", "queue_depth", usize);
         take!(service_shards, "service", "shards", usize);
@@ -293,6 +331,11 @@ impl RunConfig {
         if let Some(sweep) = doc.get_str("solver", "sweep") {
             cfg.sweep = SweepMode::from_name(&sweep)
                 .with_context(|| format!("unknown sweep mode {sweep:?} (serial|parallel)"))?;
+        }
+        if let Some(kernels) = doc.get_str("solver", "kernels") {
+            cfg.kernels = KernelPolicy::from_name(&kernels).with_context(|| {
+                format!("unknown kernel policy {kernels:?} (auto|scalar|simd)")
+            })?;
         }
         cfg.validate()?;
         Ok(cfg)
@@ -355,6 +398,18 @@ impl RunConfig {
                 bail!("libsvm group_size must be >= 1");
             }
         }
+        for (name, v) in [
+            ("xt_floor", self.sweep_xt_floor),
+            ("residual_floor", self.sweep_residual_floor),
+            ("omega_dual_floor", self.sweep_omega_dual_floor),
+            ("prox_floor", self.sweep_prox_floor),
+            ("cd_floor", self.sweep_cd_floor),
+            ("groups_per_round", self.sweep_groups_per_round),
+        ] {
+            if v == 0 {
+                bail!("solver {name} must be >= 1");
+            }
+        }
         Ok(())
     }
 
@@ -362,6 +417,19 @@ impl RunConfig {
     /// caller can ever size a zero-worker pool from the raw field.
     pub fn effective_threads(&self) -> usize {
         crate::util::pool::resolve_threads(self.threads)
+    }
+
+    /// The `[solver]` floor knobs packed into the struct
+    /// [`SolveOptions`](crate::solver::cd::SolveOptions) carries.
+    pub fn sweep_tuning(&self) -> SweepTuning {
+        SweepTuning {
+            xt_floor: self.sweep_xt_floor,
+            residual_floor: self.sweep_residual_floor,
+            omega_dual_floor: self.sweep_omega_dual_floor,
+            prox_floor: self.sweep_prox_floor,
+            cd_floor: self.sweep_cd_floor,
+            groups_per_round: self.sweep_groups_per_round,
+        }
     }
 }
 
@@ -501,6 +569,26 @@ rho = 0.9
         // Unknown modes are rejected with the valid choices named.
         let err = RunConfig::from_toml_str("[solver]\nsweep = \"jacobi\"\n").unwrap_err();
         assert!(format!("{err:#}").contains("serial|parallel"));
+    }
+
+    #[test]
+    fn parses_kernel_policy_and_sweep_tuning() {
+        let c = RunConfig::from_toml_str(
+            "[solver]\nkernels = \"scalar\"\nxt_floor = 128\ngroups_per_round = 2\n",
+        )
+        .unwrap();
+        assert_eq!(c.kernels, KernelPolicy::Scalar);
+        assert_eq!(c.sweep_tuning().xt_floor, 128);
+        assert_eq!(c.sweep_tuning().groups_per_round, 2);
+        // Defaults: auto policy, the floors the kernels shipped with.
+        let d = RunConfig::default();
+        assert_eq!(d.kernels, KernelPolicy::Auto);
+        assert_eq!(d.sweep_tuning(), SweepTuning::default());
+        // Bad values are rejected with the valid choices named.
+        let err = RunConfig::from_toml_str("[solver]\nkernels = \"avx\"\n").unwrap_err();
+        assert!(format!("{err:#}").contains("auto|scalar|simd"));
+        assert!(RunConfig::from_toml_str("[solver]\ncd_floor = 0\n").is_err());
+        assert!(RunConfig::from_toml_str("[solver]\ngroups_per_round = 0\n").is_err());
     }
 
     #[test]

@@ -234,6 +234,14 @@ impl SolveRequest {
             // count, which fixes the round shape) must key the cache.
             sweep: self.opts.solve.sweep.name(),
             sweep_threads: self.opts.solve.sweep_threads,
+            // The sweep-tuning floors shape the parallel-CD round
+            // structure (same objective, different trajectory) — they
+            // key the cache for the same reason sweep_threads does.
+            tuning: self.opts.solve.tuning,
+            // Kernel policy is process-global; it changes reduction
+            // orderings (and hence exact iterates), so a cache filled
+            // under one policy must not serve a run under another.
+            kernels: crate::linalg::simd::effective().name(),
             delta: self.opts.delta.to_bits(),
             t_count: self.opts.t_count,
             shards: self.shards,
@@ -265,6 +273,8 @@ struct CacheKey {
     record_history: bool,
     sweep: &'static str,
     sweep_threads: usize,
+    tuning: crate::solver::sweep::SweepTuning,
+    kernels: &'static str,
     delta: u64,
     t_count: usize,
     shards: usize,

@@ -4,7 +4,8 @@
 //! solvers: the inner loop repeatedly reads whole feature columns `X_j` and
 //! group sub-matrices `X_g` (contiguous column ranges).
 
-use super::ops::{dot, l2_norm};
+use super::ops::dot;
+use super::simd;
 
 /// Column-major `n_rows x n_cols` matrix of `f64`.
 #[derive(Clone, Debug, PartialEq)]
@@ -129,10 +130,9 @@ impl Matrix {
             if vj == 0.0 {
                 continue; // sparse beta: skip zero coefficients entirely
             }
-            let col = self.col(j);
-            for i in 0..self.n_rows {
-                y[i] += col[i] * vj;
-            }
+            // Elementwise, so the unrolled axpy is bit-identical to the old
+            // per-element loop under every kernel policy.
+            simd::axpy(vj, self.col(j), y);
         }
     }
 
@@ -145,11 +145,38 @@ impl Matrix {
     }
 
     /// `z = Aᵀ u`, into a caller-provided buffer.
+    ///
+    /// Under the SIMD kernel policy this streams cache-blocked column
+    /// panels: a [`simd::PANEL_ROWS`]-row slab of `u` stays L1-resident
+    /// while every column's matching slab is reduced against it, instead of
+    /// each column walking the full (cache-cold for large `n`) vector.
+    /// Because [`simd::dot_with`] is *defined* blockwise at the same panel
+    /// size (first panel assigned, the rest accumulated left to right), the
+    /// blocked result is bit-identical to per-column [`simd::dot`] — which
+    /// keeps serial and parallel `xt` sweeps exactly equal under either
+    /// policy.
     pub fn tmatvec_into(&self, u: &[f64], z: &mut [f64]) {
         assert_eq!(u.len(), self.n_rows);
         assert_eq!(z.len(), self.n_cols);
-        for j in 0..self.n_cols {
-            z[j] = dot(self.col(j), u);
+        if !simd::use_simd() {
+            for (j, zj) in z.iter_mut().enumerate() {
+                *zj = dot(self.col(j), u);
+            }
+            return;
+        }
+        let n = self.n_rows;
+        let first = simd::PANEL_ROWS.min(n);
+        for (j, zj) in z.iter_mut().enumerate() {
+            *zj = simd::dot_with(&self.col(j)[..first], &u[..first], true);
+        }
+        let mut r0 = first;
+        while r0 < n {
+            let r1 = (r0 + simd::PANEL_ROWS).min(n);
+            let up = &u[r0..r1];
+            for (j, zj) in z.iter_mut().enumerate() {
+                *zj += simd::dot_with(&self.col(j)[r0..r1], up, true);
+            }
+            r0 = r1;
         }
     }
 
@@ -157,18 +184,18 @@ impl Matrix {
     pub fn tmatvec_block(&self, j0: usize, j1: usize, u: &[f64], out: &mut [f64]) {
         debug_assert_eq!(out.len(), j1 - j0);
         for (k, j) in (j0..j1).enumerate() {
-            out[k] = dot(self.col(j), u);
+            out[k] = simd::dot(self.col(j), u);
         }
     }
 
     /// Euclidean norm of each column.
     pub fn col_norms(&self) -> Vec<f64> {
-        (0..self.n_cols).map(|j| l2_norm(self.col(j))).collect()
+        (0..self.n_cols).map(|j| simd::l2_norm(self.col(j))).collect()
     }
 
     /// Frobenius norm of the column block `j0..j1`.
     pub fn block_frobenius(&self, j0: usize, j1: usize) -> f64 {
-        l2_norm(self.cols(j0, j1))
+        simd::l2_norm(self.cols(j0, j1))
     }
 
     /// Vertical stack: `[self; other]` (used by the elastic-net
@@ -236,22 +263,22 @@ impl super::design::Design for Matrix {
 
     #[inline]
     fn col_dot(&self, j: usize, v: &[f64]) -> f64 {
-        dot(self.col(j), v)
+        simd::dot(self.col(j), v)
     }
 
     #[inline]
     fn col_axpy(&self, j: usize, alpha: f64, out: &mut [f64]) {
-        super::ops::axpy(alpha, self.col(j), out);
+        simd::axpy(alpha, self.col(j), out);
     }
 
     #[inline]
     fn col_axpy_rows(&self, j: usize, alpha: f64, row0: usize, row1: usize, out: &mut [f64]) {
-        super::ops::axpy(alpha, &self.col(j)[row0..row1], out);
+        simd::axpy_rows(alpha, self.col(j), row0, row1, out);
     }
 
     #[inline]
     fn col_norm(&self, j: usize) -> f64 {
-        l2_norm(self.col(j))
+        simd::l2_norm(self.col(j))
     }
 
     fn col_norms(&self) -> Vec<f64> {

@@ -17,8 +17,25 @@
 //! selection for the active-set compaction in
 //! [`crate::solver::active_set`].
 
+use std::sync::atomic::{AtomicUsize, Ordering};
+
 use super::ops::{l2_norm, scale};
 use crate::util::rng::Pcg;
+
+/// How many times the allocating trait-default `col_axpy_rows` ran in this
+/// process. Both shipped backends override it with a windowed kernel, so on
+/// dense/CSC solve paths this must stay flat — `tests/kernel_equivalence.rs`
+/// asserts exactly that. Exposed (hidden) so tests can observe it; only
+/// deliberately minimal backends (like the test shim in `linalg::sparse`)
+/// should ever bump it.
+#[doc(hidden)]
+pub static GENERIC_AXPY_ROWS_CALLS: AtomicUsize = AtomicUsize::new(0);
+
+/// Snapshot of [`GENERIC_AXPY_ROWS_CALLS`].
+#[doc(hidden)]
+pub fn generic_axpy_rows_calls() -> usize {
+    GENERIC_AXPY_ROWS_CALLS.load(Ordering::Relaxed)
+}
 
 /// A design matrix backend. All default methods are expressed in terms of
 /// `col_dot` / `col_axpy`, so a minimal backend only implements the
@@ -51,6 +68,7 @@ pub trait Design: Clone + Send + Sync + std::fmt::Debug {
     fn col_axpy_rows(&self, j: usize, alpha: f64, row0: usize, row1: usize, out: &mut [f64]) {
         debug_assert!(row0 <= row1 && row1 <= self.n_rows());
         debug_assert_eq!(out.len(), row1 - row0);
+        GENERIC_AXPY_ROWS_CALLS.fetch_add(1, Ordering::Relaxed);
         if alpha == 0.0 {
             return;
         }

@@ -13,11 +13,13 @@
 pub mod dense;
 pub mod design;
 pub mod ops;
+pub mod simd;
 pub mod sparse;
 pub mod spectral;
 
 pub use dense::Matrix;
 pub use design::{block_spectral_norm_generic, Design};
 pub use ops::{axpy, dot, inf_norm, l1_norm, l2_norm, l2_norm_sq, scale, sub};
+pub use simd::KernelPolicy;
 pub use sparse::CscMatrix;
 pub use spectral::{power_iteration, spectral_norm};

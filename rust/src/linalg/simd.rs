@@ -1,0 +1,601 @@
+//! Portable explicit-SIMD kernels with a bit-reproducible scalar fallback.
+//!
+//! Stable Rust has no `std::simd`, so the "SIMD" here is lane structs
+//! (`F64x8`) over fixed-size arrays: the accumulator loops are written so
+//! the autovectorizer reliably emits packed `mulpd/addpd` (the same trick as
+//! `ops::dot`'s 4-way unroll, widened to 8 lanes with an explicit horizontal
+//! reduce). No nightly features, no intrinsics, no `f64::mul_add` (baseline
+//! x86-64 has no FMA, so `mul_add` would fall back to a slow libm call).
+//!
+//! # Kernel policy contract
+//!
+//! Which implementation runs is a process-global [`KernelPolicy`]:
+//!
+//! - **`scalar`** — every reduction takes the exact pre-SIMD code path
+//!   (`ops::dot`'s unroll, the sequential sparse gather, the sequential
+//!   iterator folds in `duality`/`norms`). Results are **bit-identical** to
+//!   the solver before this layer existed, and all bit-identity tests
+//!   (sharding, wire, parallel sweeps) hold under it.
+//! - **`simd`** — reductions reassociate into 8 accumulator lanes reduced
+//!   pairwise, and dense reductions are additionally computed blockwise in
+//!   [`PANEL_ROWS`]-sized panels (so the cache-blocked `tmatvec` in
+//!   `linalg::dense` is bit-identical to a per-column [`dot`] under the same
+//!   policy). Versus `scalar` the guarantee is **≤ 1e-12 relative
+//!   agreement** per kernel (see `tests/kernel_equivalence.rs`), not bit
+//!   identity.
+//! - **`auto`** — defers to the `SGL_KERNELS` env var (`scalar` / `simd`),
+//!   else picks `simd`.
+//!
+//! Elementwise kernels ([`axpy`], [`axpy_rows`], [`sub_into`]) do not
+//! reassociate anything, so they are bit-identical under every policy and
+//! have a single implementation.
+//!
+//! The policy is per *process*, mirroring `SGL_THREADS`: a distributed
+//! fleet may mix workers running different policies, so wire/fleet results
+//! are computed under whatever policy each worker runs — cross-policy
+//! comparisons assert objective agreement, not bit-identity.
+
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::sync::OnceLock;
+
+use super::ops;
+
+/// Which kernel implementations the process uses.
+///
+/// See the [module docs](self) for the full contract. In short: `Scalar` is
+/// bit-identical to the pre-SIMD solver, `Simd` agrees to ≤ 1e-12 relative
+/// per kernel, `Auto` resolves via `SGL_KERNELS` (default `Simd`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum KernelPolicy {
+    /// Defer to `SGL_KERNELS` (`scalar`/`simd`); default to SIMD.
+    #[default]
+    Auto,
+    /// Bit-reproducible scalar kernels (the pre-SIMD code paths, verbatim).
+    Scalar,
+    /// Lane-unrolled kernels; ≤ 1e-12 relative agreement with `Scalar`.
+    Simd,
+}
+
+impl KernelPolicy {
+    pub fn name(self) -> &'static str {
+        match self {
+            KernelPolicy::Auto => "auto",
+            KernelPolicy::Scalar => "scalar",
+            KernelPolicy::Simd => "simd",
+        }
+    }
+
+    pub fn from_name(name: &str) -> Option<KernelPolicy> {
+        match name {
+            "auto" => Some(KernelPolicy::Auto),
+            "scalar" => Some(KernelPolicy::Scalar),
+            "simd" => Some(KernelPolicy::Simd),
+            _ => None,
+        }
+    }
+
+    pub fn all() -> &'static [KernelPolicy] {
+        &[KernelPolicy::Auto, KernelPolicy::Scalar, KernelPolicy::Simd]
+    }
+}
+
+/// Process-global policy (0 = auto, 1 = scalar, 2 = simd).
+static POLICY: AtomicU8 = AtomicU8::new(0);
+
+/// Set the process-global kernel policy (CLI `--kernels`, `[solver] kernels`).
+pub fn set_policy(p: KernelPolicy) {
+    let v = match p {
+        KernelPolicy::Auto => 0,
+        KernelPolicy::Scalar => 1,
+        KernelPolicy::Simd => 2,
+    };
+    POLICY.store(v, Ordering::Relaxed);
+}
+
+/// The policy as set (possibly `Auto`; see [`effective`] for the resolution).
+pub fn policy() -> KernelPolicy {
+    match POLICY.load(Ordering::Relaxed) {
+        1 => KernelPolicy::Scalar,
+        2 => KernelPolicy::Simd,
+        _ => KernelPolicy::Auto,
+    }
+}
+
+/// Parse an `SGL_KERNELS` value; malformed values are ignored (None).
+fn parse_env(raw: &str) -> Option<KernelPolicy> {
+    match KernelPolicy::from_name(raw.trim()) {
+        Some(KernelPolicy::Auto) | None => None,
+        p => p,
+    }
+}
+
+fn env_policy() -> Option<KernelPolicy> {
+    static ENV: OnceLock<Option<KernelPolicy>> = OnceLock::new();
+    *ENV.get_or_init(|| std::env::var("SGL_KERNELS").ok().and_then(|v| parse_env(&v)))
+}
+
+/// The policy actually executing: `Auto` resolved via `SGL_KERNELS`, else
+/// SIMD. Never returns `Auto`.
+pub fn effective() -> KernelPolicy {
+    match policy() {
+        KernelPolicy::Auto => env_policy().unwrap_or(KernelPolicy::Simd),
+        p => p,
+    }
+}
+
+/// Whether the lane-unrolled kernels are active.
+#[inline]
+pub fn use_simd() -> bool {
+    effective() == KernelPolicy::Simd
+}
+
+/// Accumulator lane count of the widest kernel. Portable lane structs always
+/// carry 8 lanes; how many map to hardware registers is the compiler's call.
+pub const LANES: usize = 8;
+
+/// Lane width exposed for benches/tests gating on "≥ 2 lanes available".
+#[inline]
+pub fn lanes() -> usize {
+    LANES
+}
+
+/// Row-panel size for cache-blocked dense reductions (2048 f64 = 16 KiB, an
+/// L1-resident panel). SIMD [`dot`] is *defined* blockwise at this size so
+/// the blocked `tmatvec` in `linalg::dense` and a straight per-column `dot`
+/// produce bit-identical sums.
+pub const PANEL_ROWS: usize = 2048;
+
+/// 8-lane f64 accumulator.
+#[derive(Clone, Copy)]
+struct F64x8([f64; 8]);
+
+impl F64x8 {
+    const ZERO: F64x8 = F64x8([0.0; 8]);
+
+    #[inline(always)]
+    fn load(chunk: &[f64]) -> F64x8 {
+        let mut v = [0.0; 8];
+        v.copy_from_slice(chunk);
+        F64x8(v)
+    }
+
+    /// `self += a * b`, lanewise.
+    #[inline(always)]
+    fn mul_acc(&mut self, a: F64x8, b: F64x8) {
+        for l in 0..8 {
+            self.0[l] += a.0[l] * b.0[l];
+        }
+    }
+
+    /// `self += a * a`, lanewise.
+    #[inline(always)]
+    fn sq_acc(&mut self, a: F64x8) {
+        for l in 0..8 {
+            self.0[l] += a.0[l] * a.0[l];
+        }
+    }
+
+    /// `self = max(self, |a|)`, lanewise.
+    #[inline(always)]
+    fn abs_max(&mut self, a: F64x8) {
+        for l in 0..8 {
+            self.0[l] = self.0[l].max(a.0[l].abs());
+        }
+    }
+
+    /// Pairwise horizontal sum: `((l0+l1)+(l2+l3)) + ((l4+l5)+(l6+l7))`.
+    #[inline(always)]
+    fn hsum(self) -> f64 {
+        let v = self.0;
+        ((v[0] + v[1]) + (v[2] + v[3])) + ((v[4] + v[5]) + (v[6] + v[7]))
+    }
+
+    #[inline(always)]
+    fn hmax(self) -> f64 {
+        self.0.iter().fold(0.0f64, |m, &x| m.max(x))
+    }
+}
+
+/// SIMD dot over one panel (callers split at [`PANEL_ROWS`]).
+#[inline]
+fn dot_panel(a: &[f64], b: &[f64]) -> f64 {
+    let mut acc = F64x8::ZERO;
+    let mut ia = a.chunks_exact(8);
+    let mut ib = b.chunks_exact(8);
+    for (ca, cb) in (&mut ia).zip(&mut ib) {
+        acc.mul_acc(F64x8::load(ca), F64x8::load(cb));
+    }
+    let mut s = acc.hsum();
+    for (x, y) in ia.remainder().iter().zip(ib.remainder()) {
+        s += x * y;
+    }
+    s
+}
+
+#[inline]
+fn sq_norm_panel(x: &[f64]) -> f64 {
+    let mut acc = F64x8::ZERO;
+    let mut it = x.chunks_exact(8);
+    for c in &mut it {
+        acc.sq_acc(F64x8::load(c));
+    }
+    let mut s = acc.hsum();
+    for v in it.remainder() {
+        s += v * v;
+    }
+    s
+}
+
+/// Dot product under an explicit lane choice (`simd = false` is
+/// `ops::dot`, bit-for-bit). The SIMD branch sums [`PANEL_ROWS`]-block
+/// partials left to right; see [`PANEL_ROWS`] for why.
+#[inline]
+pub fn dot_with(a: &[f64], b: &[f64], simd: bool) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    if !simd {
+        return ops::dot(a, b);
+    }
+    if a.len() <= PANEL_ROWS {
+        return dot_panel(a, b);
+    }
+    // First panel by assignment, not `0.0 + …`, so a blocked caller that
+    // assigns panel 0 then `+=` the rest reproduces this bit-for-bit (even
+    // for signed-zero partials).
+    let mut s = dot_panel(&a[..PANEL_ROWS], &b[..PANEL_ROWS]);
+    let mut i = PANEL_ROWS;
+    while i < a.len() {
+        let hi = (i + PANEL_ROWS).min(a.len());
+        s += dot_panel(&a[i..hi], &b[i..hi]);
+        i = hi;
+    }
+    s
+}
+
+/// Policy-dispatched dot product.
+#[inline]
+pub fn dot(a: &[f64], b: &[f64]) -> f64 {
+    dot_with(a, b, use_simd())
+}
+
+/// Squared Euclidean norm under an explicit lane choice (`simd = false` is
+/// `ops::l2_norm_sq`, bit-for-bit).
+#[inline]
+pub fn sq_norm_with(x: &[f64], simd: bool) -> f64 {
+    if !simd {
+        return ops::l2_norm_sq(x);
+    }
+    if x.len() <= PANEL_ROWS {
+        return sq_norm_panel(x);
+    }
+    let mut s = sq_norm_panel(&x[..PANEL_ROWS]);
+    let mut i = PANEL_ROWS;
+    while i < x.len() {
+        let hi = (i + PANEL_ROWS).min(x.len());
+        s += sq_norm_panel(&x[i..hi]);
+        i = hi;
+    }
+    s
+}
+
+/// Policy-dispatched squared Euclidean norm.
+#[inline]
+pub fn sq_norm(x: &[f64]) -> f64 {
+    sq_norm_with(x, use_simd())
+}
+
+/// Policy-dispatched Euclidean norm.
+#[inline]
+pub fn l2_norm(x: &[f64]) -> f64 {
+    sq_norm(x).sqrt()
+}
+
+/// Max-abs (`ℓ∞`) reduction under an explicit lane choice. `max`/`abs` are
+/// exact and order-independent for non-NaN input, so both branches agree
+/// bit-for-bit — the SIMD branch just trades the serial dependency chain for
+/// 8 independent lanes.
+#[inline]
+pub fn max_abs_with(x: &[f64], simd: bool) -> f64 {
+    if !simd {
+        return ops::inf_norm(x);
+    }
+    let mut acc = F64x8::ZERO;
+    let mut it = x.chunks_exact(8);
+    for c in &mut it {
+        acc.abs_max(F64x8::load(c));
+    }
+    let mut m = acc.hmax();
+    for v in it.remainder() {
+        m = m.max(v.abs());
+    }
+    m
+}
+
+/// Policy-dispatched max-abs reduction.
+#[inline]
+pub fn max_abs(x: &[f64]) -> f64 {
+    max_abs_with(x, use_simd())
+}
+
+/// Sparse gather-dot `Σ x[rows[i]] * vals[i]` under an explicit lane choice.
+/// The scalar branch is the CSC backend's original sequential gather; the
+/// SIMD branch runs four independent accumulator chains (the gather itself
+/// cannot vectorize on baseline x86-64, but the chains hide load latency).
+#[inline]
+pub fn sparse_dot_with(rows: &[usize], vals: &[f64], x: &[f64], simd: bool) -> f64 {
+    debug_assert_eq!(rows.len(), vals.len());
+    if !simd {
+        let mut s = 0.0;
+        for (&i, &v) in rows.iter().zip(vals) {
+            s += x[i] * v;
+        }
+        return s;
+    }
+    let n = vals.len();
+    let chunks = n / 4 * 4;
+    let (mut s0, mut s1, mut s2, mut s3) = (0.0, 0.0, 0.0, 0.0);
+    let mut i = 0;
+    while i < chunks {
+        s0 += x[rows[i]] * vals[i];
+        s1 += x[rows[i + 1]] * vals[i + 1];
+        s2 += x[rows[i + 2]] * vals[i + 2];
+        s3 += x[rows[i + 3]] * vals[i + 3];
+        i += 4;
+    }
+    let mut s = (s0 + s1) + (s2 + s3);
+    while i < n {
+        s += x[rows[i]] * vals[i];
+        i += 1;
+    }
+    s
+}
+
+/// Policy-dispatched sparse gather-dot.
+#[inline]
+pub fn sparse_dot(rows: &[usize], vals: &[f64], x: &[f64]) -> f64 {
+    sparse_dot_with(rows, vals, x, use_simd())
+}
+
+/// Σ (t_i − y_i/λ)² — the dual-point distance reduction from
+/// `solver::duality`, fused (no scratch residual vector). Scalar branch is
+/// the original sequential iterator fold, bit-for-bit.
+#[inline]
+pub fn dist_sq_scaled_with(y: &[f64], theta: &[f64], lambda: f64, simd: bool) -> f64 {
+    debug_assert_eq!(y.len(), theta.len());
+    if !simd {
+        return theta
+            .iter()
+            .zip(y)
+            .map(|(ti, yi)| {
+                let d = ti - yi / lambda;
+                d * d
+            })
+            .sum();
+    }
+    let n = y.len();
+    let chunks = n / 4 * 4;
+    let (mut s0, mut s1, mut s2, mut s3) = (0.0, 0.0, 0.0, 0.0);
+    let mut i = 0;
+    while i < chunks {
+        let d0 = theta[i] - y[i] / lambda;
+        let d1 = theta[i + 1] - y[i + 1] / lambda;
+        let d2 = theta[i + 2] - y[i + 2] / lambda;
+        let d3 = theta[i + 3] - y[i + 3] / lambda;
+        s0 += d0 * d0;
+        s1 += d1 * d1;
+        s2 += d2 * d2;
+        s3 += d3 * d3;
+        i += 4;
+    }
+    let mut s = (s0 + s1) + (s2 + s3);
+    while i < n {
+        let d = theta[i] - y[i] / lambda;
+        s += d * d;
+        i += 1;
+    }
+    s
+}
+
+/// Policy-dispatched fused dual-distance reduction.
+#[inline]
+pub fn dist_sq_scaled(y: &[f64], theta: &[f64], lambda: f64) -> f64 {
+    dist_sq_scaled_with(y, theta, lambda, use_simd())
+}
+
+// ---------------------------------------------------------------------------
+// Elementwise kernels: no reassociation, bit-identical under every policy.
+// ---------------------------------------------------------------------------
+
+/// `y += alpha * x`, unrolled. Elementwise, so bit-identical to `ops::axpy`
+/// under every policy; kept as one implementation.
+#[inline]
+pub fn axpy(alpha: f64, x: &[f64], y: &mut [f64]) {
+    debug_assert_eq!(x.len(), y.len());
+    if alpha == 0.0 {
+        return;
+    }
+    let mut iy = y.chunks_exact_mut(8);
+    let mut ix = x.chunks_exact(8);
+    for (cy, cx) in (&mut iy).zip(&mut ix) {
+        for l in 0..8 {
+            cy[l] += alpha * cx[l];
+        }
+    }
+    for (yi, xi) in iy.into_remainder().iter_mut().zip(ix.remainder()) {
+        *yi += alpha * xi;
+    }
+}
+
+/// `out += alpha * x[row0..row1]` — the row-window axpy every backend's
+/// `col_axpy_rows` bottoms out in. Elementwise; bit-identical everywhere.
+#[inline]
+pub fn axpy_rows(alpha: f64, x: &[f64], row0: usize, row1: usize, out: &mut [f64]) {
+    axpy(alpha, &x[row0..row1], out);
+}
+
+/// `out[i] = a[i] - b[i]` — fused residual update (`r = y − Xβ` given the
+/// prediction). Elementwise; bit-identical everywhere.
+#[inline]
+pub fn sub_into(a: &[f64], b: &[f64], out: &mut [f64]) {
+    debug_assert_eq!(a.len(), b.len());
+    debug_assert_eq!(a.len(), out.len());
+    for ((o, x), y) in out.iter_mut().zip(a).zip(b) {
+        *o = x - y;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rel(a: f64, b: f64) -> f64 {
+        (a - b).abs() / b.abs().max(1e-300)
+    }
+
+    fn vec_a(n: usize) -> Vec<f64> {
+        (0..n).map(|i| ((i * 2654435761 % 1000) as f64 - 500.0) / 331.0).collect()
+    }
+
+    fn vec_b(n: usize) -> Vec<f64> {
+        (0..n).map(|i| ((i * 40503 % 997) as f64 - 498.0) / 173.0).collect()
+    }
+
+    #[test]
+    fn policy_names_round_trip() {
+        for &p in KernelPolicy::all() {
+            assert_eq!(KernelPolicy::from_name(p.name()), Some(p));
+        }
+        assert_eq!(KernelPolicy::from_name("avx512"), None);
+        assert_eq!(KernelPolicy::default(), KernelPolicy::Auto);
+    }
+
+    #[test]
+    fn env_parse_ignores_malformed() {
+        assert_eq!(parse_env(" simd "), Some(KernelPolicy::Simd));
+        assert_eq!(parse_env("scalar"), Some(KernelPolicy::Scalar));
+        assert_eq!(parse_env("auto"), None);
+        assert_eq!(parse_env("fast"), None);
+        assert_eq!(parse_env(""), None);
+    }
+
+    #[test]
+    fn scalar_branch_is_ops_dot_bitwise() {
+        for n in [0, 1, 3, 7, 8, 9, 63, 100] {
+            let a = vec_a(n);
+            let b = vec_b(n);
+            assert_eq!(dot_with(&a, &b, false).to_bits(), ops::dot(&a, &b).to_bits());
+            assert_eq!(sq_norm_with(&a, false).to_bits(), ops::l2_norm_sq(&a).to_bits());
+            assert_eq!(max_abs_with(&a, false).to_bits(), ops::inf_norm(&a).to_bits());
+        }
+    }
+
+    #[test]
+    fn simd_dot_agrees_with_scalar() {
+        for n in [0, 1, 2, 7, 8, 9, 15, 16, 17, 63, 64, 65, 1000, 2047, 2048, 2049, 5000] {
+            let a = vec_a(n);
+            let b = vec_b(n);
+            let s = dot_with(&a, &b, false);
+            let v = dot_with(&a, &b, true);
+            assert!(rel(v, s) < 1e-12 || (s == 0.0 && v.abs() < 1e-12), "n={n}: {v} vs {s}");
+        }
+    }
+
+    #[test]
+    fn simd_dot_is_blockwise_consistent() {
+        // A long dot must equal the left-to-right sum of panel dots: this is
+        // what makes cache-blocked tmatvec bit-identical to per-column dot.
+        let n = 3 * PANEL_ROWS + 123;
+        let a = vec_a(n);
+        let b = vec_b(n);
+        let whole = dot_with(&a, &b, true);
+        let mut sum = dot_with(&a[..PANEL_ROWS], &b[..PANEL_ROWS], true);
+        let mut i = PANEL_ROWS;
+        while i < n {
+            let hi = (i + PANEL_ROWS).min(n);
+            sum += dot_with(&a[i..hi], &b[i..hi], true);
+            i = hi;
+        }
+        assert_eq!(whole.to_bits(), sum.to_bits());
+    }
+
+    #[test]
+    fn simd_reductions_agree() {
+        for n in [0, 1, 5, 8, 13, 100, 4097] {
+            let a = vec_a(n);
+            let s = sq_norm_with(&a, false);
+            assert!(rel(sq_norm_with(&a, true), s) < 1e-12 || s == 0.0);
+            // max/abs are exact: bit-identical across branches.
+            assert_eq!(max_abs_with(&a, true).to_bits(), max_abs_with(&a, false).to_bits());
+        }
+    }
+
+    #[test]
+    fn sparse_dot_branches_agree() {
+        let x = vec_a(50);
+        let rows: Vec<usize> = (0..23).map(|i| (i * 7) % 50).collect();
+        let vals = vec_b(23);
+        let s = sparse_dot_with(&rows, &vals, &x, false);
+        let v = sparse_dot_with(&rows, &vals, &x, true);
+        assert!(rel(v, s) < 1e-12);
+        assert_eq!(sparse_dot_with(&[], &[], &x, true), 0.0);
+    }
+
+    #[test]
+    fn dist_sq_scaled_branches_agree() {
+        for n in [0, 1, 3, 4, 5, 97] {
+            let y = vec_a(n);
+            let t = vec_b(n);
+            let s = dist_sq_scaled_with(&y, &t, 0.37, false);
+            let v = dist_sq_scaled_with(&y, &t, 0.37, true);
+            assert!(rel(v, s) < 1e-12 || s == 0.0);
+        }
+    }
+
+    #[test]
+    fn axpy_matches_ops_bitwise() {
+        for n in [0, 1, 7, 8, 9, 40] {
+            let x = vec_a(n);
+            let mut y1 = vec_b(n);
+            let mut y2 = y1.clone();
+            axpy(0.731, &x, &mut y1);
+            ops::axpy(0.731, &x, &mut y2);
+            assert_eq!(y1, y2);
+            axpy(0.0, &x, &mut y1);
+            assert_eq!(y1, y2);
+        }
+    }
+
+    #[test]
+    fn axpy_rows_is_windowed_axpy() {
+        let x = vec_a(20);
+        let mut out = vec![0.0; 6];
+        axpy_rows(2.0, &x, 4, 10, &mut out);
+        let expect: Vec<f64> = x[4..10].iter().map(|v| 2.0 * v).collect();
+        assert_eq!(out, expect);
+    }
+
+    #[test]
+    fn sub_into_subtracts() {
+        let a = [5.0, 1.0, -2.0];
+        let b = [1.0, 1.0, 1.5];
+        let mut out = [0.0; 3];
+        sub_into(&a, &b, &mut out);
+        assert_eq!(out, [4.0, 0.0, -3.5]);
+    }
+
+    #[test]
+    fn subnormal_and_signed_zero_inputs() {
+        let tiny = f64::MIN_POSITIVE / 8.0;
+        let a = [tiny, -tiny, 0.0, -0.0, tiny, tiny, -tiny, 0.0, tiny];
+        let b = [tiny, tiny, -0.0, 0.0, -tiny, tiny, tiny, 1.0, tiny];
+        let s = dot_with(&a, &b, false);
+        let v = dot_with(&a, &b, true);
+        assert!((v - s).abs() <= s.abs() * 1e-12 + f64::MIN_POSITIVE);
+        assert_eq!(max_abs_with(&a, true), tiny);
+    }
+
+    #[test]
+    fn lanes_reported() {
+        assert_eq!(lanes(), LANES);
+        assert!(lanes() >= 2);
+    }
+}

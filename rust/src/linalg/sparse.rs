@@ -8,8 +8,12 @@
 //! of `n·p` — on a ~1%-density bag-of-words-style design that is a ~100×
 //! smaller sweep.
 
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, RwLock};
+
 use super::dense::Matrix;
 use super::design::Design;
+use super::simd;
 
 /// Sparse `n_rows × n_cols` matrix of `f64` in compressed-sparse-column
 /// form. Within a column entries are stored in increasing row order
@@ -25,6 +29,98 @@ pub struct CscMatrix {
     indices: Vec<usize>,
     /// Value of each stored entry, length `nnz`.
     values: Vec<f64>,
+    /// Memoized `col_axpy_rows` window bounds (derived data; excluded from
+    /// equality, cloned fresh).
+    windows: RowWindowCache,
+}
+
+/// Sentinel: bounds not yet computed for this column.
+const WINDOW_UNSET: u64 = u64::MAX;
+
+/// Lazily-filled memo of the binary-search results `col_axpy_rows` needs.
+///
+/// The parallel residual sweep partitions rows into one fixed window per
+/// worker and then calls `col_axpy_rows` with the *same* `(row0, row1)` for
+/// every active column, every epoch — re-running two `partition_point`
+/// searches per call on identical inputs. This cache keys on the window and
+/// memoizes each column's `(lo, hi)` entry range the first time it is
+/// asked, packed into one `AtomicU64` (`lo << 32 | hi`). Fills are raceless
+/// by idempotence: concurrent workers compute identical values, so a
+/// duplicate store is harmless.
+///
+/// It is pure derived data, so it compares equal to any other cache and a
+/// `Clone` of the matrix starts empty. Bounded: at most [`MAX_WINDOWS`]
+/// distinct windows are memoized (a fleet re-solving under many different
+/// worker counts); requests past the cap just fall back to the binary
+/// search. Columns of matrices with ≥ `u32::MAX` stored entries are never
+/// cached (they would not fit the packing).
+///
+/// [`MAX_WINDOWS`]: RowWindowCache::MAX_WINDOWS
+struct RowWindowCache {
+    windows: RwLock<Vec<WindowBounds>>,
+}
+
+struct WindowBounds {
+    row0: usize,
+    row1: usize,
+    /// Per-column packed `(lo << 32) | hi`, [`WINDOW_UNSET`] until filled.
+    bounds: Arc<Vec<AtomicU64>>,
+}
+
+impl RowWindowCache {
+    const MAX_WINDOWS: usize = 64;
+
+    fn new() -> Self {
+        RowWindowCache { windows: RwLock::new(Vec::new()) }
+    }
+
+    /// The bounds table for a window, creating it if there is room.
+    fn table(&self, row0: usize, row1: usize, n_cols: usize) -> Option<Arc<Vec<AtomicU64>>> {
+        {
+            let read = self.windows.read().unwrap();
+            if let Some(w) = read.iter().find(|w| w.row0 == row0 && w.row1 == row1) {
+                return Some(Arc::clone(&w.bounds));
+            }
+            if read.len() >= Self::MAX_WINDOWS {
+                return None;
+            }
+        }
+        let mut write = self.windows.write().unwrap();
+        if let Some(w) = write.iter().find(|w| w.row0 == row0 && w.row1 == row1) {
+            return Some(Arc::clone(&w.bounds));
+        }
+        if write.len() >= Self::MAX_WINDOWS {
+            return None;
+        }
+        let bounds: Arc<Vec<AtomicU64>> =
+            Arc::new((0..n_cols).map(|_| AtomicU64::new(WINDOW_UNSET)).collect());
+        write.push(WindowBounds { row0, row1, bounds: Arc::clone(&bounds) });
+        Some(bounds)
+    }
+}
+
+impl Clone for RowWindowCache {
+    fn clone(&self) -> Self {
+        RowWindowCache::new() // derived data: rebuilt on demand
+    }
+}
+
+impl Default for RowWindowCache {
+    fn default() -> Self {
+        RowWindowCache::new()
+    }
+}
+
+impl PartialEq for RowWindowCache {
+    fn eq(&self, _: &Self) -> bool {
+        true // never part of matrix identity
+    }
+}
+
+impl std::fmt::Debug for RowWindowCache {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str("RowWindowCache")
+    }
 }
 
 impl CscMatrix {
@@ -51,7 +147,7 @@ impl CscMatrix {
             }
             indptr.push(indices.len());
         }
-        CscMatrix { n_rows, n_cols, indptr, indices, values }
+        CscMatrix { n_rows, n_cols, indptr, indices, values, windows: RowWindowCache::new() }
     }
 
     /// Build from raw CSC arrays (`indptr.len() == n_cols + 1`).
@@ -71,7 +167,7 @@ impl CscMatrix {
         for &i in &indices {
             assert!(i < n_rows, "row index {i} out of bounds (n_rows {n_rows})");
         }
-        CscMatrix { n_rows, n_cols, indptr, indices, values }
+        CscMatrix { n_rows, n_cols, indptr, indices, values, windows: RowWindowCache::new() }
     }
 
     /// Compress a dense matrix, dropping exact zeros.
@@ -91,7 +187,7 @@ impl CscMatrix {
             }
             indptr.push(indices.len());
         }
-        CscMatrix { n_rows, n_cols, indptr, indices, values }
+        CscMatrix { n_rows, n_cols, indptr, indices, values, windows: RowWindowCache::new() }
     }
 
     /// Expand back to a dense column-major matrix.
@@ -133,6 +229,47 @@ impl CscMatrix {
         let (a, b) = (self.indptr[j], self.indptr[j + 1]);
         (&self.indices[a..b], &self.values[a..b])
     }
+
+    /// Entry range of column `j` (given as its row slice) covering rows
+    /// `row0..row1`, memoized through the window cache when possible.
+    fn window_entry_range(&self, j: usize, row0: usize, row1: usize, rows: &[usize]) -> (usize, usize) {
+        if self.values.len() < u32::MAX as usize {
+            if let Some(table) = self.windows.table(row0, row1, self.n_cols) {
+                let packed = table[j].load(Ordering::Relaxed);
+                if packed != WINDOW_UNSET {
+                    return ((packed >> 32) as usize, (packed & 0xffff_ffff) as usize);
+                }
+                let lo = rows.partition_point(|&i| i < row0);
+                let hi = lo + rows[lo..].partition_point(|&i| i < row1);
+                table[j].store(((lo as u64) << 32) | hi as u64, Ordering::Relaxed);
+                return (lo, hi);
+            }
+        }
+        let lo = rows.partition_point(|&i| i < row0);
+        let hi = lo + rows[lo..].partition_point(|&i| i < row1);
+        (lo, hi)
+    }
+}
+
+/// `out[rows[k] - base] += alpha * vals[k]`, 4-way unrolled. Row indices are
+/// strictly increasing within a column, so the targets never alias and the
+/// unroll is bit-identical to the sequential scatter.
+#[inline]
+fn scatter_axpy(rows: &[usize], vals: &[f64], alpha: f64, base: usize, out: &mut [f64]) {
+    let n = vals.len();
+    let chunks = n / 4 * 4;
+    let mut k = 0;
+    while k < chunks {
+        out[rows[k] - base] += alpha * vals[k];
+        out[rows[k + 1] - base] += alpha * vals[k + 1];
+        out[rows[k + 2] - base] += alpha * vals[k + 2];
+        out[rows[k + 3] - base] += alpha * vals[k + 3];
+        k += 4;
+    }
+    while k < n {
+        out[rows[k] - base] += alpha * vals[k];
+        k += 1;
+    }
 }
 
 impl Design for CscMatrix {
@@ -155,11 +292,10 @@ impl Design for CscMatrix {
     fn col_dot(&self, j: usize, v: &[f64]) -> f64 {
         debug_assert_eq!(v.len(), self.n_rows);
         let (rows, vals) = self.col(j);
-        let mut s = 0.0;
-        for (&i, &x) in rows.iter().zip(vals) {
-            s += x * v[i];
-        }
-        s
+        // Policy-dispatched: the scalar branch is this backend's original
+        // sequential gather, the SIMD branch runs 4 independent accumulator
+        // chains (gather-free over the contiguous value slice).
+        simd::sparse_dot(rows, vals, v)
     }
 
     #[inline]
@@ -169,9 +305,7 @@ impl Design for CscMatrix {
             return;
         }
         let (rows, vals) = self.col(j);
-        for (&i, &x) in rows.iter().zip(vals) {
-            out[i] += alpha * x;
-        }
+        scatter_axpy(rows, vals, alpha, 0, out);
     }
 
     fn col_axpy_rows(&self, j: usize, alpha: f64, row0: usize, row1: usize, out: &mut [f64]) {
@@ -180,19 +314,27 @@ impl Design for CscMatrix {
         if alpha == 0.0 {
             return;
         }
-        // Row indices are sorted within a column: binary-search the window.
+        // Row indices are sorted within a column, so the window is an entry
+        // range found by binary search — memoized per (window, column),
+        // since sweeps replay identical windows every epoch.
         let (rows, vals) = self.col(j);
-        let lo = rows.partition_point(|&i| i < row0);
-        let hi = lo + rows[lo..].partition_point(|&i| i < row1);
-        for (&i, &x) in rows[lo..hi].iter().zip(&vals[lo..hi]) {
-            out[i - row0] += alpha * x;
-        }
+        let (lo, hi) = if row0 == 0 && row1 == self.n_rows {
+            (0, rows.len()) // full column: no search needed
+        } else {
+            self.window_entry_range(j, row0, row1, rows)
+        };
+        scatter_axpy(&rows[lo..hi], &vals[lo..hi], alpha, row0, out);
     }
 
     #[inline]
     fn col_norm(&self, j: usize) -> f64 {
         let (_, vals) = self.col(j);
-        vals.iter().map(|v| v * v).sum::<f64>().sqrt()
+        if simd::use_simd() {
+            simd::sq_norm_with(vals, true).sqrt()
+        } else {
+            // The pre-SIMD sequential fold, kept verbatim for bit identity.
+            vals.iter().map(|v| v * v).sum::<f64>().sqrt()
+        }
     }
 
     fn select_cols(&self, cols: &[usize]) -> Self {
@@ -206,7 +348,14 @@ impl Design for CscMatrix {
             values.extend_from_slice(vals);
             indptr.push(indices.len());
         }
-        CscMatrix { n_rows: self.n_rows, n_cols: cols.len(), indptr, indices, values }
+        CscMatrix {
+            n_rows: self.n_rows,
+            n_cols: cols.len(),
+            indptr,
+            indices,
+            values,
+            windows: RowWindowCache::new(),
+        }
     }
 
     fn select_rows(&self, rows: &[usize]) -> Self {
@@ -240,7 +389,14 @@ impl Design for CscMatrix {
             }
             indptr.push(indices.len());
         }
-        CscMatrix { n_rows: rows.len(), n_cols: self.n_cols, indptr, indices, values }
+        CscMatrix {
+            n_rows: rows.len(),
+            n_cols: self.n_cols,
+            indptr,
+            indices,
+            values,
+            windows: RowWindowCache::new(),
+        }
     }
 }
 
@@ -386,6 +542,52 @@ mod tests {
             }
         }
         Shim(x.clone()).col_axpy_rows(j, alpha, row0, row1, out)
+    }
+
+    #[test]
+    fn window_cache_memoizes_and_stays_correct() {
+        let (s, _) = random_pair(30, 5, 0.4, 11);
+        // Repeat passes so later iterations hit the memoized bounds.
+        for pass in 0..3 {
+            for (row0, row1) in [(0, 30), (0, 10), (10, 20), (20, 30), (7, 23), (9, 9)] {
+                for j in 0..5 {
+                    let mut windowed = vec![0.0; row1 - row0];
+                    s.col_axpy_rows(j, 1.5, row0, row1, &mut windowed);
+                    let mut full = vec![0.0; 30];
+                    s.col_axpy(j, 1.5, &mut full);
+                    assert_eq!(
+                        &windowed[..],
+                        &full[row0..row1],
+                        "pass {pass} j={j} rows {row0}..{row1}"
+                    );
+                }
+            }
+        }
+        // A clone starts with a fresh cache and identical results.
+        let c = s.clone();
+        let (mut a, mut b) = (vec![0.0; 13], vec![0.0; 13]);
+        s.col_axpy_rows(2, -0.5, 7, 20, &mut a);
+        c.col_axpy_rows(2, -0.5, 7, 20, &mut b);
+        assert_eq!(a, b);
+        assert_eq!(s, c);
+    }
+
+    #[test]
+    fn window_cache_cap_falls_back_to_search() {
+        let (s, _) = random_pair(200, 3, 0.5, 12);
+        // Burn through more distinct windows than the cache holds; the ones
+        // past the cap bypass the memo and must stay exact.
+        for w in 0..(RowWindowCache::MAX_WINDOWS + 8) {
+            let (row0, row1) = (w, w + 100);
+            for j in 0..3 {
+                let mut windowed = vec![0.0; 100];
+                s.col_axpy_rows(j, 2.0, row0, row1, &mut windowed);
+                let mut full = vec![0.0; 200];
+                s.col_axpy(j, 2.0, &mut full);
+                assert_eq!(&windowed[..], &full[row0..row1], "window {row0}..{row1} col {j}");
+            }
+        }
+        assert_eq!(s.windows.windows.read().unwrap().len(), RowWindowCache::MAX_WINDOWS);
     }
 
     #[test]

@@ -70,6 +70,7 @@ fn specs() -> Vec<OptSpec> {
         OptSpec { name: "rule", help: "none|static|dynamic|dst3|gap_safe|gap_safe_seq", takes_value: true, default: None },
         OptSpec { name: "sweep", help: "serial|parallel intra-solve epoch mode", takes_value: true, default: None },
         OptSpec { name: "sweep-threads", help: "threads per parallel sweep (0 = auto)", takes_value: true, default: None },
+        OptSpec { name: "kernels", help: "auto|scalar|simd kernel policy", takes_value: true, default: None },
         OptSpec { name: "delta", help: "path grid exponent", takes_value: true, default: None },
         OptSpec { name: "t-count", help: "path grid size", takes_value: true, default: None },
         OptSpec { name: "seed", help: "dataset seed", takes_value: true, default: None },
@@ -132,6 +133,10 @@ fn load_config(args: &Args) -> Result<RunConfig> {
     }
     if let Some(v) = args.get("sweep-threads") {
         cfg.sweep_threads = v.parse().context("--sweep-threads")?;
+    }
+    if let Some(v) = args.get("kernels") {
+        cfg.kernels = sgl::linalg::KernelPolicy::from_name(&v)
+            .with_context(|| format!("unknown kernel policy {v} (auto|scalar|simd)"))?;
     }
     if let Some(v) = args.get("delta") {
         cfg.delta = v.parse().context("--delta")?;
@@ -264,6 +269,7 @@ fn solve_opts(cfg: &RunConfig, record_history: bool) -> SolveOptions {
         record_history,
         sweep: cfg.sweep,
         sweep_threads: cfg.sweep_threads,
+        tuning: cfg.sweep_tuning(),
     }
 }
 
@@ -682,6 +688,9 @@ macro_rules! with_backend {
 fn run(args: &Args) -> Result<()> {
     let cmd = args.positional().first().map(String::as_str).unwrap_or("help");
     let cfg = load_config(args)?;
+    // Kernel policy is process-global (like SGL_THREADS): one store up
+    // front covers every backend and worker thread in this process.
+    sgl::linalg::simd::set_policy(cfg.kernels);
     let scale = args.get_or("scale", "small");
     let threads = cfg.effective_threads();
 
@@ -731,6 +740,7 @@ fn run(args: &Args) -> Result<()> {
                     record_history: false,
                     sweep: cfg.sweep,
                     sweep_threads: cfg.sweep_threads,
+                    tuning: cfg.sweep_tuning(),
                     ..Default::default()
                 },
             };

@@ -4,6 +4,7 @@
 use super::epsilon::{epsilon_dual_norm, lambda};
 use super::prox::soft_threshold_vec;
 use crate::linalg::ops::{l1_norm, l2_norm};
+use crate::linalg::simd;
 use crate::solver::groups::Groups;
 
 /// `ε_g = (1−τ) w_g / (τ + (1−τ) w_g)` — paper Eq. (18).
@@ -20,7 +21,8 @@ pub fn omega(beta: &[f64], groups: &Groups, tau: f64, w: &[f64]) -> f64 {
     debug_assert_eq!(w.len(), groups.n_groups());
     let mut group_part = 0.0;
     for (g, a, b) in groups.iter() {
-        group_part += w[g] * l2_norm(&beta[a..b]);
+        // Policy-dispatched: the scalar branch is the original unrolled dot.
+        group_part += w[g] * simd::l2_norm(&beta[a..b]);
     }
     tau * l1_norm(beta) + (1.0 - tau) * group_part
 }
@@ -83,7 +85,7 @@ pub fn omega_dual_argmax(xi: &[f64], groups: &Groups, tau: f64, w: &[f64]) -> (u
 pub fn in_dual_unit_ball(xi: &[f64], groups: &Groups, tau: f64, w: &[f64], tol: f64) -> bool {
     for (g, a, b) in groups.iter() {
         let st = soft_threshold_vec(&xi[a..b], tau);
-        if l2_norm(&st) > (1.0 - tau) * w[g] + tol {
+        if simd::l2_norm(&st) > (1.0 - tau) * w[g] + tol {
             return false;
         }
     }

@@ -58,6 +58,10 @@ pub struct SolveOptions {
     /// `SGL_THREADS` / available-parallelism default). Ignored in serial
     /// mode.
     pub sweep_threads: usize,
+    /// Engage floors and round sizing for the parallel sweep kernels
+    /// ([`crate::solver::sweep::SweepTuning`]); the defaults are the
+    /// constants the kernels shipped with. No effect in serial mode.
+    pub tuning: sweep::SweepTuning,
 }
 
 impl Default for SolveOptions {
@@ -70,6 +74,7 @@ impl Default for SolveOptions {
             record_history: true,
             sweep: SweepMode::Serial,
             sweep_threads: 0,
+            tuning: sweep::SweepTuning::default(),
         }
     }
 }
@@ -172,7 +177,7 @@ pub fn solve_with_rule<D: Design, F: Datafit>(
         // the speculative accept test, and the active set is large enough
         // to feed the crew, else the serial cyclic sweep.
         if pb.datafit.supports_parallel_cd()
-            && state.sweep.engage(state.cols.groups().len(), 8)
+            && state.sweep.engage(state.cols.groups().len(), state.sweep.tuning.cd_floor)
         {
             sweep::cd_epoch_parallel(
                 &state.sweep,

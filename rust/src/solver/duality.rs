@@ -8,7 +8,8 @@
 use super::datafit::{Datafit, StateRef};
 use super::problem::SglProblem;
 use super::sweep::{self, SweepCtx};
-use crate::linalg::ops::{l2_norm, l2_norm_sq};
+use crate::linalg::ops::l2_norm;
+use crate::linalg::simd;
 use crate::linalg::Design;
 use crate::norms::sgl::omega;
 
@@ -46,15 +47,10 @@ pub fn primal_value_state<D: Design, F: Datafit>(
 /// pin its exact arithmetic.
 pub fn dual_value(y: &[f64], theta: &[f64], lambda: f64) -> f64 {
     debug_assert_eq!(y.len(), theta.len());
-    let dist_sq: f64 = y
-        .iter()
-        .zip(theta)
-        .map(|(yi, ti)| {
-            let d = ti - yi / lambda;
-            d * d
-        })
-        .sum();
-    0.5 * l2_norm_sq(y) - 0.5 * lambda * lambda * dist_sq
+    // Policy-dispatched reductions: the scalar branches are the original
+    // sequential fold / unrolled dot, bit-for-bit.
+    let dist_sq = simd::dist_sq_scaled(y, theta, lambda);
+    0.5 * simd::sq_norm(y) - 0.5 * lambda * lambda * dist_sq
 }
 
 /// A dual-feasible point built from the current generalized residual plus
@@ -216,16 +212,7 @@ impl DualSnapshot {
     /// `‖θ − y/λ‖` — needed by the static/dynamic/DST3 sphere radii
     /// (quadratic-only rules).
     pub fn dist_to_y_over_lambda(&self, y: &[f64], lambda: f64) -> f64 {
-        let d: f64 = self
-            .theta
-            .iter()
-            .zip(y)
-            .map(|(t, yi)| {
-                let d = t - yi / lambda;
-                d * d
-            })
-            .sum();
-        d.sqrt()
+        simd::dist_sq_scaled(y, &self.theta, lambda).sqrt()
     }
 }
 

@@ -79,6 +79,47 @@ impl SweepMode {
     }
 }
 
+/// Tunable floors for the parallel sweep kernels, carried in
+/// [`SolveOptions`] and exposed as `[solver]` config knobs. Every field
+/// defaults to the constant the kernels shipped with; the floors decide
+/// *when* a kernel takes its parallel branch (never *what* it computes —
+/// gap/screening/prox kernels are bit-identical either way, and the CD
+/// epoch keeps its monotonicity guard), except that `cd_floor` and
+/// `groups_per_round` also shape the parallel-CD trajectory, which is why
+/// the tuning travels with the solve options through the wire codec and the
+/// service cache key.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct SweepTuning {
+    /// Per-worker column floor for the `xt_full`/`xt_active` sweeps.
+    pub xt_floor: usize,
+    /// Per-worker active-column floor for the row-partitioned residual /
+    /// linear-predictor kernels.
+    pub residual_floor: usize,
+    /// Per-worker group floor for the parallel `Ω^D` dual-norm sweep.
+    pub omega_dual_floor: usize,
+    /// Per-worker group floor for the ISTA/FISTA prox sweeps.
+    pub prox_floor: usize,
+    /// Per-worker group floor below which the CD epoch falls back to the
+    /// serial cyclic sweep.
+    pub cd_floor: usize,
+    /// Block updates proposed simultaneously per round and worker in
+    /// [`cd_epoch_parallel`] (see [`GROUPS_PER_ROUND_PER_WORKER`]).
+    pub groups_per_round: usize,
+}
+
+impl Default for SweepTuning {
+    fn default() -> Self {
+        SweepTuning {
+            xt_floor: 64,
+            residual_floor: 64,
+            omega_dual_floor: 32,
+            prox_floor: 16,
+            cd_floor: 8,
+            groups_per_round: GROUPS_PER_ROUND_PER_WORKER,
+        }
+    }
+}
+
 std::thread_local! {
     /// Parked crew from the previous parallel solve on this OS thread. A
     /// warm-started path runs hundreds of short solves back to back;
@@ -95,12 +136,14 @@ std::thread_local! {
 /// broadcast, not a thread spawn.
 pub struct SweepCtx {
     crew: Option<WorkCrew>,
+    /// Engage floors / round sizing for the kernels driven by this context.
+    pub tuning: SweepTuning,
 }
 
 impl SweepCtx {
     /// Serial context: every kernel takes its single-threaded branch.
     pub fn serial() -> SweepCtx {
-        SweepCtx { crew: None }
+        SweepCtx { crew: None, tuning: SweepTuning::default() }
     }
 
     /// Build from the solve options: a crew only for
@@ -110,7 +153,7 @@ impl SweepCtx {
     /// freshly spawned otherwise.
     pub fn from_opts(opts: &SolveOptions) -> SweepCtx {
         match opts.sweep {
-            SweepMode::Serial => SweepCtx::serial(),
+            SweepMode::Serial => SweepCtx { crew: None, tuning: opts.tuning },
             SweepMode::Parallel => {
                 let threads = resolve_threads(opts.sweep_threads);
                 if threads >= 2 {
@@ -122,9 +165,9 @@ impl SweepCtx {
                             _ => WorkCrew::new(threads),
                         }
                     });
-                    SweepCtx { crew: Some(crew) }
+                    SweepCtx { crew: Some(crew), tuning: opts.tuning }
                 } else {
-                    SweepCtx::serial()
+                    SweepCtx { crew: None, tuning: opts.tuning }
                 }
             }
         }
@@ -214,12 +257,12 @@ pub fn xt_full<D: Design, F: Datafit>(
 ) {
     let p = pb.p();
     debug_assert_eq!(xt.len(), p);
-    if !ctx.engage(p, 64) {
+    if !ctx.engage(p, ctx.tuning.xt_floor) {
         pb.x.tmatvec_into(v, xt);
         return;
     }
     let out = SharedSlice::new(xt);
-    ctx.for_each(p, 64, 64, |j| {
+    ctx.for_each(p, 64, ctx.tuning.xt_floor, |j| {
         // SAFETY: each column index is claimed by exactly one worker.
         unsafe { out.set(j, pb.x.col_dot(j, v)) };
     });
@@ -236,12 +279,12 @@ pub fn xt_active<D: Design, F: Datafit>(
     xt: &mut [f64],
 ) {
     let n_active = cols.n_active();
-    if !ctx.engage(n_active, 64) {
+    if !ctx.engage(n_active, ctx.tuning.xt_floor) {
         cols.xt_into(pb, v, xt);
         return;
     }
     let out = SharedSlice::new(xt);
-    ctx.for_each(n_active, 64, 64, |k| {
+    ctx.for_each(n_active, 64, ctx.tuning.xt_floor, |k| {
         // SAFETY: compact columns map to distinct original features.
         unsafe { out.set(cols.feature(k), cols.col_dot(pb, k, v)) };
     });
@@ -260,7 +303,7 @@ pub fn residual<D: Design, F: Datafit>(
     rho: &mut [f64],
 ) {
     let n_active = cols.n_active();
-    let crew = match ctx.crew_if(n_active, 64) {
+    let crew = match ctx.crew_if(n_active, ctx.tuning.residual_floor) {
         Some(c) => c,
         None => {
             cols.residual_into(pb, beta, rho);
@@ -298,7 +341,7 @@ pub fn linear_predictor<D: Design, F: Datafit>(
     xb: &mut [f64],
 ) {
     let n_active = cols.n_active();
-    let crew = match ctx.crew_if(n_active, 64) {
+    let crew = match ctx.crew_if(n_active, ctx.tuning.residual_floor) {
         Some(c) => c,
         None => {
             cols.linear_predictor_into(pb, beta, xb);
@@ -349,13 +392,13 @@ pub fn refresh_state<D: Design, F: Datafit>(
 /// result is bit-identical to [`crate::norms::sgl::omega_dual`].
 pub fn omega_dual(ctx: &SweepCtx, xi: &[f64], groups: &Groups, tau: f64, w: &[f64]) -> f64 {
     let ng = groups.n_groups();
-    if !ctx.engage(ng, 32) {
+    if !ctx.engage(ng, ctx.tuning.omega_dual_floor) {
         return omega_dual_serial(xi, groups, tau, w);
     }
     let mut vals = vec![0.0f64; ng];
     {
         let out = SharedSlice::new(&mut vals);
-        ctx.for_each(ng, 16, 32, |g| {
+        ctx.for_each(ng, 16, ctx.tuning.omega_dual_floor, |g| {
             let (a, b) = groups.bounds(g);
             // SAFETY: one group per worker.
             unsafe { out.set(g, omega_dual_group(&xi[a..b], tau, w[g])) };
@@ -397,7 +440,7 @@ pub fn ista_sweep<D: Design, F: Datafit>(
 ) -> bool {
     let groups = cols.groups();
     let width = scratch.width;
-    if !ctx.engage(groups.len(), 16) {
+    if !ctx.engage(groups.len(), ctx.tuning.prox_floor) {
         let block = &mut scratch.buf[..width];
         let mut changed = false;
         for &(g, s, e) in groups {
@@ -480,7 +523,7 @@ pub fn fista_sweep<D: Design, F: Datafit>(
 ) {
     let groups = cols.groups();
     let width = scratch.width;
-    if !ctx.engage(groups.len(), 16) {
+    if !ctx.engage(groups.len(), ctx.tuning.prox_floor) {
         let block = &mut scratch.buf[..width];
         for &(g, s, e) in groups {
             let d = e - s;
@@ -629,7 +672,7 @@ pub fn cd_epoch_parallel<D: Design, F: Datafit>(
     debug_assert_eq!(scratch.rho_sq_partial.len(), threads);
     let groups = cols.groups();
     let n = pb.n();
-    let round = threads * GROUPS_PER_ROUND_PER_WORKER;
+    let round = threads * ctx.tuning.groups_per_round.max(1);
     let n_rounds = groups.len().div_ceil(round).max(1);
     // Per-round stealing cursors: cursor `r` walks the round's strided
     // member list `gi = r + t·n_rounds`.

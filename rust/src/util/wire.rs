@@ -41,7 +41,7 @@ use crate::solver::duality::DualSnapshot;
 use crate::solver::groups::Groups;
 use crate::solver::path::{DualHandoff, PathOptions, PathResult};
 use crate::solver::problem::SglProblem;
-use crate::solver::sweep::SweepMode;
+use crate::solver::sweep::{SweepMode, SweepTuning};
 use crate::solver::SolverKind;
 use std::fmt;
 use std::io::{Read, Write};
@@ -54,7 +54,13 @@ use std::io::{Read, Write};
 /// [`WireDatafit`]; [`DualSnapshot`] frames carry `theta_aug_sq`. v1
 /// frames are rejected with [`WireError::BadVersion`] — a v1 peer's bytes
 /// would otherwise decode into a misaligned problem.
-pub const WIRE_VERSION: u8 = 2;
+///
+/// **v3** (kernel-policy PR): [`SolveOptions`] frames carry the six
+/// [`SweepTuning`] knobs. The tuning shapes the parallel-CD round
+/// structure (and hence the exact iterate trajectory), so a v2 peer
+/// silently defaulting them would compute a *different* path than the
+/// coordinator asked for — better to refuse the handshake.
+pub const WIRE_VERSION: u8 = 3;
 
 /// Hard cap on one frame's body (2 GiB): a corrupt length prefix must
 /// not become a giant allocation.
@@ -320,6 +326,15 @@ fn put_solve_options(e: &mut Enc, o: &SolveOptions) {
     e.bool(o.record_history);
     put_sweep(e, o.sweep);
     e.usize_(o.sweep_threads);
+    // v3: the sweep-tuning knobs travel with the request — cd_floor and
+    // groups_per_round shape the parallel-CD trajectory, so a worker must
+    // run the coordinator's values, not its own defaults.
+    e.usize_(o.tuning.xt_floor);
+    e.usize_(o.tuning.residual_floor);
+    e.usize_(o.tuning.omega_dual_floor);
+    e.usize_(o.tuning.prox_floor);
+    e.usize_(o.tuning.cd_floor);
+    e.usize_(o.tuning.groups_per_round);
 }
 
 fn get_solve_options(d: &mut Dec) -> Result<SolveOptions, WireError> {
@@ -331,6 +346,14 @@ fn get_solve_options(d: &mut Dec) -> Result<SolveOptions, WireError> {
         record_history: d.bool()?,
         sweep: get_sweep(d)?,
         sweep_threads: d.usize_()?,
+        tuning: SweepTuning {
+            xt_floor: d.usize_()?,
+            residual_floor: d.usize_()?,
+            omega_dual_floor: d.usize_()?,
+            prox_floor: d.usize_()?,
+            cd_floor: d.usize_()?,
+            groups_per_round: d.usize_()?,
+        },
     })
 }
 

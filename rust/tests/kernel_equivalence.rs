@@ -1,0 +1,245 @@
+//! Scalar-vs-SIMD kernel equivalence (the `linalg::simd` contract):
+//!
+//! - every reduction kernel's SIMD path agrees with its scalar path to
+//!   ≤ 1e-12 *relative* error, across odd lengths, empty inputs,
+//!   subnormals, and signed zeros (exercised through the explicit
+//!   `_with(…, simd: bool)` variants, so the process-global policy is
+//!   never touched and the tests are race-free under parallel runs);
+//! - elementwise kernels (axpy, windowed axpy, sub) are bit-identical to
+//!   their naive loops under any policy;
+//! - the dense and CSC `Design` column kernels agree across *every* row
+//!   window, and neither backend ever falls back to the allocating
+//!   trait-default `col_axpy_rows` on a real solve.
+
+use sgl::data::synthetic::{generate, SyntheticConfig};
+use sgl::linalg::design::generic_axpy_rows_calls;
+use sgl::linalg::{simd, CscMatrix, Design, Matrix};
+use sgl::screening::RuleKind;
+use sgl::solver::cd::SolveOptions;
+use sgl::solver::sweep::SweepMode;
+use sgl::util::rng::Pcg;
+
+/// Relative gap, safe at zero: |a−b| / max(|a|, |b|, 1e-300).
+fn rel(a: f64, b: f64) -> f64 {
+    (a - b).abs() / a.abs().max(b.abs()).max(1e-300)
+}
+
+const REL_TOL: f64 = 1e-12;
+
+/// Lengths that hit every code shape: empty, sub-lane tails, exact lane
+/// multiples, one-off-the-lane, panel boundaries (PANEL_ROWS = 2048),
+/// and multi-panel.
+fn lengths() -> Vec<usize> {
+    vec![0, 1, 2, 3, 7, 8, 9, 15, 16, 17, 63, 64, 65, 100, 1000, 2047, 2048, 2049, 5000]
+}
+
+/// A value mix with the full pathology set: ordinary magnitudes,
+/// subnormals, and both signed zeros.
+fn edgy_vec(rng: &mut Pcg, n: usize) -> Vec<f64> {
+    (0..n)
+        .map(|i| match i % 11 {
+            0 => 0.0,
+            1 => -0.0,
+            2 => f64::from_bits(3), // subnormal
+            3 => -f64::MIN_POSITIVE / 2.0,
+            4 => 1e-30,
+            5 => -1e30,
+            _ => rng.normal(),
+        })
+        .collect()
+}
+
+#[test]
+fn dot_scalar_vs_simd() {
+    let mut rng = Pcg::seeded(11);
+    for n in lengths() {
+        let a = edgy_vec(&mut rng, n);
+        let b = edgy_vec(&mut rng, n);
+        let s = simd::dot_with(&a, &b, false);
+        let v = simd::dot_with(&a, &b, true);
+        assert!(rel(s, v) <= REL_TOL, "dot n={n}: {s} vs {v}");
+        // The scalar branch IS the historical kernel, bit for bit.
+        assert_eq!(s.to_bits(), sgl::linalg::ops::dot(&a, &b).to_bits(), "scalar drifted n={n}");
+    }
+}
+
+#[test]
+fn sq_norm_scalar_vs_simd() {
+    let mut rng = Pcg::seeded(12);
+    for n in lengths() {
+        let x = edgy_vec(&mut rng, n);
+        let s = simd::sq_norm_with(&x, false);
+        let v = simd::sq_norm_with(&x, true);
+        assert!(rel(s, v) <= REL_TOL, "sq_norm n={n}: {s} vs {v}");
+    }
+}
+
+#[test]
+fn max_abs_scalar_vs_simd_is_exact() {
+    let mut rng = Pcg::seeded(13);
+    for n in lengths() {
+        let x = edgy_vec(&mut rng, n);
+        let s = simd::max_abs_with(&x, false);
+        let v = simd::max_abs_with(&x, true);
+        // max is order-independent: the two paths must agree exactly.
+        assert_eq!(s.to_bits(), v.to_bits(), "max_abs n={n}: {s} vs {v}");
+    }
+}
+
+#[test]
+fn sparse_dot_scalar_vs_simd() {
+    let mut rng = Pcg::seeded(14);
+    for n in lengths() {
+        let x = edgy_vec(&mut rng, n.max(1) * 2);
+        // Strictly increasing row pattern with gaps, like a CSC column.
+        let rows: Vec<usize> = (0..n).map(|i| 2 * i).collect();
+        let vals = edgy_vec(&mut rng, n);
+        let s = simd::sparse_dot_with(&rows, &vals, &x, false);
+        let v = simd::sparse_dot_with(&rows, &vals, &x, true);
+        assert!(rel(s, v) <= REL_TOL, "sparse_dot n={n}: {s} vs {v}");
+    }
+}
+
+#[test]
+fn dist_sq_scaled_scalar_vs_simd() {
+    let mut rng = Pcg::seeded(15);
+    for n in lengths() {
+        let y = edgy_vec(&mut rng, n);
+        let theta = edgy_vec(&mut rng, n);
+        for lambda in [1.0, 0.037, 1e6] {
+            let s = simd::dist_sq_scaled_with(&y, &theta, lambda, false);
+            let v = simd::dist_sq_scaled_with(&y, &theta, lambda, true);
+            assert!(rel(s, v) <= REL_TOL, "dist_sq n={n} lambda={lambda}: {s} vs {v}");
+        }
+    }
+}
+
+#[test]
+fn elementwise_kernels_are_bit_identical_to_naive_loops() {
+    let mut rng = Pcg::seeded(16);
+    for n in lengths() {
+        let x = edgy_vec(&mut rng, n);
+        let y0 = edgy_vec(&mut rng, n);
+        for alpha in [0.0, -0.0, 1.0, -2.5e-7, 3.0e8] {
+            // axpy vs the naive loop.
+            let mut got = y0.clone();
+            simd::axpy(alpha, &x, &mut got);
+            let mut want = y0.clone();
+            if alpha != 0.0 {
+                for (w, xi) in want.iter_mut().zip(&x) {
+                    *w += alpha * xi;
+                }
+            }
+            for i in 0..n {
+                assert_eq!(got[i].to_bits(), want[i].to_bits(), "axpy n={n} i={i}");
+            }
+            // axpy_rows == axpy on the window.
+            let (row0, row1) = (n / 4, n - n / 3);
+            let mut got_w = y0[row0..row1].to_vec();
+            simd::axpy_rows(alpha, &x, row0, row1, &mut got_w);
+            for (i, g) in got_w.iter().enumerate() {
+                assert_eq!(g.to_bits(), want[row0 + i].to_bits(), "axpy_rows n={n} i={i}");
+            }
+        }
+        // sub_into vs ops::sub.
+        let mut out = vec![0.0; n];
+        simd::sub_into(&x, &y0, &mut out);
+        let want = sgl::linalg::ops::sub(&x, &y0);
+        for i in 0..n {
+            assert_eq!(out[i].to_bits(), want[i].to_bits(), "sub_into n={n} i={i}");
+        }
+    }
+}
+
+/// Dense and CSC instantiations of the same matrix: column kernels agree
+/// (≤ 1e-12 relative on reductions, bitwise on the windowed axpy vs its
+/// full-column reference) over *every* row window of a small design.
+#[test]
+fn dense_and_csc_column_kernels_agree_on_all_row_windows() {
+    let n = 13;
+    let p = 7;
+    let mut rng = Pcg::seeded(17);
+    // ~40% sparse entries so the CSC columns have ragged row patterns.
+    let data: Vec<f64> =
+        (0..n * p).map(|_| if rng.normal() > -0.3 { rng.normal() } else { 0.0 }).collect();
+    let dense = Matrix::from_row_major(&data, n, p);
+    let csc = CscMatrix::from_dense(&dense);
+    let v = edgy_vec(&mut rng, n);
+    for j in 0..p {
+        let dd = dense.col_dot(j, &v);
+        let sd = csc.col_dot(j, &v);
+        assert!(rel(dd, sd) <= REL_TOL, "col_dot j={j}: {dd} vs {sd}");
+        assert!(rel(dense.col_norm(j), csc.col_norm(j)) <= REL_TOL, "col_norm j={j}");
+        for row0 in 0..=n {
+            for row1 in row0..=n {
+                // Reference: full-column axpy, then slice the window.
+                let mut full_d = vec![0.25; n];
+                dense.col_axpy(j, -1.5, &mut full_d);
+                let mut wd = vec![0.25; row1 - row0];
+                dense.col_axpy_rows(j, -1.5, row0, row1, &mut wd);
+                let mut ws = vec![0.25; row1 - row0];
+                csc.col_axpy_rows(j, -1.5, row0, row1, &mut ws);
+                for i in 0..(row1 - row0) {
+                    assert_eq!(
+                        wd[i].to_bits(),
+                        full_d[row0 + i].to_bits(),
+                        "dense window j={j} [{row0},{row1}) i={i}"
+                    );
+                    assert_eq!(
+                        ws[i].to_bits(),
+                        full_d[row0 + i].to_bits(),
+                        "csc window j={j} [{row0},{row1}) i={i}"
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// Neither shipped backend may ever route through the allocating
+/// trait-default `col_axpy_rows` — both override it with windowed
+/// kernels, and the row-partitioned parallel sweeps would quietly
+/// allocate a full column per worker per round if that regressed.
+#[test]
+fn shipped_backends_never_take_the_generic_axpy_rows_fallback() {
+    let cfg = SyntheticConfig {
+        n: 60,
+        n_groups: 40,
+        group_size: 5,
+        gamma1: 6,
+        gamma2: 3,
+        seed: 9,
+        ..Default::default()
+    };
+    let d = generate(&cfg);
+    let pb = sgl::solver::problem::SglProblem::new(
+        d.dataset.x.clone(),
+        d.dataset.y.clone(),
+        d.dataset.groups.clone(),
+        0.2,
+    );
+    let pb_csc = sgl::solver::problem::SglProblem::new(
+        CscMatrix::from_dense(&pb.x),
+        pb.y.clone(),
+        pb.groups.clone(),
+        pb.tau,
+    );
+    let opts = SolveOptions {
+        rule: RuleKind::GapSafe,
+        tol: 1e-8,
+        record_history: false,
+        sweep: SweepMode::Parallel,
+        sweep_threads: 2,
+        ..Default::default()
+    };
+    let before = generic_axpy_rows_calls();
+    let lambda = 0.1 * pb.lambda_max();
+    let a = sgl::solver::cd::solve(&pb, lambda, None, &opts);
+    let b = sgl::solver::cd::solve(&pb_csc, lambda, None, &opts);
+    assert!(a.converged && b.converged, "solves must converge for the probe to mean anything");
+    assert_eq!(
+        generic_axpy_rows_calls(),
+        before,
+        "a shipped backend fell back to the allocating generic col_axpy_rows"
+    );
+}

@@ -1,0 +1,106 @@
+//! Full-solver behaviour of the process-global kernel policy
+//! (`linalg::simd::set_policy`, the `--kernels` flag's engine):
+//!
+//! - under `scalar` the solver is bit-reproducible run to run (the
+//!   scalar branches *are* the historical kernels, so this pins the
+//!   pre-SIMD trajectory);
+//! - `simd` reaches the same objective within the duality-gap budget
+//!   and makes the same terminal screening decisions — the reductions
+//!   reassociate, so bit-identity across policies is *not* promised,
+//!   objective agreement is.
+//!
+//! One `#[test]` on purpose: the policy is process-global (like
+//! `SGL_THREADS`), so flipping it from concurrently running tests would
+//! race. Everything here runs sequentially inside the single test.
+
+use sgl::data::synthetic::{generate, SyntheticConfig};
+use sgl::linalg::{CscMatrix, Design, KernelPolicy};
+use sgl::norms::sgl::omega;
+use sgl::screening::RuleKind;
+use sgl::solver::cd::{solve, SolveOptions, SolveResult};
+use sgl::solver::problem::SglProblem;
+
+fn planted() -> SglProblem {
+    let cfg = SyntheticConfig {
+        n: 60,
+        n_groups: 40,
+        group_size: 5,
+        gamma1: 6,
+        gamma2: 3,
+        seed: 5,
+        ..Default::default()
+    };
+    let d = generate(&cfg);
+    let y_norm = d.dataset.y.iter().map(|v| v * v).sum::<f64>().sqrt().max(1e-300);
+    let y: Vec<f64> = d.dataset.y.iter().map(|v| v / y_norm).collect();
+    SglProblem::new(d.dataset.x, y, d.dataset.groups, 0.2)
+}
+
+fn objective<D: Design>(pb: &SglProblem<D>, lambda: f64, beta: &[f64]) -> f64 {
+    let xb = pb.x.matvec(beta);
+    let r2: f64 = pb.y.iter().zip(&xb).map(|(y, v)| (y - v) * (y - v)).sum();
+    0.5 * r2 + lambda * omega(beta, &pb.groups, pb.tau, &pb.weights)
+}
+
+fn assert_bit_identical(a: &SolveResult, b: &SolveResult, tag: &str) {
+    assert_eq!(a.beta.len(), b.beta.len(), "{tag}: beta length");
+    for (i, (x, y)) in a.beta.iter().zip(&b.beta).enumerate() {
+        assert_eq!(x.to_bits(), y.to_bits(), "{tag}: beta[{i}] {x} vs {y}");
+    }
+    assert_eq!(a.epochs, b.epochs, "{tag}: epoch count");
+    assert_eq!(a.gap.to_bits(), b.gap.to_bits(), "{tag}: terminal gap");
+}
+
+#[test]
+fn scalar_policy_is_reproducible_and_simd_agrees_on_the_objective() {
+    let pb = planted();
+    let pb_csc = SglProblem::new(
+        CscMatrix::from_dense(&pb.x),
+        pb.y.clone(),
+        pb.groups.clone(),
+        pb.tau,
+    );
+    let opts = SolveOptions {
+        rule: RuleKind::GapSafe,
+        tol: 5e-9,
+        max_epochs: 500_000,
+        record_history: false,
+        ..Default::default()
+    };
+    let lambdas = [0.5 * pb.lambda_max(), 0.1 * pb.lambda_max()];
+
+    for &lambda in &lambdas {
+        // -- scalar: deterministic, run to run, on both backends.
+        sgl::linalg::simd::set_policy(KernelPolicy::Scalar);
+        let s1 = solve(&pb, lambda, None, &opts);
+        let s2 = solve(&pb, lambda, None, &opts);
+        assert!(s1.converged, "scalar dense converged");
+        assert_bit_identical(&s1, &s2, "scalar dense rerun");
+        let c1 = solve(&pb_csc, lambda, None, &opts);
+        let c2 = solve(&pb_csc, lambda, None, &opts);
+        assert_bit_identical(&c1, &c2, "scalar csc rerun");
+
+        // -- simd: same solution quality, same support.
+        sgl::linalg::simd::set_policy(KernelPolicy::Simd);
+        let v = solve(&pb, lambda, None, &opts);
+        assert!(v.converged, "simd dense converged");
+        let obj_s = objective(&pb, lambda, &s1.beta);
+        let obj_v = objective(&pb, lambda, &v.beta);
+        // Both are within tol = 5e-9 of the optimum on a unit-norm y.
+        assert!(
+            (obj_s - obj_v).abs() <= 1e-8,
+            "objective divergence at lambda={lambda}: {obj_s} vs {obj_v}"
+        );
+        assert_eq!(
+            s1.active.group,
+            v.active.group,
+            "terminal group screening decisions differ at lambda={lambda}"
+        );
+        // And simd is itself deterministic.
+        let v2 = solve(&pb, lambda, None, &opts);
+        assert_bit_identical(&v, &v2, "simd dense rerun");
+    }
+
+    // Leave the process default in place for any later in-process use.
+    sgl::linalg::simd::set_policy(KernelPolicy::Auto);
+}

@@ -13,7 +13,7 @@ use sgl::screening::{ActiveSet, RuleKind};
 use sgl::solver::cd::{CheckEvent, SolveOptions, SolveResult};
 use sgl::solver::duality::DualSnapshot;
 use sgl::solver::path::{DualHandoff, PathOptions, PathResult};
-use sgl::solver::sweep::SweepMode;
+use sgl::solver::sweep::{SweepMode, SweepTuning};
 use sgl::solver::SolverKind;
 use sgl::util::proptest::{check, forall, Gen};
 use sgl::util::wire::{
@@ -79,6 +79,14 @@ fn gen_solve_options(g: &mut Gen) -> SolveOptions {
         record_history: g.bool(),
         sweep: sweeps[g.usize_in(0..sweeps.len())],
         sweep_threads: g.usize_in(0..9),
+        tuning: SweepTuning {
+            xt_floor: g.usize_in(1..1000),
+            residual_floor: g.usize_in(1..1000),
+            omega_dual_floor: g.usize_in(1..1000),
+            prox_floor: g.usize_in(1..1000),
+            cd_floor: g.usize_in(1..1000),
+            groups_per_round: g.usize_in(1..64),
+        },
     }
 }
 
@@ -312,7 +320,7 @@ fn truncated_frames_are_typed_errors_never_panics() {
 fn bad_version_and_bad_tag_are_typed_errors() {
     forall("wire-bad-header", 100, |g| {
         let mut frame = gen_message(g).encode();
-        let v = (g.usize_in(3..250)) as u8; // never WIRE_VERSION (= 2)
+        let v = (g.usize_in(4..250)) as u8; // never WIRE_VERSION (= 3)
         frame[4] = v;
         match Message::decode(&frame) {
             Err(WireError::BadVersion { got }) => check(got == v, "version echoed")?,

@@ -161,6 +161,17 @@ pub struct RunConfig {
     /// Connections (= concurrent shards) opened per fleet worker
     /// (`[service] fleet_conns`).
     pub service_fleet_conns: usize,
+    /// Chrome trace-event output path (`[trace] out` / `--trace-out` /
+    /// `SGL_TRACE`). `None` leaves the collector disabled — solver output
+    /// is bit-identical either way ([`crate::util::trace`]'s contract).
+    pub trace_out: Option<String>,
+    /// Sampling divisor for high-frequency trace sites (`[trace] sample`
+    /// / `--trace-sample`): record every k-th gap-check event, 1 = all.
+    pub trace_sample: u64,
+    /// Prometheus text-exposition listen address
+    /// (`[service] metrics_addr` / `--metrics-addr`): `sgl serve` answers
+    /// HTTP GETs on it with the coordinator registry's `render_text`.
+    pub metrics_addr: Option<String>,
 }
 
 impl Default for RunConfig {
@@ -204,6 +215,9 @@ impl Default for RunConfig {
             service_cache_capacity: 256,
             service_fleet: Vec::new(),
             service_fleet_conns: 1,
+            trace_out: None,
+            trace_sample: 1,
+            metrics_addr: None,
         }
     }
 }
@@ -316,6 +330,13 @@ impl RunConfig {
         take!(service_result_capacity, "service", "result_capacity", usize);
         take!(service_cache_capacity, "service", "cache_capacity", usize);
         take!(service_fleet_conns, "service", "fleet_conns", usize);
+        take!(trace_sample, "trace", "sample", u64);
+        if let Some(out) = doc.get_str("trace", "out") {
+            cfg.trace_out = Some(out);
+        }
+        if let Some(addr) = doc.get_str("service", "metrics_addr") {
+            cfg.metrics_addr = Some(addr);
+        }
         if let Some(fleet) = doc.get_str("service", "fleet") {
             cfg.service_fleet =
                 parse_fleet_list(&fleet).context("parsing service.fleet")?;
@@ -392,6 +413,19 @@ impl RunConfig {
         }
         if self.service_fleet_conns == 0 {
             bail!("service fleet_conns must be >= 1");
+        }
+        if self.trace_sample == 0 {
+            bail!("trace sample must be >= 1 (record every k-th event)");
+        }
+        if let Some(out) = &self.trace_out {
+            if out.is_empty() {
+                bail!("trace out must be a non-empty path");
+            }
+        }
+        if let Some(addr) = &self.metrics_addr {
+            if !addr.contains(':') {
+                bail!("service metrics_addr must be host:port, got {addr:?}");
+            }
         }
         if let DatasetChoice::Libsvm { group_size, .. } = &self.dataset {
             if *group_size == 0 {
@@ -652,6 +686,31 @@ rho = 0.9
         assert!(RunConfig::from_toml_str("[service]\nfleet = \" , \"\n").is_err());
         assert!(RunConfig::from_toml_str("[service]\nfleet_conns = 0\n").is_err());
         assert!(parse_fleet_list("a:1,,b:2").unwrap().len() == 2);
+    }
+
+    #[test]
+    fn parses_trace_and_metrics_endpoint() {
+        let c = RunConfig::from_toml_str(
+            "[trace]\nout = \"solve.trace.json\"\nsample = 4\n\
+             [service]\nmetrics_addr = \"127.0.0.1:9next\"\n",
+        );
+        // `:9next` still has a colon, so validate accepts it — binding
+        // decides the real fate; the parser only rejects port-less addrs.
+        let c = c.unwrap();
+        assert_eq!(c.trace_out.as_deref(), Some("solve.trace.json"));
+        assert_eq!(c.trace_sample, 4);
+        assert_eq!(c.metrics_addr.as_deref(), Some("127.0.0.1:9next"));
+        // Defaults: tracing off, every event, no endpoint.
+        let d = RunConfig::default();
+        assert!(d.trace_out.is_none());
+        assert_eq!(d.trace_sample, 1);
+        assert!(d.metrics_addr.is_none());
+        // Degenerate values are rejected at parse time.
+        assert!(RunConfig::from_toml_str("[trace]\nsample = 0\n").is_err());
+        assert!(RunConfig::from_toml_str("[trace]\nout = \"\"\n").is_err());
+        assert!(
+            RunConfig::from_toml_str("[service]\nmetrics_addr = \"noport\"\n").is_err()
+        );
     }
 
     #[test]

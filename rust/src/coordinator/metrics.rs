@@ -1,10 +1,12 @@
 //! Lightweight metrics registry for the solver service: thread-safe
-//! counters, gauges and monotonic timers (min/max/mean histograms),
-//! rendered to text or JSON for run reports.
+//! counters, gauges and monotonic timers (count/sum/min/max plus bounded
+//! log-bucket histograms with p50/p95/p99), rendered to text (Prometheus
+//! exposition compatible) or JSON for run reports, and snapshot/merge
+//! hooks so a coordinator can fold scraped remote-worker registries into
+//! its own under a per-worker prefix.
 
 use crate::util::json::Json;
 use std::collections::BTreeMap;
-use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
 
 /// Aggregated observations of one named timer: enough to report count,
@@ -40,12 +42,144 @@ impl TimerStats {
     }
 }
 
+/// Bounded log-bucket histogram: exponential buckets with
+/// [`Histogram::SUB`] sub-buckets per doubling spanning
+/// [`Histogram::LO`] ≤ v ≲ 1.7e4 (seconds, by the registry convention).
+/// Memory is a fixed [`Histogram::BUCKETS`]-slot table per timer —
+/// observations outside the span clamp to the edge buckets, so an
+/// unbounded stream of samples never grows the registry.
+///
+/// Quantiles are bucket-resolved: [`Histogram::quantile`] returns the
+/// upper bound of the bucket holding the requested rank, so the answer
+/// overestimates the true order statistic by at most one bucket width
+/// (a factor of `2^(1/SUB)` ≈ 19%).
+#[derive(Clone, Debug, PartialEq)]
+pub struct Histogram {
+    counts: Vec<u64>,
+    total: u64,
+}
+
+impl Histogram {
+    /// Lower edge of the first bucket (1 ns).
+    pub const LO: f64 = 1e-9;
+    /// Sub-buckets per doubling (`2^(1/4)` ≈ 1.19 growth per bucket).
+    pub const SUB: usize = 4;
+    /// Fixed bucket count: 44 doublings × [`Self::SUB`] covers
+    /// 1 ns .. ~1.7e4 s.
+    pub const BUCKETS: usize = 176;
+
+    pub fn new() -> Self {
+        Histogram { counts: vec![0; Self::BUCKETS], total: 0 }
+    }
+
+    /// Bucket index of `v` (clamped; NaN and non-positive map to 0).
+    pub fn bucket_index(v: f64) -> usize {
+        if v.is_nan() || v <= Self::LO {
+            return 0;
+        }
+        let idx = ((v.log2() - Self::LO.log2()) * Self::SUB as f64).floor();
+        (idx as usize).min(Self::BUCKETS - 1)
+    }
+
+    /// Upper bound of bucket `i`: `LO · 2^((i+1)/SUB)`.
+    pub fn bucket_bound(i: usize) -> f64 {
+        Self::LO * ((i + 1) as f64 / Self::SUB as f64).exp2()
+    }
+
+    pub fn observe(&mut self, v: f64) {
+        self.counts[Self::bucket_index(v)] += 1;
+        self.total += 1;
+    }
+
+    /// Total observations recorded.
+    pub fn total(&self) -> u64 {
+        self.total
+    }
+
+    /// Bucket-resolved quantile `q ∈ [0, 1]`: the upper bound of the
+    /// bucket containing rank `⌈q·total⌉` (0.0 when empty). Monotone in
+    /// `q` by construction.
+    pub fn quantile(&self, q: f64) -> f64 {
+        if self.total == 0 {
+            return 0.0;
+        }
+        let rank = ((q.clamp(0.0, 1.0) * self.total as f64).ceil() as u64).max(1);
+        let mut seen = 0u64;
+        for (i, &c) in self.counts.iter().enumerate() {
+            seen += c;
+            if seen >= rank {
+                return Self::bucket_bound(i);
+            }
+        }
+        Self::bucket_bound(Self::BUCKETS - 1)
+    }
+
+    /// Non-empty buckets as `(index, count)` pairs — the wire/export
+    /// representation ([`MetricsSnapshot`]).
+    pub fn sparse(&self) -> Vec<(u64, u64)> {
+        self.counts
+            .iter()
+            .enumerate()
+            .filter(|(_, &c)| c > 0)
+            .map(|(i, &c)| (i as u64, c))
+            .collect()
+    }
+
+    /// Rebuild from [`Histogram::sparse`] pairs; out-of-range indices
+    /// clamp to the last bucket (a newer peer may have a wider table).
+    pub fn from_sparse(pairs: &[(u64, u64)]) -> Self {
+        let mut h = Histogram::new();
+        for &(i, c) in pairs {
+            h.counts[(i as usize).min(Self::BUCKETS - 1)] += c;
+            h.total += c;
+        }
+        h
+    }
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Histogram::new()
+    }
+}
+
+/// One named timer: the scalar aggregate plus its histogram.
+#[derive(Clone, Debug)]
+struct TimerEntry {
+    stats: TimerStats,
+    hist: Histogram,
+}
+
+impl TimerEntry {
+    fn new() -> Self {
+        TimerEntry { stats: TimerStats::default(), hist: Histogram::new() }
+    }
+
+    fn observe(&mut self, v: f64) {
+        self.stats.observe(v);
+        self.hist.observe(v);
+    }
+}
+
+/// A point-in-time copy of a whole registry — what a worker serializes
+/// into a `StatsReply` and a coordinator merges back under a
+/// `worker_<id>_` prefix ([`Metrics::merge_snapshot`]).
+#[derive(Clone, Debug, Default)]
+pub struct MetricsSnapshot {
+    /// `(name, value)` counters, sorted by name.
+    pub counters: Vec<(String, u64)>,
+    /// `(name, value)` gauges, sorted by name.
+    pub gauges: Vec<(String, f64)>,
+    /// `(name, scalar stats, sparse histogram buckets)` timers.
+    pub timers: Vec<(String, TimerStats, Vec<(u64, u64)>)>,
+}
+
 /// Process-wide metrics for a coordinator run.
 #[derive(Default)]
 pub struct Metrics {
-    counters: Mutex<BTreeMap<String, AtomicU64>>,
+    counters: Mutex<BTreeMap<String, u64>>,
     gauges: Mutex<BTreeMap<String, f64>>,
-    timers: Mutex<BTreeMap<String, TimerStats>>,
+    timers: Mutex<BTreeMap<String, TimerEntry>>,
 }
 
 impl Metrics {
@@ -53,26 +187,45 @@ impl Metrics {
         Self::default()
     }
 
-    /// Increment a named counter by `delta`.
+    /// Increment a named counter by `delta`. Get-then-entry: the steady
+    /// state (counter already registered) takes the lock, bumps in
+    /// place, and never allocates — `name.to_string()` only runs on the
+    /// first observation of a name.
     pub fn incr(&self, name: &str, delta: u64) {
         let mut map = self.counters.lock().unwrap();
-        map.entry(name.to_string())
-            .or_insert_with(|| AtomicU64::new(0))
-            .fetch_add(delta, Ordering::Relaxed);
+        match map.get_mut(name) {
+            Some(c) => *c += delta,
+            None => {
+                map.insert(name.to_string(), delta);
+            }
+        }
+    }
+
+    /// Set a named counter to an absolute value (scrape-merge ingests
+    /// remote totals, which must overwrite, not accumulate).
+    pub fn set_counter(&self, name: &str, value: u64) {
+        let mut map = self.counters.lock().unwrap();
+        match map.get_mut(name) {
+            Some(c) => *c = value,
+            None => {
+                map.insert(name.to_string(), value);
+            }
+        }
     }
 
     /// Set a named gauge.
     pub fn set(&self, name: &str, value: f64) {
-        self.gauges.lock().unwrap().insert(name.to_string(), value);
+        let mut map = self.gauges.lock().unwrap();
+        match map.get_mut(name) {
+            Some(g) => *g = value,
+            None => {
+                map.insert(name.to_string(), value);
+            }
+        }
     }
 
     pub fn counter(&self, name: &str) -> u64 {
-        self.counters
-            .lock()
-            .unwrap()
-            .get(name)
-            .map(|c| c.load(Ordering::Relaxed))
-            .unwrap_or(0)
+        self.counters.lock().unwrap().get(name).copied().unwrap_or(0)
     }
 
     pub fn gauge(&self, name: &str) -> Option<f64> {
@@ -80,59 +233,136 @@ impl Metrics {
     }
 
     /// Record one observation (in seconds — the unit is a convention, not
-    /// enforced) into the named timer. The service uses this for job
-    /// latency and queue wait; min/max/mean aggregate monotonically.
+    /// enforced) into the named timer: scalar aggregate + histogram.
     pub fn observe_secs(&self, name: &str, secs: f64) {
         let mut map = self.timers.lock().unwrap();
-        map.entry(name.to_string()).or_default().observe(secs);
+        match map.get_mut(name) {
+            Some(e) => e.observe(secs),
+            None => {
+                let mut e = TimerEntry::new();
+                e.observe(secs);
+                map.insert(name.to_string(), e);
+            }
+        }
     }
 
     /// Aggregated stats of a named timer, if it has any observations.
     pub fn timer(&self, name: &str) -> Option<TimerStats> {
-        self.timers.lock().unwrap().get(name).copied()
+        self.timers.lock().unwrap().get(name).map(|e| e.stats)
+    }
+
+    /// Bucket-resolved quantile of a named timer's histogram.
+    pub fn timer_quantile(&self, name: &str, q: f64) -> Option<f64> {
+        self.timers.lock().unwrap().get(name).map(|e| e.hist.quantile(q))
+    }
+
+    /// Copy the whole registry out (wire export / tests).
+    pub fn snapshot(&self) -> MetricsSnapshot {
+        MetricsSnapshot {
+            counters: self.counters.lock().unwrap().iter().map(|(k, v)| (k.clone(), *v)).collect(),
+            gauges: self.gauges.lock().unwrap().iter().map(|(k, v)| (k.clone(), *v)).collect(),
+            timers: self
+                .timers
+                .lock()
+                .unwrap()
+                .iter()
+                .map(|(k, e)| (k.clone(), e.stats, e.hist.sparse()))
+                .collect(),
+        }
+    }
+
+    /// Fold a scraped snapshot into this registry, prefixing every name
+    /// with `prefix`. Entries **overwrite** (scrapes carry absolute
+    /// worker totals — re-scraping must not double-count).
+    pub fn merge_snapshot(&self, prefix: &str, snap: &MetricsSnapshot) {
+        for (k, v) in &snap.counters {
+            self.set_counter(&format!("{prefix}{k}"), *v);
+        }
+        for (k, v) in &snap.gauges {
+            self.set(&format!("{prefix}{k}"), *v);
+        }
+        let mut map = self.timers.lock().unwrap();
+        for (k, stats, sparse) in &snap.timers {
+            let entry = TimerEntry { stats: *stats, hist: Histogram::from_sparse(sparse) };
+            map.insert(format!("{prefix}{k}"), entry);
+        }
     }
 
     /// Render all metrics as JSON.
     pub fn to_json(&self) -> Json {
         let mut obj = Json::obj();
         for (k, v) in self.counters.lock().unwrap().iter() {
-            obj = obj.with(k, v.load(Ordering::Relaxed) as f64);
+            obj = obj.with(k, *v as f64);
         }
         for (k, v) in self.gauges.lock().unwrap().iter() {
             obj = obj.with(k, *v);
         }
-        for (k, t) in self.timers.lock().unwrap().iter() {
+        for (k, e) in self.timers.lock().unwrap().iter() {
+            let t = &e.stats;
             obj = obj
                 .with(&format!("{k}_count"), t.count as f64)
                 .with(&format!("{k}_sum"), t.sum)
                 .with(&format!("{k}_min"), t.min)
                 .with(&format!("{k}_max"), t.max)
-                .with(&format!("{k}_mean"), t.mean());
+                .with(&format!("{k}_mean"), t.mean())
+                .with(&format!("{k}_p50"), e.hist.quantile(0.50))
+                .with(&format!("{k}_p95"), e.hist.quantile(0.95))
+                .with(&format!("{k}_p99"), e.hist.quantile(0.99));
         }
         obj
     }
 
-    /// Render as `key value` lines (sorted).
+    /// Render as `key value` lines (sorted), Prometheus exposition
+    /// compatible: each metric is preceded by a `# TYPE` comment and
+    /// names are sanitized to `[a-zA-Z0-9_:]`. Plain `key value`
+    /// consumers are unaffected (comment lines start with `#`; names
+    /// already in the valid charset render unchanged).
     pub fn render_text(&self) -> String {
         let mut out = String::new();
         for (k, v) in self.counters.lock().unwrap().iter() {
-            out.push_str(&format!("{k} {}\n", v.load(Ordering::Relaxed)));
+            let k = sanitize_metric_name(k);
+            out.push_str(&format!("# TYPE {k} counter\n{k} {v}\n"));
         }
         for (k, v) in self.gauges.lock().unwrap().iter() {
-            out.push_str(&format!("{k} {v}\n"));
+            let k = sanitize_metric_name(k);
+            out.push_str(&format!("# TYPE {k} gauge\n{k} {v}\n"));
         }
-        for (k, t) in self.timers.lock().unwrap().iter() {
+        for (k, e) in self.timers.lock().unwrap().iter() {
+            let k = sanitize_metric_name(k);
+            let t = &e.stats;
             out.push_str(&format!(
-                "{k}_count {}\n{k}_sum {}\n{k}_min {}\n{k}_max {}\n{k}_mean {}\n",
+                "# TYPE {k} summary\n{k}_count {}\n{k}_sum {}\n{k}_min {}\n{k}_max {}\n{k}_mean {}\n{k}_p50 {}\n{k}_p95 {}\n{k}_p99 {}\n",
                 t.count,
                 t.sum,
                 t.min,
                 t.max,
-                t.mean()
+                t.mean(),
+                e.hist.quantile(0.50),
+                e.hist.quantile(0.95),
+                e.hist.quantile(0.99)
             ));
         }
         out
     }
+}
+
+/// Map a metric name into the Prometheus charset `[a-zA-Z0-9_:]`,
+/// replacing invalid characters with `_` and prefixing a `_` when the
+/// name would start with a digit. Names already valid pass through
+/// unchanged (no allocation beyond the output string).
+pub fn sanitize_metric_name(name: &str) -> String {
+    let mut out = String::with_capacity(name.len());
+    for (i, c) in name.chars().enumerate() {
+        let valid = c.is_ascii_alphanumeric() || c == '_' || c == ':';
+        if i == 0 && c.is_ascii_digit() {
+            out.push('_');
+        }
+        out.push(if valid { c } else { '_' });
+    }
+    if out.is_empty() {
+        out.push('_');
+    }
+    out
 }
 
 #[cfg(test)]
@@ -146,6 +376,8 @@ mod tests {
         m.incr("solves", 2);
         assert_eq!(m.counter("solves"), 3);
         assert_eq!(m.counter("missing"), 0);
+        m.set_counter("solves", 7);
+        assert_eq!(m.counter("solves"), 7);
     }
 
     #[test]
@@ -164,6 +396,8 @@ mod tests {
         let text = m.render_text();
         assert!(text.contains("a 1"));
         assert!(text.contains("b 2.5"));
+        assert!(text.contains("# TYPE a counter"));
+        assert!(text.contains("# TYPE b gauge"));
         assert!(m.to_json().dump().contains("\"a\":1"));
     }
 
@@ -199,9 +433,13 @@ mod tests {
         assert!(text.contains("lat_min 0.5"));
         assert!(text.contains("lat_max 1.5"));
         assert!(text.contains("lat_mean 1"));
+        assert!(text.contains("lat_p50 "));
+        assert!(text.contains("lat_p99 "));
+        assert!(text.contains("# TYPE lat summary"));
         let json = m.to_json().dump();
         assert!(json.contains("\"lat_count\":2"));
         assert!(json.contains("\"lat_mean\":1"));
+        assert!(json.contains("\"lat_p95\":"));
     }
 
     #[test]
@@ -218,5 +456,102 @@ mod tests {
             }
         });
         assert_eq!(m.counter("n"), 4000);
+    }
+
+    /// One bucket spans a factor of 2^(1/SUB); the quantile answer is
+    /// the bucket's upper bound, so it may exceed the true order
+    /// statistic by at most that factor (and never undershoots).
+    fn assert_bucket_close(got: f64, truth: f64) {
+        let factor = (1.0 / Histogram::SUB as f64).exp2();
+        assert!(got >= truth * 0.999999, "quantile {got} undershoots {truth}");
+        assert!(got <= truth * factor * 1.000001, "quantile {got} overshoots {truth}");
+    }
+
+    #[test]
+    fn histogram_quantiles_on_known_distribution() {
+        let mut h = Histogram::new();
+        for i in 1..=100 {
+            h.observe(i as f64);
+        }
+        assert_eq!(h.total(), 100);
+        assert_bucket_close(h.quantile(0.50), 50.0);
+        assert_bucket_close(h.quantile(0.95), 95.0);
+        assert_bucket_close(h.quantile(0.99), 99.0);
+        assert_bucket_close(h.quantile(1.0), 100.0);
+        // Monotone by construction.
+        let (p50, p95, p99) = (h.quantile(0.5), h.quantile(0.95), h.quantile(0.99));
+        assert!(p50 <= p95 && p95 <= p99, "{p50} {p95} {p99}");
+        // Degenerate distribution: every quantile lands in one bucket.
+        let mut one = Histogram::new();
+        for _ in 0..10 {
+            one.observe(3e-3);
+        }
+        assert_eq!(one.quantile(0.5), one.quantile(0.99));
+        assert_bucket_close(one.quantile(0.5), 3e-3);
+        // Empty histogram.
+        assert_eq!(Histogram::new().quantile(0.5), 0.0);
+    }
+
+    #[test]
+    fn histogram_clamps_edges() {
+        assert_eq!(Histogram::bucket_index(0.0), 0);
+        assert_eq!(Histogram::bucket_index(-1.0), 0);
+        assert_eq!(Histogram::bucket_index(f64::NAN), 0);
+        assert_eq!(Histogram::bucket_index(1e-12), 0);
+        assert_eq!(Histogram::bucket_index(1e30), Histogram::BUCKETS - 1);
+        // Bounds are monotone across the table.
+        for i in 1..Histogram::BUCKETS {
+            assert!(Histogram::bucket_bound(i) > Histogram::bucket_bound(i - 1));
+        }
+    }
+
+    #[test]
+    fn histogram_sparse_roundtrip() {
+        let mut h = Histogram::new();
+        for v in [1e-6, 3e-4, 3e-4, 0.12, 7.0, 7.0, 7.0] {
+            h.observe(v);
+        }
+        let back = Histogram::from_sparse(&h.sparse());
+        assert_eq!(back, h);
+        // Out-of-range index clamps instead of panicking.
+        let clamped = Histogram::from_sparse(&[(u64::MAX, 2)]);
+        assert_eq!(clamped.total(), 2);
+    }
+
+    #[test]
+    fn snapshot_merge_prefixes_and_overwrites() {
+        let w = Metrics::new();
+        w.incr("solves", 5);
+        w.set("in_flight", 2.0);
+        w.observe_secs("solve_s", 0.25);
+        w.observe_secs("solve_s", 0.75);
+        let coord = Metrics::new();
+        coord.incr("solves", 100); // must not collide with the prefixed copy
+        coord.merge_snapshot("worker_0_", &w.snapshot());
+        assert_eq!(coord.counter("solves"), 100);
+        assert_eq!(coord.counter("worker_0_solves"), 5);
+        assert_eq!(coord.gauge("worker_0_in_flight"), Some(2.0));
+        let t = coord.timer("worker_0_solve_s").unwrap();
+        assert_eq!(t.count, 2);
+        assert!((t.sum - 1.0).abs() < 1e-12);
+        let p50 = coord.timer_quantile("worker_0_solve_s", 0.5).unwrap();
+        assert!(p50 > 0.0);
+        // Re-scrape with updated totals overwrites, never accumulates.
+        w.incr("solves", 1);
+        coord.merge_snapshot("worker_0_", &w.snapshot());
+        assert_eq!(coord.counter("worker_0_solves"), 6);
+        let t2 = coord.timer("worker_0_solve_s").unwrap();
+        assert_eq!(t2.count, 2);
+    }
+
+    #[test]
+    fn metric_name_sanitization() {
+        assert_eq!(sanitize_metric_name("ok_name:total"), "ok_name:total");
+        assert_eq!(sanitize_metric_name("queue wait-ms"), "queue_wait_ms");
+        assert_eq!(sanitize_metric_name("9lives"), "_9lives");
+        assert_eq!(sanitize_metric_name(""), "_");
+        let m = Metrics::new();
+        m.incr("bad name", 1);
+        assert!(m.render_text().contains("bad_name 1"));
     }
 }

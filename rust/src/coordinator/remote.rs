@@ -24,7 +24,10 @@
 //!   — every shard input (grid, options, handoff) lives on the
 //!   coordinator, so nothing is ever lost with a worker; solves are
 //!   deterministic, so re-running one is harmless. Heartbeats
-//!   ([`RemoteFleet::heartbeat`]) probe liveness out of band.
+//!   ([`RemoteFleet::heartbeat`]) probe liveness out of band — each
+//!   `Pong` carries a compact [`WorkerSummary`] — and
+//!   [`RemoteFleet::scrape`] pulls every worker's full metrics registry
+//!   into the coordinator's under a `worker_<i>_` prefix.
 //!
 //! The solve service drains into a fleet via
 //! [`SolveService::with_fleet`](super::service::SolveService::with_fleet),
@@ -38,9 +41,10 @@ use crate::solver::sweep::SweepMode;
 use crate::solver::SolverKind;
 use crate::util::lru::LruCache;
 use crate::util::pool::resolve_threads;
+use crate::util::trace;
 use crate::util::wire::{
     Message, ProblemPayload, RemoteError, RemoteErrorKind, ShardRequest, WireDatafit,
-    WireDataset, WireError,
+    WireDataset, WireError, WorkerSummary,
 };
 use anyhow::{bail, ensure, Context, Result};
 use std::collections::HashSet;
@@ -50,7 +54,7 @@ use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 // ---------------------------------------------------------------------------
 // Worker side
@@ -67,6 +71,36 @@ const WORKER_DATASET_CAPACITY: usize = 64;
 /// peer shipping datasets in a loop) cannot grow it without limit.
 type DatasetStore = LruCache<u64, AnyProblem>;
 
+/// Shared worker-side state every serve thread reports into: the full
+/// metrics registry a [`Message::StatsRequest`] snapshots, plus the two
+/// atomics behind the compact [`WorkerSummary`] every `Pong` carries
+/// (cheap enough to answer from the heartbeat path without a scrape).
+struct WorkerShared {
+    metrics: Metrics,
+    start: Instant,
+    in_flight: AtomicU64,
+    solves: AtomicU64,
+}
+
+impl WorkerShared {
+    fn new() -> Self {
+        WorkerShared {
+            metrics: Metrics::new(),
+            start: Instant::now(),
+            in_flight: AtomicU64::new(0),
+            solves: AtomicU64::new(0),
+        }
+    }
+
+    fn summary(&self) -> WorkerSummary {
+        WorkerSummary {
+            in_flight: self.in_flight.load(Ordering::Relaxed),
+            solves: self.solves.load(Ordering::Relaxed),
+            uptime_ticks: self.start.elapsed().as_secs(),
+        }
+    }
+}
+
 /// A remote solve worker: accept loop + per-connection serve threads over
 /// a shared fingerprint-keyed, LRU-bounded dataset store. In-process
 /// instances back the loopback tests and benches; `sgl worker` wraps one
@@ -76,6 +110,7 @@ pub struct WorkerServer {
     shutdown: Arc<AtomicBool>,
     conns: Arc<Mutex<Vec<(u64, TcpStream)>>>,
     accept: Option<thread::JoinHandle<()>>,
+    shared: Arc<WorkerShared>,
 }
 
 impl WorkerServer {
@@ -88,9 +123,11 @@ impl WorkerServer {
         let shutdown = Arc::new(AtomicBool::new(false));
         let conns: Arc<Mutex<Vec<(u64, TcpStream)>>> = Arc::default();
         let store = Arc::new(Mutex::new(DatasetStore::new(WORKER_DATASET_CAPACITY)));
+        let shared = Arc::new(WorkerShared::new());
         let accept = {
             let shutdown = shutdown.clone();
             let conns = conns.clone();
+            let shared = shared.clone();
             thread::spawn(move || {
                 let mut next_id: u64 = 0;
                 for stream in listener.incoming() {
@@ -115,14 +152,15 @@ impl WorkerServer {
                     }
                     let store = store.clone();
                     let conns = conns.clone();
+                    let shared = shared.clone();
                     thread::spawn(move || {
-                        serve_conn(stream, &store);
+                        serve_conn(stream, &store, &shared);
                         conns.lock().unwrap().retain(|(cid, _)| *cid != id);
                     });
                 }
             })
         };
-        Ok(WorkerServer { addr: local, shutdown, conns, accept: Some(accept) })
+        Ok(WorkerServer { addr: local, shutdown, conns, accept: Some(accept), shared })
     }
 
     /// The actually bound address (resolves a `:0` port request).
@@ -172,7 +210,7 @@ pub fn run_worker(addr: &str) -> Result<()> {
     Ok(())
 }
 
-fn serve_conn(mut stream: TcpStream, store: &Mutex<DatasetStore>) {
+fn serve_conn(mut stream: TcpStream, store: &Mutex<DatasetStore>, shared: &WorkerShared) {
     loop {
         let (msg, body) = match Message::read_opt_with_body(&mut stream) {
             Ok(Some(m)) => m,
@@ -190,7 +228,7 @@ fn serve_conn(mut stream: TcpStream, store: &Mutex<DatasetStore>) {
                 return;
             }
         };
-        let reply = handle_request(msg, &body, store);
+        let reply = handle_request(msg, &body, store, shared);
         drop(body);
         // An unframeable reply (e.g. a PathResult beyond the 2 GiB frame
         // cap) must become a typed error, not a panicked serve thread —
@@ -212,9 +250,22 @@ fn serve_conn(mut stream: TcpStream, store: &Mutex<DatasetStore>) {
 
 /// One request frame → exactly one reply frame. `body` is the raw frame
 /// body the request was decoded from (`version ∥ tag ∥ payload`).
-fn handle_request(msg: Message, body: &[u8], store: &Mutex<DatasetStore>) -> Message {
+fn handle_request(
+    msg: Message,
+    body: &[u8],
+    store: &Mutex<DatasetStore>,
+    shared: &WorkerShared,
+) -> Message {
     match msg {
-        Message::Ping { seq } => Message::Pong { seq },
+        Message::Ping { seq } => Message::Pong { seq, summary: shared.summary() },
+        Message::StatsRequest => {
+            // Fold the summary atomics into the registry right before the
+            // snapshot so a scrape and a heartbeat can never disagree.
+            let s = shared.summary();
+            shared.metrics.set("worker_in_flight", s.in_flight as f64);
+            shared.metrics.set("worker_uptime_ticks", s.uptime_ticks as f64);
+            Message::StatsReply(shared.metrics.snapshot())
+        }
         Message::HasDataset { fingerprint } => Message::DatasetKnown {
             fingerprint,
             known: store.lock().unwrap().contains(&fingerprint),
@@ -239,6 +290,7 @@ fn handle_request(msg: Message, body: &[u8], store: &Mutex<DatasetStore>) -> Mes
                         }
                     };
                     store.lock().unwrap().insert(fingerprint, pb);
+                    shared.metrics.incr("worker_datasets_stored", 1);
                     Message::DatasetKnown { fingerprint, known: true }
                 }
                 Err(e) => Message::Error(RemoteError {
@@ -276,20 +328,39 @@ fn handle_request(msg: Message, body: &[u8], store: &Mutex<DatasetStore>) -> Mes
                 }
                 Some(pb) => {
                     let ShardRequest { lambdas, solver, opts, handoff, .. } = req;
+                    shared.in_flight.fetch_add(1, Ordering::Relaxed);
+                    let t0 = Instant::now();
+                    let sp = trace::span_with("worker_shard", || {
+                        vec![("lambdas", lambdas.len().into())]
+                    });
                     let solved = catch_unwind(AssertUnwindSafe(|| {
                         pb.solve_range(&lambdas, &opts, solver, handoff.as_ref())
                     }));
+                    drop(sp);
+                    shared.metrics.observe_secs("worker_shard_solve_s", t0.elapsed().as_secs_f64());
+                    shared.in_flight.fetch_sub(1, Ordering::Relaxed);
                     match solved {
-                        Ok((result, handoff)) => Message::ShardDone { result, handoff },
-                        Err(p) => Message::Error(RemoteError {
-                            kind: RemoteErrorKind::SolveFailed,
-                            detail: panic_message(p),
-                        }),
+                        Ok((result, handoff)) => {
+                            shared.solves.fetch_add(1, Ordering::Relaxed);
+                            shared.metrics.incr("worker_shards_solved", 1);
+                            shared
+                                .metrics
+                                .incr("worker_lambdas_solved", lambdas.len() as u64);
+                            Message::ShardDone { result, handoff }
+                        }
+                        Err(p) => {
+                            shared.metrics.incr("worker_shards_failed", 1);
+                            Message::Error(RemoteError {
+                                kind: RemoteErrorKind::SolveFailed,
+                                detail: panic_message(p),
+                            })
+                        }
                     }
                 }
             }
         }
         Message::Pong { .. }
+        | Message::StatsReply(_)
         | Message::DatasetKnown { .. }
         | Message::ShardDone { .. }
         | Message::Error(_) => Message::Error(RemoteError {
@@ -373,6 +444,36 @@ struct FingerprintEntry {
 /// Problem-instance identity → content fingerprint, LRU-bounded by
 /// [`FLEET_FINGERPRINT_CAPACITY`].
 type DatasetRegistry = LruCache<(u8, usize), FingerprintEntry>;
+
+/// One worker's heartbeat outcome: dead, alive-but-busy (every channel
+/// was mid-exchange, so nothing was probed and no summary is available),
+/// or alive with the [`WorkerSummary`] its `Pong` carried.
+#[derive(Clone, Copy, Debug)]
+pub enum Liveness {
+    /// The worker is marked dead (or the probe just killed it).
+    Dead,
+    /// Every channel was leased to an in-flight exchange: busy implies
+    /// reachable, but there is no summary without a probe.
+    Busy,
+    /// The probe round-tripped; the worker reported this summary.
+    Alive(WorkerSummary),
+}
+
+impl Liveness {
+    /// `true` for [`Busy`](Liveness::Busy) and
+    /// [`Alive`](Liveness::Alive) — anything but a dead worker.
+    pub fn is_alive(&self) -> bool {
+        !matches!(self, Liveness::Dead)
+    }
+
+    /// The probe's summary, when one was obtained.
+    pub fn summary(&self) -> Option<WorkerSummary> {
+        match self {
+            Liveness::Alive(s) => Some(*s),
+            _ => None,
+        }
+    }
+}
 
 /// A leased exchange channel: exclusive use of one worker connection.
 struct Lease {
@@ -525,11 +626,46 @@ impl RemoteFleet {
     /// Probe every worker with a `Ping` (bounded by `timeout` per
     /// worker). A worker whose channels are all mid-exchange counts as
     /// alive without being probed; a failed probe marks the worker dead
-    /// exactly like a mid-shard disconnect.
-    pub fn heartbeat(&self, timeout: Duration) -> Vec<(String, bool)> {
+    /// exactly like a mid-shard disconnect. The v4 `Pong` carries a
+    /// [`WorkerSummary`], so a successful probe also reports what the
+    /// worker is doing.
+    pub fn heartbeat(&self, timeout: Duration) -> Vec<(String, Liveness)> {
         (0..self.addrs.len())
             .map(|wi| (self.addrs[wi].clone(), self.probe(wi, timeout)))
             .collect()
+    }
+
+    /// Scrape every surviving worker's metrics registry
+    /// ([`Message::StatsRequest`] → [`Message::StatsReply`]) and fold
+    /// each snapshot into this fleet's own registry under a
+    /// `worker_<i>_` prefix (absolute-value overwrite via
+    /// [`Metrics::merge_snapshot`], so periodic re-scrapes never
+    /// double-count). Workers whose channels are all mid-exchange are
+    /// skipped this round; a transport failure marks the worker dead
+    /// exactly like a failed probe. Returns how many workers answered.
+    pub fn scrape(&self, timeout: Duration) -> usize {
+        let mut answered = 0;
+        for wi in 0..self.addrs.len() {
+            let Some(mut lease) = self.try_lease_worker(wi) else { continue };
+            lease.stream.set_read_timeout(Some(timeout)).ok();
+            let reply = match Message::StatsRequest.write_to(&mut lease.stream) {
+                Ok(()) => Message::read_from(&mut lease.stream),
+                Err(e) => Err(WireError::Io(e.to_string())),
+            };
+            lease.stream.set_read_timeout(None).ok();
+            match reply {
+                Ok(Message::StatsReply(snap)) => {
+                    self.metrics.merge_snapshot(&format!("worker_{wi}_"), &snap);
+                    self.metrics.incr("fleet_scrapes", 1);
+                    answered += 1;
+                    self.release(lease);
+                }
+                // An intact but out-of-protocol reply or a transport
+                // failure: stop trusting the worker, same as a probe.
+                Ok(_) | Err(_) => self.release_dead(lease),
+            }
+        }
+        answered
     }
 
     /// Pre-ship a dataset to every surviving worker whose channels are
@@ -747,27 +883,30 @@ impl RemoteFleet {
         Some(Lease { worker: wi, chan: ci, stream })
     }
 
-    fn probe(&self, wi: usize, timeout: Duration) -> bool {
+    fn probe(&self, wi: usize, timeout: Duration) -> Liveness {
         if !self.state.lock().unwrap().workers[wi].alive {
-            return false;
+            return Liveness::Dead;
         }
         // Every channel mid-exchange: busy implies reachable.
-        let Some(mut lease) = self.try_lease_worker(wi) else { return true };
+        let Some(mut lease) = self.try_lease_worker(wi) else { return Liveness::Busy };
         let seq = self.ping_seq.fetch_add(1, Ordering::Relaxed);
         lease.stream.set_read_timeout(Some(timeout)).ok();
-        let ok = Message::Ping { seq }.write_to(&mut lease.stream).is_ok()
-            && matches!(
-                Message::read_from(&mut lease.stream),
-                Ok(Message::Pong { seq: got }) if got == seq
-            );
+        let pong = match Message::Ping { seq }.write_to(&mut lease.stream) {
+            Ok(()) => Message::read_from(&mut lease.stream),
+            Err(e) => Err(WireError::Io(e.to_string())),
+        };
         lease.stream.set_read_timeout(None).ok();
         self.metrics.incr("fleet_heartbeats", 1);
-        if ok {
-            self.release(lease);
-        } else {
-            self.release_dead(lease);
+        match pong {
+            Ok(Message::Pong { seq: got, summary }) if got == seq => {
+                self.release(lease);
+                Liveness::Alive(summary)
+            }
+            _ => {
+                self.release_dead(lease);
+                Liveness::Dead
+            }
         }
-        ok
     }
 }
 
@@ -933,17 +1072,61 @@ mod tests {
     }
 
     #[test]
-    fn heartbeat_tracks_liveness() {
+    fn heartbeat_tracks_liveness_and_carries_worker_summaries() {
         let server = WorkerServer::bind("127.0.0.1:0").expect("bind");
         let addrs = vec![server.local_addr().to_string()];
         let fleet = RemoteFleet::connect(&addrs, FleetConfig::default(), Arc::new(Metrics::new()))
             .expect("connect");
         let up = fleet.heartbeat(Duration::from_secs(5));
-        assert!(up.iter().all(|(_, alive)| *alive), "{up:?}");
+        assert!(up.iter().all(|(_, l)| l.is_alive()), "{up:?}");
+        let s = up[0].1.summary().expect("an idle probe carries a summary");
+        assert_eq!(s.in_flight, 0);
+        assert_eq!(s.solves, 0);
+        // A solve shows up in the next heartbeat's summary.
+        let pb = small_problem(11);
+        let any = AnyProblem::Dense(pb.clone());
+        let lambdas = lambda_grid(pb.lambda_max(), 1.0, 3);
+        let opts = PathOptions {
+            delta: 1.0,
+            t_count: 3,
+            solve: SolveOptions { tol: 1e-6, record_history: false, ..Default::default() },
+        };
+        fleet.solve_shard(&any, &lambdas, &opts, SolverKind::Cd, None).expect("solve");
+        let up = fleet.heartbeat(Duration::from_secs(5));
+        let s = up[0].1.summary().expect("summary");
+        assert_eq!(s.solves, 1);
+        assert_eq!(s.in_flight, 0);
         server.kill();
         let down = fleet.heartbeat(Duration::from_secs(5));
-        assert!(down.iter().all(|(_, alive)| !*alive), "{down:?}");
+        assert!(down.iter().all(|(_, l)| !l.is_alive()), "{down:?}");
         assert_eq!(fleet.workers_alive(), 0);
         assert_eq!(fleet.capacity(), 0);
+    }
+
+    #[test]
+    fn scrape_merges_worker_registries_under_prefixes() {
+        let (server, fleet) = one_worker_fleet();
+        let pb = small_problem(12);
+        let any = AnyProblem::Dense(pb.clone());
+        let lambdas = lambda_grid(pb.lambda_max(), 1.0, 4);
+        let opts = PathOptions {
+            delta: 1.0,
+            t_count: 4,
+            solve: SolveOptions { tol: 1e-6, record_history: false, ..Default::default() },
+        };
+        fleet.solve_shard(&any, &lambdas, &opts, SolverKind::Cd, None).expect("solve");
+        assert_eq!(fleet.scrape(Duration::from_secs(5)), 1);
+        let m = fleet.metrics();
+        assert_eq!(m.counter("worker_0_worker_shards_solved"), 1);
+        assert_eq!(m.counter("worker_0_worker_datasets_stored"), 1);
+        let t = m.timer("worker_0_worker_shard_solve_s").expect("scraped timer");
+        assert_eq!(t.count, 1);
+        let p95 = m.timer_quantile("worker_0_worker_shard_solve_s", 0.95).expect("p95");
+        assert!(p95 > 0.0, "histogram rode along with the scrape: {p95}");
+        // Worker-side truth matches what was merged.
+        assert_eq!(server.shared.summary().solves, 1);
+        // Re-scraping overwrites the same keys — totals stay absolute.
+        assert_eq!(fleet.scrape(Duration::from_secs(5)), 1);
+        assert_eq!(m.counter("worker_0_worker_shards_solved"), 1);
     }
 }

@@ -46,6 +46,7 @@ use crate::solver::SolverKind;
 use crate::util::lru::LruCache;
 use crate::util::pool::{resolve_threads, WorkerPool};
 use crate::util::timer::Stopwatch;
+use crate::util::trace;
 use anyhow::{bail, Result};
 use std::cmp::Ordering as CmpOrdering;
 use std::collections::hash_map::DefaultHasher;
@@ -850,12 +851,16 @@ fn run_one(inner: &Inner, id: JobId) {
     // panic becomes a job failure instead of poisoning the service, and a
     // remote failure (all workers gone, typed worker error) likewise.
     let sw = Stopwatch::start();
+    let shard_span = trace::span_with("service_shard", || {
+        vec![("job", id.0.into()), ("lambdas", grid.len().into())]
+    });
     let solved = catch_unwind(AssertUnwindSafe(|| match &inner.exec {
         ShardExec::Local => Ok(req.pb.solve_range(&grid, &req.opts, req.solver, handoff.as_ref())),
         ShardExec::Fleet(fleet) => fleet
             .solve_shard(&req.pb, &grid, &req.opts, req.solver, handoff.as_ref())
             .map_err(|e| format!("{e:#}")),
     }));
+    drop(shard_span);
     let shard_secs = sw.elapsed_s();
     let solved: Result<(PathResult, Option<DualHandoff>), String> = match solved {
         Err(payload) => Err(panic_message(payload)),

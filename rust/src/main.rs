@@ -25,6 +25,14 @@
 //! binarizes a real-valued target at its mean); all are also available as
 //! `[dataset] design` / `[solver] algo` / `[solver] datafit` TOML keys,
 //! and the service knobs as `[service] workers/queue_depth/shards`.
+//!
+//! Observability: `--trace-out f.json` (or `SGL_TRACE=f.json`, or
+//! `[trace] out`) records every solve as Chrome trace-event JSON —
+//! open it in `about:tracing` / Perfetto; `--trace-sample k` thins the
+//! per-gap-check instants to every k-th. `serve --metrics-addr host:port`
+//! exposes the live metrics registry as a Prometheus text endpoint, and a
+//! fleet run scrapes each remote worker's registry into it under a
+//! `worker_<i>_` prefix before the final dump.
 
 use anyhow::{bail, Context, Result};
 use sgl::config::{
@@ -52,6 +60,7 @@ use sgl::solver::problem::{lambda_grid, SglProblem};
 use sgl::solver::sweep::SweepMode;
 use sgl::solver::SolverKind;
 use sgl::util::cli::{Args, OptSpec};
+use sgl::util::trace;
 use std::collections::HashMap;
 use std::sync::Arc;
 
@@ -81,6 +90,9 @@ fn specs() -> Vec<OptSpec> {
         OptSpec { name: "fleet", help: "serve: remote workers host:port,host:port", takes_value: true, default: None },
         OptSpec { name: "fleet-conns", help: "serve: connections per fleet worker", takes_value: true, default: None },
         OptSpec { name: "listen", help: "worker: bind address (port 0 = auto)", takes_value: true, default: Some("127.0.0.1:7171") },
+        OptSpec { name: "trace-out", help: "write a Chrome trace-event JSON of the run (also SGL_TRACE)", takes_value: true, default: None },
+        OptSpec { name: "trace-sample", help: "record every k-th gap-check event (default 1 = all)", takes_value: true, default: None },
+        OptSpec { name: "metrics-addr", help: "serve: Prometheus text endpoint host:port", takes_value: true, default: None },
         OptSpec { name: "scale", help: "small|paper dataset scale", takes_value: true, default: Some("small") },
         OptSpec { name: "out", help: "output CSV path", takes_value: true, default: None },
         OptSpec { name: "artifacts", help: "artifacts dir for `xla`", takes_value: true, default: Some("artifacts") },
@@ -164,6 +176,24 @@ fn load_config(args: &Args) -> Result<RunConfig> {
     }
     if let Some(v) = args.get("fleet-conns") {
         cfg.service_fleet_conns = v.parse().context("--fleet-conns")?;
+    }
+    if let Some(v) = args.get("trace-out") {
+        cfg.trace_out = Some(v);
+    }
+    if let Some(v) = args.get("trace-sample") {
+        cfg.trace_sample = v.parse().context("--trace-sample")?;
+    }
+    if let Some(v) = args.get("metrics-addr") {
+        cfg.metrics_addr = Some(v);
+    }
+    // `SGL_TRACE=path` turns tracing on without touching flags or config
+    // (lowest precedence: an explicit --trace-out / [trace] out wins).
+    if cfg.trace_out.is_none() {
+        if let Ok(v) = std::env::var("SGL_TRACE") {
+            if !v.is_empty() {
+                cfg.trace_out = Some(v);
+            }
+        }
     }
     if args.get("config").is_none() {
         cfg.dataset = match args.get_or("dataset", "synthetic").as_str() {
@@ -448,6 +478,10 @@ fn cmd_serve(data: LoadedData, cfg: &RunConfig) -> Result<()> {
         }
     };
     let metrics = Arc::new(Metrics::new());
+    if let Some(addr) = &cfg.metrics_addr {
+        let local = spawn_metrics_endpoint(addr, metrics.clone())?;
+        println!("metrics endpoint: http://{local}/metrics");
+    }
     let svc_cfg = ServiceConfig {
         workers: cfg.service_workers,
         queue_depth: cfg.service_queue_depth,
@@ -584,12 +618,52 @@ fn cmd_serve(data: LoadedData, cfg: &RunConfig) -> Result<()> {
         svc.was_cached(dup_id),
     );
     if let Some(f) = &fleet {
-        for (addr, alive) in f.heartbeat(std::time::Duration::from_secs(5)) {
-            println!("fleet worker {addr}: {}", if alive { "alive" } else { "dead" });
+        // Pull each worker's metrics registry into ours (prefixed
+        // `worker_<i>_`) before the final dump, then report liveness with
+        // the summary the Pong now carries.
+        let scraped = f.scrape(std::time::Duration::from_secs(5));
+        for (addr, state) in f.heartbeat(std::time::Duration::from_secs(5)) {
+            match state.summary() {
+                Some(s) => println!(
+                    "fleet worker {addr}: alive, {} solves, {} in flight, up {}s",
+                    s.solves, s.in_flight, s.uptime_ticks
+                ),
+                None if state.is_alive() => println!("fleet worker {addr}: alive (busy)"),
+                None => println!("fleet worker {addr}: dead"),
+            }
         }
+        println!("scraped {scraped} worker registries into the service metrics");
     }
     println!("\nservice metrics:\n{}", metrics.render_text());
     Ok(())
+}
+
+/// Serve the coordinator's metrics registry as Prometheus text exposition
+/// over plain HTTP: one listener thread, one `GET` per connection, the
+/// same `render_text` the final dump prints. Returns the bound address
+/// (`--metrics-addr host:0` picks a free port).
+fn spawn_metrics_endpoint(addr: &str, metrics: Arc<Metrics>) -> Result<std::net::SocketAddr> {
+    use std::io::{Read, Write};
+    let listener = std::net::TcpListener::bind(addr)
+        .with_context(|| format!("binding metrics endpoint {addr}"))?;
+    let local = listener.local_addr()?;
+    std::thread::Builder::new().name("sgl-metrics".into()).spawn(move || {
+        for stream in listener.incoming() {
+            let Ok(mut stream) = stream else { continue };
+            // Drain (a prefix of) the request and answer every path the
+            // same way — scrapers only ever GET.
+            let mut buf = [0u8; 1024];
+            let _ = stream.read(&mut buf);
+            let body = metrics.render_text();
+            let reply = format!(
+                "HTTP/1.1 200 OK\r\nContent-Type: text/plain; version=0.0.4\r\n\
+                 Content-Length: {}\r\nConnection: close\r\n\r\n{body}",
+                body.len()
+            );
+            let _ = stream.write_all(reply.as_bytes());
+        }
+    })?;
+    Ok(local)
 }
 
 /// Submit with backpressure: a full queue ([`QueueFullError`]) drains one
@@ -691,6 +765,13 @@ fn run(args: &Args) -> Result<()> {
     // Kernel policy is process-global (like SGL_THREADS): one store up
     // front covers every backend and worker thread in this process.
     sgl::linalg::simd::set_policy(cfg.kernels);
+    // Tracing likewise: the collector is process-global, so enabling it
+    // here covers every solver thread a subcommand spins up. When it is
+    // off (the default), the instrumented sites are a single relaxed
+    // atomic load and solver output is bit-identical.
+    if cfg.trace_out.is_some() {
+        trace::enable(cfg.trace_sample);
+    }
     let scale = args.get_or("scale", "small");
     let threads = cfg.effective_threads();
 
@@ -830,6 +911,19 @@ fn run(args: &Args) -> Result<()> {
                 "subcommands: solve | path | cv | lambda-max | compare | serve | worker | xla"
             );
             eprintln!("{}", args.usage());
+        }
+    }
+    // One uniform flush point: whatever the subcommand was (a path solve,
+    // the serve demo, a worker that returned cleanly), the buffered events
+    // land in a single Chrome trace-event file on the way out.
+    if let Some(path) = &cfg.trace_out {
+        let n = trace::write_chrome_trace(path)
+            .with_context(|| format!("writing trace {path}"))?;
+        let dropped = trace::dropped();
+        if dropped > 0 {
+            println!("trace: {n} events -> {path} ({dropped} dropped at capacity)");
+        } else {
+            println!("trace: {n} events -> {path}");
         }
     }
     Ok(())

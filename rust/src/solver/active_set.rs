@@ -29,6 +29,7 @@ use super::sweep::SweepCtx;
 use crate::linalg::Design;
 use crate::screening::{apply_sphere_state, ActiveSet, ScreeningRule};
 use crate::util::timer::Stopwatch;
+use crate::util::trace;
 
 /// Compacted view of the active columns: a packed backend instance plus
 /// the bookkeeping mapping compact columns back to original features.
@@ -253,6 +254,8 @@ impl<D: Design> ScreenState<D> {
         let mut snap = snap;
         self.gap = snap.gap;
         self.gap_evals += 1;
+        // 0-based checkpoint index within this solve, for trace sampling.
+        let trace_seq = (self.gap_evals - 1) as u64;
         let mut features_screened = 0;
         // Screen first (even on the converging check: the final active
         // sets reported for Fig. 2a/2b use the tightest sphere).
@@ -285,6 +288,25 @@ impl<D: Design> ScreenState<D> {
                 active_features: self.active.n_active_features(),
                 active_groups: self.active.n_active_groups(),
                 elapsed_s: sw.elapsed_s(),
+            });
+        }
+        // Observation only — nothing below feeds back into the solve
+        // (the disabled-tracing bit-identity tests pin this). Rejection-
+        // rate-vs-λ curves (paper Fig. 2) fall out of these events on any
+        // production solve, not just the fig experiments.
+        if trace::sampled(trace_seq) {
+            trace::instant("gap_check", || {
+                vec![
+                    ("lambda", lambda.into()),
+                    ("epoch", epoch.into()),
+                    ("gap", self.gap.into()),
+                    ("screened", features_screened.into()),
+                    ("active_features", self.active.n_active_features().into()),
+                    ("active_groups", self.active.n_active_groups().into()),
+                    ("rule", rule.kind().name().into()),
+                    ("datafit", pb.datafit.kind().name().into()),
+                    ("kernel", crate::linalg::simd::effective().name().into()),
+                ]
             });
         }
         self.final_snap = Some(snap);

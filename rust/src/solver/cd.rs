@@ -30,6 +30,7 @@ use crate::linalg::Design;
 use crate::norms::prox::sgl_prox_inplace;
 use crate::screening::{make_rule, ActiveSet, RuleKind, ScreeningRule};
 use crate::util::timer::Stopwatch;
+use crate::util::trace;
 
 /// Solver options (paper defaults).
 #[derive(Clone, Debug)]
@@ -128,6 +129,9 @@ pub fn solve_with_rule<D: Design, F: Datafit>(
     assert!(lambda > 0.0, "lambda must be positive");
     let p = pb.p();
     let sw = Stopwatch::start();
+    let _solve_span = trace::span_with("solve", || {
+        vec![("solver", "cd".into()), ("lambda", lambda.into()), ("p", p.into())]
+    });
     let mut state = ScreenState::new(pb, opts);
 
     let mut beta = match beta0 {

@@ -24,6 +24,7 @@ use crate::linalg::Design;
 use crate::screening::{make_rule, ScreeningRule};
 use crate::solver::cd::{SolveOptions, SolveResult};
 use crate::util::timer::Stopwatch;
+use crate::util::trace;
 
 /// FISTA solve at a single `λ`. Interface mirrors `cd::solve`.
 pub fn solve_fista<D: Design, F: Datafit>(
@@ -48,6 +49,9 @@ pub fn solve_fista_with_rule<D: Design, F: Datafit>(
     assert!(lambda > 0.0, "lambda must be positive");
     let sw = Stopwatch::start();
     let p = pb.p();
+    let _solve_span = trace::span_with("solve", || {
+        vec![("solver", "fista".into()), ("lambda", lambda.into()), ("p", p.into())]
+    });
     let inv_l = 1.0 / global_step_lipschitz(pb).max(1e-300);
     let mut state = ScreenState::new(pb, opts);
 

@@ -28,6 +28,7 @@ use crate::linalg::Design;
 use crate::screening::{make_rule, ScreeningRule};
 use crate::solver::cd::{SolveOptions, SolveResult};
 use crate::util::timer::Stopwatch;
+use crate::util::trace;
 
 /// Global Lipschitz constant `‖X‖₂²` (top eigenvalue of `XᵀX`) of the
 /// design alone; see [`global_step_lipschitz`] for the full-gradient step
@@ -87,6 +88,9 @@ pub fn solve_ista_with_rule<D: Design, F: Datafit>(
     assert!(lambda > 0.0, "lambda must be positive");
     let sw = Stopwatch::start();
     let p = pb.p();
+    let _solve_span = trace::span_with("solve", || {
+        vec![("solver", "ista".into()), ("lambda", lambda.into()), ("p", p.into())]
+    });
     let l_global = global_step_lipschitz(pb).max(1e-300);
     let mut state = ScreenState::new(pb, opts);
 

@@ -32,6 +32,7 @@ use crate::linalg::{Design, Matrix};
 use crate::screening::{make_rule, RuleKind, ScreeningRule, Sphere};
 use crate::util::pool::{parallel_map, resolve_threads};
 use crate::util::timer::Stopwatch;
+use crate::util::trace;
 use std::sync::Arc;
 
 /// Path configuration (paper defaults: `δ = 3`, `T = 100`).
@@ -179,6 +180,13 @@ pub fn solve_path_with_handoff<D: Design, F: Datafit>(
         assert!(w[1] <= w[0] * (1.0 + 1e-12), "lambda grid must be non-increasing");
     }
     let sw = Stopwatch::start();
+    let _path_span = trace::span_with("solve_path", || {
+        vec![
+            ("grid", lambdas.len().into()),
+            ("solver", solver.name().into()),
+            ("rule", opts.solve.rule.name().into()),
+        ]
+    });
     let mut rule = CaptureRule { inner: make_rule(opts.solve.rule, pb), last: None };
     let mut warm: Option<Vec<f64>> = None;
     if let Some(h) = handoff {

@@ -15,4 +15,5 @@ pub mod proptest;
 pub mod rng;
 pub mod stats;
 pub mod timer;
+pub mod trace;
 pub mod wire;

@@ -1,0 +1,399 @@
+//! Dependency-free solve tracing: a process-global collector with
+//! per-thread buffers, an explicit span/event API, and export to Chrome
+//! trace-event JSON (loadable in Perfetto / `chrome://tracing`).
+//!
+//! # Contract
+//!
+//! - **Observation only.** Tracing never feeds back into the solver: no
+//!   instrumentation site reads trace state into a numeric decision, so
+//!   solver output is bit-identical with tracing on, off, or toggled
+//!   mid-run. Tests pin this ([`crate::solver`] disabled-tracing
+//!   bit-identity suite).
+//! - **Near-zero cost when disabled.** Every recording entry point first
+//!   loads one relaxed [`AtomicBool`]; argument closures are only invoked
+//!   when the collector is enabled, so a disabled trace site costs a
+//!   predictable load+branch on the gap-check path (never the per-
+//!   coordinate hot loop).
+//! - **Per-thread buffers.** Each thread appends to its own buffer
+//!   (registered once with the global collector), so concurrent solvers
+//!   never contend on a shared lock. [`drain`] collects from *all*
+//!   registered buffers — including threads still alive in a pool — and
+//!   returns events sorted by timestamp.
+//! - **Bounded memory.** A buffer holds at most [`MAX_EVENTS_PER_THREAD`]
+//!   events; overflow is dropped and counted ([`dropped`]), never
+//!   reallocated without bound.
+//!
+//! The process-global design mirrors [`crate::linalg::simd`]'s kernel
+//! policy: enabling tracing is a runtime switch (`--trace-out`,
+//! `[trace]` config, `SGL_TRACE`), not a `SolveOptions` field, so the
+//! wire codec and the service cache key are untouched by observability.
+
+use crate::util::json::Json;
+use std::cell::RefCell;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+use std::time::Instant;
+
+/// Hard cap on buffered events per thread; see the module docs.
+pub const MAX_EVENTS_PER_THREAD: usize = 1 << 20;
+
+/// Trace-event phase, mapped to Chrome trace-event `ph` codes on export
+/// (`B`/`E` span brackets, `i` for instant events).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Phase {
+    /// Span open (`ph: "B"`).
+    Begin,
+    /// Span close (`ph: "E"`).
+    End,
+    /// Point event (`ph: "i"`, thread-scoped).
+    Instant,
+}
+
+/// One typed event argument (rendered under `args` in the export).
+#[derive(Clone, Debug, PartialEq)]
+pub enum ArgValue {
+    /// Unsigned integer argument (epochs, counts).
+    U64(u64),
+    /// Floating argument (gaps, radii, lambdas).
+    F64(f64),
+    /// String tag (rule/datafit/kernel names).
+    Str(String),
+}
+
+impl From<u64> for ArgValue {
+    fn from(v: u64) -> ArgValue {
+        ArgValue::U64(v)
+    }
+}
+impl From<usize> for ArgValue {
+    fn from(v: usize) -> ArgValue {
+        ArgValue::U64(v as u64)
+    }
+}
+impl From<f64> for ArgValue {
+    fn from(v: f64) -> ArgValue {
+        ArgValue::F64(v)
+    }
+}
+impl From<&str> for ArgValue {
+    fn from(v: &str) -> ArgValue {
+        ArgValue::Str(v.to_string())
+    }
+}
+impl From<String> for ArgValue {
+    fn from(v: String) -> ArgValue {
+        ArgValue::Str(v)
+    }
+}
+
+/// Event argument list: static keys, typed values.
+pub type Args = Vec<(&'static str, ArgValue)>;
+
+/// One recorded trace event.
+#[derive(Clone, Debug)]
+pub struct Event {
+    /// Event name (a static site label, e.g. `"gap_check"`).
+    pub name: &'static str,
+    /// Span bracket or instant marker.
+    pub phase: Phase,
+    /// Microseconds since the collector was first touched.
+    pub ts_us: u64,
+    /// Stable per-thread id assigned by the collector (1-based).
+    pub tid: u64,
+    /// Typed arguments recorded at the site.
+    pub args: Args,
+}
+
+struct Collector {
+    start: Instant,
+    buffers: Mutex<Vec<Arc<Mutex<Vec<Event>>>>>,
+}
+
+static ENABLED: AtomicBool = AtomicBool::new(false);
+static SAMPLE: AtomicU64 = AtomicU64::new(1);
+static DROPPED: AtomicU64 = AtomicU64::new(0);
+static NEXT_TID: AtomicU64 = AtomicU64::new(1);
+
+fn collector() -> &'static Collector {
+    static C: OnceLock<Collector> = OnceLock::new();
+    C.get_or_init(|| Collector { start: Instant::now(), buffers: Mutex::new(Vec::new()) })
+}
+
+thread_local! {
+    static LOCAL: RefCell<Option<(u64, Arc<Mutex<Vec<Event>>>)>> = const { RefCell::new(None) };
+}
+
+/// Whether the collector is currently recording. One relaxed atomic
+/// load — the entire cost of a disabled trace site.
+#[inline]
+pub fn enabled() -> bool {
+    ENABLED.load(Ordering::Relaxed)
+}
+
+/// The sampling divisor for high-frequency sites: a site with a
+/// per-solve sequence number records only every `sample_every()`-th
+/// occurrence (1 = record all). Span brackets are never sampled.
+#[inline]
+pub fn sample_every() -> u64 {
+    SAMPLE.load(Ordering::Relaxed).max(1)
+}
+
+/// `true` iff tracing is enabled *and* occurrence `seq` (0-based within
+/// one solve) falls on the sampling grid.
+#[inline]
+pub fn sampled(seq: u64) -> bool {
+    enabled() && seq % sample_every() == 0
+}
+
+/// Turn the collector on with the given sampling divisor (clamped to
+/// ≥ 1). Safe to call more than once; later calls update the divisor.
+pub fn enable(sample: u64) {
+    SAMPLE.store(sample.max(1), Ordering::Relaxed);
+    ENABLED.store(true, Ordering::Relaxed);
+}
+
+/// Stop recording. Buffered events are kept until [`drain`]/[`clear`].
+pub fn disable() {
+    ENABLED.store(false, Ordering::Relaxed);
+}
+
+/// Events dropped because a thread buffer hit [`MAX_EVENTS_PER_THREAD`].
+pub fn dropped() -> u64 {
+    DROPPED.load(Ordering::Relaxed)
+}
+
+fn push_event(name: &'static str, phase: Phase, args: Args) {
+    let c = collector();
+    let ts_us = c.start.elapsed().as_micros() as u64;
+    LOCAL.with(|slot| {
+        let mut slot = slot.borrow_mut();
+        if slot.is_none() {
+            let tid = NEXT_TID.fetch_add(1, Ordering::Relaxed);
+            let buf = Arc::new(Mutex::new(Vec::new()));
+            c.buffers.lock().unwrap().push(buf.clone());
+            *slot = Some((tid, buf));
+        }
+        let (tid, buf) = slot.as_ref().expect("buffer registered above");
+        let mut buf = buf.lock().unwrap();
+        if buf.len() >= MAX_EVENTS_PER_THREAD {
+            DROPPED.fetch_add(1, Ordering::Relaxed);
+        } else {
+            buf.push(Event { name, phase, ts_us, tid: *tid, args });
+        }
+    });
+}
+
+/// Record a point event. The argument closure is only invoked when the
+/// collector is enabled.
+pub fn instant<F: FnOnce() -> Args>(name: &'static str, args: F) {
+    if enabled() {
+        push_event(name, Phase::Instant, args());
+    }
+}
+
+/// RAII span: records a `Begin` bracket at construction (when enabled)
+/// and the matching `End` on drop. A span opened while tracing is
+/// enabled always closes, even if tracing is disabled mid-span, so
+/// exported brackets stay balanced.
+#[must_use = "a span records its duration; bind it to a local"]
+pub struct Span {
+    name: Option<&'static str>,
+}
+
+impl Drop for Span {
+    fn drop(&mut self) {
+        if let Some(name) = self.name.take() {
+            push_event(name, Phase::End, Vec::new());
+        }
+    }
+}
+
+/// Open a span with no arguments.
+pub fn span(name: &'static str) -> Span {
+    span_with(name, Vec::new)
+}
+
+/// Open a span; the argument closure is only invoked when enabled.
+pub fn span_with<F: FnOnce() -> Args>(name: &'static str, args: F) -> Span {
+    if enabled() {
+        push_event(name, Phase::Begin, args());
+        Span { name: Some(name) }
+    } else {
+        Span { name: None }
+    }
+}
+
+/// Remove and return every buffered event from every registered thread
+/// buffer, sorted by timestamp (stable, so same-timestamp events keep
+/// their per-thread order).
+pub fn drain() -> Vec<Event> {
+    let mut events = Vec::new();
+    for buf in collector().buffers.lock().unwrap().iter() {
+        events.append(&mut buf.lock().unwrap());
+    }
+    events.sort_by_key(|e| e.ts_us);
+    events
+}
+
+/// Discard all buffered events and reset the dropped-event counter.
+pub fn clear() {
+    drop(drain());
+    DROPPED.store(0, Ordering::Relaxed);
+}
+
+fn args_json(args: &Args) -> Json {
+    let mut obj = Json::obj();
+    for (k, v) in args {
+        obj = match v {
+            ArgValue::U64(x) => obj.with(k, *x as f64),
+            ArgValue::F64(x) => obj.with(k, *x),
+            ArgValue::Str(s) => obj.with(k, s.as_str()),
+        };
+    }
+    obj
+}
+
+/// Render events as a Chrome trace-event JSON document:
+/// `{"traceEvents": [...], "displayTimeUnit": "ms"}` with `B`/`E`/`i`
+/// phases — the format Perfetto and `chrome://tracing` load directly.
+pub fn chrome_trace(events: &[Event]) -> Json {
+    let pid = std::process::id() as f64;
+    let items: Vec<Json> = events
+        .iter()
+        .map(|e| {
+            let mut obj = Json::obj()
+                .with("name", e.name)
+                .with(
+                    "ph",
+                    match e.phase {
+                        Phase::Begin => "B",
+                        Phase::End => "E",
+                        Phase::Instant => "i",
+                    },
+                )
+                .with("ts", e.ts_us as f64)
+                .with("pid", pid)
+                .with("tid", e.tid as f64);
+            if e.phase == Phase::Instant {
+                obj = obj.with("s", "t");
+            }
+            if !e.args.is_empty() {
+                obj = obj.with("args", args_json(&e.args));
+            }
+            obj
+        })
+        .collect();
+    Json::obj().with("traceEvents", Json::Arr(items)).with("displayTimeUnit", "ms")
+}
+
+/// Drain every buffered event and write the Chrome trace-event JSON to
+/// `path`. Called by the CLI on path/serve/worker completion.
+pub fn write_chrome_trace(path: &str) -> std::io::Result<usize> {
+    let events = drain();
+    std::fs::write(path, chrome_trace(&events).dump())?;
+    Ok(events.len())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Tracing state is process-global; serialize the tests that toggle
+    /// it. Other lib tests may run concurrently and hit instrumented
+    /// sites while a test here has the collector enabled, so every
+    /// assertion below filters drained events to this module's own
+    /// event names instead of assuming exclusive ownership.
+    fn lock() -> std::sync::MutexGuard<'static, ()> {
+        static LOCK: Mutex<()> = Mutex::new(());
+        LOCK.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    fn named<'a>(events: &'a [Event], names: &[&str]) -> Vec<&'a Event> {
+        events.iter().filter(|e| names.contains(&e.name)).collect()
+    }
+
+    #[test]
+    fn disabled_records_nothing() {
+        let _g = lock();
+        disable();
+        clear();
+        let mut called = false;
+        instant("ut_off", || {
+            called = true;
+            vec![]
+        });
+        let s = span("ut_off_span");
+        drop(s);
+        assert!(!called, "arg closure must not run when disabled");
+        assert!(named(&drain(), &["ut_off", "ut_off_span"]).is_empty());
+    }
+
+    #[test]
+    fn spans_balance_and_sort() {
+        let _g = lock();
+        clear();
+        enable(1);
+        {
+            let _outer = span_with("ut_outer", || vec![("k", ArgValue::from(3u64))]);
+            instant("ut_tick", || vec![("gap", ArgValue::from(0.5))]);
+            let _inner = span("ut_inner");
+        }
+        disable();
+        let events = drain();
+        let mine = named(&events, &["ut_outer", "ut_tick", "ut_inner"]);
+        let names: Vec<(&str, Phase)> = mine.iter().map(|e| (e.name, e.phase)).collect();
+        assert_eq!(
+            names,
+            vec![
+                ("ut_outer", Phase::Begin),
+                ("ut_tick", Phase::Instant),
+                ("ut_inner", Phase::Begin),
+                ("ut_inner", Phase::End),
+                ("ut_outer", Phase::End),
+            ]
+        );
+        for w in events.windows(2) {
+            assert!(w[0].ts_us <= w[1].ts_us);
+        }
+        let owned: Vec<Event> = mine.into_iter().cloned().collect();
+        let doc = chrome_trace(&owned).dump();
+        assert!(doc.starts_with("{\"traceEvents\":["));
+        assert!(doc.contains("\"ph\":\"B\""));
+        assert!(doc.contains("\"ph\":\"E\""));
+        assert!(doc.contains("\"ph\":\"i\""));
+        assert!(doc.contains("\"gap\":0.5"));
+    }
+
+    #[test]
+    fn sampling_thins_instants() {
+        let _g = lock();
+        clear();
+        enable(4);
+        for seq in 0..10u64 {
+            if sampled(seq) {
+                instant("ut_sampled", Vec::new);
+            }
+        }
+        disable();
+        assert_eq!(named(&drain(), &["ut_sampled"]).len(), 3); // seq 0, 4, 8
+    }
+
+    #[test]
+    fn cross_thread_events_all_drain() {
+        let _g = lock();
+        clear();
+        enable(1);
+        std::thread::scope(|s| {
+            for _ in 0..3 {
+                s.spawn(|| instant("ut_xthread", Vec::new));
+            }
+        });
+        instant("ut_xmain", Vec::new);
+        disable();
+        let events = drain();
+        let mine = named(&events, &["ut_xthread", "ut_xmain"]);
+        assert_eq!(mine.len(), 4);
+        let tids: std::collections::BTreeSet<u64> = mine.iter().map(|e| e.tid).collect();
+        assert!(tids.len() >= 2, "expected events from multiple threads");
+    }
+}

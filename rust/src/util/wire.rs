@@ -33,6 +33,7 @@
 //!
 //! [`fingerprint`]: WireDataset::fingerprint
 
+use crate::coordinator::metrics::{MetricsSnapshot, TimerStats};
 use crate::linalg::{CscMatrix, Design, Matrix};
 use crate::screening::{ActiveSet, RuleKind};
 use crate::solver::cd::{CheckEvent, SolveOptions, SolveResult};
@@ -60,7 +61,14 @@ use std::io::{Read, Write};
 /// structure (and hence the exact iterate trajectory), so a v2 peer
 /// silently defaulting them would compute a *different* path than the
 /// coordinator asked for — better to refuse the handshake.
-pub const WIRE_VERSION: u8 = 3;
+///
+/// **v4** (observability PR): [`Pong`](Message::Pong) carries a
+/// [`WorkerSummary`] (in-flight shards, completed solves, uptime ticks)
+/// and the [`StatsRequest`](Message::StatsRequest) /
+/// [`StatsReply`](Message::StatsReply) scrape pair exists. The Pong body
+/// grew, so a v3 peer decoding a v4 heartbeat would misread bytes —
+/// refuse the handshake instead.
+pub const WIRE_VERSION: u8 = 4;
 
 /// Hard cap on one frame's body (2 GiB): a corrupt length prefix must
 /// not become a giant allocation.
@@ -895,6 +903,92 @@ impl RemoteErrorKind {
     }
 }
 
+/// Compact liveness context a worker piggybacks on every
+/// [`Pong`](Message::Pong) (v4): enough for a coordinator's heartbeat
+/// line to show what the worker is doing without a full stats scrape.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct WorkerSummary {
+    /// Shards currently being solved on the worker.
+    pub in_flight: u64,
+    /// λ-shard solves completed since the worker started.
+    pub solves: u64,
+    /// Seconds (whole) since the worker started listening.
+    pub uptime_ticks: u64,
+}
+
+fn put_worker_summary(e: &mut Enc, s: &WorkerSummary) {
+    e.u64(s.in_flight);
+    e.u64(s.solves);
+    e.u64(s.uptime_ticks);
+}
+
+fn get_worker_summary(d: &mut Dec) -> Result<WorkerSummary, WireError> {
+    Ok(WorkerSummary { in_flight: d.u64()?, solves: d.u64()?, uptime_ticks: d.u64()? })
+}
+
+fn put_timer_stats(e: &mut Enc, t: &TimerStats) {
+    e.u64(t.count);
+    e.f64(t.sum);
+    e.f64(t.min);
+    e.f64(t.max);
+}
+
+fn get_timer_stats(d: &mut Dec) -> Result<TimerStats, WireError> {
+    Ok(TimerStats { count: d.u64()?, sum: d.f64()?, min: d.f64()?, max: d.f64()? })
+}
+
+fn put_metrics_snapshot(e: &mut Enc, s: &MetricsSnapshot) {
+    e.usize_(s.counters.len());
+    for (k, v) in &s.counters {
+        e.str_(k);
+        e.u64(*v);
+    }
+    e.usize_(s.gauges.len());
+    for (k, v) in &s.gauges {
+        e.str_(k);
+        e.f64(*v);
+    }
+    e.usize_(s.timers.len());
+    for (k, stats, sparse) in &s.timers {
+        e.str_(k);
+        put_timer_stats(e, stats);
+        e.usize_(sparse.len());
+        for &(i, c) in sparse {
+            e.u64(i);
+            e.u64(c);
+        }
+    }
+}
+
+fn get_metrics_snapshot(d: &mut Dec) -> Result<MetricsSnapshot, WireError> {
+    // A counter/gauge entry is ≥ 16 wire bytes (8-byte name length +
+    // 8-byte value), a timer ≥ 48: bound every count against the
+    // remaining input before allocating.
+    let n = d.count(16)?;
+    let mut counters = Vec::with_capacity(n);
+    for _ in 0..n {
+        counters.push((d.str_()?, d.u64()?));
+    }
+    let n = d.count(16)?;
+    let mut gauges = Vec::with_capacity(n);
+    for _ in 0..n {
+        gauges.push((d.str_()?, d.f64()?));
+    }
+    let n = d.count(48)?;
+    let mut timers = Vec::with_capacity(n);
+    for _ in 0..n {
+        let name = d.str_()?;
+        let stats = get_timer_stats(d)?;
+        let m = d.count(16)?;
+        let mut sparse = Vec::with_capacity(m);
+        for _ in 0..m {
+            sparse.push((d.u64()?, d.u64()?));
+        }
+        timers.push((name, stats, sparse));
+    }
+    Ok(MetricsSnapshot { counters, gauges, timers })
+}
+
 /// Typed error frame a worker sends instead of closing the socket.
 #[derive(Clone, Debug)]
 pub struct RemoteError {
@@ -911,7 +1005,8 @@ impl fmt::Display for RemoteError {
 /// Every frame the λ-shard serving protocol speaks. The coordinator
 /// writes requests, the worker answers each with exactly one reply
 /// frame ([`Pong`](Message::Pong), [`DatasetKnown`](Message::DatasetKnown),
-/// [`ShardDone`](Message::ShardDone) or [`Error`](Message::Error)).
+/// [`ShardDone`](Message::ShardDone),
+/// [`StatsReply`](Message::StatsReply) or [`Error`](Message::Error)).
 //
 // The payload variants dwarf the heartbeat ones by design; messages are
 // built, encoded and dropped in one motion, so boxing them would only
@@ -921,7 +1016,8 @@ impl fmt::Display for RemoteError {
 pub enum Message {
     /// Heartbeat probe (echoed back as [`Pong`](Message::Pong)).
     Ping { seq: u64 },
-    Pong { seq: u64 },
+    /// Heartbeat echo, carrying the worker's [`WorkerSummary`] (v4).
+    Pong { seq: u64, summary: WorkerSummary },
     /// Does the worker hold this dataset?
     HasDataset { fingerprint: u64 },
     DatasetKnown { fingerprint: u64, known: bool },
@@ -933,6 +1029,12 @@ pub enum Message {
     ShardDone { result: PathResult, handoff: Option<DualHandoff> },
     /// Typed failure reply.
     Error(RemoteError),
+    /// Scrape the worker's whole metrics registry (v4); answered with
+    /// [`StatsReply`](Message::StatsReply).
+    StatsRequest,
+    /// The worker's registry snapshot — absolute totals, so a
+    /// coordinator merge overwrites rather than accumulates.
+    StatsReply(MetricsSnapshot),
 }
 
 const TAG_PING: u8 = 1;
@@ -943,6 +1045,8 @@ const TAG_SHIP_DATASET: u8 = 5;
 const TAG_SOLVE_SHARD: u8 = 6;
 const TAG_SHARD_DONE: u8 = 7;
 const TAG_ERROR: u8 = 8;
+const TAG_STATS_REQUEST: u8 = 9;
+const TAG_STATS_REPLY: u8 = 10;
 
 impl Message {
     fn tag(&self) -> u8 {
@@ -955,12 +1059,18 @@ impl Message {
             Message::SolveShard(_) => TAG_SOLVE_SHARD,
             Message::ShardDone { .. } => TAG_SHARD_DONE,
             Message::Error(_) => TAG_ERROR,
+            Message::StatsRequest => TAG_STATS_REQUEST,
+            Message::StatsReply(_) => TAG_STATS_REPLY,
         }
     }
 
     fn put_body(&self, e: &mut Enc) {
         match self {
-            Message::Ping { seq } | Message::Pong { seq } => e.u64(*seq),
+            Message::Ping { seq } => e.u64(*seq),
+            Message::Pong { seq, summary } => {
+                e.u64(*seq);
+                put_worker_summary(e, summary);
+            }
             Message::HasDataset { fingerprint } => e.u64(*fingerprint),
             Message::DatasetKnown { fingerprint, known } => {
                 e.u64(*fingerprint);
@@ -983,13 +1093,15 @@ impl Message {
                 e.u8(err.kind.tag());
                 e.str_(&err.detail);
             }
+            Message::StatsRequest => {}
+            Message::StatsReply(snap) => put_metrics_snapshot(e, snap),
         }
     }
 
     fn get_body(tag: u8, d: &mut Dec) -> Result<Message, WireError> {
         Ok(match tag {
             TAG_PING => Message::Ping { seq: d.u64()? },
-            TAG_PONG => Message::Pong { seq: d.u64()? },
+            TAG_PONG => Message::Pong { seq: d.u64()?, summary: get_worker_summary(d)? },
             TAG_HAS_DATASET => Message::HasDataset { fingerprint: d.u64()? },
             TAG_DATASET_KNOWN => {
                 Message::DatasetKnown { fingerprint: d.u64()?, known: d.bool()? }
@@ -1011,6 +1123,8 @@ impl Message {
                 kind: RemoteErrorKind::from_tag(d.u8()?)?,
                 detail: d.str_()?,
             }),
+            TAG_STATS_REQUEST => Message::StatsRequest,
+            TAG_STATS_REPLY => Message::StatsReply(get_metrics_snapshot(d)?),
             got => return Err(WireError::BadTag { got }),
         })
     }
@@ -1130,7 +1244,7 @@ impl Message {
         if hdr[0] != WIRE_VERSION {
             return Err(WireError::BadVersion { got: hdr[0] });
         }
-        if !(TAG_PING..=TAG_ERROR).contains(&hdr[1]) {
+        if !(TAG_PING..=TAG_STATS_REPLY).contains(&hdr[1]) {
             return Err(WireError::BadTag { got: hdr[1] });
         }
         // Read the payload in bounded chunks: a peer that *claims* a
@@ -1189,7 +1303,80 @@ mod tests {
             Message::Ping { seq } => assert_eq!(seq, 42),
             other => panic!("wrong variant {other:?}"),
         }
-        roundtrip(&Message::Pong { seq: u64::MAX });
+        let summary = WorkerSummary { in_flight: 3, solves: 1234, uptime_ticks: 99 };
+        match roundtrip(&Message::Pong { seq: u64::MAX, summary }) {
+            Message::Pong { seq, summary: s } => {
+                assert_eq!(seq, u64::MAX);
+                assert_eq!(s, summary);
+            }
+            other => panic!("wrong variant {other:?}"),
+        }
+    }
+
+    #[test]
+    fn stats_frames_roundtrip() {
+        match roundtrip(&Message::StatsRequest) {
+            Message::StatsRequest => {}
+            other => panic!("wrong variant {other:?}"),
+        }
+        let snap = MetricsSnapshot {
+            counters: vec![("solves".to_string(), 17), ("shards".to_string(), u64::MAX)],
+            gauges: vec![("in_flight".to_string(), 2.5), ("nan_gauge".to_string(), f64::NAN)],
+            timers: vec![(
+                "solve_s".to_string(),
+                TimerStats { count: 3, sum: 1.5, min: 0.25, max: 1.0 },
+                vec![(0, 1), (137, 2)],
+            )],
+        };
+        let back = roundtrip(&Message::StatsReply(snap.clone()));
+        let Message::StatsReply(rt) = back else { panic!("wrong variant") };
+        assert_eq!(rt.counters, snap.counters);
+        assert_eq!(rt.gauges[0], snap.gauges[0]);
+        assert!(rt.gauges[1].1.is_nan(), "NaN gauge survives by bits");
+        assert_eq!(rt.timers.len(), 1);
+        let (name, stats, sparse) = &rt.timers[0];
+        assert_eq!(name, "solve_s");
+        assert_eq!(stats.count, 3);
+        assert_eq!(sparse.len(), 2);
+        assert_eq!(sparse[0], (0, 1));
+        assert_eq!(sparse[1], (137, 2));
+        // Empty registry is a valid (minimal) reply.
+        roundtrip(&Message::StatsReply(MetricsSnapshot::default()));
+    }
+
+    #[test]
+    fn stats_reply_fuzz_never_panics() {
+        // Truncate a real StatsReply frame at every length: each cut is
+        // a typed error, never a panic or a bogus success.
+        let snap = MetricsSnapshot {
+            counters: vec![("a".to_string(), 1)],
+            gauges: vec![("g".to_string(), 0.5)],
+            timers: vec![(
+                "t".to_string(),
+                TimerStats { count: 1, sum: 0.1, min: 0.1, max: 0.1 },
+                vec![(4, 1)],
+            )],
+        };
+        let frame = Message::StatsReply(snap).encode();
+        for cut in 0..frame.len() {
+            assert!(Message::decode(&frame[..cut]).is_err(), "cut {cut} must not decode");
+        }
+        // Corrupt every byte of the body in turn: decode may succeed
+        // (some bytes are value payload) but must never panic, and a
+        // corrupted length prefix must stay typed.
+        for i in 4..frame.len() {
+            let mut bad = frame.clone();
+            bad[i] ^= 0xff;
+            let _ = Message::decode(&bad);
+        }
+        // A huge claimed element count must be rejected before allocation.
+        let mut huge = Message::StatsReply(MetricsSnapshot::default()).encode();
+        // Body layout: [len4][ver][tag][counters len u64]... — blow up the count.
+        huge[6..14].copy_from_slice(&u64::MAX.to_le_bytes());
+        assert!(matches!(
+            Message::decode(&huge),
+            Err(WireError::Truncated { .. } | WireError::Malformed(_))
+        ));
     }
 
     #[test]

@@ -1,0 +1,306 @@
+//! End-to-end observability tests (L6): the solve trace must bracket a
+//! real CD path correctly and export loadable Chrome trace-event JSON;
+//! toggling tracing must be bit-invisible to solver output; sampling must
+//! thin the gap-check instants; `render_text` must be line-clean
+//! Prometheus exposition; and a two-worker loopback fleet scrape must
+//! surface per-worker latency histograms in the coordinator registry.
+
+use sgl::coordinator::metrics::Metrics;
+use sgl::coordinator::remote::{FleetConfig, RemoteFleet, WorkerServer};
+use sgl::coordinator::service::AnyProblem;
+use sgl::coordinator::shard::{solve_batch_interleaved, InterleavedJob};
+use sgl::data::synthetic::{generate, SyntheticConfig};
+use sgl::screening::RuleKind;
+use sgl::solver::cd::SolveOptions;
+use sgl::solver::path::{solve_path_with, PathOptions};
+use sgl::solver::problem::{lambda_grid, SglProblem};
+use sgl::solver::SolverKind;
+use sgl::util::trace::{self, Phase};
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex, MutexGuard};
+use std::time::Duration;
+
+/// The trace collector is process-global: serialize every test that
+/// enables it or runs solves (instrumented sites) so parallel tests in
+/// this binary can't interleave events or toggle it under each other.
+fn trace_lock() -> MutexGuard<'static, ()> {
+    static LOCK: Mutex<()> = Mutex::new(());
+    LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// Planted-sparse instance with unit-norm `y` (same shape as the fleet
+/// suite: small enough for debug-profile paths, sparse enough to screen).
+fn planted(seed: u64) -> Arc<SglProblem> {
+    let cfg = SyntheticConfig {
+        n: 60,
+        n_groups: 30,
+        group_size: 4,
+        gamma1: 5,
+        gamma2: 2,
+        seed,
+        ..Default::default()
+    };
+    let d = generate(&cfg);
+    let y_norm = d.dataset.y.iter().map(|v| v * v).sum::<f64>().sqrt().max(1e-300);
+    let y: Vec<f64> = d.dataset.y.iter().map(|v| v / y_norm).collect();
+    Arc::new(SglProblem::new(d.dataset.x, y, d.dataset.groups, 0.2))
+}
+
+fn path_opts(rule: RuleKind, tol: f64, t_count: usize) -> PathOptions {
+    PathOptions {
+        delta: 1.0,
+        t_count,
+        solve: SolveOptions {
+            rule,
+            tol,
+            max_epochs: 500_000,
+            record_history: false,
+            ..Default::default()
+        },
+    }
+}
+
+#[test]
+fn traced_cd_path_exports_balanced_chrome_json() {
+    let _g = trace_lock();
+    trace::clear();
+    trace::enable(1);
+    let pb = planted(11);
+    let opts = path_opts(RuleKind::GapSafe, 1e-8, 6);
+    let lambdas = lambda_grid(pb.lambda_max(), opts.delta, opts.t_count);
+    let res = solve_path_with(pb.as_ref(), &lambdas, &opts, SolverKind::Cd);
+    trace::disable();
+    let events = trace::drain();
+    assert!(res.all_converged());
+
+    // Span brackets balance per thread in LIFO order, and every
+    // gap_check instant fires inside an open "solve" span with the full
+    // argument set the dashboards key on.
+    let mut stacks: HashMap<u64, Vec<&str>> = HashMap::new();
+    let mut gap_checks = 0usize;
+    let mut solves = 0usize;
+    for e in &events {
+        let stack = stacks.entry(e.tid).or_default();
+        match e.phase {
+            Phase::Begin => {
+                if e.name == "solve" {
+                    solves += 1;
+                }
+                stack.push(e.name);
+            }
+            Phase::End => {
+                assert_eq!(stack.pop(), Some(e.name), "unbalanced span {:?}", e.name);
+            }
+            Phase::Instant => {
+                if e.name != "gap_check" {
+                    continue;
+                }
+                gap_checks += 1;
+                assert!(stack.contains(&"solve"), "gap_check outside a solve span");
+                let keys: Vec<&str> = e.args.iter().map(|(k, _)| *k).collect();
+                for k in [
+                    "lambda",
+                    "epoch",
+                    "gap",
+                    "screened",
+                    "active_features",
+                    "active_groups",
+                    "rule",
+                    "datafit",
+                    "kernel",
+                ] {
+                    assert!(keys.contains(&k), "gap_check missing arg {k:?}: {keys:?}");
+                }
+            }
+        }
+    }
+    for (tid, stack) in &stacks {
+        assert!(stack.is_empty(), "tid {tid} left open spans {stack:?}");
+    }
+    assert_eq!(solves, lambdas.len(), "one solve span per grid point");
+    assert!(gap_checks >= lambdas.len(), "every solve gap-checks at least once");
+    let path_brackets = events.iter().filter(|e| e.name == "solve_path").count();
+    assert_eq!(path_brackets, 2, "solve_path opens and closes exactly once");
+
+    // The export is the Chrome trace-event document Perfetto loads:
+    // one object, a traceEvents array, B/E/i phases.
+    let dump = trace::chrome_trace(&events).dump();
+    assert!(dump.starts_with("{\"traceEvents\":["), "{}", &dump[..40.min(dump.len())]);
+    assert!(dump.ends_with("\"displayTimeUnit\":\"ms\"}"));
+    for needle in ["\"ph\":\"B\"", "\"ph\":\"E\"", "\"ph\":\"i\"", "\"name\":\"gap_check\""] {
+        assert!(dump.contains(needle), "export missing {needle}");
+    }
+}
+
+#[test]
+fn tracing_toggle_is_bit_invisible_to_solver_output() {
+    let _g = trace_lock();
+    trace::disable();
+    trace::clear();
+    let pb = planted(12);
+    let opts = path_opts(RuleKind::GapSafeSeq, 1e-8, 6);
+    let lambdas = lambda_grid(pb.lambda_max(), opts.delta, opts.t_count);
+    let off = solve_path_with(pb.as_ref(), &lambdas, &opts, SolverKind::Cd);
+    trace::enable(1);
+    let on = solve_path_with(pb.as_ref(), &lambdas, &opts, SolverKind::Cd);
+    trace::disable();
+    trace::clear();
+    assert_eq!(off.lambdas, on.lambdas);
+    for (t, (a, b)) in off.results.iter().zip(&on.results).enumerate() {
+        let ab: Vec<u64> = a.beta.iter().map(|v| v.to_bits()).collect();
+        let bb: Vec<u64> = b.beta.iter().map(|v| v.to_bits()).collect();
+        assert_eq!(ab, bb, "t={t}: beta bits diverged with tracing on");
+        assert_eq!(a.epochs, b.epochs, "t={t}: epoch count diverged");
+        assert_eq!(a.gap.to_bits(), b.gap.to_bits(), "t={t}: terminal gap diverged");
+        assert_eq!(a.active.feature, b.active.feature, "t={t}: screening diverged");
+    }
+}
+
+#[test]
+fn trace_sampling_thins_gap_check_instants() {
+    let _g = trace_lock();
+    let pb = planted(13);
+    let opts = path_opts(RuleKind::GapSafe, 1e-10, 4);
+    let lambdas = lambda_grid(pb.lambda_max(), opts.delta, opts.t_count);
+    let count = |sample: u64| {
+        trace::clear();
+        trace::enable(sample);
+        let _ = solve_path_with(pb.as_ref(), &lambdas, &opts, SolverKind::Cd);
+        trace::disable();
+        trace::drain().iter().filter(|e| e.name == "gap_check").count()
+    };
+    let every = count(1);
+    let fourth = count(4);
+    trace::clear();
+    assert!(every > lambdas.len(), "tight path should gap-check often, got {every}");
+    assert!(fourth < every, "sampling must thin instants: {fourth} vs {every}");
+    // The first check of every solve has sequence number 0, which every
+    // sampling divisor records — no solve goes dark.
+    assert!(fourth >= lambdas.len(), "{fourth} solves went dark under sampling");
+}
+
+fn assert_prometheus_name(name: &str) {
+    let mut chars = name.chars();
+    let c0 = chars.next().expect("empty metric name");
+    assert!(c0.is_ascii_alphabetic() || c0 == '_' || c0 == ':', "bad first char in {name:?}");
+    for c in chars {
+        assert!(c.is_ascii_alphanumeric() || c == '_' || c == ':', "bad char in {name:?}");
+    }
+}
+
+#[test]
+fn render_text_is_prometheus_line_format() {
+    let m = Metrics::new();
+    m.incr("solves total", 3); // space → underscore
+    m.incr("9lives", 1); // leading digit → prefixed
+    m.set("queue.depth", 4.5); // dot → underscore
+    for i in 1..=200 {
+        m.observe_secs("shard solve-s", i as f64 * 1e-3);
+    }
+    let text = m.render_text();
+    let (mut samples, mut types) = (0usize, 0usize);
+    for line in text.lines() {
+        if let Some(rest) = line.strip_prefix("# TYPE ") {
+            let mut it = rest.split_whitespace();
+            let name = it.next().expect("TYPE line has a name");
+            let kind = it.next().expect("TYPE line has a kind");
+            assert!(matches!(kind, "counter" | "gauge" | "summary"), "{line}");
+            assert_eq!(it.next(), None, "trailing tokens in {line:?}");
+            assert_prometheus_name(name);
+            types += 1;
+            continue;
+        }
+        let mut it = line.split_whitespace();
+        let name = it.next().expect("sample line has a name");
+        let value = it.next().expect("sample line has a value");
+        assert_eq!(it.next(), None, "trailing tokens in {line:?}");
+        assert_prometheus_name(name);
+        value.parse::<f64>().unwrap_or_else(|_| panic!("unparseable value in {line:?}"));
+        samples += 1;
+    }
+    assert_eq!(types, 4, "one TYPE comment per metric family:\n{text}");
+    assert_eq!(samples, 2 + 1 + 8, "counter + gauge + summary series:\n{text}");
+    assert!(text.contains("solves_total 3\n"));
+    assert!(text.contains("_9lives 1\n"));
+    assert!(text.contains("queue_depth 4.5\n"));
+    assert!(text.contains("# TYPE shard_solve_s summary\n"));
+    assert!(text.contains("shard_solve_s_p95 "));
+
+    // Quantiles of 1..=200 ms sit near the exact order statistics — the
+    // log-bucket histogram is 2^(1/4)-granular, so within ~19% relative.
+    let p50 = m.timer_quantile("shard solve-s", 0.50).unwrap();
+    let p95 = m.timer_quantile("shard solve-s", 0.95).unwrap();
+    let p99 = m.timer_quantile("shard solve-s", 0.99).unwrap();
+    assert!(p50 <= p95 && p95 <= p99, "quantiles out of order: {p50} {p95} {p99}");
+    assert!((0.07..=0.14).contains(&p50), "p50 {p50} far from 0.100");
+    assert!((0.14..=0.25).contains(&p95), "p95 {p95} far from 0.190");
+    assert!((0.15..=0.26).contains(&p99), "p99 {p99} far from 0.198");
+}
+
+#[test]
+fn two_worker_fleet_scrape_surfaces_per_worker_histograms() {
+    // Fleet workers run real (instrumented) solves — hold the trace lock
+    // so a concurrently-enabled collector never sees their events.
+    let _g = trace_lock();
+    let metrics = Arc::new(Metrics::new());
+    let servers: Vec<WorkerServer> =
+        (0..2).map(|_| WorkerServer::bind("127.0.0.1:0").expect("bind worker")).collect();
+    let addrs: Vec<String> = servers.iter().map(|s| s.local_addr().to_string()).collect();
+    let fleet = Arc::new(
+        RemoteFleet::connect(&addrs, FleetConfig::default(), metrics.clone())
+            .expect("connect fleet"),
+    );
+
+    let pb = planted(14);
+    let jobs: Vec<InterleavedJob> = (0..2)
+        .map(|i| InterleavedJob {
+            pb: AnyProblem::Dense(pb.clone()),
+            lambdas: lambda_grid(pb.lambda_max(), 1.0, 4),
+            opts: path_opts(RuleKind::GapSafeSeq, 1e-8, 4),
+            solver: SolverKind::Cd,
+            shards: 2,
+            label: format!("job{i}"),
+        })
+        .collect();
+    let out = solve_batch_interleaved(&jobs, 2, |job, grid, h| {
+        fleet.solve_shard(&job.pb, grid, &job.opts, job.solver, h)
+    });
+    for (job, got) in jobs.iter().zip(&out) {
+        got.as_ref().unwrap_or_else(|e| panic!("{} failed: {e:#}", job.label));
+    }
+
+    // Both workers answer the scrape; their registries land under
+    // worker_<i>_ prefixes and the shard totals add up exactly.
+    assert_eq!(fleet.scrape(Duration::from_secs(5)), 2);
+    let solved: u64 =
+        (0..2).map(|i| metrics.counter(&format!("worker_{i}_worker_shards_solved"))).sum();
+    assert_eq!(solved, 4, "every shard accounted to exactly one worker");
+    let text = metrics.render_text();
+    for i in 0..2 {
+        let gauge = format!("worker_{i}_worker_in_flight 0\n");
+        assert!(text.contains(&gauge), "missing {gauge:?} in:\n{text}");
+    }
+    // Worker 0 demonstrably solved (least-loaded dispatch tries it
+    // first): its latency histogram surfaces quantiles end to end, in
+    // the text exposition and the JSON dump alike.
+    let p50 = metrics.timer_quantile("worker_0_worker_shard_solve_s", 0.50).unwrap();
+    let p99 = metrics.timer_quantile("worker_0_worker_shard_solve_s", 0.99).unwrap();
+    assert!(p50 > 0.0 && p50 <= p99, "degenerate scraped quantiles {p50} {p99}");
+    assert!(text.contains("worker_0_worker_shard_solve_s_p95 "));
+    assert!(metrics.to_json().dump().contains("worker_0_worker_shard_solve_s_p99"));
+
+    // Heartbeats carry live summaries: both workers idle-alive.
+    let beats = fleet.heartbeat(Duration::from_secs(5));
+    assert_eq!(beats.len(), 2);
+    for (addr, state) in &beats {
+        let s = state.summary().unwrap_or_else(|| panic!("{addr} not idle-alive"));
+        assert_eq!(s.in_flight, 0, "{addr} still mid-shard");
+    }
+    assert_eq!(beats.iter().map(|(_, s)| s.summary().unwrap().solves).sum::<u64>(), 4);
+
+    // Re-scraping overwrites absolute totals — never double-counts.
+    assert_eq!(fleet.scrape(Duration::from_secs(5)), 2);
+    let resolved: u64 =
+        (0..2).map(|i| metrics.counter(&format!("worker_{i}_worker_shards_solved"))).sum();
+    assert_eq!(resolved, 4, "re-scrape must not double-count");
+}

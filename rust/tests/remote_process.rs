@@ -70,7 +70,7 @@ fn two_worker_processes_serve_a_mixed_batch_bit_identically() {
         .expect("connect to worker processes");
     assert_eq!(fleet.capacity(), 2);
     let alive = fleet.heartbeat(Duration::from_secs(10));
-    assert!(alive.iter().all(|(_, up)| *up), "{alive:?}");
+    assert!(alive.iter().all(|(_, up)| up.is_alive()), "{alive:?}");
 
     let cfg = SyntheticConfig {
         n: 50,

@@ -16,9 +16,10 @@ use sgl::solver::path::{DualHandoff, PathOptions, PathResult};
 use sgl::solver::sweep::{SweepMode, SweepTuning};
 use sgl::solver::SolverKind;
 use sgl::util::proptest::{check, forall, Gen};
+use sgl::coordinator::metrics::{MetricsSnapshot, TimerStats};
 use sgl::util::wire::{
     Message, ProblemPayload, RemoteError, RemoteErrorKind, ShardRequest, WireDatafit,
-    WireDataset, WireDesign, WireError, WIRE_VERSION,
+    WireDataset, WireDesign, WireError, WorkerSummary, WIRE_VERSION,
 };
 
 // ---------------------------------------------------------------------------
@@ -189,10 +190,48 @@ fn gen_dataset(g: &mut Gen) -> WireDataset {
     }
 }
 
+fn gen_worker_summary(g: &mut Gen) -> WorkerSummary {
+    WorkerSummary {
+        in_flight: g.rng().next_u64(),
+        solves: g.rng().next_u64(),
+        uptime_ticks: g.rng().next_u64(),
+    }
+}
+
+/// Snapshots mix empty registries, edgy gauge floats, and sparse
+/// histogram pairs at the index extremes.
+fn gen_snapshot_msg(g: &mut Gen) -> MetricsSnapshot {
+    let n_counters = g.usize_in(0..4);
+    let n_gauges = g.usize_in(0..4);
+    let n_timers = g.usize_in(0..3);
+    MetricsSnapshot {
+        counters: (0..n_counters)
+            .map(|i| (format!("counter_{i}"), g.rng().next_u64()))
+            .collect(),
+        gauges: (0..n_gauges).map(|i| (format!("gauge_{i}"), edgy_f64(g))).collect(),
+        timers: (0..n_timers)
+            .map(|i| {
+                let stats = TimerStats {
+                    count: g.rng().next_u64(),
+                    sum: edgy_f64(g),
+                    min: edgy_f64(g),
+                    max: edgy_f64(g),
+                };
+                let sparse: Vec<(u64, u64)> = (0..g.usize_in(0..4))
+                    .map(|_| (g.rng().next_u64() % 200, g.rng().next_u64()))
+                    .collect();
+                (format!("timer_{i}"), stats, sparse)
+            })
+            .collect(),
+    }
+}
+
 fn gen_message(g: &mut Gen) -> Message {
-    match g.usize_in(0..8) {
+    match g.usize_in(0..10) {
         0 => Message::Ping { seq: g.rng().next_u64() },
-        1 => Message::Pong { seq: g.rng().next_u64() },
+        1 => Message::Pong { seq: g.rng().next_u64(), summary: gen_worker_summary(g) },
+        8 => Message::StatsRequest,
+        9 => Message::StatsReply(gen_snapshot_msg(g)),
         2 => Message::HasDataset { fingerprint: g.rng().next_u64() },
         3 => Message::DatasetKnown { fingerprint: g.rng().next_u64(), known: g.bool() },
         4 => Message::ShipDataset(gen_dataset(g)),
@@ -320,7 +359,7 @@ fn truncated_frames_are_typed_errors_never_panics() {
 fn bad_version_and_bad_tag_are_typed_errors() {
     forall("wire-bad-header", 100, |g| {
         let mut frame = gen_message(g).encode();
-        let v = (g.usize_in(4..250)) as u8; // never WIRE_VERSION (= 3)
+        let v = (g.usize_in(5..250)) as u8; // never WIRE_VERSION (= 4)
         frame[4] = v;
         match Message::decode(&frame) {
             Err(WireError::BadVersion { got }) => check(got == v, "version echoed")?,

@@ -27,11 +27,13 @@
 //! on a multi-core host, the parallel sweep must win wall-clock.
 
 use sgl::data::sparse::{self, SparseSyntheticConfig};
-use sgl::data::synthetic::{generate, SyntheticConfig};
+use sgl::data::synthetic::{generate, generate_multitask, SyntheticConfig};
 use sgl::linalg::Design;
+use sgl::norms::block::omega_rows;
 use sgl::norms::sgl::omega;
 use sgl::screening::RuleKind;
 use sgl::solver::cd::SolveOptions;
+use sgl::solver::datafit::MultiTaskQuadratic;
 use sgl::solver::path::{solve_path_on_grid, PathBatch, PathBatchJob, PathOptions};
 use sgl::solver::problem::{lambda_grid, SglProblem};
 use sgl::solver::sweep::SweepMode;
@@ -160,6 +162,7 @@ fn main() {
         .with("per_job", Json::Arr(jobs_json));
     let backends_json = bench_backends(paper);
     let latency_json = bench_single_path_latency(paper);
+    let multitask_json = bench_multitask(paper);
 
     // Machine-readable summary next to the printed report, for tracking
     // bench results across commits.
@@ -168,9 +171,132 @@ fn main() {
         .with("scale", if paper { "paper" } else { "small" })
         .with("path_batch", batch_json)
         .with("backends", backends_json)
-        .with("single_path_latency", latency_json);
+        .with("single_path_latency", latency_json)
+        .with("multitask", multitask_json);
     std::fs::write("BENCH_path_batch.json", out.pretty()).expect("write bench json");
     println!("\nwrote BENCH_path_batch.json");
+}
+
+/// Multi-task paths (`datafit=multitask`): the q-column quadratic
+/// workload — GAP-safe screening vs the unscreened baseline on one
+/// grid (objectives must agree), then the batch engine on matrix-valued
+/// jobs (threading must stay bit-identical).
+fn bench_multitask(paper: bool) -> Json {
+    let q = if paper { 8 } else { 4 };
+    let cfg = SyntheticConfig {
+        n: 100,
+        n_groups: if paper { 500 } else { 150 },
+        group_size: 10,
+        gamma1: 10,
+        gamma2: 4,
+        seed: 77,
+        ..Default::default()
+    };
+    let d = generate_multitask(&cfg, q);
+    // Unit-norm Y (all q columns jointly) so the 1e-7 agreement budget
+    // is absolute, matching the scalar sections.
+    let y_norm = d.dataset.y.iter().map(|v| v * v).sum::<f64>().sqrt().max(1e-300);
+    let y: Vec<f64> = d.dataset.y.iter().map(|v| v / y_norm).collect();
+    let weights = d.dataset.groups.sqrt_size_weights();
+    let pb = Arc::new(SglProblem::with_datafit(
+        d.dataset.x,
+        y,
+        d.dataset.groups,
+        0.2,
+        weights,
+        MultiTaskQuadratic::new(q),
+    ));
+    let t_count = if paper { 60 } else { 30 };
+    let lambdas = lambda_grid(pb.lambda_max(), 2.0, t_count);
+    println!(
+        "\n== multi-task paths (datafit=multitask): n={}, p={}, q={q}, T={t_count} ==",
+        pb.n(),
+        pb.p()
+    );
+
+    let opts = |rule| PathOptions {
+        delta: 2.0,
+        t_count,
+        solve: SolveOptions { rule, tol: 1e-8, record_history: false, ..Default::default() },
+    };
+    let sw = Stopwatch::start();
+    let base = solve_path_on_grid(pb.as_ref(), &lambdas, &opts(RuleKind::None));
+    let t_none = sw.elapsed_s();
+    let sw = Stopwatch::start();
+    let screened = solve_path_on_grid(pb.as_ref(), &lambdas, &opts(RuleKind::GapSafeSeq));
+    let t_gap = sw.elapsed_s();
+    assert!(base.all_converged(), "unscreened multi-task path failed to converge");
+    assert!(screened.all_converged(), "screened multi-task path failed to converge");
+
+    // ½‖Y − XB‖_F² + λΩ(B) over the task-major response and
+    // feature-major coefficients.
+    let objective = |lambda: f64, beta: &[f64]| {
+        let n = pb.n();
+        let mut r2 = 0.0;
+        for t in 0..q {
+            let bt: Vec<f64> = (0..pb.p()).map(|j| beta[j * q + t]).collect();
+            let xb = pb.x.matvec(&bt);
+            r2 += pb.y[t * n..(t + 1) * n]
+                .iter()
+                .zip(&xb)
+                .map(|(yi, v)| (yi - v) * (yi - v))
+                .sum::<f64>();
+        }
+        0.5 * r2 + lambda * omega_rows(beta, q, &pb.groups, pb.tau, &pb.weights)
+    };
+    let mut max_div = 0.0_f64;
+    for (i, &lambda) in lambdas.iter().enumerate() {
+        let a = objective(lambda, &base.results[i].beta);
+        let b = objective(lambda, &screened.results[i].beta);
+        max_div = max_div.max((a - b).abs());
+    }
+    println!("unscreened path   (T={t_count} @1e-8): {t_none:>8.3}s");
+    println!(
+        "gap_safe_seq path (T={t_count} @1e-8): {t_gap:>8.3}s  ({:.2}x speedup)",
+        t_none / t_gap.max(1e-12)
+    );
+    println!("max objective divergence none vs gap_safe_seq: {max_div:.2e}");
+    assert!(max_div <= 1e-7, "screening changed the multi-task answer: {max_div:.2e}");
+
+    let mut batch = PathBatch::new();
+    for rule in [RuleKind::GapSafe, RuleKind::GapSafeSeq] {
+        batch.push(PathBatchJob {
+            pb: pb.clone(),
+            lambdas: Some(lambdas.clone()),
+            opts: opts(rule),
+            tau_override: None,
+            label: format!("{}@mt{q}", rule.name()),
+        });
+    }
+    let threads = default_threads().max(2);
+    let sw = Stopwatch::start();
+    let serial = batch.run(1);
+    let t_serial = sw.elapsed_s();
+    let sw = Stopwatch::start();
+    let threaded = batch.run(threads);
+    let t_threaded = sw.elapsed_s();
+    let mut identical = true;
+    for (a, b) in serial.iter().zip(&threaded) {
+        for (ra, rb) in a.results.iter().zip(&b.results) {
+            identical &= ra.beta == rb.beta;
+        }
+    }
+    println!(
+        "multi-task batch: serial {t_serial:.3}s vs threaded {t_threaded:.3}s \
+         (threads={threads}), bit-identical: {identical}"
+    );
+    assert!(identical, "threading changed multi-task solver output");
+
+    Json::obj()
+        .with("datafit", "multitask")
+        .with("tasks", q)
+        .with("p", pb.p())
+        .with("none_s", t_none)
+        .with("gap_safe_seq_s", t_gap)
+        .with("max_objective_divergence", max_div)
+        .with("batch_serial_s", t_serial)
+        .with("batch_threaded_s", t_threaded)
+        .with("bit_identical", identical)
 }
 
 /// Dense vs CSC on a ~1%-density design: same data, same λ-grid, same

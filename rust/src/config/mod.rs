@@ -88,8 +88,12 @@ pub struct RunConfig {
     /// Inner solver (`[solver] algo = "cd" | "ista" | "fista"`).
     pub algo: SolverKind,
     /// Loss the path is fit under
-    /// (`[solver] datafit = "quadratic" | "logistic"`).
+    /// (`[solver] datafit = "quadratic" | "logistic" | "multitask"`).
     pub datafit: FitKind,
+    /// Response columns `q` for the multi-task datafit (`[solver] tasks`
+    /// / `--tasks`). Must be 1 unless `datafit = "multitask"`; the q = 1
+    /// multi-task run is bit-identical to the scalar quadratic one.
+    pub tasks: usize,
     pub tau: f64,
     pub tol: f64,
     pub fce: usize,
@@ -181,6 +185,7 @@ impl Default for RunConfig {
             design: DesignBackend::Dense,
             algo: SolverKind::Cd,
             datafit: FitKind::Quadratic,
+            tasks: 1,
             tau: 0.2,
             tol: 1e-8,
             fce: 10,
@@ -300,6 +305,7 @@ impl RunConfig {
                 }
             };
         }
+        take!(tasks, "solver", "tasks", usize);
         take!(tau, "solver", "tau", f64);
         take!(tol, "solver", "tol", f64);
         take!(fce, "solver", "fce", usize);
@@ -346,8 +352,9 @@ impl RunConfig {
                 .with_context(|| format!("unknown screening rule {rule:?}"))?;
         }
         if let Some(df) = doc.get_str("solver", "datafit") {
-            cfg.datafit = FitKind::from_name(&df)
-                .with_context(|| format!("unknown datafit {df:?} (quadratic|logistic)"))?;
+            cfg.datafit = FitKind::from_name(&df).with_context(|| {
+                format!("unknown datafit {df:?} (quadratic|logistic|multitask)")
+            })?;
         }
         if let Some(sweep) = doc.get_str("solver", "sweep") {
             cfg.sweep = SweepMode::from_name(&sweep)
@@ -397,6 +404,18 @@ impl RunConfig {
                 "screening rule {:?} is least-squares only; logistic runs take \
                  none|gap_safe|gap_safe_seq",
                 self.rule.name()
+            );
+        }
+        if self.tasks == 0 {
+            bail!("tasks must be >= 1");
+        }
+        // A widened response needs the matrix-valued datafit; a scalar
+        // loss silently reading a task-major y would misalign the rows.
+        if self.tasks > 1 && self.datafit != FitKind::MultiTask {
+            bail!(
+                "tasks = {} requires datafit = \"multitask\" (got {:?})",
+                self.tasks,
+                self.datafit.name()
             );
         }
         if self.service_queue_depth == 0 {
@@ -586,6 +605,33 @@ rho = 0.9
             assert!(format!("{err:#}").contains("least-squares only"), "{rule}: {err:#}");
         }
         assert!(RunConfig::from_toml_str("[solver]\ndatafit = \"poisson\"\n").is_err());
+    }
+
+    #[test]
+    fn parses_multitask_datafit_and_tasks() {
+        let c = RunConfig::from_toml_str("[solver]\ndatafit = \"multitask\"\ntasks = 4\n")
+            .unwrap();
+        assert_eq!(c.datafit, FitKind::MultiTask);
+        assert_eq!(c.tasks, 4);
+        // q = 1 multi-task is valid (the bit-identity configuration), and
+        // the scalar default stays tasks = 1.
+        let one = RunConfig::from_toml_str("[solver]\ndatafit = \"multitask\"\n").unwrap();
+        assert_eq!(one.tasks, 1);
+        assert_eq!(RunConfig::default().tasks, 1);
+        // The multi-task dual geometry is quadratic, so every rule is
+        // admissible — unlike logistic.
+        for rule in ["none", "static", "dynamic", "dst3", "gap_safe", "gap_safe_seq"] {
+            let text =
+                format!("[solver]\ndatafit = \"multitask\"\ntasks = 2\nrule = \"{rule}\"\n");
+            assert!(RunConfig::from_toml_str(&text).is_ok(), "{rule}");
+        }
+        // A widened response without the multi-task datafit is rejected.
+        for df in ["quadratic", "logistic"] {
+            let text = format!("[solver]\ndatafit = \"{df}\"\ntasks = 3\n");
+            let err = RunConfig::from_toml_str(&text).unwrap_err();
+            assert!(format!("{err:#}").contains("multitask"), "{df}: {err:#}");
+        }
+        assert!(RunConfig::from_toml_str("[solver]\ntasks = 0\n").is_err());
     }
 
     #[test]

@@ -288,6 +288,12 @@ fn handle_request(
                         ProblemPayload::CscLogistic(p) => {
                             AnyProblem::CscLogistic(Arc::new(p))
                         }
+                        ProblemPayload::DenseMultiTask(p) => {
+                            AnyProblem::DenseMultiTask(Arc::new(p))
+                        }
+                        ProblemPayload::CscMultiTask(p) => {
+                            AnyProblem::CscMultiTask(Arc::new(p))
+                        }
                     };
                     store.lock().unwrap().insert(fingerprint, pb);
                     shared.metrics.incr("worker_datasets_stored", 1);
@@ -412,6 +418,8 @@ fn wire_dataset(pb: &AnyProblem) -> WireDataset {
         AnyProblem::Csc(p) => WireDataset::from_csc(p),
         AnyProblem::DenseLogistic(p) => WireDataset::from_dense(p),
         AnyProblem::CscLogistic(p) => WireDataset::from_csc(p),
+        AnyProblem::DenseMultiTask(p) => WireDataset::from_dense(p),
+        AnyProblem::CscMultiTask(p) => WireDataset::from_csc(p),
     }
 }
 
@@ -423,6 +431,8 @@ fn wire_datafit(pb: &AnyProblem) -> WireDatafit {
         AnyProblem::Csc(p) => WireDatafit::of(&p.datafit),
         AnyProblem::DenseLogistic(p) => WireDatafit::of(&p.datafit),
         AnyProblem::CscLogistic(p) => WireDatafit::of(&p.datafit),
+        AnyProblem::DenseMultiTask(p) => WireDatafit::of(&p.datafit),
+        AnyProblem::CscMultiTask(p) => WireDatafit::of(&p.datafit),
     }
 }
 

@@ -37,7 +37,7 @@ use super::metrics::Metrics;
 use super::remote::RemoteFleet;
 use super::shard::{plan_shards, stitch};
 use crate::linalg::{CscMatrix, Matrix};
-use crate::solver::datafit::{FitKind, Logistic};
+use crate::solver::datafit::{Datafit, FitKind, Logistic, MultiTaskQuadratic};
 use crate::solver::path::{
     solve_path_with_handoff, DualHandoff, PathOptions, PathResult,
 };
@@ -96,13 +96,19 @@ pub enum AnyProblem {
     Csc(Arc<SglProblem<CscMatrix>>),
     DenseLogistic(Arc<SglProblem<Matrix, Logistic>>),
     CscLogistic(Arc<SglProblem<CscMatrix, Logistic>>),
+    DenseMultiTask(Arc<SglProblem<Matrix, MultiTaskQuadratic>>),
+    CscMultiTask(Arc<SglProblem<CscMatrix, MultiTaskQuadratic>>),
 }
 
 impl AnyProblem {
     pub fn backend_name(&self) -> &'static str {
         match self {
-            AnyProblem::Dense(_) | AnyProblem::DenseLogistic(_) => "dense",
-            AnyProblem::Csc(_) | AnyProblem::CscLogistic(_) => "csc",
+            AnyProblem::Dense(_)
+            | AnyProblem::DenseLogistic(_)
+            | AnyProblem::DenseMultiTask(_) => "dense",
+            AnyProblem::Csc(_) | AnyProblem::CscLogistic(_) | AnyProblem::CscMultiTask(_) => {
+                "csc"
+            }
         }
     }
 
@@ -111,6 +117,16 @@ impl AnyProblem {
         match self {
             AnyProblem::Dense(_) | AnyProblem::Csc(_) => FitKind::Quadratic,
             AnyProblem::DenseLogistic(_) | AnyProblem::CscLogistic(_) => FitKind::Logistic,
+            AnyProblem::DenseMultiTask(_) | AnyProblem::CscMultiTask(_) => FitKind::MultiTask,
+        }
+    }
+
+    /// Number of response columns `q` (1 for every scalar datafit).
+    pub fn tasks(&self) -> usize {
+        match self {
+            AnyProblem::DenseMultiTask(p) => p.datafit.tasks(),
+            AnyProblem::CscMultiTask(p) => p.datafit.tasks(),
+            _ => 1,
         }
     }
 
@@ -120,6 +136,8 @@ impl AnyProblem {
             AnyProblem::Csc(p) => p.n(),
             AnyProblem::DenseLogistic(p) => p.n(),
             AnyProblem::CscLogistic(p) => p.n(),
+            AnyProblem::DenseMultiTask(p) => p.n(),
+            AnyProblem::CscMultiTask(p) => p.n(),
         }
     }
 
@@ -129,6 +147,8 @@ impl AnyProblem {
             AnyProblem::Csc(p) => p.p(),
             AnyProblem::DenseLogistic(p) => p.p(),
             AnyProblem::CscLogistic(p) => p.p(),
+            AnyProblem::DenseMultiTask(p) => p.p(),
+            AnyProblem::CscMultiTask(p) => p.p(),
         }
     }
 
@@ -140,6 +160,8 @@ impl AnyProblem {
             AnyProblem::Csc(p) => p.lambda_max(),
             AnyProblem::DenseLogistic(p) => p.lambda_max(),
             AnyProblem::CscLogistic(p) => p.lambda_max(),
+            AnyProblem::DenseMultiTask(p) => p.lambda_max(),
+            AnyProblem::CscMultiTask(p) => p.lambda_max(),
         }
     }
 
@@ -155,6 +177,8 @@ impl AnyProblem {
             AnyProblem::Csc(p) => (1, Arc::as_ptr(p) as *const u8 as usize),
             AnyProblem::DenseLogistic(p) => (2, Arc::as_ptr(p) as usize),
             AnyProblem::CscLogistic(p) => (3, Arc::as_ptr(p) as *const u8 as usize),
+            AnyProblem::DenseMultiTask(p) => (4, Arc::as_ptr(p) as usize),
+            AnyProblem::CscMultiTask(p) => (5, Arc::as_ptr(p) as *const u8 as usize),
         }
     }
 
@@ -177,6 +201,12 @@ impl AnyProblem {
                 solve_path_with_handoff(p, lambdas, opts, solver, handoff)
             }
             AnyProblem::CscLogistic(p) => {
+                solve_path_with_handoff(p, lambdas, opts, solver, handoff)
+            }
+            AnyProblem::DenseMultiTask(p) => {
+                solve_path_with_handoff(p, lambdas, opts, solver, handoff)
+            }
+            AnyProblem::CscMultiTask(p) => {
                 solve_path_with_handoff(p, lambdas, opts, solver, handoff)
             }
         }

@@ -124,6 +124,81 @@ pub fn generate(cfg: &SyntheticConfig) -> SyntheticData {
     }
 }
 
+/// Generated multi-response dataset plus its planted ground truth.
+///
+/// `dataset.y` holds `n · tasks` entries **task-major** (task `t` owns
+/// `y[t·n .. (t+1)·n]`), matching the solver's multi-task state layout;
+/// `beta_true` is **feature-major** `p · tasks` (feature `j`'s row is
+/// `beta_true[j·q .. (j+1)·q]`), matching the coefficient layout.
+#[derive(Clone, Debug)]
+pub struct MultiTaskSyntheticData {
+    pub dataset: Dataset,
+    pub tasks: usize,
+    pub beta_true: Vec<f64>,
+    /// Planted active groups per task.
+    pub active_groups_true: Vec<Vec<usize>>,
+}
+
+/// Generate the §7.1 design with `tasks` independent planted responses:
+/// one shared `X`, per-task group-sparse coefficients drawn from the same
+/// distribution on separate deterministic streams, `y_t = X β_t + noise·ε`.
+///
+/// Task 0 is produced by [`generate`] itself, so at `tasks = 1` the
+/// dataset (`X`, `y`, groups) is bit-identical to the scalar generator's —
+/// the loader-level leg of the q = 1 equivalence guarantee.
+pub fn generate_multitask(cfg: &SyntheticConfig, tasks: usize) -> MultiTaskSyntheticData {
+    assert!(tasks >= 1, "need at least one response column");
+    let base = generate(cfg);
+    let p = cfg.p();
+    let groups = base.dataset.groups.clone();
+    let x = base.dataset.x;
+    let mut y = base.dataset.y;
+    y.reserve_exact(cfg.n * (tasks - 1));
+    let mut beta_true = vec![0.0; p * tasks];
+    for (j, &b) in base.beta_true.iter().enumerate() {
+        beta_true[j * tasks] = b;
+    }
+    let mut active_groups_true = vec![base.active_groups_true];
+
+    for t in 1..tasks {
+        // A fresh stream per task: same planting distribution, different
+        // draws — and independent of the design stream, so widening q
+        // never perturbs X or the earlier tasks.
+        let mut rng = Pcg::new(cfg.seed, 0xDA7A_0000 + t as u64);
+        let active_groups = rng.sample_indices(cfg.n_groups, cfg.gamma1);
+        let mut beta_t = vec![0.0; p];
+        for &g in &active_groups {
+            let (a, _) = groups.bounds(g);
+            let coords = rng.sample_indices(cfg.group_size, cfg.gamma2);
+            for &k in &coords {
+                let u = rng.uniform_in(0.5, 10.0);
+                beta_t[a + k] = rng.sign() * u;
+            }
+        }
+        let mut y_t = x.matvec(&beta_t);
+        for v in y_t.iter_mut() {
+            *v += cfg.noise * rng.normal();
+        }
+        y.extend_from_slice(&y_t);
+        for (j, &b) in beta_t.iter().enumerate() {
+            beta_true[j * tasks + t] = b;
+        }
+        active_groups_true.push(active_groups);
+    }
+
+    MultiTaskSyntheticData {
+        dataset: Dataset {
+            name: format!("synthetic-mt(n={},p={},q={tasks})", cfg.n, p),
+            x,
+            y,
+            groups,
+        },
+        tasks,
+        beta_true,
+        active_groups_true,
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -146,6 +221,54 @@ mod tests {
         // exactly gamma1*gamma2 nonzeros
         let nnz = d.beta_true.iter().filter(|&&b| b != 0.0).count();
         assert_eq!(nnz, 6);
+    }
+
+    #[test]
+    fn multitask_q1_is_bitwise_the_scalar_dataset() {
+        let cfg = SyntheticConfig::small(7);
+        let scalar = generate(&cfg);
+        let mt = generate_multitask(&cfg, 1);
+        assert_eq!(mt.tasks, 1);
+        assert_eq!(mt.dataset.x.as_slice(), scalar.dataset.x.as_slice());
+        assert_eq!(mt.dataset.y, scalar.dataset.y);
+        assert_eq!(mt.beta_true, scalar.beta_true);
+        assert_eq!(mt.active_groups_true[0], scalar.active_groups_true);
+    }
+
+    #[test]
+    fn multitask_widens_without_perturbing_earlier_tasks() {
+        let cfg = SyntheticConfig {
+            n: 30,
+            n_groups: 8,
+            group_size: 5,
+            gamma1: 3,
+            gamma2: 2,
+            seed: 4,
+            ..Default::default()
+        };
+        let scalar = generate(&cfg);
+        let q = 3;
+        let mt = generate_multitask(&cfg, q);
+        let (n, p) = (cfg.n, cfg.p());
+        assert_eq!(mt.dataset.y.len(), n * q);
+        assert_eq!(mt.beta_true.len(), p * q);
+        // Task 0 is the scalar dataset verbatim (X shared, y prefix).
+        assert_eq!(mt.dataset.x.as_slice(), scalar.dataset.x.as_slice());
+        assert_eq!(&mt.dataset.y[..n], &scalar.dataset.y[..]);
+        for j in 0..p {
+            assert_eq!(mt.beta_true[j * q], scalar.beta_true[j]);
+        }
+        // Every task plants gamma1 * gamma2 nonzeros, and the tasks
+        // differ (independent streams).
+        for t in 0..q {
+            let nnz = (0..p).filter(|&j| mt.beta_true[j * q + t] != 0.0).count();
+            assert_eq!(nnz, cfg.gamma1 * cfg.gamma2, "task {t}");
+        }
+        assert_ne!(&mt.dataset.y[..n], &mt.dataset.y[n..2 * n]);
+        // Deterministic given the seed.
+        let again = generate_multitask(&cfg, q);
+        assert_eq!(again.dataset.y, mt.dataset.y);
+        assert_eq!(again.beta_true, mt.beta_true);
     }
 
     #[test]

@@ -21,10 +21,14 @@
 //! loads svmlight text straight into the CSC backend (no dense detour).
 //! `--design dense|csc` selects the design backend (CSC stores only the
 //! nonzero entries, so epochs cost `O(nnz)`), `--algo cd|ista|fista` the
-//! inner solver, and `--datafit quadratic|logistic` the loss (logistic
-//! binarizes a real-valued target at its mean); all are also available as
-//! `[dataset] design` / `[solver] algo` / `[solver] datafit` TOML keys,
-//! and the service knobs as `[service] workers/queue_depth/shards`.
+//! inner solver, and `--datafit quadratic|logistic|multitask` the loss
+//! (logistic binarizes a real-valued target at its mean; multitask fits
+//! `q = --tasks` response columns jointly — the synthetic loader plants
+//! per-task coefficients, any other target is tiled across tasks, and
+//! `q = 1` is bit-identical to the scalar quadratic run); all are also
+//! available as `[dataset] design` / `[solver] algo` / `[solver]
+//! datafit` / `[solver] tasks` TOML keys, and the service knobs as
+//! `[service] workers/queue_depth/shards`.
 //!
 //! Observability: `--trace-out f.json` (or `SGL_TRACE=f.json`, or
 //! `[trace] out`) records every solve as Chrome trace-event JSON —
@@ -52,8 +56,8 @@ use sgl::data::{csvio, libsvm, Dataset, SparseDataset};
 use sgl::linalg::{CscMatrix, Design};
 use sgl::screening::RuleKind;
 use sgl::solver::cd::SolveOptions;
-use sgl::solver::cv::{split_rows, validate_tau_grid};
-use sgl::solver::datafit::{Datafit, FitKind, Logistic};
+use sgl::solver::cv::{split_rows, validate_tau_grid, validate_tau_grid_logistic};
+use sgl::solver::datafit::{Datafit, FitKind, Logistic, MultiTaskQuadratic};
 use sgl::solver::groups::Groups;
 use sgl::solver::path::{solve_path_with, PathOptions};
 use sgl::solver::problem::{lambda_grid, SglProblem};
@@ -72,7 +76,8 @@ fn specs() -> Vec<OptSpec> {
         OptSpec { name: "group-size", help: "uniform group size for libsvm datasets", takes_value: true, default: None },
         OptSpec { name: "design", help: "dense|csc design backend", takes_value: true, default: None },
         OptSpec { name: "algo", help: "cd|ista|fista inner solver", takes_value: true, default: None },
-        OptSpec { name: "datafit", help: "quadratic|logistic loss", takes_value: true, default: None },
+        OptSpec { name: "datafit", help: "quadratic|logistic|multitask loss", takes_value: true, default: None },
+        OptSpec { name: "tasks", help: "response columns q for --datafit multitask", takes_value: true, default: None },
         OptSpec { name: "tau", help: "l1/group mixing in [0,1]", takes_value: true, default: None },
         OptSpec { name: "lambda-frac", help: "lambda as a fraction of lambda_max", takes_value: true, default: Some("0.1") },
         OptSpec { name: "tol", help: "target duality gap", takes_value: true, default: None },
@@ -128,7 +133,10 @@ fn load_config(args: &Args) -> Result<RunConfig> {
     }
     if let Some(v) = args.get("datafit") {
         cfg.datafit = FitKind::from_name(&v)
-            .with_context(|| format!("unknown --datafit {v} (quadratic|logistic)"))?;
+            .with_context(|| format!("unknown --datafit {v} (quadratic|logistic|multitask)"))?;
+    }
+    if let Some(v) = args.get("tasks") {
+        cfg.tasks = v.parse().context("--tasks")?;
     }
     if let Some(v) = args.get("tau") {
         cfg.tau = v.parse().context("--tau")?;
@@ -257,7 +265,13 @@ fn build_dataset(cfg: &RunConfig, scale: &str) -> Result<Dataset> {
             } else {
                 SyntheticConfig::small(cfg.seed)
             };
-            synthetic::generate(&sc).dataset
+            if cfg.datafit == FitKind::MultiTask {
+                // Multi-response loader path: one shared X, per-task
+                // planted coefficients, task-major y of length n·q.
+                synthetic::generate_multitask(&sc, cfg.tasks).dataset
+            } else {
+                synthetic::generate(&sc).dataset
+            }
         }
         DatasetChoice::Climate => {
             let cc = if scale == "paper" {
@@ -323,6 +337,42 @@ fn logistic_problem<D: Design>(
 ) -> SglProblem<D, Logistic> {
     let weights = groups.sqrt_size_weights();
     SglProblem::with_datafit(x, logistic_labels(&y), groups, tau, weights, Logistic)
+}
+
+/// A task-major multi-response target. The synthetic loader already
+/// produces `n · tasks` entries; any scalar target (climate, csv,
+/// libsvm) is tiled across tasks so every dataset kind stays runnable
+/// under `--datafit multitask`. Both branches are the identity at q = 1.
+fn multitask_target(y: Vec<f64>, n: usize, tasks: usize) -> Vec<f64> {
+    if y.len() == n * tasks {
+        return y;
+    }
+    assert_eq!(y.len(), n, "target must hold n or n * tasks entries");
+    let mut out = Vec::with_capacity(n * tasks);
+    for _ in 0..tasks {
+        out.extend_from_slice(&y);
+    }
+    out
+}
+
+/// A sparse-group multi-task problem on any backend.
+fn multitask_problem<D: Design>(
+    x: D,
+    y: Vec<f64>,
+    groups: Groups,
+    tau: f64,
+    tasks: usize,
+) -> SglProblem<D, MultiTaskQuadratic> {
+    let n = x.n_rows();
+    let weights = groups.sqrt_size_weights();
+    SglProblem::with_datafit(
+        x,
+        multitask_target(y, n, tasks),
+        groups,
+        tau,
+        weights,
+        MultiTaskQuadratic::new(tasks),
+    )
 }
 
 /// `solve` on any backend and datafit.
@@ -425,31 +475,55 @@ fn cmd_serve(data: LoadedData, cfg: &RunConfig) -> Result<()> {
     // explicitly asked for the dense backend (same contract as
     // `with_backend!`), in which case dense jobs join the batch too.
     // Each backend also gets a logistic twin (labels binarized at the
-    // target's mean) so the batch mixes regression and classification.
+    // target's mean) and a multi-task twin, so the batch mixes all three
+    // datafits freely.
     type LogDense = Arc<SglProblem<sgl::linalg::Matrix, Logistic>>;
     type LogCsc = Arc<SglProblem<CscMatrix, Logistic>>;
-    let (dense_pb, csc_pb, dense_log, csc_log): (
+    type MtDense = Arc<SglProblem<sgl::linalg::Matrix, MultiTaskQuadratic>>;
+    type MtCsc = Arc<SglProblem<CscMatrix, MultiTaskQuadratic>>;
+    // The batch always demos a genuinely multi-column response: q from
+    // --tasks when configured, 2 otherwise (scalar targets are tiled).
+    let mt_q = cfg.tasks.max(2);
+    let (dense_pb, csc_pb, dense_log, csc_log, dense_mt, csc_mt): (
         Option<Arc<SglProblem>>,
         Arc<SglProblem<CscMatrix>>,
         Option<LogDense>,
         LogCsc,
+        Option<MtDense>,
+        MtCsc,
     ) = match data {
         LoadedData::Dense(d) => {
             let csc = CscMatrix::from_dense(&d.x);
+            // Task 0 is the scalar target (a multitask synthetic load
+            // carries n·q entries task-major; every other load exactly n).
+            let y1 = d.y[..d.x.n_rows()].to_vec();
             (
                 Some(Arc::new(SglProblem::new(
                     d.x.clone(),
-                    d.y.clone(),
+                    y1.clone(),
                     d.groups.clone(),
                     cfg.tau,
                 ))),
-                Arc::new(SglProblem::new(csc.clone(), d.y.clone(), d.groups.clone(), cfg.tau)),
-                Some(Arc::new(logistic_problem(d.x, d.y.clone(), d.groups.clone(), cfg.tau))),
-                Arc::new(logistic_problem(csc, d.y, d.groups, cfg.tau)),
+                Arc::new(SglProblem::new(csc.clone(), y1.clone(), d.groups.clone(), cfg.tau)),
+                Some(Arc::new(logistic_problem(
+                    d.x.clone(),
+                    y1.clone(),
+                    d.groups.clone(),
+                    cfg.tau,
+                ))),
+                Arc::new(logistic_problem(csc.clone(), y1, d.groups.clone(), cfg.tau)),
+                Some(Arc::new(multitask_problem(
+                    d.x,
+                    d.y.clone(),
+                    d.groups.clone(),
+                    cfg.tau,
+                    mt_q,
+                ))),
+                Arc::new(multitask_problem(csc, d.y, d.groups, cfg.tau, mt_q)),
             )
         }
         LoadedData::Sparse(s) => {
-            let (dense, dense_log) = match cfg.design {
+            let (dense, dense_log, dense_mt) = match cfg.design {
                 DesignBackend::Dense => {
                     let x = s.x.to_dense();
                     (
@@ -460,20 +534,29 @@ fn cmd_serve(data: LoadedData, cfg: &RunConfig) -> Result<()> {
                             cfg.tau,
                         ))),
                         Some(Arc::new(logistic_problem(
-                            x,
+                            x.clone(),
                             s.y.clone(),
                             s.groups.clone(),
                             cfg.tau,
                         ))),
+                        Some(Arc::new(multitask_problem(
+                            x,
+                            s.y.clone(),
+                            s.groups.clone(),
+                            cfg.tau,
+                            mt_q,
+                        ))),
                     )
                 }
-                DesignBackend::Csc => (None, None),
+                DesignBackend::Csc => (None, None, None),
             };
             (
                 dense,
                 Arc::new(SglProblem::new(s.x.clone(), s.y.clone(), s.groups.clone(), cfg.tau)),
                 dense_log,
-                Arc::new(logistic_problem(s.x, s.y, s.groups, cfg.tau)),
+                Arc::new(logistic_problem(s.x.clone(), s.y.clone(), s.groups.clone(), cfg.tau)),
+                dense_mt,
+                Arc::new(multitask_problem(s.x, s.y, s.groups, cfg.tau, mt_q)),
             )
         }
     };
@@ -530,7 +613,11 @@ fn cmd_serve(data: LoadedData, cfg: &RunConfig) -> Result<()> {
             label: format!(
                 "{}{}/{}/{}@{tol:.0e}{}",
                 pb.backend_name(),
-                if pb.datafit_kind() == FitKind::Logistic { "+logistic" } else { "" },
+                match pb.datafit_kind() {
+                    FitKind::Quadratic => String::new(),
+                    FitKind::Logistic => "+logistic".into(),
+                    FitKind::MultiTask => format!("+mt{}", pb.tasks()),
+                },
                 solver.name(),
                 rule.name(),
                 if shards > 1 { format!("/k{shards}") } else { String::new() }
@@ -578,6 +665,26 @@ fn cmd_serve(data: LoadedData, cfg: &RunConfig) -> Result<()> {
             1,
         ));
     }
+    // Multi-response paths join the same queue — the multi-task dual
+    // geometry is quadratic, so the least-squares spheres are admissible.
+    for solver in [SolverKind::Cd, SolverKind::Fista] {
+        batch.push(make(
+            AnyProblem::CscMultiTask(csc_mt.clone()),
+            RuleKind::GapSafe,
+            1e-6,
+            solver,
+            1,
+        ));
+    }
+    if let Some(dm) = &dense_mt {
+        batch.push(make(
+            AnyProblem::DenseMultiTask(dm.clone()),
+            RuleKind::Dst3,
+            1e-6,
+            SolverKind::Cd,
+            1,
+        ));
+    }
     // One λ-sharded path per datafit: the dual-point handoff pipeline.
     if cfg.service_shards > 1 {
         batch.push(make(
@@ -589,6 +696,13 @@ fn cmd_serve(data: LoadedData, cfg: &RunConfig) -> Result<()> {
         ));
         batch.push(make(
             AnyProblem::CscLogistic(csc_log.clone()),
+            RuleKind::GapSafeSeq,
+            cfg.tol,
+            SolverKind::Cd,
+            cfg.service_shards,
+        ));
+        batch.push(make(
+            AnyProblem::CscMultiTask(csc_mt.clone()),
             RuleKind::GapSafeSeq,
             cfg.tol,
             SolverKind::Cd,
@@ -789,6 +903,10 @@ fn run(args: &Args) -> Result<()> {
                         let pb = logistic_problem(x, y, groups, cfg.tau);
                         cmd_solve(&pb, &cfg, args, name)
                     }
+                    FitKind::MultiTask => {
+                        let pb = multitask_problem(x, y, groups, cfg.tau, cfg.tasks);
+                        cmd_solve(&pb, &cfg, args, name)
+                    }
                 }
             });
         }
@@ -804,12 +922,16 @@ fn run(args: &Args) -> Result<()> {
                         let pb = logistic_problem(x, y, groups, cfg.tau);
                         cmd_path(&pb, &cfg, args)?
                     }
+                    FitKind::MultiTask => {
+                        let pb = multitask_problem(x, y, groups, cfg.tau, cfg.tasks);
+                        cmd_path(&pb, &cfg, args)?
+                    }
                 }
             });
         }
         "cv" => {
-            if cfg.datafit != FitKind::Quadratic {
-                bail!("cv scores test MSE and is least-squares only (drop --datafit)");
+            if cfg.datafit == FitKind::MultiTask {
+                bail!("cv scores held-out prediction per scalar target (quadratic|logistic)");
             }
             let data = build_data(&cfg, &scale)?;
             let taus: Vec<f64> = (0..=10).map(|i| i as f64 / 10.0).collect();
@@ -825,14 +947,33 @@ fn run(args: &Args) -> Result<()> {
                     ..Default::default()
                 },
             };
-            let cv = with_backend!(cfg, data, |x, y, groups| {
-                let split = split_rows(x.n_rows(), 0.5, cfg.seed);
-                validate_tau_grid(&x, &y, &groups, &taus, &opts, &split, threads)
-            });
-            println!(
-                "best tau={} lambda={:.4e} test mse={:.5e}",
-                cv.best_tau, cv.best_lambda, cv.best_mse
-            );
+            match cfg.datafit {
+                FitKind::Quadratic => {
+                    let cv = with_backend!(cfg, data, |x, y, groups| {
+                        let split = split_rows(x.n_rows(), 0.5, cfg.seed);
+                        validate_tau_grid(&x, &y, &groups, &taus, &opts, &split, threads)
+                    });
+                    println!(
+                        "best tau={} lambda={:.4e} test mse={:.5e}",
+                        cv.best_tau, cv.best_lambda, cv.best_mse
+                    );
+                }
+                FitKind::Logistic => {
+                    let cv = with_backend!(cfg, data, |x, y, groups| {
+                        let split = split_rows(x.n_rows(), 0.5, cfg.seed);
+                        let labels = logistic_labels(&y);
+                        validate_tau_grid_logistic(
+                            &x, &labels, &groups, &taus, &opts, &split, threads,
+                        )
+                    });
+                    println!(
+                        "best tau={} lambda={:.4e} test deviance={:.5e} \
+                         misclassification={:.4}",
+                        cv.best_tau, cv.best_lambda, cv.best_deviance, cv.best_error
+                    );
+                }
+                FitKind::MultiTask => unreachable!("rejected above"),
+            }
         }
         "lambda-max" => {
             let data = build_data(&cfg, &scale)?;
@@ -844,6 +985,10 @@ fn run(args: &Args) -> Result<()> {
                     FitKind::Logistic => {
                         logistic_problem(x, y, groups, cfg.tau).lambda_max_argmax()
                     }
+                    FitKind::MultiTask => {
+                        multitask_problem(x, y, groups, cfg.tau, cfg.tasks)
+                            .lambda_max_argmax()
+                    }
                 };
                 println!("lambda_max = {lmax:.8e} (attained by group {g_star})");
             });
@@ -852,7 +997,9 @@ fn run(args: &Args) -> Result<()> {
             if cfg.datafit != FitKind::Quadratic {
                 bail!(
                     "compare times the least-squares-only spheres too; \
-                     run `path --datafit logistic --rule gap_safe_seq` instead"
+                     logistic models are covered by `cv --datafit logistic` \
+                     (deviance + misclassification) and \
+                     `path --datafit logistic --rule gap_safe_seq`"
                 );
             }
             let data = build_data(&cfg, &scale)?;

@@ -1,0 +1,291 @@
+//! Row-block (multi-task) generalizations of the SGL norm machinery
+//! (arXiv 1506.03736).
+//!
+//! In the multi-task problem each feature `j` carries a *row* of `q` task
+//! coefficients, stored feature-major: row `j` occupies `x[j·q .. (j+1)·q]`.
+//! The penalty replaces `|β_j|` with the row norm `‖B_j‖₂` and `‖β_g‖₂`
+//! with the Frobenius norm of the group's row block, so
+//!
+//! ```text
+//!   Ω(B) = τ Σ_j ‖B_j‖₂ + (1−τ) Σ_g w_g ‖B_g‖_F
+//! ```
+//!
+//! and its dual norm is the scalar `Ω^D` evaluated on the p-vector of row
+//! norms (the ε-norm machinery applies unchanged because it only sees the
+//! non-negative score per feature).
+//!
+//! Every function here degenerates to its scalar `norms::{sgl, prox}`
+//! counterpart **bit-for-bit** at `q = 1`: the `q == 1` branches call the
+//! scalar code paths directly rather than re-deriving them through
+//! `sqrt(x²)`, which is not the bitwise identity on `|x|`.
+
+use super::prox::{group_soft_threshold_inplace, sgl_prox_inplace, soft_threshold_vec};
+use super::sgl;
+use crate::linalg::simd;
+use crate::solver::groups::Groups;
+
+/// ℓ2 norms of the `p` feature rows of a feature-major `p × q` matrix,
+/// written into `out` (length `p`). At `q = 1` this is `|x_j|` bit-for-bit.
+pub fn row_norms_into(x: &[f64], q: usize, out: &mut [f64]) {
+    assert!(q >= 1, "row_norms_into needs at least one task");
+    assert_eq!(x.len(), out.len() * q, "feature-major layout mismatch");
+    if q == 1 {
+        for (o, v) in out.iter_mut().zip(x) {
+            *o = v.abs();
+        }
+        return;
+    }
+    for (o, row) in out.iter_mut().zip(x.chunks_exact(q)) {
+        *o = simd::l2_norm(row);
+    }
+}
+
+/// Allocating convenience wrapper around [`row_norms_into`].
+pub fn row_norms(x: &[f64], q: usize) -> Vec<f64> {
+    let mut out = vec![0.0; x.len() / q.max(1)];
+    row_norms_into(x, q, &mut out);
+    out
+}
+
+/// The multi-task SGL norm `Ω(B) = τ Σ_j ‖B_j‖ + (1−τ) Σ_g w_g ‖B_g‖_F`
+/// over a feature-major `p × q` matrix. Delegates to the scalar
+/// [`sgl::omega`] at `q = 1`.
+pub fn omega_rows(x: &[f64], q: usize, groups: &Groups, tau: f64, w: &[f64]) -> f64 {
+    if q == 1 {
+        return sgl::omega(x, groups, tau, w);
+    }
+    debug_assert_eq!(x.len(), groups.p() * q);
+    debug_assert_eq!(w.len(), groups.n_groups());
+    let mut row_part = 0.0;
+    for row in x.chunks_exact(q) {
+        row_part += simd::l2_norm(row);
+    }
+    let mut group_part = 0.0;
+    for (g, a, b) in groups.iter() {
+        // Frobenius norm of the group's row block == flat l2 of the
+        // contiguous feature-major slice.
+        group_part += w[g] * simd::l2_norm(&x[a * q..b * q]);
+    }
+    tau * row_part + (1.0 - tau) * group_part
+}
+
+/// The multi-task dual norm: the scalar `Ω^D` (Eq. 20/23) evaluated on the
+/// p-vector of row norms. Delegates to [`sgl::omega_dual`] at `q = 1`.
+pub fn omega_dual_rows(xi: &[f64], q: usize, groups: &Groups, tau: f64, w: &[f64]) -> f64 {
+    if q == 1 {
+        return sgl::omega_dual(xi, groups, tau, w);
+    }
+    let scores = row_norms(xi, q);
+    sgl::omega_dual(&scores, groups, tau, w)
+}
+
+/// Argmax-group variant of [`omega_dual_rows`] (DST3 geometry, App. C).
+pub fn omega_dual_argmax_rows(
+    xi: &[f64],
+    q: usize,
+    groups: &Groups,
+    tau: f64,
+    w: &[f64],
+) -> (usize, f64) {
+    if q == 1 {
+        return sgl::omega_dual_argmax(xi, groups, tau, w);
+    }
+    let scores = row_norms(xi, q);
+    sgl::omega_dual_argmax(&scores, groups, tau, w)
+}
+
+/// Row-wise ℓ2 soft-thresholding: every feature row is block-shrunk by `t`
+/// (`(1 − t/‖B_j‖)₊ B_j`). At `q = 1` this is scalar soft-thresholding
+/// bit-for-bit (via the scalar path, not `sqrt(x²)`).
+pub fn row_soft_threshold_inplace(x: &mut [f64], q: usize, t: f64) {
+    assert!(q >= 1, "row_soft_threshold_inplace needs at least one task");
+    if q == 1 {
+        super::prox::soft_threshold_inplace(x, t);
+        return;
+    }
+    for row in x.chunks_exact_mut(q) {
+        group_soft_threshold_inplace(row, t);
+    }
+}
+
+/// The fused multi-task SGL block prox on a group's feature-major row
+/// block: row-wise ℓ2 shrink by `a = τ α_g`, then a Frobenius block shrink
+/// by `b = (1−τ) w_g α_g` — the exact prox of
+/// `α_g (τ Σ_j ‖·_j‖ + (1−τ) w_g ‖·‖_F)` (the row/group norms nest just
+/// like ℓ1/ℓ2 do in the scalar case, §6). Delegates to the scalar
+/// [`sgl_prox_inplace`] at `q = 1`.
+pub fn sgl_prox_rows_inplace(u: &mut [f64], q: usize, a: f64, b: f64) {
+    if q == 1 {
+        sgl_prox_inplace(u, a, b);
+        return;
+    }
+    row_soft_threshold_inplace(u, q, a);
+    group_soft_threshold_inplace(u, b);
+}
+
+/// Multi-task dual-ball membership (the row generalization of Eq. 21):
+/// `∀g, ‖S^row_τ(ξ_g)‖_F ≤ (1−τ) w_g` where `S^row` is the row-wise ℓ2
+/// shrink. Delegates to [`sgl::in_dual_unit_ball`] at `q = 1`.
+pub fn in_dual_unit_ball_rows(
+    xi: &[f64],
+    q: usize,
+    groups: &Groups,
+    tau: f64,
+    w: &[f64],
+    tol: f64,
+) -> bool {
+    if q == 1 {
+        return sgl::in_dual_unit_ball(xi, groups, tau, w, tol);
+    }
+    for (g, a, b) in groups.iter() {
+        let mut block = xi[a * q..b * q].to_vec();
+        row_soft_threshold_inplace(&mut block, q, tau);
+        if simd::l2_norm(&block) > (1.0 - tau) * w[g] + tol {
+            return false;
+        }
+    }
+    true
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::ops::l2_norm;
+    use crate::util::proptest::{check, check_close, forall};
+
+    fn toy_groups() -> (Groups, Vec<f64>) {
+        let g = Groups::from_sizes(&[2, 3, 1]);
+        let w = g.sqrt_size_weights();
+        (g, w)
+    }
+
+    #[test]
+    fn q1_paths_are_bitwise_scalar() {
+        forall("q=1 block norms == scalar norms bitwise", 100, |gen| {
+            let (g, w) = toy_groups();
+            let tau = gen.f64_in(0.01..0.99);
+            let x: Vec<f64> = (0..g.p()).map(|_| gen.normal() * 2.0).collect();
+            let rn = row_norms(&x, 1);
+            for (r, v) in rn.iter().zip(&x) {
+                check(r.to_bits() == v.abs().to_bits(), "row norm == |x| bitwise")?;
+            }
+            check(
+                omega_rows(&x, 1, &g, tau, &w).to_bits() == sgl::omega(&x, &g, tau, &w).to_bits(),
+                "omega bitwise",
+            )?;
+            check(
+                omega_dual_rows(&x, 1, &g, tau, &w).to_bits()
+                    == sgl::omega_dual(&x, &g, tau, &w).to_bits(),
+                "omega_dual bitwise",
+            )?;
+            let (a, b) = (gen.f64_in(0.0..1.5), gen.f64_in(0.0..1.5));
+            let mut u1 = x.clone();
+            let mut u2 = x.clone();
+            sgl_prox_rows_inplace(&mut u1, 1, a, b);
+            sgl_prox_inplace(&mut u2, a, b);
+            for (p1, p2) in u1.iter().zip(&u2) {
+                check(p1.to_bits() == p2.to_bits(), "prox bitwise")?;
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn row_norms_known_values() {
+        // 2 features, q = 2: rows (3,4) and (0,-5).
+        let x = [3.0, 4.0, 0.0, -5.0];
+        assert_eq!(row_norms(&x, 2), vec![5.0, 5.0]);
+    }
+
+    #[test]
+    fn row_prox_shrinks_rows_then_block() {
+        // One group of 2 features, q = 2. Row norms 5 and 5.
+        let mut u = [3.0, 4.0, 0.0, -5.0];
+        // a = 2.5 shrinks each row by factor 0.5; b = 0 leaves the block.
+        sgl_prox_rows_inplace(&mut u, 2, 2.5, 0.0);
+        assert_eq!(u, [1.5, 2.0, 0.0, -2.5]);
+        // A large b zeroes the whole block.
+        sgl_prox_rows_inplace(&mut u, 2, 0.0, 100.0);
+        assert_eq!(u, [0.0; 4]);
+    }
+
+    #[test]
+    fn generalized_cauchy_schwarz_for_rows() {
+        forall("<B, Xi> <= Omega(B) * Omega^D(Xi) for q > 1", 150, |gen| {
+            let g = Groups::from_sizes(&[3, 2, 4]);
+            let w = g.sqrt_size_weights();
+            let q = gen.usize_in(2..5);
+            let tau = gen.f64_in(0.0..1.0);
+            let b: Vec<f64> = (0..g.p() * q).map(|_| gen.normal()).collect();
+            let xi: Vec<f64> = (0..g.p() * q).map(|_| gen.normal()).collect();
+            let ip: f64 = b.iter().zip(&xi).map(|(u, v)| u * v).sum();
+            let bound = omega_rows(&b, q, &g, tau, &w) * omega_dual_rows(&xi, q, &g, tau, &w);
+            check(ip.abs() <= bound * (1.0 + 1e-9) + 1e-12, &format!("{ip} vs {bound}"))
+        });
+    }
+
+    #[test]
+    fn dual_ball_rows_matches_dual_norm() {
+        forall("row dual ball <=> Omega^D_rows <= 1", 200, |gen| {
+            let g = Groups::from_sizes(&[2, 3]);
+            let w = g.sqrt_size_weights();
+            let q = gen.usize_in(2..4);
+            let tau = gen.f64_in(0.0..1.0);
+            let xi: Vec<f64> = (0..g.p() * q).map(|_| gen.normal() * 0.9).collect();
+            let dn = omega_dual_rows(&xi, q, &g, tau, &w);
+            if (dn - 1.0).abs() < 1e-6 {
+                return Ok(());
+            }
+            let inside = in_dual_unit_ball_rows(&xi, q, &g, tau, &w, 1e-10);
+            check(inside == (dn <= 1.0), &format!("dn={dn} inside={inside}"))
+        });
+    }
+
+    #[test]
+    fn row_prox_optimality_condition() {
+        // p = prox(u) of a*sum_j||row_j|| + b*||.||_F iff u - p lies in the
+        // subdifferential; spot-check via the zero/nonzero row cases.
+        forall("row prox optimality", 150, |gen| {
+            let q = gen.usize_in(2..4);
+            let d = gen.usize_in(1..5);
+            let u: Vec<f64> = (0..d * q).map(|_| gen.normal() * 3.0).collect();
+            let a = gen.f64_in(0.0..2.0);
+            let b = gen.f64_in(0.0..2.0);
+            let mut p = u.clone();
+            sgl_prox_rows_inplace(&mut p, q, a, b);
+            let pn = l2_norm(&p);
+            if pn > 0.0 {
+                for j in 0..d {
+                    let (ur, pr) = (&u[j * q..(j + 1) * q], &p[j * q..(j + 1) * q]);
+                    let rn = l2_norm(pr);
+                    if rn > 0.0 {
+                        // u_j - p_j = a * p_j/||p_j|| + b * p_j/||p||_F.
+                        for t in 0..q {
+                            let sub = a * pr[t] / rn + b * pr[t] / pn;
+                            check_close(ur[t] - pr[t], sub, 1e-8, "active row subgrad")?;
+                        }
+                    } else {
+                        // Zero row: the residual row must fit in a*B_2.
+                        let rr: Vec<f64> = ur.to_vec();
+                        check(l2_norm(&rr) <= a + 1e-10, "inactive row in a*ball")?;
+                    }
+                }
+            } else {
+                // All-zero: row-shrunk u must fit in b*B_F.
+                let mut s = u.clone();
+                row_soft_threshold_inplace(&mut s, q, a);
+                check(l2_norm(&s) <= b + 1e-10, "zero block optimality")?;
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn row_soft_threshold_q1_is_scalar() {
+        let x = [1.5, -0.3, 0.0, -2.0];
+        let mut a = x;
+        row_soft_threshold_inplace(&mut a, 1, 0.5);
+        let b = soft_threshold_vec(&x, 0.5);
+        assert_eq!(a.to_vec(), b);
+    }
+}

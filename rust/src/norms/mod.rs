@@ -5,8 +5,14 @@
 //! - [`sgl`] — `Ω_{τ,w}`, its dual (Eq. 20/23), and the dual-ball
 //!   characterization (Eq. 21);
 //! - [`prox`] — soft-thresholding, group soft-thresholding, and the fused
-//!   two-level SGL prox (§6).
+//!   two-level SGL prox (§6);
+//! - [`block`] — row-norm (ℓ2,1-style) generalizations of the above for
+//!   multi-task problems where each feature carries a row of `q` task
+//!   coefficients (arXiv 1506.03736): block row norms, the multi-task
+//!   `Ω`/`Ω^D` over row norms, and the row-block SGL prox. Every entry
+//!   point degenerates to its scalar counterpart bit-for-bit at `q = 1`.
 
+pub mod block;
 pub mod epsilon;
 pub mod prox;
 pub mod sgl;

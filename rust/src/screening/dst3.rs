@@ -13,6 +13,7 @@
 use super::{RuleKind, ScreeningRule, Sphere};
 use crate::linalg::ops::{dot, l2_norm_sq};
 use crate::linalg::Design;
+use crate::norms::block::row_norms;
 use crate::norms::epsilon::epsilon_norm_gradient;
 use crate::norms::sgl::epsilon_g;
 use crate::solver::datafit::Datafit;
@@ -33,26 +34,67 @@ pub struct Dst3Rule {
 }
 
 impl Dst3Rule {
-    /// Derived for the plain least-squares dual; [`super::make_rule`]
-    /// rejects other datafits before constructing this.
+    /// Derived for the plain least-squares dual (scalar or multi-task);
+    /// [`super::make_rule`] rejects other datafits before constructing
+    /// this.
+    ///
+    /// Multi-task construction: the dual constraint surface is
+    /// `Ω^D(row_norms(XᵀΘ)) ≤ 1`, so the supporting-hyperplane normal at
+    /// `Y/λ_max` composes the scalar ε-norm gradient (on the row-norm
+    /// scores of the touching group) with the row-norm gradient
+    /// `∂‖B_j‖/∂B_j = B_j/‖B_j‖` — the same Lemma-5 geometry on the
+    /// Frobenius inner-product space. All carried quantities stay flat
+    /// (`xty`/`xt_eta` feature-major `p · q`, `⟨η, Y⟩` and `‖η‖²`
+    /// Frobenius), so [`Self::sphere`] is layout-agnostic.
     pub fn new<D: Design, F: Datafit>(pb: &SglProblem<D, F>) -> Self {
-        let xty = pb.x.tmatvec(&pb.y);
+        let q = pb.datafit.tasks();
+        let xty = pb.xt_zero_residual();
         let (g_star, lambda_max) = pb.lambda_max_argmax();
         let (a, b) = pb.groups.bounds(g_star);
         let eps = epsilon_g(pb.tau, pb.weights[g_star]);
-        // xi = X_{g*}^T y / lambda_max, the touching point direction.
-        let xi: Vec<f64> = xty[a..b].iter().map(|v| v / lambda_max).collect();
-        // eta = X_{g*} * grad ||.||_eps (xi)  (Lemma 5: grad = xi^eps / ||xi^eps||_eps^D).
-        let grad = epsilon_norm_gradient(&xi, eps);
         let n = pb.n();
-        let mut eta = vec![0.0; n];
-        for (k, j) in (a..b).enumerate() {
-            pb.x.col_axpy(j, grad[k], &mut eta);
+        let offset = pb.tau + (1.0 - pb.tau) * pb.weights[g_star];
+        if q == 1 {
+            // xi = X_{g*}^T y / lambda_max, the touching point direction.
+            let xi: Vec<f64> = xty[a..b].iter().map(|v| v / lambda_max).collect();
+            // eta = X_{g*} * grad ||.||_eps (xi)  (Lemma 5: grad = xi^eps / ||xi^eps||_eps^D).
+            let grad = epsilon_norm_gradient(&xi, eps);
+            let mut eta = vec![0.0; n];
+            for (k, j) in (a..b).enumerate() {
+                pb.x.col_axpy(j, grad[k], &mut eta);
+            }
+            let xt_eta = pb.x.tmatvec(&eta);
+            let eta_dot_y = dot(&eta, &pb.y);
+            let eta_norm_sq = l2_norm_sq(&eta);
+            return Dst3Rule { xt_eta, xty, eta_dot_y, eta_norm_sq, offset };
         }
-        let xt_eta = pb.x.tmatvec(&eta);
+        // Multi-task: scores of the touching group's correlation panel.
+        let block = &xty[a * q..b * q];
+        let scores = row_norms(block, q);
+        let xi: Vec<f64> = scores.iter().map(|v| v / lambda_max).collect();
+        let grad = epsilon_norm_gradient(&xi, eps);
+        // Chain rule: G[k, t] = grad_k · B[k, t] / ‖B_k‖ (unit row
+        // direction; a zero row has zero gradient).
+        let mut eta = vec![0.0; n * q];
+        for t in 0..q {
+            let eta_t = &mut eta[t * n..(t + 1) * n];
+            for (k, j) in (a..b).enumerate() {
+                let gkt =
+                    if scores[k] > 0.0 { grad[k] * block[k * q + t] / scores[k] } else { 0.0 };
+                if gkt != 0.0 {
+                    pb.x.col_axpy(j, gkt, eta_t);
+                }
+            }
+        }
+        let mut xt_eta = vec![0.0; pb.p() * q];
+        for t in 0..q {
+            let col = pb.x.tmatvec(&eta[t * n..(t + 1) * n]);
+            for (j, v) in col.iter().enumerate() {
+                xt_eta[j * q + t] = *v;
+            }
+        }
         let eta_dot_y = dot(&eta, &pb.y);
         let eta_norm_sq = l2_norm_sq(&eta);
-        let offset = pb.tau + (1.0 - pb.tau) * pb.weights[g_star];
         Dst3Rule { xt_eta, xty, eta_dot_y, eta_norm_sq, offset }
     }
 }

@@ -18,10 +18,12 @@ pub struct DynamicRule {
 }
 
 impl DynamicRule {
-    /// Derived for the plain least-squares dual; [`super::make_rule`]
-    /// rejects other datafits before constructing this.
+    /// Derived for the plain least-squares dual (scalar or multi-task —
+    /// the projection argument holds for the Frobenius dual as well);
+    /// [`super::make_rule`] rejects other datafits before constructing
+    /// this. `xty` is feature-major `XᵀY` (`p · q`; plain `Xᵀy` at q = 1).
     pub fn new<D: Design, F: Datafit>(pb: &SglProblem<D, F>) -> Self {
-        DynamicRule { xty: pb.x.tmatvec(&pb.y) }
+        DynamicRule { xty: pb.xt_zero_residual() }
     }
 }
 

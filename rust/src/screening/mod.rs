@@ -20,6 +20,7 @@ pub mod static_rule;
 
 use crate::linalg::ops::{inf_norm, l2_norm};
 use crate::linalg::Design;
+use crate::norms::block::row_norms;
 use crate::norms::prox::soft_threshold_vec;
 use crate::solver::datafit::{Datafit, FitState, Quadratic};
 use crate::solver::duality::DualSnapshot;
@@ -269,6 +270,14 @@ fn apply_sphere_core<D: Design, F: Datafit>(
     // never be eliminated by floating-point noise.
     let slack = 1e-12;
     let ng = pb.n_groups();
+    // Multi-response spheres carry the feature-major p × q center
+    // correlations; the Theorem-1 tests run on the per-feature row-norm
+    // *scores* (arXiv 1506.03736) — non-negative, so the same scalar
+    // decision pass applies verbatim (|s| = s, soft-threshold unchanged).
+    // At q = 1 the sphere's own vector is used directly, bit-for-bit.
+    let q = pb.datafit.tasks();
+    let scores = if q == 1 { Vec::new() } else { row_norms(&sphere.xt_center, q) };
+    let xt_center: &[f64] = if q == 1 { &sphere.xt_center } else { &scores };
     // -- decision pass: pure per-group tests (Eq. 13/14), parallelizable.
     let mut kill_group = vec![false; ng];
     let mut kill_feature = vec![false; pb.p()];
@@ -281,7 +290,7 @@ fn apply_sphere_core<D: Design, F: Datafit>(
                 return;
             }
             let (a, b) = pb.groups.bounds(g);
-            let xi_c = &sphere.xt_center[a..b];
+            let xi_c = &xt_center[a..b];
             // Group-level bound T_g (Eq. 14 / Theorem 1).
             let xi_inf = inf_norm(xi_c);
             let t_g = if xi_inf > tau {
@@ -298,8 +307,7 @@ fn apply_sphere_core<D: Design, F: Datafit>(
             // Feature-level tests within the surviving group (Eq. 13).
             for j in a..b {
                 if active_ref.feature[j]
-                    && sphere.xt_center[j].abs() + r * pb.col_norms[j]
-                        < tau - slack * tau.max(1.0)
+                    && xt_center[j].abs() + r * pb.col_norms[j] < tau - slack * tau.max(1.0)
                 {
                     unsafe { kf.set(j, true) };
                 }
@@ -341,10 +349,11 @@ fn apply_sphere_core<D: Design, F: Datafit>(
     out
 }
 
-/// Zero `beta[j]`, removing its contribution from the maintained state
-/// vector (`rho += β_j X_j` for the residual, `Xβ −= β_j X_j` for the
-/// linear predictor). Returns true if the coefficient was nonzero (i.e.
-/// the state changed).
+/// Zero `beta[j]` (the whole coefficient row for multi-response datafits),
+/// removing its contribution from the maintained state vector
+/// (`rho += β_j X_j` for the residual, `Xβ −= β_j X_j` for the linear
+/// predictor; per task slice when `q > 1`). Returns true if any
+/// coefficient was nonzero (i.e. the state changed).
 #[inline]
 fn zero_coord<D: Design, F: Datafit>(
     pb: &SglProblem<D, F>,
@@ -352,14 +361,27 @@ fn zero_coord<D: Design, F: Datafit>(
     beta: &mut [f64],
     rho: &mut [f64],
 ) -> bool {
-    let bj = beta[j];
-    if bj != 0.0 {
-        pb.x.col_axpy(j, -pb.datafit.delta_sign() * bj, rho);
-        beta[j] = 0.0;
-        true
-    } else {
-        false
+    let q = pb.datafit.tasks();
+    if q == 1 {
+        let bj = beta[j];
+        if bj != 0.0 {
+            pb.x.col_axpy(j, -pb.datafit.delta_sign() * bj, rho);
+            beta[j] = 0.0;
+            return true;
+        }
+        return false;
     }
+    let n = pb.x.n_rows();
+    let mut changed = false;
+    for t in 0..q {
+        let bjt = beta[j * q + t];
+        if bjt != 0.0 {
+            pb.x.col_axpy(j, -pb.datafit.delta_sign() * bjt, &mut rho[t * n..(t + 1) * n]);
+            beta[j * q + t] = 0.0;
+            changed = true;
+        }
+    }
+    changed
 }
 
 #[cfg(test)]

@@ -21,10 +21,15 @@ pub struct StaticRule {
 }
 
 impl StaticRule {
-    /// Derived for the plain least-squares dual; [`super::make_rule`]
-    /// rejects other datafits before constructing this.
+    /// Derived for the plain least-squares dual (scalar or multi-task;
+    /// the projection argument only needs `θ̂ = Π_Δ(Y/λ)`, which holds for
+    /// the Frobenius dual of the multi-task quadratic too);
+    /// [`super::make_rule`] rejects other datafits before constructing
+    /// this.
     pub fn new<D: Design, F: Datafit>(pb: &SglProblem<D, F>) -> Self {
-        let xty = pb.x.tmatvec(&pb.y);
+        // Feature-major `XᵀY` (`p · q`; the plain `Xᵀy` at q = 1) and the
+        // Frobenius norm of Y.
+        let xty = pb.xt_zero_residual();
         let y_norm = l2_norm(&pb.y);
         let lambda_max = pb.lambda_max();
         StaticRule { xty, y_norm, lambda_max }

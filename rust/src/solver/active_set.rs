@@ -305,6 +305,7 @@ impl<D: Design> ScreenState<D> {
                     ("active_groups", self.active.n_active_groups().into()),
                     ("rule", rule.kind().name().into()),
                     ("datafit", pb.datafit.kind().name().into()),
+                    ("tasks", pb.datafit.tasks().into()),
                     ("kernel", crate::linalg::simd::effective().name().into()),
                 ]
             });

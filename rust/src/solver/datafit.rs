@@ -14,7 +14,37 @@
 //!   `½μ‖β‖²` that realizes the elastic net *without* the historical
 //!   `[X; √μ I]` row-stacking trick);
 //! - [`Logistic`] — sparse-group logistic regression,
-//!   `f(β) = Σᵢ log(1 + exp(xᵢᵀβ)) − yᵢ xᵢᵀβ` with labels `yᵢ ∈ [0, 1]`.
+//!   `f(β) = Σᵢ log(1 + exp(xᵢᵀβ)) − yᵢ xᵢᵀβ` with labels `yᵢ ∈ [0, 1]`;
+//! - [`MultiTaskQuadratic`] — multi-response least squares
+//!   `f(B) = ½‖Y − XB‖_F²` with `Y ∈ R^{n×q}` (Ndiaye et al., "GAP Safe
+//!   screening rules for sparse multi-task and multi-class models",
+//!   arXiv 1506.03736): the residual becomes a matrix, per-feature
+//!   screening scores become block **row norms**, and the same dual-gap
+//!   radius applies verbatim to the Frobenius geometry.
+//!
+//! # Matrix-valued state (the multi-task contract)
+//!
+//! [`FitState`] is flattened matrix state. Every implementer must hold
+//! these layout invariants, which all solvers/screens assume:
+//!
+//! - **n-dimensional state is task-major.** `main`, `aux`, the response
+//!   `y`, and dual points `θ` have length `n·q`, laid out as `q` stacked
+//!   n-vectors: task `t` occupies `[t·n, (t+1)·n)`. Column kernels
+//!   (`col_dot`, `col_axpy`, `matvec`) then operate per task on plain
+//!   n-slices, and flat ℓ2 norms *are* Frobenius norms.
+//! - **p-dimensional state is feature-major.** Coefficients `β`,
+//!   correlations `XᵀR`, and sphere centers `XᵀΘ` have length `p·q`, laid
+//!   out row-major as `p` rows of `q` tasks: feature `j` occupies
+//!   `[j·q, (j+1)·q)`. Row norms, the row-block prox, and screening
+//!   zeroing then operate on contiguous slices.
+//! - **`q = 1` is byte-identical to the scalar layout.** Both conventions
+//!   degenerate to today's plain vectors, so a `tasks() == 1` datafit runs
+//!   the exact scalar code paths — this is what makes
+//!   `MultiTaskQuadratic { tasks: 1 }` bit-identical to [`Quadratic`]
+//!   (pinned by `tests/datafit_multitask.rs`).
+//!
+//! A datafit advertises its response width via [`Datafit::tasks`]
+//! (default 1); problems validate `y.len() == n · tasks` at construction.
 //!
 //! # The screening-safety contract
 //!
@@ -69,6 +99,8 @@ pub enum FitKind {
     Quadratic,
     /// Binary logistic regression with labels in `[0, 1]`.
     Logistic,
+    /// Multi-response least squares `½‖Y − XB‖_F²`, `Y ∈ R^{n×q}`.
+    MultiTask,
 }
 
 impl FitKind {
@@ -77,12 +109,13 @@ impl FitKind {
         match self {
             FitKind::Quadratic => "quadratic",
             FitKind::Logistic => "logistic",
+            FitKind::MultiTask => "multitask",
         }
     }
 
     /// Every supported datafit, for help strings and validation messages.
     pub fn all() -> &'static [FitKind] {
-        &[FitKind::Quadratic, FitKind::Logistic]
+        &[FitKind::Quadratic, FitKind::Logistic, FitKind::MultiTask]
     }
 
     /// Parse a [`FitKind::name`] back (case-sensitive, like `RuleKind`).
@@ -103,7 +136,12 @@ impl FitKind {
 /// - [`Logistic`]: `main = Xβ` (the linear predictor, which *is* the
 ///   quantity that moves linearly in β), with `aux = y − σ(Xβ)` — the
 ///   negative gradient — refreshed via [`Datafit::sync_residual`]
-///   whenever `main` changed.
+///   whenever `main` changed;
+/// - [`MultiTaskQuadratic`]: `main = R = Y − XB` flattened **task-major**
+///   (length `n·q`; task `t` is the n-slice `[t·n, (t+1)·n)`), so each
+///   task behaves exactly like a scalar quadratic residual under the
+///   column kernels. See the [module docs](self) for the full
+///   matrix-state layout contract.
 #[derive(Clone, Debug, PartialEq)]
 pub struct FitState {
     /// The incrementally-maintained vector (see type docs).
@@ -153,6 +191,15 @@ pub trait Datafit: Clone + Send + Sync + std::fmt::Debug + 'static {
     /// (no `aux`, no [`Datafit::sync_residual`] work). The legacy
     /// residual-slice entry points in `duality`/`screening` assert this.
     fn state_is_residual(&self) -> bool;
+
+    /// Number of response columns `q` (the width of `Y`). `1` for every
+    /// scalar datafit. A `q > 1` datafit commits to the flattened
+    /// matrix-state layout documented at the [module level](self):
+    /// n-dimensional state task-major, p-dimensional state feature-major,
+    /// with `q = 1` degenerating byte-identically to the scalar vectors.
+    fn tasks(&self) -> usize {
+        1
+    }
 
     /// Factor applied to the quadratic-case Lipschitz constants
     /// `‖X_g‖₂²`: `1` for least squares, `¼` for logistic (the logistic
@@ -442,6 +489,109 @@ impl Datafit for Logistic {
     }
 }
 
+/// Multi-response least squares `f(B) = ½‖Y − XB‖_F²` over `q` tasks
+/// (arXiv 1506.03736). The maintained state is the residual matrix
+/// `R = Y − XB`, flattened task-major; coefficients and correlations are
+/// flattened feature-major (see the [module docs](self)).
+///
+/// Every scalar hook is implemented with the *same arithmetic* as the
+/// plain [`Quadratic`] datafit on the flattened vectors (Frobenius = flat
+/// ℓ2), so `MultiTaskQuadratic { tasks: 1 }` runs bit-identically to
+/// `Quadratic { ridge: 0.0 }` — the safety contract
+/// `tests/datafit_multitask.rs` pins across backends and solvers.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct MultiTaskQuadratic {
+    /// Response width `q ≥ 1`.
+    pub tasks: usize,
+}
+
+impl MultiTaskQuadratic {
+    pub fn new(tasks: usize) -> MultiTaskQuadratic {
+        assert!(tasks >= 1, "a multi-task datafit needs at least one task");
+        MultiTaskQuadratic { tasks }
+    }
+}
+
+impl Datafit for MultiTaskQuadratic {
+    fn kind(&self) -> FitKind {
+        FitKind::MultiTask
+    }
+
+    fn state_is_residual(&self) -> bool {
+        true
+    }
+
+    fn tasks(&self) -> usize {
+        self.tasks
+    }
+
+    fn zero_residual<'a>(&self, y: &'a [f64]) -> Cow<'a, [f64]> {
+        Cow::Borrowed(y)
+    }
+
+    fn gap_scale(&self, y: &[f64]) -> f64 {
+        // ‖Y‖_F² — the flat ℓ2 of the task-major layout, so q = 1 is the
+        // scalar quadratic's ‖y‖² exactly.
+        l2_norm_sq(y)
+    }
+
+    fn loss(&self, _y: &[f64], main: &[f64], _beta: &[f64]) -> f64 {
+        0.5 * l2_norm_sq(main)
+    }
+
+    fn dual_at(&self, y: &[f64], theta: &[f64], _theta_aug_sq: f64, lambda: f64) -> f64 {
+        // The multi-task dual objective is the scalar quadratic one on the
+        // flattened (Frobenius) geometry.
+        crate::solver::duality::dual_value(y, theta, lambda)
+    }
+
+    fn adjust_xt<'a>(&self, xt: &'a [f64], _beta: &'a [f64]) -> Cow<'a, [f64]> {
+        Cow::Borrowed(xt)
+    }
+
+    fn delta_sign(&self) -> f64 {
+        -1.0
+    }
+
+    fn sync_residual(&self, _y: &[f64], _state: &mut FitState) {}
+
+    fn supports_parallel_cd(&self) -> bool {
+        // The speculative parallel CD epoch proposes scalar per-feature
+        // blocks; only the q = 1 degenerate case matches its indexing
+        // (where this datafit *is* the plain quadratic, bit for bit).
+        self.tasks == 1
+    }
+
+    fn init_state<D: Design>(&self, x: &D, y: &[f64], beta: &[f64]) -> FitState {
+        let mut main = y.to_vec();
+        if beta.iter().any(|&b| b != 0.0) {
+            if self.tasks == 1 {
+                // The scalar warm-start path, bit for bit.
+                let xb = x.matvec(beta);
+                for (r, v) in main.iter_mut().zip(&xb) {
+                    *r -= v;
+                }
+            } else {
+                let n = x.n_rows();
+                let p = x.n_cols();
+                let q = self.tasks;
+                let mut beta_t = vec![0.0; p];
+                let mut xb = vec![0.0; n];
+                for t in 0..q {
+                    for j in 0..p {
+                        beta_t[j] = beta[j * q + t];
+                    }
+                    x.matvec_into(&beta_t, &mut xb);
+                    for (r, v) in main[t * n..(t + 1) * n].iter_mut().zip(&xb) {
+                        *r -= v;
+                    }
+                }
+            }
+        }
+        FitState { main, aux: None }
+    }
+}
+
 /// Numerically stable `σ(z) = 1/(1+e^{−z})` (no overflow for any finite
 /// `z`; exact 0/1 saturation only in the far tails where `e^{∓z}`
 /// underflows).
@@ -585,5 +735,44 @@ mod tests {
     #[should_panic(expected = "logistic labels")]
     fn logistic_rejects_out_of_range_labels() {
         Logistic.validate_y(&[0.0, 1.5]);
+    }
+
+    #[test]
+    fn multitask_q1_state_matches_quadratic_bitwise() {
+        let x = Matrix::from_row_major(&[1.0, 0.0, 0.0, 2.0], 2, 2);
+        let y = [1.0, 3.0];
+        let q = Quadratic::default();
+        let mt = MultiTaskQuadratic::new(1);
+        for beta in [[0.0, 0.0], [1.0, 0.5]] {
+            let a = q.init_state(&x, &y, &beta);
+            let b = mt.init_state(&x, &y, &beta);
+            assert_eq!(a.main, b.main);
+            assert!(b.aux.is_none());
+        }
+        assert_eq!(q.gap_scale(&y).to_bits(), mt.gap_scale(&y).to_bits());
+        assert!(mt.supports_parallel_cd());
+        assert!(!MultiTaskQuadratic::new(2).supports_parallel_cd());
+        assert_eq!(mt.tasks(), 1);
+        assert_eq!(FitKind::from_name("multitask"), Some(FitKind::MultiTask));
+    }
+
+    #[test]
+    fn multitask_warm_state_is_per_task_residual() {
+        // X is 2x2; two tasks. beta is feature-major: rows (1, -1), (0, 2).
+        let x = Matrix::from_row_major(&[1.0, 0.0, 0.0, 2.0], 2, 2);
+        let y = [1.0, 3.0, 5.0, 7.0]; // task-major: Y_0 = (1,3), Y_1 = (5,7)
+        let mt = MultiTaskQuadratic::new(2);
+        let beta = [1.0, -1.0, 0.0, 2.0];
+        let st = mt.init_state(&x, &y, &beta);
+        // Task 0 uses beta column (1, 0): Xb = (1, 0); task 1 uses
+        // (-1, 2): Xb = (-1, 4).
+        assert_eq!(st.main, vec![0.0, 3.0, 6.0, 3.0]);
+        assert_eq!(st.residual().len(), 4);
+    }
+
+    #[test]
+    #[should_panic(expected = "at least one task")]
+    fn multitask_rejects_zero_tasks() {
+        MultiTaskQuadratic::new(0);
     }
 }

@@ -11,7 +11,7 @@ use super::sweep::{self, SweepCtx};
 use crate::linalg::ops::l2_norm;
 use crate::linalg::simd;
 use crate::linalg::Design;
-use crate::norms::sgl::omega;
+use crate::norms::block::{omega_rows, row_norms};
 
 /// Primal objective `P_{λ,τ,w}(β) = f(β) + λΩ(β)` given the residual
 /// `ρ = y − Xβ` (kept up to date by the solvers; never recomputed here).
@@ -38,7 +38,10 @@ pub fn primal_value_state<D: Design, F: Datafit>(
     main: &[f64],
     lambda: f64,
 ) -> f64 {
-    pb.datafit.loss(&pb.y, main, beta) + lambda * omega(beta, &pb.groups, pb.tau, &pb.weights)
+    // `omega_rows` is the scalar `Ω` bit-for-bit at q = 1 and the row-norm
+    // multi-task penalty otherwise (β is feature-major, `p · q` entries).
+    let pen = omega_rows(beta, pb.datafit.tasks(), &pb.groups, pb.tau, &pb.weights);
+    pb.datafit.loss(&pb.y, main, beta) + lambda * pen
 }
 
 /// Quadratic dual objective `D_λ(θ) = ½‖y‖² − λ²/2 ‖θ − y/λ‖²` (Eq. 6).
@@ -133,7 +136,7 @@ impl DualSnapshot {
         lambda: f64,
         ctx: &SweepCtx,
     ) -> Self {
-        let mut xt_rho = vec![0.0; pb.p()];
+        let mut xt_rho = vec![0.0; pb.p() * pb.datafit.tasks()];
         sweep::xt_full(ctx, pb, state.resid, &mut xt_rho);
         Self::compute_state_with_xt_rho_ctx(pb, beta, state, &xt_rho, lambda, ctx)
     }
@@ -182,7 +185,15 @@ impl DualSnapshot {
         ctx: &SweepCtx,
     ) -> Self {
         let adjusted = pb.datafit.adjust_xt(xt_rho, beta);
-        let dual_norm = sweep::omega_dual(ctx, &adjusted, &pb.groups, pb.tau, &pb.weights);
+        let q = pb.datafit.tasks();
+        let dual_norm = if q == 1 {
+            sweep::omega_dual(ctx, &adjusted, &pb.groups, pb.tau, &pb.weights)
+        } else {
+            // Multi-task dual norm: the scalar Ω^D on the p-vector of
+            // feature row norms of the p × q correlation matrix.
+            let scores = row_norms(&adjusted, q);
+            sweep::omega_dual(ctx, &scores, &pb.groups, pb.tau, &pb.weights)
+        };
         let scale = lambda.max(dual_norm);
         let theta: Vec<f64> = state.resid.iter().map(|r| r / scale).collect();
         let xt_theta: Vec<f64> = adjusted.iter().map(|v| v / scale).collect();
@@ -438,6 +449,68 @@ mod tests {
         let mut rng = Pcg::seeded(77);
         for _ in 0..20 {
             let beta: Vec<f64> = (0..pb.p()).map(|_| rng.normal() * 0.5).collect();
+            let lambda = rng.uniform_in(0.05, 1.2) * lmax;
+            let gap = duality_gap(&pb, &beta, lambda);
+            assert!(gap >= 0.0, "weak duality violated: {gap}");
+        }
+    }
+
+    #[test]
+    fn multitask_q1_snapshot_is_bitwise_scalar() {
+        use crate::solver::datafit::MultiTaskQuadratic;
+        let pb = random_problem(41);
+        let mt = SglProblem::with_datafit(
+            pb.x.clone(),
+            pb.y.clone(),
+            pb.groups.clone(),
+            pb.tau,
+            pb.weights.clone(),
+            MultiTaskQuadratic::new(1),
+        );
+        let mut rng = Pcg::seeded(55);
+        for _ in 0..10 {
+            let beta: Vec<f64> = (0..pb.p()).map(|_| rng.normal() * 0.2).collect();
+            let lambda = rng.uniform_in(0.1, 1.2) * pb.lambda_max();
+            let s1 = {
+                let st = pb.datafit.init_state(&pb.x, &pb.y, &beta);
+                DualSnapshot::compute_state(&pb, &beta, st.as_ref(), lambda)
+            };
+            let s2 = {
+                let st = mt.datafit.init_state(&mt.x, &mt.y, &beta);
+                DualSnapshot::compute_state(&mt, &beta, st.as_ref(), lambda)
+            };
+            assert_eq!(s1.primal.to_bits(), s2.primal.to_bits());
+            assert_eq!(s1.dual.to_bits(), s2.dual.to_bits());
+            assert_eq!(s1.gap.to_bits(), s2.gap.to_bits());
+            assert_eq!(s1.radius.to_bits(), s2.radius.to_bits());
+            assert_eq!(s1.dual_norm_xt_rho.to_bits(), s2.dual_norm_xt_rho.to_bits());
+            for (a, b) in s1.theta.iter().zip(&s2.theta) {
+                assert_eq!(a.to_bits(), b.to_bits());
+            }
+            for (a, b) in s1.xt_theta.iter().zip(&s2.xt_theta) {
+                assert_eq!(a.to_bits(), b.to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn multitask_weak_duality_and_trivial_optimum() {
+        use crate::solver::datafit::MultiTaskQuadratic;
+        let groups = Groups::from_sizes(&[3, 2, 3]);
+        let q = 3;
+        let mut rng = Pcg::seeded(61);
+        let x = Matrix::from_fn(12, groups.p(), |_, _| rng.normal());
+        let y: Vec<f64> = (0..12 * q).map(|_| rng.normal()).collect();
+        let w = groups.sqrt_size_weights();
+        let pb = SglProblem::with_datafit(x, y, groups, 0.4, w, MultiTaskQuadratic::new(q));
+        let lmax = pb.lambda_max();
+        assert!(lmax > 0.0);
+        // B = 0 is optimal at and above lambda_max: the gap closes.
+        let zero = vec![0.0; pb.p() * q];
+        assert!(duality_gap(&pb, &zero, lmax) < 1e-10);
+        assert!(duality_gap(&pb, &zero, 1.5 * lmax) < 1e-10);
+        for _ in 0..20 {
+            let beta: Vec<f64> = (0..pb.p() * q).map(|_| rng.normal() * 0.3).collect();
             let lambda = rng.uniform_in(0.05, 1.2) * lmax;
             let gap = duality_gap(&pb, &beta, lambda);
             assert!(gap >= 0.0, "weak duality violated: {gap}");

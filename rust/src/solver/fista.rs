@@ -52,10 +52,12 @@ pub fn solve_fista_with_rule<D: Design, F: Datafit>(
     let _solve_span = trace::span_with("solve", || {
         vec![("solver", "fista".into()), ("lambda", lambda.into()), ("p", p.into())]
     });
+    let q = pb.datafit.tasks();
     let inv_l = 1.0 / global_step_lipschitz(pb).max(1e-300);
     let mut state = ScreenState::new(pb, opts);
 
-    let mut beta = beta0.map(|b| b.to_vec()).unwrap_or_else(|| vec![0.0; p]);
+    let mut beta = beta0.map(|b| b.to_vec()).unwrap_or_else(|| vec![0.0; p * q]);
+    assert_eq!(beta.len(), p * q, "warm start must be feature-major p * tasks");
     let mut z = beta.clone(); // extrapolated point
     let mut beta_next = beta.clone();
     let mut t_k = 1.0_f64;
@@ -63,11 +65,12 @@ pub fn solve_fista_with_rule<D: Design, F: Datafit>(
     // Scratch datafit state, refreshed for whichever iterate (β, z or
     // β⁺) the next step reads.
     let mut fit = pb.datafit.init_state(&pb.x, &pb.y, &beta);
-    let mut xt_rho = vec![0.0; p];
+    let mut xt_rho = vec![0.0; p * q];
     let mut prev_obj = f64::INFINITY;
-    // Per-worker prox blocks, allocated once for the whole solve.
+    // Per-worker prox blocks, allocated once for the whole solve (d × q
+    // panels in the multi-task case).
     let max_group = (0..pb.n_groups()).map(|g| pb.groups.size(g)).max().unwrap_or(0);
-    let mut prox_scratch = sweep::ProxScratch::new(max_group, state.sweep.threads());
+    let mut prox_scratch = sweep::ProxScratch::new(max_group * q, state.sweep.threads());
 
     for epoch in 0..opts.max_epochs {
         if epoch % opts.fce == 0 {
@@ -100,7 +103,9 @@ pub fn solve_fista_with_rule<D: Design, F: Datafit>(
         sweep::xt_active(&state.sweep, &state.cols, pb, fit.residual(), &mut xt_rho);
         let mu = pb.datafit.ridge();
         if mu != 0.0 {
-            // Ridge term of the gradient at the extrapolated point.
+            // Ridge term of the gradient at the extrapolated point. No
+            // ridge-carrying datafit is multi-task today.
+            debug_assert_eq!(q, 1, "ridge gradient path is scalar-only");
             for k in 0..state.cols.n_active() {
                 let j = state.cols.feature(k);
                 xt_rho[j] -= mu * z[j];
@@ -133,13 +138,17 @@ pub fn solve_fista_with_rule<D: Design, F: Datafit>(
         prev_obj = obj;
 
         // Momentum update on the active coordinates (screened ones are
-        // zero in beta, beta_next and z alike).
+        // zero in beta, beta_next and z alike). The per-entry expression
+        // is the same at every q, so the q = 1 iterates are bit-identical
+        // to the historical scalar loop (`j * 1 + 0 == j`).
         let t_next = 0.5 * (1.0 + (1.0 + 4.0 * t_k * t_k).sqrt());
         let coef = (t_k - 1.0) / t_next;
         for k in 0..state.cols.n_active() {
             let j = state.cols.feature(k);
-            z[j] = beta_next[j] + coef * (beta_next[j] - beta[j]);
-            beta[j] = beta_next[j];
+            for i in j * q..(j + 1) * q {
+                z[i] = beta_next[i] + coef * (beta_next[i] - beta[i]);
+                beta[i] = beta_next[i];
+            }
         }
         t_k = t_next;
         epochs_done = epoch + 1;
@@ -225,6 +234,31 @@ mod tests {
             if !res.active.feature[j] {
                 assert!(reference.beta[j].abs() < 1e-7, "screened live feature {j}");
             }
+        }
+    }
+
+    #[test]
+    fn multitask_fista_matches_cd() {
+        use crate::linalg::Matrix;
+        use crate::solver::datafit::MultiTaskQuadratic;
+        use crate::solver::groups::Groups;
+        use crate::util::rng::Pcg;
+        let q = 3;
+        let groups = Groups::from_sizes(&[3, 3, 2]);
+        let p = groups.p();
+        let n = 18;
+        let mut rng = Pcg::seeded(13);
+        let x = Matrix::from_fn(n, p, |_, _| rng.normal());
+        let y: Vec<f64> = (0..n * q).map(|_| rng.normal()).collect();
+        let w = groups.sqrt_size_weights();
+        let pb = SglProblem::with_datafit(x, y, groups, 0.4, w, MultiTaskQuadratic::new(q));
+        let lambda = 0.2 * pb.lambda_max();
+        let opts = SolveOptions { tol: 1e-10, max_epochs: 200_000, ..Default::default() };
+        let a = cd::solve(&pb, lambda, None, &opts);
+        let f = solve_fista(&pb, lambda, None, &opts);
+        assert!(a.converged && f.converged, "cd={} fista={}", a.gap, f.gap);
+        for i in 0..p * q {
+            assert!((a.beta[i] - f.beta[i]).abs() < 5e-4, "i={i}");
         }
     }
 

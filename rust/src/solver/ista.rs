@@ -91,16 +91,19 @@ pub fn solve_ista_with_rule<D: Design, F: Datafit>(
     let _solve_span = trace::span_with("solve", || {
         vec![("solver", "ista".into()), ("lambda", lambda.into()), ("p", p.into())]
     });
+    let q = pb.datafit.tasks();
     let l_global = global_step_lipschitz(pb).max(1e-300);
     let mut state = ScreenState::new(pb, opts);
 
-    let mut beta = beta0.map(|b| b.to_vec()).unwrap_or_else(|| vec![0.0; p]);
+    let mut beta = beta0.map(|b| b.to_vec()).unwrap_or_else(|| vec![0.0; p * q]);
+    assert_eq!(beta.len(), p * q, "warm start must be feature-major p * tasks");
     let mut fit = pb.datafit.init_state(&pb.x, &pb.y, &beta);
     let mut epochs_done = 0usize;
-    let mut xt_rho = vec![0.0; p];
-    // Per-worker prox blocks, allocated once for the whole solve.
+    let mut xt_rho = vec![0.0; p * q];
+    // Per-worker prox blocks, allocated once for the whole solve (d × q
+    // panels in the multi-task case).
     let max_group = (0..pb.n_groups()).map(|g| pb.groups.size(g)).max().unwrap_or(0);
-    let mut prox_scratch = sweep::ProxScratch::new(max_group, state.sweep.threads());
+    let mut prox_scratch = sweep::ProxScratch::new(max_group * q, state.sweep.threads());
 
     for epoch in 0..opts.max_epochs {
         if epoch % opts.fce == 0 {
@@ -131,7 +134,9 @@ pub fn solve_ista_with_rule<D: Design, F: Datafit>(
         let mu = pb.datafit.ridge();
         if mu != 0.0 {
             // Ridge term of the gradient (implicit elastic net): the
-            // augmented rows contribute −μβ_j to each correlation.
+            // augmented rows contribute −μβ_j to each correlation. No
+            // ridge-carrying datafit is multi-task today.
+            debug_assert_eq!(q, 1, "ridge gradient path is scalar-only");
             for k in 0..state.cols.n_active() {
                 let j = state.cols.feature(k);
                 xt_rho[j] -= mu * beta[j];
@@ -217,6 +222,33 @@ mod tests {
                 SolveOptions { rule, tol: 1e-8, max_epochs: 200_000, ..Default::default() };
             let res = solve_ista(&pb, lambda, None, &opts);
             assert!(res.converged, "{rule:?}: gap={}", res.gap);
+        }
+    }
+
+    #[test]
+    fn multitask_ista_and_cd_agree() {
+        use crate::solver::datafit::MultiTaskQuadratic;
+        let q = 2;
+        let groups = Groups::from_sizes(&[3, 3, 3]);
+        let p = groups.p();
+        let n = 20;
+        let mut rng = Pcg::seeded(9);
+        let x = Matrix::from_fn(n, p, |_, _| rng.normal());
+        let y: Vec<f64> = (0..n * q).map(|_| rng.normal()).collect();
+        let w = groups.sqrt_size_weights();
+        let pb = SglProblem::with_datafit(x, y, groups, 0.35, w, MultiTaskQuadratic::new(q));
+        let lambda = 0.2 * pb.lambda_max();
+        let opts = SolveOptions { tol: 1e-10, max_epochs: 200_000, ..Default::default() };
+        let a = cd::solve(&pb, lambda, None, &opts);
+        let b = solve_ista(&pb, lambda, None, &opts);
+        assert!(a.converged && b.converged, "cd={} ista={}", a.gap, b.gap);
+        for i in 0..p * q {
+            assert!(
+                (a.beta[i] - b.beta[i]).abs() < 1e-4,
+                "i={i}: {} vs {}",
+                a.beta[i],
+                b.beta[i]
+            );
         }
     }
 

@@ -190,7 +190,7 @@ pub fn solve_path_with_handoff<D: Design, F: Datafit>(
     let mut rule = CaptureRule { inner: make_rule(opts.solve.rule, pb), last: None };
     let mut warm: Option<Vec<f64>> = None;
     if let Some(h) = handoff {
-        assert_eq!(h.beta.len(), pb.p(), "handoff beta length mismatch");
+        assert_eq!(h.beta.len(), pb.p() * pb.tasks(), "handoff beta length mismatch");
         if let Some(&first) = lambdas.first() {
             assert!(
                 first <= h.lambda * (1.0 + 1e-12),
@@ -589,6 +589,41 @@ mod tests {
         // Re-running the same grid from its *terminal* handoff would hand
         // a dual point forward in λ: the engine must refuse.
         solve_path_with_handoff(&pb, &lambdas, &opts, SolverKind::Cd, h.as_ref());
+    }
+
+    #[test]
+    fn multitask_path_warm_starts_and_hands_off() {
+        use crate::solver::datafit::MultiTaskQuadratic;
+        let q = 2;
+        let groups = Groups::uniform(4, 3);
+        let p = groups.p();
+        let n = 24;
+        let mut rng = Pcg::seeded(31);
+        let x = Matrix::from_fn(n, p, |_, _| rng.normal());
+        let y: Vec<f64> = (0..n * q).map(|_| rng.normal()).collect();
+        let w = groups.sqrt_size_weights();
+        let pb = SglProblem::with_datafit(x, y, groups, 0.3, w, MultiTaskQuadratic::new(q));
+        let lambdas = lambda_grid(pb.lambda_max(), 1.5, 8);
+        let opts = PathOptions {
+            delta: 1.5,
+            t_count: 8,
+            solve: SolveOptions { tol: 1e-9, ..Default::default() },
+        };
+        let full = solve_path_with(&pb, &lambdas, &opts, SolverKind::Cd);
+        assert!(full.all_converged());
+        assert!(full.results[0].beta.iter().all(|&b| b == 0.0));
+        assert_eq!(full.results[0].beta.len(), p * q);
+        // Split the grid; resuming from the handoff is bit-identical.
+        let (head, h) =
+            solve_path_with_handoff(&pb, &lambdas[..3], &opts, SolverKind::Cd, None);
+        let h = h.expect("handoff");
+        assert_eq!(h.beta.len(), p * q);
+        let (tail, _) =
+            solve_path_with_handoff(&pb, &lambdas[3..], &opts, SolverKind::Cd, Some(&h));
+        for (i, res) in head.results.iter().chain(tail.results.iter()).enumerate() {
+            assert_eq!(res.beta, full.results[i].beta, "t={i}");
+            assert_eq!(res.epochs, full.results[i].epochs, "t={i}");
+        }
     }
 
     #[test]

@@ -21,6 +21,7 @@
 use super::datafit::{Datafit, Quadratic};
 use super::groups::Groups;
 use crate::linalg::{Design, Matrix};
+use crate::norms::block::{omega_dual_argmax_rows, omega_dual_rows};
 use crate::norms::sgl::{omega_dual, omega_dual_argmax};
 
 /// An SGL problem `min_β f(β) + λ Ω_{τ,w}(β)` minus the choice of `λ`
@@ -78,7 +79,14 @@ impl<D: Design, F: Datafit> SglProblem<D, F> {
         weights: Vec<f64>,
         datafit: F,
     ) -> Self {
-        assert_eq!(x.n_rows(), y.len(), "X/y row mismatch");
+        // Multi-response datafits carry `q = tasks()` response columns in
+        // `y`, stored task-major (`y[t·n .. (t+1)·n]` is task t). Scalar
+        // datafits have tasks() == 1, so this is the old `n == y.len()`.
+        assert_eq!(
+            x.n_rows() * datafit.tasks(),
+            y.len(),
+            "X/y row mismatch (y must hold n * tasks entries, task-major)"
+        );
         assert_eq!(x.n_cols(), groups.p(), "X/groups column mismatch");
         assert_eq!(weights.len(), groups.n_groups(), "weights/groups mismatch");
         assert!((0.0..=1.0).contains(&tau), "tau must lie in [0, 1]");
@@ -135,20 +143,57 @@ impl<D: Design, F: Datafit> SglProblem<D, F> {
         self.groups.n_groups()
     }
 
+    /// Number of response columns `q` (1 for every scalar datafit).
+    #[inline]
+    pub fn tasks(&self) -> usize {
+        self.datafit.tasks()
+    }
+
+    /// `Xᵀ r₀` with `r₀` the datafit's residual at `β = 0`, feature-major
+    /// (`p · q` entries; the plain `tmatvec` for scalar datafits). For the
+    /// (multi-task) quadratic datafit this is `XᵀY` — the correlation
+    /// panel the static/dynamic/DST3 screening centers are built from.
+    pub fn xt_zero_residual(&self) -> Vec<f64> {
+        let r0 = self.datafit.zero_residual(&self.y);
+        let q = self.tasks();
+        if q == 1 {
+            return self.x.tmatvec(&r0);
+        }
+        let (n, p) = (self.n(), self.p());
+        let mut out = vec![0.0; p * q];
+        for t in 0..q {
+            let xt = self.x.tmatvec(&r0[t * n..(t + 1) * n]);
+            for (j, v) in xt.iter().enumerate() {
+                out[j * q + t] = *v;
+            }
+        }
+        out
+    }
+
     /// Critical parameter `λ_max = Ω^D(Xᵀ r₀)` (Eq. 9 / 22) with `r₀` the
     /// datafit's residual at `β = 0` (`y` for least squares, `y − ½` for
-    /// logistic): the smallest `λ` for which `β̂ = 0`.
+    /// logistic): the smallest `λ` for which `β̂ = 0`. Multi-response
+    /// datafits take the dual norm over the feature row norms of the
+    /// `p × q` correlation matrix (arXiv 1506.03736).
     pub fn lambda_max(&self) -> f64 {
-        let r0 = self.datafit.zero_residual(&self.y);
-        let xty = self.x.tmatvec(&r0);
-        omega_dual(&xty, &self.groups, self.tau, &self.weights)
+        let q = self.tasks();
+        let xty = self.xt_zero_residual();
+        if q == 1 {
+            omega_dual(&xty, &self.groups, self.tau, &self.weights)
+        } else {
+            omega_dual_rows(&xty, q, &self.groups, self.tau, &self.weights)
+        }
     }
 
     /// `λ_max` together with the argmax group `g★` (used by DST3, App. C).
     pub fn lambda_max_argmax(&self) -> (usize, f64) {
-        let r0 = self.datafit.zero_residual(&self.y);
-        let xty = self.x.tmatvec(&r0);
-        omega_dual_argmax(&xty, &self.groups, self.tau, &self.weights)
+        let q = self.tasks();
+        let xty = self.xt_zero_residual();
+        if q == 1 {
+            omega_dual_argmax(&xty, &self.groups, self.tau, &self.weights)
+        } else {
+            omega_dual_argmax_rows(&xty, q, &self.groups, self.tau, &self.weights)
+        }
     }
 
     /// Re-parameterize the same design for a different `τ` (CV over τ grid
@@ -317,6 +362,74 @@ mod tests {
         let r0: Vec<f64> = y01.iter().map(|v| v - 0.5).collect();
         let expect = omega_dual(&lg.x.tmatvec(&r0), &lg.groups, lg.tau, &lg.weights);
         assert_eq!(lg.lambda_max(), expect);
+    }
+
+    #[test]
+    fn multitask_q1_lambda_max_is_bitwise_scalar() {
+        use crate::solver::datafit::MultiTaskQuadratic;
+        let pb = random_problem(10, &[2, 3, 2], 0.4, 31);
+        let mt = SglProblem::with_datafit(
+            pb.x.clone(),
+            pb.y.clone(),
+            pb.groups.clone(),
+            pb.tau,
+            pb.weights.clone(),
+            MultiTaskQuadratic::new(1),
+        );
+        assert_eq!(mt.tasks(), 1);
+        assert_eq!(pb.lambda_max().to_bits(), mt.lambda_max().to_bits());
+        let (g1, v1) = pb.lambda_max_argmax();
+        let (g2, v2) = mt.lambda_max_argmax();
+        assert_eq!((g1, v1.to_bits()), (g2, v2.to_bits()));
+        assert_eq!(pb.col_norms, mt.col_norms);
+        assert_eq!(pb.lipschitz, mt.lipschitz);
+    }
+
+    #[test]
+    fn multitask_lambda_max_takes_dual_norm_over_row_norms() {
+        use crate::norms::block::row_norms;
+        use crate::solver::datafit::MultiTaskQuadratic;
+        let pb = random_problem(9, &[2, 2, 2], 0.5, 32);
+        let q = 3;
+        let n = pb.n();
+        let mut rng = Pcg::seeded(77);
+        let y: Vec<f64> = (0..n * q).map(|_| rng.normal()).collect();
+        let mt = SglProblem::with_datafit(
+            pb.x.clone(),
+            y.clone(),
+            pb.groups.clone(),
+            pb.tau,
+            pb.weights.clone(),
+            MultiTaskQuadratic::new(q),
+        );
+        // Hand-rolled: per-task X^T y_t, gathered feature-major, row norms,
+        // scalar dual norm.
+        let mut xty = vec![0.0; mt.p() * q];
+        for t in 0..q {
+            let col = mt.x.tmatvec(&y[t * n..(t + 1) * n]);
+            for (j, v) in col.iter().enumerate() {
+                xty[j * q + t] = *v;
+            }
+        }
+        let scores = row_norms(&xty, q);
+        let expect = omega_dual(&scores, &mt.groups, mt.tau, &mt.weights);
+        assert_eq!(mt.lambda_max().to_bits(), expect.to_bits());
+    }
+
+    #[test]
+    #[should_panic(expected = "X/y row mismatch")]
+    fn multitask_y_length_must_cover_all_tasks() {
+        use crate::solver::datafit::MultiTaskQuadratic;
+        let groups = Groups::from_sizes(&[2]);
+        let x = Matrix::zeros(3, 2);
+        SglProblem::with_datafit(
+            x,
+            vec![0.0; 3], // needs 3 * 2 = 6 entries for q = 2
+            groups.clone(),
+            0.5,
+            groups.sqrt_size_weights(),
+            MultiTaskQuadratic::new(2),
+        );
     }
 
     #[test]

@@ -41,6 +41,7 @@ use super::cd::SolveOptions;
 use super::datafit::{Datafit, FitState};
 use super::problem::SglProblem;
 use crate::linalg::Design;
+use crate::norms::block::sgl_prox_rows_inplace;
 use crate::norms::prox::sgl_prox_inplace;
 use crate::norms::sgl::{omega_dual as omega_dual_serial, omega_dual_group};
 use crate::solver::groups::Groups;
@@ -256,7 +257,23 @@ pub fn xt_full<D: Design, F: Datafit>(
     xt: &mut [f64],
 ) {
     let p = pb.p();
-    debug_assert_eq!(xt.len(), p);
+    let q = pb.datafit.tasks();
+    debug_assert_eq!(xt.len(), p * q);
+    if q > 1 {
+        // Multi-response: `v` is the task-major n × q state, `xt` the
+        // feature-major p × q correlation matrix. Columns still have
+        // disjoint writes, so the parallel schedule stays deterministic.
+        let n = pb.n();
+        let out = SharedSlice::new(xt);
+        ctx.for_each(p, 64, ctx.tuning.xt_floor, |j| {
+            for t in 0..q {
+                // SAFETY: each column index is claimed by exactly one
+                // worker; (j, t) writes are disjoint.
+                unsafe { out.set(j * q + t, pb.x.col_dot(j, &v[t * n..(t + 1) * n])) };
+            }
+        });
+        return;
+    }
     if !ctx.engage(p, ctx.tuning.xt_floor) {
         pb.x.tmatvec_into(v, xt);
         return;
@@ -279,6 +296,20 @@ pub fn xt_active<D: Design, F: Datafit>(
     xt: &mut [f64],
 ) {
     let n_active = cols.n_active();
+    let q = pb.datafit.tasks();
+    if q > 1 {
+        let n = pb.n();
+        let out = SharedSlice::new(xt);
+        ctx.for_each(n_active, 64, ctx.tuning.xt_floor, |k| {
+            let j = cols.feature(k);
+            for t in 0..q {
+                // SAFETY: compact columns map to distinct original
+                // features; (j, t) writes are disjoint.
+                unsafe { out.set(j * q + t, cols.col_dot(pb, k, &v[t * n..(t + 1) * n])) };
+            }
+        });
+        return;
+    }
     if !ctx.engage(n_active, ctx.tuning.xt_floor) {
         cols.xt_into(pb, v, xt);
         return;
@@ -303,6 +334,23 @@ pub fn residual<D: Design, F: Datafit>(
     rho: &mut [f64],
 ) {
     let n_active = cols.n_active();
+    let q = pb.datafit.tasks();
+    if q > 1 {
+        // Multi-response residual, task by task: R_t = Y_t − X B_t over
+        // the active columns, serial column order (deterministic).
+        let n = pb.n();
+        for t in 0..q {
+            let rt = &mut rho[t * n..(t + 1) * n];
+            rt.copy_from_slice(&pb.y[t * n..(t + 1) * n]);
+            for k in 0..n_active {
+                let bj = beta[cols.feature(k) * q + t];
+                if bj != 0.0 {
+                    cols.col_axpy(pb, k, -bj, rt);
+                }
+            }
+        }
+        return;
+    }
     let crew = match ctx.crew_if(n_active, ctx.tuning.residual_floor) {
         Some(c) => c,
         None => {
@@ -341,6 +389,21 @@ pub fn linear_predictor<D: Design, F: Datafit>(
     xb: &mut [f64],
 ) {
     let n_active = cols.n_active();
+    let q = pb.datafit.tasks();
+    if q > 1 {
+        let n = pb.n();
+        for t in 0..q {
+            let xbt = &mut xb[t * n..(t + 1) * n];
+            xbt.fill(0.0);
+            for k in 0..n_active {
+                let bj = beta[cols.feature(k) * q + t];
+                if bj != 0.0 {
+                    cols.col_axpy(pb, k, bj, xbt);
+                }
+            }
+        }
+        return;
+    }
     let crew = match ctx.crew_if(n_active, ctx.tuning.residual_floor) {
         Some(c) => c,
         None => {
@@ -416,7 +479,9 @@ pub struct ProxScratch {
 }
 
 impl ProxScratch {
-    /// `threads` blocks of `max_group` coefficients.
+    /// `threads` blocks of `max_group` coefficients. Multi-response
+    /// solvers pass `max_group · q` so a block holds a group's whole
+    /// feature-major coefficient panel.
     pub fn new(max_group: usize, threads: usize) -> Self {
         let threads = threads.max(1);
         ProxScratch { buf: vec![0.0; max_group * threads], width: max_group }
@@ -440,6 +505,40 @@ pub fn ista_sweep<D: Design, F: Datafit>(
 ) -> bool {
     let groups = cols.groups();
     let width = scratch.width;
+    let q = pb.datafit.tasks();
+    if q > 1 {
+        // Multi-response prox sweep (serial — the per-group row prox is
+        // cheap relative to the correlation sweep): β rows are
+        // feature-major, the group block gathers into a d × q panel and
+        // runs the row-block SGL prox.
+        let block = &mut scratch.buf[..width];
+        let mut changed = false;
+        for &(g, s, e) in groups {
+            let d = e - s;
+            for (k, idx) in (s..e).enumerate() {
+                let j = cols.feature(idx);
+                for t in 0..q {
+                    block[k * q + t] = beta[j * q + t] + xt_rho[j * q + t] / l_global;
+                }
+            }
+            sgl_prox_rows_inplace(
+                &mut block[..d * q],
+                q,
+                pb.tau * lambda / l_global,
+                (1.0 - pb.tau) * pb.weights[g] * lambda / l_global,
+            );
+            for (k, idx) in (s..e).enumerate() {
+                let j = cols.feature(idx);
+                for t in 0..q {
+                    if block[k * q + t] != beta[j * q + t] {
+                        beta[j * q + t] = block[k * q + t];
+                        changed = true;
+                    }
+                }
+            }
+        }
+        return changed;
+    }
     if !ctx.engage(groups.len(), ctx.tuning.prox_floor) {
         let block = &mut scratch.buf[..width];
         let mut changed = false;
@@ -523,6 +622,30 @@ pub fn fista_sweep<D: Design, F: Datafit>(
 ) {
     let groups = cols.groups();
     let width = scratch.width;
+    let q = pb.datafit.tasks();
+    if q > 1 {
+        let block = &mut scratch.buf[..width];
+        for &(g, s, e) in groups {
+            let d = e - s;
+            for (k, idx) in (s..e).enumerate() {
+                let j = cols.feature(idx);
+                for t in 0..q {
+                    block[k * q + t] = z[j * q + t] + xt_rho[j * q + t] * inv_l;
+                }
+            }
+            sgl_prox_rows_inplace(
+                &mut block[..d * q],
+                q,
+                pb.tau * lambda * inv_l,
+                (1.0 - pb.tau) * pb.weights[g] * lambda * inv_l,
+            );
+            for (k, idx) in (s..e).enumerate() {
+                let j = cols.feature(idx);
+                beta_next[j * q..(j + 1) * q].copy_from_slice(&block[k * q..(k + 1) * q]);
+            }
+        }
+        return;
+    }
     if !ctx.engage(groups.len(), ctx.tuning.prox_floor) {
         let block = &mut scratch.buf[..width];
         for &(g, s, e) in groups {

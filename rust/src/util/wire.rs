@@ -37,7 +37,7 @@ use crate::coordinator::metrics::{MetricsSnapshot, TimerStats};
 use crate::linalg::{CscMatrix, Design, Matrix};
 use crate::screening::{ActiveSet, RuleKind};
 use crate::solver::cd::{CheckEvent, SolveOptions, SolveResult};
-use crate::solver::datafit::{Datafit, FitKind, Logistic, Quadratic};
+use crate::solver::datafit::{Datafit, FitKind, Logistic, MultiTaskQuadratic, Quadratic};
 use crate::solver::duality::DualSnapshot;
 use crate::solver::groups::Groups;
 use crate::solver::path::{DualHandoff, PathOptions, PathResult};
@@ -68,7 +68,14 @@ use std::io::{Read, Write};
 /// [`StatsReply`](Message::StatsReply) scrape pair exists. The Pong body
 /// grew, so a v3 peer decoding a v4 heartbeat would misread bytes —
 /// refuse the handshake instead.
-pub const WIRE_VERSION: u8 = 4;
+///
+/// **v5** (multi-response PR): [`WireDatafit`] grows the
+/// [`MultiTask`](WireDatafit::MultiTask) tag (with its task count), and a
+/// multi-task [`WireDataset`] carries `y` with `n_rows · tasks` entries
+/// (task-major). A v4 peer has no multi-task arm and would reject — or,
+/// worse, misvalidate — such a dataset, so v4 frames are refused with
+/// [`WireError::BadVersion`].
+pub const WIRE_VERSION: u8 = 5;
 
 /// Hard cap on one frame's body (2 GiB): a corrupt length prefix must
 /// not become a giant allocation.
@@ -538,6 +545,9 @@ pub enum WireDatafit {
     Quadratic { ridge: f64 },
     /// Binary logistic regression (labels in `[0, 1]`).
     Logistic,
+    /// Multi-task least squares over `tasks` response columns (v5). The
+    /// dataset's `y` then holds `n_rows · tasks` entries, task-major.
+    MultiTask { tasks: u64 },
 }
 
 impl WireDatafit {
@@ -546,6 +556,7 @@ impl WireDatafit {
         match f.kind() {
             FitKind::Quadratic => WireDatafit::Quadratic { ridge: f.ridge() },
             FitKind::Logistic => WireDatafit::Logistic,
+            FitKind::MultiTask => WireDatafit::MultiTask { tasks: f.tasks() as u64 },
         }
     }
 
@@ -554,6 +565,16 @@ impl WireDatafit {
         match self {
             WireDatafit::Quadratic { .. } => FitKind::Quadratic.name(),
             WireDatafit::Logistic => FitKind::Logistic.name(),
+            WireDatafit::MultiTask { .. } => FitKind::MultiTask.name(),
+        }
+    }
+
+    /// Number of response columns the dataset's `y` must cover per design
+    /// row (1 for every scalar datafit).
+    pub fn tasks(&self) -> u64 {
+        match self {
+            WireDatafit::MultiTask { tasks } => *tasks,
+            _ => 1,
         }
     }
 }
@@ -579,6 +600,8 @@ pub enum ProblemPayload {
     Csc(SglProblem<CscMatrix>),
     DenseLogistic(SglProblem<Matrix, Logistic>),
     CscLogistic(SglProblem<CscMatrix, Logistic>),
+    DenseMultiTask(SglProblem<Matrix, MultiTaskQuadratic>),
+    CscMultiTask(SglProblem<CscMatrix, MultiTaskQuadratic>),
 }
 
 impl WireDataset {
@@ -644,18 +667,30 @@ impl WireDataset {
         if group_sizes.is_empty() {
             return Err(WireError::Malformed("dataset has no groups"));
         }
-        match datafit {
+        // Datafit parameters are validated first; `tasks` is the number
+        // of y columns each design row must cover (1 for scalar fits).
+        let tasks: usize = match datafit {
             WireDatafit::Quadratic { ridge } => {
                 if !(ridge.is_finite() && ridge >= 0.0) {
                     return Err(WireError::Malformed("ridge must be finite and non-negative"));
                 }
+                1
             }
             WireDatafit::Logistic => {
                 if !y.iter().all(|v| v.is_finite() && (0.0..=1.0).contains(v)) {
                     return Err(WireError::Malformed("logistic labels must lie in [0, 1]"));
                 }
+                1
             }
-        }
+            WireDatafit::MultiTask { tasks } => {
+                if tasks == 0 {
+                    return Err(WireError::Malformed(
+                        "multi-task datafit needs at least one task",
+                    ));
+                }
+                usize::try_from(tasks).map_err(|_| WireError::Malformed("usize overflow"))?
+            }
+        };
         let mut sizes = Vec::with_capacity(group_sizes.len());
         let mut p: usize = 0;
         for &s in &group_sizes {
@@ -680,7 +715,10 @@ impl WireDataset {
                 if n_cols != p {
                     return Err(WireError::Malformed("groups do not cover the design columns"));
                 }
-                if y.len() != n_rows {
+                let y_len = n_rows
+                    .checked_mul(tasks)
+                    .ok_or(WireError::Malformed("y length overflow"))?;
+                if y.len() != y_len {
                     return Err(WireError::Malformed("y/design row mismatch"));
                 }
                 let total = n_rows
@@ -705,13 +743,26 @@ impl WireDataset {
                     WireDatafit::Logistic => ProblemPayload::DenseLogistic(
                         SglProblem::with_datafit(x, y, groups, tau, weights, Logistic),
                     ),
+                    WireDatafit::MultiTask { .. } => {
+                        ProblemPayload::DenseMultiTask(SglProblem::with_datafit(
+                            x,
+                            y,
+                            groups,
+                            tau,
+                            weights,
+                            MultiTaskQuadratic::new(tasks),
+                        ))
+                    }
                 })
             }
             WireDesign::Csc { n_rows, n_cols, indptr, indices, values } => {
                 if n_cols != p {
                     return Err(WireError::Malformed("groups do not cover the design columns"));
                 }
-                if y.len() != n_rows {
+                let y_len = n_rows
+                    .checked_mul(tasks)
+                    .ok_or(WireError::Malformed("y length overflow"))?;
+                if y.len() != y_len {
                     return Err(WireError::Malformed("y/design row mismatch"));
                 }
                 if indptr.len() != n_cols + 1 {
@@ -774,6 +825,16 @@ impl WireDataset {
                     WireDatafit::Logistic => ProblemPayload::CscLogistic(
                         SglProblem::with_datafit(x, y, groups, tau, weights, Logistic),
                     ),
+                    WireDatafit::MultiTask { .. } => {
+                        ProblemPayload::CscMultiTask(SglProblem::with_datafit(
+                            x,
+                            y,
+                            groups,
+                            tau,
+                            weights,
+                            MultiTaskQuadratic::new(tasks),
+                        ))
+                    }
                 })
             }
         }
@@ -787,6 +848,10 @@ fn put_datafit(e: &mut Enc, f: &WireDatafit) {
             e.f64(*ridge);
         }
         WireDatafit::Logistic => e.u8(1),
+        WireDatafit::MultiTask { tasks } => {
+            e.u8(2);
+            e.u64(*tasks);
+        }
     }
 }
 
@@ -794,6 +859,7 @@ fn get_datafit(d: &mut Dec) -> Result<WireDatafit, WireError> {
     Ok(match d.u8()? {
         0 => WireDatafit::Quadratic { ridge: d.f64()? },
         1 => WireDatafit::Logistic,
+        2 => WireDatafit::MultiTask { tasks: d.u64()? },
         _ => return Err(WireError::Malformed("unknown datafit tag")),
     })
 }

@@ -284,6 +284,12 @@ fn mixed_datafit_batch_over_loopback_fleet_matches_local() {
             AnyProblem::CscLogistic(p) => {
                 solve_path_sharded(p.as_ref(), &job.lambdas, &job.opts, job.solver, job.shards)
             }
+            AnyProblem::DenseMultiTask(p) => {
+                solve_path_sharded(p.as_ref(), &job.lambdas, &job.opts, job.solver, job.shards)
+            }
+            AnyProblem::CscMultiTask(p) => {
+                solve_path_sharded(p.as_ref(), &job.lambdas, &job.opts, job.solver, job.shards)
+            }
         };
         assert_eq!(got.lambdas, want.lambdas, "{}", job.label);
         for (t, (a, b)) in want.results.iter().zip(&got.results).enumerate() {

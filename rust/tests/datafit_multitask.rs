@@ -1,0 +1,331 @@
+//! Cross-module integration for the multi-task quadratic datafit: at
+//! q = 1 the matrix-valued engine is *bit-identical* to the scalar
+//! `Quadratic` one (β, gaps, screen masks) on both backends and all
+//! three solvers, the GAP safe rules are *safe* (never change the
+//! answer) on a q = 5 path, λ-sharding is bit-identical to the
+//! monolithic path, and a mixed quadratic + logistic + multi-task batch
+//! over a loopback fleet matches the local engine bit for bit.
+
+use sgl::coordinator::metrics::Metrics;
+use sgl::coordinator::remote::{FleetConfig, RemoteFleet, WorkerServer};
+use sgl::coordinator::service::AnyProblem;
+use sgl::coordinator::shard::{solve_batch_interleaved, solve_path_sharded, InterleavedJob};
+use sgl::data::synthetic::{generate, generate_multitask, SyntheticConfig};
+use sgl::linalg::{CscMatrix, Matrix};
+use sgl::screening::RuleKind;
+use sgl::solver::cd::SolveOptions;
+use sgl::solver::datafit::{Logistic, MultiTaskQuadratic};
+use sgl::solver::path::{solve_path, solve_path_on_grid, DualHandoff, PathOptions, PathResult};
+use sgl::solver::problem::{lambda_grid, SglProblem};
+use sgl::solver::SolverKind;
+use std::sync::Arc;
+
+fn synth_cfg(seed: u64) -> SyntheticConfig {
+    SyntheticConfig {
+        n: 40,
+        n_groups: 20,
+        group_size: 4,
+        gamma1: 4,
+        gamma2: 2,
+        seed,
+        ..Default::default()
+    }
+}
+
+/// Planted multi-response problem on the dense backend (the same
+/// construction the CLI uses for `--datafit multitask` on synthetic
+/// data).
+fn mt_problem(tau: f64, seed: u64, q: usize) -> SglProblem<Matrix, MultiTaskQuadratic> {
+    let d = generate_multitask(&synth_cfg(seed), q);
+    let weights = d.dataset.groups.sqrt_size_weights();
+    SglProblem::with_datafit(
+        d.dataset.x,
+        d.dataset.y,
+        d.dataset.groups,
+        tau,
+        weights,
+        MultiTaskQuadratic::new(q),
+    )
+}
+
+fn csc_mt(pb: &SglProblem<Matrix, MultiTaskQuadratic>) -> SglProblem<CscMatrix, MultiTaskQuadratic> {
+    SglProblem::with_datafit(
+        CscMatrix::from_dense(&pb.x),
+        pb.y.clone(),
+        pb.groups.clone(),
+        pb.tau,
+        pb.weights.clone(),
+        MultiTaskQuadratic::new(pb.tasks()),
+    )
+}
+
+/// Binarized-at-mean logistic problem (mirrors `datafit_logistic.rs`),
+/// for the mixed fleet batch.
+fn logistic_problem(tau: f64, seed: u64) -> SglProblem<CscMatrix, Logistic> {
+    let d = generate(&synth_cfg(seed));
+    let mean = d.dataset.y.iter().sum::<f64>() / d.dataset.y.len() as f64;
+    let labels: Vec<f64> = d.dataset.y.iter().map(|&v| f64::from(v > mean)).collect();
+    let weights = d.dataset.groups.sqrt_size_weights();
+    SglProblem::with_datafit(
+        CscMatrix::from_dense(&d.dataset.x),
+        labels,
+        d.dataset.groups,
+        tau,
+        weights,
+        Logistic,
+    )
+}
+
+/// The strongest equality on offer: every β coefficient, final gap,
+/// screen mask and epoch count identical down to the bit pattern.
+fn assert_paths_bitwise(a: &PathResult, b: &PathResult, what: &str) {
+    assert_eq!(a.lambdas.len(), b.lambdas.len(), "{what}: grid length");
+    for (t, (ra, rb)) in a.results.iter().zip(&b.results).enumerate() {
+        assert_eq!(ra.beta.len(), rb.beta.len(), "{what} t={t}: beta length");
+        for (j, (x, y)) in ra.beta.iter().zip(&rb.beta).enumerate() {
+            assert_eq!(x.to_bits(), y.to_bits(), "{what} t={t} j={j}: {x} vs {y}");
+        }
+        assert_eq!(ra.gap.to_bits(), rb.gap.to_bits(), "{what} t={t}: gap bits");
+        assert_eq!(ra.active.feature, rb.active.feature, "{what} t={t}: feature mask");
+        assert_eq!(ra.active.group, rb.active.group, "{what} t={t}: group mask");
+        assert_eq!(ra.epochs, rb.epochs, "{what} t={t}: epoch count");
+        assert_eq!(ra.converged, rb.converged, "{what} t={t}: converged flag");
+    }
+}
+
+/// The q = 1 contract: `MultiTaskQuadratic::new(1)` is an *extraction*
+/// of the scalar engine, not an approximation of it — β, gaps and
+/// screen masks agree bit for bit on both backends and all three
+/// solvers.
+#[test]
+fn q1_multitask_is_bit_identical_to_scalar_quadratic() {
+    let d = generate(&synth_cfg(11));
+    let tau = 0.3;
+    let scalar = SglProblem::new(d.dataset.x, d.dataset.y, d.dataset.groups, tau);
+    let mt = SglProblem::with_datafit(
+        scalar.x.clone(),
+        scalar.y.clone(),
+        scalar.groups.clone(),
+        tau,
+        scalar.weights.clone(),
+        MultiTaskQuadratic::new(1),
+    );
+    assert_eq!(
+        scalar.lambda_max().to_bits(),
+        mt.lambda_max().to_bits(),
+        "lambda_max bits"
+    );
+    let scalar_csc = SglProblem::new(
+        CscMatrix::from_dense(&scalar.x),
+        scalar.y.clone(),
+        scalar.groups.clone(),
+        tau,
+    );
+    let mt_csc = csc_mt(&mt);
+
+    let lambdas = lambda_grid(scalar.lambda_max(), 1.3, 6);
+    let opts = |rule| PathOptions {
+        delta: 1.3,
+        t_count: 6,
+        solve: SolveOptions {
+            rule,
+            tol: 1e-8,
+            max_epochs: 500_000,
+            record_history: false,
+            ..Default::default()
+        },
+    };
+    // Every solver on the GAP safe sequential path, both backends.
+    for solver in [SolverKind::Cd, SolverKind::Ista, SolverKind::Fista] {
+        let o = opts(RuleKind::GapSafeSeq);
+        assert_paths_bitwise(
+            &solve_path_sharded(&scalar, &lambdas, &o, solver, 1),
+            &solve_path_sharded(&mt, &lambdas, &o, solver, 1),
+            &format!("dense/{solver:?}"),
+        );
+        assert_paths_bitwise(
+            &solve_path_sharded(&scalar_csc, &lambdas, &o, solver, 1),
+            &solve_path_sharded(&mt_csc, &lambdas, &o, solver, 1),
+            &format!("csc/{solver:?}"),
+        );
+    }
+    // Every screening rule on the CD path: identical spheres, identical
+    // rejections.
+    for rule in RuleKind::all() {
+        let o = opts(rule);
+        assert_paths_bitwise(
+            &solve_path_sharded(&scalar, &lambdas, &o, SolverKind::Cd, 1),
+            &solve_path_sharded(&mt, &lambdas, &o, SolverKind::Cd, 1),
+            &format!("dense/{rule:?}"),
+        );
+    }
+}
+
+#[test]
+fn sharded_multitask_path_is_bit_identical_to_monolithic() {
+    let pb = csc_mt(&mt_problem(0.25, 12, 3));
+    let lambdas = lambda_grid(pb.lambda_max(), 1.4, 8);
+    let opts = PathOptions {
+        delta: 1.4,
+        t_count: 8,
+        solve: SolveOptions {
+            rule: RuleKind::GapSafeSeq,
+            tol: 1e-8,
+            max_epochs: 500_000,
+            record_history: false,
+            ..Default::default()
+        },
+    };
+    let mono = solve_path_on_grid(&pb, &lambdas, &opts);
+    assert!(mono.all_converged());
+    for k in [2usize, 4] {
+        let sharded = solve_path_sharded(&pb, &lambdas, &opts, SolverKind::Cd, k);
+        assert_eq!(mono.lambdas, sharded.lambdas, "k={k}");
+        assert_paths_bitwise(&mono, &sharded, &format!("k={k}"));
+    }
+}
+
+/// Safety on a genuinely matrix-valued problem: a q = 5 path solved
+/// with each sphere matches the unscreened baseline coefficient for
+/// coefficient — and the spheres are not vacuous (screening fires).
+#[test]
+fn gap_safe_rules_never_change_the_multitask_answer() {
+    let pb = mt_problem(0.3, 13, 5);
+    let opts = |rule| PathOptions {
+        delta: 1.5,
+        t_count: 6,
+        solve: SolveOptions {
+            rule,
+            tol: 1e-10,
+            max_epochs: 500_000,
+            record_history: false,
+            ..Default::default()
+        },
+    };
+    let base = solve_path(&pb, &opts(RuleKind::None));
+    assert!(base.all_converged());
+    let mut screened_somewhere = false;
+    for rule in RuleKind::all() {
+        if rule == RuleKind::None {
+            continue;
+        }
+        let path = solve_path(&pb, &opts(rule));
+        assert!(path.all_converged(), "{rule:?}");
+        for (i, (a, b)) in base.results.iter().zip(&path.results).enumerate() {
+            assert_eq!(a.beta.len(), b.beta.len(), "{rule:?} lambda {i}");
+            for (j, (x, y)) in a.beta.iter().zip(&b.beta).enumerate() {
+                assert!(
+                    (x - y).abs() < 1e-4,
+                    "{rule:?} lambda {i} coeff {j}: {x} vs {y}"
+                );
+            }
+        }
+        screened_somewhere |= path
+            .results
+            .iter()
+            .any(|r| r.active.feature.iter().any(|&alive| !alive));
+    }
+    assert!(screened_somewhere, "no sphere ever rejected a feature on the q=5 path");
+}
+
+/// The tentpole serving claim: one fleet serves least-squares, logistic
+/// and multi-task jobs side by side, and every result is bit-identical
+/// to the local sharded engine.
+#[test]
+fn mixed_batch_with_multitask_over_loopback_fleet_matches_local() {
+    let metrics = Arc::new(Metrics::new());
+    let servers: Vec<WorkerServer> =
+        (0..2).map(|_| WorkerServer::bind("127.0.0.1:0").expect("bind worker")).collect();
+    let addrs: Vec<String> = servers.iter().map(|s| s.local_addr().to_string()).collect();
+    let fleet = RemoteFleet::connect(&addrs, FleetConfig::default(), metrics.clone())
+        .expect("connect fleet");
+
+    let quad = {
+        let d = generate(&synth_cfg(14));
+        Arc::new(SglProblem::new(
+            CscMatrix::from_dense(&d.dataset.x),
+            d.dataset.y,
+            d.dataset.groups,
+            0.2,
+        ))
+    };
+    let csc_log = Arc::new(logistic_problem(0.2, 15));
+    let dense_mt = Arc::new(mt_problem(0.2, 16, 3));
+    let csc_mt_pb = Arc::new(csc_mt(&dense_mt));
+
+    let opts = |rule: RuleKind| PathOptions {
+        delta: 1.2,
+        t_count: 6,
+        solve: SolveOptions { rule, tol: 1e-8, record_history: false, ..Default::default() },
+    };
+    let jobs = vec![
+        InterleavedJob {
+            pb: AnyProblem::Csc(quad.clone()),
+            lambdas: lambda_grid(quad.lambda_max(), 1.2, 6),
+            opts: opts(RuleKind::GapSafeSeq),
+            solver: SolverKind::Cd,
+            shards: 2,
+            label: "quadratic/csc".into(),
+        },
+        InterleavedJob {
+            pb: AnyProblem::CscLogistic(csc_log.clone()),
+            lambdas: lambda_grid(csc_log.lambda_max(), 1.2, 6),
+            opts: opts(RuleKind::GapSafeSeq),
+            solver: SolverKind::Cd,
+            shards: 2,
+            label: "logistic/csc".into(),
+        },
+        InterleavedJob {
+            pb: AnyProblem::DenseMultiTask(dense_mt.clone()),
+            lambdas: lambda_grid(dense_mt.lambda_max(), 1.2, 6),
+            opts: opts(RuleKind::GapSafe),
+            solver: SolverKind::Cd,
+            shards: 2,
+            label: "multitask/dense".into(),
+        },
+        InterleavedJob {
+            pb: AnyProblem::CscMultiTask(csc_mt_pb.clone()),
+            lambdas: lambda_grid(csc_mt_pb.lambda_max(), 1.2, 6),
+            opts: opts(RuleKind::GapSafeSeq),
+            solver: SolverKind::Fista,
+            shards: 3,
+            label: "multitask/csc".into(),
+        },
+    ];
+
+    let out = solve_batch_interleaved(&jobs, fleet.capacity(), |job, grid, h: Option<&DualHandoff>| {
+        fleet.solve_shard(&job.pb, grid, &job.opts, job.solver, h)
+    });
+    for (job, got) in jobs.iter().zip(&out) {
+        let got = got.as_ref().unwrap_or_else(|e| panic!("{} failed: {e:#}", job.label));
+        let want = match &job.pb {
+            AnyProblem::Dense(p) => {
+                solve_path_sharded(p.as_ref(), &job.lambdas, &job.opts, job.solver, job.shards)
+            }
+            AnyProblem::Csc(p) => {
+                solve_path_sharded(p.as_ref(), &job.lambdas, &job.opts, job.solver, job.shards)
+            }
+            AnyProblem::DenseLogistic(p) => {
+                solve_path_sharded(p.as_ref(), &job.lambdas, &job.opts, job.solver, job.shards)
+            }
+            AnyProblem::CscLogistic(p) => {
+                solve_path_sharded(p.as_ref(), &job.lambdas, &job.opts, job.solver, job.shards)
+            }
+            AnyProblem::DenseMultiTask(p) => {
+                solve_path_sharded(p.as_ref(), &job.lambdas, &job.opts, job.solver, job.shards)
+            }
+            AnyProblem::CscMultiTask(p) => {
+                solve_path_sharded(p.as_ref(), &job.lambdas, &job.opts, job.solver, job.shards)
+            }
+        };
+        assert_eq!(got.lambdas, want.lambdas, "{}", job.label);
+        for (t, (a, b)) in want.results.iter().zip(&got.results).enumerate() {
+            assert_eq!(a.beta, b.beta, "{} t={t}: bit-identical over the fleet", job.label);
+            assert_eq!(a.active.feature, b.active.feature, "{} t={t}", job.label);
+            assert_eq!(a.epochs, b.epochs, "{} t={t}", job.label);
+        }
+    }
+    assert_eq!(metrics.counter("fleet_shards_solved"), 9);
+    assert_eq!(metrics.counter("fleet_worker_disconnects"), 0);
+    assert_eq!(fleet.in_flight(), 0);
+}

@@ -107,6 +107,7 @@ fn traced_cd_path_exports_balanced_chrome_json() {
                     "active_groups",
                     "rule",
                     "datafit",
+                    "tasks",
                     "kernel",
                 ] {
                     assert!(keys.contains(&k), "gap_check missing arg {k:?}: {keys:?}");

@@ -87,6 +87,12 @@ fn local_reference(job: &InterleavedJob) -> PathResult {
         AnyProblem::CscLogistic(p) => {
             solve_path_sharded(p.as_ref(), &job.lambdas, &job.opts, job.solver, job.shards)
         }
+        AnyProblem::DenseMultiTask(p) => {
+            solve_path_sharded(p.as_ref(), &job.lambdas, &job.opts, job.solver, job.shards)
+        }
+        AnyProblem::CscMultiTask(p) => {
+            solve_path_sharded(p.as_ref(), &job.lambdas, &job.opts, job.solver, job.shards)
+        }
     }
 }
 

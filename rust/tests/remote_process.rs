@@ -161,6 +161,12 @@ fn two_worker_processes_serve_a_mixed_batch_bit_identically() {
             AnyProblem::CscLogistic(p) => {
                 solve_path_sharded(p.as_ref(), &job.lambdas, &job.opts, job.solver, job.shards)
             }
+            AnyProblem::DenseMultiTask(p) => {
+                solve_path_sharded(p.as_ref(), &job.lambdas, &job.opts, job.solver, job.shards)
+            }
+            AnyProblem::CscMultiTask(p) => {
+                solve_path_sharded(p.as_ref(), &job.lambdas, &job.opts, job.solver, job.shards)
+            }
         };
         assert_eq!(got.lambdas, want.lambdas, "{}", job.label);
         for (t, (a, b)) in want.results.iter().zip(&got.results).enumerate() {

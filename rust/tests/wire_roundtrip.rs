@@ -1,7 +1,8 @@
 //! Property tests for the framed wire codec (`util::wire`): every
 //! message round-trips bit-exactly — including adversarial f64s
 //! (NaN payloads, ±inf, signed zeros, subnormals) in handoffs, empty
-//! paths and zero-row CSC datasets — and every malformed input
+//! paths, zero-row CSC datasets and multi-column (task-major)
+//! responses — and every malformed input
 //! (truncated frames, bad versions, bad tags, random garbage, mutated
 //! frames) decodes to a *typed* [`WireError`] instead of panicking.
 //!
@@ -133,11 +134,14 @@ fn gen_path_result(g: &mut Gen) -> PathResult {
 }
 
 /// A datafit that survives `into_problem` validation: finite non-negative
-/// ridge, or logistic (whose labels `gen_dataset` then constrains).
+/// ridge, logistic (whose labels `gen_dataset` then constrains), or
+/// multi-task with a positive column count (whose `y` length `gen_dataset`
+/// then scales by `tasks`).
 fn gen_valid_datafit(g: &mut Gen) -> WireDatafit {
-    match g.usize_in(0..3) {
+    match g.usize_in(0..4) {
         0 => WireDatafit::Quadratic { ridge: 0.0 },
         1 => WireDatafit::Quadratic { ridge: g.f64_in(0.0..2.0) },
+        2 => WireDatafit::MultiTask { tasks: g.usize_in(1..5) as u64 },
         _ => WireDatafit::Logistic,
     }
 }
@@ -173,11 +177,12 @@ fn gen_dataset(g: &mut Gen) -> WireDataset {
         WireDesign::Csc { n_rows: n, n_cols: p, indptr, indices, values }
     };
     // Logistic labels must lie in [0, 1] for into_problem; the quadratic
-    // response keeps the full f64 pathology mix.
+    // and multi-task responses keep the full f64 pathology mix. Multi-task
+    // `y` is task-major with `n · tasks` entries.
     let y: Vec<f64> = if datafit == WireDatafit::Logistic {
         (0..n).map(|_| [0.0, 1.0, 0.5][g.usize_in(0..3)]).collect()
     } else {
-        (0..n).map(|_| edgy_f64(g)).collect()
+        (0..n * datafit.tasks() as usize).map(|_| edgy_f64(g)).collect()
     };
     WireDataset {
         design,
@@ -237,9 +242,11 @@ fn gen_message(g: &mut Gen) -> Message {
         4 => Message::ShipDataset(gen_dataset(g)),
         5 => Message::SolveShard(ShardRequest {
             dataset: g.rng().next_u64(),
-            // Roundtrip (not into_problem): the ridge keeps edgy bits.
-            datafit: match g.usize_in(0..2) {
+            // Roundtrip (not into_problem): the ridge keeps edgy bits and
+            // the task count ranges over all of u64.
+            datafit: match g.usize_in(0..3) {
                 0 => WireDatafit::Quadratic { ridge: edgy_f64(g) },
+                1 => WireDatafit::MultiTask { tasks: g.rng().next_u64() },
                 _ => WireDatafit::Logistic,
             },
             lambdas: edgy_vec(g, 6),
@@ -359,7 +366,7 @@ fn truncated_frames_are_typed_errors_never_panics() {
 fn bad_version_and_bad_tag_are_typed_errors() {
     forall("wire-bad-header", 100, |g| {
         let mut frame = gen_message(g).encode();
-        let v = (g.usize_in(5..250)) as u8; // never WIRE_VERSION (= 4)
+        let v = (g.usize_in(6..250)) as u8; // never WIRE_VERSION (= 5)
         frame[4] = v;
         match Message::decode(&frame) {
             Err(WireError::BadVersion { got }) => check(got == v, "version echoed")?,
@@ -409,17 +416,19 @@ fn datasets_roundtrip_rebuild_and_fingerprint_by_content() {
         // *and* datafit.
         let is_csc = matches!(back.design, WireDesign::Csc { .. });
         let is_logistic = back.datafit == WireDatafit::Logistic;
+        let is_mt = matches!(back.datafit, WireDatafit::MultiTask { .. });
+        let q_expect = back.datafit.tasks() as usize;
         let (n_expect, p_expect) = match &back.design {
             WireDesign::Dense { n_rows, n_cols, .. }
             | WireDesign::Csc { n_rows, n_cols, .. } => (*n_rows, *n_cols),
         };
         match back.into_problem() {
             Ok(ProblemPayload::Dense(pb)) => {
-                check(!is_csc && !is_logistic, "backend+datafit preserved")?;
+                check(!is_csc && !is_logistic && !is_mt, "backend+datafit preserved")?;
                 check(pb.n() == n_expect && pb.p() == p_expect, "shape preserved")
             }
             Ok(ProblemPayload::Csc(pb)) => {
-                check(is_csc && !is_logistic, "backend+datafit preserved")?;
+                check(is_csc && !is_logistic && !is_mt, "backend+datafit preserved")?;
                 check(pb.n() == n_expect && pb.p() == p_expect, "shape preserved")
             }
             Ok(ProblemPayload::DenseLogistic(pb)) => {
@@ -429,6 +438,16 @@ fn datasets_roundtrip_rebuild_and_fingerprint_by_content() {
             Ok(ProblemPayload::CscLogistic(pb)) => {
                 check(is_csc && is_logistic, "backend+datafit preserved")?;
                 check(pb.n() == n_expect && pb.p() == p_expect, "shape preserved")
+            }
+            Ok(ProblemPayload::DenseMultiTask(pb)) => {
+                check(!is_csc && is_mt, "backend+datafit preserved")?;
+                check(pb.n() == n_expect && pb.p() == p_expect, "shape preserved")?;
+                check(pb.tasks() == q_expect, "task count preserved")
+            }
+            Ok(ProblemPayload::CscMultiTask(pb)) => {
+                check(is_csc && is_mt, "backend+datafit preserved")?;
+                check(pb.n() == n_expect && pb.p() == p_expect, "shape preserved")?;
+                check(pb.tasks() == q_expect, "task count preserved")
             }
             Err(e) => Err(format!("valid dataset rejected: {e}")),
         }
@@ -465,7 +484,7 @@ fn invalid_datasets_fail_decoding_into_problems_with_typed_errors() {
     forall("wire-dataset-invalid", 60, |g| {
         let mut ds = gen_dataset(g);
         // Break it in one of several structural ways.
-        match g.usize_in(0..6) {
+        match g.usize_in(0..7) {
             0 => ds.group_sizes = vec![],
             1 => ds.weights.push(1.0),
             2 => ds.tau = 1.5,
@@ -479,6 +498,11 @@ fn invalid_datasets_fail_decoding_into_problems_with_typed_errors() {
                 // before any shape validation).
                 ds.datafit = WireDatafit::Logistic;
                 ds.y.push([2.0, -0.5, f64::NAN][g.usize_in(0..3)]);
+            }
+            5 => {
+                // Zero response columns under the multi-task fit (rejected
+                // before any shape validation).
+                ds.datafit = WireDatafit::MultiTask { tasks: 0 };
             }
             _ => ds.y.push(0.0),
         }
@@ -523,7 +547,7 @@ fn unknown_datafit_tags_are_typed_errors() {
     // Quadratic encodes as tag 0 + 8 ridge bytes at the very end.
     let tag_at = frame.len() - 9;
     assert_eq!(frame[tag_at], 0, "quadratic datafit tag byte");
-    for bad in [2u8, 7, 255] {
+    for bad in [3u8, 7, 255] {
         frame[tag_at] = bad;
         match Message::decode(&frame) {
             Err(WireError::Malformed(what)) => {
@@ -534,9 +558,89 @@ fn unknown_datafit_tags_are_typed_errors() {
     }
     // Logistic is a bare trailing tag byte (1).
     let mut frame =
-        Message::ShipDataset(WireDataset { datafit: WireDatafit::Logistic, ..ds }).encode();
+        Message::ShipDataset(WireDataset { datafit: WireDatafit::Logistic, ..ds.clone() })
+            .encode();
     let last = frame.len() - 1;
     assert_eq!(frame[last], 1, "logistic datafit tag byte");
     frame[last] = 9;
     assert!(matches!(Message::decode(&frame), Err(WireError::Malformed(_))));
+    // Multi-task encodes as tag 2 + 8 task-count bytes; an unknown tag in
+    // its place is equally typed.
+    let mt = WireDataset {
+        datafit: WireDatafit::MultiTask { tasks: 2 },
+        y: vec![0.5, -0.5],
+        ..ds
+    };
+    let mut frame = Message::ShipDataset(mt).encode();
+    let tag_at = frame.len() - 9;
+    assert_eq!(frame[tag_at], 2, "multi-task datafit tag byte");
+    frame[tag_at] = 3;
+    match Message::decode(&frame) {
+        Err(WireError::Malformed(what)) => assert!(what.contains("datafit"), "{what}"),
+        other => panic!("expected Malformed, got {other:?}"),
+    }
+}
+
+/// A v4 peer predates the multi-task datafit tag and the `n_rows · tasks`
+/// response contract; its frames must be refused outright with a typed
+/// [`WireError::BadVersion`] instead of misvalidating a multi-column `y`.
+#[test]
+fn v4_frames_are_rejected_with_bad_version() {
+    forall("wire-v4-reject", 60, |g| {
+        let mut frame = gen_message(g).encode();
+        assert_eq!(frame[4], WIRE_VERSION, "version byte location");
+        frame[4] = 4;
+        match Message::decode(&frame) {
+            Err(WireError::BadVersion { got: 4 }) => Ok(()),
+            other => Err(format!("expected BadVersion{{got: 4}}, got {other:?}")),
+        }
+    });
+}
+
+/// Multi-task datasets: multi-column responses (full f64 pathology mix,
+/// task-major) survive the trip bit-exactly — including the zero-row and
+/// q = 1 edge cases — the datafit tag (not the column count) decides the
+/// rebuilt variant, and the task count is part of the dataset identity:
+/// identical bytes under a different `tasks` is a different fingerprint.
+#[test]
+fn multitask_datasets_roundtrip_and_fingerprint_by_task_count() {
+    forall("wire-dataset-multitask", 80, |g| {
+        let n = if g.usize_in(0..5) == 0 { 0 } else { g.usize_in(1..5) };
+        let q = g.usize_in(1..4);
+        let ds = WireDataset {
+            design: WireDesign::Dense {
+                n_rows: n,
+                n_cols: 2,
+                data: (0..n * 2).map(|_| edgy_f64(g)).collect(),
+            },
+            y: (0..n * q).map(|_| edgy_f64(g)).collect(),
+            group_sizes: vec![2],
+            tau: 0.5,
+            weights: vec![2.0f64.sqrt()],
+            datafit: WireDatafit::MultiTask { tasks: q as u64 },
+        };
+        let fp = ds.fingerprint();
+        let Message::ShipDataset(back) =
+            roundtrip_canonical(&Message::ShipDataset(ds.clone()))?
+        else {
+            return Err("variant changed in transit".to_string());
+        };
+        check(back.fingerprint() == fp, "fingerprint survives the trip")?;
+        check(back.datafit.tasks() == q as u64, "task count survives")?;
+        for (a, b) in back.y.iter().zip(&ds.y) {
+            check(a.to_bits() == b.to_bits(), "response bits")?;
+        }
+        match back.into_problem() {
+            Ok(ProblemPayload::DenseMultiTask(pb)) => {
+                check(pb.n() == n && pb.p() == 2, "shape rebuilt")?;
+                check(pb.tasks() == q, "task count rebuilt")?;
+            }
+            other => return Err(format!("expected DenseMultiTask, got {other:?}")),
+        }
+        // Same bytes everywhere except the task count ⇒ a different
+        // dataset (the count is hashed, not inferred from `y`'s length).
+        let mut other = ds;
+        other.datafit = WireDatafit::MultiTask { tasks: q as u64 + 1 };
+        check(other.fingerprint() != fp, "fingerprint differs by task count")
+    });
 }

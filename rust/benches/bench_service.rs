@@ -25,6 +25,11 @@
 //!    serializes). Asserts the interleaved schedule is faster on ≥ 2
 //!    cores and that both produce bit-identical results.
 //!
+//! 5. **Churn** — the same interleaved batch run calm and then under a
+//!    scripted worker kill + registered replacement mid-run: zero lost
+//!    jobs, bit-identical results either way, and the recovery cost
+//!    (wall-clock overhead, requeues, rejoins) on record.
+//!
 //! Default scale runs in seconds; `SGL_BENCH_SCALE=paper` runs the full
 //! p=10000 instances.
 
@@ -46,6 +51,8 @@ use sgl::solver::SolverKind;
 use sgl::util::json::Json;
 use sgl::util::timer::Stopwatch;
 use std::sync::Arc;
+use std::thread;
+use std::time::{Duration, Instant};
 
 fn unit_norm_problem(cfg: &SparseSyntheticConfig, tau: f64) -> Arc<SglProblem<CscMatrix>> {
     let d = sparse::generate(cfg);
@@ -59,6 +66,7 @@ fn main() {
     let throughput = throughput_and_cache(paper);
     let sharding = sharded_vs_monolithic(paper);
     let fleet = fleet_interleaved_vs_serialized(paper);
+    let churn = churn_recovery(paper);
     // Machine-readable summary next to the printed report, for tracking
     // bench results across commits.
     let out = Json::obj()
@@ -66,7 +74,8 @@ fn main() {
         .with("scale", if paper { "paper" } else { "small" })
         .with("throughput", throughput)
         .with("sharding", sharding)
-        .with("fleet", fleet);
+        .with("fleet", fleet)
+        .with("churn", churn);
     std::fs::write("BENCH_service.json", out.pretty()).expect("write bench json");
     println!("\nwrote BENCH_service.json");
 }
@@ -368,4 +377,122 @@ fn fleet_interleaved_vs_serialized(paper: bool) -> Json {
         .with("shards", shards)
         .with("serialized_s", t_serial)
         .with("interleaved_s", t_inter)
+}
+
+/// Self-healing under churn: run the same interleaved sharded batch on
+/// a calm 2-worker fleet and again while one worker is killed mid-run
+/// and a replacement rejoins through the registration listener. Both
+/// runs must complete every job with bit-identical results; the report
+/// prices the recovery (requeues + re-ship on the rejoined worker).
+fn churn_recovery(paper: bool) -> Json {
+    let cfg = SparseSyntheticConfig {
+        n: 100,
+        n_groups: if paper { 1000 } else { 250 },
+        group_size: 10,
+        density: 0.01,
+        gamma1: 10,
+        gamma2: 4,
+        seed: 13,
+        ..Default::default()
+    };
+    let pb = unit_norm_problem(&cfg, 0.2);
+    let t_count = if paper { 48 } else { 24 };
+    let shards = 4;
+    let jobs: Vec<InterleavedJob> = [1e-6, 1e-7]
+        .iter()
+        .map(|&tol| InterleavedJob {
+            pb: AnyProblem::Csc(pb.clone()),
+            lambdas: lambda_grid(pb.lambda_max(), 2.0, t_count),
+            opts: PathOptions {
+                delta: 2.0,
+                t_count,
+                solve: SolveOptions {
+                    rule: RuleKind::GapSafeSeq,
+                    tol,
+                    record_history: false,
+                    ..Default::default()
+                },
+            },
+            solver: SolverKind::Cd,
+            shards,
+            label: format!("churn@{tol:.0e}"),
+        })
+        .collect();
+    println!(
+        "\n== churn recovery: 2 workers, {} paths x k={shards} shards, p={}, T={t_count} ==",
+        jobs.len(),
+        pb.p()
+    );
+
+    let run = |with_churn: bool| {
+        let metrics = Arc::new(Metrics::new());
+        let servers: Arc<Vec<WorkerServer>> = Arc::new(
+            (0..2).map(|_| WorkerServer::bind("127.0.0.1:0").expect("bind worker")).collect(),
+        );
+        let addrs: Vec<String> = servers.iter().map(|s| s.local_addr().to_string()).collect();
+        let fleet = Arc::new(
+            RemoteFleet::connect(
+                &addrs,
+                FleetConfig { rejoin_grace: Duration::from_secs(60), ..FleetConfig::default() },
+                metrics.clone(),
+            )
+            .expect("connect fleet"),
+        );
+        let reg = fleet.serve_registrations("127.0.0.1:0").expect("registration listener");
+        let chaos = with_churn.then(|| {
+            let servers = servers.clone();
+            let metrics = metrics.clone();
+            let reg = reg.to_string();
+            thread::spawn(move || {
+                // Strike once the batch is demonstrably mid-flight, then
+                // bring up a replacement that announces itself.
+                let deadline = Instant::now() + Duration::from_secs(300);
+                while metrics.counter("fleet_shards_solved") < 1 && Instant::now() < deadline {
+                    thread::sleep(Duration::from_millis(2));
+                }
+                servers[0].kill();
+                let fresh = WorkerServer::bind("127.0.0.1:0").expect("bind replacement");
+                fresh.register(&reg);
+                fresh // kept alive until after the batch completes
+            })
+        });
+        let sw = Stopwatch::start();
+        let out = solve_batch_interleaved(&jobs, 2, |job, grid, h| {
+            fleet.solve_shard(&job.pb, grid, &job.opts, job.solver, h)
+        });
+        let secs = sw.elapsed_s();
+        let _replacement = chaos.map(|t| t.join().expect("churn thread"));
+        let results: Vec<_> = jobs
+            .iter()
+            .zip(out)
+            .map(|(job, r)| r.unwrap_or_else(|e| panic!("{} lost to churn: {e:#}", job.label)))
+            .collect();
+        (secs, results, metrics)
+    };
+
+    let (calm_s, calm, _) = run(false);
+    let (churn_s, churned, metrics) = run(true);
+    for ((job, a), b) in jobs.iter().zip(&calm).zip(&churned) {
+        for (ra, rb) in a.results.iter().zip(&b.results) {
+            assert_eq!(ra.beta, rb.beta, "{}: churn must not change results", job.label);
+        }
+    }
+    let requeued = metrics.counter("fleet_shards_requeued");
+    let joined = metrics.counter("fleet_workers_joined");
+    assert!(metrics.counter("fleet_worker_disconnects") >= 1, "the kill landed mid-batch");
+    assert!(joined >= 1, "the replacement registered");
+    println!("calm fleet:              {calm_s:>8.3}s");
+    println!(
+        "under kill + rejoin:     {churn_s:>8.3}s  ({:+.1}% — {requeued} requeued, \
+         {joined} rejoined, 0 lost)",
+        100.0 * (churn_s - calm_s) / calm_s.max(1e-12)
+    );
+    Json::obj()
+        .with("paths", jobs.len())
+        .with("shards", shards)
+        .with("calm_s", calm_s)
+        .with("churn_s", churn_s)
+        .with("requeued", requeued as i64)
+        .with("workers_joined", joined as i64)
+        .with("lost_jobs", 0usize)
 }

@@ -165,6 +165,24 @@ pub struct RunConfig {
     /// Connections (= concurrent shards) opened per fleet worker
     /// (`[service] fleet_conns`).
     pub service_fleet_conns: usize,
+    /// Datasets whose wire encoding exceeds this many MiB ship to fleet
+    /// workers as chunked column-range frames instead of one monolithic
+    /// frame (`[service] fleet_chunk_mb` / `--fleet-chunk-mb`).
+    pub service_fleet_chunk_mb: usize,
+    /// Milliseconds a fleet exchange may go without *any* frame (reply or
+    /// progress ping) before the worker is written off and the shard
+    /// requeued (`[service] progress_deadline_ms` /
+    /// `--progress-deadline-ms`). 0 disables the deadline.
+    pub service_progress_deadline_ms: u64,
+    /// Milliseconds a shard waits for a worker to rejoin (via the
+    /// registration listener) when the whole fleet is dead, before the
+    /// batch fails (`[service] rejoin_grace_ms` / `--rejoin-grace-ms`).
+    /// 0 fails immediately.
+    pub service_rejoin_grace_ms: u64,
+    /// Registration listener address (`[service] register_addr` /
+    /// `--register-addr`): restarted `sgl worker --register` processes
+    /// announce themselves here to rejoin the fleet.
+    pub service_register_addr: Option<String>,
     /// Chrome trace-event output path (`[trace] out` / `--trace-out` /
     /// `SGL_TRACE`). `None` leaves the collector disabled — solver output
     /// is bit-identical either way ([`crate::util::trace`]'s contract).
@@ -220,6 +238,10 @@ impl Default for RunConfig {
             service_cache_capacity: 256,
             service_fleet: Vec::new(),
             service_fleet_conns: 1,
+            service_fleet_chunk_mb: 1024,
+            service_progress_deadline_ms: 0,
+            service_rejoin_grace_ms: 0,
+            service_register_addr: None,
             trace_out: None,
             trace_sample: 1,
             metrics_addr: None,
@@ -336,12 +358,18 @@ impl RunConfig {
         take!(service_result_capacity, "service", "result_capacity", usize);
         take!(service_cache_capacity, "service", "cache_capacity", usize);
         take!(service_fleet_conns, "service", "fleet_conns", usize);
+        take!(service_fleet_chunk_mb, "service", "fleet_chunk_mb", usize);
+        take!(service_progress_deadline_ms, "service", "progress_deadline_ms", u64);
+        take!(service_rejoin_grace_ms, "service", "rejoin_grace_ms", u64);
         take!(trace_sample, "trace", "sample", u64);
         if let Some(out) = doc.get_str("trace", "out") {
             cfg.trace_out = Some(out);
         }
         if let Some(addr) = doc.get_str("service", "metrics_addr") {
             cfg.metrics_addr = Some(addr);
+        }
+        if let Some(addr) = doc.get_str("service", "register_addr") {
+            cfg.service_register_addr = Some(addr);
         }
         if let Some(fleet) = doc.get_str("service", "fleet") {
             cfg.service_fleet =
@@ -432,6 +460,14 @@ impl RunConfig {
         }
         if self.service_fleet_conns == 0 {
             bail!("service fleet_conns must be >= 1");
+        }
+        if self.service_fleet_chunk_mb == 0 {
+            bail!("service fleet_chunk_mb must be >= 1");
+        }
+        if let Some(addr) = &self.service_register_addr {
+            if !addr.contains(':') {
+                bail!("service register_addr {addr:?} is not a host:port address");
+            }
         }
         if self.trace_sample == 0 {
             bail!("trace sample must be >= 1 (record every k-th event)");
@@ -732,6 +768,28 @@ rho = 0.9
         assert!(RunConfig::from_toml_str("[service]\nfleet = \" , \"\n").is_err());
         assert!(RunConfig::from_toml_str("[service]\nfleet_conns = 0\n").is_err());
         assert!(parse_fleet_list("a:1,,b:2").unwrap().len() == 2);
+    }
+
+    #[test]
+    fn parses_elastic_fleet_knobs() {
+        let c = RunConfig::from_toml_str(
+            "[service]\nfleet_chunk_mb = 64\nprogress_deadline_ms = 2000\n\
+             rejoin_grace_ms = 5000\nregister_addr = \"0.0.0.0:7272\"\n",
+        )
+        .unwrap();
+        assert_eq!(c.service_fleet_chunk_mb, 64);
+        assert_eq!(c.service_progress_deadline_ms, 2000);
+        assert_eq!(c.service_rejoin_grace_ms, 5000);
+        assert_eq!(c.service_register_addr.as_deref(), Some("0.0.0.0:7272"));
+        // Defaults: 1 GiB chunk threshold, both elasticity timers off, no
+        // registration listener.
+        let d = RunConfig::default();
+        assert_eq!(d.service_fleet_chunk_mb, 1024);
+        assert_eq!(d.service_progress_deadline_ms, 0);
+        assert_eq!(d.service_rejoin_grace_ms, 0);
+        assert!(d.service_register_addr.is_none());
+        assert!(RunConfig::from_toml_str("[service]\nfleet_chunk_mb = 0\n").is_err());
+        assert!(RunConfig::from_toml_str("[service]\nregister_addr = \"nohost\"\n").is_err());
     }
 
     #[test]

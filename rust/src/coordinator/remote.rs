@@ -29,6 +29,34 @@
 //!   [`RemoteFleet::scrape`] pulls every worker's full metrics registry
 //!   into the coordinator's under a `worker_<i>_` prefix.
 //!
+//! The fleet is **elastic and self-healing** (wire v6):
+//!
+//! - *Worker-initiated registration* — [`RemoteFleet::serve_registrations`]
+//!   opens an accept loop; a (re)started worker announces itself with a
+//!   [`Message::Register`] frame ([`WorkerServer::register`] retries until
+//!   acked) and is admitted: a known address is revived with a bumped
+//!   generation (stale leases from the dead incarnation are dropped on
+//!   release, never mis-accounted) and a cleared shipped-set; a new
+//!   address grows the fleet.
+//! - *Progress-ping liveness* — while a shard solves, the worker pushes
+//!   unsolicited [`Message::Progress`] frames (epoch + duality gap from
+//!   the solver's gap checks, via [`crate::util::progress`]). With
+//!   [`FleetConfig::progress_deadline`] set, the coordinator requeues a
+//!   shard whose worker goes *silent* past the deadline — long solves are
+//!   legitimate and keep pinging, so no socket read deadline ever bounds
+//!   solve time itself.
+//! - *Chunked dataset streaming* — datasets whose canonical encoding
+//!   exceeds [`FleetConfig::ship_chunk_bytes`] ship as a
+//!   [`Message::ShipBegin`] / [`Message::ShipChunk`]… /
+//!   [`Message::ShipEnd`] stream of column ranges, reassembled and
+//!   fingerprint-verified worker-side ([`ChunkAssembler`]) — datasets
+//!   beyond the 2 GiB frame cap (or a worker's comfortable single
+//!   allocation) travel incrementally, for one round trip total.
+//!
+//! Shipped-set entries commit only on the worker's ack and are cleared
+//! whole on rejoin, so a connection lost mid-ship can never leave the
+//! coordinator believing a worker holds a dataset it doesn't.
+//!
 //! The solve service drains into a fleet via
 //! [`SolveService::with_fleet`](super::service::SolveService::with_fleet),
 //! and [`super::shard::solve_batch_interleaved`] schedules *different
@@ -41,10 +69,11 @@ use crate::solver::sweep::SweepMode;
 use crate::solver::SolverKind;
 use crate::util::lru::LruCache;
 use crate::util::pool::resolve_threads;
+use crate::util::progress::{self, ProgressCell};
 use crate::util::trace;
 use crate::util::wire::{
-    Message, ProblemPayload, RemoteError, RemoteErrorKind, ShardRequest, WireDatafit,
-    WireDataset, WireError, WorkerSummary,
+    ChunkAssembler, ChunkBegin, ChunkPart, Message, ProblemPayload, RemoteError,
+    RemoteErrorKind, ShardRequest, WireDatafit, WireDataset, WireError, WorkerSummary,
 };
 use anyhow::{bail, ensure, Context, Result};
 use std::collections::HashSet;
@@ -71,15 +100,41 @@ const WORKER_DATASET_CAPACITY: usize = 64;
 /// peer shipping datasets in a loop) cannot grow it without limit.
 type DatasetStore = LruCache<u64, AnyProblem>;
 
+/// Worker tuning knobs (`sgl worker --store-capacity --progress-ms`).
+#[derive(Clone, Copy, Debug)]
+pub struct WorkerOptions {
+    /// Datasets the store retains before LRU eviction (min 1).
+    pub dataset_capacity: usize,
+    /// How often an in-flight solve pushes a [`Message::Progress`] frame
+    /// to its coordinator; zero disables the pinger entirely.
+    pub progress_interval: Duration,
+}
+
+impl Default for WorkerOptions {
+    fn default() -> Self {
+        WorkerOptions {
+            dataset_capacity: WORKER_DATASET_CAPACITY,
+            progress_interval: Duration::from_millis(500),
+        }
+    }
+}
+
 /// Shared worker-side state every serve thread reports into: the full
-/// metrics registry a [`Message::StatsRequest`] snapshots, plus the two
-/// atomics behind the compact [`WorkerSummary`] every `Pong` carries
-/// (cheap enough to answer from the heartbeat path without a scrape).
+/// metrics registry a [`Message::StatsRequest`] snapshots, plus the
+/// atomics behind the compact [`WorkerSummary`] every `Pong` and
+/// `Progress` frame carries (cheap enough to answer from the heartbeat
+/// path without a scrape).
 struct WorkerShared {
     metrics: Metrics,
     start: Instant,
     in_flight: AtomicU64,
     solves: AtomicU64,
+    /// Progress pair of the most recently checked in-flight λ (epoch and
+    /// duality-gap bits; NaN bits while nothing was observed). Written by
+    /// each solve's pinger, so concurrent solves interleave — "most
+    /// recent" is exactly the liveness semantics.
+    epoch: AtomicU64,
+    gap_bits: AtomicU64,
 }
 
 impl WorkerShared {
@@ -89,6 +144,8 @@ impl WorkerShared {
             start: Instant::now(),
             in_flight: AtomicU64::new(0),
             solves: AtomicU64::new(0),
+            epoch: AtomicU64::new(0),
+            gap_bits: AtomicU64::new(f64::NAN.to_bits()),
         }
     }
 
@@ -97,6 +154,8 @@ impl WorkerShared {
             in_flight: self.in_flight.load(Ordering::Relaxed),
             solves: self.solves.load(Ordering::Relaxed),
             uptime_ticks: self.start.elapsed().as_secs(),
+            epoch: self.epoch.load(Ordering::Relaxed),
+            gap_bits: self.gap_bits.load(Ordering::Relaxed),
         }
     }
 }
@@ -117,12 +176,17 @@ impl WorkerServer {
     /// Bind and start accepting (`"host:0"` picks a free port — read it
     /// back with [`local_addr`](Self::local_addr)).
     pub fn bind(addr: &str) -> Result<WorkerServer> {
+        Self::bind_with(addr, WorkerOptions::default())
+    }
+
+    /// [`bind`](Self::bind) with explicit [`WorkerOptions`].
+    pub fn bind_with(addr: &str, opts: WorkerOptions) -> Result<WorkerServer> {
         let listener = TcpListener::bind(addr)
             .with_context(|| format!("binding worker listener on {addr}"))?;
         let local = listener.local_addr().context("reading bound address")?;
         let shutdown = Arc::new(AtomicBool::new(false));
         let conns: Arc<Mutex<Vec<(u64, TcpStream)>>> = Arc::default();
-        let store = Arc::new(Mutex::new(DatasetStore::new(WORKER_DATASET_CAPACITY)));
+        let store = Arc::new(Mutex::new(DatasetStore::new(opts.dataset_capacity.max(1))));
         let shared = Arc::new(WorkerShared::new());
         let accept = {
             let shutdown = shutdown.clone();
@@ -154,13 +218,33 @@ impl WorkerServer {
                     let conns = conns.clone();
                     let shared = shared.clone();
                     thread::spawn(move || {
-                        serve_conn(stream, &store, &shared);
+                        serve_conn(stream, &store, &shared, opts);
                         conns.lock().unwrap().retain(|(cid, _)| *cid != id);
                     });
                 }
             })
         };
         Ok(WorkerServer { addr: local, shutdown, conns, accept: Some(accept), shared })
+    }
+
+    /// Announce this worker to a coordinator's registration listener
+    /// ([`RemoteFleet::serve_registrations`]) from a background thread,
+    /// retrying until the coordinator acks with
+    /// [`Message::Registered`] or the worker shuts down. This is how a
+    /// restarted worker rejoins a fleet instead of staying marked dead:
+    /// `sgl worker --register coord:port` calls it right after binding.
+    pub fn register(&self, coordinator: &str) {
+        let coordinator = coordinator.to_string();
+        let addr = self.addr.to_string();
+        let shutdown = self.shutdown.clone();
+        thread::spawn(move || {
+            while !shutdown.load(Ordering::SeqCst) {
+                if try_register(&coordinator, &addr) {
+                    return;
+                }
+                thread::sleep(Duration::from_millis(200));
+            }
+        });
     }
 
     /// The actually bound address (resolves a `:0` port request).
@@ -199,18 +283,162 @@ impl Drop for WorkerServer {
     }
 }
 
+/// One registration attempt: dial, announce, await the ack.
+fn try_register(coordinator: &str, addr: &str) -> bool {
+    let Ok(mut s) = TcpStream::connect(coordinator) else { return false };
+    s.set_nodelay(true).ok();
+    s.set_read_timeout(Some(Duration::from_secs(5))).ok();
+    if Message::Register { addr: addr.to_string() }.write_to(&mut s).is_err() {
+        return false;
+    }
+    matches!(Message::read_from(&mut s), Ok(Message::Registered { .. }))
+}
+
 /// Blocking entry behind `sgl worker --listen addr`: bind, announce the
 /// bound address on stdout (supervisors and the process-spawning tests
 /// parse this line), serve until killed.
 pub fn run_worker(addr: &str) -> Result<()> {
-    let server = WorkerServer::bind(addr)?;
+    run_worker_with(addr, WorkerOptions::default(), None)
+}
+
+/// [`run_worker`] with explicit [`WorkerOptions`] and an optional
+/// coordinator registration address (`sgl worker --register`).
+pub fn run_worker_with(
+    addr: &str,
+    opts: WorkerOptions,
+    register: Option<&str>,
+) -> Result<()> {
+    let server = WorkerServer::bind_with(addr, opts)?;
     println!("worker listening on {}", server.local_addr());
     std::io::stdout().flush().ok();
+    if let Some(coordinator) = register {
+        server.register(coordinator);
+    }
     server.serve_forever();
     Ok(())
 }
 
-fn serve_conn(mut stream: TcpStream, store: &Mutex<DatasetStore>, shared: &WorkerShared) {
+/// Per-connection state of a chunked dataset ship. Begin/Chunk frames
+/// are unacked (the transfer costs one round trip); errors latch here
+/// and the worker keeps draining chunks until the sealing `ShipEnd`,
+/// whose single reply carries the verdict — replying early would
+/// write-write deadlock against a coordinator still streaming chunks.
+enum ShipState {
+    Idle,
+    Assembling(Box<ChunkAssembler>),
+    Failed(RemoteError),
+}
+
+fn open_ship(state: &mut ShipState, begin: ChunkBegin, shared: &WorkerShared) {
+    shared.metrics.incr("worker_chunked_ships_opened", 1);
+    // A Begin always starts fresh: an interrupted earlier ship on this
+    // connection is abandoned, never spliced into.
+    *state = match ChunkAssembler::new(begin) {
+        Ok(asm) => ShipState::Assembling(Box::new(asm)),
+        Err(e) => ShipState::Failed(RemoteError {
+            kind: RemoteErrorKind::BadRequest,
+            detail: format!("invalid chunked ship: {e}"),
+        }),
+    };
+}
+
+fn add_chunk(state: &mut ShipState, part: ChunkPart, shared: &WorkerShared) {
+    shared.metrics.incr("worker_chunks_received", 1);
+    match state {
+        ShipState::Assembling(asm) => {
+            if let Err(e) = asm.chunk(part) {
+                *state = ShipState::Failed(RemoteError {
+                    kind: RemoteErrorKind::BadRequest,
+                    detail: format!("invalid chunk: {e}"),
+                });
+            }
+        }
+        ShipState::Idle => {
+            *state = ShipState::Failed(RemoteError {
+                kind: RemoteErrorKind::BadRequest,
+                detail: "chunk arrived without an open ship".to_string(),
+            });
+        }
+        // Already failed: drain the rest of the stream quietly; the
+        // verdict goes out with the ShipEnd reply.
+        ShipState::Failed(_) => {}
+    }
+}
+
+fn finish_ship(
+    state: &mut ShipState,
+    fingerprint: u64,
+    store: &Mutex<DatasetStore>,
+    shared: &WorkerShared,
+) -> Message {
+    match std::mem::replace(state, ShipState::Idle) {
+        ShipState::Assembling(asm) => match asm.finish(fingerprint) {
+            Ok(ds) => {
+                shared.metrics.incr("worker_chunked_ships_completed", 1);
+                store_dataset(fingerprint, ds, store, shared)
+            }
+            Err(e) => Message::Error(RemoteError {
+                kind: RemoteErrorKind::BadRequest,
+                detail: format!("chunked ship failed: {e}"),
+            }),
+        },
+        ShipState::Failed(err) => Message::Error(err),
+        ShipState::Idle => Message::Error(RemoteError {
+            kind: RemoteErrorKind::BadRequest,
+            detail: "ship-end arrived without an open ship".to_string(),
+        }),
+    }
+}
+
+/// Validate and store an arrived dataset under `fingerprint`, counting
+/// LRU evictions (an evicted fingerprint is safe: the coordinator
+/// reships transparently on `UnknownDataset`).
+fn store_dataset(
+    fingerprint: u64,
+    ds: WireDataset,
+    store: &Mutex<DatasetStore>,
+    shared: &WorkerShared,
+) -> Message {
+    match ds.into_problem() {
+        Ok(payload) => {
+            let pb = match payload {
+                ProblemPayload::Dense(p) => AnyProblem::Dense(Arc::new(p)),
+                ProblemPayload::Csc(p) => AnyProblem::Csc(Arc::new(p)),
+                ProblemPayload::DenseLogistic(p) => AnyProblem::DenseLogistic(Arc::new(p)),
+                ProblemPayload::CscLogistic(p) => AnyProblem::CscLogistic(Arc::new(p)),
+                ProblemPayload::DenseMultiTask(p) => {
+                    AnyProblem::DenseMultiTask(Arc::new(p))
+                }
+                ProblemPayload::CscMultiTask(p) => AnyProblem::CscMultiTask(Arc::new(p)),
+            };
+            let evicted = store.lock().unwrap().insert(fingerprint, pb);
+            if evicted > 0 {
+                shared.metrics.incr("worker_dataset_evictions", evicted as u64);
+            }
+            shared.metrics.incr("worker_datasets_stored", 1);
+            Message::DatasetKnown { fingerprint, known: true }
+        }
+        Err(e) => Message::Error(RemoteError {
+            kind: RemoteErrorKind::BadRequest,
+            detail: format!("invalid dataset: {e}"),
+        }),
+    }
+}
+
+fn serve_conn(
+    mut stream: TcpStream,
+    store: &Arc<Mutex<DatasetStore>>,
+    shared: &Arc<WorkerShared>,
+    opts: WorkerOptions,
+) {
+    // All writes to this connection — replies here, Progress frames from
+    // a solve's pinger thread — serialize through one mutex so frames
+    // can never interleave mid-frame on the wire.
+    let writer = match stream.try_clone() {
+        Ok(w) => Arc::new(Mutex::new(w)),
+        Err(_) => return,
+    };
+    let mut ship = ShipState::Idle;
     loop {
         let (msg, body) = match Message::read_opt_with_body(&mut stream) {
             Ok(Some(m)) => m,
@@ -220,15 +448,32 @@ fn serve_conn(mut stream: TcpStream, store: &Mutex<DatasetStore>, shared: &Worke
             // peer may log it), then drop the connection — framing can
             // no longer be trusted.
             Err(e) => {
+                let mut w = writer.lock().unwrap();
                 let _ = Message::Error(RemoteError {
                     kind: RemoteErrorKind::BadRequest,
                     detail: format!("undecodable frame: {e}"),
                 })
-                .write_to(&mut stream);
+                .write_to(&mut *w);
                 return;
             }
         };
-        let reply = handle_request(msg, &body, store, shared);
+        let reply = match msg {
+            // The chunked-ship frames are the protocol's only unacked
+            // requests (see ShipState); everything else is one reply per
+            // request.
+            Message::ShipBegin(begin) => {
+                open_ship(&mut ship, begin, shared);
+                continue;
+            }
+            Message::ShipChunk(part) => {
+                add_chunk(&mut ship, part, shared);
+                continue;
+            }
+            Message::ShipEnd { fingerprint } => {
+                finish_ship(&mut ship, fingerprint, store, shared)
+            }
+            msg => handle_request(msg, &body, store, shared, &writer, opts),
+        };
         drop(body);
         // An unframeable reply (e.g. a PathResult beyond the 2 GiB frame
         // cap) must become a typed error, not a panicked serve thread —
@@ -242,10 +487,40 @@ fn serve_conn(mut stream: TcpStream, store: &Mutex<DatasetStore>, shared: &Worke
             })
             .encode()
         });
-        if stream.write_all(&frame).and_then(|()| stream.flush()).is_err() {
+        let mut w = writer.lock().unwrap();
+        if w.write_all(&frame).and_then(|()| w.flush()).is_err() {
             return;
         }
     }
+}
+
+/// Spawn the progress pinger for one in-flight solve: every interval it
+/// folds the solve's [`ProgressCell`] into the shared summary and pushes
+/// a [`Message::Progress`] frame through the connection's write mutex.
+/// The caller stops it (flag + unpark + join) *before* writing the reply,
+/// so the stream is always `Progress* · reply` — never interleaved.
+fn spawn_pinger(
+    writer: Arc<Mutex<TcpStream>>,
+    shared: Arc<WorkerShared>,
+    cell: Arc<ProgressCell>,
+    stop: Arc<AtomicBool>,
+    interval: Duration,
+) -> thread::JoinHandle<()> {
+    thread::spawn(move || loop {
+        thread::park_timeout(interval);
+        if stop.load(Ordering::SeqCst) {
+            return;
+        }
+        shared.epoch.store(cell.epoch(), Ordering::Relaxed);
+        shared.gap_bits.store(cell.gap_bits(), Ordering::Relaxed);
+        let frame = Message::Progress { summary: shared.summary() }.encode();
+        let mut w = writer.lock().unwrap();
+        if w.write_all(&frame).and_then(|()| w.flush()).is_err() {
+            // The coordinator is gone; the solve itself discovers this
+            // when its reply write fails.
+            return;
+        }
+    })
 }
 
 /// One request frame → exactly one reply frame. `body` is the raw frame
@@ -253,8 +528,10 @@ fn serve_conn(mut stream: TcpStream, store: &Mutex<DatasetStore>, shared: &Worke
 fn handle_request(
     msg: Message,
     body: &[u8],
-    store: &Mutex<DatasetStore>,
-    shared: &WorkerShared,
+    store: &Arc<Mutex<DatasetStore>>,
+    shared: &Arc<WorkerShared>,
+    writer: &Arc<Mutex<TcpStream>>,
+    opts: WorkerOptions,
 ) -> Message {
     match msg {
         Message::Ping { seq } => Message::Pong { seq, summary: shared.summary() },
@@ -277,33 +554,7 @@ fn handle_request(
             // (`wire::tests::dataset_fingerprint_is_content_addressed`
             // pins this equality).
             let fingerprint = crate::util::wire::fnv1a64(&body[2..]);
-            match ds.into_problem() {
-                Ok(payload) => {
-                    let pb = match payload {
-                        ProblemPayload::Dense(p) => AnyProblem::Dense(Arc::new(p)),
-                        ProblemPayload::Csc(p) => AnyProblem::Csc(Arc::new(p)),
-                        ProblemPayload::DenseLogistic(p) => {
-                            AnyProblem::DenseLogistic(Arc::new(p))
-                        }
-                        ProblemPayload::CscLogistic(p) => {
-                            AnyProblem::CscLogistic(Arc::new(p))
-                        }
-                        ProblemPayload::DenseMultiTask(p) => {
-                            AnyProblem::DenseMultiTask(Arc::new(p))
-                        }
-                        ProblemPayload::CscMultiTask(p) => {
-                            AnyProblem::CscMultiTask(Arc::new(p))
-                        }
-                    };
-                    store.lock().unwrap().insert(fingerprint, pb);
-                    shared.metrics.incr("worker_datasets_stored", 1);
-                    Message::DatasetKnown { fingerprint, known: true }
-                }
-                Err(e) => Message::Error(RemoteError {
-                    kind: RemoteErrorKind::BadRequest,
-                    detail: format!("invalid dataset: {e}"),
-                }),
-            }
+            store_dataset(fingerprint, ds, store, shared)
         }
         Message::SolveShard(req) => {
             // Clone the `Arc` out and solve off-lock: connections solve
@@ -333,16 +584,41 @@ fn handle_request(
                     })
                 }
                 Some(pb) => {
-                    let ShardRequest { lambdas, solver, opts, handoff, .. } = req;
+                    let ShardRequest { lambdas, solver, opts: path_opts, handoff, .. } = req;
                     shared.in_flight.fetch_add(1, Ordering::Relaxed);
                     let t0 = Instant::now();
+                    // Liveness: the solver publishes (epoch, gap) into
+                    // the cell at every gap check; the pinger streams it
+                    // to the coordinator. Observation-only — the solve's
+                    // arithmetic is bit-identical with or without it.
+                    let cell = ProgressCell::new();
+                    let stop = Arc::new(AtomicBool::new(false));
+                    let pinger = (!opts.progress_interval.is_zero()).then(|| {
+                        spawn_pinger(
+                            writer.clone(),
+                            shared.clone(),
+                            cell.clone(),
+                            stop.clone(),
+                            opts.progress_interval,
+                        )
+                    });
+                    let prev_cell = progress::set_current(Some(cell));
                     let sp = trace::span_with("worker_shard", || {
                         vec![("lambdas", lambdas.len().into())]
                     });
                     let solved = catch_unwind(AssertUnwindSafe(|| {
-                        pb.solve_range(&lambdas, &opts, solver, handoff.as_ref())
+                        pb.solve_range(&lambdas, &path_opts, solver, handoff.as_ref())
                     }));
                     drop(sp);
+                    progress::set_current(prev_cell);
+                    if let Some(pinger) = pinger {
+                        // Stop + join BEFORE the reply goes out: the last
+                        // frame a coordinator reads for this exchange is
+                        // the reply, with any Progress strictly before it.
+                        stop.store(true, Ordering::SeqCst);
+                        pinger.thread().unpark();
+                        let _ = pinger.join();
+                    }
                     shared.metrics.observe_secs("worker_shard_solve_s", t0.elapsed().as_secs_f64());
                     shared.in_flight.fetch_sub(1, Ordering::Relaxed);
                     match solved {
@@ -365,13 +641,22 @@ fn handle_request(
                 }
             }
         }
+        // Replies, coordinator-bound frames, and ship frames (handled in
+        // `serve_conn` before this dispatch) are all out of protocol in a
+        // request position.
         Message::Pong { .. }
         | Message::StatsReply(_)
         | Message::DatasetKnown { .. }
         | Message::ShardDone { .. }
-        | Message::Error(_) => Message::Error(RemoteError {
+        | Message::Error(_)
+        | Message::Register { .. }
+        | Message::Registered { .. }
+        | Message::Progress { .. }
+        | Message::ShipBegin(_)
+        | Message::ShipChunk(_)
+        | Message::ShipEnd { .. } => Message::Error(RemoteError {
             kind: RemoteErrorKind::BadRequest,
-            detail: "a reply frame arrived in a request position".to_string(),
+            detail: "frame out of protocol in a request position".to_string(),
         }),
     }
 }
@@ -380,26 +665,81 @@ fn handle_request(
 // Coordinator side
 // ---------------------------------------------------------------------------
 
-/// Fleet sizing knobs.
+/// Fleet sizing and elasticity knobs.
 #[derive(Clone, Copy, Debug)]
 pub struct FleetConfig {
     /// Persistent connections opened to each worker — the worker's
     /// in-flight shard capacity from this coordinator's point of view.
     pub conns_per_worker: usize,
+    /// Datasets whose canonical encoding exceeds this many bytes ship as
+    /// a `ShipBegin · ShipChunk* · ShipEnd` sequence of column-range
+    /// frames instead of one monolithic `ShipDataset` frame, so a
+    /// dataset larger than [`MAX_FRAME`](crate::util::wire::MAX_FRAME)
+    /// (or a worker's memory headroom) still ships. Each chunk's frame
+    /// stays under roughly this budget.
+    pub ship_chunk_bytes: usize,
+    /// When non-zero, every reply read during an exchange is bounded by
+    /// this deadline *between frames*: a worker mid-solve keeps the
+    /// exchange alive by pushing [`Message::Progress`] pings, so a long
+    /// solve is never misclassified — only a worker that stops pinging
+    /// (killed -9, wedged kernel, partitioned) trips the deadline and
+    /// gets its shard requeued. Zero (the default) disables the
+    /// deadline: a silent-dead worker then hangs the exchange until the
+    /// OS gives up on the socket.
+    pub progress_deadline: Duration,
+    /// When non-zero, `acquire` with zero surviving workers waits this
+    /// long for a worker to rejoin through the registration listener
+    /// (see [`RemoteFleet::serve_registrations`]) before failing the
+    /// shard. Zero (the default) fails immediately — the pre-elastic
+    /// contract the dead-fleet tests pin.
+    pub rejoin_grace: Duration,
 }
 
 impl Default for FleetConfig {
     fn default() -> Self {
-        FleetConfig { conns_per_worker: 1 }
+        FleetConfig {
+            conns_per_worker: 1,
+            ship_chunk_bytes: 1 << 30,
+            progress_deadline: Duration::ZERO,
+            rejoin_grace: Duration::ZERO,
+        }
     }
 }
 
 struct WorkerState {
+    addr: String,
     alive: bool,
     /// Channels currently leased to an in-flight exchange.
     busy: usize,
-    /// Dataset fingerprints this worker has acknowledged.
+    /// Bumped every time this address (re)joins through `admit`. A lease
+    /// carries the generation it was minted under; a release whose
+    /// generation no longer matches belongs to a dead incarnation and
+    /// must not touch the new one's accounting.
+    generation: u64,
+    /// Dataset fingerprints this worker has *acknowledged* (committed on
+    /// `DatasetKnown` only — never optimistically, so a worker that dies
+    /// between ship and ack is never believed to hold the dataset).
     shipped: HashSet<u64>,
+    /// Fingerprints currently being shipped on some lease: elects one
+    /// concurrent lease as the shipper without pre-committing `shipped`.
+    shipping: HashSet<u64>,
+    /// Parked connections (`None` while leased or after death). Living
+    /// inside the state mutex lets `admit` grow/replace them at runtime.
+    chans: Vec<Option<TcpStream>>,
+}
+
+impl WorkerState {
+    fn fresh(addr: String, chans: Vec<Option<TcpStream>>) -> WorkerState {
+        WorkerState {
+            addr,
+            alive: true,
+            busy: 0,
+            generation: 0,
+            shipped: HashSet::new(),
+            shipping: HashSet::new(),
+            chans,
+        }
+    }
 }
 
 struct FleetShared {
@@ -485,31 +825,34 @@ impl Liveness {
     }
 }
 
-/// A leased exchange channel: exclusive use of one worker connection.
+/// A leased exchange channel: exclusive use of one worker connection,
+/// valid only for the worker generation it was minted under.
 struct Lease {
     worker: usize,
+    generation: u64,
     chan: usize,
     stream: TcpStream,
 }
 
 /// Client pool over a set of remote workers. See the module docs for the
 /// requeue-on-disconnect contract; all bookkeeping (slot accounting,
-/// shipped-dataset sets, liveness) lives behind one mutex, and streams
-/// are moved out of their parking slots while leased so an exchange
-/// never blocks another.
+/// parked channels, shipped-dataset sets, liveness, generations) lives
+/// behind one mutex, and streams are moved out of their parking slots
+/// while leased so an exchange never blocks another.
 pub struct RemoteFleet {
-    addrs: Vec<String>,
-    /// `channels[worker][conn]`: parked connections (`None` while leased
-    /// or after the worker died). Lock order: `state` first, then a
-    /// channel slot.
-    channels: Vec<Vec<Mutex<Option<TcpStream>>>>,
     state: Mutex<FleetShared>,
-    /// Signals a released slot or a worker death.
+    /// Signals a released slot, a worker death, or a (re)join.
     slot_free: Condvar,
     conns_per_worker: usize,
+    ship_chunk_bytes: usize,
+    progress_deadline: Duration,
+    rejoin_grace: Duration,
     metrics: Arc<Metrics>,
     datasets: Mutex<DatasetRegistry>,
     ping_seq: AtomicU64,
+    /// Registration listener state: `(local_addr, stop_flag)` once
+    /// [`serve_registrations`](RemoteFleet::serve_registrations) runs.
+    reg: Mutex<Option<(SocketAddr, Arc<AtomicBool>)>>,
 }
 
 impl RemoteFleet {
@@ -519,32 +862,30 @@ impl RemoteFleet {
     pub fn connect(addrs: &[String], cfg: FleetConfig, metrics: Arc<Metrics>) -> Result<Self> {
         ensure!(!addrs.is_empty(), "fleet needs at least one worker address");
         let conns_per_worker = cfg.conns_per_worker.max(1);
-        let mut channels = Vec::with_capacity(addrs.len());
+        let mut workers = Vec::with_capacity(addrs.len());
         for addr in addrs {
-            let mut row = Vec::with_capacity(conns_per_worker);
+            let mut chans = Vec::with_capacity(conns_per_worker);
             for _ in 0..conns_per_worker {
                 let stream = TcpStream::connect(addr)
                     .with_context(|| format!("connecting to worker {addr}"))?;
                 stream.set_nodelay(true).ok();
-                row.push(Mutex::new(Some(stream)));
+                chans.push(Some(stream));
             }
-            channels.push(row);
+            workers.push(WorkerState::fresh(addr.clone(), chans));
         }
-        let workers = addrs
-            .iter()
-            .map(|_| WorkerState { alive: true, busy: 0, shipped: HashSet::new() })
-            .collect();
         metrics.set("fleet_workers_alive", addrs.len() as f64);
         metrics.set("fleet_in_flight", 0.0);
         Ok(RemoteFleet {
-            addrs: addrs.to_vec(),
-            channels,
             state: Mutex::new(FleetShared { workers }),
             slot_free: Condvar::new(),
             conns_per_worker,
+            ship_chunk_bytes: cfg.ship_chunk_bytes.max(1),
+            progress_deadline: cfg.progress_deadline,
+            rejoin_grace: cfg.rejoin_grace,
             metrics,
             datasets: Mutex::new(DatasetRegistry::new(FLEET_FINGERPRINT_CAPACITY)),
             ping_seq: AtomicU64::new(0),
+            reg: Mutex::new(None),
         })
     }
 
@@ -564,12 +905,110 @@ impl RemoteFleet {
         self.state.lock().unwrap().workers.iter().filter(|w| w.alive).count()
     }
 
-    pub fn addrs(&self) -> &[String] {
-        &self.addrs
+    /// Known worker addresses, including dead and rejoined ones (cloned
+    /// out: the roster can grow at runtime through registration).
+    pub fn addrs(&self) -> Vec<String> {
+        self.state.lock().unwrap().workers.iter().map(|w| w.addr.clone()).collect()
+    }
+
+    fn worker_addr(&self, wi: usize) -> String {
+        self.state.lock().unwrap().workers[wi].addr.clone()
+    }
+
+    /// Run `f` against the lease's worker state — but only if the worker
+    /// is still the same incarnation the lease was minted under.
+    fn with_worker<R>(&self, lease: &Lease, f: impl FnOnce(&mut WorkerState) -> R) -> Option<R> {
+        let mut st = self.state.lock().unwrap();
+        let w = &mut st.workers[lease.worker];
+        (w.generation == lease.generation).then(|| f(w))
     }
 
     pub fn metrics(&self) -> Arc<Metrics> {
         self.metrics.clone()
+    }
+
+    /// Start the worker-initiated registration listener: restarted or
+    /// brand-new `sgl worker --register` processes dial this address,
+    /// send [`Message::Register`] with their own serving address, and
+    /// are admitted into the roster (see [`admit`](RemoteFleet::admit)).
+    /// Returns the bound address. The listener thread holds only a
+    /// [`Weak`] reference and exits when the fleet drops.
+    pub fn serve_registrations(self: &Arc<Self>, addr: &str) -> Result<SocketAddr> {
+        let mut reg = self.reg.lock().unwrap();
+        ensure!(reg.is_none(), "registration listener is already running");
+        let listener =
+            TcpListener::bind(addr).with_context(|| format!("binding registration {addr}"))?;
+        let local = listener.local_addr().context("registration local addr")?;
+        let stop = Arc::new(AtomicBool::new(false));
+        *reg = Some((local, stop.clone()));
+        drop(reg);
+        let fleet = Arc::downgrade(self);
+        thread::spawn(move || {
+            for conn in listener.incoming() {
+                if stop.load(Ordering::SeqCst) {
+                    return;
+                }
+                let Some(fleet) = fleet.upgrade() else { return };
+                let Ok(mut stream) = conn else { continue };
+                stream.set_nodelay(true).ok();
+                stream.set_read_timeout(Some(Duration::from_secs(5))).ok();
+                // A malformed or failed registration is dropped silently:
+                // the worker's register loop retries until acknowledged.
+                let Ok(Message::Register { addr }) = Message::read_from(&mut stream) else {
+                    continue;
+                };
+                let Ok(worker) = fleet.admit(&addr) else { continue };
+                let _ = Message::Registered { worker: worker as u64 }.write_to(&mut stream);
+            }
+        });
+        Ok(local)
+    }
+
+    /// Admit a worker address into the roster: dial its channels, then —
+    /// under the state lock — either replace the existing entry for that
+    /// address (a restart: bump the generation so stale leases can't
+    /// corrupt accounting, clear the shipped set so datasets reship, drop
+    /// the dead incarnation's channels) or append a brand-new worker.
+    pub fn admit(&self, addr: &str) -> Result<usize> {
+        // Dial outside the lock: a slow handshake must not stall solves.
+        let mut chans = Vec::with_capacity(self.conns_per_worker);
+        for _ in 0..self.conns_per_worker {
+            let stream = TcpStream::connect(addr)
+                .with_context(|| format!("dialing registering worker {addr}"))?;
+            stream.set_nodelay(true).ok();
+            chans.push(Some(stream));
+        }
+        let mut st = self.state.lock().unwrap();
+        let wi = match st.workers.iter().position(|w| w.addr == addr) {
+            Some(wi) => {
+                let w = &mut st.workers[wi];
+                for c in &mut w.chans {
+                    if let Some(s) = c.take() {
+                        let _ = s.shutdown(Shutdown::Both);
+                    }
+                }
+                w.generation += 1;
+                w.busy = 0;
+                // The restarted process has an empty (or at best stale)
+                // store: forget everything so datasets reship on demand.
+                w.shipped.clear();
+                w.shipping.clear();
+                w.alive = true;
+                w.chans = chans;
+                self.metrics.incr("fleet_rejoins", 1);
+                wi
+            }
+            None => {
+                st.workers.push(WorkerState::fresh(addr.to_string(), chans));
+                self.metrics.incr("fleet_workers_joined", 1);
+                st.workers.len() - 1
+            }
+        };
+        self.metrics
+            .set("fleet_workers_alive", st.workers.iter().filter(|w| w.alive).count() as f64);
+        self.metrics.set("fleet_in_flight", total_busy(&st) as f64);
+        self.slot_free.notify_all();
+        Ok(wi)
     }
 
     /// Solve one λ-range shard on the fleet: lease a channel from the
@@ -617,7 +1056,7 @@ impl RemoteFleet {
                     return Ok((result, handoff));
                 }
                 Ok(Message::Error(err)) => {
-                    let addr = self.addrs[lease.worker].clone();
+                    let addr = self.worker_addr(lease.worker);
                     self.release(lease);
                     bail!("worker {addr} rejected the shard: {err}");
                 }
@@ -640,9 +1079,8 @@ impl RemoteFleet {
     /// [`WorkerSummary`], so a successful probe also reports what the
     /// worker is doing.
     pub fn heartbeat(&self, timeout: Duration) -> Vec<(String, Liveness)> {
-        (0..self.addrs.len())
-            .map(|wi| (self.addrs[wi].clone(), self.probe(wi, timeout)))
-            .collect()
+        let n = self.state.lock().unwrap().workers.len();
+        (0..n).map(|wi| (self.worker_addr(wi), self.probe(wi, timeout))).collect()
     }
 
     /// Scrape every surviving worker's metrics registry
@@ -655,7 +1093,8 @@ impl RemoteFleet {
     /// exactly like a failed probe. Returns how many workers answered.
     pub fn scrape(&self, timeout: Duration) -> usize {
         let mut answered = 0;
-        for wi in 0..self.addrs.len() {
+        let n = self.state.lock().unwrap().workers.len();
+        for wi in 0..n {
             let Some(mut lease) = self.try_lease_worker(wi) else { continue };
             lease.stream.set_read_timeout(Some(timeout)).ok();
             let reply = match Message::StatsRequest.write_to(&mut lease.stream) {
@@ -687,9 +1126,12 @@ impl RemoteFleet {
     pub fn warm(&self, pb: &AnyProblem) -> Result<usize> {
         let fp = self.register(pb);
         let mut newly = 0;
-        for wi in 0..self.addrs.len() {
+        let n = self.state.lock().unwrap().workers.len();
+        for wi in 0..n {
             let Some(mut lease) = self.try_lease_worker(wi) else { continue };
-            let need = self.state.lock().unwrap().workers[wi].shipped.insert(fp);
+            let need = self
+                .with_worker(&lease, |w| !w.shipped.contains(&fp) && w.shipping.insert(fp))
+                .unwrap_or(false);
             if !need {
                 self.release(lease);
                 continue;
@@ -700,7 +1142,7 @@ impl RemoteFleet {
                     self.release(lease);
                 }
                 Ok(Some(err)) => {
-                    let addr = self.addrs[wi].clone();
+                    let addr = self.worker_addr(wi);
                     self.release(lease);
                     bail!("worker {addr} rejected the dataset: {err}");
                 }
@@ -734,6 +1176,8 @@ impl RemoteFleet {
 
     fn acquire(&self) -> Result<Lease> {
         let mut st = self.state.lock().unwrap();
+        // Arms only while zero workers survive; any survivor disarms it.
+        let mut grace_deadline: Option<Instant> = None;
         loop {
             // Least-loaded surviving worker with a free channel.
             let mut best: Option<(usize, usize)> = None;
@@ -746,45 +1190,74 @@ impl RemoteFleet {
                 }
             }
             if let Some((wi, _)) = best {
-                let parked = (0..self.conns_per_worker)
-                    .find(|&ci| self.channels[wi][ci].lock().unwrap().is_some());
-                if let Some(ci) = parked {
-                    let stream =
-                        self.channels[wi][ci].lock().unwrap().take().expect("slot checked");
-                    st.workers[wi].busy += 1;
+                let w = &mut st.workers[wi];
+                if let Some(ci) = w.chans.iter().position(|c| c.is_some()) {
+                    let stream = w.chans[ci].take().expect("slot checked");
+                    let generation = w.generation;
+                    w.busy += 1;
                     self.metrics.set("fleet_in_flight", total_busy(&st) as f64);
-                    return Ok(Lease { worker: wi, chan: ci, stream });
+                    return Ok(Lease { worker: wi, generation, chan: ci, stream });
                 }
             }
             if !st.workers.iter().any(|w| w.alive) {
-                bail!("remote fleet has no surviving workers");
+                // With a grace window and a registration listener, a
+                // restarted worker may rejoin before the deadline — the
+                // admit notifies `slot_free` and the loop retries.
+                if self.rejoin_grace.is_zero() {
+                    bail!("remote fleet has no surviving workers");
+                }
+                let deadline =
+                    *grace_deadline.get_or_insert_with(|| Instant::now() + self.rejoin_grace);
+                let now = Instant::now();
+                if now >= deadline {
+                    bail!(
+                        "remote fleet has no surviving workers (none rejoined within {:?})",
+                        self.rejoin_grace
+                    );
+                }
+                st = self.slot_free.wait_timeout(st, deadline - now).unwrap().0;
+                continue;
             }
+            grace_deadline = None;
             st = self.slot_free.wait(st).unwrap();
         }
     }
 
-    /// Park the channel again after a successful exchange.
+    /// Park the channel again after a successful exchange. A stale lease
+    /// (its worker rejoined since it was minted) is dropped without
+    /// touching the new incarnation's accounting.
     fn release(&self, lease: Lease) {
         let mut st = self.state.lock().unwrap();
-        st.workers[lease.worker].busy -= 1;
-        *self.channels[lease.worker][lease.chan].lock().unwrap() = Some(lease.stream);
+        let w = &mut st.workers[lease.worker];
+        if w.generation != lease.generation {
+            let _ = lease.stream.shutdown(Shutdown::Both);
+            return;
+        }
+        w.busy -= 1;
+        w.chans[lease.chan] = Some(lease.stream);
         self.metrics.set("fleet_in_flight", total_busy(&st) as f64);
         self.slot_free.notify_all();
     }
 
     /// The exchange failed at the transport level: mark the worker dead
     /// and drop every connection to it (other in-flight exchanges on the
-    /// same worker will fail on their own sockets and land here too).
+    /// same worker will fail on their own sockets and land here too). A
+    /// stale lease's death belongs to the previous incarnation and must
+    /// not mark the rejoined worker dead.
     fn release_dead(&self, lease: Lease) {
         let _ = lease.stream.shutdown(Shutdown::Both);
         let mut st = self.state.lock().unwrap();
-        st.workers[lease.worker].busy -= 1;
-        if st.workers[lease.worker].alive {
-            st.workers[lease.worker].alive = false;
+        let w = &mut st.workers[lease.worker];
+        if w.generation != lease.generation {
+            return;
+        }
+        w.busy -= 1;
+        if w.alive {
+            w.alive = false;
             self.metrics.incr("fleet_worker_disconnects", 1);
         }
-        for chan in &self.channels[lease.worker] {
-            if let Some(s) = chan.lock().unwrap().take() {
+        for c in &mut w.chans {
+            if let Some(s) = c.take() {
                 let _ = s.shutdown(Shutdown::Both);
             }
         }
@@ -792,6 +1265,30 @@ impl RemoteFleet {
             .set("fleet_workers_alive", st.workers.iter().filter(|w| w.alive).count() as f64);
         self.metrics.set("fleet_in_flight", total_busy(&st) as f64);
         self.slot_free.notify_all();
+    }
+
+    /// Read one *reply* frame on a lease, treating interleaved
+    /// [`Message::Progress`] pings as keep-alives: each ping re-arms the
+    /// `progress_deadline` read timeout (when configured), so a worker
+    /// mid-solve can take arbitrarily long as long as it keeps pinging,
+    /// while a silently dead one times out and is written off.
+    fn read_reply(&self, lease: &mut Lease) -> Result<Message, WireError> {
+        let bounded = !self.progress_deadline.is_zero();
+        if bounded {
+            lease.stream.set_read_timeout(Some(self.progress_deadline)).ok();
+        }
+        let reply = loop {
+            match Message::read_from(&mut lease.stream) {
+                Ok(Message::Progress { .. }) => {
+                    self.metrics.incr("fleet_progress_pings", 1);
+                }
+                other => break other,
+            }
+        };
+        if bounded {
+            lease.stream.set_read_timeout(None).ok();
+        }
+        reply
     }
 
     /// One shard exchange on a leased channel (ship-on-first-use, one
@@ -805,39 +1302,51 @@ impl RemoteFleet {
         req_frame: &[u8],
     ) -> Result<Message, WireError> {
         let io = |e: std::io::Error| WireError::Io(e.to_string());
-        // Reserve-then-ship: `insert` under the state lock elects one
-        // concurrent lease as the shipper. A racing sibling lease
-        // proceeds straight to its solve; if it outruns the in-flight
-        // ship it gets UnknownDataset and reships below — so with
+        // Elect one concurrent lease as the shipper via `shipping` —
+        // without pre-committing `shipped`, which is only written on the
+        // worker's ack (see `ship`). A racing sibling lease proceeds
+        // straight to its solve; if it outruns the in-flight ship it
+        // gets UnknownDataset and reships below — so with
         // `conns_per_worker > 1` up to conns−1 redundant transfers are
         // possible in that race window (bounded churn, not a
         // correctness issue; the common 1-conn fleet never reships).
-        let need_ship =
-            self.state.lock().unwrap().workers[lease.worker].shipped.insert(fp);
+        let need_ship = self
+            .with_worker(lease, |w| !w.shipped.contains(&fp) && w.shipping.insert(fp))
+            .unwrap_or(false);
         if need_ship {
             if let Some(err) = self.ship(lease, fp, pb)? {
                 return Ok(Message::Error(err));
             }
         }
         lease.stream.write_all(req_frame).map_err(io)?;
-        let reply = Message::read_from(&mut lease.stream)?;
+        let reply = self.read_reply(lease)?;
         if let Message::Error(e) = &reply {
             if e.kind == RemoteErrorKind::UnknownDataset {
-                // The worker lost its store (e.g. restarted behind the
-                // same address), or our ship is still in flight on a
-                // sibling channel: reship here and retry the same shard.
+                // The worker lost its store (restarted behind the same
+                // address, or the LRU evicted this fingerprint), or our
+                // ship is still in flight on a sibling channel: reship
+                // here and retry the same shard.
+                self.metrics.incr("fleet_reships", 1);
+                self.with_worker(lease, |w| {
+                    w.shipped.remove(&fp);
+                    w.shipping.insert(fp);
+                });
                 if let Some(err) = self.ship(lease, fp, pb)? {
                     return Ok(Message::Error(err));
                 }
                 lease.stream.write_all(req_frame).map_err(io)?;
-                return Message::read_from(&mut lease.stream);
+                return self.read_reply(lease);
             }
         }
         Ok(reply)
     }
 
-    /// Ship a dataset on a leased channel. `Ok(Some(err))` is a typed
-    /// worker-side rejection (do not retry elsewhere); `Err` is
+    /// Ship a dataset on a leased channel — monolithic
+    /// [`Message::ShipDataset`] when it fits the `ship_chunk_bytes`
+    /// budget, otherwise the chunked `ShipBegin · ShipChunk* · ShipEnd`
+    /// sequence (one ack either way). The worker's `shipped` entry is
+    /// committed only on its `DatasetKnown` ack. `Ok(Some(err))` is a
+    /// typed worker-side rejection (do not retry elsewhere); `Err` is
     /// transport failure.
     fn ship(
         &self,
@@ -847,34 +1356,56 @@ impl RemoteFleet {
     ) -> Result<Option<RemoteError>, WireError> {
         let io = |e: std::io::Error| WireError::Io(e.to_string());
         // Built per actual ship (rare) and dropped right after: the
-        // fleet never retains an encoded frame. An unframeable dataset
-        // is a typed rejection — panicking here would leak the held
-        // lease's busy slot (nothing unwinds the fleet accounting).
-        let frame = match Message::ShipDataset(wire_dataset(pb)).try_encode() {
-            Ok(f) => f,
-            Err(e) => {
-                self.state.lock().unwrap().workers[lease.worker].shipped.remove(&fp);
-                return Ok(Some(RemoteError {
-                    kind: RemoteErrorKind::BadRequest,
-                    detail: format!("dataset cannot be framed: {e}"),
-                }));
+        // fleet never retains an encoded frame.
+        let ds = wire_dataset(pb);
+        if ds.wire_len() > self.ship_chunk_bytes {
+            // Chunked path: no per-chunk acks (both sides streaming
+            // writes at once would deadlock on full TCP buffers), one
+            // DatasetKnown/Error after ShipEnd.
+            let (begin, parts) = ds.to_chunks(self.ship_chunk_bytes);
+            let n_parts = parts.len() as u64;
+            lease.stream.write_all(&Message::ShipBegin(begin).encode()).map_err(io)?;
+            for part in parts {
+                lease.stream.write_all(&Message::ShipChunk(part).encode()).map_err(io)?;
             }
-        };
-        lease.stream.write_all(&frame).map_err(io)?;
-        drop(frame);
-        match Message::read_from(&mut lease.stream)? {
+            lease.stream.write_all(&Message::ShipEnd { fingerprint: fp }.encode()).map_err(io)?;
+            self.metrics.incr("fleet_dataset_chunks_shipped", n_parts);
+        } else {
+            // An unframeable dataset is a typed rejection — panicking
+            // here would leak the held lease's busy slot (nothing
+            // unwinds the fleet accounting).
+            let frame = match Message::ShipDataset(ds).try_encode() {
+                Ok(f) => f,
+                Err(e) => {
+                    self.with_worker(lease, |w| w.shipping.remove(&fp));
+                    return Ok(Some(RemoteError {
+                        kind: RemoteErrorKind::BadRequest,
+                        detail: format!("dataset cannot be framed: {e}"),
+                    }));
+                }
+            };
+            lease.stream.write_all(&frame).map_err(io)?;
+        }
+        match self.read_reply(lease)? {
             Message::DatasetKnown { .. } => {
-                self.state.lock().unwrap().workers[lease.worker].shipped.insert(fp);
+                // Commit on ack — the only writer of `shipped`.
+                self.with_worker(lease, |w| {
+                    w.shipping.remove(&fp);
+                    w.shipped.insert(fp);
+                });
                 self.metrics.incr("fleet_datasets_shipped", 1);
                 Ok(None)
             }
             Message::Error(e) => {
-                // Typed rejection: release the reservation so the error
-                // is reproducible rather than masked on the next call.
-                self.state.lock().unwrap().workers[lease.worker].shipped.remove(&fp);
+                // Typed rejection: clear the election so the error is
+                // reproducible rather than masked on the next call.
+                self.with_worker(lease, |w| {
+                    w.shipping.remove(&fp);
+                    w.shipped.remove(&fp);
+                });
                 Ok(Some(e))
             }
-            _ => Err(WireError::Malformed("unexpected reply to ShipDataset")),
+            _ => Err(WireError::Malformed("unexpected reply to a dataset ship")),
         }
     }
 
@@ -882,15 +1413,16 @@ impl RemoteFleet {
     /// (`None`: dead, or every channel is mid-exchange).
     fn try_lease_worker(&self, wi: usize) -> Option<Lease> {
         let mut st = self.state.lock().unwrap();
-        if !st.workers[wi].alive {
+        let w = &mut st.workers[wi];
+        if !w.alive {
             return None;
         }
-        let ci = (0..self.conns_per_worker)
-            .find(|&ci| self.channels[wi][ci].lock().unwrap().is_some())?;
-        let stream = self.channels[wi][ci].lock().unwrap().take().expect("slot checked");
-        st.workers[wi].busy += 1;
+        let ci = w.chans.iter().position(|c| c.is_some())?;
+        let stream = w.chans[ci].take().expect("slot checked");
+        let generation = w.generation;
+        w.busy += 1;
         self.metrics.set("fleet_in_flight", total_busy(&st) as f64);
-        Some(Lease { worker: wi, chan: ci, stream })
+        Some(Lease { worker: wi, generation, chan: ci, stream })
     }
 
     fn probe(&self, wi: usize, timeout: Duration) -> Liveness {
@@ -916,6 +1448,19 @@ impl RemoteFleet {
                 self.release_dead(lease);
                 Liveness::Dead
             }
+        }
+    }
+}
+
+impl Drop for RemoteFleet {
+    fn drop(&mut self) {
+        // Stop the registration listener: set the flag, then poke the
+        // accept loop with a throwaway connection so it observes it
+        // (its `Weak` upgrade would also fail, but only on the *next*
+        // connection — this unblocks it now).
+        if let Some((addr, stop)) = self.reg.lock().unwrap().take() {
+            stop.store(true, Ordering::SeqCst);
+            let _ = TcpStream::connect(addr);
         }
     }
 }
@@ -1138,5 +1683,90 @@ mod tests {
         // Re-scraping overwrites the same keys — totals stay absolute.
         assert_eq!(fleet.scrape(Duration::from_secs(5)), 1);
         assert_eq!(m.counter("worker_0_worker_shards_solved"), 1);
+    }
+
+    #[test]
+    fn evicted_dataset_is_reshipped_transparently() {
+        // A 1-dataset store: the second problem evicts the first, so
+        // re-solving the first trips UnknownDataset → transparent reship.
+        let server = WorkerServer::bind_with(
+            "127.0.0.1:0",
+            WorkerOptions { dataset_capacity: 1, ..Default::default() },
+        )
+        .expect("bind");
+        let addrs = vec![server.local_addr().to_string()];
+        let fleet = RemoteFleet::connect(&addrs, FleetConfig::default(), Arc::new(Metrics::new()))
+            .expect("connect");
+        let pb1 = small_problem(21);
+        let pb2 = small_problem(22);
+        let opts = PathOptions {
+            delta: 1.0,
+            t_count: 3,
+            solve: SolveOptions { tol: 1e-6, record_history: false, ..Default::default() },
+        };
+        for pb in [&pb1, &pb2, &pb1] {
+            let any = AnyProblem::Dense((*pb).clone());
+            let lambdas = lambda_grid(pb.lambda_max(), 1.0, 3);
+            fleet.solve_shard(&any, &lambdas, &opts, SolverKind::Cd, None).expect("solve");
+        }
+        let m = fleet.metrics();
+        assert_eq!(m.counter("fleet_datasets_shipped"), 3, "ship, ship, reship");
+        assert_eq!(m.counter("fleet_reships"), 1);
+        assert_eq!(m.counter("fleet_shards_solved"), 3);
+        fleet.scrape(Duration::from_secs(5));
+        assert_eq!(m.counter("worker_0_worker_dataset_evictions"), 2);
+        assert_eq!(fleet.workers_alive(), 1, "eviction is not a failure");
+    }
+
+    #[test]
+    fn restarted_worker_rejoins_through_registration() {
+        let server = WorkerServer::bind("127.0.0.1:0").expect("bind");
+        let addrs = vec![server.local_addr().to_string()];
+        let fleet = Arc::new(
+            RemoteFleet::connect(&addrs, FleetConfig::default(), Arc::new(Metrics::new()))
+                .expect("connect"),
+        );
+        let reg = fleet.serve_registrations("127.0.0.1:0").expect("registration listener");
+        server.kill();
+        drop(server);
+        let down = fleet.heartbeat(Duration::from_secs(5));
+        assert!(down.iter().all(|(_, l)| !l.is_alive()), "{down:?}");
+        assert_eq!(fleet.workers_alive(), 0);
+        // A replacement worker (fresh address) announces itself and joins.
+        let server2 = WorkerServer::bind("127.0.0.1:0").expect("bind replacement");
+        server2.register(&reg.to_string());
+        let deadline = Instant::now() + Duration::from_secs(10);
+        while fleet.workers_alive() == 0 && Instant::now() < deadline {
+            thread::sleep(Duration::from_millis(10));
+        }
+        assert_eq!(fleet.workers_alive(), 1, "replacement joined the roster");
+        assert_eq!(fleet.metrics().counter("fleet_workers_joined"), 1);
+        // The fleet solves on the replacement; its store is empty, so the
+        // dataset ships fresh.
+        let pb = small_problem(23);
+        let any = AnyProblem::Dense(pb.clone());
+        let lambdas = lambda_grid(pb.lambda_max(), 1.0, 3);
+        let opts = PathOptions {
+            delta: 1.0,
+            t_count: 3,
+            solve: SolveOptions { tol: 1e-6, record_history: false, ..Default::default() },
+        };
+        fleet.solve_shard(&any, &lambdas, &opts, SolverKind::Cd, None).expect("solve");
+        assert_eq!(fleet.metrics().counter("fleet_datasets_shipped"), 1);
+        // Re-registering the SAME address counts as a rejoin: generation
+        // bumps and the shipped set clears, so the next solve reships.
+        server2.register(&reg.to_string());
+        let deadline = Instant::now() + Duration::from_secs(10);
+        while fleet.metrics().counter("fleet_rejoins") == 0 && Instant::now() < deadline {
+            thread::sleep(Duration::from_millis(10));
+        }
+        assert_eq!(fleet.metrics().counter("fleet_rejoins"), 1);
+        fleet.solve_shard(&any, &lambdas, &opts, SolverKind::Cd, None).expect("solve");
+        assert_eq!(
+            fleet.metrics().counter("fleet_datasets_shipped"),
+            2,
+            "rejoin cleared the shipped set"
+        );
+        assert_eq!(fleet.in_flight(), 0);
     }
 }

@@ -12,8 +12,11 @@
 //!   λ-sharded paths with dual-point handoff); `--fleet host:port,...`
 //!   drains the shards into remote workers instead of solving in-process
 //! - `worker`      remote solve worker: `sgl worker --listen host:port`
-//!   serves the framed wire protocol (dataset shipping by fingerprint,
-//!   λ-shard solves with dual-point handoff, heartbeats) until killed
+//!   serves the framed wire protocol (dataset shipping by fingerprint —
+//!   monolithic or chunked, λ-shard solves with dual-point handoff,
+//!   heartbeats, progress pings) until killed; `--register coord:port`
+//!   announces it to a running coordinator so a restarted worker rejoins
+//!   its fleet (`serve --register-addr` opens the matching listener)
 //! - `xla`         solve through the AOT artifacts via PJRT (three-layer path)
 //!
 //! Datasets come from a config file (`--config run.toml`) or the built-in
@@ -38,14 +41,14 @@
 //! fleet run scrapes each remote worker's registry into it under a
 //! `worker_<i>_` prefix before the final dump.
 
-use anyhow::{bail, Context, Result};
+use anyhow::{bail, ensure, Context, Result};
 use sgl::config::{
     parse_design_backend, parse_fleet_list, DatasetChoice, DesignBackend, RunConfig,
     UnknownBackendError,
 };
 use sgl::coordinator::jobs::{run_rule_comparison, RuleComparisonJob};
 use sgl::coordinator::metrics::Metrics;
-use sgl::coordinator::remote::{run_worker, FleetConfig, RemoteFleet};
+use sgl::coordinator::remote::{run_worker_with, FleetConfig, RemoteFleet, WorkerOptions};
 use sgl::coordinator::report::render_rule_timings;
 use sgl::coordinator::service::{
     AnyProblem, JobId, QueueFullError, ServiceConfig, SolveRequest, SolveService,
@@ -56,7 +59,9 @@ use sgl::data::{csvio, libsvm, Dataset, SparseDataset};
 use sgl::linalg::{CscMatrix, Design};
 use sgl::screening::RuleKind;
 use sgl::solver::cd::SolveOptions;
-use sgl::solver::cv::{split_rows, validate_tau_grid, validate_tau_grid_logistic};
+use sgl::solver::cv::{
+    split_rows, validate_tau_grid, validate_tau_grid_logistic, validate_tau_grid_multitask,
+};
 use sgl::solver::datafit::{Datafit, FitKind, Logistic, MultiTaskQuadratic};
 use sgl::solver::groups::Groups;
 use sgl::solver::path::{solve_path_with, PathOptions};
@@ -94,7 +99,14 @@ fn specs() -> Vec<OptSpec> {
         OptSpec { name: "shards", help: "serve: lambda-range shards per path", takes_value: true, default: None },
         OptSpec { name: "fleet", help: "serve: remote workers host:port,host:port", takes_value: true, default: None },
         OptSpec { name: "fleet-conns", help: "serve: connections per fleet worker", takes_value: true, default: None },
+        OptSpec { name: "fleet-chunk-mb", help: "serve: chunked-ship threshold in MiB", takes_value: true, default: None },
+        OptSpec { name: "progress-deadline-ms", help: "serve: max ms between fleet frames (0 = off)", takes_value: true, default: None },
+        OptSpec { name: "rejoin-grace-ms", help: "serve: ms to wait for a worker rejoin when the fleet is dead (0 = off)", takes_value: true, default: None },
+        OptSpec { name: "register-addr", help: "serve: worker registration listener host:port", takes_value: true, default: None },
         OptSpec { name: "listen", help: "worker: bind address (port 0 = auto)", takes_value: true, default: Some("127.0.0.1:7171") },
+        OptSpec { name: "register", help: "worker: announce to this coordinator registration address", takes_value: true, default: None },
+        OptSpec { name: "store-capacity", help: "worker: datasets retained before LRU eviction", takes_value: true, default: None },
+        OptSpec { name: "progress-ms", help: "worker: progress-ping interval during solves (0 = off)", takes_value: true, default: None },
         OptSpec { name: "trace-out", help: "write a Chrome trace-event JSON of the run (also SGL_TRACE)", takes_value: true, default: None },
         OptSpec { name: "trace-sample", help: "record every k-th gap-check event (default 1 = all)", takes_value: true, default: None },
         OptSpec { name: "metrics-addr", help: "serve: Prometheus text endpoint host:port", takes_value: true, default: None },
@@ -184,6 +196,18 @@ fn load_config(args: &Args) -> Result<RunConfig> {
     }
     if let Some(v) = args.get("fleet-conns") {
         cfg.service_fleet_conns = v.parse().context("--fleet-conns")?;
+    }
+    if let Some(v) = args.get("fleet-chunk-mb") {
+        cfg.service_fleet_chunk_mb = v.parse().context("--fleet-chunk-mb")?;
+    }
+    if let Some(v) = args.get("progress-deadline-ms") {
+        cfg.service_progress_deadline_ms = v.parse().context("--progress-deadline-ms")?;
+    }
+    if let Some(v) = args.get("rejoin-grace-ms") {
+        cfg.service_rejoin_grace_ms = v.parse().context("--rejoin-grace-ms")?;
+    }
+    if let Some(v) = args.get("register-addr") {
+        cfg.service_register_addr = Some(v);
     }
     if let Some(v) = args.get("trace-out") {
         cfg.trace_out = Some(v);
@@ -576,11 +600,23 @@ fn cmd_serve(data: LoadedData, cfg: &RunConfig) -> Result<()> {
     let fleet = if cfg.service_fleet.is_empty() {
         None
     } else {
-        Some(Arc::new(RemoteFleet::connect(
+        let f = Arc::new(RemoteFleet::connect(
             &cfg.service_fleet,
-            FleetConfig { conns_per_worker: cfg.service_fleet_conns },
+            FleetConfig {
+                conns_per_worker: cfg.service_fleet_conns,
+                ship_chunk_bytes: cfg.service_fleet_chunk_mb << 20,
+                progress_deadline: std::time::Duration::from_millis(
+                    cfg.service_progress_deadline_ms,
+                ),
+                rejoin_grace: std::time::Duration::from_millis(cfg.service_rejoin_grace_ms),
+            },
             metrics.clone(),
-        )?))
+        )?);
+        if let Some(addr) = &cfg.service_register_addr {
+            let local = f.serve_registrations(addr)?;
+            println!("fleet registration listener: {local}");
+        }
+        Some(f)
     };
     let svc = match &fleet {
         None => SolveService::with_metrics(svc_cfg, metrics.clone()),
@@ -930,9 +966,6 @@ fn run(args: &Args) -> Result<()> {
             });
         }
         "cv" => {
-            if cfg.datafit == FitKind::MultiTask {
-                bail!("cv scores held-out prediction per scalar target (quadratic|logistic)");
-            }
             let data = build_data(&cfg, &scale)?;
             let taus: Vec<f64> = (0..=10).map(|i| i as f64 / 10.0).collect();
             let opts = PathOptions {
@@ -972,7 +1005,24 @@ fn run(args: &Args) -> Result<()> {
                         cv.best_tau, cv.best_lambda, cv.best_deviance, cv.best_error
                     );
                 }
-                FitKind::MultiTask => unreachable!("rejected above"),
+                FitKind::MultiTask => {
+                    let tasks = cfg.tasks;
+                    let cv = with_backend!(cfg, data, |x, y, groups| {
+                        // The scalar target widens to a task-major n·q
+                        // response, exactly as `solve`/`path` do, so the
+                        // same dataset drives every subcommand.
+                        let split = split_rows(x.n_rows(), 0.5, cfg.seed);
+                        let n = x.n_rows();
+                        let y = multitask_target(y, n, tasks);
+                        validate_tau_grid_multitask(
+                            &x, &y, &groups, tasks, &taus, &opts, &split, threads,
+                        )
+                    });
+                    println!(
+                        "best tau={} lambda={:.4e} test frobenius={:.5e}",
+                        cv.best_tau, cv.best_lambda, cv.best_frobenius
+                    );
+                }
             }
         }
         "lambda-max" => {
@@ -996,10 +1046,12 @@ fn run(args: &Args) -> Result<()> {
         "compare" => {
             if cfg.datafit != FitKind::Quadratic {
                 bail!(
-                    "compare times the least-squares-only spheres too; \
-                     logistic models are covered by `cv --datafit logistic` \
-                     (deviance + misclassification) and \
-                     `path --datafit logistic --rule gap_safe_seq`"
+                    "compare times the least-squares-only spheres (static/dynamic/DST3), \
+                     so it only runs with --datafit quadratic; {} models are covered by \
+                     `cv --datafit {}` and `path --datafit {} --rule gap_safe_seq`",
+                    cfg.datafit.name(),
+                    cfg.datafit.name(),
+                    cfg.datafit.name()
                 );
             }
             let data = build_data(&cfg, &scale)?;
@@ -1015,7 +1067,21 @@ fn run(args: &Args) -> Result<()> {
         "worker" => {
             // No dataset of its own: everything arrives over the wire,
             // shipped once per dataset and addressed by fingerprint.
-            run_worker(&args.get_or("listen", "127.0.0.1:7171"))?;
+            let mut wopts = WorkerOptions::default();
+            if let Some(v) = args.get("store-capacity") {
+                wopts.dataset_capacity = v.parse().context("--store-capacity")?;
+                ensure!(wopts.dataset_capacity >= 1, "--store-capacity must be >= 1");
+            }
+            if let Some(v) = args.get("progress-ms") {
+                let ms: u64 = v.parse().context("--progress-ms")?;
+                wopts.progress_interval = std::time::Duration::from_millis(ms);
+            }
+            let register = args.get("register");
+            run_worker_with(
+                &args.get_or("listen", "127.0.0.1:7171"),
+                wopts,
+                register.as_deref(),
+            )?;
         }
         "xla" => {
             let dir = std::path::PathBuf::from(args.get_or("artifacts", "artifacts"));

@@ -294,6 +294,7 @@ impl<D: Design> ScreenState<D> {
         // (the disabled-tracing bit-identity tests pin this). Rejection-
         // rate-vs-λ curves (paper Fig. 2) fall out of these events on any
         // production solve, not just the fig experiments.
+        crate::util::progress::report(epoch, self.gap);
         if trace::sampled(trace_seq) {
             trace::instant("gap_check", || {
                 vec![

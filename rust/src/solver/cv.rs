@@ -6,7 +6,7 @@
 use super::path::{PathBatch, PathBatchJob, PathOptions};
 use super::problem::SglProblem;
 use crate::linalg::Design;
-use crate::solver::datafit::Logistic;
+use crate::solver::datafit::{Logistic, MultiTaskQuadratic};
 use crate::solver::groups::Groups;
 use crate::util::rng::Pcg;
 use std::sync::Arc;
@@ -205,6 +205,142 @@ pub fn validate_tau_grid_logistic<D: Design>(
     }
 }
 
+/// Held-out mean squared Frobenius prediction error `‖Y − X B‖_F² / (n q)`
+/// of a multi-task fit: `y` is the task-major response (length `n·q`),
+/// `beta` the feature-major coefficient matrix (length `p·q`, see the
+/// [datafit module docs](crate::solver::datafit)). Per-entry mean, so
+/// `q = 1` computes exactly [`prediction_mse`].
+pub fn multitask_frobenius_score<D: Design>(
+    x: &D,
+    y: &[f64],
+    beta: &[f64],
+    tasks: usize,
+) -> f64 {
+    let n = x.n_rows();
+    assert!(tasks > 0, "at least one task required");
+    assert_eq!(y.len(), n * tasks, "task-major response length");
+    assert_eq!(beta.len() % tasks, 0, "feature-major coefficient length");
+    let p = beta.len() / tasks;
+    let mut col = vec![0.0; p];
+    let mut sq = 0.0;
+    for k in 0..tasks {
+        for (j, c) in col.iter_mut().enumerate() {
+            *c = beta[j * tasks + k];
+        }
+        let pred = x.matvec(&col);
+        for (yi, pi) in y[k * n..(k + 1) * n].iter().zip(&pred) {
+            sq += (yi - pi) * (yi - pi);
+        }
+    }
+    sq / (n * tasks).max(1) as f64
+}
+
+/// Validation-curve output for one `τ` under the multi-task datafit.
+#[derive(Clone, Debug)]
+pub struct TauCurveMultiTask {
+    pub tau: f64,
+    pub lambdas: Vec<f64>,
+    /// Held-out per-entry squared Frobenius error per λ.
+    pub test_frobenius: Vec<f64>,
+}
+
+/// Full grid result for multi-task validation plus the selected model.
+#[derive(Clone, Debug)]
+pub struct CvMultiTaskResult {
+    pub curves: Vec<TauCurveMultiTask>,
+    pub best_tau: f64,
+    pub best_lambda: f64,
+    pub best_frobenius: f64,
+    /// Feature-major coefficients refit on the training half at `(τ★, λ★)`.
+    pub best_beta: Vec<f64>,
+}
+
+/// The τ-grid validation under **multi-task** sparse-group least squares:
+/// identical protocol to [`validate_tau_grid`] (shared training-half
+/// precomputation, one [`PathBatchJob`] per τ) scored by held-out
+/// Frobenius error over all `q` response columns at once. `y` is the
+/// task-major response of length `n·q`.
+pub fn validate_tau_grid_multitask<D: Design>(
+    x: &D,
+    y: &[f64],
+    groups: &Groups,
+    tasks: usize,
+    taus: &[f64],
+    path_opts: &PathOptions,
+    split: &Split,
+    threads: usize,
+) -> CvMultiTaskResult {
+    assert!(!taus.is_empty(), "at least one tau required");
+    assert!(tasks > 0, "at least one task required");
+    let n = x.n_rows();
+    assert_eq!(y.len(), n * tasks, "task-major response length");
+    // Row selection must act per task block: task-major means every task's
+    // column is a contiguous n-slice of `y`.
+    let select = |rows: &[usize]| -> Vec<f64> {
+        let mut out = Vec::with_capacity(rows.len() * tasks);
+        for k in 0..tasks {
+            out.extend(rows.iter().map(|&i| y[k * n + i]));
+        }
+        out
+    };
+    let x_train = x.select_rows(&split.train);
+    let y_train = select(&split.train);
+    let x_test = x.select_rows(&split.test);
+    let y_test = select(&split.test);
+
+    let weights = groups.sqrt_size_weights();
+    let base = Arc::new(SglProblem::with_datafit(
+        x_train,
+        y_train,
+        groups.clone(),
+        taus[0],
+        weights,
+        MultiTaskQuadratic::new(tasks),
+    ));
+    let mut batch = PathBatch::new();
+    for &tau in taus {
+        batch.push(PathBatchJob {
+            pb: base.clone(),
+            lambdas: None,
+            opts: path_opts.clone(),
+            tau_override: Some(tau),
+            label: format!("tau={tau}"),
+        });
+    }
+    let paths = batch.run(threads);
+
+    let outputs: Vec<(TauCurveMultiTask, Vec<Vec<f64>>)> = taus
+        .iter()
+        .zip(paths)
+        .map(|(&tau, path)| {
+            let frob: Vec<f64> = path
+                .results
+                .iter()
+                .map(|r| multitask_frobenius_score(&x_test, &y_test, &r.beta, tasks))
+                .collect();
+            let betas: Vec<Vec<f64>> = path.results.iter().map(|r| r.beta.clone()).collect();
+            (TauCurveMultiTask { tau, lambdas: path.lambdas, test_frobenius: frob }, betas)
+        })
+        .collect();
+
+    let mut best = (0usize, 0usize, f64::INFINITY);
+    for (ti, (curve, _)) in outputs.iter().enumerate() {
+        for (li, &f) in curve.test_frobenius.iter().enumerate() {
+            if f < best.2 {
+                best = (ti, li, f);
+            }
+        }
+    }
+    let (bt, bl, bfrob) = best;
+    CvMultiTaskResult {
+        best_tau: outputs[bt].0.tau,
+        best_lambda: outputs[bt].0.lambdas[bl],
+        best_frobenius: bfrob,
+        best_beta: outputs[bt].1[bl].clone(),
+        curves: outputs.into_iter().map(|(c, _)| c).collect(),
+    }
+}
+
 /// Run the τ-grid validation. `threads` parallelizes across τ values via
 /// the batched path engine (each τ is one [`PathBatchJob`] on the training
 /// half). The design-dependent precomputations (column norms, block
@@ -395,5 +531,90 @@ mod tests {
         let beta = vec![0.5; x.n_cols()];
         let y = x.matvec(&beta);
         assert!(prediction_mse(&x, &y, &beta) < 1e-20);
+    }
+
+    /// Planted two-task data sharing a support: task-major response.
+    fn planted_multitask_data(seed: u64) -> (Matrix, Vec<f64>, Groups, usize) {
+        let groups = Groups::uniform(5, 3);
+        let p = groups.p();
+        let n = 60;
+        let tasks = 2;
+        let mut rng = Pcg::seeded(seed);
+        let x = Matrix::from_fn(n, p, |_, _| rng.normal());
+        // Feature-major B with a shared row-sparse support.
+        let mut b = vec![0.0; p * tasks];
+        b[0] = 2.0; // (j=0, k=0)
+        b[1] = -1.0; // (j=0, k=1)
+        b[6 * tasks] = 1.5;
+        b[6 * tasks + 1] = 2.5;
+        let mut y = vec![0.0; n * tasks];
+        for k in 0..tasks {
+            let col: Vec<f64> = (0..p).map(|j| b[j * tasks + k]).collect();
+            let xb = x.matvec(&col);
+            for i in 0..n {
+                y[k * n + i] = xb[i] + 0.05 * rng.normal();
+            }
+        }
+        (x, y, groups, tasks)
+    }
+
+    #[test]
+    fn multitask_validation_beats_the_null_model() {
+        let (x, y, groups, tasks) = planted_multitask_data(13);
+        let split = split_rows(x.n_rows(), 0.5, 5);
+        let opts = PathOptions {
+            delta: 2.0,
+            t_count: 12,
+            solve: SolveOptions { tol: 1e-6, record_history: false, ..Default::default() },
+        };
+        let cv = validate_tau_grid_multitask(
+            &x,
+            &y,
+            &groups,
+            tasks,
+            &[0.2, 0.5, 0.8],
+            &opts,
+            &split,
+            2,
+        );
+        assert_eq!(cv.curves.len(), 3);
+        // Null model (B = 0) scores the per-entry second moment of the
+        // held-out responses; the planted signal must beat it.
+        let n = x.n_rows();
+        let mut null = 0.0;
+        for k in 0..tasks {
+            for &i in &split.test {
+                null += y[k * n + i] * y[k * n + i];
+            }
+        }
+        null /= (split.test.len() * tasks) as f64;
+        assert!(cv.best_frobenius < null, "{} vs {null}", cv.best_frobenius);
+        assert!(cv.best_lambda > 0.0);
+        assert_eq!(cv.best_beta.len(), groups.p() * tasks);
+        assert!(!cv.best_beta.iter().all(|&b| b == 0.0), "selected model is null");
+        for c in &cv.curves {
+            assert_eq!(c.test_frobenius.len(), c.lambdas.len());
+        }
+    }
+
+    #[test]
+    fn multitask_validation_at_one_task_matches_quadratic_cv() {
+        // q = 1 is the degenerate case the datafit pins bit-identical to
+        // plain quadratic, and the Frobenius score reduces to MSE — so the
+        // whole validation protocol must agree exactly.
+        let (x, y, groups) = planted_data(17);
+        let split = split_rows(x.n_rows(), 0.5, 9);
+        let opts = PathOptions {
+            delta: 2.0,
+            t_count: 10,
+            solve: SolveOptions { tol: 1e-6, record_history: false, ..Default::default() },
+        };
+        let taus = [0.3, 0.7];
+        let q = validate_tau_grid(&x, &y, &groups, &taus, &opts, &split, 2);
+        let mt = validate_tau_grid_multitask(&x, &y, &groups, 1, &taus, &opts, &split, 2);
+        assert_eq!(mt.best_tau, q.best_tau);
+        assert_eq!(mt.best_lambda, q.best_lambda);
+        assert_eq!(mt.best_frobenius, q.best_mse);
+        assert_eq!(mt.best_beta, q.best_beta);
     }
 }

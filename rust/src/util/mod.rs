@@ -11,6 +11,7 @@ pub mod cli;
 pub mod json;
 pub mod lru;
 pub mod pool;
+pub mod progress;
 pub mod proptest;
 pub mod rng;
 pub mod stats;

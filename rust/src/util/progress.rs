@@ -1,0 +1,109 @@
+//! Per-solve progress reporting for the elastic fleet's liveness layer.
+//!
+//! A worker solving a λ-shard needs to tell its coordinator "still
+//! converging" without the solver knowing anything about sockets: a
+//! legitimate solve may run for minutes, so the coordinator's only
+//! alternative — a read deadline — would misclassify long solves as
+//! dead workers. The contract here is one [`ProgressCell`] per in-flight
+//! solve: the solver thread publishes `(epoch, gap)` at every gap check
+//! through a thread-local handle, and the worker's pinger thread reads
+//! the cell (relaxed atomics, no locks on the solve path) and pushes
+//! [`Progress`](crate::util::wire::Message::Progress) frames.
+//!
+//! Strictly observation-only: nothing ever reads the cell back into the
+//! solve, so solver output is bit-identical with or without a cell
+//! installed (the same contract the trace layer pins).
+
+use std::cell::RefCell;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+/// Lock-free `(epoch, gap)` mailbox between a solver thread and the
+/// worker's progress pinger. The two words are updated independently
+/// (no seqlock): a torn read pairs a fresh epoch with a stale gap at
+/// worst, which is fine for liveness — any store at all proves the
+/// solve is alive.
+#[derive(Debug, Default)]
+pub struct ProgressCell {
+    epoch: AtomicU64,
+    gap_bits: AtomicU64,
+}
+
+impl ProgressCell {
+    pub fn new() -> Arc<Self> {
+        Arc::new(ProgressCell {
+            epoch: AtomicU64::new(0),
+            // NaN, not 0.0: an unobserved gap must not read as converged.
+            gap_bits: AtomicU64::new(f64::NAN.to_bits()),
+        })
+    }
+
+    /// Publish one gap-check observation (solver side).
+    pub fn publish(&self, epoch: usize, gap: f64) {
+        self.epoch.store(epoch as u64, Ordering::Relaxed);
+        self.gap_bits.store(gap.to_bits(), Ordering::Relaxed);
+    }
+
+    /// Epochs completed at the last published check (pinger side).
+    pub fn epoch(&self) -> u64 {
+        self.epoch.load(Ordering::Relaxed)
+    }
+
+    /// Last published duality gap as IEEE-754 bits (pinger side) —
+    /// bits so the value drops straight into
+    /// [`WorkerSummary::gap_bits`](crate::util::wire::WorkerSummary).
+    pub fn gap_bits(&self) -> u64 {
+        self.gap_bits.load(Ordering::Relaxed)
+    }
+}
+
+thread_local! {
+    static CURRENT: RefCell<Option<Arc<ProgressCell>>> = const { RefCell::new(None) };
+}
+
+/// Install (or clear, with `None`) the cell the current thread's solves
+/// report into. Returns the previously installed cell so nested scopes
+/// can restore it.
+pub fn set_current(cell: Option<Arc<ProgressCell>>) -> Option<Arc<ProgressCell>> {
+    CURRENT.with(|c| std::mem::replace(&mut *c.borrow_mut(), cell))
+}
+
+/// Report one gap-check observation into the current thread's cell;
+/// no-op (two thread-local loads) when no cell is installed — solves
+/// outside a worker pay nearly nothing.
+pub fn report(epoch: usize, gap: f64) {
+    CURRENT.with(|c| {
+        if let Some(cell) = c.borrow().as_ref() {
+            cell.publish(epoch, gap);
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn report_is_a_noop_without_a_cell() {
+        set_current(None);
+        report(10, 0.5); // must not panic or allocate a cell
+    }
+
+    #[test]
+    fn cell_receives_reports_and_restores_previous() {
+        let a = ProgressCell::new();
+        assert!(f64::from_bits(a.gap_bits()).is_nan(), "unobserved gap is NaN");
+        let prev = set_current(Some(a.clone()));
+        assert!(prev.is_none());
+        report(3, 0.25);
+        assert_eq!(a.epoch(), 3);
+        assert_eq!(a.gap_bits(), 0.25f64.to_bits());
+        let b = ProgressCell::new();
+        let prev = set_current(Some(b.clone()));
+        assert!(Arc::ptr_eq(&prev.unwrap(), &a));
+        report(9, 0.125);
+        assert_eq!(a.epoch(), 3, "old cell no longer receives");
+        assert_eq!(b.epoch(), 9);
+        set_current(None);
+    }
+}

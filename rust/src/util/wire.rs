@@ -75,7 +75,21 @@ use std::io::{Read, Write};
 /// (task-major). A v4 peer has no multi-task arm and would reject — or,
 /// worse, misvalidate — such a dataset, so v4 frames are refused with
 /// [`WireError::BadVersion`].
-pub const WIRE_VERSION: u8 = 5;
+///
+/// **v6** (elastic-fleet PR): [`WorkerSummary`] grows the per-shard
+/// progress pair (`epoch`, `gap_bits`) behind the liveness design —
+/// workers push unsolicited [`Progress`](Message::Progress) frames while
+/// a solve runs, so a coordinator can requeue shards from a worker that
+/// lost power without ever imposing a socket read deadline on legitimate
+/// long solves. Worker-initiated [`Register`](Message::Register) /
+/// [`Registered`](Message::Registered) frames let a restarted worker
+/// rejoin a fleet, and the chunked ship triple
+/// ([`ShipBegin`](Message::ShipBegin) / [`ShipChunk`](Message::ShipChunk)
+/// / [`ShipEnd`](Message::ShipEnd)) streams a dataset as CSC/dense
+/// column ranges so instances beyond [`MAX_FRAME`] (or beyond a single
+/// allocation the shipper wants to make) travel incrementally. The Pong
+/// body grew and six tags are new, so v5 peers are refused.
+pub const WIRE_VERSION: u8 = 6;
 
 /// Hard cap on one frame's body (2 GiB): a corrupt length prefix must
 /// not become a giant allocation.
@@ -283,6 +297,99 @@ impl<'a> Dec<'a> {
         } else {
             Err(WireError::Malformed("trailing bytes in frame"))
         }
+    }
+}
+
+/// Byte sink the canonical dataset encoding can be replayed into: the
+/// real encoder, the streaming fingerprint hasher and the exact length
+/// counter all consume the *same* `put_dataset` walk, so the three can
+/// never disagree about the canonical byte layout (the fingerprint
+/// contract `fingerprint == fnv1a64(encoded payload)` is pinned by
+/// `dataset_fingerprint_is_content_addressed`).
+trait ByteSink {
+    fn put_u8(&mut self, v: u8);
+    fn put_u64(&mut self, v: u64);
+    fn put_usize(&mut self, v: usize) {
+        self.put_u64(v as u64);
+    }
+    fn put_f64(&mut self, v: f64) {
+        self.put_u64(v.to_bits());
+    }
+    fn put_f64s(&mut self, v: &[f64]) {
+        self.put_usize(v.len());
+        for &x in v {
+            self.put_f64(x);
+        }
+    }
+    fn put_u64s(&mut self, v: &[u64]) {
+        self.put_usize(v.len());
+        for &x in v {
+            self.put_u64(x);
+        }
+    }
+}
+
+impl ByteSink for Enc {
+    fn put_u8(&mut self, v: u8) {
+        self.u8(v);
+    }
+    fn put_u64(&mut self, v: u64) {
+        self.u64(v);
+    }
+}
+
+/// Streaming FNV-1a sink: fingerprints a dataset without materializing
+/// its multi-gigabyte canonical encoding (bit-identical to
+/// [`fnv1a64`] over the [`Enc`] bytes by construction — same walk, same
+/// byte order).
+pub struct FnvHasher {
+    h: u64,
+}
+
+impl FnvHasher {
+    pub fn new() -> Self {
+        FnvHasher { h: 0xcbf29ce484222325 }
+    }
+
+    pub fn update(&mut self, bytes: &[u8]) {
+        for &b in bytes {
+            self.h ^= b as u64;
+            self.h = self.h.wrapping_mul(0x100000001b3);
+        }
+    }
+
+    pub fn finish(&self) -> u64 {
+        self.h
+    }
+}
+
+impl Default for FnvHasher {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl ByteSink for FnvHasher {
+    fn put_u8(&mut self, v: u8) {
+        self.update(&[v]);
+    }
+    fn put_u64(&mut self, v: u64) {
+        self.update(&v.to_le_bytes());
+    }
+}
+
+/// Exact encoded-byte counter (the chunked-vs-whole ship decision needs
+/// the payload size *before* committing to a potentially huge encode).
+struct CountSink {
+    n: usize,
+}
+
+impl ByteSink for CountSink {
+    fn put_u8(&mut self, _: u8) {
+        self.n += 1;
+    }
+    fn put_u64(&mut self, _: u64) {
+        self.n += 8;
     }
 }
 
@@ -643,10 +750,84 @@ impl WireDataset {
     /// 64-bit FNV-1a digest of the canonical encoding. Floats hash by
     /// bit pattern, so two datasets share a fingerprint iff they are
     /// bit-identical — the address a fleet uses after shipping once.
+    /// Streamed through [`FnvHasher`], so no byte of the (potentially
+    /// multi-gigabyte) encoding is ever materialized.
     pub fn fingerprint(&self) -> u64 {
-        let mut e = Enc::new();
-        put_dataset(&mut e, self);
-        fnv1a64(&e.buf)
+        let mut h = FnvHasher::new();
+        put_dataset(&mut h, self);
+        h.finish()
+    }
+
+    /// Exact byte length of the canonical payload encoding (what a
+    /// [`Message::ShipDataset`] frame's body would occupy past the
+    /// version/tag header) — the chunked-vs-whole ship decision, costed
+    /// without encoding anything.
+    pub fn wire_len(&self) -> usize {
+        let mut c = CountSink { n: 0 };
+        put_dataset(&mut c, self);
+        c.n
+    }
+
+    /// Split into a chunked ship: the [`ChunkBegin`] header (fingerprint,
+    /// shape, every non-design field) plus column-range [`ChunkPart`]s
+    /// whose design payload stays within `budget` bytes apiece. Every
+    /// chunk carries at least one column, so a single column wider than
+    /// the budget still ships (as an oversized singleton chunk); callers
+    /// pick budgets far enough under [`MAX_FRAME`] that this cannot
+    /// overflow a frame for any realistic row count.
+    pub fn to_chunks(&self, budget: usize) -> (ChunkBegin, Vec<ChunkPart>) {
+        let fingerprint = self.fingerprint();
+        let (csc, n_rows, n_cols) = match &self.design {
+            WireDesign::Dense { n_rows, n_cols, .. } => (false, *n_rows, *n_cols),
+            WireDesign::Csc { n_rows, n_cols, .. } => (true, *n_rows, *n_cols),
+        };
+        let begin = ChunkBegin {
+            fingerprint,
+            csc,
+            n_rows,
+            n_cols,
+            y: self.y.clone(),
+            group_sizes: self.group_sizes.clone(),
+            tau: self.tau,
+            weights: self.weights.clone(),
+            datafit: self.datafit,
+        };
+        // Per-column payload cost: dense columns are n_rows values; CSC
+        // columns are their nnz (index + value) plus one indptr entry.
+        let col_bytes = |j: usize| -> usize {
+            match &self.design {
+                WireDesign::Dense { n_rows, .. } => n_rows * 8,
+                WireDesign::Csc { indptr, .. } => {
+                    (indptr[j + 1] - indptr[j]) as usize * 16 + 8
+                }
+            }
+        };
+        let mut chunks = Vec::new();
+        let mut start = 0;
+        while start < n_cols {
+            let mut end = start + 1;
+            let mut bytes = col_bytes(start);
+            while end < n_cols && bytes + col_bytes(end) <= budget {
+                bytes += col_bytes(end);
+                end += 1;
+            }
+            let payload = match &self.design {
+                WireDesign::Dense { n_rows, data, .. } => ChunkPayload::Dense {
+                    data: data[start * n_rows..end * n_rows].to_vec(),
+                },
+                WireDesign::Csc { indptr, indices, values, .. } => {
+                    let (lo, hi) = (indptr[start] as usize, indptr[end] as usize);
+                    ChunkPayload::Csc {
+                        indptr: indptr[start..=end].to_vec(),
+                        indices: indices[lo..hi].to_vec(),
+                        values: values[lo..hi].to_vec(),
+                    }
+                }
+            };
+            chunks.push(ChunkPart { fingerprint, col_start: start, col_end: end, payload });
+            start = end;
+        }
+        (begin, chunks)
     }
 
     pub fn backend_name(&self) -> &'static str {
@@ -841,16 +1022,16 @@ impl WireDataset {
     }
 }
 
-fn put_datafit(e: &mut Enc, f: &WireDatafit) {
+fn put_datafit<S: ByteSink>(e: &mut S, f: &WireDatafit) {
     match f {
         WireDatafit::Quadratic { ridge } => {
-            e.u8(0);
-            e.f64(*ridge);
+            e.put_u8(0);
+            e.put_f64(*ridge);
         }
-        WireDatafit::Logistic => e.u8(1),
+        WireDatafit::Logistic => e.put_u8(1),
         WireDatafit::MultiTask { tasks } => {
-            e.u8(2);
-            e.u64(*tasks);
+            e.put_u8(2);
+            e.put_u64(*tasks);
         }
     }
 }
@@ -864,27 +1045,27 @@ fn get_datafit(d: &mut Dec) -> Result<WireDatafit, WireError> {
     })
 }
 
-fn put_dataset(e: &mut Enc, ds: &WireDataset) {
+fn put_dataset<S: ByteSink>(e: &mut S, ds: &WireDataset) {
     match &ds.design {
         WireDesign::Dense { n_rows, n_cols, data } => {
-            e.u8(0);
-            e.usize_(*n_rows);
-            e.usize_(*n_cols);
-            e.f64s(data);
+            e.put_u8(0);
+            e.put_usize(*n_rows);
+            e.put_usize(*n_cols);
+            e.put_f64s(data);
         }
         WireDesign::Csc { n_rows, n_cols, indptr, indices, values } => {
-            e.u8(1);
-            e.usize_(*n_rows);
-            e.usize_(*n_cols);
-            e.u64s(indptr);
-            e.u64s(indices);
-            e.f64s(values);
+            e.put_u8(1);
+            e.put_usize(*n_rows);
+            e.put_usize(*n_cols);
+            e.put_u64s(indptr);
+            e.put_u64s(indices);
+            e.put_f64s(values);
         }
     }
-    e.f64s(&ds.y);
-    e.u64s(&ds.group_sizes);
-    e.f64(ds.tau);
-    e.f64s(&ds.weights);
+    e.put_f64s(&ds.y);
+    e.put_u64s(&ds.group_sizes);
+    e.put_f64(ds.tau);
+    e.put_f64s(&ds.weights);
     put_datafit(e, &ds.datafit);
 }
 
@@ -908,6 +1089,260 @@ fn get_dataset(d: &mut Dec) -> Result<WireDataset, WireError> {
         weights: d.f64s()?,
         datafit: get_datafit(d)?,
     })
+}
+
+// ---------------------------------------------------------------------------
+// Chunked dataset streaming (v6)
+// ---------------------------------------------------------------------------
+
+/// Opening frame of a chunked dataset ship (v6): the declared content
+/// fingerprint, the design's kind and shape, and every non-design field.
+/// The design payload follows as column-range [`ChunkPart`]s and the
+/// ship is sealed by [`Message::ShipEnd`]; only the seal is acknowledged,
+/// so a multi-chunk transfer costs one round trip, same as a whole-frame
+/// ship.
+#[derive(Clone, Debug)]
+pub struct ChunkBegin {
+    /// [`WireDataset::fingerprint`] of the assembled dataset — verified
+    /// against the assembly on [`ChunkAssembler::finish`], so a dropped
+    /// or corrupted chunk can never be stored as the real dataset.
+    pub fingerprint: u64,
+    /// `true` for a CSC design, `false` for column-major dense.
+    pub csc: bool,
+    pub n_rows: usize,
+    pub n_cols: usize,
+    pub y: Vec<f64>,
+    pub group_sizes: Vec<u64>,
+    pub tau: f64,
+    pub weights: Vec<f64>,
+    pub datafit: WireDatafit,
+}
+
+/// One column range of a chunked ship (v6). Ranges must arrive in order
+/// and contiguously — the assembler rejects gaps, overlaps, duplicates
+/// and out-of-order ranges with typed [`WireError::Malformed`]s.
+#[derive(Clone, Debug)]
+pub struct ChunkPart {
+    /// Echoes [`ChunkBegin::fingerprint`] so an interleaved or stale
+    /// chunk can never splice into the wrong ship.
+    pub fingerprint: u64,
+    /// First design column this chunk carries.
+    pub col_start: usize,
+    /// One past the last design column this chunk carries.
+    pub col_end: usize,
+    pub payload: ChunkPayload,
+}
+
+/// The design slice inside one [`ChunkPart`].
+#[derive(Clone, Debug)]
+pub enum ChunkPayload {
+    /// Column-major dense values: `n_rows · (col_end − col_start)`.
+    Dense { data: Vec<f64> },
+    /// The *absolute* `indptr[col_start ..= col_end]` slice of the full
+    /// matrix plus the row indices/values those columns own — absolute
+    /// offsets make every chunk self-describing and let the assembler
+    /// verify continuity instead of trusting it.
+    Csc { indptr: Vec<u64>, indices: Vec<u64>, values: Vec<f64> },
+}
+
+/// Worker-side reassembly of a chunked ship: feed [`ChunkBegin`] to
+/// [`new`](Self::new), each [`ChunkPart`] to [`chunk`](Self::chunk), and
+/// seal with [`finish`](Self::finish), which verifies full column
+/// coverage *and* that the assembly hashes to the declared fingerprint.
+/// Pure (no sockets), so protocol fuzzers drive it directly.
+pub struct ChunkAssembler {
+    begin: ChunkBegin,
+    next_col: usize,
+    dense: Vec<f64>,
+    indptr: Vec<u64>,
+    indices: Vec<u64>,
+    values: Vec<f64>,
+}
+
+impl ChunkAssembler {
+    pub fn new(begin: ChunkBegin) -> Result<Self, WireError> {
+        if !begin.csc {
+            begin
+                .n_rows
+                .checked_mul(begin.n_cols)
+                .ok_or(WireError::Malformed("chunked dense design too large"))?;
+        }
+        let indptr = if begin.csc { vec![0] } else { Vec::new() };
+        Ok(ChunkAssembler {
+            begin,
+            next_col: 0,
+            dense: Vec::new(),
+            indptr,
+            indices: Vec::new(),
+            values: Vec::new(),
+        })
+    }
+
+    /// The fingerprint this assembly was opened for.
+    pub fn fingerprint(&self) -> u64 {
+        self.begin.fingerprint
+    }
+
+    pub fn chunk(&mut self, part: ChunkPart) -> Result<(), WireError> {
+        if part.fingerprint != self.begin.fingerprint {
+            return Err(WireError::Malformed("chunk fingerprint does not match the open ship"));
+        }
+        if part.col_start < self.next_col {
+            return Err(WireError::Malformed(
+                "chunk column range duplicates or overlaps delivered columns",
+            ));
+        }
+        if part.col_start > self.next_col {
+            return Err(WireError::Malformed(
+                "chunk column range is out of order or leaves a gap",
+            ));
+        }
+        if part.col_end <= part.col_start || part.col_end > self.begin.n_cols {
+            return Err(WireError::Malformed("chunk column range is empty or out of bounds"));
+        }
+        let cols = part.col_end - part.col_start;
+        match (self.begin.csc, part.payload) {
+            (false, ChunkPayload::Dense { data }) => {
+                let want = self
+                    .begin
+                    .n_rows
+                    .checked_mul(cols)
+                    .ok_or(WireError::Malformed("chunk payload size overflow"))?;
+                if data.len() != want {
+                    return Err(WireError::Malformed("dense chunk payload size mismatch"));
+                }
+                self.dense.extend_from_slice(&data);
+            }
+            (true, ChunkPayload::Csc { indptr, indices, values }) => {
+                if indptr.len() != cols + 1 {
+                    return Err(WireError::Malformed("csc chunk indptr length mismatch"));
+                }
+                // Absolute continuity: the chunk's first offset must be
+                // exactly where the previous chunk left off.
+                if indptr[0] != *self.indptr.last().expect("assembler indptr seeded") {
+                    return Err(WireError::Malformed(
+                        "csc chunk indptr does not continue the previous chunk",
+                    ));
+                }
+                for w in indptr.windows(2) {
+                    if w[1] < w[0] {
+                        return Err(WireError::Malformed(
+                            "csc chunk indptr must be non-decreasing",
+                        ));
+                    }
+                }
+                let nnz = (indptr[cols] - indptr[0]) as usize;
+                if indices.len() != nnz || values.len() != nnz {
+                    return Err(WireError::Malformed("csc chunk payload size mismatch"));
+                }
+                self.indptr.extend_from_slice(&indptr[1..]);
+                self.indices.extend_from_slice(&indices);
+                self.values.extend_from_slice(&values);
+            }
+            _ => {
+                return Err(WireError::Malformed(
+                    "chunk payload kind does not match the declared design",
+                ))
+            }
+        }
+        self.next_col = part.col_end;
+        Ok(())
+    }
+
+    /// Seal the ship: every column must be covered and the assembled
+    /// dataset must hash to the declared fingerprint (streamed, no
+    /// second encode). The caller still runs
+    /// [`WireDataset::into_problem`] for structural validation.
+    pub fn finish(self, end_fingerprint: u64) -> Result<WireDataset, WireError> {
+        if end_fingerprint != self.begin.fingerprint {
+            return Err(WireError::Malformed("ship-end fingerprint does not match the open ship"));
+        }
+        if self.next_col != self.begin.n_cols {
+            return Err(WireError::Malformed("chunked ship ended before covering every column"));
+        }
+        let ChunkAssembler { begin, dense, indptr, indices, values, .. } = self;
+        let design = if begin.csc {
+            WireDesign::Csc {
+                n_rows: begin.n_rows,
+                n_cols: begin.n_cols,
+                indptr,
+                indices,
+                values,
+            }
+        } else {
+            WireDesign::Dense { n_rows: begin.n_rows, n_cols: begin.n_cols, data: dense }
+        };
+        let ds = WireDataset {
+            design,
+            y: begin.y,
+            group_sizes: begin.group_sizes,
+            tau: begin.tau,
+            weights: begin.weights,
+            datafit: begin.datafit,
+        };
+        if ds.fingerprint() != begin.fingerprint {
+            return Err(WireError::Malformed(
+                "assembled dataset does not hash to the declared fingerprint",
+            ));
+        }
+        Ok(ds)
+    }
+}
+
+fn put_chunk_begin(e: &mut Enc, b: &ChunkBegin) {
+    e.u64(b.fingerprint);
+    e.bool(b.csc);
+    e.usize_(b.n_rows);
+    e.usize_(b.n_cols);
+    e.f64s(&b.y);
+    e.u64s(&b.group_sizes);
+    e.f64(b.tau);
+    e.f64s(&b.weights);
+    put_datafit(e, &b.datafit);
+}
+
+fn get_chunk_begin(d: &mut Dec) -> Result<ChunkBegin, WireError> {
+    Ok(ChunkBegin {
+        fingerprint: d.u64()?,
+        csc: d.bool()?,
+        n_rows: d.usize_()?,
+        n_cols: d.usize_()?,
+        y: d.f64s()?,
+        group_sizes: d.u64s()?,
+        tau: d.f64()?,
+        weights: d.f64s()?,
+        datafit: get_datafit(d)?,
+    })
+}
+
+fn put_chunk_part(e: &mut Enc, c: &ChunkPart) {
+    e.u64(c.fingerprint);
+    e.usize_(c.col_start);
+    e.usize_(c.col_end);
+    match &c.payload {
+        ChunkPayload::Dense { data } => {
+            e.u8(0);
+            e.f64s(data);
+        }
+        ChunkPayload::Csc { indptr, indices, values } => {
+            e.u8(1);
+            e.u64s(indptr);
+            e.u64s(indices);
+            e.f64s(values);
+        }
+    }
+}
+
+fn get_chunk_part(d: &mut Dec) -> Result<ChunkPart, WireError> {
+    let fingerprint = d.u64()?;
+    let col_start = d.usize_()?;
+    let col_end = d.usize_()?;
+    let payload = match d.u8()? {
+        0 => ChunkPayload::Dense { data: d.f64s()? },
+        1 => ChunkPayload::Csc { indptr: d.u64s()?, indices: d.u64s()?, values: d.f64s()? },
+        _ => return Err(WireError::Malformed("unknown chunk payload tag")),
+    };
+    Ok(ChunkPart { fingerprint, col_start, col_end, payload })
 }
 
 // ---------------------------------------------------------------------------
@@ -970,9 +1405,12 @@ impl RemoteErrorKind {
 }
 
 /// Compact liveness context a worker piggybacks on every
-/// [`Pong`](Message::Pong) (v4): enough for a coordinator's heartbeat
-/// line to show what the worker is doing without a full stats scrape.
-#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+/// [`Pong`](Message::Pong) (v4) and pushes as unsolicited
+/// [`Progress`](Message::Progress) frames mid-solve (v6): enough for a
+/// coordinator's heartbeat line to show what the worker is doing
+/// without a full stats scrape, and enough for the liveness policy to
+/// tell "still converging" from "lost power".
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct WorkerSummary {
     /// Shards currently being solved on the worker.
     pub in_flight: u64,
@@ -980,16 +1418,51 @@ pub struct WorkerSummary {
     pub solves: u64,
     /// Seconds (whole) since the worker started listening.
     pub uptime_ticks: u64,
+    /// Epochs completed on the most recently checked in-flight λ (v6);
+    /// 0 when idle.
+    pub epoch: u64,
+    /// Duality gap at the last gap check of the in-flight λ, as IEEE-754
+    /// bits (v6) — bits rather than `f64` keep the summary `Eq` and the
+    /// frame bit-exact. NaN bits mean "no gap observed yet".
+    pub gap_bits: u64,
+}
+
+impl Default for WorkerSummary {
+    fn default() -> Self {
+        WorkerSummary {
+            in_flight: 0,
+            solves: 0,
+            uptime_ticks: 0,
+            epoch: 0,
+            // NaN, not 0.0: a zero default would read as "converged".
+            gap_bits: f64::NAN.to_bits(),
+        }
+    }
+}
+
+impl WorkerSummary {
+    /// The last observed duality gap (NaN when none was observed).
+    pub fn gap(&self) -> f64 {
+        f64::from_bits(self.gap_bits)
+    }
 }
 
 fn put_worker_summary(e: &mut Enc, s: &WorkerSummary) {
     e.u64(s.in_flight);
     e.u64(s.solves);
     e.u64(s.uptime_ticks);
+    e.u64(s.epoch);
+    e.u64(s.gap_bits);
 }
 
 fn get_worker_summary(d: &mut Dec) -> Result<WorkerSummary, WireError> {
-    Ok(WorkerSummary { in_flight: d.u64()?, solves: d.u64()?, uptime_ticks: d.u64()? })
+    Ok(WorkerSummary {
+        in_flight: d.u64()?,
+        solves: d.u64()?,
+        uptime_ticks: d.u64()?,
+        epoch: d.u64()?,
+        gap_bits: d.u64()?,
+    })
 }
 
 fn put_timer_stats(e: &mut Enc, t: &TimerStats) {
@@ -1101,6 +1574,29 @@ pub enum Message {
     /// The worker's registry snapshot — absolute totals, so a
     /// coordinator merge overwrites rather than accumulates.
     StatsReply(MetricsSnapshot),
+    /// A worker announcing itself to the coordinator's registration
+    /// listener (v6): `addr` is the address the worker *serves* on (its
+    /// own listen socket, not the ephemeral registration connection).
+    /// Answered with [`Registered`](Message::Registered).
+    Register { addr: String },
+    /// Registration ack (v6); `worker` is the coordinator-side slot
+    /// index, returned for log lines only.
+    Registered { worker: u64 },
+    /// Unsolicited mid-solve liveness push (v6): a worker streams these
+    /// on its solve connection while a shard runs, so the coordinator
+    /// can requeue shards whose worker went silent without ever putting
+    /// a deadline on legitimate long solves. Never a reply — the real
+    /// reply frame follows once the solve ends.
+    Progress { summary: WorkerSummary },
+    /// Open a chunked dataset ship (v6). Not acknowledged; the single
+    /// ack comes after [`ShipEnd`](Message::ShipEnd).
+    ShipBegin(ChunkBegin),
+    /// One column range of an open chunked ship (v6). Not acknowledged.
+    ShipChunk(ChunkPart),
+    /// Seal a chunked ship (v6); acknowledged with
+    /// `DatasetKnown { known: true }` once the assembly verifies against
+    /// the declared fingerprint.
+    ShipEnd { fingerprint: u64 },
 }
 
 const TAG_PING: u8 = 1;
@@ -1113,6 +1609,12 @@ const TAG_SHARD_DONE: u8 = 7;
 const TAG_ERROR: u8 = 8;
 const TAG_STATS_REQUEST: u8 = 9;
 const TAG_STATS_REPLY: u8 = 10;
+const TAG_REGISTER: u8 = 11;
+const TAG_REGISTERED: u8 = 12;
+const TAG_PROGRESS: u8 = 13;
+const TAG_SHIP_BEGIN: u8 = 14;
+const TAG_SHIP_CHUNK: u8 = 15;
+const TAG_SHIP_END: u8 = 16;
 
 impl Message {
     fn tag(&self) -> u8 {
@@ -1127,6 +1629,12 @@ impl Message {
             Message::Error(_) => TAG_ERROR,
             Message::StatsRequest => TAG_STATS_REQUEST,
             Message::StatsReply(_) => TAG_STATS_REPLY,
+            Message::Register { .. } => TAG_REGISTER,
+            Message::Registered { .. } => TAG_REGISTERED,
+            Message::Progress { .. } => TAG_PROGRESS,
+            Message::ShipBegin(_) => TAG_SHIP_BEGIN,
+            Message::ShipChunk(_) => TAG_SHIP_CHUNK,
+            Message::ShipEnd { .. } => TAG_SHIP_END,
         }
     }
 
@@ -1161,6 +1669,12 @@ impl Message {
             }
             Message::StatsRequest => {}
             Message::StatsReply(snap) => put_metrics_snapshot(e, snap),
+            Message::Register { addr } => e.str_(addr),
+            Message::Registered { worker } => e.u64(*worker),
+            Message::Progress { summary } => put_worker_summary(e, summary),
+            Message::ShipBegin(b) => put_chunk_begin(e, b),
+            Message::ShipChunk(c) => put_chunk_part(e, c),
+            Message::ShipEnd { fingerprint } => e.u64(*fingerprint),
         }
     }
 
@@ -1191,6 +1705,12 @@ impl Message {
             }),
             TAG_STATS_REQUEST => Message::StatsRequest,
             TAG_STATS_REPLY => Message::StatsReply(get_metrics_snapshot(d)?),
+            TAG_REGISTER => Message::Register { addr: d.str_()? },
+            TAG_REGISTERED => Message::Registered { worker: d.u64()? },
+            TAG_PROGRESS => Message::Progress { summary: get_worker_summary(d)? },
+            TAG_SHIP_BEGIN => Message::ShipBegin(get_chunk_begin(d)?),
+            TAG_SHIP_CHUNK => Message::ShipChunk(get_chunk_part(d)?),
+            TAG_SHIP_END => Message::ShipEnd { fingerprint: d.u64()? },
             got => return Err(WireError::BadTag { got }),
         })
     }
@@ -1310,7 +1830,7 @@ impl Message {
         if hdr[0] != WIRE_VERSION {
             return Err(WireError::BadVersion { got: hdr[0] });
         }
-        if !(TAG_PING..=TAG_STATS_REPLY).contains(&hdr[1]) {
+        if !(TAG_PING..=TAG_SHIP_END).contains(&hdr[1]) {
             return Err(WireError::BadTag { got: hdr[1] });
         }
         // Read the payload in bounded chunks: a peer that *claims* a
@@ -1369,12 +1889,43 @@ mod tests {
             Message::Ping { seq } => assert_eq!(seq, 42),
             other => panic!("wrong variant {other:?}"),
         }
-        let summary = WorkerSummary { in_flight: 3, solves: 1234, uptime_ticks: 99 };
+        let summary = WorkerSummary {
+            in_flight: 3,
+            solves: 1234,
+            uptime_ticks: 99,
+            epoch: 4096,
+            gap_bits: 1e-7f64.to_bits(),
+        };
         match roundtrip(&Message::Pong { seq: u64::MAX, summary }) {
             Message::Pong { seq, summary: s } => {
                 assert_eq!(seq, u64::MAX);
                 assert_eq!(s, summary);
+                assert_eq!(s.gap(), 1e-7);
             }
+            other => panic!("wrong variant {other:?}"),
+        }
+        // The idle default reads as "no gap observed", not "converged".
+        assert!(WorkerSummary::default().gap().is_nan());
+    }
+
+    #[test]
+    fn register_and_progress_roundtrip() {
+        match roundtrip(&Message::Register { addr: "10.0.0.7:7171".to_string() }) {
+            Message::Register { addr } => assert_eq!(addr, "10.0.0.7:7171"),
+            other => panic!("wrong variant {other:?}"),
+        }
+        match roundtrip(&Message::Registered { worker: 3 }) {
+            Message::Registered { worker } => assert_eq!(worker, 3),
+            other => panic!("wrong variant {other:?}"),
+        }
+        let summary = WorkerSummary {
+            in_flight: 1,
+            epoch: 250,
+            gap_bits: 0.5f64.to_bits(),
+            ..Default::default()
+        };
+        match roundtrip(&Message::Progress { summary }) {
+            Message::Progress { summary: s } => assert_eq!(s, summary),
             other => panic!("wrong variant {other:?}"),
         }
     }
@@ -1648,5 +2199,151 @@ mod tests {
         assert!(matches!(Message::read_opt(&mut empty), Ok(None)));
         let mut partial: &[u8] = &frame[..3];
         assert!(matches!(Message::read_opt(&mut partial), Err(WireError::Io(_))));
+    }
+
+    fn dense_ds(n_rows: usize, n_cols: usize) -> WireDataset {
+        WireDataset {
+            design: WireDesign::Dense {
+                n_rows,
+                n_cols,
+                data: (0..n_rows * n_cols).map(|i| (i as f64).sin()).collect(),
+            },
+            y: (0..n_rows).map(|i| (i as f64).cos()).collect(),
+            group_sizes: vec![n_cols as u64],
+            tau: 0.3,
+            weights: vec![(n_cols as f64).sqrt()],
+            datafit: WireDatafit::Quadratic { ridge: 0.0 },
+        }
+    }
+
+    fn csc_ds() -> WireDataset {
+        // Deliberately ragged columns (including an empty one) so chunk
+        // boundaries land on uneven nnz counts.
+        WireDataset {
+            design: WireDesign::Csc {
+                n_rows: 4,
+                n_cols: 5,
+                indptr: vec![0, 2, 2, 5, 6, 8],
+                indices: vec![0, 3, 0, 1, 2, 2, 1, 3],
+                values: vec![1.0, -2.0, 0.5, 3.0, -0.25, 4.0, 7.0, -1.5],
+            },
+            y: vec![0.1, -0.2, 0.3, -0.4],
+            group_sizes: vec![2, 3],
+            tau: 0.6,
+            weights: vec![2.0f64.sqrt(), 3.0f64.sqrt()],
+            datafit: WireDatafit::MultiTask { tasks: 1 },
+        }
+    }
+
+    #[test]
+    fn wire_len_matches_encoded_body() {
+        for ds in [dense_ds(3, 4), csc_ds()] {
+            let frame = Message::ShipDataset(ds.clone()).encode();
+            // Frame = 4-byte length + version + tag + dataset body.
+            assert_eq!(ds.wire_len(), frame.len() - 6);
+        }
+    }
+
+    #[test]
+    fn chunked_ship_reassembles_bit_identically() {
+        for ds in [dense_ds(3, 7), csc_ds()] {
+            // A budget this small forces one-or-two-column chunks; each
+            // chunk frame must individually survive the codec.
+            let (begin, parts) = ds.to_chunks(64);
+            assert!(parts.len() >= 3, "budget must force multiple chunks");
+            let back = roundtrip(&Message::ShipBegin(begin.clone()));
+            let Message::ShipBegin(begin) = back else { panic!("wrong variant") };
+            let mut asm = ChunkAssembler::new(begin).expect("valid begin");
+            for part in parts {
+                let Message::ShipChunk(part) = roundtrip(&Message::ShipChunk(part)) else {
+                    panic!("wrong variant")
+                };
+                asm.chunk(part).expect("in-order chunk accepted");
+            }
+            let rt = asm.finish(ds.fingerprint()).expect("assembly verifies");
+            // Bit-identity: the assembled dataset re-encodes to the very
+            // bytes a whole-frame ship would have produced.
+            assert_eq!(Message::ShipDataset(rt).encode(), Message::ShipDataset(ds).encode());
+        }
+    }
+
+    #[test]
+    fn chunk_budget_smaller_than_one_column_still_ships() {
+        // Every column of dense_ds(8, 3) needs 64 payload bytes; a
+        // 1-byte budget must degrade to one column per chunk, never an
+        // empty chunk or an infinite loop.
+        let ds = dense_ds(8, 3);
+        let (begin, parts) = ds.to_chunks(1);
+        assert_eq!(parts.len(), 3);
+        let mut asm = ChunkAssembler::new(begin).unwrap();
+        for part in parts {
+            asm.chunk(part).unwrap();
+        }
+        asm.finish(ds.fingerprint()).expect("assembly verifies");
+    }
+
+    #[test]
+    fn chunk_assembler_rejects_protocol_abuse() {
+        let ds = csc_ds();
+        let (begin, parts) = ds.to_chunks(64);
+        let fresh = || ChunkAssembler::new(begin.clone()).unwrap();
+
+        // Wrong-ship chunk: fingerprint mismatch.
+        let mut asm = fresh();
+        let mut alien = parts[0].clone();
+        alien.fingerprint ^= 1;
+        assert!(matches!(asm.chunk(alien), Err(WireError::Malformed(_))));
+
+        // Out-of-order / gap.
+        let mut asm = fresh();
+        assert!(matches!(asm.chunk(parts[1].clone()), Err(WireError::Malformed(_))));
+
+        // Duplicate / overlap.
+        let mut asm = fresh();
+        asm.chunk(parts[0].clone()).unwrap();
+        assert!(matches!(asm.chunk(parts[0].clone()), Err(WireError::Malformed(_))));
+
+        // Payload kind not matching the declared design.
+        let mut asm = fresh();
+        let mut wrong_kind = parts[0].clone();
+        wrong_kind.payload = ChunkPayload::Dense { data: vec![0.0; 8] };
+        assert!(matches!(asm.chunk(wrong_kind), Err(WireError::Malformed(_))));
+
+        // CSC indptr that does not continue the previous chunk.
+        let mut asm = fresh();
+        asm.chunk(parts[0].clone()).unwrap();
+        let mut discontinuous = parts[1].clone();
+        if let ChunkPayload::Csc { indptr, .. } = &mut discontinuous.payload {
+            for v in indptr.iter_mut() {
+                *v += 1;
+            }
+        }
+        assert!(matches!(asm.chunk(discontinuous), Err(WireError::Malformed(_))));
+
+        // Early seal: not every column delivered.
+        let mut asm = fresh();
+        asm.chunk(parts[0].clone()).unwrap();
+        assert!(matches!(asm.finish(ds.fingerprint()), Err(WireError::Malformed(_))));
+
+        // Seal fingerprint disagreeing with the opened ship.
+        let mut asm = fresh();
+        for part in parts.clone() {
+            asm.chunk(part).unwrap();
+        }
+        assert!(matches!(asm.finish(ds.fingerprint() ^ 1), Err(WireError::Malformed(_))));
+
+        // Declared fingerprint that the (complete) assembly fails to
+        // hash to — a corrupted-in-flight ship must not be stored.
+        let mut lying = begin.clone();
+        lying.fingerprint ^= 1;
+        let mut asm = ChunkAssembler::new(lying).unwrap();
+        for mut part in parts {
+            part.fingerprint ^= 1;
+            asm.chunk(part).unwrap();
+        }
+        assert!(matches!(
+            asm.finish(ds.fingerprint() ^ 1),
+            Err(WireError::Malformed("assembled dataset does not hash to the declared fingerprint"))
+        ));
     }
 }

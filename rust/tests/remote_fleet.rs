@@ -2,24 +2,31 @@
 //! an in-process TCP worker fleet must produce results **bit-identical**
 //! to `solve_path_sharded` run locally — across backends, solvers and
 //! rules, under the cross-path interleaved schedule — and must never
-//! lose a shard to a killed worker (requeue onto survivors) or leak a
-//! fleet slot to a cancelled service job.
+//! lose a shard to a killed worker (requeue onto survivors), a
+//! silently-dead one (progress-deadline requeue), scripted kill/restart
+//! churn (registration rejoin), or a cancelled service job (no leaked
+//! slot). Chunked dataset streaming must be invisible to results.
 
 use sgl::coordinator::metrics::Metrics;
-use sgl::coordinator::remote::{FleetConfig, RemoteFleet, WorkerServer};
+use sgl::coordinator::remote::{FleetConfig, RemoteFleet, WorkerOptions, WorkerServer};
 use sgl::coordinator::service::{
     AnyProblem, JobStatus, ServiceConfig, SolveRequest, SolveService,
 };
 use sgl::coordinator::shard::{solve_batch_interleaved, solve_path_sharded, InterleavedJob};
-use sgl::data::synthetic::{generate, SyntheticConfig};
+use sgl::data::synthetic::{generate, generate_multitask, SyntheticConfig};
 use sgl::linalg::{CscMatrix, Design};
 use sgl::norms::sgl::omega;
 use sgl::screening::RuleKind;
 use sgl::solver::cd::SolveOptions;
+use sgl::solver::datafit::{Logistic, MultiTaskQuadratic};
 use sgl::solver::path::{DualHandoff, PathOptions, PathResult};
 use sgl::solver::problem::{lambda_grid, SglProblem};
 use sgl::solver::SolverKind;
+use std::io::Read;
+use std::net::{SocketAddr, TcpListener};
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
+use std::thread;
 use std::time::{Duration, Instant};
 
 fn spawn_fleet(n: usize, metrics: Arc<Metrics>) -> (Vec<WorkerServer>, Arc<RemoteFleet>) {
@@ -401,4 +408,313 @@ fn cancel_of_dispatched_job_returns_the_fleet_slot() {
     // continuation never entered the queue.
     assert_eq!(metrics.counter("fleet_shards_solved"), 2);
     assert_eq!(fleet.workers_alive(), 1, "cancel is not a worker failure");
+}
+
+/// Classification twin of [`planted`]: the same design with labels
+/// binarized at the response mean, on the CSC backend.
+fn planted_logistic(seed: u64) -> Arc<SglProblem<CscMatrix, Logistic>> {
+    let base = planted(seed);
+    let mean = base.y.iter().sum::<f64>() / base.y.len() as f64;
+    let labels: Vec<f64> = base.y.iter().map(|&v| f64::from(v > mean)).collect();
+    Arc::new(SglProblem::with_datafit(
+        CscMatrix::from_dense(&base.x),
+        labels,
+        base.groups.clone(),
+        base.tau,
+        base.groups.sqrt_size_weights(),
+        Logistic,
+    ))
+}
+
+/// Multi-response twin on the dense backend (task-major `y`).
+fn planted_multitask(
+    seed: u64,
+    tasks: usize,
+) -> Arc<SglProblem<sgl::linalg::Matrix, MultiTaskQuadratic>> {
+    let cfg = SyntheticConfig {
+        n: 60,
+        n_groups: 30,
+        group_size: 4,
+        gamma1: 5,
+        gamma2: 2,
+        seed,
+        ..Default::default()
+    };
+    let d = generate_multitask(&cfg, tasks);
+    let weights = d.dataset.groups.sqrt_size_weights();
+    Arc::new(SglProblem::with_datafit(
+        d.dataset.x,
+        d.dataset.y,
+        d.dataset.groups,
+        0.2,
+        weights,
+        MultiTaskQuadratic::new(tasks),
+    ))
+}
+
+/// Chunked dataset streaming must be invisible to results: with a chunk
+/// budget far below the dataset's encoding (512 bytes against tens of
+/// kilobytes — one design column per chunk), both backends still solve
+/// bit-identically to local, the shipped-set commits exactly once per
+/// dataset, and the worker's assembler verifies and stores every ship.
+#[test]
+fn tiny_chunk_budget_streams_datasets_and_stays_bit_identical() {
+    let metrics = Arc::new(Metrics::new());
+    let server = WorkerServer::bind("127.0.0.1:0").expect("bind worker");
+    let addrs = vec![server.local_addr().to_string()];
+    let fleet = Arc::new(
+        RemoteFleet::connect(
+            &addrs,
+            FleetConfig { ship_chunk_bytes: 512, ..FleetConfig::default() },
+            metrics.clone(),
+        )
+        .expect("connect fleet"),
+    );
+    let dense = planted(5);
+    let csc = csc_twin(&dense);
+    let jobs = vec![
+        InterleavedJob {
+            pb: AnyProblem::Dense(dense.clone()),
+            lambdas: lambda_grid(dense.lambda_max(), 1.0, 6),
+            opts: opts_for(RuleKind::GapSafeSeq, 1e-8, 1.0, 6),
+            solver: SolverKind::Cd,
+            shards: 2,
+            label: "dense/chunked".into(),
+        },
+        InterleavedJob {
+            pb: AnyProblem::Csc(csc.clone()),
+            lambdas: lambda_grid(csc.lambda_max(), 1.0, 6),
+            opts: opts_for(RuleKind::GapSafeSeq, 1e-8, 1.0, 6),
+            solver: SolverKind::Cd,
+            shards: 2,
+            label: "csc/chunked".into(),
+        },
+    ];
+    let out = solve_batch_interleaved(&jobs, 1, |job, grid, h| {
+        fleet.solve_shard(&job.pb, grid, &job.opts, job.solver, h)
+    });
+    for (job, got) in jobs.iter().zip(&out) {
+        let got = got.as_ref().unwrap_or_else(|e| panic!("{} failed: {e:#}", job.label));
+        assert_bit_identical(&job.label, got, &local_reference(job));
+    }
+    // Each dataset shipped exactly once (commit-on-ack), in many chunks.
+    assert_eq!(metrics.counter("fleet_datasets_shipped"), 2);
+    let chunks = metrics.counter("fleet_dataset_chunks_shipped");
+    assert!(chunks >= 4, "512-byte budget must split both datasets: {chunks} chunks");
+    // Worker-side truth: every ship arrived chunked, reassembled, and
+    // passed its fingerprint check before being stored.
+    fleet.scrape(Duration::from_secs(5));
+    assert_eq!(metrics.counter("worker_0_worker_chunked_ships_opened"), 2);
+    assert_eq!(metrics.counter("worker_0_worker_chunked_ships_completed"), 2);
+    assert_eq!(metrics.counter("worker_0_worker_chunks_received"), chunks);
+    assert_eq!(metrics.counter("worker_0_worker_datasets_stored"), 2);
+    assert_eq!(metrics.counter("fleet_shards_requeued"), 0);
+    assert_eq!(fleet.in_flight(), 0);
+}
+
+/// A fake worker that accepts fleet connections and swallows every
+/// frame without ever replying — the silent-death mode (wedged kernel,
+/// partitioned host) that used to hang an exchange forever.
+fn silent_worker() -> SocketAddr {
+    let listener = TcpListener::bind("127.0.0.1:0").expect("bind silent worker");
+    let addr = listener.local_addr().expect("local addr");
+    thread::spawn(move || {
+        for stream in listener.incoming() {
+            let Ok(mut s) = stream else { continue };
+            thread::spawn(move || {
+                let mut buf = [0u8; 4096];
+                while matches!(s.read(&mut buf), Ok(n) if n > 0) {}
+            });
+        }
+    });
+    addr
+}
+
+/// Progress-ping liveness, both directions at once: a worker that goes
+/// *silent* trips `progress_deadline` and its shard requeues onto the
+/// survivor, while a *legitimately slow* solve on the survivor runs far
+/// past the same deadline because its pings keep re-arming the clock —
+/// no socket read deadline ever bounds solve time.
+#[test]
+fn silent_worker_trips_the_progress_deadline_while_pings_keep_slow_solves_alive() {
+    let metrics = Arc::new(Metrics::new());
+    // Worker 0 is silent-dead; worker 1 is real and pings every 25 ms.
+    let silent = silent_worker();
+    let server = WorkerServer::bind_with(
+        "127.0.0.1:0",
+        WorkerOptions { progress_interval: Duration::from_millis(25), ..Default::default() },
+    )
+    .expect("bind real worker");
+    let addrs = vec![silent.to_string(), server.local_addr().to_string()];
+    let fleet = Arc::new(
+        RemoteFleet::connect(
+            &addrs,
+            FleetConfig { progress_deadline: Duration::from_secs(1), ..FleetConfig::default() },
+            metrics.clone(),
+        )
+        .expect("connect fleet"),
+    );
+    // One fixed-work path long enough to dwarf the 1 s deadline; the
+    // least-loaded pick dispatches its first shard to the silent worker.
+    let pb = planted(6);
+    let epochs = if cfg!(debug_assertions) { 2_500 } else { 50_000 };
+    let lmax = pb.lambda_max();
+    let lambdas: Vec<f64> = [0.6, 0.5, 0.4, 0.3].iter().map(|f| f * lmax).collect();
+    let opts = PathOptions {
+        delta: 1.0,
+        t_count: 4,
+        solve: SolveOptions {
+            tol: 1e-300,
+            fce: usize::MAX,
+            max_epochs: epochs,
+            rule: RuleKind::None,
+            record_history: false,
+            ..Default::default()
+        },
+    };
+    let got = fleet
+        .solve_shard(&AnyProblem::Dense(pb.clone()), &lambdas, &opts, SolverKind::Cd, None)
+        .expect("shard survives the silent worker");
+    let want = solve_path_sharded(pb.as_ref(), &lambdas, &opts, SolverKind::Cd, 1);
+    assert_bit_identical("silent-dead", &got, &want);
+    // The silent worker was written off by the deadline (not by the OS
+    // hours later), its shard requeued, and the survivor's long solve
+    // demonstrably outlived the deadline on the back of its pings.
+    assert_eq!(metrics.counter("fleet_worker_disconnects"), 1);
+    assert!(metrics.counter("fleet_shards_requeued") >= 1, "silent shard requeued");
+    assert!(metrics.counter("fleet_progress_pings") >= 1, "survivor pinged mid-solve");
+    assert_eq!(metrics.counter("fleet_shards_solved"), 1);
+    assert_eq!(fleet.workers_alive(), 1);
+    assert_eq!(fleet.in_flight(), 0);
+}
+
+/// The chaos-replay prove-out: a mixed quadratic + logistic + multitask
+/// batch under scripted worker kill/restart churn — every killed worker
+/// is replaced by a fresh one announcing itself through the
+/// registration listener — must finish **bit-identical** to the local
+/// engine with **zero lost jobs** and every shard solved exactly once.
+#[test]
+fn chaos_churn_mixed_batch_is_bit_identical_with_zero_lost_jobs() {
+    let metrics = Arc::new(Metrics::new());
+    let servers: Vec<WorkerServer> =
+        (0..2).map(|_| WorkerServer::bind("127.0.0.1:0").expect("bind worker")).collect();
+    let addrs: Vec<String> = servers.iter().map(|s| s.local_addr().to_string()).collect();
+    let fleet = Arc::new(
+        RemoteFleet::connect(
+            &addrs,
+            // A rejoin grace so even a momentarily worker-less fleet
+            // waits for the next replacement instead of failing shards.
+            FleetConfig { rejoin_grace: Duration::from_secs(60), ..FleetConfig::default() },
+            metrics.clone(),
+        )
+        .expect("connect fleet"),
+    );
+    let reg = fleet.serve_registrations("127.0.0.1:0").expect("registration listener");
+
+    let dense = planted(7);
+    let csc = csc_twin(&dense);
+    let logistic = planted_logistic(7);
+    let mt = planted_multitask(7, 3);
+    let epochs = if cfg!(debug_assertions) { 2_500 } else { 50_000 };
+    let lmax = dense.lambda_max();
+    let slow_grid: Vec<f64> = [0.6, 0.5, 0.4, 0.3].iter().map(|f| f * lmax).collect();
+    let slow_opts = PathOptions {
+        delta: 1.0,
+        t_count: 4,
+        solve: SolveOptions {
+            tol: 1e-300,
+            fce: usize::MAX,
+            max_epochs: epochs,
+            rule: RuleKind::None,
+            record_history: false,
+            ..Default::default()
+        },
+    };
+    let jobs = vec![
+        // A fixed-epoch path that keeps the batch alive long enough for
+        // several churn rounds to land mid-solve, deterministically.
+        InterleavedJob {
+            pb: AnyProblem::Dense(dense.clone()),
+            lambdas: slow_grid,
+            opts: slow_opts,
+            solver: SolverKind::Cd,
+            shards: 4,
+            label: "quadratic/slow".into(),
+        },
+        InterleavedJob {
+            pb: AnyProblem::Csc(csc.clone()),
+            lambdas: lambda_grid(csc.lambda_max(), 1.0, 6),
+            opts: opts_for(RuleKind::GapSafeSeq, 1e-8, 1.0, 6),
+            solver: SolverKind::Cd,
+            shards: 3,
+            label: "quadratic/csc".into(),
+        },
+        InterleavedJob {
+            pb: AnyProblem::CscLogistic(logistic.clone()),
+            lambdas: lambda_grid(logistic.lambda_max(), 1.0, 5),
+            opts: opts_for(RuleKind::GapSafeSeq, 1e-8, 1.0, 5),
+            solver: SolverKind::Cd,
+            shards: 2,
+            label: "logistic".into(),
+        },
+        InterleavedJob {
+            pb: AnyProblem::DenseMultiTask(mt.clone()),
+            lambdas: lambda_grid(mt.lambda_max(), 1.0, 5),
+            opts: opts_for(RuleKind::GapSafeSeq, 1e-8, 1.0, 5),
+            solver: SolverKind::Cd,
+            shards: 3,
+            label: "multitask".into(),
+        },
+    ];
+
+    // Scripted churn: every 80 ms kill the oldest survivor and register
+    // a fresh replacement, waiting for it to join before the next round.
+    let stop = Arc::new(AtomicBool::new(false));
+    let churn = {
+        let fleet = fleet.clone();
+        let reg = reg.to_string();
+        let stop = stop.clone();
+        let mut pool = servers;
+        thread::spawn(move || {
+            for round in 0..4u64 {
+                if stop.load(Ordering::SeqCst) {
+                    break;
+                }
+                thread::sleep(Duration::from_millis(80));
+                let victim = pool.remove(0);
+                victim.kill();
+                drop(victim);
+                let fresh = WorkerServer::bind("127.0.0.1:0").expect("bind replacement");
+                fresh.register(&reg);
+                let deadline = Instant::now() + Duration::from_secs(30);
+                while fleet.metrics().counter("fleet_workers_joined") <= round
+                    && Instant::now() < deadline
+                {
+                    thread::sleep(Duration::from_millis(5));
+                }
+                pool.push(fresh);
+            }
+            pool // survivors stay alive until the batch is done
+        })
+    };
+
+    let out = solve_batch_interleaved(&jobs, 2, |job, grid, h| {
+        fleet.solve_shard(&job.pb, grid, &job.opts, job.solver, h)
+    });
+    stop.store(true, Ordering::SeqCst);
+    let _pool = churn.join().expect("churn thread");
+
+    // Zero lost jobs: every job completed, and bit-identically so.
+    for (job, got) in jobs.iter().zip(&out) {
+        let got = got.as_ref().unwrap_or_else(|e| panic!("{} lost to churn: {e:#}", job.label));
+        assert_bit_identical(&job.label, got, &local_reference(job));
+    }
+    // Every shard solved exactly once from the coordinator's view, the
+    // churn demonstrably hit the fleet, and replacements joined by
+    // announcing themselves — nothing was re-dialed by address.
+    let total_shards: u64 = jobs.iter().map(|j| j.shards as u64).sum();
+    assert_eq!(metrics.counter("fleet_shards_solved"), total_shards);
+    assert!(metrics.counter("fleet_worker_disconnects") >= 1, "churn landed mid-batch");
+    assert!(metrics.counter("fleet_workers_joined") >= 1, "replacements registered");
+    assert_eq!(fleet.in_flight(), 0);
 }

@@ -21,7 +21,8 @@ use sgl::solver::SolverKind;
 use std::io::{BufRead, BufReader};
 use std::process::{Child, Command, Stdio};
 use std::sync::Arc;
-use std::time::Duration;
+use std::thread;
+use std::time::{Duration, Instant};
 
 /// A spawned `sgl worker` child, killed on drop (panic-safe).
 struct WorkerProcess {
@@ -31,9 +32,14 @@ struct WorkerProcess {
 
 impl WorkerProcess {
     fn spawn() -> WorkerProcess {
+        Self::spawn_args(&[])
+    }
+
+    fn spawn_args(extra: &[&str]) -> WorkerProcess {
         let exe = env!("CARGO_BIN_EXE_sgl");
         let mut child = Command::new(exe)
             .args(["worker", "--listen", "127.0.0.1:0"])
+            .args(extra)
             .stdout(Stdio::piped())
             .stderr(Stdio::null())
             .spawn()
@@ -178,4 +184,95 @@ fn two_worker_processes_serve_a_mixed_batch_bit_identically() {
     assert_eq!(metrics.counter("fleet_shards_solved"), 10);
     assert_eq!(metrics.counter("fleet_worker_disconnects"), 0);
     assert_eq!(fleet.in_flight(), 0);
+}
+
+/// Kill a real worker *process* mid-solve, then start a replacement
+/// that announces itself to the coordinator with `--register`: the
+/// orphaned shard must wait out the rejoin grace, land on the
+/// replacement, and finish **bit-identically** to the local engine —
+/// the full self-healing loop over real processes and real TCP.
+#[test]
+fn killed_worker_process_is_replaced_by_a_registered_restart() {
+    let mut victim = WorkerProcess::spawn();
+    let metrics = Arc::new(Metrics::new());
+    let fleet = Arc::new(
+        RemoteFleet::connect(
+            &[victim.addr.clone()],
+            FleetConfig { rejoin_grace: Duration::from_secs(120), ..FleetConfig::default() },
+            metrics.clone(),
+        )
+        .expect("connect to worker process"),
+    );
+    let reg = fleet.serve_registrations("127.0.0.1:0").expect("registration listener");
+
+    // A fixed-epoch path (unreachable tolerance, no screening) so the
+    // solve runs long enough to be killed mid-shard yet stays exactly
+    // reproducible for the local comparison.
+    let cfg = SyntheticConfig {
+        n: 50,
+        n_groups: 20,
+        group_size: 4,
+        gamma1: 4,
+        gamma2: 2,
+        seed: 29,
+        ..Default::default()
+    };
+    let d = generate(&cfg);
+    let pb = Arc::new(SglProblem::new(d.dataset.x, d.dataset.y, d.dataset.groups, 0.25));
+    let epochs = if cfg!(debug_assertions) { 2_500 } else { 50_000 };
+    let lmax = pb.lambda_max();
+    let lambdas: Vec<f64> = [0.6, 0.5, 0.4, 0.3].iter().map(|f| f * lmax).collect();
+    let opts = PathOptions {
+        delta: 1.0,
+        t_count: 4,
+        solve: SolveOptions {
+            tol: 1e-300,
+            fce: usize::MAX,
+            max_epochs: epochs,
+            rule: RuleKind::None,
+            record_history: false,
+            ..Default::default()
+        },
+    };
+
+    let solver = {
+        let fleet = fleet.clone();
+        let pb = pb.clone();
+        let lambdas = lambdas.clone();
+        let opts = opts.clone();
+        thread::spawn(move || {
+            fleet.solve_shard(&AnyProblem::Dense(pb), &lambdas, &opts, SolverKind::Cd, None)
+        })
+    };
+
+    // Provably mid-shard, then kill the child process outright.
+    let deadline = Instant::now() + Duration::from_secs(60);
+    while fleet.in_flight() == 0 && Instant::now() < deadline {
+        thread::sleep(Duration::from_millis(2));
+    }
+    assert_eq!(fleet.in_flight(), 1, "shard dispatched to the victim");
+    thread::sleep(Duration::from_millis(100));
+    victim.child.kill().expect("kill worker process");
+    let _ = victim.child.wait();
+
+    // The replacement rejoins by announcing itself — the coordinator
+    // never re-dials a configured address.
+    let replacement = WorkerProcess::spawn_args(&["--register", &reg.to_string()]);
+    let got = solver
+        .join()
+        .expect("solver thread")
+        .expect("zero lost jobs: the shard finished on the replacement");
+    let want = solve_path_sharded(pb.as_ref(), &lambdas, &opts, SolverKind::Cd, 1);
+    assert_eq!(got.lambdas, want.lambdas);
+    for (t, (a, b)) in want.results.iter().zip(&got.results).enumerate() {
+        assert_eq!(a.beta, b.beta, "t={t}: bit-identical across the restart");
+        assert_eq!(a.epochs, b.epochs, "t={t}: epochs");
+    }
+    assert_eq!(metrics.counter("fleet_worker_disconnects"), 1);
+    assert!(metrics.counter("fleet_shards_requeued") >= 1, "orphaned shard requeued");
+    assert_eq!(metrics.counter("fleet_workers_joined"), 1);
+    assert_eq!(metrics.counter("fleet_shards_solved"), 1);
+    assert_eq!(fleet.workers_alive(), 1);
+    assert_eq!(fleet.in_flight(), 0);
+    drop(replacement);
 }

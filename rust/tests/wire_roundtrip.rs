@@ -1,10 +1,11 @@
 //! Property tests for the framed wire codec (`util::wire`): every
 //! message round-trips bit-exactly — including adversarial f64s
 //! (NaN payloads, ±inf, signed zeros, subnormals) in handoffs, empty
-//! paths, zero-row CSC datasets and multi-column (task-major)
-//! responses — and every malformed input
+//! paths, zero-row CSC datasets, multi-column (task-major)
+//! responses and v6 chunked dataset ships — and every malformed input
 //! (truncated frames, bad versions, bad tags, random garbage, mutated
-//! frames) decodes to a *typed* [`WireError`] instead of panicking.
+//! frames, chunk-protocol abuse) decodes to a *typed* [`WireError`]
+//! instead of panicking.
 //!
 //! Generators mirror the vendored-proptest style of
 //! `proptest_invariants.rs` (`util::proptest::forall`, fixed per-name
@@ -19,8 +20,9 @@ use sgl::solver::SolverKind;
 use sgl::util::proptest::{check, forall, Gen};
 use sgl::coordinator::metrics::{MetricsSnapshot, TimerStats};
 use sgl::util::wire::{
-    Message, ProblemPayload, RemoteError, RemoteErrorKind, ShardRequest, WireDatafit,
-    WireDataset, WireDesign, WireError, WorkerSummary, WIRE_VERSION,
+    ChunkAssembler, ChunkBegin, ChunkPart, Message, ProblemPayload, RemoteError,
+    RemoteErrorKind, ShardRequest, WireDatafit, WireDataset, WireDesign, WireError,
+    WorkerSummary, WIRE_VERSION,
 };
 
 // ---------------------------------------------------------------------------
@@ -200,7 +202,19 @@ fn gen_worker_summary(g: &mut Gen) -> WorkerSummary {
         in_flight: g.rng().next_u64(),
         solves: g.rng().next_u64(),
         uptime_ticks: g.rng().next_u64(),
+        epoch: g.rng().next_u64(),
+        // Raw bits: NaN payloads and infinities in the gap must survive.
+        gap_bits: g.rng().next_u64(),
     }
+}
+
+/// A structurally valid chunked ship, straight from the splitter the
+/// coordinator uses — tiny byte budgets so multi-part ships are the
+/// common case, not the exception.
+fn gen_chunked_ship(g: &mut Gen) -> (ChunkBegin, Vec<ChunkPart>) {
+    let ds = gen_dataset(g);
+    let budget = 1 + g.usize_in(0..96);
+    ds.to_chunks(budget)
 }
 
 /// Snapshots mix empty registries, edgy gauge floats, and sparse
@@ -232,8 +246,26 @@ fn gen_snapshot_msg(g: &mut Gen) -> MetricsSnapshot {
 }
 
 fn gen_message(g: &mut Gen) -> Message {
-    match g.usize_in(0..10) {
+    match g.usize_in(0..16) {
         0 => Message::Ping { seq: g.rng().next_u64() },
+        10 => Message::Register {
+            addr: format!(
+                "10.{}.{}.{}:{}",
+                g.usize_in(0..256),
+                g.usize_in(0..256),
+                g.usize_in(0..256),
+                g.usize_in(1..65536)
+            ),
+        },
+        11 => Message::Registered { worker: g.rng().next_u64() },
+        12 => Message::Progress { summary: gen_worker_summary(g) },
+        13 => Message::ShipBegin(gen_chunked_ship(g).0),
+        14 => {
+            let (_, parts) = gen_chunked_ship(g);
+            let i = g.usize_in(0..parts.len());
+            Message::ShipChunk(parts.into_iter().nth(i).expect("at least one chunk"))
+        }
+        15 => Message::ShipEnd { fingerprint: g.rng().next_u64() },
         1 => Message::Pong { seq: g.rng().next_u64(), summary: gen_worker_summary(g) },
         8 => Message::StatsRequest,
         9 => Message::StatsReply(gen_snapshot_msg(g)),
@@ -366,7 +398,7 @@ fn truncated_frames_are_typed_errors_never_panics() {
 fn bad_version_and_bad_tag_are_typed_errors() {
     forall("wire-bad-header", 100, |g| {
         let mut frame = gen_message(g).encode();
-        let v = (g.usize_in(6..250)) as u8; // never WIRE_VERSION (= 5)
+        let v = (g.usize_in(7..250)) as u8; // never WIRE_VERSION (= 6)
         frame[4] = v;
         match Message::decode(&frame) {
             Err(WireError::BadVersion { got }) => check(got == v, "version echoed")?,
@@ -642,5 +674,197 @@ fn multitask_datasets_roundtrip_and_fingerprint_by_task_count() {
         let mut other = ds;
         other.datafit = WireDatafit::MultiTask { tasks: q as u64 + 1 };
         check(other.fingerprint() != fp, "fingerprint differs by task count")
+    });
+}
+
+/// A v5 peer predates chunked shipping, worker registration, and
+/// progress pings; its frames must be refused outright with a typed
+/// [`WireError::BadVersion`] rather than misread as v6 traffic.
+#[test]
+fn v5_frames_are_rejected_with_bad_version() {
+    forall("wire-v5-reject", 60, |g| {
+        let mut frame = gen_message(g).encode();
+        assert_eq!(frame[4], WIRE_VERSION, "version byte location");
+        frame[4] = 5;
+        match Message::decode(&frame) {
+            Err(WireError::BadVersion { got: 5 }) => Ok(()),
+            other => Err(format!("expected BadVersion{{got: 5}}, got {other:?}")),
+        }
+    });
+}
+
+/// Chunked ships survive framing end to end: every `ShipBegin`,
+/// `ShipChunk`, and `ShipEnd` frame roundtrips bit-exactly, and the
+/// decoded pieces reassemble through [`ChunkAssembler`] into a dataset
+/// that hashes to the declared fingerprint — dense and CSC, zero-row
+/// designs and oversized singleton chunks included.
+#[test]
+fn chunked_ship_frames_roundtrip_and_reassemble() {
+    forall("wire-chunked-roundtrip", 100, |g| {
+        let ds = gen_dataset(g);
+        let fp = ds.fingerprint();
+        let budget = 1 + g.usize_in(0..96);
+        let (begin, parts) = ds.to_chunks(budget);
+        check(!parts.is_empty(), "every ship carries at least one chunk")?;
+        let Message::ShipBegin(begin) = roundtrip_canonical(&Message::ShipBegin(begin))?
+        else {
+            return Err("begin variant changed in transit".to_string());
+        };
+        let mut asm =
+            ChunkAssembler::new(begin).map_err(|e| format!("begin rejected: {e}"))?;
+        for part in parts {
+            let Message::ShipChunk(part) =
+                roundtrip_canonical(&Message::ShipChunk(part))?
+            else {
+                return Err("chunk variant changed in transit".to_string());
+            };
+            asm.chunk(part).map_err(|e| format!("chunk rejected: {e}"))?;
+        }
+        let Message::ShipEnd { fingerprint } =
+            roundtrip_canonical(&Message::ShipEnd { fingerprint: fp })?
+        else {
+            return Err("end variant changed in transit".to_string());
+        };
+        let back = asm.finish(fingerprint).map_err(|e| format!("finish rejected: {e}"))?;
+        check(back.fingerprint() == fp, "assembled fingerprint matches the original")
+    });
+}
+
+/// Cutting a `ShipBegin` or `ShipChunk` frame anywhere — inside the
+/// length header, mid-payload, one byte short — reports a typed
+/// [`WireError::Truncated`] with honest byte counts, never a panic.
+#[test]
+fn truncated_chunk_frames_are_typed_errors() {
+    forall("wire-chunked-truncation", 80, |g| {
+        let (begin, parts) = gen_chunked_ship(g);
+        let i = g.usize_in(0..parts.len());
+        let frame = if g.bool() {
+            Message::ShipBegin(begin).encode()
+        } else {
+            Message::ShipChunk(parts.into_iter().nth(i).expect("chunk")).encode()
+        };
+        for k in 0..10 {
+            let cut = if k < 4 { k.min(frame.len() - 1) } else { g.usize_in(0..frame.len()) };
+            match Message::decode(&frame[..cut]) {
+                Err(WireError::Truncated { needed, have }) => {
+                    check(have == cut, "reported have")?;
+                    check(needed > cut, "needed beyond the cut")?;
+                }
+                other => {
+                    return Err(format!("cut {cut}: expected Truncated, got {other:?}"))
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Every chunk-protocol abuse a malicious or confused peer can attempt
+/// lands as a typed [`WireError::Malformed`], never a panic and never a
+/// silently-stored dataset: duplicate and overlapping column ranges,
+/// out-of-order chunks, chunks from a different ship, an `End` whose
+/// fingerprint mismatches, sealing before full coverage, and payload
+/// corruption caught by the fingerprint check on `finish`.
+#[test]
+fn chunk_protocol_abuse_is_typed_never_a_panic() {
+    forall("wire-chunked-abuse", 150, |g| {
+        let (begin, parts) = gen_chunked_ship(g);
+        let fp = begin.fingerprint;
+        match g.usize_in(0..6) {
+            0 => {
+                // Duplicate: replay the first chunk after delivering it.
+                let mut asm = ChunkAssembler::new(begin).map_err(|e| e.to_string())?;
+                let replay = parts[0].clone();
+                asm.chunk(parts[0].clone()).map_err(|e| e.to_string())?;
+                match asm.chunk(replay) {
+                    Err(WireError::Malformed(what)) => {
+                        check(what.contains("duplicates or overlaps"), "duplicate typed")
+                    }
+                    other => Err(format!("duplicate chunk accepted: {other:?}")),
+                }
+            }
+            1 => {
+                // Out of order / gap: deliver the second chunk first.
+                if parts.len() < 2 {
+                    return Ok(());
+                }
+                let mut asm = ChunkAssembler::new(begin).map_err(|e| e.to_string())?;
+                match asm.chunk(parts[1].clone()) {
+                    Err(WireError::Malformed(what)) => {
+                        check(what.contains("out of order"), "gap typed")
+                    }
+                    other => Err(format!("out-of-order chunk accepted: {other:?}")),
+                }
+            }
+            2 => {
+                // Overlap: stretch a later chunk back into covered ground.
+                if parts.len() < 2 {
+                    return Ok(());
+                }
+                let mut asm = ChunkAssembler::new(begin).map_err(|e| e.to_string())?;
+                asm.chunk(parts[0].clone()).map_err(|e| e.to_string())?;
+                let mut bad = parts[1].clone();
+                bad.col_start = 0;
+                match asm.chunk(bad) {
+                    Err(WireError::Malformed(what)) => {
+                        check(what.contains("duplicates or overlaps"), "overlap typed")
+                    }
+                    other => Err(format!("overlapping chunk accepted: {other:?}")),
+                }
+            }
+            3 => {
+                // A chunk interleaved from some other ship entirely.
+                let mut asm = ChunkAssembler::new(begin).map_err(|e| e.to_string())?;
+                let mut bad = parts[0].clone();
+                bad.fingerprint ^= 1;
+                match asm.chunk(bad) {
+                    Err(WireError::Malformed(what)) => {
+                        check(what.contains("fingerprint"), "foreign chunk typed")
+                    }
+                    other => Err(format!("foreign chunk accepted: {other:?}")),
+                }
+            }
+            4 => {
+                // End abuse: a mismatched fingerprint, or sealing early.
+                let mut asm = ChunkAssembler::new(begin).map_err(|e| e.to_string())?;
+                if g.bool() {
+                    for part in parts {
+                        asm.chunk(part).map_err(|e| e.to_string())?;
+                    }
+                    match asm.finish(fp ^ 0xdead_beef) {
+                        Err(WireError::Malformed(what)) => {
+                            check(what.contains("fingerprint"), "end mismatch typed")
+                        }
+                        other => Err(format!("mismatched end accepted: {other:?}")),
+                    }
+                } else {
+                    match asm.finish(fp) {
+                        Err(WireError::Malformed(what)) => {
+                            check(what.contains("before covering"), "early end typed")
+                        }
+                        other => Err(format!("early end accepted: {other:?}")),
+                    }
+                }
+            }
+            _ => {
+                // Corruption in transit the framing cannot see: flip one
+                // bit of the *declared* content (here: τ) and deliver an
+                // otherwise perfect ship — the streamed hash on `finish`
+                // must refuse to store it.
+                let mut begin = begin;
+                begin.tau = f64::from_bits(begin.tau.to_bits() ^ 1);
+                let mut asm = ChunkAssembler::new(begin).map_err(|e| e.to_string())?;
+                for part in parts {
+                    asm.chunk(part).map_err(|e| e.to_string())?;
+                }
+                match asm.finish(fp) {
+                    Err(WireError::Malformed(what)) => check(
+                        what.contains("does not hash to the declared fingerprint"),
+                        "corruption typed",
+                    ),
+                    other => Err(format!("corrupted ship stored: {other:?}")),
+                }
+            }
+        }
     });
 }
